@@ -1,0 +1,74 @@
+//! LSTM vs the classical estimator (the paper's §I motivation): stream
+//! the same run through the LSTM surrogate and the frequency-tracking
+//! model-updating baseline, and report accuracy / latency / cost.
+//!
+//! Usage: `cargo run --release --example classical_baseline [profile]`
+
+use anyhow::Result;
+use hrd_lstm::beam::{BeamConfig, ProfileKind, Testbed};
+use hrd_lstm::estimator::{model_updating_ops, ModalEstimator};
+use hrd_lstm::fpga::paper_op_count;
+use hrd_lstm::lstm::{LstmParams, Network};
+use hrd_lstm::util::stats;
+
+fn main() -> Result<()> {
+    let params = match LstmParams::load(std::path::Path::new("artifacts/weights.bin")) {
+        Ok(p) => p,
+        Err(_) => {
+            eprintln!("artifacts missing — using random weights");
+            LstmParams::init(16, 15, 3, 1, 0)
+        }
+    };
+    let kind = std::env::args()
+        .nth(1)
+        .and_then(|s| ProfileKind::parse(&s))
+        .unwrap_or(ProfileKind::Steps);
+
+    println!("== LSTM vs classical frequency tracking ({}) ==\n", kind.name());
+    let mut lstm = Network::new(params);
+    let mut modal = ModalEstimator::new(&BeamConfig::default());
+    let warmup = modal.warmup_windows();
+    let (mut truth, mut e_lstm, mut e_modal) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut t_lstm, mut t_modal) = (0.0f64, 0.0f64);
+    for w in Testbed::new(kind, 1200, 77) {
+        let t0 = std::time::Instant::now();
+        let a = lstm.infer_window(&w.features);
+        t_lstm += t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let b = modal.infer_window(&w.features);
+        t_modal += t1.elapsed().as_secs_f64();
+        if w.step_index >= warmup {
+            truth.push(w.roller_truth);
+            e_lstm.push(a);
+            e_modal.push(b);
+        }
+    }
+    let n = truth.len() as f64;
+    println!("{:<24} {:>9} {:>9} {:>12}", "estimator", "SNR dB", "TRAC", "us/step");
+    println!(
+        "{:<24} {:>9.2} {:>9.4} {:>12.2}",
+        "LSTM surrogate",
+        stats::snr_db(&truth, &e_lstm),
+        stats::trac(&truth, &e_lstm),
+        t_lstm / n * 1e6
+    );
+    println!(
+        "{:<24} {:>9.2} {:>9.4} {:>12.2}",
+        "frequency tracking",
+        stats::snr_db(&truth, &e_modal),
+        stats::trac(&truth, &e_modal),
+        t_modal / n * 1e6
+    );
+
+    println!("\nwhy the paper replaces the physics model (ops per 500 us update):");
+    println!("  LSTM: {}", paper_op_count());
+    for cands in [8, 32] {
+        let ops = model_updating_ops(&BeamConfig::default(), cands);
+        println!(
+            "  FEM updating, {cands:>2} candidates: {ops} ({:.0}x)",
+            ops as f64 / paper_op_count() as f64
+        );
+    }
+    println!("\n(the tracker also needs a {warmup}-window spectral warmup; the LSTM none)");
+    Ok(())
+}

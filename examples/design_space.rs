@@ -1,0 +1,70 @@
+//! Design-space exploration: sweep HDL unit parallelism on every
+//! platform/precision and report where each configuration lands against
+//! the resource and routing limits — the workflow a deployment engineer
+//! would run before committing to a board.
+
+use anyhow::Result;
+use hrd_lstm::eval::render_reports;
+use hrd_lstm::fixed::{QFormat, FP16, FP32, FP8};
+use hrd_lstm::fpga::{HdlDesign, PlatformKind};
+
+fn main() -> Result<()> {
+    println!("== HDL design-space exploration ==\n");
+    for kind in PlatformKind::ALL {
+        let plat = kind.platform();
+        for fmt in [FP32, FP16, FP8] {
+            explore(kind, fmt)?;
+        }
+        let _ = plat;
+    }
+
+    println!("\nrecommendations (lowest feasible latency per platform, FP-16):");
+    for kind in PlatformKind::ALL {
+        let plat = kind.platform();
+        let pmax = plat.max_hdl_parallelism(FP16);
+        let rep = HdlDesign::new(FP16, pmax).report(&plat);
+        println!(
+            "  {:<9} -> P={:<2} {:.2} us  {:.2} GOPS  ({}% DSP)",
+            kind.paper_name(),
+            pmax,
+            rep.latency_us,
+            rep.throughput_gops,
+            rep.utilization.dsp_pct as u32
+        );
+    }
+    Ok(())
+}
+
+fn explore(kind: PlatformKind, fmt: QFormat) -> Result<()> {
+    let plat = kind.platform();
+    let pmax = plat.max_hdl_parallelism(fmt);
+    let mut feasible = Vec::new();
+    let mut notes = Vec::new();
+    for p in 1..=hrd_lstm::arch::HIDDEN {
+        let d = HdlDesign::new(fmt, p);
+        let r = d.resources();
+        if p > pmax {
+            notes.push(format!(
+                "P={p}: rejected by the routing/congestion cap (paper: max {pmax} on {})",
+                kind.paper_name()
+            ));
+            continue;
+        }
+        if !r.fits(&plat) {
+            notes.push(format!("P={p}: over resources ({} DSPs)", r.dsps));
+            continue;
+        }
+        if [1, 2, 4, 8, 15].contains(&p) {
+            feasible.push(d.report(&plat));
+        }
+    }
+    println!(
+        "{}",
+        render_reports(&format!("{} / {}", kind.paper_name(), fmt.name), &feasible)
+    );
+    for n in notes.iter().take(2) {
+        println!("  note: {n}");
+    }
+    println!();
+    Ok(())
+}

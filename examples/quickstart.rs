@@ -1,0 +1,67 @@
+//! Quickstart: load the AOT-compiled LSTM surrogate, stream a short
+//! DROPBEAR run through the coordinator, and print the estimate quality.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use hrd_lstm::config::schema::BackendKind;
+use hrd_lstm::config::ExperimentConfig;
+use hrd_lstm::coordinator::{build_backend, run_streaming};
+use hrd_lstm::lstm::LstmParams;
+
+fn main() -> Result<()> {
+    let cfg = ExperimentConfig {
+        steps: 800,
+        profile: "sweep".into(),
+        // Deep queue: unpaced runs must not drop windows (state gaps
+        // cost accuracy); real deployments pace at the sensor rate.
+        queue_depth: 800,
+        // PJRT runs the artifact the JAX+Pallas path compiled; fall back
+        // to the native engine when artifacts/ has not been built yet.
+        backend: if std::path::Path::new("artifacts/manifest.json").exists() {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Native
+        },
+        ..Default::default()
+    };
+    let params = if cfg.artifacts_dir.join("weights.bin").exists() {
+        LstmParams::load(&cfg.artifacts_dir.join("weights.bin"))?
+    } else {
+        eprintln!("artifacts missing — run `make artifacts`; using random weights");
+        LstmParams::init(16, 15, 3, 1, 0)
+    };
+
+    println!("== hrd-lstm quickstart ==");
+    println!("model: {} params, backend: {}", params.param_count(), cfg.backend.name());
+
+    let mut backend = build_backend(
+        cfg.backend,
+        &params,
+        &cfg.artifacts_dir,
+        &cfg.precision,
+        &cfg.platform,
+        cfg.parallelism,
+    )?;
+    let (report, trace) =
+        run_streaming(&cfg, backend.as_mut(), hrd_lstm::beam::SensorFault::None)?;
+
+    println!(
+        "ran {} steps: SNR {:.2} dB, TRAC {:.4}, host p50 {:.1} us (deadline {} us, {} misses)",
+        report.steps, report.snr_db, report.trac, report.host_p50_us, report.deadline_us,
+        report.deadline_misses,
+    );
+    println!("\nlast few estimates (truth -> estimate, metres):");
+    for e in trace.iter().rev().take(5).rev() {
+        println!(
+            "  step {:>4}: {:.4} -> {:.4}  (err {:+.4})",
+            e.step_index,
+            e.roller_truth,
+            e.roller_estimate,
+            e.roller_estimate - e.roller_truth
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! TCP serving demo: starts the network front-end in-process (ephemeral
+//! port), connects a client, streams a live DROPBEAR run over the wire
+//! and prints accuracy + round-trip latency — the paper's Fig.-4 host-PC
+//! interface as a real service.
+
+use anyhow::Result;
+use hrd_lstm::beam::{ProfileKind, Testbed};
+use hrd_lstm::coordinator::{Client, NativeBackend, Server};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::util::stats;
+
+fn main() -> Result<()> {
+    let params = match LstmParams::load(std::path::Path::new("artifacts/weights.bin")) {
+        Ok(p) => p,
+        Err(_) => {
+            eprintln!("artifacts missing — using random weights");
+            LstmParams::init(16, 15, 3, 1, 0)
+        }
+    };
+
+    let server = Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?;
+    println!("== TCP serving demo on {addr} ==");
+    let server_thread = std::thread::spawn(move || {
+        let mut backend = NativeBackend::new(&params);
+        server.run(&mut backend)
+    });
+
+    let mut client = Client::connect(&addr.to_string())?;
+    let mut truth = Vec::new();
+    let mut est = Vec::new();
+    let mut rtts = Vec::new();
+    for w in Testbed::new(ProfileKind::Sweep, 600, 21) {
+        let t = std::time::Instant::now();
+        let (y, server_us) = client.infer(&w.features)?;
+        let rtt_us = t.elapsed().as_secs_f64() * 1e6;
+        truth.push(w.roller_truth);
+        est.push(y);
+        rtts.push(rtt_us - server_us);
+    }
+    println!(
+        "streamed {} windows: SNR {:.2} dB, TRAC {:.4}",
+        truth.len(),
+        stats::snr_db(&truth, &est),
+        stats::trac(&truth, &est)
+    );
+    let server_stats = client.stats()?;
+    println!(
+        "server-side inference: p50 {:.1} us, p99 {:.1} us",
+        server_stats.get("p50_us").unwrap().as_f64().unwrap(),
+        server_stats.get("p99_us").unwrap().as_f64().unwrap()
+    );
+    rtts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "network + framing overhead: p50 {:.1} us (localhost JSON line protocol)",
+        stats::percentile_sorted(&rtts, 50.0)
+    );
+    client.shutdown()?;
+    let final_stats = server_thread.join().unwrap()?;
+    println!("server served {} inferences, {} errors", final_stats.inferred, final_stats.errors);
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT lowering: JAX model (with Pallas cell) -> HLO TEXT artifacts.
+
+HLO *text* — NOT `lowered.compile()` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly
+(/opt/xla-example/README.md).
+
+Artifacts produced (per precision fmt in {fp32 float, fp16, fp8}):
+
+    lstm_step_<fmt>.hlo.txt : (x f32[1,16], h f32[3,1,15], c f32[3,1,15])
+                              -> tuple(y f32[1,1], h', c')
+    lstm_seq_fp32.hlo.txt   : (xs f32[32,1,16], h, c) -> tuple(ys, h', c')
+
+Trained weights are baked into the module as constants, so the Rust hot
+path marshals only the 16-float feature window plus resident state.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+
+SEQ_CHUNK = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple*).
+
+    CRITICAL: the default `as_hlo_text()` ELIDES large constants as
+    `constant({...})` — the baked-in weights would silently parse back as
+    zeros on the Rust side (sigmoid(0)*tanh(0) = 0 states, output = dense
+    bias).  Print through HloPrintOptions with print_large_constants=True.
+    """
+    from jaxlib import _jax
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = _jax.HloPrintOptions()
+    opts.print_large_constants = True
+    # The old (0.5.1) HLO text parser rejects newer metadata attributes
+    # (e.g. source_end_line) — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "large-constant elision must be disabled"
+    return text
+
+
+def make_step_fn(params, fmt_name: str):
+    """Close the trained (possibly pre-quantized) params into a step fn."""
+
+    def step_fn(x, h, c):
+        y, h2, c2 = model_mod.step(params, x, h, c, fmt_name=fmt_name, use_pallas=True)
+        return (y, h2, c2)
+
+    return step_fn
+
+
+def make_seq_fn(params, fmt_name: str = "float"):
+    def seq_fn(xs, h, c):
+        ys, h2, c2 = model_mod.run_sequence(params, xs, h, c, fmt_name=fmt_name)
+        return (ys, h2, c2)
+
+    return seq_fn
+
+
+def lower_step(params, fmt_name: str, layers=None, hidden=None, input_size=None):
+    layers = layers or len(params["layers"])
+    hidden = hidden or params["layers"][0]["w"].shape[1] // 4
+    input_size = input_size or (params["layers"][0]["w"].shape[0] - hidden)
+    x = jax.ShapeDtypeStruct((1, input_size), jnp.float32)
+    h = jax.ShapeDtypeStruct((layers, 1, hidden), jnp.float32)
+    c = jax.ShapeDtypeStruct((layers, 1, hidden), jnp.float32)
+    return jax.jit(make_step_fn(params, fmt_name)).lower(x, h, c)
+
+
+def lower_seq(params, fmt_name: str = "float", chunk: int = SEQ_CHUNK):
+    layers = len(params["layers"])
+    hidden = params["layers"][0]["w"].shape[1] // 4
+    input_size = params["layers"][0]["w"].shape[0] - hidden
+    xs = jax.ShapeDtypeStruct((chunk, 1, input_size), jnp.float32)
+    h = jax.ShapeDtypeStruct((layers, 1, hidden), jnp.float32)
+    c = jax.ShapeDtypeStruct((layers, 1, hidden), jnp.float32)
+    return jax.jit(make_seq_fn(params, fmt_name)).lower(xs, h, c)
+
+
+def hlo_stats(hlo_text: str) -> dict:
+    """Crude HLO op census used by the L2 perf report: detects redundant
+    recomputation (e.g. duplicated dots) and confirms fusion counts."""
+    import re
+
+    ops: dict[str, int] = {}
+    for m in re.finditer(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},/ ]+\s(\w+)\(", hlo_text, re.M):
+        op = m.group(1)
+        ops[op] = ops.get(op, 0) + 1
+    return ops
+
+
+def export_all(params_by_fmt: dict, out_dir: str, norm: dict, snr_by_fmt: dict):
+    """Write all HLO artifacts + the manifest the Rust runtime reads."""
+    import os
+
+    from .kernels.lstm_cell import vmem_footprint_bytes
+
+    manifest = {
+        "model": {
+            "input_size": model_mod.INPUT_SIZE,
+            "hidden": model_mod.HIDDEN,
+            "layers": model_mod.LAYERS,
+            "op_count_per_step": model_mod.op_count(),
+        },
+        "norm": norm,
+        "snr_db": snr_by_fmt,
+        "seq_chunk": SEQ_CHUNK,
+        "artifacts": {},
+        "l1_vmem_bytes": vmem_footprint_bytes(model_mod.INPUT_SIZE, model_mod.HIDDEN),
+    }
+    for fmt_name, params in params_by_fmt.items():
+        text = to_hlo_text(lower_step(params, "float" if fmt_name == "fp32" else fmt_name))
+        path = f"lstm_step_{fmt_name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][f"step_{fmt_name}"] = {
+            "file": path,
+            "ops": hlo_stats(text),
+        }
+    seq_text = to_hlo_text(lower_seq(params_by_fmt["fp32"]))
+    with open(os.path.join(out_dir, "lstm_seq_fp32.hlo.txt"), "w") as fh:
+        fh.write(seq_text)
+    manifest["artifacts"]["seq_fp32"] = {
+        "file": "lstm_seq_fp32.hlo.txt",
+        "ops": hlo_stats(seq_text),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+    return manifest

@@ -1,0 +1,124 @@
+"""Pallas fused LSTM cell — the paper's compute hot-spot as a single kernel.
+
+Hardware adaptation (FPGA -> TPU), see DESIGN.md §3:
+
+  * The paper's HDL design streams per-unit weight BRAMs into registers
+    (w1..w31) feeding P parallel DSP MAC datapaths.  Here the fused gate
+    weight matrix W[(I+H), 4H] lives in VMEM as a single block (BlockSpec =
+    whole array) — the analogue of "fully partitioned BRAM" — and the four
+    gate matrix-vector products are fused into ONE [B,(I+H)] @ [(I+H),4H]
+    matmul so the MXU systolic array plays the role of the DSP farm.
+  * The element-wise EVO unit (sigmoid/tanh + Hadamard state update) stays
+    in the same kernel and maps onto VPU lanes, mirroring the paper's fused
+    MVO+EVO pipeline.
+  * Fixed-point precisions are emulated with quantize-dequantize at the
+    same datapath points as the FPGA design (see kernels/ref.py).
+
+The kernel MUST be lowered with interpret=True: real-TPU Pallas lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.  The
+interpret path lowers to plain HLO ops, so the AOT artifact runs on the
+Rust PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantize import QFormat, fake_quant
+
+
+def _cell_kernel(x_ref, h_ref, c_ref, w_ref, b_ref, h_out, c_out, *, hidden: int):
+    """Float kernel body.  All refs are whole-array VMEM blocks."""
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    xc = jnp.concatenate([x, h], axis=-1)
+    # MVO: one fused matmul for all four gates (MXU-friendly).
+    z = xc @ w + b
+    i = z[:, 0 * hidden : 1 * hidden]
+    f = z[:, 1 * hidden : 2 * hidden]
+    g = z[:, 2 * hidden : 3 * hidden]
+    o = z[:, 3 * hidden : 4 * hidden]
+    # EVO: element-wise state update (VPU).
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    h_out[...] = h_new
+    c_out[...] = c_new
+
+
+def _cell_kernel_quant(
+    x_ref, h_ref, c_ref, w_ref, b_ref, h_out, c_out, *, hidden: int, fmt: QFormat
+):
+    """Quantized kernel body — fake-quant at the FPGA datapath points."""
+    q = lambda v: fake_quant(v, fmt)
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    xc = jnp.concatenate([x, h], axis=-1)
+    z = q(xc @ w + b)
+    i = z[:, 0 * hidden : 1 * hidden]
+    f = z[:, 1 * hidden : 2 * hidden]
+    g = z[:, 2 * hidden : 3 * hidden]
+    o = z[:, 3 * hidden : 4 * hidden]
+    si = q(jax.nn.sigmoid(i))
+    sf = q(jax.nn.sigmoid(f))
+    tg = q(jnp.tanh(g))
+    so = q(jax.nn.sigmoid(o))
+    c_new = q(q(sf * c) + q(si * tg))
+    h_new = q(so * q(jnp.tanh(c_new)))
+    h_out[...] = h_new
+    c_out[...] = c_new
+
+
+def lstm_cell(x, h, c, w, b, fmt_name: str = "float"):
+    """Run one LSTM cell step through the Pallas kernel.
+
+    Args:
+      x: [B, I] f32 input.
+      h, c: [B, H] f32 states.
+      w: [I+H, 4H] fused weights.
+      b: [4H] bias (reshaped to [1,4H] internally so every ref is 2-D).
+      fmt_name: "float" for the f32 kernel, or one of quantize.FORMATS.
+    Returns:
+      (h_new, c_new).
+    """
+    batch, hidden = h.shape
+    b2 = b.reshape(1, -1)
+    if fmt_name == "float":
+        body = functools.partial(_cell_kernel, hidden=hidden)
+    else:
+        from ..quantize import FORMATS
+
+        body = functools.partial(_cell_kernel_quant, hidden=hidden, fmt=FORMATS[fmt_name])
+    out_shape = (
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+    )
+    return pl.pallas_call(body, out_shape=out_shape, interpret=True)(x, h, c, w, b2)
+
+
+def vmem_footprint_bytes(input_size: int, hidden: int, batch: int = 1) -> int:
+    """Static VMEM footprint of one cell invocation (all operands resident).
+
+    Used by aot.py --report for the L1 performance estimate: the whole
+    working set must be far below the ~16 MiB/core VMEM budget for the
+    single-block schedule to be valid."""
+    concat = input_size + hidden
+    floats = (
+        batch * input_size  # x
+        + 2 * batch * hidden  # h, c in
+        + concat * 4 * hidden  # W
+        + 4 * hidden  # b
+        + 2 * batch * hidden  # h, c out
+        + batch * concat  # concat scratch
+        + batch * 4 * hidden  # z scratch
+    )
+    return 4 * floats

@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracle for the fused LSTM cell.
+
+This is the ground truth the Pallas kernel (lstm_cell.py) is verified
+against by pytest/hypothesis.  Gate order follows the Keras convention the
+paper's TensorFlow training used: [i, f, g, o] along the 4H axis, where
+
+    z      = [x ; h] @ W + b                    (fused gate matmul, MVO unit)
+    i,f,g,o = split(z, 4)
+    c'     = sigmoid(f) * c + sigmoid(i) * tanh(g)   (EVO unit)
+    h'     = sigmoid(o) * tanh(c')
+
+`W` is the fused weight matrix of shape [(I+H), 4H] — the concatenation of
+the Keras kernel ([I,4H]) and recurrent kernel ([H,4H]), mirroring the
+paper's concatenated input/hidden vector (w1..w31 registers in Fig. 3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..quantize import QFormat, fake_quant
+
+
+def lstm_cell_ref(x, h, c, w, b):
+    """One LSTM cell step.
+
+    Args:
+      x: [B, I] input features.
+      h: [B, H] hidden state.
+      c: [B, H] cell state.
+      w: [I+H, 4H] fused weights (input rows first, then recurrent rows).
+      b: [4H] bias.
+    Returns:
+      (h_new, c_new), both [B, H].
+    """
+    hh = h.shape[-1]
+    xc = jnp.concatenate([x, h], axis=-1)
+    z = xc @ w + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    assert i.shape[-1] == hh
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_cell_ref_quant(x, h, c, w, b, fmt: QFormat):
+    """Quantized reference: fake-quant applied at the same points as the
+    quantized Pallas kernel and the Rust fixed-point engine:
+
+      1. inputs / states / weights are assumed pre-quantized by the caller;
+      2. the MVO accumulator output z is quantized (wide accumulate then
+         truncate, as in the FPGA datapath);
+      3. each activation output is quantized;
+      4. the EVO products/sums (c', h') are quantized.
+    """
+    q = lambda v: fake_quant(v, fmt)
+    xc = jnp.concatenate([x, h], axis=-1)
+    z = q(xc @ w + b)
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    si = q(jax.nn.sigmoid(i))
+    sf = q(jax.nn.sigmoid(f))
+    tg = q(jnp.tanh(g))
+    so = q(jax.nn.sigmoid(o))
+    c_new = q(q(sf * c) + q(si * tg))
+    h_new = q(so * q(jnp.tanh(c_new)))
+    return h_new, c_new
+
+
+def dense_ref(h, wd, bd):
+    """Output head: [B,H] @ [H,O] + [O]."""
+    return h @ wd + bd

@@ -1,0 +1,160 @@
+"""Layer-2: the paper's 3-layer LSTM state-estimation model in JAX.
+
+The model (paper §II): 16 input features (acceleration sub-samples from the
+previous output interval), three stacked LSTM layers of 15 units each, and
+a single dense output unit estimating the roller position.  The per-layer
+cell runs through the Pallas kernel in kernels/lstm_cell.py so the whole
+network lowers into one HLO module.
+
+Parameter pytree structure (shared with quantize.quantize_params and the
+weights_io binary format):
+
+    params = {
+      "layers": [ {"w": [(I_l+H), 4H], "b": [4H]} , ... x L ],
+      "dense":  {"w": [H, 1], "b": [1]},
+    }
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.lstm_cell import lstm_cell
+
+# The paper's chosen architecture.
+INPUT_SIZE = 16
+HIDDEN = 15
+LAYERS = 3
+
+
+def init_params(key, input_size=INPUT_SIZE, hidden=HIDDEN, layers=LAYERS, out=1):
+    """Glorot-uniform weights / zero bias, with the Keras-style forget-gate
+    bias initialised to 1.0 (gate order [i,f,g,o])."""
+    params = {"layers": [], "dense": None}
+    sizes = [input_size] + [hidden] * (layers - 1)
+    for il, isz in enumerate(sizes):
+        key, k1 = jax.random.split(key)
+        fan_in = isz + hidden
+        limit = (6.0 / (fan_in + 4 * hidden)) ** 0.5
+        w = jax.random.uniform(k1, (fan_in, 4 * hidden), jnp.float32, -limit, limit)
+        b = jnp.zeros((4 * hidden,), jnp.float32)
+        b = b.at[hidden : 2 * hidden].set(1.0)  # forget gate bias
+        params["layers"].append({"w": w, "b": b})
+    key, k2 = jax.random.split(key)
+    limit = (6.0 / (hidden + out)) ** 0.5
+    wd = jax.random.uniform(k2, (hidden, out), jnp.float32, -limit, limit)
+    params["dense"] = {"w": wd, "b": jnp.zeros((out,), jnp.float32)}
+    return params
+
+
+def zero_state(batch=1, hidden=HIDDEN, layers=LAYERS):
+    """Stacked (h, c) state arrays of shape [layers, batch, hidden]."""
+    return (
+        jnp.zeros((layers, batch, hidden), jnp.float32),
+        jnp.zeros((layers, batch, hidden), jnp.float32),
+    )
+
+
+def step(params, x, h, c, fmt_name: str = "float", use_pallas: bool = True):
+    """One model step.
+
+    Args:
+      params: parameter pytree (pre-quantized by the caller for quant fmts).
+      x: [B, INPUT_SIZE] features.
+      h, c: [L, B, H] stacked states.
+      fmt_name: "float" or a quantize.FORMATS key.
+      use_pallas: route the cell through the Pallas kernel (True) or the
+        pure-jnp reference (False).  Both paths must agree (pytest).
+    Returns:
+      (y [B,1], h_new, c_new).
+    """
+    hs, cs = [], []
+    inp = x
+    for il, layer in enumerate(params["layers"]):
+        if use_pallas:
+            h_new, c_new = lstm_cell(inp, h[il], c[il], layer["w"], layer["b"], fmt_name)
+        elif fmt_name == "float":
+            h_new, c_new = ref.lstm_cell_ref(inp, h[il], c[il], layer["w"], layer["b"])
+        else:
+            from .quantize import FORMATS
+
+            h_new, c_new = ref.lstm_cell_ref_quant(
+                inp, h[il], c[il], layer["w"], layer["b"], FORMATS[fmt_name]
+            )
+        hs.append(h_new)
+        cs.append(c_new)
+        inp = h_new
+    y = ref.dense_ref(inp, params["dense"]["w"], params["dense"]["b"])
+    if fmt_name != "float":
+        from .quantize import FORMATS, fake_quant
+
+        y = fake_quant(y, FORMATS[fmt_name])
+    return y, jnp.stack(hs), jnp.stack(cs)
+
+
+def run_sequence(params, xs, h, c, fmt_name: str = "float", use_pallas: bool = False):
+    """Scan the model over a sequence.
+
+    Args:
+      xs: [T, B, INPUT_SIZE].
+    Returns:
+      (ys [T, B, 1], h_final, c_final).
+
+    The scan body is the same `step`; use_pallas defaults to False here
+    because training (autodiff through the interpret-mode kernel) is much
+    faster through the jnp reference — the two are equality-tested.
+    """
+
+    def body(carry, x):
+        h, c = carry
+        y, h, c = step(params, x, h, c, fmt_name, use_pallas)
+        return (h, c), y
+
+    (h, c), ys = jax.lax.scan(body, (h, c), xs)
+    return ys, h, c
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "use_pallas"))
+def predict_sequence(params, xs, fmt_name: str = "float", use_pallas: bool = False):
+    """Convenience: run a [T, B, I] sequence from zero state, return [T, B, 1]."""
+    batch = xs.shape[1]
+    layers = len(params["layers"])
+    hidden = params["layers"][0]["w"].shape[1] // 4
+    h, c = (
+        jnp.zeros((layers, batch, hidden), jnp.float32),
+        jnp.zeros((layers, batch, hidden), jnp.float32),
+    )
+    ys, _, _ = run_sequence(params, xs, h, c, fmt_name, use_pallas)
+    return ys
+
+
+def param_count(params) -> int:
+    return sum(int(a.size) for a in jax.tree_util.tree_leaves(params))
+
+
+def op_count(input_size=INPUT_SIZE, hidden=HIDDEN, layers=LAYERS, out=1) -> int:
+    """Total arithmetic operations for ONE inference step, counted the way
+    the paper's throughput metric does (ref. [27]): each MAC = 2 ops
+    (multiply + add), activations = 1 op each.
+
+    Per LSTM layer l with input size I_l:
+      MVO: 4 gates x H units x (I_l + H) MACs        -> 8 H (I_l+H) ops
+      bias adds: 4H
+      activations: 4H sigm/tanh + H tanh(c')         -> 5H
+      EVO mul/add: c' = f*c + i*g (2 mul + 1 add = 3H), h' = o*tanh (1H)
+    Dense head: H MACs + 1 bias                      -> 2H + 1
+    """
+    total = 0
+    isz = input_size
+    for _ in range(layers):
+        total += 8 * hidden * (isz + hidden)  # MAC ops
+        total += 4 * hidden  # bias adds
+        total += 5 * hidden  # activations
+        total += 4 * hidden  # EVO mul/add
+        isz = hidden
+    total += 2 * hidden * out + out
+    return total

@@ -1,0 +1,81 @@
+"""Build pipeline entry point: `python -m compile.pipeline --out ../artifacts`.
+
+Runs the whole Python (build-time-only) path ONCE:
+
+    1. simulate DROPBEAR episodes with the FE beam (data.py);
+    2. train the 3-layer/15-unit LSTM surrogate (train.py);
+    3. export weights.bin (+ normalisation constants) for the Rust native /
+       FPGA-simulator paths;
+    4. quantize parameters per precision and AOT-lower every model variant
+       to HLO text for the Rust PJRT runtime (aot.py);
+    5. write manifest.json (shapes, SNRs, HLO op census, VMEM footprint).
+
+Python never runs again after this: the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=250)
+    ap.add_argument("--steps", type=int, default=2048, help="model steps per episode")
+    ap.add_argument("--fast", action="store_true", help="tiny run for CI smoke")
+    args = ap.parse_args()
+
+    from . import aot, data, train, weights_io
+    from .quantize import FORMATS, quantize_params
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    print("[1/4] simulating DROPBEAR episodes (FE Euler-Bernoulli beam)...")
+    train_eps, test_eps = data.build_dataset(n_steps=args.steps, fast=args.fast)
+    norm = data.normalization(train_eps)
+    print(
+        f"      {len(train_eps)} train + {len(test_eps)} test episodes, "
+        f"{train_eps[0].x.shape[0]} windows each  ({time.time()-t0:.1f}s)"
+    )
+
+    print("[2/4] training the surrogate (JAX BPTT + Adam)...")
+    epochs = 12 if args.fast else args.epochs
+    params, _ = train.train(train_eps, test_eps, norm, epochs=epochs)
+
+    print("[3/4] exporting weights.bin ...")
+    weights_io.save(os.path.join(args.out, "weights.bin"), params, norm)
+
+    print("[4/4] AOT-lowering HLO artifacts per precision...")
+    params_by_fmt = {"fp32": params}
+    snr_by_fmt = {"fp32": train.evaluate(params, test_eps, norm)}
+    for fmt_name in ("fp16", "fp8"):
+        qp = quantize_params(params, FORMATS[fmt_name])
+        params_by_fmt[fmt_name] = qp
+        snr_by_fmt[fmt_name] = train.evaluate(qp, test_eps, norm, fmt_name=fmt_name)
+        print(f"      {fmt_name}: held-out SNR {snr_by_fmt[fmt_name]:.2f} dB")
+    manifest = aot.export_all(params_by_fmt, args.out, norm, snr_by_fmt)
+
+    # Golden natural frequencies for the Rust beam cross-check.
+    cfg = data.BeamConfig()
+    freqs = {
+        f"{pos:.3f}": list(np.round(data.natural_frequencies(cfg, pos), 4))
+        for pos in (0.048, 0.100, 0.175)
+    }
+    import json
+
+    with open(os.path.join(args.out, "beam_golden.json"), "w") as fh:
+        json.dump(freqs, fh, indent=2)
+
+    print(f"done in {time.time()-t0:.1f}s -> {args.out}")
+    for k, v in manifest["artifacts"].items():
+        print(f"  {k:12s} {v['file']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Fixed-point (Q-format) emulation, bit-matched to the Rust `fixed/` module.
+
+The paper evaluates three fixed-point precisions, which it calls FP-32,
+FP-16 and FP-8.  We map them to the Q-formats below (integer+fractional
+split chosen so that LSTM activations in [-8, 8] and weights in [-4, 4]
+are representable at every precision):
+
+    FP-32 -> Q16.16   (32 bits total, 16 fractional)
+    FP-16 -> Q8.8     (16 bits total,  8 fractional)
+    FP-8  -> Q4.4     ( 8 bits total,  4 fractional)
+
+Quantization rule (identical in rust/src/fixed/qformat.rs, golden-tested
+against the vectors in tests/test_quantize.py and rust unit tests):
+
+    q(x) = clamp(floor(x * 2^f + 0.5), -2^(t-1), 2^(t-1) - 1) / 2^f
+
+i.e. round-half-up to the nearest representable value with saturation at
+the two's-complement range limits.  `floor(x*s + 0.5)` (rather than
+banker's rounding) is used because it is cheap in hardware and identical
+to the Verilog datapath the paper describes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """A two's-complement fixed-point format with `total_bits` bits of which
+    `frac_bits` are fractional."""
+
+    name: str
+    total_bits: int
+    frac_bits: int
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.frac_bits)
+
+    @property
+    def min_value(self) -> float:
+        return -float(1 << (self.total_bits - 1)) / self.scale
+
+    @property
+    def max_value(self) -> float:
+        return float((1 << (self.total_bits - 1)) - 1) / self.scale
+
+    @property
+    def resolution(self) -> float:
+        """Smallest representable step (1 ulp)."""
+        return 1.0 / self.scale
+
+
+# The paper's three precisions.
+FP32 = QFormat("fp32", total_bits=32, frac_bits=16)
+FP16 = QFormat("fp16", total_bits=16, frac_bits=8)
+FP8 = QFormat("fp8", total_bits=8, frac_bits=4)
+
+FORMATS = {"fp32": FP32, "fp16": FP16, "fp8": FP8}
+
+
+def quantize_np(x: np.ndarray, fmt: QFormat) -> np.ndarray:
+    """Quantize-dequantize with numpy (float64 internally -> exact for all
+    formats up to Q16.16)."""
+    x = np.asarray(x, dtype=np.float64)
+    raw = np.floor(x * fmt.scale + 0.5)
+    lo = -float(1 << (fmt.total_bits - 1))
+    hi = float((1 << (fmt.total_bits - 1)) - 1)
+    return (np.clip(raw, lo, hi) / fmt.scale).astype(np.float64)
+
+
+def quantize_raw_np(x: np.ndarray, fmt: QFormat) -> np.ndarray:
+    """Return the raw integer codes (two's-complement values) as int64.
+
+    Used by the golden-vector tests shared with the Rust side."""
+    x = np.asarray(x, dtype=np.float64)
+    raw = np.floor(x * fmt.scale + 0.5)
+    lo = -float(1 << (fmt.total_bits - 1))
+    hi = float((1 << (fmt.total_bits - 1)) - 1)
+    return np.clip(raw, lo, hi).astype(np.int64)
+
+
+def fake_quant(x: jnp.ndarray, fmt: QFormat) -> jnp.ndarray:
+    """Differentiable-shape (but not differentiable) quantize-dequantize for
+    use inside jitted/pallas computations.  f32 arithmetic is exact for the
+    FP-16/FP-8 formats; for FP-32 (Q16.16) values near the range limits can
+    fall outside f32's 24-bit mantissa — the model keeps values far from
+    those limits, and correctness vs the f64 numpy path is asserted with a
+    1-ulp tolerance in the tests."""
+    scale = fmt.scale
+    lo = -float(1 << (fmt.total_bits - 1))
+    hi = float((1 << (fmt.total_bits - 1)) - 1)
+    raw = jnp.floor(x * scale + 0.5)
+    return jnp.clip(raw, lo, hi) / scale
+
+
+def quantize_params(params, fmt: QFormat):
+    """Quantize every array in an LSTM parameter pytree (see model.py for the
+    structure) using the f64 numpy path, returned as f32 arrays."""
+    import jax
+
+    return jax.tree_util.tree_map(
+        lambda a: jnp.asarray(quantize_np(np.asarray(a), fmt), dtype=jnp.float32), params
+    )

@@ -1,0 +1,137 @@
+"""Build-time training of the 3-layer LSTM surrogate (paper §II).
+
+The paper trained on TensorFlow/Keras; we train the same architecture in
+JAX (full-batch BPTT over fixed-length subsequences, Adam) on the
+beam-simulator dataset from data.py.  The trained weights are exported to
+artifacts/weights.bin (weights_io format) and baked into the AOT-lowered
+HLO by aot.py.
+
+Run time is kept to tens of seconds: the model is tiny (~20k parameters)
+and the dataset is a few thousand windows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+SEQ_LEN = 256
+WARMUP = 48  # windows ignored by the loss (zero-state transient)
+
+
+# ---------------------------------------------------------------------------
+# Adam (no optax in this environment — implemented from scratch)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr=1e-2, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Batching: cut episodes into [T=SEQ_LEN, B, I] tensors
+# ---------------------------------------------------------------------------
+
+
+def make_batches(episodes, norm, seq_len=SEQ_LEN):
+    # Clamp to the shortest episode so tiny (test) datasets still batch.
+    seq_len = min(seq_len, min(len(ep.y) for ep in episodes))
+    xs, ys = [], []
+    for ep in episodes:
+        x, y = data_mod.normalize_episode(ep, norm)
+        n = (len(y) // seq_len) * seq_len
+        for s in range(0, n, seq_len):
+            xs.append(x[s : s + seq_len])
+            ys.append(y[s : s + seq_len])
+    # [B, T, ...] -> [T, B, ...]
+    x = np.stack(xs).transpose(1, 0, 2).astype(np.float32)
+    y = np.stack(ys).transpose(1, 0)[..., None].astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def loss_fn(params, xs, ys):
+    pred = model_mod.predict_sequence(params, xs)
+    # Discard the warm-up prefix: the zero initial state carries no
+    # information about the roller position and the LSTM needs ~50 windows
+    # (~25 ms) to integrate the modal signature.
+    warm = min(WARMUP, xs.shape[0] // 4)
+    return jnp.mean((pred[warm:] - ys[warm:]) ** 2)
+
+
+@jax.jit
+def train_step(params, opt, xs, ys, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, xs, ys)
+    params, opt = adam_update(params, grads, opt, lr=lr)
+    return params, opt, loss
+
+
+def snr_db(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    """Signal-to-noise ratio of the estimate, as in the paper's Fig. 1:
+    SNR_dB = 10 log10( var(signal) / var(error) )."""
+    err = np.asarray(y_true) - np.asarray(y_pred)
+    num = float(np.var(np.asarray(y_true)))
+    den = float(np.var(err)) + 1e-30
+    return 10.0 * float(np.log10(num / den))
+
+
+def evaluate(params, episodes, norm, fmt_name="float"):
+    """Mean SNR_dB over held-out episodes."""
+    snrs = []
+    for ep in episodes:
+        x, y = data_mod.normalize_episode(ep, norm)
+        xs = jnp.asarray(x[:, None, :])
+        pred = np.asarray(model_mod.predict_sequence(params, xs, fmt_name))[:, 0, 0]
+        warm = min(WARMUP, len(y) // 4)
+        snrs.append(snr_db(y[warm:], pred[warm:]))
+    return float(np.mean(snrs))
+
+
+def train(
+    train_eps,
+    test_eps,
+    norm,
+    *,
+    hidden=model_mod.HIDDEN,
+    layers=model_mod.LAYERS,
+    epochs=150,
+    lr=8e-3,
+    seed=0,
+    verbose=True,
+    log_every=25,
+):
+    """Train a model of the given size; returns (params, history)."""
+    key = jax.random.PRNGKey(seed)
+    params = model_mod.init_params(key, hidden=hidden, layers=layers)
+    opt = adam_init(params)
+    xs, ys = make_batches(train_eps, norm)
+    history = []
+    for epoch in range(epochs):
+        # Cosine-decayed learning rate.
+        cur_lr = lr * 0.5 * (1 + np.cos(np.pi * epoch / max(epochs - 1, 1)))
+        params, opt, loss = train_step(params, opt, xs, ys, cur_lr)
+        history.append(float(loss))
+        if verbose and (epoch % log_every == 0 or epoch == epochs - 1):
+            print(f"  epoch {epoch:4d}  loss {float(loss):.6f}  lr {cur_lr:.2e}")
+    if verbose:
+        snr = evaluate(params, test_eps, norm)
+        print(f"  held-out SNR: {snr:.2f} dB")
+    return params, history

@@ -1,0 +1,93 @@
+"""Binary weight interchange format, shared with rust/src/lstm/params.rs.
+
+Layout (little-endian):
+
+    magic    : 4 bytes  b"HRDW"
+    version  : u32      = 1
+    n_layers : u32
+    input    : u32      (feature count of layer 0)
+    hidden   : u32
+    out      : u32
+    x_mean   : f32      input normalisation:  x_norm = (x - x_mean)/x_std
+    x_std    : f32
+    y_scale  : f32      output denorm:        y = y_norm * y_scale + y_offset
+    y_offset : f32
+    for each layer l (input rows first, then recurrent rows, row-major):
+        w : f32[(I_l + hidden) * 4*hidden]
+        b : f32[4*hidden]
+    dense:
+        wd : f32[hidden * out]
+        bd : f32[out]
+
+Gate order along the 4H axis is [i, f, g, o] (Keras convention).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"HRDW"
+VERSION = 1
+
+
+def save(path, params, norm):
+    """Write `params` (model.py pytree) and `norm` dict
+    (x_mean/x_std/y_scale/y_offset) to `path`."""
+    layers = params["layers"]
+    hidden = int(np.asarray(layers[0]["b"]).shape[0]) // 4
+    input_size = int(np.asarray(layers[0]["w"]).shape[0]) - hidden
+    out = int(np.asarray(params["dense"]["b"]).shape[0])
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<IIIII", VERSION, len(layers), input_size, hidden, out))
+        fh.write(
+            struct.pack(
+                "<ffff",
+                float(norm["x_mean"]),
+                float(norm["x_std"]),
+                float(norm["y_scale"]),
+                float(norm["y_offset"]),
+            )
+        )
+        for layer in layers:
+            fh.write(np.asarray(layer["w"], dtype="<f4").tobytes(order="C"))
+            fh.write(np.asarray(layer["b"], dtype="<f4").tobytes(order="C"))
+        fh.write(np.asarray(params["dense"]["w"], dtype="<f4").tobytes(order="C"))
+        fh.write(np.asarray(params["dense"]["b"], dtype="<f4").tobytes(order="C"))
+
+
+def load(path):
+    """Read a weights file back into (params, norm).  Round-trips with
+    save(); also exercised against files written by the Rust side."""
+    with open(path, "rb") as fh:
+        data = fh.read()
+    if data[:4] != MAGIC:
+        raise ValueError(f"bad magic {data[:4]!r}")
+    version, n_layers, input_size, hidden, out = struct.unpack_from("<IIIII", data, 4)
+    if version != VERSION:
+        raise ValueError(f"unsupported version {version}")
+    x_mean, x_std, y_scale, y_offset = struct.unpack_from("<ffff", data, 24)
+    off = 40
+    params = {"layers": [], "dense": None}
+    isz = input_size
+    for _ in range(n_layers):
+        wn = (isz + hidden) * 4 * hidden
+        w = np.frombuffer(data, dtype="<f4", count=wn, offset=off).reshape(
+            isz + hidden, 4 * hidden
+        )
+        off += 4 * wn
+        b = np.frombuffer(data, dtype="<f4", count=4 * hidden, offset=off)
+        off += 16 * hidden
+        params["layers"].append({"w": w.copy(), "b": b.copy()})
+        isz = hidden
+    wd = np.frombuffer(data, dtype="<f4", count=hidden * out, offset=off).reshape(hidden, out)
+    off += 4 * hidden * out
+    bd = np.frombuffer(data, dtype="<f4", count=out, offset=off)
+    off += 4 * out
+    if off != len(data):
+        raise ValueError(f"trailing bytes: read {off} of {len(data)}")
+    params["dense"] = {"w": wd.copy(), "b": bd.copy()}
+    norm = {"x_mean": x_mean, "x_std": x_std, "y_scale": y_scale, "y_offset": y_offset}
+    return params, norm

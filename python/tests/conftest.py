@@ -1,0 +1,26 @@
+import os
+import sys
+
+import jax
+import pytest
+
+# Make `compile` importable regardless of pytest invocation directory.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="session")
+def small_params():
+    """Random paper-architecture parameters (16 in, 15 hidden, 3 layers)."""
+    from compile import model as model_mod
+
+    return model_mod.init_params(jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    """A miniature beam dataset for train-loop tests."""
+    from compile import data
+
+    train_eps, test_eps = data.build_dataset(fast=True)
+    norm = data.normalization(train_eps)
+    return train_eps, test_eps, norm

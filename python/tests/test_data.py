@@ -1,0 +1,97 @@
+"""Beam physics sanity + golden values shared with the Rust implementation."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_fundamental_frequency_cantilever_limit():
+    """With the roller at the clamp the beam is (nearly) a free cantilever:
+    analytic f1 = (1.875104^2 / 2pi) * sqrt(EI / (rho A L^4))."""
+    cfg = data.BeamConfig(roller_stiffness=0.0)
+    f = data.natural_frequencies(cfg, 0.05, n=2)
+    ei = cfg.youngs * cfg.inertia
+    ra = cfg.density * cfg.area
+    f1 = (1.875104**2 / (2 * np.pi)) * np.sqrt(ei / (ra * cfg.length**4))
+    assert f[0] == pytest.approx(f1, rel=1e-3)
+
+
+def test_frequencies_increase_with_roller_position():
+    cfg = data.BeamConfig()
+    f_prev = 0.0
+    for pos in (0.05, 0.1, 0.2, 0.3, 0.35):
+        f1 = data.natural_frequencies(cfg, pos, n=1)[0]
+        assert f1 > f_prev
+        f_prev = f1
+    # The whole travel must move f1 by a factor > 2 (the signal the LSTM
+    # identifies).
+    lo = data.natural_frequencies(cfg, data.ROLLER_MIN, n=1)[0]
+    hi = data.natural_frequencies(cfg, data.ROLLER_MAX, n=1)[0]
+    assert hi / lo > 2.0
+
+
+def test_biquad_dc_gain_unity():
+    bq = data.Biquad(32000.0, 2000.0)
+    y = 0.0
+    for _ in range(4000):
+        y = bq.step(1.0)
+    assert y == pytest.approx(1.0, abs=1e-6)
+
+
+def test_biquad_attenuates_high_freq():
+    bq = data.Biquad(32000.0, 2000.0)
+    fs, f = 32000.0, 12000.0
+    ys = [bq.step(np.sin(2 * np.pi * f * n / fs)) for n in range(4000)]
+    assert np.max(np.abs(ys[2000:])) < 0.1
+
+
+@pytest.mark.parametrize("kind", ["hold", "steps", "ramp", "triangle", "sine", "sweep"])
+def test_roller_profiles_within_travel(kind):
+    p = data.roller_profile(kind, 500, seed=3)
+    assert p.shape == (500,)
+    assert np.all(p >= data.ROLLER_MIN - 1e-9)
+    assert np.all(p <= data.ROLLER_MAX + 1e-9)
+
+
+def test_roller_profile_deterministic():
+    a = data.roller_profile("steps", 300, seed=5)
+    b = data.roller_profile("steps", 300, seed=5)
+    np.testing.assert_array_equal(a, b)
+    c = data.roller_profile("steps", 300, seed=6)
+    assert not np.array_equal(a, c)
+
+
+def test_episode_shapes_and_energy(tiny_dataset):
+    train_eps, test_eps, norm = tiny_dataset
+    ep = train_eps[0]
+    assert ep.x.shape == (160, data.SAMPLES_PER_STEP)
+    assert ep.y.shape == (160,)
+    # The beam must actually ring (RMS above the sensor noise floor).
+    assert ep.x.std() > 1.0
+    assert norm["x_std"] > 0
+
+
+def test_normalize_episode(tiny_dataset):
+    train_eps, _, norm = tiny_dataset
+    x, y = data.normalize_episode(train_eps[0], norm)
+    assert x.dtype == np.float32 and y.dtype == np.float32
+    assert np.all(y >= -1e-5) and np.all(y <= 1.0 + 1e-5)
+
+
+def test_newmark_free_decay():
+    """Free vibration decays under Rayleigh damping and conserves nothing
+    (no forcing): displacement envelope must shrink."""
+    cfg = data.BeamConfig()
+    sim = data.NewmarkSim(cfg, 1.0 / 32000.0, 0.1)
+    nd = cfg.ndof
+    f = np.zeros(nd)
+    f[-2] = 50.0
+    for _ in range(200):  # push
+        sim.step(f)
+    early = abs(sim.u[-2])
+    f[-2] = 0.0
+    for _ in range(32000):  # 1 s free decay
+        sim.step(f)
+    late = abs(sim.u[-2])
+    assert late < early * 0.5

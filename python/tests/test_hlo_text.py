@@ -1,0 +1,59 @@
+"""Regression tests for the HLO-text interchange (DESIGN.md §11).
+
+The nastiest build bug in this repo: `as_hlo_text()` elides large
+constants as `constant({...})`, which the Rust side's 0.5.1 text parser
+silently reads back as ZEROS — the baked-in weights vanish and every
+recurrent state collapses to 0.  These tests pin the fixed printer.
+"""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_to_hlo_text_prints_large_constants():
+    big = jnp.arange(4096, dtype=jnp.float32).reshape(64, 64) * 0.5
+
+    def fn(x):
+        return (x @ big,)
+
+    lowered = jax.jit(fn).lower(jnp.zeros((1, 64), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text
+    # A distinctive interior value must be printed verbatim.
+    assert "2047.5" in text
+    # The old parser rejects the newer metadata attributes.
+    assert "source_end_line" not in text
+
+
+def test_to_hlo_text_no_nested_calls_for_inline_model():
+    from compile import model as m
+
+    params = m.init_params(jax.random.PRNGKey(0))
+    x = jnp.zeros((1, 16), jnp.float32)
+    h, c = m.zero_state()
+
+    def step(x, h, c):
+        return m.step(params, x, h, c, fmt_name="float", use_pallas=True)
+
+    text = aot.to_hlo_text(jax.jit(step).lower(x, h, c))
+    # Pallas interpret-mode lowers to plain while loops; no `call`
+    # sub-computations should appear for the float path.
+    assert " call(" not in text
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="artifacts not built")
+def test_built_artifacts_have_no_elision():
+    for f in ARTIFACTS.glob("*.hlo.txt"):
+        text = f.read_text()
+        assert "{...}" not in text, f.name
+        assert text.startswith("HloModule"), f.name
+        # Weights are baked in: each artifact must be dominated by
+        # constant payload, not structure.
+        assert len(text) > 50_000, f"{f.name} suspiciously small ({len(text)}B)"

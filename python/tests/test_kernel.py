@@ -1,0 +1,86 @@
+"""Pallas fused LSTM cell vs the pure-jnp oracle — the CORE L1 correctness
+signal.  hypothesis sweeps batch/input/hidden shapes and the quantization
+formats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.lstm_cell import lstm_cell, vmem_footprint_bytes
+from compile.kernels.ref import lstm_cell_ref, lstm_cell_ref_quant
+from compile.quantize import FORMATS, quantize_np
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _make_inputs(seed, batch, input_size, hidden):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = _rand(ks[0], batch, input_size)
+    h = _rand(ks[1], batch, hidden, scale=0.5)
+    c = _rand(ks[2], batch, hidden, scale=0.5)
+    w = _rand(ks[3], input_size + hidden, 4 * hidden, scale=0.3)
+    b = _rand(ks[4], 4 * hidden, scale=0.1)
+    return x, h, c, w, b
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    batch=st.integers(1, 4),
+    input_size=st.integers(1, 24),
+    hidden=st.integers(1, 24),
+)
+@settings(max_examples=40, deadline=None)
+def test_pallas_matches_ref_float(seed, batch, input_size, hidden):
+    x, h, c, w, b = _make_inputs(seed, batch, input_size, hidden)
+    h_ref, c_ref = lstm_cell_ref(x, h, c, w, b)
+    h_pal, c_pal = lstm_cell(x, h, c, w, b, "float")
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_pal), np.asarray(c_ref), rtol=1e-5, atol=1e-6)
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    batch=st.integers(1, 2),
+    hidden=st.integers(1, 20),
+    fmt_name=st.sampled_from(["fp32", "fp16", "fp8"]),
+)
+@settings(max_examples=30, deadline=None)
+def test_pallas_matches_ref_quant(seed, batch, hidden, fmt_name):
+    fmt = FORMATS[fmt_name]
+    input_size = hidden + 1
+    x, h, c, w, b = _make_inputs(seed, batch, input_size, hidden)
+    # Pre-quantize operands, as the datapath contract requires.
+    q = lambda a: jnp.asarray(quantize_np(np.asarray(a, np.float64), fmt), jnp.float32)
+    x, h, c, w, b = q(x), q(h), q(c), q(w), q(b)
+    h_ref, c_ref = lstm_cell_ref_quant(x, h, c, w, b, fmt)
+    h_pal, c_pal = lstm_cell(x, h, c, w, b, fmt_name)
+    # Same fake-quant graph on both sides -> bit-identical in f32.
+    np.testing.assert_array_equal(np.asarray(h_pal), np.asarray(h_ref))
+    np.testing.assert_array_equal(np.asarray(c_pal), np.asarray(c_ref))
+
+
+def test_paper_shape_state_bounds():
+    """LSTM state invariants at the paper's shape: |h| < 1, c finite."""
+    x, h, c, w, b = _make_inputs(7, 1, 16, 15)
+    for _ in range(50):
+        h, c = lstm_cell(x, h, c, w, b, "float")
+    assert np.all(np.abs(np.asarray(h)) < 1.0)
+    assert np.all(np.isfinite(np.asarray(c)))
+
+
+def test_quant_error_bounded():
+    """Quantized kernel output differs from float by O(resolution)."""
+    x, h, c, w, b = _make_inputs(3, 1, 16, 15)
+    h_f, c_f = lstm_cell(x, h, c, w, b, "float")
+    for name, tol in (("fp32", 1e-3), ("fp16", 0.05), ("fp8", 0.7)):
+        h_q, c_q = lstm_cell(x, h, c, w, b, name)
+        assert float(jnp.max(jnp.abs(h_q - h_f))) < tol, name
+
+
+def test_vmem_footprint_paper_config():
+    # Whole working set of the paper's cell: tiny vs the ~16 MiB VMEM/core.
+    assert vmem_footprint_bytes(16, 15) < 32 * 1024

@@ -1,0 +1,84 @@
+"""L2 model: step/scan consistency, shapes, parameter and op accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def test_param_count_paper_architecture(small_params):
+    # layer1: (16+15)x60 + 60 = 1920; layers 2-3: (15+15)x60 + 60 = 1860;
+    # dense: 15 + 1 = 16.  Total 5656.
+    assert M.param_count(small_params) == 1920 + 2 * 1860 + 16 == 5656
+
+
+def test_op_count_consistent():
+    ops = M.op_count()
+    # MACs alone: 8*15*31 + 2*8*15*30 = 3720+7200 = 10920 ops... plus
+    # bias/EVO/activation terms and the dense head.
+    manual = (8 * 15 * 31 + 13 * 15) + 2 * (8 * 15 * 30 + 13 * 15) + (2 * 15 + 1)
+    assert ops == manual
+    assert 10000 < ops < 13000
+
+
+def test_step_pallas_equals_ref(small_params):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 16)), jnp.float32)
+    h, c = M.zero_state()
+    y1, h1, c1 = M.step(small_params, x, h, c, use_pallas=True)
+    y2, h2, c2 = M.step(small_params, x, h, c, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5, atol=1e-6)
+
+
+def test_scan_equals_repeated_step(small_params):
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.normal(size=(12, 1, 16)), jnp.float32)
+    h, c = M.zero_state()
+    ys_scan, h_s, c_s = M.run_sequence(small_params, xs, h, c)
+    ys_loop = []
+    for t in range(xs.shape[0]):
+        y, h, c = M.step(small_params, xs[t], h, c, use_pallas=False)
+        ys_loop.append(y)
+    np.testing.assert_allclose(
+        np.asarray(ys_scan), np.stack([np.asarray(v) for v in ys_loop]), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(h_s), np.asarray(h), rtol=1e-5, atol=1e-6)
+
+
+def test_predict_sequence_shapes(small_params):
+    xs = jnp.zeros((9, 2, 16), jnp.float32)
+    ys = M.predict_sequence(small_params, xs)
+    assert ys.shape == (9, 2, 1)
+
+
+def test_quant_step_runs(small_params):
+    from compile.quantize import FORMATS, quantize_params
+
+    x = jnp.ones((1, 16), jnp.float32) * 0.25
+    h, c = M.zero_state()
+    for fmt_name in ("fp16", "fp8"):
+        qp = quantize_params(small_params, FORMATS[fmt_name])
+        y, h2, c2 = M.step(qp, x, h, c, fmt_name=fmt_name, use_pallas=True)
+        yr, hr, cr = M.step(qp, x, h, c, fmt_name=fmt_name, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_state_decay_without_input(small_params):
+    """With zero input the cell state must stay bounded (forget gate < 1)."""
+    x = jnp.zeros((1, 16), jnp.float32)
+    h, c = M.zero_state()
+    for _ in range(200):
+        _, h, c = M.step(small_params, x, h, c, use_pallas=False)
+    assert np.all(np.abs(np.asarray(c)) < 50.0)
+    assert np.all(np.isfinite(np.asarray(h)))
+
+
+def test_init_params_forget_bias():
+    params = M.init_params(jax.random.PRNGKey(0))
+    for layer in params["layers"]:
+        b = np.asarray(layer["b"])
+        h = len(b) // 4
+        np.testing.assert_array_equal(b[h : 2 * h], 1.0)
+        np.testing.assert_array_equal(b[:h], 0.0)

@@ -1,0 +1,104 @@
+"""Quantizer bit-exactness: golden vectors shared with rust/src/fixed tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quantize import FORMATS, FP8, FP16, FP32, fake_quant, quantize_np, quantize_raw_np
+
+# Golden vectors: (input, fmt, expected raw code, expected dequant value).
+# The SAME table is hard-coded in rust/src/fixed/qformat.rs tests — any
+# drift between the two implementations fails both suites.
+GOLDEN = [
+    (0.0, FP16, 0, 0.0),
+    (1.0, FP16, 256, 1.0),
+    (-1.0, FP16, -256, -1.0),
+    (0.5, FP16, 128, 0.5),
+    (0.12345, FP16, 32, 0.125),
+    (-0.12345, FP16, -32, -0.125),
+    (3.14159, FP16, 804, 3.140625),
+    (1000.0, FP16, 32767, 127.99609375),  # saturates
+    (-1000.0, FP16, -32768, -128.0),
+    (0.0611, FP8, 1, 0.0625),
+    (-0.0313, FP8, -1, -0.0625),
+    (2.71828, FP8, 43, 2.6875),
+    (100.0, FP8, 127, 7.9375),  # saturates
+    (-100.0, FP8, -128, -8.0),
+    (0.333, FP8, 5, 0.3125),
+    (1.0e-5, FP32, 1, 1.52587890625e-05),
+    (12345.6789, FP32, 809086412, 12345.678894042969),
+    (-3.7, FP32, -242483, -3.6999969482421875),
+]
+
+
+def test_golden_vectors():
+    for x, fmt, raw, deq in GOLDEN:
+        got_raw = int(quantize_raw_np(np.array([x]), fmt)[0])
+        got_deq = float(quantize_np(np.array([x]), fmt)[0])
+        assert got_raw == raw, f"{fmt.name}({x}): raw {got_raw} != {raw}"
+        assert got_deq == pytest.approx(deq, abs=0), f"{fmt.name}({x}): {got_deq} != {deq}"
+
+
+def test_resolution_and_range():
+    assert FP32.resolution == 1 / 65536
+    assert FP16.resolution == 1 / 256
+    assert FP8.resolution == 1 / 16
+    assert FP16.max_value == 127.99609375
+    assert FP16.min_value == -128.0
+    assert FP8.max_value == 7.9375
+    assert FP8.min_value == -8.0
+
+
+@given(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False))
+@settings(max_examples=300, deadline=None)
+def test_idempotent(x):
+    for fmt in FORMATS.values():
+        once = quantize_np(np.array([x]), fmt)
+        twice = quantize_np(once, fmt)
+        assert once[0] == twice[0]
+
+
+@given(st.floats(min_value=-100, max_value=100, allow_nan=False))
+@settings(max_examples=300, deadline=None)
+def test_error_bound(x):
+    """|q(x) - x| <= 1 ulp/2 inside the representable range."""
+    for fmt in FORMATS.values():
+        if fmt.min_value <= x <= fmt.max_value - fmt.resolution:
+            q = float(quantize_np(np.array([x]), fmt)[0])
+            assert abs(q - x) <= fmt.resolution / 2 + 1e-12
+
+
+@given(
+    st.lists(st.floats(min_value=-120, max_value=120, allow_nan=False), min_size=1, max_size=64)
+)
+@settings(max_examples=200, deadline=None)
+def test_fake_quant_matches_numpy(vals):
+    """The in-graph f32 fake-quant must agree with the f64 numpy reference
+    for FP-16/FP-8 (exact) — FP-32 (Q16.16) is checked to 1 ulp."""
+    import jax.numpy as jnp
+
+    x = np.array(vals, dtype=np.float32)
+    for fmt in (FP16, FP8):
+        a = np.asarray(fake_quant(jnp.asarray(x), fmt))
+        b = quantize_np(x.astype(np.float64), fmt)
+        np.testing.assert_allclose(a, b, rtol=0, atol=0)
+    a32 = np.asarray(fake_quant(jnp.asarray(x), FP32))
+    b32 = quantize_np(x.astype(np.float64), FP32)
+    np.testing.assert_allclose(a32, b32, atol=FP32.resolution)
+
+
+def test_monotonic():
+    xs = np.linspace(-9, 9, 4001)
+    for fmt in FORMATS.values():
+        q = quantize_np(xs, fmt)
+        assert np.all(np.diff(q) >= 0)
+
+
+def test_quantize_params_structure(small_params):
+    from compile.quantize import quantize_params
+
+    qp = quantize_params(small_params, FP16)
+    assert len(qp["layers"]) == len(small_params["layers"])
+    w = np.asarray(qp["layers"][0]["w"])
+    assert np.all(w == quantize_np(np.asarray(w, dtype=np.float64), FP16))

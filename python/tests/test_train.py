@@ -1,0 +1,49 @@
+"""Training loop: loss decreases, SNR metric behaves, Adam is sane."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+
+def test_snr_db():
+    y = np.sin(np.linspace(0, 20, 500))
+    assert T.snr_db(y, y) > 100.0
+    noisy = y + np.random.default_rng(0).normal(0, 0.1, 500)
+    snr = T.snr_db(y, noisy)
+    assert 13 < snr < 21  # var(sig)/var(noise) ~ 0.5/0.01
+    assert T.snr_db(y, np.zeros_like(y)) == pytest.approx(0.0, abs=0.5)
+
+
+def test_adam_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = T.adam_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, opt = T.adam_update(params, grads, opt, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_training_reduces_loss(tiny_dataset):
+    train_eps, test_eps, norm = tiny_dataset
+    params, hist = T.train(
+        train_eps, test_eps, norm, hidden=8, layers=1, epochs=25, verbose=False
+    )
+    assert hist[-1] < hist[0] * 0.9
+    assert np.isfinite(hist).all()
+
+
+def test_make_batches_shapes(tiny_dataset):
+    train_eps, _, norm = tiny_dataset
+    xs, ys = T.make_batches(train_eps, norm, seq_len=40)
+    assert xs.shape[0] == 40 and xs.shape[2] == 16
+    assert ys.shape == (40, xs.shape[1], 1)
+
+
+def test_evaluate_returns_finite(tiny_dataset, small_params):
+    train_eps, test_eps, norm = tiny_dataset
+    snr = T.evaluate(small_params, test_eps, norm)
+    assert np.isfinite(snr)

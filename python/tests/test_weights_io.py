@@ -1,0 +1,53 @@
+"""weights.bin round-trip and corruption handling."""
+
+import numpy as np
+import pytest
+
+from compile import weights_io
+
+
+def _norm():
+    return {"x_mean": 0.1, "x_std": 2.5, "y_scale": 0.3, "y_offset": 0.05}
+
+
+def test_roundtrip(small_params, tmp_path):
+    import jax
+
+    params = jax.device_get(small_params)
+    path = tmp_path / "w.bin"
+    weights_io.save(path, params, _norm())
+    loaded, norm = weights_io.load(path)
+    assert norm["x_std"] == pytest.approx(2.5)
+    assert len(loaded["layers"]) == 3
+    for a, b in zip(params["layers"], loaded["layers"]):
+        np.testing.assert_array_equal(np.asarray(a["w"], np.float32), b["w"])
+        np.testing.assert_array_equal(np.asarray(a["b"], np.float32), b["b"])
+    np.testing.assert_array_equal(np.asarray(params["dense"]["w"], np.float32), loaded["dense"]["w"])
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE" + b"\x00" * 64)
+    with pytest.raises(ValueError, match="magic"):
+        weights_io.load(p)
+
+
+def test_truncated(small_params, tmp_path):
+    import jax
+
+    p = tmp_path / "w.bin"
+    weights_io.save(p, jax.device_get(small_params), _norm())
+    data = p.read_bytes()
+    p.write_bytes(data[: len(data) // 2])
+    with pytest.raises(Exception):
+        weights_io.load(p)
+
+
+def test_trailing_bytes_rejected(small_params, tmp_path):
+    import jax
+
+    p = tmp_path / "w.bin"
+    weights_io.save(p, jax.device_get(small_params), _norm())
+    p.write_bytes(p.read_bytes() + b"\x00\x00\x00\x00")
+    with pytest.raises(ValueError, match="trailing"):
+        weights_io.load(p)

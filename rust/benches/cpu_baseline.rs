@@ -1,0 +1,86 @@
+//! CPU baseline bench: the paper's software comparison (ARM A53 398 us,
+//! cRIO Atom ~ the 500 us RTOS budget) regenerated from the op-count
+//! timing models, plus the real host-measured latencies of every CPU
+//! inference path in this repo (native f64, quantized FP-32/16/8, PJRT).
+
+use hrd_lstm::bench::{black_box, BenchGroup};
+use hrd_lstm::coordinator::rtos::{RtosDeadline, ARM_A53, CRIO_ATOM};
+use hrd_lstm::fixed::{FP16, FP32, FP8};
+use hrd_lstm::fpga::paper_op_count;
+use hrd_lstm::lstm::{LstmParams, Network, QuantizedNetwork};
+use hrd_lstm::runtime::StepExecutor;
+
+fn main() {
+    let ops = paper_op_count();
+    println!("modeled embedded baselines ({} ops/step):", ops);
+    for cpu in [ARM_A53, CRIO_ATOM] {
+        println!(
+            "  {:<18} {:.0} MHz -> {:>6.1} us/step, {:.3} GOPS",
+            cpu.name,
+            cpu.clock_mhz,
+            cpu.latency_us(ops),
+            cpu.gops(ops)
+        );
+    }
+    let rtos = RtosDeadline::default();
+    println!(
+        "  RTOS budget {:.0} us: cRIO meets it: {}\n",
+        rtos.budget_us(),
+        rtos.meets(CRIO_ATOM.latency_us(ops))
+    );
+
+    let params = match LstmParams::load(std::path::Path::new("artifacts/weights.bin")) {
+        Ok(p) => p,
+        Err(_) => LstmParams::init(16, 15, 3, 1, 42),
+    };
+    let window = [3.0f32; 16];
+
+    let mut g = BenchGroup::new("cpu_baseline");
+    let mut native = Network::new(params.clone());
+    let s = g.bench("native_f64_step", || {
+        black_box(native.infer_window(&window));
+    });
+    let native_us = s.mean() * 1e6;
+
+    for fmt in [FP32, FP16, FP8] {
+        let mut q = QuantizedNetwork::new(&params, fmt);
+        g.bench(&format!("quantized_{}_step", fmt.name), || {
+            black_box(q.infer_window(&window));
+        });
+    }
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut exe = StepExecutor::load(std::path::Path::new("artifacts"), "fp32").unwrap();
+        let step_us = g
+            .bench("pjrt_step_fp32", || {
+                black_box(exe.infer_window(&window).unwrap());
+            })
+            .mean()
+            * 1e6;
+        println!("\npjrt dispatch overhead vs native: {:.1}x", step_us / native_us);
+        // Chunked-sequence executor: one dispatch per 32 steps amortizes
+        // the PJRT overhead (the L2 throughput path).
+        let mut seq = hrd_lstm::runtime::SeqExecutor::load(std::path::Path::new("artifacts"))
+            .unwrap();
+        let chunk = seq.chunk;
+        let windows = vec![window; chunk];
+        let chunk_us = g
+            .bench_items("pjrt_seq_chunk32", chunk as f64, || {
+                black_box(seq.infer_chunk(&windows).unwrap());
+            })
+            .mean()
+            * 1e6
+            / chunk as f64;
+        println!(
+            "pjrt per-step cost: single-dispatch {step_us:.1} us vs chunked {chunk_us:.1} us"
+        );
+    }
+
+    println!(
+        "\nhost native step = {:.2} us -> {:.0}x faster than the modeled ARM A53 \
+         (the paper's FPGA is 280x)",
+        native_us,
+        ARM_A53.latency_us(ops) / native_us
+    );
+    let _ = g.write_json(std::path::Path::new("target/bench_cpu_baseline.json"));
+}

@@ -1,0 +1,79 @@
+//! End-to-end serving bench: the full coordinator pipeline (virtual
+//! testbed -> bounded queue -> backend -> metrics) per backend, reporting
+//! throughput (steps/s), host latency percentiles and estimate quality.
+//! This is the perf-pass driver for L3 (EXPERIMENTS.md §Perf).
+
+use hrd_lstm::beam::SensorFault;
+use hrd_lstm::config::schema::BackendKind;
+use hrd_lstm::config::ExperimentConfig;
+use hrd_lstm::coordinator::{build_backend, run_streaming};
+use hrd_lstm::lstm::LstmParams;
+
+fn main() {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let have_artifacts = artifacts.join("manifest.json").exists();
+    let params = if have_artifacts {
+        LstmParams::load(&artifacts.join("weights.bin")).unwrap()
+    } else {
+        LstmParams::init(16, 15, 3, 1, 42)
+    };
+    let fast = std::env::var("HRD_BENCH_FAST").as_deref() == Ok("1");
+    let steps = if fast { 300 } else { 2000 };
+
+    let mut kinds = vec![BackendKind::Native, BackendKind::Quantized, BackendKind::FpgaSim];
+    if have_artifacts {
+        kinds.push(BackendKind::Pjrt);
+    }
+
+    println!(
+        "{:<10} {:>8} {:>9} {:>9} {:>9} {:>10} {:>8} {:>7}",
+        "backend", "steps/s", "p50 us", "p99 us", "mean us", "SNR dB", "misses", "dropped"
+    );
+    for kind in kinds {
+        let cfg = ExperimentConfig {
+            backend: kind,
+            steps,
+            profile: "sweep".into(),
+            seed: 7,
+            ..Default::default()
+        };
+        let mut be = build_backend(
+            kind,
+            &params,
+            &artifacts,
+            &cfg.precision,
+            &cfg.platform,
+            cfg.parallelism,
+        )
+        .unwrap();
+        // Warm up (first PJRT dispatch pays one-time lazy init) then
+        // reset the recurrent state for a clean run.
+        be.infer(&[0.0f32; 16]).unwrap();
+        be.reset().unwrap();
+        let t0 = std::time::Instant::now();
+        let (r, _) = run_streaming(&cfg, be.as_mut(), SensorFault::None).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<10} {:>8.0} {:>9.1} {:>9.1} {:>9.1} {:>10.2} {:>8} {:>7}",
+            r.backend,
+            r.steps as f64 / wall,
+            r.host_p50_us,
+            r.host_p99_us,
+            r.host_mean_us,
+            r.snr_db,
+            r.deadline_misses,
+            r.dropped
+        );
+        // Every software path must hold the paper's 500 us RTOS deadline
+        // on this host in the common case (PJRT occasionally takes a
+        // scheduler hiccup on a shared host — allow 2% of steps).
+        assert!(
+            r.deadline_hit_rate() >= 0.95,
+            "{}: deadline hit rate {:.3}",
+            r.backend,
+            r.deadline_hit_rate()
+        );
+        assert_eq!(r.steps + r.dropped as usize, steps);
+    }
+    println!("\nPASS: all backends hold the 500 us deadline end to end");
+}

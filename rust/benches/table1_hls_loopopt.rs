@@ -1,0 +1,31 @@
+//! Table I — HLS loop-optimization study: outer-loop unroll vs pipeline
+//! on Virtex-7 / FP-16.  Paper finding: unrolling costs 8x the DSPs but
+//! does not beat pipelining at system level.
+
+use hrd_lstm::eval;
+
+fn main() {
+    let rows = eval::table1();
+    println!("TABLE I — HLS LOOP OPTIMIZATION (Virtex-7, Fixed-16)");
+    println!(
+        "{:<16} {:>6} {:>12} {:>13}   paper: DSP / Fmax / us",
+        "HLS design", "DSP", "Fmax (MHz)", "Latency (us)"
+    );
+    let paper = [("Loop Unroll", 1852u64, 166.0, 6.12), ("Loop Pipeline", 224, 250.0, 6.54)];
+    for ((name, rep), (pname, pdsp, pfmax, plat)) in rows.iter().zip(paper) {
+        assert_eq!(*name, pname);
+        println!(
+            "{:<16} {:>6} {:>12.0} {:>13.2}   {:>6} / {:>4.0} / {:.2}",
+            name, rep.resources.dsps, rep.fmax_mhz, rep.latency_us, pdsp, pfmax, plat
+        );
+    }
+    let (unroll, pipeline) = (&rows[0].1, &rows[1].1);
+    println!(
+        "\nshape checks: DSP ratio {:.1}x (paper 8.3x), latency ratio {:.2} (paper 0.94)",
+        unroll.resources.dsps as f64 / pipeline.resources.dsps as f64,
+        unroll.latency_us / pipeline.latency_us,
+    );
+    assert!(unroll.resources.dsps >= 8 * pipeline.resources.dsps);
+    assert!((0.8..=1.15).contains(&(unroll.latency_us / pipeline.latency_us)));
+    println!("PASS: unroll burns >=8x DSPs without a significant latency win");
+}

@@ -1,0 +1,52 @@
+//! Table III — the HLS design across platforms and precisions, with the
+//! paper's published values side by side and the bit-exact HLS engine
+//! timed on the host.
+
+use hrd_lstm::bench::{black_box, BenchGroup};
+use hrd_lstm::eval;
+use hrd_lstm::fixed::{FP16, FP32, FP8};
+use hrd_lstm::fpga::{FpgaEngine, PlatformKind};
+use hrd_lstm::lstm::LstmParams;
+
+fn main() {
+    println!("{}", eval::render_reports("TABLE III — HLS DESIGN", &eval::table3()));
+    println!(
+        "{}",
+        eval::render_comparison("Table III vs paper", &eval::table3(), &eval::table3_paper())
+    );
+
+    // Shape assertions the paper's §VII draws from this table.
+    let rows = eval::table3();
+    let find = |plat: &str, prec: &str| {
+        rows.iter().find(|r| r.platform == plat && r.precision == prec).unwrap()
+    };
+    // ZCU104 achieves the lowest latency / highest GOPS at every precision.
+    for prec in ["FP-32", "FP-16", "FP-8"] {
+        let z = find("ZCU104", prec);
+        for plat in ["Virtex 7", "U55C"] {
+            assert!(z.latency_us < find(plat, prec).latency_us, "{prec} {plat}");
+            assert!(z.throughput_gops > find(plat, prec).throughput_gops);
+        }
+    }
+    // FP-8 shrinks resources but barely moves latency (frequency only).
+    for plat in ["Virtex 7", "ZCU104", "U55C"] {
+        let r16 = find(plat, "FP-16");
+        let r8 = find(plat, "FP-8");
+        assert!(r8.resources.dsps < r16.resources.dsps);
+        assert!(r8.latency_us <= r16.latency_us);
+        assert!(r8.latency_us > 0.8 * r16.latency_us);
+    }
+    println!("PASS: ZCU104 wins every HLS precision; FP-8 gains are frequency-only\n");
+
+    // Host-side timing of the bit-exact simulated datapath.
+    let params = LstmParams::init(16, 15, 3, 1, 42);
+    let mut g = BenchGroup::new("table3_host_sim");
+    for fmt in [FP32, FP16, FP8] {
+        let mut eng = FpgaEngine::deploy_hls(&params, fmt, &PlatformKind::Zcu104.platform());
+        let w = [1.25f32; 16];
+        g.bench(&format!("hls_engine_step_{}", fmt.name), || {
+            black_box(eng.infer_window(&w));
+        });
+    }
+    let _ = g.write_json(std::path::Path::new("target/bench_table3.json"));
+}

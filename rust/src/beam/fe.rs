@@ -1,0 +1,239 @@
+//! Finite-element Euler-Bernoulli beam: Hermite cubic elements, clamped
+//! root, movable roller as a penalty spring on the interpolated transverse
+//! displacement.  Mirrors `python/compile/data.py` (same geometry, same
+//! matrices); the two are pinned to the same golden natural frequencies.
+
+use super::linalg::DMat;
+
+/// Beam geometry/material and discretization — defaults are the DROPBEAR
+/// testbed's steel beam (0.508 m x 50.8 mm x 6.35 mm).
+#[derive(Debug, Clone)]
+pub struct BeamConfig {
+    pub length: f64,
+    pub width: f64,
+    pub thickness: f64,
+    pub youngs: f64,
+    pub density: f64,
+    pub n_elements: usize,
+    pub roller_stiffness: f64,
+    pub rayleigh_alpha: f64,
+    pub rayleigh_beta: f64,
+}
+
+impl Default for BeamConfig {
+    fn default() -> Self {
+        Self {
+            length: 0.508,
+            width: 0.0508,
+            thickness: 0.00635,
+            youngs: 200e9,
+            density: 7850.0,
+            n_elements: 16,
+            roller_stiffness: 5e6,
+            rayleigh_alpha: 2.0,
+            rayleigh_beta: 1e-5,
+        }
+    }
+}
+
+impl BeamConfig {
+    pub fn area(&self) -> f64 {
+        self.width * self.thickness
+    }
+
+    pub fn inertia(&self) -> f64 {
+        self.width * self.thickness.powi(3) / 12.0
+    }
+
+    /// Free DOFs after clamping the root node (2 per free node).
+    pub fn ndof(&self) -> usize {
+        2 * self.n_elements
+    }
+
+    pub fn element_length(&self) -> f64 {
+        self.length / self.n_elements as f64
+    }
+
+    /// Analytic fundamental frequency of the free cantilever (no roller),
+    /// used as a sanity anchor: f1 = (1.875104^2/2pi) sqrt(EI/(rho A L^4)).
+    pub fn cantilever_f1_hz(&self) -> f64 {
+        let ei = self.youngs * self.inertia();
+        let ra = self.density * self.area();
+        (1.875104f64.powi(2) / (2.0 * std::f64::consts::PI))
+            * (ei / (ra * self.length.powi(4))).sqrt()
+    }
+}
+
+/// 4x4 element stiffness and mass matrices.
+pub fn element_matrices(cfg: &BeamConfig) -> (DMat, DMat) {
+    let le = cfg.element_length();
+    let ei = cfg.youngs * cfg.inertia();
+    let ra = cfg.density * cfg.area();
+    let (l2, l3) = (le * le, le * le * le);
+    let kf = ei / l3;
+    let k = DMat::from_rows(&[
+        &[12.0 * kf, 6.0 * le * kf, -12.0 * kf, 6.0 * le * kf],
+        &[6.0 * le * kf, 4.0 * l2 * kf, -6.0 * le * kf, 2.0 * l2 * kf],
+        &[-12.0 * kf, -6.0 * le * kf, 12.0 * kf, -6.0 * le * kf],
+        &[6.0 * le * kf, 2.0 * l2 * kf, -6.0 * le * kf, 4.0 * l2 * kf],
+    ]);
+    let mf = ra * le / 420.0;
+    let m = DMat::from_rows(&[
+        &[156.0 * mf, 22.0 * le * mf, 54.0 * mf, -13.0 * le * mf],
+        &[22.0 * le * mf, 4.0 * l2 * mf, 13.0 * le * mf, -3.0 * l2 * mf],
+        &[54.0 * mf, 13.0 * le * mf, 156.0 * mf, -22.0 * le * mf],
+        &[-13.0 * le * mf, -3.0 * l2 * mf, -22.0 * le * mf, 4.0 * l2 * mf],
+    ]);
+    (k, m)
+}
+
+/// Hermite displacement shape-function row at local coordinate xi in [0,1].
+pub fn hermite_shape(xi: f64, le: f64) -> [f64; 4] {
+    let x2 = xi * xi;
+    let x3 = x2 * xi;
+    [
+        1.0 - 3.0 * x2 + 2.0 * x3,
+        le * (xi - 2.0 * x2 + x3),
+        3.0 * x2 - 2.0 * x3,
+        le * (x3 - x2),
+    ]
+}
+
+/// Assembled global (K, M) with clamped-root DOFs removed and the roller
+/// penalty applied at `roller_pos` metres from the clamp.
+pub fn assemble(cfg: &BeamConfig, roller_pos: f64) -> (DMat, DMat) {
+    let n_nodes = cfg.n_elements + 1;
+    let nd = 2 * n_nodes;
+    let mut bk = DMat::zeros(nd, nd);
+    let mut bm = DMat::zeros(nd, nd);
+    let (ke, me) = element_matrices(cfg);
+    for e in 0..cfg.n_elements {
+        let s = 2 * e;
+        for i in 0..4 {
+            for j in 0..4 {
+                bk[(s + i, s + j)] += ke[(i, j)];
+                bm[(s + i, s + j)] += me[(i, j)];
+            }
+        }
+    }
+    // Roller penalty kp * N^T N on the element containing roller_pos.
+    let le = cfg.element_length();
+    let e = ((roller_pos / le) as usize).min(cfg.n_elements - 1);
+    let xi = roller_pos / le - e as f64;
+    let nv = hermite_shape(xi, le);
+    let s = 2 * e;
+    for i in 0..4 {
+        for j in 0..4 {
+            bk[(s + i, s + j)] += cfg.roller_stiffness * nv[i] * nv[j];
+        }
+    }
+    // Clamp the root: drop DOFs 0 (w0) and 1 (theta0).
+    let free = nd - 2;
+    let mut k = DMat::zeros(free, free);
+    let mut m = DMat::zeros(free, free);
+    for i in 0..free {
+        for j in 0..free {
+            k[(i, j)] = bk[(i + 2, j + 2)];
+            m[(i, j)] = bm[(i + 2, j + 2)];
+        }
+    }
+    (k, m)
+}
+
+/// First `n` natural frequencies [Hz] of the beam with the roller at
+/// `roller_pos`: solve K v = w^2 M v via Cholesky whitening + Jacobi.
+pub fn natural_frequencies(cfg: &BeamConfig, roller_pos: f64, n: usize) -> Vec<f64> {
+    let (k, m) = assemble(cfg, roller_pos);
+    let l = m.cholesky().expect("mass matrix must be SPD");
+    // A = L^-1 K L^-T  (whiten): columns of L^-T from triangular solves.
+    let nd = k.rows;
+    // Compute B = L^-1 K  row by row: solve L * B = K columnwise.
+    let mut b = DMat::zeros(nd, nd);
+    let mut col = vec![0.0; nd];
+    for j in 0..nd {
+        for i in 0..nd {
+            col[i] = k[(i, j)];
+        }
+        let y = l.solve_lower(&col);
+        for i in 0..nd {
+            b[(i, j)] = y[i];
+        }
+    }
+    // A = B L^-T  => A^T = L^-1 B^T; reuse the same trick.
+    let bt = b.transpose();
+    let mut at = DMat::zeros(nd, nd);
+    for j in 0..nd {
+        for i in 0..nd {
+            col[i] = bt[(i, j)];
+        }
+        let y = l.solve_lower(&col);
+        for i in 0..nd {
+            at[(i, j)] = y[i];
+        }
+    }
+    let a = at.transpose();
+    let ev = a.eigvals_sym();
+    ev.iter().take(n).map(|w2| w2.abs().sqrt() / (2.0 * std::f64::consts::PI)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_matrices_symmetric() {
+        let cfg = BeamConfig::default();
+        let (k, m) = element_matrices(&cfg);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-6);
+                assert!((m[(i, j)] - m[(j, i)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn hermite_partition_of_unity() {
+        // Displacement shapes sum to 1 for rigid translation at any xi.
+        for i in 0..=10 {
+            let xi = i as f64 / 10.0;
+            let n = hermite_shape(xi, 0.1);
+            assert!((n[0] + n[2] - 1.0).abs() < 1e-12);
+        }
+        // Endpoints interpolate nodal values.
+        let n0 = hermite_shape(0.0, 0.1);
+        assert_eq!(n0, [1.0, 0.0, 0.0, 0.0]);
+        let n1 = hermite_shape(1.0, 0.1);
+        assert!((n1[2] - 1.0).abs() < 1e-12 && n1[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn cantilever_matches_analytic() {
+        let cfg = BeamConfig { roller_stiffness: 0.0, ..Default::default() };
+        let f = natural_frequencies(&cfg, 0.05, 1);
+        let analytic = cfg.cantilever_f1_hz();
+        let rel = (f[0] - analytic).abs() / analytic;
+        assert!(rel < 1e-3, "fe {} vs analytic {analytic}", f[0]);
+    }
+
+    #[test]
+    fn roller_stiffens_beam() {
+        let cfg = BeamConfig::default();
+        let mut prev = 0.0;
+        for pos in [0.05, 0.10, 0.20, 0.30, 0.35] {
+            let f1 = natural_frequencies(&cfg, pos, 1)[0];
+            assert!(f1 > prev, "f1({pos}) = {f1} not > {prev}");
+            prev = f1;
+        }
+        let lo = natural_frequencies(&cfg, 0.05, 1)[0];
+        let hi = natural_frequencies(&cfg, 0.35, 1)[0];
+        assert!(hi / lo > 2.0, "travel must move f1 by >2x ({lo} -> {hi})");
+    }
+
+    #[test]
+    fn mass_matrix_spd() {
+        let cfg = BeamConfig::default();
+        let (_, m) = assemble(&cfg, 0.2);
+        assert!(m.cholesky().is_some());
+    }
+}

@@ -1,0 +1,348 @@
+//! Small dense linear algebra for the FE beam (no nalgebra offline).
+//!
+//! Row-major `DMat` with exactly the operations the substrate needs:
+//! matmul/matvec, Cholesky, SPD inverse, and a cyclic Jacobi eigensolver
+//! for the symmetric generalized problem `K v = w^2 M v` (whitened through
+//! the Cholesky factor of M, as in `python/compile/data.py`).
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut m = Self::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> DMat {
+        let mut t = DMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &DMat) -> DMat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = DMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (d, &o) in dst.iter_mut().zip(orow) {
+                    *d += a * o;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(self.cols, x.len());
+        assert_eq!(self.rows, out.len());
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            out[i] = acc;
+        }
+    }
+
+    /// `self += s * other`
+    pub fn axpy(&mut self, s: f64, other: &DMat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Lower-triangular Cholesky factor of an SPD matrix.
+    pub fn cholesky(&self) -> Option<DMat> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = DMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Solve L y = b for lower-triangular L.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self[(i, k)] * y[k];
+            }
+            y[i] = sum / self[(i, i)];
+        }
+        y
+    }
+
+    /// Solve L^T x = y for lower-triangular L.
+    pub fn solve_lower_transpose(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self[(k, i)] * x[k];
+            }
+            x[i] = sum / self[(i, i)];
+        }
+        x
+    }
+
+    /// Inverse of an SPD matrix via Cholesky (column-by-column solves).
+    pub fn inverse_spd(&self) -> Option<DMat> {
+        let n = self.rows;
+        let l = self.cholesky()?;
+        let mut inv = DMat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e.fill(0.0);
+            e[j] = 1.0;
+            let y = l.solve_lower(&e);
+            let x = l.solve_lower_transpose(&y);
+            for i in 0..n {
+                inv[(i, j)] = x[i];
+            }
+        }
+        Some(inv)
+    }
+
+    /// Eigenvalues of a symmetric matrix by the cyclic Jacobi method.
+    pub fn eigvals_sym(&self) -> Vec<f64> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        // Symmetrize against accumulated round-off.
+        for i in 0..n {
+            for j in 0..i {
+                let m = 0.5 * (a[(i, j)] + a[(j, i)]);
+                a[(i, j)] = m;
+                a[(j, i)] = m;
+            }
+        }
+        for _sweep in 0..100 {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    off += a[(i, j)] * a[(i, j)];
+                }
+            }
+            if off < 1e-22 * n as f64 {
+                break;
+            }
+            for p in 0..n {
+                for q in p + 1..n {
+                    let apq = a[(p, q)];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let theta = (a[(q, q)] - a[(p, p)]) / (2.0 * apq);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    for k in 0..n {
+                        let akp = a[(k, p)];
+                        let akq = a[(k, q)];
+                        a[(k, p)] = c * akp - s * akq;
+                        a[(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[(p, k)];
+                        let aqk = a[(q, k)];
+                        a[(p, k)] = c * apk - s * aqk;
+                        a[(q, k)] = s * apk + c * aqk;
+                    }
+                }
+            }
+        }
+        let mut ev: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        ev.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        ev
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DMat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> DMat {
+        DMat::from_rows(&[&[4.0, 1.0, 0.5], &[1.0, 3.0, 0.2], &[0.5, 0.2, 2.0]])
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = spd3();
+        let i = DMat::identity(3);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        let rec = l.matmul(&l.transpose());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let m = DMat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // indefinite
+        assert!(m.cholesky().is_none());
+    }
+
+    #[test]
+    fn inverse_spd_works() {
+        let a = spd3();
+        let inv = a.inverse_spd().unwrap();
+        let id = a.matmul(&inv);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        let b = [1.0, 2.0, 3.0];
+        let y = l.solve_lower(&b);
+        let x = l.solve_lower_transpose(&y);
+        // Check A x = b
+        let mut ax = vec![0.0; 3];
+        a.matvec(&x, &mut ax);
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn jacobi_eigenvalues_diag() {
+        let m = DMat::from_rows(&[&[3.0, 0.0], &[0.0, -1.0]]);
+        let ev = m.eigvals_sym();
+        assert!((ev[0] + 1.0).abs() < 1e-12);
+        assert!((ev[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let m = DMat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let ev = m.eigvals_sym();
+        assert!((ev[0] - 1.0).abs() < 1e-12);
+        assert!((ev[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_trace_preserved() {
+        let mut rng = crate::util::Rng::new(8);
+        for _ in 0..20 {
+            let n = 6;
+            let mut m = DMat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = rng.uniform(-2.0, 2.0);
+                    m[(i, j)] = v;
+                    m[(j, i)] = v;
+                }
+            }
+            let trace: f64 = (0..n).map(|i| m[(i, i)]).sum();
+            let ev = m.eigvals_sym();
+            let sum: f64 = ev.iter().sum();
+            assert!((trace - sum).abs() < 1e-9, "trace {trace} sum {sum}");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = spd3();
+        let x = [1.0, -2.0, 0.5];
+        let mut out = vec![0.0; 3];
+        a.matvec(&x, &mut out);
+        let xm = DMat::from_rows(&[&x]).transpose();
+        let prod = a.matmul(&xm);
+        for i in 0..3 {
+            assert!((out[i] - prod[(i, 0)]).abs() < 1e-14);
+        }
+    }
+}

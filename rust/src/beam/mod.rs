@@ -1,0 +1,23 @@
+//! Beam physics substrate — the Euler-Bernoulli model the paper's LSTM
+//! surrogates, rebuilt from first principles (DESIGN.md §2):
+//!
+//! * [`linalg`] — small dense linear algebra (Cholesky, Jacobi eigensolver)
+//! * [`fe`] — Hermite FE discretization with the movable-roller boundary
+//! * [`newmark`] — Newmark-beta time integration (the *expensive baseline*:
+//!   this is the physics model whose latency the LSTM replaces)
+//! * [`sensor`] — accelerometer front-end with fault injection
+//! * [`profiles`] — DROPBEAR roller trajectories
+//! * [`testbed`] — the streaming virtual apparatus the coordinator ingests
+
+pub mod fe;
+pub mod linalg;
+pub mod newmark;
+pub mod profiles;
+pub mod sensor;
+pub mod testbed;
+
+pub use fe::{natural_frequencies, BeamConfig};
+pub use newmark::NewmarkSim;
+pub use profiles::{roller_profile, ProfileKind, ROLLER_MAX, ROLLER_MIN};
+pub use sensor::{Accelerometer, Biquad, SensorFault};
+pub use testbed::{Excitation, Testbed, Window};

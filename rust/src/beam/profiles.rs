@@ -1,0 +1,157 @@
+//! DROPBEAR roller profiles — the boundary-condition trajectories the
+//! benchmark's test segments sweep.  Same profile kinds as
+//! `python/compile/data.py::roller_profile` (independent RNG streams; the
+//! shapes, bounds and determinism are what is contracted, not the exact
+//! sample paths).
+
+use crate::util::Rng;
+
+/// Roller travel limits (metres from the clamp).  See DESIGN.md §2 for the
+/// extension beyond the physical 48-175 mm travel.
+pub const ROLLER_MIN: f64 = 0.050;
+pub const ROLLER_MAX: f64 = 0.350;
+
+/// Profile families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileKind {
+    /// Constant mid-travel hold.
+    Hold,
+    /// Random step-and-hold segments (the classic DROPBEAR profile).
+    Steps,
+    /// Linear lo -> hi ramp.
+    Ramp,
+    /// lo -> hi -> lo triangle.
+    Triangle,
+    /// Sinusoidal oscillation.
+    Sine,
+    /// Frequency-swept sinusoid.
+    Sweep,
+}
+
+impl ProfileKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "hold" => Some(Self::Hold),
+            "steps" => Some(Self::Steps),
+            "ramp" => Some(Self::Ramp),
+            "triangle" => Some(Self::Triangle),
+            "sine" => Some(Self::Sine),
+            "sweep" => Some(Self::Sweep),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hold => "hold",
+            Self::Steps => "steps",
+            Self::Ramp => "ramp",
+            Self::Triangle => "triangle",
+            Self::Sine => "sine",
+            Self::Sweep => "sweep",
+        }
+    }
+
+    pub const ALL: [ProfileKind; 6] =
+        [Self::Hold, Self::Steps, Self::Ramp, Self::Triangle, Self::Sine, Self::Sweep];
+}
+
+/// Generate a roller position per model step.
+pub fn roller_profile(kind: ProfileKind, n_steps: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed.wrapping_mul(0xD1FF_5EED).wrapping_add(kind as u64));
+    let (lo, hi) = (ROLLER_MIN, ROLLER_MAX);
+    let mid = 0.5 * (lo + hi);
+    let half = 0.5 * (hi - lo);
+    let denom = (n_steps.max(2) - 1) as f64;
+    match kind {
+        ProfileKind::Hold => vec![mid; n_steps],
+        ProfileKind::Steps => {
+            let mut out = vec![0.0; n_steps];
+            let mut i = 0usize;
+            let mut cur = rng.uniform(lo, hi);
+            while i < n_steps {
+                let dur = rng.range(n_steps / 12 + 1, n_steps / 5 + 2);
+                let end = (i + dur).min(n_steps);
+                for p in &mut out[i..end] {
+                    *p = cur;
+                }
+                cur = rng.uniform(lo, hi);
+                i = end;
+            }
+            out
+        }
+        ProfileKind::Ramp => (0..n_steps).map(|i| lo + (hi - lo) * i as f64 / denom).collect(),
+        ProfileKind::Triangle => (0..n_steps)
+            .map(|i| {
+                let t = i as f64 / denom;
+                lo + (hi - lo) * (1.0 - (2.0 * t - 1.0).abs())
+            })
+            .collect(),
+        ProfileKind::Sine => (0..n_steps)
+            .map(|i| {
+                let t = i as f64 / denom;
+                mid + 0.9 * half * (2.0 * std::f64::consts::PI * 1.5 * t).sin()
+            })
+            .collect(),
+        ProfileKind::Sweep => (0..n_steps)
+            .map(|i| {
+                let t = i as f64 / denom;
+                let phase = 2.0 * std::f64::consts::PI * (0.5 * t + 2.5 * t * t);
+                mid + 0.45 * (hi - lo) * phase.sin()
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_in_bounds() {
+        for kind in ProfileKind::ALL {
+            let p = roller_profile(kind, 500, 3);
+            assert_eq!(p.len(), 500);
+            for (i, v) in p.iter().enumerate() {
+                assert!(
+                    (ROLLER_MIN - 1e-9..=ROLLER_MAX + 1e-9).contains(v),
+                    "{:?}[{i}] = {v}",
+                    kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = roller_profile(ProfileKind::Steps, 300, 5);
+        let b = roller_profile(ProfileKind::Steps, 300, 5);
+        assert_eq!(a, b);
+        let c = roller_profile(ProfileKind::Steps, 300, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn steps_profile_has_holds() {
+        let p = roller_profile(ProfileKind::Steps, 600, 7);
+        let changes = p.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(changes >= 2, "too few steps: {changes}");
+        assert!(changes < 60, "not holding: {changes}");
+    }
+
+    #[test]
+    fn ramp_monotonic() {
+        let p = roller_profile(ProfileKind::Ramp, 100, 0);
+        assert!(p.windows(2).all(|w| w[1] >= w[0]));
+        assert!((p[0] - ROLLER_MIN).abs() < 1e-12);
+        assert!((p[99] - ROLLER_MAX).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for kind in ProfileKind::ALL {
+            assert_eq!(ProfileKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ProfileKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,201 @@
+//! Accelerometer front-end: RBJ biquad anti-aliasing low-pass + white
+//! noise + failure-injection modes (dropout, spikes) used by the
+//! coordinator's robustness tests.  The filter is coefficient-identical to
+//! `python/compile/data.py::Biquad`.
+
+use crate::util::Rng;
+
+/// RBJ-cookbook biquad low-pass section.
+#[derive(Debug, Clone)]
+pub struct Biquad {
+    b0: f64,
+    b1: f64,
+    b2: f64,
+    a1: f64,
+    a2: f64,
+    x1: f64,
+    x2: f64,
+    y1: f64,
+    y2: f64,
+}
+
+impl Biquad {
+    pub fn lowpass(fs: f64, fc: f64, q: f64) -> Self {
+        let w0 = 2.0 * std::f64::consts::PI * fc / fs;
+        let (cw, sw) = (w0.cos(), w0.sin());
+        let alpha = sw / (2.0 * q);
+        let a0 = 1.0 + alpha;
+        Self {
+            b0: ((1.0 - cw) / 2.0) / a0,
+            b1: (1.0 - cw) / a0,
+            b2: ((1.0 - cw) / 2.0) / a0,
+            a1: (-2.0 * cw) / a0,
+            a2: (1.0 - alpha) / a0,
+            x1: 0.0,
+            x2: 0.0,
+            y1: 0.0,
+            y2: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn step(&mut self, x: f64) -> f64 {
+        let y = self.b0 * x + self.b1 * self.x1 + self.b2 * self.x2
+            - self.a1 * self.y1
+            - self.a2 * self.y2;
+        self.x2 = self.x1;
+        self.x1 = x;
+        self.y2 = self.y1;
+        self.y1 = y;
+        y
+    }
+
+    pub fn reset(&mut self) {
+        self.x1 = 0.0;
+        self.x2 = 0.0;
+        self.y1 = 0.0;
+        self.y2 = 0.0;
+    }
+}
+
+/// Fault-injection modes for robustness experiments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SensorFault {
+    None,
+    /// Sample-and-hold dropout with the given per-sample probability and
+    /// duration in samples.
+    Dropout { prob: f64, hold: usize },
+    /// Random additive spikes (probability, amplitude in m/s^2).
+    Spikes { prob: f64, amp: f64 },
+}
+
+/// The accelerometer: anti-aliasing filter + noise + optional faults.
+pub struct Accelerometer {
+    filter: Biquad,
+    noise_std: f64,
+    rng: Rng,
+    fault: SensorFault,
+    held: f64,
+    hold_left: usize,
+}
+
+/// Default sensor noise (RMS, in g) — matches python datagen.
+pub const NOISE_G: f64 = 0.02;
+/// Anti-aliasing corner frequency — matches python datagen.
+pub const CUTOFF_HZ: f64 = 2000.0;
+
+impl Accelerometer {
+    pub fn new(fs: f64, seed: u64) -> Self {
+        Self {
+            filter: Biquad::lowpass(fs, CUTOFF_HZ, std::f64::consts::FRAC_1_SQRT_2),
+            noise_std: NOISE_G * 9.81,
+            rng: Rng::new(seed ^ 0xACCE_1E80),
+            fault: SensorFault::None,
+            held: 0.0,
+            hold_left: 0,
+        }
+    }
+
+    pub fn with_fault(mut self, fault: SensorFault) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Convert a raw structural acceleration into a sensor reading.
+    pub fn sample(&mut self, raw_accel: f64) -> f64 {
+        let filtered = self.filter.step(raw_accel);
+        let mut v = filtered + self.rng.normal_scaled(0.0, self.noise_std);
+        match self.fault {
+            SensorFault::None => {}
+            SensorFault::Dropout { prob, hold } => {
+                if self.hold_left > 0 {
+                    self.hold_left -= 1;
+                    v = self.held;
+                } else if self.rng.chance(prob) {
+                    self.hold_left = hold;
+                    self.held = v;
+                }
+            }
+            SensorFault::Spikes { prob, amp } => {
+                if self.rng.chance(prob) {
+                    v += if self.rng.chance(0.5) { amp } else { -amp };
+                }
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn biquad_dc_gain_unity() {
+        let mut bq = Biquad::lowpass(32_000.0, 2_000.0, std::f64::consts::FRAC_1_SQRT_2);
+        let mut y = 0.0;
+        for _ in 0..4000 {
+            y = bq.step(1.0);
+        }
+        assert!((y - 1.0).abs() < 1e-6, "dc gain {y}");
+    }
+
+    #[test]
+    fn biquad_attenuates_above_cutoff() {
+        let fs = 32_000.0;
+        let mut bq = Biquad::lowpass(fs, 2_000.0, std::f64::consts::FRAC_1_SQRT_2);
+        let f = 12_000.0;
+        let mut peak: f64 = 0.0;
+        for n in 0..4000 {
+            let x = (2.0 * std::f64::consts::PI * f * n as f64 / fs).sin();
+            let y = bq.step(x);
+            if n > 2000 {
+                peak = peak.max(y.abs());
+            }
+        }
+        assert!(peak < 0.1, "HF leak {peak}");
+    }
+
+    #[test]
+    fn biquad_passes_low_freq() {
+        let fs = 32_000.0;
+        let mut bq = Biquad::lowpass(fs, 2_000.0, std::f64::consts::FRAC_1_SQRT_2);
+        let f = 100.0;
+        let mut peak: f64 = 0.0;
+        for n in 0..64_000 {
+            let x = (2.0 * std::f64::consts::PI * f * n as f64 / fs).sin();
+            let y = bq.step(x);
+            if n > 32_000 {
+                peak = peak.max(y.abs());
+            }
+        }
+        assert!((peak - 1.0).abs() < 0.02, "passband gain {peak}");
+    }
+
+    #[test]
+    fn sensor_noise_statistics() {
+        let mut acc = Accelerometer::new(32_000.0, 1);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| acc.sample(0.0)).collect();
+        let std = crate::util::stats::std_dev(&xs);
+        assert!((std - NOISE_G * 9.81).abs() < 0.02, "noise std {std}");
+    }
+
+    #[test]
+    fn dropout_holds_value() {
+        let mut acc = Accelerometer::new(32_000.0, 2)
+            .with_fault(SensorFault::Dropout { prob: 1.0, hold: 5 });
+        let first = acc.sample(1.0);
+        for _ in 0..5 {
+            assert_eq!(acc.sample(123.0), first);
+        }
+    }
+
+    #[test]
+    fn spikes_add_amplitude() {
+        let mut acc =
+            Accelerometer::new(32_000.0, 3).with_fault(SensorFault::Spikes { prob: 1.0, amp: 100.0 });
+        let v = acc.sample(0.0);
+        assert!(v.abs() > 50.0, "no spike: {v}");
+    }
+}

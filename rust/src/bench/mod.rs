@@ -1,0 +1,213 @@
+//! Criterion-like micro-benchmark harness (no criterion crate offline).
+//!
+//! Used by every binary under `rust/benches/` (compiled with
+//! `harness = false`) and by the perf pass.  Design: warm up, then run
+//! adaptive batches until both a minimum wall time and a minimum sample
+//! count are reached; report mean / p50 / p99 with outlier-robust stats;
+//! optionally dump JSON for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::{fmt_duration_s, stats, Json};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Per-iteration wall times, seconds.
+    pub times: Vec<f64>,
+    /// Optional user-supplied throughput divisor (items per iteration).
+    pub items_per_iter: f64,
+}
+
+impl Sample {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.times)
+    }
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.times, 50.0)
+    }
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.times, 99.0)
+    }
+    pub fn min(&self) -> f64 {
+        stats::min(&self.times)
+    }
+    pub fn std(&self) -> f64 {
+        stats::std_dev(&self.times)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("samples", Json::from(self.times.len())),
+            ("mean_s", Json::from(self.mean())),
+            ("p50_s", Json::from(self.p50())),
+            ("p99_s", Json::from(self.p99())),
+            ("min_s", Json::from(self.min())),
+            ("std_s", Json::from(self.std())),
+            ("items_per_iter", Json::from(self.items_per_iter)),
+        ])
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(800),
+            min_samples: 20,
+            max_samples: 100_000,
+        }
+    }
+}
+
+/// A named group of benchmarks with aligned console output.
+pub struct BenchGroup {
+    pub group: String,
+    cfg: BenchConfig,
+    samples: Vec<Sample>,
+}
+
+impl BenchGroup {
+    pub fn new(group: &str) -> Self {
+        println!("\n== bench group: {group} ==");
+        Self { group: group.to_string(), cfg: BenchConfig::default(), samples: Vec::new() }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Fast mode for CI: one short batch (HRD_BENCH_FAST=1).
+    fn effective_cfg(&self) -> BenchConfig {
+        if std::env::var("HRD_BENCH_FAST").as_deref() == Ok("1") {
+            BenchConfig {
+                warmup: Duration::from_millis(10),
+                min_time: Duration::from_millis(50),
+                min_samples: 5,
+                max_samples: 1000,
+            }
+        } else {
+            self.cfg.clone()
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Sample {
+        self.bench_items(name, 1.0, move || f())
+    }
+
+    /// Benchmark with a throughput divisor (`items` logical items per call).
+    pub fn bench_items<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &Sample {
+        let cfg = self.effective_cfg();
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < cfg.warmup {
+            f();
+        }
+        // Measure.
+        let mut times = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < cfg.min_time || times.len() < cfg.min_samples)
+            && times.len() < cfg.max_samples
+        {
+            let s = Instant::now();
+            f();
+            times.push(s.elapsed().as_secs_f64());
+        }
+        let sample = Sample { name: name.to_string(), times, items_per_iter: items };
+        Self::print_sample(&sample);
+        self.samples.push(sample);
+        self.samples.last().unwrap()
+    }
+
+    fn print_sample(s: &Sample) {
+        let thr = if s.items_per_iter > 1.0 {
+            format!("  ({:.0} items/s)", s.items_per_iter / s.mean())
+        } else {
+            String::new()
+        };
+        println!(
+            "  {:40} mean {:>11}  p50 {:>11}  p99 {:>11}  n={}{}",
+            s.name,
+            fmt_duration_s(s.mean()),
+            fmt_duration_s(s.p50()),
+            fmt_duration_s(s.p99()),
+            s.times.len(),
+            thr
+        );
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Write all samples as JSON (for EXPERIMENTS.md tooling).
+    pub fn write_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let arr = Json::Arr(self.samples.iter().map(|s| s.to_json()).collect());
+        let out = Json::obj(vec![("group", Json::from(self.group.as_str())), ("samples", arr)]);
+        std::fs::write(path, out.to_string())?;
+        Ok(())
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (stable-Rust
+/// `black_box` via volatile read).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    unsafe {
+        let y = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("HRD_BENCH_FAST", "1");
+        let mut g = BenchGroup::new("selftest");
+        let s = g.bench("noop_sum", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i);
+            }
+            black_box(acc);
+        });
+        assert!(s.times.len() >= 5);
+        assert!(s.mean() > 0.0);
+        assert!(s.p99() >= s.p50());
+    }
+
+    #[test]
+    fn json_output(){
+        std::env::set_var("HRD_BENCH_FAST", "1");
+        let mut g = BenchGroup::new("selftest2");
+        g.bench("x", || {
+            black_box(1 + 1);
+        });
+        let dir = std::env::temp_dir().join("hrd_bench_test.json");
+        g.write_json(&dir).unwrap();
+        let j = crate::util::Json::parse_file(&dir).unwrap();
+        assert_eq!(j.get("group").unwrap().as_str(), Some("selftest2"));
+    }
+
+    #[test]
+    fn black_box_returns_value() {
+        assert_eq!(black_box(42), 42);
+    }
+}

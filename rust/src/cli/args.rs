@@ -1,0 +1,108 @@
+//! Hand-rolled argument parser (no clap offline): `--key value` /
+//! `--flag` options after a positional subcommand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        if command.starts_with('-') && command != "-h" && command != "--help" {
+            bail!("expected a subcommand before options, got {command}");
+        }
+        let mut out = Self { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a}");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                out.opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                out.opts.insert(key.to_string(), it.next().unwrap());
+            } else {
+                out.flags.push(key.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["serve", "--steps", "100", "--precision=fp16", "--quiet"]);
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("precision"), Some("fp16"));
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["serve".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn defaults_to_help() {
+        assert_eq!(Args::parse(std::iter::empty()).unwrap().command, "help");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["serve", "--steps", "ten"]);
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Command-line interface for the `hrd` binary: a hand-rolled parser
+//! ([`args`]) and the subcommand implementations ([`commands`]).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::{dispatch, USAGE};
+
+/// Entry point used by `main.rs`.
+pub fn run() -> anyhow::Result<i32> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    dispatch(&args)
+}

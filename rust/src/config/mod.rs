@@ -1,0 +1,9 @@
+//! Configuration substrate: a TOML-subset parser ([`toml`]) and the typed
+//! experiment configuration ([`schema`]) consumed by the CLI and the
+//! coordinator launcher.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::ExperimentConfig;
+pub use toml::TomlValue;

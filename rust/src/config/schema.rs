@@ -1,0 +1,163 @@
+//! Typed experiment configuration loaded from TOML (see `examples/` and
+//! `hrd serve --config`).  Every field has a sensible default so a config
+//! file is optional.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::toml::TomlDoc;
+
+/// Which inference engine the coordinator drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifact executed by the PJRT CPU client (the L3<-L2 path).
+    Pjrt,
+    /// From-scratch f32 Rust engine (the "RTOS software" baseline).
+    Native,
+    /// Quantized fixed-point engine (bit-exact with the FPGA simulator).
+    Quantized,
+    /// Cycle-level FPGA accelerator simulation (HDL microarchitecture).
+    FpgaSim,
+    /// Classical frequency-tracking baseline (FEM model updating lite).
+    Modal,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pjrt" => Some(Self::Pjrt),
+            "native" => Some(Self::Native),
+            "quantized" => Some(Self::Quantized),
+            "fpga-sim" | "fpga_sim" | "fpga" => Some(Self::FpgaSim),
+            "modal" | "model-updating" => Some(Self::Modal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Pjrt => "pjrt",
+            Self::Native => "native",
+            Self::Quantized => "quantized",
+            Self::FpgaSim => "fpga-sim",
+            Self::Modal => "modal",
+        }
+    }
+}
+
+/// Full experiment configuration for the serving coordinator.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Directory holding weights.bin / *.hlo.txt / manifest.json.
+    pub artifacts_dir: PathBuf,
+    /// Inference backend.
+    pub backend: BackendKind,
+    /// Paper precision name for quantized/fpga backends ("fp32"/"fp16"/"fp8").
+    pub precision: String,
+    /// Roller profile kind driving the simulated testbed.
+    pub profile: String,
+    /// Number of model steps (windows) to stream.
+    pub steps: usize,
+    /// Real-time deadline per step, microseconds (paper RTOS: 500 us).
+    pub deadline_us: f64,
+    /// Playback speed: 0 = as-fast-as-possible, 1.0 = real time.
+    pub realtime_factor: f64,
+    /// Seed for the beam/workload RNG.
+    pub seed: u64,
+    /// Bounded queue depth between pipeline stages (backpressure).
+    pub queue_depth: usize,
+    /// FPGA platform name for the fpga-sim backend.
+    pub platform: String,
+    /// HDL unit parallelism for the fpga-sim backend.
+    pub parallelism: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            backend: BackendKind::Pjrt,
+            precision: "fp32".into(),
+            profile: "steps".into(),
+            steps: 2000,
+            deadline_us: crate::arch::RTOS_PERIOD_US,
+            realtime_factor: 0.0,
+            seed: 42,
+            queue_depth: 64,
+            platform: "u55c".into(),
+            parallelism: 15,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file; missing keys fall back to defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let doc = TomlDoc::parse_file(path)?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Self {
+        let d = Self::default();
+        Self {
+            artifacts_dir: PathBuf::from(
+                doc.get_str("artifacts_dir", d.artifacts_dir.to_str().unwrap()),
+            ),
+            backend: BackendKind::parse(&doc.get_str("backend", d.backend.name()))
+                .unwrap_or(d.backend),
+            precision: doc.get_str("precision", &d.precision),
+            profile: doc.get_str("profile", &d.profile),
+            steps: doc.get_i64("steps", d.steps as i64).max(1) as usize,
+            deadline_us: doc.get_f64("deadline_us", d.deadline_us),
+            realtime_factor: doc.get_f64("realtime_factor", d.realtime_factor),
+            seed: doc.get_i64("seed", d.seed as i64) as u64,
+            queue_depth: doc.get_i64("queue_depth", d.queue_depth as i64).max(1) as usize,
+            platform: doc.get_str("fpga.platform", &d.platform),
+            parallelism: doc.get_i64("fpga.parallelism", d.parallelism as i64).max(1) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert_eq!(c.deadline_us, 500.0);
+        assert_eq!(c.steps, 2000);
+    }
+
+    #[test]
+    fn from_toml() {
+        let doc = TomlDoc::parse(
+            r#"
+backend = "fpga-sim"
+precision = "fp16"
+steps = 100
+deadline_us = 250.0
+
+[fpga]
+platform = "zcu104"
+parallelism = 2
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc);
+        assert_eq!(c.backend, BackendKind::FpgaSim);
+        assert_eq!(c.precision, "fp16");
+        assert_eq!(c.steps, 100);
+        assert_eq!(c.platform, "zcu104");
+        assert_eq!(c.parallelism, 2);
+    }
+
+    #[test]
+    fn backend_parse_aliases() {
+        assert_eq!(BackendKind::parse("fpga"), Some(BackendKind::FpgaSim));
+        assert_eq!(BackendKind::parse("fpga_sim"), Some(BackendKind::FpgaSim));
+        assert_eq!(BackendKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,282 @@
+//! A TOML-subset parser (offline environment: no `toml`/`serde` crates).
+//!
+//! Supported grammar — ample for experiment configs:
+//!   * `[table]` and `[dotted.table]` headers
+//!   * `key = value` with string / integer / float / bool / homogeneous
+//!     scalar arrays
+//!   * `#` comments, blank lines
+//!
+//! Keys materialize into a flat map of `"table.key" -> TomlValue`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `"table.key" -> value` document.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated table header", ln + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty table name", ln + 1);
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", ln + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}: bad value", ln + 1))?;
+            let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                bail!("line {}: duplicate key {full}", ln + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        TomlDoc::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').context("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_array_items(inner)?
+            .into_iter()
+            .map(|it| parse_value(it.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_array_items(inner: &str) -> Result<Vec<&str>> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&inner[start..]);
+    Ok(items)
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => bail!("bad escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "dropbear-serve"   # inline comment
+steps = 2_000
+rate_hz = 2000.0
+verbose = true
+
+[model]
+precision = "fp16"
+hidden = 15
+layers = [1, 2, 3]
+
+[coordinator.backend]
+kind = "pjrt"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("name", ""), "dropbear-serve");
+        assert_eq!(doc.get_i64("steps", 0), 2000);
+        assert_eq!(doc.get_f64("rate_hz", 0.0), 2000.0);
+        assert!(doc.get_bool("verbose", false));
+        assert_eq!(doc.get_str("model.precision", ""), "fp16");
+        assert_eq!(doc.get_i64("model.hidden", 0), 15);
+        assert_eq!(doc.get_str("coordinator.backend.kind", ""), "pjrt");
+        let arr = doc.get("model.layers").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.get_str("missing", "dflt"), "dflt");
+        assert_eq!(doc.get_i64("missing", 7), 7);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("key").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get_str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn nested_arrays_and_escapes() {
+        let doc = TomlDoc::parse(r#"k = [[1, 2], [3]] "#).unwrap();
+        let outer = doc.get("k").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        let doc2 = TomlDoc::parse(r#"s = "line\nbreak""#).unwrap();
+        assert_eq!(doc2.get_str("s", ""), "line\nbreak");
+    }
+}

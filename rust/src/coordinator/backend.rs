@@ -1,0 +1,241 @@
+//! Inference backends the coordinator can schedule onto.  All share one
+//! contract: raw 16-sample acceleration window in, roller-position
+//! estimate (metres) out.
+
+use anyhow::Result;
+
+use crate::arch::INPUT_SIZE;
+use crate::config::schema::BackendKind;
+use crate::fixed::QFormat;
+use crate::fpga::{FpgaEngine, PlatformKind};
+use crate::lstm::{LstmParams, Network, QuantizedNetwork};
+use crate::runtime::StepExecutor;
+
+/// Object-safe backend trait.  Deliberately *not* `Send`: the PJRT
+/// backend's client is thread-pinned; the pipeline runs inference on the
+/// coordinator thread and only the sensor producer is spawned.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// One inference step.
+    fn infer(&mut self, window: &[f32; INPUT_SIZE]) -> Result<f64>;
+
+    /// Reset recurrent state (new monitoring session).
+    fn reset(&mut self) -> Result<()>;
+
+    /// Latency of one step on the *modeled target* (FPGA/RTOS), if this
+    /// backend models one; host-measured latency is tracked separately by
+    /// the metrics layer.
+    fn modeled_latency_us(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Float f64 CPU engine — the paper's software baseline path.
+pub struct NativeBackend(Network);
+
+impl NativeBackend {
+    pub fn new(params: &LstmParams) -> Self {
+        Self(Network::new(params.clone()))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn infer(&mut self, window: &[f32; INPUT_SIZE]) -> Result<f64> {
+        Ok(self.0.infer_window(window))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.0.reset();
+        Ok(())
+    }
+}
+
+/// Fixed-point CPU engine (the FPGA datapath without the cycle model).
+pub struct QuantizedBackend(QuantizedNetwork);
+
+impl QuantizedBackend {
+    pub fn new(params: &LstmParams, fmt: QFormat) -> Self {
+        Self(QuantizedNetwork::new(params, fmt))
+    }
+}
+
+impl Backend for QuantizedBackend {
+    fn name(&self) -> &'static str {
+        "quantized"
+    }
+
+    fn infer(&mut self, window: &[f32; INPUT_SIZE]) -> Result<f64> {
+        Ok(self.0.infer_window(window))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.0.reset();
+        Ok(())
+    }
+}
+
+/// PJRT backend running the AOT HLO artifact.
+pub struct PjrtBackend(StepExecutor);
+
+impl PjrtBackend {
+    pub fn new(executor: StepExecutor) -> Self {
+        Self(executor)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn infer(&mut self, window: &[f32; INPUT_SIZE]) -> Result<f64> {
+        self.0.infer_window(window)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.0.reset()
+    }
+}
+
+/// Cycle-accurate FPGA simulator backend.
+pub struct FpgaSimBackend(FpgaEngine);
+
+impl FpgaSimBackend {
+    pub fn new(engine: FpgaEngine) -> Self {
+        Self(engine)
+    }
+}
+
+impl Backend for FpgaSimBackend {
+    fn name(&self) -> &'static str {
+        "fpga-sim"
+    }
+
+    fn infer(&mut self, window: &[f32; INPUT_SIZE]) -> Result<f64> {
+        Ok(self.0.infer_window(window))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.0.reset();
+        Ok(())
+    }
+
+    fn modeled_latency_us(&self) -> Option<f64> {
+        Some(self.0.step_latency_us())
+    }
+}
+
+/// Classical frequency-tracking baseline (the "Euler-Bernoulli model
+/// updating" approach the paper's introduction motivates against).
+pub struct ModalBackend(crate::estimator::ModalEstimator);
+
+impl ModalBackend {
+    pub fn new() -> Self {
+        Self(crate::estimator::ModalEstimator::new(&crate::beam::BeamConfig::default()))
+    }
+}
+
+impl Default for ModalBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ModalBackend {
+    fn name(&self) -> &'static str {
+        "modal"
+    }
+
+    fn infer(&mut self, window: &[f32; INPUT_SIZE]) -> Result<f64> {
+        Ok(self.0.infer_window(window))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.0.reset();
+        Ok(())
+    }
+}
+
+/// Build a backend from an experiment config (factory used by the CLI,
+/// examples and benches).
+pub fn build_backend(
+    kind: BackendKind,
+    params: &LstmParams,
+    artifacts_dir: &std::path::Path,
+    precision: &str,
+    platform: &str,
+    parallelism: usize,
+) -> Result<Box<dyn Backend>> {
+    let fmt = QFormat::by_name(precision)
+        .ok_or_else(|| anyhow::anyhow!("unknown precision {precision}"))?;
+    Ok(match kind {
+        BackendKind::Native => Box::new(NativeBackend::new(params)),
+        BackendKind::Quantized => Box::new(QuantizedBackend::new(params, fmt)),
+        BackendKind::Pjrt => {
+            Box::new(PjrtBackend::new(StepExecutor::load(artifacts_dir, precision)?))
+        }
+        BackendKind::Modal => Box::new(ModalBackend::new()),
+        BackendKind::FpgaSim => {
+            let plat = PlatformKind::parse(platform)
+                .ok_or_else(|| anyhow::anyhow!("unknown platform {platform}"))?
+                .platform();
+            let p = parallelism.min(plat.max_hdl_parallelism(fmt));
+            let design = crate::fpga::engine::DesignChoice::Hdl(crate::fpga::HdlDesign::new(fmt, p));
+            Box::new(FpgaSimBackend::new(FpgaEngine::deploy(params, design, &plat)))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FP16;
+
+    fn params() -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, 3)
+    }
+
+    #[test]
+    fn native_and_quantized_agree_loosely() {
+        let p = params();
+        let mut a = NativeBackend::new(&p);
+        let mut b = QuantizedBackend::new(&p, FP16);
+        let w = [2.5f32; INPUT_SIZE];
+        let ya = a.infer(&w).unwrap();
+        let yb = b.infer(&w).unwrap();
+        assert!((ya - yb).abs() < 0.5, "{ya} vs {yb}");
+    }
+
+    #[test]
+    fn fpga_backend_reports_modeled_latency() {
+        let p = params();
+        let plat = PlatformKind::U55c.platform();
+        let be = FpgaSimBackend::new(FpgaEngine::deploy_hdl_max(&p, FP16, &plat));
+        let lat = be.modeled_latency_us().unwrap();
+        assert!((0.5..=3.0).contains(&lat), "{lat}");
+    }
+
+    #[test]
+    fn factory_builds_cpu_backends() {
+        let p = params();
+        let dir = std::path::Path::new("artifacts");
+        for kind in [BackendKind::Native, BackendKind::Quantized, BackendKind::FpgaSim] {
+            let mut be = build_backend(kind, &p, dir, "fp16", "u55c", 15).unwrap();
+            let y = be.infer(&[0.5; INPUT_SIZE]).unwrap();
+            assert!(y.is_finite());
+            be.reset().unwrap();
+        }
+    }
+
+    #[test]
+    fn factory_rejects_bad_precision() {
+        let p = params();
+        let dir = std::path::Path::new("artifacts");
+        assert!(build_backend(BackendKind::Native, &p, dir, "fp13", "u55c", 1).is_err());
+    }
+}

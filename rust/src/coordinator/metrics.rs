@@ -1,0 +1,161 @@
+//! Lock-free run metrics: host latency histogram, deadline accounting,
+//! drop counters (all atomics — the hot loop never takes a lock) plus an
+//! end-of-run accuracy summary.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::{stats, Json};
+
+/// Shared counters updated from the pipeline threads.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Windows produced by the source.
+    pub produced: AtomicU64,
+    /// Windows dropped because the inference stage was backlogged.
+    pub dropped: AtomicU64,
+    /// Steps inferred.
+    pub inferred: AtomicU64,
+    /// Steps whose *host* latency exceeded the deadline.
+    pub deadline_misses: AtomicU64,
+    /// Total host inference nanoseconds.
+    pub infer_ns: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            produced: self.produced.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            inferred: self.inferred.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            infer_ns: self.infer_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub produced: u64,
+    pub dropped: u64,
+    pub inferred: u64,
+    pub deadline_misses: u64,
+    pub infer_ns: u64,
+}
+
+/// End-of-run report (accuracy + latency + counters).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub backend: &'static str,
+    pub steps: usize,
+    pub snr_db: f64,
+    pub trac: f64,
+    /// Host per-step latency in microseconds.
+    pub host_p50_us: f64,
+    pub host_p99_us: f64,
+    pub host_mean_us: f64,
+    /// Modeled target latency (FPGA cycle model), if any.
+    pub modeled_latency_us: Option<f64>,
+    pub deadline_us: f64,
+    pub deadline_misses: u64,
+    pub dropped: u64,
+}
+
+impl RunReport {
+    pub fn from_run(
+        backend: &'static str,
+        truth: &[f64],
+        estimates: &[f64],
+        host_latencies_us: &mut Vec<f64>,
+        modeled_latency_us: Option<f64>,
+        deadline_us: f64,
+        counters: CounterSnapshot,
+    ) -> Self {
+        host_latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self {
+            backend,
+            steps: estimates.len(),
+            snr_db: stats::snr_db(truth, estimates),
+            trac: stats::trac(truth, estimates),
+            host_p50_us: stats::percentile_sorted(host_latencies_us, 50.0),
+            host_p99_us: stats::percentile_sorted(host_latencies_us, 99.0),
+            host_mean_us: stats::mean(host_latencies_us),
+            modeled_latency_us,
+            deadline_us,
+            deadline_misses: counters.deadline_misses,
+            dropped: counters.dropped,
+        }
+    }
+
+    /// Fraction of steps meeting the deadline (host clock).
+    pub fn deadline_hit_rate(&self) -> f64 {
+        if self.steps == 0 {
+            return 1.0;
+        }
+        1.0 - self.deadline_misses as f64 / self.steps as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::Str(self.backend.into())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("snr_db", Json::Num(self.snr_db)),
+            ("trac", Json::Num(self.trac)),
+            ("host_p50_us", Json::Num(self.host_p50_us)),
+            ("host_p99_us", Json::Num(self.host_p99_us)),
+            ("host_mean_us", Json::Num(self.host_mean_us)),
+            (
+                "modeled_latency_us",
+                self.modeled_latency_us.map_or(Json::Null, Json::Num),
+            ),
+            ("deadline_us", Json::Num(self.deadline_us)),
+            ("deadline_misses", Json::Num(self.deadline_misses as f64)),
+            ("deadline_hit_rate", Json::Num(self.deadline_hit_rate())),
+            ("dropped", Json::Num(self.dropped as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_threadsafe() {
+        let c = std::sync::Arc::new(Counters::default());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.produced.fetch_add(1, Ordering::Relaxed);
+                    c.inferred.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.snapshot();
+        assert_eq!(s.produced, 4000);
+        assert_eq!(s.inferred, 4000);
+    }
+
+    #[test]
+    fn report_statistics() {
+        let truth = vec![1.0, 2.0, 3.0, 4.0];
+        let est = vec![1.01, 2.02, 2.95, 4.01];
+        let mut lats = vec![3.0, 1.0, 2.0, 10.0];
+        let snap = CounterSnapshot {
+            produced: 4,
+            dropped: 0,
+            inferred: 4,
+            deadline_misses: 1,
+            infer_ns: 16_000,
+        };
+        let r = RunReport::from_run("native", &truth, &est, &mut lats, None, 5.0, snap);
+        assert!(r.snr_db > 20.0, "snr {}", r.snr_db);
+        assert!(r.trac > 0.99);
+        assert_eq!(r.host_p50_us, 2.5); // interpolated between 2 and 3
+        assert!((r.deadline_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator: the real-time structural-health-monitoring service.
+//!
+//! Owns the event loop (sensor stream → bounded queue → inference →
+//! estimates), the backend registry ([`backend`]), lock-free metrics
+//! ([`metrics`]) and the RTOS/CPU baseline timing models ([`rtos`]).
+//! Python never appears here — the PJRT backend executes the AOT
+//! artifacts directly.
+
+pub mod backend;
+pub mod metrics;
+pub mod pipeline;
+pub mod rtos;
+pub mod server;
+pub mod trace;
+pub mod watchdog;
+
+pub use backend::{
+    build_backend, Backend, FpgaSimBackend, ModalBackend, NativeBackend, PjrtBackend,
+    QuantizedBackend,
+};
+pub use metrics::{Counters, RunReport};
+pub use pipeline::{run_streaming, Estimate};
+pub use rtos::{CpuModel, RtosDeadline, ARM_A53, CRIO_ATOM};
+pub use server::{Client, Server, ServerStats};
+pub use trace::{ReplayReport, Trace, TraceStep};
+pub use watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};

@@ -1,0 +1,222 @@
+//! The streaming monitoring pipeline (the paper's Fig. 4 at system level):
+//!
+//! ```text
+//!   [sensor thread]  --bounded queue-->  [inference loop]  --> estimates
+//!    virtual testbed     (backpressure:       backend.infer()      metrics
+//!    32 kHz / 16-sample    sensor never        deadline check
+//!    windows               blocks; drops)
+//! ```
+//!
+//! The sensor side is real-time: it can never block on the model.  If the
+//! inference stage falls behind, windows are *dropped* and counted —
+//! exactly the failure mode a 500 us RTOS deadline guards against.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::beam::{BeamConfig, SensorFault, Testbed, Window};
+use crate::config::ExperimentConfig;
+
+use super::backend::Backend;
+use super::metrics::{Counters, RunReport};
+
+/// One estimate produced by the pipeline.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub step_index: usize,
+    pub roller_truth: f64,
+    pub roller_estimate: f64,
+    pub host_latency_us: f64,
+}
+
+/// Drives `backend` over the configured workload; returns the report and
+/// the full estimate trace.
+pub fn run_streaming(
+    cfg: &ExperimentConfig,
+    backend: &mut dyn Backend,
+    fault: SensorFault,
+) -> Result<(RunReport, Vec<Estimate>)> {
+    let kind = crate::beam::ProfileKind::parse(&cfg.profile)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile {}", cfg.profile))?;
+    let counters = Arc::new(Counters::default());
+    let (tx, rx) = sync_channel::<Window>(cfg.queue_depth);
+
+    // Sensor thread: streams windows at the configured pace.
+    let producer = {
+        let counters = counters.clone();
+        let steps = cfg.steps;
+        let seed = cfg.seed;
+        let realtime = cfg.realtime_factor;
+        let period = Duration::from_secs_f64(
+            crate::arch::RTOS_PERIOD_US * 1e-6 * if realtime > 0.0 { 1.0 / realtime } else { 0.0 },
+        );
+        std::thread::spawn(move || {
+            let testbed =
+                Testbed::with_config(BeamConfig::default(), kind, steps, seed, fault);
+            let t0 = Instant::now();
+            for (i, w) in testbed.enumerate() {
+                if realtime > 0.0 {
+                    let due = t0 + period * i as u32;
+                    if let Some(sleep) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(sleep);
+                    }
+                }
+                counters.produced.fetch_add(1, Ordering::Relaxed);
+                match tx.try_send(w) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        // Sensor must not block: drop and count.
+                        counters.dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(TrySendError::Disconnected(_)) => break,
+                }
+            }
+        })
+    };
+
+    // Inference loop (this thread).  Every estimate passes through the
+    // safety watchdog; a persistent violation re-zeroes the recurrent
+    // state (a faulty sensor can wedge the LSTM's cell state).
+    let mut truth = Vec::with_capacity(cfg.steps);
+    let mut estimates = Vec::with_capacity(cfg.steps);
+    let mut latencies_us = Vec::with_capacity(cfg.steps);
+    let mut trace = Vec::with_capacity(cfg.steps);
+    let mut watchdog = super::watchdog::Watchdog::new(Default::default());
+    let deadline = Duration::from_secs_f64(cfg.deadline_us * 1e-6);
+    for w in rx {
+        let t = Instant::now();
+        let raw = backend.infer(&w.features)?;
+        let (y, event) = watchdog.check(raw);
+        if event == super::watchdog::WatchdogEvent::ResetRequested {
+            backend.reset()?;
+        }
+        let dt = t.elapsed();
+        counters.inferred.fetch_add(1, Ordering::Relaxed);
+        counters.infer_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        if dt > deadline {
+            counters.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let host_latency_us = dt.as_secs_f64() * 1e6;
+        truth.push(w.roller_truth);
+        estimates.push(y);
+        latencies_us.push(host_latency_us);
+        trace.push(Estimate {
+            step_index: w.step_index,
+            roller_truth: w.roller_truth,
+            roller_estimate: y,
+            host_latency_us,
+        });
+    }
+    producer.join().expect("sensor thread panicked");
+    if watchdog.patched_total > 0 {
+        log::warn!(
+            "watchdog patched {} estimates, requested {} state resets",
+            watchdog.patched_total,
+            watchdog.resets_total
+        );
+    }
+
+    let report = RunReport::from_run(
+        backend.name(),
+        &truth,
+        &estimates,
+        &mut latencies_us,
+        backend.modeled_latency_us(),
+        cfg.deadline_us,
+        counters.snapshot(),
+    );
+    Ok((report, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::BackendKind;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::lstm::LstmParams;
+
+    fn quick_cfg(steps: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            steps,
+            backend: BackendKind::Native,
+            queue_depth: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn streams_all_windows_when_unpaced() {
+        let cfg = quick_cfg(120);
+        let mut be = NativeBackend::new(&LstmParams::init(16, 15, 3, 1, 2));
+        let (report, trace) = run_streaming(&cfg, &mut be, SensorFault::None).unwrap();
+        assert_eq!(report.steps + report.dropped as usize, 120);
+        assert!(report.dropped < 120 / 10, "dropped {}", report.dropped);
+        assert!(!trace.is_empty());
+        assert!(report.snr_db.is_finite());
+    }
+
+    #[test]
+    fn tiny_queue_with_slow_backend_drops() {
+        struct SlowBackend(NativeBackend);
+        impl Backend for SlowBackend {
+            fn name(&self) -> &'static str {
+                "slow"
+            }
+            fn infer(&mut self, w: &[f32; 16]) -> Result<f64> {
+                std::thread::sleep(Duration::from_millis(2));
+                self.0.infer(w)
+            }
+            fn reset(&mut self) -> Result<()> {
+                self.0.reset()
+            }
+        }
+        let cfg = ExperimentConfig {
+            steps: 60,
+            queue_depth: 2,
+            realtime_factor: 8.0, // sensor 16x faster than the 2 ms model
+            ..quick_cfg(60)
+        };
+        let mut be = SlowBackend(NativeBackend::new(&LstmParams::init(16, 15, 3, 1, 2)));
+        let (report, _) = run_streaming(&cfg, &mut be, SensorFault::None).unwrap();
+        assert!(report.dropped > 0, "backpressure must drop windows");
+        assert_eq!(report.steps + report.dropped as usize, 60);
+    }
+
+    #[test]
+    fn deadline_misses_counted() {
+        struct Sleepy(NativeBackend);
+        impl Backend for Sleepy {
+            fn name(&self) -> &'static str {
+                "sleepy"
+            }
+            fn infer(&mut self, w: &[f32; 16]) -> Result<f64> {
+                std::thread::sleep(Duration::from_micros(300));
+                self.0.infer(w)
+            }
+            fn reset(&mut self) -> Result<()> {
+                self.0.reset()
+            }
+        }
+        let cfg = ExperimentConfig { steps: 20, deadline_us: 50.0, ..quick_cfg(20) };
+        let mut be = Sleepy(NativeBackend::new(&LstmParams::init(16, 15, 3, 1, 2)));
+        let (report, _) = run_streaming(&cfg, &mut be, SensorFault::None).unwrap();
+        assert_eq!(report.deadline_misses as usize, report.steps);
+    }
+
+    #[test]
+    fn survives_sensor_faults() {
+        let cfg = quick_cfg(80);
+        let mut be = NativeBackend::new(&LstmParams::init(16, 15, 3, 1, 2));
+        for fault in [
+            SensorFault::Dropout { prob: 0.1, hold: 4 },
+            SensorFault::Spikes { prob: 0.02, amp: 200.0 },
+        ] {
+            let (report, _) = run_streaming(&cfg, &mut be, fault).unwrap();
+            assert_eq!(report.steps + report.dropped as usize, 80);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Software-baseline timing models: the cRIO-9035 RTOS the paper used for
+//! model selection (500 us output interval) and the ARM Cortex-A53
+//! baseline from Table V (398 us per inference, "Embedded C", 1.2 GHz).
+//!
+//! These convert an *operation count* into modeled latency via calibrated
+//! sustained-throughput figures, so the paper's 280x / 136x CPU speedup
+//! claims can be regenerated against the FPGA cycle models (Table V bench)
+//! on any host.
+
+/// A modeled embedded CPU running scalar Embedded-C inference.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuModel {
+    pub name: &'static str,
+    pub clock_mhz: f64,
+    /// Sustained arithmetic ops per cycle for this workload (scalar
+    /// dependent MAC chains + activation calls; well below peak).
+    pub ops_per_cycle: f64,
+}
+
+/// ARM Cortex-A53 @ 1.2 GHz — Table V reports 398 us for the 11.5k-op
+/// model => ~0.024 ops/cycle sustained (libm activations dominate).
+pub const ARM_A53: CpuModel =
+    CpuModel { name: "ARM Cortex A53", clock_mhz: 1200.0, ops_per_cycle: 0.0241 };
+
+/// cRIO-9035 (Intel Atom E3825 @ 1.33 GHz, LabVIEW RTOS) — the paper's
+/// §II platform; meets (only just) the 500 us output interval.
+pub const CRIO_ATOM: CpuModel =
+    CpuModel { name: "cRIO-9035 Atom", clock_mhz: 1330.0, ops_per_cycle: 0.0240 };
+
+impl CpuModel {
+    /// Modeled latency for one inference of `ops` operations.
+    pub fn latency_us(&self, ops: usize) -> f64 {
+        ops as f64 / self.ops_per_cycle / self.clock_mhz
+    }
+
+    /// Modeled throughput in GOPS.
+    pub fn gops(&self, ops: usize) -> f64 {
+        ops as f64 / self.latency_us(ops) / 1e3
+    }
+}
+
+/// RTOS deadline schedule: checks a latency against the paper's 500 us
+/// output interval with a utilization bound (the RTOS must also run the
+/// DAQ and control loops).
+#[derive(Debug, Clone, Copy)]
+pub struct RtosDeadline {
+    pub period_us: f64,
+    /// Fraction of the period available for inference.
+    pub budget_fraction: f64,
+}
+
+impl Default for RtosDeadline {
+    fn default() -> Self {
+        Self { period_us: crate::arch::RTOS_PERIOD_US, budget_fraction: 0.8 }
+    }
+}
+
+impl RtosDeadline {
+    pub fn budget_us(&self) -> f64 {
+        self.period_us * self.budget_fraction
+    }
+
+    pub fn meets(&self, latency_us: f64) -> bool {
+        latency_us <= self.budget_us()
+    }
+
+    /// Slack (positive) or overrun (negative) in microseconds.
+    pub fn slack_us(&self, latency_us: f64) -> f64 {
+        self.budget_us() - latency_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::paper_op_count;
+
+    #[test]
+    fn a53_latency_matches_table5() {
+        // Table V: ARM A53 row = 398 us.
+        let lat = ARM_A53.latency_us(paper_op_count());
+        assert!((lat - 398.0).abs() < 10.0, "{lat}");
+        // And its GOPS column = 0.028.
+        assert!((ARM_A53.gops(paper_op_count()) - 0.028).abs() < 0.005);
+    }
+
+    #[test]
+    fn crio_meets_the_500us_interval() {
+        // §II: the chosen model "meets the RTOS requirement of 500 us".
+        let lat = CRIO_ATOM.latency_us(paper_op_count());
+        let rtos = RtosDeadline::default();
+        assert!(rtos.meets(lat), "latency {lat} vs budget {}", rtos.budget_us());
+        // ...but with little headroom (that is the paper's motivation
+        // for the FPGA port).
+        assert!(lat > 0.5 * rtos.budget_us(), "{lat}");
+    }
+
+    #[test]
+    fn fpga_speedup_bands_match_paper() {
+        // Paper: HDL 280x, HLS 136x faster than the ARM core.
+        let p = crate::lstm::LstmParams::init(16, 15, 3, 1, 1);
+        let plat = crate::fpga::PlatformKind::U55c.platform();
+        let hdl =
+            crate::fpga::FpgaEngine::deploy_hdl_max(&p, crate::fixed::FP16, &plat);
+        let arm = ARM_A53.latency_us(paper_op_count());
+        let speedup = arm / hdl.step_latency_us();
+        assert!((150.0..=450.0).contains(&speedup), "hdl speedup {speedup}");
+        let hls = crate::fpga::FpgaEngine::deploy_hls(&p, crate::fixed::FP16, &plat);
+        let speedup = arm / hls.step_latency_us();
+        assert!((60.0..=250.0).contains(&speedup), "hls speedup {speedup}");
+    }
+}

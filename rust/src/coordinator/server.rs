@@ -1,0 +1,349 @@
+//! Network serving front-end — the Fig.-4 "host PC" interface as a real
+//! service: newline-delimited JSON over TCP, many clients multiplexed
+//! onto ONE inference engine (the backend owns recurrent state and, for
+//! PJRT, is pinned to the inference thread).
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"id": 7, "features": [16 floats]}
+//! <- {"id": 7, "estimate": 0.2031, "latency_us": 4.2}
+//! -> {"cmd": "reset"}        <- {"ok": true}
+//! -> {"cmd": "stats"}        <- {"inferred": N, "p50_us": ..., ...}
+//! -> {"cmd": "shutdown"}     <- {"ok": true}   (stops the server)
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::arch::INPUT_SIZE;
+use crate::util::{stats, Json};
+
+use super::backend::Backend;
+
+/// One parsed client request.
+enum Request {
+    Infer { id: f64, features: Box<[f32; INPUT_SIZE]> },
+    Reset,
+    Stats,
+    Shutdown,
+}
+
+fn parse_request(line: &str) -> Result<Request> {
+    let json = Json::parse(line)?;
+    if let Some(cmd) = json.get("cmd").and_then(|c| c.as_str()) {
+        return Ok(match cmd {
+            "reset" => Request::Reset,
+            "stats" => Request::Stats,
+            "shutdown" => Request::Shutdown,
+            other => anyhow::bail!("unknown cmd {other}"),
+        });
+    }
+    let id = json.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let feats = json
+        .get("features")
+        .and_then(|f| f.as_arr())
+        .context("missing features")?;
+    anyhow::ensure!(feats.len() == INPUT_SIZE, "expected {INPUT_SIZE} features");
+    let mut w = Box::new([0f32; INPUT_SIZE]);
+    for (dst, v) in w.iter_mut().zip(feats) {
+        *dst = v.as_f64().context("non-numeric feature")? as f32;
+    }
+    Ok(Request::Infer { id, features: w })
+}
+
+/// Serving statistics snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub inferred: u64,
+    pub errors: u64,
+    pub latencies_us: Vec<f64>,
+}
+
+impl ServerStats {
+    fn to_json(&self) -> Json {
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| if sorted.is_empty() { 0.0 } else { stats::percentile_sorted(&sorted, p) };
+        Json::obj(vec![
+            ("inferred", Json::Num(self.inferred as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("p50_us", Json::Num(pct(50.0))),
+            ("p99_us", Json::Num(pct(99.0))),
+            ("mean_us", Json::Num(stats::mean(&self.latencies_us))),
+        ])
+    }
+}
+
+/// The TCP server.  `run` owns the backend on the calling thread;
+/// connection handler threads only parse/serialize.
+pub struct Server {
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to an address (use port 0 for an ephemeral port in tests).
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Self { listener, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Handle for shutting the server down from another thread.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until a client sends `shutdown` (or the handle is set).
+    /// Returns the final stats.
+    pub fn run(self, backend: &mut dyn Backend) -> Result<ServerStats> {
+        let (tx, rx) = channel::<(Request, Sender<String>)>();
+        let shutdown = self.shutdown.clone();
+        let listener = self.listener;
+        listener.set_nonblocking(false)?;
+        // Acceptor thread: one handler thread per connection.
+        let acceptor = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { break };
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, tx);
+                });
+            }
+        });
+
+        // Inference loop (this thread owns the backend).
+        let mut stats = ServerStats::default();
+        for (req, reply) in rx {
+            match req {
+                Request::Infer { id, features } => {
+                    let t = Instant::now();
+                    match backend.infer(&features) {
+                        Ok(y) => {
+                            let us = t.elapsed().as_secs_f64() * 1e6;
+                            stats.inferred += 1;
+                            stats.latencies_us.push(us);
+                            let _ = reply.send(
+                                Json::obj(vec![
+                                    ("id", Json::Num(id)),
+                                    ("estimate", Json::Num(y)),
+                                    ("latency_us", Json::Num(us)),
+                                ])
+                                .to_string(),
+                            );
+                        }
+                        Err(e) => {
+                            stats.errors += 1;
+                            let _ = reply.send(
+                                Json::obj(vec![
+                                    ("id", Json::Num(id)),
+                                    ("error", Json::Str(format!("{e:#}"))),
+                                ])
+                                .to_string(),
+                            );
+                        }
+                    }
+                }
+                Request::Reset => {
+                    backend.reset()?;
+                    let _ = reply.send(Json::obj(vec![("ok", Json::Bool(true))]).to_string());
+                }
+                Request::Stats => {
+                    let _ = reply.send(stats.to_json().to_string());
+                }
+                Request::Shutdown => {
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    let _ = reply.send(Json::obj(vec![("ok", Json::Bool(true))]).to_string());
+                    break;
+                }
+            }
+        }
+        // The acceptor is parked in `accept(2)`; it observes the shutdown
+        // flag on its next wakeup (or the process exits).  Detach.
+        drop(acceptor);
+        Ok(stats)
+    }
+}
+
+fn handle_connection(stream: TcpStream, tx: Sender<(Request, Sender<String>)>) -> Result<()> {
+    // Request/response line protocol: Nagle + delayed-ACK would add
+    // ~40-200 ms per round trip.
+    stream.set_nodelay(true)?;
+    let peer = stream.peer_addr()?;
+    log::debug!("client connected: {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply_tx, reply_rx) = channel::<String>();
+        let response = match parse_request(&line) {
+            Ok(req) => {
+                if tx.send((req, reply_tx)).is_err() {
+                    break; // server stopped
+                }
+                match reply_rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            }
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for the line protocol (examples and tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer, next_id: 1.0 })
+    }
+
+    fn round_trip(&mut self, msg: &str) -> Result<Json> {
+        self.writer.write_all(msg.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let json = Json::parse(&line)?;
+        if let Some(err) = json.get("error").and_then(|e| e.as_str()) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(json)
+    }
+
+    /// Send one feature window; returns (estimate, server latency us).
+    pub fn infer(&mut self, features: &[f32; INPUT_SIZE]) -> Result<(f64, f64)> {
+        let feats: Vec<Json> = features.iter().map(|&v| Json::Num(v as f64)).collect();
+        let msg = Json::obj(vec![
+            ("id", Json::Num(self.next_id)),
+            ("features", Json::Arr(feats)),
+        ])
+        .to_string();
+        self.next_id += 1.0;
+        let json = self.round_trip(&msg)?;
+        Ok((
+            json.get("estimate").and_then(|v| v.as_f64()).context("missing estimate")?,
+            json.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        ))
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        self.round_trip(r#"{"cmd":"reset"}"#)?;
+        Ok(())
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.round_trip(r#"{"cmd":"stats"}"#)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.round_trip(r#"{"cmd":"shutdown"}"#)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::lstm::LstmParams;
+
+    fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<ServerStats>) {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut backend = NativeBackend::new(&LstmParams::init(16, 15, 3, 1, 5));
+            server.run(&mut backend).unwrap()
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn infer_reset_stats_shutdown() {
+        let (addr, handle) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let w = [1.5f32; INPUT_SIZE];
+        let (y1, lat) = client.infer(&w).unwrap();
+        assert!(y1.is_finite() && lat >= 0.0);
+        let (y2, _) = client.infer(&w).unwrap();
+        assert_ne!(y1, y2, "state carries between requests");
+        client.reset().unwrap();
+        let (y1b, _) = client.infer(&w).unwrap();
+        assert_eq!(y1, y1b, "reset restores the initial state");
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("inferred").unwrap().as_f64(), Some(3.0));
+        client.shutdown().unwrap();
+        let final_stats = handle.join().unwrap();
+        assert_eq!(final_stats.inferred, 3);
+        assert_eq!(final_stats.errors, 0);
+    }
+
+    #[test]
+    fn concurrent_clients_multiplex_one_engine() {
+        let (addr, handle) = start_server();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let addr = addr.to_string();
+            joins.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for i in 0..20 {
+                    let w = [(t * 100 + i) as f32 * 0.01; INPUT_SIZE];
+                    let (y, _) = client.infer(&w).unwrap();
+                    assert!(y.is_finite());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("inferred").unwrap().as_f64(), Some(80.0));
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_requests_get_error_replies() {
+        let (addr, handle) = start_server();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        for bad in ["not json", r#"{"features": [1, 2]}"#, r#"{"cmd": "dance"}"#] {
+            writer.write_all(bad.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("error"), "{bad} -> {line}");
+        }
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,237 @@
+//! Run recording + replay — freeze a testbed workload (feature windows +
+//! ground truth + the estimates one backend produced) into a binary
+//! trace, then replay the identical windows through any other backend.
+//!
+//! This is how cross-backend regressions are caught offline: the virtual
+//! testbed is seeded but *physics code changes move the data*; a trace
+//! pins the exact byte-level workload.  Format (`HRDT`, little-endian):
+//!
+//! ```text
+//! magic "HRDT" | version u32 | n_steps u32 | seed u64 |
+//! profile_len u32 | profile utf-8 |
+//! n_steps x { step u32, features 16xf32, truth f32, estimate f32 }
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::INPUT_SIZE;
+use crate::beam::{ProfileKind, Testbed};
+use crate::util::stats;
+
+use super::backend::Backend;
+
+const MAGIC: &[u8; 4] = b"HRDT";
+const VERSION: u32 = 1;
+
+/// One recorded step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStep {
+    pub step_index: u32,
+    pub features: [f32; INPUT_SIZE],
+    pub truth: f32,
+    pub estimate: f32,
+}
+
+/// A full recorded run.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub seed: u64,
+    pub profile: String,
+    pub steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    /// Stream `n_steps` of the given profile through `backend`, recording
+    /// everything (single-threaded: replay fidelity beats throughput).
+    pub fn record(
+        backend: &mut dyn Backend,
+        profile: ProfileKind,
+        n_steps: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut steps = Vec::with_capacity(n_steps);
+        for w in Testbed::new(profile, n_steps, seed) {
+            let y = backend.infer(&w.features)?;
+            steps.push(TraceStep {
+                step_index: w.step_index as u32,
+                features: w.features,
+                truth: w.roller_truth as f32,
+                estimate: y as f32,
+            });
+        }
+        Ok(Self { seed, profile: profile.name().to_string(), steps })
+    }
+
+    /// Replay the recorded windows through another backend; returns
+    /// (its estimates, SNR vs recorded truth, max |diff| vs the recorded
+    /// estimates).
+    pub fn replay(&self, backend: &mut dyn Backend) -> Result<ReplayReport> {
+        let mut estimates = Vec::with_capacity(self.steps.len());
+        let mut max_diff = 0.0f64;
+        for s in &self.steps {
+            let y = backend.infer(&s.features)?;
+            max_diff = max_diff.max((y - s.estimate as f64).abs());
+            estimates.push(y);
+        }
+        let truth: Vec<f64> = self.steps.iter().map(|s| s.truth as f64).collect();
+        let recorded: Vec<f64> = self.steps.iter().map(|s| s.estimate as f64).collect();
+        Ok(ReplayReport {
+            snr_db: stats::snr_db(&truth, &estimates),
+            recorded_snr_db: stats::snr_db(&truth, &recorded),
+            max_estimate_diff: max_diff,
+            steps: estimates.len(),
+        })
+    }
+
+    // ---- binary IO --------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.steps.len() as u32).to_le_bytes())?;
+        f.write_all(&self.seed.to_le_bytes())?;
+        f.write_all(&(self.profile.len() as u32).to_le_bytes())?;
+        f.write_all(self.profile.as_bytes())?;
+        let mut buf = Vec::with_capacity(self.steps.len() * (4 + 64 + 8));
+        for s in &self.steps {
+            buf.extend_from_slice(&s.step_index.to_le_bytes());
+            for v in s.features {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            buf.extend_from_slice(&s.truth.to_le_bytes());
+            buf.extend_from_slice(&s.estimate.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut data)?;
+        Self::from_bytes(&data).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > data.len() {
+                bail!("truncated trace at offset {pos}", pos = *pos);
+            }
+            let s = &data[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad trace magic");
+        }
+        let u32_at = |b: &[u8]| u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        let version = u32_at(take(&mut pos, 4)?);
+        if version != VERSION {
+            bail!("unsupported trace version {version}");
+        }
+        let n_steps = u32_at(take(&mut pos, 4)?) as usize;
+        let seed_b = take(&mut pos, 8)?;
+        let seed = u64::from_le_bytes(seed_b.try_into().unwrap());
+        let plen = u32_at(take(&mut pos, 4)?) as usize;
+        if plen > 256 {
+            bail!("implausible profile name length {plen}");
+        }
+        let profile = String::from_utf8(take(&mut pos, plen)?.to_vec())?;
+        let mut steps = Vec::with_capacity(n_steps);
+        for _ in 0..n_steps {
+            let step_index = u32_at(take(&mut pos, 4)?);
+            let mut features = [0f32; INPUT_SIZE];
+            for v in &mut features {
+                *v = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            }
+            let truth = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let estimate = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            steps.push(TraceStep { step_index, features, truth, estimate });
+        }
+        if pos != data.len() {
+            bail!("trailing bytes in trace: {} of {}", pos, data.len());
+        }
+        Ok(Self { seed, profile, steps })
+    }
+}
+
+/// Outcome of replaying a trace through a backend.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// SNR of the replaying backend on the recorded truth.
+    pub snr_db: f64,
+    /// SNR of the originally recorded estimates (for comparison).
+    pub recorded_snr_db: f64,
+    /// Max |estimate difference| vs the recording.
+    pub max_estimate_diff: f64,
+    pub steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{NativeBackend, QuantizedBackend};
+    use crate::fixed::FP16;
+    use crate::lstm::LstmParams;
+
+    fn params() -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, 6)
+    }
+
+    #[test]
+    fn record_save_load_roundtrip() {
+        let mut be = NativeBackend::new(&params());
+        let trace = Trace::record(&mut be, ProfileKind::Sweep, 50, 3).unwrap();
+        assert_eq!(trace.steps.len(), 50);
+        let path = std::env::temp_dir().join("hrd_trace_roundtrip.bin");
+        trace.save(&path).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded.profile, "sweep");
+        assert_eq!(loaded.seed, 3);
+        assert_eq!(loaded.steps, trace.steps);
+    }
+
+    #[test]
+    fn same_backend_replays_bit_identically_at_f32() {
+        let p = params();
+        let mut be = NativeBackend::new(&p);
+        let trace = Trace::record(&mut be, ProfileKind::Steps, 60, 9).unwrap();
+        let mut be2 = NativeBackend::new(&p);
+        let rep = trace.replay(&mut be2).unwrap();
+        // Estimates were stored as f32: replay matches within f32 eps.
+        assert!(rep.max_estimate_diff < 1e-6, "{}", rep.max_estimate_diff);
+        assert_eq!(rep.steps, 60);
+    }
+
+    #[test]
+    fn cross_backend_replay_quantifies_divergence() {
+        let p = params();
+        let mut native = NativeBackend::new(&p);
+        let trace = Trace::record(&mut native, ProfileKind::Sweep, 80, 5).unwrap();
+        let mut quant = QuantizedBackend::new(&p, FP16);
+        let rep = trace.replay(&mut quant).unwrap();
+        assert!(rep.max_estimate_diff > 0.0, "quantization must diverge");
+        assert!(rep.max_estimate_diff < 0.2, "but not wildly: {}", rep.max_estimate_diff);
+    }
+
+    #[test]
+    fn corrupt_traces_rejected() {
+        assert!(Trace::from_bytes(b"NOPE").is_err());
+        let mut be = NativeBackend::new(&params());
+        let trace = Trace::record(&mut be, ProfileKind::Hold, 10, 1).unwrap();
+        let path = std::env::temp_dir().join("hrd_trace_corrupt.bin");
+        trace.save(&path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        data.truncate(data.len() - 7);
+        assert!(Trace::from_bytes(&data).is_err());
+        data.extend_from_slice(&[0; 32]);
+        assert!(Trace::from_bytes(&data).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Estimate watchdog — production hardening for a safety-critical
+//! monitor: a recurrent model fed by a faulty sensor can wander into
+//! absurd states and *stay* there (the LSTM's cell state integrates the
+//! fault).  The watchdog sanity-checks every estimate and decides when
+//! the backend's recurrent state must be re-zeroed.
+//!
+//! Checks (all cheap, on the hot path):
+//!   1. finiteness — NaN/Inf estimates trip immediately;
+//!   2. physical range — the roller cannot leave its travel (with some
+//!      margin for quantization overshoot);
+//!   3. slew rate — the servo cannot move faster than `max_slew_m_s`;
+//!   4. stuck output — a bit-identical estimate for N windows while the
+//!      input keeps changing indicates a frozen datapath.
+
+use crate::arch::RTOS_PERIOD_US;
+use crate::beam::{ROLLER_MAX, ROLLER_MIN};
+
+/// Watchdog tuning.
+#[derive(Debug, Clone)]
+pub struct WatchdogConfig {
+    pub min_m: f64,
+    pub max_m: f64,
+    /// Maximum plausible *estimate* jump, expressed as a speed (m/s).
+    /// This is deliberately permissive — the estimator legitimately
+    /// re-converges over a handful of windows after a roller step or an
+    /// impact, jumping several cm per 500 us window; the check only
+    /// catches teleports beyond half the total travel per window.
+    pub max_slew_m_s: f64,
+    /// Consecutive bit-identical estimates before declaring stuck.
+    pub stuck_after: usize,
+    /// Consecutive violations before requesting a state reset
+    /// (single-sample glitches are clamped, not reset).
+    pub reset_after: usize,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        Self {
+            min_m: ROLLER_MIN - 0.05,
+            max_m: ROLLER_MAX + 0.05,
+            max_slew_m_s: 300.0, // 0.15 m per 500 us window
+            stuck_after: 64,
+            reset_after: 8,
+        }
+    }
+}
+
+/// What the watchdog observed for one estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WatchdogEvent {
+    /// Estimate accepted as-is.
+    Ok,
+    /// Estimate clamped/patched (value returned by `check`).
+    Patched,
+    /// Too many consecutive violations: caller should reset the backend
+    /// state (the watchdog already reset its own history).
+    ResetRequested,
+}
+
+/// Streaming watchdog state.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    last: Option<f64>,
+    stuck_count: usize,
+    violation_streak: usize,
+    pub patched_total: u64,
+    pub resets_total: u64,
+}
+
+impl Watchdog {
+    pub fn new(cfg: WatchdogConfig) -> Self {
+        Self {
+            cfg,
+            last: None,
+            stuck_count: 0,
+            violation_streak: 0,
+            patched_total: 0,
+            resets_total: 0,
+        }
+    }
+
+    /// Inspect one raw estimate; returns the (possibly patched) value to
+    /// publish and the event.
+    pub fn check(&mut self, raw: f64) -> (f64, WatchdogEvent) {
+        let dt = RTOS_PERIOD_US * 1e-6;
+        let max_step = self.cfg.max_slew_m_s * dt;
+        let mut violated = false;
+
+        // 1. finiteness
+        let mut value = if raw.is_finite() {
+            raw
+        } else {
+            violated = true;
+            self.last.unwrap_or(0.5 * (self.cfg.min_m + self.cfg.max_m))
+        };
+        // 2. physical range
+        if value < self.cfg.min_m || value > self.cfg.max_m {
+            violated = true;
+            value = value.clamp(self.cfg.min_m, self.cfg.max_m);
+        }
+        // 3. slew rate (against the last *published* value)
+        if let Some(prev) = self.last {
+            if (value - prev).abs() > max_step {
+                violated = true;
+                value = prev + (value - prev).clamp(-max_step, max_step);
+            }
+        }
+        // 4. stuck output
+        if self.last == Some(raw) {
+            self.stuck_count += 1;
+            if self.stuck_count >= self.cfg.stuck_after {
+                violated = true;
+            }
+        } else {
+            self.stuck_count = 0;
+        }
+
+        self.last = Some(value);
+        if violated {
+            self.patched_total += 1;
+            self.violation_streak += 1;
+            if self.violation_streak >= self.cfg.reset_after {
+                self.resets_total += 1;
+                self.violation_streak = 0;
+                self.stuck_count = 0;
+                self.last = None;
+                return (value, WatchdogEvent::ResetRequested);
+            }
+            (value, WatchdogEvent::Patched)
+        } else {
+            self.violation_streak = 0;
+            (value, WatchdogEvent::Ok)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wd() -> Watchdog {
+        Watchdog::new(WatchdogConfig::default())
+    }
+
+    #[test]
+    fn clean_stream_passes_through() {
+        let mut w = wd();
+        for i in 0..100 {
+            let v = 0.1 + 1e-4 * i as f64;
+            let (out, ev) = w.check(v);
+            assert_eq!(out, v);
+            assert_eq!(ev, WatchdogEvent::Ok);
+        }
+        assert_eq!(w.patched_total, 0);
+    }
+
+    #[test]
+    fn nan_is_patched_with_last_good() {
+        let mut w = wd();
+        w.check(0.2);
+        let (out, ev) = w.check(f64::NAN);
+        assert_eq!(out, 0.2);
+        assert_eq!(ev, WatchdogEvent::Patched);
+    }
+
+    #[test]
+    fn out_of_range_clamped() {
+        let mut w = wd();
+        let (out, ev) = w.check(9.0);
+        assert!(out <= WatchdogConfig::default().max_m);
+        assert_eq!(ev, WatchdogEvent::Patched);
+        let mut w = wd();
+        let (out, _) = w.check(-3.0);
+        assert!(out >= WatchdogConfig::default().min_m);
+    }
+
+    #[test]
+    fn slew_limited_only_on_teleports() {
+        let mut w = wd();
+        w.check(0.10);
+        // A legitimate re-convergence jump (3 cm/window) passes.
+        let (out, ev) = w.check(0.13);
+        assert_eq!(out, 0.13);
+        assert_eq!(ev, WatchdogEvent::Ok);
+        // A 0.2 m teleport (400 m/s) is clamped.
+        let (out, ev) = w.check(0.33);
+        assert_eq!(ev, WatchdogEvent::Patched);
+        let max_step = 300.0 * crate::arch::RTOS_PERIOD_US * 1e-6;
+        assert!((out - (0.13 + max_step)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn persistent_violation_requests_reset() {
+        let mut w = wd();
+        w.check(0.1);
+        let mut saw_reset = false;
+        for _ in 0..WatchdogConfig::default().reset_after + 2 {
+            let (_, ev) = w.check(f64::INFINITY);
+            if ev == WatchdogEvent::ResetRequested {
+                saw_reset = true;
+                break;
+            }
+        }
+        assert!(saw_reset);
+        assert_eq!(w.resets_total, 1);
+    }
+
+    #[test]
+    fn stuck_output_detected() {
+        let cfg = WatchdogConfig { stuck_after: 5, reset_after: 3, ..Default::default() };
+        let mut w = Watchdog::new(cfg);
+        let mut reset = false;
+        for _ in 0..20 {
+            let (_, ev) = w.check(0.123456);
+            if ev == WatchdogEvent::ResetRequested {
+                reset = true;
+                break;
+            }
+        }
+        assert!(reset, "identical estimates must eventually trip the watchdog");
+    }
+}

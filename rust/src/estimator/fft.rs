@@ -1,0 +1,175 @@
+//! From-scratch radix-2 FFT + spectral helpers — the signal-processing
+//! substrate for the classical frequency-tracking baseline
+//! ([`super::modal`]).  No external crates in this environment.
+
+use std::f64::consts::PI;
+
+/// Complex number (we only need the handful of ops the FFT uses).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    #[inline]
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    #[inline]
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+}
+
+/// In-place iterative radix-2 Cooley–Tukey FFT.  `data.len()` must be a
+/// power of two.
+pub fn fft_in_place(data: &mut [Complex]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FFT length must be a power of two, got {n}");
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let wl = Complex::new(ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let mut w = Complex::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[start + k];
+                let v = data[start + k + len / 2].mul(w);
+                data[start + k] = u.add(v);
+                data[start + k + len / 2] = u.sub(v);
+                w = w.mul(wl);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Hann window coefficient for sample `i` of `n`.
+#[inline]
+pub fn hann(i: usize, n: usize) -> f64 {
+    0.5 * (1.0 - (2.0 * PI * i as f64 / (n - 1) as f64).cos())
+}
+
+/// One-sided power spectrum of a real windowed signal; returns `n/2`
+/// bins (DC..Nyquist-1), bin `k` at frequency `k * fs / n`.
+pub fn power_spectrum(samples: &[f64], fs: f64) -> (Vec<f64>, f64) {
+    let n = samples.len();
+    let mut buf: Vec<Complex> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| Complex::new(x * hann(i, n), 0.0))
+        .collect();
+    fft_in_place(&mut buf);
+    let spec: Vec<f64> = buf[..n / 2].iter().map(|c| c.norm_sq()).collect();
+    (spec, fs / n as f64)
+}
+
+/// Index + parabolic-interpolated sub-bin offset of the largest bin in
+/// `spec[lo..]` (lo skips DC/drift bins).  Returns (bin_f64, power).
+pub fn dominant_bin(spec: &[f64], lo: usize) -> (f64, f64) {
+    let lo = lo.min(spec.len().saturating_sub(1));
+    let (mut k, mut p) = (lo, spec[lo]);
+    for (i, &v) in spec.iter().enumerate().skip(lo) {
+        if v > p {
+            k = i;
+            p = v;
+        }
+    }
+    // Parabolic interpolation on log-power (quinn-ish), guarded at edges.
+    if k == 0 || k + 1 >= spec.len() || p <= 0.0 {
+        return (k as f64, p);
+    }
+    let (a, b, c) = (spec[k - 1].max(1e-300).ln(), p.ln(), spec[k + 1].max(1e-300).ln());
+    let denom = a - 2.0 * b + c;
+    let delta = if denom.abs() < 1e-12 { 0.0 } else { 0.5 * (a - c) / denom };
+    (k as f64 + delta.clamp(-0.5, 0.5), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let mut data = vec![Complex::default(); 64];
+        data[0] = Complex::new(1.0, 0.0);
+        fft_in_place(&mut data);
+        for c in &data {
+            assert!((c.norm_sq() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_conservation() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..256).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut data: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        fft_in_place(&mut data);
+        let time_energy: f64 = x.iter().map(|v| v * v).sum();
+        let freq_energy: f64 = data.iter().map(|c| c.norm_sq()).sum::<f64>() / 256.0;
+        assert!((time_energy - freq_energy).abs() < 1e-9 * time_energy.max(1.0));
+    }
+
+    #[test]
+    fn sinusoid_peak_lands_on_frequency() {
+        let fs = 32_000.0;
+        let n = 1024;
+        let f0 = 843.75; // exactly bin 27
+        let x: Vec<f64> = (0..n)
+            .map(|i| (2.0 * PI * f0 * i as f64 / fs).sin())
+            .collect();
+        let (spec, df) = power_spectrum(&x, fs);
+        let (bin, _) = dominant_bin(&spec, 2);
+        assert!((bin * df - f0).abs() < df, "peak at {} Hz", bin * df);
+    }
+
+    #[test]
+    fn off_bin_frequency_interpolated() {
+        let fs = 32_000.0;
+        let n = 1024;
+        let f0 = 850.0; // between bins
+        let x: Vec<f64> = (0..n)
+            .map(|i| (2.0 * PI * f0 * i as f64 / fs).sin())
+            .collect();
+        let (spec, df) = power_spectrum(&x, fs);
+        let (bin, _) = dominant_bin(&spec, 2);
+        assert!((bin * df - f0).abs() < 0.6 * df, "peak at {} Hz vs {f0}", bin * df);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        fft_in_place(&mut vec![Complex::default(); 100]);
+    }
+}

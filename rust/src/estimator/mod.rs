@@ -1,0 +1,12 @@
+//! Classical (non-learned) state estimators — the baselines the paper's
+//! introduction motivates the LSTM against: Euler-Bernoulli model
+//! updating is "well-known" but "prohibitive for the time scales of
+//! interest".  [`fft`] is the from-scratch spectral substrate; [`modal`]
+//! the streaming frequency-tracking estimator + the modeled cost of full
+//! FEM updating.
+
+pub mod fft;
+pub mod modal;
+
+pub use fft::{fft_in_place, power_spectrum, Complex};
+pub use modal::{model_updating_ops, FrequencyMap, ModalEstimator};

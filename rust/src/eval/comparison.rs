@@ -1,0 +1,177 @@
+//! Table V — comparison with other published LSTM accelerators.  The
+//! related-work rows are static (they are *published numbers*, our
+//! baseline set); our rows are generated live from the FPGA models and
+//! the ARM A53 CPU model.
+
+use crate::fixed::FP16;
+use crate::fpga::{FpgaEngine, PlatformKind};
+use crate::lstm::LstmParams;
+
+use super::table_fmt::{f, Table};
+
+/// One Table-V row.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub work: String,
+    pub platform: String,
+    pub method: &'static str,
+    pub fmax_mhz: f64,
+    pub latency_us: Option<f64>,
+    pub gops: f64,
+    pub gops_per_lut_e6: Option<f64>,
+    pub gops_per_dsp_e6: Option<f64>,
+}
+
+/// Published related-work rows exactly as Table V lists them.
+pub fn related_work() -> Vec<ComparisonRow> {
+    let r = |work: &str,
+             platform: &str,
+             method: &'static str,
+             fmax: f64,
+             lat: Option<f64>,
+             gops: f64,
+             gpl: Option<f64>,
+             gpd: Option<f64>| ComparisonRow {
+        work: work.into(),
+        platform: platform.into(),
+        method,
+        fmax_mhz: fmax,
+        latency_us: lat,
+        gops,
+        gops_per_lut_e6: gpl,
+        gops_per_dsp_e6: gpd,
+    };
+    vec![
+        r("Guan 2017 [14]", "VC707", "HLS", 150.0, Some(390.0), 7.26, Some(38.23), Some(6.17)),
+        r("Sun 2018 [15]", "VC707", "HLS", 150.0, Some(4.3), 13.45, Some(47.0), Some(7.77)),
+        r("Que 2021 [16]", "U250", "HLS", 300.0, Some(0.867), 17.2, None, Some(1.9)),
+        r("Yoshimura 2021 [17]", "Zynq-7020", "HLS", 118.0, Some(18760.0), 0.00977, Some(1.14), Some(0.143)),
+        r("Mazumder 2020 [20]", "Artix-7", "HDL", 160.0, Some(800.0), 0.631, None, None),
+        r("Manjunath [21]", "Artix-7", "HDL", 53.0, Some(1240.0), 0.055, Some(56.0), Some(13.75)),
+        r("Azari 2019 [29]", "XC7Z030", "HDL", 100.0, None, 2.26, Some(98.1), None),
+        r("Ferreira 2016 [28]", "VC707", "HDL", 140.0, Some(2.05), 4.535, Some(31.2), Some(5.06)),
+        r("Bank-Tavakoli 2020 [30]", "XC7Z020", "HDL", 164.0, Some(9.3), 7.51, None, Some(192.0)),
+        r("Chang 2017 [31]", "ZC7020", "-", 142.0, Some(932.0), 1.049, Some(16.96), None),
+    ]
+}
+
+/// The ARM Cortex-A53 software baseline row (modeled).
+pub fn arm_row() -> ComparisonRow {
+    let cpu = crate::coordinator::rtos::ARM_A53;
+    let ops = crate::fpga::paper_op_count();
+    ComparisonRow {
+        work: "ARM baseline".into(),
+        platform: cpu.name.into(),
+        method: "Embedded C",
+        fmax_mhz: cpu.clock_mhz,
+        latency_us: Some(cpu.latency_us(ops)),
+        gops: cpu.gops(ops),
+        gops_per_lut_e6: None,
+        gops_per_dsp_e6: None,
+    }
+}
+
+/// Our six "This Work" rows: HDL at max parallelism and HLS, FP-16, on
+/// all three platforms (Table V's layout).
+pub fn this_work(params: &LstmParams) -> Vec<ComparisonRow> {
+    let mut rows = Vec::new();
+    for (method, hdl) in [("HDL", true), ("HLS", false)] {
+        for kind in [PlatformKind::U55c, PlatformKind::Zcu104, PlatformKind::Vc707] {
+            let plat = kind.platform();
+            let eng = if hdl {
+                FpgaEngine::deploy_hdl_max(params, FP16, &plat)
+            } else {
+                FpgaEngine::deploy_hls(params, FP16, &plat)
+            };
+            let rep = eng.report();
+            rows.push(ComparisonRow {
+                work: "This Work".into(),
+                platform: kind.paper_name().into(),
+                method,
+                fmax_mhz: rep.fmax_mhz,
+                latency_us: Some(rep.latency_us),
+                gops: rep.throughput_gops,
+                gops_per_lut_e6: Some(rep.gops_per_lut_e6),
+                gops_per_dsp_e6: Some(rep.gops_per_dsp_e6),
+            });
+        }
+    }
+    rows
+}
+
+pub fn render(rows: &[ComparisonRow]) -> String {
+    let mut t = Table::new(&[
+        "Work", "Platform", "Method", "Fmax(MHz)", "Latency(us)", "GOPS", "GOPS/LUT e6",
+        "GOPS/DSP e6",
+    ]);
+    let opt = |v: Option<f64>, d: usize| v.map_or("-".to_string(), |x| f(x, d));
+    for r in rows {
+        t.row(vec![
+            r.work.clone(),
+            r.platform.clone(),
+            r.method.to_string(),
+            f(r.fmax_mhz, 0),
+            opt(r.latency_us, 2),
+            f(r.gops, 3),
+            opt(r.gops_per_lut_e6, 1),
+            opt(r.gops_per_dsp_e6, 2),
+        ]);
+    }
+    format!("Table V — comparison with other LSTM accelerators\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, 8)
+    }
+
+    #[test]
+    fn our_hdl_u55c_is_headline() {
+        let ours = this_work(&params());
+        let headline = &ours[0];
+        assert_eq!(headline.platform, "U55C");
+        assert_eq!(headline.method, "HDL");
+        // Paper: 1.42 us / 7.87 GOPS — check band.
+        let lat = headline.latency_us.unwrap();
+        assert!((1.1..=1.8).contains(&lat), "{lat}");
+        assert!((6.0..=11.0).contains(&headline.gops), "{}", headline.gops);
+    }
+
+    #[test]
+    fn beats_most_related_work_on_latency() {
+        // Paper claim: lowest latency of the *comparable* designs (only
+        // Que 2021's U250 NLP engine is faster).
+        let ours = this_work(&params())[0].latency_us.unwrap();
+        let faster: Vec<_> = related_work()
+            .iter()
+            .filter(|r| r.latency_us.map_or(false, |l| l < ours))
+            .map(|r| r.work.clone())
+            .collect();
+        assert!(faster.len() <= 1, "faster: {faster:?}");
+    }
+
+    #[test]
+    fn speedup_vs_arm_in_paper_band() {
+        // Paper: HDL 280x / HLS 136x vs the 398 us ARM baseline.
+        let arm = arm_row().latency_us.unwrap();
+        let ours = this_work(&params());
+        let hdl = arm / ours[0].latency_us.unwrap();
+        assert!((150.0..=450.0).contains(&hdl), "{hdl}");
+        let hls = ours.iter().find(|r| r.method == "HLS").unwrap();
+        let hls_speedup = arm / hls.latency_us.unwrap();
+        assert!((60.0..=250.0).contains(&hls_speedup), "{hls_speedup}");
+    }
+
+    #[test]
+    fn render_includes_all_rows() {
+        let mut rows = related_work();
+        rows.push(arm_row());
+        rows.extend(this_work(&params()));
+        let s = render(&rows);
+        assert!(s.contains("This Work") && s.contains("Ferreira"));
+        assert_eq!(s.lines().count(), 2 + 1 + rows.len());
+    }
+}

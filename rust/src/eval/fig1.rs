@@ -1,0 +1,89 @@
+//! Fig.-1 reproduction driver: runs the architecture sweep and renders
+//! the SNR-vs-units series (one per layer count) that the paper plots.
+
+use crate::lstm::sweep::{mean_snr_by_layers, sweep_architectures, SweepConfig, SweepPoint};
+
+use super::table_fmt::{f, Table};
+
+/// The figure's data: one series per layer count.
+#[derive(Debug, Clone)]
+pub struct Fig1 {
+    pub points: Vec<SweepPoint>,
+}
+
+impl Fig1 {
+    pub fn generate(cfg: &SweepConfig) -> Self {
+        Self { points: sweep_architectures(cfg) }
+    }
+
+    /// (units, snr) series for a layer count.
+    pub fn series(&self, layers: usize) -> Vec<(usize, f64)> {
+        self.points
+            .iter()
+            .filter(|p| p.layers == layers)
+            .map(|p| (p.units, p.snr_db))
+            .collect()
+    }
+
+    /// The paper's depth claim, read off the figure the way the paper
+    /// does: the best-performing deep architectures sit above the best
+    /// shallow ones (the per-width scatter is large either way).
+    pub fn depth_helps(&self) -> bool {
+        let best_at = |layers: usize| {
+            self.points
+                .iter()
+                .filter(|p| p.layers == layers)
+                .map(|p| p.snr_db)
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let mut counts: Vec<usize> = self.points.iter().map(|p| p.layers).collect();
+        counts.sort_unstable();
+        counts.dedup();
+        if counts.len() < 2 {
+            return true;
+        }
+        let shallow = best_at(counts[0]);
+        let deep = counts[1..].iter().map(|&l| best_at(l)).fold(f64::NEG_INFINITY, f64::max);
+        deep > shallow
+    }
+
+    pub fn best(&self) -> &SweepPoint {
+        self.points
+            .iter()
+            .max_by(|a, b| a.snr_db.partial_cmp(&b.snr_db).unwrap())
+            .expect("non-empty sweep")
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["layers", "units", "SNR(dB)", "val MSE", "params"]);
+        for p in &self.points {
+            t.row(vec![
+                p.layers.to_string(),
+                p.units.to_string(),
+                f(p.snr_db, 2),
+                format!("{:.2e}", p.val_mse),
+                p.params.to_string(),
+            ]);
+        }
+        let mut s = format!("Fig. 1 — SNR by architecture\n{}", t.render());
+        for (l, m) in mean_snr_by_layers(&self.points) {
+            s.push_str(&format!("mean SNR @ {l} layer(s): {m:.2} dB\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig1_has_series_per_layer_count() {
+        let fig = Fig1::generate(&SweepConfig { epochs: 2, ..SweepConfig::quick() });
+        assert_eq!(fig.series(1).len(), 2);
+        assert_eq!(fig.series(3).len(), 2);
+        assert!(fig.series(2).is_empty());
+        assert!(fig.render().contains("SNR"));
+        let _ = fig.best();
+    }
+}

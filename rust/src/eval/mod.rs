@@ -1,0 +1,20 @@
+//! Evaluation harness: regenerates every table and figure in the paper's
+//! §VII from the FPGA models, the sweep trainer and the CPU baselines.
+//!
+//! * [`tables`] — Tables I–IV (+ the published values for shape checks).
+//! * [`comparison`] — Table V (related work + ARM baseline + this work).
+//! * [`fig1`] — the model-selection SNR figure.
+//! * [`table_fmt`] — the ASCII renderer shared by benches and the CLI.
+
+pub mod comparison;
+pub mod fig1;
+pub mod table_fmt;
+pub mod tables;
+
+pub use comparison::{arm_row, related_work, this_work, ComparisonRow};
+pub use fig1::Fig1;
+pub use table_fmt::Table;
+pub use tables::{
+    parallelism_sweep, render_comparison, render_reports, table1, table2, table2_paper, table3,
+    table3_paper, table4, table4_paper, PaperRow,
+};

@@ -1,0 +1,273 @@
+//! Generators for the paper's Tables I–IV: each function returns the rows
+//! (as [`DesignReport`]s) plus the paper's published values for
+//! side-by-side comparison, and can render the same ASCII layout the
+//! paper prints.  The benches under `rust/benches/` call these.
+
+use crate::fixed::{QFormat, FP16, FP32, FP8};
+use crate::fpga::{DesignReport, HdlDesign, HlsDesign, LoopOpt, PlatformKind};
+
+use super::table_fmt::{f, Table};
+
+/// A published reference value for one (row, metric) cell, used to check
+/// reproduction *shape* (orderings and ratios), never to fake output.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub platform: PlatformKind,
+    pub precision: &'static str,
+    pub fmax_mhz: f64,
+    pub latency_us: f64,
+    pub gops: f64,
+}
+
+/// Table I — HLS outermost-loop optimization study (Virtex-7, FP-16).
+pub fn table1() -> Vec<(&'static str, DesignReport)> {
+    let plat = PlatformKind::Vc707.platform();
+    vec![
+        (
+            "Loop Unroll",
+            HlsDesign::new(FP16).with_opt(LoopOpt::Unroll { factor: 8 }).report(&plat),
+        ),
+        ("Loop Pipeline", HlsDesign::new(FP16).with_opt(LoopOpt::Pipeline).report(&plat)),
+    ]
+}
+
+/// Table II — effect of parallelism on the HDL design (the per-platform
+/// *maximum* parallelism rows the paper highlights).
+pub fn table2() -> Vec<DesignReport> {
+    let mut rows = Vec::new();
+    for kind in [PlatformKind::Vc707, PlatformKind::U55c] {
+        let plat = kind.platform();
+        for fmt in [FP32, FP16] {
+            let p = plat.max_hdl_parallelism(fmt);
+            rows.push(HdlDesign::new(fmt, p).report(&plat));
+        }
+    }
+    rows
+}
+
+/// Paper values for Table II (Fmax MHz, latency us) keyed like `table2()`.
+pub fn table2_paper() -> Vec<PaperRow> {
+    vec![
+        PaperRow { platform: PlatformKind::Vc707, precision: "FP-32", fmax_mhz: 142.0, latency_us: 5.78, gops: f64::NAN },
+        PaperRow { platform: PlatformKind::Vc707, precision: "FP-16", fmax_mhz: 166.0, latency_us: 2.06, gops: f64::NAN },
+        PaperRow { platform: PlatformKind::U55c, precision: "FP-32", fmax_mhz: 150.0, latency_us: 2.38, gops: f64::NAN },
+        PaperRow { platform: PlatformKind::U55c, precision: "FP-16", fmax_mhz: 250.0, latency_us: 1.42, gops: f64::NAN },
+    ]
+}
+
+/// Table III — the HLS design on every platform and precision.
+pub fn table3() -> Vec<DesignReport> {
+    let mut rows = Vec::new();
+    for kind in PlatformKind::ALL {
+        let plat = kind.platform();
+        for fmt in [FP32, FP16, FP8] {
+            rows.push(HlsDesign::new(fmt).report(&plat));
+        }
+    }
+    rows
+}
+
+/// Paper values for Table III keyed like `table3()`.
+pub fn table3_paper() -> Vec<PaperRow> {
+    use PlatformKind::*;
+    vec![
+        PaperRow { platform: Vc707, precision: "FP-32", fmax_mhz: 210.0, latency_us: 8.75, gops: 1.28 },
+        PaperRow { platform: Vc707, precision: "FP-16", fmax_mhz: 213.0, latency_us: 7.40, gops: 1.51 },
+        PaperRow { platform: Vc707, precision: "FP-8", fmax_mhz: 235.0, latency_us: 6.36, gops: 1.76 },
+        PaperRow { platform: Zcu104, precision: "FP-32", fmax_mhz: 305.0, latency_us: 3.74, gops: 2.99 },
+        PaperRow { platform: Zcu104, precision: "FP-16", fmax_mhz: 350.0, latency_us: 2.92, gops: 3.83 },
+        PaperRow { platform: Zcu104, precision: "FP-8", fmax_mhz: 400.0, latency_us: 2.83, gops: 3.95 },
+        PaperRow { platform: U55c, precision: "FP-32", fmax_mhz: 362.0, latency_us: 6.86, gops: 1.63 },
+        PaperRow { platform: U55c, precision: "FP-16", fmax_mhz: 375.0, latency_us: 4.72, gops: 2.36 },
+        PaperRow { platform: U55c, precision: "FP-8", fmax_mhz: 380.0, latency_us: 4.65, gops: 2.40 },
+    ]
+}
+
+/// Table IV — the HDL design on every platform and precision at the
+/// paper's common 2-unit parallelism.
+pub fn table4() -> Vec<DesignReport> {
+    let mut rows = Vec::new();
+    for kind in PlatformKind::ALL {
+        let plat = kind.platform();
+        for fmt in [FP32, FP16, FP8] {
+            rows.push(HdlDesign::new(fmt, 2).report(&plat));
+        }
+    }
+    rows
+}
+
+/// Paper values for Table IV keyed like `table4()`.
+pub fn table4_paper() -> Vec<PaperRow> {
+    use PlatformKind::*;
+    vec![
+        PaperRow { platform: Vc707, precision: "FP-32", fmax_mhz: 150.0, latency_us: 11.48, gops: 0.97 },
+        PaperRow { platform: Vc707, precision: "FP-16", fmax_mhz: 166.0, latency_us: 3.71, gops: 3.01 },
+        PaperRow { platform: Vc707, precision: "FP-8", fmax_mhz: 200.0, latency_us: 3.10, gops: 3.61 },
+        PaperRow { platform: Zcu104, precision: "FP-32", fmax_mhz: 230.0, latency_us: 7.11, gops: 1.57 },
+        PaperRow { platform: Zcu104, precision: "FP-16", fmax_mhz: 250.0, latency_us: 2.14, gops: 5.21 },
+        PaperRow { platform: Zcu104, precision: "FP-8", fmax_mhz: 300.0, latency_us: 1.72, gops: 6.50 },
+        PaperRow { platform: U55c, precision: "FP-32", fmax_mhz: 250.0, latency_us: 6.826, gops: 1.64 },
+        PaperRow { platform: U55c, precision: "FP-16", fmax_mhz: 256.0, latency_us: 2.492, gops: 4.48 },
+        PaperRow { platform: U55c, precision: "FP-8", fmax_mhz: 300.0, latency_us: 2.108, gops: 5.30 },
+    ]
+}
+
+/// HDL parallelism sweep on one platform/precision (the Table II study in
+/// full, also the ablation bench's x-axis).
+pub fn parallelism_sweep(kind: PlatformKind, fmt: QFormat) -> Vec<DesignReport> {
+    let plat = kind.platform();
+    let pmax = plat.max_hdl_parallelism(fmt);
+    [1usize, 2, 4, 8, 15]
+        .into_iter()
+        .filter(|&p| p <= pmax)
+        .map(|p| HdlDesign::new(fmt, p).report(&plat))
+        .collect()
+}
+
+/// Render design reports in the paper's table layout.
+pub fn render_reports(title: &str, rows: &[DesignReport]) -> String {
+    let mut t = Table::new(&[
+        "Platform", "Precision", "P", "LUT%", "FF%", "BRAM", "DSP", "Fmax(MHz)",
+        "Latency(us)", "GOPS", "GOPS/LUT e6", "GOPS/DSP e6",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.platform.to_string(),
+            r.precision.to_string(),
+            r.parallelism.to_string(),
+            f(r.utilization.lut_pct, 1),
+            f(r.utilization.ff_pct, 1),
+            r.resources.bram36.to_string(),
+            r.resources.dsps.to_string(),
+            f(r.fmax_mhz, 0),
+            f(r.latency_us, 2),
+            f(r.throughput_gops, 2),
+            f(r.gops_per_lut_e6, 1),
+            f(r.gops_per_dsp_e6, 2),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+/// Render a measured-vs-paper comparison (latency + Fmax shape check).
+pub fn render_comparison(
+    title: &str,
+    ours: &[DesignReport],
+    paper: &[PaperRow],
+) -> String {
+    let mut t = Table::new(&[
+        "Platform", "Precision", "ours Fmax", "paper Fmax", "ours us", "paper us", "ratio",
+    ]);
+    for (o, p) in ours.iter().zip(paper) {
+        t.row(vec![
+            o.platform.to_string(),
+            o.precision.to_string(),
+            f(o.fmax_mhz, 0),
+            f(p.fmax_mhz, 0),
+            f(o.latency_us, 2),
+            f(p.latency_us, 2),
+            f(o.latency_us / p.latency_us, 2),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Spearman-style order agreement: the measured latencies must rank
+    /// (nearly) the same way the paper's do.
+    fn rank_agreement(ours: &[f64], paper: &[f64]) -> f64 {
+        let rank = |xs: &[f64]| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..xs.len()).collect();
+            idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+            let mut r = vec![0usize; xs.len()];
+            for (pos, &i) in idx.iter().enumerate() {
+                r[i] = pos;
+            }
+            r
+        };
+        let ra = rank(ours);
+        let rb = rank(paper);
+        let n = ours.len() as f64;
+        let d2: f64 = ra
+            .iter()
+            .zip(&rb)
+            .map(|(&a, &b)| ((a as f64) - (b as f64)).powi(2))
+            .sum();
+        1.0 - 6.0 * d2 / (n * (n * n - 1.0))
+    }
+
+    #[test]
+    fn table1_unroll_burns_dsps_without_winning() {
+        let rows = table1();
+        let (unroll, pipeline) = (&rows[0].1, &rows[1].1);
+        assert!(unroll.resources.dsps >= 8 * pipeline.resources.dsps);
+        let ratio = unroll.latency_us / pipeline.latency_us;
+        assert!((0.8..=1.15).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn table2_full_parallelism_headline() {
+        let rows = table2();
+        // Headline: U55C FP-16 P=15 is the global best, near 1.42 us.
+        let best = rows
+            .iter()
+            .min_by(|a, b| a.latency_us.partial_cmp(&b.latency_us).unwrap())
+            .unwrap();
+        assert_eq!(best.platform, "U55C");
+        assert_eq!(best.precision, "FP-16");
+        assert_eq!(best.parallelism, 15);
+        assert!((1.1..=1.8).contains(&best.latency_us), "{}", best.latency_us);
+    }
+
+    #[test]
+    fn table3_shape_tracks_paper() {
+        let ours: Vec<f64> = table3().iter().map(|r| r.latency_us).collect();
+        let paper: Vec<f64> = table3_paper().iter().map(|r| r.latency_us).collect();
+        let rho = rank_agreement(&ours, &paper);
+        assert!(rho > 0.8, "latency rank agreement {rho}");
+    }
+
+    #[test]
+    fn table4_shape_tracks_paper() {
+        let ours: Vec<f64> = table4().iter().map(|r| r.latency_us).collect();
+        let paper: Vec<f64> = table4_paper().iter().map(|r| r.latency_us).collect();
+        let rho = rank_agreement(&ours, &paper);
+        assert!(rho > 0.75, "latency rank agreement {rho}");
+    }
+
+    #[test]
+    fn hls_wins_at_fp32_on_zcu104_and_loses_at_fp16() {
+        // The paper's crossover (Tables III vs IV at equal parallelism).
+        let hls: Vec<_> = table3();
+        let hdl: Vec<_> = table4();
+        let find = |rows: &[DesignReport], plat: &str, prec: &str| -> f64 {
+            rows.iter()
+                .find(|r| r.platform == plat && r.precision == prec)
+                .unwrap()
+                .latency_us
+        };
+        assert!(find(&hls, "ZCU104", "FP-32") < find(&hdl, "ZCU104", "FP-32"));
+        assert!(find(&hls, "ZCU104", "FP-16") > find(&hdl, "ZCU104", "FP-16"));
+    }
+
+    #[test]
+    fn sweep_is_monotone_in_parallelism() {
+        let rows = parallelism_sweep(PlatformKind::U55c, FP16);
+        assert!(rows.len() >= 4);
+        for w in rows.windows(2) {
+            assert!(w[1].latency_us < w[0].latency_us);
+        }
+    }
+
+    #[test]
+    fn renders_contain_all_rows() {
+        let rows = table3();
+        let s = render_reports("Table III", &rows);
+        assert_eq!(s.lines().count(), 2 + 1 + rows.len());
+        let c = render_comparison("vs paper", &rows, &table3_paper());
+        assert!(c.contains("ratio"));
+    }
+}

@@ -1,0 +1,163 @@
+//! LUT-based sigmoid/tanh — the activation path of the FPGA design.
+//!
+//! The paper's accelerator evaluates activations with DSP-assisted lookup
+//! tables ("For HLS design of FP-8, DSPs were only employed for the
+//! activation functions").  We model the standard piecewise-linear LUT:
+//! `N` uniformly spaced entries over [-RANGE, RANGE], linear interpolation
+//! between entries, hard saturation outside.  The LUT *output* is quantized
+//! to the datapath format, the interpolation multiply being the DSP use.
+
+use super::qformat::QFormat;
+
+/// Input range covered by the tables; |x| > 8 saturates (sigmoid(8) ~ 0.99966).
+pub const LUT_RANGE: f64 = 8.0;
+/// Entries per table (2^10 — one BRAM36 per table at 16-bit entries).
+pub const LUT_SIZE: usize = 1024;
+
+/// A pair of piecewise-linear activation tables bound to a Q-format.
+#[derive(Debug, Clone)]
+pub struct ActLut {
+    pub fmt: QFormat,
+    sigmoid: Vec<f64>,
+    tanh: Vec<f64>,
+}
+
+impl ActLut {
+    pub fn new(fmt: QFormat) -> Self {
+        let mut sigmoid = Vec::with_capacity(LUT_SIZE + 1);
+        let mut tanh = Vec::with_capacity(LUT_SIZE + 1);
+        // One extra entry so interpolation at the top edge has a neighbour.
+        for i in 0..=LUT_SIZE {
+            let x = -LUT_RANGE + 2.0 * LUT_RANGE * (i as f64) / (LUT_SIZE as f64);
+            sigmoid.push(fmt.quantize(sigmoid_exact(x)));
+            tanh.push(fmt.quantize(x.tanh()));
+        }
+        Self { fmt, sigmoid, tanh }
+    }
+
+    #[inline]
+    fn lookup(&self, table: &[f64], x: f64) -> f64 {
+        if x <= -LUT_RANGE {
+            return table[0];
+        }
+        if x >= LUT_RANGE {
+            return table[LUT_SIZE];
+        }
+        let pos = (x + LUT_RANGE) / (2.0 * LUT_RANGE) * LUT_SIZE as f64;
+        let idx = pos.floor() as usize;
+        let frac = pos - idx as f64;
+        // Interpolation product is the DSP multiply; output requantized.
+        self.fmt.quantize(table[idx] + frac * (table[idx + 1] - table[idx]))
+    }
+
+    /// LUT sigmoid (quantized output).
+    pub fn sigmoid(&self, x: f64) -> f64 {
+        self.lookup(&self.sigmoid, x)
+    }
+
+    /// LUT tanh (quantized output).
+    pub fn tanh(&self, x: f64) -> f64 {
+        self.lookup(&self.tanh, x)
+    }
+
+    /// Worst-case absolute LUT error vs the exact function, for the
+    /// documentation tables (scanned densely).
+    pub fn max_error(&self) -> (f64, f64) {
+        let mut es = 0.0f64;
+        let mut et = 0.0f64;
+        let n = 20_000;
+        for i in 0..=n {
+            let x = -LUT_RANGE + 2.0 * LUT_RANGE * i as f64 / n as f64;
+            es = es.max((self.sigmoid(x) - sigmoid_exact(x)).abs());
+            et = et.max((self.tanh(x) - x.tanh()).abs());
+        }
+        (es, et)
+    }
+}
+
+/// Exact logistic sigmoid (f64) — the float-path activation.
+#[inline]
+pub fn sigmoid_exact(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::qformat::{FP16, FP32, FP8};
+
+    #[test]
+    fn sigmoid_exact_symmetry() {
+        for i in -100..=100 {
+            let x = i as f64 / 10.0;
+            let s = sigmoid_exact(x);
+            assert!((s + sigmoid_exact(-x) - 1.0).abs() < 1e-14);
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn lut_error_bounds() {
+        // Piecewise-linear over 1024 entries: interpolation error ~ (dx)^2/8
+        // * max|f''| ~ 3e-5; the dominant term is output quantization.
+        let e32 = ActLut::new(FP32).max_error();
+        assert!(e32.0 < 1e-4 && e32.1 < 1e-4, "{e32:?}");
+        let e16 = ActLut::new(FP16).max_error();
+        assert!(e16.0 < 2.5 * FP16.resolution(), "{e16:?}");
+        let e8 = ActLut::new(FP8).max_error();
+        assert!(e8.0 < 2.5 * FP8.resolution(), "{e8:?}");
+    }
+
+    #[test]
+    fn lut_saturates() {
+        let lut = ActLut::new(FP16);
+        assert_eq!(lut.sigmoid(100.0), lut.sigmoid(8.0));
+        assert_eq!(lut.sigmoid(-100.0), lut.sigmoid(-8.0));
+        assert!(lut.sigmoid(100.0) > 0.99);
+        assert!(lut.tanh(100.0) > 0.99);
+        assert!(lut.tanh(-100.0) < -0.99);
+    }
+
+    #[test]
+    fn lut_monotonic_nondecreasing() {
+        for fmt in [FP32, FP16, FP8] {
+            let lut = ActLut::new(fmt);
+            let mut prev_s = f64::NEG_INFINITY;
+            let mut prev_t = f64::NEG_INFINITY;
+            for i in 0..4000 {
+                let x = -10.0 + 20.0 * i as f64 / 4000.0;
+                let s = lut.sigmoid(x);
+                let t = lut.tanh(x);
+                assert!(s >= prev_s - 1e-12, "{} sigmoid not monotonic at {x}", fmt.name);
+                assert!(t >= prev_t - 1e-12, "{} tanh not monotonic at {x}", fmt.name);
+                prev_s = s;
+                prev_t = t;
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_are_quantized() {
+        for fmt in [FP16, FP8] {
+            let lut = ActLut::new(fmt);
+            let mut rng = crate::util::Rng::new(3);
+            for _ in 0..500 {
+                let x = rng.uniform(-9.0, 9.0);
+                let s = lut.sigmoid(x);
+                assert_eq!(s, fmt.quantize(s), "{}({x})", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_point() {
+        let lut = ActLut::new(FP16);
+        assert_eq!(lut.tanh(0.0), 0.0);
+        assert!((lut.sigmoid(0.0) - 0.5).abs() <= FP16.resolution());
+    }
+}

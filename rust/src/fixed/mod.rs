@@ -1,0 +1,13 @@
+//! Fixed-point arithmetic substrate — the FPGA datapath's number system.
+//!
+//! The paper evaluates "FP-32 / FP-16 / FP-8" *fixed-point* precisions.  We
+//! map them to two's-complement Q-formats (see [`qformat`]) and provide the
+//! LUT-based activation functions an FPGA implementation uses ([`activation`]).
+//! The quantization rule is bit-identical to `python/compile/quantize.py`
+//! (shared golden vectors in both test suites).
+
+pub mod activation;
+pub mod qformat;
+
+pub use activation::ActLut;
+pub use qformat::{QFormat, FP16, FP32, FP8};

@@ -1,0 +1,226 @@
+//! Q-format quantization, bit-identical with `python/compile/quantize.py`:
+//!
+//! `q(x) = clamp(floor(x * 2^f + 0.5), -2^(t-1), 2^(t-1)-1) / 2^f`
+//!
+//! (round-half-up with saturation — the cheap hardware rounding the paper's
+//! Verilog datapath uses).
+
+/// A two's-complement fixed-point format: `total_bits` total, `frac_bits`
+/// fractional.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub name: &'static str,
+    pub total_bits: u32,
+    pub frac_bits: u32,
+}
+
+/// Paper precision "FP-32" = Q16.16.
+pub const FP32: QFormat = QFormat { name: "fp32", total_bits: 32, frac_bits: 16 };
+/// Paper precision "FP-16" = Q8.8.
+pub const FP16: QFormat = QFormat { name: "fp16", total_bits: 16, frac_bits: 8 };
+/// Paper precision "FP-8" = Q4.4.
+pub const FP8: QFormat = QFormat { name: "fp8", total_bits: 8, frac_bits: 4 };
+
+/// All paper precisions, in the order the tables list them.
+pub const ALL: [QFormat; 3] = [FP32, FP16, FP8];
+
+impl QFormat {
+    pub fn by_name(name: &str) -> Option<QFormat> {
+        ALL.into_iter().find(|f| f.name == name)
+    }
+
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f64 {
+        ((1i64 << (self.total_bits - 1)) - 1) as f64 / self.scale()
+    }
+
+    /// Smallest (most negative) representable value.
+    pub fn min_value(&self) -> f64 {
+        -((1i64 << (self.total_bits - 1)) as f64) / self.scale()
+    }
+
+    /// 1 ulp.
+    pub fn resolution(&self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// Raw two's-complement code for `x` (saturating).
+    #[inline]
+    pub fn to_raw(&self, x: f64) -> i64 {
+        let lo = -(1i64 << (self.total_bits - 1));
+        let hi = (1i64 << (self.total_bits - 1)) - 1;
+        let r = (x * self.scale() + 0.5).floor();
+        if r <= lo as f64 {
+            lo
+        } else if r >= hi as f64 {
+            hi
+        } else {
+            r as i64
+        }
+    }
+
+    /// Value of a raw code.
+    #[inline]
+    pub fn from_raw(&self, raw: i64) -> f64 {
+        raw as f64 / self.scale()
+    }
+
+    /// Quantize-dequantize.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        self.from_raw(self.to_raw(x))
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f64]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+
+    /// Quantize f32 data (the weight files are f32).
+    pub fn quantize_f32(&self, x: f32) -> f32 {
+        self.quantize(x as f64) as f32
+    }
+
+    /// Saturating fixed-point multiply of two already-quantized values:
+    /// wide product then requantize (the DSP MAC truncation point).
+    #[inline]
+    pub fn mul(&self, a: f64, b: f64) -> f64 {
+        self.quantize(a * b)
+    }
+
+    /// Saturating fixed-point add.
+    #[inline]
+    pub fn add(&self, a: f64, b: f64) -> f64 {
+        self.quantize(a + b)
+    }
+
+    /// Dot product with a *wide* accumulator (double-width in hardware),
+    /// quantized once at the end — the paper's MVO unit behaviour.
+    pub fn dot_wide(&self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        self.quantize(acc)
+    }
+
+    /// DSP cost of one multiplier at this precision, per the paper's
+    /// observations: FP-8 multipliers fit in LUTs (no DSP below 10-bit
+    /// operands), FP-16 needs one DSP48, FP-32 needs four (a 32x32 product
+    /// decomposes into four 16/17-bit DSP multiplies).
+    pub fn dsp_per_mult(&self) -> u32 {
+        match self.total_bits {
+            0..=9 => 0,
+            10..=18 => 1,
+            _ => 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden vectors — SAME table as python/tests/test_quantize.py.
+    const GOLDEN: &[(f64, QFormat, i64, f64)] = &[
+        (0.0, FP16, 0, 0.0),
+        (1.0, FP16, 256, 1.0),
+        (-1.0, FP16, -256, -1.0),
+        (0.5, FP16, 128, 0.5),
+        (0.12345, FP16, 32, 0.125),
+        (-0.12345, FP16, -32, -0.125),
+        (3.14159, FP16, 804, 3.140625),
+        (1000.0, FP16, 32767, 127.99609375),
+        (-1000.0, FP16, -32768, -128.0),
+        (0.0611, FP8, 1, 0.0625),
+        (-0.0313, FP8, -1, -0.0625),
+        (2.71828, FP8, 43, 2.6875),
+        (100.0, FP8, 127, 7.9375),
+        (-100.0, FP8, -128, -8.0),
+        (0.333, FP8, 5, 0.3125),
+        (1.0e-5, FP32, 1, 1.52587890625e-5),
+        (12345.6789, FP32, 809086412, 12345.678894042969),
+        (-3.7, FP32, -242483, -3.6999969482421875),
+    ];
+
+    #[test]
+    fn golden_vectors_match_python() {
+        for &(x, fmt, raw, deq) in GOLDEN {
+            assert_eq!(fmt.to_raw(x), raw, "{}({})", fmt.name, x);
+            assert_eq!(fmt.quantize(x), deq, "{}({})", fmt.name, x);
+        }
+    }
+
+    #[test]
+    fn ranges() {
+        assert_eq!(FP16.max_value(), 127.99609375);
+        assert_eq!(FP16.min_value(), -128.0);
+        assert_eq!(FP8.max_value(), 7.9375);
+        assert_eq!(FP8.min_value(), -8.0);
+        assert_eq!(FP32.resolution(), 1.0 / 65536.0);
+    }
+
+    #[test]
+    fn dsp_cost_model() {
+        assert_eq!(FP8.dsp_per_mult(), 0); // paper: no DSP below 10 bits
+        assert_eq!(FP16.dsp_per_mult(), 1);
+        assert_eq!(FP32.dsp_per_mult(), 4);
+    }
+
+    #[test]
+    fn prop_idempotent_and_bounded() {
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..5000 {
+            let x = rng.uniform(-200.0, 200.0);
+            for fmt in ALL {
+                let q = fmt.quantize(x);
+                assert_eq!(fmt.quantize(q), q, "{} {}", fmt.name, x);
+                assert!(q >= fmt.min_value() && q <= fmt.max_value());
+                if x > fmt.min_value() && x < fmt.max_value() - fmt.resolution() {
+                    assert!(
+                        (q - x).abs() <= fmt.resolution() / 2.0 + 1e-12,
+                        "{} {} -> {}",
+                        fmt.name,
+                        x,
+                        q
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_monotonic() {
+        let mut rng = crate::util::Rng::new(12);
+        for fmt in ALL {
+            let mut prev_x = f64::NEG_INFINITY;
+            let mut xs: Vec<f64> = (0..2000).map(|_| rng.uniform(-10.0, 10.0)).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut prev_q = f64::NEG_INFINITY;
+            for x in xs {
+                let q = fmt.quantize(x);
+                assert!(q >= prev_q, "{}: q({x}) < q({prev_x})", fmt.name);
+                prev_q = q;
+                prev_x = x;
+            }
+        }
+    }
+
+    #[test]
+    fn wide_dot_matches_scalar_chain_when_exact() {
+        // With values exactly representable, dot_wide == f64 dot quantized.
+        let a: Vec<f64> = (0..31).map(|i| FP16.quantize(0.1 * i as f64)).collect();
+        let b: Vec<f64> = (0..31).map(|i| FP16.quantize(0.05 * (31 - i) as f64)).collect();
+        let wide = FP16.dot_wide(&a, &b);
+        let exact: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(wide, FP16.quantize(exact));
+    }
+}

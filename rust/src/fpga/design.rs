@@ -1,0 +1,165 @@
+//! Common accelerator-design types: resource vectors and the per-design
+//! characterization report (one row of the paper's Tables I–IV).
+
+use crate::fixed::QFormat;
+use crate::util::Json;
+
+use super::platform::Platform;
+
+/// Absolute resource usage of one accelerator instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub luts: u64,
+    pub ffs: u64,
+    /// BRAM36 equivalents (the paper reports halves as x.5; we round up
+    /// to whole blocks).
+    pub bram36: u64,
+    pub dsps: u64,
+}
+
+impl Resources {
+    pub fn utilization(&self, platform: &Platform) -> ResourceUtilization {
+        ResourceUtilization {
+            lut_pct: 100.0 * self.luts as f64 / platform.luts as f64,
+            ff_pct: 100.0 * self.ffs as f64 / platform.ffs as f64,
+            bram_pct: 100.0 * self.bram36 as f64 / platform.bram36 as f64,
+            dsp_pct: 100.0 * self.dsps as f64 / platform.dsps as f64,
+        }
+    }
+
+    pub fn fits(&self, platform: &Platform) -> bool {
+        self.luts <= platform.luts
+            && self.ffs <= platform.ffs
+            && self.bram36 <= platform.bram36
+            && self.dsps <= platform.dsps
+    }
+}
+
+/// Resource usage as a percentage of a platform (the tables' (%) columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceUtilization {
+    pub lut_pct: f64,
+    pub ff_pct: f64,
+    pub bram_pct: f64,
+    pub dsp_pct: f64,
+}
+
+/// One fully-characterized design point — a row of Tables I–IV.
+#[derive(Debug, Clone)]
+pub struct DesignReport {
+    /// "hls" or "hdl".
+    pub method: &'static str,
+    pub platform: &'static str,
+    pub precision: &'static str,
+    /// HDL unit parallelism (1 for HLS designs).
+    pub parallelism: usize,
+    pub resources: Resources,
+    pub utilization: ResourceUtilization,
+    pub fmax_mhz: f64,
+    /// Accelerator-only cycles (schedule walk).
+    pub accel_cycles: u64,
+    /// System cycles including platform I/O overhead.
+    pub total_cycles: u64,
+    pub latency_us: f64,
+    pub throughput_gops: f64,
+    /// GOPS / LUT x 1e6 (the tables' normalized-throughput column).
+    pub gops_per_lut_e6: f64,
+    /// GOPS / DSP x 1e6.
+    pub gops_per_dsp_e6: f64,
+}
+
+impl DesignReport {
+    /// Assemble the derived metrics from cycles + resources + Fmax.
+    pub fn build(
+        method: &'static str,
+        platform: &Platform,
+        fmt: QFormat,
+        parallelism: usize,
+        resources: Resources,
+        accel_cycles: u64,
+        fmax_mhz: f64,
+    ) -> Self {
+        let total_cycles = accel_cycles + platform.io_overhead_cycles;
+        let latency_us = total_cycles as f64 / fmax_mhz;
+        let ops = super::paper_op_count() as f64;
+        let throughput_gops = ops / latency_us / 1e3;
+        Self {
+            method,
+            platform: platform.kind.paper_name(),
+            precision: precision_label(fmt),
+            parallelism,
+            utilization: resources.utilization(platform),
+            resources,
+            fmax_mhz,
+            accel_cycles,
+            total_cycles,
+            latency_us,
+            throughput_gops,
+            gops_per_lut_e6: throughput_gops / resources.luts.max(1) as f64 * 1e6,
+            gops_per_dsp_e6: throughput_gops / resources.dsps.max(1) as f64 * 1e6,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.into())),
+            ("platform", Json::Str(self.platform.into())),
+            ("precision", Json::Str(self.precision.into())),
+            ("parallelism", Json::Num(self.parallelism as f64)),
+            ("lut", Json::Num(self.resources.luts as f64)),
+            ("ff", Json::Num(self.resources.ffs as f64)),
+            ("bram36", Json::Num(self.resources.bram36 as f64)),
+            ("dsp", Json::Num(self.resources.dsps as f64)),
+            ("lut_pct", Json::Num(self.utilization.lut_pct)),
+            ("dsp_pct", Json::Num(self.utilization.dsp_pct)),
+            ("fmax_mhz", Json::Num(self.fmax_mhz)),
+            ("accel_cycles", Json::Num(self.accel_cycles as f64)),
+            ("total_cycles", Json::Num(self.total_cycles as f64)),
+            ("latency_us", Json::Num(self.latency_us)),
+            ("gops", Json::Num(self.throughput_gops)),
+            ("gops_per_lut_e6", Json::Num(self.gops_per_lut_e6)),
+            ("gops_per_dsp_e6", Json::Num(self.gops_per_dsp_e6)),
+        ])
+    }
+}
+
+/// The tables' precision labels.
+pub fn precision_label(fmt: QFormat) -> &'static str {
+    match fmt.total_bits {
+        32 => "FP-32",
+        16 => "FP-16",
+        _ => "FP-8",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FP16;
+    use crate::fpga::platform::PlatformKind;
+
+    #[test]
+    fn utilization_percentages() {
+        let p = PlatformKind::Vc707.platform();
+        let r = Resources { luts: 30360, ffs: 60720, bram36: 103, dsps: 280 };
+        let u = r.utilization(&p);
+        assert!((u.lut_pct - 10.0).abs() < 1e-9);
+        assert!((u.ff_pct - 10.0).abs() < 1e-9);
+        assert!((u.bram_pct - 10.0).abs() < 1e-9);
+        assert!((u.dsp_pct - 10.0).abs() < 1e-9);
+        assert!(r.fits(&p));
+        assert!(!Resources { dsps: 3000, ..r }.fits(&p));
+    }
+
+    #[test]
+    fn report_derives_gops_from_cycles() {
+        let p = PlatformKind::Zcu104.platform();
+        let r = Resources { luts: 50_000, ffs: 50_000, bram36: 15, dsps: 1_000 };
+        let rep = DesignReport::build("hdl", &p, FP16, 2, r, 445, 250.0);
+        assert_eq!(rep.total_cycles, 445 + p.io_overhead_cycles);
+        assert!((rep.latency_us - rep.total_cycles as f64 / 250.0).abs() < 1e-12);
+        // GOPS x latency == ops.
+        let ops = rep.throughput_gops * rep.latency_us * 1e3;
+        assert!((ops - crate::fpga::paper_op_count() as f64).abs() < 1e-6);
+    }
+}

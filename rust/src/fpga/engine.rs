@@ -1,0 +1,176 @@
+//! Bit-exact FPGA execution engine: runs the *same* fixed-point datapath
+//! as [`crate::lstm::QuantizedNetwork`] while charging the configured
+//! design's schedule cycles, so numeric outputs and latency come from one
+//! place (DESIGN.md §8 "cycle models are executable").
+//!
+//! This is the `fpga-sim` coordinator backend and the workhorse of the
+//! Tables I–V benches.
+
+use crate::fixed::QFormat;
+use crate::lstm::{LstmParams, QuantizedNetwork};
+
+use super::design::DesignReport;
+use super::hdl::HdlDesign;
+use super::hls::{HlsDesign, LoopOpt};
+use super::platform::Platform;
+
+/// Which microarchitecture the engine simulates.
+#[derive(Debug, Clone)]
+pub enum DesignChoice {
+    Hls(HlsDesign),
+    Hdl(HdlDesign),
+}
+
+impl DesignChoice {
+    pub fn fmt(&self) -> QFormat {
+        match self {
+            Self::Hls(d) => d.fmt,
+            Self::Hdl(d) => d.fmt,
+        }
+    }
+
+    pub fn report(&self, platform: &Platform) -> DesignReport {
+        match self {
+            Self::Hls(d) => d.report(platform),
+            Self::Hdl(d) => d.report(platform),
+        }
+    }
+}
+
+/// A deployed accelerator: bit-exact datapath + cycle/latency accounting.
+pub struct FpgaEngine {
+    net: QuantizedNetwork,
+    report: DesignReport,
+    /// Simulated clock, cycles since reset.
+    cycles_elapsed: u64,
+    steps: u64,
+}
+
+impl FpgaEngine {
+    /// "Place and route" `design` on `platform` with the trained weights.
+    pub fn deploy(params: &LstmParams, design: DesignChoice, platform: &Platform) -> Self {
+        let report = design.report(platform);
+        Self {
+            net: QuantizedNetwork::new(params, design.fmt()),
+            report,
+            cycles_elapsed: 0,
+            steps: 0,
+        }
+    }
+
+    /// Convenience: HDL design at a platform's maximum parallelism.
+    pub fn deploy_hdl_max(params: &LstmParams, fmt: QFormat, platform: &Platform) -> Self {
+        let p = platform.max_hdl_parallelism(fmt);
+        Self::deploy(params, DesignChoice::Hdl(HdlDesign::new(fmt, p)), platform)
+    }
+
+    /// Convenience: the shipped (pipelined) HLS design.
+    pub fn deploy_hls(params: &LstmParams, fmt: QFormat, platform: &Platform) -> Self {
+        Self::deploy(
+            params,
+            DesignChoice::Hls(HlsDesign::new(fmt).with_opt(LoopOpt::Pipeline)),
+            platform,
+        )
+    }
+
+    pub fn report(&self) -> &DesignReport {
+        &self.report
+    }
+
+    /// Simulated latency of one inference step in microseconds.
+    pub fn step_latency_us(&self) -> f64 {
+        self.report.latency_us
+    }
+
+    /// Run one window through the accelerator: returns the roller estimate
+    /// (metres) and charges the schedule's cycles to the simulated clock.
+    pub fn infer_window(&mut self, window: &[f32]) -> f64 {
+        self.cycles_elapsed += self.report.total_cycles;
+        self.steps += 1;
+        self.net.infer_window(window)
+    }
+
+    /// Simulated wall-clock spent in the accelerator so far (us).
+    pub fn simulated_time_us(&self) -> f64 {
+        self.cycles_elapsed as f64 / self.report.fmax_mhz
+    }
+
+    pub fn steps_run(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn reset(&mut self) {
+        self.net.reset();
+        self.cycles_elapsed = 0;
+        self.steps = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FP16;
+    use crate::fpga::platform::PlatformKind;
+    use crate::lstm::LstmParams;
+
+    fn params() -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, 21)
+    }
+
+    #[test]
+    fn engine_is_bit_exact_with_quantized_network() {
+        let p = params();
+        let plat = PlatformKind::U55c.platform();
+        let mut eng = FpgaEngine::deploy_hdl_max(&p, FP16, &plat);
+        let mut reference = QuantizedNetwork::new(&p, FP16);
+        let mut rng = crate::util::Rng::new(77);
+        for _ in 0..60 {
+            let w: Vec<f32> = (0..16).map(|_| rng.uniform(-50.0, 50.0) as f32).collect();
+            assert_eq!(eng.infer_window(&w), reference.infer_window(&w));
+        }
+    }
+
+    #[test]
+    fn clock_advances_per_step() {
+        let plat = PlatformKind::Zcu104.platform();
+        let mut eng = FpgaEngine::deploy_hls(&params(), FP16, &plat);
+        assert_eq!(eng.simulated_time_us(), 0.0);
+        eng.infer_window(&[0.0; 16]);
+        let t1 = eng.simulated_time_us();
+        assert!((t1 - eng.step_latency_us()).abs() < 1e-9);
+        eng.infer_window(&[0.0; 16]);
+        assert!((eng.simulated_time_us() - 2.0 * t1).abs() < 1e-9);
+        assert_eq!(eng.steps_run(), 2);
+    }
+
+    #[test]
+    fn hdl_beats_hls_at_fp16_everywhere() {
+        // The paper's headline crossover: HDL wins up to 16-bit.
+        let p = params();
+        for kind in PlatformKind::ALL {
+            let plat = kind.platform();
+            let hdl = FpgaEngine::deploy_hdl_max(&p, FP16, &plat);
+            let hls = FpgaEngine::deploy_hls(&p, FP16, &plat);
+            // ZCU104 is capped at P=2 but still beats its HLS design.
+            assert!(
+                hdl.step_latency_us() < hls.step_latency_us(),
+                "{}: hdl {} !< hls {}",
+                kind.name(),
+                hdl.step_latency_us(),
+                hls.step_latency_us()
+            );
+        }
+    }
+
+    #[test]
+    fn reset_clears_state_and_clock() {
+        let plat = PlatformKind::U55c.platform();
+        let mut eng = FpgaEngine::deploy_hdl_max(&params(), FP16, &plat);
+        let w = vec![1.5f32; 16];
+        let y0 = eng.infer_window(&w);
+        eng.infer_window(&w);
+        eng.reset();
+        assert_eq!(eng.simulated_time_us(), 0.0);
+        assert_eq!(eng.infer_window(&w), y0);
+    }
+}

@@ -1,0 +1,74 @@
+//! FPGA accelerator simulator — the substitute for the paper's Xilinx
+//! toolchain + boards (repro gate: we have no Vivado/Vitis and no VC707 /
+//! ZCU104 / U55C hardware).
+//!
+//! Three cooperating pieces (DESIGN.md §2, §6):
+//!
+//! * [`platform`] — resource inventories + calibrated Fmax / I/O-overhead
+//!   models for the three boards.
+//! * [`hls`] / [`hdl`] — *executable schedule models* of the two
+//!   microarchitectures (Fig. 2 / Fig. 3 of the paper): they walk the
+//!   BRAM-load / MAC / adder-tree / EVO pipeline and return cycle counts
+//!   and resource usage derived from first principles.
+//! * [`engine`] — bit-exact execution: drives the same fixed-point
+//!   datapath as [`crate::lstm::QuantizedNetwork`] while charging the
+//!   schedule's cycles, so values and latency come from one walk.
+//!
+//! Calibration constants are documented inline with the paper table row
+//! they were fit to; everything else is derived.  The reproduced claims
+//! are the table *shapes* (orderings / ratios / crossovers), not absolute
+//! silicon numbers.
+
+pub mod design;
+pub mod engine;
+pub mod hdl;
+pub mod hls;
+pub mod pareto;
+pub mod platform;
+
+pub use design::{DesignReport, Resources};
+pub use pareto::{pareto_frontier, DesignPoint};
+pub use engine::FpgaEngine;
+pub use hdl::HdlDesign;
+pub use hls::{HlsDesign, LoopOpt};
+pub use platform::{Platform, PlatformKind};
+
+/// Total arithmetic operations for one inference step, counted the way the
+/// paper's throughput metric does (MAC = 2 ops, activation = 1 op) — must
+/// agree with `python/compile/model.py::op_count` (cross-checked against
+/// `artifacts/manifest.json` in the integration tests).
+pub fn op_count(input_size: usize, hidden: usize, layers: usize, out: usize) -> usize {
+    let mut total = 0;
+    let mut isz = input_size;
+    for _ in 0..layers {
+        total += 8 * hidden * (isz + hidden); // MVO MACs
+        total += 4 * hidden; // bias adds
+        total += 5 * hidden; // activations (4 gate + tanh(c'))
+        total += 4 * hidden; // EVO mul/add
+        isz = hidden;
+    }
+    total += 2 * hidden * out + out; // dense head
+    total
+}
+
+/// Op count for the paper's 16-15-3 architecture.
+pub fn paper_op_count() -> usize {
+    op_count(crate::arch::INPUT_SIZE, crate::arch::HIDDEN, crate::arch::LAYERS, crate::arch::OUTPUT)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn op_count_matches_python() {
+        // python/compile/model.py::op_count() == 11536 for 16-15-3-1.
+        assert_eq!(super::paper_op_count(), 11536);
+    }
+
+    #[test]
+    fn op_count_scales_with_architecture() {
+        let small = super::op_count(16, 8, 1, 1);
+        let large = super::op_count(16, 40, 3, 1);
+        assert!(small < super::paper_op_count());
+        assert!(large > super::paper_op_count());
+    }
+}

@@ -1,0 +1,157 @@
+//! Design-space Pareto explorer — the deployment question behind the
+//! paper's §VII ("determine the best-performing configuration given the
+//! application"): enumerate every feasible (method, platform, precision,
+//! parallelism) point, attach the build-time accuracy of that precision,
+//! and extract the latency/resource/accuracy Pareto frontier.
+
+use crate::fixed::{QFormat, FP16, FP32, FP8};
+
+use super::design::DesignReport;
+use super::hdl::HdlDesign;
+use super::hls::HlsDesign;
+use super::platform::PlatformKind;
+
+/// One candidate deployment with its figures of merit.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub report: DesignReport,
+    /// Estimate quality of this precision (SNR dB) — from the build
+    /// manifest when available, else the calibrated defaults below.
+    pub snr_db: f64,
+}
+
+impl DesignPoint {
+    /// Dominance: `self` dominates `other` if it is no worse on latency,
+    /// DSPs and SNR, and strictly better on at least one.
+    pub fn dominates(&self, other: &DesignPoint) -> bool {
+        let le = self.report.latency_us <= other.report.latency_us
+            && self.report.resources.dsps <= other.report.resources.dsps
+            && self.snr_db >= other.snr_db;
+        let lt = self.report.latency_us < other.report.latency_us
+            || self.report.resources.dsps < other.report.resources.dsps
+            || self.snr_db > other.snr_db;
+        le && lt
+    }
+}
+
+/// Per-precision SNR used when no manifest is supplied (values from the
+/// shipped `artifacts/manifest.json` build).
+pub fn default_snr(fmt: QFormat) -> f64 {
+    match fmt.total_bits {
+        32 => 6.94,
+        16 => 6.96,
+        _ => 4.01,
+    }
+}
+
+/// Enumerate every feasible design point across the study space.
+pub fn enumerate(snr_of: impl Fn(QFormat) -> f64) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+    for kind in PlatformKind::ALL {
+        let plat = kind.platform();
+        for fmt in [FP32, FP16, FP8] {
+            // HLS point.
+            let hls = HlsDesign::new(fmt);
+            if hls.resources().fits(&plat) {
+                out.push(DesignPoint { report: hls.report(&plat), snr_db: snr_of(fmt) });
+            }
+            // HDL points at each feasible parallelism.
+            let pmax = plat.max_hdl_parallelism(fmt);
+            for p in [1usize, 2, 4, 8, 15].into_iter().filter(|&p| p <= pmax) {
+                let hdl = HdlDesign::new(fmt, p);
+                if hdl.resources().fits(&plat) {
+                    out.push(DesignPoint { report: hdl.report(&plat), snr_db: snr_of(fmt) });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract the non-dominated subset, sorted by latency.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    let mut frontier: Vec<DesignPoint> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect();
+    frontier.sort_by(|a, b| a.report.latency_us.partial_cmp(&b.report.latency_us).unwrap());
+    frontier
+}
+
+/// The recommendation the paper converges on: lowest latency subject to
+/// an SNR floor and a DSP budget.
+pub fn recommend(
+    points: &[DesignPoint],
+    min_snr_db: f64,
+    max_dsps: u64,
+) -> Option<&DesignPoint> {
+    points
+        .iter()
+        .filter(|p| p.snr_db >= min_snr_db && p.report.resources.dsps <= max_dsps)
+        .min_by(|a, b| a.report.latency_us.partial_cmp(&b.report.latency_us).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn points() -> Vec<DesignPoint> {
+        enumerate(default_snr)
+    }
+
+    #[test]
+    fn enumeration_covers_the_study_space() {
+        let pts = points();
+        // 3 platforms x 3 precisions x (1 HLS + >=2 HDL) at minimum.
+        assert!(pts.len() >= 27, "{}", pts.len());
+        assert!(pts.iter().any(|p| p.report.method == "hls"));
+        assert!(pts.iter().any(|p| p.report.method == "hdl" && p.report.parallelism == 15));
+    }
+
+    #[test]
+    fn frontier_is_mutually_non_dominated() {
+        let pts = points();
+        let front = pareto_frontier(&pts);
+        assert!(!front.is_empty() && front.len() < pts.len());
+        for a in &front {
+            for b in &front {
+                assert!(!a.dominates(b) || std::ptr::eq(a, b) || !b.dominates(a));
+            }
+        }
+        // Sorted by latency.
+        for w in front.windows(2) {
+            assert!(w[0].report.latency_us <= w[1].report.latency_us);
+        }
+    }
+
+    #[test]
+    fn paper_headline_is_on_the_frontier() {
+        // U55C HDL FP-16 P=15 is the latency champion at FP-16 SNR: it
+        // must not be dominated.
+        let pts = points();
+        let front = pareto_frontier(&pts);
+        assert!(
+            front.iter().any(|p| p.report.platform == "U55C"
+                && p.report.method == "hdl"
+                && p.report.precision == "FP-16"
+                && p.report.parallelism == 15),
+            "headline design missing from the frontier"
+        );
+    }
+
+    #[test]
+    fn recommendation_respects_constraints() {
+        let pts = points();
+        // Tight DSP budget forces an HLS or low-P design.
+        let rec = recommend(&pts, 6.0, 300).expect("feasible point exists");
+        assert!(rec.report.resources.dsps <= 300);
+        assert!(rec.snr_db >= 6.0);
+        // Loose budget converges on the paper's headline.
+        let rec = recommend(&pts, 6.0, u64::MAX).unwrap();
+        assert_eq!(rec.report.platform, "U55C");
+        assert_eq!(rec.report.parallelism, 15);
+        // Impossible SNR floor -> none.
+        assert!(recommend(&pts, 99.0, u64::MAX).is_none());
+    }
+}

@@ -1,0 +1,259 @@
+//! FPGA platform models: resource inventories (from the Xilinx data
+//! sheets) and the calibrated timing model (base Fmax per design style and
+//! precision + system-level I/O overhead).
+//!
+//! Every calibrated constant cites the paper table row it was fit to.
+
+use crate::fixed::QFormat;
+
+/// The three boards the paper targets (§VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    /// VC707: Virtex-7 XC7VX485T, on-board DDR3 through MIG + MicroBlaze.
+    Vc707,
+    /// ZCU104: Zynq UltraScale+ XCZU7EV MPSoC, ARM PS + DDR4.
+    Zcu104,
+    /// Alveo U55C: UltraScale+ XCU55C, HBM + MicroBlaze, PCIe host.
+    U55c,
+}
+
+impl PlatformKind {
+    pub const ALL: [PlatformKind; 3] = [PlatformKind::Vc707, PlatformKind::Zcu104, PlatformKind::U55c];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "vc707" | "virtex7" | "virtex-7" => Some(Self::Vc707),
+            "zcu104" => Some(Self::Zcu104),
+            "u55c" | "alveo" => Some(Self::U55c),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Vc707 => "vc707",
+            Self::Zcu104 => "zcu104",
+            Self::U55c => "u55c",
+        }
+    }
+
+    /// Display name as the paper's tables write it.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Self::Vc707 => "Virtex 7",
+            Self::Zcu104 => "ZCU104",
+            Self::U55c => "U55C",
+        }
+    }
+
+    pub fn platform(&self) -> Platform {
+        Platform::new(*self)
+    }
+}
+
+/// Static platform description + timing model.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub kind: PlatformKind,
+    /// Programmable-logic resource totals (device data sheets).
+    pub luts: u64,
+    pub ffs: u64,
+    /// BRAM36 blocks.
+    pub bram36: u64,
+    pub dsps: u64,
+    /// Cycles the *system* (Fig. 4) spends around one accelerator run:
+    /// AXI start/stop handshake, feature fetch from DDR/HBM into the input
+    /// BRAM, result write-back.  Calibrated from the HDL P=15 / P=2 rows
+    /// of Tables II/IV (DESIGN.md §6).
+    pub io_overhead_cycles: u64,
+}
+
+impl Platform {
+    pub fn new(kind: PlatformKind) -> Self {
+        match kind {
+            // XC7VX485T: 303,600 LUTs / 607,200 FFs / 1,030 BRAM36 / 2,800 DSPs.
+            // io overhead fit: Table II VC707 FP-16 P=15 (2.06 us @ 166 MHz
+            // = 342 cycles) minus the schedule's accelerator cycles.
+            PlatformKind::Vc707 => Self {
+                kind,
+                luts: 303_600,
+                ffs: 607_200,
+                bram36: 1_030,
+                dsps: 2_800,
+                io_overhead_cycles: 210,
+            },
+            // XCZU7EV: 230,400 LUTs / 460,800 FFs / 312 BRAM36 / 1,728 DSPs.
+            // io overhead fit: Table IV ZCU104 FP-16 P=2 (2.14 us @ 250 MHz
+            // = 535 cycles).  The PS-attached DDR4 path is the fastest of
+            // the three boards — the paper's "ZCU104 shows the best
+            // performance among other platforms" at equal parallelism.
+            PlatformKind::Zcu104 => Self {
+                kind,
+                luts: 230_400,
+                ffs: 460_800,
+                bram36: 312,
+                dsps: 1_728,
+                io_overhead_cycles: 90,
+            },
+            // XCU55C: 1,303,680 LUTs / 2,607,360 FFs / 2,016 BRAM36 / 9,024
+            // DSPs.  io overhead fit: Table II U55C FP-16 P=15 (1.42 us @
+            // 250 MHz = 355 cycles); the HBM AXI path costs more cycles
+            // than the ZCU104's PS DDR (the paper's observation that
+            // ZCU104 beats U55C at the same parallelism).
+            PlatformKind::U55c => Self {
+                kind,
+                luts: 1_303_680,
+                ffs: 2_607_360,
+                bram36: 2_016,
+                dsps: 9_024,
+                io_overhead_cycles: 220,
+            },
+        }
+    }
+
+    /// Achieved system Fmax (MHz) for the *HLS* design at a precision —
+    /// Table III "Fmax" column (the HLS tool pipelines to a fixed target;
+    /// resource pressure is low, so Fmax depends only on platform speed
+    /// grade and datapath width).
+    pub fn hls_fmax(&self, fmt: QFormat) -> f64 {
+        match (self.kind, fmt.total_bits) {
+            (PlatformKind::Vc707, 32) => 210.0,
+            (PlatformKind::Vc707, 16) => 213.0,
+            (PlatformKind::Vc707, _) => 235.0,
+            (PlatformKind::Zcu104, 32) => 305.0,
+            (PlatformKind::Zcu104, 16) => 350.0,
+            (PlatformKind::Zcu104, _) => 400.0,
+            (PlatformKind::U55c, 32) => 362.0,
+            (PlatformKind::U55c, 16) => 375.0,
+            (PlatformKind::U55c, _) => 380.0,
+        }
+    }
+
+    /// Base HDL Fmax (MHz) at low parallelism — Table IV (P=2) rows.
+    pub fn hdl_base_fmax(&self, fmt: QFormat) -> f64 {
+        match (self.kind, fmt.total_bits) {
+            (PlatformKind::Vc707, 32) => 150.0,
+            (PlatformKind::Vc707, 16) => 166.0,
+            (PlatformKind::Vc707, _) => 200.0,
+            (PlatformKind::Zcu104, 32) => 230.0,
+            (PlatformKind::Zcu104, 16) => 250.0,
+            (PlatformKind::Zcu104, _) => 300.0,
+            (PlatformKind::U55c, 32) => 250.0,
+            (PlatformKind::U55c, 16) => 256.0,
+            (PlatformKind::U55c, _) => 300.0,
+        }
+    }
+
+    /// Routing-congestion Fmax degradation for wide (FP-32) HDL datapaths
+    /// at high unit parallelism — the paper: "the increment of DSP causes
+    /// a reduction of frequency" / "the design becomes crowded, preventing
+    /// high-frequency operation".  Narrow datapaths (<= 18-bit multiplier
+    /// operands, one DSP each) route cleanly and keep base Fmax.
+    ///
+    /// Slope fit: U55C FP-32 (2, 250 MHz) -> (8, 150 MHz) [Table II];
+    /// VC707 FP-32 (2, 150) -> (4, 142) [Tables IV/II].
+    pub fn hdl_fmax(&self, fmt: QFormat, parallelism: usize) -> f64 {
+        let base = self.hdl_base_fmax(fmt);
+        if fmt.total_bits <= 18 || parallelism <= 2 {
+            return base;
+        }
+        let slope = match self.kind {
+            PlatformKind::Vc707 => 4.0,   // MHz lost per extra FP-32 unit
+            PlatformKind::Zcu104 => 8.0,  // smallest fabric, worst congestion
+            PlatformKind::U55c => 16.7,   // big fabric but SLR crossings
+        };
+        (base - slope * (parallelism as f64 - 2.0)).max(base * 0.4)
+    }
+
+    /// Highest HDL unit parallelism the platform sustains at a precision
+    /// before routing fails or DSPs run out (paper §VII: full parallelism
+    /// = 15 units up to FP-16 everywhere except ZCU104, which "exceeds
+    /// available DSPs if more than 2 unit parallelism is applied"; FP-32
+    /// caps at 4 on VC707 and 8 on U55C — Table II).
+    pub fn max_hdl_parallelism(&self, fmt: QFormat) -> usize {
+        match (self.kind, fmt.total_bits) {
+            (PlatformKind::Zcu104, 32) => 2,
+            (PlatformKind::Zcu104, _) => 2,
+            (PlatformKind::Vc707, 32) => 4,
+            (PlatformKind::U55c, 32) => 8,
+            _ => crate::arch::HIDDEN, // full parallelism
+        }
+    }
+
+    /// Fmax degradation for the HLS outer-loop-unroll variant (Table I):
+    /// the 8x DSP blowup congests the Virtex-7 fabric from 250 to 166 MHz.
+    pub fn hls_unrolled_fmax(&self, fmt: QFormat) -> f64 {
+        self.hls_fmax(fmt) * (166.0 / 250.0)
+    }
+
+    /// Extra cycles the *HLS* accelerator pays per layer call on this
+    /// platform: the exported IP's AXI adapters re-arbitrate the weight
+    /// stream per gate-function invocation, which costs real cycles on
+    /// the MIG (VC707) and HBM (U55C) ports but almost nothing on the
+    /// ZCU104's PS-attached DDR4.  Fit to Table III FP-16 rows
+    /// (ZCU104 1022 / VC707 1576 / U55C 1770 total cycles for the same
+    /// RTL); the hand-written HDL design streams continuously and does
+    /// not pay this.
+    pub fn hls_layer_overhead_cycles(&self) -> u64 {
+        match self.kind {
+            PlatformKind::Vc707 => 110,
+            PlatformKind::Zcu104 => 0,
+            PlatformKind::U55c => 250,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{FP16, FP32, FP8};
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in PlatformKind::ALL {
+            assert_eq!(PlatformKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PlatformKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn fmax_orderings_match_paper() {
+        // Table III: ZCU104 clocks highest for HLS at every precision...
+        // except FP-32 where U55C's 362 beats 305 (speed-grade -2L-E).
+        for fmt in [FP16, FP8] {
+            let z = PlatformKind::Zcu104.platform().hls_fmax(fmt);
+            let v = PlatformKind::Vc707.platform().hls_fmax(fmt);
+            assert!(z > v, "{}", fmt.name);
+        }
+        // HLS fmax rises as precision shrinks (Table III rows).
+        for k in PlatformKind::ALL {
+            let p = k.platform();
+            assert!(p.hls_fmax(FP8) >= p.hls_fmax(FP16));
+            assert!(p.hls_fmax(FP16) >= p.hls_fmax(FP32));
+        }
+    }
+
+    #[test]
+    fn congestion_only_bites_wide_datapaths() {
+        let p = PlatformKind::U55c.platform();
+        assert_eq!(p.hdl_fmax(FP16, 15), p.hdl_base_fmax(FP16));
+        assert!(p.hdl_fmax(FP32, 8) < p.hdl_base_fmax(FP32));
+        // Fit point: U55C FP-32 P=8 lands near the paper's 150 MHz.
+        assert!((p.hdl_fmax(FP32, 8) - 150.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn zcu104_parallelism_cap() {
+        let p = PlatformKind::Zcu104.platform();
+        assert_eq!(p.max_hdl_parallelism(FP16), 2);
+        assert_eq!(PlatformKind::U55c.platform().max_hdl_parallelism(FP16), 15);
+        assert_eq!(PlatformKind::Vc707.platform().max_hdl_parallelism(FP32), 4);
+    }
+
+    #[test]
+    fn zcu104_has_fastest_io_path() {
+        let z = PlatformKind::Zcu104.platform().io_overhead_cycles;
+        assert!(z < PlatformKind::Vc707.platform().io_overhead_cycles);
+        assert!(z < PlatformKind::U55c.platform().io_overhead_cycles);
+    }
+}

@@ -1,0 +1,50 @@
+//! # hrd-lstm — Accelerating LSTM-based High-Rate Dynamic System Models
+//!
+//! Production reproduction of Kabir et al., FPL 2023, as a three-layer
+//! Rust + JAX + Pallas stack (see `DESIGN.md`):
+//!
+//! * **Layer 1/2 (build time)** — the 3-layer/15-unit LSTM surrogate of the
+//!   DROPBEAR Euler-Bernoulli beam, authored in JAX with a fused Pallas cell
+//!   kernel, trained once and AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — the runtime system: a PJRT executor for the
+//!   AOT artifacts ([`runtime`]), a real-time structural-health-monitoring
+//!   coordinator ([`coordinator`]), the FPGA accelerator simulator that
+//!   reproduces the paper's HLS/HDL design-space study ([`fpga`]), the beam
+//!   physics substrate ([`beam`]), a from-scratch LSTM engine + trainer
+//!   ([`lstm`]), and the evaluation harness regenerating every table and
+//!   figure in the paper ([`eval`]).
+//!
+//! The environment is fully offline, so the crate also carries its own
+//! infrastructure substrates: [`util`] (RNG/stats/JSON), [`config`]
+//! (TOML-subset), [`bench`] (criterion-like harness) and [`testutil`]
+//! (property testing).
+
+pub mod beam;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod estimator;
+pub mod eval;
+pub mod fixed;
+pub mod fpga;
+pub mod lstm;
+pub mod runtime;
+pub mod testutil;
+pub mod util;
+
+/// The paper's model architecture constants (paper §II).
+pub mod arch {
+    /// Input features per model step (acceleration sub-samples).
+    pub const INPUT_SIZE: usize = 16;
+    /// LSTM units per layer.
+    pub const HIDDEN: usize = 15;
+    /// Stacked LSTM layers.
+    pub const LAYERS: usize = 3;
+    /// Output dimension (roller position estimate).
+    pub const OUTPUT: usize = 1;
+    /// RTOS output interval from the paper (500 us).
+    pub const RTOS_PERIOD_US: f64 = 500.0;
+    /// Sensor sampling rate implied by 16 samples per 500 us.
+    pub const SENSOR_RATE_HZ: f64 = 32_000.0;
+}

@@ -1,0 +1,218 @@
+//! From-scratch float LSTM cell and stacked-network inference — the
+//! software baseline the paper ran on the cRIO RTOS / ARM A53, and the
+//! numeric reference the PJRT and FPGA paths are checked against.
+
+use super::params::{LayerParams, LstmParams};
+use crate::fixed::activation::sigmoid_exact;
+
+/// Per-layer recurrent state.
+#[derive(Debug, Clone)]
+pub struct LayerState {
+    pub h: Vec<f64>,
+    pub c: Vec<f64>,
+}
+
+impl LayerState {
+    pub fn zeros(hidden: usize) -> Self {
+        Self { h: vec![0.0; hidden], c: vec![0.0; hidden] }
+    }
+
+    pub fn reset(&mut self) {
+        self.h.fill(0.0);
+        self.c.fill(0.0);
+    }
+}
+
+/// Scratch buffers so the hot loop is allocation-free.
+#[derive(Debug, Clone)]
+pub struct CellScratch {
+    pub xc: Vec<f64>,
+    pub z: Vec<f64>,
+}
+
+impl CellScratch {
+    pub fn for_layer(layer: &LayerParams) -> Self {
+        Self { xc: vec![0.0; layer.concat_len()], z: vec![0.0; 4 * layer.hidden] }
+    }
+}
+
+/// One float cell step: `x` has `layer.input_size` elements; updates
+/// `state` in place.
+pub fn cell_step(layer: &LayerParams, x: &[f64], state: &mut LayerState, scratch: &mut CellScratch) {
+    let hidden = layer.hidden;
+    debug_assert_eq!(x.len(), layer.input_size);
+    // xc = [x ; h]
+    scratch.xc[..x.len()].copy_from_slice(x);
+    scratch.xc[x.len()..].copy_from_slice(&state.h);
+    // z = xc @ W + b  (row-major W: accumulate row contributions).
+    scratch.z.copy_from_slice(&layer.b);
+    let cols = 4 * hidden;
+    for (row, &xv) in scratch.xc.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &layer.w[row * cols..(row + 1) * cols];
+        for (zj, wj) in scratch.z.iter_mut().zip(wrow) {
+            *zj += xv * wj;
+        }
+    }
+    // Gates [i, f, g, o] + state update.
+    for u in 0..hidden {
+        let i = sigmoid_exact(scratch.z[u]);
+        let f = sigmoid_exact(scratch.z[hidden + u]);
+        let g = scratch.z[2 * hidden + u].tanh();
+        let o = sigmoid_exact(scratch.z[3 * hidden + u]);
+        let c_new = f * state.c[u] + i * g;
+        state.c[u] = c_new;
+        state.h[u] = o * c_new.tanh();
+    }
+}
+
+/// Stacked-LSTM + dense-head inference engine with resident state.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub params: LstmParams,
+    states: Vec<LayerState>,
+    scratch: Vec<CellScratch>,
+    xbuf: Vec<f64>,
+}
+
+impl Network {
+    pub fn new(params: LstmParams) -> Self {
+        let states = params.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect();
+        let scratch = params.layers.iter().map(CellScratch::for_layer).collect();
+        let input = params.input_size();
+        Self { params, states, scratch, xbuf: vec![0.0; input] }
+    }
+
+    pub fn reset(&mut self) {
+        for s in &mut self.states {
+            s.reset();
+        }
+    }
+
+    pub fn states(&self) -> &[LayerState] {
+        &self.states
+    }
+
+    /// One step on a *normalized* feature vector; returns the normalized
+    /// model output (before denormalization).
+    pub fn step_normalized(&mut self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.params.input_size());
+        let n_layers = self.params.layers.len();
+        for il in 0..n_layers {
+            // Split borrows: previous layer's h is the input for layer il.
+            let (prev, rest) = self.states.split_at_mut(il);
+            let state = &mut rest[0];
+            let layer = &self.params.layers[il];
+            let scratch = &mut self.scratch[il];
+            if il == 0 {
+                cell_step(layer, x, state, scratch);
+            } else {
+                // Copy input h to scratch.xc prefix inside cell_step via a
+                // temporary borrow of the previous state's h.
+                let xin = &prev[il - 1].h;
+                cell_step(layer, xin, state, scratch);
+            }
+        }
+        let top = &self.states[n_layers - 1].h;
+        let mut y = self.params.dense_b[0];
+        for (hv, wv) in top.iter().zip(&self.params.dense_w) {
+            y += hv * wv;
+        }
+        y
+    }
+
+    /// Full sensor-to-estimate step: raw acceleration window in, roller
+    /// position estimate (metres) out.  Allocation-free (hot path).
+    pub fn infer_window(&mut self, window: &[f32]) -> f64 {
+        let norm = self.params.norm;
+        for (dst, &v) in self.xbuf.iter_mut().zip(window) {
+            *dst = norm.normalize_x(v as f64);
+        }
+        let x = std::mem::take(&mut self.xbuf);
+        let y = self.step_normalized(&x);
+        self.xbuf = x;
+        norm.denormalize_y(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::params::Normalization;
+
+    fn tiny() -> LstmParams {
+        LstmParams::init(4, 3, 2, 1, 7)
+    }
+
+    #[test]
+    fn zero_weights_give_bias_output() {
+        let mut p = LstmParams::init(4, 3, 1, 1, 0);
+        for layer in &mut p.layers {
+            layer.w.fill(0.0);
+            layer.b.fill(0.0);
+        }
+        p.dense_w.fill(0.0);
+        p.dense_b[0] = 0.25;
+        let mut net = Network::new(p);
+        assert_eq!(net.step_normalized(&[1.0, 2.0, 3.0, 4.0]), 0.25);
+    }
+
+    #[test]
+    fn state_evolves_and_reset_restores() {
+        let mut net = Network::new(tiny());
+        let x = [0.5, -0.2, 0.1, 0.9];
+        let y1 = net.step_normalized(&x);
+        let y2 = net.step_normalized(&x);
+        assert_ne!(y1, y2, "state must carry");
+        net.reset();
+        let y1b = net.step_normalized(&x);
+        assert_eq!(y1, y1b, "reset must restore the initial state");
+    }
+
+    #[test]
+    fn hidden_state_bounded() {
+        let mut net = Network::new(tiny());
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..500 {
+            let x: Vec<f64> = (0..4).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            net.step_normalized(&x);
+            for s in net.states() {
+                assert!(s.h.iter().all(|v| v.abs() < 1.0));
+                assert!(s.c.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn infer_window_applies_normalization() {
+        let mut p = tiny();
+        p.norm = Normalization { x_mean: 1.0, x_std: 2.0, y_scale: 10.0, y_offset: 5.0 };
+        // With x == mean the normalized input is zero for every sample.
+        let mut a = Network::new(p.clone());
+        let w = vec![1.0f32; 4];
+        let ya = a.infer_window(&w);
+        let mut b = Network::new(p);
+        let yb = b.step_normalized(&[0.0; 4]);
+        assert!((ya - (yb * 10.0 + 5.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forget_gate_bias_slows_decay() {
+        // With forget bias=1 (sigmoid ~ 0.73) cell state decays slowly.
+        let p = tiny();
+        let mut net = Network::new(p);
+        net.step_normalized(&[1.0, 1.0, 1.0, 1.0]);
+        let c_after_1 = net.states()[0].c.clone();
+        for _ in 0..3 {
+            net.step_normalized(&[0.0; 4]);
+        }
+        let c_after_4 = &net.states()[0].c;
+        for (a, b) in c_after_1.iter().zip(c_after_4) {
+            if a.abs() > 1e-6 {
+                assert!(b.abs() < a.abs() * 1.2 + 1e-6); // bounded growth
+            }
+        }
+    }
+}

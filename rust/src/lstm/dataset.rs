@@ -1,0 +1,164 @@
+//! Training/evaluation datasets generated from the virtual DROPBEAR
+//! testbed ([`crate::beam::Testbed`]) — the Rust mirror of
+//! `python/compile/data.py`.  Sequences are (normalized feature window,
+//! normalized roller target) pairs at model rate.
+
+use crate::arch::INPUT_SIZE;
+use crate::beam::{ProfileKind, Testbed};
+use crate::lstm::params::Normalization;
+
+/// One supervised sequence: `x[t]` is a normalized 16-feature window,
+/// `y[t]` the normalized roller position at that step.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub x: Vec<[f64; INPUT_SIZE]>,
+    pub y: Vec<f64>,
+}
+
+impl Sequence {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
+/// A set of sequences plus the normalization fitted on them.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub sequences: Vec<Sequence>,
+    pub norm: Normalization,
+}
+
+impl Dataset {
+    /// Generate `n_seq` sequences of `seq_len` model steps each, cycling
+    /// through the DROPBEAR roller profiles.  Normalization is fitted on
+    /// the raw data and then applied (mirrors `data.py::make_dataset`).
+    pub fn generate(n_seq: usize, seq_len: usize, seed: u64) -> Self {
+        let kinds = ProfileKind::ALL;
+        let mut raw: Vec<(Vec<[f64; INPUT_SIZE]>, Vec<f64>)> = Vec::with_capacity(n_seq);
+        for s in 0..n_seq {
+            let kind = kinds[s % kinds.len()];
+            let tb = Testbed::new(kind, seq_len, seed.wrapping_add(s as u64 * 977));
+            let mut xs = Vec::with_capacity(seq_len);
+            let mut ys = Vec::with_capacity(seq_len);
+            for w in tb {
+                let mut f = [0.0f64; INPUT_SIZE];
+                for (d, &v) in f.iter_mut().zip(&w.features) {
+                    *d = v as f64;
+                }
+                xs.push(f);
+                ys.push(w.roller_truth);
+            }
+            raw.push((xs, ys));
+        }
+        // Fit normalization: x zero-mean/unit-std over all samples, y
+        // affine to [0, 1] over the roller range.
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for (xs, _) in &raw {
+            for w in xs {
+                for &v in w {
+                    sum += v;
+                    count += 1;
+                }
+            }
+        }
+        let mean = sum / count.max(1) as f64;
+        let mut var = 0.0f64;
+        for (xs, _) in &raw {
+            for w in xs {
+                for &v in w {
+                    var += (v - mean) * (v - mean);
+                }
+            }
+        }
+        let std = (var / count.max(1) as f64).sqrt().max(1e-9);
+        let (ylo, yhi) = (crate::beam::ROLLER_MIN, crate::beam::ROLLER_MAX);
+        let norm = Normalization {
+            x_mean: mean,
+            x_std: std,
+            y_scale: yhi - ylo,
+            y_offset: ylo,
+        };
+        let sequences = raw
+            .into_iter()
+            .map(|(xs, ys)| Sequence {
+                x: xs
+                    .into_iter()
+                    .map(|w| {
+                        let mut o = [0.0f64; INPUT_SIZE];
+                        for (d, v) in o.iter_mut().zip(w) {
+                            *d = norm.normalize_x(v);
+                        }
+                        o
+                    })
+                    .collect(),
+                y: ys.into_iter().map(|v| norm.normalize_y(v)).collect(),
+            })
+            .collect();
+        Self { sequences, norm }
+    }
+
+    /// Split off the last `frac` of sequences as a validation set.
+    pub fn split(mut self, frac: f64) -> (Dataset, Dataset) {
+        let n = self.sequences.len();
+        let n_val = ((n as f64 * frac).round() as usize).clamp(1, n.saturating_sub(1).max(1));
+        let val = self.sequences.split_off(n - n_val);
+        let norm = self.norm;
+        (self, Dataset { sequences: val, norm })
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.sequences.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_normalized_data() {
+        let ds = Dataset::generate(3, 60, 1);
+        assert_eq!(ds.sequences.len(), 3);
+        assert_eq!(ds.n_samples(), 180);
+        // x roughly standardized.
+        let mut sum = 0.0;
+        let mut n = 0;
+        for s in &ds.sequences {
+            for w in &s.x {
+                for &v in w {
+                    sum += v;
+                    n += 1;
+                }
+            }
+        }
+        assert!((sum / n as f64).abs() < 0.2, "mean {}", sum / n as f64);
+        // y in [0, 1].
+        for s in &ds.sequences {
+            for &y in &s.y {
+                assert!((-0.01..=1.01).contains(&y), "y {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = Dataset::generate(6, 20, 2);
+        let (tr, va) = ds.split(0.33);
+        assert_eq!(tr.sequences.len() + va.sequences.len(), 6);
+        assert!(!va.sequences.is_empty());
+        assert_eq!(tr.norm, va.norm);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Dataset::generate(2, 30, 7);
+        let b = Dataset::generate(2, 30, 7);
+        assert_eq!(a.sequences[0].x, b.sequences[0].x);
+        assert_eq!(a.norm, b.norm);
+    }
+}

@@ -1,0 +1,22 @@
+//! From-scratch LSTM engine: float inference ([`cell`]), fixed-point
+//! inference matching the FPGA datapath ([`quantized`]), parameter
+//! container + `weights.bin` interchange ([`params`]), BPTT+Adam trainer
+//! ([`train`]) and the Fig.-1 architecture sweep ([`sweep`]).
+//!
+//! The *production* weights come from the JAX path (`python/compile/train.py`
+//! → `artifacts/weights.bin`); this trainer exists so the paper's model-
+//! selection study (Fig. 1) is reproducible without Python on the machine.
+
+pub mod cell;
+pub mod dataset;
+pub mod params;
+pub mod quantized;
+pub mod sweep;
+pub mod train;
+
+pub use cell::{cell_step, LayerState, Network};
+pub use dataset::Dataset;
+pub use params::{LayerParams, LstmParams, Normalization};
+pub use quantized::QuantizedNetwork;
+pub use sweep::{sweep_architectures, SweepPoint};
+pub use train::{train, TrainConfig, TrainReport};

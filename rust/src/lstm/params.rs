@@ -1,0 +1,347 @@
+//! LSTM parameter container + the `weights.bin` interchange format
+//! (bit-compatible with `python/compile/weights_io.py`, layout documented
+//! there).  Weights are stored as f64 internally (the engines and the
+//! trainer run f64) but serialize as little-endian f32.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+const MAGIC: &[u8; 4] = b"HRDW";
+const VERSION: u32 = 1;
+
+/// Input/output normalisation constants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normalization {
+    pub x_mean: f64,
+    pub x_std: f64,
+    pub y_scale: f64,
+    pub y_offset: f64,
+}
+
+impl Default for Normalization {
+    fn default() -> Self {
+        Self { x_mean: 0.0, x_std: 1.0, y_scale: 1.0, y_offset: 0.0 }
+    }
+}
+
+impl Normalization {
+    #[inline]
+    pub fn normalize_x(&self, x: f64) -> f64 {
+        (x - self.x_mean) / self.x_std
+    }
+
+    #[inline]
+    pub fn denormalize_y(&self, y: f64) -> f64 {
+        y * self.y_scale + self.y_offset
+    }
+
+    #[inline]
+    pub fn normalize_y(&self, y: f64) -> f64 {
+        (y - self.y_offset) / self.y_scale
+    }
+}
+
+/// One LSTM layer: fused gate weights `w[(I+H) x 4H]` (row-major, input
+/// rows first then recurrent rows; gate order [i, f, g, o]) and bias
+/// `b[4H]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParams {
+    pub input_size: usize,
+    pub hidden: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+impl LayerParams {
+    pub fn zeros(input_size: usize, hidden: usize) -> Self {
+        Self {
+            input_size,
+            hidden,
+            w: vec![0.0; (input_size + hidden) * 4 * hidden],
+            b: vec![0.0; 4 * hidden],
+        }
+    }
+
+    /// Glorot-uniform init with forget bias = 1 (matches python init).
+    pub fn glorot(input_size: usize, hidden: usize, rng: &mut Rng) -> Self {
+        let mut p = Self::zeros(input_size, hidden);
+        let fan_in = input_size + hidden;
+        let limit = (6.0 / (fan_in + 4 * hidden) as f64).sqrt();
+        for w in &mut p.w {
+            *w = rng.uniform(-limit, limit);
+        }
+        for j in hidden..2 * hidden {
+            p.b[j] = 1.0;
+        }
+        p
+    }
+
+    #[inline]
+    pub fn concat_len(&self) -> usize {
+        self.input_size + self.hidden
+    }
+
+    /// w[(row, col)] with row in 0..(I+H), col in 0..4H.
+    #[inline]
+    pub fn w_at(&self, row: usize, col: usize) -> f64 {
+        self.w[row * 4 * self.hidden + col]
+    }
+}
+
+/// The whole model: stacked layers + dense head + normalisation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LstmParams {
+    pub layers: Vec<LayerParams>,
+    pub dense_w: Vec<f64>, // [hidden x out], row-major
+    pub dense_b: Vec<f64>, // [out]
+    pub out: usize,
+    pub norm: Normalization,
+}
+
+impl LstmParams {
+    pub fn input_size(&self) -> usize {
+        self.layers[0].input_size
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.layers[0].hidden
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum::<usize>()
+            + self.dense_w.len()
+            + self.dense_b.len()
+    }
+
+    /// Random model of the given architecture (for tests and the sweep).
+    pub fn init(input_size: usize, hidden: usize, n_layers: usize, out: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut isz = input_size;
+        for _ in 0..n_layers {
+            layers.push(LayerParams::glorot(isz, hidden, &mut rng));
+            isz = hidden;
+        }
+        let limit = (6.0 / (hidden + out) as f64).sqrt();
+        let dense_w = (0..hidden * out).map(|_| rng.uniform(-limit, limit)).collect();
+        Self { layers, dense_w, dense_b: vec![0.0; out], out, norm: Normalization::default() }
+    }
+
+    /// Quantize every parameter to the given fixed-point format.
+    pub fn quantized(&self, fmt: crate::fixed::QFormat) -> Self {
+        let mut p = self.clone();
+        for layer in &mut p.layers {
+            fmt.quantize_slice(&mut layer.w);
+            fmt.quantize_slice(&mut layer.b);
+        }
+        fmt.quantize_slice(&mut p.dense_w);
+        fmt.quantize_slice(&mut p.dense_b);
+        p
+    }
+
+    // ---- binary IO --------------------------------------------------------
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut data)?;
+        Self::from_bytes(&data).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let mut r = Reader { data, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("bad magic {:?}", &magic[..4.min(magic.len())]);
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported version {version}");
+        }
+        let n_layers = r.u32()? as usize;
+        let input_size = r.u32()? as usize;
+        let hidden = r.u32()? as usize;
+        let out = r.u32()? as usize;
+        if n_layers == 0 || hidden == 0 || n_layers > 64 || hidden > 4096 {
+            bail!("implausible header: layers={n_layers} hidden={hidden}");
+        }
+        let norm = Normalization {
+            x_mean: r.f32()? as f64,
+            x_std: r.f32()? as f64,
+            y_scale: r.f32()? as f64,
+            y_offset: r.f32()? as f64,
+        };
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut isz = input_size;
+        for _ in 0..n_layers {
+            let w = r.f32_vec((isz + hidden) * 4 * hidden)?;
+            let b = r.f32_vec(4 * hidden)?;
+            layers.push(LayerParams { input_size: isz, hidden, w, b });
+            isz = hidden;
+        }
+        let dense_w = r.f32_vec(hidden * out)?;
+        let dense_b = r.f32_vec(out)?;
+        if r.pos != data.len() {
+            bail!("trailing bytes: consumed {} of {}", r.pos, data.len());
+        }
+        Ok(Self { layers, dense_w, dense_b, out, norm })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        for v in [
+            VERSION,
+            self.n_layers() as u32,
+            self.input_size() as u32,
+            self.hidden() as u32,
+            self.out as u32,
+        ] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for v in [self.norm.x_mean, self.norm.x_std, self.norm.y_scale, self.norm.y_offset] {
+            f.write_all(&(v as f32).to_le_bytes())?;
+        }
+        for layer in &self.layers {
+            write_f32s(&mut f, &layer.w)?;
+            write_f32s(&mut f, &layer.b)?;
+        }
+        write_f32s(&mut f, &self.dense_w)?;
+        write_f32s(&mut f, &self.dense_b)?;
+        Ok(())
+    }
+}
+
+fn write_f32s(f: &mut impl Write, xs: &[f64]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&(x as f32).to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            bail!("truncated file at offset {}", self.pos);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_params() -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, 42)
+    }
+
+    #[test]
+    fn param_count_matches_paper_architecture() {
+        // 1920 + 1860 + 1860 + 16 = 5656 (same as python test).
+        assert_eq!(paper_params().param_count(), 5656);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = paper_params();
+        let path = std::env::temp_dir().join("hrd_params_roundtrip.bin");
+        p.save(&path).unwrap();
+        let q = LstmParams::load(&path).unwrap();
+        assert_eq!(p.n_layers(), q.n_layers());
+        assert_eq!(p.hidden(), q.hidden());
+        // f64 -> f32 -> f64 roundtrip: compare at f32 precision.
+        for (a, b) in p.layers[0].w.iter().zip(&q.layers[0].w) {
+            assert_eq!(*a as f32, *b as f32);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = LstmParams::from_bytes(b"NOPE____________").unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = paper_params();
+        let path = std::env::temp_dir().join("hrd_params_trunc.bin");
+        p.save(&path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(LstmParams::from_bytes(&data[..data.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let p = paper_params();
+        let path = std::env::temp_dir().join("hrd_params_trail.bin");
+        p.save(&path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        data.extend_from_slice(&[0, 0, 0, 0]);
+        let err = LstmParams::from_bytes(&data).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn forget_bias_initialised() {
+        let p = paper_params();
+        for layer in &p.layers {
+            let h = layer.hidden;
+            assert!(layer.b[h..2 * h].iter().all(|&b| b == 1.0));
+            assert!(layer.b[..h].iter().all(|&b| b == 0.0));
+        }
+    }
+
+    #[test]
+    fn quantized_params_are_quantized() {
+        use crate::fixed::FP16;
+        let q = paper_params().quantized(FP16);
+        for &w in &q.layers[0].w {
+            assert_eq!(w, FP16.quantize(w));
+        }
+    }
+
+    #[test]
+    fn normalization_roundtrip() {
+        let n = Normalization { x_mean: 0.5, x_std: 2.0, y_scale: 0.3, y_offset: 0.05 };
+        let y = 0.123;
+        assert!((n.normalize_y(n.denormalize_y(y)) - y).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Fixed-point LSTM inference — the exact datapath the FPGA accelerator
+//! implements (and the `fpga::engine` cycle simulator drives *this same
+//! code* for its values, so bit-exactness holds by construction).
+//!
+//! Quantization schedule (mirrors `kernels/ref.py::lstm_cell_ref_quant`):
+//!   1. operands (weights, inputs, states) are pre-quantized;
+//!   2. each gate MAC uses a wide (double-width) accumulator, quantized
+//!      once at the end — the paper's MVO truncation point;
+//!   3. activations go through the LUT (output quantized);
+//!   4. every EVO multiply/add result is quantized.
+//!
+//! The only deliberate divergence from the python fake-quant reference is
+//! the activation: hardware uses the piecewise-linear LUT
+//! ([`crate::fixed::ActLut`]), python uses exact sigmoid/tanh + quantize.
+//! The difference is bounded by a few ulp and covered by tolerance in the
+//! cross-checks.
+
+use super::cell::LayerState;
+use super::params::{LayerParams, LstmParams};
+use crate::fixed::{ActLut, QFormat};
+
+/// Scratch for one quantized layer step.
+#[derive(Debug, Clone)]
+pub struct QScratch {
+    pub xc: Vec<f64>,
+    pub z: Vec<f64>,
+}
+
+impl QScratch {
+    pub fn for_layer(layer: &LayerParams) -> Self {
+        Self { xc: vec![0.0; layer.concat_len()], z: vec![0.0; 4 * layer.hidden] }
+    }
+}
+
+/// One quantized cell step.  `x` must already be quantized to `fmt`.
+pub fn quantized_cell_step(
+    layer: &LayerParams,
+    fmt: QFormat,
+    lut: &ActLut,
+    x: &[f64],
+    state: &mut LayerState,
+    scratch: &mut QScratch,
+) {
+    let hidden = layer.hidden;
+    debug_assert_eq!(x.len(), layer.input_size);
+    scratch.xc[..x.len()].copy_from_slice(x);
+    scratch.xc[x.len()..].copy_from_slice(&state.h);
+    let cols = 4 * hidden;
+    // MVO: wide accumulate, quantize once per gate output.  Accumulate
+    // row-major (sequential weight reads) — the f64 accumulator is wide
+    // enough that the summation order does not change the quantized
+    // result for these operand ranges (perf pass, EXPERIMENTS.md §Perf).
+    scratch.z.copy_from_slice(&layer.b);
+    for (row, &xv) in scratch.xc.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &layer.w[row * cols..(row + 1) * cols];
+        for (zj, wj) in scratch.z.iter_mut().zip(wrow) {
+            *zj += xv * wj;
+        }
+    }
+    for zj in scratch.z.iter_mut() {
+        *zj = fmt.quantize(*zj);
+    }
+    // EVO: LUT activations + quantized elementwise update.
+    for u in 0..hidden {
+        let i = lut.sigmoid(scratch.z[u]);
+        let f = lut.sigmoid(scratch.z[hidden + u]);
+        let g = lut.tanh(scratch.z[2 * hidden + u]);
+        let o = lut.sigmoid(scratch.z[3 * hidden + u]);
+        let fc = fmt.quantize(f * state.c[u]);
+        let ig = fmt.quantize(i * g);
+        let c_new = fmt.quantize(fc + ig);
+        state.c[u] = c_new;
+        state.h[u] = fmt.quantize(o * lut.tanh(c_new));
+    }
+}
+
+/// Stacked quantized network with resident (quantized) state.
+#[derive(Debug, Clone)]
+pub struct QuantizedNetwork {
+    pub params: LstmParams,
+    pub fmt: QFormat,
+    lut: ActLut,
+    states: Vec<LayerState>,
+    scratch: Vec<QScratch>,
+    xbuf: Vec<f64>,
+}
+
+impl QuantizedNetwork {
+    /// `params` are quantized on construction (idempotent if already done).
+    pub fn new(params: &LstmParams, fmt: QFormat) -> Self {
+        let params = params.quantized(fmt);
+        let states = params.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect();
+        let scratch = params.layers.iter().map(QScratch::for_layer).collect();
+        let input = params.input_size();
+        Self { params, fmt, lut: ActLut::new(fmt), states, scratch, xbuf: vec![0.0; input] }
+    }
+
+    pub fn reset(&mut self) {
+        for s in &mut self.states {
+            s.reset();
+        }
+    }
+
+    pub fn states(&self) -> &[LayerState] {
+        &self.states
+    }
+
+    /// One step on a normalized feature vector (quantizes it first);
+    /// returns the quantized normalized output.
+    pub fn step_normalized(&mut self, x: &[f64]) -> f64 {
+        let n_layers = self.params.layers.len();
+        for (dst, &src) in self.xbuf.iter_mut().zip(x) {
+            *dst = self.fmt.quantize(src);
+        }
+        for il in 0..n_layers {
+            let (prev, rest) = self.states.split_at_mut(il);
+            let state = &mut rest[0];
+            let layer = &self.params.layers[il];
+            let scratch = &mut self.scratch[il];
+            if il == 0 {
+                quantized_cell_step(layer, self.fmt, &self.lut, &self.xbuf, state, scratch);
+            } else {
+                let xin = &prev[il - 1].h;
+                quantized_cell_step(layer, self.fmt, &self.lut, xin, state, scratch);
+            }
+        }
+        let top = &self.states[n_layers - 1].h;
+        let mut acc = self.params.dense_b[0];
+        for (hv, wv) in top.iter().zip(&self.params.dense_w) {
+            acc += hv * wv;
+        }
+        self.fmt.quantize(acc)
+    }
+
+    /// Raw acceleration window in, roller estimate (metres) out.
+    pub fn infer_window(&mut self, window: &[f32]) -> f64 {
+        let norm = self.params.norm;
+        let x: Vec<f64> = window.iter().map(|&v| norm.normalize_x(v as f64)).collect();
+        let y = self.step_normalized(&x);
+        norm.denormalize_y(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{FP16, FP32, FP8};
+    use crate::lstm::cell::Network;
+    use crate::lstm::params::LstmParams;
+
+    fn paper_params() -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, 11)
+    }
+
+    #[test]
+    fn outputs_are_quantized() {
+        let mut net = QuantizedNetwork::new(&paper_params(), FP16);
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..50 {
+            let x: Vec<f64> = (0..16).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let y = net.step_normalized(&x);
+            assert_eq!(y, FP16.quantize(y));
+            for s in net.states() {
+                for &h in &s.h {
+                    assert_eq!(h, FP16.quantize(h));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tracks_float_network_within_resolution() {
+        // Quantized output should stay near the float engine, with error
+        // scaling with the format resolution.
+        let p = paper_params();
+        let mut rng = crate::util::Rng::new(6);
+        let xs: Vec<Vec<f64>> =
+            (0..80).map(|_| (0..16).map(|_| rng.uniform(-1.5, 1.5)).collect()).collect();
+        for (fmt, tol) in [(FP32, 0.01), (FP16, 0.2), (FP8, 1.5)] {
+            let mut fnet = Network::new(p.clone());
+            let mut qnet = QuantizedNetwork::new(&p, fmt);
+            let mut max_err = 0.0f64;
+            for x in &xs {
+                let yf = fnet.step_normalized(x);
+                let yq = qnet.step_normalized(x);
+                max_err = max_err.max((yf - yq).abs());
+            }
+            assert!(max_err < tol, "{}: max err {max_err}", fmt.name);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = paper_params();
+        let x: Vec<f64> = (0..16).map(|i| 0.1 * i as f64 - 0.8).collect();
+        let mut a = QuantizedNetwork::new(&p, FP8);
+        let mut b = QuantizedNetwork::new(&p, FP8);
+        for _ in 0..20 {
+            assert_eq!(a.step_normalized(&x), b.step_normalized(&x));
+        }
+    }
+
+    #[test]
+    fn reset_restores_initial() {
+        let p = paper_params();
+        let mut net = QuantizedNetwork::new(&p, FP16);
+        let x = vec![0.3; 16];
+        let y0 = net.step_normalized(&x);
+        net.step_normalized(&x);
+        net.reset();
+        assert_eq!(net.step_normalized(&x), y0);
+    }
+
+    #[test]
+    fn quantization_is_idempotent_on_construction() {
+        let p = paper_params();
+        let q1 = QuantizedNetwork::new(&p, FP16);
+        let q2 = QuantizedNetwork::new(&q1.params, FP16);
+        assert_eq!(q1.params.layers[0].w, q2.params.layers[0].w);
+    }
+}

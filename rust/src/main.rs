@@ -1,0 +1,12 @@
+//! `hrd` — leader binary for the high-rate dynamic monitoring system.
+//! See `hrd help` (or [`hrd_lstm::cli::USAGE`]) for the subcommands.
+
+fn main() {
+    match hrd_lstm::cli::run() {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT execution of the AOT artifacts: load HLO text, compile once, then
+//! run single steps (resident recurrent state) or chunked sequences from
+//! the Rust hot path.  Python is never involved here.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::arch::{HIDDEN, INPUT_SIZE, LAYERS};
+use crate::lstm::Normalization;
+
+use super::manifest::Manifest;
+
+std::thread_local! {
+    /// One PJRT CPU client per thread (the xla crate's client is `Rc`-based
+    /// and not `Send`; the coordinator keeps all PJRT work on one thread).
+    static CLIENT: once_cell::unsync::OnceCell<xla::PjRtClient> =
+        const { once_cell::unsync::OnceCell::new() };
+}
+
+/// Run `f` with this thread's shared PJRT CPU client.
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> Result<R>) -> Result<R> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+            let _ = cell.set(client);
+        }
+        f(cell.get().expect("client initialized above"))
+    })
+}
+
+/// Compile one HLO-text artifact into a loaded executable.
+pub fn compile_artifact(path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    with_client(|client| {
+        client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+    })
+}
+
+/// A compiled one-step executable with resident recurrent state:
+/// `(x f32[1,16], h f32[3,1,15], c f32[3,1,15]) -> (y, h', c')`.
+///
+/// The hidden/cell state never leaves the runtime between steps — the
+/// caller marshals only the 16-float feature window, mirroring the
+/// FPGA design where state lives in on-chip BRAM.
+pub struct StepExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    h: xla::Literal,
+    c: xla::Literal,
+    norm: Normalization,
+    xbuf: Vec<f32>,
+    /// Persistent input literal, refilled in place each step (perf pass:
+    /// avoids a per-step allocate+reshape, EXPERIMENTS.md §Perf).
+    xlit: xla::Literal,
+    steps: u64,
+}
+
+fn zero_state() -> Result<xla::Literal> {
+    let zeros = vec![0f32; LAYERS * HIDDEN];
+    Ok(xla::Literal::vec1(&zeros).reshape(&[LAYERS as i64, 1, HIDDEN as i64])?)
+}
+
+impl StepExecutor {
+    /// Load + compile the step artifact for `precision` from `dir`.
+    pub fn load(dir: &Path, precision: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(&manifest, precision)
+    }
+
+    pub fn from_manifest(manifest: &Manifest, precision: &str) -> Result<Self> {
+        let art = manifest.step_artifact(precision)?;
+        let exe = compile_artifact(&art.file)?;
+        let params = crate::lstm::LstmParams::load(&manifest.weights_path())?;
+        let xlit = xla::Literal::vec1(&[0f32; INPUT_SIZE]).reshape(&[1, INPUT_SIZE as i64])?;
+        Ok(Self {
+            exe,
+            h: zero_state()?,
+            c: zero_state()?,
+            norm: params.norm,
+            xbuf: vec![0f32; INPUT_SIZE],
+            xlit,
+            steps: 0,
+        })
+    }
+
+    pub fn norm(&self) -> Normalization {
+        self.norm
+    }
+
+    pub fn steps_run(&self) -> u64 {
+        self.steps
+    }
+
+    /// Reset the resident state to zeros (new monitoring session).
+    pub fn reset(&mut self) -> Result<()> {
+        self.h = zero_state()?;
+        self.c = zero_state()?;
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// One inference step on an already *normalized* feature vector;
+    /// returns the normalized output (model units).
+    pub fn step_normalized(&mut self, x: &[f32]) -> Result<f64> {
+        anyhow::ensure!(x.len() == INPUT_SIZE, "expected {INPUT_SIZE} features");
+        self.xlit.copy_raw_from(x)?;
+        let mut result = {
+            let args = [&self.xlit, &self.h, &self.c];
+            self.exe.execute::<&xla::Literal>(&args)?
+        };
+        let out = result
+            .pop()
+            .and_then(|mut v| v.pop())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        let (y, h, c) = out.to_tuple3()?;
+        self.h = h;
+        self.c = c;
+        self.steps += 1;
+        Ok(y.to_vec::<f32>()?[0] as f64)
+    }
+
+    /// Full sensor-to-estimate step: raw acceleration window in, roller
+    /// position estimate (metres) out — same contract as
+    /// [`crate::lstm::Network::infer_window`].
+    pub fn infer_window(&mut self, window: &[f32]) -> Result<f64> {
+        for (dst, &v) in self.xbuf.iter_mut().zip(window) {
+            *dst = self.norm.normalize_x(v as f64) as f32;
+        }
+        let xs = std::mem::take(&mut self.xbuf);
+        let y = self.step_normalized(&xs);
+        self.xbuf = xs;
+        Ok(self.norm.denormalize_y(y?))
+    }
+}
+
+/// A compiled chunked-sequence executable:
+/// `(xs f32[CHUNK,1,16], h, c) -> (ys f32[CHUNK,1,1], h', c')` — the
+/// throughput-oriented path (amortizes dispatch over CHUNK steps).
+pub struct SeqExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    h: xla::Literal,
+    c: xla::Literal,
+    pub chunk: usize,
+    norm: Normalization,
+}
+
+impl SeqExecutor {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let art = manifest.seq_artifact()?;
+        let exe = compile_artifact(&art.file)?;
+        let params = crate::lstm::LstmParams::load(&manifest.weights_path())?;
+        Ok(Self {
+            exe,
+            h: zero_state()?,
+            c: zero_state()?,
+            chunk: manifest.seq_chunk,
+            norm: params.norm,
+        })
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        self.h = zero_state()?;
+        self.c = zero_state()?;
+        Ok(())
+    }
+
+    /// Run one chunk of normalized feature windows; `xs` is row-major
+    /// `[chunk][INPUT_SIZE]`.  Returns the normalized outputs.
+    pub fn run_chunk_normalized(&mut self, xs: &[f32]) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            xs.len() == self.chunk * INPUT_SIZE,
+            "expected {}x{INPUT_SIZE} features",
+            self.chunk
+        );
+        let xl = xla::Literal::vec1(xs).reshape(&[self.chunk as i64, 1, INPUT_SIZE as i64])?;
+        let mut result = {
+            let args = [&xl, &self.h, &self.c];
+            self.exe.execute::<&xla::Literal>(&args)?
+        };
+        let out = result
+            .pop()
+            .and_then(|mut v| v.pop())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        let (ys, h, c) = out.to_tuple3()?;
+        self.h = h;
+        self.c = c;
+        Ok(ys.to_vec::<f32>()?.into_iter().map(|v| v as f64).collect())
+    }
+
+    /// Raw windows in, denormalized estimates out.
+    pub fn infer_chunk(&mut self, windows: &[[f32; INPUT_SIZE]]) -> Result<Vec<f64>> {
+        let mut xs = Vec::with_capacity(self.chunk * INPUT_SIZE);
+        for w in windows {
+            for &v in w {
+                xs.push(self.norm.normalize_x(v as f64) as f32);
+            }
+        }
+        let ys = self.run_chunk_normalized(&xs)?;
+        Ok(ys.into_iter().map(|y| self.norm.denormalize_y(y)).collect())
+    }
+}

@@ -1,0 +1,142 @@
+//! `artifacts/manifest.json` — metadata emitted by `python/compile/aot.py`
+//! describing the AOT artifacts: file names, HLO op histograms, model
+//! architecture, normalization constants, L1 VMEM footprint and the
+//! build-time SNR per precision.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: PathBuf,
+    /// HLO op histogram (op name -> count) of the lowered module.
+    pub ops: BTreeMap<String, u64>,
+}
+
+impl ArtifactEntry {
+    pub fn total_ops(&self) -> u64 {
+        self.ops.values().sum()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub input_size: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub op_count_per_step: usize,
+    pub seq_chunk: usize,
+    pub l1_vmem_bytes: u64,
+    /// Build-time SNR (dB) per precision from the python eval.
+    pub snr_db: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let json = Json::parse_file(&path)
+            .with_context(|| format!("loading manifest {}", path.display()))?;
+        let get_num = |j: &Json, key: &str| -> Result<f64> {
+            j.get(key).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        let model = json.get("model").ok_or_else(|| anyhow!("manifest missing model"))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let mut ops = BTreeMap::new();
+            if let Some(op_obj) = entry.get("ops").and_then(|o| o.as_obj()) {
+                for (op, count) in op_obj {
+                    ops.insert(op.clone(), count.as_f64().unwrap_or(0.0) as u64);
+                }
+            }
+            artifacts.insert(name.clone(), ArtifactEntry { file: dir.join(file), ops });
+        }
+        let mut snr_db = BTreeMap::new();
+        if let Some(snr) = json.get("snr_db").and_then(|s| s.as_obj()) {
+            for (k, v) in snr {
+                if let Some(x) = v.as_f64() {
+                    snr_db.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            input_size: get_num(model, "input_size")? as usize,
+            hidden: get_num(model, "hidden")? as usize,
+            layers: get_num(model, "layers")? as usize,
+            op_count_per_step: get_num(model, "op_count_per_step")? as usize,
+            seq_chunk: get_num(&json, "seq_chunk")? as usize,
+            l1_vmem_bytes: get_num(&json, "l1_vmem_bytes")? as u64,
+            snr_db,
+        })
+    }
+
+    /// Artifact for a one-step executable at a precision ("fp32", ...).
+    pub fn step_artifact(&self, precision: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(&format!("step_{precision}"))
+            .ok_or_else(|| anyhow!("no step artifact for precision {precision}"))
+    }
+
+    /// The chunked-sequence artifact (fp32 only).
+    pub fn seq_artifact(&self) -> Result<&ArtifactEntry> {
+        self.artifacts.get("seq_fp32").ok_or_else(|| anyhow!("no seq artifact"))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.bin")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.input_size, crate::arch::INPUT_SIZE);
+        assert_eq!(m.hidden, crate::arch::HIDDEN);
+        assert_eq!(m.layers, crate::arch::LAYERS);
+        // Cross-check: python's op count must equal the Rust model's.
+        assert_eq!(m.op_count_per_step, crate::fpga::paper_op_count());
+        for prec in ["fp32", "fp16", "fp8"] {
+            let art = m.step_artifact(prec).unwrap();
+            assert!(art.file.exists(), "{}", art.file.display());
+            assert!(art.total_ops() > 0);
+        }
+        assert!(m.weights_path().exists());
+        // L1 kernel state fits VMEM by 3 orders of magnitude.
+        assert!(m.l1_vmem_bytes < 16 * 1024 * 1024);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/dir")).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) into the PJRT CPU client and executes them
+//! from the Rust hot path.  See `/opt/xla-example/load_hlo` and
+//! DESIGN.md §7 for the interchange contract (HLO text, weights baked as
+//! constants, tuple returns).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{compile_artifact, with_client, SeqExecutor, StepExecutor};
+pub use manifest::{ArtifactEntry, Manifest};

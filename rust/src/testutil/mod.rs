@@ -1,0 +1,151 @@
+//! Miniature property-testing framework (no proptest crate offline).
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use hrd_lstm::prop_assert;
+//! use hrd_lstm::testutil::PropRunner;
+//! PropRunner::new("add_commutes").cases(500).run(|rng| {
+//!     let a = rng.uniform(-1.0, 1.0);
+//!     let b = rng.uniform(-1.0, 1.0);
+//!     prop_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Failures report the case index and reproduction seed; set
+//! `HRD_PROP_SEED` to replay a specific seed, `HRD_PROP_CASES` to scale
+//! the case count globally.
+
+use crate::util::Rng;
+
+/// Returned by property closures.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property closure (formats into the failure report).
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!("assertion failed: {} ({})", stringify!($cond), format!($($fmt)+)));
+        }
+    };
+}
+
+/// Assert two floats are within `tol`.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if !((a - b).abs() <= $tol) {
+            return Err(format!(
+                "{} = {a} not within {} of {} = {b}",
+                stringify!($a),
+                $tol,
+                stringify!($b)
+            ));
+        }
+    }};
+}
+
+/// Deterministic, seed-reporting property runner.
+pub struct PropRunner {
+    name: &'static str,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl PropRunner {
+    pub fn new(name: &'static str) -> Self {
+        Self { name, cases: 256, base_seed: 0x5EED_0000 }
+    }
+
+    /// Number of random cases to run (scaled by `HRD_PROP_CASES` if set).
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Run the property; panics with a reproducible report on failure.
+    pub fn run<F>(self, mut prop: F)
+    where
+        F: FnMut(&mut Rng) -> PropResult,
+    {
+        if let Ok(s) = std::env::var("HRD_PROP_SEED") {
+            let seed: u64 = s.parse().expect("HRD_PROP_SEED must be u64");
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("[{}] failed with HRD_PROP_SEED={}: {}", self.name, seed, msg);
+            }
+            return;
+        }
+        let scale: f64 = std::env::var("HRD_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        let n = ((self.cases as f64 * scale) as usize).max(1);
+        for case in 0..n {
+            let seed = self.base_seed.wrapping_add(case as u64 * 0x9E37_79B9);
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "[{}] case {}/{} failed: {}\n  reproduce with HRD_PROP_SEED={}",
+                    self.name, case, n, msg, seed
+                );
+            }
+        }
+    }
+}
+
+/// Relative-or-absolute closeness check used across integration tests.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        PropRunner::new("sum_commutes").cases(64).run(|rng| {
+            let a = rng.uniform(-5.0, 5.0);
+            let b = rng.uniform(-5.0, 5.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-15);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with HRD_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        PropRunner::new("always_fails").cases(4).run(|_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_behaviour() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-6));
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+}

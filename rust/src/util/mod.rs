@@ -1,0 +1,35 @@
+//! Infrastructure substrate: deterministic RNG, descriptive statistics and a
+//! dependency-free JSON reader/writer (the environment has no serde).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Format a duration in engineering units (ns/us/ms/s).
+pub fn fmt_duration_s(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} us", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.2} s", seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration_s(5e-9), "5.0 ns");
+        assert_eq!(fmt_duration_s(1.42e-6), "1.42 us");
+        assert_eq!(fmt_duration_s(2.5e-3), "2.50 ms");
+        assert_eq!(fmt_duration_s(3.0), "3.00 s");
+    }
+}

@@ -1,0 +1,180 @@
+//! Descriptive statistics used by the bench harness, metrics and evaluation.
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100]. Input need not be sorted.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Signal-to-noise ratio in dB, the paper's Fig. 1 accuracy metric:
+/// `SNR_dB = 10 log10( var(truth) / var(truth - estimate) )`.
+pub fn snr_db(truth: &[f64], estimate: &[f64]) -> f64 {
+    assert_eq!(truth.len(), estimate.len());
+    let err: Vec<f64> = truth.iter().zip(estimate).map(|(t, e)| t - e).collect();
+    let num = variance(truth);
+    let den = variance(&err).max(1e-30);
+    10.0 * (num / den).log10()
+}
+
+/// Time Response Assurance Criterion — a second fidelity metric common in
+/// the structural-dynamics literature (cross-check for SNR).
+pub fn trac(truth: &[f64], estimate: &[f64]) -> f64 {
+    assert_eq!(truth.len(), estimate.len());
+    let dot: f64 = truth.iter().zip(estimate).map(|(a, b)| a * b).sum();
+    let na: f64 = truth.iter().map(|a| a * a).sum();
+    let nb: f64 = estimate.iter().map(|b| b * b).sum();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot * dot) / (na * nb)
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside are clamped into the
+/// edge bins. Used for latency distributions in coordinator metrics.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Self { lo, hi, bins: vec![0; n_bins], count: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = (idx.max(0.0) as usize).min(n - 1);
+        self.bins[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Approximate quantile from bin midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        for (i, &b) in self.bins.iter().enumerate() {
+            acc += b;
+            if acc >= target.max(1) {
+                return self.lo + (i as f64 + 0.5) * w;
+            }
+        }
+        self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn snr_perfect_and_noisy() {
+        let t: Vec<f64> = (0..500).map(|i| (i as f64 * 0.1).sin()).collect();
+        assert!(snr_db(&t, &t) > 100.0);
+        let zeros = vec![0.0; 500];
+        assert!(snr_db(&t, &zeros).abs() < 0.5);
+        let half: Vec<f64> = t.iter().map(|x| x * 0.5).collect();
+        let snr = snr_db(&t, &half);
+        assert!((snr - 6.02).abs() < 0.2, "snr {snr}"); // err = t/2 -> 6 dB
+    }
+
+    #[test]
+    fn trac_bounds() {
+        let t: Vec<f64> = (0..100).map(|i| (i as f64 * 0.3).cos()).collect();
+        assert!((trac(&t, &t) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = t.iter().map(|x| -x).collect();
+        assert!((trac(&t, &neg) - 1.0).abs() < 1e-12); // sign-insensitive
+        assert_eq!(trac(&t, &vec![0.0; 100]), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for i in 0..1000 {
+            h.record((i % 100) as f64);
+        }
+        assert_eq!(h.count, 1000);
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 50.0).abs() < 2.0, "p50 {p50}");
+        h.record(-5.0);
+        h.record(1e9);
+        assert_eq!(h.count, 1002); // clamped, not dropped
+    }
+}

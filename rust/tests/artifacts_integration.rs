@@ -1,0 +1,135 @@
+//! Integration tests over the AOT artifacts: the PJRT path (Layer 1+2
+//! compiled from JAX/Pallas) must numerically agree with the from-scratch
+//! Rust engines on the same weights.  Skipped politely when artifacts/
+//! has not been built (`make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::fixed::{FP16, FP8};
+use hrd_lstm::lstm::{LstmParams, Network, QuantizedNetwork};
+use hrd_lstm::runtime::{Manifest, SeqExecutor, StepExecutor};
+use hrd_lstm::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/ not built — run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn random_windows(n: usize, seed: u64) -> Vec<[f32; INPUT_SIZE]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut w = [0f32; INPUT_SIZE];
+            for v in &mut w {
+                *v = rng.uniform(-120.0, 120.0) as f32;
+            }
+            w
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_fp32_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let params = LstmParams::load(&dir.join("weights.bin")).unwrap();
+    let mut exe = StepExecutor::load(&dir, "fp32").unwrap();
+    let mut native = Network::new(params);
+    let mut max_err = 0.0f64;
+    for w in random_windows(100, 5) {
+        let a = exe.infer_window(&w).unwrap();
+        let b = native.infer_window(&w);
+        max_err = max_err.max((a - b).abs());
+    }
+    // f32 HLO vs f64 Rust over a 0.3 m output range.
+    assert!(max_err < 2e-4, "max err {max_err}");
+}
+
+#[test]
+fn pjrt_quantized_artifacts_match_rust_fixed_point() {
+    let Some(dir) = artifacts_dir() else { return };
+    let params = LstmParams::load(&dir.join("weights.bin")).unwrap();
+    // The python fake-quant kernel uses exact sigmoid/tanh; the Rust
+    // engine uses the hardware LUT — agreement is within a few LSBs.
+    for (prec, fmt, tol) in [("fp16", FP16, 0.05), ("fp8", FP8, 0.30)] {
+        let mut exe = StepExecutor::load(&dir, prec).unwrap();
+        let mut qnet = QuantizedNetwork::new(&params, fmt);
+        let mut max_err = 0.0f64;
+        for w in random_windows(60, 9) {
+            let a = exe.infer_window(&w).unwrap();
+            let b = qnet.infer_window(&w);
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < tol, "{prec}: max err {max_err}");
+    }
+}
+
+#[test]
+fn seq_executor_matches_step_executor() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut step = StepExecutor::load(&dir, "fp32").unwrap();
+    let mut seq = SeqExecutor::load(&dir).unwrap();
+    let windows = random_windows(seq.chunk, 13);
+    let ys_seq = seq.infer_chunk(&windows).unwrap();
+    let mut max_err = 0.0f64;
+    for (w, ys) in windows.iter().zip(&ys_seq) {
+        let y = step.infer_window(w).unwrap();
+        max_err = max_err.max((y - ys).abs());
+    }
+    assert!(max_err < 1e-5, "chunked vs stepped: {max_err}");
+}
+
+#[test]
+fn resident_state_carries_across_steps() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut exe = StepExecutor::load(&dir, "fp32").unwrap();
+    let w = [40.0f32; INPUT_SIZE];
+    let y1 = exe.infer_window(&w).unwrap();
+    let y2 = exe.infer_window(&w).unwrap();
+    assert_ne!(y1, y2, "recurrent state must evolve");
+    exe.reset().unwrap();
+    assert_eq!(exe.infer_window(&w).unwrap(), y1, "reset must restore");
+    assert_eq!(exe.steps_run(), 1);
+}
+
+#[test]
+fn manifest_consistent_with_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let params = LstmParams::load(&m.weights_path()).unwrap();
+    assert_eq!(params.input_size(), m.input_size);
+    assert_eq!(params.hidden(), m.hidden);
+    assert_eq!(params.n_layers(), m.layers);
+    assert_eq!(params.param_count(), 5656);
+    // Build-time SNR recorded for every precision, FP-8 worst.
+    assert!(m.snr_db["fp8"] < m.snr_db["fp16"]);
+    assert!(m.snr_db["fp32"] > 3.0);
+}
+
+#[test]
+fn beam_golden_frequencies_match_python() {
+    // artifacts/beam_golden.json is written by the python datagen; the
+    // Rust FE beam must reproduce the same natural frequencies.
+    let Some(dir) = artifacts_dir() else { return };
+    let golden = hrd_lstm::util::Json::parse_file(&dir.join("beam_golden.json")).unwrap();
+    let cfg = hrd_lstm::beam::BeamConfig::default();
+    let obj = golden.as_obj().unwrap();
+    assert!(!obj.is_empty());
+    for (pos, freqs) in obj {
+        let pos: f64 = pos.parse().unwrap();
+        let expected: Vec<f64> =
+            freqs.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        let ours = hrd_lstm::beam::natural_frequencies(&cfg, pos, expected.len());
+        for (a, b) in ours.iter().zip(&expected) {
+            assert!(
+                (a - b).abs() / b < 1e-3,
+                "roller {pos}: {a} Hz vs python {b} Hz"
+            );
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! CLI integration: run the `hrd` binary's dispatcher in-process on every
+//! subcommand and check the key output invariants (golden fragments, not
+//! exact bytes — the numbers are produced live by the models).
+
+use hrd_lstm::cli::{dispatch, Args};
+
+fn run(args: &[&str]) -> i32 {
+    let parsed = Args::parse(args.iter().map(|s| s.to_string())).unwrap();
+    dispatch(&parsed).unwrap()
+}
+
+#[test]
+fn help_lists_all_subcommands() {
+    assert_eq!(run(&["help"]), 0);
+    for cmd in ["serve", "tables", "compare", "fig1", "sweep", "info"] {
+        assert!(hrd_lstm::cli::USAGE.contains(cmd), "{cmd} missing from usage");
+    }
+}
+
+#[test]
+fn unknown_command_exits_2() {
+    assert_eq!(run(&["bogus"]), 2);
+}
+
+#[test]
+fn tables_and_compare_and_sweep_run() {
+    assert_eq!(run(&["tables"]), 0);
+    assert_eq!(run(&["compare"]), 0);
+    assert_eq!(run(&["sweep", "--platform", "zcu104", "--precision", "fp8"]), 0);
+}
+
+#[test]
+fn serve_writes_json_report() {
+    let out = std::env::temp_dir().join("hrd_cli_serve.json");
+    let _ = std::fs::remove_file(&out);
+    assert_eq!(
+        run(&[
+            "serve",
+            "--backend",
+            "quantized",
+            "--precision",
+            "fp16",
+            "--steps",
+            "60",
+            "--seed",
+            "5",
+            "--json",
+            out.to_str().unwrap(),
+        ]),
+        0
+    );
+    let j = hrd_lstm::util::Json::parse_file(&out).unwrap();
+    assert_eq!(j.get("backend").unwrap().as_str(), Some("quantized"));
+    assert!(j.get("snr_db").unwrap().as_f64().unwrap().is_finite());
+    assert!(!j.get("trace_tail").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn serve_rejects_bad_backend() {
+    let parsed =
+        Args::parse(["serve".to_string(), "--backend".into(), "gpu".into()]).unwrap();
+    assert!(dispatch(&parsed).is_err());
+}
+
+#[test]
+fn fpga_sim_serve_reports_modeled_latency() {
+    // Uses the cycle model end to end through the CLI path.
+    assert_eq!(
+        run(&[
+            "serve",
+            "--backend",
+            "fpga-sim",
+            "--platform",
+            "u55c",
+            "--precision",
+            "fp16",
+            "--parallelism",
+            "15",
+            "--steps",
+            "40",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn serve_with_config_file() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = dir.join("configs/modal_baseline.toml");
+    if !cfg.exists() {
+        return;
+    }
+    assert_eq!(
+        run(&["serve", "--config", cfg.to_str().unwrap(), "--steps", "40"]),
+        0
+    );
+}
+
+#[test]
+fn pareto_command_prints_frontier() {
+    assert_eq!(run(&["pareto", "--min-snr", "6", "--max-dsps", "300"]), 0);
+}
+
+#[test]
+fn record_then_replay_roundtrip() {
+    let out = std::env::temp_dir().join("hrd_cli_trace.bin");
+    let _ = std::fs::remove_file(&out);
+    assert_eq!(
+        run(&[
+            "record", "--backend", "native", "--profile", "sweep", "--steps", "50",
+            "--seed", "9", "--out", out.to_str().unwrap(),
+        ]),
+        0
+    );
+    assert!(out.exists());
+    assert_eq!(
+        run(&[
+            "replay", "--in", out.to_str().unwrap(), "--backend", "quantized",
+            "--precision", "fp16",
+        ]),
+        0
+    );
+}

@@ -1,0 +1,115 @@
+//! Cross-engine equivalence: the FPGA cycle simulator must be bit-exact
+//! with the quantized CPU engine for every design, precision, platform
+//! and parallelism (they share one datapath by construction — this test
+//! guards that construction against refactors).
+
+use hrd_lstm::beam::{ProfileKind, Testbed};
+use hrd_lstm::fixed::{FP16, FP32, FP8};
+use hrd_lstm::fpga::engine::DesignChoice;
+use hrd_lstm::fpga::{FpgaEngine, HdlDesign, HlsDesign, PlatformKind};
+use hrd_lstm::lstm::{LstmParams, QuantizedNetwork};
+use hrd_lstm::testutil::PropRunner;
+use hrd_lstm::util::Rng;
+
+fn params() -> LstmParams {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.bin");
+    if p.exists() {
+        LstmParams::load(&p).unwrap()
+    } else {
+        LstmParams::init(16, 15, 3, 1, 77)
+    }
+}
+
+#[test]
+fn every_design_point_is_bit_exact_with_quantized_cpu() {
+    let p = params();
+    for kind in PlatformKind::ALL {
+        let plat = kind.platform();
+        for fmt in [FP32, FP16, FP8] {
+            let mut designs: Vec<DesignChoice> = vec![DesignChoice::Hls(HlsDesign::new(fmt))];
+            for par in [1usize, 2, plat.max_hdl_parallelism(fmt)] {
+                designs.push(DesignChoice::Hdl(HdlDesign::new(fmt, par)));
+            }
+            for design in designs {
+                let mut eng = FpgaEngine::deploy(&p, design, &plat);
+                let mut cpu = QuantizedNetwork::new(&p, fmt);
+                let mut rng = Rng::new(kind as u64 * 31 + fmt.total_bits as u64);
+                for _ in 0..25 {
+                    let mut w = [0f32; 16];
+                    for v in &mut w {
+                        *v = rng.uniform(-100.0, 100.0) as f32;
+                    }
+                    assert_eq!(
+                        eng.infer_window(&w),
+                        cpu.infer_window(&w),
+                        "{} {}",
+                        kind.name(),
+                        fmt.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bit_exactness_on_random_streams() {
+    // Property test: random window streams, random platform/parallelism.
+    PropRunner::new("fpga_bit_exact").cases(40).run(|rng| {
+        let p = params();
+        let kind = PlatformKind::ALL[rng.range(0, 3)];
+        let fmt = [FP32, FP16, FP8][rng.range(0, 3)];
+        let plat = kind.platform();
+        let par = 1 + rng.range(0, plat.max_hdl_parallelism(fmt));
+        let mut eng =
+            FpgaEngine::deploy(&p, DesignChoice::Hdl(HdlDesign::new(fmt, par)), &plat);
+        let mut cpu = QuantizedNetwork::new(&p, fmt);
+        for _ in 0..10 {
+            let mut w = [0f32; 16];
+            for v in &mut w {
+                *v = rng.uniform(-150.0, 150.0) as f32;
+            }
+            let a = eng.infer_window(&w);
+            let b = cpu.infer_window(&w);
+            if a != b {
+                return Err(format!("{} {} P={par}: {a} != {b}", kind.name(), fmt.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallelism_changes_latency_never_values() {
+    let p = params();
+    let plat = PlatformKind::U55c.platform();
+    let windows: Vec<_> = Testbed::new(ProfileKind::Sweep, 40, 3).collect();
+    let mut outputs: Vec<Vec<f64>> = Vec::new();
+    let mut latencies = Vec::new();
+    for par in [1usize, 4, 15] {
+        let mut eng =
+            FpgaEngine::deploy(&p, DesignChoice::Hdl(HdlDesign::new(FP16, par)), &plat);
+        latencies.push(eng.step_latency_us());
+        outputs.push(windows.iter().map(|w| eng.infer_window(&w.features)).collect());
+    }
+    assert_eq!(outputs[0], outputs[1]);
+    assert_eq!(outputs[1], outputs[2]);
+    assert!(latencies[0] > latencies[1] && latencies[1] > latencies[2], "{latencies:?}");
+}
+
+#[test]
+fn fpga_sim_tracks_float_model_within_format_error() {
+    // Quantized FPGA estimates stay near the float engine on real data.
+    let p = params();
+    let plat = PlatformKind::Zcu104.platform();
+    let mut eng = FpgaEngine::deploy_hdl_max(&p, FP16, &plat);
+    let mut fnet = hrd_lstm::lstm::Network::new(p.clone());
+    let mut max_err = 0.0f64;
+    for w in Testbed::new(ProfileKind::Steps, 300, 8) {
+        let a = eng.infer_window(&w.features);
+        let b = fnet.infer_window(&w.features);
+        max_err = max_err.max((a - b).abs());
+    }
+    // 0.3 m output range; FP-16 (Q8.8) tracks within a few cm.
+    assert!(max_err < 0.08, "max err {max_err} m");
+}
