@@ -20,7 +20,9 @@ fn main() -> Result<()> {
         queue_depth: 800,
         // PJRT runs the artifact the JAX+Pallas path compiled; fall back
         // to the native engine when artifacts/ has not been built yet.
-        backend: if std::path::Path::new("artifacts/manifest.json").exists() {
+        backend: if hrd_lstm::runtime::pjrt_runtime_available()
+            && std::path::Path::new("artifacts/manifest.json").exists()
+        {
             BackendKind::Pjrt
         } else {
             BackendKind::Native

@@ -27,7 +27,7 @@ fn main() -> Result<()> {
     };
 
     let mut backends = vec![BackendKind::Native, BackendKind::Quantized, BackendKind::FpgaSim];
-    if have_artifacts {
+    if have_artifacts && hrd_lstm::runtime::pjrt_runtime_available() {
         backends.insert(0, BackendKind::Pjrt);
     }
 

@@ -49,7 +49,11 @@ fn main() {
         });
     }
 
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    // PJRT timings need both the artifacts and the xla-runtime feature
+    // (the default build's stub executor refuses to load).
+    if hrd_lstm::runtime::pjrt_runtime_available()
+        && std::path::Path::new("artifacts/manifest.json").exists()
+    {
         let mut exe = StepExecutor::load(std::path::Path::new("artifacts"), "fp32").unwrap();
         let step_us = g
             .bench("pjrt_step_fp32", || {

@@ -21,7 +21,7 @@ fn main() {
     let steps = if fast { 300 } else { 2000 };
 
     let mut kinds = vec![BackendKind::Native, BackendKind::Quantized, BackendKind::FpgaSim];
-    if have_artifacts {
+    if have_artifacts && hrd_lstm::runtime::pjrt_runtime_available() {
         kinds.push(BackendKind::Pjrt);
     }
 

@@ -1,0 +1,17 @@
+//! Kernel layer throughput bench: single-stream packed-kernel speedup
+//! over the legacy row-major walk, plus batched scaling (aggregate
+//! windows/sec at B = 1..16 against 8 sequential single-stream runs).
+//! Writes `BENCH_kernel.json` in the working directory.
+
+fn main() {
+    let out = std::path::PathBuf::from("BENCH_kernel.json");
+    let summary = hrd_lstm::bench::kernel::run_kernel_suite(Some(&out), false).unwrap();
+    println!("\n{}", summary.render());
+    println!("report written to {}", out.display());
+    if summary.batch8_vs_seq8 < 3.0 {
+        println!(
+            "WARNING: batch-8 aggregate speedup {:.2}x below the 3x target",
+            summary.batch8_vs_seq8
+        );
+    }
+}

@@ -1,0 +1,221 @@
+//! Kernel micro-benchmark suite: quantifies what the `kernel::` layer
+//! buys over the legacy row-major cell walk, single stream and batched.
+//!
+//! Three measurements (paper architecture, 16-15-3):
+//!
+//! 1. `legacy_cell_step_window` — the pre-kernel hot path (row-major
+//!    `cell_step` + dense head), the baseline;
+//! 2. `scalar_kernel_window` — the packed single-stream kernel;
+//! 3. `batch_kernel_b{B}` for B in [`BATCH_SIZES`] — aggregate batched
+//!    throughput, against `seq_8x_scalar_windows` (eight dedicated
+//!    single-stream kernels stepped in sequence — what serving 8 sensor
+//!    channels costs without the batched kernel).
+//!
+//! Shared by the `hrd bench` subcommand and the `kernel_throughput`
+//! bench binary; both write `BENCH_kernel.json` so the perf trajectory
+//! is tracked from PR to PR.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{black_box, BenchConfig, BenchGroup};
+use crate::kernel::{BatchKernel, FloatPath, PackedModel, ScalarKernel, StepKernel};
+use crate::lstm::cell::{reference_step, CellScratch, LayerState};
+use crate::lstm::LstmParams;
+use crate::util::Json;
+
+/// Batch widths the scaling curve is measured at.
+pub const BATCH_SIZES: &[usize] = &[1, 2, 4, 8, 16];
+
+/// Streams in the sequential-scalar serving baseline.
+pub const SEQ_STREAMS: usize = 8;
+
+/// Derived results of one suite run.
+#[derive(Debug, Clone)]
+pub struct KernelBenchSummary {
+    /// Legacy row-major walk, microseconds per window.
+    pub legacy_step_us: f64,
+    /// Packed scalar kernel, microseconds per window.
+    pub scalar_step_us: f64,
+    /// `(batch, amortized microseconds per window)` per batch width.
+    pub batched_us_per_window: Vec<(usize, f64)>,
+    /// Eight sequential scalar kernels, microseconds per window.
+    pub seq8_us_per_window: f64,
+    /// Single-stream speedup of the packed kernel over the legacy walk.
+    pub scalar_vs_legacy: f64,
+    /// Aggregate windows/sec of `BatchKernel` at B=8 over 8 sequential
+    /// single-stream runs (the ISSUE acceptance ratio).
+    pub batch8_vs_seq8: f64,
+}
+
+impl KernelBenchSummary {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "single stream : legacy {:.2} us/window, packed scalar {:.2} us/window ({:.2}x)\n",
+            self.legacy_step_us, self.scalar_step_us, self.scalar_vs_legacy
+        );
+        s.push_str("batched       :");
+        for (b, us) in &self.batched_us_per_window {
+            s.push_str(&format!("  B={b}: {us:.2} us/window"));
+        }
+        s.push('\n');
+        s.push_str(&format!(
+            "serving 8 ch  : sequential {:.2} us/window vs batch-8 {:.2} us/window -> \
+             {:.2}x aggregate throughput",
+            self.seq8_us_per_window,
+            self.batch8_us_per_window(),
+            self.batch8_vs_seq8
+        ));
+        s
+    }
+
+    fn batch8_us_per_window(&self) -> f64 {
+        self.batched_us_per_window
+            .iter()
+            .find(|(b, _)| *b == SEQ_STREAMS)
+            .map(|(_, us)| *us)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Run the suite; when `out` is given, write `BENCH_kernel.json` there
+/// (`{group, samples, derived}`; `samples` matches the standard
+/// [`BenchGroup`] JSON shape).  `quick` selects one short batch per
+/// benchmark (what `--quick` and CI use) without touching the
+/// process-global `HRD_BENCH_FAST` environment variable.
+pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSummary> {
+    let params = LstmParams::init(16, 15, 3, 1, 42);
+    let packed = PackedModel::shared(&params);
+    let window = [3.0f32; 16];
+    let mut g = BenchGroup::new("kernel");
+    if quick {
+        g = g.with_config(BenchConfig {
+            warmup: Duration::from_millis(10),
+            min_time: Duration::from_millis(50),
+            min_samples: 5,
+            max_samples: 1000,
+        });
+    }
+
+    // 1. Legacy row-major walk (what Network::infer_window compiled to
+    //    before the kernel layer).
+    let legacy_step_us = {
+        let mut states: Vec<LayerState> =
+            params.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect();
+        let mut scratch: Vec<CellScratch> =
+            params.layers.iter().map(CellScratch::for_layer).collect();
+        let mut xbuf = vec![0.0f64; params.input_size()];
+        let norm = params.norm;
+        let p = &params;
+        g.bench("legacy_cell_step_window", move || {
+            for (dst, &v) in xbuf.iter_mut().zip(&window) {
+                *dst = norm.normalize_x(v as f64);
+            }
+            let y = reference_step(p, &mut states, &mut scratch, &xbuf);
+            black_box(norm.denormalize_y(y));
+        })
+        .mean()
+            * 1e6
+    };
+
+    // 2. Packed single-stream kernel.
+    let scalar_step_us = {
+        let mut kernel = ScalarKernel::new(packed.clone(), FloatPath);
+        g.bench("scalar_kernel_window", move || {
+            black_box(kernel.step_window(&window));
+        })
+        .mean()
+            * 1e6
+    };
+
+    // 3. Serving baseline: SEQ_STREAMS dedicated scalar kernels stepped
+    //    one after another (weights re-scanned per stream).
+    let seq8_us_per_window = {
+        let mut streams: Vec<ScalarKernel<FloatPath>> =
+            (0..SEQ_STREAMS).map(|_| ScalarKernel::new(packed.clone(), FloatPath)).collect();
+        g.bench_items("seq_8x_scalar_windows", SEQ_STREAMS as f64, move || {
+            for k in &mut streams {
+                black_box(k.step_window(&window));
+            }
+        })
+        .mean()
+            * 1e6
+            / SEQ_STREAMS as f64
+    };
+
+    // 4. Batched scaling curve: one weight pass per layer serves B lanes.
+    let mut batched_us_per_window = Vec::with_capacity(BATCH_SIZES.len());
+    for &b in BATCH_SIZES {
+        let mut kernel = BatchKernel::new(packed.clone(), FloatPath, b);
+        let xs: Vec<f64> = (0..b * params.input_size())
+            .map(|i| 0.05 * ((i % 31) as f64 - 15.0))
+            .collect();
+        let mut ys = vec![0.0; b];
+        let mean_s = g
+            .bench_items(&format!("batch_kernel_b{b}"), b as f64, move || {
+                kernel.step_normalized(&xs, &mut ys);
+                black_box(ys[0]);
+            })
+            .mean();
+        batched_us_per_window.push((b, mean_s * 1e6 / b as f64));
+    }
+
+    let mut summary = KernelBenchSummary {
+        legacy_step_us,
+        scalar_step_us,
+        batched_us_per_window,
+        seq8_us_per_window,
+        scalar_vs_legacy: legacy_step_us / scalar_step_us,
+        batch8_vs_seq8: f64::NAN,
+    };
+    summary.batch8_vs_seq8 = seq8_us_per_window / summary.batch8_us_per_window();
+
+    if let Some(path) = out {
+        let samples = Json::Arr(g.samples().iter().map(|s| s.to_json()).collect());
+        let curve = Json::Arr(
+            summary
+                .batched_us_per_window
+                .iter()
+                .map(|(b, us)| {
+                    Json::obj(vec![("batch", Json::from(*b)), ("us_per_window", Json::from(*us))])
+                })
+                .collect(),
+        );
+        let derived = Json::obj(vec![
+            ("legacy_step_us", Json::from(summary.legacy_step_us)),
+            ("scalar_step_us", Json::from(summary.scalar_step_us)),
+            ("seq8_us_per_window", Json::from(summary.seq8_us_per_window)),
+            ("scalar_vs_legacy_speedup", Json::from(summary.scalar_vs_legacy)),
+            ("batch8_vs_seq8_speedup", Json::from(summary.batch8_vs_seq8)),
+            ("batched_us_per_window", curve),
+        ]);
+        let doc = Json::obj(vec![
+            ("group", Json::from("kernel")),
+            ("samples", samples),
+            ("derived", derived),
+        ]);
+        std::fs::write(path, doc.to_string())?;
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_runs_and_reports() {
+        let out = std::env::temp_dir().join("hrd_bench_kernel_selftest.json");
+        let s = run_kernel_suite(Some(&out), true).unwrap();
+        assert!(s.legacy_step_us > 0.0);
+        assert!(s.scalar_step_us > 0.0);
+        assert_eq!(s.batched_us_per_window.len(), BATCH_SIZES.len());
+        assert!(s.batch8_vs_seq8.is_finite());
+        assert!(!s.render().is_empty());
+        let j = Json::parse_file(&out).unwrap();
+        assert_eq!(j.get("group").unwrap().as_str(), Some("kernel"));
+        assert!(j.get("derived").unwrap().get("batch8_vs_seq8_speedup").is_some());
+    }
+}

@@ -6,6 +6,8 @@
 //! count are reached; report mean / p50 / p99 with outlier-robust stats;
 //! optionally dump JSON for EXPERIMENTS.md.
 
+pub mod kernel;
+
 use std::time::{Duration, Instant};
 
 use crate::util::{fmt_duration_s, stats, Json};

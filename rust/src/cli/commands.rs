@@ -28,7 +28,11 @@ COMMANDS:
             --precision {fp32|fp16|fp8}   --platform {vc707|zcu104|u55c}
             --parallelism N  --profile <kind>  --steps N  --seed N
             --deadline-us X  --realtime X  --queue-depth N
+            --channels N  (N>1: batched multi-channel pipeline)
             --fault {none|dropout|spikes}  --json <out.json>
+  bench     run the kernel micro-benchmark suite (packed scalar vs legacy,
+            batched throughput scaling) and write BENCH_kernel.json
+            --out <file>  --quick
   serve-tcp run the TCP serving front-end (newline-delimited JSON)
             --addr HOST:PORT (default 127.0.0.1:7433) + serve's options
   tables    regenerate Tables I-IV (FPGA design-space study)
@@ -50,6 +54,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
     match args.command.as_str() {
         "serve" => serve(args),
         "serve-tcp" => serve_tcp(args),
+        "bench" => bench(args),
         "tables" => tables(),
         "pareto" => pareto(args),
         "record" => record(args),
@@ -90,6 +95,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.realtime_factor = args.get_f64("realtime", cfg.realtime_factor)?;
     cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?;
     cfg.parallelism = args.get_usize("parallelism", cfg.parallelism)?;
+    cfg.channels = args.get_usize("channels", cfg.channels)?.max(1);
     Ok(cfg)
 }
 
@@ -116,6 +122,9 @@ fn parse_fault(s: &str) -> Result<SensorFault> {
 
 fn serve(args: &Args) -> Result<i32> {
     let cfg = experiment_config(args)?;
+    if cfg.channels > 1 {
+        return serve_multi(args, &cfg);
+    }
     let params = load_params(&cfg)?;
     let mut backend = build_backend(
         cfg.backend,
@@ -165,8 +174,71 @@ fn serve(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Multi-channel serve: N virtual testbeds over one batched backend.
+fn serve_multi(args: &Args, cfg: &crate::config::ExperimentConfig) -> Result<i32> {
+    let params = load_params(cfg)?;
+    let mut backend = crate::coordinator::build_multi_backend(
+        cfg.backend,
+        &params,
+        &cfg.precision,
+        &cfg.platform,
+        cfg.parallelism,
+        cfg.channels,
+    )?;
+    let fault = parse_fault(args.get_or("fault", "none"))?;
+    let runs = crate::coordinator::run_streaming_multi(cfg, backend.as_mut(), fault)?;
+    println!(
+        "backend={} channels={} steps/ch={}",
+        backend.name(),
+        runs.len(),
+        cfg.steps
+    );
+    for run in &runs {
+        let r = &run.report;
+        println!(
+            "  ch{:<2} steps={} snr={:.2}dB trac={:.4} host p50={:.2}us p99={:.2}us \
+             deadline_misses={} dropped={}",
+            run.channel,
+            r.steps,
+            r.snr_db,
+            r.trac,
+            r.host_p50_us,
+            r.host_p99_us,
+            r.deadline_misses,
+            r.dropped
+        );
+    }
+    if let Some(lat) = runs.first().and_then(|r| r.report.modeled_latency_us) {
+        println!("modeled FPGA latency: {lat:.2} us/step/channel");
+    }
+    if let Some(path) = args.get("json") {
+        let arr =
+            crate::util::Json::Arr(runs.iter().map(|run| run.report.to_json()).collect());
+        std::fs::write(path, arr.to_string())?;
+        println!("per-channel reports written to {path}");
+    }
+    Ok(0)
+}
+
+/// Kernel micro-benchmark suite (single-stream speedup + batched
+/// throughput scaling); writes `BENCH_kernel.json` for the perf
+/// trajectory tooling.
+fn bench(args: &Args) -> Result<i32> {
+    let out = std::path::PathBuf::from(args.get_or("out", "BENCH_kernel.json"));
+    let summary =
+        crate::bench::kernel::run_kernel_suite(Some(&out), args.has_flag("quick"))?;
+    println!("{}", summary.render());
+    println!("kernel bench report written to {}", out.display());
+    Ok(0)
+}
+
 fn serve_tcp(args: &Args) -> Result<i32> {
     let cfg = experiment_config(args)?;
+    anyhow::ensure!(
+        cfg.channels <= 1,
+        "serve-tcp is single-channel (one TCP engine owns the recurrent state); \
+         --channels applies to `serve`"
+    );
     let params = load_params(&cfg)?;
     let mut backend = build_backend(
         cfg.backend,
@@ -220,6 +292,10 @@ fn pareto(args: &Args) -> Result<i32> {
 
 fn record(args: &Args) -> Result<i32> {
     let cfg = experiment_config(args)?;
+    anyhow::ensure!(
+        cfg.channels <= 1,
+        "record captures a single-channel trace; --channels applies to `serve`"
+    );
     let params = load_params(&cfg)?;
     let mut backend = build_backend(
         cfg.backend,
@@ -373,6 +449,24 @@ mod tests {
     fn serve_native_quick() {
         let a = parse(&["serve", "--backend", "native", "--steps", "30", "--seed", "4"]);
         assert_eq!(dispatch(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn serve_multi_channel_quick() {
+        let a = parse(&[
+            "serve", "--backend", "native", "--steps", "20", "--channels", "4", "--seed", "3",
+        ]);
+        assert_eq!(dispatch(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn bench_quick_writes_report() {
+        let out = std::env::temp_dir().join("hrd_cli_bench.json");
+        let _ = std::fs::remove_file(&out);
+        let a = parse(&["bench", "--quick", "--out", out.to_str().unwrap()]);
+        assert_eq!(dispatch(&a).unwrap(), 0);
+        let j = crate::util::Json::parse_file(&out).unwrap();
+        assert_eq!(j.get("group").unwrap().as_str(), Some("kernel"));
     }
 
     #[test]

@@ -71,6 +71,9 @@ pub struct ExperimentConfig {
     pub platform: String,
     /// HDL unit parallelism for the fpga-sim backend.
     pub parallelism: usize,
+    /// Concurrent sensor channels; >1 selects the batched multi-channel
+    /// pipeline (one kernel weight pass serves all channels per step).
+    pub channels: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -87,6 +90,7 @@ impl Default for ExperimentConfig {
             queue_depth: 64,
             platform: "u55c".into(),
             parallelism: 15,
+            channels: 1,
         }
     }
 }
@@ -115,6 +119,7 @@ impl ExperimentConfig {
             queue_depth: doc.get_i64("queue_depth", d.queue_depth as i64).max(1) as usize,
             platform: doc.get_str("fpga.platform", &d.platform),
             parallelism: doc.get_i64("fpga.parallelism", d.parallelism as i64).max(1) as usize,
+            channels: doc.get_i64("channels", d.channels as i64).max(1) as usize,
         }
     }
 }

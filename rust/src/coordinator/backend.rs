@@ -1,6 +1,14 @@
-//! Inference backends the coordinator can schedule onto.  All share one
-//! contract: raw 16-sample acceleration window in, roller-position
-//! estimate (metres) out.
+//! Inference backends the coordinator can schedule onto.
+//!
+//! Two contracts live here:
+//!
+//! * [`Backend`] — single stream: raw 16-sample acceleration window in,
+//!   roller-position estimate (metres) out.
+//! * [`MultiBackend`] — N independent sensor channels multiplexed over
+//!   one engine via submit/drain.  The kernel-backed implementation
+//!   ([`BatchedBackend`]) advances every pending channel through ONE
+//!   batched weight pass per drain; [`SerialFanout`] is the fallback (and
+//!   the sequential baseline the benches compare batching against).
 
 use anyhow::Result;
 
@@ -8,6 +16,7 @@ use crate::arch::INPUT_SIZE;
 use crate::config::schema::BackendKind;
 use crate::fixed::QFormat;
 use crate::fpga::{FpgaEngine, PlatformKind};
+use crate::kernel::{Datapath, FixedPath, FloatPath, MultiStream, PackedModel};
 use crate::lstm::{LstmParams, Network, QuantizedNetwork};
 use crate::runtime::StepExecutor;
 
@@ -191,6 +200,185 @@ pub fn build_backend(
     })
 }
 
+/// Multi-channel backend: independent recurrent sensor channels sharing
+/// one inference engine.  At most one window may be queued per channel
+/// between drains; a drain steps every pending channel and leaves idle
+/// channels' state untouched.
+pub trait MultiBackend {
+    fn name(&self) -> &'static str;
+
+    /// Number of channel slots.
+    fn channels(&self) -> usize;
+
+    /// Queue `window` as `channel`'s next input.
+    fn submit(&mut self, channel: usize, window: &[f32; INPUT_SIZE]) -> Result<()>;
+
+    /// Step all pending channels; `sink` receives `(channel, estimate)`
+    /// per pending channel.  Returns the number of channels stepped.
+    fn drain(&mut self, sink: &mut dyn FnMut(usize, f64)) -> Result<usize>;
+
+    /// Reset one channel's recurrent state.
+    fn reset_channel(&mut self, channel: usize) -> Result<()>;
+
+    /// Modeled per-step target latency, if this backend models one.
+    fn modeled_latency_us(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Kernel-backed multi-channel backend: one [`MultiStream`] session, one
+/// batched weight pass per drain.
+pub struct BatchedBackend<P: Datapath> {
+    name: &'static str,
+    streams: MultiStream<P>,
+    modeled_latency_us: Option<f64>,
+}
+
+impl<P: Datapath> BatchedBackend<P> {
+    pub fn new(
+        name: &'static str,
+        streams: MultiStream<P>,
+        modeled_latency_us: Option<f64>,
+    ) -> Self {
+        Self { name, streams, modeled_latency_us }
+    }
+
+    pub fn streams(&self) -> &MultiStream<P> {
+        &self.streams
+    }
+}
+
+impl<P: Datapath> MultiBackend for BatchedBackend<P> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn channels(&self) -> usize {
+        self.streams.capacity()
+    }
+
+    fn submit(&mut self, channel: usize, window: &[f32; INPUT_SIZE]) -> Result<()> {
+        self.streams.submit(channel, window)
+    }
+
+    fn drain(&mut self, sink: &mut dyn FnMut(usize, f64)) -> Result<usize> {
+        Ok(self.streams.drain(|ch, y| sink(ch, y)))
+    }
+
+    fn reset_channel(&mut self, channel: usize) -> Result<()> {
+        self.streams.reset(channel);
+        Ok(())
+    }
+
+    fn modeled_latency_us(&self) -> Option<f64> {
+        self.modeled_latency_us
+    }
+}
+
+/// Fallback multi-channel backend: N independent single-stream backends
+/// stepped one after another (no weight sharing across channels).
+pub struct SerialFanout {
+    name: &'static str,
+    inner: Vec<Box<dyn Backend>>,
+    pending: Vec<Option<[f32; INPUT_SIZE]>>,
+}
+
+impl SerialFanout {
+    pub fn new(name: &'static str, inner: Vec<Box<dyn Backend>>) -> Self {
+        let pending = inner.iter().map(|_| None).collect();
+        Self { name, inner, pending }
+    }
+}
+
+impl MultiBackend for SerialFanout {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn channels(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn submit(&mut self, channel: usize, window: &[f32; INPUT_SIZE]) -> Result<()> {
+        anyhow::ensure!(channel < self.inner.len(), "channel {channel} out of range");
+        anyhow::ensure!(
+            self.pending[channel].is_none(),
+            "channel {channel} already has a window queued; drain first"
+        );
+        self.pending[channel] = Some(*window);
+        Ok(())
+    }
+
+    fn drain(&mut self, sink: &mut dyn FnMut(usize, f64)) -> Result<usize> {
+        let mut n = 0;
+        for (ch, slot) in self.pending.iter_mut().enumerate() {
+            if let Some(w) = slot.take() {
+                sink(ch, self.inner[ch].infer(&w)?);
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    fn reset_channel(&mut self, channel: usize) -> Result<()> {
+        self.inner[channel].reset()
+    }
+
+    fn modeled_latency_us(&self) -> Option<f64> {
+        self.inner.first().and_then(|b| b.modeled_latency_us())
+    }
+}
+
+/// Build a multi-channel backend (factory used by the CLI, the
+/// multi-channel example and the benches).  Kernel-capable kinds get the
+/// batched session; the modal baseline falls back to a serial fanout.
+pub fn build_multi_backend(
+    kind: BackendKind,
+    params: &LstmParams,
+    precision: &str,
+    platform: &str,
+    parallelism: usize,
+    channels: usize,
+) -> Result<Box<dyn MultiBackend>> {
+    anyhow::ensure!(channels >= 1, "need at least one channel");
+    let fmt = QFormat::by_name(precision)
+        .ok_or_else(|| anyhow::anyhow!("unknown precision {precision}"))?;
+    Ok(match kind {
+        BackendKind::Native => {
+            let streams = MultiStream::new(PackedModel::shared(params), FloatPath, channels);
+            Box::new(BatchedBackend::new("native-multi", streams, None))
+        }
+        BackendKind::Quantized => {
+            let quantized = params.quantized(fmt);
+            let streams =
+                MultiStream::new(PackedModel::shared(&quantized), FixedPath::new(fmt), channels);
+            Box::new(BatchedBackend::new("quantized-multi", streams, None))
+        }
+        BackendKind::FpgaSim => {
+            let plat = PlatformKind::parse(platform)
+                .ok_or_else(|| anyhow::anyhow!("unknown platform {platform}"))?
+                .platform();
+            let p = parallelism.min(plat.max_hdl_parallelism(fmt));
+            let design =
+                crate::fpga::engine::DesignChoice::Hdl(crate::fpga::HdlDesign::new(fmt, p));
+            let report = design.report(&plat);
+            let quantized = params.quantized(fmt);
+            let streams =
+                MultiStream::new(PackedModel::shared(&quantized), FixedPath::new(fmt), channels);
+            Box::new(BatchedBackend::new("fpga-sim-multi", streams, Some(report.latency_us)))
+        }
+        BackendKind::Modal => {
+            let inner: Vec<Box<dyn Backend>> =
+                (0..channels).map(|_| Box::new(ModalBackend::new()) as Box<dyn Backend>).collect();
+            Box::new(SerialFanout::new("modal-multi", inner))
+        }
+        BackendKind::Pjrt => anyhow::bail!(
+            "the pjrt backend is single-stream (thread-pinned client); \
+             use native/quantized/fpga-sim for multi-channel serving"
+        ),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,5 +425,59 @@ mod tests {
         let p = params();
         let dir = std::path::Path::new("artifacts");
         assert!(build_backend(BackendKind::Native, &p, dir, "fp13", "u55c", 1).is_err());
+    }
+
+    #[test]
+    fn batched_multi_backend_matches_single_stream_per_channel() {
+        let p = params();
+        let channels = 3;
+        let mut multi =
+            build_multi_backend(BackendKind::Native, &p, "fp16", "u55c", 15, channels).unwrap();
+        let mut singles: Vec<NativeBackend> =
+            (0..channels).map(|_| NativeBackend::new(&p)).collect();
+        let mut rng = crate::util::Rng::new(42);
+        for _ in 0..20 {
+            let mut want = vec![0.0; channels];
+            for (ch, single) in singles.iter_mut().enumerate() {
+                let mut w = [0f32; INPUT_SIZE];
+                for v in &mut w {
+                    *v = rng.uniform(-60.0, 60.0) as f32;
+                }
+                multi.submit(ch, &w).unwrap();
+                want[ch] = single.infer(&w).unwrap();
+            }
+            let mut got = vec![0.0; channels];
+            let n = multi.drain(&mut |ch, y| got[ch] = y).unwrap();
+            assert_eq!(n, channels);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn multi_factory_covers_cpu_kinds_and_rejects_pjrt() {
+        let p = params();
+        for kind in [
+            BackendKind::Native,
+            BackendKind::Quantized,
+            BackendKind::FpgaSim,
+            BackendKind::Modal,
+        ] {
+            let mut be = build_multi_backend(kind, &p, "fp16", "u55c", 15, 4).unwrap();
+            assert_eq!(be.channels(), 4);
+            be.submit(1, &[0.25; INPUT_SIZE]).unwrap();
+            be.submit(3, &[0.25; INPUT_SIZE]).unwrap();
+            let mut seen = Vec::new();
+            let n = be.drain(&mut |ch, y| {
+                assert!(y.is_finite());
+                seen.push(ch);
+            })
+            .unwrap();
+            assert_eq!(n, 2);
+            assert_eq!(seen, vec![1, 3]);
+            be.reset_channel(1).unwrap();
+        }
+        assert!(build_multi_backend(BackendKind::Pjrt, &p, "fp32", "u55c", 15, 2).is_err());
+        let fpga = build_multi_backend(BackendKind::FpgaSim, &p, "fp16", "u55c", 15, 2).unwrap();
+        assert!(fpga.modeled_latency_us().unwrap() > 0.0);
     }
 }

@@ -1,10 +1,11 @@
 //! L3 coordinator: the real-time structural-health-monitoring service.
 //!
-//! Owns the event loop (sensor stream → bounded queue → inference →
-//! estimates), the backend registry ([`backend`]), lock-free metrics
-//! ([`metrics`]) and the RTOS/CPU baseline timing models ([`rtos`]).
-//! Python never appears here — the PJRT backend executes the AOT
-//! artifacts directly.
+//! Owns the event loops (single-stream `run_streaming` and the batched
+//! N-channel `run_streaming_multi`, both sensor stream → bounded queue →
+//! inference → estimates), the backend registry ([`backend`], including
+//! the kernel-backed [`MultiBackend`]s), lock-free metrics ([`metrics`])
+//! and the RTOS/CPU baseline timing models ([`rtos`]).  Python never
+//! appears here — the PJRT backend executes the AOT artifacts directly.
 
 pub mod backend;
 pub mod metrics;
@@ -15,11 +16,13 @@ pub mod trace;
 pub mod watchdog;
 
 pub use backend::{
-    build_backend, Backend, FpgaSimBackend, ModalBackend, NativeBackend, PjrtBackend,
-    QuantizedBackend,
+    build_backend, build_multi_backend, Backend, BatchedBackend, FpgaSimBackend, ModalBackend,
+    MultiBackend, NativeBackend, PjrtBackend, QuantizedBackend, SerialFanout,
 };
 pub use metrics::{Counters, RunReport};
-pub use pipeline::{run_streaming, Estimate};
+pub use pipeline::{
+    channel_seed, run_streaming, run_streaming_multi, ChannelRun, Estimate, Pacing,
+};
 pub use rtos::{CpuModel, RtosDeadline, ARM_A53, CRIO_ATOM};
 pub use server::{Client, Server, ServerStats};
 pub use trace::{ReplayReport, Trace, TraceStep};

@@ -7,7 +7,8 @@
 //! Tables I–V benches.
 
 use crate::fixed::QFormat;
-use crate::lstm::{LstmParams, QuantizedNetwork};
+use crate::kernel::{FixedPath, PackedModel, ScalarKernel};
+use crate::lstm::LstmParams;
 
 use super::design::DesignReport;
 use super::hdl::HdlDesign;
@@ -38,8 +39,11 @@ impl DesignChoice {
 }
 
 /// A deployed accelerator: bit-exact datapath + cycle/latency accounting.
+/// The datapath is the shared fixed-point kernel (the same code the
+/// quantized CPU engine runs), so bit-exactness with
+/// [`crate::lstm::QuantizedNetwork`] holds by construction.
 pub struct FpgaEngine {
-    net: QuantizedNetwork,
+    kernel: ScalarKernel<FixedPath>,
     report: DesignReport,
     /// Simulated clock, cycles since reset.
     cycles_elapsed: u64,
@@ -50,12 +54,10 @@ impl FpgaEngine {
     /// "Place and route" `design` on `platform` with the trained weights.
     pub fn deploy(params: &LstmParams, design: DesignChoice, platform: &Platform) -> Self {
         let report = design.report(platform);
-        Self {
-            net: QuantizedNetwork::new(params, design.fmt()),
-            report,
-            cycles_elapsed: 0,
-            steps: 0,
-        }
+        let fmt = design.fmt();
+        let quantized = params.quantized(fmt);
+        let kernel = ScalarKernel::new(PackedModel::shared(&quantized), FixedPath::new(fmt));
+        Self { kernel, report, cycles_elapsed: 0, steps: 0 }
     }
 
     /// Convenience: HDL design at a platform's maximum parallelism.
@@ -87,7 +89,7 @@ impl FpgaEngine {
     pub fn infer_window(&mut self, window: &[f32]) -> f64 {
         self.cycles_elapsed += self.report.total_cycles;
         self.steps += 1;
-        self.net.infer_window(window)
+        self.kernel.step_window(window)
     }
 
     /// Simulated wall-clock spent in the accelerator so far (us).
@@ -100,7 +102,7 @@ impl FpgaEngine {
     }
 
     pub fn reset(&mut self) {
-        self.net.reset();
+        self.kernel.reset();
         self.cycles_elapsed = 0;
         self.steps = 0;
     }
@@ -111,7 +113,7 @@ mod tests {
     use super::*;
     use crate::fixed::FP16;
     use crate::fpga::platform::PlatformKind;
-    use crate::lstm::LstmParams;
+    use crate::lstm::{LstmParams, QuantizedNetwork};
 
     fn params() -> LstmParams {
         LstmParams::init(16, 15, 3, 1, 21)

@@ -1,0 +1,268 @@
+//! Batched kernel: B independent recurrent streams stepped in lockstep
+//! through ONE pass over the packed weights per layer.
+//!
+//! State and activations live in structure-of-arrays layout (`[u][b]`,
+//! stream index innermost and contiguous), so each weight value fetched
+//! from the unit block is applied to all B streams back to back — the
+//! weight-reuse lever RNN accelerators batch for, and the reason
+//! aggregate windows/sec scale superlinearly versus running B scalar
+//! kernels in sequence (per-stream, the scalar dot is a serial f64
+//! dependence chain; across streams the lanes are independent and
+//! vectorize).
+//!
+//! Per stream the accumulation order is identical to [`ScalarKernel`]
+//! (bias, input rows ascending, recurrent rows ascending), so results
+//! match the single-stream path bit for bit on the fixed-point datapath
+//! and to the last ulp on the float path.
+//!
+//! [`ScalarKernel`]: super::scalar::ScalarKernel
+
+use std::sync::Arc;
+
+use crate::lstm::params::Normalization;
+
+use super::pack::PackedModel;
+use super::path::Datapath;
+use super::StepKernel;
+
+/// Allocation-free B-stream stepper with resident SoA `(h, c)` state.
+#[derive(Debug, Clone)]
+pub struct BatchKernel<P: Datapath> {
+    packed: Arc<PackedModel>,
+    path: P,
+    batch: usize,
+    /// Per-layer hidden state, `h[layer][u * batch + b]`.
+    h: Vec<Vec<f64>>,
+    /// Per-layer cell state, same layout.
+    c: Vec<Vec<f64>>,
+    /// Feature-major conditioned inputs, `xt[r * batch + b]`.
+    xt: Vec<f64>,
+    /// Gate buffer of the widest layer, `z[(u*4 + g) * batch + b]`.
+    zbuf: Vec<f64>,
+}
+
+/// Add one weight row (4 gate weights of one unit) times one input row
+/// (B stream lanes) into the unit's gate lanes.
+#[inline]
+fn accumulate_row(zu: &mut [f64], w4: &[f64], xrow: &[f64], bsz: usize) {
+    let (zi, rest) = zu.split_at_mut(bsz);
+    let (zf, rest) = rest.split_at_mut(bsz);
+    let (zg, zo) = rest.split_at_mut(bsz);
+    let (wi, wf, wg, wo) = (w4[0], w4[1], w4[2], w4[3]);
+    for (b, &xv) in xrow.iter().enumerate() {
+        zi[b] += xv * wi;
+        zf[b] += xv * wf;
+        zg[b] += xv * wg;
+        zo[b] += xv * wo;
+    }
+}
+
+impl<P: Datapath> BatchKernel<P> {
+    pub fn new(packed: Arc<PackedModel>, path: P, batch: usize) -> Self {
+        assert!(batch >= 1, "batch kernel needs at least one stream");
+        let h = packed.layers.iter().map(|l| vec![0.0; l.hidden * batch]).collect();
+        let c = packed.layers.iter().map(|l| vec![0.0; l.hidden * batch]).collect();
+        let xt = vec![0.0; packed.input_size() * batch];
+        let zbuf = vec![0.0; 4 * packed.max_hidden() * batch];
+        Self { packed, path, batch, h, c, xt, zbuf }
+    }
+
+    pub fn packed(&self) -> &Arc<PackedModel> {
+        &self.packed
+    }
+
+    pub fn norm(&self) -> Normalization {
+        self.packed.norm
+    }
+
+    pub fn reset_all(&mut self) {
+        for hl in &mut self.h {
+            hl.fill(0.0);
+        }
+        for cl in &mut self.c {
+            cl.fill(0.0);
+        }
+    }
+
+    fn forward(&mut self, ys: &mut [f64]) {
+        let Self { packed, path, batch, h, c, xt, zbuf } = self;
+        let bsz = *batch;
+        let n_layers = packed.layers.len();
+        for il in 0..n_layers {
+            let layer = &packed.layers[il];
+            let hidden = layer.hidden;
+            let z = &mut zbuf[..4 * hidden * bsz];
+            {
+                // This layer's input rows (the features, or the layer
+                // below's fresh h) and its own previous-step h.
+                let (xin, hcur): (&[f64], &[f64]) = if il == 0 {
+                    (&xt[..layer.input_size * bsz], &h[0][..])
+                } else {
+                    let (below, rest) = h.split_at(il);
+                    (&below[il - 1][..], &rest[0][..])
+                };
+                for u in 0..hidden {
+                    let block = layer.unit_block(u);
+                    let zu = &mut z[u * 4 * bsz..(u + 1) * 4 * bsz];
+                    for g in 0..4 {
+                        zu[g * bsz..(g + 1) * bsz].fill(layer.b[4 * u + g]);
+                    }
+                    let (wx, wh) = block.split_at(4 * layer.input_size);
+                    for (w4, xrow) in wx.chunks_exact(4).zip(xin.chunks_exact(bsz)) {
+                        accumulate_row(zu, w4, xrow, bsz);
+                    }
+                    for (w4, hrow) in wh.chunks_exact(4).zip(hcur.chunks_exact(bsz)) {
+                        accumulate_row(zu, w4, hrow, bsz);
+                    }
+                }
+            }
+            path.finish_z(z);
+            let hl = &mut h[il];
+            let cl = &mut c[il];
+            for u in 0..hidden {
+                let zu = &z[u * 4 * bsz..(u + 1) * 4 * bsz];
+                for b in 0..bsz {
+                    let i = path.sigmoid(zu[b]);
+                    let f = path.sigmoid(zu[bsz + b]);
+                    let g = path.tanh_gate(zu[2 * bsz + b]);
+                    let o = path.sigmoid(zu[3 * bsz + b]);
+                    let (c_new, h_new) = path.evo(i, f, g, o, cl[u * bsz + b]);
+                    cl[u * bsz + b] = c_new;
+                    hl[u * bsz + b] = h_new;
+                }
+            }
+        }
+        let top = &h[n_layers - 1];
+        for (b, y_out) in ys.iter_mut().enumerate().take(bsz) {
+            let mut y = packed.dense_b;
+            for (u, &wv) in packed.dense_w.iter().enumerate() {
+                y += top[u * bsz + b] * wv;
+            }
+            *y_out = path.finish_output(y);
+        }
+    }
+}
+
+impl<P: Datapath> StepKernel for BatchKernel<P> {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn input_size(&self) -> usize {
+        self.packed.input_size()
+    }
+
+    fn state_len(&self) -> usize {
+        self.packed.state_len()
+    }
+
+    /// `xs` is stream-major (`batch * input_size` normalized features);
+    /// one normalized output lands in `ys` per stream.
+    fn step_normalized(&mut self, xs: &[f64], ys: &mut [f64]) {
+        let isz = self.packed.input_size();
+        // Hard asserts: a short ys would otherwise silently drop trailing
+        // lanes' outputs (state still advances) in release builds.
+        assert_eq!(xs.len(), isz * self.batch, "xs must hold batch * input_size features");
+        assert!(ys.len() >= self.batch, "ys must hold one output per stream");
+        for b in 0..self.batch {
+            for r in 0..isz {
+                self.xt[r * self.batch + b] = self.path.prep_input(xs[b * isz + r]);
+            }
+        }
+        self.forward(ys);
+    }
+
+    fn reset_stream(&mut self, stream: usize) {
+        // Hard assert: a wrong lane index would silently read/write OTHER
+        // streams' state in release builds (index arithmetic aliases).
+        assert!(stream < self.batch, "stream {stream} out of range (batch {})", self.batch);
+        for (hl, cl) in self.h.iter_mut().zip(&mut self.c) {
+            let units = hl.len() / self.batch;
+            for u in 0..units {
+                hl[u * self.batch + stream] = 0.0;
+                cl[u * self.batch + stream] = 0.0;
+            }
+        }
+    }
+
+    fn export_state(&self, stream: usize, out: &mut [f64]) {
+        assert!(stream < self.batch, "stream {stream} out of range (batch {})", self.batch);
+        let mut k = 0;
+        for (hl, cl) in self.h.iter().zip(&self.c) {
+            let units = hl.len() / self.batch;
+            for u in 0..units {
+                out[k] = hl[u * self.batch + stream];
+                k += 1;
+            }
+            for u in 0..units {
+                out[k] = cl[u * self.batch + stream];
+                k += 1;
+            }
+        }
+    }
+
+    fn import_state(&mut self, stream: usize, src: &[f64]) {
+        assert!(stream < self.batch, "stream {stream} out of range (batch {})", self.batch);
+        let mut k = 0;
+        for (hl, cl) in self.h.iter_mut().zip(&mut self.c) {
+            let units = hl.len() / self.batch;
+            for u in 0..units {
+                hl[u * self.batch + stream] = src[k];
+                k += 1;
+            }
+            for u in 0..units {
+                cl[u * self.batch + stream] = src[k];
+                k += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::path::FloatPath;
+    use crate::kernel::ScalarKernel;
+    use crate::lstm::params::LstmParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn three_streams_match_three_scalar_kernels() {
+        let p = LstmParams::init(16, 15, 3, 1, 77);
+        let packed = PackedModel::shared(&p);
+        let bsz = 3;
+        let mut batch = BatchKernel::new(packed.clone(), FloatPath, bsz);
+        let mut singles: Vec<_> =
+            (0..bsz).map(|_| ScalarKernel::new(packed.clone(), FloatPath)).collect();
+        let mut rng = Rng::new(9);
+        let mut ys = vec![0.0; bsz];
+        for _ in 0..40 {
+            let xs: Vec<f64> = (0..bsz * 16).map(|_| rng.uniform(-1.5, 1.5)).collect();
+            batch.step_normalized(&xs, &mut ys);
+            for (b, single) in singles.iter_mut().enumerate() {
+                let y = single.step(&xs[b * 16..(b + 1) * 16]);
+                assert_eq!(ys[b], y, "stream {b} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn per_stream_reset_is_isolated() {
+        let p = LstmParams::init(8, 6, 2, 1, 4);
+        let mut k = BatchKernel::new(PackedModel::shared(&p), FloatPath, 2);
+        let mut ys = [0.0; 2];
+        let xs: Vec<f64> = (0..16).map(|i| 0.1 * i as f64 - 0.6).collect();
+        k.step_normalized(&xs, &mut ys);
+        let first = ys;
+        k.step_normalized(&xs, &mut ys);
+        // Reset stream 0 only: its next output returns to the first-step
+        // value while stream 1 keeps evolving.
+        k.reset_stream(0);
+        let mut snap = vec![0.0; k.state_len()];
+        k.export_state(1, &mut snap);
+        assert!(snap.iter().any(|&v| v != 0.0), "stream 1 state must survive");
+        k.step_normalized(&xs, &mut ys);
+        assert_eq!(ys[0], first[0]);
+        assert_ne!(ys[1], first[1]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Unified batched inference kernel layer — the single home of LSTM
+//! compute for every engine in the crate.
+//!
+//! Every front-end (float [`crate::lstm::Network`], fixed-point
+//! [`crate::lstm::QuantizedNetwork`], the cycle-charging
+//! [`crate::fpga::FpgaEngine`], and the coordinator backends) used to
+//! carry its own copy of the cell loop; they now all lower onto this
+//! module:
+//!
+//! * [`pack`] — the one-time weight-layout transform ([`PackedLayer`] /
+//!   [`PackedModel`]): row-major fused gate matrices become
+//!   gate-interleaved, unit-blocked columns shared via `Arc`.
+//! * [`path`] — the numeric datapath ([`FloatPath`] exact f64,
+//!   [`FixedPath`] Q-format + LUT, matching the FPGA bit for bit).
+//! * [`scalar`] — [`ScalarKernel`], the allocation-free single-stream
+//!   stepper (bit-compatible with the legacy `cell_step` walk).
+//! * [`batch`] — [`BatchKernel`], B independent streams stepped in
+//!   lockstep through one weight pass per layer (SoA state, stream lane
+//!   innermost).
+//! * [`stream`] — [`MultiStream`], the submit/drain session the
+//!   coordinator multiplexes N sensor channels over.
+//!
+//! # Packed weight layout
+//!
+//! [`crate::lstm::LayerParams`] stores the fused gate matrix row-major,
+//! gates side by side in column blocks of width H — a layout that forces
+//! the legacy loop to gather one full 4H row per nonzero input:
+//!
+//! ```text
+//!  LayerParams::w   (I+H rows x 4H cols, row-major)
+//!
+//!            | i0 i1 .. iH-1 | f0 .. fH-1 | g0 .. gH-1 | o0 .. oH-1 |
+//!       x0   |  .  .      .  |  .      .  |  .      .  |  .      .  |
+//!       x1   |  .  .      .  |  .      .  |  .      .  |  .      .  |
+//!       ..   |               |            |            |            |
+//!       h0   |  .  .      .  |  .      .  |  .      .  |  .      .  |
+//!       ..   |               |            |            |            |
+//! ```
+//!
+//! [`PackedLayer`] re-blocks it per hidden unit: unit `u`'s four gate
+//! columns are interleaved row by row into one contiguous block, so the
+//! whole matmul for that unit is a single forward scan — four
+//! independent accumulators, no striding, no `x == 0` branch:
+//!
+//! ```text
+//!  PackedLayer::w   (H unit blocks, each (I+H) x 4, row-major)
+//!
+//!   unit 0 block            unit 1 block            ...
+//!  | i0 f0 g0 o0 | <- x0   | i1 f1 g1 o1 | <- x0
+//!  | i0 f0 g0 o0 | <- x1   | i1 f1 g1 o1 | <- x1
+//!  |     ..      |   ..    |     ..      |
+//!  | i0 f0 g0 o0 | <- h0   | i1 f1 g1 o1 | <- h0
+//!  |     ..      |   ..    |     ..      |
+//! ```
+//!
+//! [`BatchKernel`] walks the same blocks once per layer while applying
+//! each weight to all B stream lanes (`z[gate][lane]`, lane contiguous),
+//! which is what turns batching into throughput instead of B repeated
+//! weight scans.
+//!
+//! Accumulation order per gate is preserved from the legacy kernels
+//! (bias, input rows ascending, recurrent rows ascending), so the float
+//! path agrees with `cell_step` to the bit in practice and the
+//! fixed-point path is bit-exact with `quantized_cell_step` by
+//! construction — the `kernel_equivalence` test suite asserts both.
+
+pub mod batch;
+pub mod pack;
+pub mod path;
+pub mod scalar;
+pub mod stream;
+
+pub use batch::BatchKernel;
+pub use pack::{PackedLayer, PackedModel};
+pub use path::{Datapath, FixedPath, FloatPath};
+pub use scalar::ScalarKernel;
+pub use stream::MultiStream;
+
+/// Common contract of the steppers: `batch()` independent recurrent
+/// streams advanced one model step per call, with per-stream state
+/// reset/export/import so sessions can be multiplexed, migrated or
+/// snapshotted around partial drains.
+pub trait StepKernel {
+    /// Number of independent streams stepped per call.
+    fn batch(&self) -> usize;
+    /// Features per stream per step.
+    fn input_size(&self) -> usize;
+    /// Flattened per-stream state length (h and c of every layer).
+    fn state_len(&self) -> usize;
+    /// Advance every stream once.  `xs` holds `batch() * input_size()`
+    /// normalized features (stream-major); `ys` receives one normalized
+    /// output per stream.
+    fn step_normalized(&mut self, xs: &[f64], ys: &mut [f64]);
+    /// Zero one stream's recurrent state.
+    fn reset_stream(&mut self, stream: usize);
+    /// Copy one stream's `(h, c)` state into `out` (`state_len()` values,
+    /// per layer: h ascending, then c ascending).
+    fn export_state(&self, stream: usize, out: &mut [f64]);
+    /// Restore state previously produced by [`StepKernel::export_state`].
+    fn import_state(&mut self, stream: usize, src: &[f64]);
+}

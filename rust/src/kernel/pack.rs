@@ -1,0 +1,145 @@
+//! Weight-layout transform: [`LayerParams`] row-major fused gate matrices
+//! repacked into the gate-interleaved, unit-blocked layout every kernel
+//! consumes (see the module docs of [`crate::kernel`] for the diagram).
+//!
+//! Packing happens once per deployment (model load / backend build), so
+//! the transform favours clarity; the hot loops only ever read the packed
+//! form sequentially.
+
+use std::sync::Arc;
+
+use crate::lstm::params::{LayerParams, LstmParams, Normalization};
+
+/// One LSTM layer in packed form.
+///
+/// `w` holds one contiguous *unit block* per hidden unit `u`.  A block
+/// stores, for each concatenated input row `r` in `[x ; h]` order, the
+/// four gate weights `[i, f, g, o]` of that unit side by side:
+///
+/// `w[u * 4*(I+H) + r*4 + g] == LayerParams::w[(r, g*H + u)]`
+///
+/// The bias is interleaved the same way: `b[u*4 + g]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayer {
+    pub input_size: usize,
+    pub hidden: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+impl PackedLayer {
+    pub fn from_params(layer: &LayerParams) -> Self {
+        let (isz, h) = (layer.input_size, layer.hidden);
+        let rows = isz + h;
+        let mut w = vec![0.0; rows * 4 * h];
+        let mut b = vec![0.0; 4 * h];
+        for u in 0..h {
+            for g in 0..4 {
+                b[u * 4 + g] = layer.b[g * h + u];
+                for r in 0..rows {
+                    w[u * 4 * rows + r * 4 + g] = layer.w_at(r, g * h + u);
+                }
+            }
+        }
+        Self { input_size: isz, hidden: h, w, b }
+    }
+
+    /// Number of concatenated input rows (`I + H`).
+    #[inline]
+    pub fn concat_len(&self) -> usize {
+        self.input_size + self.hidden
+    }
+
+    /// The contiguous weight block of hidden unit `u`
+    /// (`4 * concat_len()` values, `[r][gate]` order).
+    #[inline]
+    pub fn unit_block(&self, u: usize) -> &[f64] {
+        let stride = 4 * self.concat_len();
+        &self.w[u * stride..(u + 1) * stride]
+    }
+}
+
+/// A whole stacked model in packed form: the shared, immutable compute
+/// asset every kernel and every stream references (via [`Arc`], so one
+/// packing serves any number of sessions).
+#[derive(Debug, Clone)]
+pub struct PackedModel {
+    pub layers: Vec<PackedLayer>,
+    /// Dense head weights, one per top-layer hidden unit.
+    pub dense_w: Vec<f64>,
+    pub dense_b: f64,
+    pub norm: Normalization,
+}
+
+impl PackedModel {
+    /// Pack `params`.  The serving head is scalar (roller position), which
+    /// is all this system ever deploys.
+    pub fn from_params(params: &LstmParams) -> Self {
+        assert_eq!(params.out, 1, "kernel layer supports the scalar serving head only");
+        Self {
+            layers: params.layers.iter().map(PackedLayer::from_params).collect(),
+            dense_w: params.dense_w.clone(),
+            dense_b: params.dense_b[0],
+            norm: params.norm,
+        }
+    }
+
+    /// Pack and wrap in an [`Arc`] ready for sharing across kernels.
+    pub fn shared(params: &LstmParams) -> Arc<Self> {
+        Arc::new(Self::from_params(params))
+    }
+
+    pub fn input_size(&self) -> usize {
+        self.layers[0].input_size
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Widest layer (sizes the per-layer gate scratch).
+    pub fn max_hidden(&self) -> usize {
+        self.layers.iter().map(|l| l.hidden).max().unwrap_or(0)
+    }
+
+    /// Flattened per-stream state length (`h` and `c` of every layer).
+    pub fn state_len(&self) -> usize {
+        self.layers.iter().map(|l| 2 * l.hidden).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_is_a_permutation_of_the_row_major_weights() {
+        let p = LstmParams::init(5, 7, 2, 1, 3);
+        for layer in &p.layers {
+            let packed = PackedLayer::from_params(layer);
+            let rows = layer.concat_len();
+            assert_eq!(packed.w.len(), layer.w.len());
+            assert_eq!(packed.b.len(), layer.b.len());
+            for u in 0..layer.hidden {
+                let block = packed.unit_block(u);
+                for g in 0..4 {
+                    assert_eq!(packed.b[u * 4 + g], layer.b[g * layer.hidden + u]);
+                    for r in 0..rows {
+                        assert_eq!(block[r * 4 + g], layer.w_at(r, g * layer.hidden + u));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn model_geometry() {
+        let p = LstmParams::init(16, 15, 3, 1, 9);
+        let m = PackedModel::from_params(&p);
+        assert_eq!(m.input_size(), 16);
+        assert_eq!(m.n_layers(), 3);
+        assert_eq!(m.max_hidden(), 15);
+        assert_eq!(m.state_len(), 3 * 2 * 15);
+        assert_eq!(m.dense_w.len(), 15);
+    }
+}

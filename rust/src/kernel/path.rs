@@ -1,0 +1,146 @@
+//! The two numeric datapaths a kernel can run: exact f64 (the software
+//! baseline) and the fixed-point/LUT datapath of the FPGA accelerator.
+//!
+//! Kernels are generic over [`Datapath`] and monomorphize, so the float
+//! hot loop carries zero quantization overhead while the fixed-point loop
+//! reproduces [`crate::lstm::quantized::quantized_cell_step`] operation
+//! for operation (same wide-accumulator MVO, same LUT activations, same
+//! EVO truncation points — bit-exactness is asserted by the
+//! `kernel_equivalence` property suite).
+
+use crate::fixed::activation::sigmoid_exact;
+use crate::fixed::{ActLut, QFormat};
+
+/// Elementwise numeric policy of a kernel.
+pub trait Datapath: Clone {
+    /// Condition one already-normalized input feature (quantize or pass).
+    fn prep_input(&self, x: f64) -> f64;
+    /// Post-matmul conditioning of gate pre-activations (the MVO
+    /// truncation point for fixed point; a no-op for float).
+    fn finish_z(&self, z: &mut [f64]);
+    /// Gate sigmoid.
+    fn sigmoid(&self, x: f64) -> f64;
+    /// Candidate-gate tanh.
+    fn tanh_gate(&self, x: f64) -> f64;
+    /// Elementwise-vector-operation stage: gates + previous cell state in,
+    /// `(c_new, h_new)` out.
+    fn evo(&self, i: f64, f: f64, g: f64, o: f64, c_prev: f64) -> (f64, f64);
+    /// Final conditioning of the dense-head accumulator.
+    fn finish_output(&self, y: f64) -> f64;
+}
+
+/// Exact f64 datapath (the paper's RTOS software baseline numerics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FloatPath;
+
+impl Datapath for FloatPath {
+    #[inline]
+    fn prep_input(&self, x: f64) -> f64 {
+        x
+    }
+
+    #[inline]
+    fn finish_z(&self, _z: &mut [f64]) {}
+
+    #[inline]
+    fn sigmoid(&self, x: f64) -> f64 {
+        sigmoid_exact(x)
+    }
+
+    #[inline]
+    fn tanh_gate(&self, x: f64) -> f64 {
+        x.tanh()
+    }
+
+    #[inline]
+    fn evo(&self, i: f64, f: f64, g: f64, o: f64, c_prev: f64) -> (f64, f64) {
+        let c_new = f * c_prev + i * g;
+        (c_new, o * c_new.tanh())
+    }
+
+    #[inline]
+    fn finish_output(&self, y: f64) -> f64 {
+        y
+    }
+}
+
+/// Fixed-point datapath: Q-format quantization + piecewise-linear LUT
+/// activations, matching the FPGA implementation point for point.
+#[derive(Debug, Clone)]
+pub struct FixedPath {
+    pub fmt: QFormat,
+    lut: ActLut,
+}
+
+impl FixedPath {
+    pub fn new(fmt: QFormat) -> Self {
+        Self { fmt, lut: ActLut::new(fmt) }
+    }
+}
+
+impl Datapath for FixedPath {
+    #[inline]
+    fn prep_input(&self, x: f64) -> f64 {
+        self.fmt.quantize(x)
+    }
+
+    #[inline]
+    fn finish_z(&self, z: &mut [f64]) {
+        for zj in z {
+            *zj = self.fmt.quantize(*zj);
+        }
+    }
+
+    #[inline]
+    fn sigmoid(&self, x: f64) -> f64 {
+        self.lut.sigmoid(x)
+    }
+
+    #[inline]
+    fn tanh_gate(&self, x: f64) -> f64 {
+        self.lut.tanh(x)
+    }
+
+    #[inline]
+    fn evo(&self, i: f64, f: f64, g: f64, o: f64, c_prev: f64) -> (f64, f64) {
+        let fc = self.fmt.quantize(f * c_prev);
+        let ig = self.fmt.quantize(i * g);
+        let c_new = self.fmt.quantize(fc + ig);
+        (c_new, self.fmt.quantize(o * self.lut.tanh(c_new)))
+    }
+
+    #[inline]
+    fn finish_output(&self, y: f64) -> f64 {
+        self.fmt.quantize(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FP16;
+
+    #[test]
+    fn float_path_is_identity_plumbing() {
+        let p = FloatPath;
+        assert_eq!(p.prep_input(0.1234), 0.1234);
+        assert_eq!(p.finish_output(-3.5), -3.5);
+        let (c, h) = p.evo(0.5, 0.5, 0.25, 0.5, 1.0);
+        assert_eq!(c, 0.5 * 1.0 + 0.5 * 0.25);
+        assert_eq!(h, 0.5 * c.tanh());
+    }
+
+    #[test]
+    fn fixed_path_quantizes_every_stage() {
+        let p = FixedPath::new(FP16);
+        assert_eq!(p.prep_input(0.12345), FP16.quantize(0.12345));
+        let mut z = [0.333, -0.777];
+        p.finish_z(&mut z);
+        for v in z {
+            assert_eq!(v, FP16.quantize(v));
+        }
+        let (c, h) = p.evo(0.5, 0.75, 0.25, 0.5, 0.125);
+        assert_eq!(c, FP16.quantize(c));
+        assert_eq!(h, FP16.quantize(h));
+    }
+}

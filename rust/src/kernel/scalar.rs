@@ -1,0 +1,243 @@
+//! Single-stream kernel over the packed layout — the drop-in replacement
+//! for the legacy row-major `cell_step` walk, and the numeric reference
+//! the batched kernel is checked against.
+//!
+//! Per hidden unit the gate matmul reads one contiguous unit block and
+//! carries four independent accumulator chains (one per gate), so the
+//! inner loop has instruction-level parallelism the legacy serial
+//! row-gather loop lacks, with no `xv == 0.0` branch in the body.  The
+//! per-gate accumulation order (bias, then input rows ascending, then
+//! recurrent rows ascending) is exactly the legacy order, which keeps the
+//! float path bit-compatible with `cell_step` and the fixed-point path
+//! bit-exact with `quantized_cell_step`.
+
+use std::sync::Arc;
+
+use crate::lstm::cell::LayerState;
+use crate::lstm::params::Normalization;
+
+use super::pack::PackedModel;
+use super::path::Datapath;
+use super::StepKernel;
+
+/// Allocation-free single-stream stepper with resident `(h, c)` state.
+#[derive(Debug, Clone)]
+pub struct ScalarKernel<P: Datapath> {
+    packed: Arc<PackedModel>,
+    path: P,
+    states: Vec<LayerState>,
+    /// Gate pre-activations of the widest layer, unit-major `[u][gate]`.
+    zbuf: Vec<f64>,
+    /// Conditioned (normalized + prepped) input features.
+    xprep: Vec<f64>,
+}
+
+impl<P: Datapath> ScalarKernel<P> {
+    pub fn new(packed: Arc<PackedModel>, path: P) -> Self {
+        let states = packed.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect();
+        let zbuf = vec![0.0; 4 * packed.max_hidden()];
+        let xprep = vec![0.0; packed.input_size()];
+        Self { packed, path, states, zbuf, xprep }
+    }
+
+    pub fn packed(&self) -> &Arc<PackedModel> {
+        &self.packed
+    }
+
+    pub fn norm(&self) -> Normalization {
+        self.packed.norm
+    }
+
+    /// Per-layer recurrent state (read-only; tests and diagnostics).
+    pub fn states(&self) -> &[LayerState] {
+        &self.states
+    }
+
+    /// Zero the recurrent state (new monitoring session).
+    pub fn reset(&mut self) {
+        for s in &mut self.states {
+            s.reset();
+        }
+    }
+
+    /// One step on an already-normalized feature vector; returns the
+    /// normalized model output.
+    pub fn step(&mut self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.packed.input_size());
+        for (dst, &v) in self.xprep.iter_mut().zip(x) {
+            *dst = self.path.prep_input(v);
+        }
+        self.forward()
+    }
+
+    /// Full sensor-to-estimate step: raw acceleration window in, roller
+    /// position estimate (metres) out.  Normalization happens straight
+    /// into the kernel's input slot — no temporary buffer juggling.
+    pub fn step_window(&mut self, window: &[f32]) -> f64 {
+        let norm = self.packed.norm;
+        for (dst, &v) in self.xprep.iter_mut().zip(window) {
+            *dst = self.path.prep_input(norm.normalize_x(v as f64));
+        }
+        norm.denormalize_y(self.forward())
+    }
+
+    fn forward(&mut self) -> f64 {
+        let Self { packed, path, states, zbuf, xprep } = self;
+        let n_layers = packed.layers.len();
+        for il in 0..n_layers {
+            let layer = &packed.layers[il];
+            let hidden = layer.hidden;
+            let (prev, rest) = states.split_at_mut(il);
+            let state = &mut rest[0];
+            let xin: &[f64] = if il == 0 { &xprep[..] } else { &prev[il - 1].h[..] };
+            let z = &mut zbuf[..4 * hidden];
+            // MVO: per unit, four independent accumulator chains over one
+            // contiguous weight block (input rows, then recurrent rows —
+            // the legacy accumulation order).
+            for u in 0..hidden {
+                let block = layer.unit_block(u);
+                let bias = &layer.b[4 * u..4 * u + 4];
+                let mut acc = [bias[0], bias[1], bias[2], bias[3]];
+                let (wx, wh) = block.split_at(4 * layer.input_size);
+                for (w4, &xv) in wx.chunks_exact(4).zip(xin.iter()) {
+                    acc[0] += xv * w4[0];
+                    acc[1] += xv * w4[1];
+                    acc[2] += xv * w4[2];
+                    acc[3] += xv * w4[3];
+                }
+                for (w4, &hv) in wh.chunks_exact(4).zip(state.h.iter()) {
+                    acc[0] += hv * w4[0];
+                    acc[1] += hv * w4[1];
+                    acc[2] += hv * w4[2];
+                    acc[3] += hv * w4[3];
+                }
+                z[4 * u..4 * u + 4].copy_from_slice(&acc);
+            }
+            path.finish_z(z);
+            // EVO: gates + state update (runs only after every unit's
+            // pre-activations are final, so recurrent reads above saw the
+            // previous timestep's h throughout).
+            for u in 0..hidden {
+                let i = path.sigmoid(z[4 * u]);
+                let f = path.sigmoid(z[4 * u + 1]);
+                let g = path.tanh_gate(z[4 * u + 2]);
+                let o = path.sigmoid(z[4 * u + 3]);
+                let (c_new, h_new) = path.evo(i, f, g, o, state.c[u]);
+                state.c[u] = c_new;
+                state.h[u] = h_new;
+            }
+        }
+        let top = &states[n_layers - 1].h;
+        let mut y = packed.dense_b;
+        for (hv, wv) in top.iter().zip(&packed.dense_w) {
+            y += hv * wv;
+        }
+        path.finish_output(y)
+    }
+}
+
+impl<P: Datapath> StepKernel for ScalarKernel<P> {
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn input_size(&self) -> usize {
+        self.packed.input_size()
+    }
+
+    fn state_len(&self) -> usize {
+        self.packed.state_len()
+    }
+
+    fn step_normalized(&mut self, xs: &[f64], ys: &mut [f64]) {
+        ys[0] = self.step(xs);
+    }
+
+    fn reset_stream(&mut self, stream: usize) {
+        debug_assert_eq!(stream, 0);
+        self.reset();
+    }
+
+    fn export_state(&self, stream: usize, out: &mut [f64]) {
+        debug_assert_eq!(stream, 0);
+        let mut k = 0;
+        for s in &self.states {
+            out[k..k + s.h.len()].copy_from_slice(&s.h);
+            k += s.h.len();
+            out[k..k + s.c.len()].copy_from_slice(&s.c);
+            k += s.c.len();
+        }
+    }
+
+    fn import_state(&mut self, stream: usize, src: &[f64]) {
+        debug_assert_eq!(stream, 0);
+        let mut k = 0;
+        for s in &mut self.states {
+            let n = s.h.len();
+            s.h.copy_from_slice(&src[k..k + n]);
+            k += n;
+            s.c.copy_from_slice(&src[k..k + n]);
+            k += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::path::{FixedPath, FloatPath};
+    use crate::lstm::cell::{reference_step, CellScratch, LayerState};
+    use crate::lstm::params::LstmParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn float_path_matches_legacy_cell_step_exactly() {
+        let p = LstmParams::init(16, 15, 3, 1, 1234);
+        let mut kernel = ScalarKernel::new(PackedModel::shared(&p), FloatPath);
+        let mut states: Vec<LayerState> =
+            p.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect();
+        let mut scratch: Vec<CellScratch> = p.layers.iter().map(CellScratch::for_layer).collect();
+        let mut rng = Rng::new(7);
+        for _ in 0..60 {
+            let x: Vec<f64> = (0..16).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let a = kernel.step(&x);
+            let b = reference_step(&p, &mut states, &mut scratch, &x);
+            assert_eq!(a, b, "kernel diverged from legacy cell_step");
+        }
+    }
+
+    #[test]
+    fn reset_restores_initial_output() {
+        let p = LstmParams::init(16, 15, 2, 1, 5);
+        let mut kernel =
+            ScalarKernel::new(PackedModel::shared(&p), FixedPath::new(crate::fixed::FP16));
+        let x = vec![0.25; 16];
+        let y0 = kernel.step(&x);
+        let mut after_one = vec![0.0; kernel.state_len()];
+        kernel.export_state(0, &mut after_one);
+        assert!(after_one.iter().any(|&v| v != 0.0), "state must evolve");
+        kernel.step(&x);
+        let mut after_two = vec![0.0; kernel.state_len()];
+        kernel.export_state(0, &mut after_two);
+        assert_ne!(after_one, after_two, "state must carry");
+        kernel.reset();
+        assert_eq!(kernel.step(&x), y0);
+    }
+
+    #[test]
+    fn state_roundtrips_through_export_import() {
+        let p = LstmParams::init(8, 6, 2, 1, 11);
+        let mut a = ScalarKernel::new(PackedModel::shared(&p), FloatPath);
+        let mut rng = Rng::new(3);
+        for _ in 0..5 {
+            let x: Vec<f64> = (0..8).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            a.step(&x);
+        }
+        let mut snap = vec![0.0; a.state_len()];
+        a.export_state(0, &mut snap);
+        let mut b = ScalarKernel::new(a.packed().clone(), FloatPath);
+        b.import_state(0, &snap);
+        let x = vec![0.5; 8];
+        assert_eq!(a.step(&x), b.step(&x));
+    }
+}

@@ -1,0 +1,222 @@
+//! Multi-stream inference session: N independent sensor channels
+//! multiplexed over one [`BatchKernel`].
+//!
+//! Usage is submit/drain: callers queue at most one raw window per stream
+//! id ([`MultiStream::submit`]), then [`MultiStream::drain`] steps every
+//! pending stream in a single batched weight pass.  Streams with nothing
+//! queued this round keep their recurrent state untouched (their lanes
+//! are snapshotted around the pass), so channels may tick at different
+//! rates — exactly what a coordinator juggling N testbeds needs.
+
+use anyhow::{bail, Result};
+
+use std::sync::Arc;
+
+use super::batch::BatchKernel;
+use super::pack::PackedModel;
+use super::path::Datapath;
+use super::StepKernel;
+
+/// A fixed-capacity session of independent recurrent streams sharing one
+/// packed model and one batched kernel.
+#[derive(Debug, Clone)]
+pub struct MultiStream<P: Datapath> {
+    kernel: BatchKernel<P>,
+    /// Pending normalized inputs, stream-major.
+    xs: Vec<f64>,
+    pending: Vec<bool>,
+    /// Batched normalized outputs (scratch).
+    ys: Vec<f64>,
+    /// State snapshots of idle lanes during a partial drain.
+    stash: Vec<f64>,
+}
+
+impl<P: Datapath> MultiStream<P> {
+    pub fn new(packed: Arc<PackedModel>, path: P, capacity: usize) -> Self {
+        let kernel = BatchKernel::new(packed, path, capacity);
+        let input = kernel.input_size();
+        let state_len = kernel.state_len();
+        Self {
+            xs: vec![0.0; capacity * input],
+            pending: vec![false; capacity],
+            ys: vec![0.0; capacity],
+            stash: vec![0.0; capacity * state_len],
+            kernel,
+        }
+    }
+
+    /// Number of stream slots.
+    pub fn capacity(&self) -> usize {
+        self.kernel.batch()
+    }
+
+    pub fn packed(&self) -> &Arc<PackedModel> {
+        self.kernel.packed()
+    }
+
+    /// Streams with a window queued for the next drain.
+    pub fn pending(&self) -> usize {
+        self.pending.iter().filter(|&&p| p).count()
+    }
+
+    /// Zero one stream's recurrent state (new monitoring session on that
+    /// channel); any queued window stays queued.
+    pub fn reset(&mut self, stream: usize) {
+        self.kernel.reset_stream(stream);
+    }
+
+    pub fn reset_all(&mut self) {
+        self.kernel.reset_all();
+        self.pending.fill(false);
+    }
+
+    /// Queue `window` (raw acceleration samples) as `stream`'s next input.
+    pub fn submit(&mut self, stream: usize, window: &[f32]) -> Result<()> {
+        let input = self.kernel.input_size();
+        if stream >= self.capacity() {
+            bail!("stream {stream} out of range (capacity {})", self.capacity());
+        }
+        if window.len() != input {
+            bail!("stream {stream}: expected {input} samples, got {}", window.len());
+        }
+        if self.pending[stream] {
+            bail!("stream {stream} already has a window queued; drain first");
+        }
+        let norm = self.kernel.norm();
+        let slot = &mut self.xs[stream * input..(stream + 1) * input];
+        for (dst, &v) in slot.iter_mut().zip(window) {
+            *dst = norm.normalize_x(v as f64);
+        }
+        self.pending[stream] = true;
+        Ok(())
+    }
+
+    /// Step every pending stream in one batched pass.  `sink` receives
+    /// `(stream, estimate_metres)` per pending stream, in stream order.
+    /// Idle streams do not advance.  Returns the number drained.
+    pub fn drain(&mut self, mut sink: impl FnMut(usize, f64)) -> usize {
+        let n_pending = self.pending();
+        if n_pending == 0 {
+            return 0;
+        }
+        let state_len = self.kernel.state_len();
+        let partial = n_pending < self.capacity();
+        if partial {
+            for (b, &pend) in self.pending.iter().enumerate() {
+                if !pend {
+                    self.kernel
+                        .export_state(b, &mut self.stash[b * state_len..(b + 1) * state_len]);
+                }
+            }
+        }
+        self.kernel.step_normalized(&self.xs, &mut self.ys);
+        if partial {
+            for (b, &pend) in self.pending.iter().enumerate() {
+                if !pend {
+                    self.kernel.import_state(b, &self.stash[b * state_len..(b + 1) * state_len]);
+                }
+            }
+        }
+        let norm = self.kernel.norm();
+        for (b, pend) in self.pending.iter_mut().enumerate() {
+            if *pend {
+                sink(b, norm.denormalize_y(self.ys[b]));
+                *pend = false;
+            }
+        }
+        n_pending
+    }
+
+    /// Convenience single-channel step: submit + drain one stream.  Any
+    /// other streams with queued windows advance too (it is still one
+    /// batched pass); only `stream`'s estimate is returned.
+    pub fn step_one(&mut self, stream: usize, window: &[f32]) -> Result<f64> {
+        self.submit(stream, window)?;
+        let mut out = 0.0;
+        self.drain(|s, y| {
+            if s == stream {
+                out = y;
+            }
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::path::FloatPath;
+    use crate::kernel::ScalarKernel;
+    use crate::lstm::params::LstmParams;
+    use crate::util::Rng;
+
+    fn window(rng: &mut Rng) -> Vec<f32> {
+        (0..16).map(|_| rng.uniform(-80.0, 80.0) as f32).collect()
+    }
+
+    #[test]
+    fn interleaved_submits_match_dedicated_scalar_kernels() {
+        let p = LstmParams::init(16, 15, 3, 1, 2024);
+        let packed = PackedModel::shared(&p);
+        let mut ms = MultiStream::new(packed.clone(), FloatPath, 4);
+        let mut singles: Vec<_> =
+            (0..4).map(|_| ScalarKernel::new(packed.clone(), FloatPath)).collect();
+        let mut rng = Rng::new(55);
+        for round in 0..30 {
+            // Streams tick at different rates: stream b joins every (b+1)th
+            // round, so most drains are partial.
+            let mut expected = Vec::new();
+            for b in 0..4 {
+                if round % (b + 1) == 0 {
+                    let w = window(&mut rng);
+                    ms.submit(b, &w).unwrap();
+                    expected.push((b, singles[b].step_window(&w)));
+                }
+            }
+            let mut got = Vec::new();
+            let n = ms.drain(|b, y| got.push((b, y)));
+            assert_eq!(n, expected.len());
+            assert_eq!(got.len(), expected.len());
+            for ((b_got, y_got), (b_want, y_want)) in got.iter().zip(&expected) {
+                assert_eq!(b_got, b_want);
+                assert_eq!(y_got, y_want, "stream {b_got} diverged on round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn submit_guards() {
+        let p = LstmParams::init(16, 15, 1, 1, 3);
+        let mut ms = MultiStream::new(PackedModel::shared(&p), FloatPath, 2);
+        assert!(ms.submit(2, &[0.0; 16]).is_err(), "out of range");
+        assert!(ms.submit(0, &[0.0; 8]).is_err(), "wrong window length");
+        ms.submit(0, &[0.0; 16]).unwrap();
+        assert!(ms.submit(0, &[0.0; 16]).is_err(), "double submit");
+        assert_eq!(ms.pending(), 1);
+        assert_eq!(ms.drain(|_, _| {}), 1);
+        assert_eq!(ms.pending(), 0);
+    }
+
+    #[test]
+    fn step_one_returns_the_requested_stream() {
+        let p = LstmParams::init(16, 15, 2, 1, 13);
+        let packed = PackedModel::shared(&p);
+        let mut ms = MultiStream::new(packed.clone(), FloatPath, 3);
+        let mut single = ScalarKernel::new(packed, FloatPath);
+        let mut rng = Rng::new(21);
+        // Stream 2 has a window queued too; step_one(0, ..) drains both
+        // but must return stream 0's estimate, not the last drained.
+        let w2 = window(&mut rng);
+        ms.submit(2, &w2).unwrap();
+        let w0 = window(&mut rng);
+        let want = single.step_window(&w0);
+        assert_eq!(ms.step_one(0, &w0).unwrap(), want);
+    }
+
+    #[test]
+    fn empty_drain_is_a_no_op() {
+        let p = LstmParams::init(16, 15, 1, 1, 3);
+        let mut ms = MultiStream::new(PackedModel::shared(&p), FloatPath, 2);
+        assert_eq!(ms.drain(|_, _| panic!("nothing to drain")), 0);
+    }
+}

@@ -6,18 +6,55 @@
 //! * **Layer 1/2 (build time)** — the 3-layer/15-unit LSTM surrogate of the
 //!   DROPBEAR Euler-Bernoulli beam, authored in JAX with a fused Pallas cell
 //!   kernel, trained once and AOT-lowered to HLO text under `artifacts/`.
-//! * **Layer 3 (this crate)** — the runtime system: a PJRT executor for the
-//!   AOT artifacts ([`runtime`]), a real-time structural-health-monitoring
-//!   coordinator ([`coordinator`]), the FPGA accelerator simulator that
-//!   reproduces the paper's HLS/HDL design-space study ([`fpga`]), the beam
-//!   physics substrate ([`beam`]), a from-scratch LSTM engine + trainer
-//!   ([`lstm`]), and the evaluation harness regenerating every table and
-//!   figure in the paper ([`eval`]).
+//! * **Layer 3 (this crate)** — the runtime system, organized around one
+//!   central compute asset: the batched inference kernel layer.
+//!
+//! ## Module map
+//!
+//! ```text
+//!                      serving / evaluation front-ends
+//!   [cli] [coordinator] [eval] [runtime]            [examples/, benches/]
+//!        \      |          |      |
+//!         v     v          v      v
+//!   [lstm::Network]  [lstm::QuantizedNetwork]  [fpga::FpgaEngine]
+//!            \               |                  /
+//!             v              v                 v
+//!   +--------------------------------------------------------+
+//!   | kernel — packed weights, Scalar/Batch step kernels,    |
+//!   |          MultiStream sessions (THE LSTM compute core)  |
+//!   +--------------------------------------------------------+
+//!              |                         |
+//!              v                         v
+//!         [fixed] Q-format + LUT    [beam] physics workload
+//! ```
+//!
+//! * [`kernel`] — the unified batched inference kernel layer: the
+//!   gate-interleaved packed weight layout ([`kernel::PackedModel`]), the
+//!   allocation-free [`kernel::StepKernel`] steppers
+//!   ([`kernel::ScalarKernel`] single stream, [`kernel::BatchKernel`] B
+//!   streams in lockstep per weight pass) over the float or fixed-point
+//!   [`kernel::Datapath`], and [`kernel::MultiStream`] submit/drain
+//!   sessions multiplexing N sensor channels over one engine.
+//! * [`lstm`] — parameter container + `weights.bin` interchange, the
+//!   float/quantized network front-ends (now thin wrappers over
+//!   [`kernel`]), the BPTT trainer and the Fig.-1 architecture sweep.
+//! * [`fixed`] — Q-format fixed-point arithmetic + LUT activations, the
+//!   FPGA datapath's number system.
+//! * [`fpga`] — the accelerator simulator: platform models, HLS/HDL
+//!   schedule models, and the bit-exact cycle-charging engine.
+//! * [`coordinator`] — the real-time monitoring service: single-stream
+//!   and multi-channel streaming pipelines, backend registry (including
+//!   batched multi-channel backends), TCP serving, metrics, watchdog.
+//! * [`runtime`] — PJRT execution of the AOT artifacts (stubbed unless
+//!   built with the `xla-runtime` feature), manifest parsing.
+//! * [`beam`] — the Euler-Bernoulli beam physics substrate and virtual
+//!   DROPBEAR testbed (the workload generator).
+//! * [`estimator`] / [`eval`] — classical baseline + paper tables/figures.
 //!
 //! The environment is fully offline, so the crate also carries its own
 //! infrastructure substrates: [`util`] (RNG/stats/JSON), [`config`]
-//! (TOML-subset), [`bench`] (criterion-like harness) and [`testutil`]
-//! (property testing).
+//! (TOML-subset), [`bench`] (criterion-like harness, including the
+//! `BENCH_kernel.json` kernel suite) and [`testutil`] (property testing).
 
 pub mod beam;
 pub mod bench;
@@ -28,6 +65,7 @@ pub mod estimator;
 pub mod eval;
 pub mod fixed;
 pub mod fpga;
+pub mod kernel;
 pub mod lstm;
 pub mod runtime;
 pub mod testutil;

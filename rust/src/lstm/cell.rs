@@ -1,9 +1,15 @@
 //! From-scratch float LSTM cell and stacked-network inference — the
 //! software baseline the paper ran on the cRIO RTOS / ARM A53, and the
 //! numeric reference the PJRT and FPGA paths are checked against.
+//!
+//! [`Network`] executes on the packed [`crate::kernel`] layer
+//! (`ScalarKernel<FloatPath>`); the row-major [`cell_step`] walk below is
+//! kept as the independent reference implementation the kernel's
+//! bit-compatibility is asserted against (see `kernel_equivalence`).
 
 use super::params::{LayerParams, LstmParams};
 use crate::fixed::activation::sigmoid_exact;
+use crate::kernel::{FloatPath, PackedModel, ScalarKernel};
 
 /// Per-layer recurrent state.
 #[derive(Debug, Clone)]
@@ -68,72 +74,70 @@ pub fn cell_step(layer: &LayerParams, x: &[f64], state: &mut LayerState, scratch
     }
 }
 
-/// Stacked-LSTM + dense-head inference engine with resident state.
+/// The legacy row-major reference walk: one full network step via
+/// [`cell_step`] plus the dense head, on caller-owned state.  This is the
+/// single independent implementation the packed kernels are property-
+/// checked against (`kernel_equivalence`) and benchmarked against
+/// (`bench::kernel`) — keep it boring and unoptimized.
+pub fn reference_step(
+    params: &LstmParams,
+    states: &mut [LayerState],
+    scratch: &mut [CellScratch],
+    x: &[f64],
+) -> f64 {
+    for il in 0..params.layers.len() {
+        let (prev, rest) = states.split_at_mut(il);
+        if il == 0 {
+            cell_step(&params.layers[il], x, &mut rest[0], &mut scratch[il]);
+        } else {
+            let xin = &prev[il - 1].h;
+            cell_step(&params.layers[il], xin, &mut rest[0], &mut scratch[il]);
+        }
+    }
+    let top = &states[params.layers.len() - 1].h;
+    let mut y = params.dense_b[0];
+    for (hv, wv) in top.iter().zip(&params.dense_w) {
+        y += hv * wv;
+    }
+    y
+}
+
+/// Stacked-LSTM + dense-head inference engine with resident state,
+/// running on the packed float kernel.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Source parameters, kept for introspection/serialization.  The
+    /// kernel runs on a packed snapshot taken at construction — mutating
+    /// this field does NOT affect inference; build a new `Network`.
     pub params: LstmParams,
-    states: Vec<LayerState>,
-    scratch: Vec<CellScratch>,
-    xbuf: Vec<f64>,
+    kernel: ScalarKernel<FloatPath>,
 }
 
 impl Network {
     pub fn new(params: LstmParams) -> Self {
-        let states = params.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect();
-        let scratch = params.layers.iter().map(CellScratch::for_layer).collect();
-        let input = params.input_size();
-        Self { params, states, scratch, xbuf: vec![0.0; input] }
+        let kernel = ScalarKernel::new(PackedModel::shared(&params), FloatPath);
+        Self { params, kernel }
     }
 
     pub fn reset(&mut self) {
-        for s in &mut self.states {
-            s.reset();
-        }
+        self.kernel.reset();
     }
 
     pub fn states(&self) -> &[LayerState] {
-        &self.states
+        self.kernel.states()
     }
 
     /// One step on a *normalized* feature vector; returns the normalized
     /// model output (before denormalization).
     pub fn step_normalized(&mut self, x: &[f64]) -> f64 {
-        debug_assert_eq!(x.len(), self.params.input_size());
-        let n_layers = self.params.layers.len();
-        for il in 0..n_layers {
-            // Split borrows: previous layer's h is the input for layer il.
-            let (prev, rest) = self.states.split_at_mut(il);
-            let state = &mut rest[0];
-            let layer = &self.params.layers[il];
-            let scratch = &mut self.scratch[il];
-            if il == 0 {
-                cell_step(layer, x, state, scratch);
-            } else {
-                // Copy input h to scratch.xc prefix inside cell_step via a
-                // temporary borrow of the previous state's h.
-                let xin = &prev[il - 1].h;
-                cell_step(layer, xin, state, scratch);
-            }
-        }
-        let top = &self.states[n_layers - 1].h;
-        let mut y = self.params.dense_b[0];
-        for (hv, wv) in top.iter().zip(&self.params.dense_w) {
-            y += hv * wv;
-        }
-        y
+        self.kernel.step(x)
     }
 
     /// Full sensor-to-estimate step: raw acceleration window in, roller
-    /// position estimate (metres) out.  Allocation-free (hot path).
+    /// position estimate (metres) out.  Allocation-free (hot path): the
+    /// kernel normalizes straight into its own input slot.
     pub fn infer_window(&mut self, window: &[f32]) -> f64 {
-        let norm = self.params.norm;
-        for (dst, &v) in self.xbuf.iter_mut().zip(window) {
-            *dst = norm.normalize_x(v as f64);
-        }
-        let x = std::mem::take(&mut self.xbuf);
-        let y = self.step_normalized(&x);
-        self.xbuf = x;
-        norm.denormalize_y(y)
+        self.kernel.step_window(window)
     }
 }
 

@@ -3,6 +3,11 @@
 //! container + `weights.bin` interchange ([`params`]), BPTT+Adam trainer
 //! ([`train`]) and the Fig.-1 architecture sweep ([`sweep`]).
 //!
+//! Both inference front-ends execute on the shared packed
+//! [`crate::kernel`] layer; the row-major reference walks in [`cell`] and
+//! [`quantized`] remain as the independent implementations the kernels'
+//! bit-compatibility is checked against.
+//!
 //! The *production* weights come from the JAX path (`python/compile/train.py`
 //! → `artifacts/weights.bin`); this trainer exists so the paper's model-
 //! selection study (Fig. 1) is reproducible without Python on the machine.
@@ -14,7 +19,7 @@ pub mod quantized;
 pub mod sweep;
 pub mod train;
 
-pub use cell::{cell_step, LayerState, Network};
+pub use cell::{cell_step, reference_step, LayerState, Network};
 pub use dataset::Dataset;
 pub use params::{LayerParams, LstmParams, Normalization};
 pub use quantized::QuantizedNetwork;

@@ -15,9 +15,15 @@
 //! The difference is bounded by a few ulp and covered by tolerance in the
 //! cross-checks.
 
+//! Like the float path, [`QuantizedNetwork`] executes on the packed
+//! [`crate::kernel`] layer (`ScalarKernel<FixedPath>`); the row-major
+//! [`quantized_cell_step`] below remains the independent reference the
+//! kernel's bit-exactness is asserted against.
+
 use super::cell::LayerState;
 use super::params::{LayerParams, LstmParams};
 use crate::fixed::{ActLut, QFormat};
+use crate::kernel::{FixedPath, PackedModel, ScalarKernel};
 
 /// Scratch for one quantized layer step.
 #[derive(Debug, Clone)]
@@ -77,70 +83,45 @@ pub fn quantized_cell_step(
     }
 }
 
-/// Stacked quantized network with resident (quantized) state.
+/// Stacked quantized network with resident (quantized) state, running on
+/// the packed fixed-point kernel.
 #[derive(Debug, Clone)]
 pub struct QuantizedNetwork {
+    /// Quantized parameters, kept for introspection.  The kernel runs on
+    /// a packed snapshot taken at construction — mutating this field does
+    /// NOT affect inference; build a new `QuantizedNetwork`.
     pub params: LstmParams,
     pub fmt: QFormat,
-    lut: ActLut,
-    states: Vec<LayerState>,
-    scratch: Vec<QScratch>,
-    xbuf: Vec<f64>,
+    kernel: ScalarKernel<FixedPath>,
 }
 
 impl QuantizedNetwork {
     /// `params` are quantized on construction (idempotent if already done).
     pub fn new(params: &LstmParams, fmt: QFormat) -> Self {
         let params = params.quantized(fmt);
-        let states = params.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect();
-        let scratch = params.layers.iter().map(QScratch::for_layer).collect();
-        let input = params.input_size();
-        Self { params, fmt, lut: ActLut::new(fmt), states, scratch, xbuf: vec![0.0; input] }
+        let kernel = ScalarKernel::new(PackedModel::shared(&params), FixedPath::new(fmt));
+        Self { params, fmt, kernel }
     }
 
     pub fn reset(&mut self) {
-        for s in &mut self.states {
-            s.reset();
-        }
+        self.kernel.reset();
     }
 
     pub fn states(&self) -> &[LayerState] {
-        &self.states
+        self.kernel.states()
     }
 
     /// One step on a normalized feature vector (quantizes it first);
     /// returns the quantized normalized output.
     pub fn step_normalized(&mut self, x: &[f64]) -> f64 {
-        let n_layers = self.params.layers.len();
-        for (dst, &src) in self.xbuf.iter_mut().zip(x) {
-            *dst = self.fmt.quantize(src);
-        }
-        for il in 0..n_layers {
-            let (prev, rest) = self.states.split_at_mut(il);
-            let state = &mut rest[0];
-            let layer = &self.params.layers[il];
-            let scratch = &mut self.scratch[il];
-            if il == 0 {
-                quantized_cell_step(layer, self.fmt, &self.lut, &self.xbuf, state, scratch);
-            } else {
-                let xin = &prev[il - 1].h;
-                quantized_cell_step(layer, self.fmt, &self.lut, xin, state, scratch);
-            }
-        }
-        let top = &self.states[n_layers - 1].h;
-        let mut acc = self.params.dense_b[0];
-        for (hv, wv) in top.iter().zip(&self.params.dense_w) {
-            acc += hv * wv;
-        }
-        self.fmt.quantize(acc)
+        self.kernel.step(x)
     }
 
     /// Raw acceleration window in, roller estimate (metres) out.
+    /// Allocation-free: normalization + input quantization happen in the
+    /// kernel's input slot.
     pub fn infer_window(&mut self, window: &[f32]) -> f64 {
-        let norm = self.params.norm;
-        let x: Vec<f64> = window.iter().map(|&v| norm.normalize_x(v as f64)).collect();
-        let y = self.step_normalized(&x);
-        norm.denormalize_y(y)
+        self.kernel.step_window(window)
     }
 }
 

@@ -1,0 +1,121 @@
+//! API-compatible stand-in for the PJRT executor, used when the crate is
+//! built without the `xla-runtime` feature (the default — the hermetic
+//! environment has no `xla` / `once_cell` crates to link against).
+//!
+//! `load` validates the manifest exactly like the real executor, then
+//! fails with a clear diagnostic — callers that force a PJRT backend get
+//! an actionable error instead of a link failure.  Tests/benches that
+//! would drive a real executor gate on `cfg!(feature = "xla-runtime")`
+//! in addition to artifact presence.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::arch::INPUT_SIZE;
+use crate::lstm::Normalization;
+
+use super::manifest::Manifest;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: this binary was built without the \
+                           `xla-runtime` feature (the xla/once_cell crates are not vendored \
+                           in the offline environment); use the native, quantized or \
+                           fpga-sim backend instead";
+
+/// Stub of the compiled one-step executable.  Never constructible —
+/// [`StepExecutor::load`] always errors after validating the manifest.
+pub struct StepExecutor {
+    norm: Normalization,
+}
+
+impl StepExecutor {
+    pub fn load(dir: &Path, precision: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(&manifest, precision)
+    }
+
+    pub fn from_manifest(manifest: &Manifest, precision: &str) -> Result<Self> {
+        let _ = manifest.step_artifact(precision)?;
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn norm(&self) -> Normalization {
+        self.norm
+    }
+
+    pub fn steps_run(&self) -> u64 {
+        0
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn step_normalized(&mut self, _x: &[f32]) -> Result<f64> {
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn infer_window(&mut self, _window: &[f32]) -> Result<f64> {
+        bail!("{}", UNAVAILABLE)
+    }
+}
+
+/// Stub of the chunked-sequence executable.
+pub struct SeqExecutor {
+    pub chunk: usize,
+}
+
+impl SeqExecutor {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let _ = manifest.seq_artifact()?;
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn run_chunk_normalized(&mut self, _xs: &[f32]) -> Result<Vec<f64>> {
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn infer_chunk(&mut self, _windows: &[[f32; INPUT_SIZE]]) -> Result<Vec<f64>> {
+        bail!("{}", UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let err = StepExecutor::load(Path::new("/nonexistent"), "fp32").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "{msg}");
+    }
+
+    #[test]
+    fn load_reports_stub_when_manifest_exists() {
+        // Build a minimal valid manifest so validation passes and the
+        // stub diagnostic (not a parse error) is surfaced.
+        let dir = std::env::temp_dir().join("hrd_stub_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+  "model": {"input_size": 16, "hidden": 15, "layers": 3, "op_count_per_step": 11536},
+  "artifacts": {"step_fp32": {"file": "step_fp32.hlo.txt", "ops": {"add": 1}}},
+  "seq_chunk": 32,
+  "l1_vmem_bytes": 4096,
+  "snr_db": {}
+}"#,
+        )
+        .unwrap();
+        let err = StepExecutor::load(&dir, "fp32").unwrap_err();
+        assert!(err.to_string().contains("xla-runtime"), "{err}");
+        let err = StepExecutor::load(&dir, "fp16").unwrap_err();
+        assert!(err.to_string().contains("fp16"), "{err}");
+    }
+}

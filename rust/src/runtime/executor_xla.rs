@@ -1,6 +1,12 @@
 //! PJRT execution of the AOT artifacts: load HLO text, compile once, then
 //! run single steps (resident recurrent state) or chunked sequences from
 //! the Rust hot path.  Python is never involved here.
+//!
+//! Compiled only with the `xla-runtime` feature: it needs the external
+//! `xla` and `once_cell` crates, which are not available in the hermetic
+//! build environment.  The default build uses the API-compatible stub in
+//! `executor_stub.rs` instead (loads fail cleanly; everything else in the
+//! system — the CPU, quantized and FPGA-sim backends — is unaffected).
 
 use std::path::Path;
 

@@ -21,6 +21,18 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+/// The PJRT executors need the `xla-runtime` feature; the default build
+/// substitutes a stub whose `load` always errors, so executor tests must
+/// skip even when artifacts exist.
+fn pjrt_dir() -> Option<PathBuf> {
+    if hrd_lstm::runtime::pjrt_runtime_available() {
+        artifacts_dir()
+    } else {
+        eprintln!("built without the xla-runtime feature — skipping PJRT executor test");
+        None
+    }
+}
+
 fn random_windows(n: usize, seed: u64) -> Vec<[f32; INPUT_SIZE]> {
     let mut rng = Rng::new(seed);
     (0..n)
@@ -36,7 +48,7 @@ fn random_windows(n: usize, seed: u64) -> Vec<[f32; INPUT_SIZE]> {
 
 #[test]
 fn pjrt_fp32_matches_native_engine() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = pjrt_dir() else { return };
     let params = LstmParams::load(&dir.join("weights.bin")).unwrap();
     let mut exe = StepExecutor::load(&dir, "fp32").unwrap();
     let mut native = Network::new(params);
@@ -52,7 +64,7 @@ fn pjrt_fp32_matches_native_engine() {
 
 #[test]
 fn pjrt_quantized_artifacts_match_rust_fixed_point() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = pjrt_dir() else { return };
     let params = LstmParams::load(&dir.join("weights.bin")).unwrap();
     // The python fake-quant kernel uses exact sigmoid/tanh; the Rust
     // engine uses the hardware LUT — agreement is within a few LSBs.
@@ -71,7 +83,7 @@ fn pjrt_quantized_artifacts_match_rust_fixed_point() {
 
 #[test]
 fn seq_executor_matches_step_executor() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = pjrt_dir() else { return };
     let mut step = StepExecutor::load(&dir, "fp32").unwrap();
     let mut seq = SeqExecutor::load(&dir).unwrap();
     let windows = random_windows(seq.chunk, 13);
@@ -86,7 +98,7 @@ fn seq_executor_matches_step_executor() {
 
 #[test]
 fn resident_state_carries_across_steps() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = pjrt_dir() else { return };
     let mut exe = StepExecutor::load(&dir, "fp32").unwrap();
     let w = [40.0f32; INPUT_SIZE];
     let y1 = exe.infer_window(&w).unwrap();

@@ -1,0 +1,255 @@
+//! Kernel-layer equivalence properties: the packed Scalar/Batch kernels
+//! must reproduce the legacy row-major reference walks — to the last ulp
+//! on the float datapath, bit-exactly on the fixed-point datapath — for
+//! arbitrary architectures, batch widths and stream interleavings.
+
+use hrd_lstm::fixed::{ActLut, QFormat, FP16, FP32, FP8};
+use hrd_lstm::kernel::{
+    BatchKernel, FixedPath, FloatPath, MultiStream, PackedModel, ScalarKernel, StepKernel,
+};
+use hrd_lstm::lstm::cell::{reference_step, CellScratch, LayerState};
+use hrd_lstm::lstm::quantized::{quantized_cell_step, QScratch};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::prop_assert;
+use hrd_lstm::testutil::PropRunner;
+use hrd_lstm::util::Rng;
+
+/// Batch widths from the ISSUE acceptance: degenerate, even, odd/ragged.
+const BATCHES: &[usize] = &[1, 4, 17];
+
+/// |a - b| within one ulp of the larger magnitude (equality included).
+fn ulp_close(a: f64, b: f64) -> bool {
+    a == b || (a - b).abs() <= f64::EPSILON * a.abs().max(b.abs())
+}
+
+/// Random small architecture (keeps cases fast while varying geometry).
+fn random_params(rng: &mut Rng) -> LstmParams {
+    let input = rng.range(2, 20);
+    let hidden = rng.range(1, 24);
+    let layers = rng.range(1, 4);
+    LstmParams::init(input, hidden, layers, 1, rng.next_u64())
+}
+
+/// Legacy float reference: the pre-kernel row-major walk.
+struct LegacyFloat {
+    p: LstmParams,
+    states: Vec<LayerState>,
+    scratch: Vec<CellScratch>,
+}
+
+impl LegacyFloat {
+    fn new(p: &LstmParams) -> Self {
+        Self {
+            states: p.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect(),
+            scratch: p.layers.iter().map(CellScratch::for_layer).collect(),
+            p: p.clone(),
+        }
+    }
+
+    fn step(&mut self, x: &[f64]) -> f64 {
+        reference_step(&self.p, &mut self.states, &mut self.scratch, x)
+    }
+}
+
+/// Legacy fixed-point reference: the pre-kernel quantized walk.
+struct LegacyQuant {
+    p: LstmParams,
+    fmt: QFormat,
+    lut: ActLut,
+    states: Vec<LayerState>,
+    scratch: Vec<QScratch>,
+    xq: Vec<f64>,
+}
+
+impl LegacyQuant {
+    fn new(p: &LstmParams, fmt: QFormat) -> Self {
+        let p = p.quantized(fmt);
+        Self {
+            states: p.layers.iter().map(|l| LayerState::zeros(l.hidden)).collect(),
+            scratch: p.layers.iter().map(QScratch::for_layer).collect(),
+            xq: vec![0.0; p.input_size()],
+            lut: ActLut::new(fmt),
+            fmt,
+            p,
+        }
+    }
+
+    fn step(&mut self, x: &[f64]) -> f64 {
+        for (dst, &v) in self.xq.iter_mut().zip(x) {
+            *dst = self.fmt.quantize(v);
+        }
+        for il in 0..self.p.layers.len() {
+            let (prev, rest) = self.states.split_at_mut(il);
+            if il == 0 {
+                quantized_cell_step(
+                    &self.p.layers[il],
+                    self.fmt,
+                    &self.lut,
+                    &self.xq,
+                    &mut rest[0],
+                    &mut self.scratch[il],
+                );
+            } else {
+                let xin = &prev[il - 1].h;
+                quantized_cell_step(
+                    &self.p.layers[il],
+                    self.fmt,
+                    &self.lut,
+                    xin,
+                    &mut rest[0],
+                    &mut self.scratch[il],
+                );
+            }
+        }
+        let top = &self.states[self.p.layers.len() - 1].h;
+        let mut acc = self.p.dense_b[0];
+        for (hv, wv) in top.iter().zip(&self.p.dense_w) {
+            acc += hv * wv;
+        }
+        self.fmt.quantize(acc)
+    }
+}
+
+#[test]
+fn scalar_kernel_matches_legacy_float_walk() {
+    PropRunner::new("scalar_vs_legacy_float").cases(24).run(|rng| {
+        let p = random_params(rng);
+        let input = p.input_size();
+        let mut kernel = ScalarKernel::new(PackedModel::shared(&p), FloatPath);
+        let mut legacy = LegacyFloat::new(&p);
+        for step in 0..25 {
+            let x: Vec<f64> = (0..input).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let a = kernel.step(&x);
+            let b = legacy.step(&x);
+            prop_assert!(ulp_close(a, b), "step {step}: kernel {a} vs legacy {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_kernel_matches_scalar_per_stream_float() {
+    PropRunner::new("batch_vs_scalar_float").cases(12).run(|rng| {
+        let p = random_params(rng);
+        let input = p.input_size();
+        let packed = PackedModel::shared(&p);
+        for &bsz in BATCHES {
+            let mut batch = BatchKernel::new(packed.clone(), FloatPath, bsz);
+            let mut singles: Vec<ScalarKernel<FloatPath>> =
+                (0..bsz).map(|_| ScalarKernel::new(packed.clone(), FloatPath)).collect();
+            let mut ys = vec![0.0; bsz];
+            for step in 0..15 {
+                let xs: Vec<f64> =
+                    (0..bsz * input).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                batch.step_normalized(&xs, &mut ys);
+                for (b, single) in singles.iter_mut().enumerate() {
+                    let y = single.step(&xs[b * input..(b + 1) * input]);
+                    prop_assert!(
+                        ulp_close(ys[b], y),
+                        "B={bsz} stream {b} step {step}: batch {} vs scalar {y}",
+                        ys[b]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_kernel_bit_exact_on_quantized_datapath() {
+    PropRunner::new("batch_vs_legacy_quant").cases(8).run(|rng| {
+        let p = random_params(rng);
+        let input = p.input_size();
+        for fmt in [FP32, FP16, FP8] {
+            let quantized = p.quantized(fmt);
+            let packed = PackedModel::shared(&quantized);
+            for &bsz in BATCHES {
+                let mut batch = BatchKernel::new(packed.clone(), FixedPath::new(fmt), bsz);
+                let mut refs: Vec<LegacyQuant> =
+                    (0..bsz).map(|_| LegacyQuant::new(&p, fmt)).collect();
+                let mut ys = vec![0.0; bsz];
+                for step in 0..10 {
+                    let xs: Vec<f64> =
+                        (0..bsz * input).map(|_| rng.uniform(-1.5, 1.5)).collect();
+                    batch.step_normalized(&xs, &mut ys);
+                    for (b, reference) in refs.iter_mut().enumerate() {
+                        let y = reference.step(&xs[b * input..(b + 1) * input]);
+                        prop_assert!(
+                            ys[b] == y,
+                            "{} B={bsz} stream {b} step {step}: batch {} != legacy {y}",
+                            fmt.name,
+                            ys[b]
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multistream_partial_drains_match_dedicated_kernels() {
+    PropRunner::new("multistream_vs_scalar").cases(12).run(|rng| {
+        let p = random_params(rng);
+        let input = p.input_size();
+        let packed = PackedModel::shared(&p);
+        let capacity = rng.range(2, 7);
+        let mut ms = MultiStream::new(packed.clone(), FloatPath, capacity);
+        let mut singles: Vec<ScalarKernel<FloatPath>> =
+            (0..capacity).map(|_| ScalarKernel::new(packed.clone(), FloatPath)).collect();
+        for round in 0..20 {
+            let mut expected: Vec<(usize, f64)> = Vec::new();
+            for b in 0..capacity {
+                if rng.chance(0.6) {
+                    let w: Vec<f32> =
+                        (0..input).map(|_| rng.uniform(-90.0, 90.0) as f32).collect();
+                    ms.submit(b, &w).map_err(|e| e.to_string())?;
+                    expected.push((b, singles[b].step_window(&w)));
+                }
+            }
+            // Occasionally reset a stream between rounds (both sides).
+            let mut got: Vec<(usize, f64)> = Vec::new();
+            let n = ms.drain(|b, y| got.push((b, y)));
+            prop_assert!(n == expected.len(), "round {round}: drained {n}");
+            prop_assert!(got.len() == expected.len());
+            for ((bg, yg), (bw, yw)) in got.iter().zip(&expected) {
+                prop_assert!(bg == bw, "round {round}: stream order");
+                prop_assert!(
+                    ulp_close(*yg, *yw),
+                    "round {round} stream {bg}: multistream {yg} vs scalar {yw}"
+                );
+            }
+            if rng.chance(0.15) {
+                let b = rng.range(0, capacity);
+                ms.reset(b);
+                singles[b].reset();
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn export_import_state_is_lossless_across_kernels() {
+    // Migrating a stream between a scalar kernel and a batch lane must
+    // preserve the trajectory exactly.
+    let p = LstmParams::init(16, 15, 3, 1, 99);
+    let packed = PackedModel::shared(&p);
+    let mut scalar = ScalarKernel::new(packed.clone(), FloatPath);
+    let mut rng = Rng::new(1);
+    for _ in 0..12 {
+        let x: Vec<f64> = (0..16).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        scalar.step(&x);
+    }
+    let mut snap = vec![0.0; scalar.state_len()];
+    scalar.export_state(0, &mut snap);
+    let mut batch = BatchKernel::new(packed, FloatPath, 5);
+    batch.import_state(3, &snap);
+    let xs: Vec<f64> = (0..5 * 16).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let mut ys = vec![0.0; 5];
+    batch.step_normalized(&xs, &mut ys);
+    let y_scalar = scalar.step(&xs[3 * 16..4 * 16]);
+    assert_eq!(ys[3], y_scalar, "lane 3 must continue the scalar trajectory");
+}

@@ -1,0 +1,58 @@
+//! Offline stand-in for the `log` facade: no registry, no levels to
+//! configure — `error!`/`warn!` always print to stderr, `info!`/`debug!`/
+//! `trace!` print only when `HRD_LOG_VERBOSE` is set, so the hot paths and
+//! the test suite stay quiet by default.
+
+/// True when verbose logging was requested via the environment.
+pub fn verbose() -> bool {
+    std::env::var_os("HRD_LOG_VERBOSE").is_some()
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { eprintln!("[error] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { eprintln!("[warn] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::verbose() {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::verbose() {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if $crate::verbose() {
+            eprintln!("[trace] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand() {
+        // Smoke: the macros must type-check with format captures.
+        let n = 3;
+        crate::debug!("value {n}");
+        crate::trace!("value {}", n);
+        crate::info!("value {n}");
+    }
+}

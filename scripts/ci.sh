@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, build, tests, and a quick kernel-bench
+# smoke that refreshes BENCH_kernel.json.
+#
+# rustfmt/clippy are skipped (with a notice) when the components are not
+# installed — the hermetic build image ships only cargo/rustc.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --all -- --check
+else
+  echo "== rustfmt not installed; skipping format check =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy (deny warnings) =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== clippy not installed; skipping lints =="
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test =="
+cargo test -q
+
+echo "== kernel bench smoke (BENCH_kernel.json) =="
+HRD_BENCH_FAST=1 cargo run --release --bin hrd -- bench --quick --out BENCH_kernel.json
+
+echo "CI OK"
