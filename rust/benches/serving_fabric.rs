@@ -1,0 +1,36 @@
+//! End-to-end serving-fabric bench: serial single-backend TCP serving vs
+//! the sharded deadline-aware fabric at shards in {1, 2, 4}, over a
+//! loopback socket with M synthetic DROPBEAR streams.  Writes
+//! `BENCH_serving.json` (the perf-trajectory artifact for the sched::
+//! layer) and, in full mode, asserts the ISSUE acceptance property: the
+//! widest fabric sustains a strictly higher rate than the serial
+//! baseline on the same host.
+
+use hrd_lstm::bench::serving::{run_serving_suite, ServingConfig};
+use hrd_lstm::lstm::LstmParams;
+
+fn main() {
+    let fast = std::env::var("HRD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast { ServingConfig::quick() } else { ServingConfig::full() };
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let params = if artifacts.join("weights.bin").exists() {
+        LstmParams::load(&artifacts.join("weights.bin")).unwrap()
+    } else {
+        LstmParams::init(16, 15, 3, 1, cfg.seed)
+    };
+    let out = std::path::PathBuf::from("BENCH_serving.json");
+    let summary = run_serving_suite(&params, &cfg, Some(&out)).unwrap();
+    println!("{}", summary.render());
+    println!("serving bench report written to {}", out.display());
+    if !fast {
+        // Acceptance: batching + sharding must beat one serial engine.
+        assert!(
+            summary.best_fabric_vs_serial > 1.0,
+            "fabric at {} shards did not beat the serial baseline ({:.2}x, serial {:.0} r/s)",
+            summary.best_fabric_shards,
+            summary.best_fabric_vs_serial,
+            summary.serial.sustained_rps
+        );
+        println!("\nPASS: sharded fabric sustains a higher rate than the serial backend");
+    }
+}

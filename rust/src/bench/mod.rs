@@ -7,6 +7,7 @@
 //! optionally dump JSON for EXPERIMENTS.md.
 
 pub mod kernel;
+pub mod serving;
 
 use std::time::{Duration, Instant};
 

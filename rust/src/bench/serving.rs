@@ -1,0 +1,413 @@
+//! Serving-fabric load generator: drives M synthetic DROPBEAR streams
+//! through a loopback TCP socket against (a) the legacy serial
+//! single-backend server and (b) the sharded deadline-aware fabric at
+//! several shard counts, and writes `BENCH_serving.json`.
+//!
+//! Two phases per scenario:
+//!
+//! 1. **Throughput** — closed-loop clients (send, wait, send) running
+//!    flat out; reports the sustained request rate and CLIENT-observed
+//!    round-trip latency percentiles.  Client-side timing is the only
+//!    accounting that is comparable across modes: the serial server's
+//!    own `latency_us` clocks just the `infer` call and hides the
+//!    single-thread queue wait, while the fabric's spans
+//!    enqueue-to-completion.
+//! 2. **Paced** — each stream offers requests at a fixed rate
+//!    (`paced_rate_hz`); reports the deadline-miss rate at that offered
+//!    load (the fabric's own miss verdict; client-side round-trip vs
+//!    deadline for the serial baseline, which tracks no deadlines).
+//!
+//! Workloads are pre-generated from the virtual DROPBEAR testbed
+//! (per-stream seeds via [`channel_seed`]), so generation cost never
+//! pollutes the serving measurement.  Shared by `hrd loadgen` and the
+//! `serving_fabric` bench binary.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::arch::INPUT_SIZE;
+use crate::beam::{ProfileKind, Testbed};
+use crate::coordinator::{channel_seed, Client, NativeBackend, Server};
+use crate::lstm::LstmParams;
+use crate::sched::{Fabric, FabricConfig};
+use crate::util::{stats, Json};
+
+/// Load-generator tuning.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Concurrent client streams (sessions).
+    pub streams: usize,
+    /// Closed-loop requests per stream in the throughput phase.
+    pub requests_per_stream: usize,
+    /// Fabric shard counts to sweep (the serial baseline always runs).
+    pub shard_counts: Vec<usize>,
+    /// Kernel lanes per shard.
+    pub batch: usize,
+    /// Per-request deadline.
+    pub deadline_us: f64,
+    /// Offered per-stream rate in the paced phase (<= 0 disables pacing).
+    pub paced_rate_hz: f64,
+    /// Paced requests per stream.
+    pub paced_requests: usize,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl ServingConfig {
+    /// Full measurement (the perf pass / acceptance numbers).
+    pub fn full() -> Self {
+        Self {
+            streams: 32,
+            requests_per_stream: 200,
+            shard_counts: vec![1, 2, 4],
+            batch: 8,
+            deadline_us: crate::arch::RTOS_PERIOD_US,
+            paced_rate_hz: 500.0,
+            paced_requests: 100,
+            seed: 42,
+        }
+    }
+
+    /// CI smoke: small M, short duration, same shape of report.
+    pub fn quick() -> Self {
+        Self {
+            streams: 8,
+            requests_per_stream: 40,
+            shard_counts: vec![1, 2, 4],
+            batch: 4,
+            deadline_us: crate::arch::RTOS_PERIOD_US,
+            paced_rate_hz: 400.0,
+            paced_requests: 20,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Serial,
+    Fabric(usize),
+}
+
+/// One scenario's measurements (`shards == 0` marks the serial baseline).
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub label: String,
+    pub shards: usize,
+    pub requests: u64,
+    pub wall_s: f64,
+    pub sustained_rps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub paced_requests: u64,
+    pub paced_miss_rate: f64,
+    pub shed: u64,
+}
+
+impl ScenarioReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.as_str())),
+            ("shards", Json::from(self.shards)),
+            ("requests", Json::from(self.requests as f64)),
+            ("wall_s", Json::from(self.wall_s)),
+            ("sustained_rps", Json::from(self.sustained_rps)),
+            ("p50_us", Json::from(self.p50_us)),
+            ("p99_us", Json::from(self.p99_us)),
+            ("paced_requests", Json::from(self.paced_requests as f64)),
+            ("paced_miss_rate", Json::from(self.paced_miss_rate)),
+            ("shed", Json::from(self.shed as f64)),
+        ])
+    }
+}
+
+/// Full suite output.
+#[derive(Debug, Clone)]
+pub struct ServingSummary {
+    pub serial: ScenarioReport,
+    pub fabric: Vec<ScenarioReport>,
+    /// Shard count of the widest fabric scenario (max shards, regardless
+    /// of the order `--shards` listed them).
+    pub best_fabric_shards: usize,
+    /// Sustained-rate ratio of the widest fabric over the serial baseline
+    /// (the acceptance number: > 1 means the fabric wins).
+    pub best_fabric_vs_serial: f64,
+}
+
+impl ServingSummary {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{:<12} {:>9} {:>10} {:>9} {:>9} {:>11} {:>6}\n",
+            "scenario", "requests", "rate r/s", "p50 us", "p99 us", "paced miss", "shed"
+        );
+        let mut row = |r: &ScenarioReport| {
+            s.push_str(&format!(
+                "{:<12} {:>9} {:>10.0} {:>9.1} {:>9.1} {:>10.2}% {:>6}\n",
+                r.label,
+                r.requests,
+                r.sustained_rps,
+                r.p50_us,
+                r.p99_us,
+                r.paced_miss_rate * 100.0,
+                r.shed
+            ));
+        };
+        row(&self.serial);
+        for f in &self.fabric {
+            row(f);
+        }
+        s.push_str(&format!(
+            "widest fabric ({} shards) vs serial sustained rate: {:.2}x",
+            self.best_fabric_shards, self.best_fabric_vs_serial
+        ));
+        s
+    }
+
+    pub fn to_json(&self, cfg: &ServingConfig) -> Json {
+        Json::obj(vec![
+            ("group", Json::from("serving")),
+            (
+                "config",
+                Json::obj(vec![
+                    ("streams", Json::from(cfg.streams)),
+                    ("requests_per_stream", Json::from(cfg.requests_per_stream)),
+                    ("batch", Json::from(cfg.batch)),
+                    ("deadline_us", Json::from(cfg.deadline_us)),
+                    ("paced_rate_hz", Json::from(cfg.paced_rate_hz)),
+                    ("paced_requests", Json::from(cfg.paced_requests)),
+                    (
+                        "shard_counts",
+                        Json::Arr(cfg.shard_counts.iter().map(|&n| Json::from(n)).collect()),
+                    ),
+                    ("seed", Json::from(cfg.seed as f64)),
+                ]),
+            ),
+            ("serial", self.serial.to_json()),
+            ("fabric", Json::Arr(self.fabric.iter().map(|f| f.to_json()).collect())),
+            (
+                "derived",
+                Json::obj(vec![
+                    ("best_fabric_shards", Json::from(self.best_fabric_shards)),
+                    ("best_fabric_vs_serial_sustained", Json::from(self.best_fabric_vs_serial)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Pre-generate every stream's windows (throughput + paced phases).
+fn generate_loads(cfg: &ServingConfig) -> Vec<Vec<[f32; INPUT_SIZE]>> {
+    let per_stream = cfg.requests_per_stream + cfg.paced_requests;
+    (0..cfg.streams)
+        .map(|s| {
+            Testbed::new(ProfileKind::Sweep, per_stream, channel_seed(cfg.seed, s))
+                .map(|w| w.features)
+                .collect()
+        })
+        .collect()
+}
+
+fn run_scenario(
+    params: &LstmParams,
+    cfg: &ServingConfig,
+    loads: &[Vec<[f32; INPUT_SIZE]>],
+    mode: Mode,
+) -> Result<ScenarioReport> {
+    let server = Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let (label, shards) = match mode {
+        Mode::Serial => ("serial".to_string(), 0),
+        Mode::Fabric(n) => (format!("fabric-{n}"), n),
+    };
+    let server_thread = match mode {
+        Mode::Serial => {
+            let params = params.clone();
+            std::thread::spawn(move || {
+                let mut backend = NativeBackend::new(&params);
+                let _ = server.run(&mut backend);
+            })
+        }
+        Mode::Fabric(n) => {
+            let mut fcfg = FabricConfig::new(n, cfg.batch);
+            fcfg.deadline_us = cfg.deadline_us;
+            // Closed-loop clients: at most `streams` in flight, so this
+            // depth never sheds on the happy path.
+            fcfg.queue_depth = (cfg.streams * 2).max(64);
+            let fabric = Arc::new(Fabric::new(params, fcfg)?);
+            std::thread::spawn(move || {
+                let _ = server.run_fabric(fabric);
+            })
+        }
+    };
+
+    // Phase 1: closed-loop throughput.
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for (s, load) in loads.iter().enumerate() {
+        let addr = addr.clone();
+        let windows: Vec<[f32; INPUT_SIZE]> = load[..cfg.requests_per_stream].to_vec();
+        joins.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut client = Client::with_session(&addr, &format!("stream-{s}"))?;
+            let mut lats = Vec::with_capacity(windows.len());
+            for w in &windows {
+                // Client-observed round trip — comparable across modes
+                // (the serial server's own latency_us hides queue wait).
+                let t = Instant::now();
+                client.infer_full(w, None)?;
+                lats.push(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(lats)
+        }));
+    }
+    let mut latencies = Vec::new();
+    for j in joins {
+        latencies.extend(j.join().expect("loadgen client panicked")?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let requests = latencies.len() as u64;
+
+    // Phase 2: fixed offered load, deadline-miss accounting.
+    let mut paced_total = 0u64;
+    let mut paced_misses = 0u64;
+    if cfg.paced_requests > 0 && cfg.paced_rate_hz > 0.0 {
+        let period = Duration::from_secs_f64(1.0 / cfg.paced_rate_hz);
+        let deadline_us = cfg.deadline_us;
+        let mut joins = Vec::new();
+        for (s, load) in loads.iter().enumerate() {
+            let addr = addr.clone();
+            let windows: Vec<[f32; INPUT_SIZE]> =
+                load[cfg.requests_per_stream..].to_vec();
+            joins.push(std::thread::spawn(move || -> Result<(u64, u64)> {
+                let mut client = Client::with_session(&addr, &format!("stream-{s}"))?;
+                let t0 = Instant::now();
+                let mut misses = 0u64;
+                for (k, w) in windows.iter().enumerate() {
+                    let due = t0 + period * k as u32;
+                    if let Some(sleep) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(sleep);
+                    }
+                    let t = Instant::now();
+                    let r = client.infer_full(w, Some(deadline_us))?;
+                    let rtt_us = t.elapsed().as_secs_f64() * 1e6;
+                    // The fabric reports its own miss verdict; the serial
+                    // server tracks no deadlines, so fall back to the
+                    // client-observed round trip (NOT the server's
+                    // latency_us, which hides the serial queue wait).
+                    if r.deadline_miss.unwrap_or(rtt_us > deadline_us) {
+                        misses += 1;
+                    }
+                }
+                Ok((windows.len() as u64, misses))
+            }));
+        }
+        for j in joins {
+            let (n, m) = j.join().expect("paced client panicked")?;
+            paced_total += n;
+            paced_misses += m;
+        }
+    }
+
+    // Final stats (shed count lives server-side), then shut down.
+    let mut ctl = Client::connect(&addr)?;
+    let final_stats = ctl.stats()?;
+    let shed = final_stats.get("shed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    ctl.shutdown()?;
+    server_thread.join().expect("server thread panicked");
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(ScenarioReport {
+        label,
+        shards,
+        requests,
+        wall_s,
+        sustained_rps: if wall_s > 0.0 { requests as f64 / wall_s } else { 0.0 },
+        p50_us: stats::percentile_sorted(&latencies, 50.0),
+        p99_us: stats::percentile_sorted(&latencies, 99.0),
+        paced_requests: paced_total,
+        paced_miss_rate: if paced_total == 0 {
+            0.0
+        } else {
+            paced_misses as f64 / paced_total as f64
+        },
+        shed,
+    })
+}
+
+/// Run the full suite: serial baseline, then the fabric at each
+/// configured shard count; optionally write `BENCH_serving.json`.
+pub fn run_serving_suite(
+    params: &LstmParams,
+    cfg: &ServingConfig,
+    out: Option<&Path>,
+) -> Result<ServingSummary> {
+    anyhow::ensure!(cfg.streams >= 1 && cfg.requests_per_stream >= 1, "empty workload");
+    let loads = generate_loads(cfg);
+    let serial = run_scenario(params, cfg, &loads, Mode::Serial)
+        .context("serial baseline scenario")?;
+    let mut fabric = Vec::with_capacity(cfg.shard_counts.len());
+    for &n in &cfg.shard_counts {
+        fabric.push(
+            run_scenario(params, cfg, &loads, Mode::Fabric(n))
+                .with_context(|| format!("fabric scenario with {n} shards"))?,
+        );
+    }
+    // "Widest" = max shard count, NOT list order (--shards "8,1" must not
+    // grade the acceptance ratio against the 1-shard run).
+    let widest = fabric.iter().max_by_key(|f| f.shards);
+    let best_fabric_shards = widest.map(|f| f.shards).unwrap_or(0);
+    let best_fabric_vs_serial = widest
+        .map(|f| f.sustained_rps / serial.sustained_rps.max(1e-9))
+        .unwrap_or(0.0);
+    let summary = ServingSummary { serial, fabric, best_fabric_shards, best_fabric_vs_serial };
+    if let Some(path) = out {
+        std::fs::write(path, summary.to_json(cfg).to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_suite_runs_and_reports() {
+        let params = LstmParams::init(16, 15, 3, 1, 7);
+        let cfg = ServingConfig {
+            streams: 3,
+            requests_per_stream: 6,
+            shard_counts: vec![1, 2],
+            batch: 2,
+            deadline_us: crate::arch::RTOS_PERIOD_US,
+            paced_rate_hz: 2000.0,
+            paced_requests: 4,
+            seed: 11,
+        };
+        let out = std::env::temp_dir().join("hrd_bench_serving_selftest.json");
+        let _ = std::fs::remove_file(&out);
+        let s = run_serving_suite(&params, &cfg, Some(&out)).unwrap();
+        assert_eq!(s.serial.shards, 0);
+        assert_eq!(s.serial.requests, 18);
+        assert_eq!(s.fabric.len(), 2);
+        for f in &s.fabric {
+            assert_eq!(f.requests, 18);
+            assert_eq!(f.paced_requests, 12);
+            assert!(f.sustained_rps > 0.0, "{f:?}");
+            assert_eq!(f.shed, 0, "closed loop must not shed: {f:?}");
+        }
+        assert!(s.best_fabric_vs_serial > 0.0);
+        assert_eq!(s.best_fabric_shards, 2);
+        assert!(!s.render().is_empty());
+        let j = Json::parse_file(&out).unwrap();
+        assert_eq!(j.get("group").unwrap().as_str(), Some("serving"));
+        assert_eq!(j.get("fabric").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j
+            .at(&["derived", "best_fabric_vs_serial_sustained"])
+            .unwrap()
+            .as_f64()
+            .is_some());
+    }
+}

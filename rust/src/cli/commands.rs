@@ -33,8 +33,20 @@ COMMANDS:
   bench     run the kernel micro-benchmark suite (packed scalar vs legacy,
             batched throughput scaling) and write BENCH_kernel.json
             --out <file>  --quick
-  serve-tcp run the TCP serving front-end (newline-delimited JSON)
+  serve-tcp run the TCP serving front-end (newline-delimited JSON).
+            Kernel-capable backends (native/quantized/fpga-sim) serve on
+            the sharded deadline-aware fabric; --shards 0 (or pjrt/modal)
+            selects the legacy serial single-backend path.
             --addr HOST:PORT (default 127.0.0.1:7433) + serve's options
+            --shards N  --batch B  --deadline-us D  --gather-us G
+            --shed {reject|evict-farthest}
+  loadgen   self-contained serving load generator: drives M synthetic
+            DROPBEAR streams through a loopback socket against the serial
+            backend and the fabric at several shard counts, writes
+            BENCH_serving.json
+            --streams M  --requests N  --shards "1,2,4"  --batch B
+            --deadline-us D  --rate-hz R  --paced-requests K
+            --out <file>  --quick
   tables    regenerate Tables I-IV (FPGA design-space study)
   pareto    design-space Pareto frontier + constrained recommendation
             --min-snr X  --max-dsps N
@@ -54,6 +66,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
     match args.command.as_str() {
         "serve" => serve(args),
         "serve-tcp" => serve_tcp(args),
+        "loadgen" => loadgen(args),
         "bench" => bench(args),
         "tables" => tables(),
         "pareto" => pareto(args),
@@ -96,7 +109,46 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?;
     cfg.parallelism = args.get_usize("parallelism", cfg.parallelism)?;
     cfg.channels = args.get_usize("channels", cfg.channels)?.max(1);
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?.max(1);
+    cfg.gather_us = args.get_f64("gather-us", cfg.gather_us)?.max(0.0);
+    cfg.shed = args.get_or("shed", &cfg.shed.clone()).to_string();
     Ok(cfg)
+}
+
+/// The fabric datapath for a backend kind, or `None` for kinds that
+/// cannot share a batched kernel session (pjrt is thread-pinned, modal
+/// has no kernel lowering).
+fn fabric_datapath(
+    kind: BackendKind,
+    precision: &str,
+) -> Result<Option<crate::sched::DatapathKind>> {
+    use crate::sched::DatapathKind;
+    Ok(match kind {
+        BackendKind::Native => Some(DatapathKind::Float),
+        BackendKind::Quantized | BackendKind::FpgaSim => {
+            let fmt = QFormat::by_name(precision)
+                .ok_or_else(|| anyhow::anyhow!("unknown precision {precision}"))?;
+            Some(DatapathKind::Fixed(fmt))
+        }
+        BackendKind::Pjrt | BackendKind::Modal => None,
+    })
+}
+
+/// Build a [`crate::sched::FabricConfig`] from the experiment config.
+fn fabric_config(
+    cfg: &ExperimentConfig,
+    datapath: crate::sched::DatapathKind,
+) -> Result<crate::sched::FabricConfig> {
+    let shed = crate::sched::ShedPolicy::parse(&cfg.shed)
+        .ok_or_else(|| anyhow::anyhow!("unknown shed policy {}", cfg.shed))?;
+    let mut f = crate::sched::FabricConfig::new(cfg.shards.max(1), cfg.batch);
+    f.deadline_us = cfg.deadline_us;
+    f.queue_depth = cfg.queue_depth;
+    f.gather_cap_us = cfg.gather_us;
+    f.shed = shed;
+    f.datapath = datapath;
+    Ok(f)
 }
 
 fn load_params(cfg: &ExperimentConfig) -> Result<LstmParams> {
@@ -236,27 +288,93 @@ fn serve_tcp(args: &Args) -> Result<i32> {
     let cfg = experiment_config(args)?;
     anyhow::ensure!(
         cfg.channels <= 1,
-        "serve-tcp is single-channel (one TCP engine owns the recurrent state); \
-         --channels applies to `serve`"
+        "serve-tcp multiplexes sessions itself; --channels applies to `serve`"
     );
     let params = load_params(&cfg)?;
-    let mut backend = build_backend(
-        cfg.backend,
-        &params,
-        &cfg.artifacts_dir,
-        &cfg.precision,
-        &cfg.platform,
-        cfg.parallelism,
-    )?;
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let server = crate::coordinator::Server::bind(addr)?;
-    println!(
-        "serving backend={} on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
-        cfg.backend.name(),
-        server.local_addr()?
-    );
-    let stats = server.run(backend.as_mut())?;
-    println!("served {} inferences ({} errors)", stats.inferred, stats.errors);
+    let datapath = fabric_datapath(cfg.backend, &cfg.precision)?;
+    match datapath {
+        Some(dp) if cfg.shards >= 1 => {
+            let fcfg = fabric_config(&cfg, dp)?;
+            let fabric = std::sync::Arc::new(crate::sched::Fabric::new(&params, fcfg)?);
+            println!(
+                "serving fabric backend={} shards={} batch={} deadline={}us on {} \
+                 (send {{\"cmd\":\"shutdown\"}} to stop)",
+                cfg.backend.name(),
+                fabric.shards(),
+                cfg.batch,
+                cfg.deadline_us,
+                server.local_addr()?
+            );
+            let snap = server.run_fabric(fabric)?;
+            println!(
+                "served {} requests (shed {}, p50 {:.1} us, p99 {:.1} us, \
+                 deadline miss rate {:.4})",
+                snap.completed, snap.shed, snap.p50_us, snap.p99_us, snap.miss_rate
+            );
+        }
+        _ => {
+            if cfg.shards >= 1 && datapath.is_none() {
+                eprintln!(
+                    "note: backend {} is not fabric-capable; serving on the serial path",
+                    cfg.backend.name()
+                );
+            }
+            let mut backend = build_backend(
+                cfg.backend,
+                &params,
+                &cfg.artifacts_dir,
+                &cfg.precision,
+                &cfg.platform,
+                cfg.parallelism,
+            )?;
+            println!(
+                "serving backend={} (serial) on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
+                cfg.backend.name(),
+                server.local_addr()?
+            );
+            let stats = server.run(backend.as_mut())?;
+            println!("served {} inferences ({} errors)", stats.inferred, stats.errors);
+        }
+    }
+    Ok(0)
+}
+
+/// Self-contained serving load generator: loopback server + M synthetic
+/// DROPBEAR client streams, serial baseline vs fabric at several shard
+/// counts; writes `BENCH_serving.json`.
+fn loadgen(args: &Args) -> Result<i32> {
+    use crate::bench::serving::{run_serving_suite, ServingConfig};
+    let mut scfg =
+        if args.has_flag("quick") { ServingConfig::quick() } else { ServingConfig::full() };
+    scfg.streams = args.get_usize("streams", scfg.streams)?.max(1);
+    scfg.requests_per_stream = args.get_usize("requests", scfg.requests_per_stream)?.max(1);
+    scfg.batch = args.get_usize("batch", scfg.batch)?.max(1);
+    scfg.deadline_us = args.get_f64("deadline-us", scfg.deadline_us)?;
+    scfg.paced_rate_hz = args.get_f64("rate-hz", scfg.paced_rate_hz)?;
+    scfg.paced_requests = args.get_usize("paced-requests", scfg.paced_requests)?;
+    scfg.seed = args.get_u64("seed", scfg.seed)?;
+    if let Some(list) = args.get("shards") {
+        let counts: std::result::Result<Vec<usize>, _> =
+            list.split(',').map(|s| s.trim().parse::<usize>()).collect();
+        scfg.shard_counts = counts?;
+        anyhow::ensure!(
+            !scfg.shard_counts.is_empty() && scfg.shard_counts.iter().all(|&n| n >= 1),
+            "--shards needs a comma-separated list of counts >= 1"
+        );
+    }
+    // NOTE: not experiment_config() — loadgen's --shards takes a LIST.
+    let mut ecfg = ExperimentConfig::default();
+    if let Some(d) = args.get("artifacts") {
+        ecfg.artifacts_dir = PathBuf::from(d);
+    }
+    ecfg.seed = scfg.seed;
+    let params = load_params(&ecfg)?;
+    let out = PathBuf::from(args.get_or("out", "BENCH_serving.json"));
+    let summary = run_serving_suite(&params, &scfg, Some(&out))?;
+    println!("{}", summary.render());
+    println!("serving bench report written to {}", out.display());
     Ok(0)
 }
 

@@ -74,6 +74,16 @@ pub struct ExperimentConfig {
     /// Concurrent sensor channels; >1 selects the batched multi-channel
     /// pipeline (one kernel weight pass serves all channels per step).
     pub channels: usize,
+    /// Shard workers in the TCP serving fabric (`serve-tcp`); 0 forces
+    /// the legacy serial single-backend path.
+    pub shards: usize,
+    /// Kernel lanes (= micro-batch width = resident sessions) per shard.
+    pub batch: usize,
+    /// Upper bound on one adaptive micro-batch gather wait, microseconds.
+    pub gather_us: f64,
+    /// Load-shedding policy for full shard queues
+    /// ("reject" | "evict-farthest").
+    pub shed: String,
 }
 
 impl Default for ExperimentConfig {
@@ -91,6 +101,10 @@ impl Default for ExperimentConfig {
             platform: "u55c".into(),
             parallelism: 15,
             channels: 1,
+            shards: 1,
+            batch: 8,
+            gather_us: 200.0,
+            shed: "reject".into(),
         }
     }
 }
@@ -120,6 +134,10 @@ impl ExperimentConfig {
             platform: doc.get_str("fpga.platform", &d.platform),
             parallelism: doc.get_i64("fpga.parallelism", d.parallelism as i64).max(1) as usize,
             channels: doc.get_i64("channels", d.channels as i64).max(1) as usize,
+            shards: doc.get_i64("sched.shards", d.shards as i64).max(0) as usize,
+            batch: doc.get_i64("sched.batch", d.batch as i64).max(1) as usize,
+            gather_us: doc.get_f64("sched.gather_us", d.gather_us).max(0.0),
+            shed: doc.get_str("sched.shed", &d.shed),
         }
     }
 }
@@ -134,6 +152,9 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Pjrt);
         assert_eq!(c.deadline_us, 500.0);
         assert_eq!(c.steps, 2000);
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.batch, 8);
+        assert_eq!(c.shed, "reject");
     }
 
     #[test]
@@ -148,6 +169,12 @@ deadline_us = 250.0
 [fpga]
 platform = "zcu104"
 parallelism = 2
+
+[sched]
+shards = 4
+batch = 16
+gather_us = 50.0
+shed = "evict-farthest"
 "#,
         )
         .unwrap();
@@ -157,6 +184,16 @@ parallelism = 2
         assert_eq!(c.steps, 100);
         assert_eq!(c.platform, "zcu104");
         assert_eq!(c.parallelism, 2);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.batch, 16);
+        assert_eq!(c.gather_us, 50.0);
+        assert_eq!(c.shed, "evict-farthest");
+    }
+
+    #[test]
+    fn serial_fallback_via_zero_shards() {
+        let doc = TomlDoc::parse("[sched]\nshards = 0\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).shards, 0);
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! the kernel-backed [`MultiBackend`]s), lock-free metrics ([`metrics`])
 //! and the RTOS/CPU baseline timing models ([`rtos`]).  Python never
 //! appears here — the PJRT backend executes the AOT artifacts directly.
+//!
+//! TCP serving ([`server`]) runs in one of two modes: the legacy serial
+//! path (every client multiplexed onto one backend — the baseline) or
+//! the sharded deadline-aware fabric ([`crate::sched`]), where
+//! connection handlers submit straight into per-shard micro-batching
+//! workers.
 
 pub mod backend;
 pub mod metrics;
@@ -24,6 +30,6 @@ pub use pipeline::{
     channel_seed, run_streaming, run_streaming_multi, ChannelRun, Estimate, Pacing,
 };
 pub use rtos::{CpuModel, RtosDeadline, ARM_A53, CRIO_ATOM};
-pub use server::{Client, Server, ServerStats};
+pub use server::{Client, InferReply, Server, ServerStats};
 pub use trace::{ReplayReport, Trace, TraceStep};
 pub use watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};

@@ -1,51 +1,92 @@
 //! Network serving front-end — the Fig.-4 "host PC" interface as a real
-//! service: newline-delimited JSON over TCP, many clients multiplexed
-//! onto ONE inference engine (the backend owns recurrent state and, for
-//! PJRT, is pinned to the inference thread).
+//! service: newline-delimited JSON over TCP, in two modes:
+//!
+//! * [`Server::run`] — legacy serial mode: many clients multiplexed onto
+//!   ONE inference engine (the backend owns recurrent state and, for
+//!   PJRT, is pinned to the inference thread).  This is the baseline the
+//!   serving benches compare against.
+//! * [`Server::run_fabric`] — fabric mode: connection handlers submit
+//!   straight into the sharded deadline-aware [`crate::sched::Fabric`];
+//!   there is no central inference thread.  Sessions are named by the
+//!   client (`"session"` field) and survive reconnects; `stats` reports
+//!   the fabric's [`crate::sched::SchedSnapshot`].
 //!
 //! Protocol (one JSON object per line):
 //!
 //! ```text
-//! -> {"id": 7, "features": [16 floats]}
-//! <- {"id": 7, "estimate": 0.2031, "latency_us": 4.2}
-//! -> {"cmd": "reset"}        <- {"ok": true}
-//! -> {"cmd": "stats"}        <- {"inferred": N, "p50_us": ..., ...}
-//! -> {"cmd": "shutdown"}     <- {"ok": true}   (stops the server)
+//! -> {"id": 7, "features": [16 floats],
+//!     "session": "rig-a",        (optional; fabric mode routing)
+//!     "deadline_us": 450}        (optional; fabric mode per-request)
+//! <- {"id": 7, "estimate": 0.2031, "latency_us": 4.2, ...}
+//!    (fabric mode adds "deadline_miss", "shard", "lane";
+//!     a shed request gets {"id": 7, "error": "...", "shed": true})
+//! -> {"cmd": "reset"}            <- {"ok": true}
+//!    (fabric mode: {"cmd": "reset", "session": "rig-a"})
+//! -> {"cmd": "stats"}            <- {"inferred": N, "p50_us": ..., ...}
+//! -> {"cmd": "shutdown"}         <- {"ok": true}   (stops the server)
 //! ```
+//!
+//! Request `id`s are opaque tokens: whatever JSON value the client sent
+//! (64-bit ints beyond 2^53, strings, ...) is echoed back *verbatim*,
+//! never round-tripped through `f64`.
+//!
+//! Session names starting with `conn/` are reserved (anonymous
+//! per-connection streams) and rejected when supplied by a client.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
+use crate::sched::{Fabric, SchedSnapshot};
 use crate::util::{stats, Json};
 
 use super::backend::Backend;
 
+/// Accept-loop poll period (the listener is non-blocking so the
+/// shutdown handle works even when no client ever connects).
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+/// Socket read timeout; bounds how long a connection handler can ignore
+/// the shutdown flag while waiting for an idle client.
+const READ_POLL: Duration = Duration::from_millis(100);
+
 /// One parsed client request.
 enum Request {
-    Infer { id: f64, features: Box<[f32; INPUT_SIZE]> },
-    Reset,
+    Infer {
+        /// The raw `id` token from the request line, echoed verbatim.
+        id: Option<String>,
+        /// Fabric-mode stream routing; serial mode ignores it.
+        session: Option<String>,
+        /// Fabric-mode per-request deadline override.
+        deadline_us: Option<f64>,
+        features: Box<[f32; INPUT_SIZE]>,
+    },
+    Reset {
+        session: Option<String>,
+    },
     Stats,
     Shutdown,
 }
 
 fn parse_request(line: &str) -> Result<Request> {
     let json = Json::parse(line)?;
+    let session = json.get("session").and_then(|s| s.as_str()).map(str::to_string);
     if let Some(cmd) = json.get("cmd").and_then(|c| c.as_str()) {
         return Ok(match cmd {
-            "reset" => Request::Reset,
+            "reset" => Request::Reset { session },
             "stats" => Request::Stats,
             "shutdown" => Request::Shutdown,
             other => anyhow::bail!("unknown cmd {other}"),
         });
     }
-    let id = json.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let id = raw_member(line, "id");
+    let deadline_us = json.get("deadline_us").and_then(|v| v.as_f64());
     let feats = json
         .get("features")
         .and_then(|f| f.as_arr())
@@ -55,8 +96,163 @@ fn parse_request(line: &str) -> Result<Request> {
     for (dst, v) in w.iter_mut().zip(feats) {
         *dst = v.as_f64().context("non-numeric feature")? as f32;
     }
-    Ok(Request::Infer { id, features: w })
+    Ok(Request::Infer { id, session, deadline_us, features: w })
 }
+
+// ---- opaque-token extraction ------------------------------------------
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Scan a JSON string whose opening quote is at `b[i]`; returns
+/// `(content_start, content_end, index_past_closing_quote)`.
+fn scan_string(b: &[u8], i: usize) -> Option<(usize, usize, usize)> {
+    if b.get(i) != Some(&b'"') {
+        return None;
+    }
+    let start = i + 1;
+    let mut j = start;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return Some((start, j, j + 1)),
+            _ => j += 1,
+        }
+    }
+    None
+}
+
+/// Scan one JSON value starting at `b[i]`; returns its end (exclusive).
+fn scan_value(b: &[u8], i: usize) -> Option<usize> {
+    match *b.get(i)? {
+        b'"' => scan_string(b, i).map(|(_, _, end)| end),
+        b'{' | b'[' => {
+            let mut depth = 0usize;
+            let mut j = i;
+            while j < b.len() {
+                match b[j] {
+                    b'"' => j = scan_string(b, j)?.2,
+                    b'{' | b'[' => {
+                        depth += 1;
+                        j += 1;
+                    }
+                    b'}' | b']' => {
+                        depth -= 1;
+                        j += 1;
+                        if depth == 0 {
+                            return Some(j);
+                        }
+                    }
+                    _ => j += 1,
+                }
+            }
+            None
+        }
+        _ => {
+            let mut j = i;
+            while j < b.len() && !b[j].is_ascii_whitespace() && !matches!(b[j], b',' | b'}' | b']')
+            {
+                j += 1;
+            }
+            (j > i).then_some(j)
+        }
+    }
+}
+
+/// Extract the *raw text* of a top-level object member — the opaque-id
+/// fix: a numeric id like 9007199254740993 (> 2^53) or a string id
+/// round-trips into the response byte for byte instead of being parsed
+/// into `f64` and mangled.
+fn raw_member(line: &str, key: &str) -> Option<String> {
+    let b = line.as_bytes();
+    let mut i = skip_ws(b, 0);
+    if b.get(i) != Some(&b'{') {
+        return None;
+    }
+    i += 1;
+    loop {
+        i = skip_ws(b, i);
+        match b.get(i)? {
+            b'}' => return None,
+            b',' => {
+                i += 1;
+                continue;
+            }
+            _ => {}
+        }
+        let (ks, ke, after_key) = scan_string(b, i)?;
+        i = skip_ws(b, after_key);
+        if b.get(i) != Some(&b':') {
+            return None;
+        }
+        i = skip_ws(b, i + 1);
+        let end = scan_value(b, i)?;
+        if &line[ks..ke] == key {
+            return Some(line[i..end].to_string());
+        }
+        i = end;
+    }
+}
+
+// ---- shutdown-aware line reading --------------------------------------
+
+/// Newline-framed reader that polls the shutdown flag instead of
+/// blocking forever on an idle socket (a `BufReader::read_line` would
+/// pin the connection handler — and with it a `Sender` keeping the
+/// serial inference loop alive — until the client went away).
+struct LineReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl LineReader {
+    fn new(stream: TcpStream) -> std::io::Result<Self> {
+        stream.set_read_timeout(Some(READ_POLL))?;
+        Ok(Self { stream, buf: Vec::new() })
+    }
+
+    /// Next line (without the terminator); `Ok(None)` on EOF or when the
+    /// shutdown flag is raised while idle.
+    fn next_line(&mut self, shutdown: &AtomicBool) -> std::io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop(); // the newline
+                return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+            }
+            if shutdown.load(Ordering::SeqCst) {
+                return Ok(None);
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // EOF: deliver a final unterminated line (parity with
+                    // `BufReader::lines`, which yields it too).
+                    if self.buf.is_empty() {
+                        return Ok(None);
+                    }
+                    let line = std::mem::take(&mut self.buf);
+                    return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+// ---- serving statistics (serial mode) ---------------------------------
 
 /// Serving statistics snapshot.
 #[derive(Debug, Clone, Default)]
@@ -81,8 +277,10 @@ impl ServerStats {
     }
 }
 
+// ---- the server --------------------------------------------------------
+
 /// The TCP server.  `run` owns the backend on the calling thread;
-/// connection handler threads only parse/serialize.
+/// `run_fabric` lets every connection handler submit concurrently.
 pub struct Server {
     listener: TcpListener,
     shutdown: Arc<AtomicBool>,
@@ -99,65 +297,82 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Handle for shutting the server down from another thread.
+    /// Handle for shutting the server down from another thread.  Works
+    /// even while the server is idle: the accept loop polls, it never
+    /// parks in `accept(2)`.
     pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
         self.shutdown.clone()
     }
 
-    /// Serve until a client sends `shutdown` (or the handle is set).
+    /// Serve until a client sends `shutdown` (or the handle is set),
+    /// multiplexing every client onto ONE backend on this thread.
     /// Returns the final stats.
     pub fn run(self, backend: &mut dyn Backend) -> Result<ServerStats> {
         let (tx, rx) = channel::<(Request, Sender<String>)>();
         let shutdown = self.shutdown.clone();
         let listener = self.listener;
-        listener.set_nonblocking(false)?;
-        // Acceptor thread: one handler thread per connection.
-        let acceptor = std::thread::spawn(move || {
-            for conn in listener.incoming() {
+        listener.set_nonblocking(true)?;
+        // Acceptor thread: one handler thread per connection.  The
+        // original `tx` lives (only) here, so the inference loop below
+        // unblocks once the acceptor and every handler are gone.
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || loop {
                 if shutdown.load(Ordering::SeqCst) {
                     break;
                 }
-                let Ok(stream) = conn else { break };
-                let tx = tx.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_connection(stream, tx);
-                });
-            }
-        });
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Some platforms hand accepted sockets the
+                        // listener's nonblocking flag; handlers rely on
+                        // blocking reads with a timeout.
+                        let _ = stream.set_nonblocking(false);
+                        let tx = tx.clone();
+                        let shutdown = shutdown.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, tx, shutdown);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(_) => break,
+                }
+            })
+        };
 
         // Inference loop (this thread owns the backend).
         let mut stats = ServerStats::default();
         for (req, reply) in rx {
             match req {
-                Request::Infer { id, features } => {
+                Request::Infer { id, features, .. } => {
                     let t = Instant::now();
                     match backend.infer(&features) {
                         Ok(y) => {
                             let us = t.elapsed().as_secs_f64() * 1e6;
                             stats.inferred += 1;
                             stats.latencies_us.push(us);
-                            let _ = reply.send(
-                                Json::obj(vec![
-                                    ("id", Json::Num(id)),
-                                    ("estimate", Json::Num(y)),
-                                    ("latency_us", Json::Num(us)),
-                                ])
-                                .to_string(),
-                            );
+                            let mut fields = vec![
+                                ("estimate", Json::Num(y)),
+                                ("latency_us", Json::Num(us)),
+                            ];
+                            if let Some(raw) = id {
+                                fields.push(("id", Json::Raw(raw)));
+                            }
+                            let _ = reply.send(Json::obj(fields).to_string());
                         }
                         Err(e) => {
                             stats.errors += 1;
-                            let _ = reply.send(
-                                Json::obj(vec![
-                                    ("id", Json::Num(id)),
-                                    ("error", Json::Str(format!("{e:#}"))),
-                                ])
-                                .to_string(),
-                            );
+                            let mut fields =
+                                vec![("error", Json::Str(format!("{e:#}")))];
+                            if let Some(raw) = id {
+                                fields.push(("id", Json::Raw(raw)));
+                            }
+                            let _ = reply.send(Json::obj(fields).to_string());
                         }
                     }
                 }
-                Request::Reset => {
+                Request::Reset { .. } => {
                     backend.reset()?;
                     let _ = reply.send(Json::obj(vec![("ok", Json::Bool(true))]).to_string());
                 }
@@ -165,29 +380,73 @@ impl Server {
                     let _ = reply.send(stats.to_json().to_string());
                 }
                 Request::Shutdown => {
-                    self.shutdown.store(true, Ordering::SeqCst);
+                    shutdown.store(true, Ordering::SeqCst);
                     let _ = reply.send(Json::obj(vec![("ok", Json::Bool(true))]).to_string());
                     break;
                 }
             }
         }
-        // The acceptor is parked in `accept(2)`; it observes the shutdown
-        // flag on its next wakeup (or the process exits).  Detach.
-        drop(acceptor);
+        // Regression guard for the old blocking-accept bug: the acceptor
+        // observes the flag within one poll period, so this join cannot
+        // hang even if no client ever connected.
+        shutdown.store(true, Ordering::SeqCst);
+        let _ = acceptor.join();
         Ok(stats)
+    }
+
+    /// Serve on the sharded deadline-aware fabric: handlers submit
+    /// directly, nothing funnels through a single inference thread.
+    /// Returns the fabric metrics snapshot at shutdown.
+    pub fn run_fabric(self, fabric: Arc<Fabric>) -> Result<SchedSnapshot> {
+        let shutdown = self.shutdown.clone();
+        let listener = self.listener;
+        listener.set_nonblocking(true)?;
+        let mut handlers = Vec::new();
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    let fabric = fabric.clone();
+                    let shutdown = shutdown.clone();
+                    // Reap finished handlers so connection churn doesn't
+                    // accumulate dead JoinHandles over a long deployment;
+                    // still-running ones are joined at shutdown so the
+                    // final snapshot sees every reply flushed.
+                    handlers.retain(|h| !h.is_finished());
+                    handlers.push(std::thread::spawn(move || {
+                        let _ = handle_fabric_connection(stream, fabric, shutdown);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => break,
+            }
+        }
+        shutdown.store(true, Ordering::SeqCst);
+        for h in handlers {
+            let _ = h.join();
+        }
+        Ok(fabric.snapshot())
     }
 }
 
-fn handle_connection(stream: TcpStream, tx: Sender<(Request, Sender<String>)>) -> Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    tx: Sender<(Request, Sender<String>)>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
     // Request/response line protocol: Nagle + delayed-ACK would add
     // ~40-200 ms per round trip.
     stream.set_nodelay(true)?;
     let peer = stream.peer_addr()?;
     log::debug!("client connected: {peer}");
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = LineReader::new(stream)?;
+    while let Some(line) = reader.next_line(&shutdown)? {
         if line.trim().is_empty() {
             continue;
         }
@@ -210,11 +469,132 @@ fn handle_connection(stream: TcpStream, tx: Sender<(Request, Sender<String>)>) -
     Ok(())
 }
 
-/// Minimal blocking client for the line protocol (examples and tests).
+/// Distinguishes anonymous (per-connection) sessions.
+static CONN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Namespace for anonymous per-connection sessions.  Client-supplied
+/// session names starting with this prefix are rejected — otherwise a
+/// client naming its session "conn/0" would silently share (and be able
+/// to reset) an unrelated anonymous connection's recurrent stream.
+const ANON_SESSION_PREFIX: &str = "conn/";
+
+fn reserved_session(session: Option<&str>) -> bool {
+    session.map_or(false, |s| s.starts_with(ANON_SESSION_PREFIX))
+}
+
+fn handle_fabric_connection(
+    stream: TcpStream,
+    fabric: Arc<Fabric>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let peer = stream.peer_addr()?;
+    log::debug!("fabric client connected: {peer}");
+    // Requests without an explicit session share this connection-scoped
+    // stream; named sessions survive reconnects.
+    let conn_session =
+        format!("{ANON_SESSION_PREFIX}{}", CONN_SEQ.fetch_add(1, Ordering::Relaxed));
+    let mut writer = stream.try_clone()?;
+    let mut reader = LineReader::new(stream)?;
+    while let Some(line) = reader.next_line(&shutdown)? {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Ok(Request::Infer { id, session, .. }) if reserved_session(session.as_deref()) => {
+                let mut fields = vec![(
+                    "error",
+                    Json::Str(format!(
+                        "session prefix {ANON_SESSION_PREFIX:?} is reserved for \
+                         anonymous connections"
+                    )),
+                )];
+                if let Some(raw) = id {
+                    fields.push(("id", Json::Raw(raw)));
+                }
+                Json::obj(fields).to_string()
+            }
+            Ok(Request::Reset { session }) if reserved_session(session.as_deref()) => {
+                Json::obj(vec![(
+                    "error",
+                    Json::Str(format!(
+                        "session prefix {ANON_SESSION_PREFIX:?} is reserved for \
+                         anonymous connections"
+                    )),
+                )])
+                .to_string()
+            }
+            Ok(Request::Infer { id, session, deadline_us, features }) => {
+                let session = session.as_deref().unwrap_or(&conn_session);
+                let outcome = fabric
+                    .submit(session, &features, deadline_us)
+                    .and_then(|pending| pending.wait());
+                match outcome {
+                    Ok(c) => {
+                        let mut fields = vec![
+                            ("estimate", Json::Num(c.estimate)),
+                            ("latency_us", Json::Num(c.latency_us)),
+                            ("deadline_miss", Json::Bool(c.deadline_missed)),
+                            ("shard", Json::from(c.shard)),
+                            ("lane", Json::from(c.lane)),
+                        ];
+                        if let Some(raw) = id {
+                            fields.push(("id", Json::Raw(raw)));
+                        }
+                        Json::obj(fields).to_string()
+                    }
+                    Err(e) => {
+                        let mut fields = vec![
+                            ("error", Json::Str(format!("{e:#}"))),
+                            ("shed", Json::Bool(true)),
+                        ];
+                        if let Some(raw) = id {
+                            fields.push(("id", Json::Raw(raw)));
+                        }
+                        Json::obj(fields).to_string()
+                    }
+                }
+            }
+            Ok(Request::Reset { session }) => {
+                fabric.reset_session(session.as_deref().unwrap_or(&conn_session));
+                Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+            }
+            Ok(Request::Stats) => fabric.snapshot().to_json().to_string(),
+            Ok(Request::Shutdown) => {
+                shutdown.store(true, Ordering::SeqCst);
+                Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+            }
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+// ---- client ------------------------------------------------------------
+
+/// One parsed inference reply (fabric fields are `None` against a
+/// serial server).
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub estimate: f64,
+    pub latency_us: f64,
+    pub deadline_miss: Option<bool>,
+    pub shard: Option<usize>,
+    pub lane: Option<usize>,
+}
+
+/// Minimal blocking client for the line protocol (examples, loadgen and
+/// tests).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
-    next_id: f64,
+    next_id: u64,
+    session: Option<String>,
 }
 
 impl Client {
@@ -222,7 +602,16 @@ impl Client {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true)?;
         let writer = stream.try_clone()?;
-        Ok(Self { reader: BufReader::new(stream), writer, next_id: 1.0 })
+        Ok(Self { reader: BufReader::new(stream), writer, next_id: 1, session: None })
+    }
+
+    /// Connect with a named session: against a fabric server all infer
+    /// and reset requests target that recurrent stream, which survives
+    /// reconnects under the same name.
+    pub fn with_session(addr: &str, session: &str) -> Result<Self> {
+        let mut c = Self::connect(addr)?;
+        c.session = Some(session.to_string());
+        Ok(c)
     }
 
     fn round_trip(&mut self, msg: &str) -> Result<Json> {
@@ -230,6 +619,7 @@ impl Client {
         self.writer.write_all(b"\n")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "server closed the connection");
         let json = Json::parse(&line)?;
         if let Some(err) = json.get("error").and_then(|e| e.as_str()) {
             anyhow::bail!("server error: {err}");
@@ -237,24 +627,58 @@ impl Client {
         Ok(json)
     }
 
+    fn infer_msg(&mut self, features: &[f32; INPUT_SIZE], deadline_us: Option<f64>) -> String {
+        let feats: Vec<Json> = features.iter().map(|&v| Json::Num(v as f64)).collect();
+        let mut fields = vec![
+            ("id", Json::Num(self.next_id as f64)),
+            ("features", Json::Arr(feats)),
+        ];
+        if let Some(s) = &self.session {
+            fields.push(("session", Json::Str(s.clone())));
+        }
+        if let Some(d) = deadline_us {
+            fields.push(("deadline_us", Json::Num(d)));
+        }
+        self.next_id += 1;
+        Json::obj(fields).to_string()
+    }
+
     /// Send one feature window; returns (estimate, server latency us).
     pub fn infer(&mut self, features: &[f32; INPUT_SIZE]) -> Result<(f64, f64)> {
-        let feats: Vec<Json> = features.iter().map(|&v| Json::Num(v as f64)).collect();
-        let msg = Json::obj(vec![
-            ("id", Json::Num(self.next_id)),
-            ("features", Json::Arr(feats)),
-        ])
-        .to_string();
-        self.next_id += 1.0;
+        let r = self.infer_full(features, None)?;
+        Ok((r.estimate, r.latency_us))
+    }
+
+    /// Full round trip including the fabric-mode fields.
+    pub fn infer_full(
+        &mut self,
+        features: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+    ) -> Result<InferReply> {
+        let msg = self.infer_msg(features, deadline_us);
         let json = self.round_trip(&msg)?;
-        Ok((
-            json.get("estimate").and_then(|v| v.as_f64()).context("missing estimate")?,
-            json.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        ))
+        Ok(InferReply {
+            estimate: json
+                .get("estimate")
+                .and_then(|v| v.as_f64())
+                .context("missing estimate")?,
+            latency_us: json.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            deadline_miss: json.get("deadline_miss").map(|v| v == &Json::Bool(true)),
+            shard: json.get("shard").and_then(|v| v.as_f64()).map(|v| v as usize),
+            lane: json.get("lane").and_then(|v| v.as_f64()).map(|v| v as usize),
+        })
     }
 
     pub fn reset(&mut self) -> Result<()> {
-        self.round_trip(r#"{"cmd":"reset"}"#)?;
+        let msg = match &self.session {
+            Some(s) => Json::obj(vec![
+                ("cmd", Json::Str("reset".into())),
+                ("session", Json::Str(s.clone())),
+            ])
+            .to_string(),
+            None => r#"{"cmd":"reset"}"#.to_string(),
+        };
+        self.round_trip(&msg)?;
         Ok(())
     }
 
@@ -273,6 +697,7 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::NativeBackend;
     use crate::lstm::LstmParams;
+    use crate::sched::FabricConfig;
 
     fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<ServerStats>) {
         let server = Server::bind("127.0.0.1:0").unwrap();
@@ -345,5 +770,137 @@ mod tests {
         let mut client = Client::connect(&addr.to_string()).unwrap();
         client.shutdown().unwrap();
         handle.join().unwrap();
+    }
+
+    /// Satellite regression: ids beyond 2^53 and non-numeric ids must
+    /// round-trip verbatim (the old server parsed them into f64).
+    #[test]
+    fn opaque_ids_round_trip_unmangled() {
+        let (addr, handle) = start_server();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let feats: Vec<String> = (0..INPUT_SIZE).map(|_| "0.5".to_string()).collect();
+        let feats = feats.join(",");
+        for (id_token, expect) in [
+            ("9007199254740993", r#""id":9007199254740993"#), // 2^53 + 1
+            (r#""req-abc.42""#, r#""id":"req-abc.42""#),
+            ("18446744073709551615", r#""id":18446744073709551615"#), // u64::MAX
+        ] {
+            let msg = format!(r#"{{"id": {id_token}, "features": [{feats}]}}"#);
+            writer.write_all(msg.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(expect), "{id_token} -> {line}");
+            assert!(line.contains("estimate"), "{line}");
+        }
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    /// Satellite regression: the shutdown handle must stop a server that
+    /// never saw a connection (the old accept loop parked in accept(2)
+    /// and only checked the flag after the next client).
+    #[test]
+    fn external_shutdown_handle_stops_idle_server() {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let handle = server.shutdown_handle();
+        let (done_tx, done_rx) = channel();
+        std::thread::spawn(move || {
+            let mut backend = NativeBackend::new(&LstmParams::init(16, 15, 3, 1, 5));
+            let stats = server.run(&mut backend).unwrap();
+            let _ = done_tx.send(stats.inferred);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        handle.store(true, Ordering::SeqCst);
+        let inferred = done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("run() must return after the handle is set");
+        assert_eq!(inferred, 0);
+    }
+
+    /// The same guarantee with a connected-but-idle client: the handler
+    /// polls the flag, so it cannot pin the server alive.
+    #[test]
+    fn external_shutdown_with_idle_client() {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = server.shutdown_handle();
+        let (done_tx, done_rx) = channel();
+        std::thread::spawn(move || {
+            let mut backend = NativeBackend::new(&LstmParams::init(16, 15, 3, 1, 5));
+            let _ = server.run(&mut backend);
+            let _ = done_tx.send(());
+        });
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let (y, _) = client.infer(&[0.5; INPUT_SIZE]).unwrap();
+        assert!(y.is_finite());
+        // Client stays connected but silent.
+        handle.store(true, Ordering::SeqCst);
+        done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("run() must return despite the idle connection");
+    }
+
+    #[test]
+    fn fabric_server_smoke() {
+        let params = LstmParams::init(16, 15, 3, 1, 5);
+        let mut fcfg = FabricConfig::new(2, 4);
+        // Random-weight estimates can leave the physical roller range;
+        // keep the watchdog out of the equality assertions below.
+        fcfg.watchdog = crate::coordinator::watchdog::WatchdogConfig {
+            min_m: -1e12,
+            max_m: 1e12,
+            max_slew_m_s: 1e15,
+            stuck_after: 1 << 30,
+            ..Default::default()
+        };
+        let fabric = Arc::new(Fabric::new(&params, fcfg).unwrap());
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || server.run_fabric(fabric).unwrap())
+        };
+        let mut a = Client::with_session(&addr.to_string(), "rig-a").unwrap();
+        let mut b = Client::with_session(&addr.to_string(), "rig-b").unwrap();
+        let w = [1.0f32; INPUT_SIZE];
+        let ra1 = a.infer_full(&w, None).unwrap();
+        let rb1 = b.infer_full(&w, None).unwrap();
+        assert!(ra1.estimate.is_finite());
+        assert_eq!(ra1.estimate, rb1.estimate, "independent sessions, same input");
+        assert!(ra1.shard.is_some() && ra1.lane.is_some());
+        let ra2 = a.infer_full(&w, None).unwrap();
+        assert_ne!(ra2.estimate, ra1.estimate, "session state carries");
+        a.reset().unwrap();
+        let ra3 = a.infer_full(&w, None).unwrap();
+        assert_eq!(ra3.estimate, ra1.estimate, "per-session reset");
+        let stats = a.stats().unwrap();
+        assert_eq!(stats.get("inferred").unwrap().as_f64(), Some(4.0));
+        assert_eq!(stats.get("shards").unwrap().as_arr().unwrap().len(), 2);
+        // Anonymous-session namespace is reserved: a client cannot graft
+        // itself onto (or reset) another connection's "conn/N" stream.
+        let mut crook = Client::with_session(&addr.to_string(), "conn/0").unwrap();
+        let err = crook.infer_full(&w, None).unwrap_err();
+        assert!(format!("{err:#}").contains("reserved"), "{err:#}");
+        assert!(crook.reset().is_err());
+        a.shutdown().unwrap();
+        let snap = handle.join().unwrap();
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.shed, 0);
+    }
+
+    #[test]
+    fn raw_member_extracts_tokens() {
+        let line = r#"{"id": 9007199254740993, "features": [1, 2], "s": "x,\"y}"}"#;
+        assert_eq!(raw_member(line, "id").as_deref(), Some("9007199254740993"));
+        assert_eq!(raw_member(line, "features").as_deref(), Some("[1, 2]"));
+        assert_eq!(raw_member(line, "s").as_deref(), Some(r#""x,\"y}""#));
+        assert_eq!(raw_member(line, "missing"), None);
+        let nested = r#"{"a": {"id": 1}, "id": "outer"}"#;
+        assert_eq!(raw_member(nested, "id").as_deref(), Some(r#""outer""#));
+        assert_eq!(raw_member("not json", "id"), None);
     }
 }

@@ -65,6 +65,24 @@ impl<P: Datapath> MultiStream<P> {
         self.kernel.reset_stream(stream);
     }
 
+    /// Flattened per-stream state length (see [`StepKernel::state_len`]).
+    pub fn state_len(&self) -> usize {
+        self.kernel.state_len()
+    }
+
+    /// Copy one stream's `(h, c)` state into `out` — the session
+    /// migration/snapshot hook (`out` must hold [`Self::state_len`]
+    /// values).
+    pub fn export_state(&self, stream: usize, out: &mut [f64]) {
+        self.kernel.export_state(stream, out);
+    }
+
+    /// Restore state previously produced by [`Self::export_state`],
+    /// e.g. when migrating a session between sessions/shards.
+    pub fn import_state(&mut self, stream: usize, src: &[f64]) {
+        self.kernel.import_state(stream, src);
+    }
+
     pub fn reset_all(&mut self) {
         self.kernel.reset_all();
         self.pending.fill(false);
@@ -211,6 +229,30 @@ mod tests {
         let w0 = window(&mut rng);
         let want = single.step_window(&w0);
         assert_eq!(ms.step_one(0, &w0).unwrap(), want);
+    }
+
+    #[test]
+    fn session_state_migrates_between_sessions() {
+        let p = LstmParams::init(16, 15, 2, 1, 31);
+        let packed = PackedModel::shared(&p);
+        let mut a = MultiStream::new(packed.clone(), FloatPath, 3);
+        let mut b = MultiStream::new(packed.clone(), FloatPath, 2);
+        let mut single = ScalarKernel::new(packed, FloatPath);
+        let mut rng = Rng::new(77);
+        // Warm stream 1 of session A, then migrate it to stream 0 of B.
+        let mut last = 0.0;
+        for _ in 0..5 {
+            let w = window(&mut rng);
+            last = a.step_one(1, &w).unwrap();
+            assert_eq!(last, single.step_window(&w));
+        }
+        let mut snap = vec![0.0; a.state_len()];
+        a.export_state(1, &mut snap);
+        b.import_state(0, &snap);
+        let w = window(&mut rng);
+        let want = single.step_window(&w);
+        assert_eq!(b.step_one(0, &w).unwrap(), want);
+        assert_ne!(want, last);
     }
 
     #[test]

@@ -15,10 +15,19 @@
 //!                      serving / evaluation front-ends
 //!   [cli] [coordinator] [eval] [runtime]            [examples/, benches/]
 //!        \      |          |      |
-//!         v     v          v      v
+//!         |     v          |      |
+//!         |  [coordinator::server]  (TCP front-end)
+//!         |     |     \
+//!         |     |      v
+//!         |     |   +------------------------------------------------+
+//!         |     |   | sched — sharded deadline-aware serving fabric: |
+//!         |     |   |   session hash -> shard -> EDF queue ->        |
+//!         |     |   |   adaptive micro-batch -> lane -> watchdog     |
+//!         |     |   +------------------------------------------------+
+//!         v     v          v      v                      |
 //!   [lstm::Network]  [lstm::QuantizedNetwork]  [fpga::FpgaEngine]
-//!            \               |                  /
-//!             v              v                 v
+//!            \               |                  /        |
+//!             v              v                 v         v
 //!   +--------------------------------------------------------+
 //!   | kernel — packed weights, Scalar/Batch step kernels,    |
 //!   |          MultiStream sessions (THE LSTM compute core)  |
@@ -45,6 +54,12 @@
 //! * [`coordinator`] — the real-time monitoring service: single-stream
 //!   and multi-channel streaming pipelines, backend registry (including
 //!   batched multi-channel backends), TCP serving, metrics, watchdog.
+//! * [`sched`] — the sharded deadline-aware serving fabric between the
+//!   TCP front-end and the kernel layer: N shard workers each owning a
+//!   [`kernel::MultiStream`] session, stable session-hash routing,
+//!   bounded EDF queues with explicit load shedding, adaptive
+//!   micro-batching, per-lane watchdog resets and
+//!   [`sched::SchedMetrics`] (p50/p99/p99.9, miss rate, occupancy).
 //! * [`runtime`] — PJRT execution of the AOT artifacts (stubbed unless
 //!   built with the `xla-runtime` feature), manifest parsing.
 //! * [`beam`] — the Euler-Bernoulli beam physics substrate and virtual
@@ -68,6 +83,7 @@ pub mod fpga;
 pub mod kernel;
 pub mod lstm;
 pub mod runtime;
+pub mod sched;
 pub mod testutil;
 pub mod util;
 

@@ -1,0 +1,438 @@
+//! The fabric front-end: session-hashed routing onto N shard workers,
+//! admission control, and lifecycle.
+//!
+//! [`Fabric::submit`] is safe to call from any number of threads (the
+//! TCP connection handlers call it directly — there is no central
+//! inference thread to funnel through).  A submission resolves its shard
+//! from the stable session hash, stamps enqueue/deadline instants, and
+//! either admits the job to that shard's bounded EDF queue or sheds it
+//! according to the configured policy.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::arch::INPUT_SIZE;
+use crate::coordinator::watchdog::{WatchdogConfig, WatchdogEvent};
+use crate::kernel::PackedModel;
+use crate::lstm::LstmParams;
+
+use super::metrics::{SchedMetrics, SchedSnapshot};
+use super::queue::{Control, Job, PushOutcome, ShardQueue, ShedPolicy};
+use super::session::{session_hash, shard_of};
+use super::shard::{run_worker, DatapathKind, ShardCore, ShardWorkerCtx};
+
+/// Fabric tuning.  `shards * batch` is the total number of concurrently
+/// resident sessions (kernel lanes) the fabric serves.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Shard workers (each owns one batched kernel session).
+    pub shards: usize,
+    /// Kernel lanes per shard == the micro-batch width.
+    pub batch: usize,
+    /// Default per-request deadline when the client does not send one.
+    pub deadline_us: f64,
+    /// Bounded ingress depth per shard.
+    pub queue_depth: usize,
+    /// Upper bound on any single adaptive-gather wait.
+    pub gather_cap_us: f64,
+    /// Admission policy when a shard queue is full.
+    pub shed: ShedPolicy,
+    /// Numeric datapath of every shard's kernel session.
+    pub datapath: DatapathKind,
+    /// Per-lane watchdog tuning.
+    pub watchdog: WatchdogConfig,
+}
+
+impl FabricConfig {
+    pub fn new(shards: usize, batch: usize) -> Self {
+        Self {
+            shards: shards.max(1),
+            batch: batch.max(1),
+            deadline_us: crate::arch::RTOS_PERIOD_US,
+            queue_depth: 64,
+            gather_cap_us: 200.0,
+            shed: ShedPolicy::Reject,
+            datapath: DatapathKind::Float,
+            watchdog: WatchdogConfig::default(),
+        }
+    }
+}
+
+/// Why a request was not served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// The target shard's queue was full (Reject policy, or the arrival
+    /// was not urgent enough to evict anything).
+    QueueFull,
+    /// Evicted from a full queue by a more urgent arrival.
+    Evicted,
+    /// The fabric is shutting down.
+    Shutdown,
+    /// A shard worker failed internally (bug; logged server-side).
+    Internal,
+}
+
+impl std::fmt::Display for Shed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::QueueFull => "queue full",
+            Self::Evicted => "evicted by a more urgent request",
+            Self::Shutdown => "fabric shutting down",
+            Self::Internal => "internal shard error",
+        })
+    }
+}
+
+/// One served request's result.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    /// Roller-position estimate, metres (watchdog-checked).
+    pub estimate: f64,
+    /// Enqueue-to-completion latency (queueing + gather + batched pass).
+    pub latency_us: f64,
+    /// True when completion happened after the request's deadline.
+    pub deadline_missed: bool,
+    pub shard: usize,
+    pub lane: usize,
+    pub event: WatchdogEvent,
+}
+
+/// Handle to an in-flight submission.
+#[derive(Debug)]
+pub struct Pending {
+    rx: Receiver<Result<Completion, Shed>>,
+}
+
+impl Pending {
+    /// Block until the shard completes (or sheds) the request.
+    pub fn wait(self) -> Result<Completion> {
+        match self.rx.recv() {
+            Ok(Ok(c)) => Ok(c),
+            Ok(Err(shed)) => Err(anyhow::anyhow!("request shed: {shed}")),
+            Err(_) => Err(anyhow::anyhow!("shard worker dropped the request")),
+        }
+    }
+
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Completion> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(c)) => Ok(c),
+            Ok(Err(shed)) => Err(anyhow::anyhow!("request shed: {shed}")),
+            Err(e) => Err(anyhow::anyhow!("no completion within {timeout:?}: {e}")),
+        }
+    }
+}
+
+/// The sharded deadline-aware serving fabric.
+pub struct Fabric {
+    cfg: FabricConfig,
+    name: &'static str,
+    queues: Vec<Arc<ShardQueue>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    metrics: Arc<SchedMetrics>,
+}
+
+impl Fabric {
+    /// Build the fabric and spawn its shard workers.  The packed weights
+    /// are shared (`Arc`) across every shard — one copy in memory total.
+    pub fn new(params: &LstmParams, cfg: FabricConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.shards >= 1, "fabric needs at least one shard");
+        anyhow::ensure!(cfg.batch >= 1, "fabric needs at least one lane per shard");
+        let (packed, name) = match cfg.datapath {
+            DatapathKind::Float => (PackedModel::shared(params), "fabric-float"),
+            DatapathKind::Fixed(fmt) => {
+                (PackedModel::shared(&params.quantized(fmt)), "fabric-fixed")
+            }
+        };
+        let metrics = Arc::new(SchedMetrics::new(cfg.shards));
+        let mut queues = Vec::with_capacity(cfg.shards);
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for index in 0..cfg.shards {
+            let core = match cfg.datapath {
+                DatapathKind::Float => {
+                    ShardCore::new_float(packed.clone(), cfg.batch, cfg.watchdog.clone())
+                }
+                DatapathKind::Fixed(fmt) => {
+                    ShardCore::new_fixed(packed.clone(), fmt, cfg.batch, cfg.watchdog.clone())
+                }
+            };
+            let queue = Arc::new(ShardQueue::new(cfg.queue_depth, cfg.shed));
+            let ctx = ShardWorkerCtx {
+                index,
+                queue: queue.clone(),
+                metrics: metrics.clone(),
+                batch: cfg.batch,
+                gather_floor: Duration::from_micros(5),
+                gather_cap: Duration::from_secs_f64(cfg.gather_cap_us.max(0.0) * 1e-6),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hrd-shard-{index}"))
+                    .spawn(move || run_worker(core, ctx))
+                    .context("spawning shard worker")?,
+            );
+            queues.push(queue);
+        }
+        Ok(Self { cfg, name, queues, workers: Mutex::new(workers), metrics })
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    /// Which shard a session name routes to (stable across reconnects).
+    pub fn shard_for(&self, session: &str) -> usize {
+        shard_of(session_hash(session), self.shards())
+    }
+
+    /// Submit one window for `session`.  Returns immediately with a
+    /// [`Pending`] handle, or an error if admission control shed the
+    /// request.  `deadline_us` overrides the fabric default.
+    pub fn submit(
+        &self,
+        session: &str,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+    ) -> Result<Pending> {
+        self.submit_hashed(session_hash(session), window, deadline_us)
+    }
+
+    /// [`Self::submit`] with a pre-computed session hash.
+    pub fn submit_hashed(
+        &self,
+        session: u64,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+    ) -> Result<Pending> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
+        let (tx, rx) = channel();
+        let job = Job {
+            session,
+            window: Box::new(*window),
+            enqueued: now,
+            deadline: now + Duration::from_secs_f64(budget * 1e-6),
+            reply: tx,
+        };
+        let shard = shard_of(session, self.shards());
+        match self.queues[shard].push(job) {
+            PushOutcome::Admitted => Ok(Pending { rx }),
+            PushOutcome::AdmittedEvicting(victim) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = victim.reply.send(Err(Shed::Evicted));
+                Ok(Pending { rx })
+            }
+            PushOutcome::Rejected(_) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow::anyhow!(
+                    "request shed: {} (shard {shard}, depth {})",
+                    Shed::QueueFull,
+                    self.cfg.queue_depth
+                ))
+            }
+            PushOutcome::Closed(_) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow::anyhow!("request shed: {}", Shed::Shutdown))
+            }
+        }
+    }
+
+    /// Convenience blocking round trip (tests, simple clients).
+    pub fn infer(&self, session: &str, window: &[f32; INPUT_SIZE]) -> Result<Completion> {
+        self.submit(session, window, None)?.wait()
+    }
+
+    /// Zero one session's recurrent stream (asynchronous; ordered with
+    /// respect to later submissions from the same caller thread only in
+    /// the absence of queued work for that session).
+    pub fn reset_session(&self, session: &str) {
+        let hash = session_hash(session);
+        self.queues[shard_of(hash, self.shards())].push_control(Control::ResetSession(hash));
+    }
+
+    pub fn metrics(&self) -> &SchedMetrics {
+        &self.metrics
+    }
+
+    pub fn snapshot(&self) -> SchedSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Stop accepting work, shed whatever is still queued, and join the
+    /// shard workers.  Idempotent; also invoked by `Drop`.
+    pub fn shutdown(&self) {
+        for q in &self.queues {
+            for job in q.close() {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err(Shed::Shutdown));
+            }
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Fabric {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn params() -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, 12)
+    }
+
+    fn window(rng: &mut Rng) -> [f32; INPUT_SIZE] {
+        let mut w = [0f32; INPUT_SIZE];
+        for v in &mut w {
+            *v = rng.uniform(-30.0, 30.0) as f32;
+        }
+        w
+    }
+
+    #[test]
+    fn serves_and_reports_metrics() {
+        let p = params();
+        let fabric = Fabric::new(&p, FabricConfig::new(2, 4)).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let c = fabric.infer("sess-a", &window(&mut rng)).unwrap();
+            assert!(c.estimate.is_finite());
+            assert!(c.latency_us >= 0.0);
+            assert_eq!(c.shard, fabric.shard_for("sess-a"));
+        }
+        let s = fabric.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.shed, 0);
+        assert!(s.p50_us > 0.0);
+        fabric.shutdown();
+        // Post-shutdown submissions are shed, not hung.
+        let err = fabric.submit("sess-a", &[0.0; INPUT_SIZE], None).unwrap_err();
+        assert!(format!("{err}").contains("shed"), "{err}");
+    }
+
+    #[test]
+    fn concurrent_sessions_complete() {
+        let p = params();
+        let fabric =
+            std::sync::Arc::new(Fabric::new(&p, FabricConfig::new(3, 4)).unwrap());
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let fabric = fabric.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let session = format!("stream-{t}");
+                for _ in 0..20 {
+                    let c = fabric.infer(&session, &window(&mut rng)).unwrap();
+                    assert!(c.estimate.is_finite());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let s = fabric.snapshot();
+        assert_eq!(s.completed, 160);
+        let per_shard: u64 = s.shards.iter().map(|sh| sh.completed).sum();
+        assert_eq!(per_shard, 160);
+    }
+
+    #[test]
+    fn same_session_routes_to_one_shard_and_state_persists() {
+        let p = params();
+        let mut cfg = FabricConfig::new(4, 2);
+        // Random-weight estimates can leave the physical roller range;
+        // disable clamping so the state-carry inequality below is about
+        // the kernel, not the watchdog.
+        cfg.watchdog = WatchdogConfig {
+            min_m: -1e12,
+            max_m: 1e12,
+            max_slew_m_s: 1e15,
+            stuck_after: 1 << 30,
+            ..Default::default()
+        };
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        let w = [1.25f32; INPUT_SIZE];
+        let c1 = fabric.infer("alpha", &w).unwrap();
+        let c2 = fabric.infer("alpha", &w).unwrap();
+        assert_eq!(c1.shard, c2.shard);
+        assert_eq!(c1.lane, c2.lane);
+        assert_ne!(c1.estimate, c2.estimate, "recurrent state must carry");
+        fabric.reset_session("alpha");
+        let c3 = fabric.infer("alpha", &w).unwrap();
+        assert_eq!(c3.estimate, c1.estimate, "reset restores the initial state");
+    }
+
+    #[test]
+    fn tiny_queue_sheds_under_burst() {
+        let p = params();
+        let mut cfg = FabricConfig::new(1, 1);
+        cfg.queue_depth = 1;
+        let fabric = std::sync::Arc::new(Fabric::new(&p, cfg).unwrap());
+        // Many submitters racing a depth-1 queue: some must shed, none
+        // may hang, completed + shed == submitted.
+        let mut joins = Vec::new();
+        for t in 0..6 {
+            let fabric = fabric.clone();
+            joins.push(std::thread::spawn(move || {
+                let session = format!("burst-{t}");
+                let mut outcomes = (0u64, 0u64);
+                for _ in 0..30 {
+                    match fabric.submit(&session, &[0.5; INPUT_SIZE], None) {
+                        Ok(pending) => {
+                            if pending.wait().is_ok() {
+                                outcomes.0 += 1;
+                            } else {
+                                outcomes.1 += 1;
+                            }
+                        }
+                        Err(_) => outcomes.1 += 1,
+                    }
+                }
+                outcomes
+            }));
+        }
+        let mut done = 0;
+        let mut shed = 0;
+        for j in joins {
+            let (d, s) = j.join().unwrap();
+            done += d;
+            shed += s;
+        }
+        assert_eq!(done + shed, 180);
+        let snap = fabric.snapshot();
+        assert_eq!(snap.completed, done);
+        assert_eq!(snap.completed + snap.shed, snap.submitted);
+    }
+
+    #[test]
+    fn fixed_datapath_fabric_serves() {
+        let p = params();
+        let mut cfg = FabricConfig::new(2, 2);
+        cfg.datapath = DatapathKind::Fixed(crate::fixed::FP16);
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        assert_eq!(fabric.name(), "fabric-fixed");
+        let c = fabric.infer("q", &[2.0; INPUT_SIZE]).unwrap();
+        assert!(c.estimate.is_finite());
+    }
+}

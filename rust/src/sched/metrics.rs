@@ -1,0 +1,312 @@
+//! Fabric-wide serving metrics: lock-free counters plus an atomic
+//! log-spaced latency histogram, so every shard worker and every
+//! connection handler can record without taking a lock on the hot path.
+//!
+//! The histogram trades exactness for contention-freedom: latencies land
+//! in geometrically spaced buckets (about 2.8% wide with the default
+//! 512 buckets over 0.5 us .. 10 s), which is far finer than the
+//! run-to-run noise of any percentile we report (p50/p99/p99.9).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Json;
+
+/// Lock-free latency histogram with geometrically spaced buckets.
+#[derive(Debug)]
+pub struct AtomicHist {
+    lo_us: f64,
+    /// `ln(hi/lo)` — precomputed bucket-index scale.
+    ln_span: f64,
+    bins: Vec<AtomicU64>,
+}
+
+impl AtomicHist {
+    pub fn new(lo_us: f64, hi_us: f64, n_bins: usize) -> Self {
+        assert!(lo_us > 0.0 && hi_us > lo_us && n_bins >= 2);
+        Self {
+            lo_us,
+            ln_span: (hi_us / lo_us).ln(),
+            bins: (0..n_bins).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Serving-latency default: 0.5 us .. 10 s over 512 buckets.
+    pub fn for_latency() -> Self {
+        Self::new(0.5, 10e6, 512)
+    }
+
+    fn index(&self, us: f64) -> usize {
+        if !(us > self.lo_us) {
+            return 0;
+        }
+        let frac = (us / self.lo_us).ln() / self.ln_span;
+        ((frac * self.bins.len() as f64) as usize).min(self.bins.len() - 1)
+    }
+
+    pub fn record(&self, us: f64) {
+        self.bins[self.index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Quantile estimate (geometric midpoint of the covering bucket);
+    /// 0.0 when empty.  `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.bins.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let mid = (i as f64 + 0.5) / self.bins.len() as f64;
+                return self.lo_us * (mid * self.ln_span).exp();
+            }
+        }
+        self.lo_us * self.ln_span.exp()
+    }
+}
+
+/// Per-shard counters and gauges (updated only by that shard's worker,
+/// read by anyone).
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    /// Requests completed by this shard.
+    pub completed: AtomicU64,
+    /// Micro-batch passes executed.
+    pub batches: AtomicU64,
+    /// Requests served across all passes (batches * avg fill).
+    pub batched_requests: AtomicU64,
+    /// Sessions evicted from a lane to admit a new session.
+    pub evictions: AtomicU64,
+    /// Gauge: lanes with a resident session after the last pass.
+    pub occupancy: AtomicU64,
+    /// Gauge: queue length after the last pass.
+    pub queue_len: AtomicU64,
+}
+
+/// Aggregate fabric metrics shared by all shards and submitters.
+#[derive(Debug)]
+pub struct SchedMetrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    /// Requests refused or evicted by admission control (incl. shutdown).
+    pub shed: AtomicU64,
+    /// Completions that finished after their deadline.
+    pub deadline_misses: AtomicU64,
+    /// Estimates patched by a per-lane watchdog.
+    pub watchdog_patched: AtomicU64,
+    /// Per-lane recurrent-state resets requested by a watchdog.
+    pub watchdog_resets: AtomicU64,
+    latency: AtomicHist,
+    shards: Vec<ShardMetrics>,
+}
+
+impl SchedMetrics {
+    pub fn new(shards: usize) -> Self {
+        Self {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            watchdog_patched: AtomicU64::new(0),
+            watchdog_resets: AtomicU64::new(0),
+            latency: AtomicHist::for_latency(),
+            shards: (0..shards).map(|_| ShardMetrics::default()).collect(),
+        }
+    }
+
+    pub fn shard(&self, index: usize) -> &ShardMetrics {
+        &self.shards[index]
+    }
+
+    /// Record one completed request (called by the owning shard worker).
+    pub fn record_completion(&self, shard: usize, latency_us: f64, missed: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.shards[shard].completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency_us);
+        if missed {
+            self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> SchedSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let misses = self.deadline_misses.load(Ordering::Relaxed);
+        SchedSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_misses: misses,
+            watchdog_patched: self.watchdog_patched.load(Ordering::Relaxed),
+            watchdog_resets: self.watchdog_resets.load(Ordering::Relaxed),
+            p50_us: self.latency.quantile(0.50),
+            p99_us: self.latency.quantile(0.99),
+            p999_us: self.latency.quantile(0.999),
+            miss_rate: if completed == 0 { 0.0 } else { misses as f64 / completed as f64 },
+            shards: self
+                .shards
+                .iter()
+                .map(|s| {
+                    let batches = s.batches.load(Ordering::Relaxed);
+                    let reqs = s.batched_requests.load(Ordering::Relaxed);
+                    ShardSnapshot {
+                        completed: s.completed.load(Ordering::Relaxed),
+                        batches,
+                        evictions: s.evictions.load(Ordering::Relaxed),
+                        avg_batch_fill: if batches == 0 {
+                            0.0
+                        } else {
+                            reqs as f64 / batches as f64
+                        },
+                        occupancy: s.occupancy.load(Ordering::Relaxed),
+                        queue_len: s.queue_len.load(Ordering::Relaxed),
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one shard's metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSnapshot {
+    pub completed: u64,
+    pub batches: u64,
+    pub evictions: u64,
+    pub avg_batch_fill: f64,
+    pub occupancy: u64,
+    pub queue_len: u64,
+}
+
+impl ShardSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::from(self.completed as f64)),
+            ("batches", Json::from(self.batches as f64)),
+            ("evictions", Json::from(self.evictions as f64)),
+            ("avg_batch_fill", Json::from(self.avg_batch_fill)),
+            ("occupancy", Json::from(self.occupancy as f64)),
+            ("queue_len", Json::from(self.queue_len as f64)),
+        ])
+    }
+}
+
+/// Point-in-time copy of the fabric's aggregate metrics (what
+/// `{"cmd":"stats"}` returns in fabric serving mode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub deadline_misses: u64,
+    pub watchdog_patched: u64,
+    pub watchdog_resets: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub miss_rate: f64,
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl SchedSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // `inferred` mirrors the serial server's stats key so existing
+            // clients keep working against the fabric.
+            ("inferred", Json::from(self.completed as f64)),
+            ("submitted", Json::from(self.submitted as f64)),
+            ("shed", Json::from(self.shed as f64)),
+            ("deadline_misses", Json::from(self.deadline_misses as f64)),
+            ("deadline_miss_rate", Json::from(self.miss_rate)),
+            ("watchdog_patched", Json::from(self.watchdog_patched as f64)),
+            ("watchdog_resets", Json::from(self.watchdog_resets as f64)),
+            ("p50_us", Json::from(self.p50_us)),
+            ("p99_us", Json::from(self.p99_us)),
+            ("p999_us", Json::from(self.p999_us)),
+            ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_the_data() {
+        let h = AtomicHist::for_latency();
+        for i in 1..=1000 {
+            h.record(i as f64); // 1..1000 us, uniform
+        }
+        assert_eq!(h.total(), 1000);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // Log-spaced buckets: ~3% relative error budget.
+        assert!((400.0..650.0).contains(&p50), "p50 {p50}");
+        assert!((900.0..1100.0).contains(&p99), "p99 {p99}");
+        assert!(h.quantile(0.999) >= p99);
+    }
+
+    #[test]
+    fn histogram_handles_out_of_range() {
+        let h = AtomicHist::new(1.0, 100.0, 8);
+        h.record(0.0); // below lo -> first bucket
+        h.record(1e9); // above hi -> last bucket
+        assert_eq!(h.total(), 2);
+        assert!(h.quantile(0.0) > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = AtomicHist::for_latency();
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn snapshot_aggregates_counters() {
+        let m = SchedMetrics::new(2);
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_completion(0, 10.0, false);
+        m.record_completion(1, 20.0, true);
+        m.shard(1).batches.fetch_add(1, Ordering::Relaxed);
+        m.shard(1).batched_requests.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.deadline_misses, 1);
+        assert!((s.miss_rate - 0.5).abs() < 1e-12);
+        assert_eq!(s.shards.len(), 2);
+        assert_eq!(s.shards[0].completed, 1);
+        assert!((s.shards[1].avg_batch_fill - 2.0).abs() < 1e-12);
+        // JSON shape used by the serving front-end.
+        let j = s.to_json();
+        assert_eq!(j.get("inferred").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("shards").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let m = std::sync::Arc::new(SchedMetrics::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    m.record_completion(t, (i + 1) as f64, i % 10 == 0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2000);
+        assert_eq!(s.deadline_misses, 200);
+    }
+}

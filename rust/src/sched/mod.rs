@@ -1,0 +1,74 @@
+//! `sched` — the sharded, deadline-aware serving fabric: the layer
+//! between the network front-end ([`crate::coordinator::server`]) and
+//! the batched kernel layer ([`crate::kernel`]).
+//!
+//! PR 1 made one `MultiStream` session fast; this layer makes that speed
+//! reachable from the network path.  Instead of one blocking thread
+//! feeding one backend serially, N *shard workers* each own a batched
+//! kernel session and serve disjoint subsets of the client *sessions*:
+//!
+//! ```text
+//!            connection handler threads (one per TCP client)
+//!      ---------------------------------------------------------
+//!       | parse        | parse        | parse        | parse
+//!       v              v              v              v
+//!      Fabric::submit(session, window, deadline)
+//!       |   session name --FNV-1a--> hash --% N--> shard
+//!       v
+//!   +-- shard 0 ----------+  +-- shard 1 ----------+   ... shard N-1
+//!   | bounded EDF queue   |  | bounded EDF queue   |
+//!   |  (shed policy)      |  |  (shed policy)      |
+//!   |        v            |  |        v            |
+//!   | adaptive micro-     |  | adaptive micro-     |
+//!   |  batch gather       |  |  batch gather       |
+//!   |        v            |  |        v            |
+//!   | LaneTable: session  |  | (same)              |
+//!   |  -> kernel lane     |  |                     |
+//!   |        v            |  |                     |
+//!   | MultiStream (B      |  | MultiStream (B      |
+//!   |  lanes, ONE batched |  |  lanes, ONE batched |
+//!   |  weight pass)       |  |  weight pass)       |
+//!   |        v            |  |                     |
+//!   | per-lane watchdog   |  | (same)              |
+//!   |  (reset one lane)   |  |                     |
+//!   +---------|-----------+  +---------|-----------+
+//!             v                        v
+//!        Completion {estimate, latency, deadline_missed, ...}
+//!             \----------- SchedMetrics -----------/
+//!              (p50/p99/p99.9, miss rate, shed, per-shard occupancy)
+//! ```
+//!
+//! Vocabulary:
+//!
+//! * **session** — one client-visible recurrent stream, named by an
+//!   opaque string; hashed once, so it reaches the same shard across
+//!   reconnects and its LSTM state survives while resident.
+//! * **shard** — one worker thread + one `MultiStream` + one bounded EDF
+//!   ingress queue.  Shards share the packed weights (`Arc`) but nothing
+//!   else — no cross-shard locks on the serving path.
+//! * **lane** — one stream slot of a shard's batched kernel.  The
+//!   [`session::LaneTable`] maps resident sessions to lanes, evicting
+//!   LRU sessions when over-subscribed.
+//! * **micro-batch** — the set of lanes advanced by one batched weight
+//!   pass.  The gather loop sizes it adaptively: batch-full, or the most
+//!   urgent admitted deadline running out of slack (minus the EWMA pass
+//!   time), whichever comes first; waits are additionally bounded by the
+//!   observed inter-arrival EWMA so idle shards never stall a lone
+//!   request.
+//!
+//! Entry points: [`Fabric::new`] / [`Fabric::submit`] /
+//! [`Fabric::snapshot`]; `hrd serve-tcp --shards N --batch B` serves it
+//! over TCP and `hrd loadgen` (see [`crate::bench::serving`]) measures
+//! it against the serial baseline.
+
+pub mod fabric;
+pub mod metrics;
+pub mod queue;
+pub mod session;
+pub mod shard;
+
+pub use fabric::{Completion, Fabric, FabricConfig, Pending, Shed};
+pub use metrics::{AtomicHist, SchedMetrics, SchedSnapshot, ShardSnapshot};
+pub use queue::ShedPolicy;
+pub use session::{session_hash, shard_of};
+pub use shard::{DatapathKind, LaneOutcome, LaneStep, ShardCore};

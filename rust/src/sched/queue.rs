@@ -1,0 +1,375 @@
+//! Per-shard bounded ingress queue with earliest-deadline-first ordering
+//! and an explicit admission-control (load-shedding) policy.
+//!
+//! The queue is the only synchronization point between submitters
+//! (connection handler threads) and a shard worker.  Jobs are keyed by
+//! `(deadline, seq)` in a `BTreeMap`, so:
+//!
+//! * the worker pops the most urgent job first (EDF),
+//! * equal deadlines break ties FIFO via the per-queue sequence number,
+//! * the farthest-deadline job can be evicted in O(log n) when the
+//!   [`ShedPolicy::EvictFarthest`] policy admits a more urgent arrival
+//!   into a full queue.
+//!
+//! Admission control is the *only* place requests are dropped: once a job
+//! is admitted it will be executed even if its deadline has already
+//! passed (and counted as a miss), because skipping a window would
+//! silently desynchronize the stream's recurrent state.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::arch::INPUT_SIZE;
+
+use super::fabric::{Completion, Shed};
+
+/// One admitted inference request.
+#[derive(Debug)]
+pub struct Job {
+    /// Stable session hash (see [`super::session::session_hash`]).
+    pub session: u64,
+    pub window: Box<[f32; INPUT_SIZE]>,
+    /// When the request entered the fabric.
+    pub enqueued: Instant,
+    /// Completion must happen before this instant to count as a hit.
+    pub deadline: Instant,
+    /// Where the result (or a shed notice) is delivered.
+    pub reply: Sender<Result<Completion, Shed>>,
+}
+
+/// A job together with its queue key, so a worker that popped it for a
+/// micro-batch can push it back (lane conflict) without losing its EDF
+/// position.
+#[derive(Debug)]
+pub struct QueuedJob {
+    pub key: (Instant, u64),
+    pub job: Job,
+}
+
+/// Out-of-band worker commands (never shed, never EDF-ordered; processed
+/// before jobs).
+#[derive(Debug)]
+pub enum Control {
+    /// Zero the recurrent state of one session's lane (new monitoring
+    /// session on that channel).
+    ResetSession(u64),
+}
+
+/// What a full queue does with a new arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the new request (the submitter gets an immediate error).
+    Reject,
+    /// Evict the queued request with the farthest deadline if the new
+    /// request is more urgent; otherwise refuse the new request.
+    EvictFarthest,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reject" => Some(Self::Reject),
+            "evict-farthest" | "evict_farthest" => Some(Self::EvictFarthest),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Reject => "reject",
+            Self::EvictFarthest => "evict-farthest",
+        }
+    }
+}
+
+/// Result of an admission attempt.
+#[derive(Debug)]
+pub enum PushOutcome {
+    Admitted,
+    /// Admitted by evicting the returned (farthest-deadline) job; the
+    /// caller must complete the victim as shed.
+    AdmittedEvicting(Job),
+    /// Refused by the shed policy (queue at depth); job handed back.
+    Rejected(Job),
+    /// Refused because the queue is closed (shutdown); job handed back.
+    Closed(Job),
+}
+
+/// What a worker pop returns.
+#[derive(Debug)]
+pub enum Popped {
+    Control(Control),
+    Job(QueuedJob),
+}
+
+struct Inner {
+    jobs: BTreeMap<(Instant, u64), Job>,
+    controls: VecDeque<Control>,
+    seq: u64,
+    closed: bool,
+}
+
+/// The bounded MPSC deadline queue.
+pub struct ShardQueue {
+    depth: usize,
+    policy: ShedPolicy,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl ShardQueue {
+    pub fn new(depth: usize, policy: ShedPolicy) -> Self {
+        Self {
+            depth: depth.max(1),
+            policy,
+            inner: Mutex::new(Inner {
+                jobs: BTreeMap::new(),
+                controls: VecDeque::new(),
+                seq: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Jobs currently queued (excludes controls).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Try to admit a job.
+    pub fn push(&self, job: Job) -> PushOutcome {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return PushOutcome::Closed(job);
+        }
+        let outcome = if g.jobs.len() < self.depth {
+            let key = (job.deadline, g.seq);
+            g.seq += 1;
+            g.jobs.insert(key, job);
+            PushOutcome::Admitted
+        } else {
+            match self.policy {
+                ShedPolicy::Reject => PushOutcome::Rejected(job),
+                ShedPolicy::EvictFarthest => {
+                    let farthest = *g.jobs.keys().next_back().expect("full queue is non-empty");
+                    if job.deadline < farthest.0 {
+                        let victim = g.jobs.remove(&farthest).expect("key just observed");
+                        let key = (job.deadline, g.seq);
+                        g.seq += 1;
+                        g.jobs.insert(key, job);
+                        PushOutcome::AdmittedEvicting(victim)
+                    } else {
+                        PushOutcome::Rejected(job)
+                    }
+                }
+            }
+        };
+        drop(g);
+        if matches!(outcome, PushOutcome::Admitted | PushOutcome::AdmittedEvicting(_)) {
+            self.cv.notify_one();
+        }
+        outcome
+    }
+
+    /// Enqueue a worker command (exempt from depth/shedding).
+    pub fn push_control(&self, control: Control) {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return;
+        }
+        g.controls.push_back(control);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Put deferred jobs back under their original keys (worker-side,
+    /// after a micro-batch gather deferred same-lane conflicts).
+    pub fn requeue(&self, jobs: Vec<QueuedJob>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for qj in jobs {
+            g.jobs.insert(qj.key, qj.job);
+        }
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Pop the next control or most-urgent job.  With `wait = None`,
+    /// blocks until something arrives or the queue is closed (returns
+    /// `None` only when closed and fully drained).  With a timeout,
+    /// additionally returns `None` when nothing arrived in time.
+    pub fn pop(&self, wait: Option<Duration>) -> Option<Popped> {
+        let deadline = wait.map(|d| Instant::now() + d);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(c) = g.controls.pop_front() {
+                return Some(Popped::Control(c));
+            }
+            // Two steps: the key copy ends the map borrow before remove.
+            let next_key = g.jobs.keys().next().copied();
+            if let Some(key) = next_key {
+                let job = g.jobs.remove(&key).expect("key just observed");
+                return Some(Popped::Job(QueuedJob { key, job }));
+            }
+            if g.closed {
+                return None;
+            }
+            g = match deadline {
+                None => self.cv.wait(g).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return None;
+                    }
+                    self.cv.wait_timeout(g, dl - now).unwrap().0
+                }
+            };
+        }
+    }
+
+    /// Close the queue: subsequent pushes are rejected, blocked pops wake
+    /// up, and all still-queued jobs are handed back so the caller can
+    /// complete them as shed.
+    pub fn close(&self) -> Vec<Job> {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        let orphans = std::mem::take(&mut g.jobs).into_values().collect();
+        g.controls.clear();
+        drop(g);
+        self.cv.notify_all();
+        orphans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn job(deadline_in: Duration) -> (Job, std::sync::mpsc::Receiver<Result<Completion, Shed>>) {
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        (
+            Job {
+                session: 1,
+                window: Box::new([0.0; INPUT_SIZE]),
+                enqueued: now,
+                deadline: now + deadline_in,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn pops_in_deadline_order_fifo_ties() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        let (late, _r1) = job(Duration::from_millis(50));
+        let (early_a, _r2) = job(Duration::from_millis(10));
+        // Same deadline as early_a: must come out after it (FIFO).
+        let (mut early_b, _r3) = job(Duration::from_millis(10));
+        early_b.deadline = early_a.deadline;
+        early_b.session = 2;
+        assert!(matches!(q.push(late), PushOutcome::Admitted));
+        assert!(matches!(q.push(early_a), PushOutcome::Admitted));
+        assert!(matches!(q.push(early_b), PushOutcome::Admitted));
+        let order: Vec<u64> = (0..3)
+            .map(|_| match q.pop(None).unwrap() {
+                Popped::Job(qj) => qj.job.session,
+                Popped::Control(_) => panic!("no controls queued"),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn reject_policy_refuses_overflow() {
+        let q = ShardQueue::new(2, ShedPolicy::Reject);
+        let (a, _ra) = job(Duration::from_millis(1));
+        let (b, _rb) = job(Duration::from_millis(2));
+        let (c, _rc) = job(Duration::from_millis(3));
+        assert!(matches!(q.push(a), PushOutcome::Admitted));
+        assert!(matches!(q.push(b), PushOutcome::Admitted));
+        assert!(matches!(q.push(c), PushOutcome::Rejected(_)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn evict_farthest_admits_urgent_work() {
+        let q = ShardQueue::new(2, ShedPolicy::EvictFarthest);
+        let (a, _ra) = job(Duration::from_millis(10));
+        let (mut b, _rb) = job(Duration::from_millis(99));
+        b.session = 9; // the far-deadline victim
+        let (mut c, _rc) = job(Duration::from_millis(1));
+        c.session = 3;
+        assert!(matches!(q.push(a), PushOutcome::Admitted));
+        assert!(matches!(q.push(b), PushOutcome::Admitted));
+        match q.push(c) {
+            PushOutcome::AdmittedEvicting(victim) => assert_eq!(victim.session, 9),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        // A far-deadline arrival into a full queue is still refused.
+        let (d, _rd) = job(Duration::from_secs(5));
+        assert!(matches!(q.push(d), PushOutcome::Rejected(_)));
+    }
+
+    #[test]
+    fn requeue_preserves_edf_position() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        let (a, _ra) = job(Duration::from_millis(1));
+        let (mut b, _rb) = job(Duration::from_millis(2));
+        b.session = 2;
+        q.push(a);
+        q.push(b);
+        let first = match q.pop(None).unwrap() {
+            Popped::Job(qj) => qj,
+            _ => unreachable!(),
+        };
+        assert_eq!(first.job.session, 1);
+        q.requeue(vec![first]);
+        // Still the most urgent after the round trip.
+        match q.pop(None).unwrap() {
+            Popped::Job(qj) => assert_eq!(qj.job.session, 1),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn controls_preempt_jobs() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        let (a, _ra) = job(Duration::from_millis(1));
+        q.push(a);
+        q.push_control(Control::ResetSession(42));
+        assert!(matches!(q.pop(None), Some(Popped::Control(Control::ResetSession(42)))));
+        assert!(matches!(q.pop(None), Some(Popped::Job(_))));
+    }
+
+    #[test]
+    fn timed_pop_times_out_and_close_wakes_blockers() {
+        let q = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
+        assert!(q.pop(Some(Duration::from_millis(5))).is_none());
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.pop(None).is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        let (a, _ra) = job(Duration::from_millis(1));
+        q.push(a);
+        assert!(!waiter.join().unwrap(), "blocked pop must receive the job");
+        let (b, _rb) = job(Duration::from_millis(1));
+        q.push(b);
+        let orphans = q.close();
+        assert_eq!(orphans.len(), 1, "unpopped job returned on close");
+        assert!(q.pop(None).is_none(), "closed + drained pops None");
+        let (c, _rc) = job(Duration::from_millis(1));
+        assert!(matches!(q.push(c), PushOutcome::Closed(_)));
+    }
+}

@@ -1,0 +1,612 @@
+//! Shard worker: one OS thread owning one batched kernel session
+//! ([`crate::kernel::MultiStream`]), a per-lane safety watchdog, and the
+//! adaptive micro-batching loop.
+//!
+//! The worker alternates between two phases:
+//!
+//! 1. **Gather** — pop the most urgent admitted job (EDF), then keep
+//!    popping while the batch is not full AND the most urgent deadline in
+//!    hand still has slack to spare after reserving the expected pass
+//!    time.  The wait for further arrivals is bounded by twice the
+//!    observed inter-arrival EWMA, so an idle queue never stalls a lone
+//!    request for the full gather cap, while a busy queue fills the batch
+//!    essentially for free.  Jobs whose lane is already taken in this
+//!    batch are deferred back to the queue under their original EDF key
+//!    (same-session requests stay strictly ordered).
+//! 2. **Pass** — submit every gathered window to its lane and advance
+//!    all of them through ONE batched weight pass, then run each lane's
+//!    watchdog, resetting only the offending lane's recurrent state when
+//!    a persistent fault is detected.
+//!
+//! The pass-time and inter-arrival EWMAs are what make the batching
+//! "adaptive": under load the loop converges to full batches (maximum
+//! weight reuse), under trickle traffic it degrades to per-request
+//! dispatch with microseconds of added latency.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::arch::INPUT_SIZE;
+use crate::coordinator::watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};
+use crate::fixed::QFormat;
+use crate::kernel::{FixedPath, FloatPath, MultiStream, PackedModel};
+
+use super::fabric::{Completion, Shed};
+use super::metrics::SchedMetrics;
+use super::queue::{Control, Popped, QueuedJob, ShardQueue};
+use super::session::{LaneAssign, LaneTable};
+
+/// Which numeric datapath a shard's kernel session runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatapathKind {
+    /// Exact f64 (the paper's software baseline numerics).
+    Float,
+    /// Q-format fixed point + LUT activations (the FPGA datapath).
+    Fixed(QFormat),
+}
+
+impl DatapathKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Float => "float",
+            Self::Fixed(_) => "fixed",
+        }
+    }
+}
+
+/// Datapath-erased batched kernel session (one per shard).
+pub(crate) enum ShardEngine {
+    Float(MultiStream<FloatPath>),
+    Fixed(MultiStream<FixedPath>),
+}
+
+impl ShardEngine {
+    fn submit(&mut self, lane: usize, window: &[f32]) -> Result<()> {
+        match self {
+            Self::Float(ms) => ms.submit(lane, window),
+            Self::Fixed(ms) => ms.submit(lane, window),
+        }
+    }
+
+    fn drain(&mut self, sink: &mut dyn FnMut(usize, f64)) -> usize {
+        match self {
+            Self::Float(ms) => ms.drain(|l, y| sink(l, y)),
+            Self::Fixed(ms) => ms.drain(|l, y| sink(l, y)),
+        }
+    }
+
+    fn reset(&mut self, lane: usize) {
+        match self {
+            Self::Float(ms) => ms.reset(lane),
+            Self::Fixed(ms) => ms.reset(lane),
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        match self {
+            Self::Float(ms) => ms.capacity(),
+            Self::Fixed(ms) => ms.capacity(),
+        }
+    }
+
+    fn state_len(&self) -> usize {
+        match self {
+            Self::Float(ms) => ms.state_len(),
+            Self::Fixed(ms) => ms.state_len(),
+        }
+    }
+
+    fn export_state(&self, lane: usize, out: &mut [f64]) {
+        match self {
+            Self::Float(ms) => ms.export_state(lane, out),
+            Self::Fixed(ms) => ms.export_state(lane, out),
+        }
+    }
+
+    fn import_state(&mut self, lane: usize, src: &[f64]) {
+        match self {
+            Self::Float(ms) => ms.import_state(lane, src),
+            Self::Fixed(ms) => ms.import_state(lane, src),
+        }
+    }
+}
+
+/// One lane's input to a micro-batch pass.
+#[derive(Debug, Clone)]
+pub struct LaneStep {
+    pub lane: usize,
+    pub window: Box<[f32; INPUT_SIZE]>,
+}
+
+/// One lane's output from a micro-batch pass (watchdog already applied;
+/// `event == ResetRequested` means the lane's recurrent state was
+/// re-zeroed after this estimate was produced).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneOutcome {
+    pub lane: usize,
+    pub estimate: f64,
+    pub event: WatchdogEvent,
+}
+
+/// The synchronous, single-threaded compute core of a shard: batched
+/// kernel session + per-lane watchdogs.  Kept free of queues/threads so
+/// tests can drive micro-batches deterministically.
+pub struct ShardCore {
+    engine: ShardEngine,
+    watchdogs: Vec<Watchdog>,
+    wd_cfg: WatchdogConfig,
+}
+
+impl ShardCore {
+    pub(crate) fn from_engine(engine: ShardEngine, wd_cfg: WatchdogConfig) -> Self {
+        let lanes = engine.capacity();
+        Self {
+            engine,
+            watchdogs: (0..lanes).map(|_| Watchdog::new(wd_cfg.clone())).collect(),
+            wd_cfg,
+        }
+    }
+
+    /// Float-datapath core over a shared packed model.
+    pub fn new_float(packed: Arc<PackedModel>, lanes: usize, wd_cfg: WatchdogConfig) -> Self {
+        Self::from_engine(ShardEngine::Float(MultiStream::new(packed, FloatPath, lanes)), wd_cfg)
+    }
+
+    /// Fixed-point core; `packed` must already hold quantized weights
+    /// (see [`crate::lstm::LstmParams::quantized`]).
+    pub fn new_fixed(
+        packed: Arc<PackedModel>,
+        fmt: QFormat,
+        lanes: usize,
+        wd_cfg: WatchdogConfig,
+    ) -> Self {
+        Self::from_engine(
+            ShardEngine::Fixed(MultiStream::new(packed, FixedPath::new(fmt), lanes)),
+            wd_cfg,
+        )
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.engine.capacity()
+    }
+
+    /// Advance every listed lane through one batched weight pass and run
+    /// the per-lane watchdogs.  Lanes not listed keep their state.
+    pub fn step_batch(&mut self, steps: &[LaneStep]) -> Result<Vec<LaneOutcome>> {
+        for s in steps {
+            self.engine.submit(s.lane, &s.window[..])?;
+        }
+        let mut raw: Vec<(usize, f64)> = Vec::with_capacity(steps.len());
+        self.engine.drain(&mut |lane, y| raw.push((lane, y)));
+        let mut out = Vec::with_capacity(raw.len());
+        for (lane, y_raw) in raw {
+            let (estimate, event) = self.watchdogs[lane].check(y_raw);
+            if event == WatchdogEvent::ResetRequested {
+                // Only the offending stream's lanes are re-zeroed; every
+                // other lane's recurrent state is untouched.
+                self.engine.reset(lane);
+            }
+            out.push(LaneOutcome { lane, estimate, event });
+        }
+        Ok(out)
+    }
+
+    /// Zero one lane's recurrent state and watchdog history (client
+    /// `reset`, or lane recycling after a session eviction).
+    pub fn recycle_lane(&mut self, lane: usize) {
+        self.engine.reset(lane);
+        self.watchdogs[lane] = Watchdog::new(self.wd_cfg.clone());
+    }
+
+    pub fn state_len(&self) -> usize {
+        self.engine.state_len()
+    }
+
+    /// Snapshot one lane's `(h, c)` state (tests, session migration).
+    pub fn export_lane(&self, lane: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.engine.state_len()];
+        self.engine.export_state(lane, &mut out);
+        out
+    }
+
+    /// Restore a lane state captured by [`Self::export_lane`].
+    pub fn import_lane(&mut self, lane: usize, state: &[f64]) {
+        self.engine.import_state(lane, state);
+    }
+}
+
+/// Everything a shard worker thread needs besides its core.
+pub(crate) struct ShardWorkerCtx {
+    pub index: usize,
+    pub queue: Arc<ShardQueue>,
+    pub metrics: Arc<SchedMetrics>,
+    /// Target micro-batch size (== the core's lane count).
+    pub batch: usize,
+    /// Stop gathering when the most urgent slack drops below this.
+    pub gather_floor: Duration,
+    /// Upper bound on any single wait for further arrivals.
+    pub gather_cap: Duration,
+}
+
+fn ewma(prev: Duration, sample: Duration) -> Duration {
+    // 0.8 / 0.2 blend in nanoseconds.
+    Duration::from_nanos(
+        ((prev.as_nanos() as f64) * 0.8 + (sample.as_nanos() as f64) * 0.2) as u64,
+    )
+}
+
+fn send_completion(reply: &Sender<Result<Completion, Shed>>, msg: Result<Completion, Shed>) {
+    // The submitter may have given up (disconnected client) — that is
+    // its business, not an error here.
+    let _ = reply.send(msg);
+}
+
+/// Mutable gather-phase state threaded through [`place`].
+struct Gather {
+    /// Jobs slotted into the batch being assembled, with their lane.
+    batch: Vec<(QueuedJob, usize)>,
+    /// Lanes already taken by this batch.
+    pinned: Vec<bool>,
+    /// Jobs pushed back to the queue after this gather (lane conflicts).
+    deferred: Vec<QueuedJob>,
+    last_arrival: Option<Instant>,
+    ewma_arrival: Duration,
+}
+
+/// Route one popped queue item: controls act immediately, jobs get a
+/// lane (or are deferred to the next micro-batch).
+fn place(
+    popped: Popped,
+    core: &mut ShardCore,
+    table: &mut LaneTable,
+    g: &mut Gather,
+    ctx: &ShardWorkerCtx,
+) {
+    match popped {
+        Popped::Control(Control::ResetSession(session)) => {
+            if let Some(lane) = table.lane_of(session) {
+                core.recycle_lane(lane);
+            }
+        }
+        Popped::Job(qj) => {
+            // Inter-arrival EWMA from submit timestamps.
+            if let Some(prev) = g.last_arrival {
+                if let Some(gap) = qj.job.enqueued.checked_duration_since(prev) {
+                    g.ewma_arrival = ewma(g.ewma_arrival, gap);
+                }
+            }
+            g.last_arrival = Some(qj.job.enqueued);
+            match table.assign(qj.job.session, &g.pinned) {
+                LaneAssign::Resident(lane) => {
+                    if g.pinned[lane] {
+                        // Same session twice in one batch: keep strict
+                        // per-session order, run it next pass.
+                        g.deferred.push(qj);
+                    } else {
+                        g.pinned[lane] = true;
+                        g.batch.push((qj, lane));
+                    }
+                }
+                LaneAssign::Fresh(lane) => {
+                    g.pinned[lane] = true;
+                    g.batch.push((qj, lane));
+                }
+                LaneAssign::Evicted { lane, .. } => {
+                    core.recycle_lane(lane);
+                    ctx.metrics
+                        .shard(ctx.index)
+                        .evictions
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    g.pinned[lane] = true;
+                    g.batch.push((qj, lane));
+                }
+                LaneAssign::Full => g.deferred.push(qj),
+            }
+        }
+    }
+}
+
+/// The worker thread body.  Returns when the queue is closed and fully
+/// drained.
+pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) {
+    let lanes = core.lanes();
+    let mut table = LaneTable::new(lanes);
+    let mut ewma_pass = Duration::from_micros(20);
+    let mut last_arrival: Option<Instant> = None;
+    let mut ewma_arrival = Duration::from_micros(50);
+
+    'serve: loop {
+        // Block for the first piece of work.
+        let first = match ctx.queue.pop(None) {
+            Some(p) => p,
+            None => break 'serve,
+        };
+
+        let mut g = Gather {
+            batch: Vec::with_capacity(ctx.batch),
+            pinned: vec![false; lanes],
+            deferred: Vec::new(),
+            last_arrival,
+            ewma_arrival,
+        };
+        place(first, &mut core, &mut table, &mut g, &ctx);
+
+        // Gather: fill the batch while the most urgent deadline can
+        // still afford to wait.
+        while g.batch.len() < ctx.batch {
+            let Some(earliest) = g.batch.iter().map(|(qj, _)| qj.job.deadline).min() else {
+                // Only controls/deferrals so far — nothing to run yet.
+                break;
+            };
+            let now = Instant::now();
+            let slack = earliest
+                .checked_duration_since(now)
+                .unwrap_or(Duration::ZERO)
+                .saturating_sub(ewma_pass);
+            if slack <= ctx.gather_floor {
+                break;
+            }
+            let wait = slack.min(ctx.gather_cap).min(g.ewma_arrival * 2);
+            match ctx.queue.pop(Some(wait)) {
+                Some(popped) => place(popped, &mut core, &mut table, &mut g, &ctx),
+                None => break, // queue idle (or closing) — run what we have
+            }
+        }
+        last_arrival = g.last_arrival;
+        ewma_arrival = g.ewma_arrival;
+        ctx.queue.requeue(g.deferred);
+        let mut batch = g.batch;
+        if batch.is_empty() {
+            continue 'serve;
+        }
+
+        // One batched weight pass for every gathered lane.
+        let steps: Vec<LaneStep> = batch
+            .iter()
+            .map(|(qj, lane)| LaneStep { lane: *lane, window: qj.job.window.clone() })
+            .collect();
+        let t_pass = Instant::now();
+        let outcomes = match core.step_batch(&steps) {
+            Ok(o) => o,
+            Err(e) => {
+                // Submit/drain failures are programming errors (lane
+                // bounds, double submit); never strand the clients.
+                log::error!("shard {}: batch pass failed: {e:#}", ctx.index);
+                for (qj, _) in batch {
+                    ctx.metrics.shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    send_completion(&qj.job.reply, Err(Shed::Internal));
+                }
+                continue 'serve;
+            }
+        };
+        ewma_pass = ewma(ewma_pass, t_pass.elapsed());
+        let done = Instant::now();
+
+        // Completions, metrics.
+        use std::sync::atomic::Ordering::Relaxed;
+        let shard_m = ctx.metrics.shard(ctx.index);
+        shard_m.batches.fetch_add(1, Relaxed);
+        shard_m.batched_requests.fetch_add(outcomes.len() as u64, Relaxed);
+        shard_m.occupancy.store(table.occupancy() as u64, Relaxed);
+        shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
+        for outcome in outcomes {
+            let slot = batch
+                .iter()
+                .position(|(_, lane)| *lane == outcome.lane)
+                .expect("every drained lane was gathered");
+            let (qj, _) = batch.swap_remove(slot);
+            let latency_us =
+                done.saturating_duration_since(qj.job.enqueued).as_secs_f64() * 1e6;
+            let missed = done > qj.job.deadline;
+            ctx.metrics.record_completion(ctx.index, latency_us, missed);
+            match outcome.event {
+                WatchdogEvent::Ok => {}
+                WatchdogEvent::Patched => {
+                    ctx.metrics.watchdog_patched.fetch_add(1, Relaxed);
+                }
+                WatchdogEvent::ResetRequested => {
+                    ctx.metrics.watchdog_patched.fetch_add(1, Relaxed);
+                    ctx.metrics.watchdog_resets.fetch_add(1, Relaxed);
+                }
+            }
+            send_completion(
+                &qj.job.reply,
+                Ok(Completion {
+                    estimate: outcome.estimate,
+                    latency_us,
+                    deadline_missed: missed,
+                    shard: ctx.index,
+                    lane: outcome.lane,
+                    event: outcome.event,
+                }),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::ScalarKernel;
+    use crate::lstm::LstmParams;
+    use crate::util::Rng;
+
+    fn window(rng: &mut Rng) -> Box<[f32; INPUT_SIZE]> {
+        let mut w = Box::new([0f32; INPUT_SIZE]);
+        for v in w.iter_mut() {
+            *v = rng.uniform(-40.0, 40.0) as f32;
+        }
+        w
+    }
+
+    /// Reference: one dedicated scalar kernel + its own watchdog,
+    /// mirroring exactly what a shard lane does.
+    struct RefStream {
+        kernel: ScalarKernel<FloatPath>,
+        wd: Watchdog,
+    }
+
+    impl RefStream {
+        fn new(packed: Arc<PackedModel>, cfg: WatchdogConfig) -> Self {
+            Self { kernel: ScalarKernel::new(packed, FloatPath), wd: Watchdog::new(cfg) }
+        }
+
+        fn step(&mut self, w: &[f32; INPUT_SIZE]) -> (f64, WatchdogEvent) {
+            let raw = self.kernel.step_window(&w[..]);
+            let (y, ev) = self.wd.check(raw);
+            if ev == WatchdogEvent::ResetRequested {
+                self.kernel.reset();
+            }
+            (y, ev)
+        }
+    }
+
+    #[test]
+    fn batched_lanes_match_dedicated_reference_streams() {
+        let p = LstmParams::init(16, 15, 3, 1, 91);
+        let packed = PackedModel::shared(&p);
+        let wd_cfg = WatchdogConfig::default();
+        let mut core = ShardCore::new_float(packed.clone(), 4, wd_cfg.clone());
+        let mut refs: Vec<RefStream> =
+            (0..4).map(|_| RefStream::new(packed.clone(), wd_cfg.clone())).collect();
+        let mut rng = Rng::new(5);
+        for round in 0..25 {
+            // Lanes join at different rates — most batches are partial.
+            let mut steps = Vec::new();
+            let mut want = Vec::new();
+            for lane in 0..4 {
+                if round % (lane + 1) == 0 {
+                    let w = window(&mut rng);
+                    want.push((lane, refs[lane].step(&w).0));
+                    steps.push(LaneStep { lane, window: w });
+                }
+            }
+            let got = core.step_batch(&steps).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (o, (lane, y)) in got.iter().zip(&want) {
+                assert_eq!(o.lane, *lane);
+                assert_eq!(o.estimate, *y, "lane {lane} diverged on round {round}");
+            }
+        }
+    }
+
+    /// Satellite: stuck-output fault through the batched path.  A frozen
+    /// datapath is simulated on ONE of 8 lanes by re-importing that
+    /// lane's pre-step state after every pass while feeding the same
+    /// window — the lane's raw estimate becomes bit-identical round
+    /// after round, which must trip the watchdog's stuck detector and
+    /// re-zero only that lane.
+    #[test]
+    fn stuck_output_resets_only_the_frozen_lane() {
+        let p = LstmParams::init(16, 15, 3, 1, 17);
+        let packed = PackedModel::shared(&p);
+        // Range/slew checks are disabled (random-weight estimates roam
+        // outside the physical roller range) so ONLY the stuck detector
+        // can trip.
+        let wd_cfg = WatchdogConfig {
+            min_m: -1e12,
+            max_m: 1e12,
+            max_slew_m_s: 1e15,
+            stuck_after: 4,
+            reset_after: 2,
+        };
+        let lanes = 8;
+        let faulty = 3usize;
+        let mut core = ShardCore::new_float(packed.clone(), lanes, wd_cfg.clone());
+        let mut refs: Vec<RefStream> =
+            (0..lanes).map(|_| RefStream::new(packed.clone(), wd_cfg.clone())).collect();
+        let mut rng = Rng::new(2024);
+
+        // Warm every lane with a couple of live rounds first.
+        for _ in 0..2 {
+            let mut steps = Vec::new();
+            for lane in 0..lanes {
+                let w = window(&mut rng);
+                refs[lane].step(&w);
+                steps.push(LaneStep { lane, window: w });
+            }
+            for o in core.step_batch(&steps).unwrap() {
+                assert_eq!(o.event, WatchdogEvent::Ok);
+            }
+        }
+
+        // Freeze lane `faulty`: same window + restored state every round.
+        let frozen_window = window(&mut rng);
+        let frozen_state = core.export_lane(faulty);
+        let mut reset_seen = false;
+        let mut healthy_events = Vec::new();
+        for round in 0..(wd_cfg.stuck_after + wd_cfg.reset_after + 2) {
+            let mut steps = Vec::new();
+            let mut want = Vec::new();
+            for lane in 0..lanes {
+                if lane == faulty {
+                    steps.push(LaneStep { lane, window: frozen_window.clone() });
+                } else {
+                    let w = window(&mut rng);
+                    want.push((lane, refs[lane].step(&w).0));
+                    steps.push(LaneStep { lane, window: w });
+                }
+            }
+            let outcomes = core.step_batch(&steps).unwrap();
+            for o in &outcomes {
+                if o.lane == faulty {
+                    if o.event == WatchdogEvent::ResetRequested {
+                        reset_seen = true;
+                    }
+                } else {
+                    healthy_events.push(o.event);
+                    let (_, y) = *want.iter().find(|(l, _)| *l == o.lane).unwrap();
+                    assert_eq!(
+                        o.estimate, y,
+                        "healthy lane {} diverged from unfaulted reference on round {round}",
+                        o.lane
+                    );
+                }
+            }
+            if reset_seen {
+                break;
+            }
+            // Keep the datapath frozen for the next round.
+            core.import_lane(faulty, &frozen_state);
+        }
+        assert!(reset_seen, "identical estimates must trip the stuck watchdog");
+        assert!(healthy_events.iter().all(|&e| e == WatchdogEvent::Ok));
+        // Only the frozen lane was re-zeroed...
+        assert!(core.export_lane(faulty).iter().all(|&v| v == 0.0));
+        for lane in (0..lanes).filter(|&l| l != faulty) {
+            assert!(
+                core.export_lane(lane).iter().any(|&v| v != 0.0),
+                "healthy lane {lane} state must survive"
+            );
+        }
+        // ...and it recovers as a fresh stream: its post-reset estimates
+        // match a brand-new reference stream fed the same windows.
+        let mut fresh = RefStream::new(packed, wd_cfg);
+        for _ in 0..5 {
+            let w = window(&mut rng);
+            let (y_ref, _) = fresh.step(&w);
+            let got = core.step_batch(&[LaneStep { lane: faulty, window: w }]).unwrap();
+            assert_eq!(got[0].estimate, y_ref);
+        }
+    }
+
+    #[test]
+    fn recycle_lane_clears_state_and_watchdog_history() {
+        let p = LstmParams::init(16, 15, 2, 1, 6);
+        let mut core =
+            ShardCore::new_float(PackedModel::shared(&p), 2, WatchdogConfig::default());
+        let mut rng = Rng::new(9);
+        for _ in 0..3 {
+            let steps: Vec<LaneStep> =
+                (0..2).map(|lane| LaneStep { lane, window: window(&mut rng) }).collect();
+            core.step_batch(&steps).unwrap();
+        }
+        assert!(core.export_lane(0).iter().any(|&v| v != 0.0));
+        core.recycle_lane(0);
+        assert!(core.export_lane(0).iter().all(|&v| v == 0.0));
+        assert!(core.export_lane(1).iter().any(|&v| v != 0.0), "lane 1 untouched");
+    }
+}

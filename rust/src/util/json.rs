@@ -18,6 +18,12 @@ pub enum Json {
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+    /// Pre-rendered JSON emitted verbatim — the write-side escape hatch
+    /// for opaque token passthrough (e.g. echoing a request id whose
+    /// numeric value would be mangled by an f64 round trip).  Never
+    /// produced by [`Json::parse`]; the caller guarantees the string is
+    /// valid JSON.
+    Raw(String),
 }
 
 impl Json {
@@ -129,6 +135,7 @@ impl fmt::Display for Json {
                 }
             }
             Json::Str(s) => write_escaped(f, s),
+            Json::Raw(s) => write!(f, "{s}"),
             Json::Arr(a) => {
                 write!(f, "[")?;
                 for (i, v) in a.iter().enumerate() {
@@ -370,6 +377,15 @@ mod tests {
     fn integers_print_clean() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(2.5).to_string(), "2.5");
+    }
+
+    #[test]
+    fn raw_tokens_pass_through_verbatim() {
+        // 2^53 + 1 — unrepresentable as f64, the motivating case.
+        let obj = Json::obj(vec![("id", Json::Raw("9007199254740993".into()))]);
+        assert_eq!(obj.to_string(), r#"{"id":9007199254740993}"#);
+        let obj = Json::obj(vec![("id", Json::Raw(r#""req-aa.42""#.into()))]);
+        assert_eq!(obj.to_string(), r#"{"id":"req-aa.42"}"#);
     }
 
     #[test]

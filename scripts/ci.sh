@@ -30,4 +30,9 @@ cargo test -q
 echo "== kernel bench smoke (BENCH_kernel.json) =="
 HRD_BENCH_FAST=1 cargo run --release --bin hrd -- bench --quick --out BENCH_kernel.json
 
+echo "== serving fabric loadgen smoke (BENCH_serving.json) =="
+# Loopback loadgen: serial baseline vs sched:: fabric at shards {1,2,4},
+# small M / short duration (see scripts/loadgen.sh for the full run).
+cargo run --release --bin hrd -- loadgen --quick --out BENCH_serving.json
+
 echo "CI OK"

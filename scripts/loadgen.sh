@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Serving-fabric loadgen workflow.
+#
+# `hrd loadgen` is a self-contained load generator: it spins up the TCP
+# serving front-end on a loopback socket, drives M synthetic DROPBEAR
+# streams (virtual-testbed windows, one named session per stream) as
+# closed-loop clients, and measures
+#
+#   1. sustained request rate (closed loop, flat out), and
+#   2. deadline-miss rate at a fixed offered load (paced phase),
+#
+# for the legacy serial single-backend server AND the sharded
+# deadline-aware fabric (sched::) at shards in {1, 2, 4}.  Results land
+# in BENCH_serving.json:
+#
+#   .serial                         — the baseline scenario
+#   .fabric[]                       — one entry per shard count
+#   .derived.best_fabric_vs_serial_sustained
+#                                   — the headline ratio (> 1 means the
+#                                     fabric beats one serial engine)
+#
+# Usage:
+#   scripts/loadgen.sh            # CI smoke: small M, short duration
+#   scripts/loadgen.sh full       # full measurement (perf pass numbers)
+#
+# Knobs (forwarded verbatim, see `hrd help`):
+#   scripts/loadgen.sh full --streams 64 --shards 1,2,4,8 --batch 16
+#
+# The `serving_fabric` bench binary (`cargo bench --bench serving_fabric`
+# or running the built binary directly) runs the same suite and, in full
+# mode, asserts the acceptance property that the widest fabric sustains a
+# strictly higher rate than the serial backend.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+MODE="${1:-smoke}"
+if [[ "$MODE" == "smoke" || "$MODE" == "full" ]]; then shift || true; fi
+case "$MODE" in
+  smoke) exec cargo run --release --bin hrd -- loadgen --quick --out BENCH_serving.json "$@" ;;
+  full)  exec cargo run --release --bin hrd -- loadgen --out BENCH_serving.json "$@" ;;
+  *) echo "usage: $0 [smoke|full] [-- extra hrd loadgen flags]" >&2; exit 2 ;;
+esac
