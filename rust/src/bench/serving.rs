@@ -1,7 +1,10 @@
 //! Serving-fabric load generator: drives M synthetic DROPBEAR streams
 //! through a loopback TCP socket against (a) the legacy serial
 //! single-backend server and (b) the sharded deadline-aware fabric at
-//! several shard counts, and writes `BENCH_serving.json`.
+//! several shard counts — and, for the fabric, over BOTH wire protocols
+//! (legacy JSON lines and the [`crate::wire`] binary framing) — then
+//! writes `BENCH_serving.json` with a per-shard json-vs-binary
+//! comparison.
 //!
 //! Two phases per scenario:
 //!
@@ -17,6 +20,12 @@
 //!    load (the fabric's own miss verdict; client-side round-trip vs
 //!    deadline for the serial baseline, which tracks no deadlines).
 //!
+//! A separate **parity** pass (run whenever both protocols are
+//! selected) feeds the same windows through a JSON session, a binary
+//! single-submit session, and a binary batch-submit session on a fresh
+//! server and asserts the estimates are bit-identical across all three
+//! — the binary protocol must change the encoding, never the numbers.
+//!
 //! Workloads are pre-generated from the virtual DROPBEAR testbed
 //! (per-stream seeds via [`channel_seed`]), so generation cost never
 //! pollutes the serving measurement.  Shared by `hrd loadgen` and the
@@ -30,10 +39,63 @@ use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
 use crate::beam::{ProfileKind, Testbed};
-use crate::coordinator::{channel_seed, Client, NativeBackend, Server};
+use crate::coordinator::{channel_seed, Client, InferReply, NativeBackend, Server};
 use crate::lstm::LstmParams;
 use crate::sched::{Fabric, FabricConfig};
 use crate::util::{stats, Json};
+use crate::wire::WireClient;
+
+/// Which wire protocol a scenario's clients speak.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireProto {
+    Json,
+    Binary,
+}
+
+impl WireProto {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Json => "json",
+            Self::Binary => "binary",
+        }
+    }
+
+    /// Parse a `--wire` argument into the protocol list to sweep.
+    pub fn parse_list(s: &str) -> Option<Vec<WireProto>> {
+        match s {
+            "json" => Some(vec![Self::Json]),
+            "binary" => Some(vec![Self::Binary]),
+            "both" => Some(vec![Self::Json, Self::Binary]),
+            _ => None,
+        }
+    }
+}
+
+/// Protocol-agnostic loadgen client.
+enum LoadClient {
+    Json(Client),
+    Bin(WireClient),
+}
+
+impl LoadClient {
+    fn connect(addr: &str, session: &str, proto: WireProto) -> Result<Self> {
+        Ok(match proto {
+            WireProto::Json => Self::Json(Client::with_session(addr, session)?),
+            WireProto::Binary => Self::Bin(WireClient::with_session(addr, session)?),
+        })
+    }
+
+    fn infer_full(
+        &mut self,
+        w: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+    ) -> Result<InferReply> {
+        match self {
+            Self::Json(c) => c.infer_full(w, deadline_us),
+            Self::Bin(c) => c.infer_full(w, deadline_us),
+        }
+    }
+}
 
 /// Load-generator tuning.
 #[derive(Debug, Clone)]
@@ -44,6 +106,9 @@ pub struct ServingConfig {
     pub requests_per_stream: usize,
     /// Fabric shard counts to sweep (the serial baseline always runs).
     pub shard_counts: Vec<usize>,
+    /// Wire protocols to sweep on the fabric scenarios (the serial
+    /// baseline is always JSON — the serial path has no binary route).
+    pub protos: Vec<WireProto>,
     /// Kernel lanes per shard.
     pub batch: usize,
     /// Per-request deadline.
@@ -63,6 +128,7 @@ impl ServingConfig {
             streams: 32,
             requests_per_stream: 200,
             shard_counts: vec![1, 2, 4],
+            protos: vec![WireProto::Json, WireProto::Binary],
             batch: 8,
             deadline_us: crate::arch::RTOS_PERIOD_US,
             paced_rate_hz: 500.0,
@@ -77,6 +143,7 @@ impl ServingConfig {
             streams: 8,
             requests_per_stream: 40,
             shard_counts: vec![1, 2, 4],
+            protos: vec![WireProto::Json, WireProto::Binary],
             batch: 4,
             deadline_us: crate::arch::RTOS_PERIOD_US,
             paced_rate_hz: 400.0,
@@ -97,6 +164,7 @@ enum Mode {
 pub struct ScenarioReport {
     pub label: String,
     pub shards: usize,
+    pub wire: WireProto,
     pub requests: u64,
     pub wall_s: f64,
     pub sustained_rps: f64,
@@ -112,6 +180,7 @@ impl ScenarioReport {
         Json::obj(vec![
             ("label", Json::from(self.label.as_str())),
             ("shards", Json::from(self.shards)),
+            ("wire", Json::from(self.wire.name())),
             ("requests", Json::from(self.requests as f64)),
             ("wall_s", Json::from(self.wall_s)),
             ("sustained_rps", Json::from(self.sustained_rps)),
@@ -124,28 +193,73 @@ impl ScenarioReport {
     }
 }
 
+/// Per-shard-count json-vs-binary comparison (the headline the wire::
+/// layer is graded on).
+#[derive(Debug, Clone)]
+pub struct WireCompare {
+    pub shards: usize,
+    pub json_p50_us: f64,
+    pub binary_p50_us: f64,
+    pub json_p99_us: f64,
+    pub binary_p99_us: f64,
+    pub json_rps: f64,
+    pub binary_rps: f64,
+}
+
+impl WireCompare {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::from(self.shards)),
+            ("json_p50_us", Json::from(self.json_p50_us)),
+            ("binary_p50_us", Json::from(self.binary_p50_us)),
+            ("json_p99_us", Json::from(self.json_p99_us)),
+            ("binary_p99_us", Json::from(self.binary_p99_us)),
+            ("json_rps", Json::from(self.json_rps)),
+            ("binary_rps", Json::from(self.binary_rps)),
+            (
+                "binary_p50_speedup",
+                Json::from(self.json_p50_us / self.binary_p50_us.max(1e-9)),
+            ),
+            (
+                "binary_p99_speedup",
+                Json::from(self.json_p99_us / self.binary_p99_us.max(1e-9)),
+            ),
+            (
+                "binary_rps_speedup",
+                Json::from(self.binary_rps / self.json_rps.max(1e-9)),
+            ),
+        ])
+    }
+}
+
 /// Full suite output.
 #[derive(Debug, Clone)]
 pub struct ServingSummary {
     pub serial: ScenarioReport,
     pub fabric: Vec<ScenarioReport>,
+    /// Per-request latency comparison json vs binary at each shard
+    /// count (present when both protocols were swept).
+    pub wire_comparison: Vec<WireCompare>,
+    /// Windows checked by the cross-protocol parity pass (0 = skipped).
+    pub parity_windows: u64,
     /// Shard count of the widest fabric scenario (max shards, regardless
     /// of the order `--shards` listed them).
     pub best_fabric_shards: usize,
-    /// Sustained-rate ratio of the widest fabric over the serial baseline
-    /// (the acceptance number: > 1 means the fabric wins).
+    /// Sustained-rate ratio of the best scenario at the widest shard
+    /// count over the serial baseline (the acceptance number: > 1 means
+    /// the fabric wins).
     pub best_fabric_vs_serial: f64,
 }
 
 impl ServingSummary {
     pub fn render(&self) -> String {
         let mut s = format!(
-            "{:<12} {:>9} {:>10} {:>9} {:>9} {:>11} {:>6}\n",
+            "{:<16} {:>9} {:>10} {:>9} {:>9} {:>11} {:>6}\n",
             "scenario", "requests", "rate r/s", "p50 us", "p99 us", "paced miss", "shed"
         );
         let mut row = |r: &ScenarioReport| {
             s.push_str(&format!(
-                "{:<12} {:>9} {:>10.0} {:>9.1} {:>9.1} {:>10.2}% {:>6}\n",
+                "{:<16} {:>9} {:>10.0} {:>9.1} {:>9.1} {:>10.2}% {:>6}\n",
                 r.label,
                 r.requests,
                 r.sustained_rps,
@@ -158,6 +272,24 @@ impl ServingSummary {
         row(&self.serial);
         for f in &self.fabric {
             row(f);
+        }
+        for c in &self.wire_comparison {
+            s.push_str(&format!(
+                "shards {}: binary vs json p50 {:.1} us vs {:.1} us ({:.2}x), \
+                 rate {:.0} vs {:.0} r/s\n",
+                c.shards,
+                c.binary_p50_us,
+                c.json_p50_us,
+                c.json_p50_us / c.binary_p50_us.max(1e-9),
+                c.binary_rps,
+                c.json_rps,
+            ));
+        }
+        if self.parity_windows > 0 {
+            s.push_str(&format!(
+                "wire parity: {} windows bit-identical across json/binary/batch\n",
+                self.parity_windows
+            ));
         }
         s.push_str(&format!(
             "widest fabric ({} shards) vs serial sustained rate: {:.2}x",
@@ -182,11 +314,20 @@ impl ServingSummary {
                         "shard_counts",
                         Json::Arr(cfg.shard_counts.iter().map(|&n| Json::from(n)).collect()),
                     ),
+                    (
+                        "wire_protocols",
+                        Json::Arr(cfg.protos.iter().map(|p| Json::from(p.name())).collect()),
+                    ),
                     ("seed", Json::from(cfg.seed as f64)),
                 ]),
             ),
             ("serial", self.serial.to_json()),
             ("fabric", Json::Arr(self.fabric.iter().map(|f| f.to_json()).collect())),
+            (
+                "wire_comparison",
+                Json::Arr(self.wire_comparison.iter().map(|c| c.to_json()).collect()),
+            ),
+            ("parity_windows", Json::from(self.parity_windows as f64)),
             (
                 "derived",
                 Json::obj(vec![
@@ -215,12 +356,13 @@ fn run_scenario(
     cfg: &ServingConfig,
     loads: &[Vec<[f32; INPUT_SIZE]>],
     mode: Mode,
+    proto: WireProto,
 ) -> Result<ScenarioReport> {
     let server = Server::bind("127.0.0.1:0")?;
     let addr = server.local_addr()?.to_string();
     let (label, shards) = match mode {
         Mode::Serial => ("serial".to_string(), 0),
-        Mode::Fabric(n) => (format!("fabric-{n}"), n),
+        Mode::Fabric(n) => (format!("fabric-{n}-{}", proto.name()), n),
     };
     let server_thread = match mode {
         Mode::Serial => {
@@ -250,7 +392,7 @@ fn run_scenario(
         let addr = addr.clone();
         let windows: Vec<[f32; INPUT_SIZE]> = load[..cfg.requests_per_stream].to_vec();
         joins.push(std::thread::spawn(move || -> Result<Vec<f64>> {
-            let mut client = Client::with_session(&addr, &format!("stream-{s}"))?;
+            let mut client = LoadClient::connect(&addr, &format!("stream-{s}"), proto)?;
             let mut lats = Vec::with_capacity(windows.len());
             for w in &windows {
                 // Client-observed round trip — comparable across modes
@@ -281,7 +423,7 @@ fn run_scenario(
             let windows: Vec<[f32; INPUT_SIZE]> =
                 load[cfg.requests_per_stream..].to_vec();
             joins.push(std::thread::spawn(move || -> Result<(u64, u64)> {
-                let mut client = Client::with_session(&addr, &format!("stream-{s}"))?;
+                let mut client = LoadClient::connect(&addr, &format!("stream-{s}"), proto)?;
                 let t0 = Instant::now();
                 let mut misses = 0u64;
                 for (k, w) in windows.iter().enumerate() {
@@ -310,7 +452,9 @@ fn run_scenario(
         }
     }
 
-    // Final stats (shed count lives server-side), then shut down.
+    // Final stats (shed count lives server-side), then shut down.  The
+    // control client always speaks JSON — exercising both protocols on
+    // one server is part of the point.
     let mut ctl = Client::connect(&addr)?;
     let final_stats = ctl.stats()?;
     let shed = final_stats.get("shed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
@@ -321,6 +465,7 @@ fn run_scenario(
     Ok(ScenarioReport {
         label,
         shards,
+        wire: proto,
         requests,
         wall_s,
         sustained_rps: if wall_s > 0.0 { requests as f64 / wall_s } else { 0.0 },
@@ -336,32 +481,111 @@ fn run_scenario(
     })
 }
 
+/// Cross-protocol parity: the same windows through (1) a JSON session,
+/// (2) a binary single-submit session, (3) a binary batch-submit
+/// session — on one fresh fabric — must produce bit-identical
+/// estimates.  Distinct session names land on distinct lanes, but every
+/// lane runs the same packed weights from zero state, so the binary
+/// encoding is the only variable.  Returns the number of windows
+/// checked; errors on the first mismatch.
+fn wire_parity(params: &LstmParams, loads: &[Vec<[f32; INPUT_SIZE]>]) -> Result<u64> {
+    let windows: Vec<[f32; INPUT_SIZE]> =
+        loads[0].iter().take(16.min(loads[0].len())).copied().collect();
+    let server = Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let mut fcfg = FabricConfig::new(1, 4);
+    fcfg.queue_depth = windows.len().max(64);
+    let fabric = Arc::new(Fabric::new(params, fcfg)?);
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run_fabric(fabric);
+    });
+
+    let mut json = Client::with_session(&addr, "parity-json")?;
+    let mut single = WireClient::with_session(&addr, "parity-bin")?;
+    let mut batcher = WireClient::with_session(&addr, "parity-batch")?;
+    let batch = batcher.infer_batch(&windows, None)?;
+    for (i, w) in windows.iter().enumerate() {
+        let j = json.infer_full(w, None)?.estimate;
+        let b = single.infer_full(w, None)?.estimate;
+        anyhow::ensure!(!batch[i].shed, "parity batch window {i} was shed");
+        let bb = batch[i].estimate;
+        anyhow::ensure!(
+            j.to_bits() == b.to_bits() && j.to_bits() == bb.to_bits(),
+            "estimate diverged on window {i}: json {j:?} vs binary {b:?} vs batch {bb:?}"
+        );
+    }
+    let mut ctl = Client::connect(&addr)?;
+    ctl.shutdown()?;
+    server_thread.join().expect("parity server panicked");
+    Ok(windows.len() as u64)
+}
+
 /// Run the full suite: serial baseline, then the fabric at each
-/// configured shard count; optionally write `BENCH_serving.json`.
+/// configured shard count over each configured wire protocol (plus the
+/// cross-protocol parity pass when both are selected); optionally write
+/// `BENCH_serving.json`.
 pub fn run_serving_suite(
     params: &LstmParams,
     cfg: &ServingConfig,
     out: Option<&Path>,
 ) -> Result<ServingSummary> {
     anyhow::ensure!(cfg.streams >= 1 && cfg.requests_per_stream >= 1, "empty workload");
+    anyhow::ensure!(!cfg.protos.is_empty(), "no wire protocols selected");
     let loads = generate_loads(cfg);
-    let serial = run_scenario(params, cfg, &loads, Mode::Serial)
+    let serial = run_scenario(params, cfg, &loads, Mode::Serial, WireProto::Json)
         .context("serial baseline scenario")?;
-    let mut fabric = Vec::with_capacity(cfg.shard_counts.len());
+    let mut fabric = Vec::with_capacity(cfg.shard_counts.len() * cfg.protos.len());
     for &n in &cfg.shard_counts {
-        fabric.push(
-            run_scenario(params, cfg, &loads, Mode::Fabric(n))
-                .with_context(|| format!("fabric scenario with {n} shards"))?,
-        );
+        for &proto in &cfg.protos {
+            fabric.push(
+                run_scenario(params, cfg, &loads, Mode::Fabric(n), proto).with_context(
+                    || format!("fabric scenario with {n} shards over {}", proto.name()),
+                )?,
+            );
+        }
     }
+    let both = cfg.protos.contains(&WireProto::Json) && cfg.protos.contains(&WireProto::Binary);
+    let mut wire_comparison = Vec::new();
+    if both {
+        for &n in &cfg.shard_counts {
+            let find = |p: WireProto| fabric.iter().find(|f| f.shards == n && f.wire == p);
+            if let (Some(j), Some(b)) = (find(WireProto::Json), find(WireProto::Binary)) {
+                wire_comparison.push(WireCompare {
+                    shards: n,
+                    json_p50_us: j.p50_us,
+                    binary_p50_us: b.p50_us,
+                    json_p99_us: j.p99_us,
+                    binary_p99_us: b.p99_us,
+                    json_rps: j.sustained_rps,
+                    binary_rps: b.sustained_rps,
+                });
+            }
+        }
+    }
+    let parity_windows =
+        if both { wire_parity(params, &loads).context("wire parity check")? } else { 0 };
     // "Widest" = max shard count, NOT list order (--shards "8,1" must not
-    // grade the acceptance ratio against the 1-shard run).
-    let widest = fabric.iter().max_by_key(|f| f.shards);
+    // grade the acceptance ratio against the 1-shard run); best protocol
+    // at that width.
+    let widest = fabric
+        .iter()
+        .max_by(|a, b| {
+            (a.shards, a.sustained_rps)
+                .partial_cmp(&(b.shards, b.sustained_rps))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
     let best_fabric_shards = widest.map(|f| f.shards).unwrap_or(0);
     let best_fabric_vs_serial = widest
         .map(|f| f.sustained_rps / serial.sustained_rps.max(1e-9))
         .unwrap_or(0.0);
-    let summary = ServingSummary { serial, fabric, best_fabric_shards, best_fabric_vs_serial };
+    let summary = ServingSummary {
+        serial,
+        fabric,
+        wire_comparison,
+        parity_windows,
+        best_fabric_shards,
+        best_fabric_vs_serial,
+    };
     if let Some(path) = out {
         std::fs::write(path, summary.to_json(cfg).to_string())
             .with_context(|| format!("writing {}", path.display()))?;
@@ -380,6 +604,7 @@ mod tests {
             streams: 3,
             requests_per_stream: 6,
             shard_counts: vec![1, 2],
+            protos: vec![WireProto::Json, WireProto::Binary],
             batch: 2,
             deadline_us: crate::arch::RTOS_PERIOD_US,
             paced_rate_hz: 2000.0,
@@ -391,23 +616,52 @@ mod tests {
         let s = run_serving_suite(&params, &cfg, Some(&out)).unwrap();
         assert_eq!(s.serial.shards, 0);
         assert_eq!(s.serial.requests, 18);
-        assert_eq!(s.fabric.len(), 2);
+        assert_eq!(s.fabric.len(), 4, "2 shard counts x 2 protocols");
         for f in &s.fabric {
             assert_eq!(f.requests, 18);
             assert_eq!(f.paced_requests, 12);
             assert!(f.sustained_rps > 0.0, "{f:?}");
             assert_eq!(f.shed, 0, "closed loop must not shed: {f:?}");
         }
+        assert_eq!(s.wire_comparison.len(), 2, "one comparison per shard count");
+        for c in &s.wire_comparison {
+            assert!(c.json_p50_us > 0.0 && c.binary_p50_us > 0.0, "{c:?}");
+        }
+        assert!(s.parity_windows > 0, "parity pass must run when both protos selected");
         assert!(s.best_fabric_vs_serial > 0.0);
         assert_eq!(s.best_fabric_shards, 2);
         assert!(!s.render().is_empty());
         let j = Json::parse_file(&out).unwrap();
         assert_eq!(j.get("group").unwrap().as_str(), Some("serving"));
-        assert_eq!(j.get("fabric").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("fabric").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.get("wire_comparison").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("parity_windows").unwrap().as_f64().unwrap() > 0.0);
         assert!(j
             .at(&["derived", "best_fabric_vs_serial_sustained"])
             .unwrap()
             .as_f64()
             .is_some());
+    }
+
+    /// Single-protocol runs still work (and skip comparison + parity).
+    #[test]
+    fn single_proto_suite_skips_parity() {
+        let params = LstmParams::init(16, 15, 3, 1, 7);
+        let cfg = ServingConfig {
+            streams: 2,
+            requests_per_stream: 4,
+            shard_counts: vec![1],
+            protos: vec![WireProto::Binary],
+            batch: 2,
+            deadline_us: crate::arch::RTOS_PERIOD_US,
+            paced_rate_hz: 0.0,
+            paced_requests: 0,
+            seed: 3,
+        };
+        let s = run_serving_suite(&params, &cfg, None).unwrap();
+        assert_eq!(s.fabric.len(), 1);
+        assert_eq!(s.fabric[0].wire, WireProto::Binary);
+        assert!(s.wire_comparison.is_empty());
+        assert_eq!(s.parity_windows, 0);
     }
 }

@@ -33,20 +33,24 @@ COMMANDS:
   bench     run the kernel micro-benchmark suite (packed scalar vs legacy,
             batched throughput scaling) and write BENCH_kernel.json
             --out <file>  --quick
-  serve-tcp run the TCP serving front-end (newline-delimited JSON).
-            Kernel-capable backends (native/quantized/fpga-sim) serve on
-            the sharded deadline-aware fabric; --shards 0 (or pjrt/modal)
-            selects the legacy serial single-backend path.
+  serve-tcp run the TCP serving front-end.  Each connection's protocol
+            is auto-detected: binary framing (see docs/PROTOCOL.md) or
+            legacy newline-delimited JSON.  Kernel-capable backends
+            (native/quantized/fpga-sim) serve on the sharded
+            deadline-aware fabric; --shards 0 (or pjrt/modal) selects
+            the legacy serial single-backend path (JSON only).
             --addr HOST:PORT (default 127.0.0.1:7433) + serve's options
             --shards N  --batch B  --deadline-us D  --gather-us G
             --shed {reject|evict-farthest}
   loadgen   self-contained serving load generator: drives M synthetic
             DROPBEAR streams through a loopback socket against the serial
-            backend and the fabric at several shard counts, writes
-            BENCH_serving.json
+            backend and the fabric at several shard counts over the JSON
+            and/or binary wire protocol, writes BENCH_serving.json with a
+            json-vs-binary comparison and a cross-protocol bit-parity
+            check
             --streams M  --requests N  --shards "1,2,4"  --batch B
-            --deadline-us D  --rate-hz R  --paced-requests K
-            --out <file>  --quick
+            --wire {json|binary|both}  --deadline-us D  --rate-hz R
+            --paced-requests K  --out <file>  --quick
   tables    regenerate Tables I-IV (FPGA design-space study)
   pareto    design-space Pareto frontier + constrained recommendation
             --min-snr X  --max-dsps N
@@ -345,12 +349,16 @@ fn serve_tcp(args: &Args) -> Result<i32> {
 /// DROPBEAR client streams, serial baseline vs fabric at several shard
 /// counts; writes `BENCH_serving.json`.
 fn loadgen(args: &Args) -> Result<i32> {
-    use crate::bench::serving::{run_serving_suite, ServingConfig};
+    use crate::bench::serving::{run_serving_suite, ServingConfig, WireProto};
     let mut scfg =
         if args.has_flag("quick") { ServingConfig::quick() } else { ServingConfig::full() };
     scfg.streams = args.get_usize("streams", scfg.streams)?.max(1);
     scfg.requests_per_stream = args.get_usize("requests", scfg.requests_per_stream)?.max(1);
     scfg.batch = args.get_usize("batch", scfg.batch)?.max(1);
+    if let Some(wire) = args.get("wire") {
+        scfg.protos = WireProto::parse_list(wire)
+            .ok_or_else(|| anyhow::anyhow!("--wire must be json, binary or both, got {wire}"))?;
+    }
     scfg.deadline_us = args.get_f64("deadline-us", scfg.deadline_us)?;
     scfg.paced_rate_hz = args.get_f64("rate-hz", scfg.paced_rate_hz)?;
     scfg.paced_requests = args.get_usize("paced-requests", scfg.paced_requests)?;

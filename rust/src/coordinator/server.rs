@@ -1,5 +1,5 @@
 //! Network serving front-end — the Fig.-4 "host PC" interface as a real
-//! service: newline-delimited JSON over TCP, in two modes:
+//! service, in two modes:
 //!
 //! * [`Server::run`] — legacy serial mode: many clients multiplexed onto
 //!   ONE inference engine (the backend owns recurrent state and, for
@@ -11,7 +11,16 @@
 //!   client (`"session"` field) and survive reconnects; `stats` reports
 //!   the fabric's [`crate::sched::SchedSnapshot`].
 //!
-//! Protocol (one JSON object per line):
+//! Each connection's protocol is sniffed from its first byte: the
+//! binary frame magic (`H` of `"HRDW"`, see [`crate::wire`] and
+//! `docs/PROTOCOL.md`) selects the binary wire protocol, anything else
+//! the legacy newline-delimited JSON below.  Fabric mode serves both on
+//! one port; binary frames are routed into
+//! [`crate::sched::Fabric::submit_hashed`] with no string allocation on
+//! the hot path.  Serial mode is JSON-only (a binary client gets an
+//! `Error` frame telling it to use the fabric server).
+//!
+//! JSON protocol (one object per line):
 //!
 //! ```text
 //! -> {"id": 7, "features": [16 floats],
@@ -43,8 +52,10 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
-use crate::sched::{Fabric, SchedSnapshot};
+use crate::sched::{checked_hash, Fabric, SchedSnapshot, SessionNameError, SessionToken};
 use crate::util::{stats, Json};
+use crate::wire;
+use crate::wire::{CompletionRec, FrameReader, FrameType, FrameWriter, Recv, Reject};
 
 use super::backend::Backend;
 
@@ -210,9 +221,11 @@ struct LineReader {
 }
 
 impl LineReader {
-    fn new(stream: TcpStream) -> std::io::Result<Self> {
+    /// Reader whose first bytes were already consumed by the protocol
+    /// sniff (every construction site sits behind [`sniff_protocol`]).
+    fn with_preload(stream: TcpStream, preload: Vec<u8>) -> std::io::Result<Self> {
         stream.set_read_timeout(Some(READ_POLL))?;
-        Ok(Self { stream, buf: Vec::new() })
+        Ok(Self { stream, buf: preload })
     }
 
     /// Next line (without the terminator); `Ok(None)` on EOF or when the
@@ -239,15 +252,51 @@ impl LineReader {
                     return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
                 }
                 Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock
-                            | std::io::ErrorKind::TimedOut
-                            | std::io::ErrorKind::Interrupted
-                    ) => {}
+                Err(e) if wire::io::retryable_read_error(&e) => {}
                 Err(e) => return Err(e),
             }
+        }
+    }
+}
+
+// ---- protocol sniffing -------------------------------------------------
+
+/// What the first byte of a connection announced.
+enum Sniffed {
+    /// Starts with the binary frame magic.
+    Binary,
+    /// Anything else — the legacy JSON line protocol.
+    Json,
+    /// Connection closed (or shutdown raised) before any byte arrived.
+    Gone,
+}
+
+/// Read the connection's first chunk (shutdown-aware, the socket already
+/// has its poll timeout set) and classify the protocol.  The consumed
+/// bytes are handed back via `preload` so neither parser loses them.
+fn sniff_protocol(
+    stream: &TcpStream,
+    shutdown: &AtomicBool,
+    preload: &mut Vec<u8>,
+) -> std::io::Result<Sniffed> {
+    let mut src = stream; // `Read` is implemented for `&TcpStream`
+    let mut chunk = [0u8; 4096];
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(Sniffed::Gone);
+        }
+        match src.read(&mut chunk) {
+            Ok(0) => return Ok(Sniffed::Gone),
+            Ok(n) => {
+                preload.extend_from_slice(&chunk[..n]);
+                return Ok(if preload[0] == wire::MAGIC[0] {
+                    Sniffed::Binary
+                } else {
+                    Sniffed::Json
+                });
+            }
+            Err(e) if wire::io::retryable_read_error(&e) => {}
+            Err(e) => return Err(e),
         }
     }
 }
@@ -439,13 +488,31 @@ fn handle_connection(
     tx: Sender<(Request, Sender<String>)>,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
-    // Request/response line protocol: Nagle + delayed-ACK would add
+    // Request/response protocol: Nagle + delayed-ACK would add
     // ~40-200 ms per round trip.
     stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(READ_POLL))?;
     let peer = stream.peer_addr()?;
     log::debug!("client connected: {peer}");
+    let mut preload = Vec::new();
+    match sniff_protocol(&stream, &shutdown, &mut preload)? {
+        Sniffed::Gone => return Ok(()),
+        Sniffed::Binary => {
+            // The serial path has no fabric to route frames into; tell
+            // the client in its own protocol instead of feeding frame
+            // bytes to the JSON parser.
+            let mut w = FrameWriter::new(stream);
+            let _ = w.send_error(
+                0,
+                false,
+                "binary protocol requires the fabric server (serve-tcp --shards >= 1)",
+            );
+            return Ok(());
+        }
+        Sniffed::Json => {}
+    }
     let mut writer = stream.try_clone()?;
-    let mut reader = LineReader::new(stream)?;
+    let mut reader = LineReader::with_preload(stream, preload)?;
     while let Some(line) = reader.next_line(&shutdown)? {
         if line.trim().is_empty() {
             continue;
@@ -472,14 +539,24 @@ fn handle_connection(
 /// Distinguishes anonymous (per-connection) sessions.
 static CONN_SEQ: AtomicU64 = AtomicU64::new(0);
 
-/// Namespace for anonymous per-connection sessions.  Client-supplied
-/// session names starting with this prefix are rejected — otherwise a
-/// client naming its session "conn/0" would silently share (and be able
-/// to reset) an unrelated anonymous connection's recurrent stream.
-const ANON_SESSION_PREFIX: &str = "conn/";
+/// Validate a JSON-supplied session name, or fall back to the
+/// connection's anonymous stream.  The `conn/` reserved-namespace check
+/// (and every other rule) lives in [`crate::sched::checked_hash`] — one
+/// constructor for both protocols.
+fn json_session_hash(session: Option<&str>, conn: &SessionToken) -> Result<u64, SessionNameError> {
+    match session {
+        None => Ok(conn.hash()),
+        Some(s) => checked_hash(s.as_bytes()),
+    }
+}
 
-fn reserved_session(session: Option<&str>) -> bool {
-    session.map_or(false, |s| s.starts_with(ANON_SESSION_PREFIX))
+/// Render a fabric JSON reply, echoing the request's opaque `id` token
+/// when one was sent (the one place the echo rule lives).
+fn json_reply(mut fields: Vec<(&str, Json)>, id: Option<String>) -> String {
+    if let Some(raw) = id {
+        fields.push(("id", Json::Raw(raw)));
+    }
+    Json::obj(fields).to_string()
 }
 
 fn handle_fabric_connection(
@@ -488,76 +565,78 @@ fn handle_fabric_connection(
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(READ_POLL))?;
     let peer = stream.peer_addr()?;
-    log::debug!("fabric client connected: {peer}");
     // Requests without an explicit session share this connection-scoped
     // stream; named sessions survive reconnects.
-    let conn_session =
-        format!("{ANON_SESSION_PREFIX}{}", CONN_SEQ.fetch_add(1, Ordering::Relaxed));
+    let conn = SessionToken::anon(CONN_SEQ.fetch_add(1, Ordering::Relaxed));
+    let mut preload = Vec::new();
+    match sniff_protocol(&stream, &shutdown, &mut preload)? {
+        Sniffed::Gone => Ok(()),
+        Sniffed::Json => {
+            log::debug!("fabric client connected (json): {peer}");
+            handle_fabric_json(stream, preload, fabric, shutdown, conn)
+        }
+        Sniffed::Binary => {
+            log::debug!("fabric client connected (binary): {peer}");
+            handle_fabric_binary(stream, preload, fabric, shutdown, conn)
+        }
+    }
+}
+
+fn handle_fabric_json(
+    stream: TcpStream,
+    preload: Vec<u8>,
+    fabric: Arc<Fabric>,
+    shutdown: Arc<AtomicBool>,
+    conn: SessionToken,
+) -> Result<()> {
     let mut writer = stream.try_clone()?;
-    let mut reader = LineReader::new(stream)?;
+    let mut reader = LineReader::with_preload(stream, preload)?;
     while let Some(line) = reader.next_line(&shutdown)? {
         if line.trim().is_empty() {
             continue;
         }
         let response = match parse_request(&line) {
-            Ok(Request::Infer { id, session, .. }) if reserved_session(session.as_deref()) => {
-                let mut fields = vec![(
-                    "error",
-                    Json::Str(format!(
-                        "session prefix {ANON_SESSION_PREFIX:?} is reserved for \
-                         anonymous connections"
-                    )),
-                )];
-                if let Some(raw) = id {
-                    fields.push(("id", Json::Raw(raw)));
-                }
-                Json::obj(fields).to_string()
-            }
-            Ok(Request::Reset { session }) if reserved_session(session.as_deref()) => {
-                Json::obj(vec![(
-                    "error",
-                    Json::Str(format!(
-                        "session prefix {ANON_SESSION_PREFIX:?} is reserved for \
-                         anonymous connections"
-                    )),
-                )])
-                .to_string()
-            }
             Ok(Request::Infer { id, session, deadline_us, features }) => {
-                let session = session.as_deref().unwrap_or(&conn_session);
-                let outcome = fabric
-                    .submit(session, &features, deadline_us)
-                    .and_then(|pending| pending.wait());
-                match outcome {
-                    Ok(c) => {
-                        let mut fields = vec![
-                            ("estimate", Json::Num(c.estimate)),
-                            ("latency_us", Json::Num(c.latency_us)),
-                            ("deadline_miss", Json::Bool(c.deadline_missed)),
-                            ("shard", Json::from(c.shard)),
-                            ("lane", Json::from(c.lane)),
-                        ];
-                        if let Some(raw) = id {
-                            fields.push(("id", Json::Raw(raw)));
+                match json_session_hash(session.as_deref(), &conn) {
+                    Err(e) => json_reply(vec![("error", Json::Str(e.to_string()))], id),
+                    Ok(hash) => {
+                        let outcome = fabric
+                            .submit_hashed(hash, &features, deadline_us)
+                            .and_then(|pending| pending.wait());
+                        match outcome {
+                            Ok(c) => json_reply(
+                                vec![
+                                    ("estimate", Json::Num(c.estimate)),
+                                    ("latency_us", Json::Num(c.latency_us)),
+                                    ("deadline_miss", Json::Bool(c.deadline_missed)),
+                                    ("shard", Json::from(c.shard)),
+                                    ("lane", Json::from(c.lane)),
+                                ],
+                                id,
+                            ),
+                            Err(e) => json_reply(
+                                vec![
+                                    ("error", Json::Str(format!("{e:#}"))),
+                                    ("shed", Json::Bool(true)),
+                                ],
+                                id,
+                            ),
                         }
-                        Json::obj(fields).to_string()
-                    }
-                    Err(e) => {
-                        let mut fields = vec![
-                            ("error", Json::Str(format!("{e:#}"))),
-                            ("shed", Json::Bool(true)),
-                        ];
-                        if let Some(raw) = id {
-                            fields.push(("id", Json::Raw(raw)));
-                        }
-                        Json::obj(fields).to_string()
                     }
                 }
             }
             Ok(Request::Reset { session }) => {
-                fabric.reset_session(session.as_deref().unwrap_or(&conn_session));
-                Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+                match json_session_hash(session.as_deref(), &conn) {
+                    Err(e) => {
+                        Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string()
+                    }
+                    Ok(hash) => {
+                        fabric.reset_hashed(hash);
+                        Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+                    }
+                }
             }
             Ok(Request::Stats) => fabric.snapshot().to_json().to_string(),
             Ok(Request::Shutdown) => {
@@ -573,6 +652,160 @@ fn handle_fabric_connection(
         }
     }
     Ok(())
+}
+
+/// Binary-protocol fabric handler: frames go straight from the receive
+/// buffer into [`Fabric::submit_hashed`] — the hot path allocates no
+/// strings and no per-request reply objects (one reused frame buffer on
+/// each side).
+fn handle_fabric_binary(
+    stream: TcpStream,
+    preload: Vec<u8>,
+    fabric: Arc<Fabric>,
+    shutdown: Arc<AtomicBool>,
+    conn: SessionToken,
+) -> Result<()> {
+    let mut writer = FrameWriter::new(stream.try_clone()?);
+    let mut reader = FrameReader::with_preload(stream, preload);
+    // Session field of a frame -> routing hash (empty = this
+    // connection's anonymous stream).
+    let hash_of = |sess: &[u8]| -> Result<u64, SessionNameError> {
+        if sess.is_empty() {
+            Ok(conn.hash())
+        } else {
+            checked_hash(sess)
+        }
+    };
+    loop {
+        let recv = match reader.next_frame(Some(&shutdown))? {
+            Some(r) => r,
+            None => break,
+        };
+        match recv {
+            Recv::Reject(Reject::Version(v)) => {
+                writer.send_error(
+                    0,
+                    false,
+                    &format!(
+                        "unsupported protocol version {v} (server speaks {})",
+                        wire::VERSION
+                    ),
+                )?;
+            }
+            Recv::Reject(Reject::UnknownType(t)) => {
+                writer.send_error(0, false, &format!("unknown frame type 0x{t:02x}"))?;
+            }
+            Recv::Reject(Reject::Oversize(n)) => {
+                // The stream can no longer be reframed reliably.
+                let _ = writer.send_error(
+                    0,
+                    false,
+                    &format!("frame payload of {n} bytes exceeds {}", wire::MAX_PAYLOAD),
+                );
+                break;
+            }
+            Recv::Frame(FrameType::Hello, payload) => match wire::frame::decode_u16(payload) {
+                Err(e) => writer.send_error(0, false, &format!("bad hello frame: {e:#}"))?,
+                Ok(client_max) if client_max < wire::VERSION as u16 => writer.send_error(
+                    0,
+                    false,
+                    &format!(
+                        "no common protocol version (client max {client_max}, server speaks {})",
+                        wire::VERSION
+                    ),
+                )?,
+                Ok(_) => writer.send_hello_ack(wire::VERSION as u16)?,
+            },
+            Recv::Frame(FrameType::Submit, payload) => {
+                match wire::frame::decode_submit(payload) {
+                    Err(e) => {
+                        writer.send_error(0, false, &format!("bad submit frame: {e:#}"))?
+                    }
+                    Ok(s) => match hash_of(s.session) {
+                        Err(e) => writer.send_error(s.seq, false, &e.to_string())?,
+                        Ok(hash) => {
+                            let deadline = (s.deadline_us > 0.0).then_some(s.deadline_us);
+                            let outcome = fabric
+                                .submit_hashed(hash, &s.window, deadline)
+                                .and_then(|pending| pending.wait());
+                            match outcome {
+                                Ok(c) => writer.send_completion(&completion_rec(s.seq, &c))?,
+                                Err(e) => writer.send_error(s.seq, true, &format!("{e:#}"))?,
+                            }
+                        }
+                    },
+                }
+            }
+            Recv::Frame(FrameType::SubmitBatch, payload) => {
+                match wire::frame::decode_submit_batch(payload) {
+                    Err(e) => {
+                        writer.send_error(0, false, &format!("bad submit-batch frame: {e:#}"))?
+                    }
+                    Ok(b) => match hash_of(b.session) {
+                        Err(e) => writer.send_error(b.base_seq, false, &e.to_string())?,
+                        Ok(hash) => {
+                            let deadline = (b.deadline_us > 0.0).then_some(b.deadline_us);
+                            // Pipeline: admit every window first (same
+                            // session => same shard queue, FIFO among
+                            // equal deadlines, so completion order is
+                            // submission order), then collect.
+                            let pendings: Vec<_> = (0..b.count)
+                                .map(|i| fabric.submit_hashed(hash, &b.window(i), deadline))
+                                .collect();
+                            let mut recs = Vec::with_capacity(b.count);
+                            for (i, pending) in pendings.into_iter().enumerate() {
+                                let seq = b.base_seq.wrapping_add(i as u64);
+                                match pending.and_then(|p| p.wait()) {
+                                    Ok(c) => recs.push(completion_rec(seq, &c)),
+                                    Err(_) => recs.push(CompletionRec::shed(seq)),
+                                }
+                            }
+                            writer.send_completion_batch(&recs)?;
+                        }
+                    },
+                }
+            }
+            Recv::Frame(FrameType::Reset, payload) => match wire::frame::decode_reset(payload) {
+                Err(e) => writer.send_error(0, false, &format!("bad reset frame: {e:#}"))?,
+                Ok(sess) => match hash_of(sess) {
+                    Err(e) => writer.send_error(0, false, &e.to_string())?,
+                    Ok(hash) => {
+                        fabric.reset_hashed(hash);
+                        writer.send_empty(FrameType::Ok)?;
+                    }
+                },
+            },
+            Recv::Frame(FrameType::Stats, _) => {
+                writer.send_stats_json(&fabric.snapshot().to_json().to_string())?;
+            }
+            Recv::Frame(FrameType::Shutdown, _) => {
+                shutdown.store(true, Ordering::SeqCst);
+                writer.send_empty(FrameType::Ok)?;
+                break;
+            }
+            Recv::Frame(ty, _) => {
+                // Server-to-client types arriving at the server.
+                writer.send_error(0, false, &format!("unexpected {ty:?} frame"))?;
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Map a fabric completion onto the wire record.
+fn completion_rec(seq: u64, c: &crate::sched::Completion) -> CompletionRec {
+    CompletionRec {
+        seq,
+        estimate: c.estimate,
+        latency_us: c.latency_us,
+        deadline_miss: c.deadline_missed,
+        shed: false,
+        shard: c.shard.min(u16::MAX as usize - 1) as u16,
+        lane: c.lane.min(u16::MAX as usize - 1) as u16,
+    }
 }
 
 // ---- client ------------------------------------------------------------
@@ -890,6 +1123,145 @@ mod tests {
         let snap = handle.join().unwrap();
         assert_eq!(snap.completed, 4);
         assert_eq!(snap.shed, 0);
+    }
+
+    fn start_fabric_server(
+    ) -> (Arc<Fabric>, std::net::SocketAddr, std::thread::JoinHandle<SchedSnapshot>) {
+        let params = LstmParams::init(16, 15, 3, 1, 5);
+        let mut fcfg = FabricConfig::new(2, 4);
+        // Wide watchdog so random-weight estimates aren't clamped (the
+        // equality assertions below are about the kernel).
+        fcfg.watchdog = crate::coordinator::watchdog::WatchdogConfig {
+            min_m: -1e12,
+            max_m: 1e12,
+            max_slew_m_s: 1e15,
+            stuck_after: 1 << 30,
+            ..Default::default()
+        };
+        let fabric = Arc::new(Fabric::new(&params, fcfg).unwrap());
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || server.run_fabric(fabric).unwrap())
+        };
+        (fabric, addr, handle)
+    }
+
+    /// Binary wire protocol end to end: singles, a batch frame, reset,
+    /// stats, the reserved-namespace refusal, and shutdown.
+    #[test]
+    fn binary_fabric_smoke() {
+        use crate::wire::WireClient;
+        let (_fabric, addr, handle) = start_fabric_server();
+        let mut a = WireClient::with_session(&addr.to_string(), "rig-a").unwrap();
+        assert_eq!(a.hello().unwrap(), wire::VERSION as u16);
+        let w = [1.0f32; INPUT_SIZE];
+        let r1 = a.infer_full(&w, None).unwrap();
+        assert!(r1.estimate.is_finite());
+        assert!(r1.shard.is_some() && r1.lane.is_some());
+        let r2 = a.infer_full(&w, None).unwrap();
+        assert_ne!(r2.estimate, r1.estimate, "session state carries");
+        a.reset().unwrap();
+        // A batch frame of 2 identical windows == the two singles above.
+        let recs = a.infer_batch(&[w, w], None).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(!recs[0].shed && !recs[1].shed);
+        assert_eq!(recs[0].estimate, r1.estimate, "batch[0] == fresh single");
+        assert_eq!(recs[1].estimate, r2.estimate, "batch[1] == second single");
+        let stats = a.stats().unwrap();
+        assert_eq!(stats.get("inferred").unwrap().as_f64(), Some(4.0));
+        // Reserved namespace is enforced for binary clients too; the
+        // validated client refuses to even build such a session...
+        assert!(WireClient::with_session(&addr.to_string(), "conn/0").is_err());
+        a.shutdown().unwrap();
+        let snap = handle.join().unwrap();
+        assert_eq!(snap.completed, 4);
+    }
+
+    /// One fabric server, both protocols concurrently: a JSON client
+    /// and a binary client sharing a named session must observe the
+    /// SAME stream (bit-identical continuation), proving the sniffed
+    /// paths route into one fabric.
+    #[test]
+    fn json_and_binary_share_one_fabric() {
+        use crate::wire::WireClient;
+        let (_fabric, addr, handle) = start_fabric_server();
+        let mut j = Client::with_session(&addr.to_string(), "shared").unwrap();
+        let mut b = WireClient::with_session(&addr.to_string(), "shared").unwrap();
+        let w = [0.75f32; INPUT_SIZE];
+        let r1 = j.infer_full(&w, None).unwrap(); // step 1 via JSON
+        let r2 = b.infer_full(&w, None).unwrap(); // step 2 via binary
+        let r3 = j.infer_full(&w, None).unwrap(); // step 3 via JSON
+        assert_ne!(r1.estimate, r2.estimate);
+        assert_ne!(r2.estimate, r3.estimate);
+        // An isolated session replays the same three steps in one
+        // protocol; the interleaved stream must match step for step.
+        let mut solo = Client::with_session(&addr.to_string(), "solo").unwrap();
+        let s1 = solo.infer_full(&w, None).unwrap();
+        let s2 = solo.infer_full(&w, None).unwrap();
+        let s3 = solo.infer_full(&w, None).unwrap();
+        assert_eq!(r1.estimate, s1.estimate);
+        assert_eq!(r2.estimate, s2.estimate);
+        assert_eq!(r3.estimate, s3.estimate);
+        b.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    /// Garbage bytes between binary frames must not kill the
+    /// connection: the reader resyncs on the next magic and serves the
+    /// following frame.
+    #[test]
+    fn binary_handler_resyncs_past_garbage() {
+        use crate::wire::frame as wf;
+        let (_fabric, addr, handle) = start_fabric_server();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = crate::wire::FrameReader::new(stream);
+        let w = [0.5f32; INPUT_SIZE];
+        let mut p = Vec::new();
+        wf::encode_submit(&mut p, 1, 0.0, b"resync", &w);
+        let frame1 = wf::encode_frame(FrameType::Submit, &p);
+        writer.write_all(&frame1).unwrap();
+        // First byte must be magic for the sniff; garbage goes after.
+        writer.write_all(b"\xde\xad\xbe\xef not a frame").unwrap();
+        let mut p = Vec::new();
+        wf::encode_submit(&mut p, 2, 0.0, b"resync", &w);
+        writer.write_all(&wf::encode_frame(FrameType::Submit, &p)).unwrap();
+        for want_seq in [1u64, 2] {
+            match reader.next_frame(None).unwrap() {
+                Some(Recv::Frame(FrameType::Completion, payload)) => {
+                    let rec = wf::decode_completion(payload).unwrap();
+                    assert_eq!(rec.seq, want_seq);
+                    assert!(!rec.shed);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        let mut ctl = Client::connect(&addr.to_string()).unwrap();
+        ctl.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    /// The serial server is JSON-only: a binary hello gets a binary
+    /// error frame, not JSON garbage.
+    #[test]
+    fn serial_server_rejects_binary_protocol() {
+        let (addr, handle) = start_server();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = crate::wire::FrameWriter::new(stream.try_clone().unwrap());
+        writer.send_hello(wire::VERSION as u16).unwrap();
+        let mut reader = crate::wire::FrameReader::new(stream);
+        match reader.next_frame(None).unwrap() {
+            Some(Recv::Frame(FrameType::Error, payload)) => {
+                let e = crate::wire::frame::decode_error(payload).unwrap();
+                assert!(e.msg.contains("fabric"), "{}", e.msg);
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client.shutdown().unwrap();
+        handle.join().unwrap();
     }
 
     #[test]

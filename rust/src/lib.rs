@@ -16,9 +16,10 @@
 //!   [cli] [coordinator] [eval] [runtime]            [examples/, benches/]
 //!        \      |          |      |
 //!         |     v          |      |
-//!         |  [coordinator::server]  (TCP front-end)
-//!         |     |     \
-//!         |     |      v
+//!         |  [coordinator::server]  (TCP front-end; per-connection
+//!         |     |     \              protocol sniff: JSON line protocol
+//!         |     |      \             or the [wire] binary framing)
+//!         |     |       v
 //!         |     |   +------------------------------------------------+
 //!         |     |   | sched — sharded deadline-aware serving fabric: |
 //!         |     |   |   session hash -> shard -> EDF queue ->        |
@@ -56,10 +57,17 @@
 //!   batched multi-channel backends), TCP serving, metrics, watchdog.
 //! * [`sched`] — the sharded deadline-aware serving fabric between the
 //!   TCP front-end and the kernel layer: N shard workers each owning a
-//!   [`kernel::MultiStream`] session, stable session-hash routing,
-//!   bounded EDF queues with explicit load shedding, adaptive
+//!   [`kernel::MultiStream`] session, stable session-hash routing (with
+//!   [`sched::SessionToken`], the one checked constructor for session
+//!   names), bounded EDF queues with explicit load shedding, adaptive
 //!   micro-batching, per-lane watchdog resets and
 //!   [`sched::SchedMetrics`] (p50/p99/p99.9, miss rate, occupancy).
+//! * [`wire`] — the binary wire protocol (`docs/PROTOCOL.md`):
+//!   CRC-guarded length-prefixed frames, zero-copy
+//!   [`wire::FrameReader`]/[`wire::FrameWriter`], batched submission
+//!   and completion frames, and [`wire::WireClient`].  The TCP
+//!   front-end auto-detects it per connection; legacy JSON stays fully
+//!   supported.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (stubbed unless
 //!   built with the `xla-runtime` feature), manifest parsing.
 //! * [`beam`] — the Euler-Bernoulli beam physics substrate and virtual
@@ -86,6 +94,7 @@ pub mod runtime;
 pub mod sched;
 pub mod testutil;
 pub mod util;
+pub mod wire;
 
 /// The paper's model architecture constants (paper §II).
 pub mod arch {

@@ -258,7 +258,12 @@ impl Fabric {
     /// respect to later submissions from the same caller thread only in
     /// the absence of queued work for that session).
     pub fn reset_session(&self, session: &str) {
-        let hash = session_hash(session);
+        self.reset_hashed(session_hash(session));
+    }
+
+    /// [`Self::reset_session`] with a pre-computed session hash (the
+    /// binary wire path validates + hashes once at the edge).
+    pub fn reset_hashed(&self, hash: u64) {
         self.queues[shard_of(hash, self.shards())].push_control(Control::ResetSession(hash));
     }
 

@@ -70,5 +70,8 @@ pub mod shard;
 pub use fabric::{Completion, Fabric, FabricConfig, Pending, Shed};
 pub use metrics::{AtomicHist, SchedMetrics, SchedSnapshot, ShardSnapshot};
 pub use queue::ShedPolicy;
-pub use session::{session_hash, shard_of};
+pub use session::{
+    checked_hash, session_hash, session_hash_bytes, shard_of, SessionNameError, SessionToken,
+    ANON_SESSION_PREFIX, MAX_SESSION_LEN,
+};
 pub use shard::{DatapathKind, LaneOutcome, LaneStep, ShardCore};

@@ -354,6 +354,187 @@ mod tests {
         assert!(matches!(q.pop(None), Some(Popped::Job(_))));
     }
 
+    /// Satellite fault injection: EvictFarthest with *identical*
+    /// deadlines.  Admission is strictly-more-urgent-only (an equal
+    /// deadline is rejected, so two equally-loaded clients cannot evict
+    /// each other back and forth), and among equal farthest deadlines
+    /// the eviction victim is the youngest (highest seq) — the FIFO tie
+    /// order means the oldest equal-deadline job is the next to run, so
+    /// it is the one worth keeping.
+    #[test]
+    fn evict_farthest_with_identical_deadlines() {
+        let q = ShardQueue::new(2, ShedPolicy::EvictFarthest);
+        let (mut x, _rx) = job(Duration::from_millis(40));
+        x.session = 10;
+        let (mut y, _ry) = job(Duration::from_millis(40));
+        y.deadline = x.deadline; // exact tie
+        y.session = 11;
+        let shared_deadline = x.deadline;
+        assert!(matches!(q.push(x), PushOutcome::Admitted));
+        assert!(matches!(q.push(y), PushOutcome::Admitted));
+        // Equal-deadline arrival into the full queue: NOT more urgent,
+        // refused rather than thrashing an admitted job.
+        let (mut z, _rz) = job(Duration::from_millis(40));
+        z.deadline = shared_deadline;
+        z.session = 12;
+        assert!(matches!(q.push(z), PushOutcome::Rejected(_)));
+        assert_eq!(q.len(), 2);
+        // Strictly more urgent: evicts the YOUNGEST of the equal
+        // farthest-deadline pair (seq tie-break), keeping FIFO fairness
+        // for the survivor.
+        let (mut u, _ru) = job(Duration::from_millis(1));
+        u.session = 13;
+        match q.push(u) {
+            PushOutcome::AdmittedEvicting(victim) => assert_eq!(victim.session, 11),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        let order: Vec<u64> = (0..2)
+            .map(|_| match q.pop(None).unwrap() {
+                Popped::Job(qj) => qj.job.session,
+                Popped::Control(_) => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![13, 10]);
+    }
+
+    /// Satellite fault injection: out-of-band controls during saturation.
+    /// Controls are exempt from depth accounting and shedding — a full
+    /// (or even evicting) queue must still accept and prioritize them,
+    /// and they must never evict admitted work.
+    #[test]
+    fn controls_bypass_shedding_on_a_full_queue() {
+        for policy in [ShedPolicy::Reject, ShedPolicy::EvictFarthest] {
+            let q = ShardQueue::new(2, policy);
+            let (a, _ra) = job(Duration::from_millis(5));
+            let (b, _rb) = job(Duration::from_millis(6));
+            assert!(matches!(q.push(a), PushOutcome::Admitted));
+            assert!(matches!(q.push(b), PushOutcome::Admitted));
+            q.push_control(Control::ResetSession(7));
+            q.push_control(Control::ResetSession(8));
+            // Depth accounting untouched; admitted jobs all survive.
+            assert_eq!(q.len(), 2, "{policy:?}");
+            assert!(matches!(
+                q.pop(None),
+                Some(Popped::Control(Control::ResetSession(7)))
+            ));
+            assert!(matches!(
+                q.pop(None),
+                Some(Popped::Control(Control::ResetSession(8)))
+            ));
+            assert!(matches!(q.pop(None), Some(Popped::Job(_))));
+            assert!(matches!(q.pop(None), Some(Popped::Job(_))));
+        }
+    }
+
+    /// Satellite fault injection: `close()` racing concurrent pushes.
+    /// Every job must get exactly one terminal account — admitted (and
+    /// then handed back as a close orphan) or refused as `Closed` —
+    /// never lost, never double-counted, and pushes after close always
+    /// see `Closed`.
+    #[test]
+    fn close_racing_pushes_loses_no_job() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Barrier;
+        let q = Arc::new(ShardQueue::new(100_000, ShedPolicy::Reject));
+        let threads = 4;
+        let per_thread = 200u64;
+        let barrier = Arc::new(Barrier::new(threads + 1));
+        let admitted = Arc::new(AtomicU64::new(0));
+        let closed = Arc::new(AtomicU64::new(0));
+        let mut joins = Vec::new();
+        for t in 0..threads as u64 {
+            let (q, barrier) = (q.clone(), barrier.clone());
+            let (admitted, closed) = (admitted.clone(), closed.clone());
+            joins.push(std::thread::spawn(move || {
+                barrier.wait();
+                for i in 0..per_thread {
+                    let (mut j, _r) = job(Duration::from_millis(10));
+                    j.session = t * per_thread + i; // unique tag
+                    match q.push(j) {
+                        PushOutcome::Admitted => {
+                            admitted.fetch_add(1, Ordering::SeqCst);
+                        }
+                        PushOutcome::Closed(_) => {
+                            closed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        other => panic!("depth is huge: {other:?}"),
+                    }
+                }
+            }));
+        }
+        barrier.wait();
+        // Let some pushes land, then slam the door mid-burst.
+        std::thread::sleep(Duration::from_millis(1));
+        let orphans = q.close();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let admitted = admitted.load(Ordering::SeqCst);
+        let closed = closed.load(Ordering::SeqCst);
+        assert_eq!(admitted + closed, threads as u64 * per_thread);
+        assert_eq!(
+            orphans.len() as u64,
+            admitted,
+            "every admitted job must come back as a close orphan"
+        );
+        // No duplicates among orphans (each job exactly once).
+        let mut tags: Vec<u64> = orphans.iter().map(|j| j.session).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len() as u64, admitted);
+        // The queue stays terminally closed.
+        let (late, _rl) = job(Duration::from_millis(1));
+        assert!(matches!(q.push(late), PushOutcome::Closed(_)));
+        assert!(q.pop(None).is_none());
+    }
+
+    /// Same race with a live consumer: jobs popped before the close and
+    /// orphans handed back by it must partition the admitted set.
+    #[test]
+    fn close_racing_push_and_pop_conserves_jobs() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let q = Arc::new(ShardQueue::new(100_000, ShedPolicy::Reject));
+        let admitted = Arc::new(AtomicU64::new(0));
+        let pusher = {
+            let (q, admitted) = (q.clone(), admitted.clone());
+            std::thread::spawn(move || {
+                for _ in 0..500u64 {
+                    let (j, _r) = job(Duration::from_millis(10));
+                    match q.push(j) {
+                        PushOutcome::Admitted => {
+                            admitted.fetch_add(1, Ordering::SeqCst);
+                        }
+                        PushOutcome::Closed(_) => break,
+                        other => panic!("{other:?}"),
+                    }
+                }
+            })
+        };
+        let popper = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut popped = 0u64;
+                while let Some(p) = q.pop(Some(Duration::from_millis(2))) {
+                    match p {
+                        Popped::Job(_) => popped += 1,
+                        Popped::Control(_) => unreachable!(),
+                    }
+                }
+                popped
+            })
+        };
+        std::thread::sleep(Duration::from_micros(500));
+        let orphans = q.close().len() as u64;
+        pusher.join().unwrap();
+        // Drain whatever the popper still sees, then count.
+        let popped = popper.join().unwrap();
+        assert_eq!(
+            popped + orphans,
+            admitted.load(Ordering::SeqCst),
+            "popped + orphaned must equal admitted (no loss, no duplication)"
+        );
+    }
+
     #[test]
     fn timed_pop_times_out_and_close_wakes_blockers() {
         let q = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));

@@ -16,16 +16,132 @@
 //!   per shard to avoid thrash).
 
 use std::collections::HashMap;
+use std::fmt;
 
 /// FNV-1a 64-bit hash of a session name (stable across runs/builds —
 /// required so a reconnecting client reaches the same shard).
 pub fn session_hash(name: &str) -> u64 {
+    session_hash_bytes(name.as_bytes())
+}
+
+/// [`session_hash`] over raw bytes — the binary wire path hashes the
+/// session field straight out of the receive buffer, no `&str` (and no
+/// allocation) in between.
+pub fn session_hash_bytes(name: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in name.as_bytes() {
+    for &b in name {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+// ---- session-name validation ------------------------------------------
+
+/// Namespace for anonymous per-connection sessions.  Client-supplied
+/// names under this prefix are rejected by [`SessionToken`] /
+/// [`checked_hash`] — otherwise a client naming its session `"conn/0"`
+/// would silently share (and be able to reset) an unrelated anonymous
+/// connection's recurrent stream.
+pub const ANON_SESSION_PREFIX: &str = "conn/";
+
+/// Longest accepted session name, in bytes (fits the wire protocol's
+/// one-byte length prefix).
+pub const MAX_SESSION_LEN: usize = 255;
+
+/// Why a client-supplied session name was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionNameError {
+    Empty,
+    TooLong(usize),
+    NotUtf8,
+    Reserved,
+}
+
+impl fmt::Display for SessionNameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Empty => write!(f, "session name must not be empty"),
+            Self::TooLong(n) => {
+                write!(f, "session name is {n} bytes (max {MAX_SESSION_LEN})")
+            }
+            Self::NotUtf8 => write!(f, "session name must be valid UTF-8"),
+            Self::Reserved => write!(
+                f,
+                "session prefix {ANON_SESSION_PREFIX:?} is reserved for anonymous connections"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SessionNameError {}
+
+/// Validate a client-supplied session name and return its routing hash
+/// without allocating — THE one place session names are checked, shared
+/// by the JSON and binary protocol handlers (both used to carry their
+/// own copies of the `conn/` check; drift here was a hijack bug waiting
+/// to happen).
+pub fn checked_hash(name: &[u8]) -> Result<u64, SessionNameError> {
+    if name.is_empty() {
+        return Err(SessionNameError::Empty);
+    }
+    if name.len() > MAX_SESSION_LEN {
+        return Err(SessionNameError::TooLong(name.len()));
+    }
+    if std::str::from_utf8(name).is_err() {
+        return Err(SessionNameError::NotUtf8);
+    }
+    if name.starts_with(ANON_SESSION_PREFIX.as_bytes()) {
+        return Err(SessionNameError::Reserved);
+    }
+    Ok(session_hash_bytes(name))
+}
+
+/// A validated session identity: the checked constructor for everything
+/// that holds a session name (clients, tests, the server's anonymous
+/// per-connection streams).  Hot paths that must not allocate use
+/// [`checked_hash`] directly; the two are guaranteed consistent because
+/// `parse` *is* `checked_hash` plus a copy of the name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionToken {
+    name: String,
+    hash: u64,
+}
+
+impl SessionToken {
+    /// Parse and validate a client-facing session name.
+    pub fn parse(name: &str) -> Result<Self, SessionNameError> {
+        checked_hash(name.as_bytes()).map(|hash| Self { name: name.to_string(), hash })
+    }
+
+    /// [`Self::parse`] from raw wire bytes.
+    pub fn from_bytes(name: &[u8]) -> Result<Self, SessionNameError> {
+        let hash = checked_hash(name)?;
+        // checked_hash validated UTF-8; fail loudly (not lossily) if
+        // that invariant is ever broken, because `hash` was computed
+        // over these exact bytes.
+        let name = std::str::from_utf8(name)
+            .expect("checked_hash validated UTF-8")
+            .to_string();
+        Ok(Self { name, hash })
+    }
+
+    /// Server-internal constructor for an anonymous per-connection
+    /// session — the only way to mint a name in the reserved `conn/`
+    /// namespace.
+    pub fn anon(id: u64) -> Self {
+        let name = format!("{ANON_SESSION_PREFIX}{id}");
+        let hash = session_hash(&name);
+        Self { name, hash }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
 }
 
 /// Stable shard placement for a session hash.
@@ -140,6 +256,50 @@ mod tests {
         // Every shard gets some sessions (weak uniformity check).
         assert!(seen.iter().all(|&n| n > 0), "{seen:?}");
         assert_ne!(session_hash("a"), session_hash("b"));
+    }
+
+    /// Satellite: session-name validation lives in ONE checked
+    /// constructor now; these are its negative cases, including the
+    /// `conn/` namespace-hijack that used to be server.rs-only.
+    #[test]
+    fn session_token_rejects_bad_names() {
+        assert_eq!(SessionToken::parse(""), Err(SessionNameError::Empty));
+        assert_eq!(checked_hash(b""), Err(SessionNameError::Empty));
+        let long = "x".repeat(MAX_SESSION_LEN + 1);
+        assert_eq!(SessionToken::parse(&long), Err(SessionNameError::TooLong(256)));
+        assert_eq!(checked_hash(&[0xFF, 0xFE, b'a']), Err(SessionNameError::NotUtf8));
+        // The hijack case: grafting onto an anonymous connection stream.
+        assert_eq!(SessionToken::parse("conn/0"), Err(SessionNameError::Reserved));
+        assert_eq!(SessionToken::parse("conn/anything"), Err(SessionNameError::Reserved));
+        assert_eq!(checked_hash(b"conn/7"), Err(SessionNameError::Reserved));
+        assert_eq!(SessionToken::from_bytes(b"conn/7"), Err(SessionNameError::Reserved));
+        // Reserved-prefix refusal must mention "reserved" (the wire and
+        // JSON error surfaces both promise that word).
+        assert!(SessionNameError::Reserved.to_string().contains("reserved"));
+        // Near-misses stay legal.
+        for ok in ["conn", "con/0", "Conn/0", "rig-a", "日本語", &"x".repeat(MAX_SESSION_LEN)] {
+            let t = SessionToken::parse(ok).unwrap_or_else(|e| panic!("{ok:?}: {e}"));
+            assert_eq!(t.hash(), session_hash(ok));
+            assert_eq!(t.name(), ok);
+        }
+    }
+
+    /// `anon` is the only mint for the reserved namespace, and its
+    /// tokens hash exactly like the raw string used before the refactor
+    /// (shard placement of live anonymous streams must not move).
+    #[test]
+    fn anon_tokens_live_in_the_reserved_namespace() {
+        let t = SessionToken::anon(3);
+        assert_eq!(t.name(), "conn/3");
+        assert_eq!(t.hash(), session_hash("conn/3"));
+        assert!(SessionToken::parse(t.name()).is_err());
+    }
+
+    #[test]
+    fn byte_and_str_hashes_agree() {
+        for name in ["", "a", "stream-0", "conn/9", "日本語"] {
+            assert_eq!(session_hash(name), session_hash_bytes(name.as_bytes()));
+        }
     }
 
     #[test]

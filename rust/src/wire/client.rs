@@ -1,0 +1,173 @@
+//! Minimal blocking client for the binary wire protocol (loadgen,
+//! benches, examples, tests) — the binary twin of
+//! [`crate::coordinator::Client`], returning the same
+//! [`crate::coordinator::InferReply`] so callers can drive either
+//! protocol through one code path.
+
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::arch::INPUT_SIZE;
+use crate::coordinator::InferReply;
+use crate::sched::SessionToken;
+use crate::util::Json;
+
+use super::frame::{self, CompletionRec, FrameType, NO_PLACEMENT, VERSION};
+use super::io::{FrameReader, FrameWriter, Recv, Reject};
+
+/// Blocking binary-protocol client.
+pub struct WireClient {
+    reader: FrameReader<TcpStream>,
+    writer: FrameWriter<TcpStream>,
+    next_seq: u64,
+    session: Option<SessionToken>,
+}
+
+impl WireClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true)?;
+        let writer = FrameWriter::new(stream.try_clone()?);
+        Ok(Self { reader: FrameReader::new(stream), writer, next_seq: 1, session: None })
+    }
+
+    /// Connect with a named session (validated eagerly; fabric-mode
+    /// streams survive reconnects under the same name).
+    pub fn with_session(addr: &str, session: &str) -> Result<Self> {
+        let token = SessionToken::parse(session)
+            .map_err(|e| anyhow::anyhow!("invalid session name {session:?}: {e}"))?;
+        let mut c = Self::connect(addr)?;
+        c.session = Some(token);
+        Ok(c)
+    }
+
+    /// Read the next frame, failing on EOF (a reply is always owed).
+    fn recv(&mut self) -> Result<(FrameType, Vec<u8>)> {
+        match self.reader.next_frame(None)? {
+            None => anyhow::bail!("server closed the connection"),
+            Some(Recv::Reject(Reject::Version(v))) => {
+                anyhow::bail!("server replied with protocol version {v} (client speaks {VERSION})")
+            }
+            Some(Recv::Reject(r)) => anyhow::bail!("unreadable server frame: {r:?}"),
+            Some(Recv::Frame(ty, payload)) => Ok((ty, payload.to_vec())),
+        }
+    }
+
+    /// Fail on an [`FrameType::Error`] frame, surfacing the server
+    /// message (mirrors the JSON client's `"server error: ..."`).
+    fn expect(&mut self, want: FrameType) -> Result<Vec<u8>> {
+        let (ty, payload) = self.recv()?;
+        if ty == FrameType::Error {
+            let e = frame::decode_error(&payload)?;
+            anyhow::bail!("server error: {}", e.msg);
+        }
+        anyhow::ensure!(ty == want, "expected {want:?} frame, got {ty:?}");
+        Ok(payload)
+    }
+
+    /// Version negotiation; returns the server's chosen version.
+    pub fn hello(&mut self) -> Result<u16> {
+        self.writer.send_hello(VERSION as u16)?;
+        let p = self.expect(FrameType::HelloAck)?;
+        frame::decode_u16(&p)
+    }
+
+    /// Send one feature window; returns (estimate, server latency us).
+    pub fn infer(&mut self, features: &[f32; INPUT_SIZE]) -> Result<(f64, f64)> {
+        let r = self.infer_full(features, None)?;
+        Ok((r.estimate, r.latency_us))
+    }
+
+    /// Full round trip including the fabric placement fields.
+    pub fn infer_full(
+        &mut self,
+        features: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+    ) -> Result<InferReply> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        // Field-disjoint borrows: the payload closure reads
+        // `self.session` while `self.writer` assembles the frame.
+        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+        self.writer.send_with(FrameType::Submit, |b| {
+            frame::encode_submit(b, seq, deadline_us.unwrap_or(0.0), sess, features)
+        })?;
+        let p = self.expect(FrameType::Completion)?;
+        let rec = frame::decode_completion(&p)?;
+        anyhow::ensure!(rec.seq == seq, "completion for seq {} (sent {seq})", rec.seq);
+        anyhow::ensure!(!rec.shed, "request shed");
+        Ok(reply_of(&rec))
+    }
+
+    /// Submit many windows in ONE frame; completions come back in
+    /// submission order, shed windows flagged per record.
+    pub fn infer_batch(
+        &mut self,
+        windows: &[[f32; INPUT_SIZE]],
+        deadline_us: Option<f64>,
+    ) -> Result<Vec<CompletionRec>> {
+        anyhow::ensure!(
+            !windows.is_empty() && windows.len() <= frame::MAX_BATCH_WINDOWS,
+            "batch of {} windows (1..={})",
+            windows.len(),
+            frame::MAX_BATCH_WINDOWS
+        );
+        let base_seq = self.next_seq;
+        self.next_seq += windows.len() as u64;
+        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+        self.writer.send_with(FrameType::SubmitBatch, |b| {
+            frame::encode_submit_batch(b, base_seq, deadline_us.unwrap_or(0.0), sess, windows)
+        })?;
+        let p = self.expect(FrameType::CompletionBatch)?;
+        let recs = frame::decode_completion_batch(&p)?;
+        anyhow::ensure!(
+            recs.len() == windows.len(),
+            "{} completions for {} windows",
+            recs.len(),
+            windows.len()
+        );
+        for (i, rec) in recs.iter().enumerate() {
+            anyhow::ensure!(
+                rec.seq == base_seq + i as u64,
+                "completion {i} has seq {} (expected {})",
+                rec.seq,
+                base_seq + i as u64
+            );
+        }
+        Ok(recs)
+    }
+
+    /// Zero this client's session stream (or the connection's anonymous
+    /// stream when unnamed).
+    pub fn reset(&mut self) -> Result<()> {
+        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+        self.writer.send_with(FrameType::Reset, |b| frame::encode_reset(b, sess))?;
+        self.expect(FrameType::Ok)?;
+        Ok(())
+    }
+
+    /// Metrics snapshot (same JSON shape as the JSON protocol's `stats`).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.writer.send_empty(FrameType::Stats)?;
+        let p = self.expect(FrameType::StatsReply)?;
+        Json::parse(std::str::from_utf8(&p)?)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.writer.send_empty(FrameType::Shutdown)?;
+        self.expect(FrameType::Ok)?;
+        Ok(())
+    }
+}
+
+/// Map a wire completion record onto the protocol-agnostic reply.
+pub fn reply_of(rec: &CompletionRec) -> InferReply {
+    InferReply {
+        estimate: rec.estimate,
+        latency_us: rec.latency_us,
+        deadline_miss: Some(rec.deadline_miss),
+        shard: (rec.shard != NO_PLACEMENT).then_some(rec.shard as usize),
+        lane: (rec.lane != NO_PLACEMENT).then_some(rec.lane as usize),
+    }
+}

@@ -1,0 +1,60 @@
+//! CRC-32 (IEEE 802.3, the zlib/PNG polynomial) — the frame integrity
+//! check of the binary wire protocol.
+//!
+//! Reflected algorithm, polynomial `0xEDB88320`, init `0xFFFFFFFF`,
+//! final XOR `0xFFFFFFFF`; byte-compatible with `zlib.crc32` (the
+//! conformance goldens were generated against it).  Table-driven, table
+//! built at compile time — no dependency, no runtime init.
+
+/// Byte-indexed remainder table for the reflected IEEE polynomial.
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `bytes` (one-shot; the frame codec never needs streaming).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The standard check vectors (independently computed with Python's
+    /// `zlib.crc32` — see the conformance golden generator).
+    #[test]
+    fn known_vectors() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"HRDW"), 0x71C6_1B46);
+    }
+
+    #[test]
+    fn detects_single_byte_flips() {
+        let base = b"the quick brown fox".to_vec();
+        let want = crc32(&base);
+        for i in 0..base.len() {
+            let mut m = base.clone();
+            m[i] ^= 0x5A;
+            assert_ne!(crc32(&m), want, "flip at {i} undetected");
+        }
+    }
+}

@@ -1,0 +1,663 @@
+//! Frame envelope and payload codecs — the byte-layout layer of the
+//! binary wire protocol (see `docs/PROTOCOL.md` for the full spec).
+//!
+//! Every frame is little-endian and self-delimiting:
+//!
+//! ```text
+//! offset size  field
+//! 0      4     magic  "HRDW"
+//! 4      1     version (currently 1)
+//! 5      1     frame type
+//! 6      2     flags (reserved, 0)
+//! 8      4     payload length N (u32 LE, <= MAX_PAYLOAD)
+//! 12     4     header CRC-32 over bytes 0..12
+//! 16     N     payload (layout per frame type)
+//! 16+N   4     payload CRC-32 over the N payload bytes
+//! ```
+//!
+//! The header carries its own CRC so a corrupted length field is caught
+//! *before* the decoder commits to waiting for (or skipping) a bogus
+//! span — any single corrupt byte costs at most a one-byte resync scan,
+//! never a swallowed neighbour frame.  [`decode_step`] is a pure
+//! function over a byte buffer, so the fault-injection property tests
+//! exercise the exact code the socket reader runs.
+
+use anyhow::{ensure, Result};
+
+use crate::arch::INPUT_SIZE;
+
+use super::crc::crc32;
+
+/// Frame preamble; the first byte (`H`) is what the serving front-end
+/// sniffs to tell a binary client from a legacy JSON one (`{`).
+pub const MAGIC: [u8; 4] = *b"HRDW";
+
+/// Protocol version this build speaks (see `docs/PROTOCOL.md` for the
+/// negotiation rules).
+pub const VERSION: u8 = 1;
+
+/// Fixed envelope sizes.
+pub const HEADER_LEN: usize = 16;
+pub const TRAILER_LEN: usize = 4;
+
+/// Hard cap on a single frame's payload; oversize lengths are a
+/// protocol violation (the server drops the connection).
+pub const MAX_PAYLOAD: usize = 1 << 16;
+
+/// Hard cap on windows per [`FrameType::SubmitBatch`] frame.
+pub const MAX_BATCH_WINDOWS: usize = 512;
+
+/// Bytes of one encoded feature window.
+pub const WINDOW_BYTES: usize = INPUT_SIZE * 4;
+
+/// Encoded size of one [`CompletionRec`].
+pub const COMPLETION_REC_BYTES: usize = 29;
+
+/// Frame type registry.  Client->server types sit below 0x80,
+/// server->client types at or above it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    /// c->s: version negotiation (`u16` highest version the client speaks).
+    Hello = 0x01,
+    /// c->s: one feature window for one session.
+    Submit = 0x02,
+    /// c->s: many windows for one session in one frame.
+    SubmitBatch = 0x03,
+    /// c->s: zero a session's recurrent stream.
+    Reset = 0x04,
+    /// c->s: request a metrics snapshot.
+    Stats = 0x05,
+    /// c->s: stop the server.
+    Shutdown = 0x06,
+    /// s->c: negotiated version (`u16`).
+    HelloAck = 0x81,
+    /// s->c: one completed inference ([`CompletionRec`]).
+    Completion = 0x82,
+    /// s->c: completions for a [`FrameType::SubmitBatch`].
+    CompletionBatch = 0x83,
+    /// s->c: request-level failure (shed, bad session, bad frame...).
+    Error = 0x84,
+    /// s->c: success acknowledgement with no data (reset, shutdown).
+    Ok = 0x85,
+    /// s->c: metrics snapshot as UTF-8 JSON text.
+    StatsReply = 0x86,
+}
+
+impl FrameType {
+    pub fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            0x01 => Self::Hello,
+            0x02 => Self::Submit,
+            0x03 => Self::SubmitBatch,
+            0x04 => Self::Reset,
+            0x05 => Self::Stats,
+            0x06 => Self::Shutdown,
+            0x81 => Self::HelloAck,
+            0x82 => Self::Completion,
+            0x83 => Self::CompletionBatch,
+            0x84 => Self::Error,
+            0x85 => Self::Ok,
+            0x86 => Self::StatsReply,
+            _ => return None,
+        })
+    }
+}
+
+// ---- envelope decoding -------------------------------------------------
+
+/// Why [`DecodeStep::Skip`] wants bytes dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SkipReason {
+    /// Bytes before a possible frame start (no magic).
+    Desync,
+    /// Header CRC mismatch — the length field cannot be trusted, resync
+    /// one byte at a time.
+    HeaderCrc,
+    /// Payload CRC mismatch — the header was intact, so the whole frame
+    /// span is skipped at once.
+    PayloadCrc,
+    /// Intact header announcing an unsupported protocol version; the
+    /// whole frame is skipped (the caller should reply/close).
+    BadVersion(u8),
+    /// Intact header announcing a payload beyond [`MAX_PAYLOAD`]; a
+    /// protocol violation (the caller should drop the connection).
+    Oversize(u32),
+}
+
+/// One decoding step over a byte buffer (pure; no I/O).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeStep {
+    /// The buffer holds no complete frame yet; at least `need` total
+    /// bytes are required before the next step can make progress.
+    Incomplete { need: usize },
+    /// Drop `skip` bytes from the front of the buffer and try again.
+    Skip { skip: usize, reason: SkipReason },
+    /// A CRC-valid frame: raw type byte `ty` (may be unknown to this
+    /// build), payload at `buf[payload]`, envelope spanning
+    /// `buf[..consumed]`.
+    Frame { ty: u8, payload: std::ops::Range<usize>, consumed: usize },
+}
+
+/// Decode the frame (or fault) at the front of `buf`.
+///
+/// Resync policy: anything that is not a CRC-valid envelope costs a
+/// bounded skip — garbage scans to the next magic byte, a bad header
+/// CRC slides one byte, and faults behind an intact header (payload
+/// CRC, version) skip exactly one frame span.  A valid frame following
+/// any amount of corruption is therefore always recovered.
+pub fn decode_step(buf: &[u8]) -> DecodeStep {
+    let n = buf.len();
+    if n == 0 {
+        return DecodeStep::Incomplete { need: HEADER_LEN };
+    }
+    if buf[0] != MAGIC[0] {
+        let skip = buf.iter().position(|&b| b == MAGIC[0]).unwrap_or(n);
+        return DecodeStep::Skip { skip, reason: SkipReason::Desync };
+    }
+    let m = n.min(MAGIC.len());
+    if buf[..m] != MAGIC[..m] {
+        // A real `H` that is not a frame start: slide past it and rescan.
+        return DecodeStep::Skip { skip: 1, reason: SkipReason::Desync };
+    }
+    if n < HEADER_LEN {
+        return DecodeStep::Incomplete { need: HEADER_LEN };
+    }
+    let stored_hcrc = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+    if crc32(&buf[..12]) != stored_hcrc {
+        return DecodeStep::Skip { skip: 1, reason: SkipReason::HeaderCrc };
+    }
+    // From here the header is trustworthy.
+    let version = buf[4];
+    let ty = buf[5];
+    let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    if len as usize > MAX_PAYLOAD {
+        return DecodeStep::Skip { skip: HEADER_LEN, reason: SkipReason::Oversize(len) };
+    }
+    let total = HEADER_LEN + len as usize + TRAILER_LEN;
+    if n < total {
+        return DecodeStep::Incomplete { need: total };
+    }
+    let payload = HEADER_LEN..HEADER_LEN + len as usize;
+    let stored_crc = u32::from_le_bytes([
+        buf[total - 4],
+        buf[total - 3],
+        buf[total - 2],
+        buf[total - 1],
+    ]);
+    if crc32(&buf[payload.clone()]) != stored_crc {
+        return DecodeStep::Skip { skip: total, reason: SkipReason::PayloadCrc };
+    }
+    if version != VERSION {
+        return DecodeStep::Skip { skip: total, reason: SkipReason::BadVersion(version) };
+    }
+    DecodeStep::Frame { ty, payload, consumed: total }
+}
+
+/// Encode one complete frame (tests and small senders; the hot path
+/// uses [`super::io::FrameWriter`], which reuses its buffer).
+pub fn encode_frame(ty: FrameType, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD, "payload {} > MAX_PAYLOAD", payload.len());
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(ty as u8);
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let hcrc = crc32(&out);
+    out.extend_from_slice(&hcrc.to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out
+}
+
+// ---- payload cursor ----------------------------------------------------
+
+/// Bounds-checked little-endian payload reader.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.off + n <= self.b.len(),
+            "truncated payload: need {} bytes at offset {}, have {}",
+            n,
+            self.off,
+            self.b.len()
+        );
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.off == self.b.len(),
+            "{} trailing payload bytes",
+            self.b.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+/// Decode one window (16 f32 LE) from exactly [`WINDOW_BYTES`] bytes.
+fn read_window(bytes: &[u8]) -> [f32; INPUT_SIZE] {
+    debug_assert_eq!(bytes.len(), WINDOW_BYTES);
+    let mut w = [0f32; INPUT_SIZE];
+    for (i, v) in w.iter_mut().enumerate() {
+        *v = f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    w
+}
+
+fn push_window(out: &mut Vec<u8>, window: &[f32; INPUT_SIZE]) {
+    for v in window {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn push_session(out: &mut Vec<u8>, session: &[u8]) {
+    // Hard assert (not debug): a silent `as u8` wrap would emit a
+    // structurally corrupt payload in release builds.
+    assert!(
+        session.len() <= u8::MAX as usize,
+        "session name of {} bytes exceeds the 1-byte length prefix",
+        session.len()
+    );
+    out.push(session.len() as u8);
+    out.extend_from_slice(session);
+}
+
+// ---- Submit ------------------------------------------------------------
+
+/// Decoded view of a [`FrameType::Submit`] payload.  `session` borrows
+/// the receive buffer (empty = the connection's anonymous session);
+/// `deadline_us <= 0` means "use the server default".
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitView<'a> {
+    pub seq: u64,
+    pub deadline_us: f64,
+    pub session: &'a [u8],
+    pub window: [f32; INPUT_SIZE],
+}
+
+pub fn encode_submit(
+    out: &mut Vec<u8>,
+    seq: u64,
+    deadline_us: f64,
+    session: &[u8],
+    window: &[f32; INPUT_SIZE],
+) {
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&deadline_us.to_bits().to_le_bytes());
+    push_session(out, session);
+    push_window(out, window);
+}
+
+pub fn decode_submit(p: &[u8]) -> Result<SubmitView<'_>> {
+    let mut r = Rd::new(p);
+    let seq = r.u64()?;
+    let deadline_us = r.f64()?;
+    let sess_len = r.u8()? as usize;
+    let session = r.bytes(sess_len)?;
+    let window = read_window(r.bytes(WINDOW_BYTES)?);
+    r.done()?;
+    Ok(SubmitView { seq, deadline_us, session, window })
+}
+
+// ---- SubmitBatch -------------------------------------------------------
+
+/// Decoded view of a [`FrameType::SubmitBatch`] payload.  Windows stay
+/// in the receive buffer; [`SubmitBatchView::window`] copies one out on
+/// demand (stack array, no heap allocation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitBatchView<'a> {
+    pub base_seq: u64,
+    pub deadline_us: f64,
+    pub session: &'a [u8],
+    pub count: usize,
+    windows: &'a [u8],
+}
+
+impl SubmitBatchView<'_> {
+    pub fn window(&self, i: usize) -> [f32; INPUT_SIZE] {
+        assert!(i < self.count);
+        read_window(&self.windows[i * WINDOW_BYTES..(i + 1) * WINDOW_BYTES])
+    }
+}
+
+pub fn encode_submit_batch(
+    out: &mut Vec<u8>,
+    base_seq: u64,
+    deadline_us: f64,
+    session: &[u8],
+    windows: &[[f32; INPUT_SIZE]],
+) {
+    assert!(windows.len() <= MAX_BATCH_WINDOWS, "batch of {} windows", windows.len());
+    out.extend_from_slice(&base_seq.to_le_bytes());
+    out.extend_from_slice(&deadline_us.to_bits().to_le_bytes());
+    push_session(out, session);
+    out.extend_from_slice(&(windows.len() as u16).to_le_bytes());
+    for w in windows {
+        push_window(out, w);
+    }
+}
+
+pub fn decode_submit_batch(p: &[u8]) -> Result<SubmitBatchView<'_>> {
+    let mut r = Rd::new(p);
+    let base_seq = r.u64()?;
+    let deadline_us = r.f64()?;
+    let sess_len = r.u8()? as usize;
+    let session = r.bytes(sess_len)?;
+    let count = r.u16()? as usize;
+    ensure!(count >= 1, "empty submit batch");
+    ensure!(count <= MAX_BATCH_WINDOWS, "batch of {count} windows (max {MAX_BATCH_WINDOWS})");
+    let windows = r.bytes(count * WINDOW_BYTES)?;
+    r.done()?;
+    Ok(SubmitBatchView { base_seq, deadline_us, session, count, windows })
+}
+
+// ---- Reset -------------------------------------------------------------
+
+/// Session of a [`FrameType::Reset`] (empty = anonymous connection
+/// session).
+pub fn encode_reset(out: &mut Vec<u8>, session: &[u8]) {
+    push_session(out, session);
+}
+
+pub fn decode_reset(p: &[u8]) -> Result<&[u8]> {
+    let mut r = Rd::new(p);
+    let sess_len = r.u8()? as usize;
+    let session = r.bytes(sess_len)?;
+    r.done()?;
+    Ok(session)
+}
+
+// ---- Hello / HelloAck --------------------------------------------------
+
+pub fn encode_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn decode_u16(p: &[u8]) -> Result<u16> {
+    let mut r = Rd::new(p);
+    let v = r.u16()?;
+    r.done()?;
+    Ok(v)
+}
+
+// ---- Completion --------------------------------------------------------
+
+/// Flag bits of a [`CompletionRec`].
+pub const FLAG_DEADLINE_MISS: u8 = 1 << 0;
+pub const FLAG_SHED: u8 = 1 << 1;
+
+/// Shard/lane value on shed records (no placement happened).
+pub const NO_PLACEMENT: u16 = u16::MAX;
+
+/// One completed (or shed) request, as carried by
+/// [`FrameType::Completion`] / [`FrameType::CompletionBatch`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompletionRec {
+    pub seq: u64,
+    pub estimate: f64,
+    pub latency_us: f64,
+    pub deadline_miss: bool,
+    pub shed: bool,
+    pub shard: u16,
+    pub lane: u16,
+}
+
+impl CompletionRec {
+    /// Record for a request shed before (or instead of) completion.
+    pub fn shed(seq: u64) -> Self {
+        Self {
+            seq,
+            estimate: f64::NAN,
+            latency_us: 0.0,
+            deadline_miss: false,
+            shed: true,
+            shard: NO_PLACEMENT,
+            lane: NO_PLACEMENT,
+        }
+    }
+}
+
+pub fn encode_completion(out: &mut Vec<u8>, rec: &CompletionRec) {
+    out.extend_from_slice(&rec.seq.to_le_bytes());
+    out.extend_from_slice(&rec.estimate.to_bits().to_le_bytes());
+    out.extend_from_slice(&rec.latency_us.to_bits().to_le_bytes());
+    let mut flags = 0u8;
+    if rec.deadline_miss {
+        flags |= FLAG_DEADLINE_MISS;
+    }
+    if rec.shed {
+        flags |= FLAG_SHED;
+    }
+    out.push(flags);
+    out.extend_from_slice(&rec.shard.to_le_bytes());
+    out.extend_from_slice(&rec.lane.to_le_bytes());
+}
+
+fn decode_completion_rd(r: &mut Rd<'_>) -> Result<CompletionRec> {
+    let seq = r.u64()?;
+    let estimate = r.f64()?;
+    let latency_us = r.f64()?;
+    let flags = r.u8()?;
+    let shard = r.u16()?;
+    let lane = r.u16()?;
+    Ok(CompletionRec {
+        seq,
+        estimate,
+        latency_us,
+        deadline_miss: flags & FLAG_DEADLINE_MISS != 0,
+        shed: flags & FLAG_SHED != 0,
+        shard,
+        lane,
+    })
+}
+
+pub fn decode_completion(p: &[u8]) -> Result<CompletionRec> {
+    let mut r = Rd::new(p);
+    let rec = decode_completion_rd(&mut r)?;
+    r.done()?;
+    Ok(rec)
+}
+
+pub fn encode_completion_batch(out: &mut Vec<u8>, recs: &[CompletionRec]) {
+    assert!(recs.len() <= MAX_BATCH_WINDOWS);
+    out.extend_from_slice(&(recs.len() as u16).to_le_bytes());
+    for rec in recs {
+        encode_completion(out, rec);
+    }
+}
+
+pub fn decode_completion_batch(p: &[u8]) -> Result<Vec<CompletionRec>> {
+    let mut r = Rd::new(p);
+    let count = r.u16()? as usize;
+    ensure!(count <= MAX_BATCH_WINDOWS, "batch of {count} completions");
+    let mut recs = Vec::with_capacity(count);
+    for _ in 0..count {
+        recs.push(decode_completion_rd(&mut r)?);
+    }
+    r.done()?;
+    Ok(recs)
+}
+
+// ---- Error -------------------------------------------------------------
+
+/// Decoded view of a [`FrameType::Error`] payload.  `seq` echoes the
+/// request when one is attributable (0 otherwise); `shed` marks
+/// admission-control rejections.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorView<'a> {
+    pub seq: u64,
+    pub shed: bool,
+    pub msg: &'a str,
+}
+
+/// Fixed bytes of an Error payload before the message text
+/// (`seq u64 + flags u8 + msg_len u16`).
+const ERROR_PREFIX_BYTES: usize = 11;
+
+pub fn encode_error(out: &mut Vec<u8>, seq: u64, shed: bool, msg: &str) {
+    // Truncate oversized messages on a char boundary — the receiver
+    // decodes the message as UTF-8, so a mid-character cut would turn
+    // the error reply itself into a codec error.  The cap leaves room
+    // for the payload prefix inside MAX_PAYLOAD, so a truncated Error
+    // frame always still fits on the wire.
+    let mut n = msg.len().min(MAX_PAYLOAD - ERROR_PREFIX_BYTES);
+    while !msg.is_char_boundary(n) {
+        n -= 1;
+    }
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.push(if shed { FLAG_SHED } else { 0 });
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    out.extend_from_slice(&msg.as_bytes()[..n]);
+}
+
+pub fn decode_error(p: &[u8]) -> Result<ErrorView<'_>> {
+    let mut r = Rd::new(p);
+    let seq = r.u64()?;
+    let flags = r.u8()?;
+    let n = r.u16()? as usize;
+    let msg = std::str::from_utf8(r.bytes(n)?)?;
+    r.done()?;
+    Ok(ErrorView { seq, shed: flags & FLAG_SHED != 0, msg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_round_trips() {
+        let payload = b"hello payload";
+        let f = encode_frame(FrameType::StatsReply, payload);
+        match decode_step(&f) {
+            DecodeStep::Frame { ty, payload: range, consumed } => {
+                assert_eq!(ty, FrameType::StatsReply as u8);
+                assert_eq!(&f[range], payload);
+                assert_eq!(consumed, f.len());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_payload_frame() {
+        let f = encode_frame(FrameType::Shutdown, b"");
+        assert_eq!(f.len(), HEADER_LEN + TRAILER_LEN);
+        assert!(matches!(decode_step(&f), DecodeStep::Frame { consumed, .. } if consumed == f.len()));
+    }
+
+    #[test]
+    fn submit_payload_round_trips() {
+        let mut w = [0f32; INPUT_SIZE];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = i as f32 * 0.5 - 3.0;
+        }
+        let mut p = Vec::new();
+        encode_submit(&mut p, 42, 250.0, b"rig-a", &w);
+        let v = decode_submit(&p).unwrap();
+        assert_eq!(v.seq, 42);
+        assert_eq!(v.deadline_us, 250.0);
+        assert_eq!(v.session, b"rig-a");
+        assert_eq!(v.window, w);
+        // Truncation at every split point must error, never panic.
+        for cut in 0..p.len() {
+            assert!(decode_submit(&p[..cut]).is_err(), "cut at {cut}");
+        }
+        assert!(decode_submit(&[p.clone(), vec![0]].concat()).is_err(), "trailing byte");
+    }
+
+    #[test]
+    fn submit_batch_payload_round_trips() {
+        let mk = |k: usize| {
+            let mut w = [0f32; INPUT_SIZE];
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = (k * 100 + i) as f32;
+            }
+            w
+        };
+        let windows = [mk(0), mk(1), mk(2)];
+        let mut p = Vec::new();
+        encode_submit_batch(&mut p, 7, 0.0, b"s", &windows);
+        let v = decode_submit_batch(&p).unwrap();
+        assert_eq!((v.base_seq, v.count, v.session), (7, 3, &b"s"[..]));
+        for (i, w) in windows.iter().enumerate() {
+            assert_eq!(&v.window(i), w);
+        }
+        // A count that exceeds the cap is rejected before sizing the read.
+        let mut big = Vec::new();
+        big.extend_from_slice(&7u64.to_le_bytes());
+        big.extend_from_slice(&0f64.to_bits().to_le_bytes());
+        big.push(0);
+        big.extend_from_slice(&((MAX_BATCH_WINDOWS + 1) as u16).to_le_bytes());
+        assert!(decode_submit_batch(&big).is_err());
+    }
+
+    #[test]
+    fn completion_and_error_round_trip() {
+        let rec = CompletionRec {
+            seq: u64::MAX,
+            estimate: -0.1252345,
+            latency_us: 17.25,
+            deadline_miss: true,
+            shed: false,
+            shard: 3,
+            lane: 11,
+        };
+        let mut p = Vec::new();
+        encode_completion(&mut p, &rec);
+        assert_eq!(p.len(), COMPLETION_REC_BYTES);
+        assert_eq!(decode_completion(&p).unwrap(), rec);
+
+        let mut batch = Vec::new();
+        encode_completion_batch(&mut batch, &[rec, CompletionRec::shed(9)]);
+        let got = decode_completion_batch(&batch).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], rec);
+        assert!(got[1].shed && got[1].estimate.is_nan() && got[1].seq == 9);
+
+        let mut e = Vec::new();
+        encode_error(&mut e, 5, true, "queue full");
+        let v = decode_error(&e).unwrap();
+        assert_eq!((v.seq, v.shed, v.msg), (5, true, "queue full"));
+    }
+
+    #[test]
+    fn reset_and_u16_round_trip() {
+        let mut p = Vec::new();
+        encode_reset(&mut p, b"rig-b");
+        assert_eq!(decode_reset(&p).unwrap(), b"rig-b");
+        let mut h = Vec::new();
+        encode_u16(&mut h, 1);
+        assert_eq!(decode_u16(&h).unwrap(), 1);
+    }
+}

@@ -1,0 +1,318 @@
+//! Zero-copy frame transport over any byte stream (in practice
+//! `TcpStream`).
+//!
+//! [`FrameReader`] owns one growable receive buffer; a delivered frame's
+//! payload is a borrow into that buffer — no per-frame allocation, no
+//! intermediate line/string representation.  Faults found by
+//! [`super::frame::decode_step`] are either absorbed silently (garbage
+//! bytes, CRC failures — counted, resynced past) or surfaced as a
+//! [`Recv::Reject`] when the peer deserves a reply (wrong version,
+//! unknown type, oversize).
+//!
+//! [`FrameWriter`] assembles each outgoing frame in one reused buffer
+//! and hands the socket a single `write_all` (one syscall per frame, no
+//! header/payload scatter).
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::frame::{
+    self, CompletionRec, DecodeStep, FrameType, SkipReason, HEADER_LEN, MAGIC, VERSION,
+};
+
+/// Read errors that mean "poll again", not "connection broken" — the
+/// single definition shared by every shutdown-aware read loop (this
+/// reader, the server's line reader and protocol sniff), so retry
+/// semantics cannot drift between them.
+pub fn retryable_read_error(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// What [`FrameReader::next_frame`] delivered.
+#[derive(Debug)]
+pub enum Recv<'a> {
+    /// A CRC-valid frame of a known type; payload borrows the reader.
+    Frame(FrameType, &'a [u8]),
+    /// A CRC-valid envelope this endpoint cannot serve (already skipped;
+    /// the caller decides whether to reply or hang up).
+    Reject(Reject),
+}
+
+/// Rejection causes surfaced to the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reject {
+    /// Peer speaks a different protocol version.
+    Version(u8),
+    /// Valid envelope, type byte unknown to this build.
+    UnknownType(u8),
+    /// Announced payload length beyond [`frame::MAX_PAYLOAD`]; the
+    /// stream can no longer be trusted to reframe.
+    Oversize(u32),
+}
+
+/// Buffered, resyncing frame reader.
+pub struct FrameReader<R: Read> {
+    src: R,
+    buf: Vec<u8>,
+    /// Bytes at the front of `buf` already delivered as a frame (drained
+    /// lazily on the next call so the payload borrow stays valid).
+    consumed: usize,
+    /// Garbage bytes skipped hunting for a frame start.
+    desync_bytes: u64,
+    /// Frames dropped for header/payload CRC mismatch.
+    crc_errors: u64,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(src: R) -> Self {
+        Self::with_preload(src, Vec::new())
+    }
+
+    /// Reader whose first bytes were already pulled off the stream (the
+    /// serving front-end sniffs the protocol before dispatching).
+    pub fn with_preload(src: R, preload: Vec<u8>) -> Self {
+        Self { src, buf: preload, consumed: 0, desync_bytes: 0, crc_errors: 0 }
+    }
+
+    pub fn desync_bytes(&self) -> u64 {
+        self.desync_bytes
+    }
+
+    pub fn crc_errors(&self) -> u64 {
+        self.crc_errors
+    }
+
+    /// Pull more bytes; `Ok(false)` on EOF or raised shutdown flag.
+    /// Timeout-style errors poll the flag instead of failing (the server
+    /// runs sockets with a read timeout so idle connections cannot pin a
+    /// shutting-down process).
+    fn fill(&mut self, shutdown: Option<&AtomicBool>) -> std::io::Result<bool> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if shutdown.map_or(false, |s| s.load(Ordering::SeqCst)) {
+                return Ok(false);
+            }
+            match self.src.read(&mut chunk) {
+                Ok(0) => return Ok(false),
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(true);
+                }
+                Err(e) if retryable_read_error(&e) => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Next frame (or surfaced rejection); `Ok(None)` on EOF/shutdown.
+    /// Garbage and CRC-corrupt spans are skipped transparently.
+    pub fn next_frame(
+        &mut self,
+        shutdown: Option<&AtomicBool>,
+    ) -> std::io::Result<Option<Recv<'_>>> {
+        if self.consumed > 0 {
+            self.buf.drain(..self.consumed);
+            self.consumed = 0;
+        }
+        loop {
+            // One pass over whatever is buffered; owned outcome so the
+            // buffer borrow ends before we mutate or return.
+            enum Found {
+                Frame { ty: u8, payload: std::ops::Range<usize>, consumed: usize },
+                Reject(Reject),
+                Need,
+            }
+            let found = loop {
+                match frame::decode_step(&self.buf) {
+                    DecodeStep::Frame { ty, payload, consumed } => {
+                        break Found::Frame { ty, payload, consumed }
+                    }
+                    DecodeStep::Incomplete { .. } => break Found::Need,
+                    DecodeStep::Skip { skip, reason } => {
+                        match reason {
+                            SkipReason::Desync => self.desync_bytes += skip as u64,
+                            SkipReason::HeaderCrc | SkipReason::PayloadCrc => {
+                                self.crc_errors += 1
+                            }
+                            SkipReason::BadVersion(v) => {
+                                self.buf.drain(..skip);
+                                break Found::Reject(Reject::Version(v));
+                            }
+                            SkipReason::Oversize(n) => {
+                                self.buf.drain(..skip);
+                                break Found::Reject(Reject::Oversize(n));
+                            }
+                        }
+                        self.buf.drain(..skip);
+                    }
+                }
+            };
+            match found {
+                Found::Frame { ty, payload, consumed } => {
+                    self.consumed = consumed;
+                    return Ok(Some(match FrameType::from_u8(ty) {
+                        Some(t) => Recv::Frame(t, &self.buf[payload]),
+                        None => Recv::Reject(Reject::UnknownType(ty)),
+                    }));
+                }
+                Found::Reject(r) => return Ok(Some(Recv::Reject(r))),
+                Found::Need => {
+                    if !self.fill(shutdown)? {
+                        return Ok(None);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Frame writer with a reused assembly buffer.
+pub struct FrameWriter<W: Write> {
+    dst: W,
+    buf: Vec<u8>,
+}
+
+impl<W: Write> FrameWriter<W> {
+    pub fn new(dst: W) -> Self {
+        Self { dst, buf: Vec::with_capacity(256) }
+    }
+
+    /// Assemble and send one frame whose payload is written by `build`.
+    pub fn send_with(
+        &mut self,
+        ty: FrameType,
+        build: impl FnOnce(&mut Vec<u8>),
+    ) -> std::io::Result<()> {
+        self.buf.clear();
+        self.buf.extend_from_slice(&MAGIC);
+        self.buf.push(VERSION);
+        self.buf.push(ty as u8);
+        self.buf.extend_from_slice(&0u16.to_le_bytes());
+        self.buf.extend_from_slice(&[0u8; 8]); // len + header CRC, patched below
+        build(&mut self.buf);
+        let len = self.buf.len() - HEADER_LEN;
+        // An error, not a panic: variable-size payloads (e.g. a stats
+        // snapshot of a very wide fabric) must fail the one connection,
+        // not kill its handler thread.  The buffer is reset by the next
+        // send, and nothing has reached the socket yet.
+        if len > frame::MAX_PAYLOAD {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame payload of {len} bytes exceeds {}", frame::MAX_PAYLOAD),
+            ));
+        }
+        self.buf[8..12].copy_from_slice(&(len as u32).to_le_bytes());
+        let hcrc = super::crc::crc32(&self.buf[..12]);
+        self.buf[12..16].copy_from_slice(&hcrc.to_le_bytes());
+        let pcrc = super::crc::crc32(&self.buf[HEADER_LEN..]);
+        self.buf.extend_from_slice(&pcrc.to_le_bytes());
+        self.dst.write_all(&self.buf)
+    }
+
+    /// Send a frame with no payload.
+    pub fn send_empty(&mut self, ty: FrameType) -> std::io::Result<()> {
+        self.send_with(ty, |_| {})
+    }
+
+    pub fn send_hello(&mut self, max_version: u16) -> std::io::Result<()> {
+        self.send_with(FrameType::Hello, |b| frame::encode_u16(b, max_version))
+    }
+
+    pub fn send_hello_ack(&mut self, version: u16) -> std::io::Result<()> {
+        self.send_with(FrameType::HelloAck, |b| frame::encode_u16(b, version))
+    }
+
+    pub fn send_completion(&mut self, rec: &CompletionRec) -> std::io::Result<()> {
+        self.send_with(FrameType::Completion, |b| frame::encode_completion(b, rec))
+    }
+
+    pub fn send_completion_batch(&mut self, recs: &[CompletionRec]) -> std::io::Result<()> {
+        self.send_with(FrameType::CompletionBatch, |b| frame::encode_completion_batch(b, recs))
+    }
+
+    pub fn send_error(&mut self, seq: u64, shed: bool, msg: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::Error, |b| frame::encode_error(b, seq, shed, msg))
+    }
+
+    pub fn send_stats_json(&mut self, json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::StatsReply, |b| b.extend_from_slice(json.as_bytes()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::INPUT_SIZE;
+
+    /// Writer output must be byte-identical to the pure encoder.
+    #[test]
+    fn writer_matches_encode_frame() {
+        let mut w = [0f32; INPUT_SIZE];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let mut payload = Vec::new();
+        frame::encode_submit(&mut payload, 3, 500.0, b"rig", &w);
+        let expect = frame::encode_frame(FrameType::Submit, &payload);
+
+        let mut out = Vec::new();
+        {
+            let mut fw = FrameWriter::new(&mut out);
+            fw.send_with(FrameType::Submit, |b| {
+                frame::encode_submit(b, 3, 500.0, b"rig", &w)
+            })
+            .unwrap();
+        }
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn reader_walks_a_multi_frame_stream() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&frame::encode_frame(FrameType::Stats, b""));
+        stream.extend_from_slice(b"garbage!!");
+        stream.extend_from_slice(&frame::encode_frame(FrameType::StatsReply, b"{}"));
+        let mut r = FrameReader::new(&stream[..]);
+        match r.next_frame(None).unwrap() {
+            Some(Recv::Frame(FrameType::Stats, p)) => assert!(p.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        match r.next_frame(None).unwrap() {
+            Some(Recv::Frame(FrameType::StatsReply, p)) => assert_eq!(p, b"{}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(r.next_frame(None).unwrap().is_none(), "EOF");
+        assert_eq!(r.desync_bytes(), 9);
+    }
+
+    #[test]
+    fn unknown_type_and_bad_version_surface_as_rejects() {
+        // Unknown type: valid envelope, type byte 0x7F.
+        let mut raw = frame::encode_frame(FrameType::Stats, b"");
+        raw[5] = 0x7F;
+        // Type byte is CRC'd: re-seal the header.
+        let hcrc = crate::wire::crc::crc32(&raw[..12]);
+        raw[12..16].copy_from_slice(&hcrc.to_le_bytes());
+        let mut r = FrameReader::new(&raw[..]);
+        assert!(matches!(
+            r.next_frame(None).unwrap(),
+            Some(Recv::Reject(Reject::UnknownType(0x7F)))
+        ));
+
+        let mut raw = frame::encode_frame(FrameType::Stats, b"");
+        raw[4] = 9;
+        let hcrc = crate::wire::crc::crc32(&raw[..12]);
+        raw[12..16].copy_from_slice(&hcrc.to_le_bytes());
+        let mut r = FrameReader::new(&raw[..]);
+        assert!(matches!(
+            r.next_frame(None).unwrap(),
+            Some(Recv::Reject(Reject::Version(9)))
+        ));
+        assert!(r.next_frame(None).unwrap().is_none());
+    }
+}

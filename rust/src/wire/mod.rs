@@ -1,0 +1,56 @@
+//! `wire` — the binary wire protocol of the serving front-end.
+//!
+//! The paper's latency target is sub-microsecond *model* time; at that
+//! scale the legacy newline-delimited JSON protocol dominates the
+//! serving budget (parse, float formatting, per-request `String`s).
+//! This layer replaces the text hot path with length-prefixed
+//! little-endian binary frames while keeping JSON fully supported — the
+//! TCP front-end sniffs the first byte of each connection (`H` from the
+//! frame magic ⇒ binary, anything else ⇒ legacy JSON) and serves both
+//! on the same port.
+//!
+//! ```text
+//!  client                     TcpStream                     server
+//!    |  Submit {seq, deadline, session, 16xf32 window}  ---->  |
+//!    |  SubmitBatch {base_seq, ..., N windows}          ---->  |   frames route
+//!    |                                                         |   straight into
+//!    |  <---- Completion {seq, estimate, latency, flags}       |   sched::Fabric
+//!    |  <---- CompletionBatch {N records}                      |   ::submit_hashed
+//!    |  <---- Error {seq, shed?, message}                      |   (no string
+//!    |  Hello/Reset/Stats/Shutdown  <-->  HelloAck/Ok/...      |   allocation)
+//! ```
+//!
+//! Layering:
+//!
+//! * [`crc`] — CRC-32 (IEEE) used by both frame checks;
+//! * [`frame`] — the envelope (`magic | version | type | len | header
+//!   CRC | payload | payload CRC`) and per-type payload codecs;
+//!   [`frame::decode_step`] is a pure function, so fault injection
+//!   (truncation, garbage, bit flips) is tested without sockets;
+//! * [`io`] — [`io::FrameReader`] / [`io::FrameWriter`] over any byte
+//!   stream: one reused buffer each, payload views borrow the receive
+//!   buffer (zero-copy), automatic resync past corrupt spans;
+//! * [`client`] — [`client::WireClient`], the binary twin of the JSON
+//!   [`crate::coordinator::Client`].
+//!
+//! Wire-visible session names are validated by ONE checked constructor,
+//! [`crate::sched::SessionToken`] (shared with the JSON path — the
+//! `conn/` anonymous namespace is reserved in both protocols).
+//!
+//! The byte-level contract lives in `docs/PROTOCOL.md` and is pinned by
+//! `rust/tests/wire_codec.rs` (codec properties + goldens) and
+//! `rust/tests/protocol_conformance.rs` (recorded session transcripts
+//! for both protocols).
+
+pub mod client;
+pub mod crc;
+pub mod frame;
+pub mod io;
+
+pub use client::WireClient;
+pub use crc::crc32;
+pub use frame::{
+    decode_step, encode_frame, CompletionRec, DecodeStep, FrameType, SkipReason, HEADER_LEN,
+    MAGIC, MAX_BATCH_WINDOWS, MAX_PAYLOAD, TRAILER_LEN, VERSION,
+};
+pub use io::{FrameReader, FrameWriter, Recv, Reject};

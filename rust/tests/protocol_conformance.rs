@@ -1,0 +1,393 @@
+//! Protocol-conformance golden tests: byte-level transcripts of one
+//! JSON session and one binary session against the fabric server
+//! (connect, submit, batch submit, reset, reconnect, fault injection,
+//! shutdown), checked verbatim so wire behavior can never drift
+//! silently.
+//!
+//! Determinism policy:
+//!
+//! * Request bytes are literals — the binary ones are hex goldens
+//!   generated INDEPENDENTLY in Python (`struct` + `zlib.crc32`), so
+//!   the encoder under test never vouches for itself.
+//! * Expected estimates come from a [`ScalarKernel`] reference stream
+//!   over the same seeded weights (bit-compatible with the fabric's
+//!   batched lanes by the kernel-equivalence suite).
+//! * The only volatile fields are `latency_us` (and the CRCs that cover
+//!   it); both sides of every comparison are canonicalized by zeroing
+//!   exactly those bytes — everything else must match bit for bit.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::coordinator::{Server, WatchdogConfig};
+use hrd_lstm::kernel::{FloatPath, PackedModel, ScalarKernel};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::sched::{Fabric, FabricConfig, SchedSnapshot};
+use hrd_lstm::util::Json;
+
+// ---- shared fixtures ---------------------------------------------------
+
+/// Deterministic test window `k`: features `k + i/4`, exact in f32.
+fn window(k: usize) -> [f32; INPUT_SIZE] {
+    let mut w = [0f32; INPUT_SIZE];
+    for (i, v) in w.iter_mut().enumerate() {
+        *v = k as f32 + i as f32 * 0.25;
+    }
+    w
+}
+
+fn params() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 5)
+}
+
+/// One-shard, two-lane fabric with a huge deadline (no volatile miss
+/// flags) and a wide watchdog (estimates are raw kernel outputs).
+fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<SchedSnapshot>) {
+    let mut fcfg = FabricConfig::new(1, 2);
+    fcfg.deadline_us = 1e9;
+    fcfg.watchdog = WatchdogConfig {
+        min_m: -1e12,
+        max_m: 1e12,
+        max_slew_m_s: 1e15,
+        stuck_after: 1 << 30,
+        ..Default::default()
+    };
+    let fabric = Arc::new(Fabric::new(&params(), fcfg).unwrap());
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run_fabric(fabric).unwrap());
+    (addr, handle)
+}
+
+/// Reference estimates: the transcript's exact submission order through
+/// a dedicated scalar kernel.
+struct RefStream {
+    kernel: ScalarKernel<FloatPath>,
+}
+
+impl RefStream {
+    fn new() -> Self {
+        Self { kernel: ScalarKernel::new(PackedModel::shared(&params()), FloatPath) }
+    }
+
+    fn step(&mut self, w: &[f32; INPUT_SIZE]) -> f64 {
+        self.kernel.step_window(&w[..])
+    }
+
+    fn reset(&mut self) {
+        self.kernel.reset();
+    }
+}
+
+fn connect(addr: impl ToSocketAddrs) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+fn hex(h: &str) -> Vec<u8> {
+    let h: String = h.chars().filter(|c| !c.is_whitespace()).collect();
+    (0..h.len()).step_by(2).map(|i| u8::from_str_radix(&h[i..i + 2], 16).unwrap()).collect()
+}
+
+// ---- JSON transcript ---------------------------------------------------
+
+/// Mirror of the server's JSON number formatting (part of the pinned
+/// contract: integers print bare, everything else shortest-round-trip).
+fn fmt_num(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+fn features_json(w: &[f32; INPUT_SIZE]) -> String {
+    let items: Vec<String> = w.iter().map(|&v| fmt_num(v as f64)).collect();
+    items.join(",")
+}
+
+/// Canonicalize the one volatile JSON field: `"latency_us":<number>`
+/// becomes `"latency_us":0`.
+fn canon_json(line: &str) -> String {
+    let key = "\"latency_us\":";
+    match line.find(key) {
+        None => line.to_string(),
+        Some(at) => {
+            let start = at + key.len();
+            let end = line[start..]
+                .find(|c: char| !matches!(c, '0'..='9' | '.' | '-' | '+' | 'e' | 'E'))
+                .map(|d| start + d)
+                .unwrap_or(line.len());
+            format!("{}0{}", &line[..at + key.len()], &line[end..])
+        }
+    }
+}
+
+/// The expected infer reply for the conformance server (shard 0, lane
+/// 0, no deadline miss, latency canonicalized to 0).
+fn expect_infer(id: u64, estimate: f64) -> String {
+    format!(
+        r#"{{"deadline_miss":false,"estimate":{},"id":{},"lane":0,"latency_us":0,"shard":0}}"#,
+        fmt_num(estimate),
+        id
+    )
+}
+
+#[test]
+fn json_session_transcript_is_golden() {
+    let (addr, handle) = start_server();
+    let mut reference = RefStream::new();
+    let (w1, w2) = (window(1), window(2));
+    let (e1, e2) = (reference.step(&w1), reference.step(&w2));
+    reference.reset();
+    assert_eq!(reference.step(&w1), e1, "reference reset sanity");
+    assert_eq!(reference.step(&w2), e2);
+
+    let round_trip = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.pop(), Some('\n'), "responses are newline-terminated");
+        canon_json(&line)
+    };
+
+    // Connection 1: two inferences, a reset, an inference from zero.
+    let stream = connect(addr);
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let transcript = [
+        (
+            format!(r#"{{"id": 1, "session": "golden", "features": [{}]}}"#, features_json(&w1)),
+            expect_infer(1, e1),
+        ),
+        (
+            format!(r#"{{"id": 2, "session": "golden", "features": [{}]}}"#, features_json(&w2)),
+            expect_infer(2, e2),
+        ),
+        (r#"{"cmd": "reset", "session": "golden"}"#.to_string(), r#"{"ok":true}"#.to_string()),
+        (
+            format!(r#"{{"id": 3, "session": "golden", "features": [{}]}}"#, features_json(&w1)),
+            expect_infer(3, e1),
+        ),
+    ];
+    for (req, want) in &transcript {
+        assert_eq!(&round_trip(&mut writer, &mut reader, req), want, "request {req}");
+    }
+    drop(writer);
+    drop(reader);
+
+    // Connection 2: the session's recurrent state survived the
+    // reconnect (w2 continues from the w1 state), faults get pinned
+    // error lines, then shutdown.
+    let stream = connect(addr);
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let transcript2 = [
+        (
+            format!(r#"{{"id": 4, "session": "golden", "features": [{}]}}"#, features_json(&w2)),
+            expect_infer(4, e2),
+        ),
+        ("not json".to_string(), r#"{"error":"bad literal at offset 0"}"#.to_string()),
+        (
+            format!(r#"{{"id": 5, "session": "conn/0", "features": [{}]}}"#, features_json(&w1)),
+            r#"{"error":"session prefix \"conn/\" is reserved for anonymous connections","id":5}"#
+                .to_string(),
+        ),
+        (r#"{"cmd": "shutdown"}"#.to_string(), r#"{"ok":true}"#.to_string()),
+    ];
+    for (req, want) in &transcript2 {
+        assert_eq!(&round_trip(&mut writer, &mut reader, req), want, "request {req}");
+    }
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, 4);
+}
+
+// ---- binary transcript -------------------------------------------------
+
+// Request goldens generated in Python (struct + zlib.crc32); session
+// "probe", windows per `window(k)`.
+const HELLO: &str = "485244570101000002000000402bde2c0100be23c258";
+const SUB1: &str = "48524457010200005600000028a95959010000000000000000000000000000000570726f\
+                    62650000803f0000a03f0000c03f0000e03f00000040000010400000204000003040000040\
+                    40000050400000604000007040000080400000884000009040000098409ae4f6aa";
+const BATCH: &str = "4852445701030000d80000009463a8f2020000000000000000000000000000000570726f\
+                     626503000000004000001040000020400000304000004040000050400000604000007040\
+                     000080400000884000009040000098400000a0400000a8400000b0400000b84000004040\
+                     000050400000604000007040000080400000884000009040000098400000a0400000a840\
+                     0000b0400000b8400000c0400000c8400000d0400000d84000008040000088400000904000\
+                     0098400000a0400000a8400000b0400000b8400000c0400000c8400000d0400000d8400000\
+                     e0400000e8400000f0400000f8402a504d4a";
+const RESET: &str = "485244570104000006000000b09384f10570726f626527a873f0";
+// SUB5 re-submits window(1) with seq 5 (post-reset restart).
+const SUB5: &str = "48524457010200005600000028a959590500000000000000000000000000000005\
+                    70726f62650000803f0000a03f0000c03f0000e03f000000400000104000002040\
+                    000030400000404000005040000060400000704000008040000088400000904000\
+                    009840f127b5ad";
+const SUB6: &str = "48524457010200005600000028a95959060000000000000000000000000000000570726f\
+                    62650000a0400000a8400000b0400000b8400000c0400000c8400000d0400000d8400000\
+                    e0400000e8400000f0400000f84000000041000004410000084100000c41db5ad200";
+const HIJACK: &str = "4852445701020000570000004dcee5e1090000000000000000000000000000000663\
+                      6f6e6e2f300000803f0000a03f0000c03f0000e03f000000400000104000002040000030\
+                      4000004040000050400000604000007040000080400000884000009040000098405c01d233";
+const STATS: &str = "485244570105000000000000d8c7987200000000";
+const SHUTDOWN: &str = "48524457010600000000000045dd704300000000";
+
+// Response goldens (fully deterministic frames).
+const HELLOACK: &str = "485244570181000002000000b2c1c8a40100be23c258";
+const OK_FRAME: &str = "4852445701850000000000002a2d8efa00000000";
+const ERR_HIJACK: &str = "4852445701840000470000001a463a5a0900000000000000003c0073657373696f\
+                          6e207072656669782022636f6e6e2f2220697320726573657276656420666f7220\
+                          616e6f6e796d6f757320636f6e6e656374696f6e7373083dfa";
+
+const HEADER_LEN: usize = 16;
+
+/// Read one frame off the socket by its announced length.
+fn read_frame(stream: &mut TcpStream) -> Vec<u8> {
+    let mut hdr = [0u8; HEADER_LEN];
+    stream.read_exact(&mut hdr).unwrap();
+    let len = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]) as usize;
+    let mut rest = vec![0u8; len + 4];
+    stream.read_exact(&mut rest).unwrap();
+    let mut f = hdr.to_vec();
+    f.extend_from_slice(&rest);
+    f
+}
+
+/// Zero the volatile bytes of a received frame: both CRCs, plus the
+/// `latency_us` field of completion records.
+fn canon_frame(mut f: Vec<u8>) -> Vec<u8> {
+    for b in &mut f[12..16] {
+        *b = 0;
+    }
+    let n = f.len();
+    for b in &mut f[n - 4..] {
+        *b = 0;
+    }
+    let zero_latency_at = |f: &mut Vec<u8>, rec_start: usize| {
+        for b in &mut f[rec_start + 16..rec_start + 24] {
+            *b = 0;
+        }
+    };
+    match f[5] {
+        0x82 => zero_latency_at(&mut f, HEADER_LEN),
+        0x83 => {
+            let count = u16::from_le_bytes([f[HEADER_LEN], f[HEADER_LEN + 1]]) as usize;
+            for i in 0..count {
+                zero_latency_at(&mut f, HEADER_LEN + 2 + i * 29);
+            }
+        }
+        _ => {}
+    }
+    f
+}
+
+/// Hand-assembled expected frame with zeroed CRCs (the canonical form
+/// `canon_frame` maps received frames onto).  Deliberately NOT built
+/// with the wire encoder — literal offsets pin the layout.
+fn expect_frame(ty: u8, payload: &[u8]) -> Vec<u8> {
+    let mut f = Vec::new();
+    f.extend_from_slice(b"HRDW");
+    f.push(1); // version
+    f.push(ty);
+    f.extend_from_slice(&[0, 0]); // flags
+    f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    f.extend_from_slice(&[0, 0, 0, 0]); // header CRC (canonicalized)
+    f.extend_from_slice(payload);
+    f.extend_from_slice(&[0, 0, 0, 0]); // payload CRC (canonicalized)
+    f
+}
+
+/// Expected completion record: seq, estimate, latency 0, no flags,
+/// shard 0, lane 0.
+fn completion_rec(seq: u64, estimate: f64) -> Vec<u8> {
+    let mut r = Vec::with_capacity(29);
+    r.extend_from_slice(&seq.to_le_bytes());
+    r.extend_from_slice(&estimate.to_bits().to_le_bytes());
+    r.extend_from_slice(&0f64.to_bits().to_le_bytes()); // latency, canonicalized
+    r.push(0); // flags: no miss, no shed
+    r.extend_from_slice(&0u16.to_le_bytes()); // shard
+    r.extend_from_slice(&0u16.to_le_bytes()); // lane
+    r
+}
+
+#[test]
+fn binary_session_transcript_is_golden() {
+    let (addr, handle) = start_server();
+    let mut reference = RefStream::new();
+    let (w1, w2, w3, w4, w5) = (window(1), window(2), window(3), window(4), window(5));
+    let e1 = reference.step(&w1);
+    let (e2, e3, e4) = (reference.step(&w2), reference.step(&w3), reference.step(&w4));
+    reference.reset();
+    assert_eq!(reference.step(&w1), e1);
+    let e6 = reference.step(&w5);
+    // Windows in the goldens really are `window(k)` (guards against the
+    // generator and this file drifting apart).
+    let sub1 = hex(SUB1);
+    for (i, b) in w1.iter().enumerate() {
+        let at = HEADER_LEN + 17 + 5 + i * 4; // seq+deadline+len+session
+        assert_eq!(&sub1[at..at + 4], &b.to_le_bytes(), "SUB1 window byte {i}");
+    }
+
+    // Connection 1: hello, submit, batch submit, reset, submit-fresh.
+    let mut stream = connect(addr);
+    stream.write_all(&hex(HELLO)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(HELLOACK), "hello ack");
+    stream.write_all(&sub1).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame(0x82, &completion_rec(1, e1)),
+        "single completion"
+    );
+    stream.write_all(&hex(BATCH)).unwrap();
+    let mut batch_payload = vec![3u8, 0];
+    batch_payload.extend_from_slice(&completion_rec(2, e2));
+    batch_payload.extend_from_slice(&completion_rec(3, e3));
+    batch_payload.extend_from_slice(&completion_rec(4, e4));
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame(0x83, &batch_payload),
+        "batch completion"
+    );
+    stream.write_all(&hex(RESET)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(OK_FRAME), "reset ack");
+    stream.write_all(&hex(SUB5)).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame(0x82, &completion_rec(5, e1)),
+        "post-reset completion restarts the stream"
+    );
+    drop(stream);
+
+    // Connection 2: state survived the reconnect; garbage injection
+    // resyncs; the conn/ hijack is refused at the protocol level.
+    let mut stream = connect(addr);
+    stream.write_all(&hex(SUB6)).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame(0x82, &completion_rec(6, e6)),
+        "reconnect continues the stream"
+    );
+    stream.write_all(b"\x00\x01garbage bytes, no magic\xff").unwrap();
+    stream.write_all(&hex(HIJACK)).unwrap();
+    assert_eq!(
+        read_frame(&mut stream),
+        hex(ERR_HIJACK),
+        "reserved-namespace hijack refused with the pinned error frame (exact bytes)"
+    );
+    stream.write_all(&hex(STATS)).unwrap();
+    let stats = read_frame(&mut stream);
+    assert_eq!(stats[5], 0x86, "stats reply frame type");
+    let n = stats.len();
+    let json = Json::parse(std::str::from_utf8(&stats[HEADER_LEN..n - 4]).unwrap()).unwrap();
+    assert_eq!(json.get("inferred").unwrap().as_f64(), Some(6.0));
+    stream.write_all(&hex(SHUTDOWN)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(OK_FRAME), "shutdown ack");
+
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, 6);
+    assert_eq!(snap.shed, 0);
+}

@@ -27,12 +27,19 @@ cargo build --release
 echo "== cargo test =="
 cargo test -q
 
+echo "== wire protocol gate: codec properties + conformance transcripts =="
+# Explicit re-run of the protocol suites so a wire-format drift fails
+# with its own named CI step (cheap: already built by the line above).
+cargo test -q --test wire_codec --test protocol_conformance
+
 echo "== kernel bench smoke (BENCH_kernel.json) =="
 HRD_BENCH_FAST=1 cargo run --release --bin hrd -- bench --quick --out BENCH_kernel.json
 
 echo "== serving fabric loadgen smoke (BENCH_serving.json) =="
-# Loopback loadgen: serial baseline vs sched:: fabric at shards {1,2,4},
-# small M / short duration (see scripts/loadgen.sh for the full run).
-cargo run --release --bin hrd -- loadgen --quick --out BENCH_serving.json
+# Loopback loadgen: serial baseline vs sched:: fabric at shards {1,2,4}
+# over BOTH wire protocols (json-vs-binary comparison + bit-parity pass,
+# see docs/PROTOCOL.md), small M / short duration (scripts/loadgen.sh
+# runs the full measurement).
+cargo run --release --bin hrd -- loadgen --quick --wire both --out BENCH_serving.json
 
 echo "CI OK"

@@ -10,11 +10,16 @@
 #   2. deadline-miss rate at a fixed offered load (paced phase),
 #
 # for the legacy serial single-backend server AND the sharded
-# deadline-aware fabric (sched::) at shards in {1, 2, 4}.  Results land
-# in BENCH_serving.json:
+# deadline-aware fabric (sched::) at shards in {1, 2, 4} — the fabric
+# over BOTH wire protocols: legacy JSON lines and the binary framing
+# specified in docs/PROTOCOL.md (auto-detected per connection by the
+# server).  Results land in BENCH_serving.json:
 #
-#   .serial                         — the baseline scenario
-#   .fabric[]                       — one entry per shard count
+#   .serial                         — the baseline scenario (JSON)
+#   .fabric[]                       — one entry per shard count x protocol
+#   .wire_comparison[]              — per-shard json-vs-binary p50/rate
+#   .parity_windows                 — windows proven bit-identical across
+#                                     json / binary / batch submission
 #   .derived.best_fabric_vs_serial_sustained
 #                                   — the headline ratio (> 1 means the
 #                                     fabric beats one serial engine)
@@ -25,6 +30,7 @@
 #
 # Knobs (forwarded verbatim, see `hrd help`):
 #   scripts/loadgen.sh full --streams 64 --shards 1,2,4,8 --batch 16
+#   scripts/loadgen.sh full --wire binary      # one protocol only
 #
 # The `serving_fabric` bench binary (`cargo bench --bench serving_fabric`
 # or running the built binary directly) runs the same suite and, in full
