@@ -41,7 +41,7 @@ use crate::arch::INPUT_SIZE;
 use crate::beam::{ProfileKind, Testbed};
 use crate::coordinator::{channel_seed, Client, InferReply, NativeBackend, Server};
 use crate::lstm::LstmParams;
-use crate::sched::{Fabric, FabricConfig};
+use crate::sched::{session_hash, shard_of, Fabric, FabricConfig};
 use crate::util::{stats, Json};
 use crate::wire::WireClient;
 
@@ -117,6 +117,14 @@ pub struct ServingConfig {
     pub paced_rate_hz: f64,
     /// Paced requests per stream.
     pub paced_requests: usize,
+    /// Run the skewed-keyspace rebalance scenario (rebalance off vs on).
+    pub skew: bool,
+    /// Streams in the skew scenario.
+    pub skew_streams: usize,
+    /// Fraction of skew streams whose session names hash to ONE shard.
+    pub skew_hot_fraction: f64,
+    /// Closed-loop requests per skew stream.
+    pub skew_requests: usize,
     /// Workload seed.
     pub seed: u64,
 }
@@ -133,6 +141,10 @@ impl ServingConfig {
             deadline_us: crate::arch::RTOS_PERIOD_US,
             paced_rate_hz: 500.0,
             paced_requests: 100,
+            skew: true,
+            skew_streams: 16,
+            skew_hot_fraction: 0.8,
+            skew_requests: 80,
             seed: 42,
         }
     }
@@ -148,6 +160,10 @@ impl ServingConfig {
             deadline_us: crate::arch::RTOS_PERIOD_US,
             paced_rate_hz: 400.0,
             paced_requests: 20,
+            skew: true,
+            skew_streams: 10,
+            skew_hot_fraction: 0.8,
+            skew_requests: 30,
             seed: 42,
         }
     }
@@ -232,11 +248,74 @@ impl WireCompare {
     }
 }
 
+/// One skewed-keyspace run (rebalance off or on): a session population
+/// where most names hash to ONE shard, driven closed-loop through the
+/// fabric directly (no TCP — the skew effect under test is scheduling,
+/// not framing).
+#[derive(Debug, Clone)]
+pub struct SkewReport {
+    pub rebalance: bool,
+    pub requests: u64,
+    pub completed: u64,
+    /// Requests refused or evicted by the (deliberately tiny) queues.
+    pub shed: u64,
+    /// Enqueue-to-completion percentiles over completed requests.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Sessions migrated off the hot shard (0 with rebalance off).
+    pub migrations: u64,
+    /// Fraction of completions served by the overloaded home shard.
+    pub hot_share: f64,
+}
+
+impl SkewReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rebalance", Json::Bool(self.rebalance)),
+            ("requests", Json::from(self.requests as f64)),
+            ("completed", Json::from(self.completed as f64)),
+            ("shed", Json::from(self.shed as f64)),
+            ("p50_us", Json::from(self.p50_us)),
+            ("p99_us", Json::from(self.p99_us)),
+            ("migrations", Json::from(self.migrations as f64)),
+            ("hot_share", Json::from(self.hot_share)),
+        ])
+    }
+}
+
+/// The skew scenario's off-vs-on comparison (the headline the
+/// rebalancer is graded on: lower shed count and lower p99).
+#[derive(Debug, Clone)]
+pub struct RebalanceCompare {
+    pub off: SkewReport,
+    pub on: SkewReport,
+}
+
+impl RebalanceCompare {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("off", self.off.to_json()),
+            ("on", self.on.to_json()),
+            (
+                "shed_reduction",
+                Json::from(self.off.shed.saturating_sub(self.on.shed) as f64),
+            ),
+            (
+                "p99_speedup",
+                Json::from(self.off.p99_us / self.on.p99_us.max(1e-9)),
+            ),
+        ])
+    }
+}
+
 /// Full suite output.
 #[derive(Debug, Clone)]
 pub struct ServingSummary {
     pub serial: ScenarioReport,
     pub fabric: Vec<ScenarioReport>,
+    /// Skewed-keyspace rebalance comparison (`None` when `cfg.skew` is
+    /// off).
+    pub rebalance: Option<RebalanceCompare>,
     /// Per-request latency comparison json vs binary at each shard
     /// count (present when both protocols were swept).
     pub wire_comparison: Vec<WireCompare>,
@@ -291,6 +370,20 @@ impl ServingSummary {
                 self.parity_windows
             ));
         }
+        if let Some(r) = &self.rebalance {
+            s.push_str(&format!(
+                "skewed keyspace ({} requests): rebalance off shed {} p99 {:.1} us | \
+                 on shed {} p99 {:.1} us ({} migrations, hot share {:.0}% -> {:.0}%)\n",
+                r.off.requests,
+                r.off.shed,
+                r.off.p99_us,
+                r.on.shed,
+                r.on.p99_us,
+                r.on.migrations,
+                r.off.hot_share * 100.0,
+                r.on.hot_share * 100.0,
+            ));
+        }
         s.push_str(&format!(
             "widest fabric ({} shards) vs serial sustained rate: {:.2}x",
             self.best_fabric_shards, self.best_fabric_vs_serial
@@ -328,6 +421,13 @@ impl ServingSummary {
                 Json::Arr(self.wire_comparison.iter().map(|c| c.to_json()).collect()),
             ),
             ("parity_windows", Json::from(self.parity_windows as f64)),
+            (
+                "rebalance",
+                match &self.rebalance {
+                    Some(r) => r.to_json(),
+                    None => Json::Null,
+                },
+            ),
             (
                 "derived",
                 Json::obj(vec![
@@ -520,6 +620,111 @@ fn wire_parity(params: &LstmParams, loads: &[Vec<[f32; INPUT_SIZE]>]) -> Result<
     Ok(windows.len() as u64)
 }
 
+/// Deterministically pick `streams` session names such that
+/// `hot_fraction` of them hash to shard 0 of a `shards`-wide fabric and
+/// the rest elsewhere — the adversarial keyspace FNV routing cannot fix
+/// on its own.
+pub fn skew_sessions(streams: usize, hot_fraction: f64, shards: usize) -> Vec<String> {
+    let hot_n = ((streams as f64 * hot_fraction).round() as usize).min(streams);
+    let (mut hot, mut cold) = (Vec::new(), Vec::new());
+    let mut i = 0u64;
+    while hot.len() < hot_n || cold.len() < streams - hot_n {
+        let name = format!("skew-{i}");
+        i += 1;
+        if shard_of(session_hash(&name), shards) == 0 {
+            if hot.len() < hot_n {
+                hot.push(name);
+            }
+        } else if cold.len() < streams - hot_n {
+            cold.push(name);
+        }
+    }
+    hot.extend(cold);
+    hot
+}
+
+/// Run the skewed-keyspace scenario once: closed-loop clients over a
+/// fabric whose queues are deliberately shallow, so the overloaded home
+/// shard sheds unless the rebalancer spreads its sessions.  Shared by
+/// the bench suite and the `sched_rebalance` acceptance test (which
+/// asserts `on` beats `off` on shed count and p99).
+pub fn run_skew_scenario(
+    params: &LstmParams,
+    cfg: &ServingConfig,
+    rebalance: bool,
+) -> Result<SkewReport> {
+    anyhow::ensure!(cfg.skew_streams >= 2 && cfg.skew_requests >= 1, "empty skew workload");
+    let shards = cfg.shard_counts.iter().copied().max().unwrap_or(4).max(2);
+    let lanes = cfg.batch.max(2);
+    let hot_n = ((cfg.skew_streams as f64 * cfg.skew_hot_fraction).round() as usize)
+        .min(cfg.skew_streams);
+    let mut fcfg = FabricConfig::new(shards, lanes);
+    fcfg.deadline_us = cfg.deadline_us;
+    // Shallow queues, sized against the HOT population (not the lane
+    // count): the hot shard's capacity (lanes in a pass + queue depth)
+    // must stay below its closed-loop client count, so the unbalanced
+    // fabric is guaranteed to shed — while a balanced spread (at most
+    // ~streams/shards sessions each) fits comfortably.
+    fcfg.queue_depth = hot_n.saturating_sub(lanes + 3).max(2);
+    fcfg.balance.enabled = rebalance;
+    // Aggressive thresholds relative to the tiny queues.
+    fcfg.balance.hot_queue = 2;
+    fcfg.balance.idle_queue = 1;
+    fcfg.balance.min_gap = 1;
+    fcfg.balance.steal_poll = Duration::from_micros(200);
+    let fabric = Arc::new(Fabric::new(params, fcfg)?);
+
+    let sessions = skew_sessions(cfg.skew_streams, cfg.skew_hot_fraction, shards);
+    let mut joins = Vec::new();
+    for (s, name) in sessions.iter().enumerate() {
+        let fabric = fabric.clone();
+        let name = name.clone();
+        let windows: Vec<[f32; INPUT_SIZE]> =
+            Testbed::new(ProfileKind::Sweep, cfg.skew_requests, channel_seed(cfg.seed, s))
+                .map(|w| w.features)
+                .collect();
+        joins.push(std::thread::spawn(move || {
+            let mut lats = Vec::new();
+            let mut on_hot = 0u64;
+            for w in &windows {
+                match fabric.submit(&name, w, None).and_then(|p| p.wait()) {
+                    Ok(c) => {
+                        lats.push(c.latency_us);
+                        if c.shard == 0 {
+                            on_hot += 1;
+                        }
+                    }
+                    Err(_) => {} // shed — counted server-side
+                }
+            }
+            (lats, on_hot)
+        }));
+    }
+    let mut latencies = Vec::new();
+    let mut on_hot = 0u64;
+    for j in joins {
+        let (lats, hot) = j.join().expect("skew client panicked");
+        latencies.extend(lats);
+        on_hot += hot;
+    }
+    let snap = fabric.snapshot();
+    fabric.shutdown();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| {
+        if latencies.is_empty() { 0.0 } else { stats::percentile_sorted(&latencies, p) }
+    };
+    Ok(SkewReport {
+        rebalance,
+        requests: (cfg.skew_streams * cfg.skew_requests) as u64,
+        completed: snap.completed,
+        shed: snap.shed,
+        p50_us: pct(50.0),
+        p99_us: pct(99.0),
+        migrations: snap.migrations,
+        hot_share: if snap.completed == 0 { 0.0 } else { on_hot as f64 / snap.completed as f64 },
+    })
+}
+
 /// Run the full suite: serial baseline, then the fabric at each
 /// configured shard count over each configured wire protocol (plus the
 /// cross-protocol parity pass when both are selected); optionally write
@@ -564,6 +769,14 @@ pub fn run_serving_suite(
     }
     let parity_windows =
         if both { wire_parity(params, &loads).context("wire parity check")? } else { 0 };
+    let rebalance = if cfg.skew {
+        Some(RebalanceCompare {
+            off: run_skew_scenario(params, cfg, false).context("skew scenario, rebalance off")?,
+            on: run_skew_scenario(params, cfg, true).context("skew scenario, rebalance on")?,
+        })
+    } else {
+        None
+    };
     // "Widest" = max shard count, NOT list order (--shards "8,1" must not
     // grade the acceptance ratio against the 1-shard run); best protocol
     // at that width.
@@ -581,6 +794,7 @@ pub fn run_serving_suite(
     let summary = ServingSummary {
         serial,
         fabric,
+        rebalance,
         wire_comparison,
         parity_windows,
         best_fabric_shards,
@@ -609,6 +823,10 @@ mod tests {
             deadline_us: crate::arch::RTOS_PERIOD_US,
             paced_rate_hz: 2000.0,
             paced_requests: 4,
+            skew: false, // exercised by its own test below
+            skew_streams: 4,
+            skew_hot_fraction: 0.8,
+            skew_requests: 4,
             seed: 11,
         };
         let out = std::env::temp_dir().join("hrd_bench_serving_selftest.json");
@@ -633,6 +851,7 @@ mod tests {
         assert!(!s.render().is_empty());
         let j = Json::parse_file(&out).unwrap();
         assert_eq!(j.get("group").unwrap().as_str(), Some("serving"));
+        assert_eq!(j.get("rebalance"), Some(&Json::Null), "skew disabled in this config");
         assert_eq!(j.get("fabric").unwrap().as_arr().unwrap().len(), 4);
         assert_eq!(j.get("wire_comparison").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("parity_windows").unwrap().as_f64().unwrap() > 0.0);
@@ -641,6 +860,39 @@ mod tests {
             .unwrap()
             .as_f64()
             .is_some());
+    }
+
+    #[test]
+    fn skew_sessions_hit_the_requested_distribution() {
+        let shards = 4;
+        let names = skew_sessions(20, 0.8, shards);
+        assert_eq!(names.len(), 20);
+        let hot =
+            names.iter().filter(|n| shard_of(session_hash(n), shards) == 0).count();
+        assert_eq!(hot, 16, "80% of 20 sessions must hash to shard 0");
+        // Deterministic: the same call yields the same names.
+        assert_eq!(names, skew_sessions(20, 0.8, shards));
+    }
+
+    /// The skew scenario accounts every request (completed + shed ==
+    /// offered) and only migrates when rebalancing is on.  The
+    /// off-vs-on performance ordering is asserted by the larger
+    /// workload in rust/tests/sched_rebalance.rs.
+    #[test]
+    fn skew_scenario_accounts_every_request() {
+        let params = LstmParams::init(16, 15, 3, 1, 7);
+        let mut cfg = ServingConfig::quick();
+        cfg.shard_counts = vec![2];
+        cfg.batch = 2;
+        cfg.skew_streams = 6;
+        cfg.skew_requests = 12;
+        let off = run_skew_scenario(&params, &cfg, false).unwrap();
+        assert_eq!(off.requests, 72);
+        assert_eq!(off.completed + off.shed, off.requests);
+        assert_eq!(off.migrations, 0, "no stealing with rebalance off");
+        let on = run_skew_scenario(&params, &cfg, true).unwrap();
+        assert_eq!(on.completed + on.shed, on.requests);
+        assert!(on.p50_us > 0.0 && on.p99_us >= on.p50_us);
     }
 
     /// Single-protocol runs still work (and skip comparison + parity).
@@ -656,6 +908,10 @@ mod tests {
             deadline_us: crate::arch::RTOS_PERIOD_US,
             paced_rate_hz: 0.0,
             paced_requests: 0,
+            skew: false,
+            skew_streams: 4,
+            skew_hot_fraction: 0.8,
+            skew_requests: 4,
             seed: 3,
         };
         let s = run_serving_suite(&params, &cfg, None).unwrap();

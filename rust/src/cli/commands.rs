@@ -42,6 +42,9 @@ COMMANDS:
             --addr HOST:PORT (default 127.0.0.1:7433) + serve's options
             --shards N  --batch B  --deadline-us D  --gather-us G
             --shed {reject|evict-farthest}
+            --rebalance  (hot-shard rebalancing: idle shards steal whole
+            sessions — live state + queued jobs — from saturated ones;
+            see docs/SCHED.md; also `[sched] rebalance = true`)
   loadgen   self-contained serving load generator: drives M synthetic
             DROPBEAR streams through a loopback socket against the serial
             backend and the fabric at several shard counts over the JSON
@@ -51,6 +54,8 @@ COMMANDS:
             --streams M  --requests N  --shards "1,2,4"  --batch B
             --wire {json|binary|both}  --deadline-us D  --rate-hz R
             --paced-requests K  --out <file>  --quick
+            --no-skew  (skip the skewed-keyspace rebalance-off-vs-on
+            scenario; see docs/SCHED.md)  --skew-streams M  --skew-requests N
   tables    regenerate Tables I-IV (FPGA design-space study)
   pareto    design-space Pareto frontier + constrained recommendation
             --min-snr X  --max-dsps N
@@ -117,6 +122,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.batch = args.get_usize("batch", cfg.batch)?.max(1);
     cfg.gather_us = args.get_f64("gather-us", cfg.gather_us)?.max(0.0);
     cfg.shed = args.get_or("shed", &cfg.shed.clone()).to_string();
+    cfg.rebalance = cfg.rebalance || args.has_flag("rebalance");
     Ok(cfg)
 }
 
@@ -152,6 +158,7 @@ fn fabric_config(
     f.gather_cap_us = cfg.gather_us;
     f.shed = shed;
     f.datapath = datapath;
+    f.balance.enabled = cfg.rebalance;
     Ok(f)
 }
 
@@ -303,19 +310,21 @@ fn serve_tcp(args: &Args) -> Result<i32> {
             let fcfg = fabric_config(&cfg, dp)?;
             let fabric = std::sync::Arc::new(crate::sched::Fabric::new(&params, fcfg)?);
             println!(
-                "serving fabric backend={} shards={} batch={} deadline={}us on {} \
-                 (send {{\"cmd\":\"shutdown\"}} to stop)",
+                "serving fabric backend={} shards={} batch={} deadline={}us rebalance={} \
+                 on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
                 cfg.backend.name(),
                 fabric.shards(),
                 cfg.batch,
                 cfg.deadline_us,
+                if cfg.rebalance { "on" } else { "off" },
                 server.local_addr()?
             );
             let snap = server.run_fabric(fabric)?;
             println!(
                 "served {} requests (shed {}, p50 {:.1} us, p99 {:.1} us, \
-                 deadline miss rate {:.4})",
-                snap.completed, snap.shed, snap.p50_us, snap.p99_us, snap.miss_rate
+                 deadline miss rate {:.4}, sessions migrated {})",
+                snap.completed, snap.shed, snap.p50_us, snap.p99_us, snap.miss_rate,
+                snap.migrations
             );
         }
         _ => {
@@ -362,6 +371,9 @@ fn loadgen(args: &Args) -> Result<i32> {
     scfg.deadline_us = args.get_f64("deadline-us", scfg.deadline_us)?;
     scfg.paced_rate_hz = args.get_f64("rate-hz", scfg.paced_rate_hz)?;
     scfg.paced_requests = args.get_usize("paced-requests", scfg.paced_requests)?;
+    scfg.skew = scfg.skew && !args.has_flag("no-skew");
+    scfg.skew_streams = args.get_usize("skew-streams", scfg.skew_streams)?.max(2);
+    scfg.skew_requests = args.get_usize("skew-requests", scfg.skew_requests)?.max(1);
     scfg.seed = args.get_u64("seed", scfg.seed)?;
     if let Some(list) = args.get("shards") {
         let counts: std::result::Result<Vec<usize>, _> =
@@ -593,6 +605,17 @@ mod tests {
         assert_eq!(dispatch(&a).unwrap(), 0);
         let j = crate::util::Json::parse_file(&out).unwrap();
         assert_eq!(j.get("group").unwrap().as_str(), Some("kernel"));
+    }
+
+    #[test]
+    fn rebalance_flag_flows_into_fabric_config() {
+        let a = parse(&["serve-tcp", "--rebalance", "--backend", "native"]);
+        let cfg = experiment_config(&a).unwrap();
+        assert!(cfg.rebalance);
+        let f = fabric_config(&cfg, crate::sched::DatapathKind::Float).unwrap();
+        assert!(f.balance.enabled);
+        let plain = experiment_config(&parse(&["serve-tcp", "--backend", "native"])).unwrap();
+        assert!(!plain.rebalance, "rebalancing is opt-in");
     }
 
     #[test]

@@ -84,6 +84,9 @@ pub struct ExperimentConfig {
     /// Load-shedding policy for full shard queues
     /// ("reject" | "evict-farthest").
     pub shed: String,
+    /// Hot-shard rebalancing: cross-shard work stealing with live
+    /// session-state migration (`serve-tcp --rebalance`).
+    pub rebalance: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -105,6 +108,7 @@ impl Default for ExperimentConfig {
             batch: 8,
             gather_us: 200.0,
             shed: "reject".into(),
+            rebalance: false,
         }
     }
 }
@@ -138,6 +142,7 @@ impl ExperimentConfig {
             batch: doc.get_i64("sched.batch", d.batch as i64).max(1) as usize,
             gather_us: doc.get_f64("sched.gather_us", d.gather_us).max(0.0),
             shed: doc.get_str("sched.shed", &d.shed),
+            rebalance: doc.get_bool("sched.rebalance", d.rebalance),
         }
     }
 }
@@ -175,6 +180,7 @@ shards = 4
 batch = 16
 gather_us = 50.0
 shed = "evict-farthest"
+rebalance = true
 "#,
         )
         .unwrap();
@@ -188,6 +194,8 @@ shed = "evict-farthest"
         assert_eq!(c.batch, 16);
         assert_eq!(c.gather_us, 50.0);
         assert_eq!(c.shed, "evict-farthest");
+        assert!(c.rebalance);
+        assert!(!ExperimentConfig::default().rebalance, "opt-in only");
     }
 
     #[test]

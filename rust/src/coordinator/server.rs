@@ -9,7 +9,12 @@
 //!   straight into the sharded deadline-aware [`crate::sched::Fabric`];
 //!   there is no central inference thread.  Sessions are named by the
 //!   client (`"session"` field) and survive reconnects; `stats` reports
-//!   the fabric's [`crate::sched::SchedSnapshot`].
+//!   the fabric's [`crate::sched::SchedSnapshot`], including the
+//!   hot-shard rebalance counters (`migrations`, `steal_requests`, and
+//!   per-shard `exported`/`adopted`) when `serve-tcp --rebalance` /
+//!   `[sched] rebalance` is on — a migrated session keeps its name,
+//!   hash, and recurrent state; only its shard changes, which the
+//!   per-reply `shard` field makes visible to clients.
 //!
 //! Each connection's protocol is sniffed from its first byte: the
 //! binary frame magic (`H` of `"HRDW"`, see [`crate::wire`] and
@@ -1113,6 +1118,13 @@ mod tests {
         let stats = a.stats().unwrap();
         assert_eq!(stats.get("inferred").unwrap().as_f64(), Some(4.0));
         assert_eq!(stats.get("shards").unwrap().as_arr().unwrap().len(), 2);
+        // Rebalance observability is part of the stats surface even when
+        // the feature is off (zeros, not missing keys — dashboards must
+        // not special-case).
+        assert_eq!(stats.get("migrations").unwrap().as_f64(), Some(0.0));
+        let shard0 = &stats.get("shards").unwrap().as_arr().unwrap()[0];
+        assert_eq!(shard0.get("exported").unwrap().as_f64(), Some(0.0));
+        assert_eq!(shard0.get("adopted").unwrap().as_f64(), Some(0.0));
         // Anonymous-session namespace is reserved: a client cannot graft
         // itself onto (or reset) another connection's "conn/N" stream.
         let mut crook = Client::with_session(&addr.to_string(), "conn/0").unwrap();

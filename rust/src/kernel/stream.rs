@@ -88,6 +88,17 @@ impl<P: Datapath> MultiStream<P> {
         self.pending.fill(false);
     }
 
+    /// Discard every queued-but-undrained window without advancing any
+    /// stream — the abort path after a partially-failed batch submit
+    /// (a dangling pending flag would otherwise smuggle a stale window
+    /// into the NEXT pass and desynchronize that stream).  Returns how
+    /// many windows were discarded.
+    pub fn cancel_pending(&mut self) -> usize {
+        let n = self.pending();
+        self.pending.fill(false);
+        n
+    }
+
     /// Queue `window` (raw acceleration samples) as `stream`'s next input.
     pub fn submit(&mut self, stream: usize, window: &[f32]) -> Result<()> {
         let input = self.kernel.input_size();
@@ -253,6 +264,26 @@ mod tests {
         let want = single.step_window(&w);
         assert_eq!(b.step_one(0, &w).unwrap(), want);
         assert_ne!(want, last);
+    }
+
+    #[test]
+    fn cancel_pending_discards_windows_without_stepping() {
+        let p = LstmParams::init(16, 15, 2, 1, 8);
+        let packed = PackedModel::shared(&p);
+        let mut ms = MultiStream::new(packed.clone(), FloatPath, 2);
+        let mut single = ScalarKernel::new(packed, FloatPath);
+        let mut rng = Rng::new(41);
+        let w1 = window(&mut rng);
+        ms.submit(0, &w1).unwrap();
+        assert_eq!(ms.cancel_pending(), 1);
+        assert_eq!(ms.pending(), 0);
+        // The cancelled window never advanced the stream: the next
+        // submit+drain matches a fresh reference exactly, and the slot
+        // accepts a new submission (no dangling double-submit guard).
+        let w2 = window(&mut rng);
+        let want = single.step_window(&w2);
+        assert_eq!(ms.step_one(0, &w2).unwrap(), want);
+        assert_eq!(ms.cancel_pending(), 0);
     }
 
     #[test]

@@ -60,8 +60,12 @@
 //!   [`kernel::MultiStream`] session, stable session-hash routing (with
 //!   [`sched::SessionToken`], the one checked constructor for session
 //!   names), bounded EDF queues with explicit load shedding, adaptive
-//!   micro-batching, per-lane watchdog resets and
-//!   [`sched::SchedMetrics`] (p50/p99/p99.9, miss rate, occupancy).
+//!   micro-batching, per-lane watchdog resets,
+//!   [`sched::SchedMetrics`] (p50/p99/p99.9, miss rate, occupancy) and
+//!   opt-in hot-shard rebalancing ([`sched::balance`], spec in
+//!   `docs/SCHED.md`): idle shards steal whole sessions — live lane
+//!   state + queued jobs — from saturated peers, with a routing overlay
+//!   keeping future arrivals and reconnects on the migrated shard.
 //! * [`wire`] — the binary wire protocol (`docs/PROTOCOL.md`):
 //!   CRC-guarded length-prefixed frames, zero-copy
 //!   [`wire::FrameReader`]/[`wire::FrameWriter`], batched submission

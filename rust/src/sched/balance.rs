@@ -1,0 +1,327 @@
+//! Hot-shard rebalancing: cross-shard work stealing with live
+//! session-state migration (see `docs/SCHED.md` for the full protocol).
+//!
+//! FNV-1a routing is uniform over *names*, not over *load*: a skewed
+//! session population (or a handful of chatty clients that happen to
+//! hash together) can saturate one shard's EDF queue while its siblings
+//! idle — the hot shard sheds even though the fabric as a whole has
+//! slack.  This module adds the two pieces that let the fabric repair
+//! that skew at runtime without giving up per-session state or
+//! ordering:
+//!
+//! * [`LoadBoard`] — per-shard queue-depth / occupancy / EWMA-pass
+//!   gauges, published by each worker after every pass (and on idle
+//!   polls).  Depth and occupancy drive steal planning; the pass EWMA
+//!   is an operator gauge.  Reads and writes are relaxed atomics: the
+//!   board is a *hint* for steal planning, never a correctness input.
+//! * [`RoutingOverlay`] — a `session hash -> shard` override table
+//!   consulted by `Fabric::submit_hashed` ahead of the default
+//!   `hash % shards` placement, so a migrated session's future arrivals
+//!   follow it.  Each session hash maps to one of a fixed set of stripe
+//!   locks; a submitter holds its stripe across *route lookup + queue
+//!   push*, and the migrating worker holds the same stripe across
+//!   *override insert + source-queue drain + Adopt hand-off*.  That
+//!   single lock is what makes migration linearizable against
+//!   concurrent submits (the ordering proof is spelled out in
+//!   `docs/SCHED.md`); with rebalancing disabled the overlay is never
+//!   touched and submissions take no stripe lock at all.
+//!
+//! Whole *sessions* migrate, never individual jobs: recurrent state
+//! only makes sense if every window of a stream is applied exactly once
+//! and in order, so the unit of stealing is (exported lane state +
+//! every queued window of that session).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use super::session::shard_of;
+
+/// Rebalancing tuning.  Disabled by default: the steal path costs one
+/// stripe lock per submission, which single-tenant deployments with a
+/// uniform keyspace should not pay.
+#[derive(Debug, Clone)]
+pub struct BalanceConfig {
+    /// Master switch (`serve-tcp --rebalance` / `[sched] rebalance`).
+    pub enabled: bool,
+    /// Published queue depth at (or above) which a shard counts as hot
+    /// and may be stolen from.
+    pub hot_queue: usize,
+    /// A thief must have at most this many queued jobs (and at least one
+    /// free lane) to claim slack.
+    pub idle_queue: usize,
+    /// Minimum hot-minus-thief queue-depth gap; hysteresis so two
+    /// near-equal shards do not trade sessions back and forth.
+    pub min_gap: usize,
+    /// Idle-worker poll period: how often a shard with an empty queue
+    /// wakes to look at the board.
+    pub steal_poll: Duration,
+    /// Give up on an unanswered steal request after this long (the hot
+    /// shard answers every request, so this only covers shutdown races).
+    pub steal_timeout: Duration,
+}
+
+impl Default for BalanceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            hot_queue: 8,
+            idle_queue: 2,
+            min_gap: 4,
+            steal_poll: Duration::from_micros(500),
+            steal_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One shard's published load gauges (all relaxed: hints, not truth).
+/// Queue depth and occupancy feed steal planning; the pass EWMA is an
+/// operator/observability gauge (read through `Fabric::board()`), not a
+/// planning input.
+#[derive(Debug, Default)]
+pub struct ShardLoad {
+    /// Jobs waiting in the shard's EDF queue.
+    pub queue_len: AtomicU64,
+    /// Lanes with a resident session (0 = nothing stealable: victims
+    /// must be resident, see the steal-victim filter in `shard.rs`).
+    pub occupancy: AtomicU64,
+    /// EWMA batched-pass time, nanoseconds (0 = no pass measured yet).
+    pub ewma_pass_ns: AtomicU64,
+}
+
+/// Per-fabric board of [`ShardLoad`] gauges.
+#[derive(Debug)]
+pub struct LoadBoard {
+    shards: Vec<ShardLoad>,
+}
+
+impl LoadBoard {
+    pub fn new(shards: usize) -> Self {
+        Self { shards: (0..shards).map(|_| ShardLoad::default()).collect() }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, index: usize) -> &ShardLoad {
+        &self.shards[index]
+    }
+
+    /// Publish one shard's gauges (called by that shard's worker only).
+    pub fn publish(
+        &self,
+        index: usize,
+        queue_len: usize,
+        occupancy: usize,
+        ewma_pass: Option<Duration>,
+    ) {
+        let s = &self.shards[index];
+        s.queue_len.store(queue_len as u64, Ordering::Relaxed);
+        s.occupancy.store(occupancy as u64, Ordering::Relaxed);
+        s.ewma_pass_ns
+            .store(ewma_pass.map(|d| d.as_nanos() as u64).unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// Steal planning for an idle `thief`: returns the hottest shard
+    /// worth stealing from, or `None` when the thief has no slack or no
+    /// shard is hot enough.  Hotness is queue depth, tie-broken by
+    /// occupancy; shards with nothing resident are skipped outright (the
+    /// victim picker only offers resident sessions, so a request there
+    /// could only be declined).  `thief_queue_len`/`thief_free_lanes`
+    /// are the thief's *live* values (fresher than its published
+    /// gauges).
+    pub fn plan_steal(
+        &self,
+        cfg: &BalanceConfig,
+        thief: usize,
+        thief_queue_len: usize,
+        thief_free_lanes: usize,
+    ) -> Option<usize> {
+        if thief_free_lanes == 0 || thief_queue_len > cfg.idle_queue {
+            return None;
+        }
+        let mut best: Option<(usize, u64, u64)> = None;
+        for (i, s) in self.shards.iter().enumerate() {
+            if i == thief {
+                continue;
+            }
+            let depth = s.queue_len.load(Ordering::Relaxed);
+            let occupancy = s.occupancy.load(Ordering::Relaxed);
+            if occupancy == 0
+                || depth < cfg.hot_queue as u64
+                || depth.saturating_sub(thief_queue_len as u64) < cfg.min_gap as u64
+            {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, d, o)) => depth > d || (depth == d && occupancy > o),
+            };
+            if better {
+                best = Some((i, depth, occupancy));
+            }
+        }
+        best.map(|(i, _, _)| i)
+    }
+}
+
+/// Number of route stripes.  Sessions hash uniformly across stripes, so
+/// contention on any one lock is ~1/64 of the submission rate; the lock
+/// is held only for a map lookup plus one queue push.
+const ROUTE_STRIPES: usize = 64;
+
+/// The `session hash -> shard` override table written by migrations and
+/// consulted by every routed operation while rebalancing is enabled.
+#[derive(Debug)]
+pub struct RoutingOverlay {
+    stripes: Vec<Mutex<HashMap<u64, usize>>>,
+    /// Total overrides (stats only — never a routing input).
+    len: AtomicU64,
+}
+
+impl Default for RoutingOverlay {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoutingOverlay {
+    pub fn new() -> Self {
+        Self {
+            stripes: (0..ROUTE_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            len: AtomicU64::new(0),
+        }
+    }
+
+    fn stripe(&self, session: u64) -> &Mutex<HashMap<u64, usize>> {
+        &self.stripes[(session % ROUTE_STRIPES as u64) as usize]
+    }
+
+    /// Lock the stripe guarding `session`'s route.  The caller performs
+    /// its route lookup AND the dependent queue operation while holding
+    /// the guard — that pairing is the migration ordering invariant.
+    pub fn lock_route(&self, session: u64) -> MutexGuard<'_, HashMap<u64, usize>> {
+        self.stripe(session).lock().unwrap()
+    }
+
+    /// Route for `session` under an already-held stripe guard.
+    pub fn route_in(
+        guard: &MutexGuard<'_, HashMap<u64, usize>>,
+        session: u64,
+        shards: usize,
+    ) -> usize {
+        guard.get(&session).copied().unwrap_or_else(|| shard_of(session, shards))
+    }
+
+    /// Install (or move) an override under an already-held stripe guard.
+    pub fn set_in(
+        &self,
+        guard: &mut MutexGuard<'_, HashMap<u64, usize>>,
+        session: u64,
+        shard: usize,
+    ) {
+        if guard.insert(session, shard).is_none() {
+            self.len.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current route for `session` (takes and drops the stripe lock —
+    /// stats/tests; the serving path uses [`Self::lock_route`]).
+    pub fn route_of(&self, session: u64, shards: usize) -> usize {
+        Self::route_in(&self.lock_route(session), session, shards)
+    }
+
+    /// Number of installed overrides.
+    pub fn overrides(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_publishes_and_plans_steals() {
+        let cfg = BalanceConfig { enabled: true, ..Default::default() };
+        let board = LoadBoard::new(3);
+        // Nothing published yet: no shard is hot.
+        assert_eq!(board.plan_steal(&cfg, 1, 0, 4), None);
+        board.publish(0, 12, 4, Some(Duration::from_micros(30)));
+        board.publish(2, 9, 4, None);
+        // Shard 1 is idle with free lanes: steals from the hottest (0).
+        assert_eq!(board.plan_steal(&cfg, 1, 0, 4), Some(0));
+        // A thief with no free lanes, or with queued work of its own,
+        // has no slack.
+        assert_eq!(board.plan_steal(&cfg, 1, 0, 0), None);
+        assert_eq!(board.plan_steal(&cfg, 1, cfg.idle_queue + 1, 4), None);
+        // A deep queue with NOTHING resident offers no stealable session
+        // (victims must be resident) — skip it rather than get declined.
+        board.publish(0, 12, 0, None);
+        assert_eq!(board.plan_steal(&cfg, 1, 0, 4), Some(2), "occupancy gate");
+        // Once the hot shard drains (and itself looks for work), only
+        // genuinely hot peers qualify — and never the thief itself.
+        board.publish(0, 0, 4, None);
+        board.publish(2, 3, 4, None);
+        assert_eq!(board.plan_steal(&cfg, 0, 0, 4), None, "no other shard is hot");
+    }
+
+    #[test]
+    fn steal_threshold_and_hysteresis() {
+        let cfg = BalanceConfig {
+            enabled: true,
+            hot_queue: 8,
+            idle_queue: 2,
+            min_gap: 4,
+            ..Default::default()
+        };
+        let board = LoadBoard::new(3);
+        board.publish(0, 7, 2, None);
+        // Below the hot threshold: leave it alone.
+        assert_eq!(board.plan_steal(&cfg, 1, 0, 4), None);
+        board.publish(0, 8, 2, None);
+        assert_eq!(board.plan_steal(&cfg, 1, 0, 4), Some(0));
+        // Equal depths tie-break toward the higher occupancy (more
+        // resident sessions = more to steal).
+        board.publish(2, 8, 6, None);
+        assert_eq!(board.plan_steal(&cfg, 1, 0, 4), Some(2));
+        board.publish(2, 0, 0, None);
+        // Hysteresis: an 8-deep shard must not steal from a 10-deep one.
+        board.publish(0, 10, 2, None);
+        assert_eq!(board.plan_steal(&cfg, 1, 8, 4), None, "idle_queue gate");
+        let loose = BalanceConfig { idle_queue: 99, ..cfg.clone() };
+        assert_eq!(board.plan_steal(&loose, 1, 8, 4), None, "min_gap gate");
+        assert_eq!(board.plan_steal(&loose, 1, 6, 4), Some(0));
+    }
+
+    #[test]
+    fn overlay_overrides_default_routing() {
+        let o = RoutingOverlay::new();
+        let (shards, session) = (4, 0xDEAD_BEEFu64);
+        let default = shard_of(session, shards);
+        assert_eq!(o.route_of(session, shards), default);
+        assert_eq!(o.overrides(), 0);
+        let target = (default + 1) % shards;
+        {
+            let mut g = o.lock_route(session);
+            o.set_in(&mut g, session, target);
+        }
+        assert_eq!(o.route_of(session, shards), target);
+        assert_eq!(o.overrides(), 1);
+        // Re-pointing an existing override does not double-count.
+        {
+            let mut g = o.lock_route(session);
+            o.set_in(&mut g, session, default);
+        }
+        assert_eq!(o.route_of(session, shards), default);
+        assert_eq!(o.overrides(), 1);
+        // Unrelated sessions keep their default placement.
+        for s in 0..32u64 {
+            if s != session {
+                assert_eq!(o.route_of(s, shards), shard_of(s, shards));
+            }
+        }
+    }
+}

@@ -20,6 +20,7 @@ use crate::coordinator::watchdog::{WatchdogConfig, WatchdogEvent};
 use crate::kernel::PackedModel;
 use crate::lstm::LstmParams;
 
+use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::metrics::{SchedMetrics, SchedSnapshot};
 use super::queue::{Control, Job, PushOutcome, ShardQueue, ShedPolicy};
 use super::session::{session_hash, shard_of};
@@ -45,6 +46,9 @@ pub struct FabricConfig {
     pub datapath: DatapathKind,
     /// Per-lane watchdog tuning.
     pub watchdog: WatchdogConfig,
+    /// Hot-shard rebalancing (cross-shard work stealing with live
+    /// session migration); disabled by default.
+    pub balance: BalanceConfig,
 }
 
 impl FabricConfig {
@@ -58,6 +62,7 @@ impl FabricConfig {
             shed: ShedPolicy::Reject,
             datapath: DatapathKind::Float,
             watchdog: WatchdogConfig::default(),
+            balance: BalanceConfig::default(),
         }
     }
 }
@@ -133,6 +138,10 @@ pub struct Fabric {
     queues: Vec<Arc<ShardQueue>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     metrics: Arc<SchedMetrics>,
+    /// `session hash -> shard` overrides installed by migrations.
+    overlay: Arc<RoutingOverlay>,
+    /// Per-shard load gauges feeding steal planning.
+    board: Arc<LoadBoard>,
 }
 
 impl Fabric {
@@ -148,9 +157,15 @@ impl Fabric {
             }
         };
         let metrics = Arc::new(SchedMetrics::new(cfg.shards));
-        let mut queues = Vec::with_capacity(cfg.shards);
+        let overlay = Arc::new(RoutingOverlay::new());
+        let board = Arc::new(LoadBoard::new(cfg.shards));
+        // Every queue exists before any worker spawns: workers hold the
+        // full peer list so steal requests and migrations can cross.
+        let queues: Vec<Arc<ShardQueue>> = (0..cfg.shards)
+            .map(|_| Arc::new(ShardQueue::new(cfg.queue_depth, cfg.shed)))
+            .collect();
         let mut workers = Vec::with_capacity(cfg.shards);
-        for index in 0..cfg.shards {
+        for (index, queue) in queues.iter().enumerate() {
             let core = match cfg.datapath {
                 DatapathKind::Float => {
                     ShardCore::new_float(packed.clone(), cfg.batch, cfg.watchdog.clone())
@@ -159,11 +174,14 @@ impl Fabric {
                     ShardCore::new_fixed(packed.clone(), fmt, cfg.batch, cfg.watchdog.clone())
                 }
             };
-            let queue = Arc::new(ShardQueue::new(cfg.queue_depth, cfg.shed));
             let ctx = ShardWorkerCtx {
                 index,
                 queue: queue.clone(),
+                peers: queues.clone(),
                 metrics: metrics.clone(),
+                board: board.clone(),
+                overlay: overlay.clone(),
+                balance: cfg.balance.clone(),
                 batch: cfg.batch,
                 gather_floor: Duration::from_micros(5),
                 gather_cap: Duration::from_secs_f64(cfg.gather_cap_us.max(0.0) * 1e-6),
@@ -174,9 +192,8 @@ impl Fabric {
                     .spawn(move || run_worker(core, ctx))
                     .context("spawning shard worker")?,
             );
-            queues.push(queue);
         }
-        Ok(Self { cfg, name, queues, workers: Mutex::new(workers), metrics })
+        Ok(Self { cfg, name, queues, workers: Mutex::new(workers), metrics, overlay, board })
     }
 
     pub fn name(&self) -> &'static str {
@@ -191,9 +208,41 @@ impl Fabric {
         &self.cfg
     }
 
-    /// Which shard a session name routes to (stable across reconnects).
+    /// Which shard a session name routes to (stable across reconnects;
+    /// includes any rebalance override — see [`Self::route_of`]).
     pub fn shard_for(&self, session: &str) -> usize {
-        shard_of(session_hash(session), self.shards())
+        self.route_of(session_hash(session))
+    }
+
+    /// Current route for a session hash: the migration overlay when an
+    /// override exists, the stable `hash % shards` placement otherwise.
+    pub fn route_of(&self, session: u64) -> usize {
+        if self.cfg.balance.enabled {
+            self.overlay.route_of(session, self.shards())
+        } else {
+            shard_of(session, self.shards())
+        }
+    }
+
+    /// Run one queue operation against the session's routed shard.
+    /// With rebalancing enabled the route lookup and the operation
+    /// happen under the session's route-stripe lock — THE invariant the
+    /// migration linearizability proof rests on (docs/SCHED.md): the
+    /// operation lands either wholly before a concurrent hand-off (and
+    /// is drained with it) or wholly after (and reaches the new shard,
+    /// behind the Adopt already queued there).  Every routed operation
+    /// (submit, reset, directed migrate) must go through here.
+    fn with_route<R>(&self, session: u64, op: impl FnOnce(usize, &ShardQueue) -> R) -> R {
+        if self.cfg.balance.enabled {
+            let guard = self.overlay.lock_route(session);
+            let shard = RoutingOverlay::route_in(&guard, session, self.shards());
+            let out = op(shard, &self.queues[shard]);
+            drop(guard);
+            out
+        } else {
+            let shard = shard_of(session, self.shards());
+            op(shard, &self.queues[shard])
+        }
     }
 
     /// Submit one window for `session`.  Returns immediately with a
@@ -226,8 +275,8 @@ impl Fabric {
             deadline: now + Duration::from_secs_f64(budget * 1e-6),
             reply: tx,
         };
-        let shard = shard_of(session, self.shards());
-        match self.queues[shard].push(job) {
+        let (shard, outcome) = self.with_route(session, |shard, q| (shard, q.push(job)));
+        match outcome {
             PushOutcome::Admitted => Ok(Pending { rx }),
             PushOutcome::AdmittedEvicting(victim) => {
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
@@ -262,9 +311,38 @@ impl Fabric {
     }
 
     /// [`Self::reset_session`] with a pre-computed session hash (the
-    /// binary wire path validates + hashes once at the edge).
+    /// binary wire path validates + hashes once at the edge).  Routed
+    /// like submissions, so a reset follows a migrated session.
     pub fn reset_hashed(&self, hash: u64) {
-        self.queues[shard_of(hash, self.shards())].push_control(Control::ResetSession(hash));
+        self.with_route(hash, |_, q| q.push_control(Control::ResetSession(hash)));
+    }
+
+    /// Directed session migration (operator tooling and the rebalance
+    /// test suite; load-driven stealing uses the same machinery).  Asks
+    /// the session's current shard to hand it — exported lane state plus
+    /// queued jobs — to `target`; asynchronous, ordering-safe at any
+    /// point in the stream.  No-op when rebalancing is disabled.
+    pub fn migrate_session(&self, session: &str, target: usize) -> Result<()> {
+        anyhow::ensure!(target < self.shards(), "target shard {target} out of range");
+        anyhow::ensure!(
+            self.cfg.balance.enabled,
+            "session migration requires rebalancing (FabricConfig.balance.enabled)"
+        );
+        let hash = session_hash(session);
+        self.with_route(hash, |_, q| {
+            q.push_control(Control::Migrate { session: hash, to: target })
+        });
+        Ok(())
+    }
+
+    /// Rebalance observability: installed routing overrides.
+    pub fn route_overrides(&self) -> u64 {
+        self.overlay.overrides()
+    }
+
+    /// The per-shard load board (tests, ops dashboards).
+    pub fn board(&self) -> &LoadBoard {
+        &self.board
     }
 
     pub fn metrics(&self) -> &SchedMetrics {
@@ -428,6 +506,77 @@ mod tests {
         let snap = fabric.snapshot();
         assert_eq!(snap.completed, done);
         assert_eq!(snap.completed + snap.shed, snap.submitted);
+    }
+
+    /// Directed migration end to end: state moves, the overlay routes
+    /// future work (and resets) to the new shard, estimates stay
+    /// bit-identical to an unmigrated serial stream (the full property
+    /// suite lives in rust/tests/sched_rebalance.rs).
+    #[test]
+    fn directed_migration_moves_state_and_routing() {
+        use crate::kernel::{FloatPath, ScalarKernel};
+        let p = params();
+        let mut cfg = FabricConfig::new(3, 2);
+        cfg.balance.enabled = true;
+        cfg.watchdog = WatchdogConfig {
+            min_m: -1e12,
+            max_m: 1e12,
+            max_slew_m_s: 1e15,
+            stuck_after: 1 << 30,
+            ..Default::default()
+        };
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        let mut rng = Rng::new(64);
+        let mut history: Vec<([f32; INPUT_SIZE], f64)> = Vec::new();
+        let mut step = |fabric: &Fabric, history: &mut Vec<_>, rng: &mut Rng| {
+            let w = window(rng);
+            let c = fabric.infer("mig", &w).unwrap();
+            history.push((w, c.estimate));
+            c
+        };
+        let home = step(&fabric, &mut history, &mut rng).shard;
+        assert_eq!(home, fabric.shard_for("mig"));
+        let target = (home + 1) % fabric.shards();
+        fabric.migrate_session("mig", target).unwrap();
+        // Migration is asynchronous; keep streaming until it lands.
+        let mut moved = false;
+        for _ in 0..200 {
+            if step(&fabric, &mut history, &mut rng).shard == target {
+                moved = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(moved, "session never reached shard {target}");
+        assert_eq!(fabric.shard_for("mig"), target, "overlay must follow the session");
+        assert!(fabric.route_overrides() >= 1);
+        let snap = fabric.snapshot();
+        assert_eq!(snap.migrations, 1);
+        assert_eq!(snap.shards[home].exported, 1);
+        assert_eq!(snap.shards[target].adopted, 1);
+        // Every estimate — before, during, and after the migration —
+        // must match one uninterrupted serial stream bit for bit, and
+        // the migrated state must continue that stream.
+        let mut reference = ScalarKernel::new(PackedModel::shared(&p), FloatPath);
+        for (k, (w, got)) in history.iter().enumerate() {
+            let want = reference.step_window(&w[..]);
+            assert_eq!(*got, want, "estimate diverged at step {k} across the migration");
+        }
+        for _ in 0..5 {
+            let w = window(&mut rng);
+            let want = reference.step_window(&w[..]);
+            let got = fabric.infer("mig", &w).unwrap();
+            assert_eq!(got.estimate, want, "post-migration state must continue the stream");
+            assert_eq!(got.shard, target);
+        }
+        // A reset follows the migrated session to its new shard.
+        fabric.reset_session("mig");
+        let w = [0.75f32; INPUT_SIZE];
+        let mut fresh = ScalarKernel::new(PackedModel::shared(&p), FloatPath);
+        let want = fresh.step_window(&w[..]);
+        let got = fabric.infer("mig", &w).unwrap();
+        assert_eq!(got.estimate, want, "reset must zero the migrated lane");
+        assert_eq!(got.shard, target);
     }
 
     #[test]

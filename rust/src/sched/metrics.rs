@@ -84,9 +84,15 @@ pub struct ShardMetrics {
     pub batched_requests: AtomicU64,
     /// Sessions evicted from a lane to admit a new session.
     pub evictions: AtomicU64,
-    /// Gauge: lanes with a resident session after the last pass.
+    /// Sessions this shard handed away to a rebalance steal.
+    pub exported: AtomicU64,
+    /// Sessions this shard claimed from a hot peer.
+    pub adopted: AtomicU64,
+    /// Gauge: lanes with a resident session after the last pass
+    /// (updated on failed passes too — stale gauges after an error
+    /// would lie in `hrd serve-tcp` stats).
     pub occupancy: AtomicU64,
-    /// Gauge: queue length after the last pass.
+    /// Gauge: queue length after the last pass (ditto).
     pub queue_len: AtomicU64,
 }
 
@@ -103,6 +109,13 @@ pub struct SchedMetrics {
     pub watchdog_patched: AtomicU64,
     /// Per-lane recurrent-state resets requested by a watchdog.
     pub watchdog_resets: AtomicU64,
+    /// Steal requests issued by idle shards.
+    pub steal_requests: AtomicU64,
+    /// Steal requests the hot shard declined (pressure gone / nothing
+    /// queued by the time it looked).
+    pub steals_declined: AtomicU64,
+    /// Sessions migrated between shards (live state + queued jobs).
+    pub migrations: AtomicU64,
     latency: AtomicHist,
     shards: Vec<ShardMetrics>,
 }
@@ -116,6 +129,9 @@ impl SchedMetrics {
             deadline_misses: AtomicU64::new(0),
             watchdog_patched: AtomicU64::new(0),
             watchdog_resets: AtomicU64::new(0),
+            steal_requests: AtomicU64::new(0),
+            steals_declined: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
             latency: AtomicHist::for_latency(),
             shards: (0..shards).map(|_| ShardMetrics::default()).collect(),
         }
@@ -145,6 +161,9 @@ impl SchedMetrics {
             deadline_misses: misses,
             watchdog_patched: self.watchdog_patched.load(Ordering::Relaxed),
             watchdog_resets: self.watchdog_resets.load(Ordering::Relaxed),
+            steal_requests: self.steal_requests.load(Ordering::Relaxed),
+            steals_declined: self.steals_declined.load(Ordering::Relaxed),
+            migrations: self.migrations.load(Ordering::Relaxed),
             p50_us: self.latency.quantile(0.50),
             p99_us: self.latency.quantile(0.99),
             p999_us: self.latency.quantile(0.999),
@@ -159,6 +178,8 @@ impl SchedMetrics {
                         completed: s.completed.load(Ordering::Relaxed),
                         batches,
                         evictions: s.evictions.load(Ordering::Relaxed),
+                        exported: s.exported.load(Ordering::Relaxed),
+                        adopted: s.adopted.load(Ordering::Relaxed),
                         avg_batch_fill: if batches == 0 {
                             0.0
                         } else {
@@ -179,6 +200,8 @@ pub struct ShardSnapshot {
     pub completed: u64,
     pub batches: u64,
     pub evictions: u64,
+    pub exported: u64,
+    pub adopted: u64,
     pub avg_batch_fill: f64,
     pub occupancy: u64,
     pub queue_len: u64,
@@ -190,6 +213,8 @@ impl ShardSnapshot {
             ("completed", Json::from(self.completed as f64)),
             ("batches", Json::from(self.batches as f64)),
             ("evictions", Json::from(self.evictions as f64)),
+            ("exported", Json::from(self.exported as f64)),
+            ("adopted", Json::from(self.adopted as f64)),
             ("avg_batch_fill", Json::from(self.avg_batch_fill)),
             ("occupancy", Json::from(self.occupancy as f64)),
             ("queue_len", Json::from(self.queue_len as f64)),
@@ -207,6 +232,9 @@ pub struct SchedSnapshot {
     pub deadline_misses: u64,
     pub watchdog_patched: u64,
     pub watchdog_resets: u64,
+    pub steal_requests: u64,
+    pub steals_declined: u64,
+    pub migrations: u64,
     pub p50_us: f64,
     pub p99_us: f64,
     pub p999_us: f64,
@@ -226,6 +254,9 @@ impl SchedSnapshot {
             ("deadline_miss_rate", Json::from(self.miss_rate)),
             ("watchdog_patched", Json::from(self.watchdog_patched as f64)),
             ("watchdog_resets", Json::from(self.watchdog_resets as f64)),
+            ("steal_requests", Json::from(self.steal_requests as f64)),
+            ("steals_declined", Json::from(self.steals_declined as f64)),
+            ("migrations", Json::from(self.migrations as f64)),
             ("p50_us", Json::from(self.p50_us)),
             ("p99_us", Json::from(self.p99_us)),
             ("p999_us", Json::from(self.p999_us)),
@@ -288,6 +319,30 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("inferred").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("shards").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// Rebalance counters flow into the snapshot and the stats JSON —
+    /// the `hrd serve-tcp` stats surface for migrations.
+    #[test]
+    fn rebalance_counters_surface_in_snapshot_and_json() {
+        let m = SchedMetrics::new(2);
+        m.steal_requests.fetch_add(3, Ordering::Relaxed);
+        m.steals_declined.fetch_add(1, Ordering::Relaxed);
+        m.migrations.fetch_add(2, Ordering::Relaxed);
+        m.shard(0).exported.fetch_add(2, Ordering::Relaxed);
+        m.shard(1).adopted.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.steal_requests, 3);
+        assert_eq!(s.steals_declined, 1);
+        assert_eq!(s.migrations, 2);
+        assert_eq!(s.shards[0].exported, 2);
+        assert_eq!(s.shards[1].adopted, 2);
+        let j = s.to_json();
+        assert_eq!(j.get("migrations").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("steal_requests").unwrap().as_f64(), Some(3.0));
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards[0].get("exported").unwrap().as_f64(), Some(2.0));
+        assert_eq!(shards[1].get("adopted").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

@@ -56,17 +56,27 @@
 //!   observed inter-arrival EWMA so idle shards never stall a lone
 //!   request.
 //!
+//! * **rebalancing** (opt-in: `serve-tcp --rebalance` / `[sched]
+//!   rebalance`) — FNV placement is uniform over names, not load; when a
+//!   skewed session population saturates one shard while siblings idle,
+//!   idle shards steal whole *sessions* (exported lane state + queued
+//!   jobs) from hot ones and a routing overlay redirects future arrivals
+//!   — see [`balance`] and `docs/SCHED.md` for the protocol and its
+//!   ordering invariants.
+//!
 //! Entry points: [`Fabric::new`] / [`Fabric::submit`] /
 //! [`Fabric::snapshot`]; `hrd serve-tcp --shards N --batch B` serves it
 //! over TCP and `hrd loadgen` (see [`crate::bench::serving`]) measures
 //! it against the serial baseline.
 
+pub mod balance;
 pub mod fabric;
 pub mod metrics;
 pub mod queue;
 pub mod session;
 pub mod shard;
 
+pub use balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 pub use fabric::{Completion, Fabric, FabricConfig, Pending, Shed};
 pub use metrics::{AtomicHist, SchedMetrics, SchedSnapshot, ShardSnapshot};
 pub use queue::ShedPolicy;

@@ -48,6 +48,30 @@ pub struct QueuedJob {
     pub job: Job,
 }
 
+/// A whole session handed across shards by the rebalancer: the source
+/// shard's exported lane state plus every window of that session still
+/// queued there, in EDF order (see `docs/SCHED.md` for the protocol).
+#[derive(Debug)]
+pub struct StolenSession {
+    /// Routing hash of the migrated session.
+    pub session: u64,
+    /// Exported `(h, c)` lane state; `None` means the session starts
+    /// fresh on the target (it was not resident on the source, or a
+    /// reset was pending — a reset's whole point is a zero state).
+    pub state: Option<Vec<f64>>,
+    /// The session's queued-but-unserved jobs, oldest first.
+    pub jobs: Vec<Job>,
+}
+
+/// Answer to a [`Control::StealRequest`] / [`Control::Migrate`].
+#[derive(Debug)]
+pub struct Migration {
+    /// `None`: the source shard declined (no longer hot, or nothing
+    /// worth stealing) — the thief clears its outstanding-steal latch
+    /// and may try elsewhere.
+    pub stolen: Option<StolenSession>,
+}
+
 /// Out-of-band worker commands (never shed, never EDF-ordered; processed
 /// before jobs).
 #[derive(Debug)]
@@ -55,6 +79,14 @@ pub enum Control {
     /// Zero the recurrent state of one session's lane (new monitoring
     /// session on that channel).
     ResetSession(u64),
+    /// An idle shard (`thief`) asks this shard to hand over one hot
+    /// session.  Answered with exactly one [`Control::Adopt`].
+    StealRequest { thief: usize },
+    /// Directed migration (tests / operator tooling): move `session` to
+    /// shard `to` regardless of load.
+    Migrate { session: u64, to: usize },
+    /// A migrated session arriving at its new shard.
+    Adopt(Box<Migration>),
 }
 
 /// What a full queue does with a new arrival.
@@ -143,6 +175,13 @@ impl ShardQueue {
         self.len() == 0
     }
 
+    /// Whether [`Self::close`] has run (a timed `pop` returning `None`
+    /// is ambiguous between "idle" and "shutting down"; the balance-mode
+    /// worker loop needs to tell them apart).
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
     /// Try to admit a job.
     pub fn push(&self, job: Job) -> PushOutcome {
         let mut g = self.inner.lock().unwrap();
@@ -178,15 +217,20 @@ impl ShardQueue {
         outcome
     }
 
-    /// Enqueue a worker command (exempt from depth/shedding).
-    pub fn push_control(&self, control: Control) {
+    /// Enqueue a worker command (exempt from depth/shedding).  A closed
+    /// queue hands the control BACK (`Some`) instead of dropping it —
+    /// a migration racing shutdown must shed its jobs explicitly (the
+    /// "admitted jobs are always completed or shed" invariant), not
+    /// leak them into dropped reply channels.
+    pub fn push_control(&self, control: Control) -> Option<Control> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return;
+            return Some(control);
         }
         g.controls.push_back(control);
         drop(g);
         self.cv.notify_one();
+        None
     }
 
     /// Put deferred jobs back under their original keys (worker-side,
@@ -236,14 +280,126 @@ impl ShardQueue {
         }
     }
 
+    /// Remove every queued job of `session` (EDF order preserved) and
+    /// any pending [`Control::ResetSession`] for it — the source-shard
+    /// half of a migration, called under the session's route-stripe
+    /// lock.  Returns the jobs plus whether a reset was pending (a
+    /// pending reset migrates as "start fresh": controls preempt jobs,
+    /// so it would have zeroed the lane before any of them ran).
+    pub fn take_session(&self, session: u64) -> (Vec<Job>, bool) {
+        let mut g = self.inner.lock().unwrap();
+        let keys: Vec<(Instant, u64)> = g
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.session == session)
+            .map(|(k, _)| *k)
+            .collect();
+        let jobs = keys
+            .iter()
+            .map(|k| g.jobs.remove(k).expect("key just observed"))
+            .collect();
+        let before = g.controls.len();
+        g.controls
+            .retain(|c| !matches!(c, Control::ResetSession(s) if *s == session));
+        (jobs, g.controls.len() != before)
+    }
+
+    /// Adopt migrated jobs at the target shard: any same-session jobs
+    /// that raced in ahead of the Adopt control are extracted and
+    /// re-keyed AFTER the migrated ones (they were submitted after the
+    /// route flipped, i.e. after every migrated job), so per-session
+    /// order survives even with identical deadlines.  Migrated jobs
+    /// bypass depth/shedding — they were admitted once already, and
+    /// admission control is the only place requests may be dropped.  On
+    /// a closed queue the jobs are handed back for the caller to shed.
+    pub fn adopt_session(&self, session: u64, migrated: Vec<Job>) -> Vec<Job> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return migrated;
+        }
+        let raced: Vec<(Instant, u64)> = g
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.session == session)
+            .map(|(k, _)| *k)
+            .collect();
+        let raced: Vec<Job> = raced
+            .iter()
+            .map(|k| g.jobs.remove(k).expect("key just observed"))
+            .collect();
+        let n = migrated.len();
+        for job in migrated.into_iter().chain(raced) {
+            let key = (job.deadline, g.seq);
+            g.seq += 1;
+            g.jobs.insert(key, job);
+        }
+        drop(g);
+        if n > 0 {
+            self.cv.notify_one();
+        }
+        Vec::new()
+    }
+
+    /// The `eligible` queued session with the most waiting jobs
+    /// (EDF-earliest on ties) — the steal victim heuristic: moving it
+    /// sheds the most queue pressure in one migration.  The caller's
+    /// eligibility filter matters for correctness, not just policy: the
+    /// worker only offers sessions RESIDENT in its lane table, because a
+    /// session with queued jobs but no lane may be mid-adoption (its
+    /// state still inside an unpopped Adopt control) and migrating it
+    /// would hand over a zeroed lane.
+    pub fn busiest_session<F: Fn(u64) -> bool>(&self, eligible: F) -> Option<(u64, usize)> {
+        let g = self.inner.lock().unwrap();
+        let mut counts: Vec<(u64, usize)> = Vec::new();
+        for job in g.jobs.values() {
+            if !eligible(job.session) {
+                continue;
+            }
+            match counts.iter_mut().find(|(s, _)| *s == job.session) {
+                Some((_, n)) => *n += 1,
+                // First sighting is the EDF-earliest (map iteration is
+                // key order), so `counts` order encodes the tie-break.
+                None => counts.push((job.session, 1)),
+            }
+        }
+        let mut best: Option<(u64, usize)> = None;
+        for (session, n) in counts {
+            if best.map(|(_, bn)| n > bn).unwrap_or(true) {
+                best = Some((session, n));
+            }
+        }
+        best
+    }
+
+    /// Whether an [`Control::Adopt`] for `session` is still queued
+    /// (unpopped).  The migration executor calls this under the
+    /// session's route stripe to detect the mid-adoption window: route
+    /// says the session lives here, but its state is still inside an
+    /// Adopt this worker has not popped — migrating it NOW would export
+    /// a zero lane.
+    pub fn has_pending_adopt(&self, session: u64) -> bool {
+        self.inner.lock().unwrap().controls.iter().any(|c| {
+            matches!(c, Control::Adopt(m)
+                if m.stolen.as_ref().map(|s| s.session) == Some(session))
+        })
+    }
+
     /// Close the queue: subsequent pushes are rejected, blocked pops wake
     /// up, and all still-queued jobs are handed back so the caller can
-    /// complete them as shed.
+    /// complete them as shed.  Jobs travelling inside a queued
+    /// [`Control::Adopt`] are orphans too — dropping the control would
+    /// silently strand their clients.
     pub fn close(&self) -> Vec<Job> {
         let mut g = self.inner.lock().unwrap();
         g.closed = true;
-        let orphans = std::mem::take(&mut g.jobs).into_values().collect();
-        g.controls.clear();
+        let mut orphans: Vec<Job> = std::mem::take(&mut g.jobs).into_values().collect();
+        for control in g.controls.drain(..) {
+            if let Control::Adopt(m) = control {
+                if let Some(stolen) = m.stolen {
+                    orphans.extend(stolen.jobs);
+                }
+            }
+        }
         drop(g);
         self.cv.notify_all();
         orphans
@@ -533,6 +689,124 @@ mod tests {
             admitted.load(Ordering::SeqCst),
             "popped + orphaned must equal admitted (no loss, no duplication)"
         );
+    }
+
+    /// Migration surgery: `take_session` pulls exactly one session's
+    /// jobs (EDF order) plus its pending resets; everything else stays.
+    #[test]
+    fn take_session_extracts_jobs_and_pending_resets() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        for (sess, ms) in [(7u64, 30u64), (9, 10), (7, 20), (9, 40), (7, 25)] {
+            let (mut j, _r) = job(Duration::from_millis(ms));
+            j.session = sess;
+            assert!(matches!(q.push(j), PushOutcome::Admitted));
+            std::mem::forget(_r); // keep reply channels alive for the test
+        }
+        q.push_control(Control::ResetSession(7));
+        q.push_control(Control::ResetSession(9));
+        let (jobs, had_reset) = q.take_session(7);
+        assert!(had_reset);
+        assert_eq!(jobs.len(), 3);
+        // EDF order among the extracted jobs (20ms, 25ms, 30ms).
+        assert!(jobs.windows(2).all(|w| w[0].deadline <= w[1].deadline));
+        assert_eq!(q.len(), 2, "session 9's jobs stay");
+        // Session 9's reset control survives; 7's is gone.
+        assert!(matches!(q.pop(None), Some(Popped::Control(Control::ResetSession(9)))));
+        let (none, had_reset) = q.take_session(7);
+        assert!(none.is_empty() && !had_reset);
+    }
+
+    /// Adoption re-keys migrated jobs AHEAD of same-session jobs that
+    /// raced in after the route flip, even with identical deadlines.
+    #[test]
+    fn adopt_session_orders_migrated_before_raced_jobs() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        let (mut migrated_a, _ra) = job(Duration::from_millis(10));
+        migrated_a.session = 5;
+        let (mut migrated_b, _rb) = job(Duration::from_millis(10));
+        migrated_b.deadline = migrated_a.deadline; // exact tie
+        migrated_b.session = 5;
+        // A same-session job already sitting in the target queue (pushed
+        // after the route flipped, before the Adopt was processed) with
+        // the SAME deadline: seq order alone would run it first.
+        let (mut raced, _rc) = job(Duration::from_millis(10));
+        raced.deadline = migrated_a.deadline;
+        raced.session = 5;
+        raced.window = Box::new([9.0; INPUT_SIZE]); // tag it
+        assert!(matches!(q.push(raced), PushOutcome::Admitted));
+        // An unrelated session's job must be untouched by the surgery.
+        let (mut other, _rd) = job(Duration::from_millis(5));
+        other.session = 6;
+        assert!(matches!(q.push(other), PushOutcome::Admitted));
+        let back = q.adopt_session(5, vec![migrated_a, migrated_b]);
+        assert!(back.is_empty());
+        assert_eq!(q.len(), 4);
+        let mut order = Vec::new();
+        while let Some(Popped::Job(qj)) = q.pop(Some(Duration::from_millis(1))) {
+            order.push((qj.job.session, qj.job.window[0]));
+        }
+        // Session 6 is EDF-earliest; then session 5 in migrated, raced
+        // order (the tagged window last).
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0].0, 6);
+        assert_eq!(order[1], (5, 0.0));
+        assert_eq!(order[2], (5, 0.0));
+        assert_eq!(order[3], (5, 9.0), "raced job must run after the migrated ones");
+    }
+
+    /// Adoption on a closed queue hands the jobs back (the caller sheds
+    /// them) instead of silently dropping them.
+    #[test]
+    fn adopt_on_closed_queue_returns_jobs() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        q.close();
+        let (mut j, _r) = job(Duration::from_millis(1));
+        j.session = 3;
+        let back = q.adopt_session(3, vec![j]);
+        assert_eq!(back.len(), 1);
+        // push_control hands the control back too — a migration racing
+        // shutdown needs the jobs inside to shed them explicitly.
+        let returned = q.push_control(Control::ResetSession(9));
+        assert!(matches!(returned, Some(Control::ResetSession(9))));
+        let q2 = ShardQueue::new(8, ShedPolicy::Reject);
+        assert!(q2.push_control(Control::ResetSession(9)).is_none());
+    }
+
+    #[test]
+    fn busiest_session_picks_max_jobs_edf_tiebreak() {
+        let q = ShardQueue::new(16, ShedPolicy::Reject);
+        assert_eq!(q.busiest_session(|_| true), None);
+        let mut receivers = Vec::new();
+        for (sess, ms) in [(1u64, 50u64), (2, 10), (1, 60), (2, 20), (3, 5)] {
+            let (mut j, r) = job(Duration::from_millis(ms));
+            j.session = sess;
+            q.push(j);
+            receivers.push(r);
+        }
+        // Sessions 1 and 2 tie at two jobs; 2 owns the earliest deadline.
+        assert_eq!(q.busiest_session(|_| true), Some((2, 2)));
+        // The eligibility filter (the worker passes "resident in my lane
+        // table") excludes mid-adoption sessions entirely.
+        assert_eq!(q.busiest_session(|s| s != 2), Some((1, 2)));
+        assert_eq!(q.busiest_session(|_| false), None);
+    }
+
+    /// A queued Adopt's jobs become close() orphans — stranding them
+    /// would leave their clients waiting forever.
+    #[test]
+    fn close_orphans_jobs_inside_adopt_controls() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        let (mut inner, _ri) = job(Duration::from_millis(1));
+        inner.session = 11;
+        q.push_control(Control::Adopt(Box::new(Migration {
+            stolen: Some(StolenSession { session: 11, state: None, jobs: vec![inner] }),
+        })));
+        q.push_control(Control::Adopt(Box::new(Migration { stolen: None })));
+        let (outer, _ro) = job(Duration::from_millis(2));
+        q.push(outer);
+        let orphans = q.close();
+        assert_eq!(orphans.len(), 2, "queued job + the job inside the Adopt");
+        assert!(orphans.iter().any(|j| j.session == 11));
     }
 
     #[test]

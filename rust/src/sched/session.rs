@@ -205,6 +205,15 @@ impl LaneTable {
         self.last_used[lane] = self.tick;
     }
 
+    /// Release `session`'s lane (migration away, explicit teardown).
+    /// Returns the freed lane; the caller is responsible for re-zeroing
+    /// it (`ShardCore::recycle_lane`) before reuse.
+    pub fn remove(&mut self, session: u64) -> Option<usize> {
+        let lane = self.by_session.remove(&session)?;
+        self.resident[lane] = None;
+        Some(lane)
+    }
+
     /// Place `session` on a lane.  `pinned[lane]` marks lanes already
     /// taken by the micro-batch being assembled (not evictable now).
     pub fn assign(&mut self, session: u64, pinned: &[bool]) -> LaneAssign {
@@ -312,6 +321,22 @@ mod tests {
         assert_eq!(t.assign(b, &none), LaneAssign::Fresh(1));
         assert_eq!(t.assign(a, &none), LaneAssign::Resident(0));
         assert_eq!(t.occupancy(), 2);
+    }
+
+    #[test]
+    fn remove_frees_the_lane_for_fresh_assignment() {
+        let mut t = LaneTable::new(2);
+        let none = [false, false];
+        let (a, b, c) = (session_hash("a"), session_hash("b"), session_hash("c"));
+        t.assign(a, &none);
+        t.assign(b, &none);
+        assert_eq!(t.remove(a), Some(0));
+        assert_eq!(t.remove(a), None, "idempotent");
+        assert_eq!(t.occupancy(), 1);
+        assert_eq!(t.lane_of(a), None);
+        // The freed lane is allocated fresh (no eviction needed).
+        assert_eq!(t.assign(c, &none), LaneAssign::Fresh(0));
+        assert_eq!(t.lane_of(b), Some(1), "other residents untouched");
     }
 
     #[test]

@@ -18,10 +18,25 @@
 //!    watchdog, resetting only the offending lane's recurrent state when
 //!    a persistent fault is detected.
 //!
-//! The pass-time and inter-arrival EWMAs are what make the batching
-//! "adaptive": under load the loop converges to full batches (maximum
-//! weight reuse), under trickle traffic it degrades to per-request
-//! dispatch with microseconds of added latency.
+//! Both EWMAs seed from their first real measurement ([`Ewma`]): until a
+//! pass has been timed the gather loop dispatches immediately instead of
+//! betting deadline slack on a made-up pass time, and until two arrivals
+//! have been observed a lone request never waits on a fictional arrival
+//! rate.
+//!
+//! When rebalancing is enabled ([`super::balance`]), the worker also:
+//!
+//! * publishes its queue depth / occupancy / pass EWMA to the fabric's
+//!   [`LoadBoard`] after every pass and on idle polls;
+//! * while idle, plans steals against hot peers and sends them a
+//!   [`Control::StealRequest`];
+//! * answers steal requests **between passes** (never with a batch in
+//!   flight) by draining one whole session — queued jobs + exported lane
+//!   state — and handing it to the thief under the session's route-stripe
+//!   lock (see `docs/SCHED.md` for why that lock makes the hand-off
+//!   linearizable against concurrent submits);
+//! * adopts migrated sessions: fresh lane, imported state, adopted jobs
+//!   re-keyed ahead of any same-session arrivals that raced in.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -34,9 +49,10 @@ use crate::coordinator::watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};
 use crate::fixed::QFormat;
 use crate::kernel::{FixedPath, FloatPath, MultiStream, PackedModel};
 
+use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::fabric::{Completion, Shed};
 use super::metrics::SchedMetrics;
-use super::queue::{Control, Popped, QueuedJob, ShardQueue};
+use super::queue::{Control, Migration, Popped, QueuedJob, ShardQueue, StolenSession};
 use super::session::{LaneAssign, LaneTable};
 
 /// Which numeric datapath a shard's kernel session runs.
@@ -75,6 +91,13 @@ impl ShardEngine {
         match self {
             Self::Float(ms) => ms.drain(|l, y| sink(l, y)),
             Self::Fixed(ms) => ms.drain(|l, y| sink(l, y)),
+        }
+    }
+
+    fn cancel_pending(&mut self) -> usize {
+        match self {
+            Self::Float(ms) => ms.cancel_pending(),
+            Self::Fixed(ms) => ms.cancel_pending(),
         }
     }
 
@@ -174,10 +197,16 @@ impl ShardCore {
     }
 
     /// Advance every listed lane through one batched weight pass and run
-    /// the per-lane watchdogs.  Lanes not listed keep their state.
+    /// the per-lane watchdogs.  Lanes not listed keep their state.  On a
+    /// submit failure every already-queued window of this batch is
+    /// cancelled before returning — a dangling pending window would
+    /// otherwise ride into the NEXT pass and desynchronize that lane.
     pub fn step_batch(&mut self, steps: &[LaneStep]) -> Result<Vec<LaneOutcome>> {
         for s in steps {
-            self.engine.submit(s.lane, &s.window[..])?;
+            if let Err(e) = self.engine.submit(s.lane, &s.window[..]) {
+                self.engine.cancel_pending();
+                return Err(e);
+            }
         }
         let mut raw: Vec<(usize, f64)> = Vec::with_capacity(steps.len());
         self.engine.drain(&mut |lane, y| raw.push((lane, y)));
@@ -218,11 +247,76 @@ impl ShardCore {
     }
 }
 
+// ---- adaptive-gather timing --------------------------------------------
+
+/// Exponentially weighted moving average over durations that seeds from
+/// its FIRST real sample instead of a magic constant.  The old
+/// hard-coded seeds (20 us pass / 50 us arrival) mis-sized the first
+/// gather windows of any shard whose true pass time was far from the
+/// guess — a 200 us model would overcommit its deadline slack for the
+/// first dozen passes while the blend caught up.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct Ewma {
+    val: Option<Duration>,
+}
+
+impl Ewma {
+    pub(crate) fn observe(&mut self, sample: Duration) {
+        self.val = Some(match self.val {
+            // Cold start: the first measurement IS the estimate.
+            None => sample,
+            // 0.8 / 0.2 blend in nanoseconds.
+            Some(prev) => Duration::from_nanos(
+                ((prev.as_nanos() as f64) * 0.8 + (sample.as_nanos() as f64) * 0.2) as u64,
+            ),
+        });
+    }
+
+    pub(crate) fn value(&self) -> Option<Duration> {
+        self.val
+    }
+}
+
+/// How long the gather loop may wait for one more arrival, or `None` to
+/// run the batch now.  `slack` is time-to-earliest-deadline in hand.
+///
+/// * No pass has been measured yet: dispatch immediately.  There is no
+///   basis for reserving pass time, and guessing low risks a deadline
+///   miss on the very first admitted job; the tiny first batch is the
+///   cheapest possible way to obtain a real sample.
+/// * Otherwise reserve the measured pass EWMA off the slack, and bound
+///   the wait by the gather cap and by twice the inter-arrival EWMA
+///   (falling back to the floor before two arrivals have been seen, so
+///   a lone cold-start request is dispatched, not stalled).
+pub(crate) fn gather_wait(
+    slack: Duration,
+    ewma_pass: &Ewma,
+    ewma_arrival: &Ewma,
+    floor: Duration,
+    cap: Duration,
+) -> Option<Duration> {
+    let pass = ewma_pass.value()?;
+    let slack = slack.saturating_sub(pass);
+    if slack <= floor {
+        return None;
+    }
+    let idle_bound = ewma_arrival.value().map(|a| a * 2).unwrap_or(floor).max(floor);
+    Some(slack.min(cap).min(idle_bound))
+}
+
+// ---- the worker --------------------------------------------------------
+
 /// Everything a shard worker thread needs besides its core.
 pub(crate) struct ShardWorkerCtx {
     pub index: usize,
+    /// This shard's own ingress queue (== `peers[index]`).
     pub queue: Arc<ShardQueue>,
+    /// Every shard's queue — steal requests and migrations cross here.
+    pub peers: Vec<Arc<ShardQueue>>,
     pub metrics: Arc<SchedMetrics>,
+    pub board: Arc<LoadBoard>,
+    pub overlay: Arc<RoutingOverlay>,
+    pub balance: BalanceConfig,
     /// Target micro-batch size (== the core's lane count).
     pub batch: usize,
     /// Stop gathering when the most urgent slack drops below this.
@@ -231,54 +325,128 @@ pub(crate) struct ShardWorkerCtx {
     pub gather_cap: Duration,
 }
 
-fn ewma(prev: Duration, sample: Duration) -> Duration {
-    // 0.8 / 0.2 blend in nanoseconds.
-    Duration::from_nanos(
-        ((prev.as_nanos() as f64) * 0.8 + (sample.as_nanos() as f64) * 0.2) as u64,
-    )
-}
-
 fn send_completion(reply: &Sender<Result<Completion, Shed>>, msg: Result<Completion, Shed>) {
     // The submitter may have given up (disconnected client) — that is
     // its business, not an error here.
     let _ = reply.send(msg);
 }
 
-/// Mutable gather-phase state threaded through [`place`].
-struct Gather {
-    /// Jobs slotted into the batch being assembled, with their lane.
-    batch: Vec<(QueuedJob, usize)>,
-    /// Lanes already taken by this batch.
-    pinned: Vec<bool>,
-    /// Jobs pushed back to the queue after this gather (lane conflicts).
-    deferred: Vec<QueuedJob>,
-    last_arrival: Option<Instant>,
-    ewma_arrival: Duration,
+/// A steal the worker has accepted but not yet executed (migrations run
+/// only between passes, when nothing is in flight).
+enum StealTask {
+    /// Load-driven: an idle peer asked for "whatever is hottest".
+    Requested { thief: usize },
+    /// Directed (tests / `Fabric::migrate_session`): a named session to
+    /// a named shard, no pressure check.
+    Directed { session: u64, to: usize },
 }
 
-/// Route one popped queue item: controls act immediately, jobs get a
-/// lane (or are deferred to the next micro-batch).
-fn place(
+/// Worker-local mutable state that survives across gathers.
+#[derive(Default)]
+pub(crate) struct WorkerState {
+    pub(crate) ewma_pass: Ewma,
+    pub(crate) ewma_arrival: Ewma,
+    last_arrival: Option<Instant>,
+    /// When this worker last sent an unanswered steal request.
+    steal_sent_at: Option<Instant>,
+    /// Adoptions that could not get a lane mid-gather (every lane was
+    /// pinned); completed at the next batch boundary.  Jobs of these
+    /// sessions are deferred until the state is imported.
+    pending_adopts: Vec<StolenSession>,
+    /// Steals to execute after the current pass.
+    pending_steals: Vec<StealTask>,
+    /// Sessions whose reset arrived while their lane was pinned in the
+    /// batch being gathered; applied after the pass so the reset is not
+    /// reordered ahead of a job submitted before it.
+    pub(crate) post_pass_resets: Vec<u64>,
+}
+
+/// Mutable gather-phase state.
+pub(crate) struct Gather {
+    /// Jobs slotted into the batch being assembled, with their lane.
+    pub(crate) batch: Vec<(QueuedJob, usize)>,
+    /// Lanes already taken by this batch.
+    pub(crate) pinned: Vec<bool>,
+    /// Jobs pushed back to the queue after this gather (lane conflicts).
+    pub(crate) deferred: Vec<QueuedJob>,
+}
+
+impl Gather {
+    fn new(lanes: usize, batch: usize) -> Self {
+        Self { batch: Vec::with_capacity(batch), pinned: vec![false; lanes], deferred: Vec::new() }
+    }
+}
+
+/// Route one popped queue item: resets act immediately (or are deferred
+/// past the pass when their lane is pinned), steal traffic is staged,
+/// adoptions import state, and jobs get a lane (or are deferred to the
+/// next micro-batch).  `fresh` is false when re-placing a job this
+/// worker already accounted for (deferral retries must not re-feed the
+/// inter-arrival EWMA).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn place(
     popped: Popped,
     core: &mut ShardCore,
     table: &mut LaneTable,
     g: &mut Gather,
+    st: &mut WorkerState,
     ctx: &ShardWorkerCtx,
+    fresh: bool,
 ) {
     match popped {
         Popped::Control(Control::ResetSession(session)) => {
-            if let Some(lane) = table.lane_of(session) {
-                core.recycle_lane(lane);
+            match table.lane_of(session) {
+                // The lane already carries a job gathered for this pass
+                // — a job the client submitted BEFORE the reset.  Zeroing
+                // now would reorder the reset ahead of it; apply after
+                // the pass instead.
+                Some(lane) if g.pinned[lane] => st.post_pass_resets.push(session),
+                Some(lane) => core.recycle_lane(lane),
+                None => {
+                    // The session's adoption may be parked in worker-local
+                    // limbo (Adopt popped with every lane pinned).  The
+                    // reset is ordered AFTER that hand-off — controls are
+                    // FIFO and the Adopt preceded the route flip that let
+                    // this reset reach us — so the migrated warm state
+                    // must land already zeroed: same "a pending reset
+                    // migrates as start-fresh" rule the source side
+                    // applies in `migrate_out`.
+                    if let Some(parked) =
+                        st.pending_adopts.iter_mut().find(|a| a.session == session)
+                    {
+                        parked.state = None;
+                    }
+                }
+            }
+        }
+        Popped::Control(Control::StealRequest { thief }) => {
+            st.pending_steals.push(StealTask::Requested { thief });
+        }
+        Popped::Control(Control::Migrate { session, to }) => {
+            st.pending_steals.push(StealTask::Directed { session, to });
+        }
+        Popped::Control(Control::Adopt(m)) => {
+            st.steal_sent_at = None;
+            if let Some(stolen) = m.stolen {
+                try_adopt(core, table, ctx, &g.pinned, st, stolen);
             }
         }
         Popped::Job(qj) => {
-            // Inter-arrival EWMA from submit timestamps.
-            if let Some(prev) = g.last_arrival {
-                if let Some(gap) = qj.job.enqueued.checked_duration_since(prev) {
-                    g.ewma_arrival = ewma(g.ewma_arrival, gap);
+            if fresh {
+                // Inter-arrival EWMA from submit timestamps.
+                if let Some(prev) = st.last_arrival {
+                    if let Some(gap) = qj.job.enqueued.checked_duration_since(prev) {
+                        st.ewma_arrival.observe(gap);
+                    }
                 }
+                st.last_arrival = Some(qj.job.enqueued);
             }
-            g.last_arrival = Some(qj.job.enqueued);
+            // A session whose adoption is still waiting for a lane must
+            // not run before its migrated state lands.
+            if st.pending_adopts.iter().any(|a| a.session == qj.job.session) {
+                g.deferred.push(qj);
+                return;
+            }
             match table.assign(qj.job.session, &g.pinned) {
                 LaneAssign::Resident(lane) => {
                     if g.pinned[lane] {
@@ -309,30 +477,348 @@ fn place(
     }
 }
 
+/// Land a migrated session on a lane: fresh state + fresh watchdog
+/// first (migration deliberately restarts watchdog history — a stuck
+/// detector re-arms, never fires spuriously), then the exported state,
+/// then the migrated jobs, re-keyed ahead of any same-session arrivals
+/// that raced in after the route flipped.
+fn try_adopt(
+    core: &mut ShardCore,
+    table: &mut LaneTable,
+    ctx: &ShardWorkerCtx,
+    pinned: &[bool],
+    st: &mut WorkerState,
+    stolen: StolenSession,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let lane = match table.assign(stolen.session, pinned) {
+        LaneAssign::Resident(lane) | LaneAssign::Fresh(lane) => lane,
+        LaneAssign::Evicted { lane, .. } => {
+            ctx.metrics.shard(ctx.index).evictions.fetch_add(1, Relaxed);
+            lane
+        }
+        // Every lane is pinned by the batch being gathered; finish at
+        // the next batch boundary.  Jobs of this session are deferred
+        // by `place` until then.
+        LaneAssign::Full => {
+            st.pending_adopts.push(stolen);
+            return;
+        }
+    };
+    core.recycle_lane(lane);
+    if let Some(state) = &stolen.state {
+        core.import_lane(lane, state);
+    }
+    for job in ctx.queue.adopt_session(stolen.session, stolen.jobs) {
+        // Own queue already closed (shutdown race): shed, never strand.
+        ctx.metrics.shed.fetch_add(1, Relaxed);
+        send_completion(&job.reply, Err(Shed::Shutdown));
+    }
+    ctx.metrics.shard(ctx.index).adopted.fetch_add(1, Relaxed);
+}
+
+/// Complete adoptions that were blocked on a pinned-out lane table; at a
+/// batch boundary (nothing pinned) this always succeeds.
+fn flush_pending_adopts(
+    core: &mut ShardCore,
+    table: &mut LaneTable,
+    ctx: &ShardWorkerCtx,
+    st: &mut WorkerState,
+) {
+    if st.pending_adopts.is_empty() {
+        return;
+    }
+    let none_pinned = vec![false; table.lanes()];
+    for stolen in std::mem::take(&mut st.pending_adopts) {
+        try_adopt(core, table, ctx, &none_pinned, st, stolen);
+    }
+}
+
+/// Hand one whole session to `target`: override the route, drain the
+/// session's queued jobs, export (and free) its lane — all under the
+/// session's route-stripe lock, so every concurrent submit lands either
+/// wholly before the hand-off (and is drained with it) or wholly after
+/// (and routes to the target behind the Adopt already in its queue).
+fn migrate_out(
+    core: &mut ShardCore,
+    table: &mut LaneTable,
+    ctx: &ShardWorkerCtx,
+    st: &mut WorkerState,
+    session: u64,
+    target: usize,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut guard = ctx.overlay.lock_route(session);
+    if RoutingOverlay::route_in(&guard, session, ctx.peers.len()) != ctx.index {
+        // Stale hand-off: the session no longer routes here (a directed
+        // Migrate control can outlive a concurrent migration that moved
+        // the session away).  Executing it would install an override to
+        // a lane holding ZERO state while the live state sits on the
+        // session's real shard — drop the request instead.
+        return;
+    }
+    let mid_adoption = table.lane_of(session).is_none()
+        && (ctx.queue.has_pending_adopt(session)
+            // An Adopt that popped while every lane was pinned waits in
+            // worker-local limbo until the next batch boundary — it is
+            // no longer visible in the queue, but the session's live
+            // state is still in flight all the same.
+            || st.pending_adopts.iter().any(|a| a.session == session));
+    if mid_adoption {
+        // Mid-adoption: the session routes here, but its live state has
+        // not landed on a lane yet.  Exporting now would hand over a
+        // zeroed lane.  Re-queue the move behind the in-flight adoption
+        // (queued Adopts are FIFO-ahead of the re-push; parked ones are
+        // flushed at the top of the next iteration, before any pop) and
+        // execute it once the state has landed.  Because route == here
+        // under the stripe, the adoption is guaranteed to already be in
+        // flight locally — flip and hand-off happen in one stripe
+        // critical section — so this defers at most once per adoption.
+        drop(guard);
+        ctx.queue.push_control(Control::Migrate { session, to: target });
+        return;
+    }
+    if target == ctx.index {
+        // Directed no-op move: pin the route here and be done.
+        ctx.overlay.set_in(&mut guard, session, target);
+        return;
+    }
+    ctx.overlay.set_in(&mut guard, session, target);
+    let (jobs, had_reset) = ctx.queue.take_session(session);
+    let mut state = None;
+    if let Some(lane) = table.remove(session) {
+        // A pending reset migrates as "start fresh" — controls preempt
+        // jobs, so it would have zeroed the lane before any of them ran.
+        if !had_reset {
+            state = Some(core.export_lane(lane));
+        }
+        core.recycle_lane(lane);
+    }
+    if state.is_none() && jobs.is_empty() {
+        // Nothing to hand over (directed move of an idle / never-seen
+        // session): the override installed above IS the migration —
+        // future arrivals start fresh on the target through normal lane
+        // assignment.  Shipping an empty Adopt would make the target
+        // evict an innocent resident session to house... nothing.
+        return;
+    }
+    let rejected = ctx.peers[target].push_control(Control::Adopt(Box::new(Migration {
+        stolen: Some(StolenSession { session, state, jobs }),
+    })));
+    drop(guard);
+    match rejected {
+        None => {
+            ctx.metrics.migrations.fetch_add(1, Relaxed);
+            ctx.metrics.shard(ctx.index).exported.fetch_add(1, Relaxed);
+        }
+        // Target queue closed (shutdown race): the hand-off never
+        // happened — complete every migrated job as an explicit
+        // shutdown shed, exactly like close() orphans (admitted jobs
+        // are always completed or shed, never silently dropped).
+        Some(Control::Adopt(m)) => {
+            if let Some(stolen) = m.stolen {
+                for job in stolen.jobs {
+                    ctx.metrics.shed.fetch_add(1, Relaxed);
+                    send_completion(&job.reply, Err(Shed::Shutdown));
+                }
+            }
+        }
+        Some(_) => unreachable!("push_control returns the same control it was given"),
+    }
+}
+
+/// Execute staged steal traffic between passes (nothing in flight).
+fn execute_steals(
+    core: &mut ShardCore,
+    table: &mut LaneTable,
+    ctx: &ShardWorkerCtx,
+    st: &mut WorkerState,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    for task in std::mem::take(&mut st.pending_steals) {
+        match task {
+            StealTask::Directed { session, to } => {
+                if to < ctx.peers.len() {
+                    migrate_out(core, table, ctx, st, session, to);
+                }
+            }
+            StealTask::Requested { thief } => {
+                if thief >= ctx.peers.len() || thief == ctx.index {
+                    continue;
+                }
+                // Re-check pressure — the request may have raced with a
+                // drain; stealing from a shard that is no longer hot
+                // only thrashes state.  Only RESIDENT sessions are
+                // offered: a queued-but-laneless session may be
+                // mid-adoption (its live state still inside an unpopped
+                // Adopt control), and exporting it would hand the thief
+                // a zeroed lane.
+                let victim = if ctx.queue.len() >= ctx.balance.hot_queue {
+                    ctx.queue.busiest_session(|s| table.lane_of(s).is_some())
+                } else {
+                    None
+                };
+                match victim {
+                    Some((session, _)) => migrate_out(core, table, ctx, st, session, thief),
+                    None => {
+                        ctx.metrics.steals_declined.fetch_add(1, Relaxed);
+                        let _ = ctx.peers[thief]
+                            .push_control(Control::Adopt(Box::new(Migration { stolen: None })));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Idle-shard half of the steal protocol: consult the board, claim from
+/// the hottest qualifying peer, at most one outstanding request.
+fn maybe_steal(ctx: &ShardWorkerCtx, table: &LaneTable, st: &mut WorkerState) {
+    use std::sync::atomic::Ordering::Relaxed;
+    if let Some(sent) = st.steal_sent_at {
+        if sent.elapsed() < ctx.balance.steal_timeout {
+            return;
+        }
+        // The hot shard answers every request; an expired latch means a
+        // shutdown race — re-arm rather than staying stuck forever.
+        st.steal_sent_at = None;
+    }
+    let free_lanes = table.lanes() - table.occupancy();
+    if let Some(victim) =
+        ctx.board.plan_steal(&ctx.balance, ctx.index, ctx.queue.len(), free_lanes)
+    {
+        st.steal_sent_at = Some(Instant::now());
+        ctx.metrics.steal_requests.fetch_add(1, Relaxed);
+        if ctx.peers[victim]
+            .push_control(Control::StealRequest { thief: ctx.index })
+            .is_some()
+        {
+            st.steal_sent_at = None; // victim queue already closed
+        }
+    }
+}
+
+fn publish_load(ctx: &ShardWorkerCtx, table: &LaneTable, st: &WorkerState) {
+    if !ctx.balance.enabled {
+        return;
+    }
+    ctx.board.publish(ctx.index, ctx.queue.len(), table.occupancy(), st.ewma_pass.value());
+}
+
+/// Run one gathered micro-batch: the batched weight pass, watchdogs,
+/// completions, and metrics.  The occupancy / queue-length gauges are
+/// stored on BOTH outcomes — a failing pass used to leave stale gauges
+/// in the `hrd serve-tcp` stats until the next success.
+pub(crate) fn execute_batch(
+    core: &mut ShardCore,
+    table: &LaneTable,
+    ctx: &ShardWorkerCtx,
+    mut batch: Vec<(QueuedJob, usize)>,
+    st: &mut WorkerState,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    if batch.is_empty() {
+        return;
+    }
+    let steps: Vec<LaneStep> = batch
+        .iter()
+        .map(|(qj, lane)| LaneStep { lane: *lane, window: qj.job.window.clone() })
+        .collect();
+    let t_pass = Instant::now();
+    let shard_m = ctx.metrics.shard(ctx.index);
+    let outcomes = match core.step_batch(&steps) {
+        Ok(o) => o,
+        Err(e) => {
+            // Submit/drain failures are programming errors (lane
+            // bounds, double submit); never strand the clients, and
+            // keep the gauges honest.
+            log::error!("shard {}: batch pass failed: {e:#}", ctx.index);
+            shard_m.occupancy.store(table.occupancy() as u64, Relaxed);
+            shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
+            for (qj, _) in batch {
+                ctx.metrics.shed.fetch_add(1, Relaxed);
+                send_completion(&qj.job.reply, Err(Shed::Internal));
+            }
+            return;
+        }
+    };
+    st.ewma_pass.observe(t_pass.elapsed());
+    let done = Instant::now();
+
+    // Completions, metrics.
+    shard_m.batches.fetch_add(1, Relaxed);
+    shard_m.batched_requests.fetch_add(outcomes.len() as u64, Relaxed);
+    shard_m.occupancy.store(table.occupancy() as u64, Relaxed);
+    shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
+    for outcome in outcomes {
+        let slot = batch
+            .iter()
+            .position(|(_, lane)| *lane == outcome.lane)
+            .expect("every drained lane was gathered");
+        let (qj, _) = batch.swap_remove(slot);
+        let latency_us = done.saturating_duration_since(qj.job.enqueued).as_secs_f64() * 1e6;
+        let missed = done > qj.job.deadline;
+        ctx.metrics.record_completion(ctx.index, latency_us, missed);
+        match outcome.event {
+            WatchdogEvent::Ok => {}
+            WatchdogEvent::Patched => {
+                ctx.metrics.watchdog_patched.fetch_add(1, Relaxed);
+            }
+            WatchdogEvent::ResetRequested => {
+                ctx.metrics.watchdog_patched.fetch_add(1, Relaxed);
+                ctx.metrics.watchdog_resets.fetch_add(1, Relaxed);
+            }
+        }
+        send_completion(
+            &qj.job.reply,
+            Ok(Completion {
+                estimate: outcome.estimate,
+                latency_us,
+                deadline_missed: missed,
+                shard: ctx.index,
+                lane: outcome.lane,
+                event: outcome.event,
+            }),
+        );
+    }
+}
+
 /// The worker thread body.  Returns when the queue is closed and fully
 /// drained.
 pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) {
     let lanes = core.lanes();
     let mut table = LaneTable::new(lanes);
-    let mut ewma_pass = Duration::from_micros(20);
-    let mut last_arrival: Option<Instant> = None;
-    let mut ewma_arrival = Duration::from_micros(50);
+    let mut st = WorkerState::default();
 
     'serve: loop {
-        // Block for the first piece of work.
-        let first = match ctx.queue.pop(None) {
-            Some(p) => p,
-            None => break 'serve,
+        // Batch boundary: land any adoption that could not get a lane
+        // mid-gather, then advertise fresh load.
+        flush_pending_adopts(&mut core, &mut table, &ctx, &mut st);
+        publish_load(&ctx, &table, &st);
+
+        // Block for the first piece of work.  In balance mode the wait
+        // is chopped into steal-poll slices so an idle shard can claim
+        // sessions from hot peers.
+        let first = if ctx.balance.enabled {
+            loop {
+                match ctx.queue.pop(Some(ctx.balance.steal_poll)) {
+                    Some(p) => break p,
+                    None if ctx.queue.is_closed() => break 'serve,
+                    None => {
+                        publish_load(&ctx, &table, &st);
+                        maybe_steal(&ctx, &table, &mut st);
+                    }
+                }
+            }
+        } else {
+            match ctx.queue.pop(None) {
+                Some(p) => p,
+                None => break 'serve,
+            }
         };
 
-        let mut g = Gather {
-            batch: Vec::with_capacity(ctx.batch),
-            pinned: vec![false; lanes],
-            deferred: Vec::new(),
-            last_arrival,
-            ewma_arrival,
-        };
-        place(first, &mut core, &mut table, &mut g, &ctx);
+        let mut g = Gather::new(lanes, ctx.batch);
+        place(first, &mut core, &mut table, &mut g, &mut st, &ctx, true);
 
         // Gather: fill the batch while the most urgent deadline can
         // still afford to wait.
@@ -341,88 +827,67 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) {
                 // Only controls/deferrals so far — nothing to run yet.
                 break;
             };
-            let now = Instant::now();
-            let slack = earliest
-                .checked_duration_since(now)
-                .unwrap_or(Duration::ZERO)
-                .saturating_sub(ewma_pass);
-            if slack <= ctx.gather_floor {
+            let slack =
+                earliest.checked_duration_since(Instant::now()).unwrap_or(Duration::ZERO);
+            let Some(wait) =
+                gather_wait(slack, &st.ewma_pass, &st.ewma_arrival, ctx.gather_floor, ctx.gather_cap)
+            else {
                 break;
-            }
-            let wait = slack.min(ctx.gather_cap).min(g.ewma_arrival * 2);
+            };
             match ctx.queue.pop(Some(wait)) {
-                Some(popped) => place(popped, &mut core, &mut table, &mut g, &ctx),
+                Some(popped) => place(popped, &mut core, &mut table, &mut g, &mut st, &ctx, true),
                 None => break, // queue idle (or closing) — run what we have
             }
         }
-        last_arrival = g.last_arrival;
-        ewma_arrival = g.ewma_arrival;
-        ctx.queue.requeue(g.deferred);
-        let mut batch = g.batch;
-        if batch.is_empty() {
-            continue 'serve;
+
+        // An all-deferred gather must not requeue and instantly re-pop
+        // the same jobs (a hot loop that starves the CPU the batched
+        // pass needs).  The pin constraints that caused the deferral die
+        // with the gather, so one re-place round either makes progress
+        // or proves the jobs are waiting on an adoption — then back off
+        // through a bounded sleep instead of spinning.
+        if g.batch.is_empty() && !g.deferred.is_empty() {
+            let retry = std::mem::take(&mut g.deferred);
+            for qj in retry {
+                place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, false);
+            }
+            if g.batch.is_empty() && !g.deferred.is_empty() {
+                ctx.queue.requeue(std::mem::take(&mut g.deferred));
+                std::thread::sleep(ctx.gather_floor.max(Duration::from_micros(50)));
+                continue 'serve;
+            }
+        }
+
+        ctx.queue.requeue(std::mem::take(&mut g.deferred));
+        let batch = std::mem::take(&mut g.batch);
+        let pinned_resets = !st.post_pass_resets.is_empty();
+        if batch.is_empty() && !pinned_resets && st.pending_steals.is_empty() {
+            continue 'serve; // controls only, all handled inline
         }
 
         // One batched weight pass for every gathered lane.
-        let steps: Vec<LaneStep> = batch
-            .iter()
-            .map(|(qj, lane)| LaneStep { lane: *lane, window: qj.job.window.clone() })
-            .collect();
-        let t_pass = Instant::now();
-        let outcomes = match core.step_batch(&steps) {
-            Ok(o) => o,
-            Err(e) => {
-                // Submit/drain failures are programming errors (lane
-                // bounds, double submit); never strand the clients.
-                log::error!("shard {}: batch pass failed: {e:#}", ctx.index);
-                for (qj, _) in batch {
-                    ctx.metrics.shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    send_completion(&qj.job.reply, Err(Shed::Internal));
-                }
-                continue 'serve;
-            }
-        };
-        ewma_pass = ewma(ewma_pass, t_pass.elapsed());
-        let done = Instant::now();
+        execute_batch(&mut core, &table, &ctx, batch, &mut st);
 
-        // Completions, metrics.
-        use std::sync::atomic::Ordering::Relaxed;
-        let shard_m = ctx.metrics.shard(ctx.index);
-        shard_m.batches.fetch_add(1, Relaxed);
-        shard_m.batched_requests.fetch_add(outcomes.len() as u64, Relaxed);
-        shard_m.occupancy.store(table.occupancy() as u64, Relaxed);
-        shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
-        for outcome in outcomes {
-            let slot = batch
-                .iter()
-                .position(|(_, lane)| *lane == outcome.lane)
-                .expect("every drained lane was gathered");
-            let (qj, _) = batch.swap_remove(slot);
-            let latency_us =
-                done.saturating_duration_since(qj.job.enqueued).as_secs_f64() * 1e6;
-            let missed = done > qj.job.deadline;
-            ctx.metrics.record_completion(ctx.index, latency_us, missed);
-            match outcome.event {
-                WatchdogEvent::Ok => {}
-                WatchdogEvent::Patched => {
-                    ctx.metrics.watchdog_patched.fetch_add(1, Relaxed);
-                }
-                WatchdogEvent::ResetRequested => {
-                    ctx.metrics.watchdog_patched.fetch_add(1, Relaxed);
-                    ctx.metrics.watchdog_resets.fetch_add(1, Relaxed);
-                }
+        // Resets that arrived while their lane was pinned: the gathered
+        // job (submitted before the reset) has now run — apply them.
+        for session in std::mem::take(&mut st.post_pass_resets) {
+            if let Some(lane) = table.lane_of(session) {
+                core.recycle_lane(lane);
             }
-            send_completion(
-                &qj.job.reply,
-                Ok(Completion {
-                    estimate: outcome.estimate,
-                    latency_us,
-                    deadline_missed: missed,
-                    shard: ctx.index,
-                    lane: outcome.lane,
-                    event: outcome.event,
-                }),
-            );
+        }
+
+        // Steal traffic staged during the gather: safe now, nothing is
+        // in flight.
+        execute_steals(&mut core, &mut table, &ctx, &mut st);
+        publish_load(&ctx, &table, &st);
+    }
+
+    // Shutdown: an adoption still waiting for a lane carries live
+    // clients — shed them, never strand them.
+    for stolen in st.pending_adopts {
+        for job in stolen.jobs {
+            ctx.metrics.shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            send_completion(&job.reply, Err(Shed::Shutdown));
         }
     }
 }
@@ -433,6 +898,10 @@ mod tests {
     use crate::kernel::ScalarKernel;
     use crate::lstm::LstmParams;
     use crate::util::Rng;
+    use std::sync::mpsc::channel;
+
+    use super::super::queue::{Job, PushOutcome, ShedPolicy};
+    use super::super::session::session_hash;
 
     fn window(rng: &mut Rng) -> Box<[f32; INPUT_SIZE]> {
         let mut w = Box::new([0f32; INPUT_SIZE]);
@@ -440,6 +909,46 @@ mod tests {
             *v = rng.uniform(-40.0, 40.0) as f32;
         }
         w
+    }
+
+    /// A standalone worker context over its own single-shard fabric
+    /// plumbing (board/overlay/peers), for driving the worker internals
+    /// directly.
+    fn test_ctx(
+        queue: Arc<ShardQueue>,
+        metrics: Arc<SchedMetrics>,
+        batch: usize,
+    ) -> ShardWorkerCtx {
+        ShardWorkerCtx {
+            index: 0,
+            queue: queue.clone(),
+            peers: vec![queue],
+            metrics,
+            board: Arc::new(LoadBoard::new(1)),
+            overlay: Arc::new(RoutingOverlay::new()),
+            balance: BalanceConfig::default(),
+            batch,
+            gather_floor: Duration::from_micros(5),
+            gather_cap: Duration::from_micros(200),
+        }
+    }
+
+    fn queued_job(session: u64, w: Box<[f32; INPUT_SIZE]>) -> (QueuedJob, std::sync::mpsc::Receiver<Result<Completion, Shed>>) {
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        (
+            QueuedJob {
+                key: (now + Duration::from_millis(10), 0),
+                job: Job {
+                    session,
+                    window: w,
+                    enqueued: now,
+                    deadline: now + Duration::from_millis(10),
+                    reply: tx,
+                },
+            },
+            rx,
+        )
     }
 
     /// Reference: one dedicated scalar kernel + its own watchdog,
@@ -608,5 +1117,230 @@ mod tests {
         core.recycle_lane(0);
         assert!(core.export_lane(0).iter().all(|&v| v == 0.0));
         assert!(core.export_lane(1).iter().any(|&v| v != 0.0), "lane 1 untouched");
+    }
+
+    /// Satellite regression: the gather-window bound with cold EWMAs.
+    /// The old magic seeds (20 us pass / 50 us arrival) let the first
+    /// gathers of a slow model overcommit deadline slack; a cold worker
+    /// must dispatch immediately and seed from real samples.
+    #[test]
+    fn gather_wait_seeds_from_first_samples_not_magic_constants() {
+        let floor = Duration::from_micros(5);
+        let cap = Duration::from_micros(200);
+        let mut pass = Ewma::default();
+        let mut arrival = Ewma::default();
+        // Cold start: no measured pass time -> run now, regardless of
+        // how much slack the deadline appears to offer.
+        assert_eq!(gather_wait(Duration::from_millis(10), &pass, &arrival, floor, cap), None);
+        // First sample IS the estimate (no blend against a magic seed):
+        // a 200 us pass measured once must reserve ~200 us, not ~56 us
+        // (the old 0.8 * 20 + 0.2 * 200 blend).
+        pass.observe(Duration::from_micros(200));
+        assert_eq!(pass.value(), Some(Duration::from_micros(200)));
+        // Slack below the measured pass time: run now, don't overdraw.
+        assert_eq!(gather_wait(Duration::from_micros(150), &pass, &arrival, floor, cap), None);
+        // Ample slack but no arrival estimate yet: a lone request waits
+        // only the floor, never a fictional inter-arrival gap.
+        let w = gather_wait(Duration::from_millis(5), &pass, &arrival, floor, cap).unwrap();
+        assert_eq!(w, floor);
+        // An observed arrival gap bounds the wait at twice the gap.
+        arrival.observe(Duration::from_micros(40));
+        let w = gather_wait(Duration::from_millis(5), &pass, &arrival, floor, cap).unwrap();
+        assert_eq!(w, Duration::from_micros(80));
+        // The gather cap still wins when arrivals are slow.
+        arrival.observe(Duration::from_millis(50));
+        let w = gather_wait(Duration::from_millis(50), &pass, &arrival, floor, cap).unwrap();
+        assert_eq!(w, cap);
+        // Subsequent pass samples blend 0.8/0.2.
+        pass.observe(Duration::from_micros(100));
+        assert_eq!(pass.value(), Some(Duration::from_micros(180)));
+    }
+
+    /// Satellite regression: a `ResetSession` popped mid-gather must not
+    /// zero a lane that is already pinned in the batch being assembled —
+    /// the pinned job was submitted BEFORE the reset, so the reset
+    /// applies after the pass.
+    #[test]
+    fn reset_of_a_pinned_lane_is_deferred_past_the_pass() {
+        let p = LstmParams::init(16, 15, 2, 1, 33);
+        let packed = PackedModel::shared(&p);
+        let mut core = ShardCore::new_float(packed.clone(), 2, WatchdogConfig::default());
+        let mut table = LaneTable::new(2);
+        let metrics = Arc::new(SchedMetrics::new(1));
+        let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
+        let ctx = test_ctx(queue, metrics, 2);
+        let mut st = WorkerState::default();
+        let mut rng = Rng::new(12);
+        let session = session_hash("rig");
+
+        // Warm the session's lane so a premature reset is observable.
+        let mut g = Gather::new(2, 2);
+        let (qj, _warm_rx) = queued_job(session, window(&mut rng));
+        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        let lane = table.lane_of(session).unwrap();
+        assert!(core.export_lane(lane).iter().any(|&v| v != 0.0));
+
+        // New gather: the session's next job pins its lane, then the
+        // reset control arrives mid-gather.
+        let mut g = Gather::new(2, 2);
+        let (qj, rx) = queued_job(session, window(&mut rng));
+        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        assert!(g.pinned[lane]);
+        let warmed = core.export_lane(lane);
+        place(
+            Popped::Control(Control::ResetSession(session)),
+            &mut core,
+            &mut table,
+            &mut g,
+            &mut st,
+            &ctx,
+            true,
+        );
+        // NOT zeroed yet: the gathered job must run on the pre-reset
+        // state (it was submitted first).
+        assert_eq!(core.export_lane(lane), warmed, "reset reordered ahead of a gathered job");
+        assert_eq!(st.post_pass_resets, vec![session]);
+
+        // The pass consumes the carried state...
+        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        let got = rx.try_recv().unwrap().unwrap().estimate;
+        let mut reference = RefStream::new(packed, WatchdogConfig::default());
+        // (re-derive the estimate the carried state should produce)
+        // -- replay: warm window then the second window.
+        // Rebuild deterministically with the same Rng sequence.
+        let mut rng2 = Rng::new(12);
+        let w1 = window(&mut rng2);
+        let w2 = window(&mut rng2);
+        reference.step(&w1);
+        let (want, _) = reference.step(&w2);
+        assert_eq!(got, want, "pinned job must see pre-reset state");
+        // ...and only then the deferred reset lands.
+        for session in std::mem::take(&mut st.post_pass_resets) {
+            if let Some(l) = table.lane_of(session) {
+                core.recycle_lane(l);
+            }
+        }
+        assert!(core.export_lane(lane).iter().all(|&v| v == 0.0));
+
+        // Control path sanity: a reset for an UNPINNED lane still
+        // applies immediately.
+        let mut g = Gather::new(2, 2);
+        let (qj, _rx3) = queued_job(session, window(&mut rng));
+        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        assert!(core.export_lane(lane).iter().any(|&v| v != 0.0));
+        let mut g = Gather::new(2, 2);
+        place(
+            Popped::Control(Control::ResetSession(session)),
+            &mut core,
+            &mut table,
+            &mut g,
+            &mut st,
+            &ctx,
+            true,
+        );
+        assert!(core.export_lane(lane).iter().all(|&v| v == 0.0));
+        assert!(st.post_pass_resets.is_empty());
+    }
+
+    /// Satellite regression: a failing pass must update the shard's
+    /// occupancy / queue-length gauges (it used to leave them stale) and
+    /// must not poison the NEXT pass with dangling submitted windows.
+    #[test]
+    fn failed_pass_updates_gauges_and_sheds_cleanly() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let p = LstmParams::init(16, 15, 2, 1, 51);
+        let packed = PackedModel::shared(&p);
+        let mut core = ShardCore::new_float(packed.clone(), 2, WatchdogConfig::default());
+        let mut table = LaneTable::new(2);
+        let metrics = Arc::new(SchedMetrics::new(1));
+        let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
+        let ctx = test_ctx(queue.clone(), metrics.clone(), 2);
+        let mut st = WorkerState::default();
+        let mut rng = Rng::new(3);
+        let session = session_hash("rig");
+        table.assign(session, &[false, false]);
+
+        // Leave one job in the queue so the gauge has something to show.
+        let (parked, _pr) = queued_job(session, window(&mut rng));
+        assert!(matches!(queue.push(parked.job), PushOutcome::Admitted));
+
+        // A corrupt batch: two jobs on the SAME lane (double submit).
+        let (qa, ra) = queued_job(session, window(&mut rng));
+        let (qb, rb) = queued_job(session, window(&mut rng));
+        execute_batch(&mut core, &table, &ctx, vec![(qa, 0), (qb, 0)], &mut st);
+        // Both clients were shed, not stranded.
+        assert!(matches!(ra.try_recv(), Ok(Err(Shed::Internal))));
+        assert!(matches!(rb.try_recv(), Ok(Err(Shed::Internal))));
+        assert_eq!(metrics.shed.load(Relaxed), 2);
+        // Gauges reflect reality despite the failure.
+        assert_eq!(metrics.shard(0).occupancy.load(Relaxed), 1);
+        assert_eq!(metrics.shard(0).queue_len.load(Relaxed), 1);
+        assert_eq!(metrics.shard(0).batches.load(Relaxed), 0, "no pass actually ran");
+
+        // The next (well-formed) pass is clean: exactly one outcome,
+        // bit-identical to a fresh reference (the cancelled windows of
+        // the failed batch never advanced the lane).
+        let w = window(&mut rng);
+        let mut reference = RefStream::new(packed, WatchdogConfig::default());
+        let (want, _) = reference.step(&w);
+        let got = core.step_batch(&[LaneStep { lane: 0, window: w }]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].estimate, want);
+    }
+
+    /// Satellite regression: an over-subscribed shard (gather target
+    /// wider than the lane table, every lane contended) must make
+    /// forward progress without a hot requeue/re-pop loop.
+    #[test]
+    fn oversubscribed_shard_makes_forward_progress() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let p = LstmParams::init(16, 15, 2, 1, 77);
+        let packed = PackedModel::shared(&p);
+        // ONE lane, gather target of 3: every second job of a gather
+        // hits LaneAssign::Full and defers.
+        let core = ShardCore::new_float(packed, 1, WatchdogConfig::default());
+        let metrics = Arc::new(SchedMetrics::new(1));
+        let queue = Arc::new(ShardQueue::new(64, ShedPolicy::Reject));
+        let ctx = test_ctx(queue.clone(), metrics.clone(), 3);
+        let worker = std::thread::spawn(move || run_worker(core, ctx));
+
+        let sessions = 3usize;
+        let per_session = 8usize;
+        let mut receivers = Vec::new();
+        let mut rng = Rng::new(8);
+        for k in 0..per_session {
+            for s in 0..sessions {
+                let (tx, rx) = channel();
+                let now = Instant::now();
+                let job = Job {
+                    session: session_hash(&format!("s{s}")),
+                    window: window(&mut rng),
+                    enqueued: now,
+                    deadline: now + Duration::from_millis(50),
+                    reply: tx,
+                };
+                assert!(matches!(queue.push(job), PushOutcome::Admitted), "k={k} s={s}");
+                receivers.push(rx);
+            }
+        }
+        // Every job completes (bounded wait = no hot loop starvation,
+        // no lost deferral).
+        for (i, rx) in receivers.iter().enumerate() {
+            let c = rx
+                .recv_timeout(Duration::from_secs(10))
+                .unwrap_or_else(|e| panic!("job {i} never completed: {e}"))
+                .unwrap_or_else(|e| panic!("job {i} shed: {e}"));
+            assert!(c.estimate.is_finite());
+        }
+        queue.close();
+        worker.join().unwrap();
+        let total = (sessions * per_session) as u64;
+        assert_eq!(metrics.completed.load(Relaxed), total);
+        // With one lane every pass serves exactly one job — a spinning
+        // worker would show runaway empty gathers, a correct one exactly
+        // `total` passes.
+        assert_eq!(metrics.shard(0).batches.load(Relaxed), total);
     }
 }

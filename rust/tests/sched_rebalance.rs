@@ -1,0 +1,334 @@
+//! Property tests for hot-shard rebalancing (ISSUE 4): cross-shard work
+//! stealing with live session-state migration.
+//!
+//! * a session migrated mid-stream — directed or stolen under load —
+//!   produces BIT-IDENTICAL estimates to the same window sequence on an
+//!   unmigrated serial reference stream;
+//! * auto-stealing on a skewed keyspace (every session hashing to one
+//!   shard) migrates sessions without perturbing a single estimate, with
+//!   per-session ordering preserved across arbitrarily many hand-offs;
+//! * the skewed-keyspace bench scenario sheds less and cuts p99 with
+//!   rebalancing on vs off (the numbers `hrd loadgen` records into
+//!   BENCH_serving.json);
+//! * a migrated session keeps its name-hash identity: a client that
+//!   reconnects over TCP lands on the session's NEW shard with its
+//!   state intact.
+//!
+//! The serial reference mirrors a shard lane exactly: one dedicated
+//! scalar kernel plus one watchdog.  Watchdog history deliberately
+//! restarts on migration (see docs/SCHED.md), so these tests run
+//! finiteness-only watchdogs — on healthy streams the watchdog is a
+//! pass-through and bit-parity is exact.
+
+use std::sync::Arc;
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::bench::serving::{run_skew_scenario, ServingConfig};
+use hrd_lstm::coordinator::{Client, Server, Watchdog, WatchdogConfig, WatchdogEvent};
+use hrd_lstm::kernel::{FloatPath, PackedModel, ScalarKernel};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::sched::{session_hash, shard_of, Fabric, FabricConfig};
+use hrd_lstm::util::Rng;
+
+fn params() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 4242)
+}
+
+/// Watchdog that only trips on NaN/Inf (random-weight estimates roam
+/// outside the physical roller range; clamping is not under test).
+fn finiteness_only_wd() -> WatchdogConfig {
+    WatchdogConfig {
+        min_m: -1e12,
+        max_m: 1e12,
+        max_slew_m_s: 1e15,
+        stuck_after: 1 << 30,
+        reset_after: 8,
+    }
+}
+
+/// Deterministic per-(stream, step) window.
+fn window_for(stream: usize, step: usize) -> [f32; INPUT_SIZE] {
+    let mut rng = Rng::new(0xBA1A_7CE ^ ((stream as u64) << 20) ^ step as u64);
+    let mut w = [0f32; INPUT_SIZE];
+    for v in &mut w {
+        *v = rng.uniform(-40.0, 40.0) as f32;
+    }
+    w
+}
+
+/// One dedicated scalar kernel + watchdog: the unmigrated serial
+/// reference for one stream.
+struct RefStream {
+    kernel: ScalarKernel<FloatPath>,
+    wd: Watchdog,
+}
+
+impl RefStream {
+    fn new(packed: Arc<PackedModel>, wd_cfg: WatchdogConfig) -> Self {
+        Self { kernel: ScalarKernel::new(packed, FloatPath), wd: Watchdog::new(wd_cfg) }
+    }
+
+    fn step(&mut self, w: &[f32; INPUT_SIZE]) -> f64 {
+        let raw = self.kernel.step_window(&w[..]);
+        let (y, ev) = self.wd.check(raw);
+        if ev == WatchdogEvent::ResetRequested {
+            self.kernel.reset();
+        }
+        y
+    }
+}
+
+/// Session names that ALL hash to shard 0 of an `shards`-wide fabric —
+/// the worst-case keyspace FNV routing cannot spread.
+fn hot_sessions(n: usize, shards: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0u64;
+    while out.len() < n {
+        let name = format!("hot-{i}");
+        if shard_of(session_hash(&name), shards) == 0 {
+            out.push(name);
+        }
+        i += 1;
+    }
+    out
+}
+
+/// The acceptance property: a session migrated mid-stream — twice, with
+/// a hop back — is bit-identical to an unmigrated serial reference over
+/// the same window sequence.
+#[test]
+fn migrated_session_bit_identical_to_serial_reference() {
+    let p = params();
+    let mut cfg = FabricConfig::new(3, 4);
+    cfg.balance.enabled = true;
+    cfg.watchdog = finiteness_only_wd();
+    let fabric = Fabric::new(&p, cfg).unwrap();
+    let session = "migrant";
+    let home = fabric.shard_for(session);
+    let hops = [(home + 1) % 3, (home + 2) % 3, home]; // includes a return hop
+
+    let mut estimates = Vec::new();
+    let mut step_idx = 0usize;
+    let mut stream = |fabric: &Fabric, estimates: &mut Vec<f64>, step_idx: &mut usize, n: usize| {
+        let mut last_shard = 0;
+        for _ in 0..n {
+            let c = fabric.infer(session, &window_for(0, *step_idx)).unwrap();
+            estimates.push(c.estimate);
+            *step_idx += 1;
+            last_shard = c.shard;
+        }
+        last_shard
+    };
+
+    stream(&fabric, &mut estimates, &mut step_idx, 10);
+    for &target in &hops {
+        fabric.migrate_session(session, target).unwrap();
+        // Migration is asynchronous; the stream just keeps flowing.
+        // Ordering and state are guaranteed at every interleaving — wait
+        // only to make sure each hop actually lands before the next.
+        let mut moved = false;
+        for _ in 0..500 {
+            if stream(&fabric, &mut estimates, &mut step_idx, 1) == target {
+                moved = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(moved, "session never landed on shard {target}");
+        stream(&fabric, &mut estimates, &mut step_idx, 10);
+    }
+
+    let snap = fabric.snapshot();
+    assert_eq!(snap.migrations, hops.len() as u64);
+    assert_eq!(snap.completed, estimates.len() as u64);
+    assert_eq!(snap.shed, 0);
+
+    // Bit-for-bit against one uninterrupted serial stream.
+    let packed = PackedModel::shared(&p);
+    let mut reference = RefStream::new(packed, finiteness_only_wd());
+    for (k, &got) in estimates.iter().enumerate() {
+        let want = reference.step(&window_for(0, k));
+        assert_eq!(got, want, "estimate diverged at step {k} (across {} hops)", hops.len());
+    }
+}
+
+/// Auto-stealing under a fully skewed keyspace: 8 concurrent sessions
+/// all hashing to shard 0 of 3, aggressive steal thresholds.  Sessions
+/// must spread (migrations observed) and EVERY estimate of EVERY stream
+/// must stay bit-identical to its serial reference — per-session order
+/// survives arbitrarily many live hand-offs.
+#[test]
+fn skewed_keyspace_autosteal_preserves_bit_parity() {
+    let p = params();
+    let streams = 8usize;
+    let steps = 60usize;
+    let mut cfg = FabricConfig::new(3, streams); // lanes >= sessions: no LRU thrash
+    cfg.balance.enabled = true;
+    cfg.balance.hot_queue = 1;
+    cfg.balance.idle_queue = 0;
+    cfg.balance.min_gap = 1;
+    cfg.balance.steal_poll = std::time::Duration::from_micros(100);
+    cfg.watchdog = finiteness_only_wd();
+    let fabric = Arc::new(Fabric::new(&p, cfg).unwrap());
+    let sessions = hot_sessions(streams, 3);
+    for s in &sessions {
+        assert_eq!(shard_of(session_hash(s), 3), 0, "workload must start fully skewed");
+    }
+
+    let mut joins = Vec::new();
+    for (s, name) in sessions.iter().enumerate() {
+        let fabric = fabric.clone();
+        let name = name.clone();
+        joins.push(std::thread::spawn(move || {
+            (0..steps)
+                .map(|k| {
+                    let c = fabric.infer(&name, &window_for(s, k)).unwrap();
+                    (c.estimate, c.shard)
+                })
+                .collect::<Vec<(f64, usize)>>()
+        }));
+    }
+    let got: Vec<Vec<(f64, usize)>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    let snap = fabric.snapshot();
+    assert_eq!(snap.completed, (streams * steps) as u64);
+    assert_eq!(snap.shed, 0, "closed loop over deep queues must not shed");
+    assert!(
+        snap.migrations >= 1,
+        "a fully skewed keyspace with idle shards must trigger stealing \
+         (steal_requests {}, declined {})",
+        snap.steal_requests,
+        snap.steals_declined
+    );
+    let spread: std::collections::HashSet<usize> =
+        got.iter().flat_map(|v| v.iter().map(|&(_, shard)| shard)).collect();
+    assert!(spread.len() >= 2, "completions must come from more than the home shard");
+
+    // The heart of the property: migration is invisible in the numbers.
+    let packed = PackedModel::shared(&p);
+    for (s, stream_got) in got.iter().enumerate() {
+        let mut reference = RefStream::new(packed.clone(), finiteness_only_wd());
+        for (k, &(y, _)) in stream_got.iter().enumerate() {
+            let want = reference.step(&window_for(s, k));
+            assert_eq!(y, want, "stream {s} diverged at step {k} under live stealing");
+        }
+    }
+}
+
+/// The bench property `hrd loadgen` records into BENCH_serving.json: on
+/// a skewed keyspace with shallow queues, rebalancing sheds less and
+/// serves a lower p99 than static FNV routing.
+#[test]
+fn rebalance_beats_static_routing_on_skewed_keyspace() {
+    let p = params();
+    let mut cfg = ServingConfig::quick();
+    cfg.shard_counts = vec![4];
+    cfg.batch = 4;
+    cfg.skew_streams = 16;
+    cfg.skew_hot_fraction = 0.8;
+    cfg.skew_requests = 50;
+    // The shed ordering is structural (the hot shard's capacity is sized
+    // below its client count, a balanced spread fits) and is asserted on
+    // every attempt.  The p99 / hot-share orderings additionally depend
+    // on migrations landing early in the run, which a heavily
+    // oversubscribed CI host can delay — those get a bounded retry; a
+    // broken rebalancer fails all three attempts.
+    let mut tail_won = false;
+    for attempt in 0..3 {
+        let off = run_skew_scenario(&p, &cfg, false).unwrap();
+        let on = run_skew_scenario(&p, &cfg, true).unwrap();
+        assert_eq!(off.migrations, 0);
+        assert!(on.migrations >= 1, "rebalancing must actually migrate sessions");
+        assert!(
+            off.shed > 0,
+            "the skewed workload must overload the hot shard's shallow queue \
+             (otherwise this scenario proves nothing)"
+        );
+        assert!(
+            on.shed < off.shed,
+            "rebalance on must shed less: on {} vs off {} (attempt {attempt})",
+            on.shed,
+            off.shed
+        );
+        if on.p99_us < off.p99_us && on.hot_share < off.hot_share {
+            tail_won = true;
+            break;
+        }
+        eprintln!(
+            "attempt {attempt}: p99 on {:.1} vs off {:.1} us, hot share {:.2} vs {:.2} — retrying",
+            on.p99_us, off.p99_us, on.hot_share, off.hot_share
+        );
+    }
+    assert!(
+        tail_won,
+        "rebalance on must cut the tail (p99) and spread completions off the \
+         hot shard in at least one of 3 attempts"
+    );
+}
+
+/// Reconnect-by-hash across a migration, over real TCP: the overlay is
+/// keyed by the session's stable hash, so a client that disconnects and
+/// returns under the same name reaches the migrated state — and the
+/// stats surface reports the migration.
+#[test]
+fn migrated_session_survives_tcp_reconnect() {
+    let p = params();
+    let mut cfg = FabricConfig::new(3, 4);
+    cfg.balance.enabled = true;
+    cfg.watchdog = finiteness_only_wd();
+    let fabric = Arc::new(Fabric::new(&p, cfg).unwrap());
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = {
+        let fabric = fabric.clone();
+        std::thread::spawn(move || server.run_fabric(fabric).unwrap())
+    };
+
+    let session = "persistent";
+    let home = fabric.shard_for(session);
+    let target = (home + 1) % 3;
+    let mut got = Vec::new();
+    {
+        let mut client = Client::with_session(&addr, session).unwrap();
+        for k in 0..3 {
+            got.push(client.infer_full(&window_for(0, k), None).unwrap().estimate);
+        }
+        // Connection dropped here, with the session state resident.
+    }
+    fabric.migrate_session(session, target).unwrap();
+    {
+        let mut client = Client::with_session(&addr, session).unwrap();
+        let mut landed = false;
+        for k in 3..6 {
+            let r = client.infer_full(&window_for(0, k), None).unwrap();
+            got.push(r.estimate);
+            landed = landed || r.shard == Some(target);
+        }
+        // The migration raced the reconnect; whichever side won, keep
+        // streaming until the session provably serves from the target.
+        let mut k = 6;
+        while !landed {
+            assert!(k < 200, "session never landed on shard {target}");
+            let r = client.infer_full(&window_for(0, k), None).unwrap();
+            got.push(r.estimate);
+            landed = r.shard == Some(target);
+            k += 1;
+        }
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("migrations").unwrap().as_f64(), Some(1.0));
+    }
+
+    // One uninterrupted serial stream is the reference.
+    let packed = PackedModel::shared(&p);
+    let mut reference = RefStream::new(packed, finiteness_only_wd());
+    for (k, &y) in got.iter().enumerate() {
+        let want = reference.step(&window_for(0, k));
+        assert_eq!(y, want, "state lost across migration + reconnect at step {k}");
+    }
+
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.shutdown().unwrap();
+    let snap = server_thread.join().unwrap();
+    assert_eq!(snap.completed, got.len() as u64);
+    assert_eq!(snap.migrations, 1);
+}

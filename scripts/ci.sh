@@ -32,14 +32,23 @@ echo "== wire protocol gate: codec properties + conformance transcripts =="
 # with its own named CI step (cheap: already built by the line above).
 cargo test -q --test wire_codec --test protocol_conformance
 
+echo "== sched correctness gate: fabric bit-parity + rebalance migration =="
+# The sched:: acceptance suites (see docs/SCHED.md): fabric-vs-serial
+# bit-parity, and hot-shard rebalancing — a migrated session must be
+# bit-identical to an unmigrated reference, and the skewed-keyspace
+# scenario must shed less / serve a lower p99 with rebalancing on.
+cargo test -q --test sched_fabric --test sched_rebalance
+
 echo "== kernel bench smoke (BENCH_kernel.json) =="
 HRD_BENCH_FAST=1 cargo run --release --bin hrd -- bench --quick --out BENCH_kernel.json
 
 echo "== serving fabric loadgen smoke (BENCH_serving.json) =="
 # Loopback loadgen: serial baseline vs sched:: fabric at shards {1,2,4}
 # over BOTH wire protocols (json-vs-binary comparison + bit-parity pass,
-# see docs/PROTOCOL.md), small M / short duration (scripts/loadgen.sh
-# runs the full measurement).
+# see docs/PROTOCOL.md), plus the skewed-keyspace rebalance scenario
+# (80% of sessions on one shard, rebalance off vs on -> the .rebalance
+# object, see docs/SCHED.md); small M / short duration
+# (scripts/loadgen.sh runs the full measurement).
 cargo run --release --bin hrd -- loadgen --quick --wire both --out BENCH_serving.json
 
 echo "CI OK"

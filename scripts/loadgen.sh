@@ -13,13 +13,20 @@
 # deadline-aware fabric (sched::) at shards in {1, 2, 4} — the fabric
 # over BOTH wire protocols: legacy JSON lines and the binary framing
 # specified in docs/PROTOCOL.md (auto-detected per connection by the
-# server).  Results land in BENCH_serving.json:
+# server) — and finally the skewed-keyspace rebalance scenario: 80% of
+# sessions hashing to ONE shard over deliberately shallow queues, run
+# with hot-shard rebalancing off then on (cross-shard session stealing,
+# see docs/SCHED.md).  Results land in BENCH_serving.json:
 #
 #   .serial                         — the baseline scenario (JSON)
 #   .fabric[]                       — one entry per shard count x protocol
 #   .wire_comparison[]              — per-shard json-vs-binary p50/rate
 #   .parity_windows                 — windows proven bit-identical across
 #                                     json / binary / batch submission
+#   .rebalance.{off,on}             — skewed-keyspace shed/p50/p99/
+#                                     migrations/hot_share per mode
+#   .rebalance.shed_reduction       — sheds avoided by rebalancing
+#   .rebalance.p99_speedup          — off p99 / on p99 (> 1 = tail cut)
 #   .derived.best_fabric_vs_serial_sustained
 #                                   — the headline ratio (> 1 means the
 #                                     fabric beats one serial engine)
@@ -31,6 +38,12 @@
 # Knobs (forwarded verbatim, see `hrd help`):
 #   scripts/loadgen.sh full --streams 64 --shards 1,2,4,8 --batch 16
 #   scripts/loadgen.sh full --wire binary      # one protocol only
+#   scripts/loadgen.sh full --skew-streams 32  # bigger skew scenario
+#   scripts/loadgen.sh --no-skew               # skip the skew scenario
+#
+# The rebalance acceptance property (on sheds less + lower p99 than
+# off) is asserted by rust/tests/sched_rebalance.rs and by the
+# serving_fabric bench binary in full mode.
 #
 # The `serving_fabric` bench binary (`cargo bench --bench serving_fabric`
 # or running the built binary directly) runs the same suite and, in full
