@@ -1,17 +1,48 @@
-//! Kernel layer throughput bench: single-stream packed-kernel speedup
-//! over the legacy row-major walk, plus batched scaling (aggregate
-//! windows/sec at B = 1..16 against 8 sequential single-stream runs).
+//! Kernel layer throughput + latency bench: single-stream packed-kernel
+//! speedup over the legacy row-major walk, batched scaling (aggregate
+//! windows/sec at B = 1..16 against 8 sequential single-stream runs),
+//! and the precision-tier ns/step harness (f64-scalar / f32-scalar /
+//! f32-simd, the software analogue of the paper's 1.42 us number).
 //! Writes `BENCH_kernel.json` in the working directory.
+//!
+//! Full mode is a perf gate: when the machine actually has the vector
+//! unit (AVX2+FMA detected), f32-simd MUST beat f64-scalar single-stream
+//! latency — the whole point of the tier.  On portable-only machines the
+//! ordering is reported but not asserted (the fallback trades speed for
+//! bit-exactness with the intrinsic path; see docs/KERNEL.md).
+
+use hrd_lstm::bench::kernel::{run_kernel_suite, TierSelect};
+use hrd_lstm::kernel::VecBackend;
 
 fn main() {
     let out = std::path::PathBuf::from("BENCH_kernel.json");
-    let summary = hrd_lstm::bench::kernel::run_kernel_suite(Some(&out), false).unwrap();
+    let summary = run_kernel_suite(Some(&out), false, TierSelect::All).unwrap();
     println!("\n{}", summary.render());
     println!("report written to {}", out.display());
     if summary.batch8_vs_seq8 < 3.0 {
         println!(
             "WARNING: batch-8 aggregate speedup {:.2}x below the 3x target",
             summary.batch8_vs_seq8
+        );
+    }
+    let f64_ns = summary.single_ns("f64-scalar").expect("f64-scalar row");
+    let simd_ns = summary.single_ns("f32-simd").expect("f32-simd row");
+    if VecBackend::detect().is_simd() {
+        assert!(
+            simd_ns < f64_ns,
+            "f32-simd single-stream latency ({simd_ns:.0} ns) must beat f64-scalar \
+             ({f64_ns:.0} ns) on a machine with AVX2+FMA"
+        );
+        println!(
+            "latency gate OK: f32-simd {simd_ns:.0} ns/step vs f64-scalar {f64_ns:.0} ns/step \
+             ({:.2}x)",
+            f64_ns / simd_ns
+        );
+    } else {
+        println!(
+            "latency gate SKIPPED (no vector unit detected; backend={}): f32-simd \
+             {simd_ns:.0} ns vs f64-scalar {f64_ns:.0} ns",
+            summary.simd_backend
         );
     }
 }

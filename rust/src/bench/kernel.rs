@@ -1,19 +1,27 @@
 //! Kernel micro-benchmark suite: quantifies what the `kernel::` layer
-//! buys over the legacy row-major cell walk, single stream and batched.
+//! buys over the legacy row-major cell walk, single stream and batched —
+//! and, since the precision tiers landed, what the f32 SIMD fast path
+//! buys over exact f64 (`docs/KERNEL.md`).
 //!
-//! Three measurements (paper architecture, 16-15-3):
+//! Measurements (paper architecture, 16-15-3):
 //!
 //! 1. `legacy_cell_step_window` — the pre-kernel hot path (row-major
-//!    `cell_step` + dense head), the baseline;
-//! 2. `scalar_kernel_window` — the packed single-stream kernel;
+//!    `cell_step` + dense head), the historical baseline;
+//! 2. `scalar_kernel_window` — the packed f64 single-stream kernel;
 //! 3. `batch_kernel_b{B}` for B in [`BATCH_SIZES`] — aggregate batched
-//!    throughput, against `seq_8x_scalar_windows` (eight dedicated
-//!    single-stream kernels stepped in sequence — what serving 8 sensor
-//!    channels costs without the batched kernel).
+//!    f64 throughput, against `seq_8x_scalar_windows`;
+//! 4. **the latency harness**: single-window, single-stream ns/step per
+//!    precision tier (`f64-scalar` / `f32-scalar` / `f32-simd` — the
+//!    software analogue of the paper's 1.42 µs hardware number), plus a
+//!    B ∈ [`TIER_BATCH_SIZES`] ns/window sweep of the same three tiers.
+//!    `f32-scalar` is the portable 8-lane-unrolled fallback pinned
+//!    bit-identical to `f32-simd` (the runtime-detected AVX2+FMA path).
 //!
 //! Shared by the `hrd bench` subcommand and the `kernel_throughput`
-//! bench binary; both write `BENCH_kernel.json` so the perf trajectory
-//! is tracked from PR to PR.
+//! bench binary; both write `BENCH_kernel.json` so the per-step latency
+//! trajectory is tracked from PR to PR.  The bench binary additionally
+//! asserts (full mode, SIMD available) that `f32-simd` beats
+//! `f64-scalar` single-stream latency.
 
 use std::path::Path;
 use std::time::Duration;
@@ -21,16 +29,69 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::bench::{black_box, BenchConfig, BenchGroup};
-use crate::kernel::{BatchKernel, FloatPath, PackedModel, ScalarKernel, StepKernel};
+use crate::kernel::simd::VecBackend;
+use crate::kernel::{
+    BatchKernel, BatchKernelF32, FloatPath, PackedModel, PackedModelF32, Precision, ScalarKernel,
+    ScalarKernelF32, StepKernel,
+};
 use crate::lstm::cell::{reference_step, CellScratch, LayerState};
 use crate::lstm::LstmParams;
 use crate::util::Json;
 
-/// Batch widths the scaling curve is measured at.
+/// Batch widths the f64 scaling curve is measured at.
 pub const BATCH_SIZES: &[usize] = &[1, 2, 4, 8, 16];
+
+/// Batch widths of the precision-tier ns/window sweep.
+pub const TIER_BATCH_SIZES: &[usize] = &[1, 4, 8, 16];
 
 /// Streams in the sequential-scalar serving baseline.
 pub const SEQ_STREAMS: usize = 8;
+
+/// Which precision tiers the suite measures (`hrd bench --precision`).
+/// The legacy-vs-packed f64 continuity suite always runs; this selects
+/// the tier rows of the latency harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TierSelect {
+    #[default]
+    All,
+    F64Only,
+    F32Only,
+}
+
+impl TierSelect {
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "all" {
+            return Some(Self::All);
+        }
+        Precision::parse(s).map(|p| match p {
+            Precision::F64Exact => Self::F64Only,
+            Precision::F32Fast => Self::F32Only,
+        })
+    }
+
+    fn runs_f64(self) -> bool {
+        self != Self::F32Only
+    }
+
+    fn runs_f32(self) -> bool {
+        self != Self::F64Only
+    }
+}
+
+/// One row of the precision-tier sweep.  Tier names denote the
+/// *datapath* (ISSUE vocabulary): "f64-scalar" = scalar f64 arithmetic,
+/// "f32-scalar" = f32 via the portable unrolled fallback, "f32-simd" =
+/// f32 via the detected vector backend.  Rows with `batch > 1` measure
+/// the batched kernel of that datapath (one weight pass serving B
+/// lanes), not B scalar kernels.
+#[derive(Debug, Clone)]
+pub struct TierRow {
+    /// "f64-scalar" | "f32-scalar" | "f32-simd".
+    pub tier: &'static str,
+    pub batch: usize,
+    /// Amortized nanoseconds per window at this batch width.
+    pub ns_per_window: f64,
+}
 
 /// Derived results of one suite run.
 #[derive(Debug, Clone)]
@@ -46,28 +107,55 @@ pub struct KernelBenchSummary {
     /// Single-stream speedup of the packed kernel over the legacy walk.
     pub scalar_vs_legacy: f64,
     /// Aggregate windows/sec of `BatchKernel` at B=8 over 8 sequential
-    /// single-stream runs (the ISSUE acceptance ratio).
+    /// single-stream runs (the PR-1 acceptance ratio).
     pub batch8_vs_seq8: f64,
+    /// What `VecBackend::detect()` found ("avx2+fma" or "portable") —
+    /// which machine the f32-simd rows were measured on.
+    pub simd_backend: &'static str,
+    /// Single-window single-stream ns/step per measured tier.
+    pub single_stream_ns: Vec<(&'static str, f64)>,
+    /// ns/window per (tier, batch) over [`TIER_BATCH_SIZES`].
+    pub tier_sweep: Vec<TierRow>,
 }
 
 impl KernelBenchSummary {
+    /// Single-stream ns/step of one tier, if it was measured.
+    pub fn single_ns(&self, tier: &str) -> Option<f64> {
+        self.single_stream_ns.iter().find(|(t, _)| *t == tier).map(|(_, ns)| *ns)
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
             "single stream : legacy {:.2} us/window, packed scalar {:.2} us/window ({:.2}x)\n",
             self.legacy_step_us, self.scalar_step_us, self.scalar_vs_legacy
         );
-        s.push_str("batched       :");
+        s.push_str("batched (f64) :");
         for (b, us) in &self.batched_us_per_window {
             s.push_str(&format!("  B={b}: {us:.2} us/window"));
         }
         s.push('\n');
         s.push_str(&format!(
             "serving 8 ch  : sequential {:.2} us/window vs batch-8 {:.2} us/window -> \
-             {:.2}x aggregate throughput",
+             {:.2}x aggregate throughput\n",
             self.seq8_us_per_window,
             self.batch8_us_per_window(),
             self.batch8_vs_seq8
         ));
+        s.push_str(&format!("ns/step tiers : (simd backend: {})", self.simd_backend));
+        for (tier, ns) in &self.single_stream_ns {
+            s.push_str(&format!("  {tier}: {ns:.0} ns"));
+        }
+        for &b in TIER_BATCH_SIZES {
+            let rows: Vec<String> = self
+                .tier_sweep
+                .iter()
+                .filter(|r| r.batch == b)
+                .map(|r| format!("{}: {:.0} ns/window", r.tier, r.ns_per_window))
+                .collect();
+            if !rows.is_empty() {
+                s.push_str(&format!("\n  B={b:<2} {}", rows.join("  ")));
+            }
+        }
         s
     }
 
@@ -84,10 +172,17 @@ impl KernelBenchSummary {
 /// (`{group, samples, derived}`; `samples` matches the standard
 /// [`BenchGroup`] JSON shape).  `quick` selects one short batch per
 /// benchmark (what `--quick` and CI use) without touching the
-/// process-global `HRD_BENCH_FAST` environment variable.
-pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSummary> {
+/// process-global `HRD_BENCH_FAST` environment variable; `tiers`
+/// restricts the precision-tier rows (`hrd bench --precision`).
+pub fn run_kernel_suite(
+    out: Option<&Path>,
+    quick: bool,
+    tiers: TierSelect,
+) -> Result<KernelBenchSummary> {
     let params = LstmParams::init(16, 15, 3, 1, 42);
     let packed = PackedModel::shared(&params);
+    let packed32 = PackedModelF32::shared(&params);
+    let detected = VecBackend::detect();
     let window = [3.0f32; 16];
     let mut g = BenchGroup::new("kernel");
     if quick {
@@ -120,7 +215,8 @@ pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSu
             * 1e6
     };
 
-    // 2. Packed single-stream kernel.
+    // 2. Packed single-stream f64 kernel — doubles as the latency
+    //    harness's f64-scalar ns/step row.
     let scalar_step_us = {
         let mut kernel = ScalarKernel::new(packed.clone(), FloatPath);
         g.bench("scalar_kernel_window", move || {
@@ -145,7 +241,8 @@ pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSu
             / SEQ_STREAMS as f64
     };
 
-    // 4. Batched scaling curve: one weight pass per layer serves B lanes.
+    // 4. Batched f64 scaling curve: one weight pass per layer serves B
+    //    lanes.
     let mut batched_us_per_window = Vec::with_capacity(BATCH_SIZES.len());
     for &b in BATCH_SIZES {
         let mut kernel = BatchKernel::new(packed.clone(), FloatPath, b);
@@ -162,6 +259,62 @@ pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSu
         batched_us_per_window.push((b, mean_s * 1e6 / b as f64));
     }
 
+    // 5. The latency harness: single-stream ns/step per precision tier.
+    //    f64-scalar reuses measurement 2 (same kernel, same window).
+    let mut single_stream_ns: Vec<(&'static str, f64)> = Vec::new();
+    if tiers.runs_f64() {
+        single_stream_ns.push(("f64-scalar", scalar_step_us * 1e3));
+    }
+    if tiers.runs_f32() {
+        let mut kernel = ScalarKernelF32::with_backend(packed32.clone(), VecBackend::Portable);
+        let ns = g
+            .bench("f32_scalar_kernel_window", move || {
+                black_box(kernel.step_window(&window));
+            })
+            .mean()
+            * 1e9;
+        single_stream_ns.push(("f32-scalar", ns));
+        let mut kernel = ScalarKernelF32::with_backend(packed32.clone(), detected);
+        let ns = g
+            .bench("f32_simd_kernel_window", move || {
+                black_box(kernel.step_window(&window));
+            })
+            .mean()
+            * 1e9;
+        single_stream_ns.push(("f32-simd", ns));
+    }
+
+    // 6. Precision-tier batch sweep (ns/window at B in TIER_BATCH_SIZES).
+    let mut tier_sweep: Vec<TierRow> = Vec::new();
+    for &b in TIER_BATCH_SIZES {
+        if tiers.runs_f64() {
+            let us = batched_us_per_window
+                .iter()
+                .find(|(bb, _)| *bb == b)
+                .map(|(_, us)| *us)
+                .expect("TIER_BATCH_SIZES is a subset of BATCH_SIZES");
+            tier_sweep.push(TierRow { tier: "f64-scalar", batch: b, ns_per_window: us * 1e3 });
+        }
+        if tiers.runs_f32() {
+            for (tier, backend) in
+                [("f32-scalar", VecBackend::Portable), ("f32-simd", detected)]
+            {
+                let mut kernel = BatchKernelF32::with_backend(packed32.clone(), backend, b);
+                let xs: Vec<f64> = (0..b * params.input_size())
+                    .map(|i| 0.05 * ((i % 31) as f64 - 15.0))
+                    .collect();
+                let mut ys = vec![0.0; b];
+                let mean_s = g
+                    .bench_items(&format!("{}_batch_b{b}", tier.replace('-', "_")), b as f64, move || {
+                        kernel.step_normalized(&xs, &mut ys);
+                        black_box(ys[0]);
+                    })
+                    .mean();
+                tier_sweep.push(TierRow { tier, batch: b, ns_per_window: mean_s * 1e9 / b as f64 });
+            }
+        }
+    }
+
     let mut summary = KernelBenchSummary {
         legacy_step_us,
         scalar_step_us,
@@ -169,6 +322,9 @@ pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSu
         seq8_us_per_window,
         scalar_vs_legacy: legacy_step_us / scalar_step_us,
         batch8_vs_seq8: f64::NAN,
+        simd_backend: detected.name(),
+        single_stream_ns,
+        tier_sweep,
     };
     summary.batch8_vs_seq8 = seq8_us_per_window / summary.batch8_us_per_window();
 
@@ -183,6 +339,26 @@ pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSu
                 })
                 .collect(),
         );
+        let single = Json::obj(
+            summary
+                .single_stream_ns
+                .iter()
+                .map(|(tier, ns)| (*tier, Json::from(*ns)))
+                .collect::<Vec<_>>(),
+        );
+        let sweep = Json::Arr(
+            summary
+                .tier_sweep
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("tier", Json::from(r.tier)),
+                        ("batch", Json::from(r.batch)),
+                        ("ns_per_window", Json::from(r.ns_per_window)),
+                    ])
+                })
+                .collect(),
+        );
         let derived = Json::obj(vec![
             ("legacy_step_us", Json::from(summary.legacy_step_us)),
             ("scalar_step_us", Json::from(summary.scalar_step_us)),
@@ -190,6 +366,9 @@ pub fn run_kernel_suite(out: Option<&Path>, quick: bool) -> Result<KernelBenchSu
             ("scalar_vs_legacy_speedup", Json::from(summary.scalar_vs_legacy)),
             ("batch8_vs_seq8_speedup", Json::from(summary.batch8_vs_seq8)),
             ("batched_us_per_window", curve),
+            ("simd_backend", Json::from(summary.simd_backend)),
+            ("single_stream_ns", single),
+            ("tier_sweep", sweep),
         ]);
         let doc = Json::obj(vec![
             ("group", Json::from("kernel")),
@@ -208,14 +387,56 @@ mod tests {
     #[test]
     fn suite_runs_and_reports() {
         let out = std::env::temp_dir().join("hrd_bench_kernel_selftest.json");
-        let s = run_kernel_suite(Some(&out), true).unwrap();
+        let s = run_kernel_suite(Some(&out), true, TierSelect::All).unwrap();
         assert!(s.legacy_step_us > 0.0);
         assert!(s.scalar_step_us > 0.0);
         assert_eq!(s.batched_us_per_window.len(), BATCH_SIZES.len());
         assert!(s.batch8_vs_seq8.is_finite());
         assert!(!s.render().is_empty());
+        // The latency harness: every tier has its single-stream ns row
+        // and a full batch sweep.
+        for tier in ["f64-scalar", "f32-scalar", "f32-simd"] {
+            assert!(s.single_ns(tier).unwrap() > 0.0, "{tier} single-stream row");
+            for &b in TIER_BATCH_SIZES {
+                assert!(
+                    s.tier_sweep
+                        .iter()
+                        .any(|r| r.tier == tier && r.batch == b && r.ns_per_window > 0.0),
+                    "{tier} B={b} sweep row"
+                );
+            }
+        }
+        assert_eq!(s.tier_sweep.len(), 3 * TIER_BATCH_SIZES.len());
         let j = Json::parse_file(&out).unwrap();
         assert_eq!(j.get("group").unwrap().as_str(), Some("kernel"));
-        assert!(j.get("derived").unwrap().get("batch8_vs_seq8_speedup").is_some());
+        let derived = j.get("derived").unwrap();
+        assert!(derived.get("batch8_vs_seq8_speedup").is_some());
+        assert!(derived.get("single_stream_ns").unwrap().get("f32-simd").is_some());
+        assert!(derived.get("simd_backend").is_some());
+        let sweep = derived.get("tier_sweep").unwrap();
+        match sweep {
+            Json::Arr(rows) => assert_eq!(rows.len(), 3 * TIER_BATCH_SIZES.len()),
+            other => panic!("tier_sweep must be an array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tier_filter_limits_the_rows() {
+        let s = run_kernel_suite(None, true, TierSelect::F64Only).unwrap();
+        assert!(s.single_ns("f64-scalar").is_some());
+        assert!(s.single_ns("f32-simd").is_none());
+        assert!(s.tier_sweep.iter().all(|r| r.tier == "f64-scalar"));
+        let s = run_kernel_suite(None, true, TierSelect::F32Only).unwrap();
+        assert!(s.single_ns("f64-scalar").is_none());
+        assert!(s.single_ns("f32-scalar").is_some());
+        assert!(s.tier_sweep.iter().all(|r| r.tier != "f64-scalar"));
+    }
+
+    #[test]
+    fn tier_select_parses() {
+        assert_eq!(TierSelect::parse("all"), Some(TierSelect::All));
+        assert_eq!(TierSelect::parse("f64"), Some(TierSelect::F64Only));
+        assert_eq!(TierSelect::parse("f32"), Some(TierSelect::F32Only));
+        assert_eq!(TierSelect::parse("fp16"), None, "fixed-point names are not tiers");
     }
 }

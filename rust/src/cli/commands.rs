@@ -31,8 +31,10 @@ COMMANDS:
             --channels N  (N>1: batched multi-channel pipeline)
             --fault {none|dropout|spikes}  --json <out.json>
   bench     run the kernel micro-benchmark suite (packed scalar vs legacy,
-            batched throughput scaling) and write BENCH_kernel.json
-            --out <file>  --quick
+            batched throughput scaling, and the precision-tier ns/step
+            latency harness: f64-scalar / f32-scalar / f32-simd at
+            B in {1,4,8,16}) and write BENCH_kernel.json
+            --out <file>  --quick  --precision {all|f64|f32}
   serve-tcp run the TCP serving front-end.  Each connection's protocol
             is auto-detected: binary framing (see docs/PROTOCOL.md) or
             legacy newline-delimited JSON.  Kernel-capable backends
@@ -42,6 +44,9 @@ COMMANDS:
             --addr HOST:PORT (default 127.0.0.1:7433) + serve's options
             --shards N  --batch B  --deadline-us D  --gather-us G
             --shed {reject|evict-farthest}
+            --precision {f64|f32}  (native backend: exact f64 vs the f32
+            SIMD fast path, see docs/KERNEL.md; also `[kernel]
+            precision`.  Quantized backends keep fp32/fp16/fp8.)
             --rebalance  (hot-shard rebalancing: idle shards steal whole
             sessions — live state + queued jobs — from saturated ones;
             see docs/SCHED.md; also `[sched] rebalance = true`)
@@ -108,7 +113,15 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.backend = BackendKind::parse(b)
             .ok_or_else(|| anyhow::anyhow!("unknown backend {b}"))?;
     }
-    cfg.precision = args.get_or("precision", &cfg.precision.clone()).to_string();
+    if let Some(p) = args.get("precision") {
+        // One flag, two disjoint vocabularies: "f64"/"f32" select the
+        // float-datapath tier (kernel::simd::Precision), anything else
+        // is the fixed-point format name of the quantized backends.
+        match crate::kernel::Precision::parse(p) {
+            Some(tier) => cfg.kernel_precision = tier.name().to_string(),
+            None => cfg.precision = p.to_string(),
+        }
+    }
     cfg.profile = args.get_or("profile", &cfg.profile.clone()).to_string();
     cfg.platform = args.get_or("platform", &cfg.platform.clone()).to_string();
     cfg.steps = args.get_usize("steps", cfg.steps)?;
@@ -126,17 +139,54 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// Subcommands (and the serve-tcp serial fallback) that have no f32
+/// lowering must refuse a non-default precision tier rather than
+/// silently serving the exact path the user thought they had switched
+/// off.  Before the tier existed, `--precision f32` failed loudly at
+/// `QFormat::by_name`; this keeps the misuse just as loud.
+fn ensure_f64_tier(cfg: &ExperimentConfig, what: &str) -> Result<()> {
+    anyhow::ensure!(
+        crate::kernel::Precision::parse(&cfg.kernel_precision)
+            == Some(crate::kernel::Precision::F64Exact),
+        "{what} runs the f64-exact datapath only; precision tier {:?} applies to \
+         kernel-backed `serve-tcp` fabrics (docs/KERNEL.md)",
+        cfg.kernel_precision
+    );
+    Ok(())
+}
+
 /// The fabric datapath for a backend kind, or `None` for kinds that
 /// cannot share a batched kernel session (pjrt is thread-pinned, modal
-/// has no kernel lowering).
+/// has no kernel lowering).  For the native backend the precision tier
+/// (`[kernel] precision` / `--precision {f64|f32}`) picks between the
+/// exact f64 path and the f32 SIMD fast path (docs/KERNEL.md).
 fn fabric_datapath(
     kind: BackendKind,
     precision: &str,
+    kernel_precision: &str,
 ) -> Result<Option<crate::sched::DatapathKind>> {
+    use crate::kernel::Precision;
     use crate::sched::DatapathKind;
     Ok(match kind {
-        BackendKind::Native => Some(DatapathKind::Float),
+        BackendKind::Native => {
+            let tier = Precision::parse(kernel_precision).ok_or_else(|| {
+                anyhow::anyhow!("unknown kernel precision {kernel_precision} (expected f64 or f32)")
+            })?;
+            Some(match tier {
+                Precision::F64Exact => DatapathKind::Float,
+                Precision::F32Fast => DatapathKind::FloatF32,
+            })
+        }
         BackendKind::Quantized | BackendKind::FpgaSim => {
+            // Never silently drop the tier flag: fixed-point backends
+            // have no f32 float tier (their precision axis is the
+            // Q-format), so an explicit f32 request must fail loudly.
+            anyhow::ensure!(
+                Precision::parse(kernel_precision) != Some(Precision::F32Fast),
+                "backend {} runs the fixed-point datapath (precision fp32/fp16/fp8); \
+                 the f32 tier applies to --backend native (docs/KERNEL.md)",
+                kind.name()
+            );
             let fmt = QFormat::by_name(precision)
                 .ok_or_else(|| anyhow::anyhow!("unknown precision {precision}"))?;
             Some(DatapathKind::Fixed(fmt))
@@ -185,6 +235,7 @@ fn parse_fault(s: &str) -> Result<SensorFault> {
 
 fn serve(args: &Args) -> Result<i32> {
     let cfg = experiment_config(args)?;
+    ensure_f64_tier(&cfg, "`serve` (the streaming pipeline)")?;
     if cfg.channels > 1 {
         return serve_multi(args, &cfg);
     }
@@ -283,13 +334,17 @@ fn serve_multi(args: &Args, cfg: &crate::config::ExperimentConfig) -> Result<i32
     Ok(0)
 }
 
-/// Kernel micro-benchmark suite (single-stream speedup + batched
-/// throughput scaling); writes `BENCH_kernel.json` for the perf
-/// trajectory tooling.
+/// Kernel micro-benchmark suite (single-stream speedup, batched
+/// throughput scaling, and the precision-tier ns/step latency harness);
+/// writes `BENCH_kernel.json` for the perf trajectory tooling.
 fn bench(args: &Args) -> Result<i32> {
+    use crate::bench::kernel::TierSelect;
     let out = std::path::PathBuf::from(args.get_or("out", "BENCH_kernel.json"));
+    let tiers = TierSelect::parse(args.get_or("precision", "all")).ok_or_else(|| {
+        anyhow::anyhow!("--precision must be all, f64 or f32 for `hrd bench`")
+    })?;
     let summary =
-        crate::bench::kernel::run_kernel_suite(Some(&out), args.has_flag("quick"))?;
+        crate::bench::kernel::run_kernel_suite(Some(&out), args.has_flag("quick"), tiers)?;
     println!("{}", summary.render());
     println!("kernel bench report written to {}", out.display());
     Ok(0)
@@ -304,15 +359,16 @@ fn serve_tcp(args: &Args) -> Result<i32> {
     let params = load_params(&cfg)?;
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let server = crate::coordinator::Server::bind(addr)?;
-    let datapath = fabric_datapath(cfg.backend, &cfg.precision)?;
+    let datapath = fabric_datapath(cfg.backend, &cfg.precision, &cfg.kernel_precision)?;
     match datapath {
         Some(dp) if cfg.shards >= 1 => {
             let fcfg = fabric_config(&cfg, dp)?;
             let fabric = std::sync::Arc::new(crate::sched::Fabric::new(&params, fcfg)?);
             println!(
-                "serving fabric backend={} shards={} batch={} deadline={}us rebalance={} \
-                 on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
+                "serving fabric backend={} datapath={} shards={} batch={} deadline={}us \
+                 rebalance={} on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
                 cfg.backend.name(),
+                dp.name(),
                 fabric.shards(),
                 cfg.batch,
                 cfg.deadline_us,
@@ -328,6 +384,7 @@ fn serve_tcp(args: &Args) -> Result<i32> {
             );
         }
         _ => {
+            ensure_f64_tier(&cfg, "the serial serving path")?;
             if cfg.shards >= 1 && datapath.is_none() {
                 eprintln!(
                     "note: backend {} is not fabric-capable; serving on the serial path",
@@ -430,6 +487,7 @@ fn pareto(args: &Args) -> Result<i32> {
 
 fn record(args: &Args) -> Result<i32> {
     let cfg = experiment_config(args)?;
+    ensure_f64_tier(&cfg, "`record`")?;
     anyhow::ensure!(
         cfg.channels <= 1,
         "record captures a single-channel trace; --channels applies to `serve`"
@@ -463,6 +521,7 @@ fn replay(args: &Args) -> Result<i32> {
     let input = args.get("in").ok_or_else(|| anyhow::anyhow!("replay needs --in <file>"))?;
     let trace = crate::coordinator::Trace::load(std::path::Path::new(input))?;
     let cfg = experiment_config(args)?;
+    ensure_f64_tier(&cfg, "`replay`")?;
     let params = load_params(&cfg)?;
     let mut backend = build_backend(
         cfg.backend,
@@ -605,6 +664,72 @@ mod tests {
         assert_eq!(dispatch(&a).unwrap(), 0);
         let j = crate::util::Json::parse_file(&out).unwrap();
         assert_eq!(j.get("group").unwrap().as_str(), Some("kernel"));
+    }
+
+    /// Satellite: the precision tier threads from `--precision` through
+    /// the config into the fabric datapath, without disturbing the
+    /// fixed-point precision vocabulary.
+    #[test]
+    fn precision_tier_selects_the_f32_datapath() {
+        use crate::sched::DatapathKind;
+        let a = parse(&["serve-tcp", "--backend", "native", "--precision", "f32"]);
+        let cfg = experiment_config(&a).unwrap();
+        assert_eq!(cfg.kernel_precision, "f32");
+        assert_eq!(cfg.precision, "fp32", "fixed-point precision untouched");
+        let dp = fabric_datapath(cfg.backend, &cfg.precision, &cfg.kernel_precision).unwrap();
+        assert_eq!(dp, Some(DatapathKind::FloatF32));
+        // Default stays on the exact tier.
+        let cfg = experiment_config(&parse(&["serve-tcp", "--backend", "native"])).unwrap();
+        assert_eq!(cfg.kernel_precision, "f64");
+        let dp = fabric_datapath(cfg.backend, &cfg.precision, &cfg.kernel_precision).unwrap();
+        assert_eq!(dp, Some(DatapathKind::Float));
+        // Fixed-point names still route to the quantized vocabulary.
+        let a = parse(&["serve-tcp", "--backend", "quantized", "--precision", "fp8"]);
+        let cfg = experiment_config(&a).unwrap();
+        assert_eq!(cfg.precision, "fp8");
+        assert_eq!(cfg.kernel_precision, "f64");
+        assert!(matches!(
+            fabric_datapath(cfg.backend, &cfg.precision, &cfg.kernel_precision).unwrap(),
+            Some(DatapathKind::Fixed(_))
+        ));
+        // A broken [kernel] precision value fails loudly at serve time.
+        assert!(fabric_datapath(BackendKind::Native, "fp32", "f33").is_err());
+        // Fixed-point fabrics refuse an explicit f32 tier (their
+        // precision axis is the Q-format) instead of silently ignoring
+        // it.
+        for kind in [BackendKind::Quantized, BackendKind::FpgaSim] {
+            let err = fabric_datapath(kind, "fp16", "f32").unwrap_err();
+            assert!(format!("{err}").contains("fixed-point"), "{err}");
+        }
+    }
+
+    /// The tier flag must never be silently dropped: subcommands whose
+    /// paths have no f32 lowering refuse it loudly (before the tier
+    /// existed, `--precision f32` failed loudly at QFormat::by_name).
+    #[test]
+    fn serial_paths_refuse_the_f32_tier() {
+        let a = parse(&["serve", "--backend", "native", "--precision", "f32", "--steps", "5"]);
+        let err = dispatch(&a).unwrap_err();
+        assert!(format!("{err}").contains("f64-exact"), "{err}");
+        let a = parse(&["serve", "--backend", "quantized", "--precision", "f32", "--steps", "5"]);
+        assert!(dispatch(&a).is_err(), "quantized serve must stay loud on --precision f32");
+        // The helper itself guards record/replay/serial serve-tcp too.
+        let mut cfg = ExperimentConfig::default();
+        cfg.kernel_precision = "f32".into();
+        assert!(ensure_f64_tier(&cfg, "x").is_err());
+        cfg.kernel_precision = "f64".into();
+        assert!(ensure_f64_tier(&cfg, "x").is_ok());
+    }
+
+    #[test]
+    fn bench_precision_filter_is_validated() {
+        let out = std::env::temp_dir().join("hrd_cli_bench_f64.json");
+        let _ = std::fs::remove_file(&out);
+        let a = parse(&["bench", "--quick", "--precision", "f64", "--out", out.to_str().unwrap()]);
+        assert_eq!(dispatch(&a).unwrap(), 0);
+        assert!(out.exists());
+        let a = parse(&["bench", "--quick", "--precision", "fp16"]);
+        assert!(dispatch(&a).is_err(), "fixed-point names are not bench tiers");
     }
 
     #[test]

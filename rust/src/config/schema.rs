@@ -55,6 +55,11 @@ pub struct ExperimentConfig {
     pub backend: BackendKind,
     /// Paper precision name for quantized/fpga backends ("fp32"/"fp16"/"fp8").
     pub precision: String,
+    /// Float-datapath precision tier for kernel-backed serving
+    /// (`[kernel] precision`, "f64" exact | "f32" SIMD fast path — see
+    /// docs/KERNEL.md).  Also settable as `--precision f64|f32`; the
+    /// two precision vocabularies are disjoint, so one flag serves both.
+    pub kernel_precision: String,
     /// Roller profile kind driving the simulated testbed.
     pub profile: String,
     /// Number of model steps (windows) to stream.
@@ -95,6 +100,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             backend: BackendKind::Pjrt,
             precision: "fp32".into(),
+            kernel_precision: "f64".into(),
             profile: "steps".into(),
             steps: 2000,
             deadline_us: crate::arch::RTOS_PERIOD_US,
@@ -129,6 +135,7 @@ impl ExperimentConfig {
             backend: BackendKind::parse(&doc.get_str("backend", d.backend.name()))
                 .unwrap_or(d.backend),
             precision: doc.get_str("precision", &d.precision),
+            kernel_precision: doc.get_str("kernel.precision", &d.kernel_precision),
             profile: doc.get_str("profile", &d.profile),
             steps: doc.get_i64("steps", d.steps as i64).max(1) as usize,
             deadline_us: doc.get_f64("deadline_us", d.deadline_us),
@@ -171,6 +178,9 @@ precision = "fp16"
 steps = 100
 deadline_us = 250.0
 
+[kernel]
+precision = "f32"
+
 [fpga]
 platform = "zcu104"
 parallelism = 2
@@ -187,6 +197,12 @@ rebalance = true
         let c = ExperimentConfig::from_doc(&doc);
         assert_eq!(c.backend, BackendKind::FpgaSim);
         assert_eq!(c.precision, "fp16");
+        assert_eq!(c.kernel_precision, "f32", "[kernel] precision is its own key");
+        assert_eq!(
+            ExperimentConfig::default().kernel_precision,
+            "f64",
+            "exact tier by default"
+        );
         assert_eq!(c.steps, 100);
         assert_eq!(c.platform, "zcu104");
         assert_eq!(c.parallelism, 2);

@@ -42,12 +42,12 @@ pub struct BatchKernel<P: Datapath> {
 }
 
 /// Add one weight row (4 gate weights of one unit) times one input row
-/// (B stream lanes) into the unit's gate lanes.
+/// (B stream lanes) into the unit's four pre-split gate lanes.  The
+/// caller splits `zu` into the gate lanes ONCE per unit per pass
+/// ([`split_gate_lanes`]) — this body is pure accumulation, no
+/// re-slicing per weight row.
 #[inline]
-fn accumulate_row(zu: &mut [f64], w4: &[f64], xrow: &[f64], bsz: usize) {
-    let (zi, rest) = zu.split_at_mut(bsz);
-    let (zf, rest) = rest.split_at_mut(bsz);
-    let (zg, zo) = rest.split_at_mut(bsz);
+fn accumulate_row(zi: &mut [f64], zf: &mut [f64], zg: &mut [f64], zo: &mut [f64], w4: &[f64], xrow: &[f64]) {
     let (wi, wf, wg, wo) = (w4[0], w4[1], w4[2], w4[3]);
     for (b, &xv) in xrow.iter().enumerate() {
         zi[b] += xv * wi;
@@ -55,6 +55,17 @@ fn accumulate_row(zu: &mut [f64], w4: &[f64], xrow: &[f64], bsz: usize) {
         zg[b] += xv * wg;
         zo[b] += xv * wo;
     }
+}
+
+/// Split one unit's gate buffer into its four B-lane slices, asserting
+/// the lane-slice geometry once (instead of on every weight row).
+#[inline]
+fn split_gate_lanes(zu: &mut [f64], bsz: usize) -> (&mut [f64], &mut [f64], &mut [f64], &mut [f64]) {
+    assert_eq!(zu.len(), 4 * bsz, "gate buffer must hold 4 lanes of {bsz} streams");
+    let (zi, rest) = zu.split_at_mut(bsz);
+    let (zf, rest) = rest.split_at_mut(bsz);
+    let (zg, zo) = rest.split_at_mut(bsz);
+    (zi, zf, zg, zo)
 }
 
 impl<P: Datapath> BatchKernel<P> {
@@ -101,18 +112,24 @@ impl<P: Datapath> BatchKernel<P> {
                     let (below, rest) = h.split_at(il);
                     (&below[il - 1][..], &rest[0][..])
                 };
+                // Input geometry asserted once per layer per pass; the
+                // per-unit gate split happens once per unit (not per
+                // weight row) below.
+                assert_eq!(xin.len(), layer.input_size * bsz, "layer input lanes");
+                assert!(hcur.len() >= hidden * bsz, "recurrent input lanes");
                 for u in 0..hidden {
                     let block = layer.unit_block(u);
                     let zu = &mut z[u * 4 * bsz..(u + 1) * 4 * bsz];
                     for g in 0..4 {
                         zu[g * bsz..(g + 1) * bsz].fill(layer.b[4 * u + g]);
                     }
+                    let (zi, zf, zg, zo) = split_gate_lanes(zu, bsz);
                     let (wx, wh) = block.split_at(4 * layer.input_size);
                     for (w4, xrow) in wx.chunks_exact(4).zip(xin.chunks_exact(bsz)) {
-                        accumulate_row(zu, w4, xrow, bsz);
+                        accumulate_row(zi, zf, zg, zo, w4, xrow);
                     }
                     for (w4, hrow) in wh.chunks_exact(4).zip(hcur.chunks_exact(bsz)) {
-                        accumulate_row(zu, w4, hrow, bsz);
+                        accumulate_row(zi, zf, zg, zo, w4, hrow);
                     }
                 }
             }

@@ -18,7 +18,13 @@
 //!   lockstep through one weight pass per layer (SoA state, stream lane
 //!   innermost).
 //! * [`stream`] — [`MultiStream`], the submit/drain session the
-//!   coordinator multiplexes N sensor channels over.
+//!   coordinator multiplexes N sensor channels over (generic over any
+//!   [`StepKernel`]; [`MultiStreamF32`] is the fast-path instantiation).
+//! * [`simd`] — the precision-tiered f32 fast path (`docs/KERNEL.md`):
+//!   padded [`simd::PackedModelF32`] weights, explicitly vectorized
+//!   AVX2+FMA / portable-unrolled inner loops ([`simd::VecBackend`]),
+//!   f32 LUT activations, and the [`simd::Precision`] selector threaded
+//!   through config, CLI and the serving fabric.
 //!
 //! # Packed weight layout
 //!
@@ -68,13 +74,15 @@ pub mod batch;
 pub mod pack;
 pub mod path;
 pub mod scalar;
+pub mod simd;
 pub mod stream;
 
 pub use batch::BatchKernel;
 pub use pack::{PackedLayer, PackedModel};
 pub use path::{Datapath, FixedPath, FloatPath};
 pub use scalar::ScalarKernel;
-pub use stream::MultiStream;
+pub use simd::{BatchKernelF32, PackedModelF32, Precision, ScalarKernelF32, VecBackend};
+pub use stream::{MultiStream, MultiStreamF32, StreamSession};
 
 /// Common contract of the steppers: `batch()` independent recurrent
 /// streams advanced one model step per call, with per-stream state

@@ -1,0 +1,155 @@
+//! Fast f32 activations: the crate's piecewise-linear LUT machinery
+//! ([`crate::fixed::activation::ActLut`]) re-instantiated at f32.
+//!
+//! Same construction as the fixed-point tables — [`LUT_SIZE`] uniform
+//! entries over `[-LUT_RANGE, LUT_RANGE]`, linear interpolation between
+//! entries, hard saturation outside — but the "output format" is plain
+//! f32: entries are the exact f64 functions rounded once to f32, and the
+//! interpolation runs in f32 (one multiply, one add).  Both vector
+//! backends evaluate activations through this same scalar code, so the
+//! EVO stage is bit-identical across [`super::VecBackend`]s by
+//! construction.
+//!
+//! # Error bound (documented, pinned by tests)
+//!
+//! With 1024 entries the interpolation step is `dx = 1/64`, giving a
+//! worst-case piecewise-linear error of `dx^2 / 8 * max|f''|`:
+//! ~2.9e-6 for sigmoid (`max|σ''| ≈ 0.0962`) and ~2.4e-5 for tanh
+//! (`max|tanh''| ≈ 0.77`), plus one f32 rounding of the table entries
+//! and one of the interpolation (≤ 2 ulps at unit scale ≈ 2.4e-7).
+//! The documented guarantees, asserted by `max_error` scans in the
+//! tests, are
+//!
+//! * `|lut_sigmoid(x) - sigmoid_exact(x)| <= 1e-5`  (≈  84 ulps of f32 at 1.0)
+//! * `|lut_tanh(x)    - tanh(x)|          <= 5e-5`  (≈ 420 ulps of f32 at 1.0)
+//!
+//! over the full table range; outside it the tables saturate exactly
+//! like the fixed-point LUTs (|x| ≥ 8, where sigmoid is within 3.4e-4 of
+//! its asymptote).
+
+use std::sync::OnceLock;
+
+use crate::fixed::activation::{sigmoid_exact, LUT_RANGE, LUT_SIZE};
+
+/// Documented max absolute LUT error vs `sigmoid_exact` (see module doc).
+pub const SIGMOID_MAX_ABS_ERR: f64 = 1e-5;
+/// Documented max absolute LUT error vs `f64::tanh` (see module doc).
+pub const TANH_MAX_ABS_ERR: f64 = 5e-5;
+
+/// f32 sigmoid/tanh tables shared by every f32 kernel (model-independent,
+/// built once per process).
+#[derive(Debug)]
+pub struct ActTableF32 {
+    sigmoid: Vec<f32>,
+    tanh: Vec<f32>,
+}
+
+/// The process-wide table pair.
+pub fn act_tables() -> &'static ActTableF32 {
+    static TABLES: OnceLock<ActTableF32> = OnceLock::new();
+    TABLES.get_or_init(ActTableF32::new)
+}
+
+impl ActTableF32 {
+    fn new() -> Self {
+        let mut sigmoid = Vec::with_capacity(LUT_SIZE + 1);
+        let mut tanh = Vec::with_capacity(LUT_SIZE + 1);
+        // One extra entry so interpolation at the top edge has a
+        // neighbour (same shape as the fixed-point tables).
+        for i in 0..=LUT_SIZE {
+            let x = -LUT_RANGE + 2.0 * LUT_RANGE * (i as f64) / (LUT_SIZE as f64);
+            sigmoid.push(sigmoid_exact(x) as f32);
+            tanh.push(x.tanh() as f32);
+        }
+        Self { sigmoid, tanh }
+    }
+
+    #[inline]
+    fn lookup(table: &[f32], x: f32) -> f32 {
+        const RANGE: f32 = LUT_RANGE as f32;
+        const SCALE: f32 = LUT_SIZE as f32 / (2.0 * RANGE);
+        if x <= -RANGE {
+            return table[0];
+        }
+        if x >= RANGE {
+            return table[LUT_SIZE];
+        }
+        let pos = (x + RANGE) * SCALE;
+        // `pos` is non-negative, so the cast truncates == floors; the
+        // `min` guards the one-ulp case where `x + RANGE` rounds up to
+        // the full range and `idx + 1` would walk off the table.
+        let idx = (pos as usize).min(LUT_SIZE - 1);
+        let frac = pos - idx as f32;
+        frac.mul_add(table[idx + 1] - table[idx], table[idx])
+    }
+
+    /// LUT sigmoid, f32 in/out.
+    #[inline]
+    pub fn sigmoid(&self, x: f32) -> f32 {
+        Self::lookup(&self.sigmoid, x)
+    }
+
+    /// LUT tanh, f32 in/out.
+    #[inline]
+    pub fn tanh(&self, x: f32) -> f32 {
+        Self::lookup(&self.tanh, x)
+    }
+
+    /// Worst-case absolute error vs the exact f64 functions over the
+    /// table range, scanned densely (documentation + the bound tests).
+    pub fn max_error(&self) -> (f64, f64) {
+        let mut es = 0.0f64;
+        let mut et = 0.0f64;
+        let n = 40_000;
+        for i in 0..=n {
+            let x = -LUT_RANGE + 2.0 * LUT_RANGE * i as f64 / n as f64;
+            es = es.max((self.sigmoid(x as f32) as f64 - sigmoid_exact(x)).abs());
+            et = et.max((self.tanh(x as f32) as f64 - x.tanh()).abs());
+        }
+        (es, et)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_bounds_hold_as_documented() {
+        let (es, et) = act_tables().max_error();
+        assert!(es <= SIGMOID_MAX_ABS_ERR, "sigmoid LUT error {es} > {SIGMOID_MAX_ABS_ERR}");
+        assert!(et <= TANH_MAX_ABS_ERR, "tanh LUT error {et} > {TANH_MAX_ABS_ERR}");
+        // The bounds are tight enough to mean something (not vacuous).
+        assert!(es > 0.0 && et > 0.0);
+    }
+
+    #[test]
+    fn saturation_and_fixed_points() {
+        let t = act_tables();
+        assert_eq!(t.sigmoid(100.0), t.sigmoid(8.0));
+        assert_eq!(t.sigmoid(-100.0), t.sigmoid(-8.0));
+        assert_eq!(t.tanh(100.0), t.tanh(8.0));
+        assert_eq!(t.tanh(0.0), 0.0);
+        assert_eq!(t.sigmoid(0.0), 0.5);
+        assert!(t.sigmoid(8.0) > 0.999 && t.tanh(-8.0) < -0.999);
+        // Top-edge interpolation must not walk off the table (the
+        // one-ulp-below-range case the idx clamp guards).
+        let just_under = f32::from_bits((8.0f32).to_bits() - 1);
+        assert!(t.sigmoid(just_under).is_finite());
+        assert!(t.tanh(just_under).is_finite());
+    }
+
+    #[test]
+    fn monotonic_nondecreasing() {
+        let t = act_tables();
+        let (mut ps, mut pt) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for i in 0..4000 {
+            let x = -10.0 + 20.0 * i as f32 / 4000.0;
+            let (s, th) = (t.sigmoid(x), t.tanh(x));
+            assert!(s >= ps, "sigmoid not monotonic at {x}");
+            assert!(th >= pt, "tanh not monotonic at {x}");
+            ps = s;
+            pt = th;
+        }
+    }
+}

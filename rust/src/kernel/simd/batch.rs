@@ -1,0 +1,430 @@
+//! The f32 steppers of the fast path: [`BatchKernelF32`] (B streams per
+//! weight pass) and [`ScalarKernelF32`] (the single-stream view).
+//!
+//! Unlike the f64 [`BatchKernel`](crate::kernel::BatchKernel), which
+//! lays state out stream-innermost and batches *across* lanes, the f32
+//! kernels vectorize *within* a stream — across hidden units, 8 at a
+//! time — and keep each stream's state contiguous.  A stream's
+//! accumulation sequence is therefore exactly the same whether it runs
+//! alone (B = 1) or inside any batch, which is what makes the strong
+//! per-tier guarantee hold: **f32 results are bit-identical across batch
+//! widths, partial drains, and both vector backends.**  The batched pass
+//! still amortizes the weight scan — each packed row is read once per
+//! stream back to back while hot in L1, and every read feeds a full
+//! 8-lane FMA.
+//!
+//! Numerics of the tier (documented in `docs/KERNEL.md`):
+//! inputs normalized in f64 then truncated to f32; MVO and the dense
+//! head in fused f32 multiply-adds; activations through the shared f32
+//! LUT ([`super::act`]); EVO in plain f32.  The end-to-end envelope vs
+//! the f64-exact tier is pinned by `rust/tests/kernel_f32.rs`.
+
+use std::sync::Arc;
+
+use super::act::act_tables;
+use super::pack::PackedModelF32;
+use super::vec::VecBackend;
+use crate::kernel::StepKernel;
+
+/// Documented end-to-end absolute-error envelope of the f32-fast tier
+/// vs the f64-exact tier, in output units (metres), for the paper
+/// architecture (16-15-3) over DROPBEAR-scale inputs.  Dominated by the
+/// LUT activation error recirculating through the cell state; pinned by
+/// `f32_fast_tracks_f64_exact_within_envelope` in
+/// `rust/tests/kernel_f32.rs`.
+pub const F32_FAST_MAX_ABS_ERR: f64 = 2e-2;
+
+/// Allocation-free B-stream f32 stepper with resident padded `(h, c)`
+/// state (`[stream][unit]`, stream-contiguous).
+#[derive(Debug, Clone)]
+pub struct BatchKernelF32 {
+    packed: Arc<PackedModelF32>,
+    backend: VecBackend,
+    batch: usize,
+    /// Per-layer hidden state, `h[layer][b * hidden_pad + u]`; padding
+    /// lanes stay 0.0 forever (asserted by construction — they are
+    /// never written by EVO and never read as inputs).
+    h: Vec<Vec<f32>>,
+    /// Per-layer cell state, same layout.
+    c: Vec<Vec<f32>>,
+    /// Stream-major conditioned inputs, `xt[b * input_size + r]`.
+    xt: Vec<f32>,
+    /// Per-stream gate lanes of the widest layer,
+    /// `zbuf[b * 4*max_hidden_pad ..][g * hidden_pad + u]`.
+    zbuf: Vec<f32>,
+    /// Per-stream normalized outputs (scratch).
+    ysf: Vec<f32>,
+}
+
+impl BatchKernelF32 {
+    /// Kernel over the fastest backend this machine supports.
+    pub fn new(packed: Arc<PackedModelF32>, batch: usize) -> Self {
+        Self::with_backend(packed, VecBackend::detect(), batch)
+    }
+
+    /// Kernel over an explicit backend (the bit-parity tests and the
+    /// latency harness pin `Portable` against the detected path).
+    pub fn with_backend(packed: Arc<PackedModelF32>, backend: VecBackend, batch: usize) -> Self {
+        assert!(batch >= 1, "batch kernel needs at least one stream");
+        let h = packed.layers.iter().map(|l| vec![0.0; l.hidden_pad * batch]).collect();
+        let c = packed.layers.iter().map(|l| vec![0.0; l.hidden_pad * batch]).collect();
+        let xt = vec![0.0; packed.input_size() * batch];
+        let zbuf = vec![0.0; 4 * packed.max_hidden_pad() * batch];
+        let ysf = vec![0.0; batch];
+        Self { packed, backend, batch, h, c, xt, zbuf, ysf }
+    }
+
+    pub fn packed(&self) -> &Arc<PackedModelF32> {
+        &self.packed
+    }
+
+    pub fn backend(&self) -> VecBackend {
+        self.backend
+    }
+
+    pub fn reset_all(&mut self) {
+        for hl in &mut self.h {
+            hl.fill(0.0);
+        }
+        for cl in &mut self.c {
+            cl.fill(0.0);
+        }
+    }
+
+    /// One batched step on already-conditioned f32 features (`xs`
+    /// stream-major, `batch * input_size`); one normalized f32 output
+    /// per stream.  The f64 [`StepKernel`] entry point wraps this.
+    pub fn step_f32(&mut self, xs: &[f32], ys: &mut [f32]) {
+        let isz = self.packed.input_size();
+        assert_eq!(xs.len(), isz * self.batch, "xs must hold batch * input_size features");
+        assert!(ys.len() >= self.batch, "ys must hold one output per stream");
+        self.xt.copy_from_slice(xs);
+        self.forward();
+        ys[..self.batch].copy_from_slice(&self.ysf);
+    }
+
+    fn forward(&mut self) {
+        let Self { packed, backend, batch, h, c, xt, zbuf, ysf } = self;
+        let bsz = *batch;
+        let lut = act_tables();
+        let zstride = 4 * packed.max_hidden_pad();
+        let n_layers = packed.layers.len();
+        for il in 0..n_layers {
+            let layer = &packed.layers[il];
+            let (hp, hidden, isz) = (layer.hidden_pad, layer.hidden, layer.input_size);
+            // Length invariant, checked once per pass per layer: every
+            // row_fma below moves whole vectors over these exact spans.
+            debug_assert_eq!(layer.b.len(), 4 * hp);
+            debug_assert!(zstride >= 4 * hp);
+            // Seed every stream's gate lanes with the bias block (one
+            // copy — the bias is stored pre-interleaved and pre-padded).
+            for b in 0..bsz {
+                zbuf[b * zstride..b * zstride + 4 * hp].copy_from_slice(&layer.b);
+            }
+            // MVO: one fused multiply-add of the whole 4*Hp weight row
+            // per (input row, stream).  Rows ascend input-first then
+            // recurrent — the crate-wide accumulation order — and the
+            // row stays L1-hot across the B streams.
+            {
+                let (below, cur_up) = h.split_at(il);
+                let hcur = &cur_up[0];
+                let (xin, xin_stride): (&[f32], usize) = if il == 0 {
+                    (&xt[..], isz)
+                } else {
+                    (&below[il - 1][..], packed.layers[il - 1].hidden_pad)
+                };
+                for r in 0..isz {
+                    let wrow = layer.weight_row(r);
+                    for b in 0..bsz {
+                        let zb = &mut zbuf[b * zstride..b * zstride + 4 * hp];
+                        backend.row_fma(zb, wrow, xin[b * xin_stride + r]);
+                    }
+                }
+                for r in 0..hidden {
+                    let wrow = layer.weight_row(isz + r);
+                    for b in 0..bsz {
+                        let zb = &mut zbuf[b * zstride..b * zstride + 4 * hp];
+                        backend.row_fma(zb, wrow, hcur[b * hp + r]);
+                    }
+                }
+            }
+            // EVO: shared scalar f32 code — identical across backends,
+            // so activation rounding can never diverge between them.
+            // Padding lanes (u >= hidden) are skipped: never written,
+            // never read.
+            let hl = &mut h[il];
+            let cl = &mut c[il];
+            for b in 0..bsz {
+                let z = &zbuf[b * zstride..b * zstride + 4 * hp];
+                let hs = &mut hl[b * hp..(b + 1) * hp];
+                let cs = &mut cl[b * hp..(b + 1) * hp];
+                for u in 0..hidden {
+                    let i = lut.sigmoid(z[u]);
+                    let f = lut.sigmoid(z[hp + u]);
+                    let g = lut.tanh(z[2 * hp + u]);
+                    let o = lut.sigmoid(z[3 * hp + u]);
+                    let c_new = f * cs[u] + i * g;
+                    cs[u] = c_new;
+                    hs[u] = o * lut.tanh(c_new);
+                }
+            }
+        }
+        // Dense head: scalar fused multiply-adds in unit order (shared
+        // by both backends; 15 terms — not worth a reduction tree that
+        // would change the summation order).
+        let top_layer = &packed.layers[n_layers - 1];
+        let (tp, th) = (top_layer.hidden_pad, top_layer.hidden);
+        let top = &h[n_layers - 1];
+        for b in 0..bsz {
+            let mut y = packed.dense_b;
+            for (hv, wv) in top[b * tp..b * tp + th].iter().zip(&packed.dense_w) {
+                y = hv.mul_add(*wv, y);
+            }
+            ysf[b] = y;
+        }
+    }
+}
+
+impl StepKernel for BatchKernelF32 {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn input_size(&self) -> usize {
+        self.packed.input_size()
+    }
+
+    fn state_len(&self) -> usize {
+        self.packed.state_len()
+    }
+
+    /// f64 boundary of the fast path: already-normalized f64 features
+    /// in (truncated to f32 here — the tier's input conditioning),
+    /// f32 results widened to f64 out.
+    fn step_normalized(&mut self, xs: &[f64], ys: &mut [f64]) {
+        let isz = self.packed.input_size();
+        assert_eq!(xs.len(), isz * self.batch, "xs must hold batch * input_size features");
+        assert!(ys.len() >= self.batch, "ys must hold one output per stream");
+        for (dst, &v) in self.xt.iter_mut().zip(xs) {
+            *dst = v as f32;
+        }
+        self.forward();
+        for (dst, &v) in ys.iter_mut().zip(&self.ysf) {
+            *dst = v as f64;
+        }
+    }
+
+    fn reset_stream(&mut self, stream: usize) {
+        assert!(stream < self.batch, "stream {stream} out of range (batch {})", self.batch);
+        for (layer, (hl, cl)) in self.packed.layers.iter().zip(self.h.iter_mut().zip(&mut self.c))
+        {
+            let hp = layer.hidden_pad;
+            hl[stream * hp..(stream + 1) * hp].fill(0.0);
+            cl[stream * hp..(stream + 1) * hp].fill(0.0);
+        }
+    }
+
+    /// Exported values widen f32 -> f64 losslessly, so a round trip
+    /// through [`StepKernel::import_state`] (or a migration across
+    /// shards) restores the exact bits.
+    fn export_state(&self, stream: usize, out: &mut [f64]) {
+        assert!(stream < self.batch, "stream {stream} out of range (batch {})", self.batch);
+        let mut k = 0;
+        for (layer, (hl, cl)) in self.packed.layers.iter().zip(self.h.iter().zip(&self.c)) {
+            let hp = layer.hidden_pad;
+            for u in 0..layer.hidden {
+                out[k] = hl[stream * hp + u] as f64;
+                k += 1;
+            }
+            for u in 0..layer.hidden {
+                out[k] = cl[stream * hp + u] as f64;
+                k += 1;
+            }
+        }
+    }
+
+    fn import_state(&mut self, stream: usize, src: &[f64]) {
+        assert!(stream < self.batch, "stream {stream} out of range (batch {})", self.batch);
+        let mut k = 0;
+        for (layer, (hl, cl)) in self.packed.layers.iter().zip(self.h.iter_mut().zip(&mut self.c))
+        {
+            let hp = layer.hidden_pad;
+            for u in 0..layer.hidden {
+                hl[stream * hp + u] = src[k] as f32;
+                k += 1;
+            }
+            for u in 0..layer.hidden {
+                cl[stream * hp + u] = src[k] as f32;
+                k += 1;
+            }
+        }
+    }
+}
+
+/// Single-stream view of the fast path (a [`BatchKernelF32`] with one
+/// lane — per-stream accumulation order is batch-width-independent, so
+/// this IS the batched kernel's per-stream reference, bit for bit).
+#[derive(Debug, Clone)]
+pub struct ScalarKernelF32 {
+    inner: BatchKernelF32,
+    /// Conditioned-input scratch for [`Self::step_window`].
+    xbuf: Vec<f32>,
+}
+
+impl ScalarKernelF32 {
+    pub fn new(packed: Arc<PackedModelF32>) -> Self {
+        Self::with_backend(packed, VecBackend::detect())
+    }
+
+    pub fn with_backend(packed: Arc<PackedModelF32>, backend: VecBackend) -> Self {
+        let xbuf = vec![0.0; packed.input_size()];
+        Self { inner: BatchKernelF32::with_backend(packed, backend, 1), xbuf }
+    }
+
+    pub fn packed(&self) -> &Arc<PackedModelF32> {
+        self.inner.packed()
+    }
+
+    pub fn backend(&self) -> VecBackend {
+        self.inner.backend()
+    }
+
+    /// Zero the recurrent state (new monitoring session).
+    pub fn reset(&mut self) {
+        self.inner.reset_all();
+    }
+
+    /// Full sensor-to-estimate step: raw acceleration window in, roller
+    /// position estimate (metres) out.  Conditioning matches the serving
+    /// path exactly (normalize in f64, truncate to f32), so fabric-f32
+    /// estimates are bit-comparable against this reference.
+    pub fn step_window(&mut self, window: &[f32]) -> f64 {
+        let norm = self.inner.packed().norm;
+        for (dst, &v) in self.xbuf.iter_mut().zip(window) {
+            *dst = norm.normalize_x(v as f64) as f32;
+        }
+        let mut y = [0.0f32; 1];
+        self.inner.step_f32(&self.xbuf, &mut y);
+        norm.denormalize_y(y[0] as f64)
+    }
+}
+
+impl StepKernel for ScalarKernelF32 {
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn input_size(&self) -> usize {
+        self.inner.input_size()
+    }
+
+    fn state_len(&self) -> usize {
+        self.inner.state_len()
+    }
+
+    fn step_normalized(&mut self, xs: &[f64], ys: &mut [f64]) {
+        self.inner.step_normalized(xs, ys);
+    }
+
+    fn reset_stream(&mut self, stream: usize) {
+        self.inner.reset_stream(stream);
+    }
+
+    fn export_state(&self, stream: usize, out: &mut [f64]) {
+        self.inner.export_state(stream, out);
+    }
+
+    fn import_state(&mut self, stream: usize, src: &[f64]) {
+        self.inner.import_state(stream, src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::params::LstmParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn batch_width_does_not_change_a_stream_result() {
+        let p = LstmParams::init(16, 15, 3, 1, 77);
+        let packed = PackedModelF32::shared(&p);
+        let bsz = 3;
+        let mut batch = BatchKernelF32::new(packed.clone(), bsz);
+        let mut singles: Vec<_> = (0..bsz).map(|_| ScalarKernelF32::new(packed.clone())).collect();
+        let mut rng = Rng::new(9);
+        let mut ys = vec![0.0f32; bsz];
+        for _ in 0..40 {
+            let xs: Vec<f32> = (0..bsz * 16).map(|_| rng.uniform(-1.5, 1.5) as f32).collect();
+            batch.step_f32(&xs, &mut ys);
+            for (b, single) in singles.iter_mut().enumerate() {
+                let mut y1 = [0.0f32; 1];
+                single.inner.step_f32(&xs[b * 16..(b + 1) * 16], &mut y1);
+                assert_eq!(ys[b], y1[0], "stream {b} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn per_stream_reset_is_isolated_and_padding_stays_zero() {
+        let p = LstmParams::init(8, 6, 2, 1, 4);
+        let mut k = BatchKernelF32::new(PackedModelF32::shared(&p), 2);
+        let mut ys = [0.0f32; 2];
+        let xs: Vec<f32> = (0..16).map(|i| 0.1 * i as f32 - 0.6).collect();
+        k.step_f32(&xs, &mut ys);
+        let first = ys;
+        k.step_f32(&xs, &mut ys);
+        k.reset_stream(0);
+        let mut snap = vec![0.0f64; k.state_len()];
+        k.export_state(1, &mut snap);
+        assert!(snap.iter().any(|&v| v != 0.0), "stream 1 state must survive");
+        k.step_f32(&xs, &mut ys);
+        assert_eq!(ys[0], first[0]);
+        assert_ne!(ys[1], first[1]);
+        // Padding lanes (6 units pad to 8) never accumulate state.
+        for (layer, hl) in k.packed.layers.iter().zip(&k.h) {
+            for b in 0..2 {
+                for u in layer.hidden..layer.hidden_pad {
+                    assert_eq!(hl[b * layer.hidden_pad + u], 0.0, "padding lane touched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn state_roundtrips_losslessly_through_f64() {
+        let p = LstmParams::init(8, 6, 2, 1, 11);
+        let packed = PackedModelF32::shared(&p);
+        let mut a = ScalarKernelF32::new(packed.clone());
+        let mut rng = Rng::new(3);
+        for _ in 0..5 {
+            let w: Vec<f32> = (0..8).map(|_| rng.uniform(-50.0, 50.0) as f32).collect();
+            a.step_window(&w);
+        }
+        let mut snap = vec![0.0f64; a.state_len()];
+        a.export_state(0, &mut snap);
+        // Widening is lossless: every exported value is exactly
+        // f32-representable.
+        for &v in &snap {
+            assert_eq!(v, (v as f32) as f64, "export widened lossily");
+        }
+        let mut b = ScalarKernelF32::new(packed);
+        b.import_state(0, &snap);
+        let w = vec![0.5f32; 8];
+        assert_eq!(a.step_window(&w), b.step_window(&w));
+    }
+
+    #[test]
+    fn backends_agree_on_a_random_stream() {
+        let p = LstmParams::init(16, 15, 3, 1, 1234);
+        let packed = PackedModelF32::shared(&p);
+        let mut det = ScalarKernelF32::new(packed.clone());
+        let mut port = ScalarKernelF32::with_backend(packed, VecBackend::Portable);
+        let mut rng = Rng::new(7);
+        for step in 0..60 {
+            let w: Vec<f32> = (0..16).map(|_| rng.uniform(-80.0, 80.0) as f32).collect();
+            let (a, b) = (det.step_window(&w), port.step_window(&w));
+            assert_eq!(a, b, "backends diverged at step {step} ({})", det.backend().name());
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! `kernel::simd` — the precision-tiered f32 fast path (spec:
+//! `docs/KERNEL.md`).
+//!
+//! The paper's headline number is raw step latency (1.42 µs on an Alveo
+//! U55C); the software datapath chases it with a reduced-precision tier
+//! next to the exact one:
+//!
+//! | tier          | numerics                                    | kernels |
+//! |---------------|---------------------------------------------|---------|
+//! | **f64-exact** | exact f64, `sigmoid_exact`/`tanh`           | [`crate::kernel::ScalarKernel`], [`crate::kernel::BatchKernel`] |
+//! | **f32-fast**  | fused f32 MVO, f32 LUT activations          | [`ScalarKernelF32`], [`BatchKernelF32`] |
+//!
+//! Pieces:
+//!
+//! * [`pack`] — [`PackedModelF32`]: gate-lane-major f32 weights, every
+//!   row padded to a whole number of vector widths ([`LANES`]).
+//! * [`vec`] — [`VecBackend`]: the explicit vector inner loop.  AVX2+FMA
+//!   `std::arch` intrinsics behind *runtime* detection (x86_64, `simd`
+//!   cargo feature), with a manually 8-lane-unrolled `f32::mul_add`
+//!   fallback that is **bit-identical** to the intrinsic path.
+//! * [`act`] — [`ActTableF32`]: the LUT activation machinery
+//!   re-instantiated at f32, with documented error bounds
+//!   ([`SIGMOID_MAX_ABS_ERR`], [`TANH_MAX_ABS_ERR`]).
+//! * [`batch`] — the steppers.  Per-stream accumulation order is batch-
+//!   width-independent, so f32 results are bit-identical across
+//!   B ∈ {1, 4, 17, ...}, partial drains, and both backends.
+//!
+//! Guarantees (each pinned by `rust/tests/kernel_f32.rs`):
+//!
+//! * **within the f32 tier**: bit-parity across backends, batch widths,
+//!   partial drains, state export/import and shard migration;
+//! * **across tiers**: f32-fast tracks f64-exact within the documented
+//!   envelope [`F32_FAST_MAX_ABS_ERR`];
+//! * **on the wire**: exported f32 state widens to f64 losslessly, so
+//!   `sched` migration semantics are unchanged per tier.
+
+pub mod act;
+pub mod batch;
+pub mod pack;
+pub mod vec;
+
+pub use act::{act_tables, ActTableF32, SIGMOID_MAX_ABS_ERR, TANH_MAX_ABS_ERR};
+pub use batch::{BatchKernelF32, ScalarKernelF32, F32_FAST_MAX_ABS_ERR};
+pub use pack::{pad_units, PackedLayerF32, PackedModelF32};
+pub use vec::{VecBackend, LANES};
+
+/// Numeric tier of a float datapath — the knob `[kernel] precision` /
+/// `serve-tcp --precision` / `hrd bench --precision` turn (fixed-point
+/// backends keep their own `fp32`/`fp16`/`fp8` vocabulary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Exact f64 — the paper's RTOS software baseline numerics.
+    #[default]
+    F64Exact,
+    /// The f32 SIMD fast path (this module).
+    F32Fast,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f64" | "f64-exact" | "exact" => Some(Self::F64Exact),
+            "f32" | "f32-fast" | "fast" => Some(Self::F32Fast),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::F64Exact => "f64",
+            Self::F32Fast => "f32",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parses_both_vocabularies() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64Exact));
+        assert_eq!(Precision::parse("exact"), Some(Precision::F64Exact));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32Fast));
+        assert_eq!(Precision::parse("f32-fast"), Some(Precision::F32Fast));
+        // The fixed-point names are NOT tiers — they select QFormats.
+        assert_eq!(Precision::parse("fp32"), None);
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::default(), Precision::F64Exact);
+        assert_eq!(Precision::F32Fast.name(), "f32");
+    }
+}

@@ -1,0 +1,205 @@
+//! The f32 packed weight layout of the SIMD fast path.
+//!
+//! Where the f64 layout ([`crate::kernel::PackedModel`]) interleaves the
+//! four gates per *unit* (so a scalar walk carries four accumulator
+//! chains), the f32 layout interleaves whole *gate-lane rows* and pads
+//! each to a whole number of vector widths, so the MVO becomes one fused
+//! multiply-add of a contiguous `4 * Hp` weight row per input row:
+//!
+//! ```text
+//!  PackedLayerF32::w   ((I+H) rows x 4 gate lanes x Hp units, row-major)
+//!
+//!            |-- lane i --||-- lane f --||-- lane g --||-- lane o --|
+//!   row x0   | u0 .. uH-1 0..0 | u0 .. uH-1 0..0 | ...        | ... |
+//!   row x1   |      (same shape, next input row)                    |
+//!   ..
+//!   row h0   |      (recurrent rows follow the input rows)          |
+//!   ..
+//!
+//!   Hp = H rounded up to a multiple of LANES; padding weights are 0.0
+//! ```
+//!
+//! The z (gate pre-activation) buffer uses the same `[gate][Hp]` shape,
+//! so stepping one input row is exactly `z[0..4*Hp] += x_r * w_row`,
+//! vectorized [`super::vec::LANES`] units at a time with no stride, no
+//! remainder loop, and no branch — the padding lanes accumulate zeros
+//! and are never read back (state, outputs and layer hand-offs all index
+//! `u < H`).
+//!
+//! Per-element accumulation order is bias, then input rows ascending,
+//! then recurrent rows ascending — the same order as every other kernel
+//! in the crate, one fused rounding per term.
+
+use std::sync::Arc;
+
+use crate::lstm::params::{LayerParams, LstmParams, Normalization};
+
+use super::vec::LANES;
+
+/// Round `n` up to a whole number of vector widths.
+#[inline]
+pub fn pad_units(n: usize) -> usize {
+    n.div_ceil(LANES) * LANES
+}
+
+/// One LSTM layer in padded gate-lane form (see the module doc).
+///
+/// `w[(r * 4 + g) * hidden_pad + u] == LayerParams::w[(r, g*H + u)]` for
+/// `u < hidden`, `0.0` for the padding columns; the bias is laid out the
+/// same way (`b[g * hidden_pad + u]`, one contiguous `4 * hidden_pad`
+/// block that seeds z with a single copy).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayerF32 {
+    pub input_size: usize,
+    pub hidden: usize,
+    /// `hidden` rounded up to a multiple of [`LANES`].
+    pub hidden_pad: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl PackedLayerF32 {
+    pub fn from_params(layer: &LayerParams) -> Self {
+        let (isz, h) = (layer.input_size, layer.hidden);
+        let hp = pad_units(h);
+        let rows = isz + h;
+        let mut w = vec![0.0f32; rows * 4 * hp];
+        let mut b = vec![0.0f32; 4 * hp];
+        for g in 0..4 {
+            for u in 0..h {
+                b[g * hp + u] = layer.b[g * h + u] as f32;
+                for r in 0..rows {
+                    w[(r * 4 + g) * hp + u] = layer.w_at(r, g * h + u) as f32;
+                }
+            }
+        }
+        Self { input_size: isz, hidden: h, hidden_pad: hp, w, b }
+    }
+
+    /// Number of concatenated input rows (`I + H`).
+    #[inline]
+    pub fn concat_len(&self) -> usize {
+        self.input_size + self.hidden
+    }
+
+    /// The contiguous `4 * hidden_pad` weight row of concatenated input
+    /// row `r` (`[gate][unit]`, padded).
+    #[inline]
+    pub fn weight_row(&self, r: usize) -> &[f32] {
+        let stride = 4 * self.hidden_pad;
+        &self.w[r * stride..(r + 1) * stride]
+    }
+}
+
+/// A whole stacked model in padded f32 form — the shared compute asset
+/// of the fast path, one packing per deployment.
+#[derive(Debug, Clone)]
+pub struct PackedModelF32 {
+    pub layers: Vec<PackedLayerF32>,
+    /// Dense head weights, padded like a gate lane (padding 0.0).
+    pub dense_w: Vec<f32>,
+    pub dense_b: f32,
+    /// Normalization stays in f64: windows are normalized exactly as on
+    /// the f64 path and truncated to f32 afterwards, so the two tiers
+    /// see identically-conditioned inputs (to f32 rounding).
+    pub norm: Normalization,
+}
+
+impl PackedModelF32 {
+    pub fn from_params(params: &LstmParams) -> Self {
+        assert_eq!(params.out, 1, "kernel layer supports the scalar serving head only");
+        let layers: Vec<PackedLayerF32> =
+            params.layers.iter().map(PackedLayerF32::from_params).collect();
+        let top_pad = layers.last().map(|l| l.hidden_pad).unwrap_or(0);
+        let mut dense_w = vec![0.0f32; top_pad];
+        for (dst, &v) in dense_w.iter_mut().zip(&params.dense_w) {
+            *dst = v as f32;
+        }
+        Self { layers, dense_w, dense_b: params.dense_b[0] as f32, norm: params.norm }
+    }
+
+    /// Pack and wrap in an [`Arc`] ready for sharing across kernels.
+    pub fn shared(params: &LstmParams) -> Arc<Self> {
+        Arc::new(Self::from_params(params))
+    }
+
+    pub fn input_size(&self) -> usize {
+        self.layers[0].input_size
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Widest padded layer (sizes the per-stream gate scratch).
+    pub fn max_hidden_pad(&self) -> usize {
+        self.layers.iter().map(|l| l.hidden_pad).max().unwrap_or(0)
+    }
+
+    /// Flattened per-stream *logical* state length (`h` and `c` of every
+    /// layer, unpadded) — identical to the f64 tier's
+    /// [`crate::kernel::PackedModel::state_len`] for the same model, so
+    /// exported state is interchangeable on the wire.
+    pub fn state_len(&self) -> usize {
+        self.layers.iter().map(|l| 2 * l.hidden).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_rule_and_permutation() {
+        let p = LstmParams::init(5, 7, 2, 1, 3);
+        for layer in &p.layers {
+            let packed = PackedLayerF32::from_params(layer);
+            assert_eq!(packed.hidden_pad, 8, "7 units pad to one vector");
+            assert_eq!(packed.hidden_pad % LANES, 0);
+            let rows = layer.concat_len();
+            assert_eq!(packed.w.len(), rows * 4 * packed.hidden_pad);
+            for r in 0..rows {
+                let row = packed.weight_row(r);
+                assert_eq!(row.len() % LANES, 0, "whole number of vector widths");
+                for g in 0..4 {
+                    for u in 0..packed.hidden_pad {
+                        let want = if u < layer.hidden {
+                            layer.w_at(r, g * layer.hidden + u) as f32
+                        } else {
+                            0.0
+                        };
+                        assert_eq!(row[g * packed.hidden_pad + u], want, "r={r} g={g} u={u}");
+                    }
+                }
+            }
+            for g in 0..4 {
+                for u in 0..packed.hidden_pad {
+                    let want =
+                        if u < layer.hidden { layer.b[g * layer.hidden + u] as f32 } else { 0.0 };
+                    assert_eq!(packed.b[g * packed.hidden_pad + u], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_multiple_gets_no_padding() {
+        let p = LstmParams::init(16, 16, 1, 1, 9);
+        let packed = PackedLayerF32::from_params(&p.layers[0]);
+        assert_eq!(packed.hidden_pad, 16);
+    }
+
+    #[test]
+    fn model_geometry_matches_f64_packing() {
+        let p = LstmParams::init(16, 15, 3, 1, 9);
+        let m = PackedModelF32::from_params(&p);
+        let m64 = crate::kernel::PackedModel::from_params(&p);
+        assert_eq!(m.input_size(), 16);
+        assert_eq!(m.n_layers(), 3);
+        assert_eq!(m.max_hidden_pad(), 16);
+        assert_eq!(m.state_len(), m64.state_len(), "wire state length is tier-independent");
+        assert_eq!(m.dense_w.len(), 16);
+        assert_eq!(m.dense_w[15], 0.0, "dense padding is zero");
+        assert_eq!(m.norm, p.norm);
+    }
+}

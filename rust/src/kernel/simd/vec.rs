@@ -1,0 +1,161 @@
+//! The vector inner loop of the f32 fast path: one fused multiply-add of
+//! a whole packed weight row into a stream's gate lanes.
+//!
+//! Two implementations, selected ONCE at kernel construction (never per
+//! call) and guaranteed bit-identical:
+//!
+//! * [`VecBackend::Avx2Fma`] — `std::arch` AVX2 + FMA intrinsics
+//!   (`_mm256_fmadd_ps`, 8 f32 lanes per instruction), behind *runtime*
+//!   feature detection so a generic x86_64 build still runs everywhere.
+//!   Compiled only on x86_64 with the `simd` cargo feature (on by
+//!   default); `--no-default-features` builds the portable path alone.
+//! * [`VecBackend::Portable`] — a manually 8-lane-unrolled loop of
+//!   `f32::mul_add`.  `mul_add` is the IEEE-754 fused operation (one
+//!   rounding), i.e. exactly what `_mm256_fmadd_ps` performs per lane,
+//!   so the two backends produce the same bits for the same inputs — the
+//!   `kernel_f32` property suite pins this.  On hardware without FMA,
+//!   `mul_add` lowers to the `fmaf` libcall: correct, slow.  The
+//!   portable path is the *correctness reference and fallback*, not a
+//!   performance tier of its own.
+//!
+//! Both require slice lengths that are whole multiples of [`LANES`] —
+//! the padding rule [`super::pack::PackedLayerF32`] enforces at pack
+//! time.  Ragged tails are deliberately unsupported (they would need a
+//! masked epilogue whose rounding behavior differs between paths).
+
+/// f32 lanes per vector step (AVX2 = 256 bits = 8 f32).  The packed f32
+/// layout pads every gate-lane row to a multiple of this.
+pub const LANES: usize = 8;
+
+/// Which inner-loop implementation a kernel runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VecBackend {
+    /// Manually 8-lane-unrolled `f32::mul_add` loop (every target).
+    Portable,
+    /// AVX2 + FMA intrinsics (x86_64, runtime-detected, `simd` feature).
+    #[cfg(all(target_arch = "x86_64", feature = "simd"))]
+    Avx2Fma,
+}
+
+impl VecBackend {
+    /// The fastest backend this machine supports (checked at runtime, so
+    /// one binary serves both old and new x86_64 parts).
+    pub fn detect() -> Self {
+        #[cfg(all(target_arch = "x86_64", feature = "simd"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return Self::Avx2Fma;
+            }
+        }
+        Self::Portable
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Portable => "portable",
+            #[cfg(all(target_arch = "x86_64", feature = "simd"))]
+            Self::Avx2Fma => "avx2+fma",
+        }
+    }
+
+    /// Whether this backend actually issues vector instructions (the
+    /// bench harness only asserts the simd-beats-f64 latency ordering
+    /// when it does).
+    pub fn is_simd(self) -> bool {
+        match self {
+            Self::Portable => false,
+            #[cfg(all(target_arch = "x86_64", feature = "simd"))]
+            Self::Avx2Fma => true,
+        }
+    }
+
+    /// `z[k] = fma(w[k], x, z[k])` over the common whole-vector prefix
+    /// of `z` and `w`.  Callers pass equal, [`LANES`]-multiple lengths
+    /// (debug-asserted); any ragged tail is ignored by BOTH paths, so a
+    /// length bug degrades identically instead of diverging.
+    #[inline]
+    pub fn row_fma(self, z: &mut [f32], w: &[f32], x: f32) {
+        debug_assert_eq!(z.len(), w.len());
+        debug_assert_eq!(z.len() % LANES, 0);
+        match self {
+            Self::Portable => row_fma_portable(z, w, x),
+            #[cfg(all(target_arch = "x86_64", feature = "simd"))]
+            // SAFETY: construction via detect() (or an explicit test
+            // override on a detected-capable machine) guarantees the CPU
+            // supports avx2+fma; the loop bounds stay within both slices.
+            Self::Avx2Fma => unsafe { row_fma_avx2(z, w, x) },
+        }
+    }
+}
+
+/// The portable fallback: 8 independent fused multiply-adds per
+/// iteration, mirroring one `_mm256_fmadd_ps`.
+fn row_fma_portable(z: &mut [f32], w: &[f32], x: f32) {
+    for (zc, wc) in z.chunks_exact_mut(LANES).zip(w.chunks_exact(LANES)) {
+        zc[0] = wc[0].mul_add(x, zc[0]);
+        zc[1] = wc[1].mul_add(x, zc[1]);
+        zc[2] = wc[2].mul_add(x, zc[2]);
+        zc[3] = wc[3].mul_add(x, zc[3]);
+        zc[4] = wc[4].mul_add(x, zc[4]);
+        zc[5] = wc[5].mul_add(x, zc[5]);
+        zc[6] = wc[6].mul_add(x, zc[6]);
+        zc[7] = wc[7].mul_add(x, zc[7]);
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "simd"))]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn row_fma_avx2(z: &mut [f32], w: &[f32], x: f32) {
+    use std::arch::x86_64::*;
+    let n = (z.len().min(w.len()) / LANES) * LANES;
+    let xv = _mm256_set1_ps(x);
+    let mut i = 0;
+    while i < n {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        let zv = _mm256_loadu_ps(z.as_ptr().add(i));
+        _mm256_storeu_ps(z.as_mut_ptr().add(i), _mm256_fmadd_ps(wv, xv, zv));
+        i += LANES;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_is_a_fused_axpy() {
+        let w: Vec<f32> = (0..16).map(|i| 0.25 * i as f32 - 1.0).collect();
+        let mut z: Vec<f32> = (0..16).map(|i| 0.5 - 0.125 * i as f32).collect();
+        let want: Vec<f32> =
+            z.iter().zip(&w).map(|(&zi, &wi)| wi.mul_add(1.5, zi)).collect();
+        VecBackend::Portable.row_fma(&mut z, &w, 1.5);
+        assert_eq!(z, want);
+    }
+
+    #[test]
+    fn detected_backend_matches_portable_bit_for_bit() {
+        // On a machine without AVX2+FMA (or without the simd feature)
+        // detect() IS Portable and this is a tautology; on capable
+        // machines it pins intrinsics == mul_add exactly.
+        let detected = VecBackend::detect();
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        for &x in &[0.0f32, 1.0, -2.5, 3.0e-3, -7.25e4] {
+            let mut za: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+            let mut zb = za.clone();
+            detected.row_fma(&mut za, &w, x);
+            VecBackend::Portable.row_fma(&mut zb, &w, x);
+            assert_eq!(za, zb, "x={x} backend={}", detected.name());
+        }
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(VecBackend::Portable.name(), "portable");
+        assert!(!VecBackend::Portable.is_simd());
+        let d = VecBackend::detect();
+        assert!(d.name() == "portable" || d.name() == "avx2+fma");
+    }
+}

@@ -1,27 +1,42 @@
 //! Multi-stream inference session: N independent sensor channels
-//! multiplexed over one [`BatchKernel`].
+//! multiplexed over one batched stepper.
 //!
 //! Usage is submit/drain: callers queue at most one raw window per stream
-//! id ([`MultiStream::submit`]), then [`MultiStream::drain`] steps every
-//! pending stream in a single batched weight pass.  Streams with nothing
-//! queued this round keep their recurrent state untouched (their lanes
-//! are snapshotted around the pass), so channels may tick at different
-//! rates — exactly what a coordinator juggling N testbeds needs.
+//! id ([`StreamSession::submit`]), then [`StreamSession::drain`] steps
+//! every pending stream in a single batched weight pass.  Streams with
+//! nothing queued this round keep their recurrent state untouched (their
+//! lanes are snapshotted around the pass), so channels may tick at
+//! different rates — exactly what a coordinator juggling N testbeds (or
+//! a shard worker juggling N sessions) needs.
+//!
+//! The session is generic over the stepper ([`StepKernel`]), so the same
+//! submit/drain/partial-drain/migration machinery serves every precision
+//! tier: [`MultiStream`] is the classic datapath-parameterized f64
+//! session ([`BatchKernel`]), [`MultiStreamF32`] the SIMD fast path
+//! ([`BatchKernelF32`], see [`super::simd`]).  State snapshots cross the
+//! boundary as f64 either way — f32 state widens losslessly — so shard
+//! migration and export are tier-uniform.
 
 use anyhow::{bail, Result};
 
 use std::sync::Arc;
 
+use crate::lstm::params::Normalization;
+
 use super::batch::BatchKernel;
 use super::pack::PackedModel;
 use super::path::Datapath;
+use super::simd::{BatchKernelF32, PackedModelF32, VecBackend};
 use super::StepKernel;
 
 /// A fixed-capacity session of independent recurrent streams sharing one
 /// packed model and one batched kernel.
 #[derive(Debug, Clone)]
-pub struct MultiStream<P: Datapath> {
-    kernel: BatchKernel<P>,
+pub struct StreamSession<K: StepKernel> {
+    kernel: K,
+    /// Input/output conditioning (applied here so the kernels only ever
+    /// see normalized features).
+    norm: Normalization,
     /// Pending normalized inputs, stream-major.
     xs: Vec<f64>,
     pending: Vec<bool>,
@@ -31,9 +46,50 @@ pub struct MultiStream<P: Datapath> {
     stash: Vec<f64>,
 }
 
+/// The f64 session over the datapath-generic [`BatchKernel`] (the name
+/// every pre-tier call site uses).
+pub type MultiStream<P> = StreamSession<BatchKernel<P>>;
+
+/// The f32 fast-path session (see [`super::simd`]).
+pub type MultiStreamF32 = StreamSession<BatchKernelF32>;
+
 impl<P: Datapath> MultiStream<P> {
     pub fn new(packed: Arc<PackedModel>, path: P, capacity: usize) -> Self {
-        let kernel = BatchKernel::new(packed, path, capacity);
+        let norm = packed.norm;
+        Self::from_kernel(BatchKernel::new(packed, path, capacity), norm)
+    }
+
+    pub fn packed(&self) -> &Arc<PackedModel> {
+        self.kernel.packed()
+    }
+}
+
+impl MultiStreamF32 {
+    /// Fast-path session over the machine's best vector backend.
+    pub fn new_f32(packed: Arc<PackedModelF32>, capacity: usize) -> Self {
+        let norm = packed.norm;
+        Self::from_kernel(BatchKernelF32::new(packed, capacity), norm)
+    }
+
+    /// Fast-path session over an explicit backend (bit-parity tests).
+    pub fn with_backend(packed: Arc<PackedModelF32>, backend: VecBackend, capacity: usize) -> Self {
+        let norm = packed.norm;
+        Self::from_kernel(BatchKernelF32::with_backend(packed, backend, capacity), norm)
+    }
+
+    pub fn packed_f32(&self) -> &Arc<PackedModelF32> {
+        self.kernel.packed()
+    }
+
+    pub fn backend(&self) -> VecBackend {
+        self.kernel.backend()
+    }
+}
+
+impl<K: StepKernel> StreamSession<K> {
+    /// Wrap a stepper whose lanes become this session's streams.
+    pub fn from_kernel(kernel: K, norm: Normalization) -> Self {
+        let capacity = kernel.batch();
         let input = kernel.input_size();
         let state_len = kernel.state_len();
         Self {
@@ -41,6 +97,7 @@ impl<P: Datapath> MultiStream<P> {
             pending: vec![false; capacity],
             ys: vec![0.0; capacity],
             stash: vec![0.0; capacity * state_len],
+            norm,
             kernel,
         }
     }
@@ -48,10 +105,6 @@ impl<P: Datapath> MultiStream<P> {
     /// Number of stream slots.
     pub fn capacity(&self) -> usize {
         self.kernel.batch()
-    }
-
-    pub fn packed(&self) -> &Arc<PackedModel> {
-        self.kernel.packed()
     }
 
     /// Streams with a window queued for the next drain.
@@ -72,7 +125,7 @@ impl<P: Datapath> MultiStream<P> {
 
     /// Copy one stream's `(h, c)` state into `out` — the session
     /// migration/snapshot hook (`out` must hold [`Self::state_len`]
-    /// values).
+    /// values; f32 kernels widen losslessly).
     pub fn export_state(&self, stream: usize, out: &mut [f64]) {
         self.kernel.export_state(stream, out);
     }
@@ -84,7 +137,9 @@ impl<P: Datapath> MultiStream<P> {
     }
 
     pub fn reset_all(&mut self) {
-        self.kernel.reset_all();
+        for stream in 0..self.capacity() {
+            self.kernel.reset_stream(stream);
+        }
         self.pending.fill(false);
     }
 
@@ -111,10 +166,9 @@ impl<P: Datapath> MultiStream<P> {
         if self.pending[stream] {
             bail!("stream {stream} already has a window queued; drain first");
         }
-        let norm = self.kernel.norm();
         let slot = &mut self.xs[stream * input..(stream + 1) * input];
         for (dst, &v) in slot.iter_mut().zip(window) {
-            *dst = norm.normalize_x(v as f64);
+            *dst = self.norm.normalize_x(v as f64);
         }
         self.pending[stream] = true;
         Ok(())
@@ -146,10 +200,9 @@ impl<P: Datapath> MultiStream<P> {
                 }
             }
         }
-        let norm = self.kernel.norm();
         for (b, pend) in self.pending.iter_mut().enumerate() {
             if *pend {
-                sink(b, norm.denormalize_y(self.ys[b]));
+                sink(b, self.norm.denormalize_y(self.ys[b]));
                 *pend = false;
             }
         }
@@ -175,6 +228,7 @@ impl<P: Datapath> MultiStream<P> {
 mod tests {
     use super::*;
     use crate::kernel::path::FloatPath;
+    use crate::kernel::simd::ScalarKernelF32;
     use crate::kernel::ScalarKernel;
     use crate::lstm::params::LstmParams;
     use crate::util::Rng;
@@ -210,6 +264,31 @@ mod tests {
                 assert_eq!(b_got, b_want);
                 assert_eq!(y_got, y_want, "stream {b_got} diverged on round {round}");
             }
+        }
+    }
+
+    /// The generic session serves the f32 tier identically: interleaved
+    /// partial drains match the dedicated f32 scalar reference bit for
+    /// bit (the deep property suite lives in rust/tests/kernel_f32.rs).
+    #[test]
+    fn f32_session_matches_f32_scalar_reference() {
+        let p = LstmParams::init(16, 15, 3, 1, 2025);
+        let packed = PackedModelF32::shared(&p);
+        let mut ms = MultiStreamF32::new_f32(packed.clone(), 3);
+        let mut singles: Vec<_> = (0..3).map(|_| ScalarKernelF32::new(packed.clone())).collect();
+        let mut rng = Rng::new(66);
+        for round in 0..25 {
+            let mut expected = Vec::new();
+            for b in 0..3 {
+                if round % (b + 1) == 0 {
+                    let w = window(&mut rng);
+                    ms.submit(b, &w).unwrap();
+                    expected.push((b, singles[b].step_window(&w)));
+                }
+            }
+            let mut got = Vec::new();
+            ms.drain(|b, y| got.push((b, y)));
+            assert_eq!(got, expected, "round {round}");
         }
     }
 

@@ -43,8 +43,16 @@
 //!   allocation-free [`kernel::StepKernel`] steppers
 //!   ([`kernel::ScalarKernel`] single stream, [`kernel::BatchKernel`] B
 //!   streams in lockstep per weight pass) over the float or fixed-point
-//!   [`kernel::Datapath`], and [`kernel::MultiStream`] submit/drain
-//!   sessions multiplexing N sensor channels over one engine.
+//!   [`kernel::Datapath`], and [`kernel::StreamSession`] submit/drain
+//!   sessions ([`kernel::MultiStream`] / [`kernel::MultiStreamF32`])
+//!   multiplexing N sensor channels over one engine.  [`kernel::simd`]
+//!   is the precision-tiered f32 fast path (`docs/KERNEL.md`): padded
+//!   [`kernel::PackedModelF32`] weights, explicit AVX2+FMA /
+//!   portable-unrolled vector inner loops ([`kernel::VecBackend`],
+//!   runtime-detected, bit-identical), f32 LUT activations with
+//!   documented error bounds, and the [`kernel::Precision`] selector
+//!   (`[kernel] precision` / `serve-tcp --precision`) that the serving
+//!   fabric's f32 shards hang off.
 //! * [`lstm`] — parameter container + `weights.bin` interchange, the
 //!   float/quantized network front-ends (now thin wrappers over
 //!   [`kernel`]), the BPTT trainer and the Fig.-1 architecture sweep.

@@ -227,6 +227,29 @@ impl RoutingOverlay {
         }
     }
 
+    /// Raw override for `session` under an already-held stripe guard
+    /// (`None`: no override installed, the default placement applies).
+    /// Distinct from [`Self::route_in`], which folds in the default —
+    /// the overlay GC must only ever collect *installed* entries.
+    pub fn override_in(guard: &MutexGuard<'_, HashMap<u64, usize>>, session: u64) -> Option<usize> {
+        guard.get(&session).copied()
+    }
+
+    /// Drop `session`'s override under an already-held stripe guard —
+    /// the GC half of the overlay lifecycle (install: [`Self::set_in`]).
+    /// Returns whether an entry was actually removed.
+    pub fn remove_in(
+        &self,
+        guard: &mut MutexGuard<'_, HashMap<u64, usize>>,
+        session: u64,
+    ) -> bool {
+        let removed = guard.remove(&session).is_some();
+        if removed {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        removed
+    }
+
     /// Current route for `session` (takes and drops the stripe lock —
     /// stats/tests; the serving path uses [`Self::lock_route`]).
     pub fn route_of(&self, session: u64, shards: usize) -> usize {
@@ -323,5 +346,36 @@ mod tests {
                 assert_eq!(o.route_of(s, shards), shard_of(s, shards));
             }
         }
+    }
+
+    /// Satellite (overlay GC): remove_in is the inverse of set_in, keeps
+    /// the override count honest, and is a no-op on absent entries.
+    #[test]
+    fn remove_in_collects_overrides_and_counts() {
+        let o = RoutingOverlay::new();
+        let (shards, session) = (4, 0xFEED_F00Du64);
+        {
+            let mut g = o.lock_route(session);
+            assert_eq!(RoutingOverlay::override_in(&g, session), None);
+            assert!(!o.remove_in(&mut g, session), "nothing installed yet");
+            o.set_in(&mut g, session, 2);
+            assert_eq!(RoutingOverlay::override_in(&g, session), Some(2));
+        }
+        assert_eq!(o.overrides(), 1);
+        {
+            let mut g = o.lock_route(session);
+            assert!(o.remove_in(&mut g, session));
+            assert!(!o.remove_in(&mut g, session), "second removal is a no-op");
+        }
+        assert_eq!(o.overrides(), 0, "count returns to zero");
+        // Routing falls back to the default placement.
+        assert_eq!(o.route_of(session, shards), shard_of(session, shards));
+        // Reinstall after GC works (the entry is gone, not tombstoned).
+        {
+            let mut g = o.lock_route(session);
+            o.set_in(&mut g, session, 1);
+        }
+        assert_eq!(o.overrides(), 1);
+        assert_eq!(o.route_of(session, shards), 1);
     }
 }

@@ -17,7 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
 use crate::coordinator::watchdog::{WatchdogConfig, WatchdogEvent};
-use crate::kernel::PackedModel;
+use crate::kernel::{PackedModel, PackedModelF32};
 use crate::lstm::LstmParams;
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
@@ -150,10 +150,33 @@ impl Fabric {
     pub fn new(params: &LstmParams, cfg: FabricConfig) -> Result<Self> {
         anyhow::ensure!(cfg.shards >= 1, "fabric needs at least one shard");
         anyhow::ensure!(cfg.batch >= 1, "fabric needs at least one lane per shard");
-        let (packed, name) = match cfg.datapath {
-            DatapathKind::Float => (PackedModel::shared(params), "fabric-float"),
+        // One packing serves every shard, whichever tier it is; cores
+        // are built up front so the spawn loop below is tier-agnostic.
+        let name = match cfg.datapath {
+            DatapathKind::Float => "fabric-float",
+            DatapathKind::FloatF32 => "fabric-f32",
+            DatapathKind::Fixed(_) => "fabric-fixed",
+        };
+        let cores: Vec<ShardCore> = match cfg.datapath {
+            DatapathKind::Float => {
+                let packed = PackedModel::shared(params);
+                (0..cfg.shards)
+                    .map(|_| ShardCore::new_float(packed.clone(), cfg.batch, cfg.watchdog.clone()))
+                    .collect()
+            }
+            DatapathKind::FloatF32 => {
+                let packed = PackedModelF32::shared(params);
+                (0..cfg.shards)
+                    .map(|_| ShardCore::new_f32(packed.clone(), cfg.batch, cfg.watchdog.clone()))
+                    .collect()
+            }
             DatapathKind::Fixed(fmt) => {
-                (PackedModel::shared(&params.quantized(fmt)), "fabric-fixed")
+                let packed = PackedModel::shared(&params.quantized(fmt));
+                (0..cfg.shards)
+                    .map(|_| {
+                        ShardCore::new_fixed(packed.clone(), fmt, cfg.batch, cfg.watchdog.clone())
+                    })
+                    .collect()
             }
         };
         let metrics = Arc::new(SchedMetrics::new(cfg.shards));
@@ -165,15 +188,7 @@ impl Fabric {
             .map(|_| Arc::new(ShardQueue::new(cfg.queue_depth, cfg.shed)))
             .collect();
         let mut workers = Vec::with_capacity(cfg.shards);
-        for (index, queue) in queues.iter().enumerate() {
-            let core = match cfg.datapath {
-                DatapathKind::Float => {
-                    ShardCore::new_float(packed.clone(), cfg.batch, cfg.watchdog.clone())
-                }
-                DatapathKind::Fixed(fmt) => {
-                    ShardCore::new_fixed(packed.clone(), fmt, cfg.batch, cfg.watchdog.clone())
-                }
-            };
+        for (index, (queue, core)) in queues.iter().zip(cores).enumerate() {
             let ctx = ShardWorkerCtx {
                 index,
                 queue: queue.clone(),
@@ -577,6 +592,34 @@ mod tests {
         let got = fabric.infer("mig", &w).unwrap();
         assert_eq!(got.estimate, want, "reset must zero the migrated lane");
         assert_eq!(got.shard, target);
+    }
+
+    /// The f32 fast path serves through the fabric end to end, bit-equal
+    /// to the dedicated f32 scalar reference (the deep suite lives in
+    /// rust/tests/kernel_f32.rs).
+    #[test]
+    fn f32_datapath_fabric_matches_f32_reference() {
+        use crate::kernel::ScalarKernelF32;
+        let p = params();
+        let mut cfg = FabricConfig::new(2, 2);
+        cfg.datapath = DatapathKind::FloatF32;
+        cfg.watchdog = WatchdogConfig {
+            min_m: -1e12,
+            max_m: 1e12,
+            max_slew_m_s: 1e15,
+            stuck_after: 1 << 30,
+            ..Default::default()
+        };
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        assert_eq!(fabric.name(), "fabric-f32");
+        let mut reference = ScalarKernelF32::new(PackedModelF32::shared(&p));
+        let mut rng = Rng::new(17);
+        for _ in 0..10 {
+            let w = window(&mut rng);
+            let want = reference.step_window(&w[..]);
+            let got = fabric.infer("f32-sess", &w).unwrap();
+            assert_eq!(got.estimate, want, "fabric f32 pass diverged from scalar f32");
+        }
     }
 
     #[test]

@@ -371,6 +371,25 @@ impl ShardQueue {
         best
     }
 
+    /// Whether ANYTHING of `session` is still queued here: a job, a
+    /// pending reset, a directed move, or an unpopped adoption carrying
+    /// its state.  The overlay GC calls this under the session's route
+    /// stripe before dropping an override on lane eviction — an evicted
+    /// session with queued traffic is still live on this shard and must
+    /// keep routing here.
+    pub fn has_session_traffic(&self, session: u64) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.jobs.values().any(|j| j.session == session)
+            || g.controls.iter().any(|c| match c {
+                Control::ResetSession(s) => *s == session,
+                Control::Migrate { session: s, .. } => *s == session,
+                Control::Adopt(m) => {
+                    m.stolen.as_ref().map(|s| s.session) == Some(session)
+                }
+                Control::StealRequest { .. } => false,
+            })
+    }
+
     /// Whether an [`Control::Adopt`] for `session` is still queued
     /// (unpopped).  The migration executor calls this under the
     /// session's route stripe to detect the mid-adoption window: route
@@ -789,6 +808,36 @@ mod tests {
         // table") excludes mid-adoption sessions entirely.
         assert_eq!(q.busiest_session(|s| s != 2), Some((1, 2)));
         assert_eq!(q.busiest_session(|_| false), None);
+    }
+
+    /// Satellite (overlay GC): `has_session_traffic` sees every queued
+    /// form of a session — jobs, resets, directed moves, adoptions —
+    /// and nothing of other sessions.
+    #[test]
+    fn has_session_traffic_covers_jobs_and_controls() {
+        let q = ShardQueue::new(8, ShedPolicy::Reject);
+        assert!(!q.has_session_traffic(7));
+        let (mut j, _r) = job(Duration::from_millis(5));
+        j.session = 7;
+        q.push(j);
+        assert!(q.has_session_traffic(7));
+        assert!(!q.has_session_traffic(8), "other sessions unaffected");
+        let (taken, _) = q.take_session(7);
+        assert_eq!(taken.len(), 1);
+        assert!(!q.has_session_traffic(7), "drained session has no traffic");
+        q.push_control(Control::ResetSession(7));
+        assert!(q.has_session_traffic(7), "pending reset is traffic");
+        q.pop(None);
+        q.push_control(Control::Migrate { session: 7, to: 1 });
+        assert!(q.has_session_traffic(7), "directed move is traffic");
+        q.pop(None);
+        q.push_control(Control::Adopt(Box::new(Migration {
+            stolen: Some(StolenSession { session: 7, state: None, jobs: Vec::new() }),
+        })));
+        assert!(q.has_session_traffic(7), "in-flight adoption is traffic");
+        q.pop(None);
+        q.push_control(Control::StealRequest { thief: 1 });
+        assert!(!q.has_session_traffic(7), "steal requests name no session");
     }
 
     /// A queued Adopt's jobs become close() orphans — stranding them

@@ -47,7 +47,7 @@ use anyhow::Result;
 use crate::arch::INPUT_SIZE;
 use crate::coordinator::watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};
 use crate::fixed::QFormat;
-use crate::kernel::{FixedPath, FloatPath, MultiStream, PackedModel};
+use crate::kernel::{FixedPath, FloatPath, MultiStream, MultiStreamF32, PackedModel, PackedModelF32};
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::fabric::{Completion, Shed};
@@ -60,6 +60,10 @@ use super::session::{LaneAssign, LaneTable};
 pub enum DatapathKind {
     /// Exact f64 (the paper's software baseline numerics).
     Float,
+    /// The f32 SIMD fast path (`kernel::simd`, `docs/KERNEL.md`):
+    /// vectorized MVO + f32 LUT activations, selected by
+    /// `[kernel] precision = "f32"` / `serve-tcp --precision f32`.
+    FloatF32,
     /// Q-format fixed point + LUT activations (the FPGA datapath).
     Fixed(QFormat),
 }
@@ -68,6 +72,7 @@ impl DatapathKind {
     pub fn name(&self) -> &'static str {
         match self {
             Self::Float => "float",
+            Self::FloatF32 => "f32",
             Self::Fixed(_) => "fixed",
         }
     }
@@ -76,6 +81,7 @@ impl DatapathKind {
 /// Datapath-erased batched kernel session (one per shard).
 pub(crate) enum ShardEngine {
     Float(MultiStream<FloatPath>),
+    F32(MultiStreamF32),
     Fixed(MultiStream<FixedPath>),
 }
 
@@ -83,6 +89,7 @@ impl ShardEngine {
     fn submit(&mut self, lane: usize, window: &[f32]) -> Result<()> {
         match self {
             Self::Float(ms) => ms.submit(lane, window),
+            Self::F32(ms) => ms.submit(lane, window),
             Self::Fixed(ms) => ms.submit(lane, window),
         }
     }
@@ -90,6 +97,7 @@ impl ShardEngine {
     fn drain(&mut self, sink: &mut dyn FnMut(usize, f64)) -> usize {
         match self {
             Self::Float(ms) => ms.drain(|l, y| sink(l, y)),
+            Self::F32(ms) => ms.drain(|l, y| sink(l, y)),
             Self::Fixed(ms) => ms.drain(|l, y| sink(l, y)),
         }
     }
@@ -97,6 +105,7 @@ impl ShardEngine {
     fn cancel_pending(&mut self) -> usize {
         match self {
             Self::Float(ms) => ms.cancel_pending(),
+            Self::F32(ms) => ms.cancel_pending(),
             Self::Fixed(ms) => ms.cancel_pending(),
         }
     }
@@ -104,6 +113,7 @@ impl ShardEngine {
     fn reset(&mut self, lane: usize) {
         match self {
             Self::Float(ms) => ms.reset(lane),
+            Self::F32(ms) => ms.reset(lane),
             Self::Fixed(ms) => ms.reset(lane),
         }
     }
@@ -111,6 +121,7 @@ impl ShardEngine {
     fn capacity(&self) -> usize {
         match self {
             Self::Float(ms) => ms.capacity(),
+            Self::F32(ms) => ms.capacity(),
             Self::Fixed(ms) => ms.capacity(),
         }
     }
@@ -118,6 +129,7 @@ impl ShardEngine {
     fn state_len(&self) -> usize {
         match self {
             Self::Float(ms) => ms.state_len(),
+            Self::F32(ms) => ms.state_len(),
             Self::Fixed(ms) => ms.state_len(),
         }
     }
@@ -125,6 +137,7 @@ impl ShardEngine {
     fn export_state(&self, lane: usize, out: &mut [f64]) {
         match self {
             Self::Float(ms) => ms.export_state(lane, out),
+            Self::F32(ms) => ms.export_state(lane, out),
             Self::Fixed(ms) => ms.export_state(lane, out),
         }
     }
@@ -132,6 +145,7 @@ impl ShardEngine {
     fn import_state(&mut self, lane: usize, src: &[f64]) {
         match self {
             Self::Float(ms) => ms.import_state(lane, src),
+            Self::F32(ms) => ms.import_state(lane, src),
             Self::Fixed(ms) => ms.import_state(lane, src),
         }
     }
@@ -176,6 +190,12 @@ impl ShardCore {
     /// Float-datapath core over a shared packed model.
     pub fn new_float(packed: Arc<PackedModel>, lanes: usize, wd_cfg: WatchdogConfig) -> Self {
         Self::from_engine(ShardEngine::Float(MultiStream::new(packed, FloatPath, lanes)), wd_cfg)
+    }
+
+    /// f32 fast-path core: the shard's batch pass runs the explicit
+    /// vector kernels end to end (see `kernel::simd`).
+    pub fn new_f32(packed: Arc<PackedModelF32>, lanes: usize, wd_cfg: WatchdogConfig) -> Self {
+        Self::from_engine(ShardEngine::F32(MultiStreamF32::new_f32(packed, lanes)), wd_cfg)
     }
 
     /// Fixed-point core; `packed` must already hold quantized weights
@@ -331,6 +351,37 @@ fn send_completion(reply: &Sender<Result<Completion, Shed>>, msg: Result<Complet
     let _ = reply.send(msg);
 }
 
+/// Routing-overlay entry GC (ROADMAP satellite).  Overrides used to
+/// persist forever for every ever-migrated session; once such a
+/// session's lane is evicted on its override target AND nothing of it
+/// remains here (no queued jobs/resets/moves, no in-flight adoption),
+/// the override protects nothing — eviction already discarded the lane
+/// state, so a future arrival starts a fresh stream wherever it lands.
+/// Dropping the entry under the session's route stripe makes the
+/// collection atomic against concurrent submits: a submit that wins the
+/// stripe first leaves visible queue traffic (the override stays); one
+/// that loses the race routes by the default placement afterwards.
+/// Jobs already gathered or deferred this pass cannot belong to the
+/// evicted session — a session with work in the current micro-batch has
+/// its lane pinned and LRU eviction never picks a pinned lane.
+fn gc_override_on_eviction(ctx: &ShardWorkerCtx, st: &WorkerState, evicted: u64) {
+    if !ctx.balance.enabled {
+        return;
+    }
+    let mut guard = ctx.overlay.lock_route(evicted);
+    // Only collect an override that points HERE: a stale eviction must
+    // never clobber the live route of a session that already moved on.
+    if RoutingOverlay::override_in(&guard, evicted) != Some(ctx.index) {
+        return;
+    }
+    if ctx.queue.has_session_traffic(evicted)
+        || st.pending_adopts.iter().any(|a| a.session == evicted)
+    {
+        return;
+    }
+    ctx.overlay.remove_in(&mut guard, evicted);
+}
+
 /// A steal the worker has accepted but not yet executed (migrations run
 /// only between passes, when nothing is in flight).
 enum StealTask {
@@ -462,8 +513,9 @@ pub(crate) fn place(
                     g.pinned[lane] = true;
                     g.batch.push((qj, lane));
                 }
-                LaneAssign::Evicted { lane, .. } => {
+                LaneAssign::Evicted { lane, evicted_session } => {
                     core.recycle_lane(lane);
+                    gc_override_on_eviction(ctx, st, evicted_session);
                     ctx.metrics
                         .shard(ctx.index)
                         .evictions
@@ -493,7 +545,8 @@ fn try_adopt(
     use std::sync::atomic::Ordering::Relaxed;
     let lane = match table.assign(stolen.session, pinned) {
         LaneAssign::Resident(lane) | LaneAssign::Fresh(lane) => lane,
-        LaneAssign::Evicted { lane, .. } => {
+        LaneAssign::Evicted { lane, evicted_session } => {
+            gc_override_on_eviction(ctx, st, evicted_session);
             ctx.metrics.shard(ctx.index).evictions.fetch_add(1, Relaxed);
             lane
         }
@@ -1117,6 +1170,74 @@ mod tests {
         core.recycle_lane(0);
         assert!(core.export_lane(0).iter().all(|&v| v == 0.0));
         assert!(core.export_lane(1).iter().any(|&v| v != 0.0), "lane 1 untouched");
+    }
+
+    /// Satellite (overlay GC): LRU-evicting a migrated session on its
+    /// override target drops the override once nothing of the session
+    /// remains; queued traffic — or an override pointing at a DIFFERENT
+    /// shard — keeps the entry alive.
+    #[test]
+    fn eviction_garbage_collects_the_routing_override() {
+        let p = LstmParams::init(16, 15, 2, 1, 21);
+        let packed = PackedModel::shared(&p);
+        let mut core = ShardCore::new_float(packed, 1, WatchdogConfig::default());
+        let mut table = LaneTable::new(1);
+        let metrics = Arc::new(SchedMetrics::new(1));
+        let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
+        let mut ctx = test_ctx(queue.clone(), metrics, 1);
+        ctx.balance = BalanceConfig { enabled: true, ..BalanceConfig::default() };
+        let mut st = WorkerState::default();
+        let mut rng = Rng::new(5);
+        let migrated = session_hash("migrated-here");
+        let other = session_hash("resident-other");
+        // The migrated session carries an override pointing at this shard.
+        {
+            let mut g = ctx.overlay.lock_route(migrated);
+            ctx.overlay.set_in(&mut g, migrated, 0);
+        }
+        assert_eq!(ctx.overlay.overrides(), 1);
+        // It occupies the single lane...
+        let mut g = Gather::new(1, 1);
+        let (qj, _rx) = queued_job(migrated, window(&mut rng));
+        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        assert_eq!(table.lane_of(migrated), Some(0));
+        // ...and queued traffic protects the override across an eviction.
+        let (parked, _pr) = queued_job(migrated, window(&mut rng));
+        assert!(matches!(queue.push(parked.job), PushOutcome::Admitted));
+        let mut g = Gather::new(1, 1);
+        let (qj, _rx2) = queued_job(other, window(&mut rng));
+        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        assert_eq!(table.lane_of(migrated), None, "migrated session evicted");
+        assert_eq!(ctx.overlay.overrides(), 1, "queued job keeps the override");
+        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        // Serve the parked job: the session re-gains the lane (evicting
+        // `other`, which has no override — nothing to collect there).
+        let mut g = Gather::new(1, 1);
+        let popped = queue.pop(Some(Duration::from_millis(10))).unwrap();
+        place(popped, &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        assert_eq!(table.lane_of(migrated), Some(0));
+        assert_eq!(ctx.overlay.overrides(), 1, "resident again — override stays");
+        // Now nothing of it remains queued: migrate -> drain -> evict
+        // must leave the overlay empty (the regression this test pins).
+        let mut g = Gather::new(1, 1);
+        let (qj, _rx3) = queued_job(other, window(&mut rng));
+        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        assert_eq!(table.lane_of(migrated), None);
+        assert_eq!(ctx.overlay.overrides(), 0, "drained + evicted override collected");
+        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        // Guard: an override pointing at a DIFFERENT shard (the session
+        // migrated onward) is never touched by a stale local eviction.
+        {
+            let mut gd = ctx.overlay.lock_route(other);
+            ctx.overlay.set_in(&mut gd, other, 5);
+        }
+        let mut g = Gather::new(1, 1);
+        let (qj, _rx4) = queued_job(migrated, window(&mut rng));
+        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        assert_eq!(table.lane_of(other), None, "other evicted");
+        assert_eq!(ctx.overlay.overrides(), 1, "foreign override untouched");
     }
 
     /// Satellite regression: the gather-window bound with cold EWMAs.

@@ -1,0 +1,232 @@
+//! Property tests of the precision-tiered f32 fast path (ISSUE 5, spec
+//! in docs/KERNEL.md).  Three guarantees are pinned:
+//!
+//! (a) **bit-parity within the f32 tier** — the runtime-detected SIMD
+//!     backend and the portable 8-lane-unrolled fallback are
+//!     bit-identical, across B in {1, 4, 17}, partial drains, and the
+//!     batch-vs-scalar boundary (per-stream accumulation order is
+//!     batch-width-independent by construction);
+//! (b) **bounded error across tiers** — f32-fast tracks f64-exact within
+//!     the documented absolute envelope over DROPBEAR-scale inputs;
+//! (c) **lossless state round-trips** — exported f32 state widens to
+//!     f64 exactly, survives export/import across sessions AND backends,
+//!     and a directed shard migration of an f32 fabric stream stays
+//!     bit-identical to an unmigrated f32 reference.
+//!
+//! On machines without AVX2+FMA (or with `--no-default-features`) the
+//! "detected" backend IS the portable one; (a) then degenerates to a
+//! self-check while (b) and (c) keep their full strength — which is
+//! exactly the contract: the tier's numerics are backend-independent.
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::coordinator::WatchdogConfig;
+use hrd_lstm::kernel::simd::F32_FAST_MAX_ABS_ERR;
+use hrd_lstm::kernel::{
+    FloatPath, MultiStreamF32, PackedModel, PackedModelF32, ScalarKernel, ScalarKernelF32,
+    StepKernel, VecBackend,
+};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::sched::{DatapathKind, Fabric, FabricConfig};
+use hrd_lstm::util::Rng;
+
+fn params() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 4242)
+}
+
+/// DROPBEAR-scale acceleration window (the ±80 m/s² range the serving
+/// tests drive everywhere else).
+fn window(rng: &mut Rng) -> Vec<f32> {
+    (0..INPUT_SIZE).map(|_| rng.uniform(-80.0, 80.0) as f32).collect()
+}
+
+/// (a) SIMD vs portable, batch vs scalar, full and partial drains: all
+/// bit-identical within the tier.
+#[test]
+fn f32_simd_vs_portable_bit_identical_across_batches() {
+    let p = params();
+    let packed = PackedModelF32::shared(&p);
+    let detected = VecBackend::detect();
+    for &capacity in &[1usize, 4, 17] {
+        let mut simd = MultiStreamF32::with_backend(packed.clone(), detected, capacity);
+        let mut portable =
+            MultiStreamF32::with_backend(packed.clone(), VecBackend::Portable, capacity);
+        // Scalar per-stream references (portable backend) pin the
+        // batch-vs-scalar boundary of the SAME tier.
+        let mut singles: Vec<ScalarKernelF32> = (0..capacity)
+            .map(|_| ScalarKernelF32::with_backend(packed.clone(), VecBackend::Portable))
+            .collect();
+        let mut rng = Rng::new(1000 + capacity as u64);
+        for round in 0..30 {
+            // Streams tick at different rates -> most drains partial.
+            let mut expected = Vec::new();
+            for b in 0..capacity {
+                if round % (b % 3 + 1) == 0 {
+                    let w = window(&mut rng);
+                    simd.submit(b, &w).unwrap();
+                    portable.submit(b, &w).unwrap();
+                    expected.push((b, singles[b].step_window(&w)));
+                }
+            }
+            let mut got_simd = Vec::new();
+            let mut got_portable = Vec::new();
+            simd.drain(|b, y| got_simd.push((b, y)));
+            portable.drain(|b, y| got_portable.push((b, y)));
+            assert_eq!(
+                got_simd, got_portable,
+                "backend divergence (B={capacity}, round {round}, {})",
+                detected.name()
+            );
+            assert_eq!(
+                got_simd, expected,
+                "batch-vs-scalar divergence (B={capacity}, round {round})"
+            );
+        }
+    }
+}
+
+/// (b) The cross-tier error envelope: f32-fast vs f64-exact over a long
+/// DROPBEAR-scale stream stays inside the documented bound — and the
+/// tiers genuinely differ (the envelope is not vacuous).
+#[test]
+fn f32_fast_tracks_f64_exact_within_envelope() {
+    let p = params();
+    let mut exact = ScalarKernel::new(PackedModel::shared(&p), FloatPath);
+    let mut fast = ScalarKernelF32::new(PackedModelF32::shared(&p));
+    let mut rng = Rng::new(99);
+    let mut max_abs = 0.0f64;
+    let mut any_diff = false;
+    for step in 0..300 {
+        let w = window(&mut rng);
+        let y64 = exact.step_window(&w);
+        let y32 = fast.step_window(&w);
+        let diff = (y64 - y32).abs();
+        max_abs = max_abs.max(diff);
+        any_diff |= diff > 0.0;
+        assert!(
+            diff <= F32_FAST_MAX_ABS_ERR,
+            "step {step}: |f64 {y64} - f32 {y32}| = {diff} exceeds the documented \
+             envelope {F32_FAST_MAX_ABS_ERR}"
+        );
+    }
+    assert!(any_diff, "tiers never diverged — the envelope test is vacuous");
+    assert!(max_abs > 0.0);
+    println!("observed max |f64 - f32| over 300 steps: {max_abs:.3e}");
+}
+
+/// (c) State export widens losslessly and crosses sessions AND vector
+/// backends without perturbing a single bit of the stream.
+#[test]
+fn f32_state_roundtrips_across_sessions_and_backends() {
+    let p = params();
+    let packed = PackedModelF32::shared(&p);
+    let mut a = MultiStreamF32::with_backend(packed.clone(), VecBackend::detect(), 3);
+    let mut reference = ScalarKernelF32::with_backend(packed.clone(), VecBackend::Portable);
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let w = window(&mut rng);
+        let got = a.step_one(1, &w).unwrap();
+        assert_eq!(got, reference.step_window(&w));
+    }
+    let mut snap = vec![0.0f64; a.state_len()];
+    a.export_state(1, &mut snap);
+    // Lossless widening: every exported f64 is exactly f32-representable.
+    for (k, &v) in snap.iter().enumerate() {
+        assert_eq!(v, (v as f32) as f64, "state[{k}] widened lossily");
+    }
+    // Import into a different-capacity session on the OTHER backend.
+    let mut b = MultiStreamF32::with_backend(packed, VecBackend::Portable, 2);
+    b.import_state(0, &snap);
+    for _ in 0..5 {
+        let w = window(&mut rng);
+        let want = reference.step_window(&w);
+        assert_eq!(b.step_one(0, &w).unwrap(), want, "migrated f32 stream diverged");
+    }
+}
+
+/// (c) Directed migration of an f32 fabric session: the serving fabric
+/// runs the vector path end to end, and per-tier bit-parity survives the
+/// hand-off exactly like the f64 suite in rust/tests/sched_rebalance.rs.
+#[test]
+fn f32_fabric_directed_migration_stays_bit_identical() {
+    let p = params();
+    let mut cfg = FabricConfig::new(3, 2);
+    cfg.datapath = DatapathKind::FloatF32;
+    cfg.balance.enabled = true;
+    // Finiteness-only watchdog: random-weight estimates roam outside the
+    // physical roller range and clamping is not under test.
+    cfg.watchdog = WatchdogConfig {
+        min_m: -1e12,
+        max_m: 1e12,
+        max_slew_m_s: 1e15,
+        stuck_after: 1 << 30,
+        ..Default::default()
+    };
+    let fabric = Fabric::new(&p, cfg).unwrap();
+    assert_eq!(fabric.name(), "fabric-f32");
+    let session = "f32-migrant";
+    let home = fabric.shard_for(session);
+    let target = (home + 1) % fabric.shards();
+    let mut rng = Rng::new(31);
+    let mut history: Vec<(Vec<f32>, f64)> = Vec::new();
+    let mut step = |fabric: &Fabric, history: &mut Vec<(Vec<f32>, f64)>, rng: &mut Rng| {
+        let mut w = [0f32; INPUT_SIZE];
+        for v in &mut w {
+            *v = rng.uniform(-80.0, 80.0) as f32;
+        }
+        let c = fabric.infer(session, &w).unwrap();
+        history.push((w.to_vec(), c.estimate));
+        c
+    };
+    for _ in 0..5 {
+        assert_eq!(step(&fabric, &mut history, &mut rng).shard, home);
+    }
+    fabric.migrate_session(session, target).unwrap();
+    let mut moved = false;
+    for _ in 0..200 {
+        if step(&fabric, &mut history, &mut rng).shard == target {
+            moved = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(moved, "session never reached shard {target}");
+    for _ in 0..5 {
+        assert_eq!(step(&fabric, &mut history, &mut rng).shard, target);
+    }
+    // Replay against an unmigrated f32 reference: every estimate before,
+    // during and after the migration must match bit for bit.
+    let mut reference = ScalarKernelF32::new(PackedModelF32::shared(&p));
+    for (k, (w, got)) in history.iter().enumerate() {
+        let want = reference.step_window(w);
+        assert_eq!(*got, want, "estimate diverged at step {k} across the migration");
+    }
+    // A reset follows the migrated session and re-zeroes the f32 lane.
+    fabric.reset_session(session);
+    let w = [0.75f32; INPUT_SIZE];
+    let mut fresh = ScalarKernelF32::new(PackedModelF32::shared(&p));
+    let want = fresh.step_window(&w);
+    let got = fabric.infer(session, &w).unwrap();
+    assert_eq!(got.estimate, want, "reset must zero the migrated f32 lane");
+    assert_eq!(got.shard, target);
+}
+
+/// The f64 boundary of the fast path is exactly "normalize in f64,
+/// truncate to f32": StepKernel::step_normalized on the f32 kernel
+/// agrees with the raw-f32 entry point fed pre-truncated inputs.
+#[test]
+fn f64_boundary_is_pure_truncation() {
+    let p = params();
+    let packed = PackedModelF32::shared(&p);
+    let mut via_f64 = ScalarKernelF32::new(packed.clone());
+    let mut via_f32 = ScalarKernelF32::new(packed);
+    let mut rng = Rng::new(55);
+    for _ in 0..20 {
+        let xs64: Vec<f64> = (0..INPUT_SIZE).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let mut y64 = [0.0f64; 1];
+        via_f64.step_normalized(&xs64, &mut y64);
+        let xs32: Vec<f64> = xs64.iter().map(|&v| (v as f32) as f64).collect();
+        let mut y32 = [0.0f64; 1];
+        via_f32.step_normalized(&xs32, &mut y32);
+        assert_eq!(y64[0], y32[0], "pre-truncated inputs must be a fixed point");
+    }
+}

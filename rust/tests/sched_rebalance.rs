@@ -332,3 +332,67 @@ fn migrated_session_survives_tcp_reconnect() {
     assert_eq!(snap.completed, got.len() as u64);
     assert_eq!(snap.migrations, 1);
 }
+
+/// Satellite (ISSUE 5): routing-overlay entry GC.  Overrides used to
+/// persist forever for every ever-migrated session; a migrate -> drain
+/// -> evict cycle must now leave `route_overrides()` empty, with the
+/// session falling back to its default placement as a fresh stream
+/// (eviction already discarded the lane state, so nothing is lost).
+#[test]
+fn evicted_override_is_garbage_collected() {
+    let p = params();
+    // ONE lane per shard, so a second session's arrival must evict.
+    let mut cfg = FabricConfig::new(2, 1);
+    cfg.balance.enabled = true;
+    cfg.watchdog = finiteness_only_wd();
+    let fabric = Fabric::new(&p, cfg).unwrap();
+    let session = "gc-migrant";
+    let home = fabric.shard_for(session);
+    let target = (home + 1) % 2;
+
+    // Warm the session, then migrate it to the other shard.
+    for step in 0..3 {
+        assert_eq!(fabric.infer(session, &window_for(0, step)).unwrap().shard, home);
+    }
+    fabric.migrate_session(session, target).unwrap();
+    let mut step_idx = 3;
+    let mut moved = false;
+    for _ in 0..200 {
+        let c = fabric.infer(session, &window_for(0, step_idx)).unwrap();
+        step_idx += 1;
+        if c.shard == target {
+            moved = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(moved, "session never reached shard {target}");
+    assert_eq!(fabric.route_overrides(), 1, "the migration installed an override");
+
+    // A session that natively routes to the target claims its only
+    // lane, evicting the (fully drained) migrated session — the GC must
+    // collect its override at that moment.
+    let evictor = (0..)
+        .map(|i| format!("evictor-{i}"))
+        .find(|n| shard_of(session_hash(n), 2) == target)
+        .unwrap();
+    let mut collected = false;
+    for k in 0..200 {
+        assert_eq!(fabric.infer(&evictor, &window_for(1, k)).unwrap().shard, target);
+        if fabric.route_overrides() == 0 {
+            collected = true;
+            break;
+        }
+    }
+    assert!(collected, "migrate -> drain -> evict must leave route_overrides() empty");
+
+    // Routing falls back to the default placement, and the session
+    // restarts as a fresh stream there.
+    assert_eq!(fabric.shard_for(session), home);
+    let mut fresh = RefStream::new(PackedModel::shared(&p), finiteness_only_wd());
+    let w = window_for(2, 0);
+    let want = fresh.step(&w);
+    let got = fabric.infer(session, &w).unwrap();
+    assert_eq!(got.estimate, want, "post-GC stream must start fresh");
+    assert_eq!(got.shard, home, "post-GC arrivals use the default placement");
+}

@@ -39,8 +39,25 @@ echo "== sched correctness gate: fabric bit-parity + rebalance migration =="
 # scenario must shed less / serve a lower p99 with rebalancing on.
 cargo test -q --test sched_fabric --test sched_rebalance
 
-echo "== kernel bench smoke (BENCH_kernel.json) =="
+echo "== portable-fallback gate: build + kernel tests without the simd feature =="
+# The f32 portable path must stay buildable and bit-identical on its own
+# (docs/KERNEL.md); building with --no-default-features drops the
+# AVX2+FMA intrinsics entirely.
+cargo build --release --no-default-features
+cargo test -q --no-default-features --lib --test kernel_equivalence --test kernel_f32
+
+echo "== kernel latency gate (precision-tier ns/step -> BENCH_kernel.json) =="
+# Quick-mode microbench: single-stream ns/step + the B-sweep for
+# f64-scalar / f32-scalar / f32-simd (docs/KERNEL.md).  The gate fails
+# on missing output or missing tier rows; the full-mode perf assertion
+# (f32-simd beats f64-scalar) lives in the kernel_throughput bench.
+rm -f BENCH_kernel.json
 HRD_BENCH_FAST=1 cargo run --release --bin hrd -- bench --quick --out BENCH_kernel.json
+test -s BENCH_kernel.json || { echo "FAIL: BENCH_kernel.json was not written"; exit 1; }
+for tier in f64-scalar f32-scalar f32-simd; do
+  grep -q "\"$tier\"" BENCH_kernel.json \
+    || { echo "FAIL: BENCH_kernel.json lacks the $tier rows"; exit 1; }
+done
 
 echo "== serving fabric loadgen smoke (BENCH_serving.json) =="
 # Loopback loadgen: serial baseline vs sched:: fabric at shards {1,2,4}
