@@ -20,6 +20,18 @@
 //!    load (the fabric's own miss verdict; client-side round-trip vs
 //!    deadline for the serial baseline, which tracks no deadlines).
 //!
+//! A third, **open-loop** phase (`cfg.open_loop`) drives
+//! [`PipelinedClient`]s — many submits in flight per socket, Poisson or
+//! bursty (two-state Markov-modulated) arrivals — against protocol v1
+//! and v2, emitting `open_loop[]` knee-curve rows (offered vs achieved
+//! rate, p50/p99 measured from the *scheduled* arrival so queueing
+//! collapse is visible, miss rate, bytes/request) plus a v1-vs-v2
+//! estimate-parity pass.  The closed-loop phases above hide saturation
+//! by construction: a client that waits for each reply can never offer
+//! more load than the server absorbs.  Open-loop windows model a DAQ
+//! ring snapshot (`open_stride` fresh samples per request, the rest
+//! carried over), the overlap the v2 delta encoding exists for.
+//!
 //! A separate **parity** pass (run whenever both protocols are
 //! selected) feeds the same windows through a JSON session, a binary
 //! single-submit session, and a binary batch-submit session on a fresh
@@ -31,6 +43,7 @@
 //! pollutes the serving measurement.  Shared by `hrd loadgen` and the
 //! `serving_fabric` bench binary.
 
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -41,9 +54,9 @@ use crate::arch::INPUT_SIZE;
 use crate::beam::{ProfileKind, Testbed};
 use crate::coordinator::{channel_seed, Client, InferReply, NativeBackend, Server};
 use crate::lstm::LstmParams;
-use crate::sched::{session_hash, shard_of, Fabric, FabricConfig};
-use crate::util::{stats, Json};
-use crate::wire::WireClient;
+use crate::sched::{session_hash, shard_of, DatapathKind, Fabric, FabricConfig};
+use crate::util::{stats, Json, Rng};
+use crate::wire::{PipeEvent, PipelineOptions, PipelinedClient, WireClient};
 
 /// Which wire protocol a scenario's clients speak.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -125,6 +138,19 @@ pub struct ServingConfig {
     pub skew_hot_fraction: f64,
     /// Closed-loop requests per skew stream.
     pub skew_requests: usize,
+    /// Run the open-loop (offered-load) sweep over protocol v1 vs v2.
+    pub open_loop: bool,
+    /// Open-loop client streams.
+    pub open_streams: usize,
+    /// Requests per open-loop stream at each offered-load point.
+    pub open_requests: usize,
+    /// Per-stream offered arrival rates (Hz) swept by the Poisson and
+    /// bursty processes (the x axis of the knee curves).
+    pub open_rates_hz: Vec<f64>,
+    /// Samples refreshed in the 16-slot DAQ ring between open-loop
+    /// snapshots: consecutive windows differ in exactly this many
+    /// positions (the overlap v2 delta encoding exploits).
+    pub open_stride: usize,
     /// Workload seed.
     pub seed: u64,
 }
@@ -145,6 +171,11 @@ impl ServingConfig {
             skew_streams: 16,
             skew_hot_fraction: 0.8,
             skew_requests: 80,
+            open_loop: true,
+            open_streams: 8,
+            open_requests: 300,
+            open_rates_hz: vec![250.0, 1000.0, 4000.0],
+            open_stride: 4,
             seed: 42,
         }
     }
@@ -164,6 +195,11 @@ impl ServingConfig {
             skew_streams: 10,
             skew_hot_fraction: 0.8,
             skew_requests: 30,
+            open_loop: true,
+            open_streams: 4,
+            open_requests: 60,
+            open_rates_hz: vec![200.0, 800.0],
+            open_stride: 4,
             seed: 42,
         }
     }
@@ -308,6 +344,71 @@ impl RebalanceCompare {
     }
 }
 
+/// One open-loop operating point: an arrival process, a protocol
+/// version, and an offered load, measured to a knee-curve row.
+#[derive(Debug, Clone)]
+pub struct OpenLoopRow {
+    /// "closed" | "poisson" | "bursty".
+    pub process: &'static str,
+    /// Negotiated wire protocol (1 or 2).
+    pub wire_version: u8,
+    /// Aggregate offered load, requests/s (for the closed process this
+    /// equals the achieved rate by construction).
+    pub offered_rps: f64,
+    /// Completions (non-shed) per wall-clock second.
+    pub achieved_rps: f64,
+    /// Latency percentiles measured from the request's *scheduled*
+    /// arrival — sender-side credit stalls count, so the knee shows.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// (shed + deadline misses + errors + lost) / submitted.
+    pub miss_rate: f64,
+    /// Client-observed (bytes in + bytes out) / submitted — the number
+    /// the v2 delta encoding is graded on.
+    pub bytes_per_request: f64,
+    pub requests: u64,
+    pub shed: u64,
+    /// Times a submit blocked on the credit window (saturation signal).
+    pub credit_stalls: u64,
+}
+
+impl OpenLoopRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("process", Json::from(self.process)),
+            ("wire_version", Json::from(self.wire_version as usize)),
+            ("offered_rps", Json::from(self.offered_rps)),
+            ("achieved_rps", Json::from(self.achieved_rps)),
+            ("p50_us", Json::from(self.p50_us)),
+            ("p99_us", Json::from(self.p99_us)),
+            ("miss_rate", Json::from(self.miss_rate)),
+            ("bytes_per_request", Json::from(self.bytes_per_request)),
+            ("requests", Json::from(self.requests as f64)),
+            ("shed", Json::from(self.shed as f64)),
+            ("credit_stalls", Json::from(self.credit_stalls as f64)),
+        ])
+    }
+}
+
+/// Outcome of the v1-vs-v2 estimate-parity pass.
+#[derive(Debug, Clone)]
+pub struct V2Parity {
+    /// Windows checked.
+    pub windows: u64,
+    /// Max |estimate difference| of the f16-payload session vs the
+    /// f32 paths (pinned ≤ `kernel::simd::F32_FAST_MAX_ABS_ERR`).
+    pub f16_max_abs_err: f64,
+}
+
+impl V2Parity {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("windows", Json::from(self.windows as f64)),
+            ("f16_max_abs_err", Json::from(self.f16_max_abs_err)),
+        ])
+    }
+}
+
 /// Full suite output.
 #[derive(Debug, Clone)]
 pub struct ServingSummary {
@@ -321,6 +422,11 @@ pub struct ServingSummary {
     pub wire_comparison: Vec<WireCompare>,
     /// Windows checked by the cross-protocol parity pass (0 = skipped).
     pub parity_windows: u64,
+    /// Open-loop knee-curve rows ({closed, poisson, bursty} x {v1, v2};
+    /// empty when `cfg.open_loop` is off).
+    pub open_loop: Vec<OpenLoopRow>,
+    /// v1-vs-v2 estimate parity (`None` when `cfg.open_loop` is off).
+    pub v2_parity: Option<V2Parity>,
     /// Shard count of the widest fabric scenario (max shards, regardless
     /// of the order `--shards` listed them).
     pub best_fabric_shards: usize,
@@ -370,6 +476,27 @@ impl ServingSummary {
                 self.parity_windows
             ));
         }
+        for r in &self.open_loop {
+            s.push_str(&format!(
+                "open-loop {:<7} v{} offered {:>7.0} r/s achieved {:>7.0} r/s \
+                 p50 {:>8.1} us p99 {:>9.1} us miss {:>5.2}% {:>6.1} B/req\n",
+                r.process,
+                r.wire_version,
+                r.offered_rps,
+                r.achieved_rps,
+                r.p50_us,
+                r.p99_us,
+                r.miss_rate * 100.0,
+                r.bytes_per_request,
+            ));
+        }
+        if let Some(p) = &self.v2_parity {
+            s.push_str(&format!(
+                "v2 parity: {} windows bit-identical across v1/v2/v2-delta, \
+                 f16 max |err| {:.2e}\n",
+                p.windows, p.f16_max_abs_err
+            ));
+        }
         if let Some(r) = &self.rebalance {
             s.push_str(&format!(
                 "skewed keyspace ({} requests): rebalance off shed {} p99 {:.1} us | \
@@ -403,6 +530,14 @@ impl ServingSummary {
                     ("deadline_us", Json::from(cfg.deadline_us)),
                     ("paced_rate_hz", Json::from(cfg.paced_rate_hz)),
                     ("paced_requests", Json::from(cfg.paced_requests)),
+                    ("open_loop", Json::Bool(cfg.open_loop)),
+                    ("open_streams", Json::from(cfg.open_streams)),
+                    ("open_requests", Json::from(cfg.open_requests)),
+                    (
+                        "open_rates_hz",
+                        Json::Arr(cfg.open_rates_hz.iter().map(|&r| Json::from(r)).collect()),
+                    ),
+                    ("open_stride", Json::from(cfg.open_stride)),
                     (
                         "shard_counts",
                         Json::Arr(cfg.shard_counts.iter().map(|&n| Json::from(n)).collect()),
@@ -421,6 +556,17 @@ impl ServingSummary {
                 Json::Arr(self.wire_comparison.iter().map(|c| c.to_json()).collect()),
             ),
             ("parity_windows", Json::from(self.parity_windows as f64)),
+            (
+                "open_loop",
+                Json::Arr(self.open_loop.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "v2_parity",
+                match &self.v2_parity {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
             (
                 "rebalance",
                 match &self.rebalance {
@@ -620,6 +766,418 @@ fn wire_parity(params: &LstmParams, loads: &[Vec<[f32; INPUT_SIZE]>]) -> Result<
     Ok(windows.len() as u64)
 }
 
+// ---- open-loop phase ---------------------------------------------------
+
+/// Pre-generate each open-loop stream's windows as DAQ ring snapshots:
+/// a 16-slot ring over the stream's continuous 32 kHz sensor samples,
+/// advanced by `open_stride` fresh samples per request.  Consecutive
+/// windows therefore share `INPUT_SIZE - open_stride` positions — the
+/// heavy overlap a client polling the acquisition ring faster than it
+/// refills actually produces, and the case the v2 delta encoding is
+/// for.  (The closed-loop phases keep the non-overlapping Testbed
+/// windows; the two workloads are deliberately different.)
+fn generate_open_loads(cfg: &ServingConfig) -> Vec<Vec<[f32; INPUT_SIZE]>> {
+    let stride = cfg.open_stride.clamp(1, INPUT_SIZE);
+    let need = cfg.open_requests * stride + INPUT_SIZE;
+    let blocks = (need + INPUT_SIZE - 1) / INPUT_SIZE;
+    (0..cfg.open_streams)
+        .map(|s| {
+            let samples: Vec<f32> = Testbed::new(
+                ProfileKind::Sweep,
+                blocks,
+                channel_seed(cfg.seed ^ 0x0B5E_55ED, s),
+            )
+            .flat_map(|w| w.features)
+            .collect();
+            let mut ring = [0.0f32; INPUT_SIZE];
+            ring.copy_from_slice(&samples[..INPUT_SIZE]);
+            let (mut p, mut next) = (0usize, INPUT_SIZE);
+            (0..cfg.open_requests)
+                .map(|_| {
+                    for _ in 0..stride {
+                        ring[p] = samples[next];
+                        next += 1;
+                        p = (p + 1) % INPUT_SIZE;
+                    }
+                    ring
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Cumulative Poisson arrival offsets (seconds): i.i.d. exponential
+/// inter-arrivals at `rate_hz`.
+fn poisson_schedule(n: usize, rate_hz: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += -(1.0 - rng.next_f64()).ln() / rate_hz;
+            t
+        })
+        .collect()
+}
+
+/// Two-state Markov-modulated Poisson arrivals: bursts at 3x the base
+/// rate alternate with calm stretches at a third of it, with a mean
+/// dwell of 16 arrivals per state.  The realized offered rate is below
+/// `rate_hz` (calm stretches dominate wall time); rows report the rate
+/// measured from the schedule, not the nominal knob.
+fn bursty_schedule(n: usize, rate_hz: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut burst = false;
+    (0..n)
+        .map(|_| {
+            if rng.chance(1.0 / 16.0) {
+                burst = !burst;
+            }
+            let r = if burst { rate_hz * 3.0 } else { rate_hz / 3.0 };
+            t += -(1.0 - rng.next_f64()).ln() / r;
+            t
+        })
+        .collect()
+}
+
+/// Per-stream open-loop outcome.  Latencies are in microseconds and
+/// measured from the request's *scheduled* arrival, so time a saturated
+/// sender spends blocked on credits counts against it — that is what
+/// makes the knee visible where closed-loop round trips stay flat.
+struct StreamOut {
+    lat_us: Vec<f64>,
+    submitted: u64,
+    ok: u64,
+    shed: u64,
+    miss: u64,
+    err: u64,
+    /// Still unsettled when the drain window closed.
+    lost: u64,
+    /// Client-observed bytes in + bytes out.
+    bytes: u64,
+    stalls: u64,
+    /// This stream's offered rate from its schedule (0 = closed loop).
+    offered_rps: f64,
+}
+
+fn note_event(ev: PipeEvent, pending: &mut HashMap<u64, Instant>, st: &mut StreamOut) {
+    match ev {
+        PipeEvent::Completion(rec) => {
+            if let Some(due) = pending.remove(&rec.seq) {
+                if rec.shed {
+                    st.shed += 1;
+                } else {
+                    st.ok += 1;
+                    if rec.deadline_miss {
+                        st.miss += 1;
+                    }
+                    st.lat_us.push(due.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+        }
+        PipeEvent::Error { seq, .. } => {
+            if pending.remove(&seq).is_some() {
+                st.err += 1;
+            }
+        }
+        PipeEvent::Control(..) => {}
+    }
+}
+
+/// Drive one stream: open loop against `schedule` (arrival offsets in
+/// seconds), or closed loop (submit, wait, submit) when `None`.
+fn drive_stream(
+    addr: &str,
+    session: &str,
+    opts: PipelineOptions,
+    windows: &[[f32; INPUT_SIZE]],
+    schedule: Option<&[f64]>,
+    deadline_us: f64,
+) -> Result<StreamOut> {
+    let mut c = PipelinedClient::connect(addr, Some(session), opts)?;
+    let mut st = StreamOut {
+        lat_us: Vec::with_capacity(windows.len()),
+        submitted: 0,
+        ok: 0,
+        shed: 0,
+        miss: 0,
+        err: 0,
+        lost: 0,
+        bytes: 0,
+        stalls: 0,
+        offered_rps: 0.0,
+    };
+    let mut pending: HashMap<u64, Instant> = HashMap::new();
+    let t0 = Instant::now();
+    for (k, w) in windows.iter().enumerate() {
+        let due = match schedule {
+            Some(s) => t0 + Duration::from_secs_f64(s[k]),
+            None => Instant::now(),
+        };
+        // Wait out the inter-arrival gap, draining pushed completions
+        // as they land (the open-loop sender never waits for replies).
+        loop {
+            while let Some(ev) = c.try_recv() {
+                note_event(ev, &mut pending, &mut st);
+            }
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            std::thread::sleep((due - now).min(Duration::from_micros(200)));
+        }
+        let seq = c.submit(w, Some(deadline_us))?;
+        st.submitted += 1;
+        pending.insert(seq, due);
+        if schedule.is_none() {
+            // Closed loop: the next "arrival" is this reply.
+            while !pending.is_empty() {
+                note_event(c.recv(Some(Duration::from_secs(20)))?, &mut pending, &mut st);
+            }
+        }
+    }
+    // Drain the in-flight tail; a connection that dies mid-drain fails
+    // fast (an errored recv that did not spend its timeout).
+    let drain_until = Instant::now() + Duration::from_secs(20);
+    while !pending.is_empty() && Instant::now() < drain_until {
+        let t = Instant::now();
+        match c.recv(Some(Duration::from_millis(500))) {
+            Ok(ev) => note_event(ev, &mut pending, &mut st),
+            Err(_) if t.elapsed() < Duration::from_millis(100) => break,
+            Err(_) => {}
+        }
+    }
+    st.lost = pending.len() as u64;
+    st.stalls = c.credit_stalls();
+    st.bytes = c.bytes_in() + c.bytes_out();
+    if let Some(s) = schedule {
+        let span = s.last().copied().unwrap_or(0.0).max(1e-9);
+        st.offered_rps = windows.len() as f64 / span;
+    }
+    Ok(st)
+}
+
+/// One open-loop operating point: a fresh fabric server, one
+/// [`PipelinedClient`] per stream, all on the f32 SIMD datapath (the
+/// tier v2's f16 payloads feed) so the wire format is the only variable
+/// between the v1 and v2 rows.
+fn run_open_scenario(
+    params: &LstmParams,
+    cfg: &ServingConfig,
+    loads: &[Vec<[f32; INPUT_SIZE]>],
+    process: &'static str,
+    version: u8,
+    rate_hz: Option<f64>,
+) -> Result<OpenLoopRow> {
+    let server = Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let shards = cfg.shard_counts.iter().copied().max().unwrap_or(2).max(1);
+    let mut fcfg = FabricConfig::new(shards, cfg.batch);
+    fcfg.deadline_us = cfg.deadline_us;
+    // Overload must surface as shed / misses, never unbounded queues:
+    // the per-connection credit window bounds v2 admission and this
+    // depth bounds the shared fabric ingress.
+    fcfg.queue_depth = (cfg.open_streams * 16).max(64);
+    fcfg.datapath = DatapathKind::FloatF32;
+    let fabric = Arc::new(Fabric::new(params, fcfg)?);
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run_fabric(fabric);
+    });
+
+    let opts = PipelineOptions {
+        max_version: version,
+        delta: version >= 2,
+        f16: false,
+        inflight_cap: 64,
+        deadline_us: 0.0,
+    };
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for (s, load) in loads.iter().enumerate() {
+        let addr = addr.clone();
+        let windows = load.clone();
+        let schedule = rate_hz.map(|r| match process {
+            "bursty" => bursty_schedule(windows.len(), r, channel_seed(cfg.seed, s) ^ 0xB02),
+            _ => poisson_schedule(windows.len(), r, channel_seed(cfg.seed, s) ^ 0xA01),
+        });
+        let deadline_us = cfg.deadline_us;
+        joins.push(std::thread::spawn(move || -> Result<StreamOut> {
+            drive_stream(
+                &addr,
+                &format!("open-{s}"),
+                opts,
+                &windows,
+                schedule.as_deref(),
+                deadline_us,
+            )
+        }));
+    }
+    let mut lat = Vec::new();
+    let (mut submitted, mut ok, mut shed) = (0u64, 0u64, 0u64);
+    let (mut miss, mut err, mut lost) = (0u64, 0u64, 0u64);
+    let (mut bytes, mut stalls) = (0u64, 0u64);
+    let mut offered = 0.0;
+    for j in joins {
+        let st = j.join().expect("open-loop client panicked")?;
+        lat.extend(st.lat_us);
+        submitted += st.submitted;
+        ok += st.ok;
+        shed += st.shed;
+        miss += st.miss;
+        err += st.err;
+        lost += st.lost;
+        bytes += st.bytes;
+        stalls += st.stalls;
+        offered += st.offered_rps;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut ctl = Client::connect(&addr)?;
+    ctl.shutdown()?;
+    server_thread.join().expect("open-loop server panicked");
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| if lat.is_empty() { 0.0 } else { stats::percentile_sorted(&lat, p) };
+    let achieved = if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 };
+    Ok(OpenLoopRow {
+        process,
+        wire_version: version,
+        offered_rps: if rate_hz.is_some() { offered } else { achieved },
+        achieved_rps: achieved,
+        p50_us: pct(50.0),
+        p99_us: pct(99.0),
+        miss_rate: if submitted == 0 {
+            0.0
+        } else {
+            (shed + miss + err + lost) as f64 / submitted as f64
+        },
+        bytes_per_request: if submitted == 0 { 0.0 } else { bytes as f64 / submitted as f64 },
+        requests: submitted,
+        shed,
+        credit_stalls: stalls,
+    })
+}
+
+/// The open-loop sweep: {closed, poisson, bursty} x {v1, v2}, the
+/// Poisson/bursty processes at each configured offered rate.  At every
+/// matched operating point the v2 client (delta windows) must move
+/// fewer bytes per request than v1 — the headline the protocol is
+/// graded on.
+fn run_open_loop_suite(
+    params: &LstmParams,
+    cfg: &ServingConfig,
+    loads: &[Vec<[f32; INPUT_SIZE]>],
+) -> Result<Vec<OpenLoopRow>> {
+    anyhow::ensure!(
+        cfg.open_streams >= 1 && cfg.open_requests >= 1 && !cfg.open_rates_hz.is_empty(),
+        "empty open-loop workload"
+    );
+    let check = |v1: &OpenLoopRow, v2: &OpenLoopRow| -> Result<()> {
+        anyhow::ensure!(
+            v2.bytes_per_request < v1.bytes_per_request,
+            "protocol v2 moved {:.1} bytes/request vs v1's {:.1} ({} process at {:.0} r/s)",
+            v2.bytes_per_request,
+            v1.bytes_per_request,
+            v1.process,
+            v1.offered_rps,
+        );
+        Ok(())
+    };
+    let mut rows = Vec::new();
+    let a = run_open_scenario(params, cfg, loads, "closed", 1, None)?;
+    let b = run_open_scenario(params, cfg, loads, "closed", 2, None)?;
+    check(&a, &b)?;
+    rows.push(a);
+    rows.push(b);
+    for process in ["poisson", "bursty"] {
+        for &rate in &cfg.open_rates_hz {
+            let a = run_open_scenario(params, cfg, loads, process, 1, Some(rate))?;
+            let b = run_open_scenario(params, cfg, loads, process, 2, Some(rate))?;
+            check(&a, &b)?;
+            rows.push(a);
+            rows.push(b);
+        }
+    }
+    Ok(rows)
+}
+
+/// v1-vs-v2 estimate parity: the same overlapping windows through a v1
+/// pipelined session, a v2 full-window session, and a v2 delta session
+/// must produce bit-identical estimates — the v2 codecs change the
+/// encoding, never the numbers.  A fourth session with f16 samples
+/// deliberately changes the numbers (inputs are quantized to binary16)
+/// and is pinned to the documented f32 fast-path envelope instead.
+fn wire_v2_parity(params: &LstmParams, loads: &[Vec<[f32; INPUT_SIZE]>]) -> Result<V2Parity> {
+    use crate::kernel::simd::F32_FAST_MAX_ABS_ERR;
+    let windows: Vec<[f32; INPUT_SIZE]> =
+        loads[0].iter().take(16.min(loads[0].len())).copied().collect();
+    let server = Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let mut fcfg = FabricConfig::new(1, 4);
+    fcfg.queue_depth = windows.len().max(64);
+    fcfg.datapath = DatapathKind::FloatF32;
+    let fabric = Arc::new(Fabric::new(params, fcfg)?);
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run_fabric(fabric);
+    });
+
+    let run = |session: &str, max_version: u8, delta: bool, f16: bool| -> Result<(Vec<f64>, u64)> {
+        let opts =
+            PipelineOptions { max_version, delta, f16, inflight_cap: 16, deadline_us: 0.0 };
+        let mut c = PipelinedClient::connect(&addr, Some(session), opts)?;
+        anyhow::ensure!(
+            c.version() == max_version,
+            "parity session {session} negotiated v{} (offered {max_version})",
+            c.version()
+        );
+        let mut est = Vec::with_capacity(windows.len());
+        for (i, w) in windows.iter().enumerate() {
+            let seq = c.submit(w, None)?;
+            loop {
+                match c.recv(Some(Duration::from_secs(20)))? {
+                    PipeEvent::Completion(rec) => {
+                        anyhow::ensure!(
+                            rec.seq == seq && !rec.shed,
+                            "parity window {i} shed or reordered"
+                        );
+                        est.push(rec.estimate);
+                        break;
+                    }
+                    PipeEvent::Error { msg, .. } => anyhow::bail!("server error: {msg}"),
+                    PipeEvent::Control(..) => {}
+                }
+            }
+        }
+        Ok((est, c.bytes_out()))
+    };
+    let (v1, v1_bytes) = run("v2par-v1", 1, false, false)?;
+    let (plain, _) = run("v2par-plain", 2, false, false)?;
+    let (delta, delta_bytes) = run("v2par-delta", 2, true, false)?;
+    let (halved, _) = run("v2par-f16", 2, true, true)?;
+    let mut max_err = 0.0f64;
+    for i in 0..windows.len() {
+        anyhow::ensure!(
+            v1[i].to_bits() == plain[i].to_bits() && v1[i].to_bits() == delta[i].to_bits(),
+            "estimate diverged on window {i}: v1 {:?} vs v2 {:?} vs v2-delta {:?}",
+            v1[i],
+            plain[i],
+            delta[i]
+        );
+        max_err = max_err.max((halved[i] - v1[i]).abs());
+    }
+    anyhow::ensure!(
+        max_err <= F32_FAST_MAX_ABS_ERR,
+        "f16 estimates drifted {max_err:.3e} (envelope {F32_FAST_MAX_ABS_ERR:e})"
+    );
+    anyhow::ensure!(
+        delta_bytes < v1_bytes,
+        "delta session sent {delta_bytes} bytes vs v1's {v1_bytes} on overlapping windows"
+    );
+    let mut ctl = Client::connect(&addr)?;
+    ctl.shutdown()?;
+    server_thread.join().expect("v2 parity server panicked");
+    Ok(V2Parity { windows: windows.len() as u64, f16_max_abs_err: max_err })
+}
+
 /// Deterministically pick `streams` session names such that
 /// `hot_fraction` of them hash to shard 0 of a `shards`-wide fabric and
 /// the rest elsewhere — the adversarial keyspace FNV routing cannot fix
@@ -769,6 +1327,15 @@ pub fn run_serving_suite(
     }
     let parity_windows =
         if both { wire_parity(params, &loads).context("wire parity check")? } else { 0 };
+    let (open_loop, v2_parity) = if cfg.open_loop {
+        let open_loads = generate_open_loads(cfg);
+        let rows =
+            run_open_loop_suite(params, cfg, &open_loads).context("open-loop sweep")?;
+        let parity = wire_v2_parity(params, &open_loads).context("v2 parity check")?;
+        (rows, Some(parity))
+    } else {
+        (Vec::new(), None)
+    };
     let rebalance = if cfg.skew {
         Some(RebalanceCompare {
             off: run_skew_scenario(params, cfg, false).context("skew scenario, rebalance off")?,
@@ -797,6 +1364,8 @@ pub fn run_serving_suite(
         rebalance,
         wire_comparison,
         parity_windows,
+        open_loop,
+        v2_parity,
         best_fabric_shards,
         best_fabric_vs_serial,
     };
@@ -827,6 +1396,11 @@ mod tests {
             skew_streams: 4,
             skew_hot_fraction: 0.8,
             skew_requests: 4,
+            open_loop: false, // exercised by its own test below
+            open_streams: 2,
+            open_requests: 8,
+            open_rates_hz: vec![500.0],
+            open_stride: 4,
             seed: 11,
         };
         let out = std::env::temp_dir().join("hrd_bench_serving_selftest.json");
@@ -895,6 +1469,69 @@ mod tests {
         assert!(on.p50_us > 0.0 && on.p99_us >= on.p50_us);
     }
 
+    /// Open-loop smoke: every {process} x {version} operating point
+    /// produces a knee-curve row, v2 moves fewer bytes per request than
+    /// v1 at each of them (asserted inside the suite), and the v2
+    /// estimate-parity pass runs.
+    #[test]
+    fn open_loop_rows_cover_both_versions() {
+        let params = LstmParams::init(16, 15, 3, 1, 7);
+        let mut cfg = ServingConfig::quick();
+        cfg.streams = 2;
+        cfg.requests_per_stream = 4;
+        cfg.shard_counts = vec![2];
+        cfg.protos = vec![WireProto::Binary];
+        cfg.batch = 2;
+        cfg.paced_requests = 0;
+        cfg.skew = false;
+        cfg.open_streams = 2;
+        cfg.open_requests = 12;
+        cfg.open_rates_hz = vec![400.0];
+        let s = run_serving_suite(&params, &cfg, None).unwrap();
+        assert_eq!(s.open_loop.len(), 6, "closed + {{poisson,bursty}} x {{v1,v2}}");
+        for process in ["closed", "poisson", "bursty"] {
+            for v in [1u8, 2] {
+                let row = s
+                    .open_loop
+                    .iter()
+                    .find(|r| r.process == process && r.wire_version == v)
+                    .unwrap_or_else(|| panic!("no {process} v{v} row"));
+                assert_eq!(row.requests, 24, "{process} v{v} submits every window");
+                assert!(row.bytes_per_request > 0.0, "{process} v{v}");
+                assert!(row.offered_rps > 0.0 && row.achieved_rps > 0.0, "{row:?}");
+            }
+        }
+        let p = s.v2_parity.as_ref().expect("parity pass runs with open loop on");
+        assert!(p.windows > 0);
+        assert!(p.f16_max_abs_err <= crate::kernel::simd::F32_FAST_MAX_ABS_ERR);
+        let j = s.to_json(&cfg);
+        assert_eq!(j.get("open_loop").unwrap().as_arr().unwrap().len(), 6);
+        assert!(j.at(&["v2_parity", "windows"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// The open-loop ring workload really overlaps: consecutive windows
+    /// differ in exactly `open_stride` positions (what the v2 delta
+    /// encoding banks on), and generation is deterministic.
+    #[test]
+    fn open_loads_overlap_by_stride() {
+        let mut cfg = ServingConfig::quick();
+        cfg.open_streams = 2;
+        cfg.open_requests = 10;
+        cfg.open_stride = 4;
+        let loads = generate_open_loads(&cfg);
+        assert_eq!(loads.len(), 2);
+        for stream in &loads {
+            assert_eq!(stream.len(), 10);
+            for k in 1..stream.len() {
+                let changed = (0..INPUT_SIZE)
+                    .filter(|&i| stream[k][i].to_bits() != stream[k - 1][i].to_bits())
+                    .count();
+                assert_eq!(changed, 4, "window {k} must refresh exactly stride positions");
+            }
+        }
+        assert_eq!(loads, generate_open_loads(&cfg), "deterministic workload");
+    }
+
     /// Single-protocol runs still work (and skip comparison + parity).
     #[test]
     fn single_proto_suite_skips_parity() {
@@ -912,6 +1549,11 @@ mod tests {
             skew_streams: 4,
             skew_hot_fraction: 0.8,
             skew_requests: 4,
+            open_loop: false,
+            open_streams: 2,
+            open_requests: 8,
+            open_rates_hz: vec![500.0],
+            open_stride: 4,
             seed: 3,
         };
         let s = run_serving_suite(&params, &cfg, None).unwrap();

@@ -50,6 +50,10 @@ COMMANDS:
             --rebalance  (hot-shard rebalancing: idle shards steal whole
             sessions — live state + queued jobs — from saturated ones;
             see docs/SCHED.md; also `[sched] rebalance = true`)
+            --wire-max-version {1|2}  (highest binary protocol version to
+            negotiate; 1 pins legacy request-reply serving)
+            --credit-window W  (protocol-v2 per-connection credit grant:
+            max windows in flight; also `[wire]` in the config)
   loadgen   self-contained serving load generator: drives M synthetic
             DROPBEAR streams through a loopback socket against the serial
             backend and the fabric at several shard counts over the JSON
@@ -61,6 +65,10 @@ COMMANDS:
             --paced-requests K  --out <file>  --quick
             --no-skew  (skip the skewed-keyspace rebalance-off-vs-on
             scenario; see docs/SCHED.md)  --skew-streams M  --skew-requests N
+            open-loop knee curves (pipelined clients, wire v1 vs v2 —
+            Poisson + bursty arrivals into the open_loop[] rows; see
+            docs/PROTOCOL.md):  --no-open-loop  --open-streams M
+            --open-requests N  --open-rates "250,1000,4000"  --open-stride K
   tables    regenerate Tables I-IV (FPGA design-space study)
   pareto    design-space Pareto frontier + constrained recommendation
             --min-snr X  --max-dsps N
@@ -136,6 +144,12 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.gather_us = args.get_f64("gather-us", cfg.gather_us)?.max(0.0);
     cfg.shed = args.get_or("shed", &cfg.shed.clone()).to_string();
     cfg.rebalance = cfg.rebalance || args.has_flag("rebalance");
+    cfg.wire_max_version = args
+        .get_usize("wire-max-version", cfg.wire_max_version as usize)?
+        .clamp(1, crate::wire::MAX_VERSION as usize) as u8;
+    cfg.wire_credit_window = args
+        .get_usize("credit-window", cfg.wire_credit_window as usize)?
+        .clamp(1, u16::MAX as usize) as u16;
     Ok(cfg)
 }
 
@@ -358,7 +372,11 @@ fn serve_tcp(args: &Args) -> Result<i32> {
     );
     let params = load_params(&cfg)?;
     let addr = args.get_or("addr", "127.0.0.1:7433");
-    let server = crate::coordinator::Server::bind(addr)?;
+    let mut server = crate::coordinator::Server::bind(addr)?;
+    server.set_wire_options(crate::coordinator::WireOptions {
+        max_version: cfg.wire_max_version,
+        credit_window: cfg.wire_credit_window,
+    });
     let datapath = fabric_datapath(cfg.backend, &cfg.precision, &cfg.kernel_precision)?;
     match datapath {
         Some(dp) if cfg.shards >= 1 => {
@@ -366,13 +384,15 @@ fn serve_tcp(args: &Args) -> Result<i32> {
             let fabric = std::sync::Arc::new(crate::sched::Fabric::new(&params, fcfg)?);
             println!(
                 "serving fabric backend={} datapath={} shards={} batch={} deadline={}us \
-                 rebalance={} on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
+                 rebalance={} wire<=v{} credits={} on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
                 cfg.backend.name(),
                 dp.name(),
                 fabric.shards(),
                 cfg.batch,
                 cfg.deadline_us,
                 if cfg.rebalance { "on" } else { "off" },
+                cfg.wire_max_version,
+                cfg.wire_credit_window,
                 server.local_addr()?
             );
             let snap = server.run_fabric(fabric)?;
@@ -431,6 +451,19 @@ fn loadgen(args: &Args) -> Result<i32> {
     scfg.skew = scfg.skew && !args.has_flag("no-skew");
     scfg.skew_streams = args.get_usize("skew-streams", scfg.skew_streams)?.max(2);
     scfg.skew_requests = args.get_usize("skew-requests", scfg.skew_requests)?.max(1);
+    scfg.open_loop = scfg.open_loop && !args.has_flag("no-open-loop");
+    scfg.open_streams = args.get_usize("open-streams", scfg.open_streams)?.max(1);
+    scfg.open_requests = args.get_usize("open-requests", scfg.open_requests)?.max(1);
+    scfg.open_stride = args.get_usize("open-stride", scfg.open_stride)?.clamp(1, 16);
+    if let Some(list) = args.get("open-rates") {
+        let rates: std::result::Result<Vec<f64>, _> =
+            list.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        scfg.open_rates_hz = rates?;
+        anyhow::ensure!(
+            !scfg.open_rates_hz.is_empty() && scfg.open_rates_hz.iter().all(|&r| r > 0.0),
+            "--open-rates needs a comma-separated list of rates > 0"
+        );
+    }
     scfg.seed = args.get_u64("seed", scfg.seed)?;
     if let Some(list) = args.get("shards") {
         let counts: std::result::Result<Vec<usize>, _> =
@@ -741,6 +774,23 @@ mod tests {
         assert!(f.balance.enabled);
         let plain = experiment_config(&parse(&["serve-tcp", "--backend", "native"])).unwrap();
         assert!(!plain.rebalance, "rebalancing is opt-in");
+    }
+
+    #[test]
+    fn wire_options_flow_into_the_config() {
+        let a = parse(&[
+            "serve-tcp", "--backend", "native", "--wire-max-version", "1",
+            "--credit-window", "4",
+        ]);
+        let cfg = experiment_config(&a).unwrap();
+        assert_eq!(cfg.wire_max_version, 1, "--wire-max-version pins the protocol");
+        assert_eq!(cfg.wire_credit_window, 4);
+        let d = experiment_config(&parse(&["serve-tcp", "--backend", "native"])).unwrap();
+        assert_eq!(d.wire_max_version, crate::wire::MAX_VERSION, "v2 on by default");
+        assert_eq!(d.wire_credit_window, 64);
+        // Out-of-range values clamp instead of erroring.
+        let a = parse(&["serve-tcp", "--backend", "native", "--wire-max-version", "9"]);
+        assert_eq!(experiment_config(&a).unwrap().wire_max_version, crate::wire::MAX_VERSION);
     }
 
     #[test]

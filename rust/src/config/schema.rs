@@ -92,6 +92,13 @@ pub struct ExperimentConfig {
     /// Hot-shard rebalancing: cross-shard work stealing with live
     /// session-state migration (`serve-tcp --rebalance`).
     pub rebalance: bool,
+    /// Highest binary wire-protocol version `serve-tcp` negotiates
+    /// (`[wire] max_version`; 1 forces legacy request-reply serving).
+    pub wire_max_version: u8,
+    /// Credit window granted to each protocol-v2 connection
+    /// (`[wire] credit_window`): max submitted-but-uncompleted windows
+    /// in flight per client.
+    pub wire_credit_window: u16,
 }
 
 impl Default for ExperimentConfig {
@@ -115,6 +122,8 @@ impl Default for ExperimentConfig {
             gather_us: 200.0,
             shed: "reject".into(),
             rebalance: false,
+            wire_max_version: crate::wire::MAX_VERSION,
+            wire_credit_window: 64,
         }
     }
 }
@@ -150,6 +159,12 @@ impl ExperimentConfig {
             gather_us: doc.get_f64("sched.gather_us", d.gather_us).max(0.0),
             shed: doc.get_str("sched.shed", &d.shed),
             rebalance: doc.get_bool("sched.rebalance", d.rebalance),
+            wire_max_version: doc
+                .get_i64("wire.max_version", d.wire_max_version as i64)
+                .clamp(1, crate::wire::MAX_VERSION as i64) as u8,
+            wire_credit_window: doc
+                .get_i64("wire.credit_window", d.wire_credit_window as i64)
+                .clamp(1, u16::MAX as i64) as u16,
         }
     }
 }
@@ -167,6 +182,8 @@ mod tests {
         assert_eq!(c.shards, 1);
         assert_eq!(c.batch, 8);
         assert_eq!(c.shed, "reject");
+        assert_eq!(c.wire_max_version, crate::wire::MAX_VERSION, "v2 on by default");
+        assert_eq!(c.wire_credit_window, 64);
     }
 
     #[test]
@@ -191,6 +208,10 @@ batch = 16
 gather_us = 50.0
 shed = "evict-farthest"
 rebalance = true
+
+[wire]
+max_version = 1
+credit_window = 4
 "#,
         )
         .unwrap();
@@ -212,6 +233,8 @@ rebalance = true
         assert_eq!(c.shed, "evict-farthest");
         assert!(c.rebalance);
         assert!(!ExperimentConfig::default().rebalance, "opt-in only");
+        assert_eq!(c.wire_max_version, 1, "[wire] max_version pins the protocol");
+        assert_eq!(c.wire_credit_window, 4);
     }
 
     #[test]

@@ -47,6 +47,7 @@
 //! Session names starting with `conn/` are reserved (anonymous
 //! per-connection streams) and rejected when supplied by a client.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -57,10 +58,12 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
-use crate::sched::{checked_hash, Fabric, SchedSnapshot, SessionNameError, SessionToken};
+use crate::sched::{
+    checked_hash, Completion, Fabric, SchedSnapshot, SessionNameError, SessionToken, Shed,
+};
 use crate::util::{stats, Json};
 use crate::wire;
-use crate::wire::{CompletionRec, FrameReader, FrameType, FrameWriter, Recv, Reject};
+use crate::wire::{CompletionRec, CreditGate, FrameReader, FrameType, FrameWriter, Recv, Reject};
 
 use super::backend::Backend;
 
@@ -331,6 +334,68 @@ impl ServerStats {
     }
 }
 
+// ---- wire-protocol serving options and counters ------------------------
+
+/// Per-server binary-protocol tuning (`[wire]` config section).
+#[derive(Debug, Clone, Copy)]
+pub struct WireOptions {
+    /// Highest protocol version this server negotiates (1 = force the
+    /// legacy request-reply protocol even for v2-capable clients).
+    pub max_version: u8,
+    /// Credit window granted to each v2 connection: the number of
+    /// submitted-but-uncompleted windows one client may have in flight.
+    pub credit_window: u16,
+}
+
+impl Default for WireOptions {
+    fn default() -> Self {
+        Self { max_version: wire::MAX_VERSION, credit_window: 64 }
+    }
+}
+
+/// Aggregate per-process wire traffic counters, reported as the
+/// `"wire"` object of fabric stats replies (both protocols).  Binary
+/// connections count exact frame bytes; JSON connections count line
+/// bytes (one line = one "frame").
+#[derive(Debug, Default)]
+pub struct WireStats {
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+}
+
+impl WireStats {
+    fn add_in(&self, bytes: u64, frames: u64) {
+        self.bytes_in.fetch_add(bytes, Ordering::Relaxed);
+        self.frames_in.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    fn add_out(&self, bytes: u64, frames: u64) {
+        self.bytes_out.fetch_add(bytes, Ordering::Relaxed);
+        self.frames_out.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bytes_in", Json::Num(self.bytes_in.load(Ordering::Relaxed) as f64)),
+            ("bytes_out", Json::Num(self.bytes_out.load(Ordering::Relaxed) as f64)),
+            ("frames_in", Json::Num(self.frames_in.load(Ordering::Relaxed) as f64)),
+            ("frames_out", Json::Num(self.frames_out.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Fabric stats snapshot with the wire counters merged in — the one
+/// rendering shared by the JSON handler and both binary handlers.
+fn fabric_stats_json(fabric: &Fabric, wstats: &WireStats) -> String {
+    let mut j = fabric.snapshot().to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("wire".to_string(), wstats.to_json());
+    }
+    j.to_string()
+}
+
 // ---- the server --------------------------------------------------------
 
 /// The TCP server.  `run` owns the backend on the calling thread;
@@ -338,13 +403,23 @@ impl ServerStats {
 pub struct Server {
     listener: TcpListener,
     shutdown: Arc<AtomicBool>,
+    wire: WireOptions,
 }
 
 impl Server {
     /// Bind to an address (use port 0 for an ephemeral port in tests).
     pub fn bind(addr: &str) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        Ok(Self { listener, shutdown: Arc::new(AtomicBool::new(false)) })
+        Ok(Self {
+            listener,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            wire: WireOptions::default(),
+        })
+    }
+
+    /// Override the binary-protocol options (fabric mode only).
+    pub fn set_wire_options(&mut self, wire: WireOptions) {
+        self.wire = wire;
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -454,6 +529,8 @@ impl Server {
     pub fn run_fabric(self, fabric: Arc<Fabric>) -> Result<SchedSnapshot> {
         let shutdown = self.shutdown.clone();
         let listener = self.listener;
+        let wire_opts = self.wire;
+        let wstats = Arc::new(WireStats::default());
         listener.set_nonblocking(true)?;
         let mut handlers = Vec::new();
         loop {
@@ -465,13 +542,14 @@ impl Server {
                     let _ = stream.set_nonblocking(false);
                     let fabric = fabric.clone();
                     let shutdown = shutdown.clone();
+                    let wstats = wstats.clone();
                     // Reap finished handlers so connection churn doesn't
                     // accumulate dead JoinHandles over a long deployment;
                     // still-running ones are joined at shutdown so the
                     // final snapshot sees every reply flushed.
                     handlers.retain(|h| !h.is_finished());
                     handlers.push(std::thread::spawn(move || {
-                        let _ = handle_fabric_connection(stream, fabric, shutdown);
+                        let _ = handle_fabric_connection(stream, fabric, shutdown, wire_opts, wstats);
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -568,6 +646,8 @@ fn handle_fabric_connection(
     stream: TcpStream,
     fabric: Arc<Fabric>,
     shutdown: Arc<AtomicBool>,
+    wire_opts: WireOptions,
+    wstats: Arc<WireStats>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(READ_POLL))?;
@@ -580,11 +660,11 @@ fn handle_fabric_connection(
         Sniffed::Gone => Ok(()),
         Sniffed::Json => {
             log::debug!("fabric client connected (json): {peer}");
-            handle_fabric_json(stream, preload, fabric, shutdown, conn)
+            handle_fabric_json(stream, preload, fabric, shutdown, conn, wstats)
         }
         Sniffed::Binary => {
             log::debug!("fabric client connected (binary): {peer}");
-            handle_fabric_binary(stream, preload, fabric, shutdown, conn)
+            handle_fabric_binary(stream, preload, fabric, shutdown, conn, wire_opts, wstats)
         }
     }
 }
@@ -595,10 +675,12 @@ fn handle_fabric_json(
     fabric: Arc<Fabric>,
     shutdown: Arc<AtomicBool>,
     conn: SessionToken,
+    wstats: Arc<WireStats>,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = LineReader::with_preload(stream, preload)?;
     while let Some(line) = reader.next_line(&shutdown)? {
+        wstats.add_in(line.len() as u64 + 1, 1);
         if line.trim().is_empty() {
             continue;
         }
@@ -643,7 +725,7 @@ fn handle_fabric_json(
                     }
                 }
             }
-            Ok(Request::Stats) => fabric.snapshot().to_json().to_string(),
+            Ok(Request::Stats) => fabric_stats_json(&fabric, &wstats),
             Ok(Request::Shutdown) => {
                 shutdown.store(true, Ordering::SeqCst);
                 Json::obj(vec![("ok", Json::Bool(true))]).to_string()
@@ -652,6 +734,7 @@ fn handle_fabric_json(
         };
         writer.write_all(response.as_bytes())?;
         writer.write_all(b"\n")?;
+        wstats.add_out(response.len() as u64 + 1, 1);
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
@@ -663,24 +746,34 @@ fn handle_fabric_json(
 /// buffer into [`Fabric::submit_hashed`] — the hot path allocates no
 /// strings and no per-request reply objects (one reused frame buffer on
 /// each side).
+/// Session field of a binary frame -> routing hash (empty = the
+/// connection's anonymous stream).
+fn wire_session_hash(sess: &[u8], conn: &SessionToken) -> Result<u64, SessionNameError> {
+    if sess.is_empty() {
+        Ok(conn.hash())
+    } else {
+        checked_hash(sess)
+    }
+}
+
 fn handle_fabric_binary(
     stream: TcpStream,
     preload: Vec<u8>,
     fabric: Arc<Fabric>,
     shutdown: Arc<AtomicBool>,
     conn: SessionToken,
+    wire_opts: WireOptions,
+    wstats: Arc<WireStats>,
 ) -> Result<()> {
     let mut writer = FrameWriter::new(stream.try_clone()?);
     let mut reader = FrameReader::with_preload(stream, preload);
-    // Session field of a frame -> routing hash (empty = this
-    // connection's anonymous stream).
-    let hash_of = |sess: &[u8]| -> Result<u64, SessionNameError> {
-        if sess.is_empty() {
-            Ok(conn.hash())
-        } else {
-            checked_hash(sess)
-        }
-    };
+    let server_max = wire_opts.max_version.clamp(wire::VERSION, wire::MAX_VERSION) as u16;
+    let hash_of = |sess: &[u8]| wire_session_hash(sess, &conn);
+    let mut in_mark = (0u64, 0u64);
+    let mut out_mark = (0u64, 0u64);
+    // Negotiating v2 hands the connection to the pipelined handler
+    // after the current frame's borrow of the receive buffer ends.
+    let mut upgrade = None;
     loop {
         let recv = match reader.next_frame(Some(&shutdown))? {
             Some(r) => r,
@@ -692,8 +785,8 @@ fn handle_fabric_binary(
                     0,
                     false,
                     &format!(
-                        "unsupported protocol version {v} (server speaks {})",
-                        wire::VERSION
+                        "unsupported protocol version {v} (server speaks 1..={})",
+                        wire::MAX_VERSION
                     ),
                 )?;
             }
@@ -715,11 +808,19 @@ fn handle_fabric_binary(
                     0,
                     false,
                     &format!(
-                        "no common protocol version (client max {client_max}, server speaks {})",
-                        wire::VERSION
+                        "no common protocol version (client max {client_max}, server speaks 1..={})",
+                        wire::MAX_VERSION
                     ),
                 )?,
-                Ok(_) => writer.send_hello_ack(wire::VERSION as u16)?,
+                Ok(client_max) => {
+                    let chosen = client_max.min(server_max);
+                    // The ack itself still travels in a v1 envelope —
+                    // negotiation completes when the client reads it.
+                    writer.send_hello_ack(chosen, wire_opts.credit_window)?;
+                    if chosen >= wire::VERSION_V2 as u16 {
+                        upgrade = Some(chosen as u8);
+                    }
+                }
             },
             Recv::Frame(FrameType::Submit, payload) => {
                 match wire::frame::decode_submit(payload) {
@@ -781,7 +882,8 @@ fn handle_fabric_binary(
                 },
             },
             Recv::Frame(FrameType::Stats, _) => {
-                writer.send_stats_json(&fabric.snapshot().to_json().to_string())?;
+                flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
+                writer.send_stats_json(&fabric_stats_json(&fabric, &wstats))?;
             }
             Recv::Frame(FrameType::Shutdown, _) => {
                 shutdown.store(true, Ordering::SeqCst);
@@ -793,11 +895,382 @@ fn handle_fabric_binary(
                 writer.send_error(0, false, &format!("unexpected {ty:?} frame"))?;
             }
         }
+        flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
+        if let Some(version) = upgrade {
+            writer.set_version(version);
+            return run_binary_v2(
+                reader, writer, fabric, shutdown, conn, wire_opts, wstats,
+            );
+        }
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
     }
+    flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
     Ok(())
+}
+
+/// Fold the deltas of a connection's frame counters into the shared
+/// aggregate (idempotent per observed byte: marks advance with the
+/// counters).
+fn flush_wire_marks(
+    wstats: &WireStats,
+    reader: &FrameReader<TcpStream>,
+    writer: &FrameWriter<TcpStream>,
+    in_mark: &mut (u64, u64),
+    out_mark: &mut (u64, u64),
+) {
+    let (bi, fi) = (reader.bytes_in(), reader.frames_in());
+    wstats.add_in(bi - in_mark.0, fi - in_mark.1);
+    *in_mark = (bi, fi);
+    let (bo, fo) = (writer.bytes_out(), writer.frames_out());
+    wstats.add_out(bo - out_mark.0, fo - out_mark.1);
+    *out_mark = (bo, fo);
+}
+
+/// One item for the v2 writer pump — the only thread that touches a v2
+/// connection's send half.
+enum V2Out {
+    /// A settled window: write a completion (shed ones carry
+    /// `FLAG_SHED`), then return its flow-control credit.
+    Done(u64, std::result::Result<Completion, Shed>),
+    /// Re-ack a redundant `Hello` with the already-negotiated terms.
+    HelloAck(u16, u16),
+    Ok,
+    /// Render and send a stats reply (the pump flushes its own write
+    /// counters first so the reply sees them).
+    Stats,
+    /// An error frame; `refund` credits are returned after writing (a
+    /// submit that failed validation after its credit was taken).
+    Err { seq: u64, shed: bool, msg: String, refund: u32 },
+}
+
+/// Protocol-v2 connection handler: pipelined, credit-bounded.
+///
+/// Three threads per connection:
+///
+/// * this one — the *reader*: parses frames, takes one credit per
+///   window BEFORE admitting it into the fabric (so
+///   admitted-but-unwritten work can never exceed the granted window;
+///   a stalled client stops the reader at the gate and TCP
+///   backpressure does the rest), and routes submits through
+///   [`Fabric::submit_pushed`] tagged with the client's `seq`;
+/// * the *pump* — owns the [`FrameWriter`], drains one inbox of
+///   [`V2Out`] items, writes completion/control frames in whatever
+///   order shards finish, and releases credits after each write;
+/// * a *forwarder* — moves `(seq, result)` pushes from the fabric's
+///   completion channel into the pump's inbox (mpsc has no select).
+///
+/// Batch submits complete as individual seq-matched `Completion`
+/// frames on this path (not a `CompletionBatch`) — uniform credit
+/// accounting; see `docs/PROTOCOL.md`.
+fn run_binary_v2(
+    mut reader: FrameReader<TcpStream>,
+    writer: FrameWriter<TcpStream>,
+    fabric: Arc<Fabric>,
+    shutdown: Arc<AtomicBool>,
+    conn: SessionToken,
+    wire_opts: WireOptions,
+    wstats: Arc<WireStats>,
+) -> Result<()> {
+    let version = writer.version() as u16;
+    let credits = wire_opts.credit_window;
+    let gate = Arc::new(CreditGate::new(credits));
+    let (push_tx, push_rx) = channel::<(u64, std::result::Result<Completion, Shed>)>();
+    let (out_tx, out_rx) = channel::<V2Out>();
+
+    let forwarder = {
+        let out_tx = out_tx.clone();
+        std::thread::spawn(move || {
+            for (seq, result) in push_rx {
+                if out_tx.send(V2Out::Done(seq, result)).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+
+    let pump = {
+        let gate = gate.clone();
+        let fabric = fabric.clone();
+        let wstats = wstats.clone();
+        let mut writer = writer;
+        std::thread::spawn(move || {
+            let mut out_mark = (writer.bytes_out(), writer.frames_out());
+            for item in out_rx {
+                let refund = match item {
+                    V2Out::Done(seq, result) => {
+                        let rec = match &result {
+                            Ok(c) => completion_rec(seq, c),
+                            Err(_) => CompletionRec::shed(seq),
+                        };
+                        let _ = writer.send_completion(&rec);
+                        1
+                    }
+                    V2Out::HelloAck(v, w) => {
+                        let _ = writer.send_hello_ack(v, w);
+                        0
+                    }
+                    V2Out::Ok => {
+                        let _ = writer.send_empty(FrameType::Ok);
+                        0
+                    }
+                    V2Out::Stats => {
+                        let (bo, fo) = (writer.bytes_out(), writer.frames_out());
+                        wstats.add_out(bo - out_mark.0, fo - out_mark.1);
+                        out_mark = (bo, fo);
+                        let _ = writer.send_stats_json(&fabric_stats_json(&fabric, &wstats));
+                        0
+                    }
+                    V2Out::Err { seq, shed, msg, refund } => {
+                        let _ = writer.send_error(seq, shed, &msg);
+                        refund
+                    }
+                };
+                if refund > 0 {
+                    // Credit returns only AFTER the settling frame hit
+                    // the socket — the invariant the flow-control tests
+                    // pin (in-flight <= granted window at all times).
+                    gate.release(refund);
+                }
+            }
+            let (bo, fo) = (writer.bytes_out(), writer.frames_out());
+            wstats.add_out(bo - out_mark.0, fo - out_mark.1);
+        })
+    };
+
+    // Shutdown-aware credit acquisition for the reader.
+    let take_credit = |gate: &CreditGate| -> bool {
+        loop {
+            if gate.acquire(Some(READ_POLL)) {
+                return true;
+            }
+            if shutdown.load(Ordering::SeqCst) {
+                return false;
+            }
+        }
+    };
+
+    // Per-session delta contexts: the previous window of each session
+    // seen on THIS connection, as both ends reconstructed it.  Cleared
+    // by Reset; a reconnect always starts from full windows.
+    let mut delta_ctx: HashMap<u64, [f32; INPUT_SIZE]> = HashMap::new();
+    let mut in_mark = (reader.bytes_in(), reader.frames_in());
+
+    let loop_result: Result<()> = (|| {
+        loop {
+            let recv = match reader.next_frame(Some(&shutdown))? {
+                Some(r) => r,
+                None => break,
+            };
+            match recv {
+                Recv::Reject(Reject::Version(v)) => {
+                    let msg = format!(
+                        "unsupported protocol version {v} (server speaks 1..={})",
+                        wire::MAX_VERSION
+                    );
+                    let _ = out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                }
+                Recv::Reject(Reject::UnknownType(t)) => {
+                    let msg = format!("unknown frame type 0x{t:02x}");
+                    let _ = out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                }
+                Recv::Reject(Reject::Oversize(n)) => {
+                    let msg =
+                        format!("frame payload of {n} bytes exceeds {}", wire::MAX_PAYLOAD);
+                    let _ = out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                    break;
+                }
+                Recv::Frame(FrameType::SubmitV2, payload) => {
+                    match wire::frame::decode_submit_v2(payload) {
+                        Err(e) => {
+                            let msg = format!("bad submit-v2 frame: {e:#}");
+                            let _ =
+                                out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                        }
+                        Ok(v) => match wire_session_hash(v.session, &conn) {
+                            Err(e) => {
+                                let _ = out_tx.send(V2Out::Err {
+                                    seq: v.seq,
+                                    shed: false,
+                                    msg: e.to_string(),
+                                    refund: 0,
+                                });
+                            }
+                            Ok(hash) => match v.reconstruct(delta_ctx.get(&hash)) {
+                                Err(e) => {
+                                    let _ = out_tx.send(V2Out::Err {
+                                        seq: v.seq,
+                                        shed: false,
+                                        msg: format!("{e:#}"),
+                                        refund: 0,
+                                    });
+                                }
+                                Ok(window) => {
+                                    if !take_credit(&gate) {
+                                        break;
+                                    }
+                                    // Mirror the sender: the context
+                                    // advances even if admission sheds.
+                                    delta_ctx.insert(hash, window);
+                                    let deadline =
+                                        (v.deadline_us > 0.0).then_some(v.deadline_us);
+                                    if let Err(shed) = fabric.submit_pushed(
+                                        hash,
+                                        &window,
+                                        deadline,
+                                        push_tx.clone(),
+                                        v.seq,
+                                    ) {
+                                        let _ = out_tx.send(V2Out::Done(v.seq, Err(shed)));
+                                    }
+                                }
+                            },
+                        },
+                    }
+                }
+                Recv::Frame(FrameType::Submit, payload) => {
+                    match wire::frame::decode_submit(payload) {
+                        Err(e) => {
+                            let msg = format!("bad submit frame: {e:#}");
+                            let _ =
+                                out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                        }
+                        Ok(s) => match wire_session_hash(s.session, &conn) {
+                            Err(e) => {
+                                let _ = out_tx.send(V2Out::Err {
+                                    seq: s.seq,
+                                    shed: false,
+                                    msg: e.to_string(),
+                                    refund: 0,
+                                });
+                            }
+                            Ok(hash) => {
+                                if !take_credit(&gate) {
+                                    break;
+                                }
+                                let deadline = (s.deadline_us > 0.0).then_some(s.deadline_us);
+                                if let Err(shed) = fabric.submit_pushed(
+                                    hash,
+                                    &s.window,
+                                    deadline,
+                                    push_tx.clone(),
+                                    s.seq,
+                                ) {
+                                    let _ = out_tx.send(V2Out::Done(s.seq, Err(shed)));
+                                }
+                            }
+                        },
+                    }
+                }
+                Recv::Frame(FrameType::SubmitBatch, payload) => {
+                    match wire::frame::decode_submit_batch(payload) {
+                        Err(e) => {
+                            let msg = format!("bad submit-batch frame: {e:#}");
+                            let _ =
+                                out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                        }
+                        Ok(b) => match wire_session_hash(b.session, &conn) {
+                            Err(e) => {
+                                let _ = out_tx.send(V2Out::Err {
+                                    seq: b.base_seq,
+                                    shed: false,
+                                    msg: e.to_string(),
+                                    refund: 0,
+                                });
+                            }
+                            Ok(hash) => {
+                                let deadline = (b.deadline_us > 0.0).then_some(b.deadline_us);
+                                let mut gone = false;
+                                for i in 0..b.count {
+                                    if !take_credit(&gate) {
+                                        gone = true;
+                                        break;
+                                    }
+                                    let seq = b.base_seq.wrapping_add(i as u64);
+                                    if let Err(shed) = fabric.submit_pushed(
+                                        hash,
+                                        &b.window(i),
+                                        deadline,
+                                        push_tx.clone(),
+                                        seq,
+                                    ) {
+                                        let _ = out_tx.send(V2Out::Done(seq, Err(shed)));
+                                    }
+                                }
+                                if gone {
+                                    break;
+                                }
+                            }
+                        },
+                    }
+                }
+                Recv::Frame(FrameType::Reset, payload) => {
+                    match wire::frame::decode_reset(payload) {
+                        Err(e) => {
+                            let msg = format!("bad reset frame: {e:#}");
+                            let _ =
+                                out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                        }
+                        Ok(sess) => match wire_session_hash(sess, &conn) {
+                            Err(e) => {
+                                let _ = out_tx.send(V2Out::Err {
+                                    seq: 0,
+                                    shed: false,
+                                    msg: e.to_string(),
+                                    refund: 0,
+                                });
+                            }
+                            Ok(hash) => {
+                                // The session restarts from scratch on
+                                // both ends: next window must be full.
+                                delta_ctx.remove(&hash);
+                                fabric.reset_hashed(hash);
+                                let _ = out_tx.send(V2Out::Ok);
+                            }
+                        },
+                    }
+                }
+                Recv::Frame(FrameType::Hello, _) => {
+                    let _ = out_tx.send(V2Out::HelloAck(version, credits));
+                }
+                Recv::Frame(FrameType::Stats, _) => {
+                    let (bi, fi) = (reader.bytes_in(), reader.frames_in());
+                    wstats.add_in(bi - in_mark.0, fi - in_mark.1);
+                    in_mark = (bi, fi);
+                    let _ = out_tx.send(V2Out::Stats);
+                }
+                Recv::Frame(FrameType::Shutdown, _) => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    let _ = out_tx.send(V2Out::Ok);
+                    break;
+                }
+                Recv::Frame(ty, _) => {
+                    let msg = format!("unexpected {ty:?} frame");
+                    let _ = out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                }
+            }
+            let (bi, fi) = (reader.bytes_in(), reader.frames_in());
+            wstats.add_in(bi - in_mark.0, fi - in_mark.1);
+            in_mark = (bi, fi);
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        Ok(())
+    })();
+
+    // Teardown: dropping our senders lets the pump drain every pending
+    // completion (in-flight fabric jobs still hold `push_tx` clones and
+    // settle through the forwarder) and then exit.
+    drop(push_tx);
+    drop(out_tx);
+    let _ = forwarder.join();
+    let _ = pump.join();
+    gate.close();
+    let (bi, fi) = (reader.bytes_in(), reader.frames_in());
+    wstats.add_in(bi - in_mark.0, fi - in_mark.1);
+    loop_result
 }
 
 /// Map a fabric completion onto the wire record.

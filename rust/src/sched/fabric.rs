@@ -22,7 +22,7 @@ use crate::lstm::LstmParams;
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::metrics::{SchedMetrics, SchedSnapshot};
-use super::queue::{Control, Job, PushOutcome, ShardQueue, ShedPolicy};
+use super::queue::{CompletionTx, Control, Job, PushOutcome, ReplyTo, ShardQueue, ShedPolicy};
 use super::session::{session_hash, shard_of};
 use super::shard::{run_worker, DatapathKind, ShardCore, ShardWorkerCtx};
 
@@ -288,14 +288,14 @@ impl Fabric {
             window: Box::new(*window),
             enqueued: now,
             deadline: now + Duration::from_secs_f64(budget * 1e-6),
-            reply: tx,
+            reply: ReplyTo::Oneshot(tx),
         };
         let (shard, outcome) = self.with_route(session, |shard, q| (shard, q.push(job)));
         match outcome {
             PushOutcome::Admitted => Ok(Pending { rx }),
             PushOutcome::AdmittedEvicting(victim) => {
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                let _ = victim.reply.send(Err(Shed::Evicted));
+                victim.reply.send(Err(Shed::Evicted));
                 Ok(Pending { rx })
             }
             PushOutcome::Rejected(_) => {
@@ -309,6 +309,53 @@ impl Fabric {
             PushOutcome::Closed(_) => {
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
                 Err(anyhow::anyhow!("request shed: {}", Shed::Shutdown))
+            }
+        }
+    }
+
+    /// [`Self::submit_hashed`] for pipelined (protocol v2) connections:
+    /// instead of a per-request [`Pending`] channel, the completion —
+    /// or shed — is pushed onto the caller's shared `tx` tagged with
+    /// the caller-chosen `seq`, so one connection pump thread can
+    /// multiplex any number of in-flight windows and deliver them in
+    /// whatever order the shards finish.  Admission failures are
+    /// reported synchronously (the caller still owns the seq and can
+    /// turn the `Shed` into a wire error without round-tripping a
+    /// channel); eviction of a *victim* job is pushed through the
+    /// victim's own `ReplyTo` exactly as in the oneshot path.
+    pub fn submit_pushed(
+        &self,
+        session: u64,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+        tx: CompletionTx,
+        seq: u64,
+    ) -> std::result::Result<(), Shed> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
+        let job = Job {
+            session,
+            window: Box::new(*window),
+            enqueued: now,
+            deadline: now + Duration::from_secs_f64(budget * 1e-6),
+            reply: ReplyTo::Push { tx, seq },
+        };
+        let outcome = self.with_route(session, |_, q| q.push(job));
+        match outcome {
+            PushOutcome::Admitted => Ok(()),
+            PushOutcome::AdmittedEvicting(victim) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                victim.reply.send(Err(Shed::Evicted));
+                Ok(())
+            }
+            PushOutcome::Rejected(_) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(Shed::QueueFull)
+            }
+            PushOutcome::Closed(_) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(Shed::Shutdown)
             }
         }
     }
@@ -374,7 +421,7 @@ impl Fabric {
         for q in &self.queues {
             for job in q.close() {
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(Err(Shed::Shutdown));
+                job.reply.send(Err(Shed::Shutdown));
             }
         }
         let workers = std::mem::take(&mut *self.workers.lock().unwrap());

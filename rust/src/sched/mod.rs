@@ -79,7 +79,7 @@ pub mod shard;
 pub use balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 pub use fabric::{Completion, Fabric, FabricConfig, Pending, Shed};
 pub use metrics::{AtomicHist, SchedMetrics, SchedSnapshot, ShardSnapshot};
-pub use queue::ShedPolicy;
+pub use queue::{CompletionTx, ReplyTo, ShedPolicy};
 pub use session::{
     checked_hash, session_hash, session_hash_bytes, shard_of, SessionNameError, SessionToken,
     ANON_SESSION_PREFIX, MAX_SESSION_LEN,

@@ -25,6 +25,41 @@ use crate::arch::INPUT_SIZE;
 
 use super::fabric::{Completion, Shed};
 
+/// Shared channel for push-mode completions: `(seq, result)` pairs,
+/// many jobs funneling into one per-connection sender (see
+/// [`ReplyTo::Push`]).
+pub type CompletionTx = Sender<(u64, Result<Completion, Shed>)>;
+
+/// Where a job's result (or shed notice) is delivered.
+///
+/// `Oneshot` is the classic request-reply path: one private channel per
+/// request, a submitter thread blocked in `Pending::wait`.  `Push` is
+/// the protocol-v2 pipelined path: every job of a connection shares ONE
+/// channel, tagged with the client's `seq`, so shard workers push
+/// completions to the connection's writer pump the moment they finish —
+/// out of submission order across shards, no per-request thread parked
+/// anywhere.
+#[derive(Debug)]
+pub enum ReplyTo {
+    Oneshot(Sender<Result<Completion, Shed>>),
+    Push { tx: CompletionTx, seq: u64 },
+}
+
+impl ReplyTo {
+    /// Deliver the result.  The receiver may have given up
+    /// (disconnected client) — that is its business, not an error here.
+    pub fn send(&self, msg: Result<Completion, Shed>) {
+        match self {
+            Self::Oneshot(tx) => {
+                let _ = tx.send(msg);
+            }
+            Self::Push { tx, seq } => {
+                let _ = tx.send((*seq, msg));
+            }
+        }
+    }
+}
+
 /// One admitted inference request.
 #[derive(Debug)]
 pub struct Job {
@@ -36,7 +71,7 @@ pub struct Job {
     /// Completion must happen before this instant to count as a hit.
     pub deadline: Instant,
     /// Where the result (or a shed notice) is delivered.
-    pub reply: Sender<Result<Completion, Shed>>,
+    pub reply: ReplyTo,
 }
 
 /// A job together with its queue key, so a worker that popped it for a
@@ -440,7 +475,7 @@ mod tests {
                 window: Box::new([0.0; INPUT_SIZE]),
                 enqueued: now,
                 deadline: now + deadline_in,
-                reply: tx,
+                reply: ReplyTo::Oneshot(tx),
             },
             rx,
         )

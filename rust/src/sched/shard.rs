@@ -38,7 +38,6 @@
 //! * adopts migrated sessions: fresh lane, imported state, adopted jobs
 //!   re-keyed ahead of any same-session arrivals that raced in.
 
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -52,7 +51,7 @@ use crate::kernel::{FixedPath, FloatPath, MultiStream, MultiStreamF32, PackedMod
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::fabric::{Completion, Shed};
 use super::metrics::SchedMetrics;
-use super::queue::{Control, Migration, Popped, QueuedJob, ShardQueue, StolenSession};
+use super::queue::{Control, Migration, Popped, QueuedJob, ReplyTo, ShardQueue, StolenSession};
 use super::session::{LaneAssign, LaneTable};
 
 /// Which numeric datapath a shard's kernel session runs.
@@ -345,10 +344,11 @@ pub(crate) struct ShardWorkerCtx {
     pub gather_cap: Duration,
 }
 
-fn send_completion(reply: &Sender<Result<Completion, Shed>>, msg: Result<Completion, Shed>) {
+fn send_completion(reply: &ReplyTo, msg: Result<Completion, Shed>) {
     // The submitter may have given up (disconnected client) — that is
-    // its business, not an error here.
-    let _ = reply.send(msg);
+    // its business, not an error here (ReplyTo::send already ignores a
+    // hung-up receiver on both the oneshot and the pushed path).
+    reply.send(msg);
 }
 
 /// Routing-overlay entry GC (ROADMAP satellite).  Overrides used to
@@ -997,7 +997,7 @@ mod tests {
                     window: w,
                     enqueued: now,
                     deadline: now + Duration::from_millis(10),
-                    reply: tx,
+                    reply: ReplyTo::Oneshot(tx),
                 },
             },
             rx,
@@ -1440,7 +1440,7 @@ mod tests {
                     window: window(&mut rng),
                     enqueued: now,
                     deadline: now + Duration::from_millis(50),
-                    reply: tx,
+                    reply: ReplyTo::Oneshot(tx),
                 };
                 assert!(matches!(queue.push(job), PushOutcome::Admitted), "k={k} s={s}");
                 receivers.push(rx);

@@ -1,10 +1,26 @@
-//! Minimal blocking client for the binary wire protocol (loadgen,
-//! benches, examples, tests) — the binary twin of
-//! [`crate::coordinator::Client`], returning the same
-//! [`crate::coordinator::InferReply`] so callers can drive either
-//! protocol through one code path.
+//! Clients for the binary wire protocol.
+//!
+//! * [`WireClient`] — minimal *blocking* client (loadgen, benches,
+//!   examples, tests): the binary twin of
+//!   [`crate::coordinator::Client`], returning the same
+//!   [`crate::coordinator::InferReply`] so callers can drive either
+//!   protocol through one code path.  Speaks v1 request-reply
+//!   semantics (one frame out, one reply in) regardless of what the
+//!   server supports.
+//! * [`PipelinedClient`] — the protocol-v2 open-loop client: decoupled
+//!   send and receive halves over one socket, any number of submits in
+//!   flight up to the server-granted credit window, completions
+//!   matched by `seq` in whatever order the shards finish.  Negotiates
+//!   down transparently: against a v1-only server it sends plain v1
+//!   `Submit` frames under a client-side in-flight cap instead of
+//!   server credits.
 
-use std::net::TcpStream;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -13,10 +29,11 @@ use crate::coordinator::InferReply;
 use crate::sched::SessionToken;
 use crate::util::Json;
 
-use super::frame::{self, CompletionRec, FrameType, NO_PLACEMENT, VERSION};
+use super::flow::CreditGate;
+use super::frame::{self, CompletionRec, FrameType, MAX_VERSION, NO_PLACEMENT, VERSION, VERSION_V2};
 use super::io::{FrameReader, FrameWriter, Recv, Reject};
 
-/// Blocking binary-protocol client.
+/// Blocking binary-protocol client (v1 request-reply semantics).
 pub struct WireClient {
     reader: FrameReader<TcpStream>,
     writer: FrameWriter<TcpStream>,
@@ -66,11 +83,19 @@ impl WireClient {
         Ok(payload)
     }
 
-    /// Version negotiation; returns the server's chosen version.
+    /// Version negotiation; returns the server's chosen version.  This
+    /// client offers (and holds the server to) v1 — pipelined v2 lives
+    /// in [`PipelinedClient`].
     pub fn hello(&mut self) -> Result<u16> {
         self.writer.send_hello(VERSION as u16)?;
         let p = self.expect(FrameType::HelloAck)?;
-        frame::decode_u16(&p)
+        let ack = frame::decode_hello_ack(&p)?;
+        anyhow::ensure!(
+            ack.version == VERSION as u16,
+            "server chose protocol version {} for a v1-max hello",
+            ack.version
+        );
+        Ok(ack.version)
     }
 
     /// Send one feature window; returns (estimate, server latency us).
@@ -100,40 +125,43 @@ impl WireClient {
         Ok(reply_of(&rec))
     }
 
-    /// Submit many windows in ONE frame; completions come back in
-    /// submission order, shed windows flagged per record.
+    /// Submit many windows; completions come back in submission order,
+    /// shed windows flagged per record.  Batches larger than one
+    /// frame's [`frame::MAX_BATCH_WINDOWS`] are split transparently
+    /// into as many `SubmitBatch` frames as needed (seq numbering stays
+    /// continuous across the splits), so callers can hand over any
+    /// window count without knowing the wire limit.
     pub fn infer_batch(
         &mut self,
         windows: &[[f32; INPUT_SIZE]],
         deadline_us: Option<f64>,
     ) -> Result<Vec<CompletionRec>> {
-        anyhow::ensure!(
-            !windows.is_empty() && windows.len() <= frame::MAX_BATCH_WINDOWS,
-            "batch of {} windows (1..={})",
-            windows.len(),
-            frame::MAX_BATCH_WINDOWS
-        );
-        let base_seq = self.next_seq;
-        self.next_seq += windows.len() as u64;
-        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
-        self.writer.send_with(FrameType::SubmitBatch, |b| {
-            frame::encode_submit_batch(b, base_seq, deadline_us.unwrap_or(0.0), sess, windows)
-        })?;
-        let p = self.expect(FrameType::CompletionBatch)?;
-        let recs = frame::decode_completion_batch(&p)?;
-        anyhow::ensure!(
-            recs.len() == windows.len(),
-            "{} completions for {} windows",
-            recs.len(),
-            windows.len()
-        );
-        for (i, rec) in recs.iter().enumerate() {
+        anyhow::ensure!(!windows.is_empty(), "empty batch");
+        let mut recs = Vec::with_capacity(windows.len());
+        for chunk in windows.chunks(frame::MAX_BATCH_WINDOWS) {
+            let base_seq = self.next_seq;
+            self.next_seq += chunk.len() as u64;
+            let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+            self.writer.send_with(FrameType::SubmitBatch, |b| {
+                frame::encode_submit_batch(b, base_seq, deadline_us.unwrap_or(0.0), sess, chunk)
+            })?;
+            let p = self.expect(FrameType::CompletionBatch)?;
+            let chunk_recs = frame::decode_completion_batch(&p)?;
             anyhow::ensure!(
-                rec.seq == base_seq + i as u64,
-                "completion {i} has seq {} (expected {})",
-                rec.seq,
-                base_seq + i as u64
+                chunk_recs.len() == chunk.len(),
+                "{} completions for {} windows",
+                chunk_recs.len(),
+                chunk.len()
             );
+            for (i, rec) in chunk_recs.iter().enumerate() {
+                anyhow::ensure!(
+                    rec.seq == base_seq + i as u64,
+                    "completion {i} has seq {} (expected {})",
+                    rec.seq,
+                    base_seq + i as u64
+                );
+            }
+            recs.extend(chunk_recs);
         }
         Ok(recs)
     }
@@ -169,5 +197,349 @@ pub fn reply_of(rec: &CompletionRec) -> InferReply {
         deadline_miss: Some(rec.deadline_miss),
         shard: (rec.shard != NO_PLACEMENT).then_some(rec.shard as usize),
         lane: (rec.lane != NO_PLACEMENT).then_some(rec.lane as usize),
+    }
+}
+
+// ---- PipelinedClient ---------------------------------------------------
+
+/// Knobs for a [`PipelinedClient`].
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineOptions {
+    /// Highest protocol version to offer in `Hello` (capped at
+    /// [`MAX_VERSION`]; set to 1 to force the v1 path for A/B runs).
+    pub max_version: u8,
+    /// v2: delta-encode windows against the session's previous window.
+    pub delta: bool,
+    /// v2: carry samples as IEEE binary16 instead of f32.
+    pub f16: bool,
+    /// In-flight cap when the server negotiates down to v1 (no server
+    /// credits exist there; an open-loop generator still needs a bound
+    /// or a saturated server grows an unbounded local backlog).
+    pub inflight_cap: u16,
+    /// Default per-request deadline (0 = server default).
+    pub deadline_us: f64,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        Self {
+            max_version: MAX_VERSION,
+            delta: true,
+            f16: false,
+            inflight_cap: 64,
+            deadline_us: 0.0,
+        }
+    }
+}
+
+/// One event surfaced by a [`PipelinedClient`]'s receive half.
+#[derive(Debug, Clone)]
+pub enum PipeEvent {
+    /// A completion (possibly shed — check [`CompletionRec::shed`]);
+    /// arrives in shard-finish order, not submission order.
+    Completion(CompletionRec),
+    /// A seq-attributed (or `seq == 0`: connection-level) server error.
+    Error { seq: u64, shed: bool, msg: String },
+    /// Any other server frame (`Ok` after a reset, a stats reply, ...).
+    Control(FrameType, Vec<u8>),
+}
+
+/// Pipelined binary-protocol client: many submits in flight over one
+/// socket, completions pulled independently and matched by `seq`.
+///
+/// The receive half runs on a dedicated thread that parses frames,
+/// returns flow-control credits, and queues [`PipeEvent`]s; [`Self::recv`]
+/// / [`Self::try_recv`] drain that queue.  [`Self::submit`] blocks only
+/// when the credit window is exhausted — exactly the backpressure an
+/// open-loop load generator wants to measure.
+pub struct PipelinedClient {
+    stream: TcpStream,
+    writer: FrameWriter<TcpStream>,
+    version: u8,
+    credit_window: u16,
+    gate: Arc<CreditGate>,
+    events: Receiver<PipeEvent>,
+    reader: Option<JoinHandle<()>>,
+    bytes_in: Arc<AtomicU64>,
+    frames_in: Arc<AtomicU64>,
+    session: Option<SessionToken>,
+    next_seq: u64,
+    /// v2 delta context: the previous window *as the server
+    /// reconstructed it* (see [`frame::encode_submit_v2`]).
+    prev: Option<[f32; INPUT_SIZE]>,
+    opts: PipelineOptions,
+}
+
+impl PipelinedClient {
+    /// Connect, negotiate (synchronously — the `HelloAck` is the last
+    /// frame read on the caller's thread), and start the receive half.
+    pub fn connect(addr: &str, session: Option<&str>, opts: PipelineOptions) -> Result<Self> {
+        let session = match session {
+            None => None,
+            Some(s) => Some(
+                SessionToken::parse(s)
+                    .map_err(|e| anyhow::anyhow!("invalid session name {s:?}: {e}"))?,
+            ),
+        };
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true)?;
+        let mut writer = FrameWriter::new(stream.try_clone()?);
+        let mut reader = FrameReader::new(stream.try_clone()?);
+
+        let offer = opts.max_version.clamp(VERSION, MAX_VERSION);
+        writer.send_hello(offer as u16)?;
+        let ack = loop {
+            match reader.next_frame(None)? {
+                None => anyhow::bail!("server closed the connection during hello"),
+                Some(Recv::Reject(r)) => anyhow::bail!("unreadable hello ack: {r:?}"),
+                Some(Recv::Frame(FrameType::Error, p)) => {
+                    let e = frame::decode_error(&p)?;
+                    anyhow::bail!("server error: {}", e.msg);
+                }
+                Some(Recv::Frame(FrameType::HelloAck, p)) => break frame::decode_hello_ack(&p)?,
+                Some(Recv::Frame(ty, _)) => anyhow::bail!("expected HelloAck, got {ty:?}"),
+            }
+        };
+        let version = ack.version as u8;
+        anyhow::ensure!(
+            frame::version_supported(version) && version <= offer,
+            "server chose unsupported protocol version {}",
+            ack.version
+        );
+        writer.set_version(version);
+        // v2: the server's grant bounds in-flight work.  v1: no server
+        // credits — the same gate enforces a client-side cap.
+        let credit_window = match ack.credits {
+            Some(c) => c.max(1),
+            None => opts.inflight_cap.max(1),
+        };
+
+        let gate = Arc::new(CreditGate::new(credit_window));
+        let (tx, events) = channel();
+        let bytes_in = Arc::new(AtomicU64::new(0));
+        let frames_in = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let gate = gate.clone();
+            let bytes_in = bytes_in.clone();
+            let frames_in = frames_in.clone();
+            std::thread::Builder::new()
+                .name("hrd-wire-recv".into())
+                .spawn(move || {
+                    loop {
+                        let event = match reader.next_frame(None) {
+                            Ok(None) | Err(_) => break,
+                            Ok(Some(Recv::Reject(_))) => continue,
+                            Ok(Some(Recv::Frame(ty, payload))) => match ty {
+                                FrameType::Completion => {
+                                    match frame::decode_completion(payload) {
+                                        Ok(rec) => {
+                                            gate.release(1);
+                                            PipeEvent::Completion(rec)
+                                        }
+                                        Err(_) => continue,
+                                    }
+                                }
+                                FrameType::CompletionBatch => {
+                                    match frame::decode_completion_batch(payload) {
+                                        Ok(recs) => {
+                                            gate.release(recs.len() as u32);
+                                            let mut it = recs.into_iter();
+                                            let first = match it.next() {
+                                                Some(r) => r,
+                                                None => continue,
+                                            };
+                                            for rec in it {
+                                                if tx.send(PipeEvent::Completion(rec)).is_err() {
+                                                    break;
+                                                }
+                                            }
+                                            PipeEvent::Completion(first)
+                                        }
+                                        Err(_) => continue,
+                                    }
+                                }
+                                FrameType::Error => match frame::decode_error(payload) {
+                                    Ok(e) => {
+                                        if e.seq != 0 {
+                                            // A seq-attributed error settles
+                                            // that window — its credit comes
+                                            // back like a completion's.
+                                            gate.release(1);
+                                        }
+                                        PipeEvent::Error {
+                                            seq: e.seq,
+                                            shed: e.shed,
+                                            msg: e.msg.to_string(),
+                                        }
+                                    }
+                                    Err(_) => continue,
+                                },
+                                other => PipeEvent::Control(other, payload.to_vec()),
+                            },
+                        };
+                        bytes_in.store(reader.bytes_in(), Ordering::Relaxed);
+                        frames_in.store(reader.frames_in(), Ordering::Relaxed);
+                        if tx.send(event).is_err() {
+                            break;
+                        }
+                    }
+                    bytes_in.store(reader.bytes_in(), Ordering::Relaxed);
+                    frames_in.store(reader.frames_in(), Ordering::Relaxed);
+                    // Wake any sender blocked on credits: no more
+                    // completions are coming.
+                    gate.close();
+                })
+                .context("spawning wire receive thread")?
+        };
+
+        Ok(Self {
+            stream,
+            writer,
+            version,
+            credit_window,
+            gate,
+            events,
+            reader: Some(handle),
+            bytes_in,
+            frames_in,
+            session,
+            next_seq: 1,
+            prev: None,
+            opts,
+        })
+    }
+
+    /// Negotiated protocol version (1 or 2).
+    pub fn version(&self) -> u8 {
+        self.version
+    }
+
+    /// The in-flight bound this connection runs under (server-granted
+    /// for v2, client-side for v1).
+    pub fn credit_window(&self) -> u16 {
+        self.credit_window
+    }
+
+    /// Windows submitted but not yet settled by a completion/error.
+    pub fn in_flight(&self) -> u32 {
+        self.gate.in_flight()
+    }
+
+    /// Times a submit had to wait for credit (the saturation signal).
+    pub fn credit_stalls(&self) -> u64 {
+        self.gate.stalls()
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.writer.bytes_out()
+    }
+
+    pub fn frames_out(&self) -> u64 {
+        self.writer.frames_out()
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in.load(Ordering::Relaxed)
+    }
+
+    pub fn frames_in(&self) -> u64 {
+        self.frames_in.load(Ordering::Relaxed)
+    }
+
+    /// Submit one window, blocking while the credit window is
+    /// exhausted.  Returns the submission's `seq`.
+    pub fn submit(&mut self, window: &[f32; INPUT_SIZE], deadline_us: Option<f64>) -> Result<u64> {
+        anyhow::ensure!(
+            self.gate.acquire(None),
+            "connection closed while waiting for credit"
+        );
+        self.send_submit(window, deadline_us)
+    }
+
+    /// [`Self::submit`] that gives up after `wait` without credit
+    /// (`Ok(None)`); the flow-control tests use this to observe a
+    /// stalled sender without deadlocking.
+    pub fn submit_within(
+        &mut self,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+        wait: Duration,
+    ) -> Result<Option<u64>> {
+        if !self.gate.acquire(Some(wait)) {
+            return Ok(None);
+        }
+        self.send_submit(window, deadline_us).map(Some)
+    }
+
+    fn send_submit(&mut self, window: &[f32; INPUT_SIZE], deadline_us: Option<f64>) -> Result<u64> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let deadline = deadline_us.unwrap_or(self.opts.deadline_us);
+        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+        if self.version >= VERSION_V2 {
+            let prev = if self.opts.delta { self.prev } else { None };
+            let f16 = self.opts.f16;
+            let mut recon = None;
+            self.writer.send_with(FrameType::SubmitV2, |b| {
+                recon = Some(frame::encode_submit_v2(
+                    b,
+                    seq,
+                    deadline,
+                    sess,
+                    window,
+                    prev.as_ref(),
+                    f16,
+                ));
+            })?;
+            if self.opts.delta {
+                self.prev = recon;
+            }
+        } else {
+            self.writer.send_with(FrameType::Submit, |b| {
+                frame::encode_submit(b, seq, deadline, sess, window)
+            })?;
+        }
+        Ok(seq)
+    }
+
+    /// Blocking receive (`None` timeout = wait forever); fails once the
+    /// connection is closed and the event queue is drained.
+    pub fn recv(&mut self, timeout: Option<Duration>) -> Result<PipeEvent> {
+        match timeout {
+            None => self.events.recv().map_err(|_| anyhow::anyhow!("connection closed")),
+            Some(t) => match self.events.recv_timeout(t) {
+                Ok(ev) => Ok(ev),
+                Err(RecvTimeoutError::Timeout) => anyhow::bail!("timed out waiting for an event"),
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("connection closed"),
+            },
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&mut self) -> Option<PipeEvent> {
+        match self.events.try_recv() {
+            Ok(ev) => Some(ev),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Zero this client's stream and the delta context (the next window
+    /// goes out full, matching the server's cleared state).  The `Ok`
+    /// reply arrives asynchronously as a [`PipeEvent::Control`].
+    pub fn reset(&mut self) -> Result<()> {
+        self.prev = None;
+        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+        self.writer.send_with(FrameType::Reset, |b| frame::encode_reset(b, sess))?;
+        Ok(())
+    }
+}
+
+impl Drop for PipelinedClient {
+    fn drop(&mut self) {
+        self.gate.close();
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
     }
 }

@@ -1,0 +1,167 @@
+//! IEEE 754 binary16 ("half") conversion for protocol-v2 sample
+//! payloads (see `docs/PROTOCOL.md`).
+//!
+//! DROPBEAR feature windows are f32 on the wire in v1; v2 may narrow
+//! each sample to 16 bits when the client opts in (`ENC_F16`), halving
+//! window bytes at a precision loss far inside the `F32Fast` tier's
+//! documented error envelope (`kernel::simd::F32_FAST_MAX_ABS_ERR`).
+//!
+//! Hand-rolled because the protocol must not depend on an external
+//! crate: narrow rounds to nearest-even (byte-compatible with Python
+//! `struct.pack('<e', x)`, which generates the conformance goldens),
+//! widen is exact.  `widen(narrow(h))` is idempotent, which the delta
+//! codec relies on: both ends compare *encoded* sample bits, so a
+//! reconstructed (widened) previous window re-narrows to identical
+//! bits.
+
+/// Narrow an f32 to IEEE binary16 bits, rounding to nearest-even.
+/// Overflow saturates to infinity; NaN stays NaN (quiet bit forced so
+/// the payload is never silently zeroed into an infinity).
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN.
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7C00; // overflow -> signed infinity
+    }
+    if e >= -14 {
+        // Normal half: keep 10 mantissa bits, round over the 13 dropped.
+        let half_man = (man >> 13) as u16;
+        let rest = man & 0x1FFF;
+        let h = sign | (((e + 15) as u16) << 10) | half_man;
+        // Round to nearest, ties to even.  A mantissa carry propagates
+        // into the exponent (and on to infinity) by plain integer
+        // increment — exactly the IEEE behaviour.
+        if rest > 0x1000 || (rest == 0x1000 && half_man & 1 == 1) {
+            return h + 1;
+        }
+        return h;
+    }
+    if e >= -25 {
+        // Subnormal half.
+        let man = man | 0x0080_0000; // restore the implicit bit
+        let shift = (13 - 14 - e) as u32; // 13 + (-14 - e)
+        let half_man = (man >> shift) as u16;
+        let rest = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let h = sign | half_man;
+        if rest > halfway || (rest == halfway && half_man & 1 == 1) {
+            return h + 1;
+        }
+        return h;
+    }
+    sign // underflow to signed zero
+}
+
+/// Widen IEEE binary16 bits to f32 (exact — every half value is
+/// representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: normalize into an f32 exponent.
+            let mut e = 127 - 15 + 1; // exponent field for 2^-14
+            let mut m = m;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3FF) << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7FC0_0000 | (m << 13),
+        (e, m) => sign | ((e + 112) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_round_trip_bit_for_bit() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 2.0, 65504.0, -65504.0, 6.103515625e-5] {
+            let h = f16_from_f32(v);
+            assert_eq!(f16_to_f32(h), v, "{v} must be exact in f16");
+        }
+    }
+
+    /// Goldens from Python `struct.pack('<e', x)` — the independent
+    /// reference the conformance transcripts are generated with.
+    #[test]
+    fn narrow_matches_python_struct_goldens() {
+        for (v, h) in [
+            (1.5f32, 0x3E00u16),
+            (0.1, 0x2E66),
+            (-2.75, 0xC180),
+            (3.25, 0x4280),
+            (100.0, 0x5640),
+            (1e-8, 0x0000),      // underflow to zero
+            (6.0e-5, 0x03EF),    // subnormal half
+        ] {
+            assert_eq!(f16_from_f32(v), h, "narrow({v})");
+        }
+    }
+
+    /// Out-of-range values saturate to infinity (Python's `struct`
+    /// raises instead, so these are pinned here rather than sourced).
+    #[test]
+    fn overflow_saturates_to_infinity() {
+        assert_eq!(f16_from_f32(1e6), 0x7C00);
+        assert_eq!(f16_from_f32(-1e6), 0xFC00);
+        assert_eq!(f16_from_f32(65520.0), 0x7C00, "rounds past max finite");
+        assert_eq!(f16_from_f32(65504.0), 0x7BFF, "max finite half");
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 2049/2048 is exactly halfway between 1.0 and the next half
+        // (1 + 2^-10): ties go to the even mantissa (here: down).
+        let tie = f32::from_bits(0x3F80_1000);
+        assert_eq!(f16_from_f32(tie), 0x3C00);
+        // One ulp above the tie rounds up.
+        let above = f32::from_bits(0x3F80_1001);
+        assert_eq!(f16_from_f32(above), 0x3C01);
+    }
+
+    #[test]
+    fn widen_narrow_is_idempotent() {
+        // Every finite half bit pattern survives widen -> narrow.
+        for h in 0u16..=0xFFFF {
+            let is_nan = (h >> 10) & 0x1F == 0x1F && h & 0x3FF != 0;
+            if is_nan {
+                assert!(f16_to_f32(h).is_nan());
+                continue;
+            }
+            assert_eq!(f16_from_f32(f16_to_f32(h)), h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded_for_sensor_range() {
+        // DROPBEAR features live well inside the half range; the
+        // narrow/widen error is <= 2^-11 relative (half of the 10-bit
+        // mantissa ulp with round-to-nearest).
+        let mut x = 1e-3f32;
+        while x < 3.0e4 {
+            for v in [x, -x] {
+                let err = (f16_to_f32(f16_from_f32(v)) - v).abs();
+                assert!(
+                    (err as f64) <= v.abs() as f64 * (1.0 / 2048.0) + 1e-12,
+                    "v={v} err={err}"
+                );
+            }
+            x *= 1.37;
+        }
+    }
+}

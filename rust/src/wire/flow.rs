@@ -1,0 +1,171 @@
+//! Credit-based flow control for protocol v2 (see `docs/PROTOCOL.md`).
+//!
+//! One [`CreditGate`] guards one connection's in-flight window: the
+//! server grants `window` credits in `HelloAck`, every submitted window
+//! consumes one, and every completion frame (or seq-attributed error)
+//! returns one.  Both ends run the same gate:
+//!
+//! * client side — the sender blocks in [`CreditGate::acquire`] when
+//!   the window is exhausted, so an open-loop load generator measures
+//!   real backpressure instead of growing an unbounded local queue;
+//! * server side — the connection's frame reader acquires before
+//!   admitting a submit into the fabric and the completion pump
+//!   releases after *writing* the completion, so
+//!   admitted-but-unwritten work per connection can never exceed the
+//!   granted window.  A client that stops reading completions stalls
+//!   the pump on the socket, the gate fills, and the reader simply
+//!   stops pulling frames — bounded memory, TCP backpressure does the
+//!   rest, and the connection resumes cleanly when the client drains.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct GateState {
+    available: u32,
+    closed: bool,
+}
+
+/// A counting semaphore with a fixed window, close semantics, and
+/// stall/high-water accounting.
+pub struct CreditGate {
+    window: u32,
+    state: Mutex<GateState>,
+    cv: Condvar,
+    /// Times an acquire had to wait (the knee-curve "sender blocked"
+    /// signal).
+    stalls: AtomicU64,
+    /// Highest in-flight count ever observed (must never exceed
+    /// `window` — asserted by the flow-control tests).
+    high_water: AtomicU64,
+}
+
+impl CreditGate {
+    pub fn new(window: u16) -> Self {
+        let window = window.max(1) as u32;
+        Self {
+            window,
+            state: Mutex::new(GateState { available: window, closed: false }),
+            cv: Condvar::new(),
+            stalls: AtomicU64::new(0),
+            high_water: AtomicU64::new(0),
+        }
+    }
+
+    pub fn window(&self) -> u32 {
+        self.window
+    }
+
+    /// Take one credit, waiting up to `timeout` (forever when `None`).
+    /// Returns `false` on timeout or when the gate is closed.
+    pub fn acquire(&self, timeout: Option<Duration>) -> bool {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut g = self.state.lock().unwrap();
+        let mut stalled = false;
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.available > 0 {
+                g.available -= 1;
+                let in_flight = (self.window - g.available) as u64;
+                self.high_water.fetch_max(in_flight, Ordering::Relaxed);
+                return true;
+            }
+            if !stalled {
+                stalled = true;
+                self.stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            g = match deadline {
+                None => self.cv.wait(g).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return false;
+                    }
+                    self.cv.wait_timeout(g, dl - now).unwrap().0
+                }
+            };
+        }
+    }
+
+    /// Return `n` credits (a completion written, or an admission that
+    /// never happened).  Saturates at the window — a spurious release
+    /// can never mint credit beyond the grant.
+    pub fn release(&self, n: u32) {
+        let mut g = self.state.lock().unwrap();
+        g.available = (g.available + n).min(self.window);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Wake every waiter with failure (connection teardown).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Credits currently consumed (submitted, completion not yet
+    /// written).
+    pub fn in_flight(&self) -> u32 {
+        self.window - self.state.lock().unwrap().available
+    }
+
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    pub fn high_water(&self) -> u64 {
+        self.high_water.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn window_is_a_hard_bound() {
+        let g = CreditGate::new(3);
+        assert!(g.acquire(None) && g.acquire(None) && g.acquire(None));
+        assert_eq!(g.in_flight(), 3);
+        assert!(!g.acquire(Some(Duration::from_millis(10))), "4th acquire must time out");
+        assert_eq!(g.stalls(), 1);
+        g.release(1);
+        assert!(g.acquire(Some(Duration::from_millis(100))));
+        assert_eq!(g.high_water(), 3, "never above the window");
+    }
+
+    #[test]
+    fn release_saturates_at_the_window() {
+        let g = CreditGate::new(2);
+        g.release(100);
+        assert!(g.acquire(None) && g.acquire(None));
+        assert!(!g.acquire(Some(Duration::from_millis(5))), "no minted credit");
+    }
+
+    #[test]
+    fn close_wakes_blocked_acquirers() {
+        let g = Arc::new(CreditGate::new(1));
+        assert!(g.acquire(None));
+        let g2 = g.clone();
+        let waiter = std::thread::spawn(move || g2.acquire(None));
+        std::thread::sleep(Duration::from_millis(20));
+        g.close();
+        assert!(!waiter.join().unwrap(), "closed gate fails the acquire");
+        assert!(!g.acquire(None), "stays closed");
+    }
+
+    #[test]
+    fn blocked_acquire_resumes_on_release() {
+        let g = Arc::new(CreditGate::new(2));
+        assert!(g.acquire(None) && g.acquire(None));
+        let g2 = g.clone();
+        let waiter = std::thread::spawn(move || g2.acquire(Some(Duration::from_secs(5))));
+        std::thread::sleep(Duration::from_millis(20));
+        g.release(1);
+        assert!(waiter.join().unwrap());
+        assert_eq!(g.in_flight(), 2);
+    }
+}

@@ -6,7 +6,7 @@
 //! ```text
 //! offset size  field
 //! 0      4     magic  "HRDW"
-//! 4      1     version (currently 1)
+//! 4      1     version (1 or 2; see VERSION / MAX_VERSION)
 //! 5      1     frame type
 //! 6      2     flags (reserved, 0)
 //! 8      4     payload length N (u32 LE, <= MAX_PAYLOAD)
@@ -32,9 +32,28 @@ use super::crc::crc32;
 /// sniffs to tell a binary client from a legacy JSON one (`{`).
 pub const MAGIC: [u8; 4] = *b"HRDW";
 
-/// Protocol version this build speaks (see `docs/PROTOCOL.md` for the
-/// negotiation rules).
+/// Baseline protocol version (see `docs/PROTOCOL.md` for the
+/// negotiation rules).  v1 framing is the universal fallback: every
+/// endpoint speaks it, and a connection that never negotiates stays on
+/// it.
 pub const VERSION: u8 = 1;
+
+/// Protocol v2: credit-based flow control granted at `HelloAck`,
+/// pipelined out-of-order completions, and the [`FrameType::SubmitV2`]
+/// payload (delta-encoded windows, optional f16 samples).
+pub const VERSION_V2: u8 = 2;
+
+/// Highest version this build speaks; `HelloAck` carries
+/// `min(client max, server max)`.
+pub const MAX_VERSION: u8 = VERSION_V2;
+
+/// Whether `v` is a version this build can decode.  The envelope is
+/// identical across supported versions — the version byte gates frame
+/// *semantics* (which types may appear, flow-control rules), not
+/// framing.
+pub fn version_supported(v: u8) -> bool {
+    (VERSION..=MAX_VERSION).contains(&v)
+}
 
 /// Fixed envelope sizes.
 pub const HEADER_LEN: usize = 16;
@@ -70,6 +89,9 @@ pub enum FrameType {
     Stats = 0x05,
     /// c->s: stop the server.
     Shutdown = 0x06,
+    /// c->s (v2): one window, delta/f16-encodable
+    /// (`enc u8`, optional change mask — see [`encode_submit_v2`]).
+    SubmitV2 = 0x07,
     /// s->c: negotiated version (`u16`).
     HelloAck = 0x81,
     /// s->c: one completed inference ([`CompletionRec`]).
@@ -93,6 +115,7 @@ impl FrameType {
             0x04 => Self::Reset,
             0x05 => Self::Stats,
             0x06 => Self::Shutdown,
+            0x07 => Self::SubmitV2,
             0x81 => Self::HelloAck,
             0x82 => Self::Completion,
             0x83 => Self::CompletionBatch,
@@ -188,7 +211,7 @@ pub fn decode_step(buf: &[u8]) -> DecodeStep {
     if crc32(&buf[payload.clone()]) != stored_crc {
         return DecodeStep::Skip { skip: total, reason: SkipReason::PayloadCrc };
     }
-    if version != VERSION {
+    if !version_supported(version) {
         return DecodeStep::Skip { skip: total, reason: SkipReason::BadVersion(version) };
     }
     DecodeStep::Frame { ty, payload, consumed: total }
@@ -398,6 +421,170 @@ pub fn decode_reset(p: &[u8]) -> Result<&[u8]> {
     Ok(session)
 }
 
+// ---- SubmitV2 (delta / f16 windows) ------------------------------------
+
+/// [`FrameType::SubmitV2`] encoding bits.
+///
+/// `ENC_DELTA`: the payload carries a 16-bit change mask plus only the
+/// samples that differ (in *encoded* bits) from the session's previous
+/// window on this connection; the first window of a session — and the
+/// first after a `Reset` — must be sent full (bit clear).
+/// `ENC_F16`: samples are IEEE binary16 (2 bytes each) instead of f32.
+pub const ENC_DELTA: u8 = 1 << 0;
+pub const ENC_F16: u8 = 1 << 1;
+
+/// Bytes of the change mask a delta window prepends — the pinned
+/// worst-case expansion over a full v1 window (all 16 samples changed:
+/// `WINDOW_BYTES + DELTA_MASK_BYTES` vs `WINDOW_BYTES`).
+pub const DELTA_MASK_BYTES: usize = 2;
+
+// The change mask is a u16, one bit per sample.
+const _: () = assert!(INPUT_SIZE <= 16, "delta mask is 16 bits");
+
+fn sample_bits(x: f32, f16: bool) -> u32 {
+    if f16 {
+        super::f16::f16_from_f32(x) as u32
+    } else {
+        x.to_bits()
+    }
+}
+
+/// Encode a [`FrameType::SubmitV2`] payload:
+///
+/// ```text
+/// seq u64 | deadline_us f64 | sess_len u8 | session | enc u8
+///   | mask u16 (ENC_DELTA only) | popcount(mask) samples (f32 or f16)
+/// ```
+///
+/// `prev` is the session's previous window *as the receiver
+/// reconstructed it* — `None` forces a full window.  Returns this
+/// window's reconstruction (exact for f32, f16-quantized otherwise);
+/// the caller MUST feed it back as the next `prev`, or the two ends'
+/// delta contexts desynchronize.  Both ends compare encoded sample
+/// bits, so feeding back the reconstruction keeps the comparison
+/// exact even under f16 (widen∘narrow is idempotent).
+pub fn encode_submit_v2(
+    out: &mut Vec<u8>,
+    seq: u64,
+    deadline_us: f64,
+    session: &[u8],
+    window: &[f32; INPUT_SIZE],
+    prev: Option<&[f32; INPUT_SIZE]>,
+    f16: bool,
+) -> [f32; INPUT_SIZE] {
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&deadline_us.to_bits().to_le_bytes());
+    push_session(out, session);
+    let mut enc = 0u8;
+    if prev.is_some() {
+        enc |= ENC_DELTA;
+    }
+    if f16 {
+        enc |= ENC_F16;
+    }
+    out.push(enc);
+    let mask = match prev {
+        None => u16::MAX,
+        Some(prev) => {
+            let mut m = 0u16;
+            for i in 0..INPUT_SIZE {
+                if sample_bits(window[i], f16) != sample_bits(prev[i], f16) {
+                    m |= 1 << i;
+                }
+            }
+            out.extend_from_slice(&m.to_le_bytes());
+            m
+        }
+    };
+    let mut recon = match prev {
+        None => *window,
+        Some(prev) => *prev,
+    };
+    for i in 0..INPUT_SIZE {
+        if mask & (1 << i) == 0 {
+            continue;
+        }
+        if f16 {
+            let h = super::f16::f16_from_f32(window[i]);
+            out.extend_from_slice(&h.to_le_bytes());
+            recon[i] = super::f16::f16_to_f32(h);
+        } else {
+            out.extend_from_slice(&window[i].to_le_bytes());
+            recon[i] = window[i];
+        }
+    }
+    recon
+}
+
+/// Decoded view of a [`FrameType::SubmitV2`] payload.  Samples stay in
+/// the receive buffer; [`SubmitV2View::reconstruct`] materializes the
+/// window against the session's previous one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitV2View<'a> {
+    pub seq: u64,
+    pub deadline_us: f64,
+    pub session: &'a [u8],
+    pub enc: u8,
+    /// Changed-sample mask (all ones for a full window).
+    pub mask: u16,
+    samples: &'a [u8],
+}
+
+impl SubmitV2View<'_> {
+    pub fn is_delta(&self) -> bool {
+        self.enc & ENC_DELTA != 0
+    }
+
+    pub fn is_f16(&self) -> bool {
+        self.enc & ENC_F16 != 0
+    }
+
+    /// Materialize the window.  A delta window without a prior window
+    /// for its session is a protocol violation (the sender must open
+    /// every session — and reopen it after `Reset` — with a full
+    /// window).
+    pub fn reconstruct(&self, prev: Option<&[f32; INPUT_SIZE]>) -> Result<[f32; INPUT_SIZE]> {
+        let mut w = match (self.is_delta(), prev) {
+            (false, _) => [0f32; INPUT_SIZE],
+            (true, Some(p)) => *p,
+            (true, None) => anyhow::bail!(
+                "delta window for a session without a prior full window"
+            ),
+        };
+        let mut off = 0;
+        for (i, slot) in w.iter_mut().enumerate() {
+            if self.mask & (1 << i) == 0 {
+                continue;
+            }
+            if self.is_f16() {
+                let h = u16::from_le_bytes([self.samples[off], self.samples[off + 1]]);
+                *slot = super::f16::f16_to_f32(h);
+                off += 2;
+            } else {
+                *slot =
+                    f32::from_le_bytes(self.samples[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+        }
+        Ok(w)
+    }
+}
+
+pub fn decode_submit_v2(p: &[u8]) -> Result<SubmitV2View<'_>> {
+    let mut r = Rd::new(p);
+    let seq = r.u64()?;
+    let deadline_us = r.f64()?;
+    let sess_len = r.u8()? as usize;
+    let session = r.bytes(sess_len)?;
+    let enc = r.u8()?;
+    ensure!(enc & !(ENC_DELTA | ENC_F16) == 0, "unknown v2 encoding bits {enc:#04x}");
+    let mask = if enc & ENC_DELTA != 0 { r.u16()? } else { u16::MAX };
+    let sample_bytes = if enc & ENC_F16 != 0 { 2 } else { 4 };
+    let samples = r.bytes(mask.count_ones() as usize * sample_bytes)?;
+    r.done()?;
+    Ok(SubmitV2View { seq, deadline_us, session, enc, mask, samples })
+}
+
 // ---- Hello / HelloAck --------------------------------------------------
 
 pub fn encode_u16(out: &mut Vec<u8>, v: u16) {
@@ -409,6 +596,34 @@ pub fn decode_u16(p: &[u8]) -> Result<u16> {
     let v = r.u16()?;
     r.done()?;
     Ok(v)
+}
+
+/// Decoded [`FrameType::HelloAck`].  A v1 ack is the bare negotiated
+/// version (the pinned 2-byte payload); negotiating v2+ appends the
+/// connection's credit window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HelloAckView {
+    pub version: u16,
+    /// Credit window granted to this connection (v2+ only): the number
+    /// of submitted-but-uncompleted windows the client may have in
+    /// flight.  Each completion (or seq-attributed error) returns one
+    /// credit.
+    pub credits: Option<u16>,
+}
+
+pub fn encode_hello_ack(out: &mut Vec<u8>, version: u16, credits: u16) {
+    out.extend_from_slice(&version.to_le_bytes());
+    if version >= VERSION_V2 as u16 {
+        out.extend_from_slice(&credits.to_le_bytes());
+    }
+}
+
+pub fn decode_hello_ack(p: &[u8]) -> Result<HelloAckView> {
+    let mut r = Rd::new(p);
+    let version = r.u16()?;
+    let credits = if version >= VERSION_V2 as u16 { Some(r.u16()?) } else { None };
+    r.done()?;
+    Ok(HelloAckView { version, credits })
 }
 
 // ---- Completion --------------------------------------------------------
@@ -649,6 +864,100 @@ mod tests {
         encode_error(&mut e, 5, true, "queue full");
         let v = decode_error(&e).unwrap();
         assert_eq!((v.seq, v.shed, v.msg), (5, true, "queue full"));
+    }
+
+    #[test]
+    fn submit_v2_full_delta_and_f16_round_trip() {
+        let mut w1 = [0f32; INPUT_SIZE];
+        let mut w2 = [0f32; INPUT_SIZE];
+        for i in 0..INPUT_SIZE {
+            w1[i] = i as f32 * 0.25 - 1.0;
+            w2[i] = w1[i];
+        }
+        w2[3] = 9.5;
+        w2[15] = -4.25;
+
+        // Full window (no prev).
+        let mut p = Vec::new();
+        let r1 = encode_submit_v2(&mut p, 1, 0.0, b"s", &w1, None, false);
+        assert_eq!(r1, w1, "f32 reconstruction is exact");
+        let v = decode_submit_v2(&p).unwrap();
+        assert!(!v.is_delta() && !v.is_f16());
+        assert_eq!(v.reconstruct(None).unwrap(), w1);
+
+        // Delta window: only the two changed samples travel.
+        let mut p = Vec::new();
+        let r2 = encode_submit_v2(&mut p, 2, 0.0, b"s", &w2, Some(&r1), false);
+        assert_eq!(r2, w2);
+        let v = decode_submit_v2(&p).unwrap();
+        assert!(v.is_delta());
+        assert_eq!(v.mask.count_ones(), 2);
+        assert_eq!(v.reconstruct(Some(&w1)).unwrap(), w2);
+        // Delta without a prior window is a protocol violation.
+        assert!(v.reconstruct(None).is_err());
+
+        // f16: reconstruction is the quantized window, and decode agrees
+        // with the encoder's returned reconstruction bit for bit.
+        let mut p = Vec::new();
+        let r1h = encode_submit_v2(&mut p, 3, 0.0, b"s", &w1, None, true);
+        let v = decode_submit_v2(&p).unwrap();
+        assert!(v.is_f16());
+        assert_eq!(v.reconstruct(None).unwrap(), r1h);
+        // An unchanged f16 window deltas to an empty mask.
+        let mut p = Vec::new();
+        encode_submit_v2(&mut p, 4, 0.0, b"s", &r1h, Some(&r1h), true);
+        let v = decode_submit_v2(&p).unwrap();
+        assert_eq!(v.mask, 0);
+        assert_eq!(v.reconstruct(Some(&r1h)).unwrap(), r1h);
+    }
+
+    #[test]
+    fn submit_v2_worst_case_size_is_pinned() {
+        // All 16 samples changed: a delta window may exceed a v1 window
+        // by exactly the mask bytes, never more.
+        let a = [1.0f32; INPUT_SIZE];
+        let b = [2.0f32; INPUT_SIZE];
+        let mut full_v1 = Vec::new();
+        encode_submit(&mut full_v1, 9, 0.0, b"sess", &a);
+        let mut worst = Vec::new();
+        encode_submit_v2(&mut worst, 9, 0.0, b"sess", &b, Some(&a), false);
+        // v2 carries one extra byte (enc) plus the mask over v1's layout.
+        assert_eq!(worst.len(), full_v1.len() + 1 + DELTA_MASK_BYTES);
+    }
+
+    #[test]
+    fn hello_ack_v1_stays_two_bytes() {
+        let mut p = Vec::new();
+        encode_hello_ack(&mut p, VERSION as u16, 64);
+        assert_eq!(p.len(), 2, "v1 ack layout is pinned (no credit field)");
+        assert_eq!(
+            decode_hello_ack(&p).unwrap(),
+            HelloAckView { version: 1, credits: None }
+        );
+        let mut p = Vec::new();
+        encode_hello_ack(&mut p, VERSION_V2 as u16, 64);
+        assert_eq!(p.len(), 4);
+        assert_eq!(
+            decode_hello_ack(&p).unwrap(),
+            HelloAckView { version: 2, credits: Some(64) }
+        );
+    }
+
+    #[test]
+    fn version_set_is_accepted_and_bounded() {
+        assert!(version_supported(VERSION) && version_supported(VERSION_V2));
+        assert!(!version_supported(0) && !version_supported(MAX_VERSION + 1));
+        // A v2 envelope decodes; an unsupported one skips whole-frame.
+        let mut raw = encode_frame(FrameType::Stats, b"");
+        raw[4] = VERSION_V2;
+        raw[12..16].copy_from_slice(&crc32(&raw[..12]).to_le_bytes());
+        assert!(matches!(decode_step(&raw), DecodeStep::Frame { .. }));
+        raw[4] = MAX_VERSION + 1;
+        raw[12..16].copy_from_slice(&crc32(&raw[..12]).to_le_bytes());
+        assert!(matches!(
+            decode_step(&raw),
+            DecodeStep::Skip { reason: SkipReason::BadVersion(_), .. }
+        ));
     }
 
     #[test]

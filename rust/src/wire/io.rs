@@ -66,6 +66,12 @@ pub struct FrameReader<R: Read> {
     desync_bytes: u64,
     /// Frames dropped for header/payload CRC mismatch.
     crc_errors: u64,
+    /// Raw bytes pulled off the stream (preload included) — the
+    /// per-connection `bytes_in` counter.
+    bytes_in: u64,
+    /// CRC-valid envelopes delivered (known or unknown type) — the
+    /// per-connection `frames_in` counter.
+    frames_in: u64,
 }
 
 impl<R: Read> FrameReader<R> {
@@ -76,7 +82,16 @@ impl<R: Read> FrameReader<R> {
     /// Reader whose first bytes were already pulled off the stream (the
     /// serving front-end sniffs the protocol before dispatching).
     pub fn with_preload(src: R, preload: Vec<u8>) -> Self {
-        Self { src, buf: preload, consumed: 0, desync_bytes: 0, crc_errors: 0 }
+        let bytes_in = preload.len() as u64;
+        Self {
+            src,
+            buf: preload,
+            consumed: 0,
+            desync_bytes: 0,
+            crc_errors: 0,
+            bytes_in,
+            frames_in: 0,
+        }
     }
 
     pub fn desync_bytes(&self) -> u64 {
@@ -85,6 +100,14 @@ impl<R: Read> FrameReader<R> {
 
     pub fn crc_errors(&self) -> u64 {
         self.crc_errors
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    pub fn frames_in(&self) -> u64 {
+        self.frames_in
     }
 
     /// Pull more bytes; `Ok(false)` on EOF or raised shutdown flag.
@@ -101,6 +124,7 @@ impl<R: Read> FrameReader<R> {
                 Ok(0) => return Ok(false),
                 Ok(n) => {
                     self.buf.extend_from_slice(&chunk[..n]);
+                    self.bytes_in += n as u64;
                     return Ok(true);
                 }
                 Err(e) if retryable_read_error(&e) => {}
@@ -155,6 +179,7 @@ impl<R: Read> FrameReader<R> {
             match found {
                 Found::Frame { ty, payload, consumed } => {
                     self.consumed = consumed;
+                    self.frames_in += 1;
                     return Ok(Some(match FrameType::from_u8(ty) {
                         Some(t) => Recv::Frame(t, &self.buf[payload]),
                         None => Recv::Reject(Reject::UnknownType(ty)),
@@ -175,11 +200,35 @@ impl<R: Read> FrameReader<R> {
 pub struct FrameWriter<W: Write> {
     dst: W,
     buf: Vec<u8>,
+    /// Version byte stamped on outgoing envelopes; starts at the v1
+    /// baseline and is raised by `Hello`/`HelloAck` negotiation.
+    version: u8,
+    bytes_out: u64,
+    frames_out: u64,
 }
 
 impl<W: Write> FrameWriter<W> {
     pub fn new(dst: W) -> Self {
-        Self { dst, buf: Vec::with_capacity(256) }
+        Self { dst, buf: Vec::with_capacity(256), version: VERSION, bytes_out: 0, frames_out: 0 }
+    }
+
+    /// Switch the envelope version after negotiation (v1 framing is
+    /// identical, so this only changes the stamped byte).
+    pub fn set_version(&mut self, version: u8) {
+        debug_assert!(frame::version_supported(version));
+        self.version = version;
+    }
+
+    pub fn version(&self) -> u8 {
+        self.version
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    pub fn frames_out(&self) -> u64 {
+        self.frames_out
     }
 
     /// Assemble and send one frame whose payload is written by `build`.
@@ -190,7 +239,7 @@ impl<W: Write> FrameWriter<W> {
     ) -> std::io::Result<()> {
         self.buf.clear();
         self.buf.extend_from_slice(&MAGIC);
-        self.buf.push(VERSION);
+        self.buf.push(self.version);
         self.buf.push(ty as u8);
         self.buf.extend_from_slice(&0u16.to_le_bytes());
         self.buf.extend_from_slice(&[0u8; 8]); // len + header CRC, patched below
@@ -211,7 +260,10 @@ impl<W: Write> FrameWriter<W> {
         self.buf[12..16].copy_from_slice(&hcrc.to_le_bytes());
         let pcrc = super::crc::crc32(&self.buf[HEADER_LEN..]);
         self.buf.extend_from_slice(&pcrc.to_le_bytes());
-        self.dst.write_all(&self.buf)
+        self.dst.write_all(&self.buf)?;
+        self.bytes_out += self.buf.len() as u64;
+        self.frames_out += 1;
+        Ok(())
     }
 
     /// Send a frame with no payload.
@@ -223,8 +275,10 @@ impl<W: Write> FrameWriter<W> {
         self.send_with(FrameType::Hello, |b| frame::encode_u16(b, max_version))
     }
 
-    pub fn send_hello_ack(&mut self, version: u16) -> std::io::Result<()> {
-        self.send_with(FrameType::HelloAck, |b| frame::encode_u16(b, version))
+    /// Send a `HelloAck`; the credit window only reaches the wire when
+    /// the negotiated version grants one (v2+).
+    pub fn send_hello_ack(&mut self, version: u16, credits: u16) -> std::io::Result<()> {
+        self.send_with(FrameType::HelloAck, |b| frame::encode_hello_ack(b, version, credits))
     }
 
     pub fn send_completion(&mut self, rec: &CompletionRec) -> std::io::Result<()> {

@@ -30,8 +30,20 @@
 //! * [`io`] — [`io::FrameReader`] / [`io::FrameWriter`] over any byte
 //!   stream: one reused buffer each, payload views borrow the receive
 //!   buffer (zero-copy), automatic resync past corrupt spans;
-//! * [`client`] — [`client::WireClient`], the binary twin of the JSON
-//!   [`crate::coordinator::Client`].
+//! * [`f16`] — IEEE binary16 narrow/widen for v2 sample payloads;
+//! * [`flow`] — [`flow::CreditGate`], the per-connection credit window
+//!   both ends of a v2 connection run (grant at `HelloAck`, one credit
+//!   per in-flight window, replenished by completion frames);
+//! * [`client`] — [`client::WireClient`], the blocking binary twin of
+//!   the JSON [`crate::coordinator::Client`], and
+//!   [`client::PipelinedClient`], the v2 open-loop client (decoupled
+//!   send/recv halves, seq-matched out-of-order completions).
+//!
+//! Protocol v2 (negotiated at `Hello`, transparent v1 fallback) adds
+//! credit-based flow control, pipelined out-of-order completions, and
+//! the [`frame::FrameType::SubmitV2`] payload: delta-encoded windows
+//! (only samples changed since the session's previous window travel —
+//! DROPBEAR windows overlap heavily) with optional f16 samples.
 //!
 //! Wire-visible session names are validated by ONE checked constructor,
 //! [`crate::sched::SessionToken`] (shared with the JSON path — the
@@ -44,13 +56,18 @@
 
 pub mod client;
 pub mod crc;
+pub mod f16;
+pub mod flow;
 pub mod frame;
 pub mod io;
 
-pub use client::WireClient;
+pub use client::{PipeEvent, PipelineOptions, PipelinedClient, WireClient};
 pub use crc::crc32;
+pub use f16::{f16_from_f32, f16_to_f32};
+pub use flow::CreditGate;
 pub use frame::{
-    decode_step, encode_frame, CompletionRec, DecodeStep, FrameType, SkipReason, HEADER_LEN,
-    MAGIC, MAX_BATCH_WINDOWS, MAX_PAYLOAD, TRAILER_LEN, VERSION,
+    decode_step, encode_frame, version_supported, CompletionRec, DecodeStep, FrameType,
+    HelloAckView, SkipReason, HEADER_LEN, MAGIC, MAX_BATCH_WINDOWS, MAX_PAYLOAD, MAX_VERSION,
+    TRAILER_LEN, VERSION, VERSION_V2,
 };
 pub use io::{FrameReader, FrameWriter, Recv, Reject};

@@ -1,8 +1,9 @@
 //! Protocol-conformance golden tests: byte-level transcripts of one
-//! JSON session and one binary session against the fabric server
-//! (connect, submit, batch submit, reset, reconnect, fault injection,
-//! shutdown), checked verbatim so wire behavior can never drift
-//! silently.
+//! JSON session and one binary session per protocol version (v1
+//! request-reply and the v2 delta/f16 pipeline) against the fabric
+//! server (connect, submit, batch submit, reset, reconnect, fault
+//! injection, shutdown), checked verbatim so wire behavior can never
+//! drift silently.
 //!
 //! Determinism policy:
 //!
@@ -389,5 +390,127 @@ fn binary_session_transcript_is_golden() {
 
     let snap = handle.join().unwrap();
     assert_eq!(snap.completed, 6);
+    assert_eq!(snap.shed, 0);
+}
+
+// ---- binary v2 transcript ----------------------------------------------
+
+// Protocol-v2 goldens, generated in Python (struct + zlib.crc32) like
+// the v1 set.  The client offers v2 in a v1-envelope `Hello`; the ack
+// — still v1-enveloped, negotiation completes when the client reads it
+// — grants the default 64-credit window; every later frame travels in
+// a version-2 envelope.
+const HELLO_V2: &str = "485244570101000002000000402bde2c02007d70ef73";
+const HELLOACK_V2: &str = "4852445701810000040000006e9ea381020040009258347b";
+// seq 1: full window(1), f32 samples (enc 0).
+const SUBV2_FULL: &str = "48524457020700005700000009e6523d01000000000000000000000000000000\
+                          0570726f6265000000803f0000a03f0000c03f0000e03f000000400000104000\
+                          0020400000304000004040000050400000604000007040000080400000884000\
+                          0090400000984045d33fd4";
+// seq 2: delta against window(1) — samples 0 (9.5) and 3 (-2.25)
+// changed, mask 0x0009, only those two f32 values travel.
+const SUBV2_DELTA: &str = "48524457020700002100000049190673020000000000000000000000000000\
+                           000570726f626501090000001841000010c0f5b5b7f0";
+// seq 3: delta + f16 — sample 5 becomes 3.5 (binary16 0x4300), mask
+// 0x0020, one 2-byte sample travels.
+const SUBV2_F16: &str = "48524457020700001b0000008c0190ec030000000000000000000000000000000\
+                         570726f626503200000430f0939b5";
+const STATS_V2: &str = "4852445702050000000000003bc017fc00000000";
+const RESET_V2: &str = "48524457020400000600000053940b7f0570726f626527a873f0";
+// seq 4: the same delta shape re-sent AFTER the reset — stale context,
+// must be refused.
+const SUBV2_STALE: &str = "48524457020700002100000049190673040000000000000000000000000000\
+                           000570726f626501090000001841000010c0dfd79846";
+// seq 5: full window(1) again (the post-reset resync).
+const SUBV2_FULL5: &str = "48524457020700005700000009e6523d05000000000000000000000000000000\
+                           0570726f6265000000803f0000a03f0000c03f0000e03f000000400000104000\
+                           0020400000304000004040000050400000604000007040000080400000884000\
+                           009040000098405628580e";
+const SHUTDOWN_V2: &str = "485244570206000000000000a6daffcd00000000";
+const OK_FRAME_V2: &str = "485244570285000000000000c92a017400000000";
+
+/// [`expect_frame`] for the upgraded half of a v2 session (version
+/// byte 2 in the envelope).
+fn expect_frame_v2(ty: u8, payload: &[u8]) -> Vec<u8> {
+    let mut f = expect_frame(ty, payload);
+    f[4] = 2;
+    f
+}
+
+#[test]
+fn binary_v2_session_transcript_is_golden() {
+    let (addr, handle) = start_server();
+    let mut reference = RefStream::new();
+    let w1 = window(1);
+    let mut w2 = w1;
+    w2[0] = 9.5;
+    w2[3] = -2.25;
+    let mut w3 = w2;
+    w3[5] = 3.5; // exact in binary16 (0x4300)
+    let e1 = reference.step(&w1);
+    let e2 = reference.step(&w2);
+    let e3 = reference.step(&w3);
+    reference.reset();
+    assert_eq!(reference.step(&w1), e1, "post-reset stream restarts from zero");
+
+    let mut stream = connect(addr);
+    stream.write_all(&hex(HELLO_V2)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(HELLOACK_V2), "v2 hello ack grants 64 credits");
+
+    // Full window, then a 2-sample delta, then a 1-sample f16 delta.
+    stream.write_all(&hex(SUBV2_FULL)).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame_v2(0x82, &completion_rec(1, e1)),
+        "full-window completion"
+    );
+    stream.write_all(&hex(SUBV2_DELTA)).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame_v2(0x82, &completion_rec(2, e2)),
+        "delta completion (samples 0 and 3 travelled)"
+    );
+    stream.write_all(&hex(SUBV2_F16)).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame_v2(0x82, &completion_rec(3, e3)),
+        "f16 delta completion (sample 5 travelled as binary16)"
+    );
+
+    // Stats: fabric counters plus the wire traffic object.
+    stream.write_all(&hex(STATS_V2)).unwrap();
+    let stats = read_frame(&mut stream);
+    assert_eq!(stats[4], 2, "stats reply travels in a v2 envelope");
+    assert_eq!(stats[5], 0x86, "stats reply frame type");
+    let n = stats.len();
+    let json = Json::parse(std::str::from_utf8(&stats[HEADER_LEN..n - 4]).unwrap()).unwrap();
+    assert_eq!(json.get("inferred").unwrap().as_f64(), Some(3.0));
+    assert!(json.get("wire").is_some(), "stats carry the wire traffic counters");
+
+    // Reset clears the server's delta context: a stale delta frame is
+    // refused with a seq-attributed error, a fresh full window
+    // restarts the stream.
+    stream.write_all(&hex(RESET_V2)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(OK_FRAME_V2), "reset ack");
+    stream.write_all(&hex(SUBV2_STALE)).unwrap();
+    let err = read_frame(&mut stream);
+    assert_eq!(err[4], 2, "error travels in a v2 envelope");
+    assert_eq!(err[5], 0x84, "error frame type");
+    let payload = &err[HEADER_LEN..err.len() - 4];
+    assert_eq!(u64::from_le_bytes(payload[..8].try_into().unwrap()), 4, "error names seq 4");
+    let msg = std::str::from_utf8(&payload[11..]).unwrap();
+    assert!(msg.contains("without a prior full window"), "unexpected error message: {msg}");
+    stream.write_all(&hex(SUBV2_FULL5)).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame_v2(0x82, &completion_rec(5, e1)),
+        "post-reset full window restarts the stream"
+    );
+
+    stream.write_all(&hex(SHUTDOWN_V2)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(OK_FRAME_V2), "shutdown ack");
+
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, 4);
     assert_eq!(snap.shed, 0);
 }

@@ -17,13 +17,14 @@ use hrd_lstm::wire::{
     MAX_PAYLOAD, TRAILER_LEN,
 };
 
-const ALL_TYPES: [FrameType; 12] = [
+const ALL_TYPES: [FrameType; 13] = [
     FrameType::Hello,
     FrameType::Submit,
     FrameType::SubmitBatch,
     FrameType::Reset,
     FrameType::Stats,
     FrameType::Shutdown,
+    FrameType::SubmitV2,
     FrameType::HelloAck,
     FrameType::Completion,
     FrameType::CompletionBatch,
@@ -214,17 +215,28 @@ fn payload_crc_mismatch_skips_one_frame() {
 }
 
 /// Version mismatch is surfaced (with the whole-frame skip) so the
-/// server can answer version negotiation explicitly.
+/// server can answer version negotiation explicitly.  Versions 1..=2
+/// are the supported range now; 9 stands in for a future protocol.
 #[test]
 fn foreign_version_is_surfaced_not_silently_eaten() {
     let mut raw = encode_frame(FrameType::Stats, b"");
-    raw[4] = 2;
+    raw[4] = 9;
     raw[12..16].copy_from_slice(&crc32(&raw[..12]).to_le_bytes());
     match decode_step(&raw) {
-        DecodeStep::Skip { skip, reason: SkipReason::BadVersion(2) } => {
+        DecodeStep::Skip { skip, reason: SkipReason::BadVersion(9) } => {
             assert_eq!(skip, raw.len())
         }
         other => panic!("{other:?}"),
+    }
+    // Both supported versions decode cleanly.
+    for v in [hrd_lstm::wire::VERSION, hrd_lstm::wire::VERSION_V2] {
+        let mut raw = encode_frame(FrameType::Stats, b"");
+        raw[4] = v;
+        raw[12..16].copy_from_slice(&crc32(&raw[..12]).to_le_bytes());
+        assert!(
+            matches!(decode_step(&raw), DecodeStep::Frame { .. }),
+            "version {v} must be accepted"
+        );
     }
 }
 

@@ -1,0 +1,425 @@
+//! Protocol-v2 integration suite: transparent `infer_batch` chunking
+//! at the frame limit, delta/f16 codec properties, credit-based flow
+//! control under a submit storm, v1 negotiate-down bit-identity, and
+//! the wire traffic counters in fabric stats (both protocols).
+//!
+//! Byte-level goldens live in `wire_codec.rs` and
+//! `protocol_conformance.rs`; this suite exercises semantics against a
+//! live fabric server.
+
+use std::collections::BTreeSet;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::coordinator::{Client, Server, WatchdogConfig, WireOptions};
+use hrd_lstm::kernel::simd::F32_FAST_MAX_ABS_ERR;
+use hrd_lstm::kernel::{FloatPath, PackedModel, ScalarKernel};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::sched::{Fabric, FabricConfig, SchedSnapshot};
+use hrd_lstm::util::{Json, Rng};
+use hrd_lstm::wire::frame;
+use hrd_lstm::wire::{PipeEvent, PipelineOptions, PipelinedClient, WireClient, MAX_BATCH_WINDOWS};
+
+fn params() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 5)
+}
+
+/// One-shard, two-lane fabric server with a huge deadline and a wide
+/// watchdog (raw kernel estimates, no volatile miss/shed flags), plus
+/// per-test wire options.
+fn start_server(queue_depth: usize, wire: WireOptions) -> (SocketAddr, JoinHandle<SchedSnapshot>) {
+    let mut fcfg = FabricConfig::new(1, 2);
+    fcfg.deadline_us = 1e9;
+    fcfg.queue_depth = queue_depth;
+    fcfg.watchdog = WatchdogConfig {
+        min_m: -1e12,
+        max_m: 1e12,
+        max_slew_m_s: 1e15,
+        stuck_after: 1 << 30,
+        ..Default::default()
+    };
+    let fabric = Arc::new(Fabric::new(&params(), fcfg).unwrap());
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    server.set_wire_options(wire);
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run_fabric(fabric).unwrap());
+    (addr, handle)
+}
+
+/// Bounded deterministic feature window `k` of one long session stream.
+fn window(k: usize) -> [f32; INPUT_SIZE] {
+    let mut w = [0f32; INPUT_SIZE];
+    for (i, v) in w.iter_mut().enumerate() {
+        *v = ((k * 31 + i * 7) % 97) as f32 * 0.01 - 0.5;
+    }
+    w
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("stats reply lacks numeric key {key:?}"))
+}
+
+// ---- infer_batch chunking (frame-limit regression) ---------------------
+
+/// `infer_batch` splits any window count across as many `SubmitBatch`
+/// frames as needed: seq numbering stays continuous and the session's
+/// recurrent state carries across the splits (one stream, not one
+/// fresh stream per frame).  511/512/513 bracket the single-frame
+/// limit; 1025 forces a three-way split.
+#[test]
+fn infer_batch_chunks_transparently_at_the_frame_limit() {
+    let (addr, handle) = start_server(2048, WireOptions::default());
+    let mut c = WireClient::with_session(&addr.to_string(), "chunk").unwrap();
+    assert_eq!(c.hello().unwrap(), 1);
+
+    let mut reference = ScalarKernel::new(PackedModel::shared(&params()), FloatPath);
+    let mut step = 0usize;
+    let mut next_seq = 1u64;
+    let sizes = [
+        MAX_BATCH_WINDOWS - 1,     // 511: one frame, just under the limit
+        MAX_BATCH_WINDOWS,         // 512: exactly one full frame
+        MAX_BATCH_WINDOWS + 1,     // 513: split 512 + 1
+        2 * MAX_BATCH_WINDOWS + 1, // 1025: split 512 + 512 + 1
+    ];
+    for n in sizes {
+        let windows: Vec<[f32; INPUT_SIZE]> = (0..n).map(|i| window(step + i)).collect();
+        let recs = c.infer_batch(&windows, None).unwrap();
+        assert_eq!(recs.len(), n, "{n} windows -> {n} completions");
+        for (i, rec) in recs.iter().enumerate() {
+            assert_eq!(rec.seq, next_seq + i as u64, "seq continuity across splits");
+            assert!(!rec.shed, "window {i} of {n} shed");
+            let want = reference.step_window(&windows[i][..]);
+            assert_eq!(
+                rec.estimate.to_bits(),
+                want.to_bits(),
+                "estimate {i} of the {n}-window batch diverges from the reference stream"
+            );
+        }
+        next_seq += n as u64;
+        step += n;
+    }
+    c.shutdown().unwrap();
+    let total: usize = sizes.iter().sum();
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.submitted, total as u64);
+    assert_eq!(snap.completed, total as u64);
+}
+
+// ---- v2 codec properties -----------------------------------------------
+
+/// Delta windows round-trip bit-for-bit through a session stream with
+/// partial overlap, and a mid-stream resync (`prev = None`, the Reset
+/// contract) re-opens the stream with a full window.
+#[test]
+fn delta_round_trip_tracks_the_session_stream() {
+    let mut rng = Rng::new(0x5EED_0001);
+    let mut w = [0f32; INPUT_SIZE];
+    for v in w.iter_mut() {
+        *v = rng.uniform(-2.0, 2.0) as f32;
+    }
+    let mut client_prev: Option<[f32; INPUT_SIZE]> = None;
+    let mut server_prev: Option<[f32; INPUT_SIZE]> = None;
+    for step in 0..200u64 {
+        if step == 97 {
+            client_prev = None; // both ends resync (Reset semantics)
+            server_prev = None;
+        }
+        for slot in w.iter_mut() {
+            if rng.chance(0.3) {
+                *slot = rng.uniform(-2.0, 2.0) as f32;
+            }
+        }
+        let mut p = Vec::new();
+        let recon =
+            frame::encode_submit_v2(&mut p, step + 1, 125.0, b"probe", &w, client_prev.as_ref(), false);
+        let v = frame::decode_submit_v2(&p).unwrap();
+        assert_eq!(v.seq, step + 1);
+        assert_eq!(v.deadline_us, 125.0);
+        assert_eq!(v.session, b"probe");
+        assert_eq!(v.is_delta(), client_prev.is_some(), "first/resync windows go full");
+        assert!(!v.is_f16());
+        let got = v.reconstruct(server_prev.as_ref()).unwrap();
+        for i in 0..INPUT_SIZE {
+            assert_eq!(got[i].to_bits(), w[i].to_bits(), "step {step} sample {i}");
+            assert_eq!(recon[i].to_bits(), w[i].to_bits(), "f32 reconstruction is exact");
+        }
+        client_prev = Some(recon);
+        server_prev = Some(got);
+    }
+}
+
+/// The pinned worst case: every sample changed costs exactly the `enc`
+/// byte plus the change mask over a v1 `Submit` payload; any unchanged
+/// sample at all makes the v2 payload strictly smaller.
+#[test]
+fn delta_worst_case_is_pinned_at_three_bytes_over_v1() {
+    let prev = window(0);
+    let mut all_changed = prev;
+    for v in all_changed.iter_mut() {
+        *v += 1.0;
+    }
+    let mut v1 = Vec::new();
+    frame::encode_submit(&mut v1, 7, 0.0, b"probe", &all_changed);
+    let mut v2 = Vec::new();
+    frame::encode_submit_v2(&mut v2, 7, 0.0, b"probe", &all_changed, Some(&prev), false);
+    assert_eq!(v2.len(), v1.len() + 1 + frame::DELTA_MASK_BYTES);
+
+    // A random-overlap stream never exceeds that bound and beats v1
+    // whenever at least one sample repeats.
+    let mut rng = Rng::new(0x5EED_0002);
+    let mut w = prev;
+    let mut prev_recon = Some(prev); // as if `prev` had been sent full
+    for seq in 8..108u64 {
+        let mut changed = 0usize;
+        for slot in w.iter_mut() {
+            if rng.chance(0.25) {
+                *slot += 0.125; // exact in f32 at these magnitudes
+                changed += 1;
+            }
+        }
+        let mut v1 = Vec::new();
+        frame::encode_submit(&mut v1, seq, 0.0, b"probe", &w);
+        let mut v2 = Vec::new();
+        let recon =
+            frame::encode_submit_v2(&mut v2, seq, 0.0, b"probe", &w, prev_recon.as_ref(), false);
+        let overhead = 1 + frame::DELTA_MASK_BYTES;
+        assert_eq!(v2.len(), v1.len() + overhead - (INPUT_SIZE - changed) * 4);
+        assert!(v2.len() <= v1.len() + overhead, "worst-case bound violated");
+        if changed < INPUT_SIZE {
+            assert!(v2.len() < v1.len(), "any overlap must shrink the payload");
+        }
+        prev_recon = Some(recon);
+    }
+}
+
+/// A delta window for a session without a prior full window is a
+/// protocol violation, not a silent zero-filled reconstruction.
+#[test]
+fn delta_without_a_prior_window_is_rejected() {
+    let prev = window(1);
+    let mut next = prev;
+    next[0] += 1.0;
+    let mut p = Vec::new();
+    frame::encode_submit_v2(&mut p, 9, 0.0, b"probe", &next, Some(&prev), false);
+    let v = frame::decode_submit_v2(&p).unwrap();
+    assert!(v.is_delta());
+    let err = v.reconstruct(None).unwrap_err();
+    assert!(err.to_string().contains("without a prior full window"), "{err}");
+}
+
+/// f16 payloads: the reconstruction the client feeds back matches the
+/// server's bit-for-bit (widen∘narrow idempotence), quantization stays
+/// inside the error envelope the `F32Fast` tier already documents, and
+/// sub-quantum wiggle does not travel at all.
+#[test]
+fn f16_payloads_stay_inside_the_f32_fast_envelope() {
+    let mut rng = Rng::new(0x5EED_0003);
+    let mut w = [0f32; INPUT_SIZE];
+    for v in w.iter_mut() {
+        *v = rng.uniform(-3.0, 3.0) as f32;
+    }
+    let mut client_prev: Option<[f32; INPUT_SIZE]> = None;
+    let mut server_prev: Option<[f32; INPUT_SIZE]> = None;
+    for step in 0..200u64 {
+        for slot in w.iter_mut() {
+            if rng.chance(0.3) {
+                *slot = rng.uniform(-3.0, 3.0) as f32;
+            }
+        }
+        let mut p = Vec::new();
+        let recon =
+            frame::encode_submit_v2(&mut p, step + 1, 0.0, b"s", &w, client_prev.as_ref(), true);
+        let v = frame::decode_submit_v2(&p).unwrap();
+        assert!(v.is_f16());
+        let got = v.reconstruct(server_prev.as_ref()).unwrap();
+        for i in 0..INPUT_SIZE {
+            assert_eq!(got[i].to_bits(), recon[i].to_bits(), "both ends agree bit-for-bit");
+            let err = (got[i] - w[i]).abs() as f64;
+            assert!(err <= F32_FAST_MAX_ABS_ERR, "step {step} sample {i}: err {err}");
+        }
+        client_prev = Some(recon);
+        server_prev = Some(got);
+    }
+
+    // A change below the f16 quantum is invisible in encoded bits: the
+    // mask stays empty and no samples travel.
+    let base = [1.5f32; INPUT_SIZE];
+    let mut p = Vec::new();
+    let recon = frame::encode_submit_v2(&mut p, 1, 0.0, b"s", &base, None, true);
+    let mut wiggled = base;
+    wiggled[3] += 1e-6;
+    let mut p2 = Vec::new();
+    frame::encode_submit_v2(&mut p2, 2, 0.0, b"s", &wiggled, Some(&recon), true);
+    let v = frame::decode_submit_v2(&p2).unwrap();
+    assert!(v.is_delta());
+    assert_eq!(v.mask, 0, "sub-quantum change must not travel");
+}
+
+// ---- credit-based flow control -----------------------------------------
+
+/// Credit flow control end to end: the server grants its configured
+/// window in `HelloAck`, a submit storm (nothing drained mid-storm)
+/// stalls at that limit, the fabric never holds more than the granted
+/// window, and the sender resumes cleanly once completions drain.
+#[test]
+fn credit_window_bounds_in_flight_and_the_sender_resumes() {
+    const WINDOW: u16 = 4;
+    const STORM: usize = 2000;
+    let (addr, handle) = start_server(64, WireOptions { max_version: 2, credit_window: WINDOW });
+    let addr_s = addr.to_string();
+    let opts = PipelineOptions { deadline_us: 0.0, ..Default::default() };
+    let mut c = PipelinedClient::connect(&addr_s, Some("flow"), opts).unwrap();
+    assert_eq!(c.version(), 2);
+    assert_eq!(c.credit_window(), WINDOW, "the grant comes from the server, not the client cap");
+
+    // Mid-storm observer: the fabric's submitted-minus-completed gap
+    // can never exceed the granted window (the reader takes a credit
+    // BEFORE admission; completions release AFTER the settling frame
+    // is written).  The two counters are loaded non-atomically, so a
+    // couple of in-between admissions of skew are allowed.
+    let sampler = {
+        let addr_s = addr_s.clone();
+        std::thread::spawn(move || {
+            let mut sc = WireClient::connect(&addr_s).unwrap();
+            let mut max_gap = 0f64;
+            for _ in 0..25 {
+                let j = sc.stats().unwrap();
+                max_gap = max_gap.max(num(&j, "submitted") - num(&j, "inferred"));
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            max_gap
+        })
+    };
+
+    for k in 0..STORM {
+        let seq = c
+            .submit_within(&window(k), None, Duration::from_secs(20))
+            .unwrap()
+            .expect("credit starved for 20s");
+        assert_eq!(seq, k as u64 + 1);
+        assert!(c.in_flight() <= WINDOW as u32, "in flight past the granted window");
+    }
+    assert!(c.credit_stalls() > 0, "a {STORM}-submit storm against W={WINDOW} must stall");
+    let max_gap = sampler.join().unwrap();
+    assert!(
+        max_gap <= WINDOW as f64 + 2.0,
+        "fabric held {max_gap} windows for a W={WINDOW} client"
+    );
+
+    // Drain: exactly STORM completions, every seq accounted for, then
+    // the window is fully replenished.
+    let mut seen = BTreeSet::new();
+    for _ in 0..STORM {
+        match c.recv(Some(Duration::from_secs(20))).unwrap() {
+            PipeEvent::Completion(rec) => {
+                assert!(!rec.shed, "seq {} shed", rec.seq);
+                assert!(rec.estimate.is_finite());
+                assert!(seen.insert(rec.seq), "duplicate completion for seq {}", rec.seq);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(seen.len(), STORM);
+    assert_eq!(seen.iter().next(), Some(&1));
+    assert_eq!(seen.iter().next_back(), Some(&(STORM as u64)));
+    assert_eq!(c.in_flight(), 0, "a drained connection must hold no credits");
+
+    // Resume: the stalled-then-drained connection keeps working.
+    for k in 0..10 {
+        let seq = c.submit(&window(STORM + k), None).unwrap();
+        assert_eq!(seq, (STORM + k) as u64 + 1);
+    }
+    let mut tail = BTreeSet::new();
+    for _ in 0..10 {
+        match c.recv(Some(Duration::from_secs(20))).unwrap() {
+            PipeEvent::Completion(rec) => assert!(tail.insert(rec.seq)),
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(tail.iter().next(), Some(&(STORM as u64 + 1)));
+    assert_eq!(tail.iter().next_back(), Some(&(STORM as u64 + 10)));
+    drop(c);
+
+    let mut ctl = WireClient::connect(&addr_s).unwrap();
+    ctl.shutdown().unwrap();
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.submitted, STORM as u64 + 10);
+    assert_eq!(snap.completed, STORM as u64 + 10);
+    assert_eq!(snap.shed, 0, "credit gating keeps the queue inside its depth");
+}
+
+// ---- version negotiation -----------------------------------------------
+
+/// A v2-capable client against a v1-pinned server: the `HelloAck`
+/// negotiates down, the client falls back to plain `Submit` frames
+/// under its own in-flight cap, and the estimate stream stays
+/// bit-identical to the blocking v1 client's.
+#[test]
+fn v2_client_negotiates_down_against_a_v1_only_server_bit_identically() {
+    let (addr, handle) = start_server(64, WireOptions { max_version: 1, credit_window: 7 });
+    let addr_s = addr.to_string();
+
+    let opts = PipelineOptions { inflight_cap: 8, ..Default::default() };
+    let mut piped = PipelinedClient::connect(&addr_s, Some("nego-a"), opts).unwrap();
+    assert_eq!(piped.version(), 1, "server caps the negotiation at v1");
+    assert_eq!(piped.credit_window(), 8, "v1 has no server credits: the client cap applies");
+
+    let mut blocking = WireClient::with_session(&addr_s, "nego-b").unwrap();
+    assert_eq!(blocking.hello().unwrap(), 1);
+
+    for k in 0..64 {
+        let w = window(k);
+        let seq = piped.submit(&w, None).unwrap();
+        let piped_est = match piped.recv(Some(Duration::from_secs(20))).unwrap() {
+            PipeEvent::Completion(rec) => {
+                assert_eq!(rec.seq, seq);
+                assert!(!rec.shed);
+                rec.estimate
+            }
+            other => panic!("unexpected event {other:?}"),
+        };
+        let (block_est, _) = blocking.infer(&w).unwrap();
+        assert_eq!(
+            piped_est.to_bits(),
+            block_est.to_bits(),
+            "step {k}: negotiated-down stream diverged"
+        );
+    }
+    drop(piped);
+    blocking.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+// ---- wire traffic counters ---------------------------------------------
+
+/// Both protocols surface the process-wide wire traffic counters in
+/// their stats replies (the `"wire"` object: bytes/frames in/out).
+#[test]
+fn stats_reply_carries_wire_counters_on_both_protocols() {
+    let (addr, handle) = start_server(64, WireOptions::default());
+    let addr_s = addr.to_string();
+
+    let mut bin = WireClient::with_session(&addr_s, "wstat").unwrap();
+    bin.hello().unwrap();
+    bin.infer(&window(0)).unwrap();
+    let bj = bin.stats().unwrap();
+    let wire = bj.get("wire").expect("binary stats carry a wire object");
+    for key in ["bytes_in", "bytes_out", "frames_in", "frames_out"] {
+        assert!(num(wire, key) > 0.0, "binary stats: wire.{key} must count");
+    }
+
+    let mut js = Client::connect(&addr_s).unwrap();
+    let jj = js.stats().unwrap();
+    let wire = jj.get("wire").expect("JSON stats carry a wire object");
+    // The JSON request line itself was counted before the reply went out.
+    assert!(num(wire, "bytes_in") > 0.0);
+    assert!(num(wire, "frames_in") > 0.0);
+
+    bin.shutdown().unwrap();
+    handle.join().unwrap();
+}

@@ -30,7 +30,9 @@ cargo test -q
 echo "== wire protocol gate: codec properties + conformance transcripts =="
 # Explicit re-run of the protocol suites so a wire-format drift fails
 # with its own named CI step (cheap: already built by the line above).
-cargo test -q --test wire_codec --test protocol_conformance
+# wire_v2 covers protocol v2: delta/f16 codecs, credit flow control,
+# negotiate-down bit-identity, infer_batch chunking (docs/PROTOCOL.md).
+cargo test -q --test wire_codec --test protocol_conformance --test wire_v2
 
 echo "== sched correctness gate: fabric bit-parity + rebalance migration =="
 # The sched:: acceptance suites (see docs/SCHED.md): fabric-vs-serial
@@ -67,5 +69,23 @@ echo "== serving fabric loadgen smoke (BENCH_serving.json) =="
 # object, see docs/SCHED.md); small M / short duration
 # (scripts/loadgen.sh runs the full measurement).
 cargo run --release --bin hrd -- loadgen --quick --wire both --out BENCH_serving.json
+
+echo "== open-loop serving gate: v1-vs-v2 knee rows in BENCH_serving.json =="
+# The quick loadgen above includes the open-loop phase (pipelined wire
+# clients at Poisson/bursty scheduled arrivals, docs/PROTOCOL.md).  Fail
+# with a named step if the knee rows or the v2 parity object are absent.
+test -s BENCH_serving.json || { echo "FAIL: BENCH_serving.json was not written"; exit 1; }
+grep -q '"open_loop"' BENCH_serving.json \
+  || { echo "FAIL: BENCH_serving.json lacks the open_loop[] rows"; exit 1; }
+for process in poisson bursty; do
+  grep -q "\"process\":\"$process\"" BENCH_serving.json \
+    || { echo "FAIL: open_loop[] lacks $process arrival rows"; exit 1; }
+done
+for version in 1 2; do
+  grep -q "\"wire_version\":$version" BENCH_serving.json \
+    || { echo "FAIL: open_loop[] lacks wire protocol v$version rows"; exit 1; }
+done
+grep -q '"v2_parity"' BENCH_serving.json \
+  || { echo "FAIL: BENCH_serving.json lacks the v2_parity object"; exit 1; }
 
 echo "CI OK"
