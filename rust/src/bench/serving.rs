@@ -54,6 +54,7 @@ use crate::arch::INPUT_SIZE;
 use crate::beam::{ProfileKind, Testbed};
 use crate::coordinator::{channel_seed, Client, InferReply, NativeBackend, Server};
 use crate::lstm::LstmParams;
+use crate::obs::{render_prometheus, Stage};
 use crate::sched::{session_hash, shard_of, DatapathKind, Fabric, FabricConfig};
 use crate::util::{stats, Json, Rng};
 use crate::wire::{PipeEvent, PipelineOptions, PipelinedClient, WireClient};
@@ -151,6 +152,11 @@ pub struct ServingConfig {
     /// snapshots: consecutive windows differ in exactly this many
     /// positions (the overlap v2 delta encoding exploits).
     pub open_stride: usize,
+    /// Flight-recorder sampling on the open-loop fabrics (0 = tracing
+    /// off).  When on, open-loop rows carry a per-stage latency
+    /// breakdown and the suite runs a tracing-overhead A/B
+    /// (docs/OBSERVABILITY.md).
+    pub trace_sample: usize,
     /// Workload seed.
     pub seed: u64,
 }
@@ -176,6 +182,7 @@ impl ServingConfig {
             open_requests: 300,
             open_rates_hz: vec![250.0, 1000.0, 4000.0],
             open_stride: 4,
+            trace_sample: 64,
             seed: 42,
         }
     }
@@ -200,6 +207,7 @@ impl ServingConfig {
             open_requests: 60,
             open_rates_hz: vec![200.0, 800.0],
             open_stride: 4,
+            trace_sample: 64,
             seed: 42,
         }
     }
@@ -370,11 +378,16 @@ pub struct OpenLoopRow {
     pub shed: u64,
     /// Times a submit blocked on the credit window (saturation signal).
     pub credit_stalls: u64,
+    /// Server-side per-stage latency summary at the end of the run
+    /// (the `tracedump` reply's `stages` object; `None` with tracing
+    /// off).  Attributes an operating point's latency to queue wait vs
+    /// gather vs kernel vs delivery.
+    pub stage_breakdown: Option<Json>,
 }
 
 impl OpenLoopRow {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("process", Json::from(self.process)),
             ("wire_version", Json::from(self.wire_version as usize)),
             ("offered_rps", Json::from(self.offered_rps)),
@@ -386,7 +399,11 @@ impl OpenLoopRow {
             ("requests", Json::from(self.requests as f64)),
             ("shed", Json::from(self.shed as f64)),
             ("credit_stalls", Json::from(self.credit_stalls as f64)),
-        ])
+        ];
+        if let Some(sb) = &self.stage_breakdown {
+            fields.push(("stage_breakdown", sb.clone()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -409,6 +426,32 @@ impl V2Parity {
     }
 }
 
+/// Tracing-overhead A/B: throughput of an identical direct-fabric
+/// closed loop with the flight recorder off vs sampling 1-in-N.
+#[derive(Debug, Clone)]
+pub struct TraceOverhead {
+    /// Best-of-3 request rate with tracing fully off (`sample_every` 0).
+    pub off_rps: f64,
+    /// Best-of-3 request rate with tracing armed at `sample_every`.
+    pub sampled_rps: f64,
+    /// Sampling divisor used for the armed run.
+    pub sample_every: u32,
+    /// `(off - sampled) / off`; negative means the armed run happened
+    /// to measure faster (pure timing noise).
+    pub overhead_frac: f64,
+}
+
+impl TraceOverhead {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("off_rps", Json::from(self.off_rps)),
+            ("sampled_rps", Json::from(self.sampled_rps)),
+            ("sample_every", Json::from(self.sample_every as usize)),
+            ("overhead_frac", Json::from(self.overhead_frac)),
+        ])
+    }
+}
+
 /// Full suite output.
 #[derive(Debug, Clone)]
 pub struct ServingSummary {
@@ -427,6 +470,13 @@ pub struct ServingSummary {
     pub open_loop: Vec<OpenLoopRow>,
     /// v1-vs-v2 estimate parity (`None` when `cfg.open_loop` is off).
     pub v2_parity: Option<V2Parity>,
+    /// Tracing-overhead A/B: fabric throughput with the flight recorder
+    /// off vs sampled (`None` when `cfg.trace_sample` is 0).
+    pub trace_overhead: Option<TraceOverhead>,
+    /// Prometheus text exposition rendered from the sampled A/B fabric
+    /// (consumed by `hrd loadgen --prom-out`; not part of the JSON
+    /// report).
+    pub prometheus_sample: Option<String>,
     /// Shard count of the widest fabric scenario (max shards, regardless
     /// of the order `--shards` listed them).
     pub best_fabric_shards: usize,
@@ -511,6 +561,27 @@ impl ServingSummary {
                 r.on.hot_share * 100.0,
             ));
         }
+        if let Some(sb) = self.open_loop.iter().find_map(|r| r.stage_breakdown.as_ref()) {
+            let mut parts = Vec::new();
+            for name in crate::obs::SPAN_NAMES {
+                if let Some(p50) = sb.at(&[name, "p50_us"]).and_then(|v| v.as_f64()) {
+                    parts.push(format!("{name} {p50:.1}"));
+                }
+            }
+            if !parts.is_empty() {
+                s.push_str(&format!("stage p50 us: {}\n", parts.join(" | ")));
+            }
+        }
+        if let Some(t) = &self.trace_overhead {
+            s.push_str(&format!(
+                "tracing overhead (1/{} sampling): off {:.0} r/s vs on {:.0} r/s \
+                 ({:+.2}%)\n",
+                t.sample_every,
+                t.off_rps,
+                t.sampled_rps,
+                t.overhead_frac * 100.0,
+            ));
+        }
         s.push_str(&format!(
             "widest fabric ({} shards) vs serial sustained rate: {:.2}x",
             self.best_fabric_shards, self.best_fabric_vs_serial
@@ -538,6 +609,7 @@ impl ServingSummary {
                         Json::Arr(cfg.open_rates_hz.iter().map(|&r| Json::from(r)).collect()),
                     ),
                     ("open_stride", Json::from(cfg.open_stride)),
+                    ("trace_sample", Json::from(cfg.trace_sample)),
                     (
                         "shard_counts",
                         Json::Arr(cfg.shard_counts.iter().map(|&n| Json::from(n)).collect()),
@@ -571,6 +643,13 @@ impl ServingSummary {
                 "rebalance",
                 match &self.rebalance {
                     Some(r) => r.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "trace_overhead",
+                match &self.trace_overhead {
+                    Some(t) => t.to_json(),
                     None => Json::Null,
                 },
             ),
@@ -979,6 +1058,7 @@ fn run_open_scenario(
     // depth bounds the shared fabric ingress.
     fcfg.queue_depth = (cfg.open_streams * 16).max(64);
     fcfg.datapath = DatapathKind::FloatF32;
+    fcfg.obs.sample_every = cfg.trace_sample.min(u32::MAX as usize) as u32;
     let fabric = Arc::new(Fabric::new(params, fcfg)?);
     let server_thread = std::thread::spawn(move || {
         let _ = server.run_fabric(fabric);
@@ -1032,6 +1112,13 @@ fn run_open_scenario(
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let mut ctl = Client::connect(&addr)?;
+    // Pull the server-side stage attribution for this operating point
+    // before tearing the fabric down (tracing off => no breakdown).
+    let stage_breakdown = if cfg.trace_sample > 0 {
+        ctl.trace_dump().ok().and_then(|d| d.get("stages").cloned())
+    } else {
+        None
+    };
     ctl.shutdown()?;
     server_thread.join().expect("open-loop server panicked");
 
@@ -1054,6 +1141,7 @@ fn run_open_scenario(
         requests: submitted,
         shed,
         credit_stalls: stalls,
+        stage_breakdown,
     })
 }
 
@@ -1286,6 +1374,83 @@ pub fn run_skew_scenario(
 /// Run the full suite: serial baseline, then the fabric at each
 /// configured shard count over each configured wire protocol (plus the
 /// cross-protocol parity pass when both are selected); optionally write
+/// Tracing-overhead A/B: identical direct-fabric closed loops with the
+/// flight recorder off (`sample_every` 0) vs armed, best-of-3 each, so
+/// the pair differs only in the `obs::` code paths.  Each completion is
+/// fed through [`crate::sched::Fabric::obs`]'s `observe_completion`
+/// exactly as the TCP delivery points do, so the armed run pays the
+/// full mark + histogram + ring cost.  The design budget is <= 2%
+/// overhead when armed (docs/OBSERVABILITY.md); the assert below is
+/// deliberately lenient because wall-clock throughput at this run
+/// length is noisy on shared CI hardware — it exists to catch the
+/// pathological regression where tracing lands on the hot path even
+/// when off, not to grade the last percent.
+fn measure_trace_overhead(
+    params: &LstmParams,
+    cfg: &ServingConfig,
+) -> Result<(TraceOverhead, String)> {
+    let sample_every = cfg.trace_sample.clamp(1, u32::MAX as usize) as u32;
+    let requests = (cfg.open_streams * cfg.open_requests * 4).clamp(512, 4096);
+    let run_once = |sample: u32| -> Result<(f64, String)> {
+        let mut fcfg = FabricConfig::new(2, cfg.batch.max(2));
+        fcfg.queue_depth = 256;
+        fcfg.datapath = DatapathKind::FloatF32;
+        fcfg.obs.sample_every = sample;
+        let fabric = Fabric::new(params, fcfg)?;
+        let sessions: Vec<u64> =
+            (0..8).map(|k| session_hash(&format!("overhead-{k}"))).collect();
+        let window = [0.25f32; INPUT_SIZE];
+        let t0 = Instant::now();
+        for k in 0..requests {
+            let mut c =
+                fabric.submit_hashed(sessions[k % sessions.len()], &window, None)?.wait()?;
+            // Mimic a server delivery point (a no-op when tracing is
+            // off) so both runs execute the same statements.
+            c.trace.mark(Stage::CompletionWritten);
+            fabric.obs().observe_completion(
+                &c.trace,
+                c.shard,
+                c.lane,
+                c.session,
+                c.latency_us,
+                c.deadline_missed,
+            );
+        }
+        let rps = requests as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        let obs = fabric.obs();
+        let prom = render_prometheus(
+            &fabric.snapshot(),
+            &obs.stage_lines(),
+            obs.uptime_us(),
+            obs.next_seq(),
+            None,
+        );
+        Ok((rps, prom))
+    };
+    let mut off_rps = 0.0f64;
+    for _ in 0..3 {
+        off_rps = off_rps.max(run_once(0)?.0);
+    }
+    let (mut sampled_rps, mut prom) = (0.0f64, String::new());
+    for _ in 0..3 {
+        let (rps, p) = run_once(sample_every)?;
+        if rps > sampled_rps {
+            sampled_rps = rps;
+            prom = p;
+        }
+    }
+    let overhead_frac = (off_rps - sampled_rps) / off_rps.max(1e-9);
+    anyhow::ensure!(
+        sampled_rps >= 0.5 * off_rps,
+        "flight recorder cost {:.0}% throughput (off {:.0} vs armed {:.0} r/s); \
+         the design budget is 2%",
+        overhead_frac * 100.0,
+        off_rps,
+        sampled_rps,
+    );
+    Ok((TraceOverhead { off_rps, sampled_rps, sample_every, overhead_frac }, prom))
+}
+
 /// `BENCH_serving.json`.
 pub fn run_serving_suite(
     params: &LstmParams,
@@ -1336,6 +1501,13 @@ pub fn run_serving_suite(
     } else {
         (Vec::new(), None)
     };
+    let (trace_overhead, prometheus_sample) = if cfg.trace_sample > 0 {
+        let (t, prom) =
+            measure_trace_overhead(params, cfg).context("tracing-overhead A/B")?;
+        (Some(t), Some(prom))
+    } else {
+        (None, None)
+    };
     let rebalance = if cfg.skew {
         Some(RebalanceCompare {
             off: run_skew_scenario(params, cfg, false).context("skew scenario, rebalance off")?,
@@ -1366,6 +1538,8 @@ pub fn run_serving_suite(
         parity_windows,
         open_loop,
         v2_parity,
+        trace_overhead,
+        prometheus_sample,
         best_fabric_shards,
         best_fabric_vs_serial,
     };
@@ -1401,6 +1575,7 @@ mod tests {
             open_requests: 8,
             open_rates_hz: vec![500.0],
             open_stride: 4,
+            trace_sample: 0, // A/B exercised by the open-loop test below
             seed: 11,
         };
         let out = std::env::temp_dir().join("hrd_bench_serving_selftest.json");
@@ -1420,12 +1595,15 @@ mod tests {
             assert!(c.json_p50_us > 0.0 && c.binary_p50_us > 0.0, "{c:?}");
         }
         assert!(s.parity_windows > 0, "parity pass must run when both protos selected");
+        assert!(s.trace_overhead.is_none(), "no A/B with tracing off");
+        assert!(s.prometheus_sample.is_none());
         assert!(s.best_fabric_vs_serial > 0.0);
         assert_eq!(s.best_fabric_shards, 2);
         assert!(!s.render().is_empty());
         let j = Json::parse_file(&out).unwrap();
         assert_eq!(j.get("group").unwrap().as_str(), Some("serving"));
         assert_eq!(j.get("rebalance"), Some(&Json::Null), "skew disabled in this config");
+        assert_eq!(j.get("trace_overhead"), Some(&Json::Null), "tracing off in this config");
         assert_eq!(j.get("fabric").unwrap().as_arr().unwrap().len(), 4);
         assert_eq!(j.get("wire_comparison").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("parity_windows").unwrap().as_f64().unwrap() > 0.0);
@@ -1504,9 +1682,30 @@ mod tests {
         let p = s.v2_parity.as_ref().expect("parity pass runs with open loop on");
         assert!(p.windows > 0);
         assert!(p.f16_max_abs_err <= crate::kernel::simd::F32_FAST_MAX_ABS_ERR);
+        // quick() samples 1-in-64, so every open-loop fabric carries a
+        // server-side stage breakdown and the A/B pass runs.
+        for row in &s.open_loop {
+            let sb = row.stage_breakdown.as_ref().unwrap_or_else(|| {
+                panic!("{} v{} row lost its stage breakdown", row.process, row.wire_version)
+            });
+            let kernel = sb.at(&["kernel", "count"]).and_then(|v| v.as_f64()).unwrap();
+            assert!(kernel > 0.0, "kernel spans must fold into the histogram");
+        }
+        let t = s.trace_overhead.as_ref().expect("A/B runs when sampling is on");
+        assert_eq!(t.sample_every, 64);
+        assert!(t.off_rps > 0.0 && t.sampled_rps > 0.0, "{t:?}");
+        let prom = s.prometheus_sample.as_ref().expect("exposition captured");
+        assert!(prom.contains("hrd_requests_completed_total"), "{prom}");
+        assert!(prom.contains("hrd_stage_latency_microseconds"), "{prom}");
         let j = s.to_json(&cfg);
         assert_eq!(j.get("open_loop").unwrap().as_arr().unwrap().len(), 6);
         assert!(j.at(&["v2_parity", "windows"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            j.at(&["trace_overhead", "off_rps"]).unwrap().as_f64().unwrap() > 0.0,
+            "A/B numbers land in the report"
+        );
+        let row0 = &j.get("open_loop").unwrap().as_arr().unwrap()[0];
+        assert!(row0.get("stage_breakdown").is_some(), "breakdown lands in the report");
     }
 
     /// The open-loop ring workload really overlaps: consecutive windows
@@ -1554,6 +1753,7 @@ mod tests {
             open_requests: 8,
             open_rates_hz: vec![500.0],
             open_stride: 4,
+            trace_sample: 0,
             seed: 3,
         };
         let s = run_serving_suite(&params, &cfg, None).unwrap();

@@ -54,6 +54,9 @@ COMMANDS:
             negotiate; 1 pins legacy request-reply serving)
             --credit-window W  (protocol-v2 per-connection credit grant:
             max windows in flight; also `[wire]` in the config)
+            --trace-sample N  (flight recorder: publish every Nth request
+            trace, 0 = off; default 64; also `[obs] trace_sample`; see
+            docs/OBSERVABILITY.md)
   loadgen   self-contained serving load generator: drives M synthetic
             DROPBEAR streams through a loopback socket against the serial
             backend and the fabric at several shard counts over the JSON
@@ -69,6 +72,14 @@ COMMANDS:
             Poisson + bursty arrivals into the open_loop[] rows; see
             docs/PROTOCOL.md):  --no-open-loop  --open-streams M
             --open-requests N  --open-rates "250,1000,4000"  --open-stride K
+            --trace-sample N  (stage attribution sampling, 0 = off)
+            --prom-out <file>  (write a Prometheus exposition sample)
+  top       one stats + per-stage latency snapshot from a running
+            fabric server (docs/OBSERVABILITY.md)
+            --addr HOST:PORT  --watch S  (repeat every S seconds)
+            --prom  (print the Prometheus text exposition instead)
+  trace     dump recent flight-recorder traces from a running server
+            --addr HOST:PORT  --last K (default 16)  --slowest K
   tables    regenerate Tables I-IV (FPGA design-space study)
   pareto    design-space Pareto frontier + constrained recommendation
             --min-snr X  --max-dsps N
@@ -89,6 +100,8 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "serve" => serve(args),
         "serve-tcp" => serve_tcp(args),
         "loadgen" => loadgen(args),
+        "top" => top(args),
+        "trace" => trace_cmd(args),
         "bench" => bench(args),
         "tables" => tables(),
         "pareto" => pareto(args),
@@ -150,6 +163,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.wire_credit_window = args
         .get_usize("credit-window", cfg.wire_credit_window as usize)?
         .clamp(1, u16::MAX as usize) as u16;
+    cfg.trace_sample = args.get_usize("trace-sample", cfg.trace_sample)?;
     Ok(cfg)
 }
 
@@ -223,6 +237,7 @@ fn fabric_config(
     f.shed = shed;
     f.datapath = datapath;
     f.balance.enabled = cfg.rebalance;
+    f.obs.sample_every = cfg.trace_sample.min(u32::MAX as usize) as u32;
     Ok(f)
 }
 
@@ -384,7 +399,8 @@ fn serve_tcp(args: &Args) -> Result<i32> {
             let fabric = std::sync::Arc::new(crate::sched::Fabric::new(&params, fcfg)?);
             println!(
                 "serving fabric backend={} datapath={} shards={} batch={} deadline={}us \
-                 rebalance={} wire<=v{} credits={} on {} (send {{\"cmd\":\"shutdown\"}} to stop)",
+                 rebalance={} wire<=v{} credits={} trace={} on {} \
+                 (send {{\"cmd\":\"shutdown\"}} to stop)",
                 cfg.backend.name(),
                 dp.name(),
                 fabric.shards(),
@@ -393,6 +409,11 @@ fn serve_tcp(args: &Args) -> Result<i32> {
                 if cfg.rebalance { "on" } else { "off" },
                 cfg.wire_max_version,
                 cfg.wire_credit_window,
+                if cfg.trace_sample > 0 {
+                    format!("1/{}", cfg.trace_sample)
+                } else {
+                    "off".to_string()
+                },
                 server.local_addr()?
             );
             let snap = server.run_fabric(fabric)?;
@@ -465,6 +486,7 @@ fn loadgen(args: &Args) -> Result<i32> {
         );
     }
     scfg.seed = args.get_u64("seed", scfg.seed)?;
+    scfg.trace_sample = args.get_usize("trace-sample", scfg.trace_sample)?;
     if let Some(list) = args.get("shards") {
         let counts: std::result::Result<Vec<usize>, _> =
             list.split(',').map(|s| s.trim().parse::<usize>()).collect();
@@ -484,7 +506,131 @@ fn loadgen(args: &Args) -> Result<i32> {
     let out = PathBuf::from(args.get_or("out", "BENCH_serving.json"));
     let summary = run_serving_suite(&params, &scfg, Some(&out))?;
     println!("{}", summary.render());
+    if let Some(path) = args.get("prom-out") {
+        match &summary.prometheus_sample {
+            Some(text) => {
+                std::fs::write(path, text)?;
+                println!("prometheus exposition sample written to {path}");
+            }
+            None => eprintln!("note: no prometheus sample captured (--trace-sample 0?)"),
+        }
+    }
     println!("serving bench report written to {}", out.display());
+    Ok(0)
+}
+
+/// `hrd top`: stats + per-stage latency snapshot(s) from a running
+/// fabric server over the JSON protocol (`docs/OBSERVABILITY.md`).
+fn top(args: &Args) -> Result<i32> {
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let watch_s = args.get_f64("watch", 0.0)?;
+    let prom = args.has_flag("prom");
+    let mut client = crate::coordinator::Client::connect(addr)?;
+    loop {
+        if prom {
+            print!("{}", client.prometheus()?);
+        } else {
+            print!("{}", render_top(&client.trace_dump()?));
+        }
+        if watch_s <= 0.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(watch_s));
+    }
+    Ok(0)
+}
+
+/// Render one `tracedump` reply as the `hrd top` screen: the aggregate
+/// serving line plus a per-stage latency table in pipeline order.
+fn render_top(dump: &crate::util::Json) -> String {
+    use std::fmt::Write as _;
+    let g = |path: &[&str]| dump.at(path).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let mut o = String::new();
+    let _ = writeln!(
+        o,
+        "uptime {:.1}s  seq {}  submitted {}  completed {}  shed {}  \
+         p50 {:.1}us  p99 {:.1}us  miss_rate {:.4}",
+        g(&["stats", "uptime_us"]) / 1e6,
+        g(&["stats", "snapshot_seq"]),
+        g(&["stats", "submitted"]),
+        g(&["stats", "inferred"]),
+        g(&["stats", "shed"]),
+        g(&["stats", "p50_us"]),
+        g(&["stats", "p99_us"]),
+        g(&["stats", "deadline_miss_rate"]),
+    );
+    let _ = writeln!(o, "{:>12} {:>10} {:>12} {:>12}", "stage", "spans", "p50_us", "p99_us");
+    for name in crate::obs::SPAN_NAMES {
+        let _ = writeln!(
+            o,
+            "{:>12} {:>10} {:>12.2} {:>12.2}",
+            name,
+            g(&["stages", name, "count"]),
+            g(&["stages", name, "p50_us"]),
+            g(&["stages", name, "p99_us"]),
+        );
+    }
+    let n = dump.get("traces").and_then(|t| t.as_arr()).map_or(0, |a| a.len());
+    let _ = writeln!(o, "{n} trace(s) in the flight recorder (`hrd trace` to list)");
+    o
+}
+
+/// `hrd trace`: list recent (or slowest) flight-recorder traces from a
+/// running fabric server, one line per request with its stage spans.
+fn trace_cmd(args: &Args) -> Result<i32> {
+    use crate::obs::{N_STAGES, SPAN_NAMES};
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let last = args.get_usize("last", 16)?.max(1);
+    let slowest = args.get_usize("slowest", 0)?;
+    let mut client = crate::coordinator::Client::connect(addr)?;
+    let dump = client.trace_dump()?;
+    let mut traces: Vec<&crate::util::Json> =
+        dump.get("traces").and_then(|t| t.as_arr()).map_or(vec![], |a| a.iter().collect());
+    let lat = |t: &crate::util::Json| t.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    if slowest > 0 {
+        traces.sort_by(|a, b| lat(b).partial_cmp(&lat(a)).unwrap_or(std::cmp::Ordering::Equal));
+        traces.truncate(slowest);
+    } else if traces.len() > last {
+        traces.drain(..traces.len() - last);
+    }
+    if traces.is_empty() {
+        println!("no traces recorded (is the server running with --trace-sample > 0?)");
+        return Ok(0);
+    }
+    let mut header = format!(
+        "{:>8} {:>18} {:>5} {:>4} {:>11} {:>5}",
+        "at_s", "session", "shard", "lane", "latency_us", "miss"
+    );
+    for name in SPAN_NAMES {
+        header.push_str(&format!(" {:>12}", format!("{name}_us")));
+    }
+    println!("{header}");
+    for t in traces {
+        let gf = |k: &str| t.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let miss = if t.get("deadline_miss") == Some(&crate::util::Json::Bool(true)) {
+            "MISS"
+        } else {
+            "-"
+        };
+        let mut line = format!(
+            "{:>8.2} {:>18} {:>5} {:>4} {:>11.1} {:>5}",
+            gf("at_us") / 1e6,
+            t.get("session").and_then(|v| v.as_str()).unwrap_or("?"),
+            gf("shard"),
+            gf("lane"),
+            gf("latency_us"),
+            miss,
+        );
+        let marks: Vec<f64> = match t.get("marks_ns").and_then(|v| v.as_arr()) {
+            Some(a) => a.iter().map(|m| m.as_f64().unwrap_or(0.0)).collect(),
+            None => vec![0.0; N_STAGES],
+        };
+        for w in marks.windows(2) {
+            let span_us = if w[1] > 0.0 { (w[1] - w[0]).max(0.0) / 1e3 } else { 0.0 };
+            line.push_str(&format!(" {span_us:>12.2}"));
+        }
+        println!("{line}");
+    }
     Ok(0)
 }
 
@@ -791,6 +937,23 @@ mod tests {
         // Out-of-range values clamp instead of erroring.
         let a = parse(&["serve-tcp", "--backend", "native", "--wire-max-version", "9"]);
         assert_eq!(experiment_config(&a).unwrap().wire_max_version, crate::wire::MAX_VERSION);
+    }
+
+    #[test]
+    fn trace_sample_flows_into_fabric_config() {
+        let a = parse(&["serve-tcp", "--backend", "native", "--trace-sample", "8"]);
+        let cfg = experiment_config(&a).unwrap();
+        assert_eq!(cfg.trace_sample, 8);
+        let f = fabric_config(&cfg, crate::sched::DatapathKind::Float).unwrap();
+        assert_eq!(f.obs.sample_every, 8);
+        // Default: 1-in-64 sampling (cheap enough to leave on).
+        let d = experiment_config(&parse(&["serve-tcp", "--backend", "native"])).unwrap();
+        assert_eq!(d.trace_sample, 64);
+        // 0 turns the whole plane off (inert traces, no clock reads).
+        let off = parse(&["serve-tcp", "--backend", "native", "--trace-sample", "0"]);
+        let f = fabric_config(&experiment_config(&off).unwrap(), crate::sched::DatapathKind::Float)
+            .unwrap();
+        assert_eq!(f.obs.sample_every, 0);
     }
 
     #[test]

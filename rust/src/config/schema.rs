@@ -99,6 +99,10 @@ pub struct ExperimentConfig {
     /// (`[wire] credit_window`): max submitted-but-uncompleted windows
     /// in flight per client.
     pub wire_credit_window: u16,
+    /// Flight-recorder sampling for `serve-tcp`/`loadgen`
+    /// (`[obs] trace_sample`): publish every Nth request trace; 0
+    /// disables request tracing entirely.  See `docs/OBSERVABILITY.md`.
+    pub trace_sample: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -124,6 +128,7 @@ impl Default for ExperimentConfig {
             rebalance: false,
             wire_max_version: crate::wire::MAX_VERSION,
             wire_credit_window: 64,
+            trace_sample: 64,
         }
     }
 }
@@ -165,6 +170,7 @@ impl ExperimentConfig {
             wire_credit_window: doc
                 .get_i64("wire.credit_window", d.wire_credit_window as i64)
                 .clamp(1, u16::MAX as i64) as u16,
+            trace_sample: doc.get_i64("obs.trace_sample", d.trace_sample as i64).max(0) as usize,
         }
     }
 }
@@ -184,6 +190,7 @@ mod tests {
         assert_eq!(c.shed, "reject");
         assert_eq!(c.wire_max_version, crate::wire::MAX_VERSION, "v2 on by default");
         assert_eq!(c.wire_credit_window, 64);
+        assert_eq!(c.trace_sample, 64, "1-in-64 flight-recorder sampling by default");
     }
 
     #[test]
@@ -212,6 +219,9 @@ rebalance = true
 [wire]
 max_version = 1
 credit_window = 4
+
+[obs]
+trace_sample = 0
 "#,
         )
         .unwrap();
@@ -235,6 +245,7 @@ credit_window = 4
         assert!(!ExperimentConfig::default().rebalance, "opt-in only");
         assert_eq!(c.wire_max_version, 1, "[wire] max_version pins the protocol");
         assert_eq!(c.wire_credit_window, 4);
+        assert_eq!(c.trace_sample, 0, "[obs] trace_sample = 0 turns tracing off");
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! the sharded deadline-aware fabric ([`crate::sched`]), where
 //! connection handlers submit straight into per-shard micro-batching
 //! workers.
+//!
+//! Naming note: [`trace`] here is *workload* recording (HRDT files —
+//! freeze a testbed run, replay it through another backend).
+//! *Request*-level stage tracing — per-request timing from wire decode
+//! to completion write — lives in [`crate::obs`]; see
+//! `docs/OBSERVABILITY.md`.
 
 pub mod backend;
 pub mod metrics;

@@ -58,6 +58,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
+use crate::obs::{render_prometheus, Stage, WireLine};
 use crate::sched::{
     checked_hash, Completion, Fabric, SchedSnapshot, SessionNameError, SessionToken, Shed,
 };
@@ -90,6 +91,10 @@ enum Request {
         session: Option<String>,
     },
     Stats,
+    /// Flight-recorder dump (fabric mode; see `docs/OBSERVABILITY.md`).
+    TraceDump,
+    /// Prometheus text exposition of the stats snapshot (fabric mode).
+    Prometheus,
     Shutdown,
 }
 
@@ -100,6 +105,8 @@ fn parse_request(line: &str) -> Result<Request> {
         return Ok(match cmd {
             "reset" => Request::Reset { session },
             "stats" => Request::Stats,
+            "tracedump" => Request::TraceDump,
+            "prometheus" => Request::Prometheus,
             "shutdown" => Request::Shutdown,
             other => anyhow::bail!("unknown cmd {other}"),
         });
@@ -384,16 +391,63 @@ impl WireStats {
             ("frames_out", Json::Num(self.frames_out.load(Ordering::Relaxed) as f64)),
         ])
     }
+
+    fn line(&self) -> WireLine {
+        WireLine {
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+        }
+    }
 }
 
-/// Fabric stats snapshot with the wire counters merged in — the one
-/// rendering shared by the JSON handler and both binary handlers.
+/// Fabric stats snapshot with the wire counters and observability
+/// metadata merged in — the one rendering shared by the JSON handler
+/// and both binary handlers.  Every reply carries `uptime_us` and a
+/// monotonic `snapshot_seq` so scrapers can order snapshots and detect
+/// server restarts.
 fn fabric_stats_json(fabric: &Fabric, wstats: &WireStats) -> String {
+    let obs = fabric.obs();
     let mut j = fabric.snapshot().to_json();
     if let Json::Obj(m) = &mut j {
         m.insert("wire".to_string(), wstats.to_json());
+        m.insert("uptime_us".to_string(), Json::Num(obs.uptime_us()));
+        m.insert("snapshot_seq".to_string(), Json::Num(obs.next_seq() as f64));
+        m.insert("stages".to_string(), obs.stages_json());
     }
     j.to_string()
+}
+
+/// Longest flight-recorder dump a `tracedump` reply will carry.  128
+/// records keep the reply comfortably under the 64 KiB binary frame
+/// payload cap even with every stage mark populated.
+const TRACE_DUMP_LIMIT: usize = 128;
+
+/// The `tracedump` reply body (shared by the JSON `tracedump` command
+/// and the binary `TraceDump` verb): recent/outlier traces, per-stage
+/// latency summaries, and the full stats snapshot.
+fn trace_dump_json(fabric: &Fabric, wstats: &WireStats) -> String {
+    let obs = fabric.obs();
+    Json::obj(vec![
+        ("traces", obs.traces_json(TRACE_DUMP_LIMIT)),
+        ("stages", obs.stages_json()),
+        ("stats", Json::Raw(fabric_stats_json(fabric, wstats))),
+    ])
+    .to_string()
+}
+
+/// Prometheus text exposition of the current snapshot (the JSON
+/// protocol's `prometheus` command; `hrd top --prom` prints it).
+fn prometheus_text(fabric: &Fabric, wstats: &WireStats) -> String {
+    let obs = fabric.obs();
+    render_prometheus(
+        &fabric.snapshot(),
+        &obs.stage_lines(),
+        obs.uptime_us(),
+        obs.next_seq(),
+        Some(&wstats.line()),
+    )
 }
 
 // ---- the server --------------------------------------------------------
@@ -472,6 +526,8 @@ impl Server {
 
         // Inference loop (this thread owns the backend).
         let mut stats = ServerStats::default();
+        let started = Instant::now();
+        let mut snapshot_seq: u64 = 0;
         for (req, reply) in rx {
             match req {
                 Request::Infer { id, features, .. } => {
@@ -506,7 +562,28 @@ impl Server {
                     let _ = reply.send(Json::obj(vec![("ok", Json::Bool(true))]).to_string());
                 }
                 Request::Stats => {
-                    let _ = reply.send(stats.to_json().to_string());
+                    snapshot_seq += 1;
+                    let mut j = stats.to_json();
+                    if let Json::Obj(m) = &mut j {
+                        m.insert(
+                            "uptime_us".to_string(),
+                            Json::Num(started.elapsed().as_secs_f64() * 1e6),
+                        );
+                        m.insert("snapshot_seq".to_string(), Json::Num(snapshot_seq as f64));
+                    }
+                    let _ = reply.send(j.to_string());
+                }
+                Request::TraceDump | Request::Prometheus => {
+                    let _ = reply.send(
+                        Json::obj(vec![(
+                            "error",
+                            Json::Str(
+                                "tracedump/prometheus require the fabric server (serve-tcp)"
+                                    .to_string(),
+                            ),
+                        )])
+                        .to_string(),
+                    );
                 }
                 Request::Shutdown => {
                     shutdown.store(true, Ordering::SeqCst);
@@ -684,25 +761,35 @@ fn handle_fabric_json(
         if line.trim().is_empty() {
             continue;
         }
+        // Completion awaiting its final stage mark: `completion_written`
+        // is stamped AFTER the reply bytes hit the socket, so the span
+        // covers serialisation + the write syscall.
+        let mut observed: Option<Completion> = None;
         let response = match parse_request(&line) {
             Ok(Request::Infer { id, session, deadline_us, features }) => {
                 match json_session_hash(session.as_deref(), &conn) {
                     Err(e) => json_reply(vec![("error", Json::Str(e.to_string()))], id),
                     Ok(hash) => {
+                        let mut trace = fabric.obs().start_trace();
+                        trace.mark(Stage::WireDecoded);
                         let outcome = fabric
-                            .submit_hashed(hash, &features, deadline_us)
+                            .submit_hashed_traced(hash, &features, deadline_us, trace)
                             .and_then(|pending| pending.wait());
                         match outcome {
-                            Ok(c) => json_reply(
-                                vec![
-                                    ("estimate", Json::Num(c.estimate)),
-                                    ("latency_us", Json::Num(c.latency_us)),
-                                    ("deadline_miss", Json::Bool(c.deadline_missed)),
-                                    ("shard", Json::from(c.shard)),
-                                    ("lane", Json::from(c.lane)),
-                                ],
-                                id,
-                            ),
+                            Ok(c) => {
+                                let reply = json_reply(
+                                    vec![
+                                        ("estimate", Json::Num(c.estimate)),
+                                        ("latency_us", Json::Num(c.latency_us)),
+                                        ("deadline_miss", Json::Bool(c.deadline_missed)),
+                                        ("shard", Json::from(c.shard)),
+                                        ("lane", Json::from(c.lane)),
+                                    ],
+                                    id,
+                                );
+                                observed = Some(c);
+                                reply
+                            }
                             Err(e) => json_reply(
                                 vec![
                                     ("error", Json::Str(format!("{e:#}"))),
@@ -726,6 +813,14 @@ fn handle_fabric_json(
                 }
             }
             Ok(Request::Stats) => fabric_stats_json(&fabric, &wstats),
+            Ok(Request::TraceDump) => trace_dump_json(&fabric, &wstats),
+            Ok(Request::Prometheus) => {
+                Json::obj(vec![(
+                    "prometheus",
+                    Json::Str(prometheus_text(&fabric, &wstats)),
+                )])
+                .to_string()
+            }
             Ok(Request::Shutdown) => {
                 shutdown.store(true, Ordering::SeqCst);
                 Json::obj(vec![("ok", Json::Bool(true))]).to_string()
@@ -735,6 +830,17 @@ fn handle_fabric_json(
         writer.write_all(response.as_bytes())?;
         writer.write_all(b"\n")?;
         wstats.add_out(response.len() as u64 + 1, 1);
+        if let Some(mut c) = observed.take() {
+            c.trace.mark(Stage::CompletionWritten);
+            fabric.obs().observe_completion(
+                &c.trace,
+                c.shard,
+                c.lane,
+                c.session,
+                c.latency_us,
+                c.deadline_missed,
+            );
+        }
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
@@ -830,12 +936,25 @@ fn handle_fabric_binary(
                     Ok(s) => match hash_of(s.session) {
                         Err(e) => writer.send_error(s.seq, false, &e.to_string())?,
                         Ok(hash) => {
+                            let mut trace = fabric.obs().start_trace();
+                            trace.mark(Stage::WireDecoded);
                             let deadline = (s.deadline_us > 0.0).then_some(s.deadline_us);
                             let outcome = fabric
-                                .submit_hashed(hash, &s.window, deadline)
+                                .submit_hashed_traced(hash, &s.window, deadline, trace)
                                 .and_then(|pending| pending.wait());
                             match outcome {
-                                Ok(c) => writer.send_completion(&completion_rec(s.seq, &c))?,
+                                Ok(mut c) => {
+                                    writer.send_completion(&completion_rec(s.seq, &c))?;
+                                    c.trace.mark(Stage::CompletionWritten);
+                                    fabric.obs().observe_completion(
+                                        &c.trace,
+                                        c.shard,
+                                        c.lane,
+                                        c.session,
+                                        c.latency_us,
+                                        c.deadline_missed,
+                                    );
+                                }
                                 Err(e) => writer.send_error(s.seq, true, &format!("{e:#}"))?,
                             }
                         }
@@ -859,14 +978,29 @@ fn handle_fabric_binary(
                                 .map(|i| fabric.submit_hashed(hash, &b.window(i), deadline))
                                 .collect();
                             let mut recs = Vec::with_capacity(b.count);
+                            let mut done = Vec::with_capacity(b.count);
                             for (i, pending) in pendings.into_iter().enumerate() {
                                 let seq = b.base_seq.wrapping_add(i as u64);
                                 match pending.and_then(|p| p.wait()) {
-                                    Ok(c) => recs.push(completion_rec(seq, &c)),
+                                    Ok(c) => {
+                                        recs.push(completion_rec(seq, &c));
+                                        done.push(c);
+                                    }
                                     Err(_) => recs.push(CompletionRec::shed(seq)),
                                 }
                             }
                             writer.send_completion_batch(&recs)?;
+                            for mut c in done {
+                                c.trace.mark(Stage::CompletionWritten);
+                                fabric.obs().observe_completion(
+                                    &c.trace,
+                                    c.shard,
+                                    c.lane,
+                                    c.session,
+                                    c.latency_us,
+                                    c.deadline_missed,
+                                );
+                            }
                         }
                     },
                 }
@@ -884,6 +1018,10 @@ fn handle_fabric_binary(
             Recv::Frame(FrameType::Stats, _) => {
                 flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
                 writer.send_stats_json(&fabric_stats_json(&fabric, &wstats))?;
+            }
+            Recv::Frame(FrameType::TraceDump, _) => {
+                flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
+                writer.send_trace_json(&trace_dump_json(&fabric, &wstats))?;
             }
             Recv::Frame(FrameType::Shutdown, _) => {
                 shutdown.store(true, Ordering::SeqCst);
@@ -940,6 +1078,8 @@ enum V2Out {
     /// Render and send a stats reply (the pump flushes its own write
     /// counters first so the reply sees them).
     Stats,
+    /// Render and send a flight-recorder dump reply.
+    TraceDump,
     /// An error frame; `refund` credits are returned after writing (a
     /// submit that failed validation after its credit was taken).
     Err { seq: u64, shed: bool, msg: String, refund: u32 },
@@ -1005,6 +1145,17 @@ fn run_binary_v2(
                             Err(_) => CompletionRec::shed(seq),
                         };
                         let _ = writer.send_completion(&rec);
+                        if let Ok(mut c) = result {
+                            c.trace.mark(Stage::CompletionWritten);
+                            fabric.obs().observe_completion(
+                                &c.trace,
+                                c.shard,
+                                c.lane,
+                                c.session,
+                                c.latency_us,
+                                c.deadline_missed,
+                            );
+                        }
                         1
                     }
                     V2Out::HelloAck(v, w) => {
@@ -1020,6 +1171,13 @@ fn run_binary_v2(
                         wstats.add_out(bo - out_mark.0, fo - out_mark.1);
                         out_mark = (bo, fo);
                         let _ = writer.send_stats_json(&fabric_stats_json(&fabric, &wstats));
+                        0
+                    }
+                    V2Out::TraceDump => {
+                        let (bo, fo) = (writer.bytes_out(), writer.frames_out());
+                        wstats.add_out(bo - out_mark.0, fo - out_mark.1);
+                        out_mark = (bo, fo);
+                        let _ = writer.send_trace_json(&trace_dump_json(&fabric, &wstats));
                         0
                     }
                     V2Out::Err { seq, shed, msg, refund } => {
@@ -1240,6 +1398,12 @@ fn run_binary_v2(
                     in_mark = (bi, fi);
                     let _ = out_tx.send(V2Out::Stats);
                 }
+                Recv::Frame(FrameType::TraceDump, _) => {
+                    let (bi, fi) = (reader.bytes_in(), reader.frames_in());
+                    wstats.add_in(bi - in_mark.0, fi - in_mark.1);
+                    in_mark = (bi, fi);
+                    let _ = out_tx.send(V2Out::TraceDump);
+                }
                 Recv::Frame(FrameType::Shutdown, _) => {
                     shutdown.store(true, Ordering::SeqCst);
                     let _ = out_tx.send(V2Out::Ok);
@@ -1395,6 +1559,22 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.round_trip(r#"{"cmd":"stats"}"#)
+    }
+
+    /// Flight-recorder dump: `{"traces": [...], "stages": {...},
+    /// "stats": {...}}` (fabric servers only).
+    pub fn trace_dump(&mut self) -> Result<Json> {
+        self.round_trip(r#"{"cmd":"tracedump"}"#)
+    }
+
+    /// Prometheus text exposition of the stats snapshot (fabric
+    /// servers only); returns the unwrapped text body.
+    pub fn prometheus(&mut self) -> Result<String> {
+        let json = self.round_trip(r#"{"cmd":"prometheus"}"#)?;
+        match json.get("prometheus") {
+            Some(Json::Str(s)) => Ok(s.clone()),
+            _ => anyhow::bail!("malformed prometheus reply"),
+        }
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
@@ -1662,6 +1842,64 @@ mod tests {
         a.shutdown().unwrap();
         let snap = handle.join().unwrap();
         assert_eq!(snap.completed, 4);
+    }
+
+    /// The introspection plane end to end over both protocols: with
+    /// 1-in-1 sampling, `tracedump` returns every request's trace with
+    /// monotonic, fully stamped marks; `prometheus` renders the
+    /// exposition; stats replies carry `uptime_us` and a monotonic
+    /// `snapshot_seq`.
+    #[test]
+    fn introspection_plane_serves_traces_and_prometheus() {
+        use crate::wire::WireClient;
+        let params = LstmParams::init(16, 15, 3, 1, 5);
+        let mut fcfg = FabricConfig::new(2, 4);
+        fcfg.obs.sample_every = 1;
+        let fabric = Arc::new(Fabric::new(&params, fcfg).unwrap());
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || server.run_fabric(fabric).unwrap())
+        };
+        let mut c = Client::with_session(&addr.to_string(), "rig-t").unwrap();
+        let w = [1.0f32; INPUT_SIZE];
+        for _ in 0..3 {
+            c.infer_full(&w, None).unwrap();
+        }
+        let s1 = c.stats().unwrap();
+        assert!(s1.get("uptime_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(s1.get("stages").is_some());
+        let q1 = s1.get("snapshot_seq").unwrap().as_f64().unwrap();
+        let q2 = c.stats().unwrap().get("snapshot_seq").unwrap().as_f64().unwrap();
+        assert!(q2 > q1, "snapshot_seq must advance: {q1} -> {q2}");
+        let dump = c.trace_dump().unwrap();
+        let traces = dump.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 3);
+        for t in traces {
+            let ns: Vec<f64> = t
+                .get("marks_ns")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|m| m.as_f64().unwrap())
+                .collect();
+            assert_eq!(ns.len(), crate::obs::N_STAGES);
+            assert!(ns.windows(2).all(|p| p[0] <= p[1]), "{ns:?}");
+            assert!(*ns.last().unwrap() > 0.0, "completion_written must be stamped");
+        }
+        assert!(dump.get("stats").unwrap().get("inferred").is_some());
+        let prom = c.prometheus().unwrap();
+        assert!(prom.contains("hrd_requests_completed_total 3"), "{prom}");
+        assert!(prom.contains("hrd_stage_spans_total{stage=\"kernel\"} 3"), "{prom}");
+        // The binary TraceDump verb (0x08) serves the same dump shape.
+        let mut b = WireClient::with_session(&addr.to_string(), "rig-b").unwrap();
+        b.infer_full(&w, None).unwrap();
+        let bd = b.trace_dump().unwrap();
+        assert_eq!(bd.get("traces").unwrap().as_arr().unwrap().len(), 4);
+        b.shutdown().unwrap();
+        handle.join().unwrap();
     }
 
     /// One fabric server, both protocols concurrently: a JSON client

@@ -4,7 +4,12 @@
 //!
 //! This is how cross-backend regressions are caught offline: the virtual
 //! testbed is seeded but *physics code changes move the data*; a trace
-//! pins the exact byte-level workload.  Format (`HRDT`, little-endian):
+//! pins the exact byte-level workload.
+//!
+//! Not to be confused with *request* tracing: [`crate::obs::ReqTrace`]
+//! stamps per-request stage timings inside the serving fabric (`hrd
+//! trace` inspects those).  A [`Trace`] here is a recorded *workload*.
+//! Format (`HRDT`, little-endian):
 //!
 //! ```text
 //! magic "HRDT" | version u32 | n_steps u32 | seed u64 |

@@ -80,6 +80,12 @@
 //!   and completion frames, and [`wire::WireClient`].  The TCP
 //!   front-end auto-detects it per connection; legacy JSON stays fully
 //!   supported.
+//! * [`obs`] — the observability plane (`docs/OBSERVABILITY.md`):
+//!   per-request stage tracing ([`obs::ReqTrace`] stamped from wire
+//!   decode to completion write), the sampled flight recorder, the
+//!   unified metrics [`obs::Registry`] (per-stage histograms +
+//!   Prometheus text exposition), and the `TraceDump` introspection
+//!   verb behind `hrd top` / `hrd trace`.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (stubbed unless
 //!   built with the `xla-runtime` feature), manifest parsing.
 //! * [`beam`] — the Euler-Bernoulli beam physics substrate and virtual
@@ -102,6 +108,7 @@ pub mod fixed;
 pub mod fpga;
 pub mod kernel;
 pub mod lstm;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod testutil;

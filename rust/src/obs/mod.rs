@@ -1,0 +1,31 @@
+//! `obs::` — the observability plane: per-request stage tracing, the
+//! flight recorder, and the unified metrics registry.
+//!
+//! The paper's contribution is a latency *breakdown* — microseconds
+//! attributed to each pipeline stage.  This module gives the serving
+//! stack the same lens: every request carries a [`ReqTrace`] stamped at
+//! fixed [`Stage`] marks (`wire_decoded -> admitted -> queued ->
+//! gathered -> kernel_start -> kernel_done -> completion_written`), the
+//! fabric's [`Registry`] folds completed traces into per-stage
+//! histograms and a 1-in-N sampled [`Recorder`] ring (outliers always
+//! recorded), and the `TraceDump` wire verb + `hrd top` / `hrd trace`
+//! expose it all live.  See `docs/OBSERVABILITY.md` for the metric
+//! catalogue and semantics.
+//!
+//! Layering: `wire`/`coordinator::server` create and deliver traces,
+//! `sched` stamps the queue/batch/kernel marks.  Tracing is
+//! paid-for-only-if-used — with `ObsConfig::sample_every == 0` every
+//! request carries an inert trace and no clock is read.
+//!
+//! Naming note: [`crate::coordinator::trace`] records/replays whole
+//! *workloads* (HRDT files); this module traces individual *requests*.
+
+mod prom;
+mod recorder;
+mod registry;
+mod trace;
+
+pub use prom::{render_prometheus, WireLine};
+pub use recorder::{Recorder, TraceRec};
+pub use registry::{trace_rec_json, ObsConfig, Registry, StageLine};
+pub use trace::{ReqTrace, Stage, N_SPANS, N_STAGES, SPAN_NAMES};

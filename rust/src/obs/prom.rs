@@ -1,0 +1,261 @@
+//! Prometheus-style text exposition of the unified metrics snapshot.
+//!
+//! Renders a [`crate::sched::SchedSnapshot`] + the registry's stage
+//! summaries (+ optional wire traffic totals) as the classic
+//! `# HELP` / `# TYPE` text format with stable metric names.  The exact
+//! output shape is pinned by a golden test below — renaming a metric is
+//! a breaking change for scrapers and must be deliberate.
+
+use std::fmt::Write as _;
+
+use crate::sched::SchedSnapshot;
+
+use super::registry::StageLine;
+
+/// Wire traffic totals (the binary framing layer's counters).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireLine {
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+}
+
+/// Format a value the way the stats JSON does: integral values print
+/// without a decimal point, everything else as shortest-roundtrip f64.
+fn num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn head(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render the full exposition.  Metric names and label sets are stable;
+/// see `docs/OBSERVABILITY.md` for the catalogue.
+pub fn render_prometheus(
+    sched: &SchedSnapshot,
+    stages: &[StageLine],
+    uptime_us: u64,
+    snapshot_seq: u64,
+    wire: Option<&WireLine>,
+) -> String {
+    let mut o = String::with_capacity(4096);
+    head(&mut o, "hrd_uptime_seconds", "gauge", "Seconds since the serving fabric came up.");
+    let _ = writeln!(o, "hrd_uptime_seconds {}", num(uptime_us as f64 / 1e6));
+    head(&mut o, "hrd_snapshot_seq", "counter", "Monotonic snapshot sequence number.");
+    let _ = writeln!(o, "hrd_snapshot_seq {snapshot_seq}");
+
+    for (name, help, v) in [
+        ("hrd_requests_submitted_total", "Requests submitted to the fabric.", sched.submitted),
+        ("hrd_requests_completed_total", "Requests completed.", sched.completed),
+        ("hrd_requests_shed_total", "Requests shed by admission control.", sched.shed),
+        ("hrd_deadline_misses_total", "Completions after their deadline.", sched.deadline_misses),
+        (
+            "hrd_watchdog_patched_total",
+            "Estimates patched by a lane watchdog.",
+            sched.watchdog_patched,
+        ),
+        (
+            "hrd_watchdog_resets_total",
+            "Lane state resets requested by a watchdog.",
+            sched.watchdog_resets,
+        ),
+        (
+            "hrd_steal_requests_total",
+            "Steal requests issued by idle shards.",
+            sched.steal_requests,
+        ),
+        (
+            "hrd_steals_declined_total",
+            "Steal requests declined by the hot shard.",
+            sched.steals_declined,
+        ),
+        ("hrd_migrations_total", "Sessions migrated between shards.", sched.migrations),
+    ] {
+        head(&mut o, name, "counter", help);
+        let _ = writeln!(o, "{name} {v}");
+    }
+
+    head(
+        &mut o,
+        "hrd_request_latency_microseconds",
+        "summary",
+        "End-to-end serving latency quantiles.",
+    );
+    for (q, v) in [("0.5", sched.p50_us), ("0.99", sched.p99_us), ("0.999", sched.p999_us)] {
+        let _ = writeln!(o, "hrd_request_latency_microseconds{{quantile=\"{q}\"}} {}", num(v));
+    }
+
+    head(
+        &mut o,
+        "hrd_stage_latency_microseconds",
+        "summary",
+        "Per-stage span latency quantiles (see docs/OBSERVABILITY.md).",
+    );
+    for s in stages {
+        for (q, v) in [("0.5", s.p50_us), ("0.99", s.p99_us)] {
+            let _ = writeln!(
+                o,
+                "hrd_stage_latency_microseconds{{stage=\"{}\",quantile=\"{q}\"}} {}",
+                s.name,
+                num(v)
+            );
+        }
+    }
+    head(&mut o, "hrd_stage_spans_total", "counter", "Spans recorded per stage.");
+    for s in stages {
+        let _ = writeln!(o, "hrd_stage_spans_total{{stage=\"{}\"}} {}", s.name, s.count);
+    }
+
+    head(&mut o, "hrd_shard_completed_total", "counter", "Requests completed per shard.");
+    for (i, sh) in sched.shards.iter().enumerate() {
+        let _ = writeln!(o, "hrd_shard_completed_total{{shard=\"{i}\"}} {}", sh.completed);
+    }
+    head(&mut o, "hrd_shard_occupancy", "gauge", "Resident sessions per shard.");
+    for (i, sh) in sched.shards.iter().enumerate() {
+        let _ = writeln!(o, "hrd_shard_occupancy{{shard=\"{i}\"}} {}", sh.occupancy);
+    }
+    head(&mut o, "hrd_shard_queue_len", "gauge", "Queued jobs per shard.");
+    for (i, sh) in sched.shards.iter().enumerate() {
+        let _ = writeln!(o, "hrd_shard_queue_len{{shard=\"{i}\"}} {}", sh.queue_len);
+    }
+
+    if let Some(w) = wire {
+        head(&mut o, "hrd_wire_bytes_total", "counter", "Wire bytes moved.");
+        let _ = writeln!(o, "hrd_wire_bytes_total{{direction=\"in\"}} {}", w.bytes_in);
+        let _ = writeln!(o, "hrd_wire_bytes_total{{direction=\"out\"}} {}", w.bytes_out);
+        head(&mut o, "hrd_wire_frames_total", "counter", "Wire frames moved.");
+        let _ = writeln!(o, "hrd_wire_frames_total{{direction=\"in\"}} {}", w.frames_in);
+        let _ = writeln!(o, "hrd_wire_frames_total{{direction=\"out\"}} {}", w.frames_out);
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{SchedSnapshot, ShardSnapshot};
+
+    fn snap() -> SchedSnapshot {
+        SchedSnapshot {
+            submitted: 12,
+            completed: 10,
+            shed: 2,
+            deadline_misses: 1,
+            watchdog_patched: 0,
+            watchdog_resets: 0,
+            steal_requests: 3,
+            steals_declined: 1,
+            migrations: 2,
+            p50_us: 42.5,
+            p99_us: 130.0,
+            p999_us: 250.0,
+            miss_rate: 0.1,
+            shards: vec![ShardSnapshot {
+                completed: 10,
+                batches: 5,
+                evictions: 0,
+                exported: 1,
+                adopted: 1,
+                avg_batch_fill: 2.0,
+                occupancy: 3,
+                queue_len: 4,
+            }],
+        }
+    }
+
+    /// The golden: every metric name, label, and line order is pinned.
+    /// A diff here means a scraper-visible break — rename deliberately
+    /// and update docs/OBSERVABILITY.md.
+    #[test]
+    fn exposition_golden() {
+        let stages = vec![
+            StageLine { name: "admit", count: 7, p50_us: 0.5, p99_us: 1.25 },
+            StageLine { name: "kernel", count: 7, p50_us: 20.0, p99_us: 55.5 },
+        ];
+        let wire = WireLine { bytes_in: 100, bytes_out: 200, frames_in: 3, frames_out: 4 };
+        let got = render_prometheus(&snap(), &stages, 1_500_000, 9, Some(&wire));
+        let want = "\
+# HELP hrd_uptime_seconds Seconds since the serving fabric came up.
+# TYPE hrd_uptime_seconds gauge
+hrd_uptime_seconds 1.5
+# HELP hrd_snapshot_seq Monotonic snapshot sequence number.
+# TYPE hrd_snapshot_seq counter
+hrd_snapshot_seq 9
+# HELP hrd_requests_submitted_total Requests submitted to the fabric.
+# TYPE hrd_requests_submitted_total counter
+hrd_requests_submitted_total 12
+# HELP hrd_requests_completed_total Requests completed.
+# TYPE hrd_requests_completed_total counter
+hrd_requests_completed_total 10
+# HELP hrd_requests_shed_total Requests shed by admission control.
+# TYPE hrd_requests_shed_total counter
+hrd_requests_shed_total 2
+# HELP hrd_deadline_misses_total Completions after their deadline.
+# TYPE hrd_deadline_misses_total counter
+hrd_deadline_misses_total 1
+# HELP hrd_watchdog_patched_total Estimates patched by a lane watchdog.
+# TYPE hrd_watchdog_patched_total counter
+hrd_watchdog_patched_total 0
+# HELP hrd_watchdog_resets_total Lane state resets requested by a watchdog.
+# TYPE hrd_watchdog_resets_total counter
+hrd_watchdog_resets_total 0
+# HELP hrd_steal_requests_total Steal requests issued by idle shards.
+# TYPE hrd_steal_requests_total counter
+hrd_steal_requests_total 3
+# HELP hrd_steals_declined_total Steal requests declined by the hot shard.
+# TYPE hrd_steals_declined_total counter
+hrd_steals_declined_total 1
+# HELP hrd_migrations_total Sessions migrated between shards.
+# TYPE hrd_migrations_total counter
+hrd_migrations_total 2
+# HELP hrd_request_latency_microseconds End-to-end serving latency quantiles.
+# TYPE hrd_request_latency_microseconds summary
+hrd_request_latency_microseconds{quantile=\"0.5\"} 42.5
+hrd_request_latency_microseconds{quantile=\"0.99\"} 130
+hrd_request_latency_microseconds{quantile=\"0.999\"} 250
+# HELP hrd_stage_latency_microseconds Per-stage span latency quantiles (see docs/OBSERVABILITY.md).
+# TYPE hrd_stage_latency_microseconds summary
+hrd_stage_latency_microseconds{stage=\"admit\",quantile=\"0.5\"} 0.5
+hrd_stage_latency_microseconds{stage=\"admit\",quantile=\"0.99\"} 1.25
+hrd_stage_latency_microseconds{stage=\"kernel\",quantile=\"0.5\"} 20
+hrd_stage_latency_microseconds{stage=\"kernel\",quantile=\"0.99\"} 55.5
+# HELP hrd_stage_spans_total Spans recorded per stage.
+# TYPE hrd_stage_spans_total counter
+hrd_stage_spans_total{stage=\"admit\"} 7
+hrd_stage_spans_total{stage=\"kernel\"} 7
+# HELP hrd_shard_completed_total Requests completed per shard.
+# TYPE hrd_shard_completed_total counter
+hrd_shard_completed_total{shard=\"0\"} 10
+# HELP hrd_shard_occupancy Resident sessions per shard.
+# TYPE hrd_shard_occupancy gauge
+hrd_shard_occupancy{shard=\"0\"} 3
+# HELP hrd_shard_queue_len Queued jobs per shard.
+# TYPE hrd_shard_queue_len gauge
+hrd_shard_queue_len{shard=\"0\"} 4
+# HELP hrd_wire_bytes_total Wire bytes moved.
+# TYPE hrd_wire_bytes_total counter
+hrd_wire_bytes_total{direction=\"in\"} 100
+hrd_wire_bytes_total{direction=\"out\"} 200
+# HELP hrd_wire_frames_total Wire frames moved.
+# TYPE hrd_wire_frames_total counter
+hrd_wire_frames_total{direction=\"in\"} 3
+hrd_wire_frames_total{direction=\"out\"} 4
+";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn wire_section_is_optional() {
+        let got = render_prometheus(&snap(), &[], 0, 1, None);
+        assert!(!got.contains("hrd_wire_"));
+        assert!(got.contains("hrd_uptime_seconds 0\n"));
+        assert!(got.ends_with('\n'));
+    }
+}

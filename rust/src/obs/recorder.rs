@@ -1,0 +1,219 @@
+//! The flight recorder: fixed-capacity, overwrite-oldest ring buffers
+//! holding the most recently completed (sampled or outlier) request
+//! traces, one ring per shard so writers never contend across shards.
+//!
+//! Writers are shard workers / connection handlers on the completion
+//! path — they must never block and never allocate.  Each slot is a
+//! seqlock: the version word is odd while a writer is inside, and a
+//! writer that loses the version CAS simply drops its sample (a
+//! sampling recorder may shed samples, never stall the serving path).
+//! Readers (the `TraceDump` verb) retry or skip torn slots.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::trace::N_STAGES;
+
+/// One completed request's recorded trace (fixed-size, `Copy` — the
+/// seqlock copies it in and out wholesale).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TraceRec {
+    /// Stable session hash of the request.
+    pub session: u64,
+    /// Shard that served it.
+    pub shard: u16,
+    /// Kernel lane within the shard.
+    pub lane: u16,
+    /// End-to-end latency as accounted by the fabric (enqueue to pass
+    /// completion), microseconds.
+    pub latency_us: f64,
+    pub deadline_miss: bool,
+    /// Registry uptime when the trace was recorded, microseconds —
+    /// orders records across shards.
+    pub at_us: u64,
+    /// Stage mark offsets (ns since wire decode); see
+    /// [`super::trace::Stage`].
+    pub marks_ns: [u32; N_STAGES],
+}
+
+struct Slot {
+    /// Even: stable.  Odd: a writer is inside.  Monotonic.
+    version: AtomicU64,
+    rec: UnsafeCell<TraceRec>,
+}
+
+// SAFETY: `rec` is only written between a successful even->odd version
+// CAS and the closing even store; readers validate the version word
+// around a volatile copy and discard torn reads.  This is the classic
+// seqlock publication protocol.
+unsafe impl Sync for Slot {}
+
+/// One shard's overwrite-oldest ring.
+struct Ring {
+    slots: Vec<Slot>,
+    /// Next write index (monotonic; slot = head % capacity).
+    head: AtomicU64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Self {
+        Self {
+            slots: (0..capacity.max(1))
+                .map(|_| Slot {
+                    version: AtomicU64::new(0),
+                    rec: UnsafeCell::new(TraceRec::default()),
+                })
+                .collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, rec: TraceRec) {
+        let i = (self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64) as usize;
+        let slot = &self.slots[i];
+        let v = slot.version.load(Ordering::Acquire);
+        if v % 2 == 1 {
+            return; // another writer is inside — drop the sample
+        }
+        if slot
+            .version
+            .compare_exchange(v, v + 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // lost the race — drop the sample
+        }
+        // SAFETY: the odd version claims exclusive write access.
+        unsafe { std::ptr::write_volatile(slot.rec.get(), rec) };
+        slot.version.store(v + 2, Ordering::Release);
+    }
+
+    /// Copy out every stable record (unwritten slots — version 0 — are
+    /// skipped).  Torn slots get a bounded retry, then are skipped.
+    fn read_into(&self, out: &mut Vec<TraceRec>) {
+        for slot in &self.slots {
+            for _ in 0..4 {
+                let v1 = slot.version.load(Ordering::Acquire);
+                if v1 == 0 {
+                    break; // never written
+                }
+                if v1 % 2 == 1 {
+                    continue; // writer inside — retry
+                }
+                // SAFETY: racy read, validated by the version recheck.
+                let rec = unsafe { std::ptr::read_volatile(slot.rec.get()) };
+                if slot.version.load(Ordering::Acquire) == v1 {
+                    out.push(rec);
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Per-shard seqlock rings behind one handle.
+pub struct Recorder {
+    rings: Vec<Ring>,
+}
+
+impl Recorder {
+    /// `shards` rings of `capacity` slots each (at least one ring, at
+    /// least one slot — a zero-size recorder would make `push` a
+    /// modulo-by-zero).
+    pub fn new(shards: usize, capacity: usize) -> Self {
+        Self { rings: (0..shards.max(1)).map(|_| Ring::new(capacity)).collect() }
+    }
+
+    /// Record one completed trace on `shard`'s ring (out-of-range
+    /// shards land on ring 0 — never panic on the completion path).
+    pub fn push(&self, shard: usize, rec: TraceRec) {
+        self.rings[if shard < self.rings.len() { shard } else { 0 }].push(rec);
+    }
+
+    /// Snapshot every stable record across all rings, oldest first
+    /// (ordered by `at_us`).
+    pub fn dump(&self) -> Vec<TraceRec> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            ring.read_into(&mut out);
+        }
+        out.sort_by_key(|r| r.at_us);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(session: u64, at_us: u64) -> TraceRec {
+        TraceRec { session, at_us, latency_us: at_us as f64, ..TraceRec::default() }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_at_capacity() {
+        let r = Recorder::new(1, 4);
+        for k in 0..10u64 {
+            r.push(0, rec(k, k));
+        }
+        let got = r.dump();
+        assert_eq!(got.len(), 4);
+        let sessions: Vec<u64> = got.iter().map(|t| t.session).collect();
+        assert_eq!(sessions, vec![6, 7, 8, 9], "only the newest survive");
+    }
+
+    #[test]
+    fn dump_merges_shards_in_time_order() {
+        let r = Recorder::new(3, 8);
+        r.push(2, rec(20, 5));
+        r.push(0, rec(1, 1));
+        r.push(1, rec(10, 3));
+        r.push(7, rec(99, 4)); // out-of-range shard -> ring 0, not a panic
+        let got = r.dump();
+        let at: Vec<u64> = got.iter().map(|t| t.at_us).collect();
+        assert_eq!(at, vec![1, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_recorder_dumps_nothing() {
+        assert!(Recorder::new(2, 16).dump().is_empty());
+    }
+
+    #[test]
+    fn concurrent_writers_and_readers_stay_coherent() {
+        use std::sync::Arc;
+        let r = Arc::new(Recorder::new(2, 32));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let r = r.clone();
+            joins.push(std::thread::spawn(move || {
+                for k in 0..2_000u64 {
+                    // Tie every field to the session tag so a torn read
+                    // is detectable below.
+                    let tag = t * 1_000_000 + k;
+                    r.push(
+                        (t % 2) as usize,
+                        TraceRec {
+                            session: tag,
+                            at_us: tag,
+                            latency_us: tag as f64,
+                            ..TraceRec::default()
+                        },
+                    );
+                }
+            }));
+        }
+        // Reader races the writers.
+        for _ in 0..50 {
+            for t in r.dump() {
+                assert_eq!(t.session, t.at_us, "torn record escaped the seqlock");
+                assert_eq!(t.latency_us, t.at_us as f64);
+            }
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let final_dump = r.dump();
+        assert!(!final_dump.is_empty());
+        assert!(final_dump.len() <= 64, "bounded by total ring capacity");
+    }
+}

@@ -1,0 +1,324 @@
+//! The unified metrics registry: per-stage latency histograms, the
+//! 1-in-N trace sampler, and the flight recorder, behind one handle
+//! owned by the fabric.
+//!
+//! The registry is the single aggregation point the introspection plane
+//! reads: `{"cmd":"stats"}` JSON gains `uptime_us` / `snapshot_seq` /
+//! `stages` from here, the `TraceDump` verb serializes
+//! [`Registry::traces_json`] + [`Registry::stages_json`], and the
+//! Prometheus exposition ([`super::prom`]) renders a
+//! [`crate::sched::SchedSnapshot`] together with [`Registry::stage_lines`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::sched::AtomicHist;
+use crate::util::Json;
+
+use super::recorder::{Recorder, TraceRec};
+use super::trace::{ReqTrace, Stage, N_SPANS, N_STAGES, SPAN_NAMES};
+
+/// Tracing/recording knobs (part of `FabricConfig`).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Publish every Nth completed trace to the flight recorder;
+    /// `0` disables tracing entirely (requests carry an inert
+    /// [`ReqTrace`] and no clock is ever read).  `1` traces and records
+    /// everything.
+    pub sample_every: u32,
+    /// Flight-recorder slots per shard.
+    pub ring_capacity: usize,
+    /// Completions at or above this latency are always recorded,
+    /// sampler or not — the ring must answer "what did the slow ones
+    /// do".
+    pub outlier_us: f64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { sample_every: 0, ring_capacity: 256, outlier_us: 5_000.0 }
+    }
+}
+
+/// One stage span's summary (for the Prometheus exposition and `hrd
+/// top`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageLine {
+    pub name: &'static str,
+    pub count: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// The fabric's observability registry.
+pub struct Registry {
+    cfg: ObsConfig,
+    started: Instant,
+    /// Bumped on every stats/tracedump render — pollers detect restarts
+    /// (seq going backwards) and compute rates from deltas.
+    seq: AtomicU64,
+    /// Round-robin sampler state.
+    ctr: AtomicU64,
+    /// One histogram per consecutive-mark span ([`SPAN_NAMES`] order).
+    spans: Vec<AtomicHist>,
+    recorder: Recorder,
+}
+
+impl Registry {
+    pub fn new(cfg: ObsConfig, shards: usize) -> Self {
+        Self {
+            started: Instant::now(),
+            seq: AtomicU64::new(0),
+            ctr: AtomicU64::new(0),
+            // Finer floor than the serving-latency default: stage spans
+            // (enqueue, gather) are routinely sub-microsecond.
+            spans: (0..N_SPANS).map(|_| AtomicHist::new(0.05, 1e7, 512)).collect(),
+            recorder: Recorder::new(shards, cfg.ring_capacity),
+            cfg,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.sample_every > 0
+    }
+
+    pub fn config(&self) -> &ObsConfig {
+        &self.cfg
+    }
+
+    /// Microseconds since the registry (== fabric) came up.
+    pub fn uptime_us(&self) -> u64 {
+        self.started.elapsed().as_micros() as u64
+    }
+
+    /// Monotonic snapshot sequence; call once per rendered snapshot.
+    pub fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// A trace for a new request: inert when tracing is off, armed (and
+    /// 1-in-N sampled) when on.  Every armed trace feeds the stage
+    /// histograms; only sampled or outlier traces reach the ring.
+    #[inline]
+    pub fn start_trace(&self) -> ReqTrace {
+        let n = self.cfg.sample_every;
+        if n == 0 {
+            return ReqTrace::disarmed();
+        }
+        let sampled = self.ctr.fetch_add(1, Ordering::Relaxed) % n as u64 == 0;
+        ReqTrace::armed(sampled)
+    }
+
+    /// Fold one completed request into the registry: stage spans into
+    /// the histograms, and — for sampled or outlier traces — a record
+    /// into the flight recorder.  The caller stamps
+    /// [`Stage::CompletionWritten`] (or not, for fabric-direct callers)
+    /// before handing the trace in.
+    pub fn observe_completion(
+        &self,
+        trace: &ReqTrace,
+        shard: usize,
+        lane: usize,
+        session: u64,
+        latency_us: f64,
+        deadline_miss: bool,
+    ) {
+        if !trace.is_armed() {
+            return;
+        }
+        let marks = trace.marks_ns();
+        for i in 1..N_STAGES {
+            if marks[i] == 0 {
+                continue; // stage never reached (e.g. no delivery mark)
+            }
+            let span_ns = marks[i].saturating_sub(marks[i - 1]);
+            self.spans[i - 1].record(span_ns as f64 / 1_000.0);
+        }
+        if trace.is_sampled() || latency_us >= self.cfg.outlier_us {
+            self.recorder.push(
+                shard,
+                TraceRec {
+                    session,
+                    shard: shard.min(u16::MAX as usize) as u16,
+                    lane: lane.min(u16::MAX as usize) as u16,
+                    latency_us,
+                    deadline_miss,
+                    at_us: self.uptime_us(),
+                    marks_ns: marks,
+                },
+            );
+        }
+    }
+
+    /// Per-span summaries in [`SPAN_NAMES`] order.
+    pub fn stage_lines(&self) -> Vec<StageLine> {
+        SPAN_NAMES
+            .iter()
+            .zip(&self.spans)
+            .map(|(name, h)| StageLine {
+                name,
+                count: h.total(),
+                p50_us: h.quantile(0.50),
+                p99_us: h.quantile(0.99),
+            })
+            .collect()
+    }
+
+    /// `{"admit": {"count":..,"p50_us":..,"p99_us":..}, ...}` — merged
+    /// into the stats JSON and the TraceDump reply.
+    pub fn stages_json(&self) -> Json {
+        Json::obj(
+            self.stage_lines()
+                .iter()
+                .map(|l| {
+                    (
+                        l.name,
+                        Json::obj(vec![
+                            ("count", Json::from(l.count as f64)),
+                            ("p50_us", Json::from(l.p50_us)),
+                            ("p99_us", Json::from(l.p99_us)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Snapshot the flight recorder, oldest first.
+    pub fn dump(&self) -> Vec<TraceRec> {
+        self.recorder.dump()
+    }
+
+    /// The newest `limit` recorded traces as a JSON array (oldest of
+    /// the kept set first).  Bounded so the TraceDump reply always fits
+    /// a wire frame.
+    pub fn traces_json(&self, limit: usize) -> Json {
+        let mut recs = self.recorder.dump();
+        if recs.len() > limit {
+            recs.drain(..recs.len() - limit);
+        }
+        Json::Arr(recs.iter().map(trace_rec_json).collect())
+    }
+}
+
+/// One recorded trace as JSON.  The session hash is a hex *string*:
+/// u64 survives neither f64 nor this parser's number path.
+pub fn trace_rec_json(r: &TraceRec) -> Json {
+    Json::obj(vec![
+        ("session", Json::Str(format!("{:016x}", r.session))),
+        ("shard", Json::from(r.shard as f64)),
+        ("lane", Json::from(r.lane as f64)),
+        ("latency_us", Json::from(r.latency_us)),
+        ("deadline_miss", Json::from(r.deadline_miss)),
+        ("at_us", Json::from(r.at_us as f64)),
+        (
+            "marks_ns",
+            Json::Arr(r.marks_ns.iter().map(|&m| Json::from(m as f64)).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traced(marks_us: [u64; N_STAGES]) -> ReqTrace {
+        // Build an armed trace whose marks approximate the given
+        // microsecond offsets by spinning the clock forward.
+        let mut t = ReqTrace::armed(true);
+        let t0 = Instant::now();
+        for (i, &target) in marks_us.iter().enumerate() {
+            while (t0.elapsed().as_micros() as u64) < target {
+                std::hint::spin_loop();
+            }
+            t.mark(Stage::ALL[i]);
+        }
+        t
+    }
+
+    #[test]
+    fn disabled_registry_hands_out_inert_traces() {
+        let r = Registry::new(ObsConfig::default(), 2);
+        assert!(!r.enabled());
+        let t = r.start_trace();
+        assert!(!t.is_armed());
+        r.observe_completion(&t, 0, 0, 7, 100.0, false);
+        assert!(r.dump().is_empty());
+        assert!(r.stage_lines().iter().all(|l| l.count == 0));
+    }
+
+    #[test]
+    fn sampler_selects_one_in_n() {
+        let cfg = ObsConfig { sample_every: 4, ..ObsConfig::default() };
+        let r = Registry::new(cfg, 1);
+        let sampled = (0..40).filter(|_| r.start_trace().is_sampled()).count();
+        assert_eq!(sampled, 10);
+    }
+
+    #[test]
+    fn observe_feeds_spans_and_ring() {
+        let cfg = ObsConfig { sample_every: 1, ..ObsConfig::default() };
+        let r = Registry::new(cfg, 2);
+        let t = traced([0, 50, 100, 300, 350, 900, 1000]);
+        r.observe_completion(&t, 1, 3, 42, 1_000.0, false);
+        let lines = r.stage_lines();
+        assert_eq!(lines.len(), N_SPANS);
+        assert!(lines.iter().all(|l| l.count == 1), "{lines:?}");
+        // The kernel span (350 -> 900 us) dominates; the histograms are
+        // log-spaced so allow a generous band.
+        let kernel = lines.iter().find(|l| l.name == "kernel").unwrap();
+        assert!((400.0..700.0).contains(&kernel.p50_us), "kernel p50 {}", kernel.p50_us);
+        let dump = r.dump();
+        assert_eq!(dump.len(), 1);
+        assert_eq!(dump[0].session, 42);
+        assert_eq!(dump[0].shard, 1);
+        assert!(dump[0].marks_ns.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn outliers_are_recorded_even_when_not_sampled() {
+        let cfg = ObsConfig { sample_every: 1_000_000, outlier_us: 500.0, ..ObsConfig::default() };
+        let r = Registry::new(cfg, 1);
+        let first = r.start_trace(); // ctr 0 -> sampled
+        assert!(first.is_sampled());
+        let mut fast = r.start_trace();
+        let mut slow = r.start_trace();
+        assert!(!fast.is_sampled() && !slow.is_sampled());
+        fast.mark(Stage::KernelDone);
+        slow.mark(Stage::KernelDone);
+        r.observe_completion(&fast, 0, 0, 1, 100.0, false);
+        r.observe_completion(&slow, 0, 0, 2, 900.0, true);
+        let dump = r.dump();
+        assert_eq!(dump.len(), 1, "only the outlier is recorded");
+        assert_eq!(dump[0].session, 2);
+        assert!(dump[0].deadline_miss);
+    }
+
+    #[test]
+    fn traces_json_keeps_the_newest_and_hexes_sessions() {
+        let cfg = ObsConfig { sample_every: 1, ring_capacity: 64, ..ObsConfig::default() };
+        let r = Registry::new(cfg, 1);
+        for k in 0..10u64 {
+            let t = r.start_trace();
+            r.observe_completion(&t, 0, 0, k, k as f64, false);
+        }
+        let j = r.traces_json(3);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        // Newest three, oldest of the kept set first.
+        assert_eq!(arr[0].get("session").unwrap().as_str(), Some("0000000000000007"));
+        assert_eq!(arr[2].get("session").unwrap().as_str(), Some("0000000000000009"));
+        assert_eq!(arr[2].get("marks_ns").unwrap().as_arr().unwrap().len(), N_STAGES);
+    }
+
+    #[test]
+    fn seq_and_uptime_are_monotonic() {
+        let r = Registry::new(ObsConfig::default(), 1);
+        let s1 = r.next_seq();
+        let s2 = r.next_seq();
+        assert!(s2 > s1);
+        let u1 = r.uptime_us();
+        let u2 = r.uptime_us();
+        assert!(u2 >= u1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-request stage tracing: a compact, `Copy` timestamp card carried
+//! by every job from wire decode to completion write.
+//!
+//! A [`ReqTrace`] records monotonic nanosecond offsets (from a single
+//! `Instant` taken at creation) at fixed [`Stage`] marks.  It is sized
+//! for the hot path: no heap allocation, one branch when tracing is
+//! disabled (`t0 == None`), and `Copy` so it rides inside
+//! [`crate::sched::Completion`] without perturbing existing move/copy
+//! semantics.
+//!
+//! Not to be confused with [`crate::coordinator::trace`], which records
+//! and replays whole *workloads* (HRDT files) for cross-backend
+//! regression testing; this module traces individual *requests* through
+//! the serving pipeline.  See `docs/OBSERVABILITY.md`.
+
+use std::time::Instant;
+
+/// Number of stage marks on a request's path.
+pub const N_STAGES: usize = 7;
+
+/// Number of consecutive-mark spans (`N_STAGES - 1`).
+pub const N_SPANS: usize = N_STAGES - 1;
+
+/// Fixed stage marks, in pipeline order.  The wire layer stamps
+/// `WireDecoded`, the fabric front-end stamps `Admitted`/`Queued`, the
+/// shard worker stamps `Gathered`/`KernelStart`/`KernelDone`, and the
+/// connection handler stamps `CompletionWritten` as it delivers the
+/// reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// Request parsed off the wire (frame or JSON line decoded).
+    WireDecoded = 0,
+    /// Passed admission accounting in the fabric front-end.
+    Admitted = 1,
+    /// Inserted into the routed shard's EDF queue.
+    Queued = 2,
+    /// Popped by the shard worker and slotted into a micro-batch lane.
+    Gathered = 3,
+    /// Batched kernel pass began.
+    KernelStart = 4,
+    /// Batched kernel pass (plus watchdog) finished.
+    KernelDone = 5,
+    /// Reply handed to the client connection (written or enqueued on
+    /// the connection's writer).
+    CompletionWritten = 6,
+}
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::WireDecoded,
+        Stage::Admitted,
+        Stage::Queued,
+        Stage::Gathered,
+        Stage::KernelStart,
+        Stage::KernelDone,
+        Stage::CompletionWritten,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::WireDecoded => "wire_decoded",
+            Stage::Admitted => "admitted",
+            Stage::Queued => "queued",
+            Stage::Gathered => "gathered",
+            Stage::KernelStart => "kernel_start",
+            Stage::KernelDone => "kernel_done",
+            Stage::CompletionWritten => "completion_written",
+        }
+    }
+}
+
+/// Names of the spans between consecutive marks, index `i` covering
+/// `Stage::ALL[i] -> Stage::ALL[i + 1]`.
+pub const SPAN_NAMES: [&str; N_SPANS] =
+    ["admit", "enqueue", "queue_wait", "gather", "kernel", "complete"];
+
+/// The per-request timestamp card.
+///
+/// `u32` nanosecond offsets cap a single trace at ~4.29 s from its
+/// first clock read; later marks saturate rather than wrap, which keeps
+/// the monotonicity invariant even for pathological stalls (a 4 s
+/// serving latency has long since blown every deadline we care about).
+#[derive(Debug, Clone, Copy)]
+pub struct ReqTrace {
+    /// `None` == tracing disabled for this request: every `mark` is a
+    /// single branch and no clock is ever read.
+    t0: Option<Instant>,
+    marks: [u32; N_STAGES],
+    /// Selected by the 1-in-N sampler for flight-recorder publication.
+    sampled: bool,
+}
+
+impl ReqTrace {
+    /// The inert trace: marks are no-ops, nothing is ever recorded.
+    #[inline]
+    pub fn disarmed() -> Self {
+        Self { t0: None, marks: [0; N_STAGES], sampled: false }
+    }
+
+    /// An armed trace anchored at "now"; `sampled` marks it for
+    /// flight-recorder publication (outliers are published regardless).
+    #[inline]
+    pub fn armed(sampled: bool) -> Self {
+        Self { t0: Some(Instant::now()), marks: [0; N_STAGES], sampled }
+    }
+
+    #[inline]
+    pub fn is_armed(&self) -> bool {
+        self.t0.is_some()
+    }
+
+    #[inline]
+    pub fn is_sampled(&self) -> bool {
+        self.sampled
+    }
+
+    /// Stamp `stage` with the elapsed nanoseconds since creation.
+    /// Disarmed: a single branch.  Marks are naturally monotonic (one
+    /// monotonic clock, one anchor), and saturate at `u32::MAX`.
+    #[inline]
+    pub fn mark(&mut self, stage: Stage) {
+        let Some(t0) = self.t0 else { return };
+        let ns = t0.elapsed().as_nanos().min(u32::MAX as u128) as u32;
+        self.marks[stage as usize] = ns;
+    }
+
+    /// Raw mark offsets in nanoseconds (0 == never reached, except the
+    /// first mark which is legitimately ~0).
+    #[inline]
+    pub fn marks_ns(&self) -> [u32; N_STAGES] {
+        self.marks
+    }
+
+    /// The latest stamped offset — the trace's own end-to-end extent.
+    pub fn last_mark_ns(&self) -> u32 {
+        self.marks.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_trace_is_inert() {
+        let mut t = ReqTrace::disarmed();
+        assert!(!t.is_armed());
+        assert!(!t.is_sampled());
+        for s in Stage::ALL {
+            t.mark(s);
+        }
+        assert_eq!(t.marks_ns(), [0; N_STAGES]);
+        assert_eq!(t.last_mark_ns(), 0);
+    }
+
+    #[test]
+    fn armed_marks_are_monotonic_in_stage_order() {
+        let mut t = ReqTrace::armed(true);
+        assert!(t.is_armed() && t.is_sampled());
+        for s in Stage::ALL {
+            t.mark(s);
+            // Tight loop: a dash of real work so marks can advance.
+            std::hint::black_box((0..50).sum::<u64>());
+        }
+        let m = t.marks_ns();
+        for w in m.windows(2) {
+            assert!(w[0] <= w[1], "marks must be monotonic: {m:?}");
+        }
+        assert_eq!(t.last_mark_ns(), m[N_STAGES - 1]);
+    }
+
+    #[test]
+    fn stage_names_cover_every_mark_and_span() {
+        assert_eq!(Stage::ALL.len(), N_STAGES);
+        assert_eq!(SPAN_NAMES.len(), N_SPANS);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i, "Stage discriminants must be dense");
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn trace_is_small_and_copy() {
+        // The card rides inside every Job and Completion; keep it lean.
+        assert!(std::mem::size_of::<ReqTrace>() <= 64);
+        let t = ReqTrace::armed(false);
+        let u = t; // Copy
+        assert_eq!(t.marks_ns(), u.marks_ns());
+    }
+}

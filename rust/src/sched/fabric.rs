@@ -19,6 +19,7 @@ use crate::arch::INPUT_SIZE;
 use crate::coordinator::watchdog::{WatchdogConfig, WatchdogEvent};
 use crate::kernel::{PackedModel, PackedModelF32};
 use crate::lstm::LstmParams;
+use crate::obs::{ObsConfig, Registry, ReqTrace, Stage};
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::metrics::{SchedMetrics, SchedSnapshot};
@@ -49,6 +50,10 @@ pub struct FabricConfig {
     /// Hot-shard rebalancing (cross-shard work stealing with live
     /// session migration); disabled by default.
     pub balance: BalanceConfig,
+    /// Per-request stage tracing + flight recorder (`obs::`); off by
+    /// default, so untraced fabrics are bit- and latency-identical to
+    /// pre-obs builds.
+    pub obs: ObsConfig,
 }
 
 impl FabricConfig {
@@ -63,6 +68,7 @@ impl FabricConfig {
             datapath: DatapathKind::Float,
             watchdog: WatchdogConfig::default(),
             balance: BalanceConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -104,6 +110,13 @@ pub struct Completion {
     pub shard: usize,
     pub lane: usize,
     pub event: WatchdogEvent,
+    /// Routing hash of the session that was served (delivery points
+    /// tag flight-recorder entries with it).
+    pub session: u64,
+    /// The request's stage trace (inert unless tracing was enabled at
+    /// submission) — the delivery point stamps the final mark and hands
+    /// it to [`Registry::observe_completion`].
+    pub trace: ReqTrace,
 }
 
 /// Handle to an in-flight submission.
@@ -142,6 +155,8 @@ pub struct Fabric {
     overlay: Arc<RoutingOverlay>,
     /// Per-shard load gauges feeding steal planning.
     board: Arc<LoadBoard>,
+    /// The observability plane (stage histograms, flight recorder).
+    obs: Arc<Registry>,
 }
 
 impl Fabric {
@@ -180,6 +195,7 @@ impl Fabric {
             }
         };
         let metrics = Arc::new(SchedMetrics::new(cfg.shards));
+        let obs = Arc::new(Registry::new(cfg.obs.clone(), cfg.shards));
         let overlay = Arc::new(RoutingOverlay::new());
         let board = Arc::new(LoadBoard::new(cfg.shards));
         // Every queue exists before any worker spawns: workers hold the
@@ -208,7 +224,7 @@ impl Fabric {
                     .context("spawning shard worker")?,
             );
         }
-        Ok(Self { cfg, name, queues, workers: Mutex::new(workers), metrics, overlay, board })
+        Ok(Self { cfg, name, queues, workers: Mutex::new(workers), metrics, overlay, board, obs })
     }
 
     pub fn name(&self) -> &'static str {
@@ -272,25 +288,47 @@ impl Fabric {
         self.submit_hashed(session_hash(session), window, deadline_us)
     }
 
-    /// [`Self::submit`] with a pre-computed session hash.
+    /// [`Self::submit`] with a pre-computed session hash.  Starts a
+    /// fresh trace (the submission itself is the wire-decode moment for
+    /// fabric-direct callers); front-ends that decoded a frame earlier
+    /// use [`Self::submit_hashed_traced`] with their own trace.
     pub fn submit_hashed(
         &self,
         session: u64,
         window: &[f32; INPUT_SIZE],
         deadline_us: Option<f64>,
     ) -> Result<Pending> {
+        let mut trace = self.obs.start_trace();
+        trace.mark(Stage::WireDecoded);
+        self.submit_hashed_traced(session, window, deadline_us, trace)
+    }
+
+    /// [`Self::submit_hashed`] carrying a caller-created [`ReqTrace`]
+    /// (already stamped with [`Stage::WireDecoded`] at frame decode).
+    pub fn submit_hashed_traced(
+        &self,
+        session: u64,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+        mut trace: ReqTrace,
+    ) -> Result<Pending> {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        trace.mark(Stage::Admitted);
         let now = Instant::now();
         let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
         let (tx, rx) = channel();
-        let job = Job {
+        let mut job = Job {
             session,
             window: Box::new(*window),
             enqueued: now,
             deadline: now + Duration::from_secs_f64(budget * 1e-6),
             reply: ReplyTo::Oneshot(tx),
+            trace,
         };
-        let (shard, outcome) = self.with_route(session, |shard, q| (shard, q.push(job)));
+        let (shard, outcome) = self.with_route(session, |shard, q| {
+            job.trace.mark(Stage::Queued);
+            (shard, q.push(job))
+        });
         match outcome {
             PushOutcome::Admitted => Ok(Pending { rx }),
             PushOutcome::AdmittedEvicting(victim) => {
@@ -331,17 +369,37 @@ impl Fabric {
         tx: CompletionTx,
         seq: u64,
     ) -> std::result::Result<(), Shed> {
+        let mut trace = self.obs.start_trace();
+        trace.mark(Stage::WireDecoded);
+        self.submit_pushed_traced(session, window, deadline_us, tx, seq, trace)
+    }
+
+    /// [`Self::submit_pushed`] carrying a caller-created [`ReqTrace`].
+    pub fn submit_pushed_traced(
+        &self,
+        session: u64,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+        tx: CompletionTx,
+        seq: u64,
+        mut trace: ReqTrace,
+    ) -> std::result::Result<(), Shed> {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        trace.mark(Stage::Admitted);
         let now = Instant::now();
         let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
-        let job = Job {
+        let mut job = Job {
             session,
             window: Box::new(*window),
             enqueued: now,
             deadline: now + Duration::from_secs_f64(budget * 1e-6),
             reply: ReplyTo::Push { tx, seq },
+            trace,
         };
-        let outcome = self.with_route(session, |_, q| q.push(job));
+        let outcome = self.with_route(session, |_, q| {
+            job.trace.mark(Stage::Queued);
+            q.push(job)
+        });
         match outcome {
             PushOutcome::Admitted => Ok(()),
             PushOutcome::AdmittedEvicting(victim) => {
@@ -409,6 +467,13 @@ impl Fabric {
 
     pub fn metrics(&self) -> &SchedMetrics {
         &self.metrics
+    }
+
+    /// The observability registry (stage histograms, flight recorder,
+    /// snapshot sequencing).  Front-ends clone the `Arc` into their
+    /// delivery pumps.
+    pub fn obs(&self) -> &Arc<Registry> {
+        &self.obs
     }
 
     pub fn snapshot(&self) -> SchedSnapshot {
@@ -678,5 +743,57 @@ mod tests {
         assert_eq!(fabric.name(), "fabric-fixed");
         let c = fabric.infer("q", &[2.0; INPUT_SIZE]).unwrap();
         assert!(c.estimate.is_finite());
+    }
+
+    /// Tracing off (the default): completions carry inert traces and
+    /// the registry never sees a span or a record.
+    #[test]
+    fn tracing_is_off_by_default() {
+        let p = params();
+        let fabric = Fabric::new(&p, FabricConfig::new(1, 2)).unwrap();
+        assert!(!fabric.obs().enabled());
+        let c = fabric.infer("quiet", &[0.5; INPUT_SIZE]).unwrap();
+        assert!(!c.trace.is_armed());
+        assert!(fabric.obs().dump().is_empty());
+        assert!(fabric.obs().stage_lines().iter().all(|l| l.count == 0));
+    }
+
+    /// Tracing at 1-in-1: every completion comes back with a fully
+    /// stamped, monotonic trace, and folding them into the registry
+    /// fills every stage histogram and the flight recorder.
+    #[test]
+    fn tracing_stamps_the_full_stage_chain() {
+        use crate::obs::{Stage, N_STAGES};
+        let p = params();
+        let mut cfg = FabricConfig::new(2, 2);
+        cfg.obs.sample_every = 1;
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        assert!(fabric.obs().enabled());
+        for k in 0..8 {
+            let session = format!("traced-{k}");
+            let c = fabric.infer(&session, &[1.0; INPUT_SIZE]).unwrap();
+            let mut trace = c.trace;
+            assert!(trace.is_armed());
+            trace.mark(Stage::CompletionWritten);
+            let marks = trace.marks_ns();
+            assert!(marks.windows(2).all(|w| w[0] <= w[1]), "marks not monotonic: {marks:?}");
+            // Every stage up to the kernel must have been stamped by the
+            // fabric + shard (WireDecoded may legitimately be 0 ns).
+            assert!(marks[Stage::KernelDone as usize] > 0, "kernel marks missing: {marks:?}");
+            assert_eq!(c.session, crate::sched::session_hash(&session));
+            fabric.obs().observe_completion(
+                &trace,
+                c.shard,
+                c.lane,
+                c.session,
+                c.latency_us,
+                c.deadline_missed,
+            );
+        }
+        let lines = fabric.obs().stage_lines();
+        assert!(lines.iter().all(|l| l.count == 8), "{lines:?}");
+        let dump = fabric.obs().dump();
+        assert_eq!(dump.len(), 8);
+        assert!(dump.iter().all(|r| r.marks_ns.len() == N_STAGES));
     }
 }

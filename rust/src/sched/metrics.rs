@@ -152,8 +152,14 @@ impl SchedMetrics {
     }
 
     pub fn snapshot(&self) -> SchedSnapshot {
+        // Load each counter exactly once and derive every ratio from
+        // those loads, so a snapshot can never disagree with itself.
+        // Counters still advance between the two loads —
+        // `record_completion` bumps `completed` before
+        // `deadline_misses` — so clamp: a burst of missed completions
+        // landing mid-snapshot must not read as a miss rate above 1.
         let completed = self.completed.load(Ordering::Relaxed);
-        let misses = self.deadline_misses.load(Ordering::Relaxed);
+        let misses = self.deadline_misses.load(Ordering::Relaxed).min(completed);
         SchedSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
@@ -343,6 +349,85 @@ mod tests {
         let shards = j.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards[0].get("exported").unwrap().as_f64(), Some(2.0));
         assert_eq!(shards[1].get("adopted").unwrap().as_f64(), Some(2.0));
+    }
+
+    /// A snapshot taken mid-traffic must be internally consistent:
+    /// every ratio is derived from the snapshot's own single loads, and
+    /// the cross-counter skew window (`completed` is loaded before
+    /// `deadline_misses`) is clamped so the miss rate can never read
+    /// above 1 no matter how the writer interleaves.
+    #[test]
+    fn snapshot_is_internally_consistent_under_concurrency() {
+        let m = std::sync::Arc::new(SchedMetrics::new(1));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let (m, stop) = (m.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    m.record_completion(0, 5.0, i % 2 == 0);
+                    i += 1;
+                }
+            })
+        };
+        for _ in 0..2000 {
+            let s = m.snapshot();
+            assert!(s.deadline_misses <= s.completed, "{} > {}", s.deadline_misses, s.completed);
+            assert!((0.0..=1.0).contains(&s.miss_rate), "torn miss rate {}", s.miss_rate);
+            let expect = if s.completed == 0 {
+                0.0
+            } else {
+                s.deadline_misses as f64 / s.completed as f64
+            };
+            assert!(
+                (s.miss_rate - expect).abs() < 1e-12,
+                "rate must derive from the snapshot's own loads"
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn single_sample_quantiles_collapse_to_its_bucket() {
+        let h = AtomicHist::for_latency();
+        h.record(100.0);
+        let (p0, p50, p100) = (h.quantile(0.0), h.quantile(0.5), h.quantile(1.0));
+        assert_eq!(p0, p50);
+        assert_eq!(p50, p100);
+        // Bucket midpoint: within the ~3% log-bucket width of the sample.
+        assert!((90.0..111.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn saturated_top_bucket_stays_bounded() {
+        let h = AtomicHist::new(1.0, 1000.0, 16);
+        for _ in 0..100 {
+            h.record(1e12); // far above hi: clamps into the last bucket
+        }
+        assert_eq!(h.total(), 100);
+        let p99 = h.quantile(0.99);
+        assert!(p99 <= 1000.0, "cap must bound the estimate: {p99}");
+        assert!(p99 >= 600.0, "saturation must land near the cap: {p99}");
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q_on_random_data() {
+        let h = AtomicHist::for_latency();
+        let mut rng = crate::util::Rng::new(0xC0FFEE);
+        for _ in 0..5000 {
+            // Heavy-tailed spread across the full range.
+            let u = rng.next_f64();
+            h.record(0.5 * (10e6f64 / 0.5).powf(u));
+        }
+        let qs = [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0];
+        let vals: Vec<f64> = qs.iter().map(|&q| h.quantile(q)).collect();
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1], "quantiles must be monotone: {vals:?}");
+        }
+        // Out-of-range q clamps to the endpoints.
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::INPUT_SIZE;
+use crate::obs::ReqTrace;
 
 use super::fabric::{Completion, Shed};
 
@@ -72,6 +73,9 @@ pub struct Job {
     pub deadline: Instant,
     /// Where the result (or a shed notice) is delivered.
     pub reply: ReplyTo,
+    /// Per-request stage trace (inert unless tracing is enabled); the
+    /// shard worker stamps the queue/batch/kernel marks on it.
+    pub trace: ReqTrace,
 }
 
 /// A job together with its queue key, so a worker that popped it for a
@@ -476,6 +480,7 @@ mod tests {
                 enqueued: now,
                 deadline: now + deadline_in,
                 reply: ReplyTo::Oneshot(tx),
+                trace: ReqTrace::disarmed(),
             },
             rx,
         )

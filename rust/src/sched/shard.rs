@@ -47,6 +47,7 @@ use crate::arch::INPUT_SIZE;
 use crate::coordinator::watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};
 use crate::fixed::QFormat;
 use crate::kernel::{FixedPath, FloatPath, MultiStream, MultiStreamF32, PackedModel, PackedModelF32};
+use crate::obs::Stage;
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::fabric::{Completion, Shed};
@@ -482,7 +483,7 @@ pub(crate) fn place(
                 try_adopt(core, table, ctx, &g.pinned, st, stolen);
             }
         }
-        Popped::Job(qj) => {
+        Popped::Job(mut qj) => {
             if fresh {
                 // Inter-arrival EWMA from submit timestamps.
                 if let Some(prev) = st.last_arrival {
@@ -506,11 +507,13 @@ pub(crate) fn place(
                         g.deferred.push(qj);
                     } else {
                         g.pinned[lane] = true;
+                        qj.job.trace.mark(Stage::Gathered);
                         g.batch.push((qj, lane));
                     }
                 }
                 LaneAssign::Fresh(lane) => {
                     g.pinned[lane] = true;
+                    qj.job.trace.mark(Stage::Gathered);
                     g.batch.push((qj, lane));
                 }
                 LaneAssign::Evicted { lane, evicted_session } => {
@@ -521,6 +524,7 @@ pub(crate) fn place(
                         .evictions
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     g.pinned[lane] = true;
+                    qj.job.trace.mark(Stage::Gathered);
                     g.batch.push((qj, lane));
                 }
                 LaneAssign::Full => g.deferred.push(qj),
@@ -777,6 +781,9 @@ pub(crate) fn execute_batch(
         .iter()
         .map(|(qj, lane)| LaneStep { lane: *lane, window: qj.job.window.clone() })
         .collect();
+    for (qj, _) in &mut batch {
+        qj.job.trace.mark(Stage::KernelStart);
+    }
     let t_pass = Instant::now();
     let shard_m = ctx.metrics.shard(ctx.index);
     let outcomes = match core.step_batch(&steps) {
@@ -808,7 +815,8 @@ pub(crate) fn execute_batch(
             .iter()
             .position(|(_, lane)| *lane == outcome.lane)
             .expect("every drained lane was gathered");
-        let (qj, _) = batch.swap_remove(slot);
+        let (mut qj, _) = batch.swap_remove(slot);
+        qj.job.trace.mark(Stage::KernelDone);
         let latency_us = done.saturating_duration_since(qj.job.enqueued).as_secs_f64() * 1e6;
         let missed = done > qj.job.deadline;
         ctx.metrics.record_completion(ctx.index, latency_us, missed);
@@ -831,6 +839,8 @@ pub(crate) fn execute_batch(
                 shard: ctx.index,
                 lane: outcome.lane,
                 event: outcome.event,
+                session: qj.job.session,
+                trace: qj.job.trace,
             }),
         );
     }
@@ -998,6 +1008,7 @@ mod tests {
                     enqueued: now,
                     deadline: now + Duration::from_millis(10),
                     reply: ReplyTo::Oneshot(tx),
+                    trace: crate::obs::ReqTrace::disarmed(),
                 },
             },
             rx,
@@ -1441,6 +1452,7 @@ mod tests {
                     enqueued: now,
                     deadline: now + Duration::from_millis(50),
                     reply: ReplyTo::Oneshot(tx),
+                    trace: crate::obs::ReqTrace::disarmed(),
                 };
                 assert!(matches!(queue.push(job), PushOutcome::Admitted), "k={k} s={s}");
                 receivers.push(rx);

@@ -165,6 +165,45 @@ mod tests {
     }
 
     #[test]
+    fn single_sample_percentiles_are_that_sample() {
+        let xs = [7.5];
+        for p in [0.0, 13.0, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&xs, p), 7.5);
+        }
+    }
+
+    #[test]
+    fn out_of_range_percentile_clamps() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&xs, 250.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_p_on_random_data() {
+        let mut rng = crate::util::Rng::new(0xFEED);
+        let xs: Vec<f64> = (0..300).map(|_| rng.next_f64() * 1e4).collect();
+        let mut prev = f64::NEG_INFINITY;
+        for k in 0..=100 {
+            let v = percentile(&xs, k as f64);
+            assert!(v >= prev, "p{k} regressed: {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn empty_and_single_sample_histogram_quantiles() {
+        let h = Histogram::new(0.0, 10.0, 5);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram reports 0");
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        h.record(3.0);
+        // Single sample: every quantile is its bin midpoint.
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.quantile(q), 3.0);
+        }
+    }
+
+    #[test]
     fn histogram_quantiles() {
         let mut h = Histogram::new(0.0, 100.0, 100);
         for i in 0..1000 {

@@ -182,6 +182,14 @@ impl WireClient {
         Json::parse(std::str::from_utf8(&p)?)
     }
 
+    /// Flight-recorder dump (same JSON shape as the JSON protocol's
+    /// `tracedump`: `{"traces": [...], "stages": {...}, "stats": {...}}`).
+    pub fn trace_dump(&mut self) -> Result<Json> {
+        self.writer.send_empty(FrameType::TraceDump)?;
+        let p = self.expect(FrameType::TraceDumpReply)?;
+        Json::parse(std::str::from_utf8(&p)?)
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         self.writer.send_empty(FrameType::Shutdown)?;
         self.expect(FrameType::Ok)?;

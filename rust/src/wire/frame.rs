@@ -92,6 +92,10 @@ pub enum FrameType {
     /// c->s (v2): one window, delta/f16-encodable
     /// (`enc u8`, optional change mask — see [`encode_submit_v2`]).
     SubmitV2 = 0x07,
+    /// c->s: request a flight-recorder dump (empty payload).  Works on
+    /// v1 connections: a pre-obs server rejects it gracefully as an
+    /// unknown type.
+    TraceDump = 0x08,
     /// s->c: negotiated version (`u16`).
     HelloAck = 0x81,
     /// s->c: one completed inference ([`CompletionRec`]).
@@ -104,6 +108,9 @@ pub enum FrameType {
     Ok = 0x85,
     /// s->c: metrics snapshot as UTF-8 JSON text.
     StatsReply = 0x86,
+    /// s->c: flight-recorder dump as UTF-8 JSON text (traces + stage
+    /// summaries + stats; see `docs/OBSERVABILITY.md`).
+    TraceDumpReply = 0x87,
 }
 
 impl FrameType {
@@ -116,12 +123,14 @@ impl FrameType {
             0x05 => Self::Stats,
             0x06 => Self::Shutdown,
             0x07 => Self::SubmitV2,
+            0x08 => Self::TraceDump,
             0x81 => Self::HelloAck,
             0x82 => Self::Completion,
             0x83 => Self::CompletionBatch,
             0x84 => Self::Error,
             0x85 => Self::Ok,
             0x86 => Self::StatsReply,
+            0x87 => Self::TraceDumpReply,
             _ => return None,
         })
     }
@@ -958,6 +967,26 @@ mod tests {
             decode_step(&raw),
             DecodeStep::Skip { reason: SkipReason::BadVersion(_), .. }
         ));
+    }
+
+    #[test]
+    fn tracedump_frame_types_are_pinned() {
+        // The introspection verbs' type bytes are part of the protocol
+        // surface (docs/PROTOCOL.md); moving them breaks mixed-version
+        // deployments.
+        assert_eq!(FrameType::TraceDump as u8, 0x08);
+        assert_eq!(FrameType::TraceDumpReply as u8, 0x87);
+        assert_eq!(FrameType::from_u8(0x08), Some(FrameType::TraceDump));
+        assert_eq!(FrameType::from_u8(0x87), Some(FrameType::TraceDumpReply));
+        let f = encode_frame(FrameType::TraceDump, b"");
+        match decode_step(&f) {
+            DecodeStep::Frame { ty, payload, consumed } => {
+                assert_eq!(ty, 0x08);
+                assert!(payload.is_empty());
+                assert_eq!(consumed, f.len());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
     }
 
     #[test]

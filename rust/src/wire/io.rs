@@ -296,6 +296,11 @@ impl<W: Write> FrameWriter<W> {
     pub fn send_stats_json(&mut self, json: &str) -> std::io::Result<()> {
         self.send_with(FrameType::StatsReply, |b| b.extend_from_slice(json.as_bytes()))
     }
+
+    /// Flight-recorder dump reply (UTF-8 JSON; see `docs/OBSERVABILITY.md`).
+    pub fn send_trace_json(&mut self, json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::TraceDumpReply, |b| b.extend_from_slice(json.as_bytes()))
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,174 @@
+//! `obs::` flight-recorder properties on a LIVE fabric:
+//!
+//! * every recorded trace's stage marks are monotone and complete, and
+//!   the consecutive-span sum telescopes exactly to the end-to-end mark
+//!   span, which in turn brackets the fabric's own latency accounting;
+//! * tracing at 1-in-1 is bit-transparent — estimates are identical to
+//!   a tracing-off run on the same workload;
+//! * with tracing off, requests carry inert traces end to end
+//!   (paid-for-only-if-used);
+//! * the introspection plane (TraceDump over both wire protocols, the
+//!   Prometheus exposition) serves a coherent view of the same traffic.
+
+use std::sync::Arc;
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::coordinator::{Client, Server};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::obs::{Stage, N_STAGES, SPAN_NAMES};
+use hrd_lstm::sched::{session_hash, Fabric, FabricConfig};
+use hrd_lstm::util::Rng;
+use hrd_lstm::wire::WireClient;
+
+fn params() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 4242)
+}
+
+/// Deterministic per-(stream, step) window.
+fn window_for(stream: usize, step: usize) -> [f32; INPUT_SIZE] {
+    let mut rng = Rng::new(0x0B5E ^ ((stream as u64) << 20) ^ step as u64);
+    let mut w = [0f32; INPUT_SIZE];
+    for v in &mut w {
+        *v = rng.uniform(-10.0, 10.0) as f32;
+    }
+    w
+}
+
+#[test]
+fn spans_telescope_on_a_live_fabric() {
+    let mut cfg = FabricConfig::new(2, 2);
+    cfg.obs.sample_every = 1; // record everything
+    let fabric = Fabric::new(&params(), cfg).unwrap();
+    for step in 0..40 {
+        for s in 0..4usize {
+            let mut c = fabric
+                .submit_hashed(session_hash(&format!("tele-{s}")), &window_for(s, step), None)
+                .unwrap()
+                .wait()
+                .unwrap();
+            // Mimic a delivery point: stamp the final mark, fold into
+            // the registry.
+            c.trace.mark(Stage::CompletionWritten);
+            fabric.obs().observe_completion(
+                &c.trace,
+                c.shard,
+                c.lane,
+                c.session,
+                c.latency_us,
+                c.deadline_missed,
+            );
+        }
+    }
+    let recs = fabric.obs().dump();
+    assert_eq!(recs.len(), 160, "1-in-1 sampling must record every completion");
+    for r in &recs {
+        let m = r.marks_ns;
+        assert!(m.iter().all(|&v| v > 0), "incomplete trace: {m:?}");
+        assert!(m.windows(2).all(|w| w[0] <= w[1]), "non-monotone marks: {m:?}");
+        // Telescoping: with every mark present, the per-stage spans (as
+        // observe_completion computes them) must sum exactly to the
+        // end-to-end mark span.
+        let span_sum: u64 = m.windows(2).map(|w| w[1] - w[0]).sum();
+        assert_eq!(span_sum, m[N_STAGES - 1] - m[0]);
+        // The mark span covers submit -> post-wait observe, a superset
+        // of the fabric's enqueue -> completion latency accounting
+        // (generous slack: the clocks are read on different threads).
+        let span_us = span_sum as f64 / 1_000.0;
+        assert!(
+            span_us + 100.0 >= r.latency_us,
+            "mark span {span_us:.1} us cannot undercut latency {:.1} us",
+            r.latency_us
+        );
+    }
+}
+
+#[test]
+fn tracing_one_in_one_never_changes_the_numbers() {
+    let run = |sample_every: u32| -> Vec<u64> {
+        let mut cfg = FabricConfig::new(2, 2);
+        cfg.obs.sample_every = sample_every;
+        let fabric = Fabric::new(&params(), cfg).unwrap();
+        let mut bits = Vec::new();
+        for step in 0..30 {
+            for s in 0..4usize {
+                let c = fabric
+                    .submit_hashed(
+                        session_hash(&format!("par-{s}")),
+                        &window_for(s, step),
+                        None,
+                    )
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                bits.push(c.estimate.to_bits());
+            }
+        }
+        bits
+    };
+    assert_eq!(run(0), run(1), "tracing must never perturb estimates");
+}
+
+#[test]
+fn tracing_off_keeps_requests_inert() {
+    let fabric = Fabric::new(&params(), FabricConfig::new(2, 2)).unwrap();
+    assert!(!fabric.obs().enabled(), "tracing is opt-in");
+    for step in 0..5 {
+        let c = fabric
+            .submit_hashed(session_hash("inert"), &window_for(0, step), None)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(!c.trace.is_armed(), "off means no marks anywhere");
+        assert!(c.trace.marks_ns().iter().all(|&m| m == 0));
+    }
+    assert!(fabric.obs().dump().is_empty());
+    assert!(fabric.obs().stage_lines().iter().all(|l| l.count == 0));
+}
+
+#[test]
+fn introspection_plane_is_coherent_across_protocols() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut fcfg = FabricConfig::new(2, 2);
+    fcfg.obs.sample_every = 1;
+    let fabric = Arc::new(Fabric::new(&params(), fcfg).unwrap());
+    let thread = std::thread::spawn(move || {
+        let _ = server.run_fabric(fabric);
+    });
+
+    let mut jc = Client::with_session(&addr, "live-j").unwrap();
+    for step in 0..10 {
+        jc.infer(&window_for(0, step)).unwrap();
+    }
+    let mut bc = WireClient::with_session(&addr, "live-b").unwrap();
+    for step in 0..10 {
+        bc.infer(&window_for(1, step)).unwrap();
+    }
+
+    // Both protocols serve the same dump, and every trace in it is
+    // complete: the server stamped wire decode AND completion write.
+    for dump in [bc.trace_dump().unwrap(), jc.trace_dump().unwrap()] {
+        let traces = dump.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 20, "both sessions' requests recorded");
+        for t in traces {
+            let marks = t.get("marks_ns").unwrap().as_arr().unwrap();
+            assert_eq!(marks.len(), N_STAGES);
+            let ns: Vec<f64> = marks.iter().map(|m| m.as_f64().unwrap()).collect();
+            assert!(ns.iter().all(|&v| v > 0.0), "server-side marks missing: {ns:?}");
+            assert!(ns.windows(2).all(|w| w[0] <= w[1]), "non-monotone: {ns:?}");
+            assert!(t.get("latency_us").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        for name in SPAN_NAMES {
+            let count = dump.at(&["stages", name, "count"]).unwrap().as_f64().unwrap();
+            assert_eq!(count, 20.0, "{name} span folded once per request");
+        }
+        assert_eq!(dump.at(&["stats", "inferred"]).unwrap().as_f64(), Some(20.0));
+    }
+
+    let prom = jc.prometheus().unwrap();
+    assert!(prom.contains("hrd_requests_completed_total 20"), "{prom}");
+    assert!(prom.contains("hrd_stage_spans_total{stage=\"kernel\"} 20"), "{prom}");
+
+    jc.shutdown().unwrap();
+    thread.join().unwrap();
+}

@@ -235,6 +235,7 @@ const HIJACK: &str = "4852445701020000570000004dcee5e109000000000000000000000000
                       6f6e6e2f300000803f0000a03f0000c03f0000e03f000000400000104000002040000030\
                       4000004040000050400000604000007040000080400000884000009040000098405c01d233";
 const STATS: &str = "485244570105000000000000d8c7987200000000";
+const TRACEDUMP: &str = "48524457010800000000000018a64f1300000000";
 const SHUTDOWN: &str = "48524457010600000000000045dd704300000000";
 
 // Response goldens (fully deterministic frames).
@@ -391,6 +392,68 @@ fn binary_session_transcript_is_golden() {
     let snap = handle.join().unwrap();
     assert_eq!(snap.completed, 6);
     assert_eq!(snap.shed, 0);
+}
+
+/// The observability plane's protocol surface, pinned:
+///
+/// * `{"cmd":"stats"}` stays a byte-compatible *superset* of the legacy
+///   shape — every v1 key survives, and the additive `uptime_us` /
+///   `snapshot_seq` / `stages` keys behave (uptime and seq strictly
+///   monotonic across renders);
+/// * `{"cmd":"tracedump"}` and the binary `TraceDump` verb (0x08,
+///   replied with 0x87) return the same `{traces, stages, stats}`
+///   shape, inert-but-well-formed when tracing is off (the
+///   conformance server's default).
+#[test]
+fn stats_superset_and_tracedump_are_conformant() {
+    let (addr, handle) = start_server();
+
+    // JSON side.
+    let stream = connect(addr);
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |req: &str| -> Json {
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap()
+    };
+    let s1 = ask(r#"{"cmd":"stats"}"#);
+    let s2 = ask(r#"{"cmd":"stats"}"#);
+    for key in ["inferred", "submitted", "shed", "p50_us", "p99_us", "shards", "wire"] {
+        assert!(s1.get(key).is_some(), "legacy stats key {key} lost");
+    }
+    let seq = |s: &Json| s.get("snapshot_seq").unwrap().as_f64().unwrap();
+    let up = |s: &Json| s.get("uptime_us").unwrap().as_f64().unwrap();
+    assert!(seq(&s2) > seq(&s1), "seq must advance on every render");
+    assert!(up(&s2) >= up(&s1), "uptime must be monotone");
+    for name in ["admit", "enqueue", "queue_wait", "gather", "kernel", "complete"] {
+        let count = s1.at(&["stages", name, "count"]).unwrap().as_f64().unwrap();
+        assert_eq!(count, 0.0, "tracing off: {name} must not have folded spans");
+    }
+    let dump = ask(r#"{"cmd":"tracedump"}"#);
+    assert!(dump.get("traces").unwrap().as_arr().unwrap().is_empty(), "tracing off");
+    assert!(dump.at(&["stages", "kernel", "count"]).is_some());
+    assert!(dump.at(&["stats", "snapshot_seq"]).unwrap().as_f64().unwrap() > seq(&s2));
+    drop(writer);
+    drop(reader);
+
+    // Binary side: the 0x08 verb in a v1 envelope, no hello required.
+    let mut stream = connect(addr);
+    stream.write_all(&hex(TRACEDUMP)).unwrap();
+    let reply = read_frame(&mut stream);
+    assert_eq!(reply[4], 1, "v1 envelope");
+    assert_eq!(reply[5], 0x87, "tracedump reply frame type");
+    let payload = &reply[HEADER_LEN..reply.len() - 4];
+    let json = Json::parse(std::str::from_utf8(payload).unwrap()).unwrap();
+    assert!(json.get("traces").unwrap().as_arr().unwrap().is_empty());
+    assert!(json.at(&["stages", "kernel", "p99_us"]).is_some());
+    assert!(json.at(&["stats", "uptime_us"]).is_some());
+    stream.write_all(&hex(SHUTDOWN)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(OK_FRAME), "shutdown ack");
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, 0, "introspection must not fabricate traffic");
 }
 
 // ---- binary v2 transcript ----------------------------------------------

@@ -68,7 +68,8 @@ echo "== serving fabric loadgen smoke (BENCH_serving.json) =="
 # (80% of sessions on one shard, rebalance off vs on -> the .rebalance
 # object, see docs/SCHED.md); small M / short duration
 # (scripts/loadgen.sh runs the full measurement).
-cargo run --release --bin hrd -- loadgen --quick --wire both --out BENCH_serving.json
+cargo run --release --bin hrd -- loadgen --quick --wire both --out BENCH_serving.json \
+  --prom-out BENCH_prometheus.txt
 
 echo "== open-loop serving gate: v1-vs-v2 knee rows in BENCH_serving.json =="
 # The quick loadgen above includes the open-loop phase (pipelined wire
@@ -87,5 +88,23 @@ for version in 1 2; do
 done
 grep -q '"v2_parity"' BENCH_serving.json \
   || { echo "FAIL: BENCH_serving.json lacks the v2_parity object"; exit 1; }
+
+echo "== obs gate: flight-recorder properties + stage attribution in the bench =="
+# The obs:: acceptance suite (docs/OBSERVABILITY.md): span telescoping on
+# a live fabric, 1-in-1 bit-transparency, off-means-inert, and the
+# introspection plane (TraceDump on both protocols, Prometheus text).
+cargo test -q --test obs_trace
+# The quick loadgen runs with tracing armed (trace_sample 64), so the
+# report must carry per-row stage attribution and the off-vs-armed
+# overhead A/B; their absence means the plane silently stopped paying
+# its way into the bench artifacts.
+grep -q '"stage_breakdown"' BENCH_serving.json \
+  || { echo "FAIL: open_loop[] rows lack the stage_breakdown object"; exit 1; }
+grep -q '"trace_overhead"' BENCH_serving.json \
+  || { echo "FAIL: BENCH_serving.json lacks the trace_overhead A/B"; exit 1; }
+test -s BENCH_prometheus.txt \
+  || { echo "FAIL: loadgen --prom-out wrote no Prometheus exposition"; exit 1; }
+grep -q '^hrd_requests_completed_total ' BENCH_prometheus.txt \
+  || { echo "FAIL: BENCH_prometheus.txt lacks the completed counter"; exit 1; }
 
 echo "CI OK"
