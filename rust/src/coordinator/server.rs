@@ -412,7 +412,7 @@ fn fabric_stats_json(fabric: &Fabric, wstats: &WireStats) -> String {
     let mut j = fabric.snapshot().to_json();
     if let Json::Obj(m) = &mut j {
         m.insert("wire".to_string(), wstats.to_json());
-        m.insert("uptime_us".to_string(), Json::Num(obs.uptime_us()));
+        m.insert("uptime_us".to_string(), Json::Num(obs.uptime_us() as f64));
         m.insert("snapshot_seq".to_string(), Json::Num(obs.next_seq() as f64));
         m.insert("stages".to_string(), obs.stages_json());
     }
@@ -427,14 +427,40 @@ const TRACE_DUMP_LIMIT: usize = 128;
 /// The `tracedump` reply body (shared by the JSON `tracedump` command
 /// and the binary `TraceDump` verb): recent/outlier traces, per-stage
 /// latency summaries, and the full stats snapshot.
+///
+/// The stats snapshot grows with shard count, so the 128-record budget
+/// alone cannot guarantee the reply fits a binary frame; the rendered
+/// reply is size-checked against [`wire::MAX_PAYLOAD`] and the traces
+/// array halved until it fits (the per-stage summaries and stats are
+/// always kept — `encode_frame` asserts on oversize payloads, and a
+/// panic there kills the connection handler).
 fn trace_dump_json(fabric: &Fabric, wstats: &WireStats) -> String {
     let obs = fabric.obs();
-    Json::obj(vec![
-        ("traces", obs.traces_json(TRACE_DUMP_LIMIT)),
-        ("stages", obs.stages_json()),
-        ("stats", Json::Raw(fabric_stats_json(fabric, wstats))),
-    ])
-    .to_string()
+    let stats = fabric_stats_json(fabric, wstats);
+    let mut limit = TRACE_DUMP_LIMIT;
+    loop {
+        let reply = Json::obj(vec![
+            ("traces", obs.traces_json(limit)),
+            ("stages", obs.stages_json()),
+            ("stats", Json::Raw(stats.clone())),
+        ])
+        .to_string();
+        if reply.len() <= wire::MAX_PAYLOAD {
+            return reply;
+        }
+        if limit == 0 {
+            // Even the bare snapshot is oversize (pathological shard
+            // count): drop the embedded stats too.  The remaining body
+            // is a handful of fixed-size stage summaries.
+            return Json::obj(vec![
+                ("traces", Json::Arr(Vec::new())),
+                ("stages", obs.stages_json()),
+                ("truncated", Json::Bool(true)),
+            ])
+            .to_string();
+        }
+        limit /= 2;
+    }
 }
 
 /// Prometheus text exposition of the current snapshot (the JSON

@@ -101,7 +101,12 @@ impl Ring {
                 }
                 // SAFETY: racy read, validated by the version recheck.
                 let rec = unsafe { std::ptr::read_volatile(slot.rec.get()) };
-                if slot.version.load(Ordering::Acquire) == v1 {
+                // The fence orders the data copy above before the
+                // version re-check below; a plain Acquire load alone
+                // would not keep the copy from sinking past it on
+                // weakly-ordered targets.
+                std::sync::atomic::fence(Ordering::Acquire);
+                if slot.version.load(Ordering::Relaxed) == v1 {
                     out.push(rec);
                     break;
                 }
