@@ -1424,6 +1424,7 @@ fn measure_trace_overhead(
             obs.uptime_us(),
             obs.next_seq(),
             None,
+            None,
         );
         Ok((rps, prom))
     };

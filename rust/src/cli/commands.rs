@@ -57,6 +57,11 @@ COMMANDS:
             --trace-sample N  (flight recorder: publish every Nth request
             trace, 0 = off; default 64; also `[obs] trace_sample`; see
             docs/OBSERVABILITY.md)
+            --snapshot <file>  (where `hrd drain` serializes live
+            sessions; also `[serve] snapshot`; see docs/OPERATIONS.md)
+            --restore <file>  (rebuild session state + routing from a
+            drain snapshot before admitting traffic — reconnecting
+            clients resume bit-identically)
   loadgen   self-contained serving load generator: drives M synthetic
             DROPBEAR streams through a loopback socket against the serial
             backend and the fabric at several shard counts over the JSON
@@ -76,10 +81,28 @@ COMMANDS:
             --prom-out <file>  (write a Prometheus exposition sample)
   top       one stats + per-stage latency snapshot from a running
             fabric server (docs/OBSERVABILITY.md)
-            --addr HOST:PORT  --watch S  (repeat every S seconds)
+            --addr HOST:PORT  --watch S  (repeat every S seconds;
+            survives server restarts: reconnects with bounded backoff
+            and re-baselines rates when snapshot_seq regresses)
             --prom  (print the Prometheus text exposition instead)
   trace     dump recent flight-recorder traces from a running server
             --addr HOST:PORT  --last K (default 16)  --slowest K
+  status    operator status probe: the stats envelope plus the
+            drain/restore/reload counters (docs/OPERATIONS.md)
+            --addr HOST:PORT
+  drain     stop admission, quiesce in-flight work, snapshot live
+            sessions + routing to the server's --snapshot path, then
+            shut the server down (terminal; resume via
+            serve-tcp --restore)   --addr HOST:PORT
+  reload    apply live config knobs to a running fabric server without
+            dropping connections   --addr HOST:PORT
+            --set knob=value[,knob=value...]   (vocabulary + reload
+            matrix: docs/OPERATIONS.md; SIGHUP re-applies the config
+            file's [reload] section)
+  restart-check  validate a drain snapshot offline (--snapshot <file>:
+            CRC, version, framing) or probe a restarted server's
+            operator counters (--addr HOST:PORT); exits nonzero on a
+            bad snapshot or a draining server
   tables    regenerate Tables I-IV (FPGA design-space study)
   pareto    design-space Pareto frontier + constrained recommendation
             --min-snr X  --max-dsps N
@@ -102,6 +125,10 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "loadgen" => loadgen(args),
         "top" => top(args),
         "trace" => trace_cmd(args),
+        "status" => status_cmd(args),
+        "drain" => drain_cmd(args),
+        "reload" => reload_cmd(args),
+        "restart-check" => restart_check(args),
         "bench" => bench(args),
         "tables" => tables(),
         "pareto" => pareto(args),
@@ -392,11 +419,35 @@ fn serve_tcp(args: &Args) -> Result<i32> {
         max_version: cfg.wire_max_version,
         credit_window: cfg.wire_credit_window,
     });
+    // Operator plane: drain-snapshot target and the config file SIGHUP
+    // re-reads for its [reload] section (docs/OPERATIONS.md).
+    server.set_operator(crate::coordinator::OperatorCtx::with_paths(
+        args.get("snapshot").map(PathBuf::from).or_else(|| cfg.snapshot_path.clone()),
+        args.get("config").map(PathBuf::from),
+    ));
     let datapath = fabric_datapath(cfg.backend, &cfg.precision, &cfg.kernel_precision)?;
     match datapath {
         Some(dp) if cfg.shards >= 1 => {
             let fcfg = fabric_config(&cfg, dp)?;
             let fabric = std::sync::Arc::new(crate::sched::Fabric::new(&params, fcfg)?);
+            // Startup [reload] overrides: same vocabulary as the live
+            // verb, applied before traffic; rejects warn, never kill.
+            if !cfg.reload.is_empty() {
+                let outcome = fabric.apply_reload(&cfg.reload);
+                for (knob, why) in &outcome.rejected {
+                    eprintln!("warning: [reload] {knob}: {why}");
+                }
+            }
+            if let Some(path) = args.get("restore") {
+                let snap =
+                    crate::wire::SnapshotFile::read_from(std::path::Path::new(path))?;
+                let routes = snap.routes.len();
+                let n = fabric.restore(&snap)?;
+                server.operator().note_restored(n);
+                println!(
+                    "restored {n} session(s) (+{routes} route override(s)) from {path}"
+                );
+            }
             println!(
                 "serving fabric backend={} datapath={} shards={} batch={} deadline={}us \
                  rebalance={} wire<=v{} credits={} trace={} on {} \
@@ -426,6 +477,10 @@ fn serve_tcp(args: &Args) -> Result<i32> {
         }
         _ => {
             ensure_f64_tier(&cfg, "the serial serving path")?;
+            anyhow::ensure!(
+                args.get("restore").is_none(),
+                "--restore needs the fabric server (the serial path keeps no session state)"
+            );
             if cfg.shards >= 1 && datapath.is_none() {
                 eprintln!(
                     "note: backend {} is not fabric-capable; serving on the serial path",
@@ -519,18 +574,68 @@ fn loadgen(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Reconnect policy for the operator/observer CLI verbs: a handful of
+/// attempts with doubling sleeps, so `hrd top --watch` rides out a
+/// `hrd drain` + restart cycle instead of dying on the first ECONNREFUSED.
+const RECONNECT_TRIES: u32 = 5;
+const RECONNECT_BASE: std::time::Duration = std::time::Duration::from_millis(250);
+
+fn connect_with_backoff(addr: &str) -> Result<crate::coordinator::Client> {
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..RECONNECT_TRIES {
+        match crate::coordinator::Client::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(RECONNECT_BASE * 2u32.pow(attempt));
+    }
+    Err(last.unwrap_or_else(|| anyhow::anyhow!("connect to {addr} failed")))
+}
+
+/// Rate baseline for `hrd top --watch`.  When `snapshot_seq` regresses
+/// the server restarted (counters reset to zero); re-baseline instead of
+/// printing a nonsense negative rate.
+#[derive(Default)]
+struct TopBaseline {
+    seq: f64,
+    completed: f64,
+    uptime_us: f64,
+}
+
 /// `hrd top`: stats + per-stage latency snapshot(s) from a running
 /// fabric server over the JSON protocol (`docs/OBSERVABILITY.md`).
+///
+/// In `--watch` mode transient errors (server draining, restarting) are
+/// survived: the tick is skipped, the connection re-established with
+/// bounded backoff, and derived rates re-baselined.  One-shot mode
+/// still fails loudly.
 fn top(args: &Args) -> Result<i32> {
+    use std::io::Write as _;
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let watch_s = args.get_f64("watch", 0.0)?;
     let prom = args.has_flag("prom");
     let mut client = crate::coordinator::Client::connect(addr)?;
+    let mut base = TopBaseline::default();
     loop {
-        if prom {
-            print!("{}", client.prometheus()?);
+        let tick: Result<String> = if prom {
+            client.prometheus()
         } else {
-            print!("{}", render_top(&client.trace_dump()?));
+            client.trace_dump().map(|dump| render_top(&dump, &mut base))
+        };
+        match tick {
+            Ok(s) => {
+                print!("{s}");
+                // `print!` never flushes; without this a --watch tick
+                // sits invisible in the stdout buffer (satellite fix).
+                std::io::stdout().flush()?;
+            }
+            Err(e) if watch_s > 0.0 => {
+                eprintln!("hrd top: {e}; reconnecting...");
+                client = connect_with_backoff(addr)?;
+                base = TopBaseline::default();
+                continue;
+            }
+            Err(e) => return Err(e),
         }
         if watch_s <= 0.0 {
             break;
@@ -542,18 +647,29 @@ fn top(args: &Args) -> Result<i32> {
 
 /// Render one `tracedump` reply as the `hrd top` screen: the aggregate
 /// serving line plus a per-stage latency table in pipeline order.
-fn render_top(dump: &crate::util::Json) -> String {
+fn render_top(dump: &crate::util::Json, base: &mut TopBaseline) -> String {
     use std::fmt::Write as _;
     let g = |path: &[&str]| dump.at(path).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let seq = g(&["stats", "snapshot_seq"]);
+    let completed = g(&["stats", "inferred"]);
+    let uptime_us = g(&["stats", "uptime_us"]);
+    // Completed/s over the previous tick; a seq or uptime regression
+    // means the server restarted -> re-baseline rather than go negative.
+    let rate = if base.seq > 0.0 && seq >= base.seq && uptime_us > base.uptime_us {
+        (completed - base.completed).max(0.0) / ((uptime_us - base.uptime_us) / 1e6)
+    } else {
+        0.0
+    };
+    *base = TopBaseline { seq, completed, uptime_us };
     let mut o = String::new();
     let _ = writeln!(
         o,
-        "uptime {:.1}s  seq {}  submitted {}  completed {}  shed {}  \
+        "uptime {:.1}s  seq {}  submitted {}  completed {}  ({rate:.0}/s)  shed {}  \
          p50 {:.1}us  p99 {:.1}us  miss_rate {:.4}",
-        g(&["stats", "uptime_us"]) / 1e6,
-        g(&["stats", "snapshot_seq"]),
+        uptime_us / 1e6,
+        seq,
         g(&["stats", "submitted"]),
-        g(&["stats", "inferred"]),
+        completed,
         g(&["stats", "shed"]),
         g(&["stats", "p50_us"]),
         g(&["stats", "p99_us"]),
@@ -583,7 +699,16 @@ fn trace_cmd(args: &Args) -> Result<i32> {
     let last = args.get_usize("last", 16)?.max(1);
     let slowest = args.get_usize("slowest", 0)?;
     let mut client = crate::coordinator::Client::connect(addr)?;
-    let dump = client.trace_dump()?;
+    // One bounded retry: a dump that races a drain/restart gets a fresh
+    // connection; a second failure is a real error and propagates.
+    let dump = match client.trace_dump() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("hrd trace: {e}; retrying...");
+            client = connect_with_backoff(addr)?;
+            client.trace_dump()?
+        }
+    };
     let mut traces: Vec<&crate::util::Json> =
         dump.get("traces").and_then(|t| t.as_arr()).map_or(vec![], |a| a.iter().collect());
     let lat = |t: &crate::util::Json| t.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
@@ -632,6 +757,119 @@ fn trace_cmd(args: &Args) -> Result<i32> {
         println!("{line}");
     }
     Ok(0)
+}
+
+/// `hrd status`: one-shot operator view of a running fabric server —
+/// serving stats plus the operator plane (draining flag, drain/reload
+/// counters, configured snapshot path).  See docs/OPERATIONS.md.
+fn status_cmd(args: &Args) -> Result<i32> {
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let mut client = connect_with_backoff(addr)?;
+    println!("{}", client.status()?);
+    Ok(0)
+}
+
+/// `hrd drain`: stop admission, quiesce the fabric, serialize live
+/// session state + routing to the server's configured snapshot file,
+/// then let the server exit.  Pair with `serve-tcp --restore` to resume.
+fn drain_cmd(args: &Args) -> Result<i32> {
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let mut client = connect_with_backoff(addr)?;
+    let reply = client.drain()?;
+    let g = |k: &str| reply.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let path = reply.get("snapshot").and_then(|v| v.as_str()).unwrap_or("?");
+    println!(
+        "drained {} session(s), {} route(s) -> {} ({} bytes)",
+        g("sessions"),
+        g("routes"),
+        path,
+        g("bytes"),
+    );
+    Ok(0)
+}
+
+/// `hrd reload --set knob=value[,knob=value...]`: apply the live-tunable
+/// config subset to a running server.  Exit 0 only if every knob
+/// applied; rejected knobs (restart-only, unknown, bad value) are
+/// listed and the exit code is 1.
+fn reload_cmd(args: &Args) -> Result<i32> {
+    let spec = args
+        .get("set")
+        .ok_or_else(|| anyhow::anyhow!("reload needs --set knob=value[,knob=value...]"))?;
+    let set = parse_reload_set(spec)?;
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let mut client = connect_with_backoff(addr)?;
+    let reply = client.reload(&set)?;
+    let dump = |label: &str, key: &str| {
+        if let Some(m) = reply.get(key).and_then(|v| v.as_obj()) {
+            for (k, v) in m {
+                let v = match v {
+                    crate::util::Json::Str(s) => s.clone(),
+                    other => other.to_string(),
+                };
+                println!("{label} {k} = {v}");
+            }
+        }
+    };
+    dump("applied ", "applied");
+    dump("REJECTED", "rejected");
+    let clean = reply.get("clean") == Some(&crate::util::Json::Bool(true));
+    Ok(if clean { 0 } else { 1 })
+}
+
+/// Parse a `--set knob=value[,knob=value...]` spec into the reload set
+/// sent over the wire (order preserved; knobs apply independently).
+fn parse_reload_set(spec: &str) -> Result<Vec<(String, String)>> {
+    let mut set = Vec::new();
+    for pair in spec.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad --set entry {pair:?} (want knob=value)"))?;
+        set.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    anyhow::ensure!(!set.is_empty(), "reload needs at least one knob=value in --set");
+    Ok(set)
+}
+
+/// `hrd restart-check`: pre-restart sanity.  With `--snapshot <file>`
+/// validates a drain snapshot offline (magic/version/CRC) and prints its
+/// shape; with `--addr` asks a live server whether it is draining
+/// (exit 1 while a drain is in flight).
+fn restart_check(args: &Args) -> Result<i32> {
+    if let Some(path) = args.get("snapshot") {
+        let snap = crate::wire::SnapshotFile::read_from(std::path::Path::new(path))?;
+        println!(
+            "snapshot ok: datapath={} state_len={} sessions={} route_overrides={}",
+            snap.datapath,
+            snap.state_len,
+            snap.sessions.len(),
+            snap.routes.len(),
+        );
+        return Ok(0);
+    }
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let mut client = connect_with_backoff(addr)?;
+    let status = client.status()?;
+    let op = status.get("operator");
+    let g = |k: &str| {
+        op.and_then(|o| o.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+    let draining = op.and_then(|o| o.get("draining"))
+        == Some(&crate::util::Json::Bool(true));
+    println!(
+        "server {}: draining={} drains={} drained_sessions={} restored_sessions={} reloads={}",
+        addr,
+        draining,
+        g("drains"),
+        g("drained_sessions"),
+        g("restored_sessions"),
+        g("reloads"),
+    );
+    Ok(if draining { 1 } else { 0 })
 }
 
 fn pareto(args: &Args) -> Result<i32> {
@@ -909,6 +1147,45 @@ mod tests {
         assert!(out.exists());
         let a = parse(&["bench", "--quick", "--precision", "fp16"]);
         assert!(dispatch(&a).is_err(), "fixed-point names are not bench tiers");
+    }
+
+    /// Operator verbs: `--set` spec parsing for `hrd reload`.
+    #[test]
+    fn reload_set_spec_parses() {
+        let set = parse_reload_set("queue_depth=128, shed=evict-farthest ,trace_sample=64")
+            .unwrap();
+        assert_eq!(
+            set,
+            vec![
+                ("queue_depth".to_string(), "128".to_string()),
+                ("shed".to_string(), "evict-farthest".to_string()),
+                ("trace_sample".to_string(), "64".to_string()),
+            ]
+        );
+        assert!(parse_reload_set("queue_depth").is_err(), "missing '='");
+        assert!(parse_reload_set("  , ,").is_err(), "empty spec");
+    }
+
+    /// `hrd restart-check --snapshot` validates offline and fails loudly
+    /// on garbage, and the serial serve-tcp path refuses `--restore`.
+    #[test]
+    fn restart_check_validates_snapshots_offline() {
+        let dir = std::env::temp_dir().join("hrd_cli_restart_check");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.snap");
+        let snap = crate::wire::SnapshotFile {
+            datapath: "f64".into(),
+            state_len: 4,
+            sessions: vec![crate::wire::SessionRecord { session: 7, state: vec![1.0; 4] }],
+            routes: vec![(7, 0)],
+        };
+        snap.write_to(&good).unwrap();
+        let a = parse(&["restart-check", "--snapshot", good.to_str().unwrap()]);
+        assert_eq!(dispatch(&a).unwrap(), 0);
+        let bad = dir.join("bad.snap");
+        std::fs::write(&bad, b"HRDSnot a snapshot").unwrap();
+        let a = parse(&["restart-check", "--snapshot", bad.to_str().unwrap()]);
+        assert!(dispatch(&a).is_err(), "corrupt snapshot must fail loudly");
     }
 
     #[test]

@@ -103,6 +103,16 @@ pub struct ExperimentConfig {
     /// (`[obs] trace_sample`): publish every Nth request trace; 0
     /// disables request tracing entirely.  See `docs/OBSERVABILITY.md`.
     pub trace_sample: usize,
+    /// Where `hrd drain` serializes live sessions (`[serve] snapshot` /
+    /// `serve-tcp --snapshot`); unset leaves the drain verb disabled.
+    /// See `docs/OPERATIONS.md`.
+    pub snapshot_path: Option<PathBuf>,
+    /// Live-reloadable knob overrides from the `[reload]` section,
+    /// passed through verbatim (key order = TOML key order, sorted):
+    /// applied via `Fabric::apply_reload` at serve-tcp startup and
+    /// re-applied on SIGHUP.  Unknown or restart-only keys are rejected
+    /// per knob, never fatally.  Vocabulary in `docs/OPERATIONS.md`.
+    pub reload: Vec<(String, String)>,
 }
 
 impl Default for ExperimentConfig {
@@ -129,6 +139,8 @@ impl Default for ExperimentConfig {
             wire_max_version: crate::wire::MAX_VERSION,
             wire_credit_window: 64,
             trace_sample: 64,
+            snapshot_path: None,
+            reload: Vec::new(),
         }
     }
 }
@@ -171,7 +183,33 @@ impl ExperimentConfig {
                 .get_i64("wire.credit_window", d.wire_credit_window as i64)
                 .clamp(1, u16::MAX as i64) as u16,
             trace_sample: doc.get_i64("obs.trace_sample", d.trace_sample as i64).max(0) as usize,
+            snapshot_path: doc
+                .get("serve.snapshot")
+                .and_then(|v| v.as_str())
+                .map(PathBuf::from),
+            reload: doc
+                .entries
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_prefix("reload.")
+                        .map(|knob| (knob.to_string(), toml_value_string(v)))
+                })
+                .collect(),
         }
+    }
+}
+
+/// Render a `[reload]` value as the string vocabulary
+/// `Fabric::apply_reload` expects (it parses per knob, so numbers and
+/// strings are both fine as text).
+fn toml_value_string(v: &super::toml::TomlValue) -> String {
+    use super::toml::TomlValue;
+    match v {
+        TomlValue::Str(s) => s.clone(),
+        TomlValue::Int(i) => i.to_string(),
+        TomlValue::Float(f) => format!("{f}"),
+        TomlValue::Bool(b) => b.to_string(),
+        TomlValue::Array(_) => String::new(), // no array knobs; rejected downstream
     }
 }
 
@@ -222,6 +260,14 @@ credit_window = 4
 
 [obs]
 trace_sample = 0
+
+[serve]
+snapshot = "/tmp/hrd.snap"
+
+[reload]
+queue_depth = 128
+shed = "evict-farthest"
+balance.hot_queue = 6
 "#,
         )
         .unwrap();
@@ -246,6 +292,19 @@ trace_sample = 0
         assert_eq!(c.wire_max_version, 1, "[wire] max_version pins the protocol");
         assert_eq!(c.wire_credit_window, 4);
         assert_eq!(c.trace_sample, 0, "[obs] trace_sample = 0 turns tracing off");
+        assert_eq!(c.snapshot_path.as_deref(), Some(std::path::Path::new("/tmp/hrd.snap")));
+        // [reload] passes through verbatim (BTreeMap => sorted by key);
+        // values render as the apply_reload string vocabulary.
+        assert_eq!(
+            c.reload,
+            vec![
+                ("balance.hot_queue".to_string(), "6".to_string()),
+                ("queue_depth".to_string(), "128".to_string()),
+                ("shed".to_string(), "evict-farthest".to_string()),
+            ]
+        );
+        assert!(ExperimentConfig::default().snapshot_path.is_none());
+        assert!(ExperimentConfig::default().reload.is_empty());
     }
 
     #[test]

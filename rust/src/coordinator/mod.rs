@@ -36,6 +36,6 @@ pub use pipeline::{
     channel_seed, run_streaming, run_streaming_multi, ChannelRun, Estimate, Pacing,
 };
 pub use rtos::{CpuModel, RtosDeadline, ARM_A53, CRIO_ATOM};
-pub use server::{Client, InferReply, Server, ServerStats, WireOptions, WireStats};
+pub use server::{Client, InferReply, OperatorCtx, Server, ServerStats, WireOptions, WireStats};
 pub use trace::{ReplayReport, Trace, TraceStep};
 pub use watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};

@@ -50,6 +50,7 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -95,6 +96,14 @@ enum Request {
     TraceDump,
     /// Prometheus text exposition of the stats snapshot (fabric mode).
     Prometheus,
+    /// Operator status probe: stats + drain/restore/reload counters
+    /// (fabric mode; see `docs/OPERATIONS.md`).
+    Status,
+    /// Drain-to-snapshot: stop admission, quiesce, serialize sessions +
+    /// routing to the configured snapshot path, then shut down.
+    Drain,
+    /// Live reload of the `[reload]`-able knob subset.
+    Reload { set: Vec<(String, String)> },
     Shutdown,
 }
 
@@ -107,6 +116,13 @@ fn parse_request(line: &str) -> Result<Request> {
             "stats" => Request::Stats,
             "tracedump" => Request::TraceDump,
             "prometheus" => Request::Prometheus,
+            "status" => Request::Status,
+            "drain" => Request::Drain,
+            "reload" => Request::Reload {
+                set: reload_set_of(
+                    json.get("set").context("reload needs a \"set\" object of knobs")?,
+                )?,
+            },
             "shutdown" => Request::Shutdown,
             other => anyhow::bail!("unknown cmd {other}"),
         });
@@ -123,6 +139,25 @@ fn parse_request(line: &str) -> Result<Request> {
         *dst = v.as_f64().context("non-numeric feature")? as f32;
     }
     Ok(Request::Infer { id, session, deadline_us, features: w })
+}
+
+/// Extract the knob set of a reload request: the `"set"` object of the
+/// JSON command, or the whole payload object of a binary `Reload`
+/// frame.  Values may be strings or numbers; both render into the
+/// string vocabulary [`Fabric::apply_reload`] parses per knob.  Object
+/// keys arrive sorted (BTreeMap), which is fine: knobs apply
+/// independently.
+fn reload_set_of(obj: &Json) -> Result<Vec<(String, String)>> {
+    let m = obj.as_obj().context("reload set must be a JSON object")?;
+    Ok(m.iter()
+        .map(|(k, v)| {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            (k.clone(), s)
+        })
+        .collect())
 }
 
 // ---- opaque-token extraction ------------------------------------------
@@ -465,7 +500,7 @@ fn trace_dump_json(fabric: &Fabric, wstats: &WireStats) -> String {
 
 /// Prometheus text exposition of the current snapshot (the JSON
 /// protocol's `prometheus` command; `hrd top --prom` prints it).
-fn prometheus_text(fabric: &Fabric, wstats: &WireStats) -> String {
+fn prometheus_text(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -> String {
     let obs = fabric.obs();
     render_prometheus(
         &fabric.snapshot(),
@@ -473,7 +508,191 @@ fn prometheus_text(fabric: &Fabric, wstats: &WireStats) -> String {
         obs.uptime_us(),
         obs.next_seq(),
         Some(&wstats.line()),
+        Some(&op.line()),
     )
+}
+
+// ---- operator plane ----------------------------------------------------
+
+/// Operator-plane state threaded through the fabric handlers: where the
+/// `drain` verb snapshots to, which config file SIGHUP re-reads, and
+/// the lifetime counters `status` (and Prometheus) report.  One per
+/// server process.  See `docs/OPERATIONS.md`.
+#[derive(Debug, Default)]
+pub struct OperatorCtx {
+    /// Drain-snapshot destination (`--snapshot` / `[serve] snapshot`);
+    /// `None` makes the drain verb fail loudly instead of losing state.
+    pub snapshot_path: Option<PathBuf>,
+    /// Config file whose `[reload]` section SIGHUP re-applies.
+    pub reload_source: Option<PathBuf>,
+    drains: AtomicU64,
+    drained_sessions: AtomicU64,
+    restored_sessions: AtomicU64,
+    reloads: AtomicU64,
+}
+
+impl OperatorCtx {
+    /// Fresh context with the two configurable paths (counters zeroed).
+    pub fn with_paths(snapshot: Option<PathBuf>, reload_source: Option<PathBuf>) -> Self {
+        OperatorCtx { snapshot_path: snapshot, reload_source, ..Default::default() }
+    }
+
+    /// Record a completed `--restore` so `status` reports it.
+    pub fn note_restored(&self, sessions: usize) {
+        self.restored_sessions.fetch_add(sessions as u64, Ordering::Relaxed);
+    }
+
+    /// The `"operator"` object of `status` replies.
+    fn to_json(&self, fabric: &Fabric) -> Json {
+        let mut fields = vec![
+            ("draining", Json::Bool(fabric.is_draining())),
+            ("datapath", Json::Str(fabric.datapath_tag())),
+            ("drains", Json::Num(self.drains.load(Ordering::Relaxed) as f64)),
+            (
+                "drained_sessions",
+                Json::Num(self.drained_sessions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "restored_sessions",
+                Json::Num(self.restored_sessions.load(Ordering::Relaxed) as f64),
+            ),
+            ("reloads", Json::Num(self.reloads.load(Ordering::Relaxed) as f64)),
+        ];
+        if let Some(p) = &self.snapshot_path {
+            fields.push(("snapshot_path", Json::Str(p.display().to_string())));
+        }
+        Json::obj(fields)
+    }
+
+    /// Counter line for the Prometheus exposition.
+    fn line(&self) -> crate::obs::OperatorLine {
+        crate::obs::OperatorLine {
+            drains: self.drains.load(Ordering::Relaxed),
+            drained_sessions: self.drained_sessions.load(Ordering::Relaxed),
+            restored_sessions: self.restored_sessions.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// `status` verb reply: the stats snapshot with the operator object
+/// merged in (same envelope as `stats` plus `"operator"`).
+fn operator_status_json(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -> String {
+    let obs = fabric.obs();
+    let mut j = fabric.snapshot().to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("wire".to_string(), wstats.to_json());
+        m.insert("uptime_us".to_string(), Json::Num(obs.uptime_us() as f64));
+        m.insert("snapshot_seq".to_string(), Json::Num(obs.next_seq() as f64));
+        m.insert("stages".to_string(), obs.stages_json());
+        m.insert("operator".to_string(), op.to_json(fabric));
+    }
+    j.to_string()
+}
+
+/// How long a drain waits for in-flight work to quiesce before giving
+/// up (the fabric rejects new admissions the whole time, so this bounds
+/// queued work only — normally milliseconds).
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The `drain` verb body: quiesce the fabric, serialize live sessions +
+/// routing to the configured snapshot path, and render the outcome
+/// reply.  The CALLER raises the shutdown flag after the reply is on
+/// the wire — drain is terminal (`docs/OPERATIONS.md`); restart with
+/// `serve-tcp --restore <snapshot>` to resume the drained sessions.
+fn drain_to_snapshot(fabric: &Fabric, op: &OperatorCtx) -> Result<String> {
+    let path = op.snapshot_path.clone().ok_or_else(|| {
+        anyhow::anyhow!(
+            "no snapshot path configured (serve-tcp --snapshot <path> / [serve] snapshot)"
+        )
+    })?;
+    let drained = fabric.drain(DRAIN_TIMEOUT)?;
+    let snap = drained.to_snapshot();
+    let bytes = snap.write_to(&path)?;
+    op.drains.fetch_add(1, Ordering::Relaxed);
+    op.drained_sessions.fetch_add(snap.sessions.len() as u64, Ordering::Relaxed);
+    Ok(Json::obj(vec![
+        ("drained", Json::Bool(true)),
+        ("snapshot", Json::Str(path.display().to_string())),
+        ("sessions", Json::Num(snap.sessions.len() as f64)),
+        ("routes", Json::Num(snap.routes.len() as f64)),
+        ("bytes", Json::Num(bytes as f64)),
+    ])
+    .to_string())
+}
+
+/// The `reload` verb body: apply the knob set and render the
+/// applied/rejected partition.  Success replies carry no `"error"` key
+/// — per-knob rejections live under `"rejected"` so one bad knob never
+/// masks the ones that did apply.
+fn reload_reply_json(fabric: &Fabric, op: &OperatorCtx, set: &[(String, String)]) -> String {
+    let outcome = fabric.apply_reload(set);
+    op.reloads.fetch_add(1, Ordering::Relaxed);
+    let obj = |pairs: &[(String, String)]| {
+        Json::Obj(pairs.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect())
+    };
+    Json::obj(vec![
+        ("applied", obj(&outcome.applied)),
+        ("rejected", obj(&outcome.rejected)),
+        ("clean", Json::Bool(outcome.is_clean())),
+    ])
+    .to_string()
+}
+
+// ---- SIGHUP-driven live reload (unix) ----------------------------------
+
+/// Raised by the signal handler; the fabric accept loop polls it (at
+/// most one `ACCEPT_POLL` late) and re-applies the config's `[reload]`
+/// section.  The handler itself only stores this flag — nothing else is
+/// async-signal-safe.
+#[cfg(unix)]
+static SIGHUP_SEEN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sighup(_sig: i32) {
+    SIGHUP_SEEN.store(true, Ordering::SeqCst);
+}
+
+/// Register the SIGHUP handler through libc's `signal(2)` directly (no
+/// signal-handling crate in the offline environment; libc is linked by
+/// every Rust binary anyway).  Idempotent.
+#[cfg(unix)]
+fn install_sighup_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGHUP: i32 = 1;
+    unsafe {
+        signal(SIGHUP, on_sighup as extern "C" fn(i32) as usize);
+    }
+}
+
+/// The SIGHUP body: re-read the config file the server was started
+/// from and apply its `[reload]` section to the live fabric.  Failures
+/// are logged, never fatal — a typo in the config must not take down a
+/// serving process.
+#[cfg(unix)]
+fn apply_sighup_reload(fabric: &Fabric, op: &OperatorCtx) {
+    let Some(path) = op.reload_source.clone() else {
+        log::warn!("SIGHUP ignored: server was started without --config");
+        return;
+    };
+    match crate::config::ExperimentConfig::from_file(&path) {
+        Ok(cfg) => {
+            let outcome = fabric.apply_reload(&cfg.reload);
+            op.reloads.fetch_add(1, Ordering::Relaxed);
+            log::info!(
+                "SIGHUP reload from {}: {} applied, {} rejected",
+                path.display(),
+                outcome.applied.len(),
+                outcome.rejected.len()
+            );
+            for (knob, why) in &outcome.rejected {
+                log::warn!("SIGHUP reload: {knob}: {why}");
+            }
+        }
+        Err(e) => log::warn!("SIGHUP reload failed reading {}: {e:#}", path.display()),
+    }
 }
 
 // ---- the server --------------------------------------------------------
@@ -484,6 +703,7 @@ pub struct Server {
     listener: TcpListener,
     shutdown: Arc<AtomicBool>,
     wire: WireOptions,
+    operator: Arc<OperatorCtx>,
 }
 
 impl Server {
@@ -494,12 +714,25 @@ impl Server {
             listener,
             shutdown: Arc::new(AtomicBool::new(false)),
             wire: WireOptions::default(),
+            operator: Arc::new(OperatorCtx::default()),
         })
     }
 
     /// Override the binary-protocol options (fabric mode only).
     pub fn set_wire_options(&mut self, wire: WireOptions) {
         self.wire = wire;
+    }
+
+    /// Install the operator-plane context (snapshot path, SIGHUP reload
+    /// source) before `run_fabric`; see `docs/OPERATIONS.md`.
+    pub fn set_operator(&mut self, op: OperatorCtx) {
+        self.operator = Arc::new(op);
+    }
+
+    /// The operator context (e.g. to count `--restore`d sessions into
+    /// the `status` counters before serving starts).
+    pub fn operator(&self) -> Arc<OperatorCtx> {
+        self.operator.clone()
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -599,12 +832,17 @@ impl Server {
                     }
                     let _ = reply.send(j.to_string());
                 }
-                Request::TraceDump | Request::Prometheus => {
+                Request::TraceDump
+                | Request::Prometheus
+                | Request::Status
+                | Request::Drain
+                | Request::Reload { .. } => {
                     let _ = reply.send(
                         Json::obj(vec![(
                             "error",
                             Json::Str(
-                                "tracedump/prometheus require the fabric server (serve-tcp)"
+                                "tracedump/prometheus/status/drain/reload require the \
+                                 fabric server (serve-tcp)"
                                     .to_string(),
                             ),
                         )])
@@ -633,12 +871,19 @@ impl Server {
         let shutdown = self.shutdown.clone();
         let listener = self.listener;
         let wire_opts = self.wire;
+        let op = self.operator;
         let wstats = Arc::new(WireStats::default());
         listener.set_nonblocking(true)?;
+        #[cfg(unix)]
+        install_sighup_handler();
         let mut handlers = Vec::new();
         loop {
             if shutdown.load(Ordering::SeqCst) {
                 break;
+            }
+            #[cfg(unix)]
+            if SIGHUP_SEEN.swap(false, Ordering::SeqCst) {
+                apply_sighup_reload(&fabric, &op);
             }
             match listener.accept() {
                 Ok((stream, _)) => {
@@ -646,13 +891,16 @@ impl Server {
                     let fabric = fabric.clone();
                     let shutdown = shutdown.clone();
                     let wstats = wstats.clone();
+                    let op = op.clone();
                     // Reap finished handlers so connection churn doesn't
                     // accumulate dead JoinHandles over a long deployment;
                     // still-running ones are joined at shutdown so the
                     // final snapshot sees every reply flushed.
                     handlers.retain(|h| !h.is_finished());
                     handlers.push(std::thread::spawn(move || {
-                        let _ = handle_fabric_connection(stream, fabric, shutdown, wire_opts, wstats);
+                        let _ = handle_fabric_connection(
+                            stream, fabric, shutdown, wire_opts, wstats, op,
+                        );
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -751,6 +999,7 @@ fn handle_fabric_connection(
     shutdown: Arc<AtomicBool>,
     wire_opts: WireOptions,
     wstats: Arc<WireStats>,
+    op: Arc<OperatorCtx>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(READ_POLL))?;
@@ -763,15 +1012,16 @@ fn handle_fabric_connection(
         Sniffed::Gone => Ok(()),
         Sniffed::Json => {
             log::debug!("fabric client connected (json): {peer}");
-            handle_fabric_json(stream, preload, fabric, shutdown, conn, wstats)
+            handle_fabric_json(stream, preload, fabric, shutdown, conn, wstats, op)
         }
         Sniffed::Binary => {
             log::debug!("fabric client connected (binary): {peer}");
-            handle_fabric_binary(stream, preload, fabric, shutdown, conn, wire_opts, wstats)
+            handle_fabric_binary(stream, preload, fabric, shutdown, conn, wire_opts, wstats, op)
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_fabric_json(
     stream: TcpStream,
     preload: Vec<u8>,
@@ -779,6 +1029,7 @@ fn handle_fabric_json(
     shutdown: Arc<AtomicBool>,
     conn: SessionToken,
     wstats: Arc<WireStats>,
+    op: Arc<OperatorCtx>,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = LineReader::with_preload(stream, preload)?;
@@ -843,10 +1094,22 @@ fn handle_fabric_json(
             Ok(Request::Prometheus) => {
                 Json::obj(vec![(
                     "prometheus",
-                    Json::Str(prometheus_text(&fabric, &wstats)),
+                    Json::Str(prometheus_text(&fabric, &wstats, &op)),
                 )])
                 .to_string()
             }
+            Ok(Request::Status) => operator_status_json(&fabric, &wstats, &op),
+            Ok(Request::Reload { set }) => reload_reply_json(&fabric, &op, &set),
+            Ok(Request::Drain) => match drain_to_snapshot(&fabric, &op) {
+                // Terminal: the loop's shutdown check below breaks AFTER
+                // this reply is written, so the client always sees the
+                // outcome before the socket goes away.
+                Ok(reply) => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    reply
+                }
+                Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+            },
             Ok(Request::Shutdown) => {
                 shutdown.store(true, Ordering::SeqCst);
                 Json::obj(vec![("ok", Json::Bool(true))]).to_string()
@@ -888,6 +1151,7 @@ fn wire_session_hash(sess: &[u8], conn: &SessionToken) -> Result<u64, SessionNam
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_fabric_binary(
     stream: TcpStream,
     preload: Vec<u8>,
@@ -896,7 +1160,12 @@ fn handle_fabric_binary(
     conn: SessionToken,
     wire_opts: WireOptions,
     wstats: Arc<WireStats>,
+    op: Arc<OperatorCtx>,
 ) -> Result<()> {
+    // A raw handle onto the socket, kept for the v2 teardown: severing
+    // it is the only way to unpark a writer pump blocked on a stalled
+    // client when the whole server is going down.
+    let sock = stream.try_clone()?;
     let mut writer = FrameWriter::new(stream.try_clone()?);
     let mut reader = FrameReader::with_preload(stream, preload);
     let server_max = wire_opts.max_version.clamp(wire::VERSION, wire::MAX_VERSION) as u16;
@@ -1049,6 +1318,35 @@ fn handle_fabric_binary(
                 flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
                 writer.send_trace_json(&trace_dump_json(&fabric, &wstats))?;
             }
+            Recv::Frame(FrameType::Status, _) => {
+                flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
+                writer.send_status_json(&operator_status_json(&fabric, &wstats, &op))?;
+            }
+            Recv::Frame(FrameType::Drain, _) => {
+                flush_wire_marks(&wstats, &reader, &writer, &mut in_mark, &mut out_mark);
+                match drain_to_snapshot(&fabric, &op) {
+                    Ok(reply) => {
+                        // Reply first, then raise the flag: the client
+                        // reads the outcome before the socket closes.
+                        writer.send_drain_json(&reply)?;
+                        shutdown.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                    Err(e) => writer.send_error(0, false, &format!("{e:#}"))?,
+                }
+            }
+            Recv::Frame(FrameType::Reload, payload) => {
+                let set = std::str::from_utf8(payload)
+                    .map_err(anyhow::Error::from)
+                    .and_then(Json::parse)
+                    .and_then(|j| reload_set_of(&j));
+                match set {
+                    Ok(set) => {
+                        writer.send_reload_json(&reload_reply_json(&fabric, &op, &set))?
+                    }
+                    Err(e) => writer.send_error(0, false, &format!("bad reload frame: {e:#}"))?,
+                }
+            }
             Recv::Frame(FrameType::Shutdown, _) => {
                 shutdown.store(true, Ordering::SeqCst);
                 writer.send_empty(FrameType::Ok)?;
@@ -1063,7 +1361,7 @@ fn handle_fabric_binary(
         if let Some(version) = upgrade {
             writer.set_version(version);
             return run_binary_v2(
-                reader, writer, fabric, shutdown, conn, wire_opts, wstats,
+                sock, reader, writer, fabric, shutdown, conn, wire_opts, wstats, op,
             );
         }
         if shutdown.load(Ordering::SeqCst) {
@@ -1106,6 +1404,14 @@ enum V2Out {
     Stats,
     /// Render and send a flight-recorder dump reply.
     TraceDump,
+    /// Render and send an operator status reply.
+    Status,
+    /// A finished drain outcome (the quiesce ran on the reader thread —
+    /// the pump must stay free to drain completions meanwhile; it only
+    /// writes the pre-rendered reply).
+    Drain(String),
+    /// A finished reload outcome (pre-rendered on the reader thread).
+    Reload(String),
     /// An error frame; `refund` credits are returned after writing (a
     /// submit that failed validation after its credit was taken).
     Err { seq: u64, shed: bool, msg: String, refund: u32 },
@@ -1130,7 +1436,9 @@ enum V2Out {
 /// Batch submits complete as individual seq-matched `Completion`
 /// frames on this path (not a `CompletionBatch`) — uniform credit
 /// accounting; see `docs/PROTOCOL.md`.
+#[allow(clippy::too_many_arguments)]
 fn run_binary_v2(
+    sock: TcpStream,
     mut reader: FrameReader<TcpStream>,
     writer: FrameWriter<TcpStream>,
     fabric: Arc<Fabric>,
@@ -1138,6 +1446,7 @@ fn run_binary_v2(
     conn: SessionToken,
     wire_opts: WireOptions,
     wstats: Arc<WireStats>,
+    op: Arc<OperatorCtx>,
 ) -> Result<()> {
     let version = writer.version() as u16;
     let credits = wire_opts.credit_window;
@@ -1160,6 +1469,7 @@ fn run_binary_v2(
         let gate = gate.clone();
         let fabric = fabric.clone();
         let wstats = wstats.clone();
+        let op = op.clone();
         let mut writer = writer;
         std::thread::spawn(move || {
             let mut out_mark = (writer.bytes_out(), writer.frames_out());
@@ -1206,6 +1516,22 @@ fn run_binary_v2(
                         let _ = writer.send_trace_json(&trace_dump_json(&fabric, &wstats));
                         0
                     }
+                    V2Out::Status => {
+                        let (bo, fo) = (writer.bytes_out(), writer.frames_out());
+                        wstats.add_out(bo - out_mark.0, fo - out_mark.1);
+                        out_mark = (bo, fo);
+                        let _ = writer
+                            .send_status_json(&operator_status_json(&fabric, &wstats, &op));
+                        0
+                    }
+                    V2Out::Drain(json) => {
+                        let _ = writer.send_drain_json(&json);
+                        0
+                    }
+                    V2Out::Reload(json) => {
+                        let _ = writer.send_reload_json(&json);
+                        0
+                    }
                     V2Out::Err { seq, shed, msg, refund } => {
                         let _ = writer.send_error(seq, shed, &msg);
                         refund
@@ -1240,6 +1566,10 @@ fn run_binary_v2(
     // by Reset; a reconnect always starts from full windows.
     let mut delta_ctx: HashMap<u64, [f32; INPUT_SIZE]> = HashMap::new();
     let mut in_mark = (reader.bytes_in(), reader.frames_in());
+    // True when THIS connection initiated the shutdown/drain: its
+    // client is alive and still owed the reply sitting in the pump's
+    // inbox, so teardown must not sever the socket out from under it.
+    let mut graceful = false;
 
     let loop_result: Result<()> = (|| {
         loop {
@@ -1430,8 +1760,58 @@ fn run_binary_v2(
                     in_mark = (bi, fi);
                     let _ = out_tx.send(V2Out::TraceDump);
                 }
+                Recv::Frame(FrameType::Status, _) => {
+                    let (bi, fi) = (reader.bytes_in(), reader.frames_in());
+                    wstats.add_in(bi - in_mark.0, fi - in_mark.1);
+                    in_mark = (bi, fi);
+                    let _ = out_tx.send(V2Out::Status);
+                }
+                Recv::Frame(FrameType::Drain, _) => {
+                    // Quiesce runs HERE on the reader thread: the pump
+                    // keeps writing completions (and releasing their
+                    // credits) the whole time, which is exactly what
+                    // lets the fabric's submitted == completed + shed
+                    // ledger balance.
+                    match drain_to_snapshot(&fabric, &op) {
+                        Ok(reply) => {
+                            let _ = out_tx.send(V2Out::Drain(reply));
+                            shutdown.store(true, Ordering::SeqCst);
+                            graceful = true;
+                            break;
+                        }
+                        Err(e) => {
+                            let _ = out_tx.send(V2Out::Err {
+                                seq: 0,
+                                shed: false,
+                                msg: format!("{e:#}"),
+                                refund: 0,
+                            });
+                        }
+                    }
+                }
+                Recv::Frame(FrameType::Reload, payload) => {
+                    let set = std::str::from_utf8(payload)
+                        .map_err(anyhow::Error::from)
+                        .and_then(Json::parse)
+                        .and_then(|j| reload_set_of(&j));
+                    match set {
+                        Ok(set) => {
+                            let _ =
+                                out_tx.send(V2Out::Reload(reload_reply_json(&fabric, &op, &set)));
+                        }
+                        Err(e) => {
+                            let _ = out_tx.send(V2Out::Err {
+                                seq: 0,
+                                shed: false,
+                                msg: format!("bad reload frame: {e:#}"),
+                                refund: 0,
+                            });
+                        }
+                    }
+                }
                 Recv::Frame(FrameType::Shutdown, _) => {
                     shutdown.store(true, Ordering::SeqCst);
+                    graceful = true;
                     let _ = out_tx.send(V2Out::Ok);
                     break;
                 }
@@ -1450,14 +1830,27 @@ fn run_binary_v2(
         Ok(())
     })();
 
-    // Teardown: dropping our senders lets the pump drain every pending
-    // completion (in-flight fabric jobs still hold `push_tx` clones and
-    // settle through the forwarder) and then exit.
+    // Teardown.  Order matters (the restart/teardown bugfix sweep —
+    // regression: `pipelined_client_drop_is_bounded_on_server_loss`):
+    //
+    // 1. close the gate FIRST so nothing can ever park on a credit
+    //    again (release-after-close is harmless);
+    // 2. drop our senders so the pump drains every pending completion
+    //    (in-flight fabric jobs still hold `push_tx` clones and settle
+    //    through the forwarder) and then exits;
+    // 3. on server-wide shutdown of a connection that did NOT initiate
+    //    it, sever the socket: a pump blocked in `write_all` to a
+    //    stalled client must not hang `run_fabric`'s handler join.
+    //    The initiating connection keeps its socket — its drain/ok
+    //    reply is still in the pump's inbox and the client is reading.
+    gate.close();
     drop(push_tx);
     drop(out_tx);
+    if shutdown.load(Ordering::SeqCst) && !graceful {
+        let _ = sock.shutdown(std::net::Shutdown::Both);
+    }
     let _ = forwarder.join();
     let _ = pump.join();
-    gate.close();
     let (bi, fi) = (reader.bytes_in(), reader.frames_in());
     wstats.add_in(bi - in_mark.0, fi - in_mark.1);
     loop_result
@@ -1606,6 +1999,34 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<()> {
         self.round_trip(r#"{"cmd":"shutdown"}"#)?;
         Ok(())
+    }
+
+    /// Operator status: the stats envelope plus the `"operator"`
+    /// counters object (fabric servers only; `docs/OPERATIONS.md`).
+    pub fn status(&mut self) -> Result<Json> {
+        self.round_trip(r#"{"cmd":"status"}"#)
+    }
+
+    /// Drain the server to its configured snapshot path (terminal: the
+    /// server shuts down after replying).  Returns the outcome object
+    /// (`{"drained": true, "snapshot": ..., "sessions": N, ...}`).
+    pub fn drain(&mut self) -> Result<Json> {
+        self.round_trip(r#"{"cmd":"drain"}"#)
+    }
+
+    /// Apply a live reload; returns the applied/rejected partition.
+    /// Per-knob rejections come back under `"rejected"`, not as a
+    /// protocol error — only transport/parse failures error out.
+    pub fn reload(&mut self, set: &[(String, String)]) -> Result<Json> {
+        let set_obj = Json::Obj(
+            set.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        let msg = Json::obj(vec![
+            ("cmd", Json::Str("reload".into())),
+            ("set", set_obj),
+        ])
+        .to_string();
+        self.round_trip(&msg)
     }
 }
 

@@ -62,7 +62,11 @@
 //!   schedule models, and the bit-exact cycle-charging engine.
 //! * [`coordinator`] — the real-time monitoring service: single-stream
 //!   and multi-channel streaming pipelines, backend registry (including
-//!   batched multi-channel backends), TCP serving, metrics, watchdog.
+//!   batched multi-channel backends), TCP serving, metrics, watchdog,
+//!   and the operator plane (`docs/OPERATIONS.md`): `status`/`drain`/
+//!   `reload` lifecycle verbs, drain-to-disk session snapshots
+//!   ([`wire::SnapshotFile`]) with bit-identical `--restore` recovery,
+//!   and SIGHUP-driven live config reload.
 //! * [`sched`] — the sharded deadline-aware serving fabric between the
 //!   TCP front-end and the kernel layer: N shard workers each owning a
 //!   [`kernel::MultiStream`] session, stable session-hash routing (with

@@ -21,6 +21,16 @@ pub struct WireLine {
     pub frames_out: u64,
 }
 
+/// Operator-plane lifetime counters (drain/restore/reload verbs; see
+/// `docs/OPERATIONS.md`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OperatorLine {
+    pub drains: u64,
+    pub drained_sessions: u64,
+    pub restored_sessions: u64,
+    pub reloads: u64,
+}
+
 /// Format a value the way the stats JSON does: integral values print
 /// without a decimal point, everything else as shortest-roundtrip f64.
 fn num(v: f64) -> String {
@@ -44,6 +54,7 @@ pub fn render_prometheus(
     uptime_us: u64,
     snapshot_seq: u64,
     wire: Option<&WireLine>,
+    operator: Option<&OperatorLine>,
 ) -> String {
     let mut o = String::with_capacity(4096);
     head(&mut o, "hrd_uptime_seconds", "gauge", "Seconds since the serving fabric came up.");
@@ -134,6 +145,25 @@ pub fn render_prometheus(
         let _ = writeln!(o, "hrd_wire_frames_total{{direction=\"in\"}} {}", w.frames_in);
         let _ = writeln!(o, "hrd_wire_frames_total{{direction=\"out\"}} {}", w.frames_out);
     }
+    if let Some(op) = operator {
+        for (name, help, v) in [
+            ("hrd_drains_total", "Completed drain-to-snapshot operations.", op.drains),
+            (
+                "hrd_drained_sessions_total",
+                "Sessions serialized into drain snapshots.",
+                op.drained_sessions,
+            ),
+            (
+                "hrd_restored_sessions_total",
+                "Sessions restored from a snapshot at startup.",
+                op.restored_sessions,
+            ),
+            ("hrd_reloads_total", "Live config reload operations applied.", op.reloads),
+        ] {
+            head(&mut o, name, "counter", help);
+            let _ = writeln!(o, "{name} {v}");
+        }
+    }
     o
 }
 
@@ -180,7 +210,9 @@ mod tests {
             StageLine { name: "kernel", count: 7, p50_us: 20.0, p99_us: 55.5 },
         ];
         let wire = WireLine { bytes_in: 100, bytes_out: 200, frames_in: 3, frames_out: 4 };
-        let got = render_prometheus(&snap(), &stages, 1_500_000, 9, Some(&wire));
+        let operator =
+            OperatorLine { drains: 1, drained_sessions: 5, restored_sessions: 5, reloads: 2 };
+        let got = render_prometheus(&snap(), &stages, 1_500_000, 9, Some(&wire), Some(&operator));
         let want = "\
 # HELP hrd_uptime_seconds Seconds since the serving fabric came up.
 # TYPE hrd_uptime_seconds gauge
@@ -247,14 +279,28 @@ hrd_wire_bytes_total{direction=\"out\"} 200
 # TYPE hrd_wire_frames_total counter
 hrd_wire_frames_total{direction=\"in\"} 3
 hrd_wire_frames_total{direction=\"out\"} 4
+# HELP hrd_drains_total Completed drain-to-snapshot operations.
+# TYPE hrd_drains_total counter
+hrd_drains_total 1
+# HELP hrd_drained_sessions_total Sessions serialized into drain snapshots.
+# TYPE hrd_drained_sessions_total counter
+hrd_drained_sessions_total 5
+# HELP hrd_restored_sessions_total Sessions restored from a snapshot at startup.
+# TYPE hrd_restored_sessions_total counter
+hrd_restored_sessions_total 5
+# HELP hrd_reloads_total Live config reload operations applied.
+# TYPE hrd_reloads_total counter
+hrd_reloads_total 2
 ";
         assert_eq!(got, want);
     }
 
     #[test]
-    fn wire_section_is_optional() {
-        let got = render_prometheus(&snap(), &[], 0, 1, None);
+    fn wire_and_operator_sections_are_optional() {
+        let got = render_prometheus(&snap(), &[], 0, 1, None, None);
         assert!(!got.contains("hrd_wire_"));
+        assert!(!got.contains("hrd_drains_"));
+        assert!(!got.contains("hrd_reloads_"));
         assert!(got.contains("hrd_uptime_seconds 0\n"));
         assert!(got.ends_with('\n'));
     }

@@ -9,7 +9,7 @@
 //! Prometheus exposition ([`super::prom`]) renders a
 //! [`crate::sched::SchedSnapshot`] together with [`Registry::stage_lines`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::sched::AtomicHist;
@@ -53,6 +53,10 @@ pub struct StageLine {
 /// The fabric's observability registry.
 pub struct Registry {
     cfg: ObsConfig,
+    /// Live copy of `cfg.sample_every` — the one obs knob `hrd reload`
+    /// can retune without a restart (the ring capacity and outlier
+    /// threshold shape allocations / recorded history and stay fixed).
+    sample_every: AtomicU32,
     started: Instant,
     /// Bumped on every stats/tracedump render — pollers detect restarts
     /// (seq going backwards) and compute rates from deltas.
@@ -67,6 +71,7 @@ pub struct Registry {
 impl Registry {
     pub fn new(cfg: ObsConfig, shards: usize) -> Self {
         Self {
+            sample_every: AtomicU32::new(cfg.sample_every),
             started: Instant::now(),
             seq: AtomicU64::new(0),
             ctr: AtomicU64::new(0),
@@ -79,7 +84,17 @@ impl Registry {
     }
 
     pub fn enabled(&self) -> bool {
-        self.cfg.sample_every > 0
+        self.sample_every() > 0
+    }
+
+    /// Current 1-in-N trace divisor (0 = tracing off).
+    pub fn sample_every(&self) -> u32 {
+        self.sample_every.load(Ordering::Relaxed)
+    }
+
+    /// Retune the trace sampler live (`hrd reload trace_sample=N`).
+    pub fn set_sample_every(&self, n: u32) {
+        self.sample_every.store(n, Ordering::Relaxed);
     }
 
     pub fn config(&self) -> &ObsConfig {
@@ -101,7 +116,7 @@ impl Registry {
     /// histograms; only sampled or outlier traces reach the ring.
     #[inline]
     pub fn start_trace(&self) -> ReqTrace {
-        let n = self.cfg.sample_every;
+        let n = self.sample_every();
         if n == 0 {
             return ReqTrace::disarmed();
         }
@@ -309,6 +324,19 @@ mod tests {
         assert_eq!(arr[0].get("session").unwrap().as_str(), Some("0000000000000007"));
         assert_eq!(arr[2].get("session").unwrap().as_str(), Some("0000000000000009"));
         assert_eq!(arr[2].get("marks_ns").unwrap().as_arr().unwrap().len(), N_STAGES);
+    }
+
+    #[test]
+    fn sample_every_is_live_reloadable() {
+        let r = Registry::new(ObsConfig::default(), 1);
+        assert!(!r.enabled());
+        assert!(!r.start_trace().is_armed());
+        r.set_sample_every(1);
+        assert!(r.enabled());
+        assert!(r.start_trace().is_armed());
+        r.set_sample_every(0);
+        assert!(!r.enabled());
+        assert!(!r.start_trace().is_armed());
     }
 
     #[test]

@@ -260,6 +260,21 @@ impl RoutingOverlay {
     pub fn overrides(&self) -> u64 {
         self.len.load(Ordering::Relaxed)
     }
+
+    /// Every installed override, sorted by session hash (deterministic
+    /// drain-to-disk export, `docs/OPERATIONS.md`).  Stripes are locked
+    /// one at a time, so this is only a point-in-time snapshot — the
+    /// drain path calls it after the fabric has quiesced, when nothing
+    /// mutates routes concurrently.
+    pub fn export_overrides(&self) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            let g = stripe.lock().unwrap();
+            out.extend(g.iter().map(|(&session, &shard)| (session, shard)));
+        }
+        out.sort_unstable();
+        out
+    }
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 //! either admits the job to that shard's bounded EDF queue or sheds it
 //! according to the configured policy.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -20,10 +20,15 @@ use crate::coordinator::watchdog::{WatchdogConfig, WatchdogEvent};
 use crate::kernel::{PackedModel, PackedModelF32};
 use crate::lstm::LstmParams;
 use crate::obs::{ObsConfig, Registry, ReqTrace, Stage};
+use crate::wire::{SessionRecord, SnapshotFile};
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::metrics::{SchedMetrics, SchedSnapshot};
-use super::queue::{CompletionTx, Control, Job, PushOutcome, ReplyTo, ShardQueue, ShedPolicy};
+use super::queue::{
+    CompletionTx, Control, Job, Migration, PushOutcome, ReplyTo, ShardQueue, ShedPolicy,
+    StolenSession,
+};
+use super::reload::{LiveTuning, ReloadOutcome};
 use super::session::{session_hash, shard_of};
 use super::shard::{run_worker, DatapathKind, ShardCore, ShardWorkerCtx};
 
@@ -83,6 +88,10 @@ pub enum Shed {
     Evicted,
     /// The fabric is shutting down.
     Shutdown,
+    /// The fabric is draining to a snapshot (`hrd drain`): admission is
+    /// closed but the session states survive — clients should retry
+    /// after the server restarts with `--restore`.
+    Draining,
     /// A shard worker failed internally (bug; logged server-side).
     Internal,
 }
@@ -93,6 +102,7 @@ impl std::fmt::Display for Shed {
             Self::QueueFull => "queue full",
             Self::Evicted => "evicted by a more urgent request",
             Self::Shutdown => "fabric shutting down",
+            Self::Draining => "fabric draining (retry after restart)",
             Self::Internal => "internal shard error",
         })
     }
@@ -144,12 +154,47 @@ impl Pending {
     }
 }
 
+/// Everything a quiesced fabric hands the operator plane on
+/// [`Fabric::drain`]: the exact recurrent state of every resident
+/// session plus the rebalance routing overrides, ready to serialize
+/// into a [`SnapshotFile`] and re-install with [`Fabric::restore`]
+/// after a restart (`docs/OPERATIONS.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrainedFabric {
+    /// `(session hash, exported lane state)`, sorted by hash.
+    pub sessions: Vec<(u64, Vec<f64>)>,
+    /// `(session hash, shard)` routing overrides, sorted by hash; empty
+    /// unless rebalancing was enabled.
+    pub routes: Vec<(u64, usize)>,
+    /// `f64` words per exported lane state.
+    pub state_len: usize,
+    /// Datapath tag ([`Fabric::datapath_tag`]) — restore refuses a
+    /// snapshot taken under a different numeric tier.
+    pub datapath: String,
+}
+
+impl DrainedFabric {
+    /// Serialize into the on-disk snapshot form.
+    pub fn to_snapshot(&self) -> SnapshotFile {
+        SnapshotFile {
+            datapath: self.datapath.clone(),
+            state_len: self.state_len as u32,
+            sessions: self
+                .sessions
+                .iter()
+                .map(|(session, state)| SessionRecord { session: *session, state: state.clone() })
+                .collect(),
+            routes: self.routes.iter().map(|&(session, shard)| (session, shard as u32)).collect(),
+        }
+    }
+}
+
 /// The sharded deadline-aware serving fabric.
 pub struct Fabric {
     cfg: FabricConfig,
     name: &'static str,
     queues: Vec<Arc<ShardQueue>>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<Vec<(u64, Vec<f64>)>>>>,
     metrics: Arc<SchedMetrics>,
     /// `session hash -> shard` overrides installed by migrations.
     overlay: Arc<RoutingOverlay>,
@@ -157,6 +202,14 @@ pub struct Fabric {
     board: Arc<LoadBoard>,
     /// The observability plane (stage histograms, flight recorder).
     obs: Arc<Registry>,
+    /// Live-reloadable knobs shared with every worker.
+    tuning: Arc<LiveTuning>,
+    /// Set once by [`Self::drain`]; admission then sheds with
+    /// [`Shed::Draining`].
+    draining: AtomicBool,
+    /// `f64` words per exported lane state (fixed by the architecture
+    /// and datapath at construction).
+    state_len: usize,
 }
 
 impl Fabric {
@@ -194,10 +247,15 @@ impl Fabric {
                     .collect()
             }
         };
+        let state_len = cores[0].state_len();
         let metrics = Arc::new(SchedMetrics::new(cfg.shards));
         let obs = Arc::new(Registry::new(cfg.obs.clone(), cfg.shards));
         let overlay = Arc::new(RoutingOverlay::new());
         let board = Arc::new(LoadBoard::new(cfg.shards));
+        let tuning = Arc::new(LiveTuning::new(
+            Duration::from_secs_f64(cfg.gather_cap_us.max(0.0) * 1e-6),
+            &cfg.balance,
+        ));
         // Every queue exists before any worker spawns: workers hold the
         // full peer list so steal requests and migrations can cross.
         let queues: Vec<Arc<ShardQueue>> = (0..cfg.shards)
@@ -215,7 +273,7 @@ impl Fabric {
                 balance: cfg.balance.clone(),
                 batch: cfg.batch,
                 gather_floor: Duration::from_micros(5),
-                gather_cap: Duration::from_secs_f64(cfg.gather_cap_us.max(0.0) * 1e-6),
+                tuning: tuning.clone(),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -224,7 +282,19 @@ impl Fabric {
                     .context("spawning shard worker")?,
             );
         }
-        Ok(Self { cfg, name, queues, workers: Mutex::new(workers), metrics, overlay, board, obs })
+        Ok(Self {
+            cfg,
+            name,
+            queues,
+            workers: Mutex::new(workers),
+            metrics,
+            overlay,
+            board,
+            obs,
+            tuning,
+            draining: AtomicBool::new(false),
+            state_len,
+        })
     }
 
     pub fn name(&self) -> &'static str {
@@ -312,7 +382,14 @@ impl Fabric {
         deadline_us: Option<f64>,
         mut trace: ReqTrace,
     ) -> Result<Pending> {
+        // Counted before the drain check on purpose: a drain's quiesce
+        // poll requires submitted == completed + shed, so a racing
+        // submission must land on BOTH sides of that ledger.
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if self.draining.load(Ordering::SeqCst) {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::anyhow!("request shed: {}", Shed::Draining));
+        }
         trace.mark(Stage::Admitted);
         let now = Instant::now();
         let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
@@ -384,7 +461,12 @@ impl Fabric {
         seq: u64,
         mut trace: ReqTrace,
     ) -> std::result::Result<(), Shed> {
+        // Same ledger rule as the oneshot path: count, then drain-check.
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if self.draining.load(Ordering::SeqCst) {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(Shed::Draining);
+        }
         trace.mark(Stage::Admitted);
         let now = Instant::now();
         let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
@@ -478,6 +560,227 @@ impl Fabric {
 
     pub fn snapshot(&self) -> SchedSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The live-reloadable knob cell (`hrd reload` / SIGHUP).
+    pub fn tuning(&self) -> &Arc<LiveTuning> {
+        &self.tuning
+    }
+
+    /// Whether [`Self::drain`] has started (admission is closed).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Stable identity of the numeric datapath, stored in snapshots so
+    /// [`Self::restore`] can refuse a state captured under a different
+    /// tier (lane states are only bit-meaningful within one tier).
+    pub fn datapath_tag(&self) -> String {
+        match self.cfg.datapath {
+            DatapathKind::Float => "f64".to_string(),
+            DatapathKind::FloatF32 => "f32".to_string(),
+            DatapathKind::Fixed(fmt) => format!("fixed:{}", fmt.name),
+        }
+    }
+
+    /// Drain the fabric for a restart (`hrd drain`): close admission
+    /// (new submissions shed with [`Shed::Draining`]), let every
+    /// admitted job finish, then stop the workers and collect the exact
+    /// recurrent state of every resident session plus the rebalance
+    /// routing overrides.  Terminal and once-only — after a successful
+    /// drain the fabric serves nothing; the returned [`DrainedFabric`]
+    /// is the hand-off to `--restore` in the next process.
+    pub fn drain(&self, timeout: Duration) -> Result<DrainedFabric> {
+        anyhow::ensure!(
+            !self.draining.swap(true, Ordering::SeqCst),
+            "fabric is already draining"
+        );
+        // Quiesce: every queue empty of jobs AND controls (an unpopped
+        // Adopt carries lane state only its worker can export), and the
+        // admission ledger balanced — submitted == completed + shed
+        // means nothing is in flight inside a gather/pass either.
+        let deadline = Instant::now() + timeout;
+        loop {
+            let queues_idle =
+                self.queues.iter().all(|q| q.is_empty() && q.controls_pending() == 0);
+            let submitted = self.metrics.submitted.load(Ordering::SeqCst);
+            let completed = self.metrics.completed.load(Ordering::SeqCst);
+            let shed = self.metrics.shed.load(Ordering::SeqCst);
+            if queues_idle && submitted == completed + shed {
+                break;
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "drain did not quiesce within {timeout:?} \
+                 (submitted {submitted}, completed {completed}, shed {shed})"
+            );
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        // Close the queues (racing work since the poll sheds loudly)
+        // and join the workers; each returns its resident sessions'
+        // exported lane state.
+        for q in &self.queues {
+            for job in q.close() {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                job.reply.send(Err(Shed::Draining));
+            }
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        let mut sessions: Vec<(u64, Vec<f64>)> = Vec::new();
+        let mut panicked = 0usize;
+        for w in workers {
+            match w.join() {
+                Ok(exports) => sessions.extend(exports),
+                Err(_) => panicked += 1,
+            }
+        }
+        anyhow::ensure!(panicked == 0, "{panicked} shard worker(s) panicked during drain");
+        sessions.sort_unstable_by_key(|(session, _)| *session);
+        let routes =
+            if self.cfg.balance.enabled { self.overlay.export_overrides() } else { Vec::new() };
+        Ok(DrainedFabric {
+            sessions,
+            routes,
+            state_len: self.state_len,
+            datapath: self.datapath_tag(),
+        })
+    }
+
+    /// Re-install a drained snapshot into this (freshly built, not yet
+    /// serving) fabric: routing overrides first, then each session's
+    /// lane state via the same `Adopt` control the rebalancer uses —
+    /// controls preempt jobs, so a session's first post-restore window
+    /// is guaranteed to land on the restored state.  Fails loudly on
+    /// any datapath/shape mismatch rather than serving wrong numbers.
+    /// Returns the number of sessions installed.
+    pub fn restore(&self, snap: &SnapshotFile) -> Result<usize> {
+        let tag = self.datapath_tag();
+        anyhow::ensure!(
+            snap.datapath == tag,
+            "snapshot datapath `{}` does not match serving datapath `{tag}` \
+             (restart with the original precision flags)",
+            snap.datapath
+        );
+        anyhow::ensure!(
+            snap.state_len as usize == self.state_len,
+            "snapshot lane state is {} words, this fabric needs {}",
+            snap.state_len,
+            self.state_len
+        );
+        anyhow::ensure!(
+            snap.routes.is_empty() || self.cfg.balance.enabled,
+            "snapshot carries {} routing override(s) but rebalancing is disabled \
+             (restart with --rebalance / [sched] rebalance)",
+            snap.routes.len()
+        );
+        for &(session, shard) in &snap.routes {
+            anyhow::ensure!(
+                (shard as usize) < self.shards(),
+                "snapshot routes session {session:#018x} to shard {shard}, \
+                 but this fabric has only {} shards",
+                self.shards()
+            );
+        }
+        let capacity = self.cfg.shards * self.cfg.batch;
+        if snap.sessions.len() > capacity {
+            eprintln!(
+                "hrd: restoring {} sessions into {capacity} lanes; \
+                 least-recently-restored sessions will be evicted",
+                snap.sessions.len()
+            );
+        }
+        for &(session, shard) in &snap.routes {
+            let mut guard = self.overlay.lock_route(session);
+            self.overlay.set_in(&mut guard, session, shard as usize);
+        }
+        for rec in &snap.sessions {
+            let control = Control::Adopt(Box::new(Migration {
+                stolen: Some(StolenSession {
+                    session: rec.session,
+                    state: Some(rec.state.clone()),
+                    jobs: Vec::new(),
+                }),
+            }));
+            let rejected = self.with_route(rec.session, |_, q| q.push_control(control));
+            anyhow::ensure!(
+                rejected.is_none(),
+                "restore raced shutdown: shard queue closed while adopting session \
+                 {:#018x}",
+                rec.session
+            );
+        }
+        Ok(snap.sessions.len())
+    }
+
+    /// Apply a `(knob, value)` reload set to the running fabric.  Never
+    /// partial-fails: each knob is validated and applied independently,
+    /// and the outcome names both lists (`docs/OPERATIONS.md` has the
+    /// full live-vs-restart-only matrix).
+    pub fn apply_reload(&self, changes: &[(String, String)]) -> ReloadOutcome {
+        let mut out = ReloadOutcome::default();
+        for (knob, value) in changes {
+            let result: std::result::Result<String, String> = match knob.as_str() {
+                "queue_depth" => match value.parse::<usize>() {
+                    Ok(d) if d >= 1 => {
+                        for q in &self.queues {
+                            q.set_depth(d);
+                        }
+                        Ok(d.to_string())
+                    }
+                    _ => Err(format!("`{value}` is not a queue depth >= 1")),
+                },
+                "shed" => match ShedPolicy::parse(value) {
+                    Some(policy) => {
+                        for q in &self.queues {
+                            q.set_policy(policy);
+                        }
+                        Ok(policy.name().to_string())
+                    }
+                    None => Err(format!("`{value}` is not `reject` or `evict-farthest`")),
+                },
+                "gather_cap_us" => match value.parse::<f64>() {
+                    Ok(us) if us.is_finite() && us >= 0.0 => {
+                        self.tuning.set_gather_cap(Duration::from_secs_f64(us * 1e-6));
+                        Ok(format!("{us}"))
+                    }
+                    _ => Err(format!("`{value}` is not a non-negative microsecond count")),
+                },
+                "trace_sample" => match value.parse::<u32>() {
+                    Ok(n) => {
+                        self.obs.set_sample_every(n);
+                        Ok(n.to_string())
+                    }
+                    Err(_) => Err(format!("`{value}` is not a u32 sample divisor")),
+                },
+                "balance.hot_queue" | "balance.idle_queue" | "balance.min_gap" => {
+                    if !self.cfg.balance.enabled {
+                        Err("rebalancing is disabled (restart-only: [sched] rebalance)"
+                            .to_string())
+                    } else {
+                        match value.parse::<usize>() {
+                            Ok(v) => {
+                                match knob.as_str() {
+                                    "balance.hot_queue" => self.tuning.set_hot_queue(v),
+                                    "balance.idle_queue" => self.tuning.set_idle_queue(v),
+                                    _ => self.tuning.set_min_gap(v),
+                                }
+                                Ok(v.to_string())
+                            }
+                            Err(_) => Err(format!("`{value}` is not a usize threshold")),
+                        }
+                    }
+                }
+                "shards" | "batch" | "precision" | "deadline_us" | "addr" | "wire" => {
+                    Err("restart-only knob (shapes allocations or thread topology)".to_string())
+                }
+                _ => Err("unknown knob".to_string()),
+            };
+            match result {
+                Ok(applied) => out.applied.push((knob.clone(), applied)),
+                Err(reason) => out.rejected.push((knob.clone(), reason)),
+            }
+        }
+        out
     }
 
     /// Stop accepting work, shed whatever is still queued, and join the
@@ -795,5 +1098,166 @@ mod tests {
         let dump = fabric.obs().dump();
         assert_eq!(dump.len(), 8);
         assert!(dump.iter().all(|r| r.marks_ns.len() == N_STAGES));
+    }
+
+    fn wide_watchdog() -> WatchdogConfig {
+        WatchdogConfig {
+            min_m: -1e12,
+            max_m: 1e12,
+            max_slew_m_s: 1e15,
+            stuck_after: 1 << 30,
+            ..Default::default()
+        }
+    }
+
+    /// Drain → restore round trip at the fabric level: session state
+    /// survives the "process boundary" (a second Fabric) bit-for-bit,
+    /// and the restored stream continues exactly where an uninterrupted
+    /// serial reference says it should (the full multi-session TCP
+    /// property lives in rust/tests/operator_recovery.rs).
+    #[test]
+    fn drain_then_restore_continues_streams_bit_identically() {
+        use crate::kernel::{FloatPath, ScalarKernel};
+        let p = params();
+        let mk = || {
+            let mut cfg = FabricConfig::new(2, 2);
+            cfg.watchdog = wide_watchdog();
+            Fabric::new(&p, cfg).unwrap()
+        };
+        let sessions = ["ops-a", "ops-b", "ops-c"];
+        let mut refs: Vec<ScalarKernel<FloatPath>> = sessions
+            .iter()
+            .map(|_| ScalarKernel::new(PackedModel::shared(&p), FloatPath))
+            .collect();
+        let mut rng = Rng::new(2026);
+        let first = mk();
+        for _ in 0..7 {
+            for (name, reference) in sessions.iter().zip(&mut refs) {
+                let w = window(&mut rng);
+                let want = reference.step_window(&w[..]);
+                assert_eq!(first.infer(name, &w).unwrap().estimate, want);
+            }
+        }
+        let drained = first.drain(Duration::from_secs(5)).unwrap();
+        assert_eq!(drained.sessions.len(), sessions.len());
+        assert_eq!(drained.state_len, first.state_len);
+        assert_eq!(drained.datapath, "f64");
+        assert!(drained.routes.is_empty(), "no rebalancing, no overrides");
+        // Draining is terminal: admission now sheds with the retryable
+        // drain error, not a hang.
+        let err = first.submit("ops-a", &[0.0; INPUT_SIZE], None).unwrap_err();
+        assert!(format!("{err}").contains("draining"), "{err}");
+        // Serialize through the real wire form, as the server does.
+        let snap = drained.to_snapshot();
+        let bytes = snap.encode().unwrap();
+        let snap = SnapshotFile::decode(&bytes).unwrap();
+        let second = mk();
+        assert_eq!(second.restore(&snap).unwrap(), sessions.len());
+        for _ in 0..7 {
+            for (name, reference) in sessions.iter().zip(&mut refs) {
+                let w = window(&mut rng);
+                let want = reference.step_window(&w[..]);
+                assert_eq!(
+                    second.infer(name, &w).unwrap().estimate,
+                    want,
+                    "restored stream diverged from the uninterrupted reference"
+                );
+            }
+        }
+    }
+
+    /// Restore fails loudly — wrong datapath, wrong state width, routes
+    /// without rebalancing, out-of-range shard — instead of serving
+    /// wrong numbers.
+    #[test]
+    fn restore_refuses_mismatched_snapshots() {
+        let p = params();
+        let fabric = Fabric::new(&p, FabricConfig::new(2, 2)).unwrap();
+        let good_state = vec![0.5; fabric.state_len];
+        let base = SnapshotFile {
+            datapath: "f64".into(),
+            state_len: fabric.state_len as u32,
+            sessions: vec![SessionRecord { session: 7, state: good_state.clone() }],
+            routes: vec![],
+        };
+        assert_eq!(fabric.restore(&base).unwrap(), 1);
+        let wrong_tier = SnapshotFile { datapath: "f32".into(), ..base.clone() };
+        assert!(format!("{}", fabric.restore(&wrong_tier).unwrap_err()).contains("datapath"));
+        let wrong_width = SnapshotFile {
+            state_len: 3,
+            sessions: vec![SessionRecord { session: 7, state: vec![0.5; 3] }],
+            ..base.clone()
+        };
+        assert!(format!("{}", fabric.restore(&wrong_width).unwrap_err()).contains("words"));
+        let routed = SnapshotFile { routes: vec![(7, 1)], ..base.clone() };
+        assert!(format!("{}", fabric.restore(&routed).unwrap_err()).contains("rebalancing"));
+        let mut cfg = FabricConfig::new(2, 2);
+        cfg.balance.enabled = true;
+        let balanced = Fabric::new(&p, cfg).unwrap();
+        let out_of_range = SnapshotFile { routes: vec![(7, 9)], ..base.clone() };
+        assert!(format!("{}", balanced.restore(&out_of_range).unwrap_err()).contains("shard"));
+        assert_eq!(balanced.restore(&routed).unwrap(), 1);
+        assert_eq!(balanced.route_of(7), 1, "restored override must route");
+    }
+
+    /// A drained fabric with rebalancing exports its overlay, and a
+    /// restore re-installs it so sessions keep their migrated homes.
+    #[test]
+    fn drain_exports_routing_overrides() {
+        let p = params();
+        let mk = || {
+            let mut cfg = FabricConfig::new(3, 2);
+            cfg.balance.enabled = true;
+            cfg.watchdog = wide_watchdog();
+            Fabric::new(&p, cfg).unwrap()
+        };
+        let fabric = mk();
+        let c = fabric.infer("roam", &[1.0; INPUT_SIZE]).unwrap();
+        let target = (c.shard + 1) % fabric.shards();
+        fabric.migrate_session("roam", target).unwrap();
+        for _ in 0..200 {
+            if fabric.infer("roam", &[1.0; INPUT_SIZE]).unwrap().shard == target {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(fabric.shard_for("roam"), target);
+        let drained = fabric.drain(Duration::from_secs(5)).unwrap();
+        let hash = session_hash("roam");
+        assert!(drained.routes.contains(&(hash, target)), "{:?}", drained.routes);
+        let second = mk();
+        second.restore(&drained.to_snapshot()).unwrap();
+        assert_eq!(second.shard_for("roam"), target, "override must survive restore");
+    }
+
+    /// Live reload: accepted knobs change running behaviour, refused
+    /// knobs report a reason and leave state untouched.
+    #[test]
+    fn apply_reload_partitions_applied_and_rejected() {
+        let p = params();
+        let fabric = Fabric::new(&p, FabricConfig::new(1, 1)).unwrap();
+        let out = fabric.apply_reload(&[
+            ("queue_depth".into(), "3".into()),
+            ("shed".into(), "evict-farthest".into()),
+            ("gather_cap_us".into(), "50".into()),
+            ("balance.hot_queue".into(), "16".into()),
+            ("shards".into(), "8".into()),
+            ("nonsense".into(), "1".into()),
+            ("queue_depth".into(), "0".into()),
+        ]);
+        assert_eq!(
+            out.applied,
+            vec![
+                ("queue_depth".to_string(), "3".to_string()),
+                ("shed".to_string(), "evict-farthest".to_string()),
+                ("gather_cap_us".to_string(), "50".to_string()),
+            ]
+        );
+        assert!(!out.is_clean());
+        let rejected: Vec<&str> = out.rejected.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(rejected, vec!["balance.hot_queue", "shards", "nonsense", "queue_depth"]);
+        assert_eq!(fabric.queues[0].depth(), 3, "bad later value must not undo the good one");
+        assert_eq!(fabric.queues[0].policy(), ShedPolicy::EvictFarthest);
+        assert_eq!(fabric.tuning().gather_cap(), Duration::from_micros(50));
     }
 }

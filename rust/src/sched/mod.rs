@@ -73,11 +73,13 @@ pub mod balance;
 pub mod fabric;
 pub mod metrics;
 pub mod queue;
+pub mod reload;
 pub mod session;
 pub mod shard;
 
 pub use balance::{BalanceConfig, LoadBoard, RoutingOverlay};
-pub use fabric::{Completion, Fabric, FabricConfig, Pending, Shed};
+pub use fabric::{Completion, DrainedFabric, Fabric, FabricConfig, Pending, Shed};
+pub use reload::{LiveTuning, ReloadOutcome};
 pub use metrics::{AtomicHist, SchedMetrics, SchedSnapshot, ShardSnapshot};
 pub use queue::{CompletionTx, ReplyTo, ShedPolicy};
 pub use session::{

@@ -153,6 +153,21 @@ impl ShedPolicy {
             Self::EvictFarthest => "evict-farthest",
         }
     }
+
+    /// Atomic encoding (live reload stores the policy in an `AtomicU8`).
+    fn to_u8(self) -> u8 {
+        match self {
+            Self::Reject => 0,
+            Self::EvictFarthest => 1,
+        }
+    }
+
+    fn from_u8(b: u8) -> Self {
+        match b {
+            1 => Self::EvictFarthest,
+            _ => Self::Reject,
+        }
+    }
 }
 
 /// Result of an admission attempt.
@@ -182,10 +197,13 @@ struct Inner {
     closed: bool,
 }
 
-/// The bounded MPSC deadline queue.
+/// The bounded MPSC deadline queue.  Depth and shed policy are atomics
+/// so the operator plane can retune admission live (`hrd reload`,
+/// docs/OPERATIONS.md) without stopping the worker; both are read once
+/// per push, so a reload applies cleanly from the next admission on.
 pub struct ShardQueue {
-    depth: usize,
-    policy: ShedPolicy,
+    depth: std::sync::atomic::AtomicUsize,
+    policy: std::sync::atomic::AtomicU8,
     inner: Mutex<Inner>,
     cv: Condvar,
 }
@@ -193,8 +211,8 @@ pub struct ShardQueue {
 impl ShardQueue {
     pub fn new(depth: usize, policy: ShedPolicy) -> Self {
         Self {
-            depth: depth.max(1),
-            policy,
+            depth: std::sync::atomic::AtomicUsize::new(depth.max(1)),
+            policy: std::sync::atomic::AtomicU8::new(policy.to_u8()),
             inner: Mutex::new(Inner {
                 jobs: BTreeMap::new(),
                 controls: VecDeque::new(),
@@ -205,6 +223,28 @@ impl ShardQueue {
         }
     }
 
+    /// Current admission depth bound.
+    pub fn depth(&self) -> usize {
+        self.depth.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Retune the depth bound (live reload).  Shrinking below the
+    /// current backlog sheds nothing retroactively — the bound applies
+    /// to new admissions only.
+    pub fn set_depth(&self, depth: usize) {
+        self.depth.store(depth.max(1), std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Current shed policy.
+    pub fn policy(&self) -> ShedPolicy {
+        ShedPolicy::from_u8(self.policy.load(std::sync::atomic::Ordering::Relaxed))
+    }
+
+    /// Retune the shed policy (live reload).
+    pub fn set_policy(&self, policy: ShedPolicy) {
+        self.policy.store(policy.to_u8(), std::sync::atomic::Ordering::Relaxed);
+    }
+
     /// Jobs currently queued (excludes controls).
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().jobs.len()
@@ -212,6 +252,13 @@ impl ShardQueue {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Controls currently queued (drain quiesces on this reaching zero
+    /// too: an unpopped `Adopt` can carry lane state that only the
+    /// owning worker can fold into its export).
+    pub fn controls_pending(&self) -> usize {
+        self.inner.lock().unwrap().controls.len()
     }
 
     /// Whether [`Self::close`] has run (a timed `pop` returning `None`
@@ -227,13 +274,13 @@ impl ShardQueue {
         if g.closed {
             return PushOutcome::Closed(job);
         }
-        let outcome = if g.jobs.len() < self.depth {
+        let outcome = if g.jobs.len() < self.depth() {
             let key = (job.deadline, g.seq);
             g.seq += 1;
             g.jobs.insert(key, job);
             PushOutcome::Admitted
         } else {
-            match self.policy {
+            match self.policy() {
                 ShedPolicy::Reject => PushOutcome::Rejected(job),
                 ShedPolicy::EvictFarthest => {
                     let farthest = *g.jobs.keys().next_back().expect("full queue is non-empty");

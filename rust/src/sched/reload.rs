@@ -1,0 +1,130 @@
+//! Live-reloadable fabric tuning (`hrd reload` / SIGHUP — the operator
+//! plane, `docs/OPERATIONS.md`).
+//!
+//! A running fabric can retune a deliberately small knob subset without
+//! dropping connections or restarting workers: admission (queue depth,
+//! shed policy — stored in the queues themselves, see
+//! [`super::queue::ShardQueue`]), the gather window cap, the rebalance
+//! pressure thresholds, and trace sampling.  Everything structural —
+//! shard count, lanes per shard, precision tier, wire options — is
+//! restart-only: those knobs shape allocations and thread topology at
+//! [`super::Fabric::new`] time.
+//!
+//! [`LiveTuning`] is the shared atomic cell the workers read on their
+//! serving path; all loads are relaxed (a reload applies "soon", not
+//! "atomically across shards" — each worker picks the new values up at
+//! its next gather/steal decision, which is the same consistency the
+//! knobs had at startup).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use super::balance::BalanceConfig;
+
+/// The shared cell of live-reloadable knobs (one per fabric, `Arc`ed
+/// into every worker context).
+#[derive(Debug)]
+pub struct LiveTuning {
+    /// Upper bound on any single adaptive-gather wait, nanoseconds.
+    gather_cap_ns: AtomicU64,
+    /// [`BalanceConfig::hot_queue`].
+    hot_queue: AtomicUsize,
+    /// [`BalanceConfig::idle_queue`].
+    idle_queue: AtomicUsize,
+    /// [`BalanceConfig::min_gap`].
+    min_gap: AtomicUsize,
+}
+
+impl LiveTuning {
+    pub fn new(gather_cap: Duration, balance: &BalanceConfig) -> Self {
+        Self {
+            gather_cap_ns: AtomicU64::new(gather_cap.as_nanos() as u64),
+            hot_queue: AtomicUsize::new(balance.hot_queue),
+            idle_queue: AtomicUsize::new(balance.idle_queue),
+            min_gap: AtomicUsize::new(balance.min_gap),
+        }
+    }
+
+    pub fn gather_cap(&self) -> Duration {
+        Duration::from_nanos(self.gather_cap_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn set_gather_cap(&self, cap: Duration) {
+        self.gather_cap_ns.store(cap.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn hot_queue(&self) -> usize {
+        self.hot_queue.load(Ordering::Relaxed)
+    }
+
+    pub fn set_hot_queue(&self, v: usize) {
+        self.hot_queue.store(v, Ordering::Relaxed);
+    }
+
+    pub fn idle_queue(&self) -> usize {
+        self.idle_queue.load(Ordering::Relaxed)
+    }
+
+    pub fn set_idle_queue(&self, v: usize) {
+        self.idle_queue.store(v, Ordering::Relaxed);
+    }
+
+    pub fn min_gap(&self) -> usize {
+        self.min_gap.load(Ordering::Relaxed)
+    }
+
+    pub fn set_min_gap(&self, v: usize) {
+        self.min_gap.store(v, Ordering::Relaxed);
+    }
+
+    /// `base` with the live pressure thresholds substituted in — workers
+    /// build this per steal decision so `LoadBoard::plan_steal` keeps
+    /// its plain `&BalanceConfig` signature.
+    pub fn balance_now(&self, base: &BalanceConfig) -> BalanceConfig {
+        BalanceConfig {
+            hot_queue: self.hot_queue(),
+            idle_queue: self.idle_queue(),
+            min_gap: self.min_gap(),
+            ..base.clone()
+        }
+    }
+}
+
+/// What a reload request did, knob by knob (rendered into the
+/// `ReloadReply` JSON on both protocols).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ReloadOutcome {
+    /// `(knob, applied value)` — accepted and now live.
+    pub applied: Vec<(String, String)>,
+    /// `(knob, reason)` — refused; the running value is unchanged.
+    pub rejected: Vec<(String, String)>,
+}
+
+impl ReloadOutcome {
+    pub fn is_clean(&self) -> bool {
+        self.rejected.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuning_round_trips_and_overrides_balance() {
+        let base = BalanceConfig { hot_queue: 8, idle_queue: 2, min_gap: 4, ..Default::default() };
+        let t = LiveTuning::new(Duration::from_micros(200), &base);
+        assert_eq!(t.gather_cap(), Duration::from_micros(200));
+        assert_eq!(t.balance_now(&base).hot_queue, 8);
+        t.set_gather_cap(Duration::from_micros(50));
+        t.set_hot_queue(16);
+        t.set_idle_queue(1);
+        t.set_min_gap(9);
+        assert_eq!(t.gather_cap(), Duration::from_micros(50));
+        let live = t.balance_now(&base);
+        assert_eq!((live.hot_queue, live.idle_queue, live.min_gap), (16, 1, 9));
+        // Restart-only knobs pass through from the base untouched.
+        assert_eq!(live.enabled, base.enabled);
+        assert_eq!(live.steal_poll, base.steal_poll);
+    }
+}

@@ -200,6 +200,14 @@ impl LaneTable {
         self.by_session.get(&session).copied()
     }
 
+    /// Every resident session and its lane, sorted by session hash so
+    /// the drain-to-disk export is deterministic (`docs/OPERATIONS.md`).
+    pub fn residents(&self) -> Vec<(u64, usize)> {
+        let mut out: Vec<(u64, usize)> = self.by_session.iter().map(|(&s, &l)| (s, l)).collect();
+        out.sort_unstable();
+        out
+    }
+
     fn touch(&mut self, lane: usize) {
         self.tick += 1;
         self.last_used[lane] = self.tick;

@@ -53,6 +53,7 @@ use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 use super::fabric::{Completion, Shed};
 use super::metrics::SchedMetrics;
 use super::queue::{Control, Migration, Popped, QueuedJob, ReplyTo, ShardQueue, StolenSession};
+use super::reload::LiveTuning;
 use super::session::{LaneAssign, LaneTable};
 
 /// Which numeric datapath a shard's kernel session runs.
@@ -341,8 +342,16 @@ pub(crate) struct ShardWorkerCtx {
     pub batch: usize,
     /// Stop gathering when the most urgent slack drops below this.
     pub gather_floor: Duration,
-    /// Upper bound on any single wait for further arrivals.
-    pub gather_cap: Duration,
+    /// Live-reloadable knobs (gather cap, rebalance pressure
+    /// thresholds) — read on the serving path, written by `hrd reload`.
+    pub tuning: Arc<LiveTuning>,
+}
+
+impl ShardWorkerCtx {
+    /// The balance config with the live pressure thresholds folded in.
+    fn balance_now(&self) -> BalanceConfig {
+        self.tuning.balance_now(&self.balance)
+    }
 }
 
 fn send_completion(reply: &ReplyTo, msg: Result<Completion, Shed>) {
@@ -710,7 +719,7 @@ fn execute_steals(
                 // mid-adoption (its live state still inside an unpopped
                 // Adopt control), and exporting it would hand the thief
                 // a zeroed lane.
-                let victim = if ctx.queue.len() >= ctx.balance.hot_queue {
+                let victim = if ctx.queue.len() >= ctx.tuning.hot_queue() {
                     ctx.queue.busiest_session(|s| table.lane_of(s).is_some())
                 } else {
                     None
@@ -742,7 +751,7 @@ fn maybe_steal(ctx: &ShardWorkerCtx, table: &LaneTable, st: &mut WorkerState) {
     }
     let free_lanes = table.lanes() - table.occupancy();
     if let Some(victim) =
-        ctx.board.plan_steal(&ctx.balance, ctx.index, ctx.queue.len(), free_lanes)
+        ctx.board.plan_steal(&ctx.balance_now(), ctx.index, ctx.queue.len(), free_lanes)
     {
         st.steal_sent_at = Some(Instant::now());
         ctx.metrics.steal_requests.fetch_add(1, Relaxed);
@@ -847,8 +856,10 @@ pub(crate) fn execute_batch(
 }
 
 /// The worker thread body.  Returns when the queue is closed and fully
-/// drained.
-pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) {
+/// drained, handing back every resident session's exported lane state —
+/// a plain shutdown drops the exports, a drain (`Fabric::drain`) writes
+/// them into the recovery snapshot.
+pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) -> Vec<(u64, Vec<f64>)> {
     let lanes = core.lanes();
     let mut table = LaneTable::new(lanes);
     let mut st = WorkerState::default();
@@ -892,9 +903,13 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) {
             };
             let slack =
                 earliest.checked_duration_since(Instant::now()).unwrap_or(Duration::ZERO);
-            let Some(wait) =
-                gather_wait(slack, &st.ewma_pass, &st.ewma_arrival, ctx.gather_floor, ctx.gather_cap)
-            else {
+            let Some(wait) = gather_wait(
+                slack,
+                &st.ewma_pass,
+                &st.ewma_arrival,
+                ctx.gather_floor,
+                ctx.tuning.gather_cap(),
+            ) else {
                 break;
             };
             match ctx.queue.pop(Some(wait)) {
@@ -946,13 +961,24 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) {
     }
 
     // Shutdown: an adoption still waiting for a lane carries live
-    // clients — shed them, never strand them.
+    // clients — shed them, never strand them.  Its state, however, is
+    // still the session's live stream — export it alongside the
+    // residents so a drain never loses a mid-flight migration.
+    let mut exports: Vec<(u64, Vec<f64>)> = Vec::new();
     for stolen in st.pending_adopts {
         for job in stolen.jobs {
             ctx.metrics.shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             send_completion(&job.reply, Err(Shed::Shutdown));
         }
+        if let Some(state) = stolen.state {
+            exports.push((stolen.session, state));
+        }
     }
+    for (session, lane) in table.residents() {
+        exports.push((session, core.export_lane(lane)));
+    }
+    exports.sort_by_key(|(session, _)| *session);
+    exports
 }
 
 #[cfg(test)]
@@ -992,7 +1018,10 @@ mod tests {
             balance: BalanceConfig::default(),
             batch,
             gather_floor: Duration::from_micros(5),
-            gather_cap: Duration::from_micros(200),
+            tuning: Arc::new(LiveTuning::new(
+                Duration::from_micros(200),
+                &BalanceConfig::default(),
+            )),
         }
     }
 

@@ -195,6 +195,36 @@ impl WireClient {
         self.expect(FrameType::Ok)?;
         Ok(())
     }
+
+    /// Operator status probe: stats snapshot plus the `operator` object
+    /// (drain/restore/reload counters; see `docs/OPERATIONS.md`).
+    pub fn status(&mut self) -> Result<Json> {
+        self.writer.send_empty(FrameType::Status)?;
+        let p = self.expect(FrameType::StatusReply)?;
+        Json::parse(std::str::from_utf8(&p)?)
+    }
+
+    /// Drain the fabric to a snapshot file on the server host.  The
+    /// server quiesces in-flight work, serializes live sessions +
+    /// routing, replies with the outcome, then shuts down.
+    pub fn drain(&mut self) -> Result<Json> {
+        self.writer.send_empty(FrameType::Drain)?;
+        let p = self.expect(FrameType::DrainReply)?;
+        Json::parse(std::str::from_utf8(&p)?)
+    }
+
+    /// Apply a live config reload; `set` is the knob name -> value list
+    /// (vocabulary in `docs/OPERATIONS.md`).  Returns the applied /
+    /// rejected partition.
+    pub fn reload(&mut self, set: &[(String, String)]) -> Result<Json> {
+        let body = Json::obj(
+            set.iter().map(|(k, v)| (k.as_str(), Json::Str(v.clone()))).collect(),
+        )
+        .to_string();
+        self.writer.send_reload(&body)?;
+        let p = self.expect(FrameType::ReloadReply)?;
+        Json::parse(std::str::from_utf8(&p)?)
+    }
 }
 
 /// Map a wire completion record onto the protocol-agnostic reply.

@@ -96,6 +96,16 @@ pub enum FrameType {
     /// v1 connections: a pre-obs server rejects it gracefully as an
     /// unknown type.
     TraceDump = 0x08,
+    /// c->s: operator status probe (empty payload).  Like
+    /// [`FrameType::TraceDump`], works on v1 connections.
+    Status = 0x09,
+    /// c->s: stop admission, quiesce the fabric and snapshot every live
+    /// session to disk (empty payload).  Terminal: the server exits
+    /// after replying (see `docs/OPERATIONS.md`).
+    Drain = 0x0A,
+    /// c->s: apply a live config reload.  Payload is a UTF-8 JSON knob
+    /// object (the `[reload]`-able subset, see `docs/OPERATIONS.md`).
+    Reload = 0x0B,
     /// s->c: negotiated version (`u16`).
     HelloAck = 0x81,
     /// s->c: one completed inference ([`CompletionRec`]).
@@ -111,6 +121,15 @@ pub enum FrameType {
     /// s->c: flight-recorder dump as UTF-8 JSON text (traces + stage
     /// summaries + stats; see `docs/OBSERVABILITY.md`).
     TraceDumpReply = 0x87,
+    /// s->c: operator status as UTF-8 JSON text (lifecycle state,
+    /// drain/restore counters, snapshot path).
+    StatusReply = 0x88,
+    /// s->c: drain outcome as UTF-8 JSON text (snapshot path, sessions
+    /// serialized, bytes written).
+    DrainReply = 0x89,
+    /// s->c: reload outcome as UTF-8 JSON text (knobs applied /
+    /// rejected).
+    ReloadReply = 0x8A,
 }
 
 impl FrameType {
@@ -124,6 +143,9 @@ impl FrameType {
             0x06 => Self::Shutdown,
             0x07 => Self::SubmitV2,
             0x08 => Self::TraceDump,
+            0x09 => Self::Status,
+            0x0A => Self::Drain,
+            0x0B => Self::Reload,
             0x81 => Self::HelloAck,
             0x82 => Self::Completion,
             0x83 => Self::CompletionBatch,
@@ -131,6 +153,9 @@ impl FrameType {
             0x85 => Self::Ok,
             0x86 => Self::StatsReply,
             0x87 => Self::TraceDumpReply,
+            0x88 => Self::StatusReply,
+            0x89 => Self::DrainReply,
+            0x8A => Self::ReloadReply,
             _ => return None,
         })
     }
@@ -986,6 +1011,31 @@ mod tests {
                 assert_eq!(consumed, f.len());
             }
             other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn operator_frame_types_are_pinned() {
+        // The operator-plane verbs (docs/OPERATIONS.md) are part of the
+        // protocol surface exactly like the introspection verbs above.
+        for (req, reply, req_byte, reply_byte) in [
+            (FrameType::Status, FrameType::StatusReply, 0x09u8, 0x88u8),
+            (FrameType::Drain, FrameType::DrainReply, 0x0A, 0x89),
+            (FrameType::Reload, FrameType::ReloadReply, 0x0B, 0x8A),
+        ] {
+            assert_eq!(req as u8, req_byte);
+            assert_eq!(reply as u8, reply_byte);
+            assert_eq!(FrameType::from_u8(req_byte), Some(req));
+            assert_eq!(FrameType::from_u8(reply_byte), Some(reply));
+            let f = encode_frame(req, b"");
+            match decode_step(&f) {
+                DecodeStep::Frame { ty, payload, consumed } => {
+                    assert_eq!(ty, req_byte);
+                    assert!(payload.is_empty());
+                    assert_eq!(consumed, f.len());
+                }
+                other => panic!("expected frame, got {other:?}"),
+            }
         }
     }
 

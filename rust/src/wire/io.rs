@@ -301,6 +301,27 @@ impl<W: Write> FrameWriter<W> {
     pub fn send_trace_json(&mut self, json: &str) -> std::io::Result<()> {
         self.send_with(FrameType::TraceDumpReply, |b| b.extend_from_slice(json.as_bytes()))
     }
+
+    /// Operator status reply (UTF-8 JSON; see `docs/OPERATIONS.md`).
+    pub fn send_status_json(&mut self, json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::StatusReply, |b| b.extend_from_slice(json.as_bytes()))
+    }
+
+    /// Drain outcome reply (UTF-8 JSON; see `docs/OPERATIONS.md`).
+    pub fn send_drain_json(&mut self, json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::DrainReply, |b| b.extend_from_slice(json.as_bytes()))
+    }
+
+    /// Live-reload request (client -> server): payload is a UTF-8 JSON
+    /// object of knob name -> value strings (`docs/OPERATIONS.md`).
+    pub fn send_reload(&mut self, set_json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::Reload, |b| b.extend_from_slice(set_json.as_bytes()))
+    }
+
+    /// Live-reload outcome reply (UTF-8 JSON applied/rejected lists).
+    pub fn send_reload_json(&mut self, json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::ReloadReply, |b| b.extend_from_slice(json.as_bytes()))
+    }
 }
 
 #[cfg(test)]

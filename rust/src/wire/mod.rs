@@ -31,6 +31,8 @@
 //!   stream: one reused buffer each, payload views borrow the receive
 //!   buffer (zero-copy), automatic resync past corrupt spans;
 //! * [`f16`] — IEEE binary16 narrow/widen for v2 sample payloads;
+//! * [`snapshot`] — the drain-to-disk session snapshot file codec
+//!   (versioned "HRDS" header + CRC trailer, `docs/OPERATIONS.md`);
 //! * [`flow`] — [`flow::CreditGate`], the per-connection credit window
 //!   both ends of a v2 connection run (grant at `HelloAck`, one credit
 //!   per in-flight window, replenished by completion frames);
@@ -60,6 +62,7 @@ pub mod f16;
 pub mod flow;
 pub mod frame;
 pub mod io;
+pub mod snapshot;
 
 pub use client::{PipeEvent, PipelineOptions, PipelinedClient, WireClient};
 pub use crc::crc32;
@@ -71,3 +74,4 @@ pub use frame::{
     TRAILER_LEN, VERSION, VERSION_V2,
 };
 pub use io::{FrameReader, FrameWriter, Recv, Reject};
+pub use snapshot::{SessionRecord, SnapshotFile, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};

@@ -1,0 +1,304 @@
+//! `wire::snapshot` — the drain-to-disk session snapshot file codec.
+//!
+//! A drain (see `docs/OPERATIONS.md`) quiesces the fabric and serializes
+//! every resident session's recurrent state plus the routing-overlay
+//! overrides into one file, so a restarted server (`serve-tcp
+//! --restore`) resumes reconnecting sessions with bit-identical
+//! estimates.  The format is deliberately dumb and fully checked:
+//!
+//! ```text
+//!  magic "HRDS" | version u16 | flags u16
+//!  | dp_len u8 | datapath tag bytes (UTF-8, e.g. "f64"/"f32"/"fp16")
+//!  | state_len u32 | n_sessions u32 | n_routes u32
+//!  | n_sessions x ( session_hash u64 | state_len x f64-as-u64-bits )
+//!  | n_routes   x ( session_hash u64 | shard u32 )
+//!  | crc32 over every preceding byte
+//! ```
+//!
+//! All integers little-endian.  State values travel as raw IEEE-754 bit
+//! patterns (`f64::to_bits`), so the round trip is bit-exact — the whole
+//! point of the restore-parity guarantee.  The datapath tag pins the
+//! precision tier the states came from: restoring an `"f32"` snapshot
+//! into an `"fp16"` fabric must fail loudly, never reinterpret.
+//!
+//! Decoding is strict: short buffer, bad magic, unknown version, CRC
+//! mismatch, count/length inconsistency, and trailing garbage are all
+//! hard errors.  A truncated or corrupted snapshot NEVER silently
+//! decodes to fewer sessions.
+
+use anyhow::{bail, Context, Result};
+
+use super::crc::crc32;
+
+/// File magic — distinct from the wire frame magic ("HRDW") so a
+/// snapshot file accidentally fed to a frame decoder (or vice versa) is
+/// rejected immediately.
+pub const SNAPSHOT_MAGIC: &[u8; 4] = b"HRDS";
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// One resident session: its FNV route hash and the exported lane state
+/// (f64 either way — f32 tiers widen losslessly, see `kernel::stream`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionRecord {
+    pub session: u64,
+    pub state: Vec<f64>,
+}
+
+/// The decoded snapshot: everything a restarted fabric needs to re-home
+/// the drained sessions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotFile {
+    /// Opaque precision/datapath tag; restore refuses a mismatch.
+    pub datapath: String,
+    /// Exported state vector length per session (tier-uniform).
+    pub state_len: u32,
+    /// Every session resident at drain time.
+    pub sessions: Vec<SessionRecord>,
+    /// Routing-overlay overrides (session hash -> shard index) active at
+    /// drain time, re-installed before the restored server admits
+    /// traffic so reconnects land on the shard holding their state.
+    pub routes: Vec<(u64, u32)>,
+}
+
+impl SnapshotFile {
+    /// Serialize to the on-disk byte format (header + records + CRC).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        if self.datapath.len() > u8::MAX as usize {
+            bail!("datapath tag too long: {} bytes", self.datapath.len());
+        }
+        for rec in &self.sessions {
+            if rec.state.len() != self.state_len as usize {
+                bail!(
+                    "session {:#018x}: state length {} != declared {}",
+                    rec.session,
+                    rec.state.len(),
+                    self.state_len
+                );
+            }
+        }
+        let mut out = Vec::with_capacity(
+            32 + self.sessions.len() * (8 + self.state_len as usize * 8) + self.routes.len() * 12,
+        );
+        out.extend_from_slice(SNAPSHOT_MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags (reserved)
+        out.push(self.datapath.len() as u8);
+        out.extend_from_slice(self.datapath.as_bytes());
+        out.extend_from_slice(&self.state_len.to_le_bytes());
+        out.extend_from_slice(&(self.sessions.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.routes.len() as u32).to_le_bytes());
+        for rec in &self.sessions {
+            out.extend_from_slice(&rec.session.to_le_bytes());
+            for v in &rec.state {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        for (session, shard) in &self.routes {
+            out.extend_from_slice(&session.to_le_bytes());
+            out.extend_from_slice(&shard.to_le_bytes());
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode and fully validate an on-disk snapshot.  Every failure
+    /// mode is a distinct, loud error — restore must never degrade a
+    /// damaged snapshot into a fresh start.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        // CRC first: it covers the header too, so a flipped length field
+        // fails here instead of confusing the cursor below.
+        if bytes.len() < 4 + 2 + 2 + 1 + 4 + 4 + 4 + 4 {
+            bail!("snapshot truncated: {} bytes is shorter than the fixed header", bytes.len());
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 4);
+        let want = u32::from_le_bytes(trailer.try_into().unwrap());
+        let got = crc32(body);
+        if want != got {
+            bail!("snapshot CRC mismatch: stored {want:#010x}, computed {got:#010x} (corrupted or truncated file)");
+        }
+        let mut rd = SnapRd { buf: body, pos: 0 };
+        let magic = rd.bytes(4)?;
+        if magic != SNAPSHOT_MAGIC {
+            bail!("bad snapshot magic {magic:02x?} (expected {SNAPSHOT_MAGIC:02x?})");
+        }
+        let version = rd.u16()?;
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported snapshot version {version} (this build reads version {SNAPSHOT_VERSION})");
+        }
+        let _flags = rd.u16()?;
+        let dp_len = rd.u8()? as usize;
+        let datapath = std::str::from_utf8(rd.bytes(dp_len)?)
+            .context("snapshot datapath tag is not UTF-8")?
+            .to_string();
+        let state_len = rd.u32()?;
+        let n_sessions = rd.u32()?;
+        let n_routes = rd.u32()?;
+        let mut sessions = Vec::with_capacity(n_sessions.min(1 << 20) as usize);
+        for _ in 0..n_sessions {
+            let session = rd.u64()?;
+            let mut state = Vec::with_capacity(state_len as usize);
+            for _ in 0..state_len {
+                state.push(f64::from_bits(rd.u64()?));
+            }
+            sessions.push(SessionRecord { session, state });
+        }
+        let mut routes = Vec::with_capacity(n_routes.min(1 << 20) as usize);
+        for _ in 0..n_routes {
+            let session = rd.u64()?;
+            let shard = rd.u32()?;
+            routes.push((session, shard));
+        }
+        if rd.pos != body.len() {
+            bail!("snapshot has {} trailing bytes after the declared records", body.len() - rd.pos);
+        }
+        Ok(Self { datapath, state_len, sessions, routes })
+    }
+
+    /// Encode and write to `path` atomically (temp file + rename), so a
+    /// crash mid-write never leaves a half-snapshot under the real name.
+    pub fn write_to(&self, path: &std::path::Path) -> Result<usize> {
+        let bytes = self.encode()?;
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing snapshot temp file {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming snapshot into place at {}", path.display()))?;
+        Ok(bytes.len())
+    }
+
+    /// Read and decode `path`.
+    pub fn read_from(path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("decoding snapshot {}", path.display()))
+    }
+}
+
+/// Bounds-checked little-endian cursor (private twin of `frame::Rd`).
+struct SnapRd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapRd<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "snapshot truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SnapshotFile {
+        SnapshotFile {
+            datapath: "f64".to_string(),
+            state_len: 3,
+            sessions: vec![
+                SessionRecord { session: 0xdead_beef_cafe_f00d, state: vec![1.5, -0.25, 1e-300] },
+                SessionRecord { session: 42, state: vec![f64::MIN_POSITIVE, 0.0, -0.0] },
+            ],
+            routes: vec![(0xdead_beef_cafe_f00d, 1), (42, 0)],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let snap = sample();
+        let bytes = snap.encode().unwrap();
+        let back = SnapshotFile::decode(&bytes).unwrap();
+        assert_eq!(back, snap);
+        // -0.0 == 0.0 under PartialEq; pin the actual bits too.
+        assert_eq!(back.sessions[1].state[2].to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn empty_snapshot_round_trips() {
+        let snap = SnapshotFile {
+            datapath: "fp16".to_string(),
+            state_len: 90,
+            sessions: vec![],
+            routes: vec![],
+        };
+        let bytes = snap.encode().unwrap();
+        assert_eq!(SnapshotFile::decode(&bytes).unwrap(), snap);
+    }
+
+    #[test]
+    fn every_truncation_fails_loudly() {
+        let bytes = sample().encode().unwrap();
+        for n in 0..bytes.len() {
+            let err = SnapshotFile::decode(&bytes[..n]);
+            assert!(err.is_err(), "prefix of {n} bytes must not decode");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_rejected() {
+        let bytes = sample().encode().unwrap();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(SnapshotFile::decode(&bad).is_err(), "flip at byte {i} must be rejected");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = sample().encode().unwrap();
+        bytes.extend_from_slice(b"tail");
+        assert!(SnapshotFile::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn state_length_mismatch_refuses_to_encode() {
+        let mut snap = sample();
+        snap.sessions[0].state.push(0.0);
+        assert!(snap.encode().is_err());
+    }
+
+    #[test]
+    fn wire_magic_is_not_snapshot_magic() {
+        let frame = super::super::frame::encode_frame(super::super::frame::FrameType::Stats, b"");
+        assert!(SnapshotFile::decode(&frame).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join(format!("hrd-snap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("drain.hrds");
+        let snap = sample();
+        let bytes = snap.write_to(&path).unwrap();
+        assert_eq!(bytes, snap.encode().unwrap().len());
+        assert_eq!(SnapshotFile::read_from(&path).unwrap(), snap);
+        // A truncated file fails loudly through the same path.
+        let raw = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() / 2]).unwrap();
+        assert!(SnapshotFile::read_from(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

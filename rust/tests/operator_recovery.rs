@@ -1,0 +1,366 @@
+//! Operator-plane integration suite (`docs/OPERATIONS.md`): the
+//! drain -> restart -> `--restore` cycle must be *bit-identical* — a
+//! session that reconnects after a planned restart continues its
+//! estimate stream exactly where an uninterrupted server would have
+//! taken it.  Also: status/drain/reload round-trips on both protocols,
+//! loud failure on damaged snapshots, and the connection-teardown
+//! regression (a client dropped while the server dies must not hang).
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::coordinator::{Client, OperatorCtx, Server, WatchdogConfig, WireOptions};
+use hrd_lstm::kernel::{FloatPath, PackedModel, ScalarKernel};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::sched::{Fabric, FabricConfig, SchedSnapshot};
+use hrd_lstm::util::Json;
+use hrd_lstm::wire::{PipelineOptions, PipelinedClient, SnapshotFile, WireClient};
+
+fn params() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 5)
+}
+
+/// One-shard fabric config with a huge deadline and a wide watchdog, so
+/// estimates are the raw kernel output (bit-comparable to the serial
+/// reference kernel).
+fn fabric_config(lanes: usize) -> FabricConfig {
+    let mut fcfg = FabricConfig::new(1, lanes);
+    fcfg.deadline_us = 1e9;
+    fcfg.queue_depth = 256;
+    fcfg.watchdog = WatchdogConfig {
+        min_m: -1e12,
+        max_m: 1e12,
+        max_slew_m_s: 1e15,
+        stuck_after: 1 << 30,
+        ..Default::default()
+    };
+    fcfg
+}
+
+/// Fabric server with the operator plane configured to drain into
+/// `snapshot`; optionally restores `restore` into the fresh fabric
+/// before serving (the `serve-tcp --restore` path, library-level).
+fn start_server(
+    snapshot: &std::path::Path,
+    restore: Option<&SnapshotFile>,
+) -> (SocketAddr, JoinHandle<SchedSnapshot>) {
+    let fabric = Arc::new(Fabric::new(&params(), fabric_config(4)).unwrap());
+    if let Some(snap) = restore {
+        fabric.restore(snap).unwrap();
+    }
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    server.set_wire_options(WireOptions::default());
+    server.set_operator(OperatorCtx::with_paths(Some(snapshot.to_path_buf()), None));
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run_fabric(fabric).unwrap());
+    (addr, handle)
+}
+
+/// Deterministic per-session feature stream: window `k` of session `s`.
+fn swindow(s: usize, k: usize) -> [f32; INPUT_SIZE] {
+    let mut w = [0f32; INPUT_SIZE];
+    for (i, v) in w.iter_mut().enumerate() {
+        *v = ((s * 100_003 + k * 31 + i * 7) % 97) as f32 * 0.01 - 0.5;
+    }
+    w
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hrd_operator_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---- restart-recovery bit-parity ---------------------------------------
+
+/// The tentpole guarantee: N live sessions, drain to disk, restart a
+/// fresh process-equivalent server with `--restore`, reconnect, and the
+/// continued streams are bit-identical to an uninterrupted serial
+/// reference kernel that never saw a restart.
+#[test]
+fn drain_restart_restore_is_bit_identical() {
+    const SESSIONS: usize = 3;
+    const PRE: usize = 40; // windows before the drain
+    const POST: usize = 40; // windows after the restore
+    let snap_path = tmpdir("parity").join("drain.snap");
+    let _ = std::fs::remove_file(&snap_path);
+
+    // Uninterrupted reference: one serial kernel stream per session.
+    let model = PackedModel::shared(&params());
+    let mut reference: Vec<ScalarKernel<FloatPath>> =
+        (0..SESSIONS).map(|_| ScalarKernel::new(model.clone(), FloatPath)).collect();
+
+    // Phase 1: serve the first PRE windows of every session.
+    let (addr, handle) = start_server(&snap_path, None);
+    let addr_s = addr.to_string();
+    for s in 0..SESSIONS {
+        let mut c = WireClient::with_session(&addr_s, &format!("sess-{s}")).unwrap();
+        c.hello().unwrap();
+        for k in 0..PRE {
+            let w = swindow(s, k);
+            let (est, _) = c.infer(&w).unwrap();
+            let want = reference[s].step_window(&w[..]);
+            assert_eq!(
+                est.to_bits(),
+                want.to_bits(),
+                "session {s} window {k}: pre-drain stream diverged"
+            );
+        }
+        // Connection closes here; the session's lane state stays
+        // resident in the fabric — that is what the drain must export.
+    }
+
+    // Drain over the JSON protocol; the reply must account for every
+    // resident session and the server must then exit on its own.
+    let mut ctl = Client::connect(&addr_s).unwrap();
+    let reply = ctl.drain().unwrap();
+    assert_eq!(reply.get("drained"), Some(&Json::Bool(true)));
+    let num = |k: &str| reply.get(k).and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(num("sessions") as usize, SESSIONS, "drain missed resident sessions");
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, (SESSIONS * PRE) as u64);
+
+    // The snapshot round-trips through disk with the right shape.
+    let file = SnapshotFile::read_from(&snap_path).unwrap();
+    assert_eq!(file.datapath, "f64");
+    assert_eq!(file.sessions.len(), SESSIONS);
+    assert!(file.state_len > 0);
+
+    // Phase 2: fresh server, state restored from disk, sessions
+    // reconnect under the same names and just keep going.
+    let (addr2, handle2) = start_server(&snap_path, Some(&file));
+    let addr2_s = addr2.to_string();
+    for s in 0..SESSIONS {
+        let mut c = WireClient::with_session(&addr2_s, &format!("sess-{s}")).unwrap();
+        c.hello().unwrap();
+        for k in PRE..PRE + POST {
+            let w = swindow(s, k);
+            let (est, _) = c.infer(&w).unwrap();
+            let want = reference[s].step_window(&w[..]);
+            assert_eq!(
+                est.to_bits(),
+                want.to_bits(),
+                "session {s} window {k}: post-restore stream diverged from the \
+                 uninterrupted reference"
+            );
+        }
+    }
+    let mut ctl = WireClient::connect(&addr2_s).unwrap();
+    ctl.shutdown().unwrap();
+    let snap2 = handle2.join().unwrap();
+    assert_eq!(snap2.completed, (SESSIONS * POST) as u64);
+}
+
+/// Restoring into a fabric is visible to the operator plane: `status`
+/// reports the restored-session count and `draining: false` until a
+/// drain begins.
+#[test]
+fn status_reports_restore_counters() {
+    let dir = tmpdir("status");
+    let snap_path = dir.join("drain.snap");
+    let file = SnapshotFile {
+        datapath: "f64".into(),
+        state_len: 90,
+        sessions: vec![hrd_lstm::wire::SessionRecord { session: 0x5EED, state: vec![0.0; 90] }],
+        routes: vec![],
+    };
+    let fabric = Arc::new(Fabric::new(&params(), fabric_config(2)).unwrap());
+    let restored = fabric.restore(&file).unwrap();
+    assert_eq!(restored, 1);
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    server.set_operator(OperatorCtx::with_paths(Some(snap_path), None));
+    server.operator().note_restored(restored);
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run_fabric(fabric).unwrap());
+
+    let mut c = Client::connect(&addr).unwrap();
+    let status = c.status().unwrap();
+    let op = status.get("operator").expect("status reply carries an operator object");
+    assert_eq!(op.get("draining"), Some(&Json::Bool(false)));
+    assert_eq!(op.get("restored_sessions").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(op.get("drains").and_then(|v| v.as_f64()), Some(0.0));
+    assert_eq!(
+        op.get("datapath").and_then(|v| v.as_str()),
+        Some("f64"),
+        "status names the serving datapath"
+    );
+
+    let mut ctl = WireClient::connect(&addr).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+// ---- damaged snapshots fail loudly -------------------------------------
+
+/// A corrupted or truncated snapshot must be a loud, specific error —
+/// never a silently-fresh server that quietly forgot its sessions.
+#[test]
+fn damaged_snapshots_fail_loudly() {
+    let dir = tmpdir("damage");
+    let good_path = dir.join("good.snap");
+    let file = SnapshotFile {
+        datapath: "f64".into(),
+        state_len: 3,
+        sessions: vec![
+            hrd_lstm::wire::SessionRecord { session: 1, state: vec![0.25, -1.5, 3.0] },
+            hrd_lstm::wire::SessionRecord { session: 2, state: vec![0.5, 2.5, -0.125] },
+        ],
+        routes: vec![(2, 0)],
+    };
+    let bytes_written = file.write_to(&good_path).unwrap();
+    let bytes = std::fs::read(&good_path).unwrap();
+    assert_eq!(bytes.len(), bytes_written);
+    assert_eq!(SnapshotFile::read_from(&good_path).unwrap(), file);
+
+    // Bit-flip anywhere -> CRC mismatch (the CRC covers the header too).
+    for flip in [0usize, 6, bytes.len() / 2, bytes.len() - 5] {
+        let mut bad = bytes.clone();
+        bad[flip] ^= 0x40;
+        let err = SnapshotFile::decode(&bad).unwrap_err();
+        assert!(
+            format!("{err}").contains("CRC") || format!("{err}").contains("magic"),
+            "flipped byte {flip}: expected a CRC/magic error, got: {err}"
+        );
+    }
+
+    // Truncation at every prefix length fails (CRC or header check).
+    for cut in [0, 7, 20, bytes.len() - 1] {
+        assert!(
+            SnapshotFile::decode(&bytes[..cut]).is_err(),
+            "a {cut}-byte prefix of a {}-byte snapshot must not decode",
+            bytes.len()
+        );
+    }
+
+    // A datapath-mismatched (but internally valid) snapshot is refused
+    // by restore with an error that names both tiers.
+    let wrong_tier = SnapshotFile { datapath: "f32".into(), ..file.clone() };
+    let fabric = Fabric::new(&params(), fabric_config(2)).unwrap();
+    let err = fabric.restore(&wrong_tier).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("f32") && msg.contains("f64"), "{msg}");
+
+    // Wrong state length: loud, names both numbers.
+    let err = fabric.restore(&file).unwrap_err();
+    assert!(format!("{err}").contains("3 words"), "{err}");
+}
+
+// ---- lifecycle verbs on both protocols ---------------------------------
+
+/// `status` / `reload` / `drain` round-trip on the binary protocol, and
+/// `reload` partitions applied vs rejected knobs without failing the
+/// whole request.
+#[test]
+fn operator_verbs_round_trip_on_the_binary_protocol() {
+    let snap_path = tmpdir("verbs_bin").join("drain.snap");
+    let _ = std::fs::remove_file(&snap_path);
+    let (addr, handle) = start_server(&snap_path, None);
+    let mut c = WireClient::with_session(&addr.to_string(), "ops").unwrap();
+    c.hello().unwrap();
+    c.infer(&swindow(0, 0)).unwrap();
+
+    let status = c.status().unwrap();
+    let op = status.get("operator").expect("binary status reply carries an operator object");
+    assert_eq!(op.get("draining"), Some(&Json::Bool(false)));
+
+    // One live knob, one restart-only knob, one unknown knob: the live
+    // one applies, the others are rejected by name, and the request
+    // itself still succeeds (clean = false, no protocol error).
+    let set = vec![
+        ("queue_depth".to_string(), "128".to_string()),
+        ("shards".to_string(), "4".to_string()),
+        ("warp_factor".to_string(), "9".to_string()),
+    ];
+    let reply = c.reload(&set).unwrap();
+    assert_eq!(reply.get("clean"), Some(&Json::Bool(false)));
+    let applied = reply.get("applied").and_then(|v| v.as_obj()).unwrap();
+    assert_eq!(applied.get("queue_depth").and_then(|v| v.as_str()), Some("128"));
+    let rejected = reply.get("rejected").and_then(|v| v.as_obj()).unwrap();
+    assert!(rejected.contains_key("shards"), "restart-only knob must be rejected");
+    assert!(rejected.contains_key("warp_factor"), "unknown knob must be rejected");
+
+    // A clean reload reports clean = true.
+    let reply = c.reload(&[("trace_sample".to_string(), "32".to_string())]).unwrap();
+    assert_eq!(reply.get("clean"), Some(&Json::Bool(true)));
+
+    // Drain over the binary protocol: the reply accounts for the one
+    // resident session, the snapshot lands on disk, the server exits.
+    let reply = c.drain().unwrap();
+    assert_eq!(reply.get("drained"), Some(&Json::Bool(true)));
+    assert_eq!(reply.get("sessions").and_then(|v| v.as_f64()), Some(1.0));
+    handle.join().unwrap();
+    assert!(snap_path.exists(), "drain must leave its snapshot behind");
+    let file = SnapshotFile::read_from(&snap_path).unwrap();
+    assert_eq!(file.sessions.len(), 1);
+}
+
+/// The same verbs on the JSON protocol, plus the two drain failure
+/// modes: no snapshot path configured, and a second drain of an
+/// already-draining fabric.  Failed drains must leave the server up.
+#[test]
+fn operator_verbs_round_trip_on_the_json_protocol() {
+    // No snapshot path: drain refuses, the server keeps serving.
+    let fabric = Arc::new(Fabric::new(&params(), fabric_config(2)).unwrap());
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run_fabric(fabric).unwrap());
+    let mut c = Client::connect(&addr).unwrap();
+    let err = c.drain().unwrap_err();
+    assert!(format!("{err}").contains("no snapshot path"), "{err}");
+    let status = c.status().unwrap();
+    assert!(status.get("operator").is_some(), "server survives a refused drain");
+    let reply = c.reload(&[("gather_cap_us".to_string(), "250".to_string())]).unwrap();
+    assert_eq!(reply.get("clean"), Some(&Json::Bool(true)));
+    let mut ctl = WireClient::connect(&addr).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+
+    // With a path configured the JSON drain succeeds end to end.
+    let snap_path = tmpdir("verbs_json").join("drain.snap");
+    let _ = std::fs::remove_file(&snap_path);
+    let (addr, handle) = start_server(&snap_path, None);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let reply = c.drain().unwrap();
+    assert_eq!(reply.get("drained"), Some(&Json::Bool(true)));
+    handle.join().unwrap();
+    assert!(snap_path.exists());
+}
+
+// ---- teardown regression ------------------------------------------------
+
+/// Satellite regression: a v2 pipelined client whose server goes away
+/// mid-pipeline (operator shutdown from another connection) must
+/// complete its Drop within a bound — before the fix, the server-side
+/// pump could wedge on a stalled socket and the whole teardown hung.
+#[test]
+fn pipelined_client_drop_is_bounded_on_server_loss() {
+    let snap_path = tmpdir("teardown").join("drain.snap");
+    let (addr, handle) = start_server(&snap_path, None);
+    let addr_s = addr.to_string();
+
+    let opts = PipelineOptions { deadline_us: 0.0, ..Default::default() };
+    let mut c = PipelinedClient::connect(&addr_s, Some("doomed"), opts).unwrap();
+    assert_eq!(c.version(), 2);
+    // Leave completions un-received so the connection is mid-pipeline.
+    for k in 0..4 {
+        c.submit(&swindow(9, k), None).unwrap();
+    }
+
+    // Operator shutdown from a second connection: the server severs
+    // non-initiating sockets during teardown, which is what unblocks
+    // the doomed client's reader.
+    let mut ctl = WireClient::connect(&addr_s).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+
+    let t0 = Instant::now();
+    drop(c);
+    let took = t0.elapsed();
+    assert!(
+        took < Duration::from_secs(10),
+        "client Drop took {took:?} after server loss (teardown hang regression)"
+    );
+}

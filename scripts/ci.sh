@@ -107,4 +107,46 @@ test -s BENCH_prometheus.txt \
 grep -q '^hrd_requests_completed_total ' BENCH_prometheus.txt \
   || { echo "FAIL: BENCH_prometheus.txt lacks the completed counter"; exit 1; }
 
+echo "== operator gate: drain/restore parity suite + daemon lifecycle smoke =="
+# The acceptance suite first (docs/OPERATIONS.md): drain -> restart ->
+# --restore must continue every session bit-identically vs an
+# uninterrupted reference, damaged snapshots must fail loudly, and the
+# status/drain/reload verbs must round-trip on both protocols.
+cargo test -q --test operator_recovery
+
+# Then the real daemon lifecycle against the actual binary:
+# serve -> status -> reload -> drain (snapshot to disk) -> offline
+# restart-check -> restart with --restore -> status shows the restore ->
+# drain again to shut down.  The CLI verbs carry their own bounded
+# reconnect backoff, which doubles as the readiness wait here.
+OP_ADDR=127.0.0.1:7461
+OP_SNAP=CI_operator.snap
+rm -f "$OP_SNAP"
+cargo run --release --bin hrd -- serve-tcp --backend native --shards 2 \
+  --addr "$OP_ADDR" --snapshot "$OP_SNAP" &
+OP_PID=$!
+trap 'kill $OP_PID 2>/dev/null || true' EXIT
+cargo run --release --bin hrd -- status --addr "$OP_ADDR" \
+  || { echo "FAIL: hrd status against the live server"; exit 1; }
+cargo run --release --bin hrd -- reload --addr "$OP_ADDR" --set trace_sample=32 \
+  || { echo "FAIL: hrd reload of a live knob"; exit 1; }
+cargo run --release --bin hrd -- restart-check --addr "$OP_ADDR" \
+  || { echo "FAIL: restart-check must exit 0 while serving"; exit 1; }
+cargo run --release --bin hrd -- drain --addr "$OP_ADDR" \
+  || { echo "FAIL: hrd drain"; exit 1; }
+wait $OP_PID || { echo "FAIL: server did not exit cleanly after drain"; exit 1; }
+test -s "$OP_SNAP" || { echo "FAIL: drain left no snapshot at $OP_SNAP"; exit 1; }
+cargo run --release --bin hrd -- restart-check --snapshot "$OP_SNAP" \
+  || { echo "FAIL: offline snapshot validation"; exit 1; }
+cargo run --release --bin hrd -- serve-tcp --backend native --shards 2 \
+  --addr "$OP_ADDR" --snapshot "$OP_SNAP" --restore "$OP_SNAP" &
+OP_PID=$!
+cargo run --release --bin hrd -- status --addr "$OP_ADDR" \
+  || { echo "FAIL: hrd status after --restore"; exit 1; }
+cargo run --release --bin hrd -- drain --addr "$OP_ADDR" \
+  || { echo "FAIL: second drain (shutdown path)"; exit 1; }
+wait $OP_PID || { echo "FAIL: restored server did not exit cleanly"; exit 1; }
+trap - EXIT
+test -s "$OP_SNAP" || { echo "FAIL: final drain snapshot missing"; exit 1; }
+
 echo "CI OK"
