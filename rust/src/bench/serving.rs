@@ -157,6 +157,13 @@ pub struct ServingConfig {
     /// breakdown and the suite runs a tracing-overhead A/B
     /// (docs/OBSERVABILITY.md).
     pub trace_sample: usize,
+    /// Run the two-model, two-tenant fabric scenario: TCP bit-identity
+    /// of model-bound streams vs serial references, plus the per-tenant
+    /// admission-quota A/B (`multi_model` rows; docs/MODELS.md).
+    pub multi_model: bool,
+    /// Model id registered for the scenario's second synthetic model
+    /// (`hrd loadgen --model <id>`).
+    pub multi_model_id: String,
     /// Workload seed.
     pub seed: u64,
 }
@@ -183,6 +190,8 @@ impl ServingConfig {
             open_rates_hz: vec![250.0, 1000.0, 4000.0],
             open_stride: 4,
             trace_sample: 64,
+            multi_model: true,
+            multi_model_id: "aux".to_string(),
             seed: 42,
         }
     }
@@ -208,6 +217,8 @@ impl ServingConfig {
             open_rates_hz: vec![200.0, 800.0],
             open_stride: 4,
             trace_sample: 64,
+            multi_model: true,
+            multi_model_id: "aux".to_string(),
             seed: 42,
         }
     }
@@ -352,6 +363,68 @@ impl RebalanceCompare {
     }
 }
 
+/// One two-tenant quota run (quotas off or on): the default-model
+/// tenant floods a deliberately tiny fabric while the second model's
+/// tenant trickles requests; with quotas on, tenant A's overflow is
+/// shed *loudly at admission* (`quota_shed`) and tenant B never sheds.
+#[derive(Debug, Clone)]
+pub struct MultiModelRun {
+    /// `multi_model_quota_off` | `multi_model_quota_on` (the named CI
+    /// gate greps BENCH_serving.json for these rows).
+    pub label: String,
+    pub quotas_on: bool,
+    /// Tenant-A (default model) ledger: admitted + quota-shed counts.
+    pub a_admitted: u64,
+    pub a_quota_shed: u64,
+    /// Tenant-B (second model) ledger + client-observed shed count.
+    pub b_admitted: u64,
+    pub b_shed_observed: u64,
+    /// Tenant-B completion p99 (enqueue-to-completion, us).
+    pub b_p99_us: f64,
+}
+
+impl MultiModelRun {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.as_str())),
+            ("quotas_on", Json::Bool(self.quotas_on)),
+            ("a_admitted", Json::from(self.a_admitted as f64)),
+            ("a_quota_shed", Json::from(self.a_quota_shed as f64)),
+            ("b_admitted", Json::from(self.b_admitted as f64)),
+            ("b_shed_observed", Json::from(self.b_shed_observed as f64)),
+            ("b_p99_us", Json::from(self.b_p99_us)),
+        ])
+    }
+}
+
+/// The two-model, two-tenant scenario (docs/MODELS.md): a second
+/// synthetic model (different hidden size) serves next to the DROPBEAR
+/// weights on ONE fabric over TCP, each bound stream bit-identical to
+/// its own serial reference, then the per-tenant admission quota A/B.
+#[derive(Debug, Clone)]
+pub struct MultiModelReport {
+    /// `multi_model_parity` (grep anchor for the CI gate).
+    pub label: String,
+    /// Id of the second registered model.
+    pub second_model: String,
+    /// Windows checked bit-identical across both models' TCP streams.
+    pub parity_windows: u64,
+    pub quota_off: MultiModelRun,
+    pub quota_on: MultiModelRun,
+}
+
+impl MultiModelReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.as_str())),
+            ("second_model", Json::from(self.second_model.as_str())),
+            ("parity_windows", Json::from(self.parity_windows as f64)),
+            ("quota_off", self.quota_off.to_json()),
+            ("quota_on", self.quota_on.to_json()),
+        ])
+    }
+}
+
 /// One open-loop operating point: an arrival process, a protocol
 /// version, and an offered load, measured to a knee-curve row.
 #[derive(Debug, Clone)]
@@ -473,6 +546,9 @@ pub struct ServingSummary {
     /// Tracing-overhead A/B: fabric throughput with the flight recorder
     /// off vs sampled (`None` when `cfg.trace_sample` is 0).
     pub trace_overhead: Option<TraceOverhead>,
+    /// Two-model, two-tenant scenario (`None` when `cfg.multi_model`
+    /// is off).  See docs/MODELS.md.
+    pub multi_model: Option<MultiModelReport>,
     /// Prometheus text exposition rendered from the sampled A/B fabric
     /// (consumed by `hrd loadgen --prom-out`; not part of the JSON
     /// report).
@@ -572,6 +648,21 @@ impl ServingSummary {
                 s.push_str(&format!("stage p50 us: {}\n", parts.join(" | ")));
             }
         }
+        if let Some(m) = &self.multi_model {
+            s.push_str(&format!(
+                "multi-model ({} + {}): {} windows bit-identical per bound stream; \
+                 quota off: B shed {} p99 {:.1} us | quota on: A quota-shed {} B shed {} \
+                 p99 {:.1} us\n",
+                crate::kernel::DEFAULT_MODEL_ID,
+                m.second_model,
+                m.parity_windows,
+                m.quota_off.b_shed_observed,
+                m.quota_off.b_p99_us,
+                m.quota_on.a_quota_shed,
+                m.quota_on.b_shed_observed,
+                m.quota_on.b_p99_us,
+            ));
+        }
         if let Some(t) = &self.trace_overhead {
             s.push_str(&format!(
                 "tracing overhead (1/{} sampling): off {:.0} r/s vs on {:.0} r/s \
@@ -650,6 +741,13 @@ impl ServingSummary {
                 "trace_overhead",
                 match &self.trace_overhead {
                     Some(t) => t.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "multi_model",
+                match &self.multi_model {
+                    Some(m) => m.to_json(),
                     None => Json::Null,
                 },
             ),
@@ -1371,6 +1469,168 @@ pub fn run_skew_scenario(
     })
 }
 
+/// Two-model TCP bit-identity + the two-tenant admission-quota A/B
+/// (docs/MODELS.md).  Phase 1 registers a second synthetic model with a
+/// different hidden size next to the DROPBEAR weights on ONE fabric and
+/// drives model-bound binary streams (`hello_bound`) over TCP, checking
+/// every estimate bit-identical to a fresh serial reference of the
+/// right model (and that an unknown model id is refused loudly).
+/// Phase 2 floods the default-model tenant against a deliberately tiny
+/// direct fabric while the second model's tenant trickles requests —
+/// quotas off records the starvation, quotas on must keep tenant B at
+/// zero sheds while tenant A's overflow sheds loudly at admission.
+pub fn run_multi_model_scenario(
+    params: &LstmParams,
+    cfg: &ServingConfig,
+) -> Result<MultiModelReport> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use crate::kernel::{FloatPath, ModelRegistry, PackedModel, ScalarKernel, DEFAULT_MODEL_ID};
+
+    let second_id = cfg.multi_model_id.clone();
+    anyhow::ensure!(
+        !second_id.is_empty() && second_id.len() <= 255 && second_id != DEFAULT_MODEL_ID,
+        "--model id must be 1..=255 bytes and differ from {DEFAULT_MODEL_ID:?}"
+    );
+    // Different hidden size on purpose: heterogeneous lane groups and
+    // per-model state lengths are part of what this scenario grades.
+    let aux = LstmParams::init(INPUT_SIZE, 9, 2, 1, cfg.seed ^ 0xA5);
+
+    // Phase 1: both models on one fabric, bound streams over TCP.
+    let registry = ModelRegistry::shared(params.clone());
+    registry.insert(&second_id, aux.clone());
+    let server = Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let mut fcfg = FabricConfig::new(2, cfg.batch.max(2));
+    fcfg.queue_depth = 64;
+    let fabric = Arc::new(Fabric::with_registry(registry, fcfg)?);
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.run_fabric(fabric);
+    });
+    let mut parity_windows = 0u64;
+    for (m, model_params) in [(DEFAULT_MODEL_ID, params), (second_id.as_str(), &aux)] {
+        for s in 0..2usize {
+            let mut reference = ScalarKernel::new(PackedModel::shared(model_params), FloatPath);
+            let mut client = WireClient::with_session(&addr, &format!("mm-{m}-{s}"))?;
+            client.hello_bound(Some((m, 0)))?;
+            let windows: Vec<[f32; INPUT_SIZE]> =
+                Testbed::new(ProfileKind::Sweep, 12, channel_seed(cfg.seed, s))
+                    .map(|w| w.features)
+                    .collect();
+            for (i, w) in windows.iter().enumerate() {
+                let got = client.infer_full(w, None)?.estimate;
+                let want = reference.step_window(&w[..]);
+                anyhow::ensure!(
+                    got.to_bits() == want.to_bits(),
+                    "model {m} stream {s} window {i}: served {got:?} != reference {want:?}"
+                );
+                parity_windows += 1;
+            }
+        }
+    }
+    // An unknown model must be refused with a typed error, not a hang.
+    let mut bogus = WireClient::connect(&addr)?;
+    anyhow::ensure!(
+        bogus.hello_bound(Some(("no-such-model", 0))).is_err(),
+        "binding an unknown model must fail loudly"
+    );
+    Client::connect(&addr)?.shutdown()?;
+    server_thread.join().expect("multi-model server panicked");
+
+    // Phase 2: per-tenant admission quota A/B on a tiny direct fabric.
+    let quota = |quotas_on: bool| -> Result<MultiModelRun> {
+        let registry = ModelRegistry::shared(params.clone());
+        registry.insert(&second_id, aux.clone());
+        let mut fcfg = FabricConfig::new(1, 2);
+        fcfg.deadline_us = cfg.deadline_us;
+        // Tiny on purpose: capacity (2 lanes + 4 queue slots) must sit
+        // below the flood's in-flight count so starvation reproduces.
+        fcfg.queue_depth = 4;
+        if quotas_on {
+            // Cap tenant A below capacity: <= 3 A jobs + 1 B job in
+            // flight < 6 slots, so tenant B can never find a full queue.
+            fcfg.tenant_quotas = vec![(DEFAULT_MODEL_ID.to_string(), 3)];
+        }
+        let fabric = Arc::new(Fabric::with_registry(registry, fcfg)?);
+        let b_binding = fabric.bind_model(&second_id, 0)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut floods = Vec::new();
+        for t in 0..4 {
+            let fabric = fabric.clone();
+            let stop = stop.clone();
+            floods.push(std::thread::spawn(move || {
+                let w = [0.3f32; INPUT_SIZE];
+                while !stop.load(Ordering::Relaxed) {
+                    // Volley of 8 in flight per thread — far above the
+                    // quota, so the overflow sheds at admission when on.
+                    let pendings: Vec<_> = (0..8)
+                        .filter_map(|i| {
+                            fabric.submit(&format!("mm-a-{t}-{i}"), &w, None).ok()
+                        })
+                        .collect();
+                    for p in pendings {
+                        let _ = p.wait();
+                    }
+                }
+            }));
+        }
+        let b_requests = cfg.skew_requests.clamp(20, 200);
+        let windows: Vec<[f32; INPUT_SIZE]> =
+            Testbed::new(ProfileKind::Sweep, b_requests, channel_seed(cfg.seed, 97))
+                .map(|w| w.features)
+                .collect();
+        let mut b_lats: Vec<f64> = Vec::new();
+        let mut b_shed = 0u64;
+        for w in &windows {
+            match fabric.infer_bound(&b_binding, "mm-b", w) {
+                Ok(c) => b_lats.push(c.latency_us),
+                Err(_) => b_shed += 1,
+            }
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for f in floods {
+            f.join().expect("flood thread panicked");
+        }
+        let snap = fabric.snapshot();
+        fabric.shutdown();
+        let ledger = |name: &str| {
+            snap.tenants
+                .iter()
+                .find(|t| t.tenant == name)
+                .map(|t| (t.admitted, t.quota_shed))
+                .unwrap_or((0, 0))
+        };
+        let (a_admitted, a_quota_shed) = ledger(DEFAULT_MODEL_ID);
+        let (b_admitted, _) = ledger(&second_id);
+        b_lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let b_p99_us =
+            if b_lats.is_empty() { 0.0 } else { stats::percentile_sorted(&b_lats, 99.0) };
+        if quotas_on {
+            anyhow::ensure!(b_shed == 0, "tenant B shed {b_shed} request(s) despite the quota");
+            anyhow::ensure!(a_quota_shed > 0, "the flooding tenant never hit its quota");
+        }
+        Ok(MultiModelRun {
+            label: format!("multi_model_quota_{}", if quotas_on { "on" } else { "off" }),
+            quotas_on,
+            a_admitted,
+            a_quota_shed,
+            b_admitted,
+            b_shed_observed: b_shed,
+            b_p99_us,
+        })
+    };
+    let quota_off = quota(false).context("multi-model quota off")?;
+    let quota_on = quota(true).context("multi-model quota on")?;
+    Ok(MultiModelReport {
+        label: "multi_model_parity".to_string(),
+        second_model: second_id,
+        parity_windows,
+        quota_off,
+        quota_on,
+    })
+}
+
 /// Run the full suite: serial baseline, then the fabric at each
 /// configured shard count over each configured wire protocol (plus the
 /// cross-protocol parity pass when both are selected); optionally write
@@ -1423,6 +1683,7 @@ fn measure_trace_overhead(
             &obs.stage_lines(),
             obs.uptime_us(),
             obs.next_seq(),
+            None,
             None,
             None,
         );
@@ -1517,6 +1778,11 @@ pub fn run_serving_suite(
     } else {
         None
     };
+    let multi_model = if cfg.multi_model {
+        Some(run_multi_model_scenario(params, cfg).context("multi-model scenario")?)
+    } else {
+        None
+    };
     // "Widest" = max shard count, NOT list order (--shards "8,1" must not
     // grade the acceptance ratio against the 1-shard run); best protocol
     // at that width.
@@ -1540,6 +1806,7 @@ pub fn run_serving_suite(
         open_loop,
         v2_parity,
         trace_overhead,
+        multi_model,
         prometheus_sample,
         best_fabric_shards,
         best_fabric_vs_serial,
@@ -1577,6 +1844,8 @@ mod tests {
             open_rates_hz: vec![500.0],
             open_stride: 4,
             trace_sample: 0, // A/B exercised by the open-loop test below
+            multi_model: false, // exercised by its own test below
+            multi_model_id: "aux".to_string(),
             seed: 11,
         };
         let out = std::env::temp_dir().join("hrd_bench_serving_selftest.json");
@@ -1597,6 +1866,7 @@ mod tests {
         }
         assert!(s.parity_windows > 0, "parity pass must run when both protos selected");
         assert!(s.trace_overhead.is_none(), "no A/B with tracing off");
+        assert!(s.multi_model.is_none(), "multi-model disabled in this config");
         assert!(s.prometheus_sample.is_none());
         assert!(s.best_fabric_vs_serial > 0.0);
         assert_eq!(s.best_fabric_shards, 2);
@@ -1755,6 +2025,8 @@ mod tests {
             open_rates_hz: vec![500.0],
             open_stride: 4,
             trace_sample: 0,
+            multi_model: false,
+            multi_model_id: "aux".to_string(),
             seed: 3,
         };
         let s = run_serving_suite(&params, &cfg, None).unwrap();

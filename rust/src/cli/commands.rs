@@ -61,7 +61,17 @@ COMMANDS:
             sessions; also `[serve] snapshot`; see docs/OPERATIONS.md)
             --restore <file>  (rebuild session state + routing from a
             drain snapshot before admitting traffic — reconnecting
-            clients resume bit-identically)
+            clients resume bit-identically; refuses a snapshot whose
+            model fingerprints mismatch the loaded weights)
+            --model id=path[,id=path...]  (preload extra model artifacts
+            into the registry; clients bind them in Hello or per JSON
+            request; also `[model] load.<id>`; see docs/MODELS.md)
+            --allow-random-weights  (serve WITHOUT weights.bin on random
+            weights — refused by default on serving paths; also
+            `[model] allow_random = true`)
+            --tenant-quota N  (default per-tenant max in-flight windows,
+            0 = unlimited; per-tenant overrides + model->tenant grouping
+            via `[tenant]` quota.<name> / map.<model> in the config)
   loadgen   self-contained serving load generator: drives M synthetic
             DROPBEAR streams through a loopback socket against the serial
             backend and the fabric at several shard counts over the JSON
@@ -79,8 +89,13 @@ COMMANDS:
             --open-requests N  --open-rates "250,1000,4000"  --open-stride K
             --trace-sample N  (stage attribution sampling, 0 = off)
             --prom-out <file>  (write a Prometheus exposition sample)
+            --model <id>  (second synthetic model id for the two-model,
+            two-tenant scenario; --no-multi-model skips it; the
+            multi_model rows land in BENCH_serving.json — docs/MODELS.md)
   top       one stats + per-stage latency snapshot from a running
-            fabric server (docs/OBSERVABILITY.md)
+            fabric server (docs/OBSERVABILITY.md); multi-model fabrics
+            add a per-model residency/admit-rate table whose rates
+            re-baseline when a model version flips mid-watch
             --addr HOST:PORT  --watch S  (repeat every S seconds;
             survives server restarts: reconnects with bounded backoff
             and re-baselines rates when snapshot_seq regresses)
@@ -88,7 +103,8 @@ COMMANDS:
   trace     dump recent flight-recorder traces from a running server
             --addr HOST:PORT  --last K (default 16)  --slowest K
   status    operator status probe: the stats envelope plus the
-            drain/restore/reload counters (docs/OPERATIONS.md)
+            drain/restore/reload counters and the loaded-models table
+            (id/version/fingerprint/residency — docs/OPERATIONS.md)
             --addr HOST:PORT
   drain     stop admission, quiesce in-flight work, snapshot live
             sessions + routing to the server's --snapshot path, then
@@ -99,6 +115,10 @@ COMMANDS:
             --set knob=value[,knob=value...]   (vocabulary + reload
             matrix: docs/OPERATIONS.md; SIGHUP re-applies the config
             file's [reload] section)
+            --model id=path[,id=path...]   (hot model reload: load the
+            weights as a new version of <id>; new sessions bind it,
+            resident sessions adopt it at window boundaries, the old
+            version is freed at refcount 0 — docs/MODELS.md)
   restart-check  validate a drain snapshot offline (--snapshot <file>:
             CRC, version, framing) or probe a restarted server's
             operator counters (--addr HOST:PORT); exits nonzero on a
@@ -191,6 +211,21 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
         .get_usize("credit-window", cfg.wire_credit_window as usize)?
         .clamp(1, u16::MAX as usize) as u16;
     cfg.trace_sample = args.get_usize("trace-sample", cfg.trace_sample)?;
+    cfg.allow_random = cfg.allow_random || args.has_flag("allow-random-weights");
+    if let Some(spec) = args.get("model") {
+        for pair in spec.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (id, path) = pair.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad --model entry {pair:?} (want id=path)")
+            })?;
+            cfg.models.push((id.trim().to_string(), path.trim().to_string()));
+        }
+    }
+    cfg.tenant_default_quota =
+        args.get_u64("tenant-quota", cfg.tenant_default_quota)?;
     Ok(cfg)
 }
 
@@ -265,13 +300,28 @@ fn fabric_config(
     f.datapath = datapath;
     f.balance.enabled = cfg.rebalance;
     f.obs.sample_every = cfg.trace_sample.min(u32::MAX as usize) as u32;
+    f.tenant_default_quota = cfg.tenant_default_quota;
+    f.tenant_quotas = cfg.tenant_quotas.clone();
+    f.tenant_map = cfg.tenant_map.clone();
     Ok(f)
 }
 
-fn load_params(cfg: &ExperimentConfig) -> Result<LstmParams> {
+/// Load the default model weights.  `serving` paths (anything a client
+/// connects to) refuse the random-weights fallback unless the operator
+/// opted in explicitly — a server silently estimating with random
+/// weights looks healthy on every dashboard while returning garbage
+/// (docs/MODELS.md).  Offline eval/bench paths keep the seeded fallback
+/// so a fresh checkout stays exercisable.
+fn load_params(cfg: &ExperimentConfig, serving: bool) -> Result<LstmParams> {
     let path = cfg.artifacts_dir.join("weights.bin");
     if path.exists() {
         LstmParams::load(&path)
+    } else if serving && !cfg.allow_random {
+        anyhow::bail!(
+            "{} missing on a serving path; refusing to serve random weights \
+             (pass --allow-random-weights or set [model] allow_random = true)",
+            path.display()
+        )
     } else {
         // No artifacts (e.g. CPU-only backends in a fresh checkout): use
         // a seeded random model so the pipeline is still exercisable.
@@ -295,7 +345,7 @@ fn serve(args: &Args) -> Result<i32> {
     if cfg.channels > 1 {
         return serve_multi(args, &cfg);
     }
-    let params = load_params(&cfg)?;
+    let params = load_params(&cfg, false)?;
     let mut backend = build_backend(
         cfg.backend,
         &params,
@@ -346,7 +396,7 @@ fn serve(args: &Args) -> Result<i32> {
 
 /// Multi-channel serve: N virtual testbeds over one batched backend.
 fn serve_multi(args: &Args, cfg: &crate::config::ExperimentConfig) -> Result<i32> {
-    let params = load_params(cfg)?;
+    let params = load_params(cfg, false)?;
     let mut backend = crate::coordinator::build_multi_backend(
         cfg.backend,
         &params,
@@ -412,7 +462,7 @@ fn serve_tcp(args: &Args) -> Result<i32> {
         cfg.channels <= 1,
         "serve-tcp multiplexes sessions itself; --channels applies to `serve`"
     );
-    let params = load_params(&cfg)?;
+    let params = load_params(&cfg, true)?;
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let mut server = crate::coordinator::Server::bind(addr)?;
     server.set_wire_options(crate::coordinator::WireOptions {
@@ -429,7 +479,21 @@ fn serve_tcp(args: &Args) -> Result<i32> {
     match datapath {
         Some(dp) if cfg.shards >= 1 => {
             let fcfg = fabric_config(&cfg, dp)?;
-            let fabric = std::sync::Arc::new(crate::sched::Fabric::new(&params, fcfg)?);
+            // Multi-model fabric: the default DROPBEAR weights seed the
+            // registry; `--model id=path` / `[model] load.<id>` preload
+            // further bindable artifacts (docs/MODELS.md).
+            let registry = crate::kernel::ModelRegistry::shared(params.clone());
+            for (id, path) in &cfg.models {
+                let extra = LstmParams::load(std::path::Path::new(path))?;
+                let art = registry.insert(id, extra);
+                println!(
+                    "loaded model {id} v{} (fingerprint {:#018x}) from {path}",
+                    art.version(),
+                    art.fingerprint()
+                );
+            }
+            let fabric =
+                std::sync::Arc::new(crate::sched::Fabric::with_registry(registry, fcfg)?);
             // Startup [reload] overrides: same vocabulary as the live
             // verb, applied before traffic; rejects warn, never kill.
             if !cfg.reload.is_empty() {
@@ -542,6 +606,11 @@ fn loadgen(args: &Args) -> Result<i32> {
     }
     scfg.seed = args.get_u64("seed", scfg.seed)?;
     scfg.trace_sample = args.get_usize("trace-sample", scfg.trace_sample)?;
+    scfg.multi_model = scfg.multi_model && !args.has_flag("no-multi-model");
+    if let Some(id) = args.get("model") {
+        scfg.multi_model = true;
+        scfg.multi_model_id = id.to_string();
+    }
     if let Some(list) = args.get("shards") {
         let counts: std::result::Result<Vec<usize>, _> =
             list.split(',').map(|s| s.trim().parse::<usize>()).collect();
@@ -557,7 +626,7 @@ fn loadgen(args: &Args) -> Result<i32> {
         ecfg.artifacts_dir = PathBuf::from(d);
     }
     ecfg.seed = scfg.seed;
-    let params = load_params(&ecfg)?;
+    let params = load_params(&ecfg, false)?;
     let out = PathBuf::from(args.get_or("out", "BENCH_serving.json"));
     let summary = run_serving_suite(&params, &scfg, Some(&out))?;
     println!("{}", summary.render());
@@ -600,6 +669,10 @@ struct TopBaseline {
     seq: f64,
     completed: f64,
     uptime_us: f64,
+    /// Per-model admit-rate baseline: id -> (version, admitted).  A
+    /// version flip mid-watch (hot reload) resets that model's baseline
+    /// so the first post-reload tick shows 0/s instead of nonsense.
+    models: std::collections::HashMap<String, (f64, f64)>,
 }
 
 /// `hrd top`: stats + per-stage latency snapshot(s) from a running
@@ -655,12 +728,13 @@ fn render_top(dump: &crate::util::Json, base: &mut TopBaseline) -> String {
     let uptime_us = g(&["stats", "uptime_us"]);
     // Completed/s over the previous tick; a seq or uptime regression
     // means the server restarted -> re-baseline rather than go negative.
-    let rate = if base.seq > 0.0 && seq >= base.seq && uptime_us > base.uptime_us {
-        (completed - base.completed).max(0.0) / ((uptime_us - base.uptime_us) / 1e6)
-    } else {
-        0.0
-    };
-    *base = TopBaseline { seq, completed, uptime_us };
+    let warm = base.seq > 0.0 && seq >= base.seq && uptime_us > base.uptime_us;
+    let dt_s = (uptime_us - base.uptime_us) / 1e6;
+    let rate = if warm { (completed - base.completed).max(0.0) / dt_s } else { 0.0 };
+    let prev_models = std::mem::take(&mut base.models);
+    base.seq = seq;
+    base.completed = completed;
+    base.uptime_us = uptime_us;
     let mut o = String::new();
     let _ = writeln!(
         o,
@@ -685,6 +759,54 @@ fn render_top(dump: &crate::util::Json, base: &mut TopBaseline) -> String {
             g(&["stages", name, "p50_us"]),
             g(&["stages", name, "p99_us"]),
         );
+    }
+    // Per-model residency + admit rate (multi-model fabrics; the
+    // per-tenant ledger is keyed by model id unless remapped, so the
+    // matching tenant's admitted counter is the model's throughput).
+    if let Some(models) = dump.at(&["stats", "models"]).and_then(|v| v.as_arr()) {
+        if !models.is_empty() {
+            let tenants = dump.at(&["stats", "tenants"]).and_then(|v| v.as_arr());
+            let _ = writeln!(
+                o,
+                "{:>12} {:>8} {:>10} {:>8} {:>10}",
+                "model", "version", "resident", "latest", "admit/s"
+            );
+            for mrow in models {
+                let id = mrow.get("id").and_then(|v| v.as_str()).unwrap_or("?");
+                let version = mrow.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let admitted = tenants
+                    .and_then(|ts| {
+                        ts.iter().find(|t| {
+                            t.get("tenant").and_then(|v| v.as_str()) == Some(id)
+                        })
+                    })
+                    .and_then(|t| t.get("admitted"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0);
+                // Hot reload mid-watch: a version flip re-baselines this
+                // model's rate instead of diffing across two versions.
+                let mrate = match prev_models.get(id) {
+                    Some(&(pv, pa)) if pv == version && warm && dt_s > 0.0 => {
+                        (admitted - pa).max(0.0) / dt_s
+                    }
+                    _ => 0.0,
+                };
+                base.models.insert(id.to_string(), (version, admitted));
+                let _ = writeln!(
+                    o,
+                    "{:>12} {:>8} {:>10} {:>8} {:>10.0}",
+                    id,
+                    version,
+                    mrow.get("residency").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    if mrow.get("latest") == Some(&crate::util::Json::Bool(true)) {
+                        "yes"
+                    } else {
+                        "-"
+                    },
+                    mrate,
+                );
+            }
+        }
     }
     let n = dump.get("traces").and_then(|t| t.as_arr()).map_or(0, |a| a.len());
     let _ = writeln!(o, "{n} trace(s) in the flight recorder (`hrd trace` to list)");
@@ -793,10 +915,30 @@ fn drain_cmd(args: &Args) -> Result<i32> {
 /// applied; rejected knobs (restart-only, unknown, bad value) are
 /// listed and the exit code is 1.
 fn reload_cmd(args: &Args) -> Result<i32> {
-    let spec = args
-        .get("set")
-        .ok_or_else(|| anyhow::anyhow!("reload needs --set knob=value[,knob=value...]"))?;
-    let set = parse_reload_set(spec)?;
+    let mut set = match args.get("set") {
+        Some(spec) => parse_reload_set(spec)?,
+        None => Vec::new(),
+    };
+    // `--model id=path[,id=path...]` is sugar for the `model.<id>` knob:
+    // the server loads the weights file as a new version of `id`, new
+    // sessions bind it, and resident sessions adopt it at window
+    // boundaries (docs/MODELS.md).
+    if let Some(spec) = args.get("model") {
+        for pair in spec.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (id, path) = pair.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad --model entry {pair:?} (want id=path)")
+            })?;
+            set.push((format!("model.{}", id.trim()), path.trim().to_string()));
+        }
+    }
+    anyhow::ensure!(
+        !set.is_empty(),
+        "reload needs --set knob=value[,...] and/or --model id=path[,...]"
+    );
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let mut client = connect_with_backoff(addr)?;
     let reply = client.reload(&set)?;
@@ -909,7 +1051,7 @@ fn record(args: &Args) -> Result<i32> {
         cfg.channels <= 1,
         "record captures a single-channel trace; --channels applies to `serve`"
     );
-    let params = load_params(&cfg)?;
+    let params = load_params(&cfg, false)?;
     let mut backend = build_backend(
         cfg.backend,
         &params,
@@ -939,7 +1081,7 @@ fn replay(args: &Args) -> Result<i32> {
     let trace = crate::coordinator::Trace::load(std::path::Path::new(input))?;
     let cfg = experiment_config(args)?;
     ensure_f64_tier(&cfg, "`replay`")?;
-    let params = load_params(&cfg)?;
+    let params = load_params(&cfg, false)?;
     let mut backend = build_backend(
         cfg.backend,
         &params,
@@ -981,7 +1123,7 @@ fn tables() -> Result<i32> {
 
 fn compare(args: &Args) -> Result<i32> {
     let cfg = experiment_config(args)?;
-    let params = load_params(&cfg)?;
+    let params = load_params(&cfg, false)?;
     let mut rows = eval::related_work();
     rows.push(eval::arm_row());
     rows.extend(eval::this_work(&params));
@@ -1176,7 +1318,12 @@ mod tests {
         let snap = crate::wire::SnapshotFile {
             datapath: "f64".into(),
             state_len: 4,
-            sessions: vec![crate::wire::SessionRecord { session: 7, state: vec![1.0; 4] }],
+            models: vec![],
+            sessions: vec![crate::wire::SessionRecord {
+                session: 7,
+                model: 0,
+                state: vec![1.0; 4],
+            }],
             routes: vec![(7, 0)],
         };
         snap.write_to(&good).unwrap();

@@ -107,6 +107,25 @@ pub struct ExperimentConfig {
     /// `serve-tcp --snapshot`); unset leaves the drain verb disabled.
     /// See `docs/OPERATIONS.md`.
     pub snapshot_path: Option<PathBuf>,
+    /// Allow serving with randomly initialized weights when the artifact
+    /// directory has no `weights.bin` (`[model] allow_random` /
+    /// `--allow-random-weights`).  Off by default: a serving path that
+    /// silently falls back to random weights produces garbage estimates
+    /// that look healthy on every dashboard.  See `docs/MODELS.md`.
+    pub allow_random: bool,
+    /// Extra model artifacts preloaded into the registry at serve-tcp
+    /// startup (`[model]` `load.<id> = "path"` / `--model id=path`).
+    /// Each becomes a bindable `(model_id, version 1)`; the default
+    /// DROPBEAR model is always loaded.  See `docs/MODELS.md`.
+    pub models: Vec<(String, String)>,
+    /// Default per-tenant admission quota (`[tenant] default_quota`):
+    /// max in-flight windows per tenant; 0 = unlimited.
+    pub tenant_default_quota: u64,
+    /// Per-tenant quota overrides (`[tenant]` `quota.<name> = n`).
+    pub tenant_quotas: Vec<(String, u64)>,
+    /// Model-id -> tenant-name grouping (`[tenant]` `map.<model> =
+    /// "name"`); unmapped models get a tenant named after the model id.
+    pub tenant_map: Vec<(String, String)>,
     /// Live-reloadable knob overrides from the `[reload]` section,
     /// passed through verbatim (key order = TOML key order, sorted):
     /// applied via `Fabric::apply_reload` at serve-tcp startup and
@@ -140,6 +159,11 @@ impl Default for ExperimentConfig {
             wire_credit_window: 64,
             trace_sample: 64,
             snapshot_path: None,
+            allow_random: false,
+            models: Vec::new(),
+            tenant_default_quota: 0,
+            tenant_quotas: Vec::new(),
+            tenant_map: Vec::new(),
             reload: Vec::new(),
         }
     }
@@ -187,6 +211,39 @@ impl ExperimentConfig {
                 .get("serve.snapshot")
                 .and_then(|v| v.as_str())
                 .map(PathBuf::from),
+            allow_random: doc.get_bool("model.allow_random", d.allow_random),
+            models: doc
+                .entries
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_prefix("model.load.")
+                        .map(|id| (id.to_string(), toml_value_string(v)))
+                })
+                .collect(),
+            tenant_default_quota: doc
+                .get_i64("tenant.default_quota", d.tenant_default_quota as i64)
+                .max(0) as u64,
+            tenant_quotas: doc
+                .entries
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_prefix("tenant.quota.").map(|name| {
+                        let n = match v {
+                            super::toml::TomlValue::Int(i) => (*i).max(0) as u64,
+                            _ => 0,
+                        };
+                        (name.to_string(), n)
+                    })
+                })
+                .collect(),
+            tenant_map: doc
+                .entries
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_prefix("tenant.map.")
+                        .map(|model| (model.to_string(), toml_value_string(v)))
+                })
+                .collect(),
             reload: doc
                 .entries
                 .iter()
@@ -264,6 +321,16 @@ trace_sample = 0
 [serve]
 snapshot = "/tmp/hrd.snap"
 
+[model]
+allow_random = true
+load.aux = "artifacts/aux"
+
+[tenant]
+default_quota = 32
+quota.gold = 256
+quota.best-effort = 8
+map.aux = "best-effort"
+
 [reload]
 queue_depth = 128
 shed = "evict-farthest"
@@ -305,6 +372,17 @@ balance.hot_queue = 6
         );
         assert!(ExperimentConfig::default().snapshot_path.is_none());
         assert!(ExperimentConfig::default().reload.is_empty());
+        assert!(c.allow_random, "[model] allow_random opts into random weights");
+        assert!(!ExperimentConfig::default().allow_random, "random weights are opt-in");
+        assert_eq!(c.models, vec![("aux".to_string(), "artifacts/aux".to_string())]);
+        assert_eq!(c.tenant_default_quota, 32);
+        assert_eq!(
+            c.tenant_quotas,
+            vec![("best-effort".to_string(), 8), ("gold".to_string(), 256)],
+            "BTreeMap order"
+        );
+        assert_eq!(c.tenant_map, vec![("aux".to_string(), "best-effort".to_string())]);
+        assert_eq!(ExperimentConfig::default().tenant_default_quota, 0, "unlimited by default");
     }
 
     #[test]

@@ -59,9 +59,11 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
-use crate::obs::{render_prometheus, Stage, WireLine};
+use crate::kernel::ModelBinding;
+use crate::obs::{render_prometheus, ModelLine, Stage, WireLine};
 use crate::sched::{
-    checked_hash, Completion, Fabric, SchedSnapshot, SessionNameError, SessionToken, Shed,
+    checked_hash, Completion, CompletionTx, Fabric, SchedSnapshot, SessionNameError, SessionToken,
+    Shed,
 };
 use crate::util::{stats, Json};
 use crate::wire;
@@ -86,6 +88,10 @@ enum Request {
         session: Option<String>,
         /// Fabric-mode per-request deadline override.
         deadline_us: Option<f64>,
+        /// Fabric-mode model bind: `(model id, version)` from the
+        /// optional `"model"` / `"model_version"` fields (version 0 =
+        /// latest).  Absent ⇒ the server's default model.
+        model: Option<(String, u32)>,
         features: Box<[f32; INPUT_SIZE]>,
     },
     Reset {
@@ -129,6 +135,10 @@ fn parse_request(line: &str) -> Result<Request> {
     }
     let id = raw_member(line, "id");
     let deadline_us = json.get("deadline_us").and_then(|v| v.as_f64());
+    let model = json.get("model").and_then(|m| m.as_str()).map(|m| {
+        let version = json.get("model_version").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
+        (m.to_string(), version)
+    });
     let feats = json
         .get("features")
         .and_then(|f| f.as_arr())
@@ -138,7 +148,7 @@ fn parse_request(line: &str) -> Result<Request> {
     for (dst, v) in w.iter_mut().zip(feats) {
         *dst = v.as_f64().context("non-numeric feature")? as f32;
     }
-    Ok(Request::Infer { id, session, deadline_us, features: w })
+    Ok(Request::Infer { id, session, deadline_us, model, features: w })
 }
 
 /// Extract the knob set of a reload request: the `"set"` object of the
@@ -450,6 +460,7 @@ fn fabric_stats_json(fabric: &Fabric, wstats: &WireStats) -> String {
         m.insert("uptime_us".to_string(), Json::Num(obs.uptime_us() as f64));
         m.insert("snapshot_seq".to_string(), Json::Num(obs.next_seq() as f64));
         m.insert("stages".to_string(), obs.stages_json());
+        m.insert("models".to_string(), models_json(fabric));
     }
     j.to_string()
 }
@@ -502,6 +513,16 @@ fn trace_dump_json(fabric: &Fabric, wstats: &WireStats) -> String {
 /// protocol's `prometheus` command; `hrd top --prom` prints it).
 fn prometheus_text(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -> String {
     let obs = fabric.obs();
+    let models: Vec<ModelLine> = fabric
+        .models()
+        .into_iter()
+        .map(|mi| ModelLine {
+            id: mi.id,
+            version: mi.version,
+            residency: mi.residency as u64,
+            latest: mi.latest,
+        })
+        .collect();
     render_prometheus(
         &fabric.snapshot(),
         &obs.stage_lines(),
@@ -509,6 +530,7 @@ fn prometheus_text(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -> Str
         obs.next_seq(),
         Some(&wstats.line()),
         Some(&op.line()),
+        Some(&models),
     )
 }
 
@@ -586,8 +608,32 @@ fn operator_status_json(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -
         m.insert("snapshot_seq".to_string(), Json::Num(obs.next_seq() as f64));
         m.insert("stages".to_string(), obs.stages_json());
         m.insert("operator".to_string(), op.to_json(fabric));
+        m.insert("models".to_string(), models_json(fabric));
     }
     j.to_string()
+}
+
+/// The loaded-models table of a `status` reply: every `(id, version)`
+/// the registry holds, with lane residency and liveness — the operator
+/// view of hot-reload progress (`hrd status` / `hrd top`).
+fn models_json(fabric: &Fabric) -> Json {
+    Json::Arr(
+        fabric
+            .models()
+            .into_iter()
+            .map(|mi| {
+                Json::obj(vec![
+                    ("id", Json::Str(mi.id)),
+                    ("version", Json::Num(mi.version as f64)),
+                    ("fingerprint", Json::Str(format!("{:#018x}", mi.fingerprint))),
+                    ("state_len", Json::Num(mi.state_len as f64)),
+                    ("residency", Json::Num(mi.residency as f64)),
+                    ("refcount", Json::Num(mi.refcount as f64)),
+                    ("latest", Json::Bool(mi.latest)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 /// How long a drain waits for in-flight work to quiesce before giving
@@ -1043,15 +1089,26 @@ fn handle_fabric_json(
         // covers serialisation + the write syscall.
         let mut observed: Option<Completion> = None;
         let response = match parse_request(&line) {
-            Ok(Request::Infer { id, session, deadline_us, features }) => {
-                match json_session_hash(session.as_deref(), &conn) {
-                    Err(e) => json_reply(vec![("error", Json::Str(e.to_string()))], id),
-                    Ok(hash) => {
+            Ok(Request::Infer { id, session, deadline_us, model, features }) => {
+                // Per-request model bind (JSON is the slow path; the
+                // binary protocol binds once at Hello instead).
+                let binding = match &model {
+                    None => Ok(None),
+                    Some((m, v)) => fabric.bind_model(m, *v).map(Some),
+                };
+                match (json_session_hash(session.as_deref(), &conn), binding) {
+                    (Err(e), _) => json_reply(vec![("error", Json::Str(e.to_string()))], id),
+                    (_, Err(e)) => json_reply(vec![("error", Json::Str(format!("{e:#}")))], id),
+                    (Ok(hash), Ok(binding)) => {
                         let mut trace = fabric.obs().start_trace();
                         trace.mark(Stage::WireDecoded);
-                        let outcome = fabric
-                            .submit_hashed_traced(hash, &features, deadline_us, trace)
-                            .and_then(|pending| pending.wait());
+                        let outcome = match &binding {
+                            Some(b) => fabric
+                                .submit_bound_traced(b, hash, &features, deadline_us, trace),
+                            None => fabric
+                                .submit_hashed_traced(hash, &features, deadline_us, trace),
+                        }
+                        .and_then(|pending| pending.wait());
                         match outcome {
                             Ok(c) => {
                                 let reply = json_reply(
@@ -1151,6 +1208,45 @@ fn wire_session_hash(sess: &[u8], conn: &SessionToken) -> Result<u64, SessionNam
     }
 }
 
+/// Resolve a Hello frame's optional model-bind block into the
+/// connection's binding (`None` block ⇒ default model, rendered as an
+/// absent binding so pre-registry fast paths stay untouched).  The error
+/// is the client-facing message.
+fn resolve_bind(
+    fabric: &Fabric,
+    model: Option<(&[u8], u32)>,
+) -> std::result::Result<Option<ModelBinding>, String> {
+    match model {
+        None => Ok(None),
+        Some((id, version)) => {
+            let id = std::str::from_utf8(id)
+                .map_err(|_| "model id must be valid UTF-8".to_string())?;
+            fabric.bind_model(id, version).map(Some).map_err(|e| format!("{e:#}"))
+        }
+    }
+}
+
+/// v2 push-submit through the connection's model binding (`None` =
+/// the default model via the pre-registry fast path).
+fn push_bound(
+    fabric: &Fabric,
+    binding: &Option<ModelBinding>,
+    hash: u64,
+    window: &[f32; INPUT_SIZE],
+    deadline: Option<f64>,
+    tx: CompletionTx,
+    seq: u64,
+) -> std::result::Result<(), Shed> {
+    match binding {
+        Some(b) => {
+            let mut trace = fabric.obs().start_trace();
+            trace.mark(Stage::WireDecoded);
+            fabric.submit_pushed_bound_traced(b, hash, window, deadline, tx, seq, trace)
+        }
+        None => fabric.submit_pushed(hash, window, deadline, tx, seq),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn handle_fabric_binary(
     stream: TcpStream,
@@ -1172,6 +1268,9 @@ fn handle_fabric_binary(
     let hash_of = |sess: &[u8]| wire_session_hash(sess, &conn);
     let mut in_mark = (0u64, 0u64);
     let mut out_mark = (0u64, 0u64);
+    // The connection's model binding, set by a Hello bind block; `None`
+    // serves the fabric's default model.
+    let mut binding: Option<ModelBinding> = None;
     // Negotiating v2 hands the connection to the pipelined handler
     // after the current frame's borrow of the receive buffer ends.
     let mut upgrade = None;
@@ -1203,23 +1302,37 @@ fn handle_fabric_binary(
                 );
                 break;
             }
-            Recv::Frame(FrameType::Hello, payload) => match wire::frame::decode_u16(payload) {
+            Recv::Frame(FrameType::Hello, payload) => match wire::frame::decode_hello(payload) {
                 Err(e) => writer.send_error(0, false, &format!("bad hello frame: {e:#}"))?,
-                Ok(client_max) if client_max < wire::VERSION as u16 => writer.send_error(
+                Ok(h) if h.version < wire::VERSION as u16 => writer.send_error(
                     0,
                     false,
                     &format!(
-                        "no common protocol version (client max {client_max}, server speaks 1..={})",
+                        "no common protocol version (client max {}, server speaks 1..={})",
+                        h.version,
                         wire::MAX_VERSION
                     ),
                 )?,
-                Ok(client_max) => {
-                    let chosen = client_max.min(server_max);
-                    // The ack itself still travels in a v1 envelope —
-                    // negotiation completes when the client reads it.
-                    writer.send_hello_ack(chosen, wire_opts.credit_window)?;
-                    if chosen >= wire::VERSION_V2 as u16 {
-                        upgrade = Some(chosen as u8);
+                Ok(h) => {
+                    // Resolve the optional model-bind block BEFORE the
+                    // ack: an unknown model is a typed error and the
+                    // connection stays on its previous binding.  A bare
+                    // Hello (no block) leaves any prior binding alone.
+                    match resolve_bind(&fabric, h.model) {
+                        Err(msg) => writer.send_error(0, false, &msg)?,
+                        Ok(bound) => {
+                            if bound.is_some() {
+                                binding = bound;
+                            }
+                            let chosen = h.version.min(server_max);
+                            // The ack itself still travels in a v1
+                            // envelope — negotiation completes when the
+                            // client reads it.
+                            writer.send_hello_ack(chosen, wire_opts.credit_window)?;
+                            if chosen >= wire::VERSION_V2 as u16 {
+                                upgrade = Some(chosen as u8);
+                            }
+                        }
                     }
                 }
             },
@@ -1234,9 +1347,13 @@ fn handle_fabric_binary(
                             let mut trace = fabric.obs().start_trace();
                             trace.mark(Stage::WireDecoded);
                             let deadline = (s.deadline_us > 0.0).then_some(s.deadline_us);
-                            let outcome = fabric
-                                .submit_hashed_traced(hash, &s.window, deadline, trace)
-                                .and_then(|pending| pending.wait());
+                            let outcome = match &binding {
+                                Some(b) => fabric
+                                    .submit_bound_traced(b, hash, &s.window, deadline, trace),
+                                None => fabric
+                                    .submit_hashed_traced(hash, &s.window, deadline, trace),
+                            }
+                            .and_then(|pending| pending.wait());
                             match outcome {
                                 Ok(mut c) => {
                                     writer.send_completion(&completion_rec(s.seq, &c))?;
@@ -1270,7 +1387,20 @@ fn handle_fabric_binary(
                             // equal deadlines, so completion order is
                             // submission order), then collect.
                             let pendings: Vec<_> = (0..b.count)
-                                .map(|i| fabric.submit_hashed(hash, &b.window(i), deadline))
+                                .map(|i| match &binding {
+                                    Some(bind) => {
+                                        let mut trace = fabric.obs().start_trace();
+                                        trace.mark(Stage::WireDecoded);
+                                        fabric.submit_bound_traced(
+                                            bind,
+                                            hash,
+                                            &b.window(i),
+                                            deadline,
+                                            trace,
+                                        )
+                                    }
+                                    None => fabric.submit_hashed(hash, &b.window(i), deadline),
+                                })
                                 .collect();
                             let mut recs = Vec::with_capacity(b.count);
                             let mut done = Vec::with_capacity(b.count);
@@ -1361,7 +1491,7 @@ fn handle_fabric_binary(
         if let Some(version) = upgrade {
             writer.set_version(version);
             return run_binary_v2(
-                sock, reader, writer, fabric, shutdown, conn, wire_opts, wstats, op,
+                sock, reader, writer, fabric, shutdown, conn, wire_opts, wstats, op, binding,
             );
         }
         if shutdown.load(Ordering::SeqCst) {
@@ -1447,6 +1577,7 @@ fn run_binary_v2(
     wire_opts: WireOptions,
     wstats: Arc<WireStats>,
     op: Arc<OperatorCtx>,
+    mut binding: Option<ModelBinding>,
 ) -> Result<()> {
     let version = writer.version() as u16;
     let credits = wire_opts.credit_window;
@@ -1629,7 +1760,9 @@ fn run_binary_v2(
                                     delta_ctx.insert(hash, window);
                                     let deadline =
                                         (v.deadline_us > 0.0).then_some(v.deadline_us);
-                                    if let Err(shed) = fabric.submit_pushed(
+                                    if let Err(shed) = push_bound(
+                                        &fabric,
+                                        &binding,
                                         hash,
                                         &window,
                                         deadline,
@@ -1664,7 +1797,9 @@ fn run_binary_v2(
                                     break;
                                 }
                                 let deadline = (s.deadline_us > 0.0).then_some(s.deadline_us);
-                                if let Err(shed) = fabric.submit_pushed(
+                                if let Err(shed) = push_bound(
+                                    &fabric,
+                                    &binding,
                                     hash,
                                     &s.window,
                                     deadline,
@@ -1702,7 +1837,9 @@ fn run_binary_v2(
                                         break;
                                     }
                                     let seq = b.base_seq.wrapping_add(i as u64);
-                                    if let Err(shed) = fabric.submit_pushed(
+                                    if let Err(shed) = push_bound(
+                                        &fabric,
+                                        &binding,
                                         hash,
                                         &b.window(i),
                                         deadline,
@@ -1745,8 +1882,25 @@ fn run_binary_v2(
                         },
                     }
                 }
-                Recv::Frame(FrameType::Hello, _) => {
-                    let _ = out_tx.send(V2Out::HelloAck(version, credits));
+                Recv::Frame(FrameType::Hello, payload) => {
+                    // A redundant Hello re-acks the negotiated terms; a
+                    // bind block on it rebinds the connection's model
+                    // (new sessions only — resident streams drain onto
+                    // new versions via the reload path instead).
+                    match wire::frame::decode_hello(payload)
+                        .map_err(|e| format!("bad hello frame: {e:#}"))
+                        .and_then(|h| resolve_bind(&fabric, h.model))
+                    {
+                        Ok(bound) => {
+                            if bound.is_some() {
+                                binding = bound;
+                            }
+                            let _ = out_tx.send(V2Out::HelloAck(version, credits));
+                        }
+                        Err(msg) => {
+                            let _ = out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                        }
+                    }
                 }
                 Recv::Frame(FrameType::Stats, _) => {
                     let (bi, fi) = (reader.bytes_in(), reader.frames_in());

@@ -25,6 +25,10 @@
 //!   AVX2+FMA / portable-unrolled inner loops ([`simd::VecBackend`]),
 //!   f32 LUT activations, and the [`simd::Precision`] selector threaded
 //!   through config, CLI and the serving fabric.
+//! * [`registry`] — the versioned model registry (`docs/MODELS.md`):
+//!   ref-counted [`ModelArtifact`]s keyed `(model_id, version)` with
+//!   content fingerprints and lazily built per-tier packings, plus the
+//!   [`ModelBinding`] sessions resolve their model through.
 //!
 //! # Packed weight layout
 //!
@@ -73,6 +77,7 @@
 pub mod batch;
 pub mod pack;
 pub mod path;
+pub mod registry;
 pub mod scalar;
 pub mod simd;
 pub mod stream;
@@ -80,6 +85,9 @@ pub mod stream;
 pub use batch::BatchKernel;
 pub use pack::{PackedLayer, PackedModel};
 pub use path::{Datapath, FixedPath, FloatPath};
+pub use registry::{
+    weights_fingerprint, ModelArtifact, ModelBinding, ModelInfo, ModelRegistry, DEFAULT_MODEL_ID,
+};
 pub use scalar::ScalarKernel;
 pub use simd::{BatchKernelF32, PackedModelF32, Precision, ScalarKernelF32, VecBackend};
 pub use stream::{MultiStream, MultiStreamF32, StreamSession};

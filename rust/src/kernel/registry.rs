@@ -1,0 +1,544 @@
+//! Versioned, ref-counted model registry — the home of every weight
+//! artifact the fabric can serve (`docs/MODELS.md`).
+//!
+//! Before this module the model was a constructor argument: `Fabric::new`
+//! packed one [`LstmParams`] and every shard, lane, snapshot and Hello
+//! implicitly meant *that* model.  [`ModelRegistry`] turns the artifact
+//! into a first-class subsystem:
+//!
+//! * **identity** — every loaded weight set is a [`ModelArtifact`] keyed
+//!   `(model_id, version)` with a content fingerprint (FNV-1a 64 over the
+//!   dims + the exact f32 little-endian stream `weights.bin` stores), so
+//!   a snapshot can refuse to resume against the wrong weights.
+//! * **lazy tier packing** — the f64, f32-SIMD and quantized packed
+//!   variants are built on first use per tier and shared via `Arc`
+//!   thereafter: one packing per (artifact, tier) process-wide.
+//! * **ref-counted lifetime** — shards, sessions and snapshots hold
+//!   `Arc<ModelArtifact>` handles; [`ModelRegistry::release_unused`]
+//!   drops superseded versions once nothing references them (the hot
+//!   reload contract: old version refcount reaches zero after the last
+//!   session drains onto the new one).
+//! * **late binding** — a [`ModelBinding`] names a model by id and
+//!   either pins a version or follows `latest`; unpinned bindings
+//!   re-resolve when the registry generation bumps, which is exactly the
+//!   moment `hrd reload --model` installs a new version.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::fixed::QFormat;
+use crate::lstm::LstmParams;
+
+use super::{PackedModel, PackedModelF32};
+
+/// The id every unbound session serves: the paper's DROPBEAR surrogate.
+pub const DEFAULT_MODEL_ID: &str = "dropbear";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Content fingerprint of a weight set: FNV-1a 64 over the architecture
+/// dims and the f32 little-endian parameter stream — the same bytes
+/// `LstmParams::save` writes after its header, so the fingerprint
+/// survives a save/load round trip bit for bit.
+pub fn weights_fingerprint(params: &LstmParams) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    for v in [
+        params.n_layers() as u32,
+        params.input_size() as u32,
+        params.hidden() as u32,
+        params.out as u32,
+    ] {
+        eat(&v.to_le_bytes());
+    }
+    for v in [params.norm.x_mean, params.norm.x_std, params.norm.y_scale, params.norm.y_offset] {
+        eat(&(v as f32).to_le_bytes());
+    }
+    let mut eat_f32s = |xs: &[f64]| {
+        for &x in xs {
+            for &b in &(x as f32).to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+    };
+    for layer in &params.layers {
+        eat_f32s(&layer.w);
+        eat_f32s(&layer.b);
+    }
+    eat_f32s(&params.dense_w);
+    eat_f32s(&params.dense_b);
+    h
+}
+
+/// One immutable loaded weight set: identity + raw parameters + the
+/// lazily built packed variants for each numeric tier.  Shared via
+/// `Arc`; `Arc::strong_count` (minus the registry's own handle) is the
+/// live refcount `hrd status` reports.
+pub struct ModelArtifact {
+    id: String,
+    version: u32,
+    fingerprint: u64,
+    params: LstmParams,
+    state_len: usize,
+    f64_packed: Mutex<Option<Arc<PackedModel>>>,
+    f32_packed: Mutex<Option<Arc<PackedModelF32>>>,
+    fixed_packed: Mutex<Option<(QFormat, Arc<PackedModel>)>>,
+    /// Lanes currently bound to this artifact across every shard
+    /// (maintained by the fabric at pass boundaries; a gauge, not a
+    /// refcount).
+    residency: AtomicUsize,
+    /// Set once a NEWER version of this id is inserted: shard workers
+    /// use it to garbage-collect idle lane groups of superseded weights
+    /// without needing a registry handle.
+    retired: AtomicBool,
+}
+
+impl std::fmt::Debug for ModelArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelArtifact")
+            .field("id", &self.id)
+            .field("version", &self.version)
+            .field("fingerprint", &format_args!("{:#018x}", self.fingerprint))
+            .field("state_len", &self.state_len)
+            .finish()
+    }
+}
+
+impl ModelArtifact {
+    fn new(id: String, version: u32, params: LstmParams) -> Self {
+        let fingerprint = weights_fingerprint(&params);
+        let state_len = 2 * params.hidden() * params.n_layers();
+        Self {
+            id,
+            version,
+            fingerprint,
+            params,
+            state_len,
+            f64_packed: Mutex::new(None),
+            f32_packed: Mutex::new(None),
+            fixed_packed: Mutex::new(None),
+            residency: AtomicUsize::new(0),
+            retired: AtomicBool::new(false),
+        }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn params(&self) -> &LstmParams {
+        &self.params
+    }
+
+    /// `f64` words per exported lane state (h and c of every layer) —
+    /// fixed by the architecture, identical across numeric tiers.
+    pub fn state_len(&self) -> usize {
+        self.state_len
+    }
+
+    /// The f64 packed weights, built on first use.
+    pub fn packed_f64(&self) -> Arc<PackedModel> {
+        let mut slot = self.f64_packed.lock().unwrap();
+        slot.get_or_insert_with(|| PackedModel::shared(&self.params)).clone()
+    }
+
+    /// The padded f32 fast-path weights, built on first use.
+    pub fn packed_f32(&self) -> Arc<PackedModelF32> {
+        let mut slot = self.f32_packed.lock().unwrap();
+        slot.get_or_insert_with(|| PackedModelF32::shared(&self.params)).clone()
+    }
+
+    /// The quantized packed weights for `fmt`, built on first use (one
+    /// cached format at a time — the fabric serves one Q-format).
+    pub fn packed_fixed(&self, fmt: QFormat) -> Arc<PackedModel> {
+        let mut slot = self.fixed_packed.lock().unwrap();
+        match &*slot {
+            Some((cached, packed)) if *cached == fmt => packed.clone(),
+            _ => {
+                let packed = PackedModel::shared(&self.params.quantized(fmt));
+                *slot = Some((fmt, packed.clone()));
+                packed
+            }
+        }
+    }
+
+    /// Whether a newer version of this model id has been registered
+    /// (hot reload): idle lane groups of a retired artifact are fair
+    /// game for worker-side garbage collection.
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Relaxed)
+    }
+
+    /// Lanes currently bound to this artifact (fabric-maintained gauge).
+    pub fn residency(&self) -> usize {
+        self.residency.load(Ordering::Relaxed)
+    }
+
+    pub fn add_residency(&self, n: usize) {
+        self.residency.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub_residency(&self, n: usize) {
+        // Saturating: a restore can release lanes it never counted.
+        let mut cur = self.residency.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.residency.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// One row of [`ModelRegistry::models`] — everything `hrd status` and
+/// the Prometheus exposition report per loaded version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub id: String,
+    pub version: u32,
+    pub fingerprint: u64,
+    pub state_len: usize,
+    /// Lanes currently bound to this version.
+    pub residency: usize,
+    /// Live handles outside the registry (sessions, snapshots, lanes).
+    pub refcount: usize,
+    /// Whether this is the version new unpinned bindings resolve to.
+    pub latest: bool,
+}
+
+/// The versioned model store.  One per fabric (shared `Arc`); every
+/// lookup is by `(id, version)` with version 0 meaning "latest".
+pub struct ModelRegistry {
+    models: Mutex<HashMap<String, Vec<Arc<ModelArtifact>>>>,
+    default_id: String,
+    /// Bumped on every insert; unpinned [`ModelBinding`]s re-resolve
+    /// when they observe a change.
+    generation: AtomicU64,
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRegistry")
+            .field("default_id", &self.default_id)
+            .field("generation", &self.generation.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl ModelRegistry {
+    /// Registry seeded with one model under `default_id`, version 1.
+    pub fn new(default_id: &str, params: LstmParams) -> Self {
+        let mut models = HashMap::new();
+        models.insert(
+            default_id.to_string(),
+            vec![Arc::new(ModelArtifact::new(default_id.to_string(), 1, params))],
+        );
+        Self {
+            models: Mutex::new(models),
+            default_id: default_id.to_string(),
+            generation: AtomicU64::new(1),
+        }
+    }
+
+    /// [`Self::new`] under the conventional default id, shared.
+    pub fn shared(params: LstmParams) -> Arc<Self> {
+        Arc::new(Self::new(DEFAULT_MODEL_ID, params))
+    }
+
+    pub fn default_id(&self) -> &str {
+        &self.default_id
+    }
+
+    /// Monotonic insert counter (see [`ModelBinding::resolve`]).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Register `params` as the next version of `id` (new ids start at
+    /// version 1).  Existing pinned bindings are untouched; unpinned
+    /// bindings pick the new version up on their next resolve.
+    pub fn insert(&self, id: &str, params: LstmParams) -> Arc<ModelArtifact> {
+        let mut models = self.models.lock().unwrap();
+        let versions = models.entry(id.to_string()).or_default();
+        let next = versions.last().map_or(1, |a| a.version + 1);
+        let artifact = Arc::new(ModelArtifact::new(id.to_string(), next, params));
+        for old in versions.iter() {
+            old.retired.store(true, Ordering::Relaxed);
+        }
+        versions.push(artifact.clone());
+        drop(models);
+        self.generation.fetch_add(1, Ordering::Release);
+        artifact
+    }
+
+    /// Latest version of `id`.
+    pub fn latest(&self, id: &str) -> Option<Arc<ModelArtifact>> {
+        self.models.lock().unwrap().get(id).and_then(|v| v.last().cloned())
+    }
+
+    /// Exact `(id, version)` lookup; version 0 means latest.
+    pub fn get(&self, id: &str, version: u32) -> Option<Arc<ModelArtifact>> {
+        if version == 0 {
+            return self.latest(id);
+        }
+        self.models
+            .lock()
+            .unwrap()
+            .get(id)
+            .and_then(|v| v.iter().find(|a| a.version == version).cloned())
+    }
+
+    /// The artifact unbound sessions serve.
+    pub fn default_model(&self) -> Arc<ModelArtifact> {
+        self.latest(&self.default_id).expect("registry always holds its default model")
+    }
+
+    /// Drop superseded versions nothing references any more (the
+    /// registry's own handle excepted); the latest version of every id
+    /// is always kept.  Returns how many versions were released.
+    pub fn release_unused(&self) -> usize {
+        let mut models = self.models.lock().unwrap();
+        let mut released = 0;
+        for versions in models.values_mut() {
+            let n = versions.len();
+            let mut keep = Vec::with_capacity(n);
+            for (k, artifact) in versions.drain(..).enumerate() {
+                if k + 1 == n || Arc::strong_count(&artifact) > 1 {
+                    keep.push(artifact);
+                } else {
+                    released += 1;
+                }
+            }
+            *versions = keep;
+        }
+        released
+    }
+
+    /// Every loaded `(id, version)` with its residency/refcount, sorted
+    /// by id then version (stable listing for status output and tests).
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let models = self.models.lock().unwrap();
+        let mut out: Vec<ModelInfo> = Vec::new();
+        for versions in models.values() {
+            let n = versions.len();
+            for (k, a) in versions.iter().enumerate() {
+                out.push(ModelInfo {
+                    id: a.id.clone(),
+                    version: a.version,
+                    fingerprint: a.fingerprint,
+                    state_len: a.state_len,
+                    residency: a.residency(),
+                    refcount: Arc::strong_count(a) - 1,
+                    latest: k + 1 == n,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.id.cmp(&b.id).then(a.version.cmp(&b.version)));
+        out
+    }
+}
+
+/// A session's (or connection's) resolved model choice: an id plus
+/// either a pinned version or "follow latest".  Unpinned bindings cache
+/// the resolved artifact and re-resolve only when the registry
+/// generation changes — the submit hot path pays one atomic load.
+pub struct ModelBinding {
+    registry: Arc<ModelRegistry>,
+    id: String,
+    pinned: Option<u32>,
+    cached: Mutex<(u64, Arc<ModelArtifact>)>,
+}
+
+impl std::fmt::Debug for ModelBinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelBinding")
+            .field("id", &self.id)
+            .field("pinned", &self.pinned)
+            .finish()
+    }
+}
+
+impl ModelBinding {
+    /// Bind `id` at `version` (0 = follow latest).  Fails when the
+    /// model or the exact version is not loaded — the wire layer turns
+    /// this into a typed Error frame at Hello.
+    pub fn bind(registry: Arc<ModelRegistry>, id: &str, version: u32) -> Result<Self> {
+        let artifact = registry
+            .get(id, version)
+            .ok_or_else(|| anyhow::anyhow!("unknown model `{id}` version {version}"))?;
+        Ok(Self {
+            cached: Mutex::new((registry.generation(), artifact)),
+            registry,
+            id: id.to_string(),
+            pinned: (version != 0).then_some(version),
+        })
+    }
+
+    /// Binding to the registry's default model, following latest.
+    pub fn default_of(registry: Arc<ModelRegistry>) -> Self {
+        let id = registry.default_id().to_string();
+        Self::bind(registry, &id, 0).expect("registry always holds its default model")
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn pinned(&self) -> Option<u32> {
+        self.pinned
+    }
+
+    /// The bound artifact right now.  Pinned bindings always return the
+    /// same artifact; unpinned bindings follow the registry's latest,
+    /// re-resolving at most once per registry generation.
+    pub fn resolve(&self) -> Arc<ModelArtifact> {
+        let mut cached = self.cached.lock().unwrap();
+        if self.pinned.is_none() {
+            let generation = self.registry.generation();
+            if generation != cached.0 {
+                if let Some(latest) = self.registry.latest(&self.id) {
+                    *cached = (generation, latest);
+                }
+            }
+        }
+        cached.1.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(seed: u64) -> LstmParams {
+        LstmParams::init(16, 15, 3, 1, seed)
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let a = params(12);
+        let b = params(12);
+        let c = params(13);
+        assert_eq!(weights_fingerprint(&a), weights_fingerprint(&b));
+        assert_ne!(weights_fingerprint(&a), weights_fingerprint(&c));
+        // A different architecture with the same seed must differ too.
+        let d = LstmParams::init(16, 9, 3, 1, 12);
+        assert_ne!(weights_fingerprint(&a), weights_fingerprint(&d));
+    }
+
+    #[test]
+    fn fingerprint_survives_the_weights_bin_round_trip() {
+        let dir = std::env::temp_dir().join("hrd_registry_fpr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let p = params(7);
+        p.save(&path).unwrap();
+        let back = LstmParams::load(&path).unwrap();
+        assert_eq!(weights_fingerprint(&p), weights_fingerprint(&back));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn registry_versions_ascend_and_resolve() {
+        let reg = ModelRegistry::new(DEFAULT_MODEL_ID, params(1));
+        assert_eq!(reg.default_model().version(), 1);
+        let v2 = reg.insert(DEFAULT_MODEL_ID, params(2));
+        assert_eq!(v2.version(), 2);
+        let other = reg.insert("aux", params(3));
+        assert_eq!(other.version(), 1);
+        assert_eq!(reg.latest(DEFAULT_MODEL_ID).unwrap().version(), 2);
+        assert_eq!(reg.get(DEFAULT_MODEL_ID, 1).unwrap().version(), 1);
+        assert_eq!(reg.get(DEFAULT_MODEL_ID, 0).unwrap().version(), 2);
+        assert!(reg.get(DEFAULT_MODEL_ID, 9).is_none());
+        assert!(reg.get("nope", 0).is_none());
+        let infos = reg.models();
+        let keys: Vec<(String, u32, bool)> =
+            infos.iter().map(|m| (m.id.clone(), m.version, m.latest)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("aux".to_string(), 1, true),
+                (DEFAULT_MODEL_ID.to_string(), 1, false),
+                (DEFAULT_MODEL_ID.to_string(), 2, true),
+            ]
+        );
+    }
+
+    #[test]
+    fn release_unused_drops_only_unreferenced_superseded_versions() {
+        let reg = ModelRegistry::new(DEFAULT_MODEL_ID, params(1));
+        let v1 = reg.default_model();
+        reg.insert(DEFAULT_MODEL_ID, params(2));
+        // v1 still has an outside handle: nothing to release.
+        assert_eq!(reg.release_unused(), 0);
+        assert!(reg.get(DEFAULT_MODEL_ID, 1).is_some());
+        drop(v1);
+        assert_eq!(reg.release_unused(), 1);
+        assert!(reg.get(DEFAULT_MODEL_ID, 1).is_none());
+        // Latest is never released, referenced or not.
+        assert_eq!(reg.release_unused(), 0);
+        assert_eq!(reg.latest(DEFAULT_MODEL_ID).unwrap().version(), 2);
+    }
+
+    #[test]
+    fn unpinned_binding_follows_latest_pinned_does_not() {
+        let reg = Arc::new(ModelRegistry::new(DEFAULT_MODEL_ID, params(1)));
+        let follow = ModelBinding::default_of(reg.clone());
+        let pinned = ModelBinding::bind(reg.clone(), DEFAULT_MODEL_ID, 1).unwrap();
+        assert_eq!(follow.resolve().version(), 1);
+        reg.insert(DEFAULT_MODEL_ID, params(2));
+        assert_eq!(follow.resolve().version(), 2, "unpinned binding must follow latest");
+        assert_eq!(pinned.resolve().version(), 1, "pinned binding must not move");
+        assert!(ModelBinding::bind(reg.clone(), "missing", 0).is_err());
+        assert!(ModelBinding::bind(reg, DEFAULT_MODEL_ID, 99).is_err());
+    }
+
+    #[test]
+    fn packed_variants_are_built_once_and_shared() {
+        let reg = ModelRegistry::new(DEFAULT_MODEL_ID, params(5));
+        let m = reg.default_model();
+        let a = m.packed_f64();
+        let b = m.packed_f64();
+        assert!(Arc::ptr_eq(&a, &b));
+        let fa = m.packed_f32();
+        let fb = m.packed_f32();
+        assert!(Arc::ptr_eq(&fa, &fb));
+        let qa = m.packed_fixed(crate::fixed::FP16);
+        let qb = m.packed_fixed(crate::fixed::FP16);
+        assert!(Arc::ptr_eq(&qa, &qb));
+        assert_eq!(m.state_len(), 2 * 15 * 3);
+    }
+
+    #[test]
+    fn residency_gauge_saturates_at_zero() {
+        let reg = ModelRegistry::new(DEFAULT_MODEL_ID, params(5));
+        let m = reg.default_model();
+        m.add_residency(3);
+        assert_eq!(m.residency(), 3);
+        m.sub_residency(5);
+        assert_eq!(m.residency(), 0);
+    }
+}

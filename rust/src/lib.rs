@@ -78,6 +78,12 @@
 //!   `docs/SCHED.md`): idle shards steal whole sessions — live lane
 //!   state + queued jobs — from saturated peers, with a routing overlay
 //!   keeping future arrivals and reconnects on the migrated shard.
+//!   Multi-model serving (`docs/MODELS.md`): sessions bind versioned
+//!   [`kernel::ModelRegistry`] artifacts (Hello bind block / JSON
+//!   `"model"` field), per-tenant admission quotas shed loudly instead
+//!   of letting one tenant starve the rest, `hrd reload --model`
+//!   hot-loads a new version under live traffic, and the v2 snapshot
+//!   refuses restores whose weights fingerprints don't match.
 //! * [`wire`] — the binary wire protocol (`docs/PROTOCOL.md`):
 //!   CRC-guarded length-prefixed frames, zero-copy
 //!   [`wire::FrameReader`]/[`wire::FrameWriter`], batched submission

@@ -31,6 +31,18 @@ pub struct OperatorLine {
     pub reloads: u64,
 }
 
+/// One loaded model version's registry line (multi-model serving; see
+/// `docs/MODELS.md`).
+#[derive(Debug, Clone, Default)]
+pub struct ModelLine {
+    pub id: String,
+    pub version: u32,
+    /// Kernel lanes currently bound to this version.
+    pub residency: u64,
+    /// Whether unpinned bindings resolve to this version.
+    pub latest: bool,
+}
+
 /// Format a value the way the stats JSON does: integral values print
 /// without a decimal point, everything else as shortest-roundtrip f64.
 fn num(v: f64) -> String {
@@ -55,6 +67,7 @@ pub fn render_prometheus(
     snapshot_seq: u64,
     wire: Option<&WireLine>,
     operator: Option<&OperatorLine>,
+    models: Option<&[ModelLine]>,
 ) -> String {
     let mut o = String::with_capacity(4096);
     head(&mut o, "hrd_uptime_seconds", "gauge", "Seconds since the serving fabric came up.");
@@ -137,6 +150,54 @@ pub fn render_prometheus(
         let _ = writeln!(o, "hrd_shard_queue_len{{shard=\"{i}\"}} {}", sh.queue_len);
     }
 
+    // Per-tenant admission ledgers and per-model residency render only
+    // when present, so single-model deployments keep the legacy shape.
+    if !sched.tenants.is_empty() {
+        head(&mut o, "hrd_tenant_admitted_total", "counter", "Requests admitted per tenant.");
+        for t in &sched.tenants {
+            let _ = writeln!(o, "hrd_tenant_admitted_total{{tenant=\"{}\"}} {}", t.tenant, t.admitted);
+        }
+        head(
+            &mut o,
+            "hrd_tenant_quota_shed_total",
+            "counter",
+            "Requests shed at the tenant quota gate.",
+        );
+        for t in &sched.tenants {
+            let _ =
+                writeln!(o, "hrd_tenant_quota_shed_total{{tenant=\"{}\"}} {}", t.tenant, t.quota_shed);
+        }
+        head(&mut o, "hrd_tenant_in_flight", "gauge", "Admitted-but-unfinished requests per tenant.");
+        for t in &sched.tenants {
+            let _ = writeln!(o, "hrd_tenant_in_flight{{tenant=\"{}\"}} {}", t.tenant, t.in_flight);
+        }
+        head(&mut o, "hrd_tenant_quota_limit", "gauge", "Admission quota per tenant (0 = unlimited).");
+        for t in &sched.tenants {
+            let limit = if t.limit == u64::MAX { 0 } else { t.limit };
+            let _ = writeln!(o, "hrd_tenant_quota_limit{{tenant=\"{}\"}} {limit}", t.tenant);
+        }
+    }
+    if let Some(models) = models.filter(|m| !m.is_empty()) {
+        head(&mut o, "hrd_model_residency", "gauge", "Kernel lanes bound per model version.");
+        for m in models {
+            let _ = writeln!(
+                o,
+                "hrd_model_residency{{model=\"{}\",version=\"{}\"}} {}",
+                m.id, m.version, m.residency
+            );
+        }
+        head(&mut o, "hrd_model_latest", "gauge", "1 on the version unpinned bindings resolve to.");
+        for m in models {
+            let _ = writeln!(
+                o,
+                "hrd_model_latest{{model=\"{}\",version=\"{}\"}} {}",
+                m.id,
+                m.version,
+                m.latest as u8
+            );
+        }
+    }
+
     if let Some(w) = wire {
         head(&mut o, "hrd_wire_bytes_total", "counter", "Wire bytes moved.");
         let _ = writeln!(o, "hrd_wire_bytes_total{{direction=\"in\"}} {}", w.bytes_in);
@@ -197,6 +258,7 @@ mod tests {
                 occupancy: 3,
                 queue_len: 4,
             }],
+            tenants: vec![],
         }
     }
 
@@ -212,7 +274,8 @@ mod tests {
         let wire = WireLine { bytes_in: 100, bytes_out: 200, frames_in: 3, frames_out: 4 };
         let operator =
             OperatorLine { drains: 1, drained_sessions: 5, restored_sessions: 5, reloads: 2 };
-        let got = render_prometheus(&snap(), &stages, 1_500_000, 9, Some(&wire), Some(&operator));
+        let got =
+            render_prometheus(&snap(), &stages, 1_500_000, 9, Some(&wire), Some(&operator), None);
         let want = "\
 # HELP hrd_uptime_seconds Seconds since the serving fabric came up.
 # TYPE hrd_uptime_seconds gauge
@@ -297,11 +360,49 @@ hrd_reloads_total 2
 
     #[test]
     fn wire_and_operator_sections_are_optional() {
-        let got = render_prometheus(&snap(), &[], 0, 1, None, None);
+        let got = render_prometheus(&snap(), &[], 0, 1, None, None, None);
         assert!(!got.contains("hrd_wire_"));
         assert!(!got.contains("hrd_drains_"));
         assert!(!got.contains("hrd_reloads_"));
+        assert!(!got.contains("hrd_tenant_"), "no tenants -> no tenant section");
+        assert!(!got.contains("hrd_model_"), "no models -> no model section");
         assert!(got.contains("hrd_uptime_seconds 0\n"));
         assert!(got.ends_with('\n'));
+    }
+
+    #[test]
+    fn tenant_and_model_sections_render_with_stable_labels() {
+        use crate::sched::TenantSnapshot;
+        let mut s = snap();
+        s.tenants = vec![
+            TenantSnapshot {
+                tenant: "dropbear".into(),
+                limit: u64::MAX,
+                in_flight: 2,
+                admitted: 9,
+                quota_shed: 0,
+            },
+            TenantSnapshot { tenant: "aux".into(), limit: 4, in_flight: 1, admitted: 3, quota_shed: 2 },
+        ];
+        let models = vec![
+            ModelLine { id: "dropbear".into(), version: 2, residency: 6, latest: true },
+            ModelLine { id: "dropbear".into(), version: 1, residency: 1, latest: false },
+            ModelLine { id: "aux".into(), version: 1, residency: 2, latest: true },
+        ];
+        let got = render_prometheus(&s, &[], 0, 1, None, None, Some(&models));
+        for line in [
+            "hrd_tenant_admitted_total{tenant=\"dropbear\"} 9",
+            "hrd_tenant_quota_shed_total{tenant=\"aux\"} 2",
+            "hrd_tenant_in_flight{tenant=\"dropbear\"} 2",
+            "hrd_tenant_quota_limit{tenant=\"dropbear\"} 0", // unlimited renders as 0
+            "hrd_tenant_quota_limit{tenant=\"aux\"} 4",
+            "hrd_model_residency{model=\"dropbear\",version=\"2\"} 6",
+            "hrd_model_residency{model=\"dropbear\",version=\"1\"} 1",
+            "hrd_model_residency{model=\"aux\",version=\"1\"} 2",
+            "hrd_model_latest{model=\"dropbear\",version=\"2\"} 1",
+            "hrd_model_latest{model=\"dropbear\",version=\"1\"} 0",
+        ] {
+            assert!(got.contains(line), "missing `{line}` in:\n{got}");
+        }
     }
 }

@@ -8,6 +8,7 @@
 //! either admits the job to that shard's bounded EDF queue or sheds it
 //! according to the configured policy.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
@@ -17,20 +18,20 @@ use anyhow::{Context, Result};
 
 use crate::arch::INPUT_SIZE;
 use crate::coordinator::watchdog::{WatchdogConfig, WatchdogEvent};
-use crate::kernel::{PackedModel, PackedModelF32};
+use crate::kernel::{ModelArtifact, ModelBinding, ModelInfo, ModelRegistry};
 use crate::lstm::LstmParams;
 use crate::obs::{ObsConfig, Registry, ReqTrace, Stage};
-use crate::wire::{SessionRecord, SnapshotFile};
+use crate::wire::{SessionRecord, SnapModel, SnapshotFile};
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
-use super::metrics::{SchedMetrics, SchedSnapshot};
+use super::metrics::{AdmitToken, SchedMetrics, SchedSnapshot, TenantCounters};
 use super::queue::{
     CompletionTx, Control, Job, Migration, PushOutcome, ReplyTo, ShardQueue, ShedPolicy,
     StolenSession,
 };
 use super::reload::{LiveTuning, ReloadOutcome};
 use super::session::{session_hash, shard_of};
-use super::shard::{run_worker, DatapathKind, ShardCore, ShardWorkerCtx};
+use super::shard::{run_worker, DatapathKind, ShardMux, ShardWorkerCtx};
 
 /// Fabric tuning.  `shards * batch` is the total number of concurrently
 /// resident sessions (kernel lanes) the fabric serves.
@@ -59,6 +60,15 @@ pub struct FabricConfig {
     /// default, so untraced fabrics are bit- and latency-identical to
     /// pre-obs builds.
     pub obs: ObsConfig,
+    /// Default per-tenant in-flight admission quota; 0 = unlimited.  A
+    /// tenant is a model id unless remapped by [`Self::tenant_map`]
+    /// (`docs/MODELS.md`).
+    pub tenant_default_quota: u64,
+    /// `(tenant name, quota)` overrides of the default; 0 = unlimited.
+    pub tenant_quotas: Vec<(String, u64)>,
+    /// `(model id, tenant name)` grouping overrides — several models can
+    /// share one tenant's quota.
+    pub tenant_map: Vec<(String, String)>,
 }
 
 impl FabricConfig {
@@ -74,6 +84,9 @@ impl FabricConfig {
             watchdog: WatchdogConfig::default(),
             balance: BalanceConfig::default(),
             obs: ObsConfig::default(),
+            tenant_default_quota: 0,
+            tenant_quotas: Vec::new(),
+            tenant_map: Vec::new(),
         }
     }
 }
@@ -92,6 +105,10 @@ pub enum Shed {
     /// closed but the session states survive — clients should retry
     /// after the server restarts with `--restore`.
     Draining,
+    /// The session's tenant is at its in-flight admission quota
+    /// (`[tenant]` config / `FabricConfig::tenant_quotas`): serving it
+    /// would let one tenant starve the others.  Retryable.
+    Quota,
     /// A shard worker failed internally (bug; logged server-side).
     Internal,
 }
@@ -103,6 +120,7 @@ impl std::fmt::Display for Shed {
             Self::Evicted => "evicted by a more urgent request",
             Self::Shutdown => "fabric shutting down",
             Self::Draining => "fabric draining (retry after restart)",
+            Self::Quota => "tenant quota exceeded",
             Self::Internal => "internal shard error",
         })
     }
@@ -159,14 +177,16 @@ impl Pending {
 /// session plus the rebalance routing overrides, ready to serialize
 /// into a [`SnapshotFile`] and re-install with [`Fabric::restore`]
 /// after a restart (`docs/OPERATIONS.md`).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct DrainedFabric {
-    /// `(session hash, exported lane state)`, sorted by hash.
-    pub sessions: Vec<(u64, Vec<f64>)>,
+    /// `(session hash, bound model, exported lane state)`, sorted by
+    /// hash.
+    pub sessions: Vec<(u64, Arc<ModelArtifact>, Vec<f64>)>,
     /// `(session hash, shard)` routing overrides, sorted by hash; empty
     /// unless rebalancing was enabled.
     pub routes: Vec<(u64, usize)>,
-    /// `f64` words per exported lane state.
+    /// `f64` words per exported lane state of the DEFAULT model (other
+    /// models carry their own width in the snapshot model table).
     pub state_len: usize,
     /// Datapath tag ([`Fabric::datapath_tag`]) — restore refuses a
     /// snapshot taken under a different numeric tier.
@@ -174,16 +194,38 @@ pub struct DrainedFabric {
 }
 
 impl DrainedFabric {
-    /// Serialize into the on-disk snapshot form.
+    /// Serialize into the on-disk snapshot form: deduplicate the bound
+    /// artifacts into the version-2 model table and index each session
+    /// into it, so a restore can verify the weights fingerprints.
     pub fn to_snapshot(&self) -> SnapshotFile {
+        let mut models: Vec<SnapModel> = Vec::new();
+        let mut artifacts: Vec<&Arc<ModelArtifact>> = Vec::new();
+        let mut sessions = Vec::with_capacity(self.sessions.len());
+        for (session, artifact, state) in &self.sessions {
+            let idx = match artifacts.iter().position(|a| Arc::ptr_eq(a, artifact)) {
+                Some(i) => i,
+                None => {
+                    artifacts.push(artifact);
+                    models.push(SnapModel {
+                        id: artifact.id().to_string(),
+                        version: artifact.version(),
+                        fingerprint: artifact.fingerprint(),
+                        state_len: artifact.state_len() as u32,
+                    });
+                    models.len() - 1
+                }
+            };
+            sessions.push(SessionRecord {
+                session: *session,
+                model: idx as u16,
+                state: state.clone(),
+            });
+        }
         SnapshotFile {
             datapath: self.datapath.clone(),
             state_len: self.state_len as u32,
-            sessions: self
-                .sessions
-                .iter()
-                .map(|(session, state)| SessionRecord { session: *session, state: state.clone() })
-                .collect(),
+            models,
+            sessions,
             routes: self.routes.iter().map(|&(session, shard)| (session, shard as u32)).collect(),
         }
     }
@@ -194,8 +236,17 @@ pub struct Fabric {
     cfg: FabricConfig,
     name: &'static str,
     queues: Vec<Arc<ShardQueue>>,
-    workers: Mutex<Vec<std::thread::JoinHandle<Vec<(u64, Vec<f64>)>>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<Vec<(u64, Arc<ModelArtifact>, Vec<f64>)>>>>,
     metrics: Arc<SchedMetrics>,
+    /// The versioned model store every session binds through
+    /// (`docs/MODELS.md`); `hrd reload --model` inserts into it live.
+    registry: Arc<ModelRegistry>,
+    /// The default (unpinned) binding legacy/unbound submissions use —
+    /// it tracks the registry's latest default-model version.
+    binding: ModelBinding,
+    /// `model id -> tenant ledger` admission cache (the ledgers
+    /// themselves live in [`SchedMetrics`] so they surface in stats).
+    tenant_cache: Mutex<HashMap<String, Arc<TenantCounters>>>,
     /// `session hash -> shard` overrides installed by migrations.
     overlay: Arc<RoutingOverlay>,
     /// Per-shard load gauges feeding steal planning.
@@ -213,41 +264,28 @@ pub struct Fabric {
 }
 
 impl Fabric {
-    /// Build the fabric and spawn its shard workers.  The packed weights
-    /// are shared (`Arc`) across every shard — one copy in memory total.
+    /// Build a single-model fabric: wrap `params` into a fresh registry
+    /// under the default model id and spawn the shard workers.
     pub fn new(params: &LstmParams, cfg: FabricConfig) -> Result<Self> {
+        Self::with_registry(ModelRegistry::shared(params.clone()), cfg)
+    }
+
+    /// Build the fabric over an existing model registry and spawn its
+    /// shard workers.  Every shard seeds a lane group for the registry's
+    /// default model; further groups appear lazily as bound sessions of
+    /// other models land (the packed weights of each artifact are shared
+    /// `Arc`s — one copy per tier in memory total).
+    pub fn with_registry(registry: Arc<ModelRegistry>, cfg: FabricConfig) -> Result<Self> {
         anyhow::ensure!(cfg.shards >= 1, "fabric needs at least one shard");
         anyhow::ensure!(cfg.batch >= 1, "fabric needs at least one lane per shard");
-        // One packing serves every shard, whichever tier it is; cores
-        // are built up front so the spawn loop below is tier-agnostic.
         let name = match cfg.datapath {
             DatapathKind::Float => "fabric-float",
             DatapathKind::FloatF32 => "fabric-f32",
             DatapathKind::Fixed(_) => "fabric-fixed",
         };
-        let cores: Vec<ShardCore> = match cfg.datapath {
-            DatapathKind::Float => {
-                let packed = PackedModel::shared(params);
-                (0..cfg.shards)
-                    .map(|_| ShardCore::new_float(packed.clone(), cfg.batch, cfg.watchdog.clone()))
-                    .collect()
-            }
-            DatapathKind::FloatF32 => {
-                let packed = PackedModelF32::shared(params);
-                (0..cfg.shards)
-                    .map(|_| ShardCore::new_f32(packed.clone(), cfg.batch, cfg.watchdog.clone()))
-                    .collect()
-            }
-            DatapathKind::Fixed(fmt) => {
-                let packed = PackedModel::shared(&params.quantized(fmt));
-                (0..cfg.shards)
-                    .map(|_| {
-                        ShardCore::new_fixed(packed.clone(), fmt, cfg.batch, cfg.watchdog.clone())
-                    })
-                    .collect()
-            }
-        };
-        let state_len = cores[0].state_len();
+        let default_model = registry.default_model();
+        let state_len = default_model.state_len();
+        let binding = ModelBinding::default_of(registry.clone());
         let metrics = Arc::new(SchedMetrics::new(cfg.shards));
         let obs = Arc::new(Registry::new(cfg.obs.clone(), cfg.shards));
         let overlay = Arc::new(RoutingOverlay::new());
@@ -262,7 +300,9 @@ impl Fabric {
             .map(|_| Arc::new(ShardQueue::new(cfg.queue_depth, cfg.shed)))
             .collect();
         let mut workers = Vec::with_capacity(cfg.shards);
-        for (index, (queue, core)) in queues.iter().zip(cores).enumerate() {
+        for (index, queue) in queues.iter().enumerate() {
+            let mux =
+                ShardMux::new(cfg.datapath, cfg.watchdog.clone(), cfg.batch, default_model.clone());
             let ctx = ShardWorkerCtx {
                 index,
                 queue: queue.clone(),
@@ -278,7 +318,7 @@ impl Fabric {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("hrd-shard-{index}"))
-                    .spawn(move || run_worker(core, ctx))
+                    .spawn(move || run_worker(mux, ctx))
                     .context("spawning shard worker")?,
             );
         }
@@ -288,6 +328,9 @@ impl Fabric {
             queues,
             workers: Mutex::new(workers),
             metrics,
+            registry,
+            binding,
+            tenant_cache: Mutex::new(HashMap::new()),
             overlay,
             board,
             obs,
@@ -307,6 +350,51 @@ impl Fabric {
 
     pub fn config(&self) -> &FabricConfig {
         &self.cfg
+    }
+
+    /// The model registry this fabric serves from (`docs/MODELS.md`).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Loaded models, versions and lane residency (ops surface: `hrd
+    /// status` / `hrd top`).
+    pub fn models(&self) -> Vec<ModelInfo> {
+        self.registry.models()
+    }
+
+    /// Resolve a client's model-bind request into a [`ModelBinding`]
+    /// (`version` 0 = track latest).  Typed error for an unknown model,
+    /// so front-ends can reply without tearing the connection state down.
+    pub fn bind_model(&self, id: &str, version: u32) -> Result<ModelBinding> {
+        ModelBinding::bind(self.registry.clone(), id, version)
+    }
+
+    /// The tenant ledger a model id's admissions are charged to: the
+    /// model id itself unless `[tenant] map` groups it, with the quota
+    /// from `[tenant]` config installed on first use (0 = unlimited).
+    fn tenant_for(&self, model_id: &str) -> Arc<TenantCounters> {
+        if let Some(t) = self.tenant_cache.lock().unwrap().get(model_id) {
+            return t.clone();
+        }
+        let name = self
+            .cfg
+            .tenant_map
+            .iter()
+            .find(|(model, _)| model == model_id)
+            .map(|(_, tenant)| tenant.as_str())
+            .unwrap_or(model_id);
+        let tenant = self.metrics.tenant(name);
+        let quota = self
+            .cfg
+            .tenant_quotas
+            .iter()
+            .find(|(tenant, _)| tenant == name)
+            .map(|&(_, quota)| quota)
+            .unwrap_or(self.cfg.tenant_default_quota);
+        tenant.limit.store(if quota == 0 { u64::MAX } else { quota }, Ordering::Relaxed);
+        self.tenant_cache.lock().unwrap().insert(model_id.to_string(), tenant.clone());
+        tenant
     }
 
     /// Which shard a session name routes to (stable across reconnects;
@@ -380,6 +468,20 @@ impl Fabric {
         session: u64,
         window: &[f32; INPUT_SIZE],
         deadline_us: Option<f64>,
+        trace: ReqTrace,
+    ) -> Result<Pending> {
+        self.submit_bound_traced(&self.binding, session, window, deadline_us, trace)
+    }
+
+    /// [`Self::submit_hashed_traced`] against an explicit model binding
+    /// (the per-connection binding a Hello's model-bind block resolved
+    /// to).  Admission is charged to the bound model's tenant quota.
+    pub fn submit_bound_traced(
+        &self,
+        binding: &ModelBinding,
+        session: u64,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
         mut trace: ReqTrace,
     ) -> Result<Pending> {
         // Counted before the drain check on purpose: a drain's quiesce
@@ -390,6 +492,20 @@ impl Fabric {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow::anyhow!("request shed: {}", Shed::Draining));
         }
+        let model = binding.resolve();
+        let tenant = self.tenant_for(model.id());
+        let admit = match AdmitToken::acquire(&tenant) {
+            Some(token) => token,
+            None => {
+                tenant.quota_shed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow::anyhow!(
+                    "request shed: {} (tenant `{}`)",
+                    Shed::Quota,
+                    tenant.name
+                ));
+            }
+        };
         trace.mark(Stage::Admitted);
         let now = Instant::now();
         let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
@@ -401,6 +517,8 @@ impl Fabric {
             deadline: now + Duration::from_secs_f64(budget * 1e-6),
             reply: ReplyTo::Oneshot(tx),
             trace,
+            model,
+            admit,
         };
         let (shard, outcome) = self.with_route(session, |shard, q| {
             job.trace.mark(Stage::Queued);
@@ -459,6 +577,21 @@ impl Fabric {
         deadline_us: Option<f64>,
         tx: CompletionTx,
         seq: u64,
+        trace: ReqTrace,
+    ) -> std::result::Result<(), Shed> {
+        self.submit_pushed_bound_traced(&self.binding, session, window, deadline_us, tx, seq, trace)
+    }
+
+    /// [`Self::submit_pushed_traced`] against an explicit model binding.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_pushed_bound_traced(
+        &self,
+        binding: &ModelBinding,
+        session: u64,
+        window: &[f32; INPUT_SIZE],
+        deadline_us: Option<f64>,
+        tx: CompletionTx,
+        seq: u64,
         mut trace: ReqTrace,
     ) -> std::result::Result<(), Shed> {
         // Same ledger rule as the oneshot path: count, then drain-check.
@@ -467,6 +600,16 @@ impl Fabric {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
             return Err(Shed::Draining);
         }
+        let model = binding.resolve();
+        let tenant = self.tenant_for(model.id());
+        let admit = match AdmitToken::acquire(&tenant) {
+            Some(token) => token,
+            None => {
+                tenant.quota_shed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Shed::Quota);
+            }
+        };
         trace.mark(Stage::Admitted);
         let now = Instant::now();
         let budget = deadline_us.unwrap_or(self.cfg.deadline_us).max(0.0);
@@ -477,6 +620,8 @@ impl Fabric {
             deadline: now + Duration::from_secs_f64(budget * 1e-6),
             reply: ReplyTo::Push { tx, seq },
             trace,
+            model,
+            admit,
         };
         let outcome = self.with_route(session, |_, q| {
             job.trace.mark(Stage::Queued);
@@ -503,6 +648,18 @@ impl Fabric {
     /// Convenience blocking round trip (tests, simple clients).
     pub fn infer(&self, session: &str, window: &[f32; INPUT_SIZE]) -> Result<Completion> {
         self.submit(session, window, None)?.wait()
+    }
+
+    /// [`Self::infer`] against an explicit model binding.
+    pub fn infer_bound(
+        &self,
+        binding: &ModelBinding,
+        session: &str,
+        window: &[f32; INPUT_SIZE],
+    ) -> Result<Completion> {
+        let mut trace = self.obs.start_trace();
+        trace.mark(Stage::WireDecoded);
+        self.submit_bound_traced(binding, session_hash(session), window, None, trace)?.wait()
     }
 
     /// Zero one session's recurrent stream (asynchronous; ordered with
@@ -626,7 +783,7 @@ impl Fabric {
             }
         }
         let workers = std::mem::take(&mut *self.workers.lock().unwrap());
-        let mut sessions: Vec<(u64, Vec<f64>)> = Vec::new();
+        let mut sessions: Vec<(u64, Arc<ModelArtifact>, Vec<f64>)> = Vec::new();
         let mut panicked = 0usize;
         for w in workers {
             match w.join() {
@@ -635,7 +792,7 @@ impl Fabric {
             }
         }
         anyhow::ensure!(panicked == 0, "{panicked} shard worker(s) panicked during drain");
-        sessions.sort_unstable_by_key(|(session, _)| *session);
+        sessions.sort_by_key(|(session, _, _)| *session);
         let routes =
             if self.cfg.balance.enabled { self.overlay.export_overrides() } else { Vec::new() };
         Ok(DrainedFabric {
@@ -661,12 +818,64 @@ impl Fabric {
              (restart with the original precision flags)",
             snap.datapath
         );
-        anyhow::ensure!(
-            snap.state_len as usize == self.state_len,
-            "snapshot lane state is {} words, this fabric needs {}",
-            snap.state_len,
-            self.state_len
-        );
+        // Map the snapshot's model table onto loaded artifacts.  A v2
+        // snapshot names its weights exactly — a fingerprint mismatch is
+        // a hard refusal (resuming a recurrent stream on different
+        // weights silently serves wrong numbers).  A v1 snapshot has no
+        // table: sessions go to the default model and we can only warn.
+        let artifacts: Vec<Arc<ModelArtifact>> = if snap.models.is_empty() {
+            anyhow::ensure!(
+                snap.state_len as usize == self.state_len,
+                "snapshot lane state is {} words, this fabric needs {}",
+                snap.state_len,
+                self.state_len
+            );
+            eprintln!(
+                "hrd: warning: v1 snapshot carries no weights fingerprint; \
+                 cannot verify the restored sessions were exported under the loaded `{}` weights",
+                self.registry.default_id()
+            );
+            vec![self.registry.default_model()]
+        } else {
+            snap.models
+                .iter()
+                .map(|m| {
+                    let artifact = self
+                        .registry
+                        .get(&m.id, m.version)
+                        .or_else(|| self.registry.latest(&m.id))
+                        .with_context(|| {
+                            format!(
+                                "snapshot references model `{}` v{} which is not loaded \
+                                 (preload it with --model or `hrd reload --model`)",
+                                m.id, m.version
+                            )
+                        })?;
+                    anyhow::ensure!(
+                        artifact.fingerprint() == m.fingerprint,
+                        "snapshot model `{}` v{} was exported under weights {:#018x}, \
+                         but the loaded `{}` v{} weights fingerprint {:#018x} — \
+                         refusing to resume streams on different weights",
+                        m.id,
+                        m.version,
+                        m.fingerprint,
+                        artifact.id(),
+                        artifact.version(),
+                        artifact.fingerprint()
+                    );
+                    anyhow::ensure!(
+                        artifact.state_len() as u32 == m.state_len,
+                        "snapshot model `{}` v{} lane state is {} words, \
+                         the loaded weights need {}",
+                        m.id,
+                        m.version,
+                        m.state_len,
+                        artifact.state_len()
+                    );
+                    Ok(artifact)
+                })
+                .collect::<Result<_>>()?
+        };
         anyhow::ensure!(
             snap.routes.is_empty() || self.cfg.balance.enabled,
             "snapshot carries {} routing override(s) but rebalancing is disabled \
@@ -694,11 +903,18 @@ impl Fabric {
             self.overlay.set_in(&mut guard, session, shard as usize);
         }
         for rec in &snap.sessions {
+            let model = artifacts.get(rec.model as usize).with_context(|| {
+                format!(
+                    "session {:#018x} references model index {} outside the snapshot table",
+                    rec.session, rec.model
+                )
+            })?;
             let control = Control::Adopt(Box::new(Migration {
                 stolen: Some(StolenSession {
                     session: rec.session,
                     state: Some(rec.state.clone()),
                     jobs: Vec::new(),
+                    model: model.clone(),
                 }),
             }));
             let rejected = self.with_route(rec.session, |_, q| q.push_control(control));
@@ -773,6 +989,27 @@ impl Fabric {
                 "shards" | "batch" | "precision" | "deadline_us" | "addr" | "wire" => {
                     Err("restart-only knob (shapes allocations or thread topology)".to_string())
                 }
+                knob if knob.strip_prefix("model.").is_some_and(|id| !id.is_empty()) => {
+                    // Hot model reload: `model.<id> = <weights path>` loads
+                    // the file as a new version of `<id>`.  New sessions
+                    // bind it immediately (unpinned bindings track
+                    // latest); resident sessions rebind at their next
+                    // window boundary, carrying state when the shapes
+                    // match.  Old versions are released once idle.
+                    let id = knob.strip_prefix("model.").unwrap();
+                    match LstmParams::load(std::path::Path::new(value)) {
+                        Ok(params) => {
+                            let artifact = self.registry.insert(id, params);
+                            let freed = self.registry.release_unused();
+                            Ok(format!(
+                                "{id} v{} (fingerprint {:#018x}, {freed} stale version(s) freed)",
+                                artifact.version(),
+                                artifact.fingerprint()
+                            ))
+                        }
+                        Err(e) => Err(format!("loading weights from `{value}`: {e}")),
+                    }
+                }
                 _ => Err("unknown knob".to_string()),
             };
             match result {
@@ -808,6 +1045,7 @@ impl Drop for Fabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernel::{weights_fingerprint, PackedModel, PackedModelF32};
     use crate::util::Rng;
 
     fn params() -> LstmParams {
@@ -1177,7 +1415,8 @@ mod tests {
         let base = SnapshotFile {
             datapath: "f64".into(),
             state_len: fabric.state_len as u32,
-            sessions: vec![SessionRecord { session: 7, state: good_state.clone() }],
+            models: vec![],
+            sessions: vec![SessionRecord { session: 7, model: 0, state: good_state.clone() }],
             routes: vec![],
         };
         assert_eq!(fabric.restore(&base).unwrap(), 1);
@@ -1185,10 +1424,28 @@ mod tests {
         assert!(format!("{}", fabric.restore(&wrong_tier).unwrap_err()).contains("datapath"));
         let wrong_width = SnapshotFile {
             state_len: 3,
-            sessions: vec![SessionRecord { session: 7, state: vec![0.5; 3] }],
+            sessions: vec![SessionRecord { session: 7, model: 0, state: vec![0.5; 3] }],
             ..base.clone()
         };
         assert!(format!("{}", fabric.restore(&wrong_width).unwrap_err()).contains("words"));
+        // v2: the right model id but TAMPERED weights fingerprint must
+        // be refused loudly (satellite: restore verifies WHICH weights).
+        let good_model = SnapModel {
+            id: crate::kernel::DEFAULT_MODEL_ID.to_string(),
+            version: 1,
+            fingerprint: weights_fingerprint(&p),
+            state_len: fabric.state_len as u32,
+        };
+        let v2 = SnapshotFile { models: vec![good_model.clone()], ..base.clone() };
+        assert_eq!(fabric.restore(&v2).unwrap(), 1);
+        let mut tampered = v2.clone();
+        tampered.models[0].fingerprint ^= 1;
+        let err = format!("{}", fabric.restore(&tampered).unwrap_err());
+        assert!(err.contains("fingerprint"), "{err}");
+        let mut unknown = v2.clone();
+        unknown.models[0].id = "nonexistent".into();
+        let err = format!("{}", fabric.restore(&unknown).unwrap_err());
+        assert!(err.contains("not loaded"), "{err}");
         let routed = SnapshotFile { routes: vec![(7, 1)], ..base.clone() };
         assert!(format!("{}", fabric.restore(&routed).unwrap_err()).contains("rebalancing"));
         let mut cfg = FabricConfig::new(2, 2);
@@ -1259,5 +1516,192 @@ mod tests {
         assert_eq!(fabric.queues[0].depth(), 3, "bad later value must not undo the good one");
         assert_eq!(fabric.queues[0].policy(), ShedPolicy::EvictFarthest);
         assert_eq!(fabric.tuning().gather_cap(), Duration::from_micros(50));
+    }
+
+    /// Tentpole admission: a tenant at its in-flight quota sheds with
+    /// the typed quota error, the ledger stays balanced, and releasing
+    /// the slot re-opens admission.
+    #[test]
+    fn tenant_quota_sheds_loudly_and_releases() {
+        let p = params();
+        let mut cfg = FabricConfig::new(1, 2);
+        cfg.tenant_quotas = vec![("dropbear".into(), 1)];
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        // The first submission installs the ledger with its configured
+        // limit...
+        fabric.infer("q-a", &[0.5; INPUT_SIZE]).unwrap();
+        let tenant = fabric.metrics().tenant("dropbear");
+        assert_eq!(tenant.limit.load(Ordering::Relaxed), 1);
+        // ...so holding the single slot from outside makes the next
+        // submission shed deterministically.  (The worker releases q-a's
+        // slot when it drops the completed job, which can trail the
+        // completion signal by a beat — poll.)
+        let held = {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                if let Some(t) = AdmitToken::acquire(&tenant) {
+                    break t;
+                }
+                assert!(Instant::now() < deadline, "q-a's admit slot never drained");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        };
+        let err = fabric.submit("q-b", &[0.5; INPUT_SIZE], None).unwrap_err();
+        assert!(format!("{err}").contains("quota"), "{err}");
+        assert_eq!(tenant.quota_shed.load(Ordering::Relaxed), 1);
+        drop(held);
+        fabric.infer("q-c", &[0.5; INPUT_SIZE]).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while tenant.in_flight.load(Ordering::Relaxed) != 0 {
+            assert!(Instant::now() < deadline, "an admit slot leaked");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let snap = fabric.snapshot();
+        assert_eq!(snap.submitted, snap.completed + snap.shed);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.shed, 1);
+        let ts = snap.tenants.iter().find(|t| t.tenant == "dropbear").unwrap();
+        assert_eq!(ts.limit, 1);
+        assert_eq!(ts.quota_shed, 1);
+        assert_eq!(ts.in_flight, 0, "every token was released");
+    }
+
+    /// `[tenant] map` groups a model under a named tenant's ledger.
+    #[test]
+    fn tenant_map_groups_models_under_one_ledger() {
+        let p = params();
+        let mut cfg = FabricConfig::new(1, 1);
+        cfg.tenant_map = vec![("dropbear".into(), "team-a".into())];
+        cfg.tenant_quotas = vec![("team-a".into(), 4)];
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        fabric.infer("m", &[0.1; INPUT_SIZE]).unwrap();
+        let snap = fabric.snapshot();
+        let ts = snap.tenants.iter().find(|t| t.tenant == "team-a").unwrap();
+        assert_eq!(ts.limit, 4);
+        assert_eq!(ts.admitted, 1);
+        assert!(!snap.tenants.iter().any(|t| t.tenant == "dropbear"));
+    }
+
+    /// Tentpole end to end at the fabric level: two models (different
+    /// hidden sizes) serve concurrently, each stream bit-identical to
+    /// its dedicated single-model reference, and the v2 snapshot carries
+    /// both models' states across a drain/restore "process boundary".
+    #[test]
+    fn two_models_serve_drain_and_restore_bit_identically() {
+        use crate::kernel::{FloatPath, ScalarKernel};
+        let pa = params();
+        let pb = LstmParams::init(16, 9, 2, 1, 77);
+        let mk = |pa: &LstmParams, pb: &LstmParams| {
+            let registry = ModelRegistry::shared(pa.clone());
+            registry.insert("aux", pb.clone());
+            let mut cfg = FabricConfig::new(2, 2);
+            cfg.watchdog = wide_watchdog();
+            Fabric::with_registry(registry, cfg).unwrap()
+        };
+        let first = mk(&pa, &pb);
+        assert!(first.bind_model("nonexistent", 0).is_err());
+        assert!(first.bind_model("aux", 9).is_err(), "unknown version must refuse");
+        let aux = first.bind_model("aux", 0).unwrap();
+        let mut ref_a = ScalarKernel::new(PackedModel::shared(&pa), FloatPath);
+        let mut ref_b = ScalarKernel::new(PackedModel::shared(&pb), FloatPath);
+        let mut rng = Rng::new(5);
+        for _ in 0..6 {
+            let w = window(&mut rng);
+            assert_eq!(first.infer("da", &w).unwrap().estimate, ref_a.step_window(&w[..]));
+            let w = window(&mut rng);
+            assert_eq!(
+                first.infer_bound(&aux, "db", &w).unwrap().estimate,
+                ref_b.step_window(&w[..]),
+                "aux-bound stream diverged from the aux reference"
+            );
+        }
+        let drained = first.drain(Duration::from_secs(5)).unwrap();
+        let snap = drained.to_snapshot();
+        assert_eq!(snap.models.len(), 2, "both bound models in the table: {:?}", snap.models);
+        let snap = SnapshotFile::decode(&snap.encode().unwrap()).unwrap();
+        let second = mk(&pa, &pb);
+        let aux2 = second.bind_model("aux", 0).unwrap();
+        assert_eq!(second.restore(&snap).unwrap(), 2);
+        for _ in 0..6 {
+            let w = window(&mut rng);
+            assert_eq!(second.infer("da", &w).unwrap().estimate, ref_a.step_window(&w[..]));
+            let w = window(&mut rng);
+            assert_eq!(
+                second.infer_bound(&aux2, "db", &w).unwrap().estimate,
+                ref_b.step_window(&w[..]),
+                "restored aux stream diverged"
+            );
+        }
+    }
+
+    /// Hot model reload through `apply_reload`: `model.<id>` loads a new
+    /// version, unbound sessions drain onto it at their next window
+    /// (carrying state — same shapes), and the superseded version's
+    /// residency returns to zero so the registry can free it.
+    #[test]
+    fn hot_reload_rebinds_sessions_and_retires_the_old_version() {
+        use crate::kernel::{FloatPath, ScalarKernel, StepKernel};
+        let p = params();
+        let p2 = LstmParams::init(16, 15, 3, 1, 99); // same shape, new weights
+        let dir = std::env::temp_dir().join(format!("hrd-reload-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v2.bin");
+        p2.save(&path).unwrap();
+
+        let mut cfg = FabricConfig::new(1, 2);
+        cfg.watchdog = wide_watchdog();
+        let fabric = Fabric::new(&p, cfg).unwrap();
+        let mut reference = ScalarKernel::new(PackedModel::shared(&p), FloatPath);
+        let mut rng = Rng::new(31);
+        for _ in 0..4 {
+            let w = window(&mut rng);
+            assert_eq!(fabric.infer("live", &w).unwrap().estimate, reference.step_window(&w[..]));
+        }
+        let out = fabric.apply_reload(&[(
+            "model.dropbear".to_string(),
+            path.to_string_lossy().into_owned(),
+        )]);
+        assert!(out.is_clean(), "{:?}", out.rejected);
+        let old = fabric.registry().get(crate::kernel::DEFAULT_MODEL_ID, 1).unwrap();
+        assert!(old.is_retired());
+        drop(old); // a held Arc would keep the version release-pinned below
+        // The session rebinds at its next window, CARRYING state: the
+        // estimate must continue the old stream's recurrent state under
+        // the new weights.
+        let mut ref2 = ScalarKernel::new(PackedModel::shared(&p2), FloatPath);
+        let mut carried = vec![0.0; fabric.state_len];
+        reference.export_state(0, &mut carried);
+        ref2.import_state(0, &carried);
+        for _ in 0..4 {
+            let w = window(&mut rng);
+            assert_eq!(
+                fabric.infer("live", &w).unwrap().estimate,
+                ref2.step_window(&w[..]),
+                "post-reload stream must carry state onto the new weights"
+            );
+        }
+        // The old version drains to zero residency and is eventually
+        // released once the worker's idle group is pruned.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let freed = loop {
+            // Keep a trickle of traffic flowing so the worker reaches
+            // its batch boundary (where pruning happens).
+            let w = window(&mut rng);
+            let _ = ref2.step_window(&w[..]);
+            fabric.infer("live", &w).unwrap();
+            let n = fabric.registry().release_unused();
+            if n > 0 {
+                break n;
+            }
+            assert!(Instant::now() < deadline, "old model version never became releasable");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        assert_eq!(freed, 1);
+        assert!(
+            fabric.registry().get(crate::kernel::DEFAULT_MODEL_ID, 1).is_none(),
+            "released version must leave the registry"
+        );
+        assert_eq!(fabric.registry().default_model().version(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -8,8 +8,112 @@
 //! run-to-run noise of any percentile we report (p50/p99/p99.9).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::util::Json;
+
+/// Per-tenant admission accounting (`docs/MODELS.md`).  A tenant is a
+/// quota domain: by default every model id is its own tenant, but the
+/// `[tenant]` config can map several models onto one.  Counters are
+/// lock-free; the tenant list itself is a small mutexed vector touched
+/// only at get-or-create time (submitters cache the `Arc`).
+#[derive(Debug)]
+pub struct TenantCounters {
+    /// Quota-domain name (== model id unless remapped).
+    pub name: String,
+    /// Admission bound on concurrently in-flight requests;
+    /// `u64::MAX` = unlimited (the default).
+    pub limit: AtomicU64,
+    /// Requests admitted and not yet completed or shed.
+    pub in_flight: AtomicU64,
+    /// Requests ever admitted for this tenant.
+    pub admitted: AtomicU64,
+    /// Requests shed because the tenant was at its quota.
+    pub quota_shed: AtomicU64,
+}
+
+impl TenantCounters {
+    fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            limit: AtomicU64::new(u64::MAX),
+            in_flight: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            quota_shed: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Admission receipt carried by every [`super::queue::Job`]: holds the
+/// tenant's in-flight slot and releases it on drop.  Because a job is
+/// dropped exactly once — after its completion or shed notice is sent —
+/// the in-flight gauge stays honest on every terminal path (served,
+/// evicted, drained, shut down, internal error) without per-path
+/// bookkeeping.
+#[derive(Debug, Default)]
+pub struct AdmitToken(Option<Arc<TenantCounters>>);
+
+impl AdmitToken {
+    /// Try to take one in-flight slot.  `None` when the tenant is at
+    /// its quota (the caller sheds with `Shed::Quota`).
+    pub fn acquire(tenant: &Arc<TenantCounters>) -> Option<Self> {
+        let limit = tenant.limit.load(Ordering::Relaxed);
+        let mut cur = tenant.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= limit {
+                return None;
+            }
+            match tenant.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    tenant.admitted.fetch_add(1, Ordering::Relaxed);
+                    return Some(Self(Some(tenant.clone())));
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// A token tracking nothing (tests, paths outside admission).
+    pub fn untracked() -> Self {
+        Self(None)
+    }
+}
+
+impl Drop for AdmitToken {
+    fn drop(&mut self) {
+        if let Some(t) = self.0.take() {
+            t.in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Point-in-time copy of one tenant's admission counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSnapshot {
+    pub tenant: String,
+    /// 0 encodes "unlimited" in reports (internally `u64::MAX`).
+    pub limit: u64,
+    pub in_flight: u64,
+    pub admitted: u64,
+    pub quota_shed: u64,
+}
+
+impl TenantSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("limit", Json::from(self.limit as f64)),
+            ("in_flight", Json::from(self.in_flight as f64)),
+            ("admitted", Json::from(self.admitted as f64)),
+            ("quota_shed", Json::from(self.quota_shed as f64)),
+        ])
+    }
+}
 
 /// Lock-free latency histogram with geometrically spaced buckets.
 #[derive(Debug)]
@@ -118,6 +222,8 @@ pub struct SchedMetrics {
     pub migrations: AtomicU64,
     latency: AtomicHist,
     shards: Vec<ShardMetrics>,
+    /// Per-tenant admission ledgers, get-or-created by [`Self::tenant`].
+    tenants: Mutex<Vec<Arc<TenantCounters>>>,
 }
 
 impl SchedMetrics {
@@ -134,11 +240,25 @@ impl SchedMetrics {
             migrations: AtomicU64::new(0),
             latency: AtomicHist::for_latency(),
             shards: (0..shards).map(|_| ShardMetrics::default()).collect(),
+            tenants: Mutex::new(Vec::new()),
         }
     }
 
     pub fn shard(&self, index: usize) -> &ShardMetrics {
         &self.shards[index]
+    }
+
+    /// Get-or-create the admission ledger for `name`.  Submitters call
+    /// this once per binding and cache the `Arc`; the linear scan is
+    /// fine for the handful of tenants a fabric hosts.
+    pub fn tenant(&self, name: &str) -> Arc<TenantCounters> {
+        let mut tenants = self.tenants.lock().unwrap();
+        if let Some(t) = tenants.iter().find(|t| t.name == name) {
+            return t.clone();
+        }
+        let t = Arc::new(TenantCounters::new(name));
+        tenants.push(t.clone());
+        t
     }
 
     /// Record one completed request (called by the owning shard worker).
@@ -196,6 +316,22 @@ impl SchedMetrics {
                     }
                 })
                 .collect(),
+            tenants: self
+                .tenants
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|t| {
+                    let limit = t.limit.load(Ordering::Relaxed);
+                    TenantSnapshot {
+                        tenant: t.name.clone(),
+                        limit: if limit == u64::MAX { 0 } else { limit },
+                        in_flight: t.in_flight.load(Ordering::Relaxed),
+                        admitted: t.admitted.load(Ordering::Relaxed),
+                        quota_shed: t.quota_shed.load(Ordering::Relaxed),
+                    }
+                })
+                .collect(),
         }
     }
 }
@@ -246,6 +382,7 @@ pub struct SchedSnapshot {
     pub p999_us: f64,
     pub miss_rate: f64,
     pub shards: Vec<ShardSnapshot>,
+    pub tenants: Vec<TenantSnapshot>,
 }
 
 impl SchedSnapshot {
@@ -267,6 +404,7 @@ impl SchedSnapshot {
             ("p99_us", Json::from(self.p99_us)),
             ("p999_us", Json::from(self.p999_us)),
             ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
+            ("tenants", Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect())),
         ])
     }
 }
@@ -448,5 +586,108 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.completed, 2000);
         assert_eq!(s.deadline_misses, 200);
+    }
+
+    #[test]
+    fn tenant_ledger_is_get_or_create() {
+        let m = SchedMetrics::new(1);
+        let a = m.tenant("dropbear");
+        let a2 = m.tenant("dropbear");
+        let b = m.tenant("synthetic");
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(m.snapshot().tenants.len(), 2);
+    }
+
+    #[test]
+    fn admit_token_enforces_the_limit_and_releases_on_drop() {
+        let m = SchedMetrics::new(1);
+        let t = m.tenant("a");
+        t.limit.store(2, Ordering::Relaxed);
+        let tok1 = AdmitToken::acquire(&t).expect("first slot");
+        let tok2 = AdmitToken::acquire(&t).expect("second slot");
+        assert!(AdmitToken::acquire(&t).is_none(), "limit 2 must refuse a third");
+        drop(tok1);
+        let tok3 = AdmitToken::acquire(&t).expect("freed slot is reusable");
+        drop(tok2);
+        drop(tok3);
+        assert_eq!(t.in_flight.load(Ordering::Relaxed), 0);
+        assert_eq!(t.admitted.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn unlimited_tenant_never_refuses() {
+        let m = SchedMetrics::new(1);
+        let t = m.tenant("open");
+        let mut toks = Vec::new();
+        for _ in 0..1000 {
+            toks.push(AdmitToken::acquire(&t).expect("unlimited"));
+        }
+        assert_eq!(t.in_flight.load(Ordering::Relaxed), 1000);
+        drop(toks);
+        assert_eq!(t.in_flight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn untracked_token_touches_no_ledger() {
+        let m = SchedMetrics::new(1);
+        let t = m.tenant("quiet");
+        let tok = AdmitToken::untracked();
+        drop(tok);
+        assert_eq!(t.in_flight.load(Ordering::Relaxed), 0);
+        assert_eq!(t.admitted.load(Ordering::Relaxed), 0);
+    }
+
+    /// Concurrent admission against a tight quota must never exceed the
+    /// limit and must return every slot on drop.
+    #[test]
+    fn concurrent_admission_respects_the_quota() {
+        let m = Arc::new(SchedMetrics::new(1));
+        let t = m.tenant("tight");
+        t.limit.store(8, Ordering::Relaxed);
+        let peak = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let (t, peak) = (t.clone(), peak.clone());
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    if let Some(tok) = AdmitToken::acquire(&t) {
+                        let now = t.in_flight.load(Ordering::Relaxed);
+                        peak.fetch_max(now, Ordering::Relaxed);
+                        assert!(now <= 8, "in_flight {now} exceeded quota");
+                        drop(tok);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.in_flight.load(Ordering::Relaxed), 0);
+        assert!(peak.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn tenant_snapshot_reports_zero_for_unlimited_and_flows_to_json() {
+        let m = SchedMetrics::new(1);
+        let open = m.tenant("open");
+        let capped = m.tenant("capped");
+        capped.limit.store(4, Ordering::Relaxed);
+        capped.quota_shed.fetch_add(3, Ordering::Relaxed);
+        let _tok = AdmitToken::acquire(&open).unwrap();
+        let s = m.snapshot();
+        let find = |n: &str| s.tenants.iter().find(|t| t.tenant == n).unwrap();
+        assert_eq!(find("open").limit, 0, "unlimited encodes as 0");
+        assert_eq!(find("open").in_flight, 1);
+        assert_eq!(find("capped").limit, 4);
+        assert_eq!(find("capped").quota_shed, 3);
+        let j = s.to_json();
+        let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2);
+        let capped_j = tenants
+            .iter()
+            .find(|t| t.get("tenant").unwrap().as_str() == Some("capped"))
+            .unwrap();
+        assert_eq!(capped_j.get("quota_shed").unwrap().as_f64(), Some(3.0));
     }
 }

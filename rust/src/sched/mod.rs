@@ -80,7 +80,10 @@ pub mod shard;
 pub use balance::{BalanceConfig, LoadBoard, RoutingOverlay};
 pub use fabric::{Completion, DrainedFabric, Fabric, FabricConfig, Pending, Shed};
 pub use reload::{LiveTuning, ReloadOutcome};
-pub use metrics::{AtomicHist, SchedMetrics, SchedSnapshot, ShardSnapshot};
+pub use metrics::{
+    AdmitToken, AtomicHist, SchedMetrics, SchedSnapshot, ShardSnapshot, TenantCounters,
+    TenantSnapshot,
+};
 pub use queue::{CompletionTx, ReplyTo, ShedPolicy};
 pub use session::{
     checked_hash, session_hash, session_hash_bytes, shard_of, SessionNameError, SessionToken,

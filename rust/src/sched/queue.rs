@@ -18,13 +18,15 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::INPUT_SIZE;
+use crate::kernel::ModelArtifact;
 use crate::obs::ReqTrace;
 
 use super::fabric::{Completion, Shed};
+use super::metrics::AdmitToken;
 
 /// Shared channel for push-mode completions: `(seq, result)` pairs,
 /// many jobs funneling into one per-connection sender (see
@@ -76,6 +78,13 @@ pub struct Job {
     /// Per-request stage trace (inert unless tracing is enabled); the
     /// shard worker stamps the queue/batch/kernel marks on it.
     pub trace: ReqTrace,
+    /// The model artifact this request runs against — lane placement
+    /// groups by artifact so one batch pass still runs one weight
+    /// matrix (see `kernel::registry`).
+    pub model: Arc<ModelArtifact>,
+    /// Tenant admission receipt: releases the in-flight quota slot when
+    /// the job drops after its terminal reply (completed or shed).
+    pub admit: AdmitToken,
 }
 
 /// A job together with its queue key, so a worker that popped it for a
@@ -100,6 +109,9 @@ pub struct StolenSession {
     pub state: Option<Vec<f64>>,
     /// The session's queued-but-unserved jobs, oldest first.
     pub jobs: Vec<Job>,
+    /// The artifact the session was bound to on the source shard — the
+    /// target re-creates the lane in the matching model group.
+    pub model: Arc<ModelArtifact>,
 }
 
 /// Answer to a [`Control::StealRequest`] / [`Control::Migrate`].
@@ -514,8 +526,22 @@ impl ShardQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernel::ModelRegistry;
+    use crate::lstm::LstmParams;
     use std::sync::mpsc::channel;
-    use std::sync::Arc;
+    use std::sync::{Arc, OnceLock};
+
+    /// One shared tiny artifact for the whole test module — queue tests
+    /// only care about identity, never about the weights.
+    fn test_model() -> Arc<ModelArtifact> {
+        static MODEL: OnceLock<Arc<ModelArtifact>> = OnceLock::new();
+        MODEL
+            .get_or_init(|| {
+                ModelRegistry::shared(LstmParams::init(INPUT_SIZE, 4, 1, 1, 0x5EED))
+                    .default_model()
+            })
+            .clone()
+    }
 
     fn job(deadline_in: Duration) -> (Job, std::sync::mpsc::Receiver<Result<Completion, Shed>>) {
         let (tx, rx) = channel();
@@ -528,6 +554,8 @@ mod tests {
                 deadline: now + deadline_in,
                 reply: ReplyTo::Oneshot(tx),
                 trace: ReqTrace::disarmed(),
+                model: test_model(),
+                admit: AdmitToken::untracked(),
             },
             rx,
         )
@@ -919,7 +947,12 @@ mod tests {
         assert!(q.has_session_traffic(7), "directed move is traffic");
         q.pop(None);
         q.push_control(Control::Adopt(Box::new(Migration {
-            stolen: Some(StolenSession { session: 7, state: None, jobs: Vec::new() }),
+            stolen: Some(StolenSession {
+                session: 7,
+                state: None,
+                jobs: Vec::new(),
+                model: test_model(),
+            }),
         })));
         assert!(q.has_session_traffic(7), "in-flight adoption is traffic");
         q.pop(None);
@@ -935,7 +968,12 @@ mod tests {
         let (mut inner, _ri) = job(Duration::from_millis(1));
         inner.session = 11;
         q.push_control(Control::Adopt(Box::new(Migration {
-            stolen: Some(StolenSession { session: 11, state: None, jobs: vec![inner] }),
+            stolen: Some(StolenSession {
+                session: 11,
+                state: None,
+                jobs: vec![inner],
+                model: test_model(),
+            }),
         })));
         q.push_control(Control::Adopt(Box::new(Migration { stolen: None })));
         let (outer, _ro) = job(Duration::from_millis(2));

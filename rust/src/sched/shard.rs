@@ -46,7 +46,9 @@ use anyhow::Result;
 use crate::arch::INPUT_SIZE;
 use crate::coordinator::watchdog::{Watchdog, WatchdogConfig, WatchdogEvent};
 use crate::fixed::QFormat;
-use crate::kernel::{FixedPath, FloatPath, MultiStream, MultiStreamF32, PackedModel, PackedModelF32};
+use crate::kernel::{
+    FixedPath, FloatPath, ModelArtifact, MultiStream, MultiStreamF32, PackedModel, PackedModelF32,
+};
 use crate::obs::Stage;
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
@@ -268,6 +270,280 @@ impl ShardCore {
     }
 }
 
+// ---- heterogeneous shard compute ---------------------------------------
+
+/// Multi-model shard compute: one [`ShardCore`] per bound
+/// [`ModelArtifact`] ("group"), created lazily the first time a job
+/// bound to that artifact lands here.  Lanes are addressed globally —
+/// `global = group * batch + local` — so the lane table, gather pins
+/// and completions stay flat while every batch pass still runs ONE
+/// weight matrix per group (`docs/MODELS.md`).
+pub struct ShardMux {
+    datapath: DatapathKind,
+    wd_cfg: WatchdogConfig,
+    batch: usize,
+    /// Slot per group; `None` is a tombstone left by [`Self::prune_idle`]
+    /// (the group's lane addresses stay reserved so live lanes never
+    /// shift; the slot is reused by the next new artifact).
+    groups: Vec<Option<(Arc<ModelArtifact>, ShardCore)>>,
+}
+
+impl ShardMux {
+    pub fn new(
+        datapath: DatapathKind,
+        wd_cfg: WatchdogConfig,
+        batch: usize,
+        default: Arc<ModelArtifact>,
+    ) -> Self {
+        let mut mux = Self { datapath, wd_cfg, batch: batch.max(1), groups: Vec::new() };
+        let seeded = mux.group_for(&default);
+        debug_assert_eq!(seeded, 0, "default artifact seeds group 0");
+        mux
+    }
+
+    fn build_core(&self, artifact: &ModelArtifact) -> ShardCore {
+        match self.datapath {
+            DatapathKind::Float => {
+                ShardCore::new_float(artifact.packed_f64(), self.batch, self.wd_cfg.clone())
+            }
+            DatapathKind::FloatF32 => {
+                ShardCore::new_f32(artifact.packed_f32(), self.batch, self.wd_cfg.clone())
+            }
+            DatapathKind::Fixed(fmt) => {
+                ShardCore::new_fixed(artifact.packed_fixed(fmt), fmt, self.batch, self.wd_cfg.clone())
+            }
+        }
+    }
+
+    /// The group serving `artifact`, created on first sight.  Identity
+    /// is the `Arc` itself: two versions of one model id are distinct
+    /// artifacts and therefore distinct groups.  A pruned (tombstoned)
+    /// slot is reused before the lane space grows.
+    pub fn group_for(&mut self, artifact: &Arc<ModelArtifact>) -> usize {
+        if let Some(g) = self
+            .groups
+            .iter()
+            .position(|slot| slot.as_ref().is_some_and(|(a, _)| Arc::ptr_eq(a, artifact)))
+        {
+            return g;
+        }
+        let core = self.build_core(artifact);
+        if let Some(g) = self.groups.iter().position(|slot| slot.is_none()) {
+            self.groups[g] = Some((artifact.clone(), core));
+            return g;
+        }
+        self.groups.push(Some((artifact.clone(), core)));
+        self.groups.len() - 1
+    }
+
+    /// Lanes per group (the micro-batch width).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total addressable lanes (grows when a new model group appears).
+    pub fn lanes(&self) -> usize {
+        self.groups.len() * self.batch
+    }
+
+    pub fn artifact(&self, group: usize) -> &Arc<ModelArtifact> {
+        &self.groups[group].as_ref().expect("group is live").0
+    }
+
+    /// Like [`Self::artifact`] but `None` for tombstoned slots.
+    pub fn artifact_opt(&self, group: usize) -> Option<&Arc<ModelArtifact>> {
+        self.groups.get(group).and_then(|slot| slot.as_ref().map(|(a, _)| a))
+    }
+
+    /// The first live group's artifact (one always exists:
+    /// [`Self::prune_idle`] never removes the last live group).
+    pub fn any_artifact(&self) -> &Arc<ModelArtifact> {
+        self.groups
+            .iter()
+            .find_map(|slot| slot.as_ref().map(|(a, _)| a))
+            .expect("a mux always holds at least one live group")
+    }
+
+    pub fn group_of_lane(&self, lane: usize) -> usize {
+        lane / self.batch
+    }
+
+    pub fn state_len_of(&self, group: usize) -> usize {
+        self.groups[group].as_ref().expect("group is live").1.state_len()
+    }
+
+    pub fn recycle_lane(&mut self, lane: usize) {
+        let (g, l) = (lane / self.batch, lane % self.batch);
+        self.groups[g].as_mut().expect("lane's group is live").1.recycle_lane(l);
+    }
+
+    pub fn export_lane(&self, lane: usize) -> Vec<f64> {
+        let (g, l) = (lane / self.batch, lane % self.batch);
+        self.groups[g].as_ref().expect("lane's group is live").1.export_lane(l)
+    }
+
+    pub fn import_lane(&mut self, lane: usize, state: &[f64]) {
+        let (g, l) = (lane / self.batch, lane % self.batch);
+        self.groups[g].as_mut().expect("lane's group is live").1.import_lane(l, state);
+    }
+
+    /// Tombstone every group that is (a) empty of residents, (b) not
+    /// awaiting a parked adoption, and (c) retired — a newer version of
+    /// its model id was registered (hot reload).  Dropping the slot
+    /// releases this worker's `Arc` on the old artifact (and its
+    /// `ShardCore`'s packed weights), letting
+    /// `ModelRegistry::release_unused` free the version fabric-wide.
+    /// Never-retired groups are kept even when idle, so transient
+    /// traffic lulls never cost a re-pack; the last live group always
+    /// stays (`Self::any_artifact` relies on one existing).
+    pub(crate) fn prune_idle(&mut self, lanes: &ShardLanes, parked: &[StolenSession]) -> usize {
+        let mut pruned = 0;
+        for g in 0..self.groups.len() {
+            if self.groups.iter().filter(|slot| slot.is_some()).count() <= 1 {
+                break;
+            }
+            let Some((artifact, _)) = &self.groups[g] else { continue };
+            if lanes.group_occupancy(g) != 0 {
+                continue;
+            }
+            if parked.iter().any(|s| Arc::ptr_eq(&s.model, artifact)) {
+                continue;
+            }
+            if artifact.is_retired() {
+                self.groups[g] = None;
+                pruned += 1;
+            }
+        }
+        pruned
+    }
+
+    /// One micro-batch across every model group: steps are partitioned
+    /// by group and each group runs ONE batched weight pass; outcomes
+    /// come back on global lanes.  Any group failing fails the whole
+    /// batch (the caller sheds every gathered job — a partial success
+    /// would strand the rest).
+    pub fn step_batch(&mut self, steps: &[LaneStep]) -> Result<Vec<LaneOutcome>> {
+        let mut out = Vec::with_capacity(steps.len());
+        for group in 0..self.groups.len() {
+            let base = group * self.batch;
+            let local: Vec<LaneStep> = steps
+                .iter()
+                .filter(|s| s.lane / self.batch == group)
+                .map(|s| LaneStep { lane: s.lane % self.batch, window: s.window.clone() })
+                .collect();
+            if local.is_empty() {
+                continue;
+            }
+            let core = match &mut self.groups[group] {
+                Some((_, core)) => core,
+                None => anyhow::bail!("batch step addressed pruned model group {group}"),
+            };
+            let outcomes = core.step_batch(&local)?;
+            out.extend(
+                outcomes
+                    .into_iter()
+                    .map(|o| LaneOutcome { lane: base + o.lane, ..o }),
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// The multi-group mirror of [`LaneTable`]: one table per model group,
+/// flattened onto the same global lane addressing as [`ShardMux`].  A
+/// session is resident in at most ONE group at a time — a job arriving
+/// bound to a different artifact than the session's resident group is
+/// the hot-reload drain trigger (see `place`).
+pub(crate) struct ShardLanes {
+    tables: Vec<LaneTable>,
+    batch: usize,
+}
+
+impl ShardLanes {
+    pub(crate) fn new(batch: usize) -> Self {
+        let batch = batch.max(1);
+        Self { tables: vec![LaneTable::new(batch)], batch }
+    }
+
+    /// Grow the table space to cover `group` (mirrors `ShardMux` growth).
+    pub(crate) fn ensure_group(&mut self, group: usize) {
+        while self.tables.len() <= group {
+            self.tables.push(LaneTable::new(self.batch));
+        }
+    }
+
+    pub(crate) fn lanes(&self) -> usize {
+        self.tables.len() * self.batch
+    }
+
+    pub(crate) fn occupancy(&self) -> usize {
+        self.tables.iter().map(|t| t.occupancy()).sum()
+    }
+
+    pub(crate) fn group_occupancy(&self, group: usize) -> usize {
+        self.tables.get(group).map_or(0, |t| t.occupancy())
+    }
+
+    /// Global lane of `session`, across every group.
+    pub(crate) fn lane_of(&self, session: u64) -> Option<usize> {
+        self.locate(session).map(|(_, lane)| lane)
+    }
+
+    /// `(group, global lane)` of `session`.
+    pub(crate) fn locate(&self, session: u64) -> Option<(usize, usize)> {
+        self.tables
+            .iter()
+            .enumerate()
+            .find_map(|(g, t)| t.lane_of(session).map(|l| (g, g * self.batch + l)))
+    }
+
+    /// Release `session`'s lane; returns the freed GLOBAL lane.
+    pub(crate) fn remove(&mut self, session: u64) -> Option<usize> {
+        for (g, t) in self.tables.iter_mut().enumerate() {
+            if let Some(l) = t.remove(session) {
+                return Some(g * self.batch + l);
+            }
+        }
+        None
+    }
+
+    /// Every resident session with its GLOBAL lane, sorted by hash.
+    pub(crate) fn residents(&self) -> Vec<(u64, usize)> {
+        let mut out: Vec<(u64, usize)> = self
+            .tables
+            .iter()
+            .enumerate()
+            .flat_map(|(g, t)| {
+                t.residents().into_iter().map(move |(s, l)| (s, g * self.batch + l))
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Place `session` on a lane of `group`.  `pinned` is indexed by
+    /// GLOBAL lane and may be shorter than the (freshly grown) lane
+    /// space — missing entries count as unpinned.  Returned lanes are
+    /// global.
+    pub(crate) fn assign(&mut self, session: u64, group: usize, pinned: &[bool]) -> LaneAssign {
+        self.ensure_group(group);
+        let base = group * self.batch;
+        let window = &pinned[pinned.len().min(base)..pinned.len().min(base + self.batch)];
+        match self.tables[group].assign(session, window) {
+            LaneAssign::Resident(l) => LaneAssign::Resident(base + l),
+            LaneAssign::Fresh(l) => LaneAssign::Fresh(base + l),
+            LaneAssign::Evicted { lane, evicted_session } => {
+                LaneAssign::Evicted { lane: base + lane, evicted_session }
+            }
+            LaneAssign::Full => LaneAssign::Full,
+        }
+    }
+}
+
 // ---- adaptive-gather timing --------------------------------------------
 
 /// Exponentially weighted moving average over durations that seeds from
@@ -420,6 +696,10 @@ pub(crate) struct WorkerState {
     /// batch being gathered; applied after the pass so the reset is not
     /// reordered ahead of a job submitted before it.
     pub(crate) post_pass_resets: Vec<u64>,
+    /// Per-group occupancy last published to the artifacts' residency
+    /// gauges; `sync_residency` pushes deltas so the gauge stays a sum
+    /// of live lane counts across workers.
+    residency_synced: Vec<usize>,
 }
 
 /// Mutable gather-phase state.
@@ -447,8 +727,8 @@ impl Gather {
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn place(
     popped: Popped,
-    core: &mut ShardCore,
-    table: &mut LaneTable,
+    mux: &mut ShardMux,
+    lanes: &mut ShardLanes,
     g: &mut Gather,
     st: &mut WorkerState,
     ctx: &ShardWorkerCtx,
@@ -456,13 +736,15 @@ pub(crate) fn place(
 ) {
     match popped {
         Popped::Control(Control::ResetSession(session)) => {
-            match table.lane_of(session) {
+            match lanes.lane_of(session) {
                 // The lane already carries a job gathered for this pass
                 // — a job the client submitted BEFORE the reset.  Zeroing
                 // now would reorder the reset ahead of it; apply after
                 // the pass instead.
-                Some(lane) if g.pinned[lane] => st.post_pass_resets.push(session),
-                Some(lane) => core.recycle_lane(lane),
+                Some(lane) if g.pinned.get(lane).copied().unwrap_or(false) => {
+                    st.post_pass_resets.push(session)
+                }
+                Some(lane) => mux.recycle_lane(lane),
                 None => {
                     // The session's adoption may be parked in worker-local
                     // limbo (Adopt popped with every lane pinned).  The
@@ -489,7 +771,7 @@ pub(crate) fn place(
         Popped::Control(Control::Adopt(m)) => {
             st.steal_sent_at = None;
             if let Some(stolen) = m.stolen {
-                try_adopt(core, table, ctx, &g.pinned, st, stolen);
+                try_adopt(mux, lanes, ctx, &g.pinned, st, stolen);
             }
         }
         Popped::Job(mut qj) => {
@@ -508,7 +790,33 @@ pub(crate) fn place(
                 g.deferred.push(qj);
                 return;
             }
-            match table.assign(qj.job.session, &g.pinned) {
+            let group = mux.group_for(&qj.job.model);
+            lanes.ensure_group(group);
+            if g.pinned.len() < lanes.lanes() {
+                g.pinned.resize(lanes.lanes(), false);
+            }
+            // Hot-reload drain (docs/MODELS.md): the session is resident
+            // in a DIFFERENT model group than this job's binding — its
+            // binding re-resolved to a new artifact.  Rebind at this
+            // window boundary: export the old lane, carry the state iff
+            // the shapes match (else the stream restarts fresh), free
+            // the old lane for its group.
+            let mut carried: Option<Vec<f64>> = None;
+            if let Some((old_group, old_lane)) = lanes.locate(qj.job.session) {
+                if old_group != group {
+                    if g.pinned[old_lane] {
+                        // The old lane still runs a pre-reload job this
+                        // pass; rebind on the next one.
+                        g.deferred.push(qj);
+                        return;
+                    }
+                    let state = mux.export_lane(old_lane);
+                    lanes.remove(qj.job.session);
+                    mux.recycle_lane(old_lane);
+                    carried = (state.len() == mux.state_len_of(group)).then_some(state);
+                }
+            }
+            match lanes.assign(qj.job.session, group, &g.pinned) {
                 LaneAssign::Resident(lane) => {
                     if g.pinned[lane] {
                         // Same session twice in one batch: keep strict
@@ -521,12 +829,18 @@ pub(crate) fn place(
                     }
                 }
                 LaneAssign::Fresh(lane) => {
+                    if let Some(state) = &carried {
+                        mux.import_lane(lane, state);
+                    }
                     g.pinned[lane] = true;
                     qj.job.trace.mark(Stage::Gathered);
                     g.batch.push((qj, lane));
                 }
                 LaneAssign::Evicted { lane, evicted_session } => {
-                    core.recycle_lane(lane);
+                    mux.recycle_lane(lane);
+                    if let Some(state) = &carried {
+                        mux.import_lane(lane, state);
+                    }
                     gc_override_on_eviction(ctx, st, evicted_session);
                     ctx.metrics
                         .shard(ctx.index)
@@ -536,7 +850,22 @@ pub(crate) fn place(
                     qj.job.trace.mark(Stage::Gathered);
                     g.batch.push((qj, lane));
                 }
-                LaneAssign::Full => g.deferred.push(qj),
+                LaneAssign::Full => {
+                    if carried.is_some() {
+                        // The rebind freed the old lane but the new
+                        // group is pinned out this pass: park the state
+                        // exactly like a blocked adoption — it lands at
+                        // the next batch boundary, and the job defers
+                        // behind it.
+                        st.pending_adopts.push(StolenSession {
+                            session: qj.job.session,
+                            state: carried,
+                            jobs: Vec::new(),
+                            model: qj.job.model.clone(),
+                        });
+                    }
+                    g.deferred.push(qj);
+                }
             }
         }
     }
@@ -548,15 +877,31 @@ pub(crate) fn place(
 /// then the migrated jobs, re-keyed ahead of any same-session arrivals
 /// that raced in after the route flipped.
 fn try_adopt(
-    core: &mut ShardCore,
-    table: &mut LaneTable,
+    mux: &mut ShardMux,
+    lanes: &mut ShardLanes,
     ctx: &ShardWorkerCtx,
     pinned: &[bool],
     st: &mut WorkerState,
     stolen: StolenSession,
 ) {
     use std::sync::atomic::Ordering::Relaxed;
-    let lane = match table.assign(stolen.session, pinned) {
+    let group = mux.group_for(&stolen.model);
+    lanes.ensure_group(group);
+    // A stale residency in a DIFFERENT group (the session rebound to a
+    // new artifact while the hand-off was in flight) is released first —
+    // a session lives in at most one group.
+    if let Some((old_group, old_lane)) = lanes.locate(stolen.session) {
+        if old_group != group {
+            if pinned.get(old_lane).copied().unwrap_or(false) {
+                // The old lane runs this pass; land at the boundary.
+                st.pending_adopts.push(stolen);
+                return;
+            }
+            lanes.remove(stolen.session);
+            mux.recycle_lane(old_lane);
+        }
+    }
+    let lane = match lanes.assign(stolen.session, group, pinned) {
         LaneAssign::Resident(lane) | LaneAssign::Fresh(lane) => lane,
         LaneAssign::Evicted { lane, evicted_session } => {
             gc_override_on_eviction(ctx, st, evicted_session);
@@ -571,9 +916,13 @@ fn try_adopt(
             return;
         }
     };
-    core.recycle_lane(lane);
+    mux.recycle_lane(lane);
     if let Some(state) = &stolen.state {
-        core.import_lane(lane, state);
+        // Carry only a shape-compatible state — a migration across a
+        // reload that changed the model's dimensions restarts fresh.
+        if state.len() == mux.state_len_of(group) {
+            mux.import_lane(lane, state);
+        }
     }
     for job in ctx.queue.adopt_session(stolen.session, stolen.jobs) {
         // Own queue already closed (shutdown race): shed, never strand.
@@ -586,17 +935,17 @@ fn try_adopt(
 /// Complete adoptions that were blocked on a pinned-out lane table; at a
 /// batch boundary (nothing pinned) this always succeeds.
 fn flush_pending_adopts(
-    core: &mut ShardCore,
-    table: &mut LaneTable,
+    mux: &mut ShardMux,
+    lanes: &mut ShardLanes,
     ctx: &ShardWorkerCtx,
     st: &mut WorkerState,
 ) {
     if st.pending_adopts.is_empty() {
         return;
     }
-    let none_pinned = vec![false; table.lanes()];
+    let none_pinned: Vec<bool> = Vec::new();
     for stolen in std::mem::take(&mut st.pending_adopts) {
-        try_adopt(core, table, ctx, &none_pinned, st, stolen);
+        try_adopt(mux, lanes, ctx, &none_pinned, st, stolen);
     }
 }
 
@@ -606,8 +955,8 @@ fn flush_pending_adopts(
 /// wholly before the hand-off (and is drained with it) or wholly after
 /// (and routes to the target behind the Adopt already in its queue).
 fn migrate_out(
-    core: &mut ShardCore,
-    table: &mut LaneTable,
+    mux: &mut ShardMux,
+    lanes: &mut ShardLanes,
     ctx: &ShardWorkerCtx,
     st: &mut WorkerState,
     session: u64,
@@ -623,7 +972,7 @@ fn migrate_out(
         // session's real shard — drop the request instead.
         return;
     }
-    let mid_adoption = table.lane_of(session).is_none()
+    let mid_adoption = lanes.lane_of(session).is_none()
         && (ctx.queue.has_pending_adopt(session)
             // An Adopt that popped while every lane was pinned waits in
             // worker-local limbo until the next batch boundary — it is
@@ -652,13 +1001,16 @@ fn migrate_out(
     ctx.overlay.set_in(&mut guard, session, target);
     let (jobs, had_reset) = ctx.queue.take_session(session);
     let mut state = None;
-    if let Some(lane) = table.remove(session) {
+    let mut model = None;
+    if let Some((group, lane)) = lanes.locate(session) {
+        model = Some(mux.artifact(group).clone());
+        lanes.remove(session);
         // A pending reset migrates as "start fresh" — controls preempt
         // jobs, so it would have zeroed the lane before any of them ran.
         if !had_reset {
-            state = Some(core.export_lane(lane));
+            state = Some(mux.export_lane(lane));
         }
-        core.recycle_lane(lane);
+        mux.recycle_lane(lane);
     }
     if state.is_none() && jobs.is_empty() {
         // Nothing to hand over (directed move of an idle / never-seen
@@ -668,8 +1020,14 @@ fn migrate_out(
         // evict an innocent resident session to house... nothing.
         return;
     }
+    // The artifact travels with the session so the target re-creates
+    // the lane in the matching model group; a laneless hand-off (queued
+    // jobs only) carries the jobs' own binding.
+    let model = model
+        .or_else(|| jobs.first().map(|j| j.model.clone()))
+        .unwrap_or_else(|| mux.any_artifact().clone());
     let rejected = ctx.peers[target].push_control(Control::Adopt(Box::new(Migration {
-        stolen: Some(StolenSession { session, state, jobs }),
+        stolen: Some(StolenSession { session, state, jobs, model }),
     })));
     drop(guard);
     match rejected {
@@ -695,8 +1053,8 @@ fn migrate_out(
 
 /// Execute staged steal traffic between passes (nothing in flight).
 fn execute_steals(
-    core: &mut ShardCore,
-    table: &mut LaneTable,
+    mux: &mut ShardMux,
+    lanes: &mut ShardLanes,
     ctx: &ShardWorkerCtx,
     st: &mut WorkerState,
 ) {
@@ -705,7 +1063,7 @@ fn execute_steals(
         match task {
             StealTask::Directed { session, to } => {
                 if to < ctx.peers.len() {
-                    migrate_out(core, table, ctx, st, session, to);
+                    migrate_out(mux, lanes, ctx, st, session, to);
                 }
             }
             StealTask::Requested { thief } => {
@@ -720,12 +1078,12 @@ fn execute_steals(
                 // Adopt control), and exporting it would hand the thief
                 // a zeroed lane.
                 let victim = if ctx.queue.len() >= ctx.tuning.hot_queue() {
-                    ctx.queue.busiest_session(|s| table.lane_of(s).is_some())
+                    ctx.queue.busiest_session(|s| lanes.lane_of(s).is_some())
                 } else {
                     None
                 };
                 match victim {
-                    Some((session, _)) => migrate_out(core, table, ctx, st, session, thief),
+                    Some((session, _)) => migrate_out(mux, lanes, ctx, st, session, thief),
                     None => {
                         ctx.metrics.steals_declined.fetch_add(1, Relaxed);
                         let _ = ctx.peers[thief]
@@ -739,7 +1097,7 @@ fn execute_steals(
 
 /// Idle-shard half of the steal protocol: consult the board, claim from
 /// the hottest qualifying peer, at most one outstanding request.
-fn maybe_steal(ctx: &ShardWorkerCtx, table: &LaneTable, st: &mut WorkerState) {
+fn maybe_steal(ctx: &ShardWorkerCtx, lanes: &ShardLanes, st: &mut WorkerState) {
     use std::sync::atomic::Ordering::Relaxed;
     if let Some(sent) = st.steal_sent_at {
         if sent.elapsed() < ctx.balance.steal_timeout {
@@ -749,7 +1107,7 @@ fn maybe_steal(ctx: &ShardWorkerCtx, table: &LaneTable, st: &mut WorkerState) {
         // shutdown race — re-arm rather than staying stuck forever.
         st.steal_sent_at = None;
     }
-    let free_lanes = table.lanes() - table.occupancy();
+    let free_lanes = lanes.lanes() - lanes.occupancy();
     if let Some(victim) =
         ctx.board.plan_steal(&ctx.balance_now(), ctx.index, ctx.queue.len(), free_lanes)
     {
@@ -764,11 +1122,32 @@ fn maybe_steal(ctx: &ShardWorkerCtx, table: &LaneTable, st: &mut WorkerState) {
     }
 }
 
-fn publish_load(ctx: &ShardWorkerCtx, table: &LaneTable, st: &WorkerState) {
+fn publish_load(ctx: &ShardWorkerCtx, lanes: &ShardLanes, st: &WorkerState) {
     if !ctx.balance.enabled {
         return;
     }
-    ctx.board.publish(ctx.index, ctx.queue.len(), table.occupancy(), st.ewma_pass.value());
+    ctx.board.publish(ctx.index, ctx.queue.len(), lanes.occupancy(), st.ewma_pass.value());
+}
+
+/// Push per-model lane-occupancy deltas into the artifacts' residency
+/// gauges (`hrd status` / Prometheus `hrd_model_residency`).  Called at
+/// the same cadence as `publish_load`; the gauge is the cross-worker
+/// sum of live lanes per artifact.
+fn sync_residency(mux: &ShardMux, lanes: &ShardLanes, st: &mut WorkerState) {
+    if st.residency_synced.len() < mux.group_count() {
+        st.residency_synced.resize(mux.group_count(), 0);
+    }
+    for group in 0..mux.group_count() {
+        let Some(artifact) = mux.artifact_opt(group) else { continue };
+        let now = lanes.group_occupancy(group);
+        let prev = st.residency_synced[group];
+        if now > prev {
+            artifact.add_residency(now - prev);
+        } else if prev > now {
+            artifact.sub_residency(prev - now);
+        }
+        st.residency_synced[group] = now;
+    }
 }
 
 /// Run one gathered micro-batch: the batched weight pass, watchdogs,
@@ -776,8 +1155,8 @@ fn publish_load(ctx: &ShardWorkerCtx, table: &LaneTable, st: &WorkerState) {
 /// stored on BOTH outcomes — a failing pass used to leave stale gauges
 /// in the `hrd serve-tcp` stats until the next success.
 pub(crate) fn execute_batch(
-    core: &mut ShardCore,
-    table: &LaneTable,
+    mux: &mut ShardMux,
+    lanes: &ShardLanes,
     ctx: &ShardWorkerCtx,
     mut batch: Vec<(QueuedJob, usize)>,
     st: &mut WorkerState,
@@ -795,14 +1174,14 @@ pub(crate) fn execute_batch(
     }
     let t_pass = Instant::now();
     let shard_m = ctx.metrics.shard(ctx.index);
-    let outcomes = match core.step_batch(&steps) {
+    let outcomes = match mux.step_batch(&steps) {
         Ok(o) => o,
         Err(e) => {
             // Submit/drain failures are programming errors (lane
             // bounds, double submit); never strand the clients, and
             // keep the gauges honest.
             log::error!("shard {}: batch pass failed: {e:#}", ctx.index);
-            shard_m.occupancy.store(table.occupancy() as u64, Relaxed);
+            shard_m.occupancy.store(lanes.occupancy() as u64, Relaxed);
             shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
             for (qj, _) in batch {
                 ctx.metrics.shed.fetch_add(1, Relaxed);
@@ -817,7 +1196,7 @@ pub(crate) fn execute_batch(
     // Completions, metrics.
     shard_m.batches.fetch_add(1, Relaxed);
     shard_m.batched_requests.fetch_add(outcomes.len() as u64, Relaxed);
-    shard_m.occupancy.store(table.occupancy() as u64, Relaxed);
+    shard_m.occupancy.store(lanes.occupancy() as u64, Relaxed);
     shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
     for outcome in outcomes {
         let slot = batch
@@ -856,19 +1235,25 @@ pub(crate) fn execute_batch(
 }
 
 /// The worker thread body.  Returns when the queue is closed and fully
-/// drained, handing back every resident session's exported lane state —
-/// a plain shutdown drops the exports, a drain (`Fabric::drain`) writes
-/// them into the recovery snapshot.
-pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) -> Vec<(u64, Vec<f64>)> {
-    let lanes = core.lanes();
-    let mut table = LaneTable::new(lanes);
+/// drained, handing back every resident session's exported lane state
+/// with its bound artifact — a plain shutdown drops the exports, a
+/// drain (`Fabric::drain`) writes them into the recovery snapshot.
+pub(crate) fn run_worker(
+    mut mux: ShardMux,
+    ctx: ShardWorkerCtx,
+) -> Vec<(u64, Arc<ModelArtifact>, Vec<f64>)> {
+    let mut lanes = ShardLanes::new(mux.batch());
     let mut st = WorkerState::default();
 
     'serve: loop {
         // Batch boundary: land any adoption that could not get a lane
         // mid-gather, then advertise fresh load.
-        flush_pending_adopts(&mut core, &mut table, &ctx, &mut st);
-        publish_load(&ctx, &table, &st);
+        flush_pending_adopts(&mut mux, &mut lanes, &ctx, &mut st);
+        publish_load(&ctx, &lanes, &st);
+        sync_residency(&mux, &lanes, &mut st);
+        // Hot-reload GC: once every session has drained off a superseded
+        // model version, drop this worker's hold on its weights.
+        mux.prune_idle(&lanes, &st.pending_adopts);
 
         // Block for the first piece of work.  In balance mode the wait
         // is chopped into steal-poll slices so an idle shard can claim
@@ -879,8 +1264,8 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) -> Vec<(u64, 
                     Some(p) => break p,
                     None if ctx.queue.is_closed() => break 'serve,
                     None => {
-                        publish_load(&ctx, &table, &st);
-                        maybe_steal(&ctx, &table, &mut st);
+                        publish_load(&ctx, &lanes, &st);
+                        maybe_steal(&ctx, &lanes, &mut st);
                     }
                 }
             }
@@ -891,8 +1276,8 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) -> Vec<(u64, 
             }
         };
 
-        let mut g = Gather::new(lanes, ctx.batch);
-        place(first, &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        let mut g = Gather::new(lanes.lanes(), ctx.batch);
+        place(first, &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
 
         // Gather: fill the batch while the most urgent deadline can
         // still afford to wait.
@@ -913,7 +1298,7 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) -> Vec<(u64, 
                 break;
             };
             match ctx.queue.pop(Some(wait)) {
-                Some(popped) => place(popped, &mut core, &mut table, &mut g, &mut st, &ctx, true),
+                Some(popped) => place(popped, &mut mux, &mut lanes, &mut g, &mut st, &ctx, true),
                 None => break, // queue idle (or closing) — run what we have
             }
         }
@@ -927,7 +1312,7 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) -> Vec<(u64, 
         if g.batch.is_empty() && !g.deferred.is_empty() {
             let retry = std::mem::take(&mut g.deferred);
             for qj in retry {
-                place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, false);
+                place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, false);
             }
             if g.batch.is_empty() && !g.deferred.is_empty() {
                 ctx.queue.requeue(std::mem::take(&mut g.deferred));
@@ -944,51 +1329,61 @@ pub(crate) fn run_worker(mut core: ShardCore, ctx: ShardWorkerCtx) -> Vec<(u64, 
         }
 
         // One batched weight pass for every gathered lane.
-        execute_batch(&mut core, &table, &ctx, batch, &mut st);
+        execute_batch(&mut mux, &lanes, &ctx, batch, &mut st);
 
         // Resets that arrived while their lane was pinned: the gathered
         // job (submitted before the reset) has now run — apply them.
         for session in std::mem::take(&mut st.post_pass_resets) {
-            if let Some(lane) = table.lane_of(session) {
-                core.recycle_lane(lane);
+            if let Some(lane) = lanes.lane_of(session) {
+                mux.recycle_lane(lane);
             }
         }
 
         // Steal traffic staged during the gather: safe now, nothing is
         // in flight.
-        execute_steals(&mut core, &mut table, &ctx, &mut st);
-        publish_load(&ctx, &table, &st);
+        execute_steals(&mut mux, &mut lanes, &ctx, &mut st);
+        publish_load(&ctx, &lanes, &st);
+        sync_residency(&mux, &lanes, &mut st);
     }
 
     // Shutdown: an adoption still waiting for a lane carries live
     // clients — shed them, never strand them.  Its state, however, is
     // still the session's live stream — export it alongside the
     // residents so a drain never loses a mid-flight migration.
-    let mut exports: Vec<(u64, Vec<f64>)> = Vec::new();
-    for stolen in st.pending_adopts {
+    let mut exports: Vec<(u64, Arc<ModelArtifact>, Vec<f64>)> = Vec::new();
+    for stolen in std::mem::take(&mut st.pending_adopts) {
         for job in stolen.jobs {
             ctx.metrics.shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             send_completion(&job.reply, Err(Shed::Shutdown));
         }
         if let Some(state) = stolen.state {
-            exports.push((stolen.session, state));
+            exports.push((stolen.session, stolen.model, state));
         }
     }
-    for (session, lane) in table.residents() {
-        exports.push((session, core.export_lane(lane)));
+    for (session, lane) in lanes.residents() {
+        let artifact = mux.artifact(mux.group_of_lane(lane)).clone();
+        exports.push((session, artifact, mux.export_lane(lane)));
     }
-    exports.sort_by_key(|(session, _)| *session);
+    // This worker's lanes are gone — return its share of the residency
+    // gauges before the artifacts outlive it in the registry.
+    for group in 0..st.residency_synced.len().min(mux.group_count()) {
+        if let Some(artifact) = mux.artifact_opt(group) {
+            artifact.sub_residency(st.residency_synced[group]);
+        }
+    }
+    exports.sort_by_key(|(session, _, _)| *session);
     exports
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernel::ScalarKernel;
+    use crate::kernel::{ModelRegistry, ScalarKernel};
     use crate::lstm::LstmParams;
     use crate::util::Rng;
     use std::sync::mpsc::channel;
 
+    use super::super::metrics::AdmitToken;
     use super::super::queue::{Job, PushOutcome, ShedPolicy};
     use super::super::session::session_hash;
 
@@ -998,6 +1393,20 @@ mod tests {
             *v = rng.uniform(-40.0, 40.0) as f32;
         }
         w
+    }
+
+    /// A standalone artifact over `p` (its own single-model registry).
+    fn test_artifact(p: &LstmParams) -> Arc<ModelArtifact> {
+        ModelRegistry::shared(p.clone()).default_model()
+    }
+
+    /// Float-datapath mux with `batch` lanes per group, seeded with the
+    /// default artifact of `p`.
+    fn test_mux(p: &LstmParams, batch: usize) -> (ShardMux, Arc<ModelArtifact>) {
+        let artifact = test_artifact(p);
+        let mux =
+            ShardMux::new(DatapathKind::Float, WatchdogConfig::default(), batch, artifact.clone());
+        (mux, artifact)
     }
 
     /// A standalone worker context over its own single-shard fabric
@@ -1025,7 +1434,11 @@ mod tests {
         }
     }
 
-    fn queued_job(session: u64, w: Box<[f32; INPUT_SIZE]>) -> (QueuedJob, std::sync::mpsc::Receiver<Result<Completion, Shed>>) {
+    fn queued_job(
+        session: u64,
+        w: Box<[f32; INPUT_SIZE]>,
+        model: &Arc<ModelArtifact>,
+    ) -> (QueuedJob, std::sync::mpsc::Receiver<Result<Completion, Shed>>) {
         let (tx, rx) = channel();
         let now = Instant::now();
         (
@@ -1038,6 +1451,8 @@ mod tests {
                     deadline: now + Duration::from_millis(10),
                     reply: ReplyTo::Oneshot(tx),
                     trace: crate::obs::ReqTrace::disarmed(),
+                    model: model.clone(),
+                    admit: AdmitToken::untracked(),
                 },
             },
             rx,
@@ -1219,9 +1634,8 @@ mod tests {
     #[test]
     fn eviction_garbage_collects_the_routing_override() {
         let p = LstmParams::init(16, 15, 2, 1, 21);
-        let packed = PackedModel::shared(&p);
-        let mut core = ShardCore::new_float(packed, 1, WatchdogConfig::default());
-        let mut table = LaneTable::new(1);
+        let (mut mux, artifact) = test_mux(&p, 1);
+        let mut lanes = ShardLanes::new(1);
         let metrics = Arc::new(SchedMetrics::new(1));
         let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
         let mut ctx = test_ctx(queue.clone(), metrics, 1);
@@ -1238,35 +1652,35 @@ mod tests {
         assert_eq!(ctx.overlay.overrides(), 1);
         // It occupies the single lane...
         let mut g = Gather::new(1, 1);
-        let (qj, _rx) = queued_job(migrated, window(&mut rng));
-        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
-        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
-        assert_eq!(table.lane_of(migrated), Some(0));
+        let (qj, _rx) = queued_job(migrated, window(&mut rng), &artifact);
+        place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+        assert_eq!(lanes.lane_of(migrated), Some(0));
         // ...and queued traffic protects the override across an eviction.
-        let (parked, _pr) = queued_job(migrated, window(&mut rng));
+        let (parked, _pr) = queued_job(migrated, window(&mut rng), &artifact);
         assert!(matches!(queue.push(parked.job), PushOutcome::Admitted));
         let mut g = Gather::new(1, 1);
-        let (qj, _rx2) = queued_job(other, window(&mut rng));
-        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
-        assert_eq!(table.lane_of(migrated), None, "migrated session evicted");
+        let (qj, _rx2) = queued_job(other, window(&mut rng), &artifact);
+        place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        assert_eq!(lanes.lane_of(migrated), None, "migrated session evicted");
         assert_eq!(ctx.overlay.overrides(), 1, "queued job keeps the override");
-        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
         // Serve the parked job: the session re-gains the lane (evicting
         // `other`, which has no override — nothing to collect there).
         let mut g = Gather::new(1, 1);
         let popped = queue.pop(Some(Duration::from_millis(10))).unwrap();
-        place(popped, &mut core, &mut table, &mut g, &mut st, &ctx, true);
-        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
-        assert_eq!(table.lane_of(migrated), Some(0));
+        place(popped, &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+        assert_eq!(lanes.lane_of(migrated), Some(0));
         assert_eq!(ctx.overlay.overrides(), 1, "resident again — override stays");
         // Now nothing of it remains queued: migrate -> drain -> evict
         // must leave the overlay empty (the regression this test pins).
         let mut g = Gather::new(1, 1);
-        let (qj, _rx3) = queued_job(other, window(&mut rng));
-        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
-        assert_eq!(table.lane_of(migrated), None);
+        let (qj, _rx3) = queued_job(other, window(&mut rng), &artifact);
+        place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        assert_eq!(lanes.lane_of(migrated), None);
         assert_eq!(ctx.overlay.overrides(), 0, "drained + evicted override collected");
-        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
         // Guard: an override pointing at a DIFFERENT shard (the session
         // migrated onward) is never touched by a stale local eviction.
         {
@@ -1274,9 +1688,9 @@ mod tests {
             ctx.overlay.set_in(&mut gd, other, 5);
         }
         let mut g = Gather::new(1, 1);
-        let (qj, _rx4) = queued_job(migrated, window(&mut rng));
-        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
-        assert_eq!(table.lane_of(other), None, "other evicted");
+        let (qj, _rx4) = queued_job(migrated, window(&mut rng), &artifact);
+        place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        assert_eq!(lanes.lane_of(other), None, "other evicted");
         assert_eq!(ctx.overlay.overrides(), 1, "foreign override untouched");
     }
 
@@ -1325,8 +1739,8 @@ mod tests {
     fn reset_of_a_pinned_lane_is_deferred_past_the_pass() {
         let p = LstmParams::init(16, 15, 2, 1, 33);
         let packed = PackedModel::shared(&p);
-        let mut core = ShardCore::new_float(packed.clone(), 2, WatchdogConfig::default());
-        let mut table = LaneTable::new(2);
+        let (mut mux, artifact) = test_mux(&p, 2);
+        let mut lanes = ShardLanes::new(2);
         let metrics = Arc::new(SchedMetrics::new(1));
         let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
         let ctx = test_ctx(queue, metrics, 2);
@@ -1336,23 +1750,23 @@ mod tests {
 
         // Warm the session's lane so a premature reset is observable.
         let mut g = Gather::new(2, 2);
-        let (qj, _warm_rx) = queued_job(session, window(&mut rng));
-        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
-        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
-        let lane = table.lane_of(session).unwrap();
-        assert!(core.export_lane(lane).iter().any(|&v| v != 0.0));
+        let (qj, _warm_rx) = queued_job(session, window(&mut rng), &artifact);
+        place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+        let lane = lanes.lane_of(session).unwrap();
+        assert!(mux.export_lane(lane).iter().any(|&v| v != 0.0));
 
         // New gather: the session's next job pins its lane, then the
         // reset control arrives mid-gather.
         let mut g = Gather::new(2, 2);
-        let (qj, rx) = queued_job(session, window(&mut rng));
-        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
+        let (qj, rx) = queued_job(session, window(&mut rng), &artifact);
+        place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
         assert!(g.pinned[lane]);
-        let warmed = core.export_lane(lane);
+        let warmed = mux.export_lane(lane);
         place(
             Popped::Control(Control::ResetSession(session)),
-            &mut core,
-            &mut table,
+            &mut mux,
+            &mut lanes,
             &mut g,
             &mut st,
             &ctx,
@@ -1360,11 +1774,11 @@ mod tests {
         );
         // NOT zeroed yet: the gathered job must run on the pre-reset
         // state (it was submitted first).
-        assert_eq!(core.export_lane(lane), warmed, "reset reordered ahead of a gathered job");
+        assert_eq!(mux.export_lane(lane), warmed, "reset reordered ahead of a gathered job");
         assert_eq!(st.post_pass_resets, vec![session]);
 
         // The pass consumes the carried state...
-        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
         let got = rx.try_recv().unwrap().unwrap().estimate;
         let mut reference = RefStream::new(packed, WatchdogConfig::default());
         // (re-derive the estimate the carried state should produce)
@@ -1378,30 +1792,30 @@ mod tests {
         assert_eq!(got, want, "pinned job must see pre-reset state");
         // ...and only then the deferred reset lands.
         for session in std::mem::take(&mut st.post_pass_resets) {
-            if let Some(l) = table.lane_of(session) {
-                core.recycle_lane(l);
+            if let Some(l) = lanes.lane_of(session) {
+                mux.recycle_lane(l);
             }
         }
-        assert!(core.export_lane(lane).iter().all(|&v| v == 0.0));
+        assert!(mux.export_lane(lane).iter().all(|&v| v == 0.0));
 
         // Control path sanity: a reset for an UNPINNED lane still
         // applies immediately.
         let mut g = Gather::new(2, 2);
-        let (qj, _rx3) = queued_job(session, window(&mut rng));
-        place(Popped::Job(qj), &mut core, &mut table, &mut g, &mut st, &ctx, true);
-        execute_batch(&mut core, &table, &ctx, std::mem::take(&mut g.batch), &mut st);
-        assert!(core.export_lane(lane).iter().any(|&v| v != 0.0));
+        let (qj, _rx3) = queued_job(session, window(&mut rng), &artifact);
+        place(Popped::Job(qj), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+        assert!(mux.export_lane(lane).iter().any(|&v| v != 0.0));
         let mut g = Gather::new(2, 2);
         place(
             Popped::Control(Control::ResetSession(session)),
-            &mut core,
-            &mut table,
+            &mut mux,
+            &mut lanes,
             &mut g,
             &mut st,
             &ctx,
             true,
         );
-        assert!(core.export_lane(lane).iter().all(|&v| v == 0.0));
+        assert!(mux.export_lane(lane).iter().all(|&v| v == 0.0));
         assert!(st.post_pass_resets.is_empty());
     }
 
@@ -1413,24 +1827,24 @@ mod tests {
         use std::sync::atomic::Ordering::Relaxed;
         let p = LstmParams::init(16, 15, 2, 1, 51);
         let packed = PackedModel::shared(&p);
-        let mut core = ShardCore::new_float(packed.clone(), 2, WatchdogConfig::default());
-        let mut table = LaneTable::new(2);
+        let (mut mux, artifact) = test_mux(&p, 2);
+        let mut lanes = ShardLanes::new(2);
         let metrics = Arc::new(SchedMetrics::new(1));
         let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
         let ctx = test_ctx(queue.clone(), metrics.clone(), 2);
         let mut st = WorkerState::default();
         let mut rng = Rng::new(3);
         let session = session_hash("rig");
-        table.assign(session, &[false, false]);
+        lanes.assign(session, 0, &[false, false]);
 
         // Leave one job in the queue so the gauge has something to show.
-        let (parked, _pr) = queued_job(session, window(&mut rng));
+        let (parked, _pr) = queued_job(session, window(&mut rng), &artifact);
         assert!(matches!(queue.push(parked.job), PushOutcome::Admitted));
 
         // A corrupt batch: two jobs on the SAME lane (double submit).
-        let (qa, ra) = queued_job(session, window(&mut rng));
-        let (qb, rb) = queued_job(session, window(&mut rng));
-        execute_batch(&mut core, &table, &ctx, vec![(qa, 0), (qb, 0)], &mut st);
+        let (qa, ra) = queued_job(session, window(&mut rng), &artifact);
+        let (qb, rb) = queued_job(session, window(&mut rng), &artifact);
+        execute_batch(&mut mux, &lanes, &ctx, vec![(qa, 0), (qb, 0)], &mut st);
         // Both clients were shed, not stranded.
         assert!(matches!(ra.try_recv(), Ok(Err(Shed::Internal))));
         assert!(matches!(rb.try_recv(), Ok(Err(Shed::Internal))));
@@ -1446,7 +1860,7 @@ mod tests {
         let w = window(&mut rng);
         let mut reference = RefStream::new(packed, WatchdogConfig::default());
         let (want, _) = reference.step(&w);
-        let got = core.step_batch(&[LaneStep { lane: 0, window: w }]).unwrap();
+        let got = mux.step_batch(&[LaneStep { lane: 0, window: w }]).unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].estimate, want);
     }
@@ -1458,14 +1872,13 @@ mod tests {
     fn oversubscribed_shard_makes_forward_progress() {
         use std::sync::atomic::Ordering::Relaxed;
         let p = LstmParams::init(16, 15, 2, 1, 77);
-        let packed = PackedModel::shared(&p);
         // ONE lane, gather target of 3: every second job of a gather
         // hits LaneAssign::Full and defers.
-        let core = ShardCore::new_float(packed, 1, WatchdogConfig::default());
+        let (mux, artifact) = test_mux(&p, 1);
         let metrics = Arc::new(SchedMetrics::new(1));
         let queue = Arc::new(ShardQueue::new(64, ShedPolicy::Reject));
         let ctx = test_ctx(queue.clone(), metrics.clone(), 3);
-        let worker = std::thread::spawn(move || run_worker(core, ctx));
+        let worker = std::thread::spawn(move || run_worker(mux, ctx));
 
         let sessions = 3usize;
         let per_session = 8usize;
@@ -1482,6 +1895,8 @@ mod tests {
                     deadline: now + Duration::from_millis(50),
                     reply: ReplyTo::Oneshot(tx),
                     trace: crate::obs::ReqTrace::disarmed(),
+                    model: artifact.clone(),
+                    admit: AdmitToken::untracked(),
                 };
                 assert!(matches!(queue.push(job), PushOutcome::Admitted), "k={k} s={s}");
                 receivers.push(rx);
@@ -1504,5 +1919,119 @@ mod tests {
         // worker would show runaway empty gathers, a correct one exactly
         // `total` passes.
         assert_eq!(metrics.shard(0).batches.load(Relaxed), total);
+    }
+
+    /// Tentpole: one mux serves two DIFFERENT models (distinct hidden
+    /// sizes, distinct weights) in the same pass, each lane bit-identical
+    /// to a dedicated single-model reference stream.
+    #[test]
+    fn heterogeneous_groups_serve_two_models_bit_identically() {
+        let pa = LstmParams::init(16, 15, 3, 1, 91);
+        let pb = LstmParams::init(16, 9, 2, 1, 14);
+        let (mut mux, a) = test_mux(&pa, 2);
+        let b = test_artifact(&pb);
+        let mut lanes = ShardLanes::new(2);
+        let metrics = Arc::new(SchedMetrics::new(1));
+        let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
+        let ctx = test_ctx(queue, metrics, 4);
+        let mut st = WorkerState::default();
+        let mut rng = Rng::new(21);
+        let wd = WatchdogConfig::default();
+        let mut ref_a = RefStream::new(a.packed_f64(), wd.clone());
+        let mut ref_b = RefStream::new(b.packed_f64(), wd.clone());
+        let sa = session_hash("model-a-stream");
+        let sb = session_hash("model-b-stream");
+
+        for round in 0..12 {
+            let wa = window(&mut rng);
+            let wb = window(&mut rng);
+            let want_a = ref_a.step(&wa).0;
+            let want_b = ref_b.step(&wb).0;
+            let mut g = Gather::new(lanes.lanes(), 4);
+            let (ja, rxa) = queued_job(sa, wa, &a);
+            let (jb, rxb) = queued_job(sb, wb, &b);
+            place(Popped::Job(ja), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+            place(Popped::Job(jb), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+            assert!(g.deferred.is_empty(), "round {round}: heterogeneous jobs must not defer");
+            execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+            let got_a = rxa.try_recv().unwrap().unwrap().estimate;
+            let got_b = rxb.try_recv().unwrap().unwrap().estimate;
+            assert_eq!(got_a, want_a, "model A lane diverged on round {round}");
+            assert_eq!(got_b, want_b, "model B lane diverged on round {round}");
+        }
+        assert_eq!(mux.group_count(), 2);
+        assert_eq!(lanes.occupancy(), 2);
+        // Each group keeps its own batch worth of lanes.
+        assert_eq!(lanes.lanes(), 4);
+    }
+
+    /// Tentpole: rebinding a resident session to ANOTHER artifact at a
+    /// window boundary carries its recurrent state when the shapes match
+    /// (hot reload of retrained same-shape weights) and restarts fresh
+    /// when they don't.
+    #[test]
+    fn cross_group_rebind_carries_state_on_matching_shapes_only() {
+        let pa = LstmParams::init(16, 15, 3, 1, 33);
+        // Same shape, different weights: a retrained drop-in.
+        let pb = LstmParams::init(16, 15, 3, 1, 34);
+        // Different hidden size: state cannot carry.
+        let pc = LstmParams::init(16, 9, 3, 1, 35);
+        let (mut mux, a) = test_mux(&pa, 1);
+        let b = test_artifact(&pb);
+        let c = test_artifact(&pc);
+        let mut lanes = ShardLanes::new(1);
+        let metrics = Arc::new(SchedMetrics::new(1));
+        let queue = Arc::new(ShardQueue::new(8, ShedPolicy::Reject));
+        let ctx = test_ctx(queue, metrics, 1);
+        let mut st = WorkerState::default();
+        let mut rng = Rng::new(44);
+        let session = session_hash("reload-me");
+
+        // Warm the session on model A.
+        let mut g = Gather::new(lanes.lanes(), 1);
+        let (j1, rx1) = queued_job(session, window(&mut rng), &a);
+        place(Popped::Job(j1), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+        rx1.try_recv().unwrap().unwrap();
+        let lane_a = lanes.lane_of(session).unwrap();
+        let warmed = mux.export_lane(lane_a);
+        assert!(warmed.iter().any(|&v| v != 0.0));
+
+        // Rebind to B (same shape): the state must ride along.
+        let mut g = Gather::new(lanes.lanes(), 1);
+        let (j2, rx2) = queued_job(session, window(&mut rng), &b);
+        place(Popped::Job(j2), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        let lane_b = lanes.lane_of(session).unwrap();
+        assert_ne!(
+            mux.group_of_lane(lane_b),
+            mux.group_of_lane(lane_a),
+            "rebind must land in B's group"
+        );
+        assert_eq!(mux.export_lane(lane_b), warmed, "same-shape rebind dropped the state");
+        // The old lane was recycled behind it.
+        assert!(mux.export_lane(lane_a).iter().all(|&v| v == 0.0));
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+        rx2.try_recv().unwrap().unwrap();
+
+        // Rebind to C (narrower hidden): shapes differ, fresh restart.
+        let mut g = Gather::new(lanes.lanes(), 1);
+        let (j3, rx3) = queued_job(session, window(&mut rng), &c);
+        place(Popped::Job(j3), &mut mux, &mut lanes, &mut g, &mut st, &ctx, true);
+        let lane_c = lanes.lane_of(session).unwrap();
+        assert_eq!(mux.state_len_of(mux.group_of_lane(lane_c)), c.state_len());
+        assert!(
+            mux.export_lane(lane_c).iter().all(|&v| v == 0.0),
+            "mismatched shapes must restart fresh"
+        );
+        execute_batch(&mut mux, &lanes, &ctx, std::mem::take(&mut g.batch), &mut st);
+        // The restarted stream matches a fresh single-model reference.
+        let got = rx3.try_recv().unwrap().unwrap().estimate;
+        let mut rng2 = Rng::new(44);
+        let _w1 = window(&mut rng2);
+        let _w2 = window(&mut rng2);
+        let w3 = window(&mut rng2);
+        let mut fresh_c = RefStream::new(c.packed_f64(), WatchdogConfig::default());
+        assert_eq!(got, fresh_c.step(&w3).0);
+        assert_eq!(mux.group_count(), 3);
     }
 }

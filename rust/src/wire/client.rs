@@ -87,7 +87,22 @@ impl WireClient {
     /// client offers (and holds the server to) v1 — pipelined v2 lives
     /// in [`PipelinedClient`].
     pub fn hello(&mut self) -> Result<u16> {
-        self.writer.send_hello(VERSION as u16)?;
+        self.hello_bound(None)
+    }
+
+    /// [`Self::hello`] optionally carrying a model-bind block: the
+    /// connection's sessions serve `(model id, version)` — version 0 =
+    /// latest — instead of the server's default model.  An unknown
+    /// model surfaces as the server's typed error.
+    pub fn hello_bound(&mut self, model: Option<(&str, u32)>) -> Result<u16> {
+        if let Some((id, _)) = model {
+            anyhow::ensure!(
+                !id.is_empty() && id.len() <= u8::MAX as usize,
+                "model id must be 1..=255 bytes, got {}",
+                id.len()
+            );
+        }
+        self.writer.send_hello_bound(VERSION as u16, model)?;
         let p = self.expect(FrameType::HelloAck)?;
         let ack = frame::decode_hello_ack(&p)?;
         anyhow::ensure!(
@@ -312,6 +327,18 @@ impl PipelinedClient {
     /// Connect, negotiate (synchronously — the `HelloAck` is the last
     /// frame read on the caller's thread), and start the receive half.
     pub fn connect(addr: &str, session: Option<&str>, opts: PipelineOptions) -> Result<Self> {
+        Self::connect_bound(addr, session, opts, None)
+    }
+
+    /// [`Self::connect`] with a model-bind block on the `Hello`: every
+    /// window this connection submits serves `(model id, version)` —
+    /// version 0 = latest — instead of the server's default model.
+    pub fn connect_bound(
+        addr: &str,
+        session: Option<&str>,
+        opts: PipelineOptions,
+        model: Option<(&str, u32)>,
+    ) -> Result<Self> {
         let session = match session {
             None => None,
             Some(s) => Some(
@@ -319,13 +346,20 @@ impl PipelinedClient {
                     .map_err(|e| anyhow::anyhow!("invalid session name {s:?}: {e}"))?,
             ),
         };
+        if let Some((id, _)) = model {
+            anyhow::ensure!(
+                !id.is_empty() && id.len() <= u8::MAX as usize,
+                "model id must be 1..=255 bytes, got {}",
+                id.len()
+            );
+        }
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true)?;
         let mut writer = FrameWriter::new(stream.try_clone()?);
         let mut reader = FrameReader::new(stream.try_clone()?);
 
         let offer = opts.max_version.clamp(VERSION, MAX_VERSION);
-        writer.send_hello(offer as u16)?;
+        writer.send_hello_bound(offer as u16, model)?;
         let ack = loop {
             match reader.next_frame(None)? {
                 None => anyhow::bail!("server closed the connection during hello"),

@@ -303,6 +303,11 @@ impl<'a> Rd<'a> {
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
     fn u64(&mut self) -> Result<u64> {
         let b = self.bytes(8)?;
         Ok(u64::from_le_bytes(b.try_into().unwrap()))
@@ -630,6 +635,48 @@ pub fn decode_u16(p: &[u8]) -> Result<u16> {
     let v = r.u16()?;
     r.done()?;
     Ok(v)
+}
+
+/// Decoded [`FrameType::Hello`].  The payload starts with the requested
+/// protocol version — a legacy client sends exactly those two bytes.
+/// An optional *model-bind block* may follow (on either protocol
+/// version): `u8 id_len | id bytes | u32 model_version`, model version
+/// 0 meaning "latest".  An absent block binds the connection to the
+/// server's default model, so pre-registry clients are untouched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HelloView<'a> {
+    pub version: u16,
+    /// Requested `(model id, model version)`; `None` ⇒ default model.
+    pub model: Option<(&'a [u8], u32)>,
+}
+
+pub fn encode_hello(out: &mut Vec<u8>, version: u16, model: Option<(&str, u32)>) -> Result<()> {
+    out.extend_from_slice(&version.to_le_bytes());
+    if let Some((id, model_version)) = model {
+        ensure!(
+            !id.is_empty() && id.len() <= u8::MAX as usize,
+            "model id must be 1..=255 bytes, got {}",
+            id.len()
+        );
+        out.push(id.len() as u8);
+        out.extend_from_slice(id.as_bytes());
+        out.extend_from_slice(&model_version.to_le_bytes());
+    }
+    Ok(())
+}
+
+pub fn decode_hello(p: &[u8]) -> Result<HelloView<'_>> {
+    let mut r = Rd::new(p);
+    let version = r.u16()?;
+    if r.done().is_ok() {
+        return Ok(HelloView { version, model: None });
+    }
+    let id_len = r.u8()? as usize;
+    ensure!(id_len > 0, "model-bind block with an empty model id");
+    let id = r.bytes(id_len)?;
+    let model_version = r.u32()?;
+    r.done()?;
+    Ok(HelloView { version, model: Some((id, model_version)) })
 }
 
 /// Decoded [`FrameType::HelloAck`].  A v1 ack is the bare negotiated
@@ -975,6 +1022,28 @@ mod tests {
             decode_hello_ack(&p).unwrap(),
             HelloAckView { version: 2, credits: Some(64) }
         );
+    }
+
+    #[test]
+    fn hello_bind_block_round_trips_and_legacy_stays_bare() {
+        let mut p = Vec::new();
+        encode_hello(&mut p, VERSION as u16, None).unwrap();
+        assert_eq!(p.len(), 2, "a bare Hello stays the pinned 2-byte payload");
+        assert_eq!(decode_hello(&p).unwrap(), HelloView { version: 1, model: None });
+        let mut p = Vec::new();
+        encode_hello(&mut p, VERSION_V2 as u16, Some(("aux", 3))).unwrap();
+        assert_eq!(
+            decode_hello(&p).unwrap(),
+            HelloView { version: 2, model: Some((b"aux".as_slice(), 3)) }
+        );
+        // Pinned byte layout: version | id_len | id | model version.
+        assert_eq!(p, [2, 0, 3, b'a', b'u', b'x', 3, 0, 0, 0]);
+        // Damage fails loudly: truncated block, empty id, oversized id.
+        assert!(decode_hello(&p[..p.len() - 1]).is_err());
+        assert!(decode_hello(&[1, 0, 0]).is_err(), "an empty model id must refuse");
+        assert!(encode_hello(&mut Vec::new(), 2, Some(("", 0))).is_err());
+        let long = "x".repeat(256);
+        assert!(encode_hello(&mut Vec::new(), 2, Some((long.as_str(), 0))).is_err());
     }
 
     #[test]

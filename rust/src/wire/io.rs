@@ -275,6 +275,19 @@ impl<W: Write> FrameWriter<W> {
         self.send_with(FrameType::Hello, |b| frame::encode_u16(b, max_version))
     }
 
+    /// Send a `Hello` carrying a model-bind block (`docs/MODELS.md`).
+    /// The model id must already be validated to 1..=255 bytes — the
+    /// callers' client APIs check before reaching the writer.
+    pub fn send_hello_bound(
+        &mut self,
+        max_version: u16,
+        model: Option<(&str, u32)>,
+    ) -> std::io::Result<()> {
+        self.send_with(FrameType::Hello, |b| {
+            frame::encode_hello(b, max_version, model).expect("model id validated by caller")
+        })
+    }
+
     /// Send a `HelloAck`; the credit window only reaches the wire when
     /// the negotiated version grants one (v2+).
     pub fn send_hello_ack(&mut self, version: u16, credits: u16) -> std::io::Result<()> {

@@ -69,9 +69,9 @@ pub use crc::crc32;
 pub use f16::{f16_from_f32, f16_to_f32};
 pub use flow::CreditGate;
 pub use frame::{
-    decode_step, encode_frame, version_supported, CompletionRec, DecodeStep, FrameType,
-    HelloAckView, SkipReason, HEADER_LEN, MAGIC, MAX_BATCH_WINDOWS, MAX_PAYLOAD, MAX_VERSION,
-    TRAILER_LEN, VERSION, VERSION_V2,
+    decode_hello, decode_step, encode_frame, encode_hello, version_supported, CompletionRec,
+    DecodeStep, FrameType, HelloAckView, HelloView, SkipReason, HEADER_LEN, MAGIC,
+    MAX_BATCH_WINDOWS, MAX_PAYLOAD, MAX_VERSION, TRAILER_LEN, VERSION, VERSION_V2,
 };
 pub use io::{FrameReader, FrameWriter, Recv, Reject};
-pub use snapshot::{SessionRecord, SnapshotFile, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
+pub use snapshot::{SessionRecord, SnapModel, SnapshotFile, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};

@@ -7,10 +7,14 @@
 //! estimates.  The format is deliberately dumb and fully checked:
 //!
 //! ```text
-//!  magic "HRDS" | version u16 | flags u16
+//!  magic "HRDS" | version u16 (=2) | flags u16
 //!  | dp_len u8 | datapath tag bytes (UTF-8, e.g. "f64"/"f32"/"fp16")
 //!  | state_len u32 | n_sessions u32 | n_routes u32
-//!  | n_sessions x ( session_hash u64 | state_len x f64-as-u64-bits )
+//!  | n_models u16
+//!  | n_models   x ( id_len u8 | model id bytes (UTF-8)
+//!                 | version u32 | fingerprint u64 | state_len u32 )
+//!  | n_sessions x ( session_hash u64 | model u16
+//!                 | state_len x f64-as-u64-bits )
 //!  | n_routes   x ( session_hash u64 | shard u32 )
 //!  | crc32 over every preceding byte
 //! ```
@@ -21,10 +25,21 @@
 //! precision tier the states came from: restoring an `"f32"` snapshot
 //! into an `"fp16"` fabric must fail loudly, never reinterpret.
 //!
+//! Version 2 (multi-model fabrics, `docs/MODELS.md`) adds the model
+//! table: each session carries an index into it, each entry pins the
+//! `(model id, version, weights fingerprint, state width)` its states
+//! were exported under — so a restore can refuse to resume a stream on
+//! different weights.  A session's state length is its model's
+//! `state_len` (the header `state_len` is the default model's width,
+//! kept for ops tooling).  Version 1 files (no model table, uniform
+//! `state_len`) still decode: every session maps to model index 0 with
+//! an empty `models` table, which restore treats as "default model,
+//! weights unverifiable".
+//!
 //! Decoding is strict: short buffer, bad magic, unknown version, CRC
-//! mismatch, count/length inconsistency, and trailing garbage are all
-//! hard errors.  A truncated or corrupted snapshot NEVER silently
-//! decodes to fewer sessions.
+//! mismatch, count/length inconsistency, bad model index, and trailing
+//! garbage are all hard errors.  A truncated or corrupted snapshot NEVER
+//! silently decodes to fewer sessions.
 
 use anyhow::{bail, Context, Result};
 
@@ -34,14 +49,34 @@ use super::crc::crc32;
 /// snapshot file accidentally fed to a frame decoder (or vice versa) is
 /// rejected immediately.
 pub const SNAPSHOT_MAGIC: &[u8; 4] = b"HRDS";
-/// Current snapshot format version.
-pub const SNAPSHOT_VERSION: u16 = 1;
+/// Current snapshot format version (2 = multi-model table; 1 still
+/// decodes).
+pub const SNAPSHOT_VERSION: u16 = 2;
 
-/// One resident session: its FNV route hash and the exported lane state
-/// (f64 either way — f32 tiers widen losslessly, see `kernel::stream`).
+/// One entry of the version-2 model table: the identity of the weights a
+/// group of sessions was exported under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapModel {
+    /// Registry model id (e.g. `"dropbear"`).
+    pub id: String,
+    /// Registry version number of those weights.
+    pub version: u32,
+    /// Content fingerprint ([`crate::kernel::weights_fingerprint`]) —
+    /// restore hard-fails when the loaded weights differ.
+    pub fingerprint: u64,
+    /// `f64` words per exported lane state under this model.
+    pub state_len: u32,
+}
+
+/// One resident session: its FNV route hash, the model-table index of
+/// the weights it was running on, and the exported lane state (f64
+/// either way — f32 tiers widen losslessly, see `kernel::stream`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SessionRecord {
     pub session: u64,
+    /// Index into [`SnapshotFile::models`]; 0 with an empty table means
+    /// "the default model" (version-1 files).
+    pub model: u16,
     pub state: Vec<f64>,
 }
 
@@ -51,8 +86,12 @@ pub struct SessionRecord {
 pub struct SnapshotFile {
     /// Opaque precision/datapath tag; restore refuses a mismatch.
     pub datapath: String,
-    /// Exported state vector length per session (tier-uniform).
+    /// Exported state vector length of the default model (per-session
+    /// widths come from [`Self::models`] when the table is non-empty).
     pub state_len: u32,
+    /// The model table (empty for decoded version-1 files: sessions then
+    /// belong to the default model and their weights are unverifiable).
+    pub models: Vec<SnapModel>,
     /// Every session resident at drain time.
     pub sessions: Vec<SessionRecord>,
     /// Routing-overlay overrides (session hash -> shard index) active at
@@ -62,23 +101,60 @@ pub struct SnapshotFile {
 }
 
 impl SnapshotFile {
+    /// The state width a session record must carry: its model-table
+    /// entry's width, or the header default when the table is empty.
+    fn record_state_len(&self, rec: &SessionRecord) -> Result<usize> {
+        if self.models.is_empty() {
+            if rec.model != 0 {
+                bail!(
+                    "session {:#018x} references model index {} but the snapshot has no model table",
+                    rec.session,
+                    rec.model
+                );
+            }
+            return Ok(self.state_len as usize);
+        }
+        match self.models.get(rec.model as usize) {
+            Some(m) => Ok(m.state_len as usize),
+            None => bail!(
+                "session {:#018x} references model index {} but the table has {} entr(ies)",
+                rec.session,
+                rec.model,
+                self.models.len()
+            ),
+        }
+    }
+
     /// Serialize to the on-disk byte format (header + records + CRC).
+    /// Always writes version 2 (the model table travels even when
+    /// empty).
     pub fn encode(&self) -> Result<Vec<u8>> {
         if self.datapath.len() > u8::MAX as usize {
             bail!("datapath tag too long: {} bytes", self.datapath.len());
         }
+        if self.models.len() > u16::MAX as usize {
+            bail!("model table too long: {} entries", self.models.len());
+        }
+        for m in &self.models {
+            if m.id.is_empty() || m.id.len() > u8::MAX as usize {
+                bail!("model id `{}` must be 1..=255 bytes", m.id);
+            }
+        }
         for rec in &self.sessions {
-            if rec.state.len() != self.state_len as usize {
+            let want = self.record_state_len(rec)?;
+            if rec.state.len() != want {
                 bail!(
                     "session {:#018x}: state length {} != declared {}",
                     rec.session,
                     rec.state.len(),
-                    self.state_len
+                    want
                 );
             }
         }
         let mut out = Vec::with_capacity(
-            32 + self.sessions.len() * (8 + self.state_len as usize * 8) + self.routes.len() * 12,
+            32 + self.models.len() * 32
+                + self.sessions.len() * (10 + self.state_len as usize * 8)
+                + self.routes.len() * 12,
         );
         out.extend_from_slice(SNAPSHOT_MAGIC);
         out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
@@ -88,8 +164,17 @@ impl SnapshotFile {
         out.extend_from_slice(&self.state_len.to_le_bytes());
         out.extend_from_slice(&(self.sessions.len() as u32).to_le_bytes());
         out.extend_from_slice(&(self.routes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.models.len() as u16).to_le_bytes());
+        for m in &self.models {
+            out.push(m.id.len() as u8);
+            out.extend_from_slice(m.id.as_bytes());
+            out.extend_from_slice(&m.version.to_le_bytes());
+            out.extend_from_slice(&m.fingerprint.to_le_bytes());
+            out.extend_from_slice(&m.state_len.to_le_bytes());
+        }
         for rec in &self.sessions {
             out.extend_from_slice(&rec.session.to_le_bytes());
+            out.extend_from_slice(&rec.model.to_le_bytes());
             for v in &rec.state {
                 out.extend_from_slice(&v.to_bits().to_le_bytes());
             }
@@ -124,8 +209,8 @@ impl SnapshotFile {
             bail!("bad snapshot magic {magic:02x?} (expected {SNAPSHOT_MAGIC:02x?})");
         }
         let version = rd.u16()?;
-        if version != SNAPSHOT_VERSION {
-            bail!("unsupported snapshot version {version} (this build reads version {SNAPSHOT_VERSION})");
+        if version != 1 && version != SNAPSHOT_VERSION {
+            bail!("unsupported snapshot version {version} (this build reads versions 1..={SNAPSHOT_VERSION})");
         }
         let _flags = rd.u16()?;
         let dp_len = rd.u8()? as usize;
@@ -135,14 +220,51 @@ impl SnapshotFile {
         let state_len = rd.u32()?;
         let n_sessions = rd.u32()?;
         let n_routes = rd.u32()?;
+        let mut models = Vec::new();
+        if version >= 2 {
+            let n_models = rd.u16()?;
+            models.reserve(n_models as usize);
+            for _ in 0..n_models {
+                let id_len = rd.u8()? as usize;
+                if id_len == 0 {
+                    bail!("snapshot model table has an empty model id");
+                }
+                let id = std::str::from_utf8(rd.bytes(id_len)?)
+                    .context("snapshot model id is not UTF-8")?
+                    .to_string();
+                let version = rd.u32()?;
+                let fingerprint = rd.u64()?;
+                let state_len = rd.u32()?;
+                models.push(SnapModel { id, version, fingerprint, state_len });
+            }
+        }
         let mut sessions = Vec::with_capacity(n_sessions.min(1 << 20) as usize);
         for _ in 0..n_sessions {
             let session = rd.u64()?;
-            let mut state = Vec::with_capacity(state_len as usize);
-            for _ in 0..state_len {
+            let model = if version >= 2 { rd.u16()? } else { 0 };
+            let rec_len = if models.is_empty() {
+                if model != 0 {
+                    bail!(
+                        "session {session:#018x} references model index {model} \
+                         but the snapshot has no model table"
+                    );
+                }
+                state_len
+            } else {
+                match models.get(model as usize) {
+                    Some(m) => m.state_len,
+                    None => bail!(
+                        "session {session:#018x} references model index {model} \
+                         but the table has {} entr(ies)",
+                        models.len()
+                    ),
+                }
+            };
+            let mut state = Vec::with_capacity(rec_len as usize);
+            for _ in 0..rec_len {
                 state.push(f64::from_bits(rd.u64()?));
             }
-            sessions.push(SessionRecord { session, state });
+            sessions.push(SessionRecord { session, model, state });
         }
         let mut routes = Vec::with_capacity(n_routes.min(1 << 20) as usize);
         for _ in 0..n_routes {
@@ -153,7 +275,7 @@ impl SnapshotFile {
         if rd.pos != body.len() {
             bail!("snapshot has {} trailing bytes after the declared records", body.len() - rd.pos);
         }
-        Ok(Self { datapath, state_len, sessions, routes })
+        Ok(Self { datapath, state_len, models, sessions, routes })
     }
 
     /// Encode and write to `path` atomically (temp file + rename), so a
@@ -217,12 +339,53 @@ mod tests {
         SnapshotFile {
             datapath: "f64".to_string(),
             state_len: 3,
+            models: vec![
+                SnapModel {
+                    id: "dropbear".to_string(),
+                    version: 1,
+                    fingerprint: 0x0123_4567_89ab_cdef,
+                    state_len: 3,
+                },
+                SnapModel {
+                    id: "aux".to_string(),
+                    version: 4,
+                    fingerprint: 0xfeed_f00d_dead_beef,
+                    state_len: 2,
+                },
+            ],
             sessions: vec![
-                SessionRecord { session: 0xdead_beef_cafe_f00d, state: vec![1.5, -0.25, 1e-300] },
-                SessionRecord { session: 42, state: vec![f64::MIN_POSITIVE, 0.0, -0.0] },
+                SessionRecord {
+                    session: 0xdead_beef_cafe_f00d,
+                    model: 0,
+                    state: vec![1.5, -0.25, 1e-300],
+                },
+                SessionRecord { session: 42, model: 1, state: vec![f64::MIN_POSITIVE, -0.0] },
             ],
             routes: vec![(0xdead_beef_cafe_f00d, 1), (42, 0)],
         }
+    }
+
+    /// Hand-encode the version-1 layout (no model table, no per-session
+    /// model index) — the compatibility surface `decode` must keep.
+    fn encode_v1(datapath: &str, state_len: u32, sessions: &[(u64, Vec<f64>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(SNAPSHOT_MAGIC);
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.push(datapath.len() as u8);
+        out.extend_from_slice(datapath.as_bytes());
+        out.extend_from_slice(&state_len.to_le_bytes());
+        out.extend_from_slice(&(sessions.len() as u32).to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        for (session, state) in sessions {
+            out.extend_from_slice(&session.to_le_bytes());
+            for v in state {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
     }
 
     #[test]
@@ -232,7 +395,7 @@ mod tests {
         let back = SnapshotFile::decode(&bytes).unwrap();
         assert_eq!(back, snap);
         // -0.0 == 0.0 under PartialEq; pin the actual bits too.
-        assert_eq!(back.sessions[1].state[2].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.sessions[1].state[1].to_bits(), (-0.0f64).to_bits());
     }
 
     #[test]
@@ -240,11 +403,55 @@ mod tests {
         let snap = SnapshotFile {
             datapath: "fp16".to_string(),
             state_len: 90,
+            models: vec![],
             sessions: vec![],
             routes: vec![],
         };
         let bytes = snap.encode().unwrap();
         assert_eq!(SnapshotFile::decode(&bytes).unwrap(), snap);
+    }
+
+    /// A version-1 file (pre-model-table) decodes into the "default
+    /// model, empty table" form bit-exactly.
+    #[test]
+    fn version_1_files_still_decode() {
+        let bytes =
+            encode_v1("f64", 2, &[(7, vec![0.5, -2.0]), (0xabc, vec![1e-9, f64::MAX])]);
+        let snap = SnapshotFile::decode(&bytes).unwrap();
+        assert!(snap.models.is_empty());
+        assert_eq!(snap.state_len, 2);
+        assert_eq!(snap.sessions.len(), 2);
+        assert!(snap.sessions.iter().all(|r| r.model == 0));
+        assert_eq!(snap.sessions[0].state, vec![0.5, -2.0]);
+        // And re-encoding upgrades it to the current version losslessly.
+        let back = SnapshotFile::decode(&snap.encode().unwrap()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    /// Sessions of different models carry different state widths in one
+    /// file — the per-model `state_len` drives both encode and decode.
+    #[test]
+    fn heterogeneous_state_widths_round_trip() {
+        let snap = sample();
+        assert_ne!(snap.sessions[0].state.len(), snap.sessions[1].state.len());
+        let back = SnapshotFile::decode(&snap.encode().unwrap()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.models[1].fingerprint, 0xfeed_f00d_dead_beef);
+    }
+
+    #[test]
+    fn out_of_range_model_index_refuses_to_encode() {
+        let mut snap = sample();
+        snap.sessions[0].model = 9;
+        assert!(snap.encode().is_err());
+        // And with no table at all, only index 0 is legal.
+        let mut bare = sample();
+        bare.models.clear();
+        bare.sessions[0].model = 0;
+        bare.sessions.truncate(1);
+        assert!(bare.encode().is_ok());
+        bare.sessions[0].model = 1;
+        assert!(bare.encode().is_err());
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Multi-model fabric integration (`docs/MODELS.md`): two models with
+//! different hidden sizes serve concurrently on one fabric over TCP,
+//! each stream bit-identical to its dedicated single-model serial
+//! reference, across both wire protocols (v1 request-reply and the v2
+//! pipelined path with delta encoding).  The drained v2 snapshot
+//! carries both models' states across a restart, a tampered weights
+//! fingerprint is refused loudly, and a hot model reload mid-traffic
+//! rebinds a live connection's stream onto the new weights with no
+//! session drops.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::coordinator::{Client, OperatorCtx, Server, WatchdogConfig, WireOptions};
+use hrd_lstm::kernel::{
+    FloatPath, ModelRegistry, PackedModel, ScalarKernel, StepKernel, DEFAULT_MODEL_ID,
+};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::sched::{Fabric, FabricConfig, SchedSnapshot};
+use hrd_lstm::util::Json;
+use hrd_lstm::wire::{PipeEvent, PipelineOptions, PipelinedClient, SnapshotFile, WireClient};
+
+/// The default ("dropbear") model: the paper's 16x15x3 LSTM.
+fn params_a() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 5)
+}
+
+/// The second tenant's model: a genuinely different architecture
+/// (hidden 9, 2 layers), so lane grouping and state widths differ.
+fn params_b() -> LstmParams {
+    LstmParams::init(16, 9, 2, 1, 77)
+}
+
+/// One-shard fabric config with a huge deadline and a wide watchdog, so
+/// estimates are raw kernel outputs (bit-comparable to the references).
+fn fabric_config(lanes: usize) -> FabricConfig {
+    let mut fcfg = FabricConfig::new(1, lanes);
+    fcfg.deadline_us = 1e9;
+    fcfg.queue_depth = 256;
+    fcfg.watchdog = WatchdogConfig {
+        min_m: -1e12,
+        max_m: 1e12,
+        max_slew_m_s: 1e15,
+        stuck_after: 1 << 30,
+        ..Default::default()
+    };
+    fcfg
+}
+
+/// Two-model registry: the default model plus "aux".
+fn two_model_fabric(restore: Option<&SnapshotFile>) -> Arc<Fabric> {
+    let registry = ModelRegistry::shared(params_a());
+    registry.insert("aux", params_b());
+    let fabric = Arc::new(Fabric::with_registry(registry, fabric_config(4)).unwrap());
+    if let Some(snap) = restore {
+        fabric.restore(snap).unwrap();
+    }
+    fabric
+}
+
+fn start_server(
+    fabric: Arc<Fabric>,
+    snapshot: &std::path::Path,
+) -> (SocketAddr, JoinHandle<SchedSnapshot>) {
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    server.set_wire_options(WireOptions::default());
+    server.set_operator(OperatorCtx::with_paths(Some(snapshot.to_path_buf()), None));
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run_fabric(fabric).unwrap());
+    (addr, handle)
+}
+
+/// Deterministic per-(session, step) window, exact in f32.
+fn swindow(s: usize, k: usize) -> [f32; INPUT_SIZE] {
+    let mut w = [0f32; INPUT_SIZE];
+    for (i, v) in w.iter_mut().enumerate() {
+        *v = ((s * 100_003 + k * 31 + i * 7) % 97) as f32 * 0.01 - 0.5;
+    }
+    w
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hrd_multi_model_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The tentpole acceptance, end to end over TCP: four streams — two on
+/// the default model, two on "aux" (one of them pipelined v2 with
+/// delta encoding) — serve concurrently and bit-identically; an
+/// unknown model id is refused at Hello; the drain exports a v2
+/// snapshot whose model table covers both models; a tampered
+/// fingerprint is refused; and a restored server continues every
+/// stream exactly where the uninterrupted references would be.
+#[test]
+fn two_models_serve_over_tcp_and_survive_restart() {
+    const PRE: usize = 24;
+    const POST: usize = 24;
+    let snap_path = tmpdir("restart").join("drain.snap");
+    let _ = std::fs::remove_file(&snap_path);
+
+    // Uninterrupted references: streams 0..2 on model A, 2..4 on B.
+    let packed_a = PackedModel::shared(&params_a());
+    let packed_b = PackedModel::shared(&params_b());
+    let mut reference: Vec<ScalarKernel<FloatPath>> = (0..4)
+        .map(|s| {
+            let packed = if s < 2 { packed_a.clone() } else { packed_b.clone() };
+            ScalarKernel::new(packed, FloatPath)
+        })
+        .collect();
+    // Session s binds (model, version-latest); None = bare legacy Hello.
+    let binds: [Option<(&str, u32)>; 4] =
+        [None, Some((DEFAULT_MODEL_ID, 0)), Some(("aux", 0)), Some(("aux", 0))];
+
+    let (addr, handle) = start_server(two_model_fabric(None), &snap_path);
+    let addr_s = addr.to_string();
+
+    // A model the registry never loaded is a typed Hello error.
+    let mut bogus = WireClient::connect(&addr_s).unwrap();
+    let err = bogus.hello_bound(Some(("no-such-model", 0))).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+    drop(bogus);
+
+    // Sessions 0..3 over the v1 request-reply protocol.
+    for s in 0..3 {
+        let mut c = WireClient::with_session(&addr_s, &format!("mm-{s}")).unwrap();
+        c.hello_bound(binds[s]).unwrap();
+        for k in 0..PRE {
+            let w = swindow(s, k);
+            let (est, _) = c.infer(&w).unwrap();
+            let want = reference[s].step_window(&w[..]);
+            assert_eq!(est.to_bits(), want.to_bits(), "session {s} window {k} diverged");
+        }
+    }
+    // Session 3: pipelined v2 with delta encoding, bound to "aux".
+    {
+        let mut c = PipelinedClient::connect_bound(
+            &addr_s,
+            Some("mm-3"),
+            PipelineOptions::default(),
+            binds[3],
+        )
+        .unwrap();
+        for k in 0..PRE {
+            let w = swindow(3, k);
+            let seq = c.submit(&w, None).unwrap();
+            let want = reference[3].step_window(&w[..]);
+            match c.recv(Some(Duration::from_secs(10))).unwrap() {
+                PipeEvent::Completion(rec) => {
+                    assert_eq!(rec.seq, seq);
+                    assert!(!rec.shed, "window {k} shed");
+                    assert_eq!(
+                        rec.estimate.to_bits(),
+                        want.to_bits(),
+                        "pipelined aux window {k} diverged"
+                    );
+                }
+                other => panic!("expected a completion for window {k}, got {other:?}"),
+            }
+        }
+    }
+
+    // Drain to disk over the JSON control protocol; the server exits.
+    let mut ctl = Client::connect(&addr_s).unwrap();
+    let reply = ctl.drain().unwrap();
+    assert_eq!(reply.get("drained"), Some(&Json::Bool(true)));
+    assert_eq!(reply.get("sessions").and_then(|v| v.as_f64()), Some(4.0));
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, 4 * PRE as u64);
+    assert_eq!(snap.shed, 0, "no session may be dropped across the drain");
+
+    // The snapshot is version 2: both models in the table, each session
+    // indexed to its artifact with the right state width.
+    let file = SnapshotFile::read_from(&snap_path).unwrap();
+    assert_eq!(file.sessions.len(), 4);
+    assert_eq!(file.models.len(), 2, "model table: {:?}", file.models);
+    let by_id = |id: &str| file.models.iter().find(|m| m.id == id).unwrap();
+    assert_eq!(by_id(DEFAULT_MODEL_ID).state_len, 2 * 15 * 3);
+    assert_eq!(by_id("aux").state_len, 2 * 9 * 2);
+
+    // Tampering with a weights fingerprint must refuse the restore.
+    let mut tampered = file.clone();
+    tampered.models[0].fingerprint ^= 1;
+    let err = two_model_fabric(None).restore(&tampered).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+    // Fresh server, restored from disk: every stream continues bit-
+    // identically, on both protocols.
+    let (addr2, handle2) = start_server(two_model_fabric(Some(&file)), &snap_path);
+    let addr2_s = addr2.to_string();
+    for s in 0..3 {
+        let mut c = WireClient::with_session(&addr2_s, &format!("mm-{s}")).unwrap();
+        c.hello_bound(binds[s]).unwrap();
+        for k in PRE..PRE + POST {
+            let w = swindow(s, k);
+            let (est, _) = c.infer(&w).unwrap();
+            let want = reference[s].step_window(&w[..]);
+            assert_eq!(
+                est.to_bits(),
+                want.to_bits(),
+                "session {s} window {k}: post-restore stream diverged"
+            );
+        }
+    }
+    {
+        let mut c = PipelinedClient::connect_bound(
+            &addr2_s,
+            Some("mm-3"),
+            PipelineOptions::default(),
+            binds[3],
+        )
+        .unwrap();
+        for k in PRE..PRE + POST {
+            let w = swindow(3, k);
+            c.submit(&w, None).unwrap();
+            let want = reference[3].step_window(&w[..]);
+            match c.recv(Some(Duration::from_secs(10))).unwrap() {
+                PipeEvent::Completion(rec) => {
+                    assert_eq!(
+                        rec.estimate.to_bits(),
+                        want.to_bits(),
+                        "post-restore pipelined aux window {k} diverged"
+                    );
+                }
+                other => panic!("expected a completion for window {k}, got {other:?}"),
+            }
+        }
+    }
+    let mut ctl = WireClient::connect(&addr2_s).unwrap();
+    ctl.shutdown().unwrap();
+    let snap2 = handle2.join().unwrap();
+    assert_eq!(snap2.completed, 4 * POST as u64);
+}
+
+/// Hot model reload mid-traffic: a live TCP connection keeps serving
+/// while `model.<id>` loads a new default-model version; the stream
+/// rebinds at its next window CARRYING recurrent state, nothing is
+/// shed, and the post-reload estimates match a reference that imported
+/// the pre-reload state onto the new weights.
+#[test]
+fn hot_reload_over_tcp_carries_live_streams() {
+    let dir = tmpdir("reload");
+    let weights = dir.join("v2.bin");
+    let p2 = LstmParams::init(16, 15, 3, 1, 99); // same shape, new weights
+    p2.save(&weights).unwrap();
+
+    let registry = ModelRegistry::shared(params_a());
+    let fabric = Arc::new(Fabric::with_registry(registry, fabric_config(2)).unwrap());
+    let operator = fabric.clone(); // the reload path's handle
+    let (addr, handle) = start_server(fabric, &dir.join("drain.snap"));
+    let addr_s = addr.to_string();
+
+    let mut c = WireClient::with_session(&addr_s, "live").unwrap();
+    c.hello().unwrap();
+    let mut reference = ScalarKernel::new(PackedModel::shared(&params_a()), FloatPath);
+    for k in 0..8 {
+        let w = swindow(0, k);
+        let (est, _) = c.infer(&w).unwrap();
+        assert_eq!(est.to_bits(), reference.step_window(&w[..]).to_bits());
+    }
+
+    // The operator plane hot-loads the new version while the connection
+    // stays open (`hrd reload --model dropbear=<path>` reduces to this).
+    let state_len = operator.registry().default_model().state_len();
+    let out = operator
+        .apply_reload(&[("model.dropbear".to_string(), weights.to_string_lossy().into_owned())]);
+    assert!(out.rejected.is_empty(), "{:?}", out.rejected);
+
+    // Same connection, same session: the stream continues on the new
+    // weights with its recurrent state carried over.
+    let mut ref2 = ScalarKernel::new(PackedModel::shared(&p2), FloatPath);
+    let mut carried = vec![0.0; state_len];
+    reference.export_state(0, &mut carried);
+    ref2.import_state(0, &carried);
+    for k in 8..16 {
+        let w = swindow(0, k);
+        let (est, _) = c.infer(&w).unwrap();
+        assert_eq!(
+            est.to_bits(),
+            ref2.step_window(&w[..]).to_bits(),
+            "window {k}: post-reload stream must carry state onto the new weights"
+        );
+    }
+
+    let mut ctl = WireClient::connect(&addr_s).unwrap();
+    ctl.shutdown().unwrap();
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, 16, "every window completed");
+    assert_eq!(snap.shed, 0, "a hot reload must not shed live traffic");
+}

@@ -164,7 +164,12 @@ fn status_reports_restore_counters() {
     let file = SnapshotFile {
         datapath: "f64".into(),
         state_len: 90,
-        sessions: vec![hrd_lstm::wire::SessionRecord { session: 0x5EED, state: vec![0.0; 90] }],
+        models: vec![],
+        sessions: vec![hrd_lstm::wire::SessionRecord {
+            session: 0x5EED,
+            model: 0,
+            state: vec![0.0; 90],
+        }],
         routes: vec![],
     };
     let fabric = Arc::new(Fabric::new(&params(), fabric_config(2)).unwrap());
@@ -204,9 +209,10 @@ fn damaged_snapshots_fail_loudly() {
     let file = SnapshotFile {
         datapath: "f64".into(),
         state_len: 3,
+        models: vec![],
         sessions: vec![
-            hrd_lstm::wire::SessionRecord { session: 1, state: vec![0.25, -1.5, 3.0] },
-            hrd_lstm::wire::SessionRecord { session: 2, state: vec![0.5, 2.5, -0.125] },
+            hrd_lstm::wire::SessionRecord { session: 1, model: 0, state: vec![0.25, -1.5, 3.0] },
+            hrd_lstm::wire::SessionRecord { session: 2, model: 0, state: vec![0.5, 2.5, -0.125] },
         ],
         routes: vec![(2, 0)],
     };

@@ -238,12 +238,26 @@ const STATS: &str = "485244570105000000000000d8c7987200000000";
 const TRACEDUMP: &str = "48524457010800000000000018a64f1300000000";
 const SHUTDOWN: &str = "48524457010600000000000045dd704300000000";
 
+// Hello frames carrying the optional model-bind block
+// (`u8 id_len | id | u32 model_version`, version 0 = latest), also
+// generated in Python: one binding the default model by name
+// ("dropbear"), one naming a model the server never loaded.
+const HELLO_BIND: &str = "48524457010100000f0000009df3b4de01000864726f7062656172000000\
+                          00db808462";
+const HELLO_BIND_BOGUS: &str = "48524457010100000e000000f89408660100076e6f2d737563680000\
+                                00008ede71d2";
+
 // Response goldens (fully deterministic frames).
 const HELLOACK: &str = "485244570181000002000000b2c1c8a40100be23c258";
 const OK_FRAME: &str = "4852445701850000000000002a2d8efa00000000";
 const ERR_HIJACK: &str = "4852445701840000470000001a463a5a0900000000000000003c0073657373696f\
                           6e207072656669782022636f6e6e2f2220697320726573657276656420666f7220\
                           616e6f6e796d6f757320636f6e6e656374696f6e7373083dfa";
+// Error frame for HELLO_BIND_BOGUS: seq 0, no shed flag, the pinned
+// "unknown model `no-such` version 0" message.
+const ERR_BAD_MODEL: &str = "48524457018400002c00000018361db60000000000000000002100756e6b\
+                             6e6f776e206d6f64656c20606e6f2d73756368602076657273696f6e2030\
+                             82b7a0e4";
 
 const HEADER_LEN: usize = 16;
 
@@ -391,6 +405,40 @@ fn binary_session_transcript_is_golden() {
 
     let snap = handle.join().unwrap();
     assert_eq!(snap.completed, 6);
+    assert_eq!(snap.shed, 0);
+}
+
+/// The Hello model-bind block, pinned at the byte level: an unknown
+/// model is refused with a typed error (exact bytes) and leaves the
+/// connection serving its previous binding; binding the default model
+/// by name acks with the unchanged v1 HelloAck and serves the same
+/// stream bit for bit as a bare Hello would.
+#[test]
+fn hello_model_bind_block_is_golden() {
+    let (addr, handle) = start_server();
+    let mut reference = RefStream::new();
+    let e1 = reference.step(&window(1));
+
+    let mut stream = connect(addr);
+    stream.write_all(&hex(HELLO_BIND_BOGUS)).unwrap();
+    assert_eq!(
+        read_frame(&mut stream),
+        hex(ERR_BAD_MODEL),
+        "unknown model refused with the pinned error frame (exact bytes)"
+    );
+    stream.write_all(&hex(HELLO_BIND)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(HELLOACK), "bind-block hello ack is the v1 ack");
+    stream.write_all(&hex(SUB1)).unwrap();
+    assert_eq!(
+        canon_frame(read_frame(&mut stream)),
+        expect_frame(0x82, &completion_rec(1, e1)),
+        "explicitly-bound default model serves the stream bit for bit"
+    );
+    stream.write_all(&hex(SHUTDOWN)).unwrap();
+    assert_eq!(read_frame(&mut stream), hex(OK_FRAME), "shutdown ack");
+
+    let snap = handle.join().unwrap();
+    assert_eq!(snap.completed, 1);
     assert_eq!(snap.shed, 0);
 }
 

@@ -259,3 +259,80 @@ fn sessions_survive_reconnect_over_tcp() {
     let snap = server_thread.join().unwrap();
     assert_eq!(snap.completed, 6);
 }
+
+/// Per-tenant admission quotas prevent cross-tenant starvation
+/// (`docs/MODELS.md`): tenant A floods the fabric far past capacity
+/// while tenant B trickles windows on its own model.  With A capped at
+/// an in-flight quota of 3 on a 1-shard/2-lane/queue-4 fabric, at most
+/// 3 A-jobs plus B's single in-flight window (4 total) ever coexist, so
+/// B can never find a full queue: every B window must be admitted AND
+/// stay bit-identical to B's dedicated serial reference, while A's
+/// overload sheds loudly on its own quota ledger.
+#[test]
+fn tenant_quotas_prevent_cross_tenant_starvation() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let pa = params();
+    let pb = LstmParams::init(16, 9, 2, 1, 77); // tenant B's own model
+    let registry = hrd_lstm::kernel::ModelRegistry::shared(pa.clone());
+    registry.insert("aux", pb.clone());
+    let mut cfg = FabricConfig::new(1, 2);
+    cfg.queue_depth = 4;
+    cfg.deadline_us = 1e9;
+    cfg.watchdog = finiteness_only_wd(1 << 20);
+    cfg.tenant_quotas = vec![("dropbear".into(), 3)];
+    let fabric = Arc::new(Fabric::with_registry(registry, cfg).unwrap());
+
+    // Tenant A: four flood threads, each keeping volleys of 8 windows
+    // in flight until told to stop (admission sheds are the point).
+    let stop = Arc::new(AtomicBool::new(false));
+    let floods: Vec<_> = (0..4)
+        .map(|t| {
+            let fabric = fabric.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let w = [0.25f32; INPUT_SIZE];
+                while !stop.load(Ordering::Relaxed) {
+                    let pending: Vec<_> = (0..8)
+                        .filter_map(|i| fabric.submit(&format!("flood-{t}-{i}"), &w, None).ok())
+                        .collect();
+                    for p in pending {
+                        let _ = p.wait();
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Tenant B: a paced stream on "aux" under the flood.  Every window
+    // must be admitted and match the dedicated serial reference bit for
+    // bit — starvation or cross-tenant eviction would break both.
+    let binding = fabric.bind_model("aux", 0).unwrap();
+    let mut reference = ScalarKernel::new(PackedModel::shared(&pb), FloatPath);
+    for k in 0..40 {
+        let w = window_for(9, k);
+        let got = fabric
+            .infer_bound(&binding, "trickle", &w)
+            .unwrap_or_else(|e| panic!("tenant B shed under tenant A's flood at {k}: {e:#}"));
+        assert_eq!(
+            got.estimate.to_bits(),
+            reference.step_window(&w[..]).to_bits(),
+            "tenant B window {k} diverged under load"
+        );
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for f in floods {
+        f.join().unwrap();
+    }
+
+    let snap = fabric.snapshot();
+    let ledger = |name: &str| snap.tenants.iter().find(|t| t.tenant == name).unwrap();
+    let a = ledger("dropbear");
+    assert_eq!(a.limit, 3);
+    assert!(a.quota_shed > 0, "the flood never hit tenant A's quota");
+    let b = ledger("aux");
+    assert_eq!(b.quota_shed, 0, "tenant B must never shed on quota");
+    assert_eq!(b.admitted, 40, "every tenant B window was admitted");
+    assert_eq!(snap.submitted, snap.completed + snap.shed, "ledger balance");
+}

@@ -123,7 +123,7 @@ OP_ADDR=127.0.0.1:7461
 OP_SNAP=CI_operator.snap
 rm -f "$OP_SNAP"
 cargo run --release --bin hrd -- serve-tcp --backend native --shards 2 \
-  --addr "$OP_ADDR" --snapshot "$OP_SNAP" &
+  --addr "$OP_ADDR" --snapshot "$OP_SNAP" --allow-random-weights &
 OP_PID=$!
 trap 'kill $OP_PID 2>/dev/null || true' EXIT
 cargo run --release --bin hrd -- status --addr "$OP_ADDR" \
@@ -139,7 +139,7 @@ test -s "$OP_SNAP" || { echo "FAIL: drain left no snapshot at $OP_SNAP"; exit 1;
 cargo run --release --bin hrd -- restart-check --snapshot "$OP_SNAP" \
   || { echo "FAIL: offline snapshot validation"; exit 1; }
 cargo run --release --bin hrd -- serve-tcp --backend native --shards 2 \
-  --addr "$OP_ADDR" --snapshot "$OP_SNAP" --restore "$OP_SNAP" &
+  --addr "$OP_ADDR" --snapshot "$OP_SNAP" --restore "$OP_SNAP" --allow-random-weights &
 OP_PID=$!
 cargo run --release --bin hrd -- status --addr "$OP_ADDR" \
   || { echo "FAIL: hrd status after --restore"; exit 1; }
@@ -148,5 +148,24 @@ cargo run --release --bin hrd -- drain --addr "$OP_ADDR" \
 wait $OP_PID || { echo "FAIL: restored server did not exit cleanly"; exit 1; }
 trap - EXIT
 test -s "$OP_SNAP" || { echo "FAIL: final drain snapshot missing"; exit 1; }
+
+echo "== multi-model gate: registry/tenancy suite + multi_model rows in the bench =="
+# The multi-model acceptance (docs/MODELS.md): two models over TCP bit-
+# identically with drain/restore and tampered-fingerprint refusal, hot
+# reload carrying live streams, and the two-tenant starvation scenario.
+cargo test -q --test multi_model
+# The quick loadgen runs the multi-model phase by default (a second
+# "aux" model beside the default): TCP bit-parity for both models plus
+# the tenant-quota A/B.  Its rows must land in the bench artifact, and
+# an explicit `--model aux` loadgen smoke exercises the CLI bind path.
+for row in multi_model_quota_off multi_model_quota_on; do
+  grep -q "\"$row\"" BENCH_serving.json \
+    || { echo "FAIL: BENCH_serving.json lacks the $row row"; exit 1; }
+done
+cargo run --release --bin hrd -- loadgen --quick --model aux --out CI_multi_model.json \
+  || { echo "FAIL: loadgen --model aux smoke"; exit 1; }
+grep -q '"multi_model"' CI_multi_model.json \
+  || { echo "FAIL: loadgen --model aux wrote no multi_model report"; exit 1; }
+rm -f CI_multi_model.json
 
 echo "CI OK"
