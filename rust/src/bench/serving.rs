@@ -157,6 +157,12 @@ pub struct ServingConfig {
     /// breakdown and the suite runs a tracing-overhead A/B
     /// (docs/OBSERVABILITY.md).
     pub trace_sample: usize,
+    /// Run the checkpoint-overhead A/B: identical direct-fabric closed
+    /// loops with no checkpointer attached vs one armed on a throwaway
+    /// ring directory, so the pair differs only in the capture
+    /// rendezvous + segment encode/fsync cost.  The design budget is
+    /// <= 5% p99 when armed (docs/OPERATIONS.md).
+    pub ckpt_ab: bool,
     /// Run the two-model, two-tenant fabric scenario: TCP bit-identity
     /// of model-bound streams vs serial references, plus the per-tenant
     /// admission-quota A/B (`multi_model` rows; docs/MODELS.md).
@@ -190,6 +196,7 @@ impl ServingConfig {
             open_rates_hz: vec![250.0, 1000.0, 4000.0],
             open_stride: 4,
             trace_sample: 64,
+            ckpt_ab: true,
             multi_model: true,
             multi_model_id: "aux".to_string(),
             seed: 42,
@@ -217,6 +224,7 @@ impl ServingConfig {
             open_rates_hz: vec![200.0, 800.0],
             open_stride: 4,
             trace_sample: 64,
+            ckpt_ab: true,
             multi_model: true,
             multi_model_id: "aux".to_string(),
             seed: 42,
@@ -525,6 +533,44 @@ impl TraceOverhead {
     }
 }
 
+/// Checkpoint-overhead A/B: throughput + fabric p99 of an identical
+/// direct-fabric closed loop with no checkpointer vs one armed at
+/// `interval_ms` on a throwaway ring (docs/OPERATIONS.md budgets
+/// <= 5% p99 when armed).
+#[derive(Debug, Clone)]
+pub struct CkptOverhead {
+    /// Best-of-3 request rate with no checkpointer attached.
+    pub off_rps: f64,
+    /// Best-of-3 request rate with the checkpointer armed.
+    pub on_rps: f64,
+    /// Fabric-measured p99 latency of the best off run, µs.
+    pub off_p99_us: f64,
+    /// Fabric-measured p99 latency of the best armed run, µs.
+    pub on_p99_us: f64,
+    /// Capture cadence of the armed run.
+    pub interval_ms: u64,
+    /// Durable segments the best armed run wrote (>= 1: `stop` always
+    /// takes a final round).
+    pub generations: u64,
+    /// `(on_p99 - off_p99) / off_p99`; negative means the armed run
+    /// happened to measure faster (pure timing noise).
+    pub p99_overhead_frac: f64,
+}
+
+impl CkptOverhead {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("off_rps", Json::from(self.off_rps)),
+            ("on_rps", Json::from(self.on_rps)),
+            ("off_p99_us", Json::from(self.off_p99_us)),
+            ("on_p99_us", Json::from(self.on_p99_us)),
+            ("interval_ms", Json::from(self.interval_ms as usize)),
+            ("generations", Json::from(self.generations as f64)),
+            ("p99_overhead_frac", Json::from(self.p99_overhead_frac)),
+        ])
+    }
+}
+
 /// Full suite output.
 #[derive(Debug, Clone)]
 pub struct ServingSummary {
@@ -546,6 +592,9 @@ pub struct ServingSummary {
     /// Tracing-overhead A/B: fabric throughput with the flight recorder
     /// off vs sampled (`None` when `cfg.trace_sample` is 0).
     pub trace_overhead: Option<TraceOverhead>,
+    /// Checkpoint-overhead A/B: fabric throughput + p99 with the
+    /// checkpointer off vs armed (`None` when `cfg.ckpt_ab` is off).
+    pub ckpt_overhead: Option<CkptOverhead>,
     /// Two-model, two-tenant scenario (`None` when `cfg.multi_model`
     /// is off).  See docs/MODELS.md.
     pub multi_model: Option<MultiModelReport>,
@@ -673,6 +722,19 @@ impl ServingSummary {
                 t.overhead_frac * 100.0,
             ));
         }
+        if let Some(c) = &self.ckpt_overhead {
+            s.push_str(&format!(
+                "checkpoint overhead ({} ms cadence, {} segments): off {:.0} r/s \
+                 p99 {:.1} us vs on {:.0} r/s p99 {:.1} us ({:+.2}% p99)\n",
+                c.interval_ms,
+                c.generations,
+                c.off_rps,
+                c.off_p99_us,
+                c.on_rps,
+                c.on_p99_us,
+                c.p99_overhead_frac * 100.0,
+            ));
+        }
         s.push_str(&format!(
             "widest fabric ({} shards) vs serial sustained rate: {:.2}x",
             self.best_fabric_shards, self.best_fabric_vs_serial
@@ -701,6 +763,7 @@ impl ServingSummary {
                     ),
                     ("open_stride", Json::from(cfg.open_stride)),
                     ("trace_sample", Json::from(cfg.trace_sample)),
+                    ("ckpt_ab", Json::Bool(cfg.ckpt_ab)),
                     (
                         "shard_counts",
                         Json::Arr(cfg.shard_counts.iter().map(|&n| Json::from(n)).collect()),
@@ -741,6 +804,13 @@ impl ServingSummary {
                 "trace_overhead",
                 match &self.trace_overhead {
                     Some(t) => t.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "ckpt_overhead",
+                match &self.ckpt_overhead {
+                    Some(c) => c.to_json(),
                     None => Json::Null,
                 },
             ),
@@ -1168,6 +1238,7 @@ fn run_open_scenario(
         f16: false,
         inflight_cap: 64,
         deadline_us: 0.0,
+        replay: false,
     };
     let t0 = Instant::now();
     let mut joins = Vec::new();
@@ -1308,7 +1379,7 @@ fn wire_v2_parity(params: &LstmParams, loads: &[Vec<[f32; INPUT_SIZE]>]) -> Resu
 
     let run = |session: &str, max_version: u8, delta: bool, f16: bool| -> Result<(Vec<f64>, u64)> {
         let opts =
-            PipelineOptions { max_version, delta, f16, inflight_cap: 16, deadline_us: 0.0 };
+            PipelineOptions { max_version, delta, f16, inflight_cap: 16, deadline_us: 0.0, replay: false };
         let mut c = PipelinedClient::connect(&addr, Some(session), opts)?;
         anyhow::ensure!(
             c.version() == max_version,
@@ -1686,6 +1757,7 @@ fn measure_trace_overhead(
             None,
             None,
             None,
+            None,
         );
         Ok((rps, prom))
     };
@@ -1711,6 +1783,99 @@ fn measure_trace_overhead(
         sampled_rps,
     );
     Ok((TraceOverhead { off_rps, sampled_rps, sample_every, overhead_frac }, prom))
+}
+
+/// Checkpoint-overhead A/B: identical direct-fabric closed loops with
+/// no checkpointer attached vs one armed at a serving-representative
+/// cadence on a throwaway ring, best-of-3 each, so the pair differs
+/// only in the capture rendezvous + segment encode/fsync cost.  The
+/// design budget is <= 5% p99 when armed (docs/OPERATIONS.md); the
+/// assert below is deliberately lenient because wall-clock percentiles
+/// at this run length are noisy on shared CI hardware — it exists to
+/// catch the pathological regression where the capture handshake lands
+/// on the hot path even when no checkpointer is attached, not to grade
+/// the last percent.
+fn measure_ckpt_overhead(params: &LstmParams, cfg: &ServingConfig) -> Result<CkptOverhead> {
+    use crate::sched::{CheckpointConfig, Checkpointer};
+    const INTERVAL_MS: u64 = 25;
+    static RING_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let requests = (cfg.open_streams * cfg.open_requests * 4).clamp(512, 4096);
+    let run_once = |armed: bool| -> Result<(f64, f64, u64)> {
+        let mut fcfg = FabricConfig::new(2, cfg.batch.max(2));
+        fcfg.queue_depth = 256;
+        fcfg.datapath = DatapathKind::FloatF32;
+        let fabric = Arc::new(Fabric::new(params, fcfg)?);
+        let ring = std::env::temp_dir().join(format!(
+            "hrd_bench_ckpt_{}_{}",
+            std::process::id(),
+            RING_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        ));
+        let ckpt = if armed {
+            let _ = std::fs::remove_dir_all(&ring);
+            let mut ccfg = CheckpointConfig::new(&ring);
+            ccfg.interval = Duration::from_millis(INTERVAL_MS);
+            Some(Checkpointer::start(fabric.clone(), ccfg)?)
+        } else {
+            None
+        };
+        let sessions: Vec<u64> =
+            (0..8).map(|k| session_hash(&format!("ckpt-ab-{k}"))).collect();
+        let window = [0.25f32; INPUT_SIZE];
+        let mut lats = Vec::with_capacity(requests);
+        let t0 = Instant::now();
+        for k in 0..requests {
+            let c =
+                fabric.submit_hashed(sessions[k % sessions.len()], &window, None)?.wait()?;
+            lats.push(c.latency_us);
+        }
+        let rps = requests as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        // Stop BEFORE reading the counter: stop() takes a final round,
+        // so even a run shorter than the cadence writes >= 1 segment.
+        if let Some(c) = ckpt {
+            c.stop();
+        }
+        let generations = fabric.checkpoint_board().metrics().snapshot().generations;
+        let _ = std::fs::remove_dir_all(&ring);
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = if lats.is_empty() { 0.0 } else { stats::percentile_sorted(&lats, 99.0) };
+        Ok((rps, p99, generations))
+    };
+    let (mut off_rps, mut off_p99_us) = (0.0f64, 0.0f64);
+    for _ in 0..3 {
+        let (rps, p99, _) = run_once(false)?;
+        if rps > off_rps {
+            off_rps = rps;
+            off_p99_us = p99;
+        }
+    }
+    let (mut on_rps, mut on_p99_us, mut generations) = (0.0f64, 0.0f64, 0u64);
+    for _ in 0..3 {
+        let (rps, p99, gens) = run_once(true)?;
+        if rps > on_rps {
+            on_rps = rps;
+            on_p99_us = p99;
+            generations = gens;
+        }
+    }
+    anyhow::ensure!(generations > 0, "armed run never wrote a durable segment");
+    anyhow::ensure!(
+        on_rps >= 0.5 * off_rps,
+        "checkpointer cost {:.0}% throughput (off {:.0} vs armed {:.0} r/s); \
+         the design budget is 5% p99",
+        (off_rps - on_rps) / off_rps.max(1e-9) * 100.0,
+        off_rps,
+        on_rps,
+    );
+    let p99_overhead_frac = (on_p99_us - off_p99_us) / off_p99_us.max(1e-9);
+    Ok(CkptOverhead {
+        off_rps,
+        on_rps,
+        off_p99_us,
+        on_p99_us,
+        interval_ms: INTERVAL_MS,
+        generations,
+        p99_overhead_frac,
+    })
 }
 
 /// `BENCH_serving.json`.
@@ -1770,6 +1935,11 @@ pub fn run_serving_suite(
     } else {
         (None, None)
     };
+    let ckpt_overhead = if cfg.ckpt_ab {
+        Some(measure_ckpt_overhead(params, cfg).context("checkpoint-overhead A/B")?)
+    } else {
+        None
+    };
     let rebalance = if cfg.skew {
         Some(RebalanceCompare {
             off: run_skew_scenario(params, cfg, false).context("skew scenario, rebalance off")?,
@@ -1806,6 +1976,7 @@ pub fn run_serving_suite(
         open_loop,
         v2_parity,
         trace_overhead,
+        ckpt_overhead,
         multi_model,
         prometheus_sample,
         best_fabric_shards,
@@ -1844,6 +2015,7 @@ mod tests {
             open_rates_hz: vec![500.0],
             open_stride: 4,
             trace_sample: 0, // A/B exercised by the open-loop test below
+            ckpt_ab: false, // A/B exercised by the open-loop test below
             multi_model: false, // exercised by its own test below
             multi_model_id: "aux".to_string(),
             seed: 11,
@@ -1866,6 +2038,7 @@ mod tests {
         }
         assert!(s.parity_windows > 0, "parity pass must run when both protos selected");
         assert!(s.trace_overhead.is_none(), "no A/B with tracing off");
+        assert!(s.ckpt_overhead.is_none(), "no A/B with ckpt_ab off");
         assert!(s.multi_model.is_none(), "multi-model disabled in this config");
         assert!(s.prometheus_sample.is_none());
         assert!(s.best_fabric_vs_serial > 0.0);
@@ -1875,6 +2048,7 @@ mod tests {
         assert_eq!(j.get("group").unwrap().as_str(), Some("serving"));
         assert_eq!(j.get("rebalance"), Some(&Json::Null), "skew disabled in this config");
         assert_eq!(j.get("trace_overhead"), Some(&Json::Null), "tracing off in this config");
+        assert_eq!(j.get("ckpt_overhead"), Some(&Json::Null), "ckpt A/B off in this config");
         assert_eq!(j.get("fabric").unwrap().as_arr().unwrap().len(), 4);
         assert_eq!(j.get("wire_comparison").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("parity_windows").unwrap().as_f64().unwrap() > 0.0);
@@ -1965,6 +2139,10 @@ mod tests {
         let t = s.trace_overhead.as_ref().expect("A/B runs when sampling is on");
         assert_eq!(t.sample_every, 64);
         assert!(t.off_rps > 0.0 && t.sampled_rps > 0.0, "{t:?}");
+        let ck = s.ckpt_overhead.as_ref().expect("ckpt A/B runs by default");
+        assert!(ck.off_rps > 0.0 && ck.on_rps > 0.0, "{ck:?}");
+        assert!(ck.off_p99_us > 0.0 && ck.on_p99_us > 0.0, "{ck:?}");
+        assert!(ck.generations > 0, "armed run must write >= 1 segment: {ck:?}");
         let prom = s.prometheus_sample.as_ref().expect("exposition captured");
         assert!(prom.contains("hrd_requests_completed_total"), "{prom}");
         assert!(prom.contains("hrd_stage_latency_microseconds"), "{prom}");
@@ -1974,6 +2152,10 @@ mod tests {
         assert!(
             j.at(&["trace_overhead", "off_rps"]).unwrap().as_f64().unwrap() > 0.0,
             "A/B numbers land in the report"
+        );
+        assert!(
+            j.at(&["ckpt_overhead", "on_p99_us"]).unwrap().as_f64().unwrap() > 0.0,
+            "checkpoint A/B numbers land in the report"
         );
         let row0 = &j.get("open_loop").unwrap().as_arr().unwrap()[0];
         assert!(row0.get("stage_breakdown").is_some(), "breakdown lands in the report");
@@ -2025,6 +2207,7 @@ mod tests {
             open_rates_hz: vec![500.0],
             open_stride: 4,
             trace_sample: 0,
+            ckpt_ab: false,
             multi_model: false,
             multi_model_id: "aux".to_string(),
             seed: 3,

@@ -2,7 +2,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use crate::beam::SensorFault;
 use crate::config::schema::BackendKind;
@@ -88,6 +88,9 @@ COMMANDS:
             docs/PROTOCOL.md):  --no-open-loop  --open-streams M
             --open-requests N  --open-rates "250,1000,4000"  --open-stride K
             --trace-sample N  (stage attribution sampling, 0 = off)
+            --no-ckpt-ab  (skip the checkpoint-overhead A/B — off-vs-armed
+            closed loops whose ckpt_overhead row budgets <= 5% p99;
+            docs/OPERATIONS.md)
             --prom-out <file>  (write a Prometheus exposition sample)
             --model <id>  (second synthetic model id for the two-model,
             two-tenant scenario; --no-multi-model skips it; the
@@ -119,6 +122,20 @@ COMMANDS:
             weights as a new version of <id>; new sessions bind it,
             resident sessions adopt it at window boundaries, the old
             version is freed at refcount 0 — docs/MODELS.md)
+  chaos     arm/disarm fault-injection knobs on a running server
+            (refused unless it was started with --chaos or
+            [faults] enabled = true; vocabulary: docs/OPERATIONS.md)
+            --addr HOST:PORT
+            --set knob=value[,knob=value...]  (value `off` disarms,
+            `all=off` clears everything; omit --set to query)
+  pump      deterministic replay-driven load for crash-recovery CI:
+            windows derived from (session, seq), estimates recorded as
+            exact bit patterns, automatic resync + tail replay when the
+            server dies mid-stream (exit 3 if it never comes back)
+            --addr HOST:PORT  --session NAME  --count N (default 512)
+            --out FILE   (transcript of `seq estimate-bits` lines)
+            --compare A,B  (instead of pumping: assert two transcripts
+            are bit-identical; exit 1 on the first divergence)
   restart-check  validate a drain snapshot offline (--snapshot <file>:
             CRC, version, framing) or probe a restarted server's
             operator counters (--addr HOST:PORT); exits nonzero on a
@@ -148,6 +165,8 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "status" => status_cmd(args),
         "drain" => drain_cmd(args),
         "reload" => reload_cmd(args),
+        "chaos" => chaos_cmd(args),
+        "pump" => pump_cmd(args),
         "restart-check" => restart_check(args),
         "bench" => bench(args),
         "tables" => tables(),
@@ -502,16 +521,74 @@ fn serve_tcp(args: &Args) -> Result<i32> {
                     eprintln!("warning: [reload] {knob}: {why}");
                 }
             }
-            if let Some(path) = args.get("restore") {
-                let snap =
-                    crate::wire::SnapshotFile::read_from(std::path::Path::new(path))?;
-                let routes = snap.routes.len();
-                let n = fabric.restore(&snap)?;
-                server.operator().note_restored(n);
-                println!(
-                    "restored {n} session(s) (+{routes} route override(s)) from {path}"
-                );
+            // Chaos opt-in must precede restore/checkpointer startup so
+            // kill points inside the recovery path itself are reachable
+            // by the crash suite.
+            if cfg.faults_enabled || args.has_flag("chaos") {
+                crate::util::faults::set_enabled(true);
+                for (name, value) in &cfg.faults {
+                    if let Err(why) = crate::util::faults::arm(name, value) {
+                        eprintln!("warning: [faults] {name}: {why}");
+                    }
+                }
+                eprintln!("fault injection ENABLED (chaos verbs accepted; not for production)");
             }
+            if let Some(path) = args.get("restore") {
+                let p = std::path::Path::new(path);
+                if p.is_dir() {
+                    // A directory is a checkpoint ring: recover from the
+                    // newest decodable segment (torn tails a crash left
+                    // behind are skipped, not fatal).
+                    match crate::wire::discover_latest(p)? {
+                        Some(d) => {
+                            let routes = d.segment.routes.len();
+                            let n = fabric.restore_checkpoint(&d.segment)?;
+                            server.operator().note_restored(n);
+                            server
+                                .operator()
+                                .note_checkpoint_restore(d.segment.generation, d.skipped);
+                            println!(
+                                "restored {n} session(s) (+{routes} route override(s)) from \
+                                 checkpoint generation {} ({}; {} torn segment(s) skipped)",
+                                d.segment.generation,
+                                d.path.display(),
+                                d.skipped
+                            );
+                        }
+                        None => println!("checkpoint ring {path} is empty; starting fresh"),
+                    }
+                } else {
+                    let snap = crate::wire::SnapshotFile::read_from(p)?;
+                    let routes = snap.routes.len();
+                    let n = fabric.restore(&snap)?;
+                    server.operator().note_restored(n);
+                    println!(
+                        "restored {n} session(s) (+{routes} route override(s)) from {path}"
+                    );
+                }
+            }
+            // Continuous incremental checkpointing (crash safety): a
+            // background thread snapshots exported lane state into a
+            // ring of HRDS v3 segments at a bounded cadence.
+            let ckpt_dir =
+                args.get("ckpt-dir").map(PathBuf::from).or_else(|| cfg.ckpt_dir.clone());
+            let checkpointer = match ckpt_dir {
+                Some(dir) => {
+                    let mut ccfg = crate::sched::CheckpointConfig::new(dir.clone());
+                    ccfg.interval = std::time::Duration::from_millis(
+                        args.get_u64("ckpt-interval-ms", cfg.ckpt_interval_ms)?.max(1),
+                    );
+                    ccfg.ring = args.get_usize("ckpt-ring", cfg.ckpt_ring)?.max(2);
+                    println!(
+                        "checkpointing to {} every {}ms (ring of {})",
+                        dir.display(),
+                        ccfg.interval.as_millis(),
+                        ccfg.ring
+                    );
+                    Some(crate::sched::Checkpointer::start(fabric.clone(), ccfg)?)
+                }
+                None => None,
+            };
             println!(
                 "serving fabric backend={} datapath={} shards={} batch={} deadline={}us \
                  rebalance={} wire<=v{} credits={} trace={} on {} \
@@ -532,6 +609,11 @@ fn serve_tcp(args: &Args) -> Result<i32> {
                 server.local_addr()?
             );
             let snap = server.run_fabric(fabric)?;
+            // Stop AFTER serving ends: the final round makes the newest
+            // segment cover everything the fabric settled.
+            if let Some(c) = checkpointer {
+                c.stop();
+            }
             println!(
                 "served {} requests (shed {}, p50 {:.1} us, p99 {:.1} us, \
                  deadline miss rate {:.4}, sessions migrated {})",
@@ -544,6 +626,10 @@ fn serve_tcp(args: &Args) -> Result<i32> {
             anyhow::ensure!(
                 args.get("restore").is_none(),
                 "--restore needs the fabric server (the serial path keeps no session state)"
+            );
+            anyhow::ensure!(
+                args.get("ckpt-dir").is_none() && cfg.ckpt_dir.is_none(),
+                "--ckpt-dir needs the fabric server (the serial path keeps no session state)"
             );
             if cfg.shards >= 1 && datapath.is_none() {
                 eprintln!(
@@ -606,6 +692,7 @@ fn loadgen(args: &Args) -> Result<i32> {
     }
     scfg.seed = args.get_u64("seed", scfg.seed)?;
     scfg.trace_sample = args.get_usize("trace-sample", scfg.trace_sample)?;
+    scfg.ckpt_ab = scfg.ckpt_ab && !args.has_flag("no-ckpt-ab");
     scfg.multi_model = scfg.multi_model && !args.has_flag("no-multi-model");
     if let Some(id) = args.get("model") {
         scfg.multi_model = true;
@@ -975,6 +1062,222 @@ fn parse_reload_set(spec: &str) -> Result<Vec<(String, String)>> {
     }
     anyhow::ensure!(!set.is_empty(), "reload needs at least one knob=value in --set");
     Ok(set)
+}
+
+/// `hrd chaos [--set knob=value[,...]]`: arm, disarm, or query the
+/// fault-injection registry on a running fabric server.  Without
+/// `--set` it just reports what is armed.  Exit 0 only if every knob
+/// applied; rejections are listed and the exit code is 1.  A server not
+/// started with `--chaos` (or `[faults] enabled = true`) refuses the
+/// whole verb, which surfaces here as an error.
+fn chaos_cmd(args: &Args) -> Result<i32> {
+    let set = match args.get("set") {
+        Some(spec) => parse_reload_set(spec)?,
+        None => Vec::new(),
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let mut client = connect_with_backoff(addr)?;
+    let reply = client.chaos(&set)?;
+    let mut clean = true;
+    let dump = |label: &str, key: &str, clean: &mut bool| {
+        if let Some(m) = reply.get(key).and_then(|v| v.as_obj()) {
+            for (k, v) in m {
+                let v = match v {
+                    crate::util::Json::Str(s) => s.clone(),
+                    other => other.to_string(),
+                };
+                println!("{label} {k} = {v}");
+                if key == "rejected" {
+                    *clean = false;
+                }
+            }
+        }
+    };
+    dump("armed   ", "armed", &mut clean);
+    dump("REJECTED", "rejected", &mut clean);
+    if reply.get("armed").and_then(|v| v.as_obj()).map_or(true, |m| m.is_empty()) {
+        println!("no faults armed");
+    }
+    Ok(if clean { 0 } else { 1 })
+}
+
+/// Deterministic feature window for `hrd pump`: FNV-1a over the session
+/// name seeds the stream, splitmix64 whitens (seed, seq, lane) into
+/// samples in [-1, 1) on an exact 2^-23 grid.  Same (session, seq) =>
+/// bit-identical window, in any process, in any run — the property the
+/// crash-recovery transcript comparison rests on.
+fn pump_window(session: &str, seq: u64) -> [f32; crate::arch::INPUT_SIZE] {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in session.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut w = [0f32; crate::arch::INPUT_SIZE];
+    for (i, slot) in w.iter_mut().enumerate() {
+        let mut z = h
+            ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ (i as u64).wrapping_mul(0xd134_2543_de82_ef95);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        *slot = ((z >> 40) as f32) / (1u64 << 24) as f32 * 2.0 - 1.0;
+    }
+    w
+}
+
+/// `hrd pump`: the replay-driven load half of the crash-recovery gate.
+///
+/// Streams `--count` deterministic windows (see [`pump_window`]) through
+/// a [`PipelinedClient`] with the replay buffer on, records every
+/// estimate as its exact f64 bit pattern keyed by seq, and — when the
+/// server dies mid-stream — resyncs with bounded backoff: reconnect
+/// under the same session name, ask for the durable watermark, replay
+/// the uncovered tail, continue.  The finished transcript is bit-
+/// identical to an uninterrupted run's if and only if checkpoint
+/// recovery preserved the stream, which `--compare A,B` then asserts.
+///
+/// Exit codes: 0 complete, 1 shed/diverged, 3 server never came back.
+fn pump_cmd(args: &Args) -> Result<i32> {
+    if let Some(spec) = args.get("compare") {
+        return pump_compare(spec);
+    }
+    let addr = args.get_or("addr", "127.0.0.1:7433").to_string();
+    let session = match args.get("session") {
+        Some(s) => s.to_string(),
+        None => anyhow::bail!("pump needs --session NAME (replay requires a named stream)"),
+    };
+    let count = args.get_u64("count", 512)?.max(1);
+    let opts = crate::wire::PipelineOptions {
+        // Modest in-flight bound: pump measures recovery, not
+        // saturation — a shed window would poison the transcript.
+        inflight_cap: 8,
+        replay: true,
+        ..Default::default()
+    };
+    let mut client = match crate::wire::PipelinedClient::connect(&addr, Some(&session), opts) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("pump: cannot reach {addr}: {e:#}");
+            return Ok(3);
+        }
+    };
+    let mut done: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    let mut next: u64 = 1;
+    let mut resyncs: u64 = 0;
+    let mut resent_total: usize = 0;
+    while (done.len() as u64) < count {
+        // Top up the pipe; `Ok(None)` just means no credit right now.
+        let fill = loop {
+            if next > count {
+                break Ok(());
+            }
+            let w = pump_window(&session, next);
+            match client.submit_within(&w, None, std::time::Duration::from_millis(10)) {
+                Ok(Some(_)) => next += 1,
+                Ok(None) => break Ok(()),
+                Err(e) => break Err(e),
+            }
+        };
+        let dead = match fill {
+            Err(_) => true,
+            Ok(()) => match client.recv(Some(std::time::Duration::from_millis(250))) {
+                Ok(crate::wire::PipeEvent::Completion(rec)) => {
+                    if rec.shed {
+                        eprintln!("pump: window {} shed — transcript void (lower --count or raise server capacity)", rec.seq);
+                        return Ok(1);
+                    }
+                    done.insert(rec.seq, rec.estimate.to_bits());
+                    false
+                }
+                Ok(crate::wire::PipeEvent::Error { seq, msg, .. }) if seq != 0 => {
+                    eprintln!("pump: window {seq} failed: {msg} — transcript void");
+                    return Ok(1);
+                }
+                Ok(_) => false,
+                Err(e) if e.to_string().contains("timed out") => false,
+                Err(_) => true,
+            },
+        };
+        if dead {
+            // The server went away mid-stream: resync with the same
+            // backoff schedule the operator verbs use.
+            let mut recovered = false;
+            let mut last: Option<anyhow::Error> = None;
+            for attempt in 0..RECONNECT_TRIES {
+                std::thread::sleep(RECONNECT_BASE * 2u32.pow(attempt));
+                match client.resync() {
+                    Ok((durable, resent)) => {
+                        resyncs += 1;
+                        resent_total += resent;
+                        eprintln!(
+                            "pump: resynced (durable watermark {durable}, {resent} window(s) replayed)"
+                        );
+                        recovered = true;
+                        break;
+                    }
+                    Err(e) => {
+                        if e.to_string().contains("replay gap") {
+                            // Not a connectivity problem: the streams
+                            // can never converge.  Fail loudly now.
+                            return Err(e);
+                        }
+                        last = Some(e);
+                    }
+                }
+            }
+            if !recovered {
+                eprintln!(
+                    "pump: server never came back: {:#}",
+                    last.unwrap_or_else(|| anyhow::anyhow!("unknown"))
+                );
+                return Ok(3);
+            }
+        }
+    }
+    let mut text = String::with_capacity(done.len() * 24);
+    for (seq, bits) in &done {
+        text.push_str(&format!("{seq} {bits:016x}\n"));
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!(
+                "pump: {count} window(s) -> {path} ({resyncs} resync(s), {resent_total} replayed, durable {})",
+                client.durable_seq()
+            );
+        }
+        None => print!("{text}"),
+    }
+    Ok(0)
+}
+
+/// `hrd pump --compare A,B`: assert two pump transcripts are
+/// bit-identical, printing the first divergent line otherwise.
+fn pump_compare(spec: &str) -> Result<i32> {
+    let (a, b) = spec
+        .split_once(',')
+        .ok_or_else(|| anyhow::anyhow!("--compare wants two transcripts: A,B"))?;
+    let ta = std::fs::read_to_string(a.trim()).with_context(|| format!("reading {a}"))?;
+    let tb = std::fs::read_to_string(b.trim()).with_context(|| format!("reading {b}"))?;
+    if ta == tb {
+        println!(
+            "transcripts identical ({} line(s))",
+            ta.lines().count()
+        );
+        return Ok(0);
+    }
+    for (i, (la, lb)) in ta.lines().zip(tb.lines()).enumerate() {
+        if la != lb {
+            eprintln!("transcripts DIVERGE at line {}:\n  {a}: {la}\n  {b}: {lb}", i + 1);
+            return Ok(1);
+        }
+    }
+    eprintln!(
+        "transcripts DIVERGE in length: {a} has {} line(s), {b} has {}",
+        ta.lines().count(),
+        tb.lines().count()
+    );
+    Ok(1)
 }
 
 /// `hrd restart-check`: pre-restart sanity.  With `--snapshot <file>`

@@ -132,6 +132,21 @@ pub struct ExperimentConfig {
     /// re-applied on SIGHUP.  Unknown or restart-only keys are rejected
     /// per knob, never fatally.  Vocabulary in `docs/OPERATIONS.md`.
     pub reload: Vec<(String, String)>,
+    /// Checkpoint-ring directory (`[checkpoint] dir` / `serve-tcp
+    /// --ckpt-dir`); unset leaves continuous checkpointing off.  See
+    /// `docs/OPERATIONS.md`.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Checkpoint cadence in milliseconds (`[checkpoint] interval_ms`).
+    pub ckpt_interval_ms: u64,
+    /// Segments kept in the checkpoint ring (`[checkpoint] ring`).
+    pub ckpt_ring: usize,
+    /// Master switch for the fault-injection registry (`[faults]
+    /// enabled` / `serve-tcp --chaos`).  Off by default: the chaos wire
+    /// verb is refused unless the operator opted in at startup.
+    pub faults_enabled: bool,
+    /// Faults armed at startup (`[faults]` `arm.<name> = value`), e.g.
+    /// `arm.kill.ckpt.post_tmp = 1`.  Applied only when enabled.
+    pub faults: Vec<(String, String)>,
 }
 
 impl Default for ExperimentConfig {
@@ -165,6 +180,11 @@ impl Default for ExperimentConfig {
             tenant_quotas: Vec::new(),
             tenant_map: Vec::new(),
             reload: Vec::new(),
+            ckpt_dir: None,
+            ckpt_interval_ms: 100,
+            ckpt_ring: 4,
+            faults_enabled: false,
+            faults: Vec::new(),
         }
     }
 }
@@ -252,6 +272,23 @@ impl ExperimentConfig {
                         .map(|knob| (knob.to_string(), toml_value_string(v)))
                 })
                 .collect(),
+            ckpt_dir: doc
+                .get("checkpoint.dir")
+                .and_then(|v| v.as_str())
+                .map(PathBuf::from),
+            ckpt_interval_ms: doc
+                .get_i64("checkpoint.interval_ms", d.ckpt_interval_ms as i64)
+                .max(1) as u64,
+            ckpt_ring: doc.get_i64("checkpoint.ring", d.ckpt_ring as i64).max(2) as usize,
+            faults_enabled: doc.get_bool("faults.enabled", d.faults_enabled),
+            faults: doc
+                .entries
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_prefix("faults.arm.")
+                        .map(|name| (name.to_string(), toml_value_string(v)))
+                })
+                .collect(),
         }
     }
 }
@@ -335,6 +372,16 @@ map.aux = "best-effort"
 queue_depth = 128
 shed = "evict-farthest"
 balance.hot_queue = 6
+
+[checkpoint]
+dir = "/tmp/hrd-ckpt"
+interval_ms = 50
+ring = 6
+
+[faults]
+enabled = true
+arm.ckpt.torn = 1
+arm.kill.ckpt.post_tmp = 1
 "#,
         )
         .unwrap();
@@ -383,6 +430,22 @@ balance.hot_queue = 6
         );
         assert_eq!(c.tenant_map, vec![("aux".to_string(), "best-effort".to_string())]);
         assert_eq!(ExperimentConfig::default().tenant_default_quota, 0, "unlimited by default");
+        assert_eq!(c.ckpt_dir.as_deref(), Some(std::path::Path::new("/tmp/hrd-ckpt")));
+        assert_eq!(c.ckpt_interval_ms, 50);
+        assert_eq!(c.ckpt_ring, 6);
+        assert!(ExperimentConfig::default().ckpt_dir.is_none(), "checkpointing is opt-in");
+        assert_eq!(ExperimentConfig::default().ckpt_interval_ms, 100);
+        assert_eq!(ExperimentConfig::default().ckpt_ring, 4);
+        assert!(c.faults_enabled, "[faults] enabled opts into chaos");
+        assert!(!ExperimentConfig::default().faults_enabled, "chaos is opt-in");
+        assert_eq!(
+            c.faults,
+            vec![
+                ("ckpt.torn".to_string(), "1".to_string()),
+                ("kill.ckpt.post_tmp".to_string(), "1".to_string()),
+            ],
+            "BTreeMap order; kill.<point> names keep their dots"
+        );
     }
 
     #[test]

@@ -110,6 +110,9 @@ enum Request {
     Drain,
     /// Live reload of the `[reload]`-able knob subset.
     Reload { set: Vec<(String, String)> },
+    /// Fault-injection control: arm/disarm chaos knobs on a server
+    /// started with faults enabled (fabric mode; `docs/OPERATIONS.md`).
+    Chaos { set: Vec<(String, String)> },
     Shutdown,
 }
 
@@ -128,6 +131,13 @@ fn parse_request(line: &str) -> Result<Request> {
                 set: reload_set_of(
                     json.get("set").context("reload needs a \"set\" object of knobs")?,
                 )?,
+            },
+            "chaos" => Request::Chaos {
+                set: match json.get("set") {
+                    Some(obj) => reload_set_of(obj)?,
+                    // No set: report the armed faults without changes.
+                    None => Vec::new(),
+                },
             },
             "shutdown" => Request::Shutdown,
             other => anyhow::bail!("unknown cmd {other}"),
@@ -523,6 +533,20 @@ fn prometheus_text(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -> Str
             latest: mi.latest,
         })
         .collect();
+    let ckpt = fabric.checkpoint_board().is_active().then(|| {
+        let s = fabric.checkpoint_board().metrics().snapshot();
+        crate::obs::CkptLine {
+            generations: s.generations,
+            errors: s.errors,
+            torn: s.torn,
+            lost_sessions: s.lost_sessions,
+            last_generation: s.last_generation,
+            last_sessions: s.last_sessions,
+            last_bytes: s.last_bytes,
+            last_write_us: s.last_write_us,
+            durable_sessions: fabric.durable_map().len() as u64,
+        }
+    });
     render_prometheus(
         &fabric.snapshot(),
         &obs.stage_lines(),
@@ -531,6 +555,7 @@ fn prometheus_text(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -> Str
         Some(&wstats.line()),
         Some(&op.line()),
         Some(&models),
+        ckpt.as_ref(),
     )
 }
 
@@ -551,6 +576,13 @@ pub struct OperatorCtx {
     drained_sessions: AtomicU64,
     restored_sessions: AtomicU64,
     reloads: AtomicU64,
+    /// Crash recoveries: `--restore` from a checkpoint ring (as opposed
+    /// to a drain snapshot).  Generation is the segment restored from.
+    ckpt_restores: AtomicU64,
+    ckpt_restored_generation: AtomicU64,
+    /// Ring segments that failed CRC/decode and were skipped during
+    /// recovery discovery (torn tails a crash left behind).
+    ckpt_skipped_segments: AtomicU64,
 }
 
 impl OperatorCtx {
@@ -562,6 +594,15 @@ impl OperatorCtx {
     /// Record a completed `--restore` so `status` reports it.
     pub fn note_restored(&self, sessions: usize) {
         self.restored_sessions.fetch_add(sessions as u64, Ordering::Relaxed);
+    }
+
+    /// Record a crash recovery from the checkpoint ring: which
+    /// generation won discovery and how many torn segments were skipped
+    /// on the way to it.
+    pub fn note_checkpoint_restore(&self, generation: u64, skipped: usize) {
+        self.ckpt_restores.fetch_add(1, Ordering::Relaxed);
+        self.ckpt_restored_generation.store(generation, Ordering::Relaxed);
+        self.ckpt_skipped_segments.fetch_add(skipped as u64, Ordering::Relaxed);
     }
 
     /// The `"operator"` object of `status` replies.
@@ -579,6 +620,18 @@ impl OperatorCtx {
                 Json::Num(self.restored_sessions.load(Ordering::Relaxed) as f64),
             ),
             ("reloads", Json::Num(self.reloads.load(Ordering::Relaxed) as f64)),
+            (
+                "ckpt_restores",
+                Json::Num(self.ckpt_restores.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "ckpt_restored_generation",
+                Json::Num(self.ckpt_restored_generation.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "ckpt_skipped_segments",
+                Json::Num(self.ckpt_skipped_segments.load(Ordering::Relaxed) as f64),
+            ),
         ];
         if let Some(p) = &self.snapshot_path {
             fields.push(("snapshot_path", Json::Str(p.display().to_string())));
@@ -609,8 +662,38 @@ fn operator_status_json(fabric: &Fabric, wstats: &WireStats, op: &OperatorCtx) -
         m.insert("stages".to_string(), obs.stages_json());
         m.insert("operator".to_string(), op.to_json(fabric));
         m.insert("models".to_string(), models_json(fabric));
+        m.insert("checkpoint".to_string(), checkpoint_json(fabric));
+        let faults = crate::util::faults::armed();
+        if !faults.is_empty() {
+            m.insert(
+                "faults".to_string(),
+                Json::Obj(faults.into_iter().map(|(k, v)| (k, Json::Str(v))).collect()),
+            );
+        }
     }
     j.to_string()
+}
+
+/// The `"checkpoint"` object of `status` replies: the background
+/// checkpointer's lifetime counters and last-segment shape (all zeros
+/// with `active = false` when checkpointing is off).
+fn checkpoint_json(fabric: &Fabric) -> Json {
+    let s = fabric.checkpoint_board().metrics().snapshot();
+    Json::obj(vec![
+        ("active", Json::Bool(fabric.checkpoint_board().is_active())),
+        ("generations", Json::Num(s.generations as f64)),
+        ("errors", Json::Num(s.errors as f64)),
+        ("torn", Json::Num(s.torn as f64)),
+        ("stale_shards", Json::Num(s.stale_shards as f64)),
+        ("lost_sessions", Json::Num(s.lost_sessions as f64)),
+        ("last_generation", Json::Num(s.last_generation as f64)),
+        ("last_sessions", Json::Num(s.last_sessions as f64)),
+        ("last_bytes", Json::Num(s.last_bytes as f64)),
+        ("last_write_us", Json::Num(s.last_write_us as f64)),
+        ("last_unix_ms", Json::Num(s.last_unix_ms as f64)),
+        ("pruned", Json::Num(s.pruned as f64)),
+        ("durable_sessions", Json::Num(fabric.durable_map().len() as f64)),
+    ])
 }
 
 /// The loaded-models table of a `status` reply: every `(id, version)`
@@ -681,6 +764,52 @@ fn reload_reply_json(fabric: &Fabric, op: &OperatorCtx, set: &[(String, String)]
         ("applied", obj(&outcome.applied)),
         ("rejected", obj(&outcome.rejected)),
         ("clean", Json::Bool(outcome.is_clean())),
+    ])
+    .to_string()
+}
+
+/// The `chaos` verb body: arm/disarm fault-injection knobs.  Refused
+/// outright unless the server was started with faults enabled
+/// (`--chaos` / `[faults] enabled`), so a production deployment cannot
+/// be chaos'd by a stray client.  Vocabulary (see `util::faults`):
+/// `knob=value` arms, `knob=off` disarms, `all=off` disarms everything;
+/// an empty set just reports the armed faults.
+fn chaos_reply_json(set: &[(String, String)]) -> String {
+    use crate::util::faults;
+    let armed_json = || {
+        Json::Obj(
+            faults::armed().into_iter().map(|(k, v)| (k, Json::Str(v))).collect(),
+        )
+    };
+    if !faults::enabled() {
+        return Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::Str(
+                    "fault injection disabled (start the server with --chaos or \
+                     [faults] enabled = true)"
+                        .to_string(),
+                ),
+            ),
+        ])
+        .to_string();
+    }
+    let mut rejected: Vec<(String, Json)> = Vec::new();
+    for (k, v) in set {
+        if k == "all" && v == "off" {
+            faults::clear_all();
+        } else if v == "off" {
+            faults::clear(k);
+        } else if let Err(why) = faults::arm(k, v) {
+            rejected.push((k.clone(), Json::Str(why)));
+        }
+    }
+    let clean = rejected.is_empty();
+    Json::obj(vec![
+        ("ok", Json::Bool(clean)),
+        ("armed", armed_json()),
+        ("rejected", Json::Obj(rejected.into_iter().collect())),
     ])
     .to_string()
 }
@@ -882,13 +1011,14 @@ impl Server {
                 | Request::Prometheus
                 | Request::Status
                 | Request::Drain
-                | Request::Reload { .. } => {
+                | Request::Reload { .. }
+                | Request::Chaos { .. } => {
                     let _ = reply.send(
                         Json::obj(vec![(
                             "error",
                             Json::Str(
-                                "tracedump/prometheus/status/drain/reload require the \
-                                 fabric server (serve-tcp)"
+                                "tracedump/prometheus/status/drain/reload/chaos require \
+                                 the fabric server (serve-tcp)"
                                     .to_string(),
                             ),
                         )])
@@ -1157,6 +1287,7 @@ fn handle_fabric_json(
             }
             Ok(Request::Status) => operator_status_json(&fabric, &wstats, &op),
             Ok(Request::Reload { set }) => reload_reply_json(&fabric, &op, &set),
+            Ok(Request::Chaos { set }) => chaos_reply_json(&set),
             Ok(Request::Drain) => match drain_to_snapshot(&fabric, &op) {
                 // Terminal: the loop's shutdown check below breaks AFTER
                 // this reply is written, so the client always sees the
@@ -1356,7 +1487,8 @@ fn handle_fabric_binary(
                             .and_then(|pending| pending.wait());
                             match outcome {
                                 Ok(mut c) => {
-                                    writer.send_completion(&completion_rec(s.seq, &c))?;
+                                    let durable = fabric.durable_seq(c.session);
+                                    writer.send_completion(&completion_rec(s.seq, &c, durable))?;
                                     c.trace.mark(Stage::CompletionWritten);
                                     fabric.obs().observe_completion(
                                         &c.trace,
@@ -1408,7 +1540,9 @@ fn handle_fabric_binary(
                                 let seq = b.base_seq.wrapping_add(i as u64);
                                 match pending.and_then(|p| p.wait()) {
                                     Ok(c) => {
-                                        recs.push(completion_rec(seq, &c));
+                                        // Batch records never carry the
+                                        // durable tail (pinned stride).
+                                        recs.push(completion_rec(seq, &c, 0));
                                         done.push(c);
                                     }
                                     Err(_) => recs.push(CompletionRec::shed(seq)),
@@ -1477,6 +1611,29 @@ fn handle_fabric_binary(
                     Err(e) => writer.send_error(0, false, &format!("bad reload frame: {e:#}"))?,
                 }
             }
+            Recv::Frame(FrameType::SeqQuery, payload) => {
+                // Durable-watermark probe: the highest client seq covered
+                // by a fsync'd checkpoint segment (0 = never covered /
+                // checkpointing off).  The resync path of a reconnecting
+                // pipelined client asks this before replaying its tail.
+                match wire::frame::decode_seq_query(payload) {
+                    Err(e) => writer.send_error(0, false, &format!("bad seq-query frame: {e:#}"))?,
+                    Ok(sess) => match hash_of(sess) {
+                        Err(e) => writer.send_error(0, false, &e.to_string())?,
+                        Ok(hash) => writer.send_seq_reply(fabric.durable_seq(hash))?,
+                    },
+                }
+            }
+            Recv::Frame(FrameType::Chaos, payload) => {
+                let set = std::str::from_utf8(payload)
+                    .map_err(anyhow::Error::from)
+                    .and_then(Json::parse)
+                    .and_then(|j| reload_set_of(&j));
+                match set {
+                    Ok(set) => writer.send_chaos_json(&chaos_reply_json(&set))?,
+                    Err(e) => writer.send_error(0, false, &format!("bad chaos frame: {e:#}"))?,
+                }
+            }
             Recv::Frame(FrameType::Shutdown, _) => {
                 shutdown.store(true, Ordering::SeqCst);
                 writer.send_empty(FrameType::Ok)?;
@@ -1542,6 +1699,10 @@ enum V2Out {
     Drain(String),
     /// A finished reload outcome (pre-rendered on the reader thread).
     Reload(String),
+    /// A chaos (fault-injection) outcome (pre-rendered).
+    Chaos(String),
+    /// A durable-watermark reply for a `SeqQuery` probe.
+    SeqReply(u64),
     /// An error frame; `refund` credits are returned after writing (a
     /// submit that failed validation after its credit was taken).
     Err { seq: u64, shed: bool, msg: String, refund: u32 },
@@ -1608,10 +1769,18 @@ fn run_binary_v2(
                 let refund = match item {
                     V2Out::Done(seq, result) => {
                         let rec = match &result {
-                            Ok(c) => completion_rec(seq, c),
+                            Ok(c) => completion_rec(seq, c, fabric.durable_seq(c.session)),
                             Err(_) => CompletionRec::shed(seq),
                         };
-                        let _ = writer.send_completion(&rec);
+                        // Chaos knob `drop.completion`: discard the frame
+                        // instead of writing it.  The credit still returns
+                        // below — recovering the lost window is the
+                        // client replay buffer's job, not flow control's.
+                        if crate::util::faults::take("drop.completion") {
+                            log::warn!("[faults] dropping completion seq={seq}");
+                        } else {
+                            let _ = writer.send_completion(&rec);
+                        }
                         if let Ok(mut c) = result {
                             c.trace.mark(Stage::CompletionWritten);
                             fabric.obs().observe_completion(
@@ -1661,6 +1830,14 @@ fn run_binary_v2(
                     }
                     V2Out::Reload(json) => {
                         let _ = writer.send_reload_json(&json);
+                        0
+                    }
+                    V2Out::Chaos(json) => {
+                        let _ = writer.send_chaos_json(&json);
+                        0
+                    }
+                    V2Out::SeqReply(watermark) => {
+                        let _ = writer.send_seq_reply(watermark);
                         0
                     }
                     V2Out::Err { seq, shed, msg, refund } => {
@@ -1963,6 +2140,47 @@ fn run_binary_v2(
                         }
                     }
                 }
+                Recv::Frame(FrameType::SeqQuery, payload) => {
+                    match wire::frame::decode_seq_query(payload) {
+                        Err(e) => {
+                            let msg = format!("bad seq-query frame: {e:#}");
+                            let _ =
+                                out_tx.send(V2Out::Err { seq: 0, shed: false, msg, refund: 0 });
+                        }
+                        Ok(sess) => match wire_session_hash(sess, &conn) {
+                            Err(e) => {
+                                let _ = out_tx.send(V2Out::Err {
+                                    seq: 0,
+                                    shed: false,
+                                    msg: e.to_string(),
+                                    refund: 0,
+                                });
+                            }
+                            Ok(hash) => {
+                                let _ = out_tx.send(V2Out::SeqReply(fabric.durable_seq(hash)));
+                            }
+                        },
+                    }
+                }
+                Recv::Frame(FrameType::Chaos, payload) => {
+                    let set = std::str::from_utf8(payload)
+                        .map_err(anyhow::Error::from)
+                        .and_then(Json::parse)
+                        .and_then(|j| reload_set_of(&j));
+                    match set {
+                        Ok(set) => {
+                            let _ = out_tx.send(V2Out::Chaos(chaos_reply_json(&set)));
+                        }
+                        Err(e) => {
+                            let _ = out_tx.send(V2Out::Err {
+                                seq: 0,
+                                shed: false,
+                                msg: format!("bad chaos frame: {e:#}"),
+                                refund: 0,
+                            });
+                        }
+                    }
+                }
                 Recv::Frame(FrameType::Shutdown, _) => {
                     shutdown.store(true, Ordering::SeqCst);
                     graceful = true;
@@ -2010,8 +2228,10 @@ fn run_binary_v2(
     loop_result
 }
 
-/// Map a fabric completion onto the wire record.
-fn completion_rec(seq: u64, c: &crate::sched::Completion) -> CompletionRec {
+/// Map a fabric completion onto the wire record.  `durable_seq` is the
+/// session's checkpoint watermark at completion time (0 = checkpointing
+/// off — the record then keeps the pinned 29-byte v1 layout).
+fn completion_rec(seq: u64, c: &crate::sched::Completion, durable_seq: u64) -> CompletionRec {
     CompletionRec {
         seq,
         estimate: c.estimate,
@@ -2020,6 +2240,7 @@ fn completion_rec(seq: u64, c: &crate::sched::Completion) -> CompletionRec {
         shed: false,
         shard: c.shard.min(u16::MAX as usize - 1) as u16,
         lane: c.lane.min(u16::MAX as usize - 1) as u16,
+        durable_seq,
     }
 }
 
@@ -2177,6 +2398,23 @@ impl Client {
         );
         let msg = Json::obj(vec![
             ("cmd", Json::Str("reload".into())),
+            ("set", set_obj),
+        ])
+        .to_string();
+        self.round_trip(&msg)
+    }
+
+    /// Arm/disarm fault-injection knobs (`knob=value` arms, `knob=off`
+    /// disarms, `all=off` clears; empty set = query).  A server started
+    /// without chaos enabled refuses with an `"error"` reply, which
+    /// surfaces here as `Err` — per-knob rejections come back under
+    /// `"rejected"` instead.
+    pub fn chaos(&mut self, set: &[(String, String)]) -> Result<Json> {
+        let set_obj = Json::Obj(
+            set.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        let msg = Json::obj(vec![
+            ("cmd", Json::Str("chaos".into())),
             ("set", set_obj),
         ])
         .to_string();

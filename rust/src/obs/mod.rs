@@ -25,7 +25,7 @@ mod recorder;
 mod registry;
 mod trace;
 
-pub use prom::{render_prometheus, ModelLine, OperatorLine, WireLine};
+pub use prom::{render_prometheus, CkptLine, ModelLine, OperatorLine, WireLine};
 pub use recorder::{Recorder, TraceRec};
 pub use registry::{trace_rec_json, ObsConfig, Registry, StageLine};
 pub use trace::{ReqTrace, Stage, N_SPANS, N_STAGES, SPAN_NAMES};

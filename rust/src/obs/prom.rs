@@ -31,6 +31,22 @@ pub struct OperatorLine {
     pub reloads: u64,
 }
 
+/// Background-checkpointer lifetime counters (crash-safe serving; see
+/// `docs/OPERATIONS.md`).  Rendered only when checkpointing is on.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CkptLine {
+    pub generations: u64,
+    pub errors: u64,
+    pub torn: u64,
+    pub lost_sessions: u64,
+    pub last_generation: u64,
+    pub last_sessions: u64,
+    pub last_bytes: u64,
+    pub last_write_us: u64,
+    /// Sessions with a nonzero durable watermark (replay-coverable).
+    pub durable_sessions: u64,
+}
+
 /// One loaded model version's registry line (multi-model serving; see
 /// `docs/MODELS.md`).
 #[derive(Debug, Clone, Default)]
@@ -68,6 +84,7 @@ pub fn render_prometheus(
     wire: Option<&WireLine>,
     operator: Option<&OperatorLine>,
     models: Option<&[ModelLine]>,
+    ckpt: Option<&CkptLine>,
 ) -> String {
     let mut o = String::with_capacity(4096);
     head(&mut o, "hrd_uptime_seconds", "gauge", "Seconds since the serving fabric came up.");
@@ -225,6 +242,57 @@ pub fn render_prometheus(
             let _ = writeln!(o, "{name} {v}");
         }
     }
+    if let Some(c) = ckpt {
+        for (name, kind, help, v) in [
+            (
+                "hrd_ckpt_generations_total",
+                "counter",
+                "Checkpoint rounds attempted.",
+                c.generations,
+            ),
+            ("hrd_ckpt_errors_total", "counter", "Checkpoint rounds that failed.", c.errors),
+            (
+                "hrd_ckpt_torn_writes_total",
+                "counter",
+                "Injected torn segment writes (chaos).",
+                c.torn,
+            ),
+            (
+                "hrd_ckpt_lost_sessions_total",
+                "counter",
+                "Sessions skipped for missing state (unchanged but uncached).",
+                c.lost_sessions,
+            ),
+            (
+                "hrd_ckpt_last_generation",
+                "gauge",
+                "Generation of the newest durable segment.",
+                c.last_generation,
+            ),
+            (
+                "hrd_ckpt_last_sessions",
+                "gauge",
+                "Sessions in the newest durable segment.",
+                c.last_sessions,
+            ),
+            ("hrd_ckpt_last_bytes", "gauge", "Size of the newest durable segment.", c.last_bytes),
+            (
+                "hrd_ckpt_last_write_microseconds",
+                "gauge",
+                "Encode+fsync+rename time of the newest durable segment.",
+                c.last_write_us,
+            ),
+            (
+                "hrd_ckpt_durable_sessions",
+                "gauge",
+                "Sessions whose durable watermark is nonzero.",
+                c.durable_sessions,
+            ),
+        ] {
+            head(&mut o, name, kind, help);
+            let _ = writeln!(o, "{name} {v}");
+        }
+    }
     o
 }
 
@@ -274,8 +342,16 @@ mod tests {
         let wire = WireLine { bytes_in: 100, bytes_out: 200, frames_in: 3, frames_out: 4 };
         let operator =
             OperatorLine { drains: 1, drained_sessions: 5, restored_sessions: 5, reloads: 2 };
-        let got =
-            render_prometheus(&snap(), &stages, 1_500_000, 9, Some(&wire), Some(&operator), None);
+        let got = render_prometheus(
+            &snap(),
+            &stages,
+            1_500_000,
+            9,
+            Some(&wire),
+            Some(&operator),
+            None,
+            None,
+        );
         let want = "\
 # HELP hrd_uptime_seconds Seconds since the serving fabric came up.
 # TYPE hrd_uptime_seconds gauge
@@ -360,12 +436,13 @@ hrd_reloads_total 2
 
     #[test]
     fn wire_and_operator_sections_are_optional() {
-        let got = render_prometheus(&snap(), &[], 0, 1, None, None, None);
+        let got = render_prometheus(&snap(), &[], 0, 1, None, None, None, None);
         assert!(!got.contains("hrd_wire_"));
         assert!(!got.contains("hrd_drains_"));
         assert!(!got.contains("hrd_reloads_"));
         assert!(!got.contains("hrd_tenant_"), "no tenants -> no tenant section");
         assert!(!got.contains("hrd_model_"), "no models -> no model section");
+        assert!(!got.contains("hrd_ckpt_"), "checkpointing off -> no ckpt section");
         assert!(got.contains("hrd_uptime_seconds 0\n"));
         assert!(got.ends_with('\n'));
     }
@@ -389,7 +466,7 @@ hrd_reloads_total 2
             ModelLine { id: "dropbear".into(), version: 1, residency: 1, latest: false },
             ModelLine { id: "aux".into(), version: 1, residency: 2, latest: true },
         ];
-        let got = render_prometheus(&s, &[], 0, 1, None, None, Some(&models));
+        let got = render_prometheus(&s, &[], 0, 1, None, None, Some(&models), None);
         for line in [
             "hrd_tenant_admitted_total{tenant=\"dropbear\"} 9",
             "hrd_tenant_quota_shed_total{tenant=\"aux\"} 2",
@@ -401,6 +478,35 @@ hrd_reloads_total 2
             "hrd_model_residency{model=\"aux\",version=\"1\"} 2",
             "hrd_model_latest{model=\"dropbear\",version=\"2\"} 1",
             "hrd_model_latest{model=\"dropbear\",version=\"1\"} 0",
+        ] {
+            assert!(got.contains(line), "missing `{line}` in:\n{got}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_section_renders_with_stable_names() {
+        let ckpt = CkptLine {
+            generations: 12,
+            errors: 1,
+            torn: 2,
+            lost_sessions: 0,
+            last_generation: 11,
+            last_sessions: 7,
+            last_bytes: 4096,
+            last_write_us: 350,
+            durable_sessions: 7,
+        };
+        let got = render_prometheus(&snap(), &[], 0, 1, None, None, None, Some(&ckpt));
+        for line in [
+            "hrd_ckpt_generations_total 12",
+            "hrd_ckpt_errors_total 1",
+            "hrd_ckpt_torn_writes_total 2",
+            "hrd_ckpt_lost_sessions_total 0",
+            "hrd_ckpt_last_generation 11",
+            "hrd_ckpt_last_sessions 7",
+            "hrd_ckpt_last_bytes 4096",
+            "hrd_ckpt_last_write_microseconds 350",
+            "hrd_ckpt_durable_sessions 7",
         ] {
             assert!(got.contains(line), "missing `{line}` in:\n{got}");
         }

@@ -1,0 +1,684 @@
+//! `sched::checkpoint` — continuous incremental checkpointing of live
+//! lane state (crash safety without drain).
+//!
+//! `Fabric::drain` gives clean restarts a lossless hand-off, but a
+//! crash (`kill -9`, OOM, power) loses every resident recurrent stream.
+//! This module closes that gap: a background *checkpointer* thread
+//! periodically captures every resident session's `(h, c)` state —
+//! together with its per-session **sequence watermark**, the highest
+//! client `seq` whose window is folded into that state — and writes a
+//! self-contained, fsync'd HRDS v3 segment into a bounded generation
+//! ring (`ckpt-<generation>.hrds`, [`crate::wire::snapshot`]).  After a
+//! crash, `--restore <ring dir>` installs the newest decodable segment
+//! and clients replay exactly the uncovered tail (`seq > watermark`)
+//! from their in-flight buffers, reconverging bit-identically.
+//!
+//! The capture protocol never blocks the µs serving path:
+//!
+//! ```text
+//!   checkpointer                         shard worker
+//!     epoch += 1                            |
+//!     raise per-shard want flag             |
+//!     push Control::Checkpoint  --------->  | (wakes a blocked pop)
+//!     wait (condvar, bounded)               | at the next batch boundary:
+//!                                           |   one relaxed load of want
+//!                                           |   if raised: export lanes
+//!     <---------  publish(shard, epoch, sessions)
+//!     merge into board cache
+//!     encode segment, durable_write, prune ring
+//!     publish watermarks into the DurableMap
+//! ```
+//!
+//! Incremental: a worker exports a session's state only when it changed
+//! since the last publication ([`WorkerState`] tracks a published set,
+//! invalidated by every batch, reset, adoption and eviction); unchanged
+//! sessions travel as watermark-only records and the board fills in the
+//! cached bytes.  Each *on-disk* segment is still complete — recovery
+//! needs exactly one decodable file.
+//!
+//! A shard that never reaches a batch boundary inside the bounded wait
+//! (it is mid-gather, or its queue closed) is collected from the
+//! board's cache instead — stale by at most one round, and safe: every
+//! published `(state, watermark)` pair was captured atomically at a
+//! boundary, so replay from it converges regardless of what the other
+//! shards contributed.
+//!
+//! [`DurableMap`] is the fabric-wide `session -> durable watermark`
+//! view of the *newest fully durable segment*.  The serving path reads
+//! it once per single completion (`durable_seq` on the wire,
+//! `docs/PROTOCOL.md`) so clients can prune their replay buffers while
+//! streaming.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::kernel::ModelArtifact;
+use crate::util::faults;
+use crate::wire::snapshot::{
+    durable_write_staged, prune_ring, ring_segments, CheckpointSegment, CkptSession, SnapModel,
+};
+
+use super::fabric::Fabric;
+use super::shard::{ShardLanes, ShardMux, ShardWorkerCtx, WorkerState};
+
+/// Checkpointer tuning (CLI `--ckpt-*` flags / `[checkpoint]` config).
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Ring directory; segments are `ckpt-<generation>.hrds` inside it.
+    pub dir: PathBuf,
+    /// Cadence between rounds (also bounds the capture wait).
+    pub interval: Duration,
+    /// Generations kept on disk; older segments are pruned.
+    pub ring: usize,
+}
+
+impl CheckpointConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), interval: Duration::from_millis(100), ring: 4 }
+    }
+}
+
+/// One session as a shard worker publishes it: `state == None` means
+/// "unchanged since my last publication — use your cached copy".
+#[derive(Debug)]
+pub struct LaneCkpt {
+    pub session: u64,
+    pub model: Arc<ModelArtifact>,
+    /// Highest client `seq` folded into `state` (0 = none known; only
+    /// pipelined-protocol windows carry a seq).
+    pub watermark: u64,
+    pub state: Option<Vec<f64>>,
+}
+
+/// What one shard handed over for one capture round.
+#[derive(Default)]
+struct Publication {
+    /// 0 = consumed/empty (epochs start at 1).
+    epoch: u64,
+    sessions: Vec<LaneCkpt>,
+}
+
+struct Slot {
+    /// Raised by `begin_round`, cleared by the worker's `take_want`.
+    want: AtomicBool,
+    data: Mutex<Publication>,
+}
+
+/// A session the board has fully materialized (state bytes present).
+struct Cached {
+    shard: usize,
+    model: Arc<ModelArtifact>,
+    watermark: u64,
+    state: Vec<f64>,
+}
+
+/// A fully materialized session ready to be encoded into a segment.
+pub struct CollectedSession {
+    pub session: u64,
+    pub model: Arc<ModelArtifact>,
+    pub watermark: u64,
+    pub state: Vec<f64>,
+}
+
+/// Counters the checkpointer maintains (surfaced in `hrd status` and
+/// Prometheus; reset with the process — durability lives in the ring,
+/// not here).
+#[derive(Default)]
+pub struct CkptMetrics {
+    /// Fully durable segments written.
+    pub generations: AtomicU64,
+    /// Rounds that failed with an I/O or encode error.
+    pub errors: AtomicU64,
+    /// Injected torn writes (`ckpt.torn` fault) that reached the ring.
+    pub torn: AtomicU64,
+    /// Shards collected from the board cache because they missed the
+    /// bounded capture wait (cumulative).
+    pub stale_shards: AtomicU64,
+    /// Sessions dropped from a round because neither the publication
+    /// nor the cache carried their state (should stay 0).
+    pub lost_sessions: AtomicU64,
+    pub last_generation: AtomicU64,
+    pub last_sessions: AtomicU64,
+    pub last_bytes: AtomicU64,
+    /// Encode+fsync+rename time of the last durable segment, µs.
+    pub last_write_us: AtomicU64,
+    /// Wall clock (ms since epoch) of the last durable segment — the
+    /// operator's checkpoint-lag gauge.
+    pub last_unix_ms: AtomicU64,
+    /// Segments removed by ring pruning (cumulative).
+    pub pruned: AtomicU64,
+}
+
+/// Plain snapshot of [`CkptMetrics`] for status JSON.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CkptStats {
+    pub generations: u64,
+    pub errors: u64,
+    pub torn: u64,
+    pub stale_shards: u64,
+    pub lost_sessions: u64,
+    pub last_generation: u64,
+    pub last_sessions: u64,
+    pub last_bytes: u64,
+    pub last_write_us: u64,
+    pub last_unix_ms: u64,
+    pub pruned: u64,
+}
+
+impl CkptMetrics {
+    pub fn snapshot(&self) -> CkptStats {
+        CkptStats {
+            generations: self.generations.load(Relaxed),
+            errors: self.errors.load(Relaxed),
+            torn: self.torn.load(Relaxed),
+            stale_shards: self.stale_shards.load(Relaxed),
+            lost_sessions: self.lost_sessions.load(Relaxed),
+            last_generation: self.last_generation.load(Relaxed),
+            last_sessions: self.last_sessions.load(Relaxed),
+            last_bytes: self.last_bytes.load(Relaxed),
+            last_write_us: self.last_write_us.load(Relaxed),
+            last_unix_ms: self.last_unix_ms.load(Relaxed),
+            pruned: self.pruned.load(Relaxed),
+        }
+    }
+}
+
+/// The capture rendezvous between the checkpointer and the shard
+/// workers.  One per fabric, created unconditionally — while no
+/// checkpointer is attached (`is_active` false) the workers' only cost
+/// is one relaxed load per batch.
+pub struct CheckpointBoard {
+    active: AtomicBool,
+    epoch: AtomicU64,
+    slots: Vec<Slot>,
+    /// Condvar pair the workers notify after publishing.
+    gate: Mutex<()>,
+    cv: Condvar,
+    cache: Mutex<HashMap<u64, Cached>>,
+    metrics: CkptMetrics,
+}
+
+impl CheckpointBoard {
+    pub fn new(shards: usize) -> Self {
+        Self {
+            active: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
+            slots: (0..shards)
+                .map(|_| Slot { want: AtomicBool::new(false), data: Mutex::new(Publication::default()) })
+                .collect(),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+            cache: Mutex::new(HashMap::new()),
+            metrics: CkptMetrics::default(),
+        }
+    }
+
+    /// Whether a checkpointer is (or ever was) attached; gates the
+    /// workers' watermark/dirty bookkeeping so a fabric without
+    /// checkpointing pays nothing on the completion path.
+    pub fn is_active(&self) -> bool {
+        self.active.load(Relaxed)
+    }
+
+    pub fn set_active(&self) {
+        self.active.store(true, Relaxed);
+    }
+
+    pub fn metrics(&self) -> &CkptMetrics {
+        &self.metrics
+    }
+
+    /// Start a capture round: bump the epoch and raise every shard's
+    /// want flag.  The caller wakes blocked workers by pushing
+    /// [`super::queue::Control::Checkpoint`] (see
+    /// [`Fabric::request_checkpoint`]).
+    pub fn begin_round(&self) -> u64 {
+        let epoch = self.epoch.fetch_add(1, Relaxed) + 1;
+        for slot in &self.slots {
+            slot.want.store(true, Relaxed);
+        }
+        epoch
+    }
+
+    /// Worker fast path: is a capture wanted from `shard`?
+    pub(crate) fn wanted(&self, shard: usize) -> bool {
+        self.slots.get(shard).is_some_and(|s| s.want.load(Relaxed))
+    }
+
+    /// Claim the want flag (exactly one publication per raise).
+    fn take_want(&self, shard: usize) -> bool {
+        self.slots.get(shard).is_some_and(|s| s.want.swap(false, Relaxed))
+    }
+
+    /// Install a shard's publication.  An unconsumed previous
+    /// publication is *merged*, not dropped: the new list is
+    /// authoritative for membership and watermarks, but state bytes the
+    /// worker already shipped (and now marks unchanged) are carried
+    /// over — the worker's published-set bookkeeping relies on every
+    /// `Some` state surviving until the board consumes it.
+    fn publish(&self, shard: usize, epoch: u64, mut sessions: Vec<LaneCkpt>) {
+        let Some(slot) = self.slots.get(shard) else { return };
+        {
+            let mut d = slot.data.lock().unwrap_or_else(|e| e.into_inner());
+            if d.epoch != 0 {
+                for s in sessions.iter_mut().filter(|s| s.state.is_none()) {
+                    if let Some(prev) = d
+                        .sessions
+                        .iter()
+                        .rev()
+                        .find(|p| p.session == s.session && p.state.is_some())
+                    {
+                        s.state = prev.state.clone();
+                    }
+                }
+            }
+            *d = Publication { epoch, sessions };
+        }
+        let _g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+        self.cv.notify_all();
+    }
+
+    /// Block until every shard has published `epoch` (or newer), or the
+    /// bounded wait expires.  Returns the number of shards still
+    /// missing — they will be collected from cache.
+    pub fn wait_round(&self, epoch: u64, timeout: Duration) -> usize {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            let missing = self
+                .slots
+                .iter()
+                .filter(|s| s.data.lock().unwrap_or_else(|e| e.into_inner()).epoch < epoch)
+                .count();
+            if missing == 0 {
+                return 0;
+            }
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return missing;
+            };
+            let (ng, _) = self.cv.wait_timeout(g, left).unwrap_or_else(|e| e.into_inner());
+            g = ng;
+        }
+    }
+
+    /// Consume every pending publication into the cache and return the
+    /// full materialized session set, sorted by session hash.  `lost`
+    /// counts sessions that had to be dropped because no state bytes
+    /// were available anywhere (cannot happen if workers' published-set
+    /// bookkeeping is sound).
+    pub fn collect(&self) -> (Vec<CollectedSession>, usize) {
+        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        let mut lost = 0usize;
+        for (shard, slot) in self.slots.iter().enumerate() {
+            let publication = {
+                let mut d = slot.data.lock().unwrap_or_else(|e| e.into_inner());
+                if d.epoch == 0 {
+                    continue; // nothing new — keep this shard's cache
+                }
+                std::mem::take(&mut *d)
+            };
+            // The publication is the authoritative resident list for
+            // this shard: sessions it no longer names have been evicted
+            // or migrated away (the new home republishes them).
+            let named: HashSet<u64> = publication.sessions.iter().map(|s| s.session).collect();
+            cache.retain(|session, c| c.shard != shard || named.contains(session));
+            for s in publication.sessions {
+                match s.state {
+                    Some(state) => {
+                        cache.insert(
+                            s.session,
+                            Cached { shard, model: s.model, watermark: s.watermark, state },
+                        );
+                    }
+                    None => match cache.get_mut(&s.session) {
+                        Some(c) => {
+                            c.shard = shard;
+                            c.model = s.model;
+                            c.watermark = s.watermark;
+                        }
+                        None => lost += 1,
+                    },
+                }
+            }
+        }
+        let mut out: Vec<CollectedSession> = cache
+            .iter()
+            .map(|(&session, c)| CollectedSession {
+                session,
+                model: c.model.clone(),
+                watermark: c.watermark,
+                state: c.state.clone(),
+            })
+            .collect();
+        out.sort_by_key(|s| s.session);
+        (out, lost)
+    }
+}
+
+/// Fabric-wide `session -> durable watermark` map: what the newest
+/// fully durable checkpoint segment covers.  Read on the completion
+/// path (one `RwLock` read + hash probe per *single* completion frame;
+/// batch records never carry it) and by the `SeqQuery` verb.
+#[derive(Default)]
+pub struct DurableMap {
+    inner: RwLock<HashMap<u64, u64>>,
+}
+
+impl DurableMap {
+    /// Durable watermark of `session`; 0 = nothing durable.
+    pub fn get(&self, session: u64) -> u64 {
+        self.inner
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&session)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Replace the whole view with the coverage of a new segment.
+    pub fn replace(&self, pairs: impl IntoIterator<Item = (u64, u64)>) {
+        let map: HashMap<u64, u64> = pairs.into_iter().filter(|&(_, w)| w > 0).collect();
+        *self.inner.write().unwrap_or_else(|e| e.into_inner()) = map;
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Worker-side capture: called at batch boundaries when the want flag
+/// is raised, and from the [`super::queue::Control::Checkpoint`] wake
+/// control.  Exports state only for sessions not yet in the board's
+/// hands; transiently parked adoptions are included fresh (their state
+/// is live but laneless).  Gathered-but-unexecuted jobs need no special
+/// case — the batch has not run, so lane state and watermarks are both
+/// pre-batch: a consistent pair.
+pub(crate) fn publish_shard(
+    mux: &ShardMux,
+    lanes: &ShardLanes,
+    st: &mut WorkerState,
+    ctx: &ShardWorkerCtx,
+) {
+    if !ctx.ckpt.take_want(ctx.index) {
+        return;
+    }
+    let epoch = ctx.ckpt.epoch.load(Relaxed);
+    let residents = lanes.residents();
+    let mut sessions = Vec::with_capacity(residents.len() + st.pending_adopts.len());
+    for (session, lane) in residents {
+        let model = mux.artifact(mux.group_of_lane(lane)).clone();
+        let watermark = st.watermarks.get(&session).copied().unwrap_or(0);
+        let state = if st.ckpt_published.contains(&session) {
+            None
+        } else {
+            st.ckpt_published.insert(session);
+            Some(mux.export_lane(lane))
+        };
+        sessions.push(LaneCkpt { session, model, watermark, state });
+    }
+    // A parked adoption's state is in flight between lanes; publish it
+    // fresh every time (it is transient — one batch boundary at most).
+    // Listed after the residents so a session resident in a stale group
+    // AND parked resolves to the parked (newer) state in the board.
+    for a in &st.pending_adopts {
+        if let Some(state) = &a.state {
+            sessions.push(LaneCkpt {
+                session: a.session,
+                model: a.model.clone(),
+                watermark: a.watermark,
+                state: Some(state.clone()),
+            });
+        }
+    }
+    ctx.ckpt.publish(ctx.index, epoch, sessions);
+}
+
+/// The background checkpointer: owns the cadence loop and the ring
+/// directory.  Construct with [`Checkpointer::start`] after the fabric
+/// (and any `--restore`) is up; [`Checkpointer::stop`] runs one final
+/// round before returning, so a clean shutdown is as covered as a
+/// drain.
+pub struct Checkpointer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Checkpointer {
+    pub fn start(fabric: Arc<Fabric>, cfg: CheckpointConfig) -> Result<Self> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating checkpoint ring dir {}", cfg.dir.display()))?;
+        // Resume the generation counter past anything already in the
+        // ring (including undecodable files — names must never collide).
+        let next_gen = ring_segments(&cfg.dir)?.first().map_or(1, |&(g, _)| g + 1);
+        fabric.checkpoint_board().set_active();
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("hrd-ckpt".into())
+            .spawn(move || run_checkpointer(&fabric, &cfg, next_gen, &flag))
+            .context("spawning checkpointer thread")?;
+        Ok(Self { stop, handle: Some(handle) })
+    }
+
+    /// Signal the loop, let it take one final checkpoint, and join.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run_checkpointer(fabric: &Fabric, cfg: &CheckpointConfig, mut generation: u64, stop: &AtomicBool) {
+    loop {
+        // Chunked sleep so stop is honored promptly.
+        let mut slept = Duration::ZERO;
+        while slept < cfg.interval && !stop.load(Relaxed) {
+            let step = (cfg.interval - slept).min(Duration::from_millis(5));
+            std::thread::sleep(step);
+            slept += step;
+        }
+        let last = stop.load(Relaxed);
+        if let Err(e) = run_round(fabric, cfg, generation) {
+            log::warn!("checkpoint generation {generation} failed: {e:#}");
+            fabric.checkpoint_board().metrics().errors.fetch_add(1, Relaxed);
+        }
+        generation += 1;
+        if last {
+            return;
+        }
+    }
+}
+
+/// One capture → encode → durable write → prune round.  The
+/// `faults::kill_point` calls are the injection points the
+/// crash-recovery suite aborts the process at (`docs/OPERATIONS.md`).
+fn run_round(fabric: &Fabric, cfg: &CheckpointConfig, generation: u64) -> Result<()> {
+    let board = fabric.checkpoint_board();
+    let m = board.metrics();
+    let epoch = fabric.request_checkpoint();
+    let wait = cfg.interval.min(Duration::from_millis(250)).max(Duration::from_millis(2));
+    let stale = board.wait_round(epoch, wait);
+    m.stale_shards.fetch_add(stale as u64, Relaxed);
+    let t0 = Instant::now();
+    let (collected, lost) = board.collect();
+    m.lost_sessions.fetch_add(lost as u64, Relaxed);
+
+    faults::kill_point("ckpt.pre_encode");
+    // Deduplicate the bound artifacts into the segment model table
+    // (same scheme as `DrainedFabric::to_snapshot`).
+    let mut models: Vec<SnapModel> = Vec::new();
+    let mut artifacts: Vec<&Arc<ModelArtifact>> = Vec::new();
+    let mut sessions = Vec::with_capacity(collected.len());
+    for s in &collected {
+        let idx = match artifacts.iter().position(|a| Arc::ptr_eq(a, &s.model)) {
+            Some(i) => i,
+            None => {
+                artifacts.push(&s.model);
+                models.push(SnapModel {
+                    id: s.model.id().to_string(),
+                    version: s.model.version(),
+                    fingerprint: s.model.fingerprint(),
+                    state_len: s.model.state_len() as u32,
+                });
+                models.len() - 1
+            }
+        };
+        sessions.push(CkptSession {
+            session: s.session,
+            model: idx as u16,
+            watermark: s.watermark,
+            state: s.state.clone(),
+        });
+    }
+    let segment = CheckpointSegment {
+        generation,
+        datapath: fabric.datapath_tag(),
+        state_len: fabric.state_len() as u32,
+        models,
+        sessions,
+        routes: fabric.route_snapshot(),
+    };
+    let bytes = segment.encode()?;
+
+    faults::kill_point("ckpt.pre_write");
+    faults::stall("ckpt.stall_ms");
+    let torn = faults::take("ckpt.torn");
+    let written = if torn { &bytes[..bytes.len() / 2] } else { &bytes[..] };
+    let path = CheckpointSegment::segment_path(&cfg.dir, generation);
+    durable_write_staged(&path, written, &mut || faults::kill_point("ckpt.post_tmp"))?;
+    faults::kill_point("ckpt.post_rename");
+
+    if torn {
+        // The segment on disk is garbage by construction: do NOT
+        // advance the durable view — recovery must fall back to the
+        // previous generation, which is exactly what the durable map
+        // still describes.
+        m.torn.fetch_add(1, Relaxed);
+    } else {
+        fabric
+            .durable_map()
+            .replace(segment.sessions.iter().map(|s| (s.session, s.watermark)));
+        m.generations.fetch_add(1, Relaxed);
+        m.last_generation.store(generation, Relaxed);
+        m.last_sessions.store(segment.sessions.len() as u64, Relaxed);
+        m.last_bytes.store(bytes.len() as u64, Relaxed);
+        m.last_write_us.store(t0.elapsed().as_micros() as u64, Relaxed);
+        let now_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        m.last_unix_ms.store(now_ms, Relaxed);
+    }
+    let pruned = prune_ring(&cfg.dir, cfg.ring);
+    m.pruned.fetch_add(pruned as u64, Relaxed);
+    faults::kill_point("ckpt.post_prune");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::ModelRegistry;
+    use crate::lstm::LstmParams;
+
+    fn artifact() -> Arc<ModelArtifact> {
+        ModelRegistry::shared(LstmParams::init(16, 15, 3, 1, 7)).default_model()
+    }
+
+    #[test]
+    fn durable_map_replaces_wholesale_and_skips_zero() {
+        let map = DurableMap::default();
+        assert_eq!(map.get(1), 0);
+        map.replace([(1, 10), (2, 0), (3, 7)]);
+        assert_eq!(map.get(1), 10);
+        assert_eq!(map.get(2), 0, "zero watermarks are not stored");
+        assert_eq!(map.len(), 2);
+        map.replace([(3, 9)]);
+        assert_eq!(map.get(1), 0, "replace drops sessions absent from the new segment");
+        assert_eq!(map.get(3), 9);
+    }
+
+    #[test]
+    fn board_merges_unconsumed_state_and_reuses_cache() {
+        let board = CheckpointBoard::new(2);
+        let model = artifact();
+        let state = vec![1.5f64; model.state_len()];
+
+        // Round 1: shard 0 publishes session 11 with full state.
+        let e1 = board.begin_round();
+        assert!(board.wanted(0) && board.wanted(1));
+        assert!(board.take_want(0));
+        assert!(!board.take_want(0), "want is claimed exactly once per raise");
+        board.publish(
+            0,
+            e1,
+            vec![LaneCkpt { session: 11, model: model.clone(), watermark: 5, state: Some(state.clone()) }],
+        );
+        // Round 2 lands BEFORE round 1 was collected, marking the
+        // session unchanged: the merge must carry the state bytes over.
+        let e2 = board.begin_round();
+        board.publish(
+            0,
+            e2,
+            vec![LaneCkpt { session: 11, model: model.clone(), watermark: 8, state: None }],
+        );
+        board.publish(1, e2, Vec::new());
+        assert_eq!(board.wait_round(e2, Duration::from_millis(50)), 0);
+        let (got, lost) = board.collect();
+        assert_eq!(lost, 0);
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].session, got[0].watermark), (11, 8));
+        assert_eq!(got[0].state, state);
+
+        // Round 3: watermark-only again — the cache supplies the state.
+        let e3 = board.begin_round();
+        board.publish(
+            0,
+            e3,
+            vec![LaneCkpt { session: 11, model: model.clone(), watermark: 9, state: None }],
+        );
+        let (got, lost) = board.collect();
+        assert_eq!(lost, 0);
+        assert_eq!((got[0].session, got[0].watermark), (11, 9));
+        assert_eq!(got[0].state, state);
+
+        // Round 4: shard 0 no longer lists the session (evicted) — it
+        // must vanish from the collected set.
+        let e4 = board.begin_round();
+        board.publish(0, e4, Vec::new());
+        let (got, _) = board.collect();
+        assert!(got.is_empty(), "membership follows the newest publication");
+    }
+
+    #[test]
+    fn board_wait_times_out_on_silent_shard() {
+        let board = CheckpointBoard::new(2);
+        let e = board.begin_round();
+        board.publish(0, e, Vec::new());
+        assert_eq!(board.wait_round(e, Duration::from_millis(5)), 1);
+        // The silent shard's cache (empty) is simply reused.
+        let (got, lost) = board.collect();
+        assert!(got.is_empty());
+        assert_eq!(lost, 0);
+    }
+}

@@ -21,9 +21,10 @@ use crate::coordinator::watchdog::{WatchdogConfig, WatchdogEvent};
 use crate::kernel::{ModelArtifact, ModelBinding, ModelInfo, ModelRegistry};
 use crate::lstm::LstmParams;
 use crate::obs::{ObsConfig, Registry, ReqTrace, Stage};
-use crate::wire::{SessionRecord, SnapModel, SnapshotFile};
+use crate::wire::{CheckpointSegment, SessionRecord, SnapModel, SnapshotFile};
 
 use super::balance::{BalanceConfig, LoadBoard, RoutingOverlay};
+use super::checkpoint::{CheckpointBoard, DurableMap};
 use super::metrics::{AdmitToken, SchedMetrics, SchedSnapshot, TenantCounters};
 use super::queue::{
     CompletionTx, Control, Job, Migration, PushOutcome, ReplyTo, ShardQueue, ShedPolicy,
@@ -261,6 +262,13 @@ pub struct Fabric {
     /// `f64` words per exported lane state (fixed by the architecture
     /// and datapath at construction).
     state_len: usize,
+    /// Checkpoint capture rendezvous shared with every worker
+    /// ([`crate::sched::checkpoint`]); inert until a
+    /// [`crate::sched::checkpoint::Checkpointer`] attaches.
+    ckpt: Arc<CheckpointBoard>,
+    /// `session -> durable watermark` of the newest durable checkpoint
+    /// segment; read per single completion for the wire `durable_seq`.
+    durable: Arc<DurableMap>,
 }
 
 impl Fabric {
@@ -299,6 +307,7 @@ impl Fabric {
         let queues: Vec<Arc<ShardQueue>> = (0..cfg.shards)
             .map(|_| Arc::new(ShardQueue::new(cfg.queue_depth, cfg.shed)))
             .collect();
+        let ckpt = Arc::new(CheckpointBoard::new(cfg.shards));
         let mut workers = Vec::with_capacity(cfg.shards);
         for (index, queue) in queues.iter().enumerate() {
             let mux =
@@ -314,6 +323,7 @@ impl Fabric {
                 batch: cfg.batch,
                 gather_floor: Duration::from_micros(5),
                 tuning: tuning.clone(),
+                ckpt: ckpt.clone(),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -337,6 +347,8 @@ impl Fabric {
             tuning,
             draining: AtomicBool::new(false),
             state_len,
+            ckpt,
+            durable: Arc::new(DurableMap::default()),
         })
     }
 
@@ -740,6 +752,56 @@ impl Fabric {
         }
     }
 
+    /// `f64` words per exported lane state of the default model.
+    pub fn state_len(&self) -> usize {
+        self.state_len
+    }
+
+    /// The checkpoint capture rendezvous (`sched::checkpoint`).
+    pub fn checkpoint_board(&self) -> &Arc<CheckpointBoard> {
+        &self.ckpt
+    }
+
+    /// The durable-watermark view the wire layer reads per completion.
+    pub fn durable_map(&self) -> &Arc<DurableMap> {
+        &self.durable
+    }
+
+    /// Durable sequence watermark of `session`: the highest client seq
+    /// covered by the newest durable checkpoint segment (0 = nothing
+    /// durable, or checkpointing is off).
+    pub fn durable_seq(&self, session: u64) -> u64 {
+        self.durable.get(session)
+    }
+
+    /// Start a checkpoint capture round: raise every shard's want flag
+    /// and wake blocked workers with a [`Control::Checkpoint`] (a busy
+    /// worker publishes at its next batch boundary instead).  Returns
+    /// the round's epoch for [`CheckpointBoard::wait_round`].
+    pub fn request_checkpoint(&self) -> u64 {
+        let epoch = self.ckpt.begin_round();
+        for q in &self.queues {
+            // A closed queue (shutdown race) hands the control back;
+            // its shard is collected from the board cache.
+            let _ = q.push_control(Control::Checkpoint);
+        }
+        epoch
+    }
+
+    /// The rebalance routing overrides in on-disk form (empty unless
+    /// rebalancing is enabled) — checkpoint segments carry them so a
+    /// restored fabric re-installs the same placement a drain would.
+    pub fn route_snapshot(&self) -> Vec<(u64, u32)> {
+        if !self.cfg.balance.enabled {
+            return Vec::new();
+        }
+        self.overlay
+            .export_overrides()
+            .into_iter()
+            .map(|(session, shard)| (session, shard as u32))
+            .collect()
+    }
+
     /// Drain the fabric for a restart (`hrd drain`): close admission
     /// (new submissions shed with [`Shed::Draining`]), let every
     /// admitted job finish, then stop the workers and collect the exact
@@ -811,6 +873,34 @@ impl Fabric {
     /// any datapath/shape mismatch rather than serving wrong numbers.
     /// Returns the number of sessions installed.
     pub fn restore(&self, snap: &SnapshotFile) -> Result<usize> {
+        self.restore_with(snap, &HashMap::new())
+    }
+
+    /// Restore from a crash-recovery checkpoint segment
+    /// (`sched::checkpoint`): same Adopt plumbing as [`Self::restore`],
+    /// plus each session's sequence watermark is seeded into the
+    /// workers (so the next checkpoint does not regress coverage) and
+    /// into the [`DurableMap`] (so reconnecting clients can query the
+    /// uncovered tail with `SeqQuery` before any new checkpoint runs).
+    pub fn restore_checkpoint(&self, seg: &CheckpointSegment) -> Result<usize> {
+        let snap = SnapshotFile {
+            datapath: seg.datapath.clone(),
+            state_len: seg.state_len,
+            models: seg.models.clone(),
+            sessions: seg
+                .sessions
+                .iter()
+                .map(|s| SessionRecord { session: s.session, model: s.model, state: s.state.clone() })
+                .collect(),
+            routes: seg.routes.clone(),
+        };
+        let marks: HashMap<u64, u64> = seg.sessions.iter().map(|s| (s.session, s.watermark)).collect();
+        let installed = self.restore_with(&snap, &marks)?;
+        self.durable.replace(marks);
+        Ok(installed)
+    }
+
+    fn restore_with(&self, snap: &SnapshotFile, watermarks: &HashMap<u64, u64>) -> Result<usize> {
         let tag = self.datapath_tag();
         anyhow::ensure!(
             snap.datapath == tag,
@@ -913,6 +1003,7 @@ impl Fabric {
                 stolen: Some(StolenSession {
                     session: rec.session,
                     state: Some(rec.state.clone()),
+                    watermark: watermarks.get(&rec.session).copied().unwrap_or(0),
                     jobs: Vec::new(),
                     model: model.clone(),
                 }),

@@ -70,6 +70,7 @@
 //! it against the serial baseline.
 
 pub mod balance;
+pub mod checkpoint;
 pub mod fabric;
 pub mod metrics;
 pub mod queue;
@@ -78,6 +79,9 @@ pub mod session;
 pub mod shard;
 
 pub use balance::{BalanceConfig, LoadBoard, RoutingOverlay};
+pub use checkpoint::{
+    CheckpointBoard, CheckpointConfig, Checkpointer, CkptStats, DurableMap,
+};
 pub use fabric::{Completion, DrainedFabric, Fabric, FabricConfig, Pending, Shed};
 pub use reload::{LiveTuning, ReloadOutcome};
 pub use metrics::{

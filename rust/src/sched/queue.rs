@@ -107,6 +107,10 @@ pub struct StolenSession {
     /// fresh on the target (it was not resident on the source, or a
     /// reset was pending — a reset's whole point is a zero state).
     pub state: Option<Vec<f64>>,
+    /// Highest client `seq` folded into `state` (checkpoint watermark,
+    /// `sched::checkpoint`); travels with the session so a checkpoint
+    /// taken after the migration still claims the right coverage.
+    pub watermark: u64,
     /// The session's queued-but-unserved jobs, oldest first.
     pub jobs: Vec<Job>,
     /// The artifact the session was bound to on the source shard — the
@@ -138,6 +142,10 @@ pub enum Control {
     Migrate { session: u64, to: usize },
     /// A migrated session arriving at its new shard.
     Adopt(Box<Migration>),
+    /// Wake-up from the checkpointer ([`crate::sched::checkpoint`]):
+    /// publish this shard's lane state at the next safe point.  Carries
+    /// nothing — the rendezvous state lives on the `CheckpointBoard`.
+    Checkpoint,
 }
 
 /// What a full queue does with a new arrival.
@@ -484,7 +492,7 @@ impl ShardQueue {
                 Control::Adopt(m) => {
                     m.stolen.as_ref().map(|s| s.session) == Some(session)
                 }
-                Control::StealRequest { .. } => false,
+                Control::StealRequest { .. } | Control::Checkpoint => false,
             })
     }
 
@@ -950,6 +958,7 @@ mod tests {
             stolen: Some(StolenSession {
                 session: 7,
                 state: None,
+                watermark: 0,
                 jobs: Vec::new(),
                 model: test_model(),
             }),
@@ -971,6 +980,7 @@ mod tests {
             stolen: Some(StolenSession {
                 session: 11,
                 state: None,
+                watermark: 0,
                 jobs: vec![inner],
                 model: test_model(),
             }),

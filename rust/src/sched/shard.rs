@@ -621,6 +621,10 @@ pub(crate) struct ShardWorkerCtx {
     /// Live-reloadable knobs (gather cap, rebalance pressure
     /// thresholds) — read on the serving path, written by `hrd reload`.
     pub tuning: Arc<LiveTuning>,
+    /// Checkpoint capture rendezvous ([`crate::sched::checkpoint`]);
+    /// inert (one relaxed load per batch boundary) unless a
+    /// checkpointer is attached.
+    pub ckpt: Arc<super::checkpoint::CheckpointBoard>,
 }
 
 impl ShardWorkerCtx {
@@ -689,7 +693,7 @@ pub(crate) struct WorkerState {
     /// Adoptions that could not get a lane mid-gather (every lane was
     /// pinned); completed at the next batch boundary.  Jobs of these
     /// sessions are deferred until the state is imported.
-    pending_adopts: Vec<StolenSession>,
+    pub(crate) pending_adopts: Vec<StolenSession>,
     /// Steals to execute after the current pass.
     pending_steals: Vec<StealTask>,
     /// Sessions whose reset arrived while their lane was pinned in the
@@ -700,6 +704,16 @@ pub(crate) struct WorkerState {
     /// gauges; `sync_residency` pushes deltas so the gauge stays a sum
     /// of live lane counts across workers.
     residency_synced: Vec<usize>,
+    /// Checkpoint watermarks: per resident session, the highest client
+    /// `seq` whose window is folded into its lane state (pushed-path
+    /// jobs only — only they carry a seq).  Maintained only while a
+    /// checkpointer is attached; travels with migrations.
+    pub(crate) watermarks: std::collections::HashMap<u64, u64>,
+    /// Sessions whose CURRENT state the checkpoint board already holds;
+    /// membership is invalidated by every batch, reset, adoption and
+    /// eviction, so the next capture ships only changed state
+    /// (incremental checkpointing, [`crate::sched::checkpoint`]).
+    pub(crate) ckpt_published: std::collections::HashSet<u64>,
 }
 
 /// Mutable gather-phase state.
@@ -744,7 +758,13 @@ pub(crate) fn place(
                 Some(lane) if g.pinned.get(lane).copied().unwrap_or(false) => {
                     st.post_pass_resets.push(session)
                 }
-                Some(lane) => mux.recycle_lane(lane),
+                Some(lane) => {
+                    mux.recycle_lane(lane);
+                    // Zeroing changes the state the checkpoint board
+                    // holds; the watermark stands (the zeroed stream
+                    // still covers every previously applied seq).
+                    st.ckpt_published.remove(&session);
+                }
                 None => {
                     // The session's adoption may be parked in worker-local
                     // limbo (Adopt popped with every lane pinned).  The
@@ -773,6 +793,13 @@ pub(crate) fn place(
             if let Some(stolen) = m.stolen {
                 try_adopt(mux, lanes, ctx, &g.pinned, st, stolen);
             }
+        }
+        Popped::Control(Control::Checkpoint) => {
+            // Checkpointer wake-up: capture now (mid-gather is safe —
+            // the batch has not run, so lane state and watermarks are
+            // both pre-batch).  Idempotent with the boundary check in
+            // `run_worker`: whoever claims the want flag publishes.
+            super::checkpoint::publish_shard(mux, lanes, st, ctx);
         }
         Popped::Job(mut qj) => {
             if fresh {
@@ -813,6 +840,7 @@ pub(crate) fn place(
                     let state = mux.export_lane(old_lane);
                     lanes.remove(qj.job.session);
                     mux.recycle_lane(old_lane);
+                    st.ckpt_published.remove(&qj.job.session);
                     carried = (state.len() == mux.state_len_of(group)).then_some(state);
                 }
             }
@@ -841,6 +869,10 @@ pub(crate) fn place(
                     if let Some(state) = &carried {
                         mux.import_lane(lane, state);
                     }
+                    // The evicted stream's state is gone; the next
+                    // capture's resident list drops it from the board.
+                    st.watermarks.remove(&evicted_session);
+                    st.ckpt_published.remove(&evicted_session);
                     gc_override_on_eviction(ctx, st, evicted_session);
                     ctx.metrics
                         .shard(ctx.index)
@@ -860,6 +892,11 @@ pub(crate) fn place(
                         st.pending_adopts.push(StolenSession {
                             session: qj.job.session,
                             state: carried,
+                            watermark: st
+                                .watermarks
+                                .get(&qj.job.session)
+                                .copied()
+                                .unwrap_or(0),
                             jobs: Vec::new(),
                             model: qj.job.model.clone(),
                         });
@@ -904,6 +941,8 @@ fn try_adopt(
     let lane = match lanes.assign(stolen.session, group, pinned) {
         LaneAssign::Resident(lane) | LaneAssign::Fresh(lane) => lane,
         LaneAssign::Evicted { lane, evicted_session } => {
+            st.watermarks.remove(&evicted_session);
+            st.ckpt_published.remove(&evicted_session);
             gc_override_on_eviction(ctx, st, evicted_session);
             ctx.metrics.shard(ctx.index).evictions.fetch_add(1, Relaxed);
             lane
@@ -924,6 +963,14 @@ fn try_adopt(
             mux.import_lane(lane, state);
         }
     }
+    // The migrated watermark lands with the state (max-merged: a
+    // returning session must never regress its coverage claim), and the
+    // freshly imported state must be captured anew.
+    if stolen.watermark > 0 {
+        let w = st.watermarks.entry(stolen.session).or_insert(0);
+        *w = (*w).max(stolen.watermark);
+    }
+    st.ckpt_published.remove(&stolen.session);
     for job in ctx.queue.adopt_session(stolen.session, stolen.jobs) {
         // Own queue already closed (shutdown race): shed, never strand.
         ctx.metrics.shed.fetch_add(1, Relaxed);
@@ -1000,6 +1047,8 @@ fn migrate_out(
     }
     ctx.overlay.set_in(&mut guard, session, target);
     let (jobs, had_reset) = ctx.queue.take_session(session);
+    let watermark = st.watermarks.remove(&session).unwrap_or(0);
+    st.ckpt_published.remove(&session);
     let mut state = None;
     let mut model = None;
     if let Some((group, lane)) = lanes.locate(session) {
@@ -1027,7 +1076,7 @@ fn migrate_out(
         .or_else(|| jobs.first().map(|j| j.model.clone()))
         .unwrap_or_else(|| mux.any_artifact().clone());
     let rejected = ctx.peers[target].push_control(Control::Adopt(Box::new(Migration {
-        stolen: Some(StolenSession { session, state, jobs, model }),
+        stolen: Some(StolenSession { session, state, watermark, jobs, model }),
     })));
     drop(guard);
     match rejected {
@@ -1185,6 +1234,9 @@ pub(crate) fn execute_batch(
             shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
             for (qj, _) in batch {
                 ctx.metrics.shed.fetch_add(1, Relaxed);
+                // A failed pass may have advanced some lanes before the
+                // error — conservatively re-capture them all.
+                st.ckpt_published.remove(&qj.job.session);
                 send_completion(&qj.job.reply, Err(Shed::Internal));
             }
             return;
@@ -1198,6 +1250,9 @@ pub(crate) fn execute_batch(
     shard_m.batched_requests.fetch_add(outcomes.len() as u64, Relaxed);
     shard_m.occupancy.store(lanes.occupancy() as u64, Relaxed);
     shard_m.queue_len.store(ctx.queue.len() as u64, Relaxed);
+    // Checkpoint bookkeeping is gated on an attached checkpointer, so
+    // the per-completion cost without one is this single load.
+    let ckpt_on = ctx.ckpt.is_active();
     for outcome in outcomes {
         let slot = batch
             .iter()
@@ -1205,6 +1260,16 @@ pub(crate) fn execute_batch(
             .expect("every drained lane was gathered");
         let (mut qj, _) = batch.swap_remove(slot);
         qj.job.trace.mark(Stage::KernelDone);
+        if ckpt_on {
+            // This lane's state now folds the applied window: it must
+            // be re-captured, and (for pushed-protocol jobs, the only
+            // ones carrying a client seq) the watermark advances.
+            st.ckpt_published.remove(&qj.job.session);
+            if let ReplyTo::Push { seq, .. } = &qj.job.reply {
+                let w = st.watermarks.entry(qj.job.session).or_insert(0);
+                *w = (*w).max(*seq);
+            }
+        }
         let latency_us = done.saturating_duration_since(qj.job.enqueued).as_secs_f64() * 1e6;
         let missed = done > qj.job.deadline;
         ctx.metrics.record_completion(ctx.index, latency_us, missed);
@@ -1254,6 +1319,11 @@ pub(crate) fn run_worker(
         // Hot-reload GC: once every session has drained off a superseded
         // model version, drop this worker's hold on its weights.
         mux.prune_idle(&lanes, &st.pending_adopts);
+        // Checkpoint capture, if the checkpointer raised our want flag
+        // since the last boundary (one relaxed load otherwise).
+        if ctx.ckpt.wanted(ctx.index) {
+            super::checkpoint::publish_shard(&mux, &lanes, &mut st, &ctx);
+        }
 
         // Block for the first piece of work.  In balance mode the wait
         // is chopped into steal-poll slices so an idle shard can claim
@@ -1336,6 +1406,7 @@ pub(crate) fn run_worker(
         for session in std::mem::take(&mut st.post_pass_resets) {
             if let Some(lane) = lanes.lane_of(session) {
                 mux.recycle_lane(lane);
+                st.ckpt_published.remove(&session);
             }
         }
 
@@ -1431,6 +1502,7 @@ mod tests {
                 Duration::from_micros(200),
                 &BalanceConfig::default(),
             )),
+            ckpt: Arc::new(super::super::checkpoint::CheckpointBoard::new(1)),
         }
     }
 

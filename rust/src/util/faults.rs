@@ -1,0 +1,202 @@
+//! Process-wide fault-injection registry — the chaos layer behind the
+//! crash-recovery suite (`docs/OPERATIONS.md`).
+//!
+//! Faults are named string knobs armed via the `[faults]` config
+//! section, the `Chaos` wire verb, or `hrd chaos`.  Production code
+//! consults them through the helpers below; every helper's fast path is
+//! a single relaxed atomic load, so a build that never arms a fault
+//! pays one predictable branch — nothing else — on the paths it guards.
+//!
+//! Vocabulary (validated by [`valid_name`]):
+//!
+//! * `kill.<point>` — [`kill_point`] aborts the process (SIGABRT, no
+//!   unwinding, no destructors: a faithful crash) when execution
+//!   reaches the named point.  Points are listed in [`KILL_POINTS`].
+//! * `ckpt.torn` = `N` — the next `N` checkpoint segment writes are
+//!   torn: only a prefix of the encoded bytes reaches the ring file.
+//! * `ckpt.stall_ms` = `N` — every checkpoint write sleeps `N` ms
+//!   first (stalled-disk simulation; surfaces in the lag metrics).
+//! * `drop.completion` = `N` — the server discards the next `N`
+//!   completion frames instead of writing them (lost-frame recovery
+//!   is the client's replay buffer's job).
+//!
+//! The registry is deliberately process-global: faults cut across
+//! threads (checkpointer, connection pumps) and must be armable from a
+//! wire verb without threading a handle through every layer.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::RwLock;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static FAULTS: RwLock<Option<HashMap<String, String>>> = RwLock::new(None);
+
+/// Kill points [`kill_point`] recognizes, in hot-path order.  The
+/// crash-recovery suite iterates this list and proves recovery after an
+/// abort at every entry.
+pub const KILL_POINTS: &[&str] = &[
+    "ckpt.pre_encode",
+    "ckpt.pre_write",
+    "ckpt.post_tmp",
+    "ckpt.post_rename",
+    "ckpt.post_prune",
+];
+
+/// Master switch.  Arming faults on a server that was not started with
+/// chaos enabled is refused at the verb layer; this switch is what the
+/// helpers poll.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+    if !on {
+        clear_all();
+    }
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Whether `name` belongs to the fault vocabulary.
+pub fn valid_name(name: &str) -> bool {
+    match name {
+        "ckpt.torn" | "ckpt.stall_ms" | "drop.completion" => true,
+        _ => name
+            .strip_prefix("kill.")
+            .map_or(false, |p| KILL_POINTS.contains(&p)),
+    }
+}
+
+/// Arm one fault.  Unknown names are rejected loudly — a typoed chaos
+/// knob that silently arms nothing would void the test it drives.
+pub fn arm(name: &str, value: &str) -> Result<(), String> {
+    if !valid_name(name) {
+        return Err(format!(
+            "unknown fault `{name}` (kill.<point> with point in {KILL_POINTS:?}, \
+             ckpt.torn, ckpt.stall_ms, drop.completion)"
+        ));
+    }
+    let mut g = FAULTS.write().unwrap_or_else(|e| e.into_inner());
+    g.get_or_insert_with(HashMap::new).insert(name.to_string(), value.to_string());
+    Ok(())
+}
+
+/// Disarm one fault; `Ok` even if it was not armed.
+pub fn clear(name: &str) {
+    let mut g = FAULTS.write().unwrap_or_else(|e| e.into_inner());
+    if let Some(m) = g.as_mut() {
+        m.remove(name);
+    }
+}
+
+pub fn clear_all() {
+    let mut g = FAULTS.write().unwrap_or_else(|e| e.into_inner());
+    *g = None;
+}
+
+/// Snapshot of the armed set (for the ChaosReply / status JSON).
+pub fn armed() -> Vec<(String, String)> {
+    if !enabled() {
+        return Vec::new();
+    }
+    let g = FAULTS.read().unwrap_or_else(|e| e.into_inner());
+    let mut v: Vec<_> = g
+        .as_ref()
+        .map(|m| m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+        .unwrap_or_default();
+    v.sort();
+    v
+}
+
+fn value_of(name: &str) -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    let g = FAULTS.read().unwrap_or_else(|e| e.into_inner());
+    g.as_ref()?.get(name).cloned()
+}
+
+/// Abort the process if `kill.<point>` is armed.  `abort`, not `panic`:
+/// a real crash takes no destructors, flushes no buffers and runs no
+/// drain path — exactly what the recovery property must survive.
+pub fn kill_point(point: &str) {
+    if !enabled() {
+        return;
+    }
+    if value_of(&format!("kill.{point}")).is_some() {
+        eprintln!("[faults] kill point `{point}` armed: aborting");
+        std::process::abort();
+    }
+}
+
+/// Sleep `<name>` milliseconds if armed (stalled-disk simulation).
+pub fn stall(name: &str) {
+    if !enabled() {
+        return;
+    }
+    if let Some(ms) = value_of(name).and_then(|v| v.parse::<u64>().ok()) {
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Consume one shot of a counted fault: `true` while the armed counter
+/// is positive, decrementing it (the fault disarms itself at zero, so a
+/// one-shot tear cannot corrupt every subsequent generation).
+pub fn take(name: &str) -> bool {
+    if !enabled() {
+        return false;
+    }
+    let mut g = FAULTS.write().unwrap_or_else(|e| e.into_inner());
+    let Some(m) = g.as_mut() else { return false };
+    let Some(v) = m.get_mut(name) else { return false };
+    let n = v.parse::<u64>().unwrap_or(0);
+    if n == 0 {
+        m.remove(name);
+        return false;
+    }
+    if n == 1 {
+        m.remove(name);
+    } else {
+        *v = (n - 1).to_string();
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global, so this single test walks every
+    /// behavior in sequence (parallel tests would race the switch).
+    #[test]
+    fn registry_lifecycle() {
+        // Disabled: everything is inert, even when armed earlier.
+        set_enabled(false);
+        assert!(!take("ckpt.torn"));
+        assert!(armed().is_empty());
+
+        set_enabled(true);
+        assert!(arm("no.such.fault", "1").is_err());
+        assert!(arm("kill.not_a_point", "1").is_err());
+        arm("ckpt.torn", "2").unwrap();
+        arm("ckpt.stall_ms", "0").unwrap();
+        arm("kill.ckpt.pre_write", "1").unwrap();
+        let names: Vec<_> = armed().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["ckpt.stall_ms", "ckpt.torn", "kill.ckpt.pre_write"]);
+
+        // Counted fault: two shots, then self-disarm.
+        assert!(take("ckpt.torn"));
+        assert!(take("ckpt.torn"));
+        assert!(!take("ckpt.torn"));
+        // Zero-ms stall returns immediately (smoke: must not hang).
+        stall("ckpt.stall_ms");
+        // kill_point on an UNARMED point must be a no-op.
+        kill_point("ckpt.post_rename");
+
+        clear("kill.ckpt.pre_write");
+        assert_eq!(armed().len(), 1, "clear removes exactly the named fault");
+        set_enabled(false);
+        assert!(armed().is_empty(), "disabling clears the registry");
+    }
+}

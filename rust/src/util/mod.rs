@@ -1,6 +1,7 @@
 //! Infrastructure substrate: deterministic RNG, descriptive statistics and a
 //! dependency-free JSON reader/writer (the environment has no serde).
 
+pub mod faults;
 pub mod json;
 pub mod rng;
 pub mod stats;

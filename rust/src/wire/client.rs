@@ -15,12 +15,13 @@
 //!   `Submit` frames under a client-side in-flight cap instead of
 //!   server credits.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -33,12 +34,23 @@ use super::flow::CreditGate;
 use super::frame::{self, CompletionRec, FrameType, MAX_VERSION, NO_PLACEMENT, VERSION, VERSION_V2};
 use super::io::{FrameReader, FrameWriter, Recv, Reject};
 
+/// How many times a submit shed with the retryable draining error is
+/// retried before the error surfaces, and the initial backoff (doubled
+/// per retry, capped at [`DRAINING_BACKOFF_MAX`]).  A drain normally
+/// quiesces in milliseconds, so a handful of short sleeps rides it out;
+/// a server that stays draining longer is really gone and the caller
+/// must reconnect.
+const DRAINING_RETRIES: u32 = 5;
+const DRAINING_BACKOFF: Duration = Duration::from_millis(2);
+const DRAINING_BACKOFF_MAX: Duration = Duration::from_millis(64);
+
 /// Blocking binary-protocol client (v1 request-reply semantics).
 pub struct WireClient {
     reader: FrameReader<TcpStream>,
     writer: FrameWriter<TcpStream>,
     next_seq: u64,
     session: Option<SessionToken>,
+    retries_draining: u64,
 }
 
 impl WireClient {
@@ -46,7 +58,19 @@ impl WireClient {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true)?;
         let writer = FrameWriter::new(stream.try_clone()?);
-        Ok(Self { reader: FrameReader::new(stream), writer, next_seq: 1, session: None })
+        Ok(Self {
+            reader: FrameReader::new(stream),
+            writer,
+            next_seq: 1,
+            session: None,
+            retries_draining: 0,
+        })
+    }
+
+    /// Times a submit was shed with the retryable draining error and
+    /// silently retried (see [`DRAINING_RETRIES`]).
+    pub fn retries_draining(&self) -> u64 {
+        self.retries_draining
     }
 
     /// Connect with a named session (validated eagerly; fabric-mode
@@ -120,24 +144,47 @@ impl WireClient {
     }
 
     /// Full round trip including the fabric placement fields.
+    ///
+    /// A submit shed because the fabric is draining is retried under a
+    /// fresh seq with bounded exponential backoff ([`DRAINING_RETRIES`]
+    /// attempts) before the error surfaces — a drain-to-disk quiesces in
+    /// milliseconds and the request would land on the restarted fabric.
+    /// Every other error (queue-full shed, protocol fault) surfaces
+    /// immediately as before.
     pub fn infer_full(
         &mut self,
         features: &[f32; INPUT_SIZE],
         deadline_us: Option<f64>,
     ) -> Result<InferReply> {
-        let seq = self.next_seq;
-        self.next_seq += 1;
-        // Field-disjoint borrows: the payload closure reads
-        // `self.session` while `self.writer` assembles the frame.
-        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
-        self.writer.send_with(FrameType::Submit, |b| {
-            frame::encode_submit(b, seq, deadline_us.unwrap_or(0.0), sess, features)
-        })?;
-        let p = self.expect(FrameType::Completion)?;
-        let rec = frame::decode_completion(&p)?;
-        anyhow::ensure!(rec.seq == seq, "completion for seq {} (sent {seq})", rec.seq);
-        anyhow::ensure!(!rec.shed, "request shed");
-        Ok(reply_of(&rec))
+        let mut attempts = 0u32;
+        let mut backoff = DRAINING_BACKOFF;
+        loop {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            // Field-disjoint borrows: the payload closure reads
+            // `self.session` while `self.writer` assembles the frame.
+            let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+            self.writer.send_with(FrameType::Submit, |b| {
+                frame::encode_submit(b, seq, deadline_us.unwrap_or(0.0), sess, features)
+            })?;
+            let (ty, p) = self.recv()?;
+            if ty == FrameType::Error {
+                let e = frame::decode_error(&p)?;
+                if e.shed && e.msg.contains("draining") && attempts < DRAINING_RETRIES {
+                    attempts += 1;
+                    self.retries_draining += 1;
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(DRAINING_BACKOFF_MAX);
+                    continue;
+                }
+                anyhow::bail!("server error: {}", e.msg);
+            }
+            anyhow::ensure!(ty == FrameType::Completion, "expected Completion frame, got {ty:?}");
+            let rec = frame::decode_completion(&p)?;
+            anyhow::ensure!(rec.seq == seq, "completion for seq {} (sent {seq})", rec.seq);
+            anyhow::ensure!(!rec.shed, "request shed");
+            return Ok(reply_of(&rec));
+        }
     }
 
     /// Submit many windows; completions come back in submission order,
@@ -240,6 +287,30 @@ impl WireClient {
         let p = self.expect(FrameType::ReloadReply)?;
         Json::parse(std::str::from_utf8(&p)?)
     }
+
+    /// This session's durable sequence watermark — the highest `seq`
+    /// covered by an fsync'd checkpoint segment (0 when checkpointing
+    /// is off or nothing has been captured durably yet).
+    pub fn seq_query(&mut self) -> Result<u64> {
+        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+        self.writer.send_seq_query(sess)?;
+        let p = self.expect(FrameType::SeqReply)?;
+        frame::decode_u64(&p)
+    }
+
+    /// Arm / disarm / query fault-injection knobs: `knob=value` arms,
+    /// `knob=off` disarms, `all=off` clears everything, an empty set
+    /// just queries.  Refused (as a server error) unless the server was
+    /// started with `--chaos` or `[faults] enabled = true`.
+    pub fn chaos(&mut self, set: &[(String, String)]) -> Result<Json> {
+        let body = Json::obj(
+            set.iter().map(|(k, v)| (k.as_str(), Json::Str(v.clone()))).collect(),
+        )
+        .to_string();
+        self.writer.send_chaos(&body)?;
+        let p = self.expect(FrameType::ChaosReply)?;
+        Json::parse(std::str::from_utf8(&p)?)
+    }
 }
 
 /// Map a wire completion record onto the protocol-agnostic reply.
@@ -271,6 +342,12 @@ pub struct PipelineOptions {
     pub inflight_cap: u16,
     /// Default per-request deadline (0 = server default).
     pub deadline_us: f64,
+    /// Keep every submitted window in a client-side replay buffer until
+    /// a completion's `durable_seq` covers it, enabling
+    /// [`PipelinedClient::resync`] after a server crash.  Only useful
+    /// against a server running the checkpointer: without one,
+    /// `durable_seq` stays 0 and the buffer never prunes.
+    pub replay: bool,
 }
 
 impl Default for PipelineOptions {
@@ -281,6 +358,7 @@ impl Default for PipelineOptions {
             f16: false,
             inflight_cap: 64,
             deadline_us: 0.0,
+            replay: false,
         }
     }
 }
@@ -321,6 +399,23 @@ pub struct PipelinedClient {
     /// reconstructed it* (see [`frame::encode_submit_v2`]).
     prev: Option<[f32; INPUT_SIZE]>,
     opts: PipelineOptions,
+    /// Connect target, kept so [`Self::resync`] can redial it.
+    addr: String,
+    /// Model-bind block from [`Self::connect_bound`], replayed on resync.
+    model: Option<(String, u32)>,
+    /// Submitted-but-not-durable windows, keyed by seq (only populated
+    /// when [`PipelineOptions::replay`] is set).  Pruned by durability,
+    /// *not* settlement: a window whose completion already arrived must
+    /// stay resendable until a checkpoint segment covers it.
+    replay: BTreeMap<u64, ([f32; INPUT_SIZE], f64)>,
+    /// Highest `durable_seq` observed on any completion.
+    durable: u64,
+    /// Windows resent via [`Self::resubmit`] / [`Self::resync`] (the
+    /// pipelined twin of [`WireClient::retries_draining`]).
+    retries_draining: u64,
+    /// Events rebuffered by [`Self::seq_query`] / carried across a
+    /// [`Self::resync`]; drained before the live channel.
+    pending: VecDeque<PipeEvent>,
 }
 
 impl PipelinedClient {
@@ -478,6 +573,12 @@ impl PipelinedClient {
             next_seq: 1,
             prev: None,
             opts,
+            addr: addr.to_string(),
+            model: model.map(|(id, v)| (id.to_string(), v)),
+            replay: BTreeMap::new(),
+            durable: 0,
+            retries_draining: 0,
+            pending: VecDeque::new(),
         })
     }
 
@@ -547,6 +648,15 @@ impl PipelinedClient {
         let seq = self.next_seq;
         self.next_seq += 1;
         let deadline = deadline_us.unwrap_or(self.opts.deadline_us);
+        self.send_at(seq, window, deadline)?;
+        Ok(seq)
+    }
+
+    /// Write one submit frame under an explicit seq — fresh submits and
+    /// replay resends share this path.  Delta coding stays correct for
+    /// resends because both ends evolve their reconstruction context
+    /// frame-by-frame in arrival order, whatever the seq values are.
+    fn send_at(&mut self, seq: u64, window: &[f32; INPUT_SIZE], deadline: f64) -> Result<()> {
         let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
         if self.version >= VERSION_V2 {
             let prev = if self.opts.delta { self.prev } else { None };
@@ -571,28 +681,53 @@ impl PipelinedClient {
                 frame::encode_submit(b, seq, deadline, sess, window)
             })?;
         }
-        Ok(seq)
+        if self.opts.replay {
+            self.replay.insert(seq, (*window, deadline));
+        }
+        Ok(())
+    }
+
+    /// Observe an event on its way to the caller: a completion carries
+    /// the server's durable watermark, which prunes the replay buffer
+    /// up to (and including) that seq.
+    fn note_event(&mut self, ev: &PipeEvent) {
+        if let PipeEvent::Completion(rec) = ev {
+            if rec.durable_seq > self.durable {
+                self.durable = rec.durable_seq;
+                self.replay = self.replay.split_off(&(self.durable + 1));
+            }
+        }
     }
 
     /// Blocking receive (`None` timeout = wait forever); fails once the
     /// connection is closed and the event queue is drained.
     pub fn recv(&mut self, timeout: Option<Duration>) -> Result<PipeEvent> {
-        match timeout {
-            None => self.events.recv().map_err(|_| anyhow::anyhow!("connection closed")),
+        if let Some(ev) = self.pending.pop_front() {
+            return Ok(ev);
+        }
+        let ev = match timeout {
+            None => self.events.recv().map_err(|_| anyhow::anyhow!("connection closed"))?,
             Some(t) => match self.events.recv_timeout(t) {
-                Ok(ev) => Ok(ev),
+                Ok(ev) => ev,
                 Err(RecvTimeoutError::Timeout) => anyhow::bail!("timed out waiting for an event"),
                 Err(RecvTimeoutError::Disconnected) => anyhow::bail!("connection closed"),
             },
-        }
+        };
+        self.note_event(&ev);
+        Ok(ev)
     }
 
     /// Non-blocking receive.
     pub fn try_recv(&mut self) -> Option<PipeEvent> {
-        match self.events.try_recv() {
-            Ok(ev) => Some(ev),
-            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        if let Some(ev) = self.pending.pop_front() {
+            return Some(ev);
         }
+        let ev = match self.events.try_recv() {
+            Ok(ev) => ev,
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return None,
+        };
+        self.note_event(&ev);
+        Some(ev)
     }
 
     /// Zero this client's stream and the delta context (the next window
@@ -604,6 +739,155 @@ impl PipelinedClient {
         self.writer.send_with(FrameType::Reset, |b| frame::encode_reset(b, sess))?;
         Ok(())
     }
+
+    /// Highest durable watermark observed on any completion.
+    pub fn durable_seq(&self) -> u64 {
+        self.durable
+    }
+
+    /// Redirect future [`Self::resync`] dials (the restarted server may
+    /// come back on a different address/port).
+    pub fn set_addr(&mut self, addr: &str) {
+        self.addr = addr.to_string();
+    }
+
+    /// Windows currently held in the replay buffer (submitted but not
+    /// yet covered by a checkpoint).
+    pub fn replay_depth(&self) -> usize {
+        self.replay.len()
+    }
+
+    /// Windows resent through [`Self::resubmit`] / [`Self::resync`].
+    pub fn retries_draining(&self) -> u64 {
+        self.retries_draining
+    }
+
+    /// Resend a window still held in the replay buffer under its
+    /// original seq — the recovery move when a completion frame was
+    /// lost (e.g. the `drop.completion` chaos knob).  `Ok(false)` when
+    /// the seq is no longer buffered (already durable, or replay mode
+    /// off).  Note the server executes the window again: on a live
+    /// server this re-advances the stream, so resubmit only after
+    /// deciding the original submit truly never reached the fabric.
+    pub fn resubmit(&mut self, seq: u64) -> Result<bool> {
+        let Some((window, deadline)) = self.replay.get(&seq).copied() else {
+            return Ok(false);
+        };
+        anyhow::ensure!(
+            self.gate.acquire(None),
+            "connection closed while waiting for credit"
+        );
+        self.retries_draining += 1;
+        self.send_at(seq, &window, deadline)?;
+        Ok(true)
+    }
+
+    /// Ask the server for this session's durable watermark.  Unrelated
+    /// events that arrive while waiting for the reply are rebuffered
+    /// (in order) for later [`Self::recv`] calls.
+    pub fn seq_query(&mut self, timeout: Duration) -> Result<u64> {
+        let sess: &[u8] = self.session.as_ref().map_or(b"", |t| t.name().as_bytes());
+        self.writer.send_seq_query(sess)?;
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            let ev = match self.events.recv_timeout(left) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => anyhow::bail!("timed out waiting for SeqReply"),
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("connection closed"),
+            };
+            match ev {
+                PipeEvent::Control(FrameType::SeqReply, p) => return frame::decode_u64(&p),
+                PipeEvent::Error { seq: 0, msg, .. } => anyhow::bail!("server error: {msg}"),
+                other => {
+                    self.note_event(&other);
+                    self.pending.push_back(other);
+                }
+            }
+        }
+    }
+
+    /// Reconnect after a server crash/restart and replay the
+    /// non-durable tail of the stream, so the recovered session
+    /// converges bit-identically with an uninterrupted run.
+    ///
+    /// Dials [`Self::connect_bound`]'s original address under the same
+    /// session name and model bind, asks the restored server for its
+    /// durable watermark, verifies the replay buffer covers everything
+    /// past it (a gap means lost windows — the streams can never
+    /// converge, and that surfaces as an error instead of silent
+    /// divergence), resends the tail in seq order, and swaps the new
+    /// connection into `self`.  Events already delivered by the old
+    /// connection are carried over.  Returns `(durable, resent)`.
+    pub fn resync(&mut self) -> Result<(u64, usize)> {
+        anyhow::ensure!(self.opts.replay, "resync requires PipelineOptions::replay");
+        let session = match &self.session {
+            Some(t) => t.name().to_string(),
+            None => anyhow::bail!("resync requires a named session (anonymous streams die with the connection)"),
+        };
+        let model = self.model.clone();
+        let mut fresh = Self::connect_bound(
+            &self.addr,
+            Some(&session),
+            self.opts,
+            model.as_ref().map(|(id, v)| (id.as_str(), *v)),
+        )?;
+        let durable = fresh.seq_query(Duration::from_secs(5))?;
+        let tail = replay_tail(&mut self.replay, durable, self.next_seq)?;
+        // Seq numbering continues across the reconnect; the recovered
+        // server's watermark seeds pruning on the new connection.
+        fresh.next_seq = self.next_seq;
+        fresh.durable = durable;
+        fresh.retries_draining = self.retries_draining + tail.len() as u64;
+        let resent = tail.len();
+        for (seq, (window, deadline)) in &tail {
+            anyhow::ensure!(
+                fresh.gate.acquire(None),
+                "connection closed while replaying the tail"
+            );
+            fresh.send_at(*seq, window, *deadline)?;
+        }
+        // Hand over anything the old connection already delivered so
+        // the caller's drain loop sees every event exactly once.
+        while let Some(ev) = self.pending.pop_front() {
+            fresh.pending.push_back(ev);
+        }
+        while let Ok(ev) = self.events.try_recv() {
+            fresh.pending.push_back(ev);
+        }
+        std::mem::swap(self, &mut fresh);
+        // `fresh` now holds the dead connection; its Drop joins the
+        // old reader thread.
+        Ok((durable, resent))
+    }
+}
+
+/// Split the non-durable tail (`seq > durable`) out of a replay buffer,
+/// verifying it runs contiguously from `durable + 1` up to `next_seq`.
+/// A hole means windows the server lost but the client can no longer
+/// resend — recovery must fail loudly rather than converge on a
+/// divergent stream.
+fn replay_tail(
+    buf: &mut BTreeMap<u64, ([f32; INPUT_SIZE], f64)>,
+    durable: u64,
+    next_seq: u64,
+) -> Result<BTreeMap<u64, ([f32; INPUT_SIZE], f64)>> {
+    let tail = buf.split_off(&(durable + 1));
+    let mut want = durable + 1;
+    for &seq in tail.keys() {
+        anyhow::ensure!(
+            seq == want,
+            "replay gap: window {want} is not buffered (server durable watermark {durable}, \
+             oldest remaining {seq}); streams cannot converge"
+        );
+        want += 1;
+    }
+    anyhow::ensure!(
+        want == next_seq,
+        "replay gap: windows {want}..{next_seq} were submitted but are no longer buffered \
+         (server durable watermark {durable})"
+    );
+    Ok(tail)
 }
 
 impl Drop for PipelinedClient {
@@ -613,5 +897,74 @@ impl Drop for PipelinedClient {
         if let Some(h) = self.reader.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(seqs: &[u64]) -> BTreeMap<u64, ([f32; INPUT_SIZE], f64)> {
+        seqs.iter().map(|&s| (s, ([s as f32; INPUT_SIZE], 0.0))).collect()
+    }
+
+    #[test]
+    fn replay_tail_splits_contiguous_suffix() {
+        // Buffered 1..=6, server made 1..=3 durable: exactly 4..=6 come
+        // back, identified by their windows, and the buffer keeps only
+        // the durable prefix for the caller to discard.
+        let mut b = buf(&[1, 2, 3, 4, 5, 6]);
+        let tail = replay_tail(&mut b, 3, 7).expect("contiguous tail");
+        assert_eq!(tail.keys().copied().collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(tail[&5].0[0], 5.0);
+        assert_eq!(b.keys().copied().collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn replay_tail_empty_when_everything_durable() {
+        let mut b = buf(&[4, 5]);
+        let tail = replay_tail(&mut b, 5, 6).expect("empty tail");
+        assert!(tail.is_empty());
+        // Nothing submitted at all is also a clean no-op resync.
+        let mut empty = buf(&[]);
+        assert!(replay_tail(&mut empty, 0, 1).expect("no-op").is_empty());
+    }
+
+    #[test]
+    fn replay_tail_rejects_hole_in_buffer() {
+        // Window 4 missing from the buffer but past the watermark: the
+        // restored stream can never converge, so recovery must fail.
+        let mut b = buf(&[3, 5, 6]);
+        let err = replay_tail(&mut b, 3, 7).unwrap_err().to_string();
+        assert!(err.contains("replay gap"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn replay_tail_rejects_pruned_past_watermark() {
+        // The client pruned through seq 5 against a pre-crash durable
+        // watermark, but the server restored an older generation that
+        // only covers 3: windows 4..=5 are unrecoverable.
+        let mut b = buf(&[6, 7]);
+        let err = replay_tail(&mut b, 3, 8).unwrap_err().to_string();
+        assert!(err.contains("replay gap"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn replay_tail_rejects_truncated_suffix() {
+        // next_seq says 1..=6 were submitted, but 6 never made the
+        // buffer (e.g. replay was toggled late): loud failure.
+        let mut b = buf(&[4, 5]);
+        let err = replay_tail(&mut b, 3, 7).unwrap_err().to_string();
+        assert!(err.contains("replay gap"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn durable_prune_keeps_settled_but_undurable_windows() {
+        // The invariant note_event relies on: split_off(&(d + 1)) keeps
+        // everything strictly past the watermark, regardless of how
+        // many completions have already settled.
+        let mut b = buf(&[1, 2, 3, 4]);
+        let kept = b.split_off(&(2 + 1));
+        assert_eq!(kept.keys().copied().collect::<Vec<_>>(), vec![3, 4]);
     }
 }

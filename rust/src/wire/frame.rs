@@ -69,8 +69,14 @@ pub const MAX_BATCH_WINDOWS: usize = 512;
 /// Bytes of one encoded feature window.
 pub const WINDOW_BYTES: usize = INPUT_SIZE * 4;
 
-/// Encoded size of one [`CompletionRec`].
+/// Encoded size of one base [`CompletionRec`] (no durable tail) — the
+/// pinned v1 layout and the fixed stride of a
+/// [`FrameType::CompletionBatch`] payload.
 pub const COMPLETION_REC_BYTES: usize = 29;
+
+/// Encoded size of a single [`FrameType::Completion`] carrying the
+/// optional `durable_seq` tail ([`FLAG_DURABLE`]).
+pub const COMPLETION_REC_DURABLE_BYTES: usize = COMPLETION_REC_BYTES + 8;
 
 /// Frame type registry.  Client->server types sit below 0x80,
 /// server->client types at or above it.
@@ -106,6 +112,17 @@ pub enum FrameType {
     /// c->s: apply a live config reload.  Payload is a UTF-8 JSON knob
     /// object (the `[reload]`-able subset, see `docs/OPERATIONS.md`).
     Reload = 0x0B,
+    /// c->s: arm/clear fault-injection points.  Payload is a UTF-8 JSON
+    /// object of fault name -> value strings (empty object = clear all;
+    /// see `docs/OPERATIONS.md`).  Only honored when the server was
+    /// started with faults enabled.
+    Chaos = 0x0C,
+    /// c->s: query a session's durable sequence watermark — the highest
+    /// client seq covered by the newest on-disk checkpoint (0 when the
+    /// session is unknown or nothing is durable).  Payload is the
+    /// session name like [`FrameType::Reset`].  Recovery clients replay
+    /// exactly the seqs above the reply (`docs/OPERATIONS.md`).
+    SeqQuery = 0x0D,
     /// s->c: negotiated version (`u16`).
     HelloAck = 0x81,
     /// s->c: one completed inference ([`CompletionRec`]).
@@ -130,6 +147,10 @@ pub enum FrameType {
     /// s->c: reload outcome as UTF-8 JSON text (knobs applied /
     /// rejected).
     ReloadReply = 0x8A,
+    /// s->c: chaos outcome as UTF-8 JSON text (faults armed / rejected).
+    ChaosReply = 0x8B,
+    /// s->c: durable watermark for a [`FrameType::SeqQuery`] (`u64`).
+    SeqReply = 0x8C,
 }
 
 impl FrameType {
@@ -146,6 +167,8 @@ impl FrameType {
             0x09 => Self::Status,
             0x0A => Self::Drain,
             0x0B => Self::Reload,
+            0x0C => Self::Chaos,
+            0x0D => Self::SeqQuery,
             0x81 => Self::HelloAck,
             0x82 => Self::Completion,
             0x83 => Self::CompletionBatch,
@@ -156,6 +179,8 @@ impl FrameType {
             0x88 => Self::StatusReply,
             0x89 => Self::DrainReply,
             0x8A => Self::ReloadReply,
+            0x8B => Self::ChaosReply,
+            0x8C => Self::SeqReply,
             _ => return None,
         })
     }
@@ -637,6 +662,28 @@ pub fn decode_u16(p: &[u8]) -> Result<u16> {
     Ok(v)
 }
 
+/// [`FrameType::SeqReply`] payload: the bare `u64 LE` durable watermark.
+pub fn encode_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn decode_u64(p: &[u8]) -> Result<u64> {
+    let mut r = Rd::new(p);
+    let v = r.u64()?;
+    r.done()?;
+    Ok(v)
+}
+
+/// [`FrameType::SeqQuery`] payload: the session name, exactly the
+/// [`FrameType::Reset`] layout (empty = the connection session).
+pub fn encode_seq_query(out: &mut Vec<u8>, session: &[u8]) {
+    push_session(out, session);
+}
+
+pub fn decode_seq_query(p: &[u8]) -> Result<&[u8]> {
+    decode_reset(p)
+}
+
 /// Decoded [`FrameType::Hello`].  The payload starts with the requested
 /// protocol version — a legacy client sends exactly those two bytes.
 /// An optional *model-bind block* may follow (on either protocol
@@ -712,6 +759,13 @@ pub fn decode_hello_ack(p: &[u8]) -> Result<HelloAckView> {
 /// Flag bits of a [`CompletionRec`].
 pub const FLAG_DEADLINE_MISS: u8 = 1 << 0;
 pub const FLAG_SHED: u8 = 1 << 1;
+/// The record carries an 8-byte `durable_seq` tail — the session's
+/// checkpoint watermark at completion time.  A replaying client prunes
+/// its in-flight buffer up to (and including) this seq; everything above
+/// it must be kept for resend after a crash (`docs/OPERATIONS.md`).
+/// Only single [`FrameType::Completion`] frames carry the tail; batch
+/// records keep the pinned 29-byte stride.
+pub const FLAG_DURABLE: u8 = 1 << 2;
 
 /// Shard/lane value on shed records (no placement happened).
 pub const NO_PLACEMENT: u16 = u16::MAX;
@@ -727,6 +781,10 @@ pub struct CompletionRec {
     pub shed: bool,
     pub shard: u16,
     pub lane: u16,
+    /// Session checkpoint watermark at completion time; 0 = nothing
+    /// durable / checkpointing off, and the tail stays off the wire so
+    /// the pinned 29-byte layout is unchanged.
+    pub durable_seq: u64,
 }
 
 impl CompletionRec {
@@ -740,11 +798,12 @@ impl CompletionRec {
             shed: true,
             shard: NO_PLACEMENT,
             lane: NO_PLACEMENT,
+            durable_seq: 0,
         }
     }
 }
 
-pub fn encode_completion(out: &mut Vec<u8>, rec: &CompletionRec) {
+fn encode_completion_base(out: &mut Vec<u8>, rec: &CompletionRec, durable: bool) {
     out.extend_from_slice(&rec.seq.to_le_bytes());
     out.extend_from_slice(&rec.estimate.to_bits().to_le_bytes());
     out.extend_from_slice(&rec.latency_us.to_bits().to_le_bytes());
@@ -755,9 +814,22 @@ pub fn encode_completion(out: &mut Vec<u8>, rec: &CompletionRec) {
     if rec.shed {
         flags |= FLAG_SHED;
     }
+    if durable {
+        flags |= FLAG_DURABLE;
+    }
     out.push(flags);
     out.extend_from_slice(&rec.shard.to_le_bytes());
     out.extend_from_slice(&rec.lane.to_le_bytes());
+    if durable {
+        out.extend_from_slice(&rec.durable_seq.to_le_bytes());
+    }
+}
+
+/// Encode a single completion.  A nonzero `durable_seq` sets
+/// [`FLAG_DURABLE`] and appends the 8-byte tail; otherwise the layout is
+/// the pinned 29-byte v1 record, so pre-checkpoint peers are untouched.
+pub fn encode_completion(out: &mut Vec<u8>, rec: &CompletionRec) {
+    encode_completion_base(out, rec, rec.durable_seq != 0);
 }
 
 fn decode_completion_rd(r: &mut Rd<'_>) -> Result<CompletionRec> {
@@ -767,6 +839,7 @@ fn decode_completion_rd(r: &mut Rd<'_>) -> Result<CompletionRec> {
     let flags = r.u8()?;
     let shard = r.u16()?;
     let lane = r.u16()?;
+    let durable_seq = if flags & FLAG_DURABLE != 0 { r.u64()? } else { 0 };
     Ok(CompletionRec {
         seq,
         estimate,
@@ -775,6 +848,7 @@ fn decode_completion_rd(r: &mut Rd<'_>) -> Result<CompletionRec> {
         shed: flags & FLAG_SHED != 0,
         shard,
         lane,
+        durable_seq,
     })
 }
 
@@ -785,11 +859,15 @@ pub fn decode_completion(p: &[u8]) -> Result<CompletionRec> {
     Ok(rec)
 }
 
+/// Encode a completion batch.  Batch records never carry the durable
+/// tail — the payload keeps its pinned fixed stride of
+/// [`COMPLETION_REC_BYTES`]; v1 batch clients learn watermarks via
+/// [`FrameType::SeqQuery`] instead.
 pub fn encode_completion_batch(out: &mut Vec<u8>, recs: &[CompletionRec]) {
     assert!(recs.len() <= MAX_BATCH_WINDOWS);
     out.extend_from_slice(&(recs.len() as u16).to_le_bytes());
     for rec in recs {
-        encode_completion(out, rec);
+        encode_completion_base(out, rec, false);
     }
 }
 
@@ -928,6 +1006,7 @@ mod tests {
             shed: false,
             shard: 3,
             lane: 11,
+            durable_seq: 0,
         };
         let mut p = Vec::new();
         encode_completion(&mut p, &rec);
@@ -1106,6 +1185,81 @@ mod tests {
                 other => panic!("expected frame, got {other:?}"),
             }
         }
+    }
+
+    /// `durable_seq == 0` keeps the pinned 29-byte v1 record; nonzero
+    /// sets FLAG_DURABLE and appends exactly 8 bytes.  Batch records
+    /// never carry the tail (fixed stride).
+    #[test]
+    fn durable_completion_layout_is_pinned() {
+        let mut rec = CompletionRec {
+            seq: 12,
+            estimate: 1.5,
+            latency_us: 20.0,
+            deadline_miss: false,
+            shed: false,
+            shard: 0,
+            lane: 2,
+            durable_seq: 0,
+        };
+        let mut base = Vec::new();
+        encode_completion(&mut base, &rec);
+        assert_eq!(base.len(), COMPLETION_REC_BYTES);
+        assert_eq!(base[24] & FLAG_DURABLE, 0);
+
+        rec.durable_seq = 9;
+        let mut p = Vec::new();
+        encode_completion(&mut p, &rec);
+        assert_eq!(p.len(), COMPLETION_REC_DURABLE_BYTES);
+        // Prefix identical except the flag byte; tail is the LE seq.
+        assert_eq!(&p[..24], &base[..24]);
+        assert_eq!(p[24], base[24] | FLAG_DURABLE);
+        assert_eq!(&p[29..], &9u64.to_le_bytes());
+        assert_eq!(decode_completion(&p).unwrap(), rec);
+        // A truncated tail fails loudly.
+        for cut in 0..p.len() {
+            assert!(decode_completion(&p[..cut]).is_err(), "cut at {cut}");
+        }
+
+        // Batch stride stays 29 bytes regardless of durable_seq, and the
+        // decoded records come back with durable_seq == 0.
+        let mut batch = Vec::new();
+        encode_completion_batch(&mut batch, &[rec, rec]);
+        assert_eq!(batch.len(), 2 + 2 * COMPLETION_REC_BYTES);
+        let got = decode_completion_batch(&batch).unwrap();
+        assert!(got.iter().all(|r| r.durable_seq == 0));
+    }
+
+    #[test]
+    fn chaos_and_seq_query_frame_types_are_pinned() {
+        // Crash-recovery verbs are protocol surface (docs/PROTOCOL.md)
+        // exactly like the operator verbs.
+        assert_eq!(FrameType::Chaos as u8, 0x0C);
+        assert_eq!(FrameType::ChaosReply as u8, 0x8B);
+        assert_eq!(FrameType::SeqQuery as u8, 0x0D);
+        assert_eq!(FrameType::SeqReply as u8, 0x8C);
+        assert_eq!(FrameType::from_u8(0x0C), Some(FrameType::Chaos));
+        assert_eq!(FrameType::from_u8(0x8B), Some(FrameType::ChaosReply));
+        assert_eq!(FrameType::from_u8(0x0D), Some(FrameType::SeqQuery));
+        assert_eq!(FrameType::from_u8(0x8C), Some(FrameType::SeqReply));
+
+        let mut p = Vec::new();
+        encode_seq_query(&mut p, b"rig-a");
+        assert_eq!(decode_seq_query(&p).unwrap(), b"rig-a");
+        let f = encode_frame(FrameType::SeqQuery, &p);
+        match decode_step(&f) {
+            DecodeStep::Frame { ty, payload, consumed } => {
+                assert_eq!(ty, 0x0D);
+                assert_eq!(decode_seq_query(&f[payload]).unwrap(), b"rig-a");
+                assert_eq!(consumed, f.len());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        let mut w = Vec::new();
+        encode_u64(&mut w, u64::MAX - 1);
+        assert_eq!(w.len(), 8);
+        assert_eq!(decode_u64(&w).unwrap(), u64::MAX - 1);
+        assert!(decode_u64(&w[..7]).is_err());
     }
 
     #[test]

@@ -335,6 +335,27 @@ impl<W: Write> FrameWriter<W> {
     pub fn send_reload_json(&mut self, json: &str) -> std::io::Result<()> {
         self.send_with(FrameType::ReloadReply, |b| b.extend_from_slice(json.as_bytes()))
     }
+
+    /// Fault-injection request (client -> server): payload is a UTF-8
+    /// JSON object of fault name -> value strings (`docs/OPERATIONS.md`).
+    pub fn send_chaos(&mut self, set_json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::Chaos, |b| b.extend_from_slice(set_json.as_bytes()))
+    }
+
+    /// Fault-injection outcome reply (UTF-8 JSON armed/rejected lists).
+    pub fn send_chaos_json(&mut self, json: &str) -> std::io::Result<()> {
+        self.send_with(FrameType::ChaosReply, |b| b.extend_from_slice(json.as_bytes()))
+    }
+
+    /// Durable-watermark query for a session (empty = connection session).
+    pub fn send_seq_query(&mut self, session: &[u8]) -> std::io::Result<()> {
+        self.send_with(FrameType::SeqQuery, |b| frame::encode_seq_query(b, session))
+    }
+
+    /// Durable-watermark reply.
+    pub fn send_seq_reply(&mut self, watermark: u64) -> std::io::Result<()> {
+        self.send_with(FrameType::SeqReply, |b| frame::encode_u64(b, watermark))
+    }
 }
 
 #[cfg(test)]

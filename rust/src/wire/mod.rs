@@ -32,7 +32,9 @@
 //!   buffer (zero-copy), automatic resync past corrupt spans;
 //! * [`f16`] — IEEE binary16 narrow/widen for v2 sample payloads;
 //! * [`snapshot`] — the drain-to-disk session snapshot file codec
-//!   (versioned "HRDS" header + CRC trailer, `docs/OPERATIONS.md`);
+//!   (versioned "HRDS" header + CRC trailer, `docs/OPERATIONS.md`) and
+//!   the HRDS v3 checkpoint-segment codec (generation-stamped ring
+//!   files with per-session sequence watermarks, crash recovery);
 //! * [`flow`] — [`flow::CreditGate`], the per-connection credit window
 //!   both ends of a v2 connection run (grant at `HelloAck`, one credit
 //!   per in-flight window, replenished by completion frames);
@@ -70,8 +72,13 @@ pub use f16::{f16_from_f32, f16_to_f32};
 pub use flow::CreditGate;
 pub use frame::{
     decode_hello, decode_step, encode_frame, encode_hello, version_supported, CompletionRec,
-    DecodeStep, FrameType, HelloAckView, HelloView, SkipReason, HEADER_LEN, MAGIC,
+    DecodeStep, FrameType, HelloAckView, HelloView, SkipReason, FLAG_DURABLE, HEADER_LEN, MAGIC,
     MAX_BATCH_WINDOWS, MAX_PAYLOAD, MAX_VERSION, TRAILER_LEN, VERSION, VERSION_V2,
 };
 pub use io::{FrameReader, FrameWriter, Recv, Reject};
-pub use snapshot::{SessionRecord, SnapModel, SnapshotFile, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
+pub use snapshot::{
+    discover_latest, durable_write, durable_write_staged, prune_ring, ring_segments,
+    CheckpointSegment, CkptSession,
+    Discovered, SessionRecord, SnapModel, SnapshotFile, CHECKPOINT_VERSION, SNAPSHOT_MAGIC,
+    SNAPSHOT_VERSION,
+};

@@ -278,15 +278,13 @@ impl SnapshotFile {
         Ok(Self { datapath, state_len, models, sessions, routes })
     }
 
-    /// Encode and write to `path` atomically (temp file + rename), so a
-    /// crash mid-write never leaves a half-snapshot under the real name.
+    /// Encode and write to `path` atomically AND durably (temp file +
+    /// fsync + rename + parent-dir fsync), so a crash mid-write never
+    /// leaves a half-snapshot under the real name and a power loss
+    /// right after the rename cannot surface an empty or partial file.
     pub fn write_to(&self, path: &std::path::Path) -> Result<usize> {
         let bytes = self.encode()?;
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, &bytes)
-            .with_context(|| format!("writing snapshot temp file {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming snapshot into place at {}", path.display()))?;
+        durable_write(path, &bytes)?;
         Ok(bytes.len())
     }
 
@@ -296,6 +294,396 @@ impl SnapshotFile {
             .with_context(|| format!("reading snapshot {}", path.display()))?;
         Self::decode(&bytes).with_context(|| format!("decoding snapshot {}", path.display()))
     }
+}
+
+/// Write `bytes` to `path` atomically and durably: temp file, fsync the
+/// data, rename into place, then fsync the parent directory so the
+/// rename itself survives a power loss.  The old `.tmp`+rename-only
+/// sequence could surface an empty or partial file after a crash — the
+/// rename was journalled before the data blocks ever hit the platter.
+/// Shared by drain snapshots and checkpoint segments.
+pub fn durable_write(path: &std::path::Path, bytes: &[u8]) -> Result<()> {
+    durable_write_staged(path, bytes, &mut || {})
+}
+
+/// [`durable_write`] with a hook between the fsync'd temp file and the
+/// rename.  The crash-recovery suite injects `kill.ckpt.post_tmp` there
+/// to prove a crash straddling the rename leaves either the old or the
+/// new segment fully intact — never a torn one.
+pub fn durable_write_staged(
+    path: &std::path::Path,
+    bytes: &[u8],
+    between: &mut dyn FnMut(),
+) -> Result<()> {
+    use std::io::Write as _;
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating snapshot temp file {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing snapshot temp file {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("fsyncing snapshot temp file {}", tmp.display()))?;
+    }
+    between();
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming snapshot into place at {}", path.display()))?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            sync_dir(dir)?;
+        }
+    }
+    Ok(())
+}
+
+/// fsync a directory so a just-renamed entry in it is durable.  On
+/// non-unix targets directories cannot be opened for sync; the rename
+/// is still atomic there, just not power-loss durable.
+#[cfg(unix)]
+fn sync_dir(dir: &std::path::Path) -> Result<()> {
+    std::fs::File::open(dir)
+        .and_then(|d| d.sync_all())
+        .with_context(|| format!("fsyncing snapshot directory {}", dir.display()))
+}
+
+#[cfg(not(unix))]
+fn sync_dir(_dir: &std::path::Path) -> Result<()> {
+    Ok(())
+}
+
+// ---- HRDS v3: checkpoint segments --------------------------------------
+
+/// Checkpoint segment format version.  Segments share the `HRDS` magic
+/// with drain snapshots but are a distinct, generation-stamped document:
+/// [`SnapshotFile::decode`] refuses version 3 and
+/// [`CheckpointSegment::decode`] refuses versions 1/2, so the two can
+/// never be confused silently.
+pub const CHECKPOINT_VERSION: u16 = 3;
+
+/// One session in a checkpoint segment: the drain-snapshot record plus
+/// the per-session **sequence watermark** — the highest client `seq`
+/// whose window is applied in the captured state.  On recovery a client
+/// replays exactly the windows with `seq > watermark` (its uncovered
+/// tail) and the stream converges bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptSession {
+    pub session: u64,
+    /// Index into [`CheckpointSegment::models`].
+    pub model: u16,
+    /// Highest client seq applied in `state` (0 = none observed).
+    pub watermark: u64,
+    pub state: Vec<f64>,
+}
+
+/// An incremental background checkpoint of the live fabric: everything a
+/// crashed server needs to resume its resident sessions, stamped with a
+/// monotonically increasing generation so recovery can pick the newest
+/// valid segment out of the on-disk ring (`docs/OPERATIONS.md`).
+///
+/// ```text
+///  magic "HRDS" | version u16 (=3) | flags u16
+///  | generation u64
+///  | dp_len u8 | datapath tag bytes
+///  | state_len u32 | n_sessions u32 | n_routes u32 | n_models u16
+///  | n_models   x ( id_len u8 | id bytes | version u32
+///                 | fingerprint u64 | state_len u32 )
+///  | n_sessions x ( session u64 | model u16 | watermark u64
+///                 | state_len x f64-as-u64-bits )
+///  | n_routes   x ( session u64 | shard u32 )
+///  | crc32 over every preceding byte
+/// ```
+///
+/// Decoding is as strict as the drain snapshot's: CRC first, every
+/// length checked, trailing garbage rejected.  A torn or bit-flipped
+/// segment NEVER loads partially — recovery falls back to the previous
+/// generation instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointSegment {
+    /// Monotonic generation stamp (also encoded in the file name).
+    pub generation: u64,
+    pub datapath: String,
+    pub state_len: u32,
+    pub models: Vec<SnapModel>,
+    pub sessions: Vec<CkptSession>,
+    pub routes: Vec<(u64, u32)>,
+}
+
+impl CheckpointSegment {
+    fn record_state_len(&self, session: u64, model: u16) -> Result<usize> {
+        if self.models.is_empty() {
+            if model != 0 {
+                bail!(
+                    "session {session:#018x} references model index {model} \
+                     but the segment has no model table"
+                );
+            }
+            return Ok(self.state_len as usize);
+        }
+        match self.models.get(model as usize) {
+            Some(m) => Ok(m.state_len as usize),
+            None => bail!(
+                "session {session:#018x} references model index {model} \
+                 but the table has {} entr(ies)",
+                self.models.len()
+            ),
+        }
+    }
+
+    /// Serialize to the on-disk byte format (header + records + CRC).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        if self.datapath.len() > u8::MAX as usize {
+            bail!("datapath tag too long: {} bytes", self.datapath.len());
+        }
+        if self.models.len() > u16::MAX as usize {
+            bail!("model table too long: {} entries", self.models.len());
+        }
+        for m in &self.models {
+            if m.id.is_empty() || m.id.len() > u8::MAX as usize {
+                bail!("model id `{}` must be 1..=255 bytes", m.id);
+            }
+        }
+        for rec in &self.sessions {
+            let want = self.record_state_len(rec.session, rec.model)?;
+            if rec.state.len() != want {
+                bail!(
+                    "session {:#018x}: state length {} != declared {}",
+                    rec.session,
+                    rec.state.len(),
+                    want
+                );
+            }
+        }
+        let mut out = Vec::with_capacity(
+            40 + self.models.len() * 32
+                + self.sessions.len() * (18 + self.state_len as usize * 8)
+                + self.routes.len() * 12,
+        );
+        out.extend_from_slice(SNAPSHOT_MAGIC);
+        out.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags (reserved)
+        out.extend_from_slice(&self.generation.to_le_bytes());
+        out.push(self.datapath.len() as u8);
+        out.extend_from_slice(self.datapath.as_bytes());
+        out.extend_from_slice(&self.state_len.to_le_bytes());
+        out.extend_from_slice(&(self.sessions.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.routes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.models.len() as u16).to_le_bytes());
+        for m in &self.models {
+            out.push(m.id.len() as u8);
+            out.extend_from_slice(m.id.as_bytes());
+            out.extend_from_slice(&m.version.to_le_bytes());
+            out.extend_from_slice(&m.fingerprint.to_le_bytes());
+            out.extend_from_slice(&m.state_len.to_le_bytes());
+        }
+        for rec in &self.sessions {
+            out.extend_from_slice(&rec.session.to_le_bytes());
+            out.extend_from_slice(&rec.model.to_le_bytes());
+            out.extend_from_slice(&rec.watermark.to_le_bytes());
+            for v in &rec.state {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        for (session, shard) in &self.routes {
+            out.extend_from_slice(&session.to_le_bytes());
+            out.extend_from_slice(&shard.to_le_bytes());
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode and fully validate a checkpoint segment.  Every failure
+    /// mode is a distinct, loud error — recovery must fall back to the
+    /// previous generation, never load corrupt state.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 4 + 2 + 2 + 8 + 1 + 4 + 4 + 4 + 2 + 4 {
+            bail!(
+                "checkpoint segment truncated: {} bytes is shorter than the fixed header",
+                bytes.len()
+            );
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 4);
+        let want = u32::from_le_bytes(trailer.try_into().unwrap());
+        let got = crc32(body);
+        if want != got {
+            bail!(
+                "checkpoint CRC mismatch: stored {want:#010x}, computed {got:#010x} \
+                 (torn or corrupted segment)"
+            );
+        }
+        let mut rd = SnapRd { buf: body, pos: 0 };
+        let magic = rd.bytes(4)?;
+        if magic != SNAPSHOT_MAGIC {
+            bail!("bad checkpoint magic {magic:02x?} (expected {SNAPSHOT_MAGIC:02x?})");
+        }
+        let version = rd.u16()?;
+        if version != CHECKPOINT_VERSION {
+            bail!(
+                "not a checkpoint segment: version {version} \
+                 (segments are version {CHECKPOINT_VERSION}; drain snapshots are 1..=2)"
+            );
+        }
+        let _flags = rd.u16()?;
+        let generation = rd.u64()?;
+        let dp_len = rd.u8()? as usize;
+        let datapath = std::str::from_utf8(rd.bytes(dp_len)?)
+            .context("checkpoint datapath tag is not UTF-8")?
+            .to_string();
+        let state_len = rd.u32()?;
+        let n_sessions = rd.u32()?;
+        let n_routes = rd.u32()?;
+        let n_models = rd.u16()?;
+        let mut models = Vec::with_capacity(n_models as usize);
+        for _ in 0..n_models {
+            let id_len = rd.u8()? as usize;
+            if id_len == 0 {
+                bail!("checkpoint model table has an empty model id");
+            }
+            let id = std::str::from_utf8(rd.bytes(id_len)?)
+                .context("checkpoint model id is not UTF-8")?
+                .to_string();
+            let version = rd.u32()?;
+            let fingerprint = rd.u64()?;
+            let state_len = rd.u32()?;
+            models.push(SnapModel { id, version, fingerprint, state_len });
+        }
+        let mut sessions = Vec::with_capacity(n_sessions.min(1 << 20) as usize);
+        for _ in 0..n_sessions {
+            let session = rd.u64()?;
+            let model = rd.u16()?;
+            let watermark = rd.u64()?;
+            let rec_len = if models.is_empty() {
+                if model != 0 {
+                    bail!(
+                        "session {session:#018x} references model index {model} \
+                         but the segment has no model table"
+                    );
+                }
+                state_len
+            } else {
+                match models.get(model as usize) {
+                    Some(m) => m.state_len,
+                    None => bail!(
+                        "session {session:#018x} references model index {model} \
+                         but the table has {} entr(ies)",
+                        models.len()
+                    ),
+                }
+            };
+            let mut state = Vec::with_capacity(rec_len as usize);
+            for _ in 0..rec_len {
+                state.push(f64::from_bits(rd.u64()?));
+            }
+            sessions.push(CkptSession { session, model, watermark, state });
+        }
+        let mut routes = Vec::with_capacity(n_routes.min(1 << 20) as usize);
+        for _ in 0..n_routes {
+            let session = rd.u64()?;
+            let shard = rd.u32()?;
+            routes.push((session, shard));
+        }
+        if rd.pos != body.len() {
+            bail!(
+                "checkpoint has {} trailing bytes after the declared records",
+                body.len() - rd.pos
+            );
+        }
+        Ok(Self { generation, datapath, state_len, models, sessions, routes })
+    }
+
+    /// The on-ring file name for a generation (zero-padded so lexical
+    /// order == generation order for ops tooling; recovery parses the
+    /// number and never trusts the ordering).
+    pub fn segment_path(dir: &std::path::Path, generation: u64) -> std::path::PathBuf {
+        dir.join(format!("ckpt-{generation:020}.hrds"))
+    }
+
+    /// Encode and durably write this segment into the ring directory.
+    /// Returns (path, bytes written).
+    pub fn write_to_ring(&self, dir: &std::path::Path) -> Result<(std::path::PathBuf, usize)> {
+        let bytes = self.encode()?;
+        let path = Self::segment_path(dir, self.generation);
+        durable_write(&path, &bytes)?;
+        Ok((path, bytes.len()))
+    }
+
+    /// Read and decode one segment file.
+    pub fn read_from(path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint segment {}", path.display()))?;
+        Self::decode(&bytes)
+            .with_context(|| format!("decoding checkpoint segment {}", path.display()))
+    }
+}
+
+/// Outcome of [`discover_latest`]: the newest valid segment plus how
+/// many newer-but-invalid candidates were skipped to reach it (surfaced
+/// in the operator counters so a torn tail is visible, not silent).
+#[derive(Debug)]
+pub struct Discovered {
+    pub segment: CheckpointSegment,
+    pub path: std::path::PathBuf,
+    /// Newer ring files that failed to decode (torn/corrupt) and were
+    /// skipped in favor of this generation.
+    pub skipped: usize,
+}
+
+/// List the ring's segment files as (generation, path), newest first.
+/// Files that do not match the `ckpt-<generation>.hrds` shape are
+/// ignored (the ring directory may hold a drain snapshot too).
+pub fn ring_segments(dir: &std::path::Path) -> Result<Vec<(u64, std::path::PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint ring {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(stem) = name.strip_prefix("ckpt-").and_then(|s| s.strip_suffix(".hrds")) else {
+            continue;
+        };
+        let Ok(generation) = stem.parse::<u64>() else { continue };
+        out.push((generation, entry.path()));
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(out)
+}
+
+/// Find the newest VALID generation in a ring directory: candidates are
+/// tried newest-first and a segment that fails to decode (torn write,
+/// bit rot) is skipped — recovery falls back to the previous generation
+/// rather than loading corrupt state or giving up.  `Ok(None)` means the
+/// directory holds no usable segment at all.
+pub fn discover_latest(dir: &std::path::Path) -> Result<Option<Discovered>> {
+    let mut skipped = 0;
+    for (_, path) in ring_segments(dir)? {
+        match CheckpointSegment::read_from(&path) {
+            Ok(segment) => return Ok(Some(Discovered { segment, path, skipped })),
+            Err(e) => {
+                log::warn!("skipping invalid checkpoint segment {}: {e:#}", path.display());
+                skipped += 1;
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Delete ring segments beyond the `keep` newest generations; returns
+/// how many files were removed.  Removal failures are logged, never
+/// fatal (a stale segment is harmless; a dead checkpointer is not).
+pub fn prune_ring(dir: &std::path::Path, keep: usize) -> usize {
+    let segments = match ring_segments(dir) {
+        Ok(s) => s,
+        Err(_) => return 0,
+    };
+    let mut removed = 0;
+    for (_, path) in segments.iter().skip(keep.max(1)) {
+        match std::fs::remove_file(path) {
+            Ok(()) => removed += 1,
+            Err(e) => log::warn!("pruning checkpoint segment {}: {e}", path.display()),
+        }
+    }
+    removed
 }
 
 /// Bounds-checked little-endian cursor (private twin of `frame::Rd`).
@@ -506,6 +894,148 @@ mod tests {
         let raw = std::fs::read(&path).unwrap();
         std::fs::write(&path, &raw[..raw.len() / 2]).unwrap();
         assert!(SnapshotFile::read_from(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ---- HRDS v3 checkpoint segments -----------------------------------
+
+    fn sample_ckpt(generation: u64) -> CheckpointSegment {
+        CheckpointSegment {
+            generation,
+            datapath: "f64".to_string(),
+            state_len: 3,
+            models: vec![
+                SnapModel {
+                    id: "default".to_string(),
+                    version: 1,
+                    fingerprint: 0x1234_5678_9abc_def0,
+                    state_len: 3,
+                },
+                SnapModel {
+                    id: "aux".to_string(),
+                    version: 4,
+                    fingerprint: 0xfeed_f00d_dead_beef,
+                    state_len: 2,
+                },
+            ],
+            sessions: vec![
+                CkptSession {
+                    session: 0xdead_beef_cafe_f00d,
+                    model: 0,
+                    watermark: 17,
+                    state: vec![1.0, -1.5, 2.25e-300],
+                },
+                CkptSession {
+                    session: 42,
+                    model: 1,
+                    watermark: 0,
+                    state: vec![f64::MIN_POSITIVE, -0.0],
+                },
+            ],
+            routes: vec![(0xdead_beef_cafe_f00d, 1), (42, 0)],
+        }
+    }
+
+    #[test]
+    fn ckpt_round_trip_is_bit_exact() {
+        let seg = sample_ckpt(7);
+        let back = CheckpointSegment::decode(&seg.encode().unwrap()).unwrap();
+        assert_eq!(back, seg);
+        assert_eq!(back.generation, 7);
+        assert_eq!(back.sessions[0].watermark, 17);
+        assert_eq!(back.sessions[1].state[1].to_bits(), (-0.0f64).to_bits());
+    }
+
+    /// Drain snapshots and checkpoint segments share the magic but must
+    /// never decode as each other.
+    #[test]
+    fn ckpt_and_snapshot_decoders_are_disjoint() {
+        let seg_bytes = sample_ckpt(1).encode().unwrap();
+        let snap_bytes = sample().encode().unwrap();
+        assert!(SnapshotFile::decode(&seg_bytes).is_err());
+        assert!(CheckpointSegment::decode(&snap_bytes).is_err());
+        let v1 = encode_v1("f64", 1, &[(9, vec![0.5])]);
+        assert!(CheckpointSegment::decode(&v1).is_err());
+    }
+
+    #[test]
+    fn ckpt_every_truncation_fails_loudly() {
+        let bytes = sample_ckpt(3).encode().unwrap();
+        for n in 0..bytes.len() {
+            assert!(
+                CheckpointSegment::decode(&bytes[..n]).is_err(),
+                "prefix of {n} bytes must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn ckpt_every_single_byte_flip_is_rejected() {
+        let bytes = sample_ckpt(3).encode().unwrap();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(
+                CheckpointSegment::decode(&bad).is_err(),
+                "flip at byte {i} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn ckpt_trailing_garbage_is_rejected() {
+        let mut bytes = sample_ckpt(3).encode().unwrap();
+        bytes.extend_from_slice(b"tail");
+        assert!(CheckpointSegment::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn ckpt_state_and_model_validation_refuses_to_encode() {
+        let mut seg = sample_ckpt(1);
+        seg.sessions[0].state.push(0.0);
+        assert!(seg.encode().is_err());
+        let mut seg = sample_ckpt(1);
+        seg.sessions[0].model = 9;
+        assert!(seg.encode().is_err());
+    }
+
+    /// Ring discovery: newest valid generation wins; a torn newest
+    /// segment is skipped (and counted) in favor of the previous one;
+    /// non-segment files in the directory are ignored.
+    #[test]
+    fn ring_discovery_falls_back_past_corrupt_newest() {
+        let dir = std::env::temp_dir().join(format!("hrd-ckpt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        assert!(discover_latest(&dir).unwrap().is_none());
+
+        sample_ckpt(1).write_to_ring(&dir).unwrap();
+        sample_ckpt(2).write_to_ring(&dir).unwrap();
+        let (p3, _) = sample_ckpt(3).write_to_ring(&dir).unwrap();
+        // A drain snapshot in the same directory is not a candidate.
+        sample().write_to(&dir.join("drain.hrds")).unwrap();
+
+        let found = discover_latest(&dir).unwrap().unwrap();
+        assert_eq!(found.segment.generation, 3);
+        assert_eq!(found.skipped, 0);
+
+        // Tear the newest segment: recovery falls back to generation 2.
+        let raw = std::fs::read(&p3).unwrap();
+        std::fs::write(&p3, &raw[..raw.len() / 2]).unwrap();
+        let found = discover_latest(&dir).unwrap().unwrap();
+        assert_eq!(found.segment.generation, 2);
+        assert_eq!(found.skipped, 1);
+
+        // Pruning keeps the newest `keep` generations.
+        sample_ckpt(4).write_to_ring(&dir).unwrap();
+        sample_ckpt(5).write_to_ring(&dir).unwrap();
+        let removed = prune_ring(&dir, 2);
+        assert_eq!(removed, 3);
+        let gens: Vec<u64> =
+            ring_segments(&dir).unwrap().into_iter().map(|(g, _)| g).collect();
+        assert_eq!(gens, vec![5, 4]);
+
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,540 @@
+//! Crash-recovery suite (`docs/OPERATIONS.md`): continuous incremental
+//! checkpointing plus client-side tail replay must make an *unplanned*
+//! death bit-invisible — a pipelined session that rides through a
+//! crash + `--restore` converges on exactly the estimate stream an
+//! uninterrupted server would have produced.  Also covered: torn-tail
+//! fallback in the ring, the chaos verb round-trip, kill-point aborts
+//! at every injection point (spawned `hrd` binary), and dropped
+//! completion frames recovered by replay-buffer resubmission.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use hrd_lstm::arch::INPUT_SIZE;
+use hrd_lstm::coordinator::{OperatorCtx, Server, WatchdogConfig, WireOptions};
+use hrd_lstm::kernel::{FloatPath, PackedModel, ScalarKernel};
+use hrd_lstm::lstm::LstmParams;
+use hrd_lstm::sched::{CheckpointConfig, Checkpointer, Fabric, FabricConfig, SchedSnapshot};
+use hrd_lstm::util::Json;
+use hrd_lstm::wire::{
+    discover_latest, CheckpointSegment, CompletionRec, PipeEvent, PipelineOptions,
+    PipelinedClient, WireClient,
+};
+
+fn params() -> LstmParams {
+    LstmParams::init(16, 15, 3, 1, 5)
+}
+
+/// One-shard fabric with a huge deadline and a wide watchdog, so
+/// estimates are raw kernel output (bit-comparable to the serial
+/// reference kernel).
+fn fabric_config(lanes: usize) -> FabricConfig {
+    let mut fcfg = FabricConfig::new(1, lanes);
+    fcfg.deadline_us = 1e9;
+    fcfg.queue_depth = 256;
+    fcfg.watchdog = WatchdogConfig {
+        min_m: -1e12,
+        max_m: 1e12,
+        max_slew_m_s: 1e15,
+        stuck_after: 1 << 30,
+        ..Default::default()
+    };
+    fcfg
+}
+
+/// In-process fabric server; optionally seeded from a checkpoint
+/// segment (the `serve-tcp --restore <ring>` path, library-level).
+fn start_server(
+    restore: Option<&CheckpointSegment>,
+) -> (SocketAddr, JoinHandle<SchedSnapshot>, Arc<Fabric>) {
+    let fabric = Arc::new(Fabric::new(&params(), fabric_config(4)).unwrap());
+    if let Some(seg) = restore {
+        fabric.restore_checkpoint(seg).unwrap();
+    }
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    server.set_wire_options(WireOptions::default());
+    server.set_operator(OperatorCtx::with_paths(None, None));
+    let addr = server.local_addr().unwrap();
+    let fab = fabric.clone();
+    let handle = std::thread::spawn(move || server.run_fabric(fab).unwrap());
+    (addr, handle, fabric)
+}
+
+/// Deterministic per-session feature stream: window `k` of session `s`.
+fn swindow(s: usize, k: usize) -> [f32; INPUT_SIZE] {
+    let mut w = [0f32; INPUT_SIZE];
+    for (i, v) in w.iter_mut().enumerate() {
+        *v = ((s * 100_003 + k * 31 + i * 7) % 97) as f32 * 0.01 - 0.5;
+    }
+    w
+}
+
+/// Fresh (emptied) scratch directory for one test's checkpoint ring.
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hrd_crash_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Next non-shed completion off a pipelined client, skipping control
+/// frames; panics on server errors or a 20 s drought.
+fn next_completion(c: &mut PipelinedClient) -> CompletionRec {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match c.recv(Some(Duration::from_millis(250))) {
+            Ok(PipeEvent::Completion(rec)) => {
+                assert!(!rec.shed, "unexpected shed for seq {}", rec.seq);
+                return rec;
+            }
+            Ok(PipeEvent::Error { seq, shed, msg }) => {
+                panic!("server error seq={seq} shed={shed}: {msg}")
+            }
+            Ok(PipeEvent::Control(..)) => {}
+            Err(e) => assert!(Instant::now() < deadline, "no completion: {e:#}"),
+        }
+    }
+}
+
+// ---- the tentpole: crash -> restore -> tail replay, bit-identical ------
+
+/// N pipelined sessions run against a checkpointing server; the server
+/// is killed without a drain after some settled windows were never
+/// covered by a segment; a fresh server restores the newest segment and
+/// every client resyncs, replaying exactly its uncovered tail.  Every
+/// estimate — pre-crash, replayed, and post-recovery — must be
+/// bit-identical to an uninterrupted serial reference stream.
+#[test]
+fn checkpoint_restart_replay_is_bit_identical() {
+    const SESSIONS: usize = 2;
+    const PRE: usize = 30; // settled and durably checkpointed
+    const TAIL: usize = 6; // settled, never checkpointed (the crash gap)
+    const POST: usize = 20; // served after recovery
+    const TOTAL: usize = PRE + TAIL + POST;
+    let ring = fresh_dir("replay");
+
+    // Uninterrupted reference streams, precomputed window-by-window.
+    let model = PackedModel::shared(&params());
+    let mut ref_bits = vec![vec![0u64; TOTAL]; SESSIONS];
+    for (s, bits) in ref_bits.iter_mut().enumerate() {
+        let mut k0 = ScalarKernel::new(model.clone(), FloatPath);
+        for (k, b) in bits.iter_mut().enumerate() {
+            *b = k0.step_window(&swindow(s, k)[..]).to_bits();
+        }
+    }
+
+    let (addr, handle, fabric) = start_server(None);
+    let mut ccfg = CheckpointConfig::new(&ring);
+    ccfg.interval = Duration::from_millis(10);
+    ccfg.ring = 4;
+    let ckpt = Checkpointer::start(fabric.clone(), ccfg).unwrap();
+
+    let opts = PipelineOptions { replay: true, ..Default::default() };
+    let mut clients: Vec<PipelinedClient> = (0..SESSIONS)
+        .map(|s| {
+            PipelinedClient::connect(&addr.to_string(), Some(&format!("cr-{s}")), opts).unwrap()
+        })
+        .collect();
+    for c in &clients {
+        assert_eq!(c.version(), 2, "watermark tracking needs the v2 seq space");
+    }
+
+    // Phase 1: PRE windows per session, each settled and bit-checked.
+    for (s, c) in clients.iter_mut().enumerate() {
+        for k in 0..PRE {
+            c.submit(&swindow(s, k), None).unwrap();
+            let rec = next_completion(c);
+            assert_eq!(rec.seq, (k + 1) as u64);
+            assert_eq!(
+                rec.estimate.to_bits(),
+                ref_bits[s][k],
+                "session {s} window {k}: pre-crash stream diverged"
+            );
+        }
+    }
+
+    // Let the cadence loop cover the settled prefix durably, then stop
+    // the checkpointer — nothing past this point reaches the ring.
+    for (s, c) in clients.iter_mut().enumerate() {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let d = c.seq_query(Duration::from_secs(5)).unwrap();
+            if d >= PRE as u64 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "session {s}: durable watermark stuck at {d} (< {PRE})"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    ckpt.stop();
+
+    // Phase 2: TAIL more windows settle — durable coverage stays at PRE,
+    // so these live only in the clients' replay buffers.
+    for (s, c) in clients.iter_mut().enumerate() {
+        for k in PRE..PRE + TAIL {
+            c.submit(&swindow(s, k), None).unwrap();
+            let rec = next_completion(c);
+            assert_eq!(rec.seq, (k + 1) as u64);
+            assert_eq!(rec.estimate.to_bits(), ref_bits[s][k]);
+        }
+        assert_eq!(
+            c.replay_depth(),
+            TAIL,
+            "session {s}: replay buffer must hold exactly the undurable tail"
+        );
+    }
+
+    // Crash: operator shutdown without a drain — lane state dies with
+    // the server; only the checkpoint ring survives.
+    let mut ctl = WireClient::connect(&addr.to_string()).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+
+    // Recovery: the newest decodable segment carries every session at
+    // watermark PRE.
+    let d = discover_latest(&ring).unwrap().expect("ring holds a durable segment");
+    assert_eq!(d.skipped, 0, "clean shutdown leaves no torn segments");
+    assert_eq!(d.segment.sessions.len(), SESSIONS);
+    for cs in &d.segment.sessions {
+        assert_eq!(cs.watermark, PRE as u64, "restored watermark");
+    }
+    let (addr2, handle2, fabric2) = start_server(Some(&d.segment));
+
+    // Resync: each client redials, learns the durable watermark, and
+    // replays exactly the TAIL windows past it.
+    for (s, c) in clients.iter_mut().enumerate() {
+        c.set_addr(&addr2.to_string());
+        let (durable, resent) = c.resync().unwrap();
+        assert_eq!(durable, PRE as u64, "session {s}: restored watermark over the wire");
+        assert_eq!(resent, TAIL, "session {s}: replayed tail length");
+    }
+    // The replayed windows come back with reference-identical bits: the
+    // restored state really was the post-PRE state.
+    for (s, c) in clients.iter_mut().enumerate() {
+        for k in PRE..PRE + TAIL {
+            let rec = next_completion(c);
+            assert_eq!(rec.seq, (k + 1) as u64, "session {s}: replay arrives in seq order");
+            assert_eq!(
+                rec.estimate.to_bits(),
+                ref_bits[s][k],
+                "session {s} window {k}: replayed estimate diverged from the \
+                 uninterrupted reference"
+            );
+        }
+    }
+
+    // Phase 3: new work on the recovered server continues the stream
+    // bit-identically, with a fresh checkpointer resuming the ring's
+    // generation counter.
+    let mut ccfg2 = CheckpointConfig::new(&ring);
+    ccfg2.interval = Duration::from_millis(10);
+    let ckpt2 = Checkpointer::start(fabric2.clone(), ccfg2).unwrap();
+    for (s, c) in clients.iter_mut().enumerate() {
+        for k in PRE + TAIL..TOTAL {
+            c.submit(&swindow(s, k), None).unwrap();
+            let rec = next_completion(c);
+            assert_eq!(rec.seq, (k + 1) as u64);
+            assert_eq!(
+                rec.estimate.to_bits(),
+                ref_bits[s][k],
+                "session {s} window {k}: post-recovery stream diverged"
+            );
+        }
+    }
+    // Durability catches up past the crash point on the new ring tail.
+    for (s, c) in clients.iter_mut().enumerate() {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let d2 = c.seq_query(Duration::from_secs(5)).unwrap();
+            if d2 >= TOTAL as u64 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "session {s}: post-recovery durability stuck at {d2}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    ckpt2.stop();
+    let gen2 = discover_latest(&ring).unwrap().unwrap().segment.generation;
+    assert!(
+        gen2 > d.segment.generation,
+        "the restarted checkpointer must resume the generation counter \
+         ({gen2} vs {})",
+        d.segment.generation
+    );
+
+    drop(clients);
+    let mut ctl = WireClient::connect(&addr2.to_string()).unwrap();
+    ctl.shutdown().unwrap();
+    handle2.join().unwrap();
+}
+
+// ---- torn ring tail falls back, never goes fresh -----------------------
+
+/// A crash can leave a torn (half-written) newest segment.  Discovery
+/// must skip it — counting it — and restore the previous generation,
+/// never silently start a fresh fabric.
+#[test]
+fn torn_newest_segment_falls_back_to_previous_generation() {
+    let ring = fresh_dir("torn");
+    let (addr, handle, fabric) = start_server(None);
+    let mut ccfg = CheckpointConfig::new(&ring);
+    ccfg.interval = Duration::from_millis(5);
+    ccfg.ring = 8;
+    let ckpt = Checkpointer::start(fabric.clone(), ccfg).unwrap();
+
+    let mut c = WireClient::with_session(&addr.to_string(), "torn-sess").unwrap();
+    c.hello().unwrap();
+    for k in 0..10 {
+        c.infer(&swindow(0, k)).unwrap();
+    }
+    ckpt.stop();
+    let mut ctl = WireClient::connect(&addr.to_string()).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+
+    let good = discover_latest(&ring).unwrap().expect("ring non-empty after stop");
+    assert_eq!(good.segment.sessions.len(), 1);
+
+    // Forge the torn tail: a truncated copy stamped one generation newer.
+    let bytes = std::fs::read(&good.path).unwrap();
+    let torn = ring.join(format!("ckpt-{:020}.hrds", good.segment.generation + 1));
+    std::fs::write(&torn, &bytes[..bytes.len() / 2]).unwrap();
+
+    let d = discover_latest(&ring).unwrap().expect("fallback generation survives");
+    assert_eq!(d.segment.generation, good.segment.generation, "newest *decodable* wins");
+    assert_eq!(d.skipped, 1, "the torn segment is counted, not fatal");
+    let fabric2 = Fabric::new(&params(), fabric_config(4)).unwrap();
+    assert_eq!(fabric2.restore_checkpoint(&d.segment).unwrap(), 1);
+}
+
+// ---- chaos verb round-trip ---------------------------------------------
+
+/// The `Chaos` wire verb: refused while fault injection is disabled;
+/// arms / queries / rejects / disarms when enabled.  Uses only the
+/// zero-ms stall knob so concurrent tests in this process are unharmed
+/// (the registry is deliberately process-global).
+#[test]
+fn chaos_verbs_refuse_when_disabled_and_round_trip_when_enabled() {
+    use hrd_lstm::util::faults;
+    let (addr, handle, _fabric) = start_server(None);
+    let addr_s = addr.to_string();
+    let mut c = WireClient::connect(&addr_s).unwrap();
+    c.hello().unwrap();
+
+    faults::set_enabled(false);
+    let err = c
+        .chaos(&[("ckpt.stall_ms".to_string(), "0".to_string())])
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("disabled"),
+        "disabled server must refuse the verb: {err}"
+    );
+
+    faults::set_enabled(true);
+    let reply = c.chaos(&[("ckpt.stall_ms".to_string(), "0".to_string())]).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+    let armed = reply.get("armed").and_then(|v| v.as_obj()).unwrap();
+    assert_eq!(armed.get("ckpt.stall_ms").and_then(|v| v.as_str()), Some("0"));
+
+    // Empty set = pure query.
+    let reply = c.chaos(&[]).unwrap();
+    assert!(reply
+        .get("armed")
+        .and_then(|v| v.as_obj())
+        .unwrap()
+        .contains_key("ckpt.stall_ms"));
+
+    // Unknown knobs are rejected by name; the request itself survives.
+    let reply = c.chaos(&[("warp.core".to_string(), "1".to_string())]).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+    assert!(reply
+        .get("rejected")
+        .and_then(|v| v.as_obj())
+        .unwrap()
+        .contains_key("warp.core"));
+
+    // `all=off` clears the registry.
+    let reply = c.chaos(&[("all".to_string(), "off".to_string())]).unwrap();
+    assert!(reply
+        .get("armed")
+        .and_then(|v| v.as_obj())
+        .map_or(true, |m| m.is_empty()));
+    faults::set_enabled(false);
+
+    let mut ctl = WireClient::connect(&addr_s).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+// ---- kill-point matrix + dropped frames (spawned binary) ---------------
+
+/// The `hrd` binary path, when cargo provides it (absent under some
+/// harnesses; those runs skip the process-level tests).
+const BIN: Option<&str> = option_env!("CARGO_BIN_EXE_hrd");
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn spawn_server(bin: &str, port: u16, ring: &std::path::Path, restore: bool) -> std::process::Child {
+    let mut cmd = std::process::Command::new(bin);
+    cmd.args([
+        "serve-tcp",
+        "--backend",
+        "native",
+        "--allow-random-weights",
+        "--seed",
+        "11",
+        "--addr",
+        &format!("127.0.0.1:{port}"),
+        "--chaos",
+        "--ckpt-dir",
+        ring.to_str().unwrap(),
+        "--ckpt-interval-ms",
+        "5",
+    ]);
+    if restore {
+        cmd.args(["--restore", ring.to_str().unwrap()]);
+    }
+    cmd.stdout(std::process::Stdio::null()).stderr(std::process::Stdio::null());
+    cmd.spawn().expect("spawning hrd serve-tcp")
+}
+
+fn connect_ready(addr: &str, session: &str) -> WireClient {
+    for _ in 0..200 {
+        if let Ok(mut c) = WireClient::with_session(addr, session) {
+            if c.hello().is_ok() {
+                return c;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("server at {addr} never became ready");
+}
+
+fn wait_exit(
+    child: &mut std::process::Child,
+    timeout: Duration,
+) -> Option<std::process::ExitStatus> {
+    let t0 = Instant::now();
+    loop {
+        if let Some(st) = child.try_wait().unwrap() {
+            return Some(st);
+        }
+        if t0.elapsed() > timeout {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn wait_for_ring(dir: &std::path::Path) {
+    let t0 = Instant::now();
+    while hrd_lstm::wire::ring_segments(dir).map_or(0, |v| v.len()) == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "no checkpoint segment appeared in {}",
+            dir.display()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Abort the daemon at EVERY kill point in the checkpoint write path
+/// and prove the restart recovers the checkpointed session from the
+/// ring, whichever side of encode/write/rename/prune the crash landed
+/// on.  Runs the real binary: `kill_point` is a process abort.
+#[test]
+fn kill_point_abort_matrix_recovers() {
+    let Some(bin) = BIN else {
+        eprintln!("skipping kill-point matrix: hrd binary not provided by the harness");
+        return;
+    };
+    for point in hrd_lstm::util::faults::KILL_POINTS {
+        let tag = point.replace('.', "_");
+        let ring = fresh_dir(&format!("kill_{tag}"));
+        let port = free_port();
+        let addr = format!("127.0.0.1:{port}");
+        let mut child = spawn_server(bin, port, &ring, false);
+        let mut c = connect_ready(&addr, "kp");
+        for k in 0..8 {
+            c.infer(&swindow(3, k)).unwrap();
+        }
+        // At least one durable generation first, so the ring is
+        // non-empty whichever side of the write the abort lands on.
+        wait_for_ring(&ring);
+        c.chaos(&[(format!("kill.{point}"), "1".to_string())]).unwrap();
+        let status = match wait_exit(&mut child, Duration::from_secs(30)) {
+            Some(st) => st,
+            None => {
+                let _ = child.kill();
+                panic!("server survived armed kill.{point}");
+            }
+        };
+        assert!(!status.success(), "kill.{point}: an abort is not a clean exit");
+
+        let port2 = free_port();
+        let addr2 = format!("127.0.0.1:{port2}");
+        let mut child2 = spawn_server(bin, port2, &ring, true);
+        let mut c2 = connect_ready(&addr2, "kp");
+        c2.infer(&swindow(3, 99)).unwrap();
+        let status2 = c2.status().unwrap();
+        let op = status2.get("operator").expect("operator object in status");
+        assert!(
+            op.get("restored_sessions").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0,
+            "kill.{point}: restart must restore the checkpointed session"
+        );
+        assert!(
+            op.get("ckpt_restores").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0,
+            "kill.{point}: restart must count the ring restore"
+        );
+        c2.shutdown().unwrap();
+        wait_exit(&mut child2, Duration::from_secs(30))
+            .expect("restarted server exits on shutdown");
+    }
+}
+
+/// `drop.completion`: the server executes the window but discards the
+/// completion frame.  The client's replay buffer still holds the
+/// window, and `resubmit` closes the gap under the original seq.
+#[test]
+fn dropped_completion_is_recovered_by_resubmit() {
+    let Some(bin) = BIN else {
+        eprintln!("skipping drop.completion test: hrd binary not provided by the harness");
+        return;
+    };
+    let ring = fresh_dir("dropfr");
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    let mut child = spawn_server(bin, port, &ring, false);
+    let mut ctl = connect_ready(&addr, "drop-ctl");
+
+    let opts = PipelineOptions { replay: true, ..Default::default() };
+    let mut c = PipelinedClient::connect(&addr, Some("drop-sess"), opts).unwrap();
+    for k in 0..3 {
+        c.submit(&swindow(7, k), None).unwrap();
+        assert_eq!(next_completion(&mut c).seq, (k + 1) as u64);
+    }
+
+    ctl.chaos(&[("drop.completion".to_string(), "1".to_string())]).unwrap();
+    c.submit(&swindow(7, 3), None).unwrap();
+    assert!(
+        c.recv(Some(Duration::from_millis(600))).is_err(),
+        "the armed fault must swallow exactly this completion frame"
+    );
+    assert!(c.resubmit(4).unwrap(), "seq 4 must still be in the replay buffer");
+    assert_eq!(next_completion(&mut c).seq, 4);
+    assert!(!c.resubmit(999).unwrap(), "an unknown seq is not resendable");
+
+    drop(c);
+    ctl.shutdown().unwrap();
+    wait_exit(&mut child, Duration::from_secs(30)).expect("server exits on shutdown");
+}

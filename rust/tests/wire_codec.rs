@@ -316,6 +316,7 @@ fn typed_payloads_round_trip() {
                 shed: false,
                 shard: rng.range(0, 64) as u16,
                 lane: rng.range(0, 64) as u16,
+                durable_seq: 0,
             })
             .collect();
         let mut p = Vec::new();

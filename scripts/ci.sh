@@ -168,4 +168,80 @@ grep -q '"multi_model"' CI_multi_model.json \
   || { echo "FAIL: loadgen --model aux wrote no multi_model report"; exit 1; }
 rm -f CI_multi_model.json
 
+echo "== crash-recovery gate: checkpoint ring + mid-stream abort -> bit-identical replay =="
+# The acceptance suite first (docs/OPERATIONS.md "Crash semantics"):
+# checkpoint -> kill -> --restore replay bit-identity, torn-segment
+# fallback to the previous generation, chaos verb round-trips, the
+# kill-point abort matrix against the real binary, and dropped-frame
+# resubmit.
+cargo test -q --test crash_recovery
+
+# Then the real daemon against a real crash: serve with the checkpointer
+# and chaos verbs armed, stream deterministic windows through `hrd pump`
+# (client replay buffer on), abort the daemon at a kill point mid-stream,
+# restart from the ring with --restore, and require the recovered
+# transcript to be bit-identical to an uninterrupted reference run on a
+# fresh server with the same weights.  The quick loadgen above also ran
+# the checkpoint-overhead A/B (<= 5% p99 budget, docs/OPERATIONS.md).
+grep -q '"ckpt_overhead"' BENCH_serving.json \
+  || { echo "FAIL: BENCH_serving.json lacks the ckpt_overhead A/B"; exit 1; }
+HRD=target/release/hrd   # built above; `cargo run` does not forward kill to the child
+CR_ADDR=127.0.0.1:7462
+CR_RING=CI_ckpt_ring
+CR_COUNT=200000
+rm -rf "$CR_RING" CI_pump_crash.txt CI_pump_ref.txt CI_pump_crash.log
+"$HRD" serve-tcp --backend native --shards 2 \
+  --addr "$CR_ADDR" --allow-random-weights --seed 11 --chaos \
+  --ckpt-dir "$CR_RING" --ckpt-interval-ms 25 &
+CR_PID=$!
+trap 'kill $CR_PID 2>/dev/null || true' EXIT
+"$HRD" status --addr "$CR_ADDR" \
+  || { echo "FAIL: checkpointing server never came up"; exit 1; }
+"$HRD" pump --addr "$CR_ADDR" --session crash-ci \
+  --count "$CR_COUNT" --out CI_pump_crash.txt 2>CI_pump_crash.log &
+PUMP_PID=$!
+trap 'kill $CR_PID $PUMP_PID 2>/dev/null || true' EXIT
+sleep 0.3
+# Deterministic crash: arm a kill point instead of racing `kill -9`
+# against the pump — the next checkpoint round (<= 25ms away) aborts the
+# daemon right after it made a segment durable.
+"$HRD" chaos --addr "$CR_ADDR" \
+  --set kill.ckpt.post_rename=1 \
+  || { echo "FAIL: arming the kill point over the wire"; exit 1; }
+if wait $CR_PID; then
+  echo "FAIL: daemon survived an armed kill point"; exit 1
+fi
+"$HRD" serve-tcp --backend native --shards 2 \
+  --addr "$CR_ADDR" --allow-random-weights --seed 11 \
+  --ckpt-dir "$CR_RING" --ckpt-interval-ms 25 --restore "$CR_RING" &
+CR_PID=$!
+wait $PUMP_PID \
+  || { echo "FAIL: pump did not converge after the crash"; cat CI_pump_crash.log; exit 1; }
+grep -q 'resynced' CI_pump_crash.log \
+  || { echo "FAIL: pump never resynced — the abort missed the stream"; cat CI_pump_crash.log; exit 1; }
+test "$(wc -l < CI_pump_crash.txt)" -eq "$CR_COUNT" \
+  || { echo "FAIL: crash transcript is not complete"; exit 1; }
+"$HRD" status --addr "$CR_ADDR" | grep -q '"ckpt_restores":[1-9]' \
+  || { echo "FAIL: status does not count the checkpoint restore"; exit 1; }
+kill $CR_PID 2>/dev/null || true
+wait $CR_PID 2>/dev/null || true
+# Uninterrupted reference: fresh server, same weights, no checkpointer —
+# the recovered stream must match it bit for bit.
+"$HRD" serve-tcp --backend native --shards 2 \
+  --addr "$CR_ADDR" --allow-random-weights --seed 11 &
+CR_PID=$!
+trap 'kill $CR_PID 2>/dev/null || true' EXIT
+"$HRD" status --addr "$CR_ADDR" \
+  || { echo "FAIL: reference server never came up"; exit 1; }
+"$HRD" pump --addr "$CR_ADDR" --session crash-ci \
+  --count "$CR_COUNT" --out CI_pump_ref.txt \
+  || { echo "FAIL: reference pump"; exit 1; }
+"$HRD" pump --compare CI_pump_crash.txt,CI_pump_ref.txt \
+  || { echo "FAIL: recovered stream diverged from the uninterrupted reference"; exit 1; }
+kill $CR_PID 2>/dev/null || true
+wait $CR_PID 2>/dev/null || true
+trap - EXIT
+test -n "$(ls "$CR_RING"/ckpt-*.hrds 2>/dev/null)" \
+  || { echo "FAIL: checkpoint ring $CR_RING is empty after the gate"; exit 1; }
+
 echo "CI OK"
